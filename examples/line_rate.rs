@@ -1,0 +1,72 @@
+//! Line-rate study (§6.2 "Aggregate at line rate", Table 2): drive the
+//! switch at 10 Gbps arrival pacing and report, per workload size, the
+//! FIFO write/full counters plus the effective processing throughput,
+//! and show what happens when the memory controller's command buffer
+//! is removed (the paper's overlap argument).
+//!
+//! Run: `cargo run --release --example line_rate`
+
+use switchagg::protocol::{AggOp, TreeConfig, TreeId};
+use switchagg::sim::dram::DramConfig;
+use switchagg::switch::{SwitchAggSwitch, SwitchConfig};
+use switchagg::workload::generator::{KeyDist, WorkloadSpec};
+
+fn run(cfg: SwitchConfig, bytes: u64, label: &str) {
+    let mut sw = SwitchAggSwitch::new(cfg);
+    let tree = TreeId(1);
+    sw.configure(&[TreeConfig {
+        tree,
+        children: 3,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    let streams: Vec<_> = (0..3)
+        .map(|i| {
+            WorkloadSpec::paper(bytes / 3, 1 << 20, KeyDist::Zipf(0.99), 0x11FE + i).generate()
+        })
+        .collect();
+    sw.ingest_child_streams(tree, AggOp::Sum, &streams);
+    let s = sw.stats(tree).unwrap();
+    let gbps = s.throughput_bytes_per_sec() * 8.0 / 1e9;
+    println!(
+        "{label:<28} {:>10} writes  {:>7} full  {:>8.4}% ratio  {gbps:>6.2} Gbps effective",
+        s.fifo_writes,
+        s.fifo_full_events,
+        s.fifo_full_ratio() * 100.0,
+    );
+    if let Some((cmds, stalls)) = sw.bpe_dram_stats(tree) {
+        println!(
+            "{:<28} {cmds:>10} DRAM cmds  {stalls} stall cycles",
+            "",
+        );
+    }
+}
+
+fn main() {
+    println!("Table 2 regeneration — FIFO counters at line rate (scaled workloads)\n");
+    for mb in [2u64, 4, 8, 16] {
+        run(
+            SwitchConfig::scaled(32 << 10, Some(8 << 20)),
+            mb << 20,
+            &format!("{}GB-equivalent (/{:>4})", mb, 1024),
+        );
+    }
+
+    println!("\nablation: blocking DRAM (no command buffer) vs paper design, 8GB-equivalent");
+    run(
+        SwitchConfig::scaled(32 << 10, Some(8 << 20)),
+        8 << 20,
+        "command buffer depth 32",
+    );
+    let blocking = SwitchConfig {
+        dram: DramConfig {
+            latency: 25,
+            queue_depth: 1,
+            service_interval: 2,
+        },
+        bpe_interval: 50,
+        ..SwitchConfig::scaled(32 << 10, Some(8 << 20))
+    };
+    run(blocking, 8 << 20, "blocking DRAM (depth 1)");
+    println!("\nline_rate OK");
+}

@@ -1,0 +1,107 @@
+//! End-to-end driver (EXPERIMENTS.md §End-to-end): the full WordCount
+//! pipeline of §6.3 on a real (synthetic-Zipf) text corpus, exercising
+//! every layer of the stack:
+//!
+//!   corpus → mappers (tokenize) → shim (packetize) → controller
+//!   (tree + configure/ack) → simulated switch data plane (FPE/BPE)
+//!   → reducer, merged BOTH in software and through the AOT-compiled
+//!   JAX/Pallas kernels via PJRT — results must agree exactly.
+//!
+//! Reports the paper's headline metrics: reduction ratio, JCT with vs
+//! without SwitchAgg, and reducer CPU utilization.
+//!
+//! Run: `make artifacts && cargo run --release --example wordcount_e2e`
+
+use std::collections::HashMap;
+use switchagg::framework::{run_job, JobSpec, Mapper, Reducer};
+use switchagg::net::Topology;
+use switchagg::protocol::AggOp;
+use switchagg::runtime::AggEngine;
+use switchagg::switch::SwitchConfig;
+use switchagg::workload::corpus::Corpus;
+
+fn main() -> anyhow::Result<()> {
+    let corpus_bytes: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| switchagg::util::cli::parse_bytes(&s))
+        .unwrap_or(8 << 20);
+    let vocab = 20_000u64;
+    println!("== WordCount end-to-end: {corpus_bytes} B corpus, vocab {vocab} ==");
+
+    // Corpus split across 3 mappers (the paper's testbed).
+    let corpus = Corpus::new(vocab, 0xC0DE);
+    let lines = corpus.lines(corpus_bytes);
+    let per = lines.len().div_ceil(3);
+    let mappers: Vec<Mapper> = lines
+        .chunks(per.max(1))
+        .map(|c| Mapper::WordCount { lines: c.to_vec() })
+        .collect();
+
+    // Ground truth: count words directly from the text.
+    let mut truth: HashMap<String, i64> = HashMap::new();
+    for l in &lines {
+        for w in l.split_ascii_whitespace() {
+            *truth.entry(w.to_string()).or_default() += 1;
+        }
+    }
+
+    let (topo, _sw, hosts) = Topology::star(4);
+    let spec = JobSpec {
+        switch_cfg: SwitchConfig::scaled(32 << 10, Some(8 << 20)),
+        aggregation_enabled: true,
+        op: AggOp::Sum,
+    };
+    let n = mappers.len();
+    let (report, merge) = run_job(&topo, &hosts[..n], hosts[3], &mappers, &spec)?;
+
+    // --- verify against ground truth --------------------------------
+    assert_eq!(merge.table.len(), truth.len(), "distinct word count");
+    for (word, count) in &truth {
+        let key = switchagg::protocol::Key::new(word.as_bytes());
+        assert_eq!(
+            merge.table.get(&key),
+            Some(count),
+            "count for word {word:?}"
+        );
+    }
+    println!("result verified against ground truth: {} distinct words", truth.len());
+
+    // --- XLA reducer path (the AOT JAX/Pallas kernels via PJRT) -----
+    let engine = AggEngine::discover()?;
+    let streams: Vec<_> = mappers.iter().map(|m| m.produce()).collect();
+    let xla = Reducer::merge_xla(&engine, &streams, AggOp::Sum)?;
+    assert_eq!(xla.table, merge.table, "XLA merge must equal software merge");
+    println!(
+        "XLA reducer agrees: {} keys, {:.3} ms over {} PJRT executions",
+        xla.table.len(),
+        xla.elapsed_s * 1e3,
+        engine.executions.get()
+    );
+
+    // --- headline metrics --------------------------------------------
+    println!("\nheadline metrics (paper §6.3):");
+    println!(
+        "  reduction ratio      {:.1}%  (pairs {} -> {})",
+        report.reduction_ratio * 100.0,
+        report.input_pairs,
+        report.output_pairs
+    );
+    println!(
+        "  JCT                  {:.3} ms with SwitchAgg vs {:.3} ms without  ({:.0}% saved)",
+        report.jct.total_s * 1e3,
+        report.jct_baseline.total_s * 1e3,
+        (1.0 - report.jct.total_s / report.jct_baseline.total_s) * 100.0
+    );
+    println!(
+        "  reducer CPU util     {:.2}% vs {:.2}%",
+        report.cpu_util * 100.0,
+        report.cpu_util_baseline * 100.0
+    );
+    println!(
+        "  FIFO-full ratio      {:.4}% ({} writes)",
+        report.fifo_full_events as f64 / report.fifo_writes.max(1) as f64 * 100.0,
+        report.fifo_writes
+    );
+    println!("\nwordcount_e2e OK");
+    Ok(())
+}

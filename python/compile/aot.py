@@ -1,0 +1,93 @@
+"""AOT-lower the L2 entry points to HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--only NAME]
+
+Writes ``<name>.hlo.txt`` per entry point plus ``manifest.json``
+describing shapes/dtypes, which rust/src/runtime/artifacts.rs validates
+at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered_fn) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True;
+    the Rust side unwraps with ``to_tuple1``)."""
+    mlir_mod = lowered_fn.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str, only: str | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {
+        "format": "hlo-text",
+        "table_size": model.TABLE_SIZE,
+        "batch_size": model.BATCH_SIZE,
+        "key_words": model.KEY_WORDS,
+        "entries": {},
+    }
+    for name, (fn, specs) in model.entry_points().items():
+        if only is not None and name != only:
+            continue
+        text = to_hlo_text(model.lowered(name))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(s.shape), "dtype": s.dtype.name} for s in specs
+            ],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    # TSV twin for the Rust loader (the offline crate set has no serde;
+    # a line-oriented format keeps rust/src/runtime/artifacts.rs trivial).
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write(f"table_size\t{manifest['table_size']}\n")
+        f.write(f"batch_size\t{manifest['batch_size']}\n")
+        f.write(f"key_words\t{manifest['key_words']}\n")
+        for name in sorted(manifest["entries"]):
+            e = manifest["entries"][name]
+            args = ";".join(
+                f"{a['dtype']}:" + ",".join(str(d) for d in a["shape"])
+                for a in e["args"]
+            )
+            f.write(f"entry\t{name}\t{e['file']}\t{args}\n")
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')} (+.tsv)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)  # legacy
+    ap.add_argument("--only", default=None, help="build a single entry point")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    build(out_dir or ".", args.only)
+
+
+if __name__ == "__main__":
+    main()

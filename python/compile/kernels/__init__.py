@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for the SwitchAgg aggregation hot-spot.
+
+`aggregate` — table-tiled scatter-aggregate (SUM/MAX/MIN) used by the
+reducer merge and the XLA-accelerated BPE batch drain.
+`hash_fnv`  — word-level FNV-1a-32 key hashing, bit-exact with the Rust
+implementation in ``rust/src/switch/hash.rs``.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin the
+Rust side uses cannot execute Mosaic custom-calls (see DESIGN.md
+§Hardware-Adaptation for the TPU mapping).
+"""

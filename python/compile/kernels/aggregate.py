@@ -1,0 +1,165 @@
+"""Pallas scatter-aggregate kernel: the SwitchAgg aggregation unit.
+
+The paper's processing engine performs, per key-value pair, a hash-table
+lookup followed by ``slot.value = op(slot.value, value)`` (SUM/MAX/MIN,
+§4.2.4).  On the FPGA this is a 1-cycle BRAM read-modify-write; a TPU has
+no per-slot scratchpad RMW, so the kernel re-expresses a *batch* of B
+pairs as dense, streaming compute over table tiles (DESIGN.md
+§Hardware-Adaptation):
+
+  * grid = (T // TILE_T, B // TILE_B) — the table is tiled so each tile
+    fits VMEM; batch chunks stream through while a tile is resident.
+  * SUM uses ``vals @ one_hot(idx)`` so the MXU systolic array performs
+    the segment reduction (the TPU analogue of "aggregate without
+    pipeline stall").
+  * MAX/MIN use a masked elementwise reduce over the batch chunk.
+  * ``idx < 0`` marks padding lanes (Rust pads partial batches); they
+    contribute the op identity.
+
+Each table element is read and written exactly once per batch — the
+kernel is HBM-bandwidth-bound, which is its roofline.
+
+Correctness oracle: :mod:`python.compile.kernels.ref` (pure jnp), checked
+by ``python/tests/test_kernel.py`` under hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default AOT shapes (must match rust/src/runtime/engine.rs and the
+# artifact manifest written by aot.py).
+TABLE_SIZE = 65536
+BATCH_SIZE = 1024
+# Tile sizes chosen so the one-hot sub-block (TILE_B x TILE_T f32) peaks
+# at 256*2048*4 = 2 MiB of VMEM, within a 16 MiB budget together with the
+# resident table tile, batch chunk, and double-buffered next tile.
+TILE_T = 2048
+TILE_B = 256
+
+OPS = ("sum", "max", "min")
+
+#: op -> identity element (what padding lanes contribute, and what an
+#: empty table slot holds).  Mirrors rust/src/switch/aggregate.rs.
+IDENTITY = {"sum": 0.0, "max": -jnp.inf, "min": jnp.inf}
+
+
+def _agg_kernel(table_ref, idx_ref, vals_ref, o_ref, *, op: str, tile_t: int):
+    """One (table-tile, batch-chunk) grid step.
+
+    Grid dim 0 walks table tiles (parallel); grid dim 1 walks batch
+    chunks (sequential accumulation into ``o_ref``).
+    """
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+
+    # First batch chunk for this tile: seed the output with the current
+    # table contents.
+    @pl.when(b == 0)
+    def _seed():
+        o_ref[...] = table_ref[...]
+
+    idx = idx_ref[...]  # i32[TILE_B], global slot ids (or <0 = padding)
+    vals = vals_ref[...]  # f32[TILE_B]
+
+    # Global ids covered by this table tile.
+    base = t * tile_t
+    tile_ids = base + jax.lax.broadcasted_iota(jnp.int32, (tile_t,), 0)
+
+    # one_hot[b, t] — does batch lane b target tile position t?
+    # Padding lanes (idx < 0) match nothing.
+    hit = (idx[:, None] == tile_ids[None, :]) & (idx[:, None] >= 0)
+
+    if op == "sum":
+        # MXU path: vector-matrix product performs the segment sum.
+        contrib = jnp.dot(
+            vals,
+            hit.astype(vals.dtype),
+            preferred_element_type=vals.dtype,
+        )
+        o_ref[...] = o_ref[...] + contrib
+    elif op == "max":
+        masked = jnp.where(hit, vals[:, None], -jnp.inf)
+        o_ref[...] = jnp.maximum(o_ref[...], jnp.max(masked, axis=0))
+    elif op == "min":
+        masked = jnp.where(hit, vals[:, None], jnp.inf)
+        o_ref[...] = jnp.minimum(o_ref[...], jnp.min(masked, axis=0))
+    else:  # pragma: no cover - guarded by OPS
+        raise ValueError(f"unknown op {op!r}")
+
+
+def _agg_kernel_i32(table_ref, idx_ref, vals_ref, o_ref, *, tile_t: int):
+    """Integer SUM variant (word-count style aggregation).
+
+    int32 matmul has no MXU path; use multiply+reduce which XLA
+    vectorizes on CPU and the VPU handles on TPU.
+    """
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _seed():
+        o_ref[...] = table_ref[...]
+
+    idx = idx_ref[...]
+    vals = vals_ref[...]
+    base = t * tile_t
+    tile_ids = base + jax.lax.broadcasted_iota(jnp.int32, (tile_t,), 0)
+    hit = (idx[:, None] == tile_ids[None, :]) & (idx[:, None] >= 0)
+    contrib = jnp.sum(jnp.where(hit, vals[:, None], 0), axis=0, dtype=jnp.int32)
+    o_ref[...] = o_ref[...] + contrib
+
+
+def _tile_sizes(table_size: int, batch_size: int) -> tuple[int, int]:
+    tile_t = min(TILE_T, table_size)
+    tile_b = min(TILE_B, batch_size)
+    if table_size % tile_t or batch_size % tile_b:
+        raise ValueError(
+            f"table_size {table_size} / batch_size {batch_size} must be "
+            f"divisible by tile sizes ({tile_t}, {tile_b})"
+        )
+    return tile_t, tile_b
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def scatter_aggregate(table, idx, vals, *, op: str = "sum"):
+    """Aggregate ``vals`` into ``table`` at positions ``idx``.
+
+    Args:
+      table: f32[T] or i32[T] current slot values (identity-initialized
+        for empty slots).
+      idx:   i32[B] target slot per batch lane; negative = padding lane.
+      vals:  same dtype as table, [B].
+      op:    "sum" | "max" | "min" ("max"/"min" are f32-only).
+
+    Returns the updated table; every slot is touched exactly once.
+    """
+    if op not in OPS:
+        raise ValueError(f"op must be one of {OPS}, got {op!r}")
+    table_size, batch_size = table.shape[0], idx.shape[0]
+    tile_t, tile_b = _tile_sizes(table_size, batch_size)
+
+    if table.dtype == jnp.int32:
+        if op != "sum":
+            raise ValueError("int32 tables support only op='sum'")
+        kernel = functools.partial(_agg_kernel_i32, tile_t=tile_t)
+    else:
+        kernel = functools.partial(_agg_kernel, op=op, tile_t=tile_t)
+
+    grid = (table_size // tile_t, batch_size // tile_b)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t,), lambda t, b: (t,)),
+            pl.BlockSpec((tile_b,), lambda t, b: (b,)),
+            pl.BlockSpec((tile_b,), lambda t, b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((tile_t,), lambda t, b: (t,)),
+        out_shape=jax.ShapeDtypeStruct((table_size,), table.dtype),
+        interpret=True,
+    )(table, idx, vals)

@@ -1,0 +1,60 @@
+"""Pallas FNV-1a-32 hash kernel over packed key words.
+
+SwitchAgg's processing engines share one hash function that "accepts
+different length inputs and gives a fixed length output" (§4.2.4).  We
+define it word-level: keys are zero-padded to W 32-bit little-endian
+words and
+
+    h = 2166136261
+    for each word w: h = (h XOR w) * 16777619   (mod 2^32)
+
+``rust/src/switch/hash.rs::fnv1a_words`` implements the identical
+function; ``rust/tests/integration_runtime.rs`` asserts bit-equality
+across the language boundary through the AOT artifact.
+
+The kernel is embarrassingly parallel over the batch; the word loop is a
+``fori_loop`` so W stays a runtime-visible constant in the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FNV_OFFSET = 2166136261
+FNV_PRIME = 16777619
+
+# Default AOT shapes (see aot.py manifest): 64-byte max key = 16 words.
+KEY_WORDS = 16
+TILE_B = 256
+
+
+def _hash_kernel(words_ref, o_ref, *, n_words: int):
+    words = words_ref[...].astype(jnp.uint32)  # [TILE_B, W]
+    h0 = jnp.full((words.shape[0],), FNV_OFFSET, dtype=jnp.uint32)
+
+    def body(i, h):
+        w = jax.lax.dynamic_slice_in_dim(words, i, 1, axis=1)[:, 0]
+        return (h ^ w) * jnp.uint32(FNV_PRIME)
+
+    o_ref[...] = jax.lax.fori_loop(0, n_words, body, h0)
+
+
+@jax.jit
+def fnv1a_hash(words):
+    """Hash each row of ``words`` (u32[B, W]) to u32[B]."""
+    batch, n_words = words.shape
+    tile_b = min(TILE_B, batch)
+    if batch % tile_b:
+        raise ValueError(f"batch {batch} not divisible by tile {tile_b}")
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_hash_kernel, n_words=n_words),
+        grid=(batch // tile_b,),
+        in_specs=[pl.BlockSpec((tile_b, n_words), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((tile_b,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.uint32),
+        interpret=True,
+    )(words)

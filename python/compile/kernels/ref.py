@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth for correctness: no Pallas, no tiling — just
+XLA scatter ops and a plain python word loop.  The pytest suite asserts
+the kernels match these bit-for-bit (hashes) / to float tolerance
+(aggregation).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .aggregate import IDENTITY  # noqa: F401  (re-exported for tests)
+from .hash_fnv import FNV_OFFSET, FNV_PRIME
+
+
+def ref_scatter_aggregate(table, idx, vals, *, op: str = "sum"):
+    """Reference scatter-aggregate using jnp indexed updates.
+
+    Padding lanes (idx < 0) are dropped before scattering.
+    """
+    valid = idx >= 0
+    # Route padding lanes to slot 0 with the op identity so shapes stay
+    # static (jit-compatible); identity contributions are no-ops.
+    safe_idx = jnp.where(valid, idx, 0)
+    if op == "sum":
+        safe_vals = jnp.where(valid, vals, jnp.zeros_like(vals))
+        return table.at[safe_idx].add(safe_vals)
+    if op == "max":
+        safe_vals = jnp.where(valid, vals, -jnp.inf)
+        return table.at[safe_idx].max(safe_vals)
+    if op == "min":
+        safe_vals = jnp.where(valid, vals, jnp.inf)
+        return table.at[safe_idx].min(safe_vals)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def ref_fnv1a_hash(words):
+    """Reference word-level FNV-1a-32 over u32[B, W] rows."""
+    words = words.astype(jnp.uint32)
+    h = jnp.full((words.shape[0],), FNV_OFFSET, dtype=jnp.uint32)
+    for i in range(words.shape[1]):
+        h = (h ^ words[:, i]) * jnp.uint32(FNV_PRIME)
+    return h
+
+
+def fnv1a_hash_py(words_row) -> int:
+    """Plain-python single-row oracle (for tiny hand-checked cases)."""
+    h = FNV_OFFSET
+    for w in words_row:
+        h = ((h ^ int(w)) * FNV_PRIME) & 0xFFFFFFFF
+    return h

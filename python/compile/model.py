@@ -1,0 +1,131 @@
+"""Layer-2 JAX compute graph: the aggregation steps SwitchAgg executes.
+
+Each public function here is an AOT entry point: ``aot.py`` lowers it
+once to HLO text and the Rust runtime (rust/src/runtime/engine.rs)
+compiles + executes it on the PJRT CPU client.  Python never runs on the
+request path.
+
+Entry points:
+
+  * ``aggregate_sum / aggregate_max / aggregate_min`` — f32 table merge
+    (reducer final merge; XLA-accelerated BPE batch drain).
+  * ``aggregate_sum_i32`` — integer SUM (WordCount counts).
+  * ``hash_keys`` — FNV-1a-32 over packed key words (bit-exact with
+    rust/src/switch/hash.rs).
+  * ``hash_aggregate_sum`` — fused hash→bucket→aggregate: the full FPE
+    datapath (hash unit + memory management + aggregation unit, Fig. 6)
+    as one graph, so XLA fuses the three stages the way the FPGA
+    pipelines them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import aggregate as agg_kernel
+from .kernels import hash_fnv
+
+# Canonical AOT shapes — keep in sync with rust/src/runtime/engine.rs and
+# artifacts/manifest.json (written by aot.py).
+TABLE_SIZE = agg_kernel.TABLE_SIZE  # 65536 slots
+BATCH_SIZE = agg_kernel.BATCH_SIZE  # 1024 pairs per execute
+KEY_WORDS = hash_fnv.KEY_WORDS  # 16 u32 words = 64 B max key
+
+
+def aggregate_sum(table, idx, vals):
+    """f32 segment-SUM of a batch into the slot table."""
+    return (agg_kernel.scatter_aggregate(table, idx, vals, op="sum"),)
+
+
+def aggregate_max(table, idx, vals):
+    """f32 segment-MAX of a batch into the slot table."""
+    return (agg_kernel.scatter_aggregate(table, idx, vals, op="max"),)
+
+
+def aggregate_min(table, idx, vals):
+    """f32 segment-MIN of a batch into the slot table."""
+    return (agg_kernel.scatter_aggregate(table, idx, vals, op="min"),)
+
+
+def aggregate_sum_i32(table, idx, vals):
+    """i32 segment-SUM (WordCount counts are integers)."""
+    return (agg_kernel.scatter_aggregate(table, idx, vals, op="sum"),)
+
+
+def hash_keys(words):
+    """FNV-1a-32 each packed key; returns u32[B]."""
+    return (hash_fnv.fnv1a_hash(words),)
+
+
+def hash_aggregate_sum(table, words, vals):
+    """Fused FPE datapath: hash keys, map to buckets, segment-SUM.
+
+    Bucket = hash mod TABLE_SIZE.  This is the *approximate* (hash-only)
+    aggregation the switch data plane performs; exact-key residency is
+    the Rust coordinator's job.  A zero key row (all words zero) is
+    treated as a padding lane.
+    """
+    hashes = hash_fnv.fnv1a_hash(words)
+    idx = (hashes % jnp.uint32(table.shape[0])).astype(jnp.int32)
+    padding = jnp.all(words == 0, axis=1)
+    idx = jnp.where(padding, -1, idx)
+    return (agg_kernel.scatter_aggregate(table, idx, vals, op="sum"),)
+
+
+def _scatter_entry(op):
+    """CPU-fast variant: native XLA scatter instead of the Pallas
+    table-tiled kernel.
+
+    The Pallas kernel is the *TPU* design (one-hot matmuls feed the
+    MXU, DESIGN.md §Hardware-Adaptation); under interpret=True on the
+    CPU PJRT client its lowering is a while-loop nest doing O(B·T)
+    work per batch.  XLA's scatter lowers to O(B) updates on CPU, so
+    the Rust engine prefers these `*_xla` twins on the request path
+    (SWITCHAGG_KERNEL=pallas forces the Pallas artifacts; tests assert
+    both produce identical tables).
+    """
+
+    def fn(table, idx, vals):
+        from .kernels.ref import ref_scatter_aggregate
+
+        return (ref_scatter_aggregate(table, idx, vals, op=op),)
+
+    fn.__name__ = f"aggregate_{op}_scatter"
+    return fn
+
+
+def entry_points():
+    """name -> (fn, arg ShapeDtypeStructs). Consumed by aot.py."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    u32 = jnp.uint32
+    table_f = jax.ShapeDtypeStruct((TABLE_SIZE,), f32)
+    table_i = jax.ShapeDtypeStruct((TABLE_SIZE,), i32)
+    idx = jax.ShapeDtypeStruct((BATCH_SIZE,), i32)
+    vals_f = jax.ShapeDtypeStruct((BATCH_SIZE,), f32)
+    vals_i = jax.ShapeDtypeStruct((BATCH_SIZE,), i32)
+    words = jax.ShapeDtypeStruct((BATCH_SIZE, KEY_WORDS), u32)
+    return {
+        # Pallas table-tiled kernels (the paper-mapped TPU design).
+        "agg_sum_f32": (aggregate_sum, (table_f, idx, vals_f)),
+        "agg_max_f32": (aggregate_max, (table_f, idx, vals_f)),
+        "agg_min_f32": (aggregate_min, (table_f, idx, vals_f)),
+        "agg_sum_i32": (aggregate_sum_i32, (table_i, idx, vals_i)),
+        "hash_fnv": (hash_keys, (words,)),
+        "hash_agg_sum_f32": (hash_aggregate_sum, (table_f, words, vals_f)),
+        # CPU-fast scatter twins (request-path default on PJRT CPU).
+        "agg_sum_f32_xla": (_scatter_entry("sum"), (table_f, idx, vals_f)),
+        "agg_max_f32_xla": (_scatter_entry("max"), (table_f, idx, vals_f)),
+        "agg_min_f32_xla": (_scatter_entry("min"), (table_f, idx, vals_f)),
+        "agg_sum_i32_xla": (_scatter_entry("sum"), (table_i, idx, vals_i)),
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def lowered(name: str):
+    """Lower one entry point (cached); returns the jax Lowered object."""
+    fn, specs = entry_points()[name]
+    return jax.jit(fn).lower(*specs)

@@ -1,0 +1,66 @@
+"""AOT pipeline tests: HLO text artifacts + manifest integrity."""
+
+import hashlib
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(str(out))
+    return out, manifest
+
+
+def test_manifest_lists_all_entries(built):
+    out, manifest = built
+    assert set(manifest["entries"]) == set(model.entry_points())
+    assert manifest["table_size"] == model.TABLE_SIZE
+    assert manifest["batch_size"] == model.BATCH_SIZE
+    assert manifest["key_words"] == model.KEY_WORDS
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    out, manifest = built
+    for name, entry in manifest["entries"].items():
+        text = (out / entry["file"]).read_text()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # 64-bit-id regression guard: the text parser reassigns ids, but
+        # the emitted text itself must be plain HLO, not a proto dump.
+        assert "\x00" not in text, name
+
+
+def test_manifest_hashes_match_files(built):
+    out, manifest = built
+    for name, entry in manifest["entries"].items():
+        text = (out / entry["file"]).read_text()
+        assert hashlib.sha256(text.encode()).hexdigest() == entry["sha256"], name
+        assert len(text) == entry["bytes"], name
+
+
+def test_manifest_arg_shapes(built):
+    _, manifest = built
+    args = manifest["entries"]["agg_sum_f32"]["args"]
+    assert args[0] == {"shape": [model.TABLE_SIZE], "dtype": "float32"}
+    assert args[1] == {"shape": [model.BATCH_SIZE], "dtype": "int32"}
+    assert args[2] == {"shape": [model.BATCH_SIZE], "dtype": "float32"}
+    hargs = manifest["entries"]["hash_fnv"]["args"]
+    assert hargs[0]["shape"] == [model.BATCH_SIZE, model.KEY_WORDS]
+    assert hargs[0]["dtype"] == "uint32"
+
+
+def test_only_flag_builds_single_entry(tmp_path):
+    manifest = aot.build(str(tmp_path), only="hash_fnv")
+    assert set(manifest["entries"]) == {"hash_fnv"}
+    assert os.path.exists(tmp_path / "hash_fnv.hlo.txt")
+
+
+def test_manifest_json_round_trips(built):
+    out, manifest = built
+    on_disk = json.loads((out / "manifest.json").read_text())
+    assert on_disk == manifest

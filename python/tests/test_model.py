@@ -1,0 +1,73 @@
+"""L2 model tests: entry points execute, shapes match, fusion semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_entry_points_cover_all_ops():
+    eps = model.entry_points()
+    assert set(eps) == {
+        "agg_sum_f32",
+        "agg_max_f32",
+        "agg_min_f32",
+        "agg_sum_i32",
+        "hash_fnv",
+        "hash_agg_sum_f32",
+        # CPU-fast scatter twins (request-path default on PJRT CPU).
+        "agg_sum_f32_xla",
+        "agg_max_f32_xla",
+        "agg_min_f32_xla",
+        "agg_sum_i32_xla",
+    }
+    for name, (fn, specs) in eps.items():
+        assert callable(fn), name
+        assert all(isinstance(s, jax.ShapeDtypeStruct) for s in specs), name
+
+
+def test_aggregate_entry_returns_tuple1():
+    table = jnp.zeros((model.TABLE_SIZE,), jnp.float32)
+    idx = jnp.full((model.BATCH_SIZE,), -1, jnp.int32)
+    vals = jnp.zeros((model.BATCH_SIZE,), jnp.float32)
+    out = model.aggregate_sum(table, idx, vals)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (model.TABLE_SIZE,)
+
+
+def test_hash_aggregate_fused_equals_two_step():
+    rng = np.random.default_rng(7)
+    batch, words_n = model.BATCH_SIZE, model.KEY_WORDS
+    words = rng.integers(1, 2**32, (batch, words_n), dtype=np.uint64).astype(
+        np.uint32
+    )
+    words[::5] = 0  # padding lanes
+    vals = rng.normal(size=batch).astype(np.float32)
+    table = jnp.zeros((model.TABLE_SIZE,), jnp.float32)
+
+    (fused,) = model.hash_aggregate_sum(table, jnp.asarray(words), jnp.asarray(vals))
+
+    hashes = np.asarray(ref.ref_fnv1a_hash(jnp.asarray(words)))
+    idx = (hashes % model.TABLE_SIZE).astype(np.int32)
+    idx[(words == 0).all(axis=1)] = -1
+    want = ref.ref_scatter_aggregate(
+        table, jnp.asarray(idx), jnp.asarray(vals), op="sum"
+    )
+    np.testing.assert_allclose(fused, want, rtol=1e-5, atol=1e-5)
+
+
+def test_lowering_is_cached_and_valid():
+    low1 = model.lowered("agg_sum_f32")
+    low2 = model.lowered("agg_sum_f32")
+    assert low1 is low2
+    text = low1.as_text()
+    assert "func" in text  # stablehlo module
+
+
+def test_canonical_shapes_divisible_by_tiles():
+    from compile.kernels import aggregate as ak
+
+    assert model.TABLE_SIZE % ak.TILE_T == 0
+    assert model.BATCH_SIZE % ak.TILE_B == 0

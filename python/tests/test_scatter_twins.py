@@ -1,0 +1,45 @@
+"""The *_xla scatter twins must be numerically identical to the Pallas
+kernels — they are alternative lowerings of the same operation, chosen
+by the Rust engine per target (DESIGN.md §Perf)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import aggregate
+
+
+def _entry(name):
+    fn, _ = model.entry_points()[name]
+    return fn
+
+
+@settings(deadline=None, max_examples=6)
+@given(op=st.sampled_from(["sum", "max", "min"]), seed=st.integers(0, 2**31 - 1))
+def test_pallas_and_scatter_twins_agree_f32(op, seed):
+    rng = np.random.default_rng(seed)
+    table = jnp.full((model.TABLE_SIZE,), aggregate.IDENTITY[op], jnp.float32)
+    idx = jnp.asarray(
+        rng.integers(-1, model.TABLE_SIZE, model.BATCH_SIZE), jnp.int32
+    )
+    vals = jnp.asarray(rng.normal(size=model.BATCH_SIZE), jnp.float32)
+    (pallas_out,) = _entry(f"agg_{op}_f32")(table, idx, vals)
+    (scatter_out,) = _entry(f"agg_{op}_f32_xla")(table, idx, vals)
+    np.testing.assert_allclose(pallas_out, scatter_out, rtol=1e-5, atol=1e-5)
+
+
+def test_i32_twins_agree_exactly():
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(
+        rng.integers(-50, 50, model.TABLE_SIZE).astype(np.int32)
+    )
+    idx = jnp.asarray(
+        rng.integers(-1, model.TABLE_SIZE, model.BATCH_SIZE), jnp.int32
+    )
+    vals = jnp.asarray(
+        rng.integers(-100, 100, model.BATCH_SIZE).astype(np.int32)
+    )
+    (a,) = _entry("agg_sum_i32")(table, idx, vals)
+    (b,) = _entry("agg_sum_i32_xla")(table, idx, vals)
+    np.testing.assert_array_equal(a, b)

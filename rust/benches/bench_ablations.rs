@@ -1,0 +1,14 @@
+//! Bench + regeneration of the design-choice ablations (DESIGN.md).
+
+use switchagg::experiments::{ablations, Scale};
+use switchagg::util::bench;
+
+fn main() {
+    let scale = Scale::default();
+    bench::section("Ablations — design choices");
+    let rows = ablations::run(scale);
+    ablations::print_rows(&rows);
+    bench::run("ablation suite (6 variants)", 0, 2, || {
+        ablations::run(scale).len() as u64
+    });
+}

@@ -1,0 +1,13 @@
+//! Bench + regeneration of the Eq. 1 / Eq. 2 analysis (§2.2.1).
+
+use switchagg::experiments::eq1;
+use switchagg::util::bench;
+
+fn main() {
+    bench::section("Eq. 1 / Eq. 2 — RMT extra-traffic analysis");
+    let rows = eq1::run();
+    eq1::print_rows(&rows);
+    bench::run("eq1 model + DAIET measurement", 1, 5, || {
+        eq1::run().len() as u64
+    });
+}

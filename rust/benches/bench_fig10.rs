@@ -1,0 +1,14 @@
+//! Bench + regeneration of Fig. 10 (job completion time).
+
+use switchagg::experiments::{fig10, Scale};
+use switchagg::util::bench;
+
+fn main() {
+    let scale = Scale::default();
+    bench::section("Fig. 10 — job completion time");
+    let rows = fig10::run(scale);
+    fig10::print_rows(&rows, scale);
+    bench::run("fig10 4 jobs w/ + w/o SwitchAgg", 1, 3, || {
+        fig10::run(scale).iter().map(|r| r.report.input_pairs).sum()
+    });
+}

@@ -1,0 +1,12 @@
+//! Bench + regeneration of Fig. 11 (reducer CPU utilization).
+
+use switchagg::experiments::{fig11, Scale};
+use switchagg::util::bench;
+
+fn main() {
+    let scale = Scale::default();
+    bench::section("Fig. 11 — CPU utilization");
+    let rows = fig11::run(scale);
+    fig11::print_rows(&rows);
+    bench::run("fig11 4 jobs", 1, 3, || fig11::run(scale).len() as u64);
+}

@@ -1,0 +1,21 @@
+//! Bench + regeneration of Fig. 2 (reduction vs key variety; multi-hop).
+
+use switchagg::experiments::{fig2, Scale};
+use switchagg::util::bench;
+
+fn main() {
+    let scale = Scale::default();
+    bench::section("Fig. 2(a) — reduction ratio vs key variety");
+    let rows = fig2::fig2a(scale);
+    fig2::print_fig2a(&rows);
+    bench::run("fig2a sweep (scale 1/1024)", 1, 3, || {
+        fig2::fig2a(scale).len() as u64
+    });
+
+    bench::section("Fig. 2(b) — multi-hop aggregation");
+    let rows = fig2::fig2b(scale);
+    fig2::print_fig2b(&rows);
+    bench::run("fig2b hops 1-4 (scale 1/1024)", 1, 3, || {
+        fig2::fig2b(scale).len() as u64
+    });
+}

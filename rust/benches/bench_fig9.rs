@@ -1,0 +1,21 @@
+//! Bench + regeneration of Fig. 9 (reduction ratio vs workload size /
+//! memory capacity, uniform + zipf, single- and multi-level).
+
+use switchagg::experiments::{fig9, Scale};
+use switchagg::util::bench;
+use switchagg::workload::generator::KeyDist;
+
+fn main() {
+    let scale = Scale::default();
+    bench::section("Fig. 9 — reduction ratio grid");
+    let rows = fig9::run(scale);
+    fig9::print_rows(&rows);
+    // Time one representative cell (16GB zipf multi-level); items =
+    // approximate pairs simulated per rep.
+    let pairs = scale.bytes(16 << 30) / 46;
+    bench::run("fig9 cell 16GB zipf M-32MB", 1, 3, move || {
+        let r = fig9::run_cell(scale, 16, 32 << 20, Some(8u64 << 30), KeyDist::Zipf(0.99));
+        assert!(r > 0.0);
+        pairs
+    });
+}

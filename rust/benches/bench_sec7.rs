@@ -1,0 +1,16 @@
+//! Bench + regeneration of the §7 future-work evaluations
+//! (aggregation-aware LogP, reduction-aware routing, weighted memory).
+
+use switchagg::experiments::{sec7, Scale};
+use switchagg::util::bench;
+
+fn main() {
+    let scale = Scale::default();
+    bench::section("§7 — future-work features");
+    sec7::run(scale);
+    bench::run("sec7 suite", 0, 2, || {
+        sec7::perfmodel_rows().len() as u64
+            + sec7::routing_rows().len() as u64
+            + sec7::memory_rows(scale).len() as u64
+    });
+}

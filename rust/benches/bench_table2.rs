@@ -1,0 +1,15 @@
+//! Bench + regeneration of Table 2 (FIFO-full time ratio).
+
+use switchagg::experiments::{table2, Scale};
+use switchagg::util::bench;
+
+fn main() {
+    let scale = Scale::default();
+    bench::section("Table 2 — FIFO-full time ratio");
+    let rows = table2::run(scale);
+    table2::print_rows(&rows);
+    table2::print_stressed(&table2::run_stressed(scale));
+    bench::run("table2 sweep 2-16GB (scale 1/1024)", 1, 3, || {
+        table2::run(scale).iter().map(|r| r.written).sum()
+    });
+}

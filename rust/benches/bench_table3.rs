@@ -1,0 +1,14 @@
+//! Bench + regeneration of Table 3 (per-stage processing delay).
+
+use switchagg::experiments::{table3, Scale};
+use switchagg::util::bench;
+
+fn main() {
+    let scale = Scale::default();
+    bench::section("Table 3 — processing delay per stage");
+    let rows = table3::run(scale);
+    table3::print_rows(&rows, scale);
+    bench::run("table3 instrumented run", 1, 5, || {
+        table3::run(scale).len() as u64
+    });
+}

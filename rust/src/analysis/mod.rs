@@ -1,0 +1,17 @@
+//! The paper's analytical models and theorems (§2.2).
+//!
+//! * [`models`] — Eq. 1 (padding overhead of fixed-format header KV
+//!   pairs), Eq. 2 (per-packet header overhead), Eq. 3 (reduction
+//!   ratio under a memory cap).
+//! * [`theorems`] — executable checks of Theorem 2.1 (merging flows
+//!   preserves the reduction ratio) and Theorem 2.2 (multi-hop equals
+//!   single-hop for uniform data; bounded for skewed data).
+//! * [`perfmodel`] — the §7 future-work item: LogP extended with
+//!   per-level in-network reduction (aggregation-aware performance
+//!   modeling).
+
+pub mod models;
+pub mod perfmodel;
+pub mod theorems;
+
+pub use models::{eq1_extra_traffic_ratio, eq2_total_bytes, eq3_reduction_ratio};

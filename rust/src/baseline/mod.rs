@@ -1,0 +1,14 @@
+//! Baseline systems the paper compares against (§2.2, §8).
+//!
+//! * [`daiet`] — a DAIET-style RMT/P4 switch: key-value pairs ride the
+//!   packet *header* in fixed-length slots, packets are capped at
+//!   ~200 B, and the match-action table holds 16 K entries with no
+//!   back-end to evict into.
+//! * [`noagg`] — a plain forwarding switch (no in-network aggregation);
+//!   the reducer host does all the work.
+
+pub mod daiet;
+pub mod noagg;
+
+pub use daiet::{DaietConfig, DaietSwitch};
+pub use noagg::NoAggSwitch;

@@ -1,0 +1,75 @@
+//! No-aggregation baseline: a plain store-and-forward switch.  All
+//! traffic reaches the reducer, which aggregates in software — the
+//! "without SwitchAgg" arm of Figs. 10–11.
+
+use crate::protocol::{AggregationPacket, KvPair};
+
+#[derive(Clone, Debug, Default)]
+pub struct NoAggStats {
+    pub pairs: u64,
+    pub bytes: u64,
+    pub packets: u64,
+}
+
+/// Forwarding-only switch; reduction ratio is zero by construction.
+#[derive(Clone, Debug, Default)]
+pub struct NoAggSwitch {
+    pub stats: NoAggStats,
+}
+
+impl NoAggSwitch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Forward one packet unchanged.
+    pub fn forward(&mut self, pkt: &AggregationPacket) -> AggregationPacket {
+        self.stats.packets += 1;
+        self.stats.pairs += pkt.pairs.len() as u64;
+        self.stats.bytes += pkt.wire_len() as u64;
+        pkt.clone()
+    }
+
+    /// Forward a whole stream; output equals input.
+    pub fn run(&mut self, stream: &[KvPair]) -> Vec<KvPair> {
+        self.stats.pairs += stream.len() as u64;
+        self.stats.bytes += stream.iter().map(|p| p.encoded_len() as u64).sum::<u64>();
+        stream.to_vec()
+    }
+
+    pub fn reduction_ratio(&self) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{AggOp, Key, TreeId};
+
+    #[test]
+    fn output_equals_input() {
+        let mut sw = NoAggSwitch::new();
+        let stream: Vec<KvPair> = (0..100)
+            .map(|i| KvPair::new(Key::from_id(i, 16), i as i64))
+            .collect();
+        let out = sw.run(&stream);
+        assert_eq!(out, stream);
+        assert_eq!(sw.stats.pairs, 100);
+        assert_eq!(sw.reduction_ratio(), 0.0);
+    }
+
+    #[test]
+    fn packet_forwarding_counts_bytes() {
+        let mut sw = NoAggSwitch::new();
+        let pkt = AggregationPacket {
+            tree: TreeId(1),
+            op: AggOp::Sum,
+            eot: true,
+            pairs: vec![KvPair::new(Key::from_id(1, 16), 1)],
+        };
+        let out = sw.forward(&pkt);
+        assert_eq!(out, pkt);
+        assert_eq!(sw.stats.bytes, pkt.wire_len() as u64);
+    }
+}

@@ -1,0 +1,317 @@
+//! The controller state machine (§3):
+//!
+//! 1. master sends `Launch` (worker counts + addresses);
+//! 2. controller builds the aggregation tree from the physical
+//!    topology and sends `Configure` to every switch on it;
+//! 3. each switch answers `Ack` (type 1);
+//! 4. once all acks arrive the controller answers the master with
+//!    `Ack` (type 0) — data transmission may start.
+
+use crate::net::{NodeId, Topology};
+use crate::protocol::{
+    AckKind, AggOp, ConfigurePacket, LaunchPacket, Packet, TreeId,
+};
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::tree::AggTree;
+
+/// Result of a launch request: the configure packets to deliver.
+#[derive(Clone, Debug)]
+pub struct LaunchOutcome {
+    pub tree: TreeId,
+    /// (switch, packet) deliveries the control plane must make.
+    pub configures: Vec<(NodeId, ConfigurePacket)>,
+}
+
+/// Per-tree controller state.
+#[derive(Debug)]
+enum TreeState {
+    /// Waiting for acks from these switches.
+    Configuring(BTreeSet<NodeId>),
+    /// All switches acked; master notified.
+    Running,
+}
+
+/// The logical controller (may live on a server or a middlebox, §3).
+pub struct Controller {
+    topo: Topology,
+    next_tree: u32,
+    trees: BTreeMap<TreeId, (AggTree, TreeState)>,
+}
+
+impl Controller {
+    pub fn new(topo: Topology) -> Self {
+        Self {
+            topo,
+            next_tree: 1,
+            trees: BTreeMap::new(),
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Handle a `Launch` packet from the master.
+    pub fn launch(&mut self, req: &LaunchPacket, op: AggOp) -> Result<LaunchOutcome> {
+        if req.reducers.len() != 1 {
+            bail!(
+                "this prototype supports exactly one reducer, got {}",
+                req.reducers.len()
+            );
+        }
+        let mappers: Vec<NodeId> = req.mappers.iter().map(|&m| NodeId(m)).collect();
+        let reducer = NodeId(req.reducers[0]);
+        let tree = TreeId(self.next_tree);
+        self.next_tree += 1;
+        let agg_tree = AggTree::build(&self.topo, tree, op, &mappers, reducer)?;
+        let configures: Vec<(NodeId, ConfigurePacket)> = agg_tree
+            .switch_cfgs
+            .iter()
+            .map(|(&sw, cfg)| {
+                (
+                    sw,
+                    ConfigurePacket {
+                        trees: vec![cfg.clone()],
+                    },
+                )
+            })
+            .collect();
+        let pending: BTreeSet<NodeId> = agg_tree.switch_cfgs.keys().copied().collect();
+        self.trees
+            .insert(tree, (agg_tree, TreeState::Configuring(pending)));
+        Ok(LaunchOutcome { tree, configures })
+    }
+
+    /// Handle an `Ack` (type 1) from a switch.  Returns the packet to
+    /// send to the master (`Ack` type 0) once the tree is fully
+    /// configured.
+    pub fn switch_ack(&mut self, tree: TreeId, from: NodeId) -> Result<Option<Packet>> {
+        let Some((_, state)) = self.trees.get_mut(&tree) else {
+            bail!("ack for unknown tree {tree}");
+        };
+        match state {
+            TreeState::Configuring(pending) => {
+                if !pending.remove(&from) {
+                    bail!("unexpected ack from {from} for {tree}");
+                }
+                if pending.is_empty() {
+                    *state = TreeState::Running;
+                    Ok(Some(Packet::Ack(AckKind::Master)))
+                } else {
+                    Ok(None)
+                }
+            }
+            TreeState::Running => bail!("tree {tree} already running"),
+        }
+    }
+
+    /// Switches that have not yet acked `tree` (empty once running).
+    /// The control plane uses this after an ack timeout to retransmit
+    /// — Configure is idempotent (§4.2.2 re-apply replaces), so
+    /// retrying lost packets is safe.
+    pub fn pending_switches(&self, tree: TreeId) -> Vec<NodeId> {
+        match self.trees.get(&tree) {
+            Some((_, TreeState::Configuring(p))) => p.iter().copied().collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Regenerate the Configure packets for the still-unacked switches
+    /// (retransmission after a timeout / injected packet loss).
+    pub fn resend_configures(&self, tree: TreeId) -> Vec<(NodeId, ConfigurePacket)> {
+        let Some((agg_tree, TreeState::Configuring(pending))) = self.trees.get(&tree) else {
+            return Vec::new();
+        };
+        pending
+            .iter()
+            .filter_map(|sw| {
+                agg_tree.switch_cfgs.get(sw).map(|cfg| {
+                    (
+                        *sw,
+                        ConfigurePacket {
+                            trees: vec![cfg.clone()],
+                        },
+                    )
+                })
+            })
+            .collect()
+    }
+
+    /// Abort a launch that never completed (e.g. a switch died during
+    /// configuration): drops all tree state; the master may re-launch,
+    /// optionally on a topology without the failed switch.
+    pub fn abort(&mut self, tree: TreeId) -> bool {
+        match self.trees.get(&tree) {
+            Some((_, TreeState::Configuring(_))) => {
+                self.trees.remove(&tree);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub fn tree(&self, tree: TreeId) -> Option<&AggTree> {
+        self.trees.get(&tree).map(|(t, _)| t)
+    }
+
+    pub fn is_running(&self, tree: TreeId) -> bool {
+        matches!(self.trees.get(&tree), Some((_, TreeState::Running)))
+    }
+
+    pub fn teardown(&mut self, tree: TreeId) -> bool {
+        self.trees.remove(&tree).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Topology;
+
+    fn launch_on_star() -> (Controller, LaunchOutcome, Vec<NodeId>) {
+        let (topo, _sw, hosts) = Topology::star(4);
+        let mut c = Controller::new(topo);
+        let req = LaunchPacket {
+            mappers: hosts[..3].iter().map(|h| h.0).collect(),
+            reducers: vec![hosts[3].0],
+        };
+        let out = c.launch(&req, AggOp::Sum).unwrap();
+        (c, out, hosts)
+    }
+
+    #[test]
+    fn launch_emits_configures_then_acks_complete() {
+        let (mut c, out, _) = launch_on_star();
+        assert_eq!(out.configures.len(), 1);
+        let (sw, cfgp) = &out.configures[0];
+        assert_eq!(cfgp.trees.len(), 1);
+        assert_eq!(cfgp.trees[0].children, 3);
+        assert!(!c.is_running(out.tree));
+        let master_ack = c.switch_ack(out.tree, *sw).unwrap();
+        assert_eq!(master_ack, Some(Packet::Ack(AckKind::Master)));
+        assert!(c.is_running(out.tree));
+    }
+
+    #[test]
+    fn duplicate_or_unknown_acks_rejected() {
+        let (mut c, out, _) = launch_on_star();
+        let (sw, _) = out.configures[0].clone();
+        c.switch_ack(out.tree, sw).unwrap();
+        assert!(c.switch_ack(out.tree, sw).is_err()); // already running
+        assert!(c.switch_ack(TreeId(99), sw).is_err());
+    }
+
+    #[test]
+    fn ack_from_non_tree_switch_rejected() {
+        let (mut c, out, hosts) = launch_on_star();
+        assert!(c.switch_ack(out.tree, hosts[0]).is_err());
+    }
+
+    #[test]
+    fn multi_switch_tree_waits_for_all() {
+        let (topo, switches, sources, sink) = Topology::chain(3, 2);
+        let mut c = Controller::new(topo);
+        let req = LaunchPacket {
+            mappers: sources.iter().map(|h| h.0).collect(),
+            reducers: vec![sink.0],
+        };
+        let out = c.launch(&req, AggOp::Sum).unwrap();
+        assert_eq!(out.configures.len(), 3);
+        assert_eq!(c.switch_ack(out.tree, switches[0]).unwrap(), None);
+        assert_eq!(c.switch_ack(out.tree, switches[2]).unwrap(), None);
+        assert_eq!(
+            c.switch_ack(out.tree, switches[1]).unwrap(),
+            Some(Packet::Ack(AckKind::Master))
+        );
+    }
+
+    #[test]
+    fn tree_ids_are_unique_and_teardown_works() {
+        let (mut c, out, hosts) = launch_on_star();
+        let req = LaunchPacket {
+            mappers: vec![hosts[0].0],
+            reducers: vec![hosts[3].0],
+        };
+        let out2 = c.launch(&req, AggOp::Max).unwrap();
+        assert_ne!(out.tree, out2.tree);
+        assert!(c.teardown(out.tree));
+        assert!(!c.teardown(out.tree));
+    }
+
+    #[test]
+    fn lost_configure_is_retransmittable() {
+        // Failure injection: the configure to switch[1] is "lost";
+        // after the timeout the controller resends exactly the missing
+        // one, and the handshake still completes.
+        let (topo, switches, sources, sink) = Topology::chain(3, 2);
+        let mut c = Controller::new(topo);
+        let req = LaunchPacket {
+            mappers: sources.iter().map(|h| h.0).collect(),
+            reducers: vec![sink.0],
+        };
+        let out = c.launch(&req, AggOp::Sum).unwrap();
+        // Only switches 0 and 2 ack (switch 1's packet was dropped).
+        c.switch_ack(out.tree, switches[0]).unwrap();
+        c.switch_ack(out.tree, switches[2]).unwrap();
+        assert_eq!(c.pending_switches(out.tree), vec![switches[1]]);
+        let resend = c.resend_configures(out.tree);
+        assert_eq!(resend.len(), 1);
+        assert_eq!(resend[0].0, switches[1]);
+        assert_eq!(resend[0].1.trees.len(), 1);
+        // Idempotent re-apply on an already-configured switch is safe.
+        let done0_pkt = &out
+            .configures
+            .iter()
+            .find(|(n, _)| *n == switches[0])
+            .unwrap()
+            .1;
+        let mut sw0 = crate::switch::SwitchAggSwitch::new(
+            crate::switch::SwitchConfig::scaled(16 << 10, None),
+        );
+        sw0.configure(&done0_pkt.trees);
+        sw0.configure(&done0_pkt.trees);
+        assert_eq!(sw0.n_trees(), 1);
+        // Delivery of the retransmission completes the tree.
+        assert_eq!(
+            c.switch_ack(out.tree, switches[1]).unwrap(),
+            Some(Packet::Ack(AckKind::Master))
+        );
+        assert!(c.is_running(out.tree));
+        assert!(c.pending_switches(out.tree).is_empty());
+        assert!(c.resend_configures(out.tree).is_empty());
+    }
+
+    #[test]
+    fn abort_mid_configuration() {
+        let (topo, switches, sources, sink) = Topology::chain(2, 1);
+        let mut c = Controller::new(topo);
+        let req = LaunchPacket {
+            mappers: vec![sources[0].0],
+            reducers: vec![sink.0],
+        };
+        let out = c.launch(&req, AggOp::Sum).unwrap();
+        c.switch_ack(out.tree, switches[0]).unwrap();
+        assert!(c.abort(out.tree)); // switch 1 presumed dead
+        assert!(c.tree(out.tree).is_none());
+        // Cannot abort a running tree.
+        let out2 = c.launch(&req, AggOp::Sum).unwrap();
+        for s in &switches {
+            let _ = c.switch_ack(out2.tree, *s);
+        }
+        assert!(c.is_running(out2.tree));
+        assert!(!c.abort(out2.tree));
+    }
+
+    #[test]
+    fn multiple_reducers_unsupported() {
+        let (topo, _sw, hosts) = Topology::star(4);
+        let mut c = Controller::new(topo);
+        let req = LaunchPacket {
+            mappers: vec![hosts[0].0],
+            reducers: vec![hosts[1].0, hosts[2].0],
+        };
+        assert!(c.launch(&req, AggOp::Sum).is_err());
+    }
+}

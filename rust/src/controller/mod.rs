@@ -1,0 +1,13 @@
+//! The control plane (§3 Controller, §4.1).
+//!
+//! * [`tree`] — aggregation-tree construction over the physical
+//!   topology (which switches participate, each switch's child count
+//!   and parent port).
+//! * [`controller`] — the Launch → Configure → Ack → start state
+//!   machine between master, controller and switches.
+
+pub mod controller;
+pub mod tree;
+
+pub use controller::{Controller, LaunchOutcome};
+pub use tree::AggTree;

@@ -1,0 +1,177 @@
+//! Aggregation-tree construction (§3: "Based on these information, the
+//! controller constructs an aggregation tree and disseminates this
+//! information across the switches").
+//!
+//! The tree is the union of the shortest paths from every mapper to
+//! the reducer.  Every switch on that union becomes an aggregation
+//! node; its *children* are the distinct downstream neighbours feeding
+//! it (mappers or child switches) and its *parent port* is the port on
+//! its path towards the reducer.
+
+use crate::net::{NodeId, NodeKind, Topology};
+use crate::protocol::{AggOp, TreeConfig, TreeId};
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A constructed aggregation tree.
+#[derive(Clone, Debug)]
+pub struct AggTree {
+    pub tree: TreeId,
+    pub op: AggOp,
+    pub reducer: NodeId,
+    pub mappers: Vec<NodeId>,
+    /// Per-switch configuration (only switches on the tree).
+    pub switch_cfgs: BTreeMap<NodeId, TreeConfig>,
+    /// Each switch's children in the tree (mappers or switches).
+    pub children: BTreeMap<NodeId, Vec<NodeId>>,
+    /// Switches ordered leaf-to-root (data-flow order).
+    pub levels: Vec<NodeId>,
+}
+
+impl AggTree {
+    /// Build the tree for `mappers → reducer` on `topo`.
+    pub fn build(
+        topo: &Topology,
+        tree: TreeId,
+        op: AggOp,
+        mappers: &[NodeId],
+        reducer: NodeId,
+    ) -> Result<Self> {
+        if mappers.is_empty() {
+            bail!("aggregation tree needs at least one mapper");
+        }
+        if topo.kind(reducer) != NodeKind::Host {
+            bail!("reducer {reducer} is not a host");
+        }
+        // parent[n] = next hop from n towards the reducer.
+        let mut parent: BTreeMap<NodeId, NodeId> = BTreeMap::new();
+        let mut on_tree: BTreeSet<NodeId> = BTreeSet::new();
+        for &m in mappers {
+            if topo.kind(m) != NodeKind::Host {
+                bail!("mapper {m} is not a host");
+            }
+            let Some(path) = topo.path(m, reducer) else {
+                bail!("no path from mapper {m} to reducer {reducer}");
+            };
+            for w in path.windows(2) {
+                parent.insert(w[0], w[1]);
+                on_tree.insert(w[0]);
+            }
+            on_tree.insert(reducer);
+        }
+        // Children lists for switches.
+        let mut children: BTreeMap<NodeId, Vec<NodeId>> = BTreeMap::new();
+        for (&child, &par) in &parent {
+            if topo.kind(par) == NodeKind::Switch {
+                children.entry(par).or_default().push(child);
+            }
+        }
+        // Leaf-to-root switch order: sort by distance to reducer, desc.
+        let mut switches: Vec<NodeId> = on_tree
+            .iter()
+            .copied()
+            .filter(|&n| topo.kind(n) == NodeKind::Switch)
+            .collect();
+        switches.sort_by_key(|&s| {
+            std::cmp::Reverse(topo.path(s, reducer).map(|p| p.len()).unwrap_or(usize::MAX))
+        });
+        // Per-switch config.
+        let mut switch_cfgs = BTreeMap::new();
+        for &s in &switches {
+            let kids = children.get(&s).map(|v| v.len()).unwrap_or(0);
+            if kids == 0 {
+                bail!("switch {s} on tree has no children");
+            }
+            let par = parent[&s];
+            let Some(port) = topo.port_towards(s, par) else {
+                bail!("switch {s} has no port towards {par}");
+            };
+            switch_cfgs.insert(
+                s,
+                TreeConfig {
+                    tree,
+                    children: kids as u16,
+                    parent_port: port,
+                    op,
+                },
+            );
+        }
+        Ok(Self {
+            tree,
+            op,
+            reducer,
+            mappers: mappers.to_vec(),
+            switch_cfgs,
+            children,
+            levels: switches,
+        })
+    }
+
+    pub fn n_switches(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// The root switch (directly feeding the reducer).
+    pub fn root(&self) -> NodeId {
+        *self.levels.last().expect("tree has switches")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Topology;
+
+    #[test]
+    fn star_tree_single_switch() {
+        let (topo, sw, hosts) = Topology::star(4);
+        let t = AggTree::build(&topo, TreeId(1), AggOp::Sum, &hosts[..3], hosts[3]).unwrap();
+        assert_eq!(t.levels, vec![sw]);
+        let cfg = &t.switch_cfgs[&sw];
+        assert_eq!(cfg.children, 3);
+        assert_eq!(
+            cfg.parent_port,
+            topo.port_towards(sw, hosts[3]).unwrap()
+        );
+        assert_eq!(t.children[&sw].len(), 3);
+    }
+
+    #[test]
+    fn chain_tree_orders_leaf_to_root() {
+        let (topo, switches, sources, sink) = Topology::chain(3, 2);
+        let t = AggTree::build(&topo, TreeId(2), AggOp::Sum, &sources, sink).unwrap();
+        assert_eq!(t.levels, switches);
+        // First switch has the mappers as children; later switches the
+        // previous switch.
+        assert_eq!(t.switch_cfgs[&switches[0]].children, 2);
+        assert_eq!(t.switch_cfgs[&switches[1]].children, 1);
+        assert_eq!(t.switch_cfgs[&switches[2]].children, 1);
+        assert_eq!(t.root(), switches[2]);
+    }
+
+    #[test]
+    fn two_level_tree_counts_leaf_children() {
+        let (topo, spine, leaves, hosts) = Topology::two_level(2, 2);
+        // Mappers = the 3 hosts not used as reducer.
+        let reducer = hosts[3];
+        let t = AggTree::build(&topo, TreeId(3), AggOp::Max, &hosts[..3], reducer).unwrap();
+        // leaf0 has hosts 0,1; leaf1 has host 2; spine has leaf0 as a
+        // child (leaf1 is the reducer-side leaf: it feeds the reducer
+        // directly, its parent is NOT the spine).
+        assert_eq!(t.switch_cfgs[&leaves[0]].children, 2);
+        // The reducer-side leaf aggregates the spine's output + host 2.
+        assert!(t.switch_cfgs.contains_key(&spine));
+        assert_eq!(t.levels.last().copied().unwrap(), leaves[1]);
+    }
+
+    #[test]
+    fn errors_on_disconnected_or_bad_roles() {
+        let (topo, _sw, hosts) = Topology::star(3);
+        assert!(AggTree::build(&topo, TreeId(1), AggOp::Sum, &[], hosts[0]).is_err());
+        let mut topo2 = topo.clone();
+        let lonely = topo2.add_node(NodeKind::Host);
+        assert!(
+            AggTree::build(&topo2, TreeId(1), AggOp::Sum, &[lonely], hosts[0]).is_err()
+        );
+    }
+}

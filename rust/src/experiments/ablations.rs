@@ -1,0 +1,154 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * multi-level hierarchy on/off (the headline mechanism);
+//! * eviction policy: evict-old-to-BPE (paper) vs forward-new;
+//! * key-length grouping: 8 FPEs (paper) vs 1;
+//! * DRAM command-buffer depth: 32 (paper overlap) vs 1 (blocking);
+//! * FPE input FIFO depth (line-rate sensitivity).
+
+use crate::experiments::common::{pct, print_table, Scale};
+use crate::protocol::{AggOp, TreeConfig, TreeId};
+use crate::sim::dram::DramConfig;
+use crate::switch::{EvictionPolicy, SwitchAggSwitch, SwitchConfig};
+use crate::workload::generator::{KeyDist, WorkloadSpec};
+
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub name: String,
+    pub reduction: f64,
+    pub fifo_full_ratio: f64,
+    pub bpe_dram_stalls: u64,
+}
+
+fn run_one(name: &str, cfg: SwitchConfig, scale: Scale, dist: KeyDist) -> AblationRow {
+    let mut sw = SwitchAggSwitch::new(cfg);
+    let tree = TreeId(1);
+    sw.configure(&[TreeConfig {
+        tree,
+        children: 3,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    let streams: Vec<_> = (0..3)
+        .map(|i| {
+            WorkloadSpec::paper(
+                scale.bytes(4u64 << 30) / 3,
+                scale.bytes(1 << 30),
+                dist,
+                0xAB1A + i,
+            )
+            .generate()
+        })
+        .collect();
+    sw.ingest_child_streams(tree, AggOp::Sum, &streams);
+    let s = sw.stats(tree).unwrap();
+    AblationRow {
+        name: name.to_string(),
+        reduction: s.reduction_ratio(),
+        fifo_full_ratio: s.fifo_full_ratio(),
+        bpe_dram_stalls: sw.bpe_dram_stats(tree).map(|(_, s)| s).unwrap_or(0),
+    }
+}
+
+pub fn run(scale: Scale) -> Vec<AblationRow> {
+    let base = || SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(8 << 30)));
+    let dist = KeyDist::Zipf(0.99);
+    vec![
+        run_one("paper default (multi-level, evict-old, 8 groups)", base(), scale, dist),
+        run_one(
+            "no BPE (single-level)",
+            SwitchConfig {
+                bpe_mem: None,
+                ..base()
+            },
+            scale,
+            dist,
+        ),
+        run_one(
+            "forward-new eviction",
+            SwitchConfig {
+                eviction: EvictionPolicy::ForwardNew,
+                ..base()
+            },
+            scale,
+            dist,
+        ),
+        run_one(
+            "1 key-length group",
+            SwitchConfig {
+                n_groups: 1,
+                key_base: 64,
+                ..base()
+            },
+            scale,
+            dist,
+        ),
+        run_one(
+            "blocking DRAM (queue depth 1)",
+            SwitchConfig {
+                dram: DramConfig {
+                    latency: 25,
+                    queue_depth: 1,
+                    service_interval: 2,
+                },
+                bpe_interval: 50, // serialized read+write at full latency
+                ..base()
+            },
+            scale,
+            dist,
+        ),
+        run_one(
+            "shallow FIFOs (cap 4)",
+            SwitchConfig {
+                fifo_cap: 4,
+                ..base()
+            },
+            scale,
+            dist,
+        ),
+    ]
+}
+
+pub fn print_rows(rows: &[AblationRow]) {
+    print_table(
+        "Ablations — design choices (zipf 0.99, 4GB scaled workload)",
+        &["variant", "reduction", "FIFO-full ratio", "DRAM stall cycles"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.name.clone(),
+                    pct(r.reduction),
+                    pct(r.fifo_full_ratio),
+                    r.bpe_dram_stalls.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_directions() {
+        let rows = run(Scale::new(4096));
+        let get = |n: &str| {
+            rows.iter()
+                .find(|r| r.name.starts_with(n))
+                .unwrap_or_else(|| panic!("missing row {n}"))
+        };
+        let default = get("paper default");
+        let no_bpe = get("no BPE");
+        let blocking = get("blocking DRAM");
+        let shallow = get("shallow FIFOs");
+        // The multi-level hierarchy is the headline win.
+        assert!(default.reduction > no_bpe.reduction + 0.1);
+        // Blocking DRAM hurts line rate (more FIFO-full), not ratio.
+        assert!(blocking.fifo_full_ratio >= default.fifo_full_ratio);
+        assert!((blocking.reduction - default.reduction).abs() < 0.05);
+        // Shallow FIFOs show more backpressure events.
+        assert!(shallow.fifo_full_ratio >= default.fifo_full_ratio);
+    }
+}

@@ -1,0 +1,90 @@
+//! Shared experiment plumbing: workload scaling and table printing.
+
+use crate::util::stats::human_bytes;
+
+/// All paper quantities are divided by `factor` (sizes in bytes);
+/// ratios (reduction, utilization, FIFO ratios) are scale-free.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub factor: u64,
+}
+
+impl Default for Scale {
+    fn default() -> Self {
+        Self { factor: 1024 }
+    }
+}
+
+impl Scale {
+    pub fn new(factor: u64) -> Self {
+        assert!(factor >= 1);
+        Self { factor }
+    }
+
+    /// Scale a paper-sized byte quantity down.
+    pub fn bytes(&self, paper_bytes: u64) -> u64 {
+        (paper_bytes / self.factor).max(1)
+    }
+
+    /// Label like "2GB(/1024)" for row headers.
+    pub fn label(&self, paper_bytes: u64) -> String {
+        if self.factor == 1 {
+            human_bytes(paper_bytes)
+        } else {
+            format!("{}(/{})", human_bytes(paper_bytes), self.factor)
+        }
+    }
+}
+
+/// Print a header + aligned rows (simple fixed-width table).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:>width$}", width = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Format a ratio as a percentage cell.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_math() {
+        let s = Scale::default();
+        assert_eq!(s.bytes(2 << 30), 2 << 20);
+        assert_eq!(s.bytes(100), 1); // floor at 1
+        assert_eq!(Scale::new(1).bytes(42), 42);
+        assert!(s.label(2 << 30).contains("/1024"));
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.5), "50.00%");
+        assert_eq!(pct(0.0044), "0.44%");
+    }
+}

@@ -1,0 +1,92 @@
+//! Fig. 11 — reducer CPU utilization with and without SwitchAgg
+//! (§6.3): "the higher the data reduction ratio is, the lower the CPU
+//! utilization is."
+
+use crate::experiments::common::{pct, print_table, Scale};
+use crate::framework::{run_job, JobSpec, Mapper};
+use crate::net::Topology;
+use crate::protocol::AggOp;
+use crate::switch::SwitchConfig;
+use crate::workload::generator::{KeyDist, WorkloadSpec};
+
+#[derive(Clone, Debug)]
+pub struct Fig11Row {
+    pub workload_gb: u64,
+    pub util_with: f64,
+    pub util_without: f64,
+    pub reduction: f64,
+}
+
+pub fn run(scale: Scale) -> Vec<Fig11Row> {
+    [2u64, 4, 8, 16]
+        .iter()
+        .map(|&wl| {
+            let (topo, _sw, hosts) = Topology::star(4);
+            let mappers: Vec<Mapper> = (0..3)
+                .map(|i| {
+                    Mapper::Synthetic(WorkloadSpec::paper(
+                        scale.bytes(wl << 30) / 3,
+                        scale.bytes(1 << 30),
+                        KeyDist::Zipf(0.99),
+                        0xF1_11 + i,
+                    ))
+                })
+                .collect();
+            let spec = JobSpec {
+                switch_cfg: SwitchConfig::scaled(
+                    scale.bytes(32 << 20),
+                    Some(scale.bytes(8 << 30)),
+                ),
+                aggregation_enabled: true,
+                op: AggOp::Sum,
+            };
+            let (report, _) =
+                run_job(&topo, &hosts[..3], hosts[3], &mappers, &spec).expect("job run");
+            Fig11Row {
+                workload_gb: wl,
+                util_with: report.cpu_util,
+                util_without: report.cpu_util_baseline,
+                reduction: report.reduction_ratio,
+            }
+        })
+        .collect()
+}
+
+pub fn print_rows(rows: &[Fig11Row]) {
+    print_table(
+        "Fig. 11 — reducer CPU utilization during the job",
+        &["workload", "w/ SwitchAgg", "w/o SwitchAgg", "reduction"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{}GB", r.workload_gb),
+                    pct(r.util_with),
+                    pct(r.util_without),
+                    pct(r.reduction),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_lower_with_switchagg() {
+        let rows = run(Scale::new(2048));
+        for r in &rows {
+            assert!(
+                r.util_with < r.util_without,
+                "{}GB: {} !< {}",
+                r.workload_gb,
+                r.util_with,
+                r.util_without
+            );
+            // Higher reduction → bigger CPU relief (paper's conclusion).
+            assert!(r.reduction > 0.5);
+        }
+    }
+}

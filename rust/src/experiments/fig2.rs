@@ -1,0 +1,153 @@
+//! Fig. 2 — the motivating experiments of §2.2.2.
+//!
+//! (a) reduction ratio vs key variety for a single node with capped
+//!     memory (paper: 20 B pairs, 16 MB memory, 1 GB data), compared
+//!     against Eq. 3;
+//! (b) reduction ratio vs number of aggregation hops (paper: 64 M key
+//!     variety, 1 GB data, 128 MB per hop).
+
+use crate::analysis::models::eq3_reduction_ratio;
+use crate::analysis::theorems::{multi_hop_reduction, IdealNode};
+use crate::experiments::common::{pct, print_table, Scale};
+use crate::protocol::{AggOp, Key, KvPair};
+use crate::util::rng::Pcg32;
+
+/// Fixed pair size of the fig2 experiments (20 B: hardware packet
+/// generator with identical-length pairs, §2.2.2).
+pub const PAIR_BYTES: u64 = 20;
+
+#[derive(Clone, Debug)]
+pub struct Fig2aRow {
+    pub key_variety: u64,
+    pub model_r: f64,
+    pub sim_r: f64,
+}
+
+fn uniform_pairs(n_pairs: u64, variety: u64, seed: u64) -> Vec<KvPair> {
+    let mut rng = Pcg32::new(seed);
+    (0..n_pairs)
+        .map(|_| KvPair::new(Key::from_id(rng.gen_range_u64(variety), 16), 1))
+        .collect()
+}
+
+/// Fig. 2(a): sweep key variety at fixed memory and data amount.
+pub fn fig2a(scale: Scale) -> Vec<Fig2aRow> {
+    let data_pairs = scale.bytes(1 << 30) / PAIR_BYTES; // 1 GB of 20 B pairs
+    let cap_pairs = (scale.bytes(16 << 20) / PAIR_BYTES) as usize; // 16 MB
+    // Paper x-axis sweeps key variety from well under the capacity to
+    // well past the data amount (4G keys at full scale).
+    let mut varieties = Vec::new();
+    let max_variety = data_pairs * 4; // beyond M, reduction ~ 0
+    let mut v = (cap_pairs as u64 / 16).max(2);
+    while v <= max_variety {
+        varieties.push(v);
+        v *= 4;
+    }
+
+    varieties
+        .into_iter()
+        .map(|variety| {
+            let stream = uniform_pairs(data_pairs, variety, 0xF16_2A ^ variety);
+            let (_, sim_r) = IdealNode::run(cap_pairs, &stream, AggOp::Sum);
+            let model_r = eq3_reduction_ratio(data_pairs, variety, cap_pairs as u64);
+            Fig2aRow {
+                key_variety: variety,
+                model_r,
+                sim_r,
+            }
+        })
+        .collect()
+}
+
+pub fn print_fig2a(rows: &[Fig2aRow]) {
+    print_table(
+        "Fig. 2(a) — reduction ratio vs key variety (uniform, C=16MB, M=1GB scaled)",
+        &["key variety", "Eq.3 model", "simulated"],
+        &rows
+            .iter()
+            .map(|r| vec![r.key_variety.to_string(), pct(r.model_r), pct(r.sim_r)])
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig2bRow {
+    pub hops: usize,
+    pub reduction: f64,
+}
+
+/// Fig. 2(b): multi-hop aggregation, paper parameters scaled.
+pub fn fig2b(scale: Scale) -> Vec<Fig2bRow> {
+    let data_pairs = scale.bytes(1 << 30) / PAIR_BYTES;
+    let variety = scale.bytes(64u64 << 20 << 10) / PAIR_BYTES / 16; // 64M keys ~ 1.28GB of id space
+    // Paper says key variety 64M with 1GB data: variety ≈ 1.28x data.
+    let variety = variety.max(data_pairs + data_pairs / 4);
+    let cap_pairs = (scale.bytes(128 << 20) / PAIR_BYTES) as usize;
+    let stream = uniform_pairs(data_pairs, variety, 0xF16_2B);
+    (1..=4)
+        .map(|hops| Fig2bRow {
+            hops,
+            reduction: multi_hop_reduction(cap_pairs, hops, &stream, AggOp::Sum),
+        })
+        .collect()
+}
+
+pub fn print_fig2b(rows: &[Fig2bRow]) {
+    print_table(
+        "Fig. 2(b) — reduction ratio vs hops (uniform, N=64M, C=128MB/hop scaled)",
+        &["hops", "reduction"],
+        &rows
+            .iter()
+            .map(|r| vec![r.hops.to_string(), pct(r.reduction)])
+            .collect::<Vec<_>>(),
+    );
+}
+
+pub fn run(scale: Scale) {
+    let a = fig2a(scale);
+    print_fig2a(&a);
+    let b = fig2b(scale);
+    print_fig2b(&b);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2a_shape_matches_paper() {
+        let rows = fig2a(Scale::new(4096));
+        assert!(rows.len() >= 4);
+        // Low variety: > 80% reduction (paper's observation 1).
+        assert!(rows[0].sim_r > 0.8, "low-variety r={}", rows[0].sim_r);
+        // Collapse once variety exceeds capacity (observation 2).
+        let last = rows.last().unwrap();
+        assert!(last.sim_r < 0.1, "high-variety r={}", last.sim_r);
+        // Monotone non-increasing (within noise).
+        for w in rows.windows(2) {
+            assert!(w[1].sim_r <= w[0].sim_r + 0.02);
+        }
+        // Model tracks simulation.
+        for r in &rows {
+            assert!(
+                (r.model_r - r.sim_r).abs() < 0.1,
+                "variety {}: model {} sim {}",
+                r.key_variety,
+                r.model_r,
+                r.sim_r
+            );
+        }
+    }
+
+    #[test]
+    fn fig2b_multi_hop_is_bounded_and_flatish() {
+        let rows = fig2b(Scale::new(4096));
+        assert_eq!(rows.len(), 4);
+        // Non-decreasing but bounded well below 50% (paper: "does not
+        // help a lot" — single-hop memory is the key factor).
+        for w in rows.windows(2) {
+            assert!(w[1].reduction >= w[0].reduction - 1e-9);
+        }
+        assert!(rows[3].reduction < 0.5, "4-hop r={}", rows[3].reduction);
+    }
+}

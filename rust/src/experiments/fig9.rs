@@ -1,0 +1,120 @@
+//! Fig. 9 — reduction ratio vs workload size / memory capacity
+//! (§6.2), on the real data-plane simulator.
+//!
+//! Grid: workload ∈ {2,4,8,16} GB × FPE BRAM ∈ {4,8,16,32} MB
+//! (single-level, "S-x MB") plus multi-level "M-32MB" (32 MB FPE +
+//! 8 GB BPE DRAM), × {uniform, Zipf(0.99)}; key variety fixed at 1 GB.
+//! All sizes scaled by `Scale` with ratios preserved; three mappers
+//! share identical parameters (§6.1).
+
+use crate::experiments::common::{pct, print_table, Scale};
+use crate::protocol::{AggOp, TreeConfig, TreeId};
+use crate::switch::{SwitchAggSwitch, SwitchConfig};
+use crate::workload::generator::{KeyDist, WorkloadSpec};
+
+pub const WORKLOADS_GB: [u64; 4] = [2, 4, 8, 16];
+pub const FPE_MB: [u64; 4] = [4, 8, 16, 32];
+
+#[derive(Clone, Debug)]
+pub struct Fig9Row {
+    pub dist: &'static str,
+    pub workload_gb: u64,
+    /// Reduction per single-level config (same order as [`FPE_MB`]).
+    pub single_level: Vec<f64>,
+    /// Multi-level M-32MB.
+    pub multi_level: f64,
+}
+
+/// Run one cell: 3 mappers × (workload/3) bytes through one switch.
+pub fn run_cell(
+    scale: Scale,
+    workload_gb: u64,
+    fpe_mem_paper: u64,
+    bpe_mem_paper: Option<u64>,
+    dist: KeyDist,
+) -> f64 {
+    let cfg = SwitchConfig::scaled(
+        scale.bytes(fpe_mem_paper),
+        bpe_mem_paper.map(|b| scale.bytes(b)),
+    );
+    let mut sw = SwitchAggSwitch::new(cfg);
+    let tree = TreeId(1);
+    sw.configure(&[TreeConfig {
+        tree,
+        children: 3,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    let per_mapper = scale.bytes(workload_gb << 30) / 3;
+    let variety = scale.bytes(1 << 30); // key variety "1 GB"
+    let streams: Vec<_> = (0..3)
+        .map(|i| WorkloadSpec::paper(per_mapper, variety, dist, 0x0F19 + i).generate())
+        .collect();
+    sw.ingest_child_streams(tree, AggOp::Sum, &streams);
+    sw.stats(tree).unwrap().reduction_ratio()
+}
+
+pub fn run(scale: Scale) -> Vec<Fig9Row> {
+    let mut rows = Vec::new();
+    for (dist, name) in [(KeyDist::Uniform, "uniform"), (KeyDist::Zipf(0.99), "zipf")] {
+        for wl in WORKLOADS_GB {
+            let single_level: Vec<f64> = FPE_MB
+                .iter()
+                .map(|&mb| run_cell(scale, wl, mb << 20, None, dist))
+                .collect();
+            let multi_level = run_cell(scale, wl, 32 << 20, Some(8u64 << 30), dist);
+            rows.push(Fig9Row {
+                dist: name,
+                workload_gb: wl,
+                single_level,
+                multi_level,
+            });
+        }
+    }
+    rows
+}
+
+pub fn print_rows(rows: &[Fig9Row]) {
+    print_table(
+        "Fig. 9 — reduction ratio (S-x = single-level FPE BRAM, M = multi-level w/ BPE DRAM)",
+        &[
+            "dist", "workload", "S-4MB", "S-8MB", "S-16MB", "S-32MB", "M-32MB",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                let mut cells = vec![r.dist.to_string(), format!("{}GB", r.workload_gb)];
+                cells.extend(r.single_level.iter().map(|&x| pct(x)));
+                cells.push(pct(r.multi_level));
+                cells
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_shape_matches_paper() {
+        // Coarse scale for test speed: one workload column.
+        let scale = Scale::new(8192);
+        let uni_small = run_cell(scale, 2, 4 << 20, None, KeyDist::Uniform);
+        let uni_big = run_cell(scale, 2, 32 << 20, None, KeyDist::Uniform);
+        let uni_multi = run_cell(scale, 2, 32 << 20, Some(8u64 << 30), KeyDist::Uniform);
+        let zipf_small = run_cell(scale, 2, 4 << 20, None, KeyDist::Zipf(0.99));
+        let zipf_multi = run_cell(scale, 16, 32 << 20, Some(8u64 << 30), KeyDist::Zipf(0.99));
+
+        // Paper: single-level uniform below ~10% even at 32MB.
+        assert!(uni_small < 0.12, "S-4 uniform {uni_small}");
+        assert!(uni_big < 0.25, "S-32 uniform {uni_big}");
+        assert!(uni_big >= uni_small - 0.02);
+        // Multi-level lifts uniform dramatically.
+        assert!(uni_multi > 0.5, "M-32 uniform {uni_multi}");
+        // Zipf beats uniform at equal memory (hot keys stay resident).
+        assert!(zipf_small > uni_small, "{zipf_small} vs {uni_small}");
+        // Highly skewed multi-level at 16GB approaches the paper's 99%.
+        assert!(zipf_multi > 0.85, "M-32 zipf {zipf_multi}");
+    }
+}

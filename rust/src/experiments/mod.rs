@@ -1,0 +1,22 @@
+//! Experiment harness: one module per table/figure of the paper's
+//! evaluation (§2.2 Fig. 2, §6.2 Fig. 9 + Tables 2–3, §6.3 Figs.
+//! 10–11), plus the Eq. 1–2 analysis and the design-choice ablations.
+//!
+//! Every harness returns structured rows *and* prints them in the
+//! paper's layout; `switchagg exp <id>` runs one, `cargo bench` runs
+//! them all under timing.  Default scale is 1/1024 of the paper's
+//! workloads with all ratios preserved (DESIGN.md §Hardware
+//! substitution); pass `--scale` to change.
+
+pub mod ablations;
+pub mod common;
+pub mod eq1;
+pub mod fig10;
+pub mod fig11;
+pub mod fig2;
+pub mod fig9;
+pub mod sec7;
+pub mod table2;
+pub mod table3;
+
+pub use common::Scale;

@@ -1,0 +1,144 @@
+//! Table 2 — FIFO-full time ratio (§6.2 "Aggregate at line rate").
+//!
+//! Counts, per processing-engine input FIFO, how many times the FIFO
+//! was written and how many times it was found full, over workloads of
+//! 2–16 GB (scaled).  The paper's full-time ratios are a few hundredths
+//! of a percent; the claim reproduced here is `ratio ≪ 1%`.
+
+use crate::experiments::common::{pct, print_table, Scale};
+use crate::protocol::{AggOp, TreeConfig, TreeId};
+use crate::switch::{SwitchAggSwitch, SwitchConfig};
+use crate::workload::generator::{KeyDist, WorkloadSpec};
+
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub workload_gb: u64,
+    pub written: u64,
+    pub full: u64,
+    pub ratio: f64,
+}
+
+/// Paper-workload rows (16–64 B keys spread over 8 groups): in this
+/// deterministic model no FIFO ever fills — the paper's 0.03–0.04%
+/// comes from hardware-level burstiness (DRAM refresh, arbitration)
+/// that a transaction-level simulator smooths out.  See
+/// [`run_stressed`] for the fill mechanism itself.
+pub fn run(scale: Scale) -> Vec<Table2Row> {
+    run_with(scale, (16, 64), SwitchConfig::default().fifo_cap)
+}
+
+/// Stress rows: short keys concentrate all traffic in 1–2 key-length
+/// groups, oversubscribing those FPEs — the FIFOs fill and the
+/// backpressure counters go live (same mechanism the paper attributes
+/// to "hash collision and forwarding to the back-end").
+pub fn run_stressed(scale: Scale) -> Vec<Table2Row> {
+    run_with(scale, (8, 24), 16)
+}
+
+fn run_with(scale: Scale, key_range: (usize, usize), fifo_cap: usize) -> Vec<Table2Row> {
+    [2u64, 4, 8, 16]
+        .iter()
+        .map(|&wl| {
+            let cfg = SwitchConfig {
+                fifo_cap,
+                ..SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(8 << 30)))
+            };
+            let mut sw = SwitchAggSwitch::new(cfg);
+            let tree = TreeId(1);
+            sw.configure(&[TreeConfig {
+                tree,
+                children: 3,
+                parent_port: 0,
+                op: AggOp::Sum,
+            }]);
+            let per_mapper = scale.bytes(wl << 30) / 3;
+            let variety = scale.bytes(1 << 30);
+            let streams: Vec<_> = (0..3)
+                .map(|i| {
+                    let mut spec =
+                        WorkloadSpec::paper(per_mapper, variety, KeyDist::Zipf(0.99), 0x7AB2 + i);
+                    spec.key_len_min = key_range.0;
+                    spec.key_len_max = key_range.1;
+                    spec.generate()
+                })
+                .collect();
+            sw.ingest_child_streams(tree, AggOp::Sum, &streams);
+            let s = sw.stats(tree).unwrap();
+            Table2Row {
+                workload_gb: wl,
+                written: s.fifo_writes,
+                full: s.fifo_full_events,
+                ratio: s.fifo_full_ratio(),
+            }
+        })
+        .collect()
+}
+
+pub fn print_stressed(rows: &[Table2Row]) {
+    print_table(
+        "Table 2 (oversubscribed variant) — 8-24B keys, 16-deep FIFOs",
+        &["workload", "written", "FIFO-full", "full ratio"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{}GB", r.workload_gb),
+                    r.written.to_string(),
+                    r.full.to_string(),
+                    pct(r.ratio),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+pub fn print_rows(rows: &[Table2Row]) {
+    print_table(
+        "Table 2 — FIFO-full time ratio (line-rate evidence)",
+        &["workload", "written", "FIFO-full", "full ratio"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{}GB", r.workload_gb),
+                    r.written.to_string(),
+                    r.full.to_string(),
+                    pct(r.ratio),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_ratio_is_well_below_one_percent() {
+        // Scale 2048 keeps the paper's memory/traffic ratios viable
+        // (scaling much further shrinks the FPE BRAM below the point
+        // where the BPE can absorb the eviction stream at line rate).
+        let rows = run(Scale::new(2048));
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.written > 0);
+            assert!(
+                r.ratio < 0.01,
+                "{}GB: full ratio {} too high",
+                r.workload_gb,
+                r.ratio
+            );
+        }
+        // Written counts grow with workload (paper column 2).
+        assert!(rows[3].written > 4 * rows[0].written);
+    }
+
+    #[test]
+    fn stress_rows_exercise_the_fill_mechanism() {
+        let rows = run_stressed(Scale::new(4096));
+        // Concentrated groups + shallow FIFOs: full events appear.
+        let total_full: u64 = rows.iter().map(|r| r.full).sum();
+        assert!(total_full > 0, "stress config should fill FIFOs");
+    }
+}

@@ -1,0 +1,291 @@
+//! Job orchestration: the master's end-to-end path (§5–§6).
+//!
+//! 1. master → controller `Launch`; controller builds the aggregation
+//!    tree and configures every switch on it (Configure/Ack);
+//! 2. mappers emit their streams; data flows leaf-to-root through the
+//!    simulated switches (each switch aggregates and forwards);
+//! 3. the reducer merges what reaches it;
+//! 4. metrics: measured reduction ratio, modelled JCT (Fig. 10) and
+//!    reducer CPU utilization (Fig. 11), with the no-aggregation
+//!    baseline computed on the same inputs.
+
+use crate::controller::Controller;
+use crate::framework::mapper::Mapper;
+use crate::framework::reducer::{MergeResult, Reducer};
+use crate::metrics::jct::{JctBreakdown, JctModel};
+use crate::metrics::CpuModel;
+use crate::net::{NodeId, Topology};
+use crate::protocol::{
+    AggOp, KvPair, LaunchPacket, TreeId, AGG_FIXED_LEN, HEADER_OVERHEAD, MAX_AGG_PAYLOAD,
+};
+use crate::switch::{SwitchAggSwitch, SwitchConfig};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// Job parameters.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub switch_cfg: SwitchConfig,
+    /// false = no-aggregation baseline (forwarding only).
+    pub aggregation_enabled: bool,
+    pub op: AggOp,
+}
+
+/// Everything the evaluation section needs from one run.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub tree: TreeId,
+    pub input_pairs: u64,
+    pub input_bytes: u64,
+    /// What reached the reducer.
+    pub output_pairs: u64,
+    pub output_bytes: u64,
+    pub reduction_ratio: f64,
+    pub flush_cycles: u64,
+    pub fifo_writes: u64,
+    pub fifo_full_events: u64,
+    pub jct: JctBreakdown,
+    /// Same job without in-network aggregation.
+    pub jct_baseline: JctBreakdown,
+    pub cpu_util: f64,
+    pub cpu_util_baseline: f64,
+    /// Distinct keys in the final result.
+    pub result_keys: usize,
+    /// Sum over all result values (conservation check for SUM jobs).
+    pub result_value_sum: i64,
+    /// Measured wall time of the reducer software merge.
+    pub reducer_measured_s: f64,
+}
+
+impl JobReport {
+    pub fn speedup(&self) -> f64 {
+        self.jct_baseline.total_s / self.jct.total_s
+    }
+}
+
+/// Wire bytes for a raw pair stream packed into MTU packets.
+pub fn stream_wire_bytes(pairs: &[KvPair]) -> u64 {
+    let payload: u64 = pairs.iter().map(|p| p.encoded_len() as u64).sum();
+    let pkts = payload.div_ceil(MAX_AGG_PAYLOAD as u64).max(1);
+    payload + pkts * (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64
+}
+
+/// Run one job end-to-end on `topo` with `mappers` feeding `reducer`.
+pub fn run_job(
+    topo: &Topology,
+    mapper_hosts: &[NodeId],
+    reducer_host: NodeId,
+    mappers: &[Mapper],
+    spec: &JobSpec,
+) -> Result<(JobReport, MergeResult)> {
+    assert_eq!(mapper_hosts.len(), mappers.len());
+
+    // --- control plane -------------------------------------------------
+    let mut controller = Controller::new(topo.clone());
+    let req = LaunchPacket {
+        mappers: mapper_hosts.iter().map(|h| h.0).collect(),
+        reducers: vec![reducer_host.0],
+    };
+    let launch = controller.launch(&req, spec.op)?;
+    let tree_id = launch.tree;
+    let mut switches: BTreeMap<NodeId, SwitchAggSwitch> = BTreeMap::new();
+    for (sw_node, cfgp) in &launch.configures {
+        let mut sw = SwitchAggSwitch::new(spec.switch_cfg.clone());
+        sw.configure(&cfgp.trees);
+        switches.insert(*sw_node, sw);
+        controller.switch_ack(tree_id, *sw_node)?; // switch acks
+    }
+    assert!(controller.is_running(tree_id));
+    let tree = controller.tree(tree_id).context("tree vanished")?.clone();
+
+    // --- map phase ------------------------------------------------------
+    let mapper_streams: Vec<Vec<KvPair>> = mappers.iter().map(|m| m.produce()).collect();
+    let input_pairs: u64 = mapper_streams.iter().map(|s| s.len() as u64).sum();
+    let input_bytes: u64 = mapper_streams.iter().map(|s| stream_wire_bytes(s)).sum();
+
+    // --- data plane: leaf-to-root through the tree ----------------------
+    let mut node_output: BTreeMap<NodeId, Vec<KvPair>> = mapper_hosts
+        .iter()
+        .zip(mapper_streams.iter())
+        .map(|(h, s)| (*h, s.clone()))
+        .collect();
+
+    let (output_pairs, output_bytes, flush_cycles, fifo_writes, fifo_full) =
+        if spec.aggregation_enabled {
+            for &sw_node in &tree.levels {
+                let children = &tree.children[&sw_node];
+                let child_streams: Vec<Vec<KvPair>> = children
+                    .iter()
+                    .map(|c| node_output.remove(c).unwrap_or_default())
+                    .collect();
+                let sw = switches.get_mut(&sw_node).unwrap();
+                let out = sw.ingest_child_streams(tree_id, spec.op, &child_streams);
+                node_output.insert(sw_node, out);
+            }
+            let root = tree.root();
+            let out_stream = node_output.remove(&root).unwrap_or_default();
+            let s = switches[&root].stats(tree_id).context("root stats")?;
+            // Totals across all switches for the FIFO counters.
+            let (mut w, mut f, mut flush) = (0u64, 0u64, 0u64);
+            for (_, sw) in &switches {
+                if let Some(st) = sw.stats(tree_id) {
+                    w += st.fifo_writes;
+                    f += st.fifo_full_events;
+                    flush += st.flush_cycles;
+                }
+            }
+            let out_bytes = s.bytes_out;
+            let n = out_stream.len() as u64;
+            node_output.insert(reducer_host, out_stream);
+            (n, out_bytes, flush, w, f)
+        } else {
+            // Baseline: everything converges on the reducer unchanged.
+            let merged: Vec<KvPair> = mapper_streams.iter().flatten().copied().collect();
+            let bytes = input_bytes;
+            let n = merged.len() as u64;
+            node_output.insert(reducer_host, merged);
+            (n, bytes, 0, 0, 0)
+        };
+
+    // --- reduce phase -----------------------------------------------------
+    let reducer_stream = node_output.remove(&reducer_host).unwrap_or_default();
+    let merge = Reducer::merge_software(&[reducer_stream], spec.op);
+
+    // --- metrics ----------------------------------------------------------
+    let jct_model = JctModel {
+        n_mappers: mappers.len().max(1),
+        ..JctModel::default()
+    };
+    let (jct, jct_baseline) = jct_model.compare(
+        input_bytes,
+        input_pairs,
+        output_bytes,
+        output_pairs,
+        flush_cycles,
+    );
+    let cpu = CpuModel::default();
+    let cpu_util = cpu.reducer_utilization(output_pairs, output_bytes, jct.total_s);
+    let cpu_util_baseline =
+        cpu.reducer_utilization(input_pairs, input_bytes, jct_baseline.total_s);
+
+    let reduction_ratio = if input_bytes == 0 {
+        0.0
+    } else {
+        1.0 - output_bytes as f64 / input_bytes as f64
+    };
+
+    let report = JobReport {
+        tree: tree_id,
+        input_pairs,
+        input_bytes,
+        output_pairs,
+        output_bytes,
+        reduction_ratio,
+        flush_cycles,
+        fifo_writes,
+        fifo_full_events: fifo_full,
+        jct,
+        jct_baseline,
+        cpu_util,
+        cpu_util_baseline,
+        result_keys: merge.table.len(),
+        result_value_sum: merge.table.values().sum(),
+        reducer_measured_s: merge.elapsed_s,
+    };
+    Ok((report, merge))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::generator::{KeyDist, WorkloadSpec};
+
+    fn testbed() -> (Topology, Vec<NodeId>, NodeId) {
+        let (topo, _sw, hosts) = Topology::star(4);
+        (topo.clone(), hosts[..3].to_vec(), hosts[3])
+    }
+
+    fn mappers(bytes: u64, dist: KeyDist) -> Vec<Mapper> {
+        (0..3)
+            .map(|i| {
+                Mapper::Synthetic(WorkloadSpec::paper(bytes, 32 << 10, dist, 100 + i))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn job_conserves_sum_and_reduces_traffic() {
+        let (topo, mhosts, rhost) = testbed();
+        let spec = JobSpec {
+            switch_cfg: SwitchConfig::scaled(64 << 10, Some(4 << 20)),
+            aggregation_enabled: true,
+            op: AggOp::Sum,
+        };
+        let ms = mappers(256 << 10, KeyDist::Zipf(0.99));
+        let (report, merge) = run_job(&topo, &mhosts, rhost, &ms, &spec).unwrap();
+        assert_eq!(report.result_value_sum, report.input_pairs as i64);
+        assert!(report.reduction_ratio > 0.3, "r={}", report.reduction_ratio);
+        assert!(report.output_pairs < report.input_pairs);
+        assert_eq!(merge.table.len(), report.result_keys);
+    }
+
+    #[test]
+    fn aggregated_job_matches_baseline_result() {
+        let (topo, mhosts, rhost) = testbed();
+        let ms = mappers(128 << 10, KeyDist::Uniform);
+        let mk_spec = |on| JobSpec {
+            switch_cfg: SwitchConfig::scaled(128 << 10, Some(4 << 20)),
+            aggregation_enabled: on,
+            op: AggOp::Sum,
+        };
+        let (_, with) = run_job(&topo, &mhosts, rhost, &ms, &mk_spec(true)).unwrap();
+        let (_, without) = run_job(&topo, &mhosts, rhost, &ms, &mk_spec(false)).unwrap();
+        // In-network aggregation must not change the final answer.
+        assert_eq!(with.table, without.table);
+    }
+
+    #[test]
+    fn switchagg_beats_baseline_jct_on_big_skewed_jobs() {
+        // Paper ratio: 16 GB data vs 8 GB BPE DRAM, scaled 1/1024 —
+        // at smaller data sizes the BPE flush tail can eat the gain
+        // (the paper observes exactly that for its small workloads).
+        let (topo, mhosts, rhost) = testbed();
+        let spec = JobSpec {
+            switch_cfg: SwitchConfig::scaled(256 << 10, Some(4 << 20)),
+            aggregation_enabled: true,
+            op: AggOp::Sum,
+        };
+        let ms = mappers(5 << 20, KeyDist::Zipf(0.99));
+        let (report, _) = run_job(&topo, &mhosts, rhost, &ms, &spec).unwrap();
+        assert!(
+            report.speedup() > 1.2,
+            "speedup {} (jct {} vs {})",
+            report.speedup(),
+            report.jct.total_s,
+            report.jct_baseline.total_s
+        );
+        assert!(report.cpu_util < report.cpu_util_baseline);
+    }
+
+    #[test]
+    fn chain_topology_jobs_run() {
+        let (topo, _switches, sources, sink) = Topology::chain(3, 2);
+        let spec = JobSpec {
+            switch_cfg: SwitchConfig::scaled(32 << 10, None),
+            aggregation_enabled: true,
+            op: AggOp::Sum,
+        };
+        let ms: Vec<Mapper> = (0..2)
+            .map(|i| {
+                Mapper::Synthetic(WorkloadSpec::paper(
+                    64 << 10,
+                    16 << 10,
+                    KeyDist::Uniform,
+                    7 + i,
+                ))
+            })
+            .collect();
+        let (report, _) = run_job(&topo, &sources, sink, &ms, &spec).unwrap();
+        assert_eq!(report.result_value_sum, report.input_pairs as i64);
+    }
+}

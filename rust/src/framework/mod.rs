@@ -1,0 +1,14 @@
+//! The MapReduce-like framework of §5: a master that launches jobs via
+//! the controller, mappers that emit key-value streams, a reducer that
+//! produces the final result, and the shim layer giving workers a
+//! PUT/GET abstraction over the aggregation network.
+
+pub mod job;
+pub mod mapper;
+pub mod reducer;
+pub mod shim;
+
+pub use job::{run_job, JobReport, JobSpec};
+pub use mapper::Mapper;
+pub use reducer::Reducer;
+pub use shim::Shim;

@@ -1,0 +1,103 @@
+//! The reducer: merges the (partially pre-aggregated) streams into the
+//! final result.  Two engines:
+//!
+//! * [`Reducer::merge_software`] — plain hash-map aggregation, the
+//!   baseline the CPU-utilization model is calibrated against;
+//! * [`Reducer::merge_xla`] — the PJRT path: exact-key slot assignment
+//!   in Rust, dense batched segment aggregation in the AOT-compiled
+//!   JAX/Pallas kernel (see `runtime::table`).
+
+use crate::protocol::{AggOp, Key, KvPair, Value};
+use crate::runtime::{AggEngine, XlaAggregator};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Result of a merge.
+#[derive(Debug)]
+pub struct MergeResult {
+    pub table: HashMap<Key, Value>,
+    pub pairs_in: u64,
+    pub elapsed_s: f64,
+}
+
+pub struct Reducer;
+
+impl Reducer {
+    /// Software merge (measures real wall time — the calibration source
+    /// for `metrics::cpu`).
+    pub fn merge_software(streams: &[Vec<KvPair>], op: AggOp) -> MergeResult {
+        let t0 = Instant::now();
+        let mut table: HashMap<Key, Value> = HashMap::new();
+        let mut pairs_in = 0u64;
+        for s in streams {
+            pairs_in += s.len() as u64;
+            for p in s {
+                table
+                    .entry(p.key)
+                    .and_modify(|v| *v = op.combine(*v, p.value))
+                    .or_insert(p.value);
+            }
+        }
+        MergeResult {
+            table,
+            pairs_in,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// XLA merge through the AOT artifacts.
+    pub fn merge_xla(engine: &AggEngine, streams: &[Vec<KvPair>], op: AggOp) -> Result<MergeResult> {
+        let t0 = Instant::now();
+        let mut agg = XlaAggregator::new(engine, op);
+        let mut pairs_in = 0u64;
+        for s in streams {
+            pairs_in += s.len() as u64;
+            for &p in s {
+                agg.offer(p)?;
+            }
+        }
+        let out = agg.drain()?;
+        let table: HashMap<Key, Value> = out.into_iter().map(|p| (p.key, p.value)).collect();
+        Ok(MergeResult {
+            table,
+            pairs_in,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn streams() -> Vec<Vec<KvPair>> {
+        vec![
+            vec![
+                KvPair::new(Key::new(b"a"), 1),
+                KvPair::new(Key::new(b"b"), 2),
+            ],
+            vec![
+                KvPair::new(Key::new(b"a"), 3),
+                KvPair::new(Key::new(b"c"), 4),
+            ],
+        ]
+    }
+
+    #[test]
+    fn software_merge_sums() {
+        let r = Reducer::merge_software(&streams(), AggOp::Sum);
+        assert_eq!(r.pairs_in, 4);
+        assert_eq!(r.table[&Key::new(b"a")], 4);
+        assert_eq!(r.table[&Key::new(b"b")], 2);
+        assert_eq!(r.table[&Key::new(b"c")], 4);
+    }
+
+    #[test]
+    fn software_merge_max_min() {
+        let r = Reducer::merge_software(&streams(), AggOp::Max);
+        assert_eq!(r.table[&Key::new(b"a")], 3);
+        let r = Reducer::merge_software(&streams(), AggOp::Min);
+        assert_eq!(r.table[&Key::new(b"a")], 1);
+    }
+}

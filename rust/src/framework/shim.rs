@@ -1,0 +1,71 @@
+//! The shim layer (§3 Server): workers call PUT to stage key-value
+//! pairs and FINISH to emit the wire packets, without knowing how to
+//! talk to the controller or how pairs are packetized.
+
+use crate::protocol::{AggOp, AggregationPacket, Key, KvPair, TreeId, Value};
+
+/// Per-worker shim instance.
+#[derive(Clone, Debug, Default)]
+pub struct Shim {
+    staged: Vec<KvPair>,
+}
+
+impl Shim {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stage one pair (the worker-facing PUT).
+    pub fn put(&mut self, key: &[u8], value: Value) {
+        self.staged.push(KvPair::new(Key::new(key), value));
+    }
+
+    pub fn put_pair(&mut self, pair: KvPair) {
+        self.staged.push(pair);
+    }
+
+    pub fn staged(&self) -> &[KvPair] {
+        &self.staged
+    }
+
+    /// Emit the staged pairs as MTU-packed aggregation packets, the
+    /// last carrying EoT; clears the stage.
+    pub fn finish(&mut self, tree: TreeId, op: AggOp) -> Vec<AggregationPacket> {
+        let pkts = AggregationPacket::pack_stream(tree, op, &self.staged, true);
+        self.staged.clear();
+        pkts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_finish_roundtrip() {
+        let mut s = Shim::new();
+        s.put(b"hello", 1);
+        s.put(b"world", 2);
+        assert_eq!(s.staged().len(), 2);
+        let pkts = s.finish(TreeId(1), AggOp::Sum);
+        assert_eq!(pkts.len(), 1);
+        assert!(pkts[0].eot);
+        assert_eq!(pkts[0].pairs.len(), 2);
+        assert!(s.staged().is_empty());
+    }
+
+    #[test]
+    fn large_stage_splits_packets() {
+        let mut s = Shim::new();
+        for i in 0..2000u64 {
+            s.put_pair(KvPair::new(Key::from_id(i, 32), 1));
+        }
+        let pkts = s.finish(TreeId(2), AggOp::Sum);
+        assert!(pkts.len() > 1);
+        assert!(pkts.last().unwrap().eot);
+        assert_eq!(
+            pkts.iter().map(|p| p.pairs.len()).sum::<usize>(),
+            2000
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! # SwitchAgg — reproduction of "SwitchAgg: A Further Step Towards
+//! In-Network Computation" (Yang et al., 2019)
+//!
+//! SwitchAgg is a switch architecture for in-network aggregation of
+//! partition/aggregation (MapReduce-style) traffic.  The paper's FPGA
+//! prototype (NetFPGA-SUME, 200 MHz, 128-bit datapath, 4×10GbE, 8 GB
+//! DDR3) is reproduced here as a transaction-level, cycle-accounting
+//! simulator, together with every substrate the evaluation needs:
+//!
+//! * [`protocol`] — the wire protocol of Table 1 (Launch / Configure /
+//!   Ack / Aggregation packets, variable-length key-value pairs).
+//! * [`sim`] — simulation primitives: cycle clock, FIFOs with full
+//!   counters (Table 2), DRAM latency/bandwidth model, 10 Gbps links.
+//! * [`switch`] — the data plane of Fig. 4: header extraction, payload
+//!   analyzer with key-length groups (Fig. 5), crossbar, front-end
+//!   processing engines (SRAM hash tables, Fig. 8a), scheduler, and the
+//!   DRAM-backed back-end processing engine (Fig. 8b) forming the
+//!   multi-level aggregation hierarchy (Fig. 6).
+//! * [`baseline`] — comparison systems: a DAIET-style RMT switch
+//!   (fixed-format header KV pairs, ≤200 B packets, 16 K-entry table)
+//!   and a no-aggregation forwarding switch.
+//! * [`analysis`] — the paper's analytical models: Eq. 1–2 (extra
+//!   traffic of fixed-format parsing), Eq. 3 (reduction ratio under a
+//!   memory cap), Theorems 2.1 / 2.2.
+//! * [`controller`] — aggregation-tree construction and the
+//!   Configure/Ack control plane (§3, §4.1).
+//! * [`net`] — physical topology and link timing.
+//! * [`framework`] — the MapReduce-like system (§5): master, mappers,
+//!   reducer, shim layer, WordCount.
+//! * [`workload`] — uniform / Zipf(0.99) key-value workload generators
+//!   and a synthetic word corpus (§6.1).
+//! * [`runtime`] — the PJRT runtime: loads the AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes the JAX/Pallas
+//!   aggregation kernels from Rust (reducer merge, batched BPE drain).
+//! * [`metrics`] — reduction ratio, job-completion-time and CPU
+//!   utilization models (Figs. 9–11).
+//! * [`experiments`] — one harness per paper table/figure.
+//! * [`util`] — in-repo substrates this offline build requires: PRNG,
+//!   Zipf sampler, stats, CLI parser, property-test mini-framework,
+//!   bench harness.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`);
+//! the Rust binary is self-contained afterwards.
+
+pub mod analysis;
+pub mod baseline;
+pub mod controller;
+pub mod experiments;
+pub mod framework;
+pub mod metrics;
+pub mod net;
+pub mod protocol;
+pub mod runtime;
+pub mod sim;
+pub mod switch;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,192 @@
+//! `switchagg` — CLI launcher for the SwitchAgg reproduction.
+//!
+//! ```text
+//! switchagg exp <id> [--scale N]     regenerate a paper table/figure
+//!     ids: eq1 fig2a fig2b fig9 table2 table3 fig10 fig11 ablations sec7 all
+//! switchagg wordcount [--bytes 8MB] [--vocab 20000] [--no-xla]
+//!     end-to-end WordCount through the simulated testbed
+//! switchagg selftest                 quick whole-stack smoke test
+//! ```
+
+use switchagg::experiments::{self, Scale};
+use switchagg::framework::{run_job, JobSpec, Mapper, Reducer};
+use switchagg::net::Topology;
+use switchagg::protocol::AggOp;
+use switchagg::runtime::AggEngine;
+use switchagg::switch::SwitchConfig;
+use switchagg::util::cli::Args;
+use switchagg::workload::corpus::Corpus;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("exp") => cmd_exp(&args),
+        Some("wordcount") => cmd_wordcount(&args),
+        Some("selftest") => cmd_selftest(),
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}");
+            usage();
+            2
+        }
+        None => {
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "usage:\n  switchagg exp <eq1|fig2a|fig2b|fig9|table2|table3|fig10|fig11|ablations|sec7|all> [--scale N]\n  switchagg wordcount [--bytes 8MB] [--vocab 20000] [--no-xla]\n  switchagg selftest"
+    );
+}
+
+fn cmd_exp(args: &Args) -> i32 {
+    let scale = match args.get_parse_or::<u64>("scale", 1024) {
+        Ok(f) => Scale::new(f),
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let Some(id) = args.positional.first().map(|s| s.as_str()) else {
+        eprintln!("exp: missing experiment id");
+        usage();
+        return 2;
+    };
+    let run_one = |id: &str| match id {
+        "eq1" => experiments::eq1::print_rows(&experiments::eq1::run()),
+        "fig2a" => experiments::fig2::print_fig2a(&experiments::fig2::fig2a(scale)),
+        "fig2b" => experiments::fig2::print_fig2b(&experiments::fig2::fig2b(scale)),
+        "fig2" => experiments::fig2::run(scale),
+        "fig9" => experiments::fig9::print_rows(&experiments::fig9::run(scale)),
+        "table2" => {
+            experiments::table2::print_rows(&experiments::table2::run(scale));
+            experiments::table2::print_stressed(&experiments::table2::run_stressed(scale));
+        }
+        "table3" => experiments::table3::print_rows(&experiments::table3::run(scale), scale),
+        "fig10" => experiments::fig10::print_rows(&experiments::fig10::run(scale), scale),
+        "fig11" => experiments::fig11::print_rows(&experiments::fig11::run(scale)),
+        "ablations" => experiments::ablations::print_rows(&experiments::ablations::run(scale)),
+        "sec7" => experiments::sec7::run(scale),
+        other => {
+            eprintln!("unknown experiment {other:?}");
+            std::process::exit(2);
+        }
+    };
+    if id == "all" {
+        for id in [
+            "eq1", "fig2a", "fig2b", "fig9", "table2", "table3", "fig10", "fig11",
+            "ablations", "sec7",
+        ] {
+            run_one(id);
+        }
+    } else {
+        run_one(id);
+    }
+    0
+}
+
+fn cmd_wordcount(args: &Args) -> i32 {
+    let bytes = match args.get_bytes_or("bytes", 8 << 20) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let vocab = args.get_parse_or::<u64>("vocab", 20_000).unwrap_or(20_000);
+    let use_xla = !args.flag("no-xla");
+
+    println!("WordCount: {bytes} corpus bytes, vocab {vocab}, 3 mappers -> 1 reducer");
+    let (topo, _sw, hosts) = Topology::star(4);
+    let corpus = Corpus::new(vocab, 0xC0DE);
+    let lines = corpus.lines(bytes);
+    let chunks: Vec<Vec<String>> = {
+        let per = lines.len().div_ceil(3);
+        lines.chunks(per.max(1)).map(|c| c.to_vec()).collect()
+    };
+    let mappers: Vec<Mapper> = chunks
+        .into_iter()
+        .map(|lines| Mapper::WordCount { lines })
+        .collect();
+    let spec = JobSpec {
+        switch_cfg: SwitchConfig::scaled(32 << 10, Some(8 << 20)),
+        aggregation_enabled: true,
+        op: AggOp::Sum,
+    };
+    let n = mappers.len();
+    let (report, merge) = match run_job(&topo, &hosts[..n], hosts[3], &mappers, &spec) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("job failed: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "  input: {} pairs / {} bytes; into reducer: {} pairs / {} bytes",
+        report.input_pairs, report.input_bytes, report.output_pairs, report.output_bytes
+    );
+    println!(
+        "  reduction ratio {:.1}%  |  JCT {:.3} ms vs {:.3} ms baseline ({:.0}% saved)",
+        report.reduction_ratio * 100.0,
+        report.jct.total_s * 1e3,
+        report.jct_baseline.total_s * 1e3,
+        (1.0 - report.jct.total_s / report.jct_baseline.total_s) * 100.0,
+    );
+    println!(
+        "  distinct words {}  total count {}  reducer merge {:.3} ms (software)",
+        report.result_keys,
+        report.result_value_sum,
+        report.reducer_measured_s * 1e3
+    );
+
+    if use_xla {
+        match AggEngine::discover() {
+            Ok(engine) => {
+                // Re-merge through the AOT JAX/Pallas path and verify.
+                let streams: Vec<_> = mappers.iter().map(|m| m.produce()).collect();
+                match Reducer::merge_xla(&engine, &streams, AggOp::Sum) {
+                    Ok(xla_merge) => {
+                        let same = xla_merge.table == merge.table;
+                        println!(
+                            "  XLA reducer: {} keys in {:.3} ms ({} PJRT executions) — {}",
+                            xla_merge.table.len(),
+                            xla_merge.elapsed_s * 1e3,
+                            engine.executions.get(),
+                            if same {
+                                "matches software merge"
+                            } else {
+                                "MISMATCH"
+                            }
+                        );
+                        if !same {
+                            return 1;
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("  XLA merge failed: {e:#}");
+                        return 1;
+                    }
+                }
+            }
+            Err(e) => println!("  (XLA path skipped: {e:#})"),
+        }
+    }
+    0
+}
+
+fn cmd_selftest() -> i32 {
+    println!("switchagg selftest: experiments at coarse scale");
+    experiments::fig2::run(Scale::new(8192));
+    experiments::table2::print_rows(&experiments::table2::run(Scale::new(8192)));
+    println!("\nselftest OK");
+    0
+}

@@ -1,0 +1,85 @@
+//! Reducer CPU model (Fig. 11).
+//!
+//! The paper reports *average CPU utilization during job execution* on
+//! the reducer host (2×12-core Xeon E5-2658A).  Software aggregation
+//! cost is dominated by per-pair hash-map operations plus per-byte
+//! parsing; the constants below are calibrated against this repo's own
+//! measured software reducer (`framework::reducer`, see EXPERIMENTS.md
+//! §Calibration) and can be overridden.
+
+/// Per-host CPU cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuModel {
+    pub cores: u32,
+    /// Cost of one hash-map aggregate (ns).
+    pub per_pair_ns: f64,
+    /// Cost of parsing one payload byte (ns).
+    pub per_byte_ns: f64,
+}
+
+impl Default for CpuModel {
+    fn default() -> Self {
+        Self {
+            cores: 24,
+            per_pair_ns: 65.0,
+            per_byte_ns: 0.35,
+        }
+    }
+}
+
+impl CpuModel {
+    /// Wall-clock seconds of software aggregation for a stream
+    /// (single-threaded reducer, as in the paper's framework).
+    pub fn aggregate_secs(&self, pairs: u64, bytes: u64) -> f64 {
+        (pairs as f64 * self.per_pair_ns + bytes as f64 * self.per_byte_ns) * 1e-9
+    }
+
+    /// Average utilization (fraction of the whole host, 0..=1) while a
+    /// job of duration `jct_s` spends `busy_s` single-core-seconds on
+    /// aggregation plus a fixed networking overhead per received byte.
+    pub fn utilization(&self, busy_s: f64, jct_s: f64) -> f64 {
+        if jct_s <= 0.0 {
+            return 0.0;
+        }
+        (busy_s / (jct_s * self.cores as f64)).min(1.0)
+    }
+
+    /// Utilization of a reducer that aggregates `pairs`/`bytes` over a
+    /// job of `jct_s` seconds.
+    pub fn reducer_utilization(&self, pairs: u64, bytes: u64, jct_s: f64) -> f64 {
+        self.utilization(self.aggregate_secs(pairs, bytes), jct_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregation_cost_scales() {
+        let m = CpuModel::default();
+        let one = m.aggregate_secs(1_000_000, 46_000_000);
+        let ten = m.aggregate_secs(10_000_000, 460_000_000);
+        assert!((ten / one - 10.0).abs() < 1e-9);
+        // ~65ns per pair: 1M pairs ≈ 81ms with parsing.
+        assert!(one > 0.05 && one < 0.15, "{one}");
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let m = CpuModel::default();
+        assert_eq!(m.utilization(0.0, 10.0), 0.0);
+        assert_eq!(m.utilization(1e9, 1.0), 1.0); // clamped
+        let u = m.utilization(12.0, 1.0);
+        assert!((u - 0.5).abs() < 1e-9); // 12 core-seconds of 24 cores
+    }
+
+    #[test]
+    fn fewer_pairs_less_utilization() {
+        let m = CpuModel::default();
+        let jct = 2.0;
+        let with = m.reducer_utilization(100_000, 4_600_000, jct);
+        let without = m.reducer_utilization(10_000_000, 460_000_000, jct);
+        assert!(without > 5.0 * with);
+    }
+}

@@ -1,0 +1,148 @@
+//! Job-completion-time model (Fig. 10).
+//!
+//! The testbed (§6.1) is 3 mappers and 1 reducer on 10 GbE through the
+//! switch.  Phases overlap in a streaming pipeline, so
+//!
+//! ```text
+//! JCT = max( mapper send time,            // 3 parallel 10G links
+//!            reducer receive time,        // switch output into 1 link
+//!            reducer software aggregation // CPU-bound arm
+//!      ) + flush tail + residual merge
+//! ```
+//!
+//! *Without* SwitchAgg every mapper byte converges on the reducer's
+//! single in-bound link (the in-cast problem of §1) and the reducer
+//! aggregates everything in software.  *With* SwitchAgg the receive and
+//! CPU arms shrink by the switch's reduction ratio; the price is the
+//! BPE flush tail (Table 3), which is why small workloads see little
+//! gain — exactly the paper's "in some cases the result of with- and
+//! without SwitchAgg is similar".
+
+use crate::metrics::cpu::CpuModel;
+use crate::sim::clock::cycles_to_secs;
+use crate::sim::{Cycles, Link};
+
+/// Scenario parameters.
+#[derive(Clone, Debug)]
+pub struct JctModel {
+    pub n_mappers: usize,
+    pub link: Link,
+    pub cpu: CpuModel,
+}
+
+impl Default for JctModel {
+    fn default() -> Self {
+        Self {
+            n_mappers: 3,
+            link: Link::ten_gbe(),
+            cpu: CpuModel::default(),
+        }
+    }
+}
+
+/// Phase breakdown of one job.
+#[derive(Clone, Copy, Debug)]
+pub struct JctBreakdown {
+    pub map_send_s: f64,
+    pub reduce_recv_s: f64,
+    pub reduce_cpu_s: f64,
+    pub flush_tail_s: f64,
+    pub total_s: f64,
+}
+
+impl JctModel {
+    /// JCT for a job that injects `input_bytes` (`input_pairs`) at the
+    /// mappers, of which `output_bytes` (`output_pairs`) reach the
+    /// reducer after in-network aggregation, with a `flush_cycles`
+    /// drain tail inside the switch.  For the no-aggregation baseline,
+    /// pass input == output and `flush_cycles = 0`.
+    pub fn job(
+        &self,
+        input_bytes: u64,
+        input_pairs: u64,
+        output_bytes: u64,
+        output_pairs: u64,
+        flush_cycles: Cycles,
+    ) -> JctBreakdown {
+        let map_send_s = self
+            .link
+            .transfer_secs(input_bytes.div_ceil(self.n_mappers as u64));
+        let reduce_recv_s = self.link.transfer_secs(output_bytes);
+        let reduce_cpu_s = self.cpu.aggregate_secs(output_pairs, output_bytes);
+        let flush_tail_s = cycles_to_secs(flush_cycles);
+        let streaming = map_send_s.max(reduce_recv_s).max(reduce_cpu_s);
+        let _ = input_pairs;
+        JctBreakdown {
+            map_send_s,
+            reduce_recv_s,
+            reduce_cpu_s,
+            flush_tail_s,
+            total_s: streaming + flush_tail_s,
+        }
+    }
+
+    /// Convenience pair: (with SwitchAgg, without SwitchAgg).
+    pub fn compare(
+        &self,
+        input_bytes: u64,
+        input_pairs: u64,
+        output_bytes: u64,
+        output_pairs: u64,
+        flush_cycles: Cycles,
+    ) -> (JctBreakdown, JctBreakdown) {
+        let with = self.job(
+            input_bytes,
+            input_pairs,
+            output_bytes,
+            output_pairs,
+            flush_cycles,
+        );
+        let without = self.job(input_bytes, input_pairs, input_bytes, input_pairs, 0);
+        (with, without)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_agg_is_incast_bound() {
+        let m = JctModel::default();
+        let b = m.job(3 << 30, 60_000_000, 3 << 30, 60_000_000, 0);
+        // Receive over one link is 3x the per-mapper send time.
+        assert!(b.reduce_recv_s > 2.9 * b.map_send_s);
+        assert!(b.total_s >= b.reduce_recv_s);
+    }
+
+    #[test]
+    fn high_reduction_shifts_bottleneck_to_mappers() {
+        let m = JctModel::default();
+        let (with, without) = m.compare(3 << 30, 60_000_000, 3 << 25, 2_000_000, 0);
+        assert!(with.total_s < without.total_s);
+        // With 99% reduction the map-send arm dominates.
+        assert!((with.total_s - with.map_send_s).abs() / with.total_s < 0.05);
+        // Savings approach the paper's ~50% plateau: incast (3 links
+        // into 1) plus CPU relief bounds at >2x here.
+        assert!(without.total_s / with.total_s > 1.5);
+    }
+
+    #[test]
+    fn flush_tail_erodes_small_job_gains() {
+        let m = JctModel::default();
+        // Tiny job, big flush: SwitchAgg may not win (paper's
+        // "overhead offsets its benefits").
+        let flush: u64 = 31_250_000; // Table 3 BPE-Flush
+        let (with, without) = m.compare(64 << 20, 1_400_000, 1 << 20, 20_000, flush);
+        assert!(with.flush_tail_s > 0.1);
+        assert!(with.total_s > 0.9 * without.total_s, "flush tail should bite");
+    }
+
+    #[test]
+    fn jct_grows_with_workload() {
+        let m = JctModel::default();
+        let small = m.job(1 << 30, 20_000_000, 1 << 28, 5_000_000, 0);
+        let big = m.job(4 << 30, 80_000_000, 1 << 30, 20_000_000, 0);
+        assert!(big.total_s > 3.0 * small.total_s);
+    }
+}

@@ -1,0 +1,8 @@
+//! Application-level metric models: job completion time (Fig. 10) and
+//! CPU utilization (Fig. 11).
+
+pub mod cpu;
+pub mod jct;
+
+pub use cpu::CpuModel;
+pub use jct::{JctBreakdown, JctModel};

@@ -1,0 +1,10 @@
+//! Physical network model: nodes (hosts and switches), ports, links,
+//! and shortest-path routing — the substrate the controller builds
+//! aggregation trees over (§3 "the physical topology of the network").
+
+pub mod netsim;
+pub mod routing;
+pub mod topology;
+
+pub use netsim::NetSim;
+pub use topology::{NodeId, NodeKind, PortId, Topology};

@@ -1,0 +1,203 @@
+//! Event-driven packet-level network simulator.
+//!
+//! Complements the fluid-flow timing in `metrics::jct` with per-packet
+//! delivery over the topology: each link serializes packets at its
+//! rate plus a fixed propagation delay; store-and-forward switches.
+//! Used by the routing experiments (§7 "Network Routing Scheme") to
+//! measure per-link byte loads and completion times under different
+//! tree placements.
+
+use crate::net::topology::{NodeId, Topology};
+use crate::sim::Link;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, BTreeMap};
+
+/// Fixed per-hop propagation delay (seconds).
+pub const PROP_DELAY_S: f64 = 1e-6;
+
+/// One in-flight transmission event.
+#[derive(Clone, Debug, PartialEq)]
+struct Event {
+    /// Delivery time at `to`.
+    time_s: f64,
+    from: NodeId,
+    to: NodeId,
+    dst: NodeId,
+    bytes: u64,
+    id: u64,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time_s
+            .partial_cmp(&other.time_s)
+            .unwrap()
+            .then(self.id.cmp(&other.id))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Per-directed-link accounting.
+#[derive(Clone, Debug, Default)]
+pub struct LinkStats {
+    pub bytes: u64,
+    pub packets: u64,
+    /// Time the link finishes its last serialization.
+    pub busy_until_s: f64,
+}
+
+/// The simulator.
+pub struct NetSim {
+    topo: Topology,
+    link: Link,
+    events: BinaryHeap<Reverse<Event>>,
+    /// (from, to) -> stats; serialization is per directed link.
+    links: BTreeMap<(NodeId, NodeId), LinkStats>,
+    delivered: Vec<(f64, NodeId, u64)>,
+    next_id: u64,
+    now_s: f64,
+}
+
+impl NetSim {
+    pub fn new(topo: Topology) -> Self {
+        let link = topo.link();
+        Self {
+            topo,
+            link,
+            events: BinaryHeap::new(),
+            links: BTreeMap::new(),
+            delivered: Vec::new(),
+            next_id: 0,
+            now_s: 0.0,
+        }
+    }
+
+    /// Inject a packet of `bytes` at `src` bound for `dst` at `t`.
+    pub fn send(&mut self, t: f64, src: NodeId, dst: NodeId, bytes: u64) {
+        self.transmit(t.max(self.now_s), src, dst, bytes);
+    }
+
+    fn transmit(&mut self, t: f64, at: NodeId, dst: NodeId, bytes: u64) {
+        if at == dst {
+            self.delivered.push((t, dst, bytes));
+            return;
+        }
+        let Some(next) = self.topo.next_hop(at, dst) else {
+            return; // unroutable: drop (counted nowhere, like a real L2 drop)
+        };
+        let stats = self.links.entry((at, next)).or_default();
+        let start = t.max(stats.busy_until_s);
+        let done = start + self.link.transfer_secs(bytes);
+        stats.busy_until_s = done;
+        stats.bytes += bytes;
+        stats.packets += 1;
+        self.next_id += 1;
+        self.events.push(Reverse(Event {
+            time_s: done + PROP_DELAY_S,
+            from: at,
+            to: next,
+            dst,
+            bytes,
+            id: self.next_id,
+        }));
+    }
+
+    /// Run until no events remain; returns the last delivery time.
+    pub fn run(&mut self) -> f64 {
+        while let Some(Reverse(ev)) = self.events.pop() {
+            self.now_s = ev.time_s;
+            self.transmit(ev.time_s, ev.to, ev.dst, ev.bytes);
+        }
+        self.delivered
+            .iter()
+            .map(|(t, _, _)| *t)
+            .fold(0.0, f64::max)
+    }
+
+    /// Bytes delivered to `node`.
+    pub fn delivered_bytes(&self, node: NodeId) -> u64 {
+        self.delivered
+            .iter()
+            .filter(|(_, n, _)| *n == node)
+            .map(|(_, _, b)| *b)
+            .sum()
+    }
+
+    pub fn delivered_packets(&self, node: NodeId) -> usize {
+        self.delivered.iter().filter(|(_, n, _)| *n == node).count()
+    }
+
+    /// The maximum bytes carried by any single directed link — the
+    /// congestion metric of the routing experiment.
+    pub fn max_link_bytes(&self) -> u64 {
+        self.links.values().map(|s| s.bytes).max().unwrap_or(0)
+    }
+
+    pub fn link_stats(&self) -> &BTreeMap<(NodeId, NodeId), LinkStats> {
+        &self.links
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topology::Topology;
+
+    #[test]
+    fn single_hop_delivery_time() {
+        let (topo, _sw, hosts) = Topology::star(2);
+        let mut sim = NetSim::new(topo);
+        sim.send(0.0, hosts[0], hosts[1], 1_250_000); // 1 ms at 10G
+        let t = sim.run();
+        // Two hops (host->switch->host): 2 serializations + 2 props.
+        assert!((t - (2.0e-3 + 2.0 * PROP_DELAY_S)).abs() < 1e-6, "{t}");
+        assert_eq!(sim.delivered_bytes(hosts[1]), 1_250_000);
+    }
+
+    #[test]
+    fn link_serialization_queues_packets() {
+        let (topo, sw, hosts) = Topology::star(3);
+        let mut sim = NetSim::new(topo);
+        // Two senders converge on host 2: its inbound link serializes.
+        sim.send(0.0, hosts[0], hosts[2], 1_250_000);
+        sim.send(0.0, hosts[1], hosts[2], 1_250_000);
+        let t = sim.run();
+        assert!(t >= 3.0e-3 - 1e-9, "incast should serialize: {t}");
+        let inbound = sim.link_stats()[&(sw, hosts[2])].bytes;
+        assert_eq!(inbound, 2_500_000);
+        assert_eq!(sim.delivered_packets(hosts[2]), 2);
+    }
+
+    #[test]
+    fn multi_hop_chain_accumulates_link_load() {
+        let (topo, switches, sources, sink) = Topology::chain(3, 2);
+        let mut sim = NetSim::new(topo);
+        for s in &sources {
+            sim.send(0.0, *s, sink, 1000);
+        }
+        sim.run();
+        // Every inter-switch link carried both packets.
+        for w in switches.windows(2) {
+            assert_eq!(sim.link_stats()[&(w[0], w[1])].bytes, 2000);
+        }
+        assert_eq!(sim.max_link_bytes(), 2000);
+    }
+
+    #[test]
+    fn unroutable_packets_are_dropped() {
+        let mut topo = Topology::new(crate::sim::Link::ten_gbe());
+        let a = topo.add_node(crate::net::NodeKind::Host);
+        let b = topo.add_node(crate::net::NodeKind::Host);
+        let mut sim = NetSim::new(topo);
+        sim.send(0.0, a, b, 100);
+        assert_eq!(sim.run(), 0.0);
+        assert_eq!(sim.delivered_bytes(b), 0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Reduction-aware routing (§7 "Network Routing Scheme").
+//!
+//! Classic routing assumes a flow's ingress and egress volumes are
+//! equal; an aggregating switch breaks that premise — a node that
+//! digests k flows may emit almost nothing.  This module scores
+//! candidate aggregation-tree placements by *expected* per-link load,
+//! discounting every link downstream of an aggregation point by the
+//! switch's predicted reduction ratio (Eq. 3 over its memory and the
+//! announced key variety), and picks the placement minimizing the
+//! maximum link load.
+
+use crate::analysis::models::eq3_reduction_ratio;
+use crate::net::topology::{NodeId, NodeKind, Topology};
+use std::collections::BTreeMap;
+
+/// Demand announcement for a placement decision.
+#[derive(Clone, Debug)]
+pub struct PlacementDemand {
+    /// Bytes each mapper will emit.
+    pub bytes_per_mapper: u64,
+    /// Expected pairs per mapper (for Eq. 3's M).
+    pub pairs_per_mapper: u64,
+    /// Expected distinct keys (Eq. 3's N).
+    pub key_variety: u64,
+    /// Aggregating switch capacity in pairs (Eq. 3's C); `None` = the
+    /// switches do not aggregate (baseline routing assumption).
+    pub switch_capacity_pairs: Option<u64>,
+}
+
+impl PlacementDemand {
+    /// Predicted reduction ratio at an aggregation node fed by `k`
+    /// mappers (Theorem 2.1: the merged flow's ratio).
+    pub fn predicted_reduction(&self, k: usize) -> f64 {
+        match self.switch_capacity_pairs {
+            None => 0.0,
+            Some(c) => {
+                let m = self.pairs_per_mapper * k as u64;
+                eq3_reduction_ratio(m.max(1), self.key_variety.max(1), c)
+            }
+        }
+    }
+}
+
+/// Expected per-link byte loads for `mappers → reducer` through the
+/// shortest-path tree, with aggregation at every switch.
+pub fn expected_link_loads(
+    topo: &Topology,
+    mappers: &[NodeId],
+    reducer: NodeId,
+    demand: &PlacementDemand,
+) -> Option<BTreeMap<(NodeId, NodeId), f64>> {
+    // Process nodes by distance from the reducer, farthest first,
+    // propagating the volume that survives each aggregation point.
+    let mut loads: BTreeMap<(NodeId, NodeId), f64> = BTreeMap::new();
+    let mut node_out: BTreeMap<NodeId, f64> = BTreeMap::new();
+    let mut order: Vec<NodeId> = Vec::new();
+    for &m in mappers {
+        node_out.insert(m, demand.bytes_per_mapper as f64);
+        let path = topo.path(m, reducer)?;
+        for n in path {
+            if !order.contains(&n) {
+                order.push(n);
+            }
+        }
+    }
+    order.sort_by_key(|&n| {
+        std::cmp::Reverse(topo.path(n, reducer).map(|p| p.len()).unwrap_or(0))
+    });
+    // Children per node in the union tree.
+    let mut children: BTreeMap<NodeId, Vec<NodeId>> = BTreeMap::new();
+    for &m in mappers {
+        let path = topo.path(m, reducer)?;
+        for w in path.windows(2) {
+            let kids = children.entry(w[1]).or_default();
+            if !kids.contains(&w[0]) {
+                kids.push(w[0]);
+            }
+        }
+    }
+    for &n in &order {
+        if n == reducer {
+            continue;
+        }
+        let out = if topo.kind(n) == NodeKind::Switch {
+            let kids = children.get(&n).cloned().unwrap_or_default();
+            let incoming: f64 = kids.iter().map(|k| node_out.get(k).copied().unwrap_or(0.0)).sum();
+            let r = demand.predicted_reduction(kids.len().max(1));
+            incoming * (1.0 - r)
+        } else {
+            node_out.get(&n).copied().unwrap_or(0.0)
+        };
+        node_out.insert(n, out);
+        let next = topo.next_hop(n, reducer)?;
+        *loads.entry((n, next)).or_insert(0.0) += out;
+    }
+    Some(loads)
+}
+
+/// Max expected link load for a candidate reducer placement.
+pub fn max_link_load(
+    topo: &Topology,
+    mappers: &[NodeId],
+    reducer: NodeId,
+    demand: &PlacementDemand,
+) -> Option<f64> {
+    let loads = expected_link_loads(topo, mappers, reducer, demand)?;
+    loads.values().copied().fold(None, |acc: Option<f64>, v| {
+        Some(acc.map_or(v, |a| a.max(v)))
+    })
+}
+
+/// Pick the reducer host minimizing the maximum expected link load.
+pub fn best_reducer_placement(
+    topo: &Topology,
+    mappers: &[NodeId],
+    candidates: &[NodeId],
+    demand: &PlacementDemand,
+) -> Option<NodeId> {
+    candidates
+        .iter()
+        .filter_map(|&c| max_link_load(topo, mappers, c, demand).map(|l| (c, l)))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|(c, _)| c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topology::Topology;
+
+    fn demand(capacity: Option<u64>) -> PlacementDemand {
+        PlacementDemand {
+            bytes_per_mapper: 1 << 20,
+            pairs_per_mapper: 20_000,
+            key_variety: 5_000,
+            switch_capacity_pairs: capacity,
+        }
+    }
+
+    #[test]
+    fn aggregation_discounts_downstream_links() {
+        let (topo, sw, hosts) = Topology::star(4);
+        let d = demand(Some(100_000)); // memory ample: high reduction
+        let loads = expected_link_loads(&topo, &hosts[..3], hosts[3], &d).unwrap();
+        let up: f64 = loads[&(hosts[0], sw)];
+        let down: f64 = loads[&(sw, hosts[3])];
+        assert!((up - (1 << 20) as f64).abs() < 1.0);
+        // 3 MB in, far less out.
+        assert!(down < up, "downstream {down} should be < upstream {up}");
+        let r = d.predicted_reduction(3);
+        assert!((down - 3.0 * up * (1.0 - r)).abs() < 1.0);
+    }
+
+    #[test]
+    fn without_aggregation_loads_sum() {
+        let (topo, sw, hosts) = Topology::star(4);
+        let d = demand(None);
+        let loads = expected_link_loads(&topo, &hosts[..3], hosts[3], &d).unwrap();
+        assert!((loads[&(sw, hosts[3])] - 3.0 * (1 << 20) as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn placement_prefers_colocated_reducer_under_no_aggregation() {
+        // Two-level tree: mappers all under leaf 0; without
+        // aggregation the best reducer is under the same leaf (avoids
+        // the spine link carrying 3x traffic).
+        let (topo, _spine, _leaves, hosts) = Topology::two_level(2, 3);
+        let mappers = &hosts[..2]; // under leaf 0
+        let candidates = [hosts[2], hosts[3]]; // leaf 0 vs leaf 1
+        let best = best_reducer_placement(&topo, mappers, &candidates, &demand(None)).unwrap();
+        assert_eq!(best, hosts[2], "co-located reducer avoids the spine");
+    }
+
+    #[test]
+    fn aggregation_makes_placement_insensitive() {
+        // §7's point: with in-network aggregation the spine link
+        // carries almost nothing, so remote placement costs little.
+        let (topo, _spine, _leaves, hosts) = Topology::two_level(2, 3);
+        let mappers = &hosts[..2];
+        let d = demand(Some(1_000_000));
+        let near = max_link_load(&topo, mappers, hosts[2], &d).unwrap();
+        let far = max_link_load(&topo, mappers, hosts[3], &d).unwrap();
+        // Both dominated by the mapper uplinks; within 25%.
+        assert!((far - near).abs() / near < 0.25, "near {near} far {far}");
+        let d0 = demand(None);
+        let far0 = max_link_load(&topo, mappers, hosts[3], &d0).unwrap();
+        assert!(far0 > 1.9 * far, "no-agg remote placement should be much worse");
+    }
+}

@@ -1,0 +1,279 @@
+//! Topology graph with ports and static shortest-path routing.
+//!
+//! The paper's testbed (§6.1) is a single 4-port switch with 3 mappers
+//! and 1 reducer directly attached; Fig. 2(b) chains several switches
+//! in a streamline.  Both are builders here, plus a generic fat-tree-ish
+//! two-level tree for larger controller tests.
+
+use crate::sim::Link;
+use std::collections::{BTreeMap, VecDeque};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// Port index local to a node.
+pub type PortId = u8;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    Host,
+    Switch,
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    kind: NodeKind,
+    /// port -> (peer node, peer's port)
+    ports: BTreeMap<PortId, (NodeId, PortId)>,
+}
+
+/// Undirected topology with per-port links (all links same rate).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    nodes: Vec<Node>,
+    link: Link,
+}
+
+impl Topology {
+    pub fn new(link: Link) -> Self {
+        Self {
+            nodes: Vec::new(),
+            link,
+        }
+    }
+
+    pub fn link(&self) -> Link {
+        self.link
+    }
+
+    pub fn add_node(&mut self, kind: NodeKind) -> NodeId {
+        self.nodes.push(Node {
+            kind,
+            ports: BTreeMap::new(),
+        });
+        NodeId(self.nodes.len() as u32 - 1)
+    }
+
+    pub fn kind(&self, n: NodeId) -> NodeKind {
+        self.nodes[n.0 as usize].kind
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Connect `a` and `b` on their next free ports; returns the port
+    /// pair `(a_port, b_port)`.
+    pub fn connect(&mut self, a: NodeId, b: NodeId) -> (PortId, PortId) {
+        assert_ne!(a, b, "self-links not allowed");
+        let ap = self.next_free_port(a);
+        let bp = self.next_free_port(b);
+        self.nodes[a.0 as usize].ports.insert(ap, (b, bp));
+        self.nodes[b.0 as usize].ports.insert(bp, (a, ap));
+        (ap, bp)
+    }
+
+    fn next_free_port(&self, n: NodeId) -> PortId {
+        let ports = &self.nodes[n.0 as usize].ports;
+        (0..=u8::MAX)
+            .find(|p| !ports.contains_key(p))
+            .expect("out of ports")
+    }
+
+    pub fn neighbors(&self, n: NodeId) -> impl Iterator<Item = (PortId, NodeId)> + '_ {
+        self.nodes[n.0 as usize]
+            .ports
+            .iter()
+            .map(|(&p, &(peer, _))| (p, peer))
+    }
+
+    pub fn port_towards(&self, from: NodeId, neighbor: NodeId) -> Option<PortId> {
+        self.nodes[from.0 as usize]
+            .ports
+            .iter()
+            .find(|(_, &(peer, _))| peer == neighbor)
+            .map(|(&p, _)| p)
+    }
+
+    pub fn hosts(&self) -> Vec<NodeId> {
+        self.by_kind(NodeKind::Host)
+    }
+
+    pub fn switches(&self) -> Vec<NodeId> {
+        self.by_kind(NodeKind::Switch)
+    }
+
+    fn by_kind(&self, k: NodeKind) -> Vec<NodeId> {
+        (0..self.nodes.len() as u32)
+            .map(NodeId)
+            .filter(|&n| self.kind(n) == k)
+            .collect()
+    }
+
+    /// BFS shortest path (list of nodes, inclusive of both ends).
+    pub fn path(&self, from: NodeId, to: NodeId) -> Option<Vec<NodeId>> {
+        if from == to {
+            return Some(vec![from]);
+        }
+        let mut prev: BTreeMap<NodeId, NodeId> = BTreeMap::new();
+        let mut q = VecDeque::from([from]);
+        while let Some(n) = q.pop_front() {
+            for (_, peer) in self.neighbors(n) {
+                if peer != from && !prev.contains_key(&peer) {
+                    prev.insert(peer, n);
+                    if peer == to {
+                        let mut path = vec![to];
+                        let mut cur = to;
+                        while cur != from {
+                            cur = prev[&cur];
+                            path.push(cur);
+                        }
+                        path.reverse();
+                        return Some(path);
+                    }
+                    q.push_back(peer);
+                }
+            }
+        }
+        None
+    }
+
+    /// Static next-hop routing table for `to`, per the paper's
+    /// controller-disseminated static routing (§4.1).
+    pub fn next_hop(&self, from: NodeId, to: NodeId) -> Option<NodeId> {
+        let p = self.path(from, to)?;
+        p.get(1).copied()
+    }
+
+    // ---- builders -------------------------------------------------
+
+    /// The testbed: one switch, `n_hosts` hosts on ports 0.. (§6.1:
+    /// 3 mappers + 1 reducer on a 4-port NetFPGA).
+    pub fn star(n_hosts: usize) -> (Topology, NodeId, Vec<NodeId>) {
+        let mut t = Topology::new(Link::ten_gbe());
+        let sw = t.add_node(NodeKind::Switch);
+        let hosts: Vec<NodeId> = (0..n_hosts)
+            .map(|_| {
+                let h = t.add_node(NodeKind::Host);
+                t.connect(sw, h);
+                h
+            })
+            .collect();
+        (t, sw, hosts)
+    }
+
+    /// Fig. 2(b): `n_switches` in a streamline; `n_sources` hosts feed
+    /// the first switch, one sink host hangs off the last.
+    pub fn chain(n_switches: usize, n_sources: usize) -> (Topology, Vec<NodeId>, Vec<NodeId>, NodeId) {
+        assert!(n_switches >= 1);
+        let mut t = Topology::new(Link::ten_gbe());
+        let switches: Vec<NodeId> = (0..n_switches)
+            .map(|_| t.add_node(NodeKind::Switch))
+            .collect();
+        for w in switches.windows(2) {
+            t.connect(w[0], w[1]);
+        }
+        let sources: Vec<NodeId> = (0..n_sources)
+            .map(|_| {
+                let h = t.add_node(NodeKind::Host);
+                t.connect(switches[0], h);
+                h
+            })
+            .collect();
+        let sink = t.add_node(NodeKind::Host);
+        t.connect(*switches.last().unwrap(), sink);
+        (t, switches, sources, sink)
+    }
+
+    /// Two-level tree: `spine` top switch, `leaves` leaf switches,
+    /// `hosts_per_leaf` hosts each.  For controller/aggregation-tree
+    /// tests beyond the paper's single-switch testbed.
+    pub fn two_level(leaves: usize, hosts_per_leaf: usize) -> (Topology, NodeId, Vec<NodeId>, Vec<NodeId>) {
+        let mut t = Topology::new(Link::ten_gbe());
+        let spine = t.add_node(NodeKind::Switch);
+        let mut leaf_ids = Vec::new();
+        let mut host_ids = Vec::new();
+        for _ in 0..leaves {
+            let leaf = t.add_node(NodeKind::Switch);
+            t.connect(spine, leaf);
+            leaf_ids.push(leaf);
+            for _ in 0..hosts_per_leaf {
+                let h = t.add_node(NodeKind::Host);
+                t.connect(leaf, h);
+                host_ids.push(h);
+            }
+        }
+        (t, spine, leaf_ids, host_ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn star_shape() {
+        let (t, sw, hosts) = Topology::star(4);
+        assert_eq!(t.kind(sw), NodeKind::Switch);
+        assert_eq!(hosts.len(), 4);
+        assert_eq!(t.hosts().len(), 4);
+        assert_eq!(t.switches(), vec![sw]);
+        for h in &hosts {
+            assert_eq!(t.next_hop(*h, hosts[0]).unwrap_or(sw), sw);
+            assert_eq!(t.path(*h, sw).unwrap().len(), 2);
+        }
+    }
+
+    #[test]
+    fn chain_paths_go_through_all_switches() {
+        let (t, switches, sources, sink) = Topology::chain(4, 3);
+        let p = t.path(sources[0], sink).unwrap();
+        assert_eq!(p.len(), 2 + switches.len());
+        for sw in &switches {
+            assert!(p.contains(sw));
+        }
+    }
+
+    #[test]
+    fn ports_are_symmetric() {
+        let (t, sw, hosts) = Topology::star(3);
+        for h in hosts {
+            let p_sw = t.port_towards(sw, h).unwrap();
+            let p_h = t.port_towards(h, sw).unwrap();
+            assert_eq!(t.nodes[sw.0 as usize].ports[&p_sw], (h, p_h));
+        }
+    }
+
+    #[test]
+    fn two_level_routing() {
+        let (t, spine, leaves, hosts) = Topology::two_level(3, 2);
+        assert_eq!(hosts.len(), 6);
+        // Hosts under different leaves route via spine.
+        let p = t.path(hosts[0], hosts[5]).unwrap();
+        assert!(p.contains(&spine));
+        assert_eq!(p.len(), 5);
+        // Hosts under the same leaf do not.
+        let p = t.path(hosts[0], hosts[1]).unwrap();
+        assert!(!p.contains(&spine));
+        assert_eq!(p, vec![hosts[0], leaves[0], hosts[1]]);
+    }
+
+    #[test]
+    fn disconnected_has_no_path() {
+        let mut t = Topology::new(Link::ten_gbe());
+        let a = t.add_node(NodeKind::Host);
+        let b = t.add_node(NodeKind::Host);
+        assert!(t.path(a, b).is_none());
+        assert!(t.next_hop(a, b).is_none());
+    }
+}

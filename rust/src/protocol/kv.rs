@@ -1,0 +1,292 @@
+//! Key-value pair representation.
+//!
+//! The paper's aggregation packets carry *variable-length* keys
+//! (16–64 B in the evaluation, 8–64 B supported by the payload
+//! analyzer) with a fixed 32-bit numeric value (§4.2.3).  Keys are kept
+//! inline in a fixed 64-byte array so the switch hot path never
+//! allocates; equality and hashing are length-aware.
+
+use super::types::Value;
+use super::wire::{self, Reader, Truncated};
+
+/// Hard bounds from the prototype configuration (§5: groups span
+/// 8 B .. 64 B).  Workloads (§6.1) use 16–64 B.
+pub const MAX_KEY_LEN: usize = 64;
+pub const MIN_KEY_LEN: usize = 1;
+
+/// A variable-length key stored inline (no heap).
+#[derive(Clone, Copy)]
+pub struct Key {
+    len: u8,
+    bytes: [u8; MAX_KEY_LEN],
+}
+
+impl Key {
+    /// Build from a byte slice.  Panics if out of the supported range —
+    /// the payload analyzer validates lengths before constructing keys.
+    pub fn new(data: &[u8]) -> Self {
+        assert!(
+            (MIN_KEY_LEN..=MAX_KEY_LEN).contains(&data.len()),
+            "key length {} out of range [{MIN_KEY_LEN}, {MAX_KEY_LEN}]",
+            data.len()
+        );
+        let mut bytes = [0u8; MAX_KEY_LEN];
+        bytes[..data.len()].copy_from_slice(data);
+        Self {
+            len: data.len() as u8,
+            bytes,
+        }
+    }
+
+    /// Fallible constructor for wire decoding.
+    pub fn try_new(data: &[u8]) -> Option<Self> {
+        if (MIN_KEY_LEN..=MAX_KEY_LEN).contains(&data.len()) {
+            Some(Self::new(data))
+        } else {
+            None
+        }
+    }
+
+    /// Deterministically derive a key of `len` bytes from a u64 id.
+    /// Used by workload generators: distinct ids → distinct keys (the
+    /// id is embedded verbatim in the first 8 bytes; the rest is a
+    /// cheap keyed fill so long keys are not mostly zero).
+    pub fn from_id(id: u64, len: usize) -> Self {
+        assert!((MIN_KEY_LEN..=MAX_KEY_LEN).contains(&len));
+        let mut bytes = [0u8; MAX_KEY_LEN];
+        let idb = id.to_le_bytes();
+        let n = len.min(8);
+        bytes[..n].copy_from_slice(&idb[..n]);
+        if len < 8 {
+            // Short keys can't embed the full id; fold the high bytes in
+            // so ids that differ only above 2^(8*len) still differ...
+            // they can't within `len` bytes, so the caller must keep
+            // id < 2^(8*len).  Assert to catch misuse.
+            assert!(
+                id < 1u64 << (8 * len),
+                "id {id} does not fit a {len}-byte key"
+            );
+        }
+        let mut x = id.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(len as u64);
+        for b in bytes[8.min(len)..len].iter_mut() {
+            x ^= x >> 33;
+            x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+            *b = (x >> 56) as u8;
+        }
+        Self {
+            len: len as u8,
+            bytes,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes[..self.len as usize]
+    }
+
+    /// The key zero-padded to `width` bytes, as 32-bit LE words — the
+    /// layout both the FPGA hash slots (Fig. 8) and the Pallas hash
+    /// kernel consume.  `width` must be a multiple of 4 ≥ len.
+    pub fn packed_words(&self, width: usize) -> Vec<u32> {
+        assert!(width % 4 == 0 && width >= self.len());
+        let mut padded = vec![0u8; width];
+        padded[..self.len()].copy_from_slice(self.as_bytes());
+        padded
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+}
+
+impl PartialEq for Key {
+    #[inline]
+    fn eq(&self, other: &Self) -> bool {
+        self.len == other.len && self.bytes[..self.len as usize] == other.bytes[..other.len as usize]
+    }
+}
+
+impl Eq for Key {}
+
+impl std::hash::Hash for Key {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        state.write_u8(self.len);
+        state.write(self.as_bytes());
+    }
+}
+
+impl std::fmt::Debug for Key {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Key[{}]{{", self.len)?;
+        for b in self.as_bytes().iter().take(8) {
+            write!(f, "{b:02x}")?;
+        }
+        if self.len() > 8 {
+            write!(f, "..")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+/// One key-value pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvPair {
+    pub key: Key,
+    pub value: Value,
+}
+
+impl KvPair {
+    pub fn new(key: Key, value: Value) -> Self {
+        Self { key, value }
+    }
+
+    /// Wire width of the value in bytes: 4 if it fits an i32 (the
+    /// paper's fixed 32-bit value), else 8 (software extension).
+    pub fn value_len(&self) -> usize {
+        if i32::try_from(self.value).is_ok() {
+            4
+        } else {
+            8
+        }
+    }
+
+    /// Encoded length on the wire: metadata (1 B key len + 1 B value
+    /// len) + key + value (Table 1 "KeyLength, ValueLength, Key,
+    /// Value").
+    pub fn encoded_len(&self) -> usize {
+        2 + self.key.len() + self.value_len()
+    }
+
+    /// The pair's *useful* payload (key + value, no metadata) — the
+    /// denominator of the extra-traffic model (Eq. 1).
+    pub fn payload_len(&self) -> usize {
+        self.key.len() + self.value_len()
+    }
+
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        wire::put_u8(buf, self.key.len() as u8);
+        let vl = self.value_len();
+        wire::put_u8(buf, vl as u8);
+        buf.extend_from_slice(self.key.as_bytes());
+        match vl {
+            4 => wire::put_u32(buf, self.value as i32 as u32),
+            8 => wire::put_i64(buf, self.value),
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn decode(r: &mut Reader<'_>) -> Result<Self, KvDecodeError> {
+        let klen = r.u8()? as usize;
+        let vlen = r.u8()? as usize;
+        if !(MIN_KEY_LEN..=MAX_KEY_LEN).contains(&klen) {
+            return Err(KvDecodeError::BadKeyLen(klen));
+        }
+        let key = Key::new(r.take(klen)?);
+        let value = match vlen {
+            4 => r.u32()? as i32 as i64,
+            8 => r.i64()?,
+            other => return Err(KvDecodeError::BadValueLen(other)),
+        };
+        Ok(Self { key, value })
+    }
+}
+
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum KvDecodeError {
+    #[error("bad key length {0}")]
+    BadKeyLen(usize),
+    #[error("bad value length {0}")]
+    BadValueLen(usize),
+    #[error(transparent)]
+    Truncated(#[from] Truncated),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_equality_is_length_aware() {
+        let a = Key::new(b"abc");
+        let b = Key::new(b"abc\0");
+        assert_ne!(a, b);
+        assert_eq!(a, Key::new(b"abc"));
+    }
+
+    #[test]
+    fn key_from_id_distinct_and_stable() {
+        let a = Key::from_id(17, 16);
+        let b = Key::from_id(18, 16);
+        let a2 = Key::from_id(17, 16);
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_ne!(Key::from_id(17, 16), Key::from_id(17, 24));
+        assert_eq!(a.len(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn key_from_id_rejects_overflow() {
+        Key::from_id(300, 1);
+    }
+
+    #[test]
+    fn packed_words_layout() {
+        let k = Key::new(&[1, 0, 0, 0, 2, 0, 0, 0, 3]);
+        let w = k.packed_words(16);
+        assert_eq!(w, vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn kv_round_trip_various_lengths() {
+        for len in [1usize, 7, 8, 16, 33, 64] {
+            for val in [0i64, 1, -1, i32::MAX as i64, i32::MIN as i64, 1 << 40] {
+                let p = KvPair::new(Key::from_id(len as u64, len), val);
+                let mut buf = Vec::new();
+                p.encode(&mut buf);
+                assert_eq!(buf.len(), p.encoded_len());
+                let mut r = Reader::new(&buf);
+                let q = KvPair::decode(&mut r).unwrap();
+                assert_eq!(p, q, "len={len} val={val}");
+                assert!(r.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn small_values_use_4_bytes() {
+        let p = KvPair::new(Key::new(b"k"), 100);
+        assert_eq!(p.value_len(), 4);
+        assert_eq!(p.encoded_len(), 2 + 1 + 4);
+        let p = KvPair::new(Key::new(b"k"), 1 << 40);
+        assert_eq!(p.value_len(), 8);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        let buf = [0u8, 4, 0, 0, 0, 0]; // key len 0
+        assert_eq!(
+            KvPair::decode(&mut Reader::new(&buf)),
+            Err(KvDecodeError::BadKeyLen(0))
+        );
+        let buf = [1u8, 3, 7, 0, 0, 0]; // value len 3
+        assert_eq!(
+            KvPair::decode(&mut Reader::new(&buf)),
+            Err(KvDecodeError::BadValueLen(3))
+        );
+        let buf = [5u8, 4, 1, 2]; // truncated key
+        assert!(matches!(
+            KvPair::decode(&mut Reader::new(&buf)),
+            Err(KvDecodeError::Truncated(_))
+        ));
+    }
+}

@@ -1,0 +1,25 @@
+//! The SwitchAgg network protocol (§4.1, Table 1).
+//!
+//! Four packet types flow through the system: `Launch` (master →
+//! controller), `Configure` (controller → switch), `Ack` (type 0:
+//! controller ↔ master, type 1: controller ↔ switch) and `Aggregation`
+//! (workers → switches → reducer) carrying variable-length key-value
+//! pairs, each prefixed with a (key-length, value-length) metadata
+//! byte pair.  Normal traffic is modelled by `Data` packets.
+//!
+//! [`kv`] defines the key-value pair representation used throughout the
+//! repo (fixed-capacity inline keys — no allocation on the switch hot
+//! path), [`wire`] the little-endian codec helpers, [`packet`] the
+//! packet structures and their byte-level encode/decode.
+
+pub mod kv;
+pub mod packet;
+pub mod types;
+pub mod wire;
+
+pub use kv::{Key, KvPair, MAX_KEY_LEN, MIN_KEY_LEN};
+pub use packet::{
+    AckKind, AggregationPacket, ConfigurePacket, DataPacket, LaunchPacket, Packet, TreeConfig,
+    AGG_FIXED_LEN, HEADER_OVERHEAD, MAX_AGG_PAYLOAD, MTU,
+};
+pub use types::{AggOp, TreeId, Value};

@@ -1,0 +1,371 @@
+//! Packet formats (Table 1) and their byte-level codec.
+//!
+//! Every packet notionally rides a standard L2/L3 envelope; we model
+//! that as a fixed [`HEADER_OVERHEAD`] (58 B, the paper's TCP/IP
+//! figure) plus a 1-byte SwitchAgg packet-type tag.
+
+use super::kv::{KvDecodeError, KvPair};
+use super::types::{AggOp, TreeId};
+use super::wire::{self, Reader};
+
+/// Protocol header overhead per packet (Eq. 2 uses H = 58 B).
+pub const HEADER_OVERHEAD: usize = 58;
+
+/// Standard Ethernet MTU — SwitchAgg carries KV pairs in the payload,
+/// so packets use the full MTU (unlike RMT's ~200 B, §2.2.1).
+pub const MTU: usize = 1500;
+
+/// Maximum aggregation payload per packet (MTU minus envelope minus
+/// the aggregation packet's own fixed fields).
+pub const MAX_AGG_PAYLOAD: usize = MTU - HEADER_OVERHEAD - AGG_FIXED_LEN;
+
+/// TreeId(4) + op(1) + flags(1) + pair count(2).
+pub const AGG_FIXED_LEN: usize = 8;
+
+/// `Launch` — master → controller (Table 1): worker counts + addresses.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LaunchPacket {
+    pub mappers: Vec<u32>,
+    pub reducers: Vec<u32>,
+}
+
+/// Per-tree switch configuration (Table 1 `Configure`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TreeConfig {
+    pub tree: TreeId,
+    /// Number of children whose EoT must arrive before flush (§4.2.2).
+    pub children: u16,
+    /// Output port towards the tree parent.
+    pub parent_port: u8,
+    pub op: AggOp,
+}
+
+/// `Configure` — controller → switch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConfigurePacket {
+    pub trees: Vec<TreeConfig>,
+}
+
+/// `Ack` type 0 (controller ↔ master) / type 1 (controller ↔ switch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AckKind {
+    Master,
+    Switch,
+}
+
+/// `Aggregation` — the data packets (Table 1).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AggregationPacket {
+    pub tree: TreeId,
+    pub op: AggOp,
+    /// End-of-transmission: last packet of one worker's stream.
+    pub eot: bool,
+    pub pairs: Vec<KvPair>,
+}
+
+impl AggregationPacket {
+    /// Payload bytes (fixed fields + encoded pairs), excluding envelope.
+    pub fn payload_len(&self) -> usize {
+        AGG_FIXED_LEN + self.pairs.iter().map(|p| p.encoded_len()).sum::<usize>()
+    }
+
+    /// Total wire footprint including the L2/L3 envelope.
+    pub fn wire_len(&self) -> usize {
+        HEADER_OVERHEAD + self.payload_len()
+    }
+
+    /// Pack `pairs` into as few packets as fit the MTU, all sharing
+    /// `tree`/`op`; the final packet carries `eot`.
+    pub fn pack_stream(
+        tree: TreeId,
+        op: AggOp,
+        pairs: &[KvPair],
+        eot: bool,
+    ) -> Vec<AggregationPacket> {
+        let mut out = Vec::new();
+        let mut cur: Vec<KvPair> = Vec::new();
+        let mut cur_len = 0usize;
+        for &p in pairs {
+            let el = p.encoded_len();
+            if cur_len + el > MAX_AGG_PAYLOAD && !cur.is_empty() {
+                out.push(AggregationPacket {
+                    tree,
+                    op,
+                    eot: false,
+                    pairs: std::mem::take(&mut cur),
+                });
+                cur_len = 0;
+            }
+            cur_len += el;
+            cur.push(p);
+        }
+        if !cur.is_empty() || out.is_empty() {
+            out.push(AggregationPacket {
+                tree,
+                op,
+                eot: false,
+                pairs: cur,
+            });
+        }
+        if let Some(last) = out.last_mut() {
+            last.eot = eot;
+        }
+        out
+    }
+}
+
+/// Normal (non-aggregation) traffic: we only track its size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DataPacket {
+    pub payload_len: u32,
+}
+
+/// Any SwitchAgg packet.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Packet {
+    Launch(LaunchPacket),
+    Configure(ConfigurePacket),
+    Ack(AckKind),
+    Aggregation(AggregationPacket),
+    Data(DataPacket),
+}
+
+const TAG_LAUNCH: u8 = 1;
+const TAG_CONFIGURE: u8 = 2;
+const TAG_ACK0: u8 = 3;
+const TAG_ACK1: u8 = 4;
+const TAG_AGGREGATION: u8 = 5;
+const TAG_DATA: u8 = 6;
+
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum PacketDecodeError {
+    #[error("unknown packet tag {0}")]
+    UnknownTag(u8),
+    #[error("unknown aggregation op {0}")]
+    UnknownOp(u8),
+    #[error("kv pair: {0}")]
+    Kv(#[from] KvDecodeError),
+    #[error(transparent)]
+    Truncated(#[from] wire::Truncated),
+    #[error("trailing {0} bytes after packet")]
+    Trailing(usize),
+}
+
+impl Packet {
+    pub fn tag(&self) -> u8 {
+        match self {
+            Packet::Launch(_) => TAG_LAUNCH,
+            Packet::Configure(_) => TAG_CONFIGURE,
+            Packet::Ack(AckKind::Master) => TAG_ACK0,
+            Packet::Ack(AckKind::Switch) => TAG_ACK1,
+            Packet::Aggregation(_) => TAG_AGGREGATION,
+            Packet::Data(_) => TAG_DATA,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        wire::put_u8(&mut buf, self.tag());
+        match self {
+            Packet::Launch(l) => {
+                wire::put_u16(&mut buf, l.mappers.len() as u16);
+                wire::put_u16(&mut buf, l.reducers.len() as u16);
+                for &r in &l.reducers {
+                    wire::put_u32(&mut buf, r);
+                }
+                for &m in &l.mappers {
+                    wire::put_u32(&mut buf, m);
+                }
+            }
+            Packet::Configure(c) => {
+                wire::put_u16(&mut buf, c.trees.len() as u16);
+                for t in &c.trees {
+                    wire::put_u32(&mut buf, t.tree.0);
+                    wire::put_u16(&mut buf, t.children);
+                    wire::put_u8(&mut buf, t.parent_port);
+                    wire::put_u8(&mut buf, t.op.code());
+                }
+            }
+            Packet::Ack(_) => {}
+            Packet::Aggregation(a) => {
+                wire::put_u32(&mut buf, a.tree.0);
+                wire::put_u8(&mut buf, a.op.code());
+                wire::put_u8(&mut buf, a.eot as u8);
+                wire::put_u16(&mut buf, a.pairs.len() as u16);
+                for p in &a.pairs {
+                    p.encode(&mut buf);
+                }
+            }
+            Packet::Data(d) => {
+                wire::put_u32(&mut buf, d.payload_len);
+            }
+        }
+        buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, PacketDecodeError> {
+        let mut r = Reader::new(buf);
+        let tag = r.u8()?;
+        let pkt = match tag {
+            TAG_LAUNCH => {
+                let nm = r.u16()? as usize;
+                let nr = r.u16()? as usize;
+                let mut reducers = Vec::with_capacity(nr);
+                for _ in 0..nr {
+                    reducers.push(r.u32()?);
+                }
+                let mut mappers = Vec::with_capacity(nm);
+                for _ in 0..nm {
+                    mappers.push(r.u32()?);
+                }
+                Packet::Launch(LaunchPacket { mappers, reducers })
+            }
+            TAG_CONFIGURE => {
+                let n = r.u16()? as usize;
+                let mut trees = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let tree = TreeId(r.u32()?);
+                    let children = r.u16()?;
+                    let parent_port = r.u8()?;
+                    let op = r.u8()?;
+                    trees.push(TreeConfig {
+                        tree,
+                        children,
+                        parent_port,
+                        op: AggOp::from_code(op).ok_or(PacketDecodeError::UnknownOp(op))?,
+                    });
+                }
+                Packet::Configure(ConfigurePacket { trees })
+            }
+            TAG_ACK0 => Packet::Ack(AckKind::Master),
+            TAG_ACK1 => Packet::Ack(AckKind::Switch),
+            TAG_AGGREGATION => {
+                let tree = TreeId(r.u32()?);
+                let op_code = r.u8()?;
+                let op =
+                    AggOp::from_code(op_code).ok_or(PacketDecodeError::UnknownOp(op_code))?;
+                let eot = r.u8()? != 0;
+                let n = r.u16()? as usize;
+                let mut pairs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    pairs.push(KvPair::decode(&mut r)?);
+                }
+                Packet::Aggregation(AggregationPacket {
+                    tree,
+                    op,
+                    eot,
+                    pairs,
+                })
+            }
+            TAG_DATA => Packet::Data(DataPacket {
+                payload_len: r.u32()?,
+            }),
+            other => return Err(PacketDecodeError::UnknownTag(other)),
+        };
+        if !r.is_empty() {
+            return Err(PacketDecodeError::Trailing(r.remaining()));
+        }
+        Ok(pkt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::kv::Key;
+
+    fn sample_pairs(n: usize) -> Vec<KvPair> {
+        (0..n)
+            .map(|i| KvPair::new(Key::from_id(i as u64, 16 + (i % 49)), i as i64 * 3 - 5))
+            .collect()
+    }
+
+    #[test]
+    fn all_packet_kinds_round_trip() {
+        let pkts = vec![
+            Packet::Launch(LaunchPacket {
+                mappers: vec![10, 11, 12],
+                reducers: vec![20],
+            }),
+            Packet::Configure(ConfigurePacket {
+                trees: vec![
+                    TreeConfig {
+                        tree: TreeId(1),
+                        children: 3,
+                        parent_port: 2,
+                        op: AggOp::Sum,
+                    },
+                    TreeConfig {
+                        tree: TreeId(9),
+                        children: 1,
+                        parent_port: 0,
+                        op: AggOp::Max,
+                    },
+                ],
+            }),
+            Packet::Ack(AckKind::Master),
+            Packet::Ack(AckKind::Switch),
+            Packet::Aggregation(AggregationPacket {
+                tree: TreeId(7),
+                op: AggOp::Sum,
+                eot: true,
+                pairs: sample_pairs(5),
+            }),
+            Packet::Data(DataPacket { payload_len: 1400 }),
+        ];
+        for p in pkts {
+            let buf = p.encode();
+            assert_eq!(Packet::decode(&buf).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_unknown_tag_and_trailing() {
+        assert_eq!(
+            Packet::decode(&[99]),
+            Err(PacketDecodeError::UnknownTag(99))
+        );
+        let mut buf = Packet::Ack(AckKind::Master).encode();
+        buf.push(0);
+        assert_eq!(Packet::decode(&buf), Err(PacketDecodeError::Trailing(1)));
+    }
+
+    #[test]
+    fn pack_stream_respects_mtu_and_sets_eot_last() {
+        let pairs = sample_pairs(400);
+        let pkts = AggregationPacket::pack_stream(TreeId(1), AggOp::Sum, &pairs, true);
+        assert!(pkts.len() > 1);
+        let total: usize = pkts.iter().map(|p| p.pairs.len()).sum();
+        assert_eq!(total, 400);
+        for p in &pkts {
+            assert!(p.payload_len() <= MAX_AGG_PAYLOAD + AGG_FIXED_LEN);
+            assert!(p.wire_len() <= MTU + HEADER_OVERHEAD);
+        }
+        assert!(pkts.last().unwrap().eot);
+        assert!(pkts[..pkts.len() - 1].iter().all(|p| !p.eot));
+        // Order is preserved.
+        let flat: Vec<KvPair> = pkts.iter().flat_map(|p| p.pairs.clone()).collect();
+        assert_eq!(flat, pairs);
+    }
+
+    #[test]
+    fn pack_stream_empty_still_emits_eot_packet() {
+        let pkts = AggregationPacket::pack_stream(TreeId(1), AggOp::Sum, &[], true);
+        assert_eq!(pkts.len(), 1);
+        assert!(pkts[0].eot);
+        assert!(pkts[0].pairs.is_empty());
+    }
+
+    #[test]
+    fn agg_payload_len_matches_encoding() {
+        let a = AggregationPacket {
+            tree: TreeId(3),
+            op: AggOp::Min,
+            eot: false,
+            pairs: sample_pairs(17),
+        };
+        let encoded = Packet::Aggregation(a.clone()).encode();
+        // +1 for the packet tag, which payload_len excludes.
+        assert_eq!(encoded.len(), a.payload_len() + 1);
+    }
+}

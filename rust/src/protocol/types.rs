@@ -1,0 +1,119 @@
+//! Core protocol scalar types.
+
+/// Identifies one aggregation tree; a switch may serve several
+/// concurrently (memory is partitioned among them, §4.2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TreeId(pub u32);
+
+impl std::fmt::Display for TreeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tree{}", self.0)
+    }
+}
+
+/// Aggregated values.  The paper fixes values to a 32-bit integer on
+/// the wire (§4.2.3); in software we accumulate in i64 and saturate at
+/// the 32-bit boundary only where the hardware model requires it.
+pub type Value = i64;
+
+/// Aggregation operations supported by the aggregation unit (§4.2.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AggOp {
+    Sum,
+    Max,
+    Min,
+}
+
+impl AggOp {
+    /// Identity element: what an empty slot holds.
+    pub fn identity(self) -> Value {
+        match self {
+            AggOp::Sum => 0,
+            AggOp::Max => Value::MIN,
+            AggOp::Min => Value::MAX,
+        }
+    }
+
+    /// Combine two values.  SUM saturates rather than wrapping so a
+    /// software overflow cannot silently corrupt counts.
+    #[inline]
+    pub fn combine(self, a: Value, b: Value) -> Value {
+        match self {
+            AggOp::Sum => a.saturating_add(b),
+            AggOp::Max => a.max(b),
+            AggOp::Min => a.min(b),
+        }
+    }
+
+    pub fn code(self) -> u8 {
+        match self {
+            AggOp::Sum => 0,
+            AggOp::Max => 1,
+            AggOp::Min => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Self> {
+        match c {
+            0 => Some(AggOp::Sum),
+            1 => Some(AggOp::Max),
+            2 => Some(AggOp::Min),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [AggOp; 3] = [AggOp::Sum, AggOp::Max, AggOp::Min];
+}
+
+impl std::fmt::Display for AggOp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            AggOp::Sum => "sum",
+            AggOp::Max => "max",
+            AggOp::Min => "min",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_neutral() {
+        for op in AggOp::ALL {
+            for v in [-5, 0, 7, 12345] {
+                assert_eq!(op.combine(op.identity(), v), v, "{op}");
+                assert_eq!(op.combine(v, op.identity()), v, "{op}");
+            }
+        }
+    }
+
+    #[test]
+    fn ops_commute_and_associate() {
+        for op in AggOp::ALL {
+            for (a, b, c) in [(1, 2, 3), (-10, 5, 0), (100, -100, 42)] {
+                assert_eq!(op.combine(a, b), op.combine(b, a));
+                assert_eq!(
+                    op.combine(op.combine(a, b), c),
+                    op.combine(a, op.combine(b, c))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sum_saturates_instead_of_wrapping() {
+        assert_eq!(AggOp::Sum.combine(Value::MAX, 1), Value::MAX);
+        assert_eq!(AggOp::Sum.combine(Value::MIN, -1), Value::MIN);
+    }
+
+    #[test]
+    fn op_codes_round_trip() {
+        for op in AggOp::ALL {
+            assert_eq!(AggOp::from_code(op.code()), Some(op));
+        }
+        assert_eq!(AggOp::from_code(9), None);
+    }
+}

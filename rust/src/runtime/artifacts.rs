@@ -1,0 +1,169 @@
+//! Artifact discovery and manifest parsing.
+//!
+//! `make artifacts` writes `artifacts/manifest.tsv` next to the
+//! `*.hlo.txt` modules; this module parses it (line-oriented — the
+//! offline crate set has no serde) and validates that the shapes the
+//! Rust side assumes match what Python lowered.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One entry point's argument signature.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub table_size: usize,
+    pub batch_size: usize,
+    pub key_words: usize,
+    pub entries: BTreeMap<String, (String, Vec<ArgSpec>)>,
+}
+
+/// Manifest + directory = resolvable artifact files.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub manifest: ArtifactManifest,
+}
+
+impl ArtifactManifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut table_size = None;
+        let mut batch_size = None;
+        let mut key_words = None;
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            let ctx = || format!("manifest line {}", lineno + 1);
+            match fields[0] {
+                "table_size" => table_size = Some(fields[1].parse().with_context(ctx)?),
+                "batch_size" => batch_size = Some(fields[1].parse().with_context(ctx)?),
+                "key_words" => key_words = Some(fields[1].parse().with_context(ctx)?),
+                "entry" => {
+                    if fields.len() != 4 {
+                        bail!("{}: expected 4 fields, got {}", ctx(), fields.len());
+                    }
+                    let args = fields[3]
+                        .split(';')
+                        .map(|a| {
+                            let (dtype, shape) = a
+                                .split_once(':')
+                                .ok_or_else(|| anyhow!("{}: bad arg spec {a:?}", ctx()))?;
+                            let shape = shape
+                                .split(',')
+                                .filter(|s| !s.is_empty())
+                                .map(|d| d.parse::<usize>().map_err(|e| anyhow!("{e}")))
+                                .collect::<Result<Vec<_>>>()?;
+                            Ok(ArgSpec {
+                                dtype: dtype.to_string(),
+                                shape,
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    entries.insert(
+                        fields[1].to_string(),
+                        (fields[2].to_string(), args),
+                    );
+                }
+                other => bail!("{}: unknown record {other:?}", ctx()),
+            }
+        }
+        Ok(Self {
+            table_size: table_size.ok_or_else(|| anyhow!("manifest missing table_size"))?,
+            batch_size: batch_size.ok_or_else(|| anyhow!("manifest missing batch_size"))?,
+            key_words: key_words.ok_or_else(|| anyhow!("manifest missing key_words"))?,
+            entries,
+        })
+    }
+}
+
+impl ArtifactSet {
+    /// Load from a directory containing `manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = ArtifactManifest::parse(&text)?;
+        for (name, (file, _)) in &manifest.entries {
+            let p = dir.join(file);
+            if !p.exists() {
+                bail!("artifact {name}: missing file {}", p.display());
+            }
+        }
+        Ok(Self { dir, manifest })
+    }
+
+    /// Locate the artifacts directory: `$SWITCHAGG_ARTIFACTS`, then
+    /// `./artifacts`, then the repo root relative to the executable.
+    pub fn discover() -> Result<Self> {
+        if let Ok(dir) = std::env::var("SWITCHAGG_ARTIFACTS") {
+            return Self::load(dir);
+        }
+        for candidate in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(candidate).join("manifest.tsv").exists() {
+                return Self::load(candidate);
+            }
+        }
+        bail!(
+            "no artifacts found: run `make artifacts` or set SWITCHAGG_ARTIFACTS"
+        )
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let (file, _) = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact entry {name:?}"))?;
+        Ok(self.dir.join(file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "table_size\t65536\nbatch_size\t1024\nkey_words\t16\n\
+entry\tagg_sum_f32\tagg_sum_f32.hlo.txt\tfloat32:65536;int32:1024;float32:1024\n\
+entry\thash_fnv\thash_fnv.hlo.txt\tuint32:1024,16\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.table_size, 65536);
+        assert_eq!(m.batch_size, 1024);
+        assert_eq!(m.key_words, 16);
+        let (file, args) = &m.entries["agg_sum_f32"];
+        assert_eq!(file, "agg_sum_f32.hlo.txt");
+        assert_eq!(args.len(), 3);
+        assert_eq!(args[0].dtype, "float32");
+        assert_eq!(args[0].shape, vec![65536]);
+        let (_, hargs) = &m.entries["hash_fnv"];
+        assert_eq!(hargs[0].shape, vec![1024, 16]);
+    }
+
+    #[test]
+    fn missing_header_is_error() {
+        assert!(ArtifactManifest::parse("entry\tx\ty\tz:1").is_err());
+        assert!(ArtifactManifest::parse("table_size\t1\nbatch_size\t2\n").is_err());
+    }
+
+    #[test]
+    fn bad_records_are_errors() {
+        let bad = "table_size\t1\nbatch_size\t2\nkey_words\t3\nwhat\t?\n";
+        assert!(ArtifactManifest::parse(bad).is_err());
+        let bad2 = "table_size\t1\nbatch_size\t2\nkey_words\t3\nentry\tn\tf\n";
+        assert!(ArtifactManifest::parse(bad2).is_err());
+    }
+}

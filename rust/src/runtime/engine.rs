@@ -1,0 +1,160 @@
+//! The PJRT aggregation engine: compiles the AOT HLO-text modules once
+//! and executes them with concrete batches.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  All entry points were lowered with
+//! `return_tuple=True`, so results unwrap with `to_tuple1`.
+
+use crate::protocol::AggOp;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+use super::artifacts::ArtifactSet;
+
+/// Compiled entry points over one PJRT CPU client.
+pub struct AggEngine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub table_size: usize,
+    pub batch_size: usize,
+    pub key_words: usize,
+    /// Number of XLA executions performed (perf accounting).
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl AggEngine {
+    /// Compile every artifact in the set.
+    pub fn load(set: &ArtifactSet) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for name in set.manifest.entries.keys() {
+            let path = set.hlo_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Self {
+            client,
+            exes,
+            table_size: set.manifest.table_size,
+            batch_size: set.manifest.batch_size,
+            key_words: set.manifest.key_words,
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Discover artifacts and load (convenience).
+    pub fn discover() -> Result<Self> {
+        Self::load(&ArtifactSet::discover()?)
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Pick the fastest available implementation for an aggregate
+    /// entry: the `*_xla` scatter twin on the CPU client unless
+    /// `SWITCHAGG_KERNEL=pallas` forces the Pallas artifact.
+    fn resolve<'a>(&self, name: &'a str) -> String {
+        if std::env::var("SWITCHAGG_KERNEL").as_deref() == Ok("pallas") {
+            return name.to_string();
+        }
+        let fast = format!("{name}_xla");
+        if self.exes.contains_key(&fast) {
+            fast
+        } else {
+            name.to_string()
+        }
+    }
+
+    fn run1(&self, name: &str, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("engine has no entry {name:?}"))?;
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        self.executions.set(self.executions.get() + 1);
+        Ok(result.to_tuple1()?)
+    }
+
+    /// f32 scatter-aggregate: `table[idx[i]] op= vals[i]`.
+    /// `idx < 0` marks padding lanes.  Shapes must match the manifest.
+    pub fn aggregate_f32(
+        &self,
+        op: AggOp,
+        table: &[f32],
+        idx: &[i32],
+        vals: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.check_shapes(table.len(), idx.len(), vals.len())?;
+        let name = self.resolve(match op {
+            AggOp::Sum => "agg_sum_f32",
+            AggOp::Max => "agg_max_f32",
+            AggOp::Min => "agg_min_f32",
+        });
+        let out = self.run1(
+            &name,
+            &[
+                xla::Literal::vec1(table),
+                xla::Literal::vec1(idx),
+                xla::Literal::vec1(vals),
+            ],
+        )?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// i32 segment-SUM (WordCount counts).
+    pub fn aggregate_sum_i32(
+        &self,
+        table: &[i32],
+        idx: &[i32],
+        vals: &[i32],
+    ) -> Result<Vec<i32>> {
+        self.check_shapes(table.len(), idx.len(), vals.len())?;
+        let out = self.run1(
+            &self.resolve("agg_sum_i32"),
+            &[
+                xla::Literal::vec1(table),
+                xla::Literal::vec1(idx),
+                xla::Literal::vec1(vals),
+            ],
+        )?;
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// FNV-1a-32 over packed key words: `words` is row-major
+    /// `[batch_size][key_words]`.
+    pub fn hash_keys(&self, words: &[u32]) -> Result<Vec<u32>> {
+        if words.len() != self.batch_size * self.key_words {
+            bail!(
+                "hash batch must be {}x{} words, got {}",
+                self.batch_size,
+                self.key_words,
+                words.len()
+            );
+        }
+        let lit = xla::Literal::vec1(words)
+            .reshape(&[self.batch_size as i64, self.key_words as i64])?;
+        let out = self.run1("hash_fnv", &[lit])?;
+        Ok(out.to_vec::<u32>()?)
+    }
+
+    fn check_shapes(&self, t: usize, i: usize, v: usize) -> Result<()> {
+        if t != self.table_size || i != self.batch_size || v != self.batch_size {
+            bail!(
+                "shape mismatch: table {t} (want {}), idx {i} / vals {v} (want {})",
+                self.table_size,
+                self.batch_size
+            );
+        }
+        Ok(())
+    }
+}

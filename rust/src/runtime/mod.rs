@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes the JAX/Pallas aggregation
+//! kernels from Rust.  Python never runs on the request path — after
+//! `make artifacts` the binary is self-contained.
+//!
+//! * [`artifacts`] — locate + parse the artifact manifest.
+//! * [`engine`] — compile the HLO modules on the PJRT CPU client and
+//!   expose typed `aggregate`/`hash` entry points.
+//! * [`table`] — the slot-table reducer built on the engine: exact-key
+//!   slot assignment in Rust, dense batched aggregation in XLA.
+
+pub mod artifacts;
+pub mod engine;
+pub mod table;
+
+pub use artifacts::{ArtifactManifest, ArtifactSet};
+pub use engine::AggEngine;
+pub use table::XlaAggregator;

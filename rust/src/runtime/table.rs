@@ -1,0 +1,125 @@
+//! XLA-backed aggregator: the reducer's merge hot path.
+//!
+//! Division of labour: Rust owns *exact-key* residency (a hash map
+//! from key to dense slot id — the part that needs pointer-chasing),
+//! XLA owns the *dense math* (batched segment aggregation into the
+//! slot table — the part the Pallas kernel turns into streaming
+//! matmuls).  Incoming pairs are staged into fixed-size batches; each
+//! full batch is one PJRT execution.  When the slot table fills, a new
+//! epoch (table) is opened — results merge across epochs at drain.
+
+use crate::protocol::{AggOp, Key, KvPair, Value};
+use anyhow::Result;
+use std::collections::HashMap;
+
+use super::engine::AggEngine;
+
+/// Batched, epoch-spilling aggregator over the engine.
+pub struct XlaAggregator<'e> {
+    engine: &'e AggEngine,
+    op: AggOp,
+    /// Key → (epoch, slot).
+    slots: HashMap<Key, (usize, usize)>,
+    /// One dense table per epoch.
+    tables: Vec<Vec<f32>>,
+    next_slot: usize,
+    // Staged batch (per current epoch — a batch never spans epochs).
+    batch_epoch: usize,
+    idx: Vec<i32>,
+    vals: Vec<f32>,
+    pub pairs_in: u64,
+    pub batches_run: u64,
+}
+
+impl<'e> XlaAggregator<'e> {
+    pub fn new(engine: &'e AggEngine, op: AggOp) -> Self {
+        let identity = match op {
+            AggOp::Sum => 0.0f32,
+            AggOp::Max => f32::NEG_INFINITY,
+            AggOp::Min => f32::INFINITY,
+        };
+        Self {
+            engine,
+            op,
+            slots: HashMap::new(),
+            tables: vec![vec![identity; engine.table_size]],
+            next_slot: 0,
+            batch_epoch: 0,
+            idx: Vec::with_capacity(engine.batch_size),
+            vals: Vec::with_capacity(engine.batch_size),
+            pairs_in: 0,
+            batches_run: 0,
+        }
+    }
+
+    fn identity(&self) -> f32 {
+        match self.op {
+            AggOp::Sum => 0.0,
+            AggOp::Max => f32::NEG_INFINITY,
+            AggOp::Min => f32::INFINITY,
+        }
+    }
+
+    /// Stage one pair; runs a batch when full.
+    pub fn offer(&mut self, p: KvPair) -> Result<()> {
+        self.pairs_in += 1;
+        let (epoch, slot) = match self.slots.get(&p.key) {
+            Some(&es) => es,
+            None => {
+                let epoch = self.next_slot / self.engine.table_size;
+                let slot = self.next_slot % self.engine.table_size;
+                if epoch == self.tables.len() {
+                    let id = self.identity();
+                    self.tables.push(vec![id; self.engine.table_size]);
+                }
+                self.next_slot += 1;
+                self.slots.insert(p.key, (epoch, slot));
+                (epoch, slot)
+            }
+        };
+        if epoch != self.batch_epoch && !self.idx.is_empty() {
+            self.flush_batch()?;
+        }
+        self.batch_epoch = epoch;
+        self.idx.push(slot as i32);
+        self.vals.push(p.value as f32);
+        if self.idx.len() == self.engine.batch_size {
+            self.flush_batch()?;
+        }
+        Ok(())
+    }
+
+    /// Run the staged batch through the XLA executable (padding with
+    /// idx = -1 lanes, which the kernel treats as identity).
+    fn flush_batch(&mut self) -> Result<()> {
+        if self.idx.is_empty() {
+            return Ok(());
+        }
+        self.idx.resize(self.engine.batch_size, -1);
+        self.vals.resize(self.engine.batch_size, 0.0);
+        let table = &self.tables[self.batch_epoch];
+        let new = self
+            .engine
+            .aggregate_f32(self.op, table, &self.idx, &self.vals)?;
+        self.tables[self.batch_epoch] = new;
+        self.idx.clear();
+        self.vals.clear();
+        self.batches_run += 1;
+        Ok(())
+    }
+
+    /// Finish and return the aggregated pairs.
+    pub fn drain(mut self) -> Result<Vec<KvPair>> {
+        self.flush_batch()?;
+        let mut out = Vec::with_capacity(self.slots.len());
+        for (key, (epoch, slot)) in self.slots.iter() {
+            let v = self.tables[*epoch][*slot];
+            out.push(KvPair::new(*key, v as Value));
+        }
+        Ok(out)
+    }
+
+    pub fn distinct_keys(&self) -> usize {
+        self.slots.len()
+    }
+}

@@ -1,0 +1,136 @@
+//! Bounded FIFO with write/full counters.
+//!
+//! Table 2 of the paper measures line-rate capability by counting, per
+//! processing-engine input FIFO, how many times the FIFO was written
+//! and how many times it was found full.  This FIFO exposes exactly
+//! those counters.
+
+use std::collections::VecDeque;
+
+#[derive(Clone, Debug)]
+pub struct Fifo<T> {
+    cap: usize,
+    q: VecDeque<T>,
+    writes: u64,
+    full_events: u64,
+    max_occupancy: usize,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "FIFO capacity must be > 0");
+        Self {
+            cap,
+            q: VecDeque::with_capacity(cap),
+            writes: 0,
+            full_events: 0,
+            max_occupancy: 0,
+        }
+    }
+
+    /// Attempt to enqueue.  A refused push counts a full event (the
+    /// producer must stall and retry — backpressure).
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        if self.q.len() >= self.cap {
+            self.full_events += 1;
+            return Err(item);
+        }
+        self.q.push_back(item);
+        self.writes += 1;
+        self.max_occupancy = self.max_occupancy.max(self.q.len());
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.q.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.q.front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.cap
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Successful writes (Table 2 "Written Times").
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// Refused pushes (Table 2 "FIFO-Full times").
+    pub fn full_events(&self) -> u64 {
+        self.full_events
+    }
+
+    /// Table 2 "Full-time ratio".
+    pub fn full_ratio(&self) -> f64 {
+        if self.writes == 0 {
+            0.0
+        } else {
+            self.full_events as f64 / self.writes as f64
+        }
+    }
+
+    pub fn max_occupancy(&self) -> usize {
+        self.max_occupancy
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.writes = 0;
+        self.full_events = 0;
+        self.max_occupancy = self.q.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_counters() {
+        let mut f = Fifo::new(2);
+        assert!(f.push(1).is_ok());
+        assert!(f.push(2).is_ok());
+        assert!(f.is_full());
+        assert_eq!(f.push(3), Err(3));
+        assert_eq!(f.writes(), 2);
+        assert_eq!(f.full_events(), 1);
+        assert_eq!(f.pop(), Some(1));
+        assert!(f.push(3).is_ok());
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), Some(3));
+        assert_eq!(f.pop(), None);
+        assert_eq!(f.max_occupancy(), 2);
+    }
+
+    #[test]
+    fn full_ratio_matches_counts() {
+        let mut f = Fifo::new(1);
+        f.push(0u32).unwrap();
+        for _ in 0..3 {
+            let _ = f.push(1);
+        }
+        assert!((f.full_ratio() - 3.0).abs() < 1e-12);
+        f.reset_counters();
+        assert_eq!(f.full_ratio(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_rejected() {
+        let _ = Fifo::<u8>::new(0);
+    }
+}

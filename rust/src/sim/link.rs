@@ -1,0 +1,60 @@
+//! Link timing: serialization delay over the testbed's 10 Gbps ports.
+
+/// A point-to-point link of fixed rate.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    bits_per_sec: f64,
+}
+
+impl Link {
+    pub fn new_gbps(gbps: f64) -> Self {
+        assert!(gbps > 0.0);
+        Self {
+            bits_per_sec: gbps * 1e9,
+        }
+    }
+
+    /// The testbed's 10GbE SFP+ ports (§5).
+    pub fn ten_gbe() -> Self {
+        Self::new_gbps(10.0)
+    }
+
+    pub fn gbps(&self) -> f64 {
+        self.bits_per_sec / 1e9
+    }
+
+    pub fn bytes_per_sec(&self) -> f64 {
+        self.bits_per_sec / 8.0
+    }
+
+    /// Seconds to serialize `bytes` onto the wire.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 / self.bits_per_sec
+    }
+
+    /// Seconds for `flows` equal flows sharing this link to all finish
+    /// (fluid model: fair sharing, all start together).
+    pub fn shared_transfer_secs(&self, bytes_per_flow: u64, flows: usize) -> f64 {
+        self.transfer_secs(bytes_per_flow) * flows as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_gbe_rates() {
+        let l = Link::ten_gbe();
+        assert!((l.bytes_per_sec() - 1.25e9).abs() < 1.0);
+        // 1.25 GB in 1 second.
+        assert!((l.transfer_secs(1_250_000_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sharing_scales_linearly() {
+        let l = Link::ten_gbe();
+        let one = l.transfer_secs(1 << 30);
+        assert!((l.shared_transfer_secs(1 << 30, 3) - 3.0 * one).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,20 @@
+//! Simulation substrate: the timing primitives the switch data-plane
+//! model is built from.
+//!
+//! The prototype hardware (§5) is a NetFPGA-SUME: 200 MHz clock,
+//! 128-bit (16-byte) datapath beats, on-chip BRAM (1-cycle), DDR3 DRAM
+//! (~25-cycle latency) behind a command-buffering memory controller,
+//! and 10 Gbps ports.  These modules reproduce those components at
+//! transaction level with cycle accounting — accurate enough to
+//! regenerate Table 2 (FIFO-full ratios) and Table 3 (stage delays)
+//! while simulating multi-gigabyte (scaled) workloads in seconds.
+
+pub mod clock;
+pub mod dram;
+pub mod fifo;
+pub mod link;
+
+pub use clock::{Cycles, BEAT_BYTES, CLOCK_HZ};
+pub use dram::DramModel;
+pub use fifo::Fifo;
+pub use link::Link;

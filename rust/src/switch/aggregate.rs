@@ -1,0 +1,39 @@
+//! The aggregation unit (§4.2.4): `<Operation, Value1, Value2> →
+//! result`, supporting SUM / MAX / MIN.  A thin, instrumented wrapper
+//! over [`AggOp::combine`] so engines can report operation counts.
+
+use crate::protocol::{AggOp, Value};
+
+/// Aggregation ALU with an operation counter.
+#[derive(Clone, Debug, Default)]
+pub struct AggregationUnit {
+    pub ops_executed: u64,
+}
+
+impl AggregationUnit {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Combine two values under `op` (commutative + associative, which
+    /// is what makes in-network execution legal, §2.1).
+    #[inline]
+    pub fn execute(&mut self, op: AggOp, v1: Value, v2: Value) -> Value {
+        self.ops_executed += 1;
+        op.combine(v1, v2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executes_and_counts() {
+        let mut u = AggregationUnit::new();
+        assert_eq!(u.execute(AggOp::Sum, 2, 3), 5);
+        assert_eq!(u.execute(AggOp::Max, 2, 3), 3);
+        assert_eq!(u.execute(AggOp::Min, 2, 3), 2);
+        assert_eq!(u.ops_executed, 3);
+    }
+}

@@ -1,0 +1,303 @@
+//! Switch configuration: static hardware parameters (§5) and the
+//! configuration module's per-tree state (§4.2.2).
+
+use crate::protocol::{TreeConfig, TreeId};
+use crate::sim::dram::DramConfig;
+use crate::sim::Cycles;
+use std::collections::BTreeMap;
+
+/// Where an FPE sends a pair displaced by a hash collision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Paper behaviour: the *resident* pair is evicted and forwarded;
+    /// the incoming pair takes its slot (keeps hot keys resident under
+    /// skew because the newcomer is the recent arrival).
+    EvictOld,
+    /// Ablation: the incoming pair is forwarded, residents stay.
+    ForwardNew,
+}
+
+/// Pipeline stage latencies in cycles (Table 3).  These are latencies;
+/// the pipelined engines *accept* one pair per [`SwitchConfig::fpe_interval`]
+/// cycles ("search and aggregation can be done in two clock cycles
+/// without any pipeline stall", §4.2.4).
+#[derive(Clone, Copy, Debug)]
+pub struct StageDelays {
+    pub header_analyzer: Cycles,
+    pub crossbar: Cycles,
+    pub fpe_hash: Cycles,
+    pub fpe_aggregate: Cycles,
+    pub fpe_forward: Cycles,
+    pub bpe_aggregate: Cycles,
+}
+
+impl Default for StageDelays {
+    fn default() -> Self {
+        // Table 3 of the paper.
+        Self {
+            header_analyzer: 3,
+            crossbar: 2,
+            fpe_hash: 10,
+            fpe_aggregate: 18,
+            fpe_forward: 5,
+            bpe_aggregate: 33,
+        }
+    }
+}
+
+impl StageDelays {
+    /// End-to-end latency of one pair that hits in the FPE.
+    pub fn fpe_hit_latency(&self) -> Cycles {
+        self.header_analyzer + self.crossbar + self.fpe_hash + self.fpe_aggregate
+    }
+
+    /// End-to-end latency of one pair that misses in the FPE and is
+    /// digested by the BPE.
+    pub fn bpe_path_latency(&self) -> Cycles {
+        self.fpe_hit_latency() + self.fpe_forward + self.bpe_aggregate
+    }
+}
+
+/// Static data-plane parameters (prototype values from §5).
+#[derive(Clone, Debug)]
+pub struct SwitchConfig {
+    /// Number of key-length groups / FPEs (§5: eight groups).
+    pub n_groups: usize,
+    /// Group width step in bytes (§5: groups span 8..=64 B by 8).
+    pub key_base: usize,
+    /// Total FPE BRAM across all groups (evaluation: 4–32 MB).
+    pub fpe_total_mem: u64,
+    /// Hash slots per bucket in FPE tables.
+    pub fpe_slots_per_bucket: usize,
+    /// BPE DRAM capacity; `None` disables the multi-level hierarchy
+    /// (fig9 "S-x MB" rows).
+    pub bpe_mem: Option<u64>,
+    pub bpe_slots_per_bucket: usize,
+    pub dram: DramConfig,
+    /// Input FIFO depth per processing engine (in pairs).
+    pub fifo_cap: usize,
+    pub eviction: EvictionPolicy,
+    pub delays: StageDelays,
+    /// Cycles between pair acceptances in an FPE (pipelined interval).
+    pub fpe_interval: Cycles,
+    /// Cycles between pair acceptances in the BPE (2 DRAM commands
+    /// per pair at the controller's service interval).
+    pub bpe_interval: Cycles,
+}
+
+impl Default for SwitchConfig {
+    fn default() -> Self {
+        Self {
+            n_groups: 8,
+            key_base: 8,
+            fpe_total_mem: 16 << 20,
+            fpe_slots_per_bucket: 2,
+            bpe_mem: Some(8 << 30),
+            bpe_slots_per_bucket: 4,
+            dram: DramConfig::default(),
+            fifo_cap: 64,
+            eviction: EvictionPolicy::EvictOld,
+            delays: StageDelays::default(),
+            fpe_interval: 2,
+            bpe_interval: 4,
+        }
+    }
+}
+
+impl SwitchConfig {
+    /// Evaluation-scale config: everything shrunk by `scale` with the
+    /// paper's ratios preserved (see DESIGN.md §Hardware substitution).
+    pub fn scaled(fpe_total_mem: u64, bpe_mem: Option<u64>) -> Self {
+        Self {
+            fpe_total_mem,
+            bpe_mem,
+            ..Self::default()
+        }
+    }
+
+    /// Max key bytes supported (§5: 64 B).
+    pub fn max_key_len(&self) -> usize {
+        self.n_groups * self.key_base
+    }
+
+    /// Slot width (padded key bytes) of group `g`.
+    pub fn group_width(&self, g: usize) -> usize {
+        (g + 1) * self.key_base
+    }
+}
+
+/// Memory partitioning policy among concurrent trees.
+///
+/// §4.2.2 divides evenly; §7 "Memory Utilization" observes that this
+/// is suboptimal when one tree has much more data and proposes letting
+/// the application provide demand hints — implemented here as weighted
+/// shares.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum MemoryPolicy {
+    /// Paper default: equal shares.
+    #[default]
+    Even,
+    /// Future-work variant: shares proportional to announced demand
+    /// weights (a missing weight counts as 1).
+    Weighted,
+}
+
+/// Runtime state of the configuration module: per-tree child counts,
+/// parent ports and the memory share (§4.2.2: memory is divided evenly
+/// among trees).
+#[derive(Clone, Debug, Default)]
+pub struct ConfigModule {
+    trees: BTreeMap<TreeId, TreeConfig>,
+    weights: BTreeMap<TreeId, u64>,
+    pub policy: MemoryPolicy,
+}
+
+impl ConfigModule {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Apply a Configure packet; replaces previous config for listed
+    /// trees.  Returns the number of trees now configured.
+    pub fn apply(&mut self, trees: &[TreeConfig]) -> usize {
+        for t in trees {
+            self.trees.insert(t.tree, t.clone());
+        }
+        self.trees.len()
+    }
+
+    pub fn remove(&mut self, tree: TreeId) -> Option<TreeConfig> {
+        self.trees.remove(&tree)
+    }
+
+    pub fn get(&self, tree: TreeId) -> Option<&TreeConfig> {
+        self.trees.get(&tree)
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    pub fn tree_ids(&self) -> impl Iterator<Item = TreeId> + '_ {
+        self.trees.keys().copied()
+    }
+
+    /// Memory share of one tree: total divided evenly (§4.2.2).
+    pub fn memory_share(&self, total: u64) -> u64 {
+        if self.trees.is_empty() {
+            total
+        } else {
+            total / self.trees.len() as u64
+        }
+    }
+
+    /// Announce a tree's relative memory demand (application hint, §7).
+    pub fn set_weight(&mut self, tree: TreeId, weight: u64) {
+        self.weights.insert(tree, weight.max(1));
+    }
+
+    /// Share of `total` for `tree` under the active policy.
+    pub fn memory_share_for(&self, tree: TreeId, total: u64) -> u64 {
+        match self.policy {
+            MemoryPolicy::Even => self.memory_share(total),
+            MemoryPolicy::Weighted => {
+                let w = |t: &TreeId| *self.weights.get(t).unwrap_or(&1);
+                let sum: u64 = self.trees.keys().map(w).sum();
+                if sum == 0 {
+                    self.memory_share(total)
+                } else {
+                    total * w(&tree) / sum
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::AggOp;
+
+    #[test]
+    fn default_matches_prototype() {
+        let c = SwitchConfig::default();
+        assert_eq!(c.n_groups, 8);
+        assert_eq!(c.max_key_len(), 64);
+        assert_eq!(c.group_width(0), 8);
+        assert_eq!(c.group_width(7), 64);
+        assert_eq!(c.delays.header_analyzer, 3);
+        assert_eq!(c.delays.bpe_aggregate, 33);
+    }
+
+    #[test]
+    fn table3_latencies_compose() {
+        let d = StageDelays::default();
+        assert_eq!(d.fpe_hit_latency(), 3 + 2 + 10 + 18); // 33
+        assert_eq!(d.bpe_path_latency(), 33 + 5 + 33); // 71
+    }
+
+    #[test]
+    fn config_module_partitions_memory_evenly() {
+        let mut m = ConfigModule::new();
+        assert_eq!(m.memory_share(100), 100);
+        m.apply(&[
+            TreeConfig {
+                tree: TreeId(1),
+                children: 3,
+                parent_port: 0,
+                op: AggOp::Sum,
+            },
+            TreeConfig {
+                tree: TreeId(2),
+                children: 2,
+                parent_port: 1,
+                op: AggOp::Max,
+            },
+        ]);
+        assert_eq!(m.n_trees(), 2);
+        assert_eq!(m.memory_share(100), 50);
+        assert_eq!(m.get(TreeId(1)).unwrap().children, 3);
+        m.remove(TreeId(1));
+        assert_eq!(m.memory_share(100), 100);
+    }
+
+    #[test]
+    fn weighted_policy_respects_demand_hints() {
+        let mut m = ConfigModule {
+            policy: MemoryPolicy::Weighted,
+            ..ConfigModule::new()
+        };
+        let mk = |id| TreeConfig {
+            tree: TreeId(id),
+            children: 1,
+            parent_port: 0,
+            op: AggOp::Sum,
+        };
+        m.apply(&[mk(1), mk(2)]);
+        // No hints: equal split.
+        assert_eq!(m.memory_share_for(TreeId(1), 100), 50);
+        // Tree 1 announces 3x the demand of tree 2.
+        m.set_weight(TreeId(1), 3);
+        m.set_weight(TreeId(2), 1);
+        assert_eq!(m.memory_share_for(TreeId(1), 100), 75);
+        assert_eq!(m.memory_share_for(TreeId(2), 100), 25);
+        // Even policy ignores weights.
+        m.policy = MemoryPolicy::Even;
+        assert_eq!(m.memory_share_for(TreeId(1), 100), 50);
+    }
+
+    #[test]
+    fn reapply_replaces() {
+        let mut m = ConfigModule::new();
+        let mk = |children| TreeConfig {
+            tree: TreeId(1),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        };
+        m.apply(&[mk(3)]);
+        m.apply(&[mk(5)]);
+        assert_eq!(m.n_trees(), 1);
+        assert_eq!(m.get(TreeId(1)).unwrap().children, 5);
+    }
+}

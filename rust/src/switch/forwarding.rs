@@ -1,0 +1,77 @@
+//! Routing + forwarding module (§4.2.1): L2/L3 table lookup for normal
+//! packets, aggregation-tree parent port for aggregation packets.
+
+use crate::net::{NodeId, PortId};
+use crate::protocol::TreeId;
+use std::collections::BTreeMap;
+
+/// Static routing table: destination node → output port, disseminated
+/// by the controller (§4.1 "Routing").
+#[derive(Clone, Debug, Default)]
+pub struct Forwarding {
+    routes: BTreeMap<NodeId, PortId>,
+    tree_parent: BTreeMap<TreeId, PortId>,
+    pub forwarded: u64,
+    pub dropped: u64,
+}
+
+impl Forwarding {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn install_route(&mut self, dst: NodeId, port: PortId) {
+        self.routes.insert(dst, port);
+    }
+
+    pub fn install_tree_parent(&mut self, tree: TreeId, port: PortId) {
+        self.tree_parent.insert(tree, port);
+    }
+
+    /// Output port for a normal packet.
+    pub fn lookup(&mut self, dst: NodeId) -> Option<PortId> {
+        match self.routes.get(&dst) {
+            Some(&p) => {
+                self.forwarded += 1;
+                Some(p)
+            }
+            None => {
+                self.dropped += 1;
+                None
+            }
+        }
+    }
+
+    /// Output port for an aggregation packet: the tree's parent (§4.2.1
+    /// "its output port is determined by the configuration tree").
+    pub fn tree_port(&self, tree: TreeId) -> Option<PortId> {
+        self.tree_parent.get(&tree).copied()
+    }
+
+    pub fn n_routes(&self) -> usize {
+        self.routes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_and_counts() {
+        let mut f = Forwarding::new();
+        f.install_route(NodeId(7), 2);
+        assert_eq!(f.lookup(NodeId(7)), Some(2));
+        assert_eq!(f.lookup(NodeId(9)), None);
+        assert_eq!(f.forwarded, 1);
+        assert_eq!(f.dropped, 1);
+    }
+
+    #[test]
+    fn tree_parent_ports() {
+        let mut f = Forwarding::new();
+        f.install_tree_parent(TreeId(1), 3);
+        assert_eq!(f.tree_port(TreeId(1)), Some(3));
+        assert_eq!(f.tree_port(TreeId(2)), None);
+    }
+}

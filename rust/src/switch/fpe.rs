@@ -1,0 +1,263 @@
+//! Front-end processing engine (FPE, §4.2.4, Fig. 6–7).
+//!
+//! Each FPE serves one key-length group with an SRAM (BRAM) hash
+//! table: hash → bucket lookup → aggregate on hit, insert on free
+//! slot, evict-and-forward on a full bucket.  BRAM reads/writes are
+//! single-cycle, so the pipelined engine accepts one pair every
+//! `interval` cycles; the stage *latencies* (Table 3) ride on top.
+//!
+//! Timing is transaction-level: each offered pair carries its arrival
+//! cycle; the engine tracks its input-FIFO occupancy by retiring
+//! service-completion timestamps, which yields exactly the Table 2
+//! counters (writes / full events).
+
+use crate::protocol::{AggOp, Key, Value};
+use crate::sim::Cycles;
+use crate::switch::aggregate::AggregationUnit;
+use crate::switch::config::{EvictionPolicy, StageDelays};
+use crate::switch::hash_table::{HashTable, Probe};
+
+/// What happened to an offered pair.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FpeOutcome {
+    /// Aggregated or inserted; nothing leaves the engine.
+    Kept,
+    /// A pair leaves towards the BPE / output at `ready` (Fig. 7),
+    /// carrying its hash-unit output so the BPE need not re-hash.
+    Forwarded {
+        key: Key,
+        value: Value,
+        hash: u32,
+        ready: Cycles,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct Fpe {
+    pub group: usize,
+    table: HashTable,
+    agg: AggregationUnit,
+    interval: Cycles,
+    delays: StageDelays,
+    eviction: EvictionPolicy,
+    fifo_cap: usize,
+    busy_until: Cycles,
+    // Table 2 counters.
+    pub fifo_writes: u64,
+    pub fifo_full_events: u64,
+    // Outcome counters.
+    pub aggregated: u64,
+    pub inserted: u64,
+    pub evicted: u64,
+    /// Total pair-latency cycles (for Table 3 averages).
+    pub latency_cycles: u64,
+}
+
+impl Fpe {
+    pub fn new(
+        group: usize,
+        table: HashTable,
+        interval: Cycles,
+        delays: StageDelays,
+        eviction: EvictionPolicy,
+        fifo_cap: usize,
+    ) -> Self {
+        Self {
+            group,
+            table,
+            agg: AggregationUnit::new(),
+            interval,
+            delays,
+            eviction,
+            fifo_cap,
+            busy_until: 0,
+            fifo_writes: 0,
+            fifo_full_events: 0,
+            aggregated: 0,
+            inserted: 0,
+            evicted: 0,
+            latency_cycles: 0,
+        }
+    }
+
+    pub fn table(&self) -> &HashTable {
+        &self.table
+    }
+
+    /// FIFO occupancy as seen by an arrival at cycle `at`.
+    ///
+    /// Completions within one busy period are spaced exactly
+    /// `interval` cycles (accepts serialize on `busy_until`), so the
+    /// occupancy is the closed form
+    /// `ceil((busy_until - at) / interval)` — no per-pair queue needed.
+    pub fn fifo_depth_at(&self, at: Cycles) -> usize {
+        if self.busy_until <= at {
+            0
+        } else {
+            (self.busy_until - at).div_ceil(self.interval) as usize
+        }
+    }
+
+    pub fn fifo_depth(&self) -> usize {
+        self.fifo_depth_at(self.busy_until.saturating_sub(1))
+    }
+
+    /// Offer one pair arriving (from the crossbar) at cycle `arrive`.
+    pub fn offer(&mut self, arrive: Cycles, key: Key, value: Value, op: AggOp) -> FpeOutcome {
+        // Backpressure: if the FIFO is full the producer stalls until
+        // the oldest pair retires (counted as a full event, Table 2).
+        let mut effective_arrive = arrive;
+        let depth = self.fifo_depth_at(arrive);
+        if depth >= self.fifo_cap {
+            self.fifo_full_events += 1;
+            // The oldest queued pair completes at
+            // busy_until - (depth - 1) * interval.
+            let oldest_done = self.busy_until - (depth as Cycles - 1) * self.interval;
+            effective_arrive = effective_arrive.max(oldest_done);
+        }
+        self.fifo_writes += 1;
+
+        let start = effective_arrive.max(self.busy_until);
+        self.busy_until = start + self.interval;
+
+        // Functional behaviour.
+        let evict_old = self.eviction == EvictionPolicy::EvictOld;
+        let outcome = match self.table.offer(key, value, op, evict_old) {
+            Probe::Aggregated => {
+                self.aggregated += 1;
+                // Hash + aggregate latency (Table 3 rows 3-4).
+                self.latency_cycles += self.delays.fpe_hash + self.delays.fpe_aggregate;
+                FpeOutcome::Kept
+            }
+            Probe::Inserted => {
+                self.inserted += 1;
+                self.latency_cycles += self.delays.fpe_hash + self.delays.fpe_aggregate;
+                FpeOutcome::Kept
+            }
+            Probe::Evicted(k, v, h) => {
+                self.evicted += 1;
+                let lat =
+                    self.delays.fpe_hash + self.delays.fpe_aggregate + self.delays.fpe_forward;
+                self.latency_cycles += lat;
+                FpeOutcome::Forwarded {
+                    key: k,
+                    value: v,
+                    hash: h,
+                    ready: start + lat,
+                }
+            }
+        };
+        outcome
+    }
+
+    /// Flush: drain the SRAM table; returns resident pairs and the
+    /// stream-out cycle cost (one 16 B beat per cycle out of BRAM).
+    pub fn flush(&mut self) -> (Vec<(Key, Value)>, Cycles) {
+        let pairs = self.table.drain();
+        let bytes: u64 = pairs
+            .iter()
+            .map(|_| (self.table.slot_key_width() + 4) as u64)
+            .sum();
+        (pairs, crate::sim::clock::stream_cycles(bytes))
+    }
+
+    pub fn full_ratio(&self) -> f64 {
+        if self.fifo_writes == 0 {
+            0.0
+        } else {
+            self.fifo_full_events as f64 / self.fifo_writes as f64
+        }
+    }
+
+    pub fn agg_ops(&self) -> u64 {
+        self.agg.ops_executed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::switch::config::StageDelays;
+
+    fn fpe(pairs: usize, fifo_cap: usize) -> Fpe {
+        let table = HashTable::with_memory((pairs * 20) as u64, 16, 2);
+        Fpe::new(
+            1,
+            table,
+            2,
+            StageDelays::default(),
+            EvictionPolicy::EvictOld,
+            fifo_cap,
+        )
+    }
+
+    #[test]
+    fn hit_insert_evict_counters() {
+        let mut f = fpe(2, 64);
+        let k1 = Key::from_id(1, 16);
+        assert_eq!(f.offer(0, k1, 5, AggOp::Sum), FpeOutcome::Kept);
+        assert_eq!(f.offer(10, k1, 6, AggOp::Sum), FpeOutcome::Kept);
+        assert_eq!(f.inserted, 1);
+        assert_eq!(f.aggregated, 1);
+        assert_eq!(f.table().get(&k1), Some(11));
+    }
+
+    #[test]
+    fn eviction_forward_has_pipeline_latency() {
+        // 1 bucket x 2 slots => third distinct key evicts a resident.
+        let mut f = fpe(1, 64);
+        let k1 = Key::from_id(1, 16);
+        let k2 = Key::from_id(2, 16);
+        let k3 = Key::from_id(3, 16);
+        f.offer(0, k1, 5, AggOp::Sum);
+        f.offer(50, k2, 6, AggOp::Sum);
+        match f.offer(100, k3, 7, AggOp::Sum) {
+            FpeOutcome::Forwarded {
+                key, value, ready, ..
+            } => {
+                // Round-robin cursor starts at slot 0 -> k1 evicted.
+                assert_eq!(key, k1);
+                assert_eq!(value, 5);
+                // start=100, +10+18+5.
+                assert_eq!(ready, 133);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn fifo_fills_under_burst() {
+        // interval 2, fifo_cap 4: 20 pairs arriving at the same cycle
+        // must generate full events.
+        let mut f = fpe(1024, 4);
+        for id in 0..20u64 {
+            f.offer(0, Key::from_id(id, 16), 1, AggOp::Sum);
+        }
+        assert_eq!(f.fifo_writes, 20);
+        assert!(f.fifo_full_events > 0, "burst should overflow FIFO");
+        assert!(f.full_ratio() > 0.0);
+    }
+
+    #[test]
+    fn paced_arrivals_never_fill_fifo() {
+        // One pair every 4 cycles into a 2-cycle engine: no pressure.
+        let mut f = fpe(1024, 4);
+        for id in 0..100u64 {
+            f.offer(id * 4, Key::from_id(id, 16), 1, AggOp::Sum);
+        }
+        assert_eq!(f.fifo_full_events, 0);
+    }
+
+    #[test]
+    fn flush_drains_and_costs_stream_cycles() {
+        let mut f = fpe(64, 64);
+        for id in 0..10u64 {
+            f.offer(id, Key::from_id(id, 16), 1, AggOp::Sum);
+        }
+        let (pairs, cycles) = f.flush();
+        assert_eq!(pairs.len(), 10);
+        // 10 slots * 20B = 200 B = 13 beats.
+        assert_eq!(cycles, 13);
+        assert_eq!(f.table().occupancy(), 0);
+    }
+}

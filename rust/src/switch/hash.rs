@@ -1,0 +1,91 @@
+//! The hash function unit (§4.2.4): word-level FNV-1a-32.
+//!
+//! Bit-identical to the Pallas kernel in
+//! `python/compile/kernels/hash_fnv.py` — keys are zero-padded to the
+//! slot width of their group (a multiple of 4 bytes) and hashed as
+//! little-endian 32-bit words.  `integration_runtime.rs` asserts
+//! equality across the language boundary through the AOT artifact.
+
+use crate::protocol::Key;
+
+pub const FNV_OFFSET: u32 = 2_166_136_261;
+pub const FNV_PRIME: u32 = 16_777_619;
+
+/// FNV-1a-32 over 32-bit words.
+#[inline]
+pub fn fnv1a_words(words: &[u32]) -> u32 {
+    let mut h = FNV_OFFSET;
+    for &w in words {
+        h = (h ^ w).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Hash a key padded to `width` bytes (the group's slot width), without
+/// allocating: iterates 4-byte chunks of the padded representation.
+#[inline]
+pub fn fnv1a_key(key: &Key, width: usize) -> u32 {
+    debug_assert!(width % 4 == 0 && width >= key.len());
+    let bytes = key.as_bytes();
+    let mut h = FNV_OFFSET;
+    let mut i = 0;
+    while i < width {
+        let mut wb = [0u8; 4];
+        if i < bytes.len() {
+            let n = (bytes.len() - i).min(4);
+            wb[..n].copy_from_slice(&bytes[i..i + n]);
+        }
+        h = (h ^ u32::from_le_bytes(wb)).wrapping_mul(FNV_PRIME);
+        i += 4;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinned_vectors_match_python() {
+        // Pinned in python/tests/test_kernel.py::test_fnv_known_vector.
+        assert_eq!(fnv1a_words(&[0]), 84_696_351);
+        let h = fnv1a_words(&[0xDEAD_BEEF, 0x1234_5678]);
+        // Recompute longhand.
+        let step1 = (FNV_OFFSET ^ 0xDEAD_BEEFu32).wrapping_mul(FNV_PRIME);
+        let step2 = (step1 ^ 0x1234_5678).wrapping_mul(FNV_PRIME);
+        assert_eq!(h, step2);
+    }
+
+    #[test]
+    fn key_hash_equals_packed_words_hash() {
+        for len in [1usize, 5, 8, 23, 64] {
+            let key = Key::from_id(len as u64, len);
+            let width = len.div_ceil(8).max(1) * 8;
+            let words = key.packed_words(width);
+            assert_eq!(fnv1a_key(&key, width), fnv1a_words(&words), "len {len}");
+        }
+    }
+
+    #[test]
+    fn width_affects_hash() {
+        // Same key padded to different group widths hashes differently:
+        // the payload analyzer must route a key consistently.
+        let key = Key::new(b"hello");
+        assert_ne!(fnv1a_key(&key, 8), fnv1a_key(&key, 16));
+    }
+
+    #[test]
+    fn distribution_spreads_buckets() {
+        let buckets = 256usize;
+        let mut counts = vec![0usize; buckets];
+        for id in 0..100_000u64 {
+            let key = Key::from_id(id, 16);
+            counts[(fnv1a_key(&key, 16) as usize) % buckets] += 1;
+        }
+        let (min, max) = counts
+            .iter()
+            .fold((usize::MAX, 0), |(lo, hi), &c| (lo.min(c), hi.max(c)));
+        // Expected 390 per bucket; allow generous spread.
+        assert!(min > 250 && max < 550, "min={min} max={max}");
+    }
+}

@@ -1,0 +1,390 @@
+//! Hash-table layout of the processing engines (Fig. 8).
+//!
+//! A contiguous memory region is divided into buckets; each bucket
+//! holds `slots_per_bucket` slots of identical width (the group's
+//! maximum key length, zero-padded — Fig. 8a).  A lookup compares the
+//! key against every slot of its bucket; on a miss with a full bucket
+//! the engine *evicts* a resident pair (the multi-level hierarchy
+//! forwards it to the BPE / next hop instead of stalling, Fig. 7).
+//!
+//! Memory accounting matches the hardware: a slot costs
+//! `slot_key_width + VALUE_BYTES` bytes, so a "4 MB BRAM" table holds
+//! exactly as many pairs as the paper's would.
+
+use crate::protocol::{AggOp, Key, Value};
+use crate::switch::hash::fnv1a_key;
+use crate::util::fxhash::FxHashMap;
+
+/// On-wire/in-slot value width (the paper fixes values to 32 bits).
+pub const VALUE_BYTES: usize = 4;
+
+/// Outcome of offering a pair to a table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Probe {
+    /// Key present — value aggregated in place.
+    Aggregated,
+    /// Key absent, free slot — pair stored.
+    Inserted,
+    /// Key absent, bucket full — a pair leaves the table.  Under
+    /// `EvictOld` it is the resident pair (the incoming one took its
+    /// slot); under `ForwardNew` it is the incoming pair itself.  The
+    /// evictee's cached hash rides along so the next stage (BPE) need
+    /// not recompute it.
+    Evicted(Key, Value, u32),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Slot {
+    key: Key,
+    value: Value,
+    /// Cached fnv1a_key(key, slot_key_width) — simulator-side
+    /// optimization; the hardware recomputes in its hash unit.
+    hash: u32,
+}
+
+/// One bucket's occupied slots + its round-robin eviction cursor.
+#[derive(Clone, Debug, Default)]
+struct Bucket {
+    slots: Vec<Slot>,
+    cursor: u8,
+}
+
+/// Above this many slots the table stores only occupied buckets; the
+/// FPE BRAM tables stay dense (fast, index-addressed) while a
+/// paper-scale 8 GB BPE region does not allocate 8 GB.
+const DENSE_SLOT_LIMIT: usize = 1 << 22;
+
+#[derive(Clone, Debug)]
+enum Storage {
+    /// slots[bucket * spb + i], cursor per bucket.
+    Dense(Vec<Option<Slot>>, Vec<u8>),
+    Sparse(FxHashMap<u32, Bucket>),
+}
+
+/// One engine's hash table (one key-length group).
+///
+/// The *capacity* models the hardware memory (buckets × slots); the
+/// *storage* is sparse (occupied buckets only), so simulating the
+/// paper's 8 GB BPE DRAM does not allocate 8 GB — memory is
+/// proportional to occupancy while the collision/eviction behaviour is
+/// exactly that of the dense layout.
+#[derive(Clone, Debug)]
+pub struct HashTable {
+    slot_key_width: usize,
+    slots_per_bucket: usize,
+    buckets: usize,
+    storage: Storage,
+    occupancy: usize,
+    pub lookups: u64,
+    pub evictions: u64,
+}
+
+impl HashTable {
+    /// Build a table that fits `mem_bytes` of memory for keys padded to
+    /// `slot_key_width`.  At least one bucket is always allocated.
+    pub fn with_memory(mem_bytes: u64, slot_key_width: usize, slots_per_bucket: usize) -> Self {
+        assert!(slot_key_width % 4 == 0 && slot_key_width > 0);
+        assert!(slots_per_bucket > 0);
+        let slot_bytes = (slot_key_width + VALUE_BYTES) as u64;
+        let total_slots = (mem_bytes / slot_bytes).max(1) as usize;
+        let buckets = (total_slots / slots_per_bucket).max(1);
+        let storage = if buckets * slots_per_bucket <= DENSE_SLOT_LIMIT {
+            Storage::Dense(vec![None; buckets * slots_per_bucket], vec![0; buckets])
+        } else {
+            Storage::Sparse(FxHashMap::default())
+        };
+        Self {
+            slot_key_width,
+            slots_per_bucket,
+            buckets,
+            storage,
+            occupancy: 0,
+            lookups: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn slot_key_width(&self) -> usize {
+        self.slot_key_width
+    }
+
+    pub fn capacity_pairs(&self) -> usize {
+        self.buckets * self.slots_per_bucket
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.occupancy
+    }
+
+    pub fn mem_bytes(&self) -> u64 {
+        (self.capacity_pairs() * (self.slot_key_width + VALUE_BYTES)) as u64
+    }
+
+    #[inline]
+    fn bucket_of(&self, key: &Key) -> usize {
+        (fnv1a_key(key, self.slot_key_width) as usize) % self.buckets
+    }
+
+    /// Hash a key for this table's slot width (cacheable by callers).
+    #[inline]
+    pub fn hash_of(&self, key: &Key) -> u32 {
+        fnv1a_key(key, self.slot_key_width)
+    }
+
+    /// Offer a pair: aggregate, insert, or evict (Fig. 7).
+    /// `evict_old`: true = paper behaviour (resident pair leaves).
+    pub fn offer(&mut self, key: Key, value: Value, op: AggOp, evict_old: bool) -> Probe {
+        let hash = self.hash_of(&key);
+        self.offer_hashed(hash, key, value, op, evict_old)
+    }
+
+    /// [`Self::offer`] with the key's hash precomputed (the FPE hash
+    /// unit output travels with the pair to the BPE, Fig. 6).
+    pub fn offer_hashed(
+        &mut self,
+        hash: u32,
+        key: Key,
+        value: Value,
+        op: AggOp,
+        evict_old: bool,
+    ) -> Probe {
+        debug_assert!(key.len() <= self.slot_key_width);
+        debug_assert_eq!(hash, self.hash_of(&key));
+        self.lookups += 1;
+        let b = (hash as usize) % self.buckets;
+        let spb = self.slots_per_bucket;
+        match &mut self.storage {
+            Storage::Dense(slots, cursors) => {
+                let base = b * spb;
+                let mut free: Option<usize> = None;
+                for i in base..base + spb {
+                    match &mut slots[i] {
+                        Some(s) if s.key == key => {
+                            s.value = op.combine(s.value, value);
+                            return Probe::Aggregated;
+                        }
+                        Some(_) => {}
+                        None => {
+                            if free.is_none() {
+                                free = Some(i);
+                            }
+                        }
+                    }
+                }
+                if let Some(i) = free {
+                    slots[i] = Some(Slot { key, value, hash });
+                    self.occupancy += 1;
+                    return Probe::Inserted;
+                }
+                self.evictions += 1;
+                if evict_old {
+                    let cursor = &mut cursors[b];
+                    let victim_i = base + (*cursor as usize % spb);
+                    *cursor = cursor.wrapping_add(1);
+                    let old = slots[victim_i].replace(Slot { key, value, hash }).unwrap();
+                    Probe::Evicted(old.key, old.value, old.hash)
+                } else {
+                    Probe::Evicted(key, value, hash)
+                }
+            }
+            Storage::Sparse(occupied) => {
+                let bucket = occupied.entry(b as u32).or_default();
+                for s in bucket.slots.iter_mut() {
+                    if s.key == key {
+                        s.value = op.combine(s.value, value);
+                        return Probe::Aggregated;
+                    }
+                }
+                if bucket.slots.len() < spb {
+                    bucket.slots.push(Slot { key, value, hash });
+                    self.occupancy += 1;
+                    return Probe::Inserted;
+                }
+                self.evictions += 1;
+                if evict_old {
+                    let victim_i = bucket.cursor as usize % spb;
+                    bucket.cursor = bucket.cursor.wrapping_add(1);
+                    let old = std::mem::replace(
+                        &mut bucket.slots[victim_i],
+                        Slot { key, value, hash },
+                    );
+                    Probe::Evicted(old.key, old.value, old.hash)
+                } else {
+                    Probe::Evicted(key, value, hash)
+                }
+            }
+        }
+    }
+
+    /// Read a key's current value (tests / reducer verification).
+    pub fn get(&self, key: &Key) -> Option<Value> {
+        let b = self.bucket_of(key);
+        match &self.storage {
+            Storage::Dense(slots, _) => slots[b * self.slots_per_bucket..][..self.slots_per_bucket]
+                .iter()
+                .flatten()
+                .find(|s| s.key == *key)
+                .map(|s| s.value),
+            Storage::Sparse(occupied) => occupied
+                .get(&(b as u32))?
+                .slots
+                .iter()
+                .find(|s| s.key == *key)
+                .map(|s| s.value),
+        }
+    }
+
+    /// Drain all resident pairs (flush to next hop / next stage), in
+    /// memory order (bucket index, then slot) — the BPE-Flush stage
+    /// streams this out of RAM.
+    pub fn drain(&mut self) -> Vec<(Key, Value)> {
+        let mut out = Vec::with_capacity(self.occupancy);
+        match &mut self.storage {
+            Storage::Dense(slots, _) => {
+                for s in slots.iter_mut() {
+                    if let Some(slot) = s.take() {
+                        out.push((slot.key, slot.value));
+                    }
+                }
+            }
+            Storage::Sparse(occupied) => {
+                let mut ids: Vec<u32> = occupied.keys().copied().collect();
+                ids.sort_unstable();
+                for id in ids {
+                    let bucket = occupied.remove(&id).unwrap();
+                    out.extend(bucket.slots.into_iter().map(|s| (s.key, s.value)));
+                }
+            }
+        }
+        self.occupancy = 0;
+        out
+    }
+
+    /// Iterate resident pairs without draining (arbitrary order).
+    pub fn iter(&self) -> impl Iterator<Item = (&Key, Value)> + '_ {
+        let (dense, sparse): (Option<_>, Option<_>) = match &self.storage {
+            Storage::Dense(slots, _) => (Some(slots.iter().flatten()), None),
+            Storage::Sparse(occupied) => (
+                None,
+                Some(occupied.values().flat_map(|b| b.slots.iter())),
+            ),
+        };
+        dense
+            .into_iter()
+            .flatten()
+            .chain(sparse.into_iter().flatten())
+            .map(|s| (&s.key, s.value))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(pairs: usize, width: usize, spb: usize) -> HashTable {
+        HashTable::with_memory((pairs * (width + VALUE_BYTES)) as u64, width, spb)
+    }
+
+    #[test]
+    fn memory_accounting_matches_capacity() {
+        let t = HashTable::with_memory(4 << 20, 16, 2);
+        // 4 MiB / 20 B per slot = 209715 slots -> 104857 buckets * 2.
+        assert_eq!(t.capacity_pairs(), 209_714);
+        assert!(t.mem_bytes() <= 4 << 20);
+    }
+
+    #[test]
+    fn aggregate_then_get() {
+        let mut t = table(64, 16, 2);
+        let k = Key::from_id(5, 12);
+        assert_eq!(t.offer(k, 10, AggOp::Sum, true), Probe::Inserted);
+        assert_eq!(t.offer(k, 32, AggOp::Sum, true), Probe::Aggregated);
+        assert_eq!(t.get(&k), Some(42));
+        assert_eq!(t.occupancy(), 1);
+    }
+
+    #[test]
+    fn eviction_old_vs_new() {
+        // 1 bucket, 1 slot: second distinct key must evict.
+        let mut t = table(1, 8, 1);
+        let k1 = Key::from_id(1, 8);
+        let k2 = Key::from_id(2, 8);
+        assert_eq!(t.offer(k1, 11, AggOp::Sum, true), Probe::Inserted);
+        match t.offer(k2, 22, AggOp::Sum, true) {
+            Probe::Evicted(k, v, h) => {
+                assert_eq!((k, v), (k1, 11)); // resident pair leaves
+                assert_eq!(h, t.hash_of(&k1));
+            }
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        assert_eq!(t.get(&k2), Some(22)); // newcomer resident
+
+        let mut t = table(1, 8, 1);
+        t.offer(k1, 11, AggOp::Sum, false);
+        match t.offer(k2, 22, AggOp::Sum, false) {
+            Probe::Evicted(k, v, _) => assert_eq!((k, v), (k2, 22)), // newcomer forwarded
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(t.get(&k1), Some(11));
+    }
+
+    #[test]
+    fn bucket_scan_finds_second_slot() {
+        // 24 bytes = exactly 2 slots of (8B key + 4B value) = 1 bucket.
+        let mut t = HashTable::with_memory(24, 8, 2);
+        assert_eq!(t.buckets, 1);
+        let k1 = Key::from_id(1, 8);
+        let k2 = Key::from_id(2, 8);
+        assert_eq!(t.offer(k1, 1, AggOp::Sum, true), Probe::Inserted);
+        assert_eq!(t.offer(k2, 2, AggOp::Sum, true), Probe::Inserted);
+        assert_eq!(t.offer(k2, 3, AggOp::Sum, true), Probe::Aggregated);
+        assert_eq!(t.get(&k2), Some(5));
+        // Third key: round-robin eviction rotates victims.
+        let k3 = Key::from_id(3, 8);
+        let Probe::Evicted(v1, _, _) = t.offer(k3, 9, AggOp::Sum, true) else {
+            panic!()
+        };
+        let k4 = Key::from_id(4, 8);
+        let Probe::Evicted(v2, _, _) = t.offer(k4, 9, AggOp::Sum, true) else {
+            panic!()
+        };
+        assert_ne!(v1, v2, "round-robin should rotate victims");
+    }
+
+    #[test]
+    fn drain_returns_everything_once() {
+        let mut t = table(128, 16, 2);
+        let mut inserted = 0;
+        for id in 0..80u64 {
+            if matches!(
+                t.offer(Key::from_id(id, 16), id as Value, AggOp::Sum, true),
+                Probe::Inserted
+            ) {
+                inserted += 1;
+            }
+        }
+        let drained = t.drain();
+        assert_eq!(drained.len(), inserted);
+        assert_eq!(t.occupancy(), 0);
+        assert!(t.drain().is_empty());
+    }
+
+    #[test]
+    fn value_conservation_under_sum() {
+        // sum(inputs) == sum(resident) + sum(evicted) — the invariant
+        // that makes in-network SUM correct end-to-end.
+        let mut t = table(32, 16, 2);
+        let mut evicted_sum: Value = 0;
+        let mut input_sum: Value = 0;
+        for id in 0..500u64 {
+            let v = (id % 13) as Value;
+            input_sum += v;
+            if let Probe::Evicted(_, ev, _) = t.offer(Key::from_id(id % 97, 16), v, AggOp::Sum, true)
+            {
+                evicted_sum += ev;
+            }
+        }
+        let resident_sum: Value = t.iter().map(|(_, v)| v).sum();
+        assert_eq!(input_sum, resident_sum + evicted_sum);
+    }
+}

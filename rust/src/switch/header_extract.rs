@@ -1,0 +1,86 @@
+//! Header extraction module (§4.2.1): classifies an incoming packet
+//! and dispatches it to the proper pipeline.
+
+use crate::protocol::Packet;
+
+/// Which pipeline a packet enters after header extraction (Fig. 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Normal communication packet → routing + forwarding module.
+    Forward,
+    /// Configure packet → configuration module.
+    Configure,
+    /// Aggregation packet → payload analyzer.
+    Aggregate,
+    /// Control traffic terminating at the switch CPU (Launch/Ack are
+    /// controller-plane; a switch only ever sees Ack type 1).
+    Control,
+}
+
+/// Instrumented classifier.
+#[derive(Clone, Debug, Default)]
+pub struct HeaderExtract {
+    pub packets_seen: u64,
+    pub agg_packets: u64,
+}
+
+impl HeaderExtract {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Classify one packet; costs `delays.header_analyzer` cycles
+    /// (Table 3 row 1), accounted by the caller.
+    pub fn classify(&mut self, pkt: &Packet) -> Dispatch {
+        self.packets_seen += 1;
+        match pkt {
+            Packet::Data(_) => Dispatch::Forward,
+            Packet::Configure(_) => Dispatch::Configure,
+            Packet::Aggregation(_) => {
+                self.agg_packets += 1;
+                Dispatch::Aggregate
+            }
+            Packet::Launch(_) | Packet::Ack(_) => Dispatch::Control,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{
+        AckKind, AggOp, AggregationPacket, ConfigurePacket, DataPacket, LaunchPacket, TreeId,
+    };
+
+    #[test]
+    fn classification_covers_all_types() {
+        let mut h = HeaderExtract::new();
+        assert_eq!(
+            h.classify(&Packet::Data(DataPacket { payload_len: 64 })),
+            Dispatch::Forward
+        );
+        assert_eq!(
+            h.classify(&Packet::Configure(ConfigurePacket { trees: vec![] })),
+            Dispatch::Configure
+        );
+        assert_eq!(
+            h.classify(&Packet::Aggregation(AggregationPacket {
+                tree: TreeId(0),
+                op: AggOp::Sum,
+                eot: false,
+                pairs: vec![],
+            })),
+            Dispatch::Aggregate
+        );
+        assert_eq!(
+            h.classify(&Packet::Launch(LaunchPacket {
+                mappers: vec![],
+                reducers: vec![],
+            })),
+            Dispatch::Control
+        );
+        assert_eq!(h.classify(&Packet::Ack(AckKind::Switch)), Dispatch::Control);
+        assert_eq!(h.packets_seen, 5);
+        assert_eq!(h.agg_packets, 1);
+    }
+}

@@ -1,0 +1,36 @@
+//! The SwitchAgg data plane (Fig. 4).
+//!
+//! A packet entering the switch takes one of three paths:
+//!
+//! * normal traffic → [`forwarding`] (L2/L3 routing table);
+//! * `Configure` → [`config`] (memory partitioning among trees, child
+//!   counts, parent ports, §4.2.2);
+//! * `Aggregation` → [`header_extract`] → [`payload_analyzer`] (pairs
+//!   grouped by key length, Fig. 5a) → [`crossbar`] → the per-group
+//!   [`fpe`]s (SRAM hash tables, Fig. 8a) → [`scheduler`] → the single
+//!   [`bpe`] (DRAM-backed, Fig. 8b).
+//!
+//! The FPE/BPE pair forms the paper's multi-level aggregation
+//! hierarchy (Fig. 6): an FPE hash collision does not stall the
+//! pipeline — the evicted resident pair is forwarded to the BPE whose
+//! memory controller overlaps DRAM latency (command buffering,
+//! `sim::dram`).  [`switch_sim`] assembles the whole device and keeps
+//! the cycle accounting that regenerates Tables 2–3.
+
+pub mod aggregate;
+pub mod bpe;
+pub mod config;
+pub mod crossbar;
+pub mod forwarding;
+pub mod fpe;
+pub mod hash;
+pub mod hash_table;
+pub mod header_extract;
+pub mod payload_analyzer;
+pub mod scheduler;
+pub mod switch_sim;
+
+pub use config::{EvictionPolicy, MemoryPolicy, StageDelays, SwitchConfig};
+pub use hash_table::{HashTable, Probe};
+pub use payload_analyzer::GroupMap;
+pub use switch_sim::{SwitchAggSwitch, SwitchStats};

@@ -1,0 +1,145 @@
+//! Payload analyzer (§4.2.3, Fig. 5a): splits an aggregation packet's
+//! payload into key-value pairs and assigns each to a key-length
+//! group, which determines the destination FPE.
+//!
+//! The prototype divides key lengths into 8 groups of width 8 B each
+//! (8 B ≤ … ≤ 64 B); a key of length L goes to group ⌈L/8⌉-1, whose
+//! hash slots are 8·(g+1) bytes wide.
+
+use crate::protocol::{KvPair, MAX_KEY_LEN};
+
+/// Key-length → group mapping.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupMap {
+    n_groups: usize,
+    base: usize,
+}
+
+impl GroupMap {
+    pub fn new(n_groups: usize, base: usize) -> Self {
+        assert!(n_groups > 0 && base > 0 && base % 4 == 0);
+        assert!(
+            n_groups * base >= MAX_KEY_LEN,
+            "groups must cover keys up to {MAX_KEY_LEN} B"
+        );
+        Self { n_groups, base }
+    }
+
+    /// Prototype configuration (§5): 8 groups × 8 B.
+    pub fn prototype() -> Self {
+        Self::new(8, 8)
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.n_groups
+    }
+
+    /// Group index for a key length (1-based lengths).
+    #[inline]
+    pub fn group_of(&self, key_len: usize) -> usize {
+        debug_assert!(key_len >= 1);
+        (key_len - 1) / self.base
+    }
+
+    /// Slot width (padded key bytes) of a group.
+    #[inline]
+    pub fn width_of(&self, group: usize) -> usize {
+        (group + 1) * self.base
+    }
+}
+
+/// Instrumented analyzer: counts pairs and bytes per group.
+#[derive(Clone, Debug)]
+pub struct PayloadAnalyzer {
+    map: GroupMap,
+    pub pairs_per_group: Vec<u64>,
+    pub bytes_in: u64,
+}
+
+impl PayloadAnalyzer {
+    pub fn new(map: GroupMap) -> Self {
+        Self {
+            pairs_per_group: vec![0; map.n_groups()],
+            map,
+            bytes_in: 0,
+        }
+    }
+
+    pub fn group_map(&self) -> &GroupMap {
+        &self.map
+    }
+
+    /// Classify one pair: returns its group and updates the counters.
+    /// Cycle cost is the streaming of the payload through the 128-bit
+    /// datapath, accounted by the caller.
+    #[inline]
+    pub fn classify(&mut self, p: &KvPair) -> usize {
+        let g = self.map.group_of(p.key.len());
+        self.pairs_per_group[g] += 1;
+        self.bytes_in += p.encoded_len() as u64;
+        g
+    }
+
+    /// Analyze a whole packet's pairs in arrival order.
+    pub fn analyze(&mut self, pairs: &[KvPair]) -> Vec<(usize, KvPair)> {
+        pairs.iter().map(|p| (self.classify(p), *p)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::Key;
+
+    #[test]
+    fn grouping_boundaries() {
+        let m = GroupMap::prototype();
+        assert_eq!(m.group_of(1), 0);
+        assert_eq!(m.group_of(8), 0);
+        assert_eq!(m.group_of(9), 1);
+        assert_eq!(m.group_of(16), 1);
+        assert_eq!(m.group_of(17), 2);
+        assert_eq!(m.group_of(64), 7);
+        assert_eq!(m.width_of(0), 8);
+        assert_eq!(m.width_of(7), 64);
+    }
+
+    #[test]
+    fn group_width_always_fits_key() {
+        let m = GroupMap::prototype();
+        for len in 1..=64 {
+            let g = m.group_of(len);
+            assert!(m.width_of(g) >= len, "len {len} group {g}");
+            assert!(g < m.n_groups());
+            // Tight: the previous group would not fit (beyond base).
+            if len > m.base {
+                assert!(m.width_of(g - 1) < len || m.group_of(len) == (len - 1) / m.base);
+            }
+        }
+    }
+
+    #[test]
+    fn analyzer_counts_pairs_and_bytes() {
+        let mut a = PayloadAnalyzer::new(GroupMap::prototype());
+        let pairs = vec![
+            KvPair::new(Key::from_id(1, 8), 1),
+            KvPair::new(Key::from_id(2, 9), 1),
+            KvPair::new(Key::from_id(3, 64), 1),
+            KvPair::new(Key::from_id(4, 10), 1),
+        ];
+        let grouped: Vec<(usize, KvPair)> = a.analyze(&pairs);
+        assert_eq!(
+            grouped.iter().map(|(g, _)| *g).collect::<Vec<_>>(),
+            vec![0, 1, 7, 1]
+        );
+        assert_eq!(a.pairs_per_group[1], 2);
+        let want_bytes: u64 = pairs.iter().map(|p| p.encoded_len() as u64).sum();
+        assert_eq!(a.bytes_in, want_bytes);
+    }
+
+    #[test]
+    #[should_panic(expected = "must cover")]
+    fn undersized_group_map_rejected() {
+        GroupMap::new(2, 8);
+    }
+}

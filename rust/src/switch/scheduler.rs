@@ -1,0 +1,87 @@
+//! FPE→BPE scheduler (Fig. 7): "a scheduler is sitting between the
+//! FPEs and BPE to decide which FPE can forward its result to BPE."
+//!
+//! Only one evicted pair can enter the BPE per arbitration slot; the
+//! policy decides which FPE's forward queue is served.  Round-robin is
+//! the hardware default; longest-queue-first is the ablation
+//! (DESIGN.md §Ablations).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    RoundRobin,
+    LongestQueueFirst,
+}
+
+/// Arbitrates among `n` FPE forward queues.
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    policy: SchedPolicy,
+    cursor: usize,
+    pub grants: u64,
+}
+
+impl Scheduler {
+    pub fn new(n: usize, policy: SchedPolicy) -> Self {
+        assert!(n > 0);
+        let _ = n;
+        Self {
+            policy,
+            cursor: 0,
+            grants: 0,
+        }
+    }
+
+    /// Pick the next queue to serve given current queue depths.
+    /// Returns `None` if all queues are empty.
+    pub fn pick(&mut self, depths: &[usize]) -> Option<usize> {
+        let n = depths.len();
+        let choice = match self.policy {
+            SchedPolicy::RoundRobin => (0..n)
+                .map(|i| (self.cursor + i) % n)
+                .find(|&i| depths[i] > 0),
+            SchedPolicy::LongestQueueFirst => depths
+                .iter()
+                .enumerate()
+                .filter(|(_, &d)| d > 0)
+                .max_by_key(|(i, &d)| (d, n - i)) // deterministic tiebreak
+                .map(|(i, _)| i),
+        }?;
+        self.cursor = (choice + 1) % n;
+        self.grants += 1;
+        Some(choice)
+    }
+
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles_fairly() {
+        let mut s = Scheduler::new(3, SchedPolicy::RoundRobin);
+        let depths = [1usize, 1, 1];
+        let picks: Vec<usize> = (0..6).map(|_| s.pick(&depths).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(s.grants, 6);
+    }
+
+    #[test]
+    fn round_robin_skips_empty() {
+        let mut s = Scheduler::new(3, SchedPolicy::RoundRobin);
+        assert_eq!(s.pick(&[0, 2, 0]), Some(1));
+        assert_eq!(s.pick(&[0, 1, 3]), Some(2));
+        assert_eq!(s.pick(&[0, 0, 0]), None);
+    }
+
+    #[test]
+    fn lqf_picks_deepest_deterministically() {
+        let mut s = Scheduler::new(4, SchedPolicy::LongestQueueFirst);
+        assert_eq!(s.pick(&[1, 5, 3, 5]), Some(1)); // tie → lowest index
+        assert_eq!(s.pick(&[0, 0, 9, 1]), Some(2));
+        assert_eq!(s.pick(&[0, 0, 0, 0]), None);
+    }
+}

@@ -1,0 +1,605 @@
+//! The assembled SwitchAgg device (Fig. 4): header extraction →
+//! payload analyzer → crossbar → FPEs → scheduler → BPE, plus the
+//! forwarding and configuration modules.
+//!
+//! Timing: aggregation pairs arrive paced by the 10 Gbps input link
+//! (16 B datapath beats at 200 MHz ⇒ 0.16 cycles/byte), flow through
+//! the crossbar (2 cycles), are accepted by their group's FPE every
+//! `fpe_interval` cycles and, on eviction, ride the scheduler into the
+//! BPE.  All FIFO occupancy / full events are recorded per Table 2;
+//! per-stage latencies per Table 3.
+
+use crate::protocol::{
+    AggOp, AggregationPacket, Key, KvPair, TreeConfig, TreeId, Value, AGG_FIXED_LEN,
+    HEADER_OVERHEAD, MAX_AGG_PAYLOAD,
+};
+use crate::sim::clock::{Cycles, CLOCK_HZ};
+use crate::switch::bpe::{Bpe, BpeOutcome};
+use crate::switch::config::{ConfigModule, SwitchConfig};
+use crate::switch::crossbar::Crossbar;
+use crate::switch::fpe::{Fpe, FpeOutcome};
+use crate::switch::forwarding::Forwarding;
+use crate::switch::hash_table::HashTable;
+use crate::switch::header_extract::HeaderExtract;
+use crate::switch::payload_analyzer::{GroupMap, PayloadAnalyzer};
+use crate::switch::scheduler::{SchedPolicy, Scheduler};
+use std::collections::BTreeMap;
+
+/// Input pacing: cycles per byte on a 10 Gbps port at 200 MHz
+/// (1.25 GB/s ÷ 200 Mcycle/s = 6.25 B/cycle = 4/25 cycle/B).
+const PACE_NUM: u64 = 4;
+const PACE_DEN: u64 = 25;
+
+/// Per-tree aggregate statistics (port counters, §6.2 methodology).
+#[derive(Clone, Debug, Default)]
+pub struct SwitchStats {
+    pub pairs_in: u64,
+    pub bytes_in: u64,
+    pub packets_in: u64,
+    /// Pairs forwarded downstream mid-stream (evictions/overflow).
+    pub pairs_out_stream: u64,
+    /// Pairs flushed at end of tree.
+    pub pairs_out_flush: u64,
+    pub bytes_out: u64,
+    pub fpe_aggregated: u64,
+    pub fpe_inserted: u64,
+    pub fpe_evicted: u64,
+    pub bpe_aggregated: u64,
+    pub bpe_inserted: u64,
+    pub bpe_overflowed: u64,
+    pub fifo_writes: u64,
+    pub fifo_full_events: u64,
+    pub flush_cycles: Cycles,
+    /// Cycle at which the last pair finished processing.
+    pub makespan_cycles: Cycles,
+}
+
+impl SwitchStats {
+    /// Paper's reduction ratio R = 1 − out/in over wire bytes.
+    pub fn reduction_ratio(&self) -> f64 {
+        if self.bytes_in == 0 {
+            0.0
+        } else {
+            1.0 - self.bytes_out as f64 / self.bytes_in as f64
+        }
+    }
+
+    /// Table 2 "Full-time ratio".
+    pub fn fifo_full_ratio(&self) -> f64 {
+        if self.fifo_writes == 0 {
+            0.0
+        } else {
+            self.fifo_full_events as f64 / self.fifo_writes as f64
+        }
+    }
+
+    /// Effective processing throughput in bytes/sec over the makespan.
+    pub fn throughput_bytes_per_sec(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            0.0
+        } else {
+            self.bytes_in as f64 * CLOCK_HZ as f64 / self.makespan_cycles as f64
+        }
+    }
+}
+
+/// Everything the switch emits while ingesting one packet.
+#[derive(Clone, Debug, Default)]
+pub struct IngestOutput {
+    /// Pairs leaving downstream immediately (evictions, overflow).
+    pub forwarded: Vec<KvPair>,
+    /// Set when this packet completed the tree (all children EoT):
+    /// the flushed residents.
+    pub flushed: Option<Vec<KvPair>>,
+}
+
+/// One aggregation tree's slice of the data plane.
+struct TreeEngine {
+    op: AggOp,
+    children: u16,
+    eot_seen: u16,
+    analyzer: PayloadAnalyzer,
+    crossbar: Crossbar,
+    scheduler: Scheduler,
+    fpes: Vec<Fpe>,
+    bpe: Option<Bpe>,
+    /// Byte-pacing accumulator for input arrivals.
+    bytes_arrived: u64,
+    /// Scratch queue-depth buffer for scheduler grants (avoids a per-
+    /// eviction allocation on the hot path).
+    depths_scratch: Vec<usize>,
+    stats: SwitchStats,
+}
+
+impl TreeEngine {
+    fn new(cfg: &SwitchConfig, op: AggOp, children: u16, fpe_share: u64, bpe_share: Option<u64>) -> Self {
+        let fpe_mem_each = fpe_share / cfg.n_groups as u64;
+        let map = GroupMap::new(cfg.n_groups, cfg.key_base);
+        let fpes = (0..cfg.n_groups)
+            .map(|g| {
+                let table = HashTable::with_memory(
+                    fpe_mem_each,
+                    cfg.group_width(g),
+                    cfg.fpe_slots_per_bucket,
+                );
+                Fpe::new(
+                    g,
+                    table,
+                    cfg.fpe_interval,
+                    cfg.delays,
+                    cfg.eviction,
+                    cfg.fifo_cap,
+                )
+            })
+            .collect();
+        let bpe = bpe_share.map(|m| Bpe::for_tree(cfg, m));
+        Self {
+            op,
+            children,
+            eot_seen: 0,
+            analyzer: PayloadAnalyzer::new(map),
+            crossbar: Crossbar::new(cfg.n_groups, cfg.delays.crossbar),
+            scheduler: Scheduler::new(cfg.n_groups, SchedPolicy::RoundRobin),
+            depths_scratch: vec![0; cfg.n_groups],
+            fpes,
+            bpe,
+            bytes_arrived: 0,
+            stats: SwitchStats::default(),
+        }
+    }
+
+    /// Current arrival cycle implied by bytes received at line rate.
+    /// Each child feeds its own 10 Gbps port through its own payload
+    /// analyzer (§5 instantiates one PA per port), so the aggregate
+    /// ingress rate scales with the child count: pairs from k children
+    /// land on the shared FPEs k× as fast as a single stream would.
+    fn arrival_cycle(&self) -> Cycles {
+        let ports = (self.children as u64).max(1);
+        self.bytes_arrived * PACE_NUM / (PACE_DEN * ports)
+    }
+
+    fn ingest(&mut self, pkt: &AggregationPacket, header_delay: Cycles) -> IngestOutput {
+        let mut out = IngestOutput::default();
+        self.stats.packets_in += 1;
+        self.stats.bytes_in += pkt.wire_len() as u64;
+        self.bytes_arrived += (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64;
+
+        for p in &pkt.pairs {
+            self.bytes_arrived += p.encoded_len() as u64;
+            self.stats.pairs_in += 1;
+            let arrive = self.arrival_cycle() + header_delay;
+            let g = self.analyzer.classify(p);
+            let deliver = self.crossbar.route(arrive, g);
+            match self.fpes[g].offer(deliver, p.key, p.value, self.op) {
+                FpeOutcome::Kept => {}
+                FpeOutcome::Forwarded {
+                    key,
+                    value,
+                    hash,
+                    ready,
+                } => {
+                    self.forward_evicted(g, key, value, hash, ready, &mut out);
+                }
+            }
+        }
+
+        if pkt.eot {
+            self.eot_seen += 1;
+            if self.eot_seen >= self.children {
+                let flushed = self.flush();
+                out.flushed = Some(flushed);
+            }
+        }
+        self.roll_stats();
+        out
+    }
+
+    /// Route an FPE-evicted pair: to the BPE if the hierarchy is on,
+    /// straight downstream otherwise (fig9 "S-" single-level rows).
+    fn forward_evicted(
+        &mut self,
+        group: usize,
+        key: Key,
+        value: Value,
+        hash: u32,
+        ready: Cycles,
+        out: &mut IngestOutput,
+    ) {
+        match &mut self.bpe {
+            Some(bpe) => {
+                // The scheduler grants this FPE's forward queue; depths
+                // are instantaneous (event-driven model).
+                self.depths_scratch.fill(0);
+                self.depths_scratch[group] = 1;
+                let granted = self.scheduler.pick(&self.depths_scratch).expect("nonempty queue");
+                debug_assert_eq!(granted, group);
+                match bpe.offer_hashed(ready, group, key, value, hash, self.op) {
+                    BpeOutcome::Kept => {}
+                    BpeOutcome::Overflow { key, value, .. } => {
+                        self.emit_pair(KvPair::new(key, value), out);
+                    }
+                }
+            }
+            None => self.emit_pair(KvPair::new(key, value), out),
+        }
+    }
+
+    fn emit_pair(&mut self, p: KvPair, out: &mut IngestOutput) {
+        self.stats.pairs_out_stream += 1;
+        self.stats.bytes_out += p.encoded_len() as u64;
+        out.forwarded.push(p);
+    }
+
+    /// Flush every engine (EoT from all children, §4.2.2): residents
+    /// stream downstream; Table 3's BPE-Flush dominates the cost.
+    fn flush(&mut self) -> Vec<KvPair> {
+        let mut pairs: Vec<KvPair> = Vec::new();
+        let mut flush_cycles: Cycles = 0;
+        for f in &mut self.fpes {
+            let (resident, cyc) = f.flush();
+            flush_cycles += cyc;
+            pairs.extend(resident.into_iter().map(|(k, v)| KvPair::new(k, v)));
+        }
+        if let Some(bpe) = &mut self.bpe {
+            let (resident, cyc) = bpe.flush();
+            flush_cycles += cyc;
+            pairs.extend(resident.into_iter().map(|(k, v)| KvPair::new(k, v)));
+        }
+        self.stats.flush_cycles += flush_cycles;
+        self.stats.pairs_out_flush += pairs.len() as u64;
+        self.stats.bytes_out += pairs.iter().map(|p| p.encoded_len() as u64).sum::<u64>();
+        self.eot_seen = 0;
+        pairs
+    }
+
+    /// Fold engine counters into the per-tree stats snapshot.
+    fn roll_stats(&mut self) {
+        let fpe_aggregated = self.fpes.iter().map(|f| f.aggregated).sum();
+        let fpe_inserted = self.fpes.iter().map(|f| f.inserted).sum();
+        let fpe_evicted = self.fpes.iter().map(|f| f.evicted).sum();
+        let mut fifo_writes: u64 = self.fpes.iter().map(|f| f.fifo_writes).sum();
+        let mut fifo_full: u64 = self.fpes.iter().map(|f| f.fifo_full_events).sum();
+        if let Some(b) = &self.bpe {
+            self.stats.bpe_aggregated = b.aggregated;
+            self.stats.bpe_inserted = b.inserted;
+            self.stats.bpe_overflowed = b.overflowed;
+            fifo_writes += b.fifo_writes;
+            fifo_full += b.fifo_full_events;
+        }
+        self.stats.fpe_aggregated = fpe_aggregated;
+        self.stats.fpe_inserted = fpe_inserted;
+        self.stats.fpe_evicted = fpe_evicted;
+        self.stats.fifo_writes = fifo_writes;
+        self.stats.fifo_full_events = fifo_full;
+        self.stats.makespan_cycles = self.arrival_cycle();
+    }
+
+    /// Account trailing per-packet header overhead on the output side:
+    /// streamed-out pairs are packed into MTU-sized packets downstream.
+    fn finalize_output_bytes(&mut self) {
+        let payload = self.stats.bytes_out;
+        let pkts = payload.div_ceil(MAX_AGG_PAYLOAD as u64).max(
+            (self.stats.pairs_out_stream + self.stats.pairs_out_flush > 0) as u64,
+        );
+        self.stats.bytes_out = payload + pkts * (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64;
+    }
+}
+
+/// The full switch.
+pub struct SwitchAggSwitch {
+    cfg: SwitchConfig,
+    pub header_extract: HeaderExtract,
+    pub forwarding: Forwarding,
+    config_module: ConfigModule,
+    trees: BTreeMap<TreeId, TreeEngine>,
+}
+
+impl SwitchAggSwitch {
+    pub fn new(cfg: SwitchConfig) -> Self {
+        Self {
+            cfg,
+            header_extract: HeaderExtract::new(),
+            forwarding: Forwarding::new(),
+            config_module: ConfigModule::new(),
+            trees: BTreeMap::new(),
+        }
+    }
+
+    pub fn config(&self) -> &SwitchConfig {
+        &self.cfg
+    }
+
+    /// Apply a Configure packet (§4.2.2).  Memory is re-partitioned
+    /// among all configured trees per the active [`MemoryPolicy`]
+    /// (even by default, demand-weighted per §7 if hints were
+    /// announced); engines are (re)built, so configuration must
+    /// precede data for those trees.
+    pub fn configure(&mut self, trees: &[TreeConfig]) {
+        self.config_module.apply(trees);
+        // Rebuild engines for all trees with the new share.
+        let ids: Vec<TreeId> = self.config_module.tree_ids().collect();
+        for id in ids {
+            let tc = self.config_module.get(id).unwrap().clone();
+            let fpe_share = self.config_module.memory_share_for(id, self.cfg.fpe_total_mem);
+            let bpe_share = self
+                .cfg
+                .bpe_mem
+                .map(|m| self.config_module.memory_share_for(id, m));
+            self.forwarding.install_tree_parent(id, tc.parent_port);
+            self.trees.insert(
+                id,
+                TreeEngine::new(&self.cfg, tc.op, tc.children, fpe_share, bpe_share),
+            );
+        }
+    }
+
+    /// Announce a tree's relative memory demand (application hint, §7
+    /// "Memory Utilization"); takes effect at the next `configure`.
+    pub fn set_memory_policy(&mut self, policy: crate::switch::config::MemoryPolicy) {
+        self.config_module.policy = policy;
+    }
+
+    /// Set a tree's demand weight (used by the Weighted policy).
+    pub fn set_tree_weight(&mut self, tree: TreeId, weight: u64) {
+        self.config_module.set_weight(tree, weight);
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Ingest one aggregation packet for its tree.
+    pub fn ingest(&mut self, pkt: &AggregationPacket) -> IngestOutput {
+        let engine = self
+            .trees
+            .get_mut(&pkt.tree)
+            .unwrap_or_else(|| panic!("tree {} not configured", pkt.tree));
+        engine.ingest(pkt, self.cfg.delays.header_analyzer)
+    }
+
+    /// Convenience: run a whole pair stream (pre-packed into MTU
+    /// packets) through one tree; the last packet carries EoT counted
+    /// once per `children`, so pass the merged stream of all children
+    /// with `eot_per_child` packets at the end — or use
+    /// [`Self::ingest_child_streams`].
+    pub fn ingest_stream(&mut self, tree: TreeId, op: AggOp, pairs: &[KvPair]) -> Vec<KvPair> {
+        let mut out = Vec::new();
+        let children = self
+            .config_module
+            .get(tree)
+            .map(|t| t.children)
+            .unwrap_or(1);
+        // Merged stream: emit children EoTs by splitting at the end
+        // (Theorem 2.1: merging flows preserves the reduction ratio).
+        let pkts = AggregationPacket::pack_stream(tree, op, pairs, false);
+        for pkt in &pkts {
+            out.extend(self.ingest(pkt).forwarded);
+        }
+        for _ in 0..children {
+            let eot = AggregationPacket {
+                tree,
+                op,
+                eot: true,
+                pairs: vec![],
+            };
+            let r = self.ingest(&eot);
+            out.extend(r.forwarded);
+            if let Some(flushed) = r.flushed {
+                out.extend(flushed);
+            }
+        }
+        self.finalize(tree);
+        out
+    }
+
+    /// Ingest per-child streams interleaved round-robin packet-wise —
+    /// the many-to-one pattern of Fig. 1.
+    pub fn ingest_child_streams(
+        &mut self,
+        tree: TreeId,
+        op: AggOp,
+        streams: &[Vec<KvPair>],
+    ) -> Vec<KvPair> {
+        let mut out = Vec::new();
+        let packed: Vec<Vec<AggregationPacket>> = streams
+            .iter()
+            .map(|s| AggregationPacket::pack_stream(tree, op, s, true))
+            .collect();
+        let max_len = packed.iter().map(|p| p.len()).max().unwrap_or(0);
+        for i in 0..max_len {
+            for child in &packed {
+                if let Some(pkt) = child.get(i) {
+                    let r = self.ingest(pkt);
+                    out.extend(r.forwarded);
+                    if let Some(flushed) = r.flushed {
+                        out.extend(flushed);
+                    }
+                }
+            }
+        }
+        self.finalize(tree);
+        out
+    }
+
+    /// Close output byte accounting (packetization of the out stream).
+    pub fn finalize(&mut self, tree: TreeId) {
+        if let Some(e) = self.trees.get_mut(&tree) {
+            e.finalize_output_bytes();
+        }
+    }
+
+    pub fn stats(&self, tree: TreeId) -> Option<&SwitchStats> {
+        self.trees.get(&tree).map(|e| &e.stats)
+    }
+
+    /// Average measured FPE pair latency in cycles (Table 3 check).
+    pub fn avg_fpe_latency(&self, tree: TreeId) -> f64 {
+        let e = &self.trees[&tree];
+        let pairs: u64 = e.fpes.iter().map(|f| f.aggregated + f.inserted + f.evicted).sum();
+        let cyc: u64 = e.fpes.iter().map(|f| f.latency_cycles).sum();
+        if pairs == 0 {
+            0.0
+        } else {
+            cyc as f64 / pairs as f64
+        }
+    }
+
+    /// Sum of BPE DRAM commands and stall cycles (overlap diagnostics).
+    pub fn bpe_dram_stats(&self, tree: TreeId) -> Option<(u64, Cycles)> {
+        self.trees[&tree].bpe.as_ref().map(|b| b.dram_stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::packet::TreeConfig;
+    use crate::util::rng::Pcg32;
+
+    fn configured_switch(fpe_mem: u64, bpe_mem: Option<u64>, children: u16) -> SwitchAggSwitch {
+        let cfg = SwitchConfig::scaled(fpe_mem, bpe_mem);
+        let mut sw = SwitchAggSwitch::new(cfg);
+        sw.configure(&[TreeConfig {
+            tree: TreeId(1),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        sw
+    }
+
+    fn pairs(n: usize, distinct: u64, seed: u64) -> Vec<KvPair> {
+        let mut rng = Pcg32::new(seed);
+        (0..n)
+            .map(|_| {
+                let id = rng.gen_range_u64(distinct);
+                KvPair::new(Key::from_id(id, 16 + (id % 49) as usize), 1)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sum_is_conserved_through_the_switch() {
+        let mut sw = configured_switch(64 << 10, Some(1 << 20), 1);
+        let input = pairs(20_000, 500, 42);
+        let want: Value = input.iter().map(|p| p.value).sum();
+        let out = sw.ingest_stream(TreeId(1), AggOp::Sum, &input);
+        let got: Value = out.iter().map(|p| p.value).sum();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn keys_fully_aggregated_when_memory_sufficient() {
+        let mut sw = configured_switch(4 << 20, Some(8 << 20), 1);
+        let input = pairs(10_000, 100, 7);
+        let out = sw.ingest_stream(TreeId(1), AggOp::Sum, &input);
+        // Every distinct key appears exactly once in the output.
+        let mut seen = std::collections::HashMap::new();
+        for p in &out {
+            *seen.entry(p.key).or_insert(0u32) += 1;
+        }
+        assert!(seen.values().all(|&c| c == 1), "duplicate keys in output");
+        assert_eq!(seen.len() as u64, 100);
+        let s = sw.stats(TreeId(1)).unwrap();
+        assert!(s.reduction_ratio() > 0.9, "r={}", s.reduction_ratio());
+    }
+
+    #[test]
+    fn small_memory_reduces_reduction_ratio() {
+        let big = {
+            let mut sw = configured_switch(4 << 20, None, 1);
+            sw.ingest_stream(TreeId(1), AggOp::Sum, &pairs(50_000, 20_000, 3));
+            sw.stats(TreeId(1)).unwrap().reduction_ratio()
+        };
+        let small = {
+            let mut sw = configured_switch(16 << 10, None, 1);
+            sw.ingest_stream(TreeId(1), AggOp::Sum, &pairs(50_000, 20_000, 3));
+            sw.stats(TreeId(1)).unwrap().reduction_ratio()
+        };
+        assert!(big > small, "big={big} small={small}");
+    }
+
+    #[test]
+    fn multilevel_beats_single_level() {
+        let input = pairs(60_000, 30_000, 9);
+        let single = {
+            let mut sw = configured_switch(32 << 10, None, 1);
+            sw.ingest_stream(TreeId(1), AggOp::Sum, &input);
+            sw.stats(TreeId(1)).unwrap().reduction_ratio()
+        };
+        let multi = {
+            let mut sw = configured_switch(32 << 10, Some(4 << 20), 1);
+            sw.ingest_stream(TreeId(1), AggOp::Sum, &input);
+            sw.stats(TreeId(1)).unwrap().reduction_ratio()
+        };
+        assert!(multi > single + 0.2, "multi={multi} single={single}");
+    }
+
+    #[test]
+    fn eot_from_all_children_triggers_flush() {
+        let mut sw = configured_switch(1 << 20, Some(1 << 20), 3);
+        let streams: Vec<Vec<KvPair>> =
+            (0..3).map(|i| pairs(1000, 50, i as u64)).collect();
+        let out = sw.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+        let s = sw.stats(TreeId(1)).unwrap();
+        assert!(s.pairs_out_flush > 0);
+        assert_eq!(s.packets_in > 0, true);
+        let want: Value = streams.iter().flatten().map(|p| p.value).sum();
+        let got: Value = out.iter().map(|p| p.value).sum();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fifo_full_ratio_is_small_at_line_rate() {
+        let mut sw = configured_switch(256 << 10, Some(4 << 20), 1);
+        let input = pairs(100_000, 50_000, 11);
+        sw.ingest_stream(TreeId(1), AggOp::Sum, &input);
+        let s = sw.stats(TreeId(1)).unwrap();
+        assert!(s.fifo_writes >= 100_000);
+        assert!(
+            s.fifo_full_ratio() < 0.01,
+            "full ratio {} too high",
+            s.fifo_full_ratio()
+        );
+    }
+
+    #[test]
+    fn two_trees_split_memory() {
+        let cfg = SwitchConfig::scaled(64 << 10, None);
+        let mut sw = SwitchAggSwitch::new(cfg);
+        let mk = |id| TreeConfig {
+            tree: TreeId(id),
+            children: 1,
+            parent_port: 0,
+            op: AggOp::Sum,
+        };
+        sw.configure(&[mk(1), mk(2)]);
+        assert_eq!(sw.n_trees(), 2);
+        let input = pairs(30_000, 10_000, 5);
+        let r2trees = {
+            sw.ingest_stream(TreeId(1), AggOp::Sum, &input);
+            sw.stats(TreeId(1)).unwrap().reduction_ratio()
+        };
+        let mut solo = SwitchAggSwitch::new(SwitchConfig::scaled(64 << 10, None));
+        solo.configure(&[mk(1)]);
+        solo.ingest_stream(TreeId(1), AggOp::Sum, &input);
+        let r1tree = solo.stats(TreeId(1)).unwrap().reduction_ratio();
+        assert!(
+            r1tree > r2trees,
+            "memory halving should hurt: solo={r1tree} shared={r2trees}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "not configured")]
+    fn unconfigured_tree_panics() {
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::default());
+        let pkt = AggregationPacket {
+            tree: TreeId(9),
+            op: AggOp::Sum,
+            eot: false,
+            pairs: vec![],
+        };
+        sw.ingest(&pkt);
+    }
+}

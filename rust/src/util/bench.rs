@@ -1,0 +1,107 @@
+//! Bench harness (the offline crate set has no criterion): warmup +
+//! timed repetitions, mean / p50 / p95 reporting, and a tabular printer
+//! used by `rust/benches/*` to emit the paper's rows next to timing.
+
+use std::time::Instant;
+
+use super::stats::{human_secs, percentile};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub reps: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    /// Optional work-rate denominator (e.g. pairs processed per rep).
+    pub items_per_rep: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_rep.map(|n| n as f64 / self.mean_s)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `reps` measured repetitions.
+pub fn bench<F: FnMut() -> u64>(name: &str, warmup: usize, reps: usize, mut f: F) -> BenchResult {
+    assert!(reps > 0);
+    let mut items = 0u64;
+    for _ in 0..warmup {
+        items = f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        items = f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / reps as f64;
+    BenchResult {
+        name: name.to_string(),
+        reps,
+        mean_s: mean,
+        p50_s: percentile(&samples, 0.5),
+        p95_s: percentile(&samples, 0.95),
+        items_per_rep: (items > 0).then_some(items),
+    }
+}
+
+/// Print one result in a stable, grep-friendly format.
+pub fn report(r: &BenchResult) {
+    let thr = match r.throughput() {
+        Some(t) if t >= 1e6 => format!("  {:.2} M items/s", t / 1e6),
+        Some(t) => format!("  {t:.0} items/s"),
+        None => String::new(),
+    };
+    println!(
+        "bench {:<44} mean {:>12}  p50 {:>12}  p95 {:>12}  ({} reps){thr}",
+        r.name,
+        human_secs(r.mean_s),
+        human_secs(r.p50_s),
+        human_secs(r.p95_s),
+        r.reps,
+    );
+}
+
+/// Convenience: bench + report.
+pub fn run<F: FnMut() -> u64>(name: &str, warmup: usize, reps: usize, f: F) -> BenchResult {
+    let r = bench(name, warmup, reps, f);
+    report(&r);
+    r
+}
+
+/// Print a section header so `cargo bench` output groups visibly.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_reps_and_orders_percentiles() {
+        let mut n = 0u64;
+        let r = bench("spin", 2, 16, || {
+            n += 1;
+            for _ in 0..1000 {
+                std::hint::black_box(n);
+            }
+            1000
+        });
+        assert_eq!(n, 18); // warmup + reps all executed
+        assert_eq!(r.reps, 16);
+        assert!(r.p50_s <= r.p95_s + 1e-12);
+        assert!(r.mean_s > 0.0);
+        assert_eq!(r.items_per_rep, Some(1000));
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn zero_items_means_no_throughput() {
+        let r = bench("noop", 0, 4, || 0);
+        assert!(r.throughput().is_none());
+    }
+}

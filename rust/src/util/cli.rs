@@ -1,0 +1,157 @@
+//! Minimal CLI argument parser (the offline crate set has no clap).
+//!
+//! Grammar: `switchagg <subcommand> [--key value]... [--flag]...`
+//! Typed getters parse on demand and report friendly errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare `--` is not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    /// Parse sizes like "16MB", "4KiB", "2GB", "512" (bytes).
+    pub fn get_bytes_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => parse_bytes(s).ok_or_else(|| format!("--{name} {s:?}: bad size")),
+        }
+    }
+}
+
+/// "16MB" / "4KiB" / "2g" / "512" → bytes.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (num, unit) = match s.find(|c: char| !c.is_ascii_digit() && c != '.') {
+        None => (s, ""),
+        Some(0) => return None,
+        Some(split) => s.split_at(split),
+    };
+    let base: f64 = num.parse().ok()?;
+    let mult: u64 = match unit.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => 1 << 10,
+        "m" | "mb" | "mib" => 1 << 20,
+        "g" | "gb" | "gib" => 1 << 30,
+        "t" | "tb" | "tib" => 1u64 << 40,
+        _ => return None,
+    };
+    Some((base * mult as f64) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse(&["exp", "fig9", "--scale", "1024", "--verbose", "--s=0.99"]);
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["fig9"]);
+        assert_eq!(a.get("scale"), Some("1024"));
+        assert_eq!(a.get("s"), Some("0.99"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["x", "--n", "42", "--f", "1.5"]);
+        assert_eq!(a.get_parse_or::<u64>("n", 0).unwrap(), 42);
+        assert_eq!(a.get_parse_or::<f64>("f", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_parse_or::<u64>("missing", 7).unwrap(), 7);
+        assert!(a.get_parse::<u64>("f").is_err());
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(parse_bytes("512"), Some(512));
+        assert_eq!(parse_bytes("512b"), Some(512));
+        assert_eq!(parse_bytes("16MB"), Some(16 << 20));
+        assert_eq!(parse_bytes("4KiB"), Some(4 << 10));
+        assert_eq!(parse_bytes("2g"), Some(2 << 30));
+        assert_eq!(parse_bytes("1.5k"), Some(1536));
+        assert_eq!(parse_bytes("nope"), None);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_value() {
+        let a = parse(&["run", "--fast", "--n", "3"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("n"), Some("3"));
+    }
+}

@@ -1,0 +1,102 @@
+//! FxHash (the rustc hasher): a fast, non-cryptographic hasher for the
+//! simulator's internal integer-keyed maps.  The default SipHash costs
+//! ~20 ns per lookup, which dominates the switch's per-pair loop; Fx
+//! is a multiply-rotate over words (~2 ns).  Not DoS-resistant — only
+//! used on simulator-internal keys, never on untrusted input.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// The rustc-hash algorithm (word-at-a-time multiply-xor-rotate).
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, w: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ w).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add_to_hash(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut w = [0u8; 8];
+            w[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_le_bytes(w));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.add_to_hash(v as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add_to_hash(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add_to_hash(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add_to_hash(v as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// HashMap with the Fx hasher.
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_works_and_is_deterministic() {
+        let mut m: FxHashMap<u32, u32> = FxHashMap::default();
+        for i in 0..1000 {
+            m.insert(i, i * 2);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m[&500], 1000);
+        let mut h1 = FxHasher::default();
+        h1.write_u32(42);
+        let mut h2 = FxHasher::default();
+        h2.write_u32(42);
+        assert_eq!(h1.finish(), h2.finish());
+    }
+
+    #[test]
+    fn spreads_sequential_keys() {
+        let mut buckets = [0usize; 64];
+        for i in 0..64_000u32 {
+            let mut h = FxHasher::default();
+            h.write_u32(i);
+            buckets[(h.finish() % 64) as usize] += 1;
+        }
+        let (min, max) = buckets
+            .iter()
+            .fold((usize::MAX, 0), |(lo, hi), &c| (lo.min(c), hi.max(c)));
+        assert!(min > 500 && max < 1500, "min={min} max={max}");
+    }
+}

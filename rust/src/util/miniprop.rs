@@ -1,0 +1,120 @@
+//! Property-test mini-framework (the offline crate set has no proptest).
+//!
+//! Usage:
+//! ```no_run
+//! use switchagg::util::miniprop::prop;
+//! prop("sum is commutative", 256, |rng| {
+//!     let a = rng.next_u32() as u64;
+//!     let b = rng.next_u32() as u64;
+//!     if a + b != b + a {
+//!         return Err(format!("a={a} b={b}"));
+//!     }
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Each case gets a deterministic per-case PRNG derived from the
+//! property name and the case index, so failures print a standalone
+//! reproduction seed.  `SWITCHAGG_PROP_CASES` scales the case count
+//! (e.g. for a longer nightly run).
+
+use super::rng::{Pcg32, SplitMix64};
+
+/// Derive the deterministic seed for `(name, case)`.
+pub fn case_seed(name: &str, case: u64) -> u64 {
+    let mut h = SplitMix64::new(0xC0FFEE ^ case);
+    let mut acc = h.next_u64();
+    for b in name.bytes() {
+        acc = acc.rotate_left(7) ^ b as u64;
+        acc = acc.wrapping_mul(0x100_0000_01B3);
+    }
+    let mut h2 = SplitMix64::new(acc);
+    h2.next_u64()
+}
+
+/// Number of cases after environment scaling.
+pub fn scaled_cases(requested: u64) -> u64 {
+    match std::env::var("SWITCHAGG_PROP_CASES") {
+        Ok(v) => v.parse().unwrap_or(requested),
+        Err(_) => requested,
+    }
+}
+
+/// Run `cases` random cases of a property; panic with the seed and the
+/// property's own message on the first failure.
+pub fn prop<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let cases = scaled_cases(cases);
+    for case in 0..cases {
+        let seed = case_seed(name, case);
+        let mut rng = Pcg32::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (reproduce with seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (debugging helper).
+pub fn replay<F>(seed: u64, mut property: F) -> Result<(), String>
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let mut rng = Pcg32::new(seed);
+    property(&mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        prop("always ok", 50, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn failing_property_panics_with_name() {
+        prop("always fails", 10, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn case_seeds_are_distinct_and_stable() {
+        let s0 = case_seed("p", 0);
+        let s1 = case_seed("p", 1);
+        let s0b = case_seed("p", 0);
+        assert_eq!(s0, s0b);
+        assert_ne!(s0, s1);
+        assert_ne!(case_seed("p", 0), case_seed("q", 0));
+    }
+
+    #[test]
+    fn replay_reproduces_case_stream() {
+        let seed = case_seed("stream", 3);
+        let mut first = Vec::new();
+        replay(seed, |rng| {
+            first.push(rng.next_u64());
+            first.push(rng.next_u64());
+            Ok(())
+        })
+        .unwrap();
+        let mut second = Vec::new();
+        replay(seed, |rng| {
+            second.push(rng.next_u64());
+            second.push(rng.next_u64());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(first, second);
+    }
+}

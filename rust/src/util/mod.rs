@@ -1,0 +1,13 @@
+//! Offline-build substrates: deterministic PRNG, Zipf sampler,
+//! statistics, a tiny CLI parser, a property-test mini-framework and a
+//! bench harness (the vendored crate set has no rand / clap / criterion
+//! / proptest, so we build them — see DESIGN.md §Offline-build
+//! constraints).
+
+pub mod bench;
+pub mod cli;
+pub mod fxhash;
+pub mod miniprop;
+pub mod rng;
+pub mod stats;
+pub mod zipf;

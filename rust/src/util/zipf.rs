@@ -1,0 +1,167 @@
+//! Zipf-distributed sampler — rejection-inversion (Hörmann & Derflinger
+//! 1996, as in Apache Commons `RejectionInversionZipfSampler`).  O(1)
+//! per sample with no O(n) tables, so the paper's "key variety = 1 GB,
+//! skewness 0.99" workloads (§6.1) are cheap to synthesize.
+
+use super::rng::Pcg32;
+
+/// Samples `1..=n` with P(k) ∝ 1/k^s (s ≠ 1; the paper uses 0.99).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    exponent: f64,
+    h_integral_x1: f64,
+    h_integral_n: f64,
+    s: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, exponent: f64) -> Self {
+        assert!(n >= 1, "Zipf needs n >= 1");
+        assert!(exponent > 0.0, "Zipf exponent must be > 0");
+        let h_integral_x1 = h_integral(1.5, exponent) - 1.0;
+        let h_integral_n = h_integral(n as f64 + 0.5, exponent);
+        let s = 2.0
+            - h_integral_inverse(
+                h_integral(2.5, exponent) - h(2.0, exponent),
+                exponent,
+            );
+        Self {
+            n,
+            exponent,
+            h_integral_x1,
+            h_integral_n,
+            s,
+        }
+    }
+
+    /// Draw one sample in `1..=n`.
+    pub fn sample(&self, rng: &mut Pcg32) -> u64 {
+        loop {
+            let u = self.h_integral_n
+                + rng.next_f64() * (self.h_integral_x1 - self.h_integral_n);
+            // u is uniform in (h_integral_x1, h_integral_n].
+            let x = h_integral_inverse(u, self.exponent);
+            let k = x.round().clamp(1.0, self.n as f64);
+            if k - x <= self.s
+                || u >= h_integral(k + 0.5, self.exponent) - h(k, self.exponent)
+            {
+                return k as u64;
+            }
+        }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn exponent(&self) -> f64 {
+        self.exponent
+    }
+}
+
+/// H(x) = (x^(1-e) - 1) / (1 - e), computed stably near e = 1.
+fn h_integral(x: f64, e: f64) -> f64 {
+    let log_x = x.ln();
+    helper2((1.0 - e) * log_x) * log_x
+}
+
+/// h(x) = x^-e
+fn h(x: f64, e: f64) -> f64 {
+    (-e * x.ln()).exp()
+}
+
+/// Inverse of `h_integral`.
+fn h_integral_inverse(x: f64, e: f64) -> f64 {
+    let mut t = x * (1.0 - e);
+    if t < -1.0 {
+        t = -1.0; // guard rounding at the distribution head
+    }
+    (helper1(t) * x).exp()
+}
+
+/// helper1(x) = ln(1+x)/x, stable near 0.
+fn helper1(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.ln_1p() / x
+    } else {
+        1.0 - x / 2.0 + x * x / 3.0
+    }
+}
+
+/// helper2(x) = (e^x - 1)/x, stable near 0.
+fn helper2(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.exp_m1() / x
+    } else {
+        1.0 + x / 2.0 + x * x / 6.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn freq(n: u64, s: f64, draws: usize, seed: u64) -> Vec<f64> {
+        let z = Zipf::new(n, s);
+        let mut rng = Pcg32::new(seed);
+        let mut counts = vec![0usize; n as usize];
+        for _ in 0..draws {
+            let k = z.sample(&mut rng);
+            assert!((1..=n).contains(&k));
+            counts[(k - 1) as usize] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn small_n_matches_exact_pmf() {
+        let n = 10u64;
+        let s = 0.99;
+        let f = freq(n, s, 200_000, 1);
+        let norm: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+        for k in 1..=n {
+            let want = (k as f64).powf(-s) / norm;
+            let got = f[(k - 1) as usize];
+            assert!(
+                (got - want).abs() < 0.01,
+                "k={k} got={got:.4} want={want:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn rank1_dominates_when_heavily_skewed() {
+        let f = freq(1000, 1.5, 100_000, 2);
+        // Exact: P(1) = 1/zeta_1000(1.5) ~= 0.383.
+        let norm: f64 = (1..=1000).map(|k| (k as f64).powf(-1.5)).sum();
+        assert!((f[0] - 1.0 / norm).abs() < 0.01, "rank-1 mass {}", f[0]);
+        assert!(f[0] > 2.0 * f[1]);
+    }
+
+    #[test]
+    fn large_n_is_cheap_and_in_range() {
+        // 64M keys — the fig2b setting; must not allocate O(n).
+        let z = Zipf::new(64 << 20, 0.99);
+        let mut rng = Pcg32::new(3);
+        for _ in 0..10_000 {
+            let k = z.sample(&mut rng);
+            assert!(k >= 1 && k <= 64 << 20);
+        }
+    }
+
+    #[test]
+    fn head_mass_grows_with_exponent() {
+        let f1 = freq(100, 0.5, 100_000, 4);
+        let f2 = freq(100, 1.2, 100_000, 4);
+        assert!(f2[0] > f1[0]);
+    }
+
+    #[test]
+    fn supports_exponent_exactly_one() {
+        // The stable-helpers formulation has no pole at s = 1.
+        let f = freq(50, 1.0, 100_000, 5);
+        let norm: f64 = (1..=50).map(|k| 1.0 / k as f64).sum();
+        assert!((f[0] - 1.0 / norm).abs() < 0.01);
+    }
+}

@@ -1,0 +1,135 @@
+//! Synthetic text corpus for the WordCount system test (§6.3).
+//!
+//! "We use highly skewed key distribution since the word distribution
+//! usually follows a Zipf distribution."  Words are drawn Zipf(0.99)
+//! from a vocabulary; each rank maps to a deterministic ASCII word
+//! (3–16 chars), so mappers tokenizing the corpus produce exactly the
+//! key-value pairs the aggregation layer expects.
+
+use crate::protocol::{Key, KvPair};
+use crate::util::rng::Pcg32;
+use crate::util::zipf::Zipf;
+
+/// Deterministic ASCII word for a vocabulary rank (1-based).
+pub fn word_for_rank(rank: u64) -> String {
+    debug_assert!(rank >= 1);
+    // Base-26 encoding gives short words to low (hot) ranks, like
+    // natural language.
+    let mut s = String::new();
+    let mut x = rank - 1;
+    loop {
+        s.push((b'a' + (x % 26) as u8) as char);
+        x /= 26;
+        if x == 0 {
+            break;
+        }
+        x -= 1; // bijective base-26
+    }
+    // Natural-ish minimum length of 3: pad with digits, which never
+    // appear in the base-26 body, so padded words cannot collide with
+    // longer unpadded ones.
+    while s.len() < 3 {
+        s.push((b'0' + (rank.wrapping_mul(31) % 10) as u8) as char);
+    }
+    s
+}
+
+/// Corpus generator.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub vocabulary: u64,
+    pub skew: f64,
+    pub seed: u64,
+}
+
+impl Corpus {
+    pub fn new(vocabulary: u64, seed: u64) -> Self {
+        Self {
+            vocabulary,
+            skew: 0.99,
+            seed,
+        }
+    }
+
+    /// Generate lines of text totalling ~`bytes` (whitespace-separated
+    /// words, ~12 words per line).
+    pub fn lines(&self, bytes: u64) -> Vec<String> {
+        let z = Zipf::new(self.vocabulary, self.skew);
+        let mut rng = Pcg32::new(self.seed);
+        let mut lines = Vec::new();
+        let mut produced = 0u64;
+        let mut line = String::new();
+        let mut words_in_line = 0;
+        while produced < bytes {
+            let w = word_for_rank(z.sample(&mut rng));
+            produced += w.len() as u64 + 1;
+            if !line.is_empty() {
+                line.push(' ');
+            }
+            line.push_str(&w);
+            words_in_line += 1;
+            if words_in_line == 12 {
+                lines.push(std::mem::take(&mut line));
+                words_in_line = 0;
+            }
+        }
+        if !line.is_empty() {
+            lines.push(line);
+        }
+        lines
+    }
+
+    /// Map phase of WordCount: tokenize lines into (word, 1) pairs.
+    pub fn tokenize(lines: &[String]) -> Vec<KvPair> {
+        lines
+            .iter()
+            .flat_map(|l| l.split_ascii_whitespace())
+            .map(|w| KvPair::new(Key::new(w.as_bytes()), 1))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn words_are_deterministic_and_distinct() {
+        assert_eq!(word_for_rank(1), word_for_rank(1));
+        let mut seen = std::collections::HashSet::new();
+        for r in 1..=10_000 {
+            let w = word_for_rank(r);
+            assert!(w.len() >= 3 && w.len() <= 16, "{w}");
+            assert!(seen.insert(w), "rank {r} collides");
+        }
+    }
+
+    #[test]
+    fn corpus_has_requested_size_and_zipf_shape() {
+        let c = Corpus::new(10_000, 7);
+        let lines = c.lines(100_000);
+        let total: usize = lines.iter().map(|l| l.len() + 1).sum();
+        assert!(total as i64 - 100_000i64 > -100);
+        let pairs = Corpus::tokenize(&lines);
+        let mut counts: HashMap<&str, u64> = HashMap::new();
+        for l in &lines {
+            for w in l.split_ascii_whitespace() {
+                *counts.entry(w).or_default() += 1;
+            }
+        }
+        // Hot word dominates (zipf).
+        let max = counts.values().max().unwrap();
+        let mean = pairs.len() as u64 / counts.len() as u64;
+        assert!(*max > 10 * mean, "max={max} mean={mean}");
+    }
+
+    #[test]
+    fn tokenize_counts_match_text() {
+        let lines = vec!["a b a".to_string(), "c a".to_string()];
+        let pairs = Corpus::tokenize(&lines);
+        assert_eq!(pairs.len(), 5);
+        let a = Key::new(b"a");
+        assert_eq!(pairs.iter().filter(|p| p.key == a).count(), 3);
+    }
+}

@@ -1,0 +1,209 @@
+//! Key-value workload generator (§6.1 Workloads).
+//!
+//! Parameters mirror the paper: *workload size* (total bytes a mapper
+//! emits), *key variety* (given in bytes, like the paper's "1 GB";
+//! converted to a key count via the mean pair size), key lengths
+//! uniform in 16–64 B (deterministic per key id, so a key's length is
+//! stable across mappers), and popularity either uniform or
+//! Zipf(0.99).  Generation is streaming — O(1) memory — so paper-scale
+//! workloads are synthesizable.
+
+use crate::protocol::{Key, KvPair};
+use crate::util::rng::Pcg32;
+use crate::util::zipf::Zipf;
+
+/// Key popularity distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KeyDist {
+    Uniform,
+    /// Zipf with the given skewness (paper: 0.99).
+    Zipf(f64),
+}
+
+/// Workload parameters.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Total bytes of encoded pairs to emit (per mapper).
+    pub total_bytes: u64,
+    /// Number of distinct keys in the key space.
+    pub key_variety: u64,
+    /// Key length bounds (inclusive); actual length is a deterministic
+    /// function of the key id.
+    pub key_len_min: usize,
+    pub key_len_max: usize,
+    pub dist: KeyDist,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// Paper-style spec: sizes in bytes, variety in bytes (converted
+    /// using the mean pair size), keys 16–64 B.
+    pub fn paper(total_bytes: u64, key_variety_bytes: u64, dist: KeyDist, seed: u64) -> Self {
+        let mut spec = Self {
+            total_bytes,
+            key_variety: 1,
+            key_len_min: 16,
+            key_len_max: 64,
+            dist,
+            seed,
+        };
+        let mean = spec.mean_pair_bytes();
+        spec.key_variety = (key_variety_bytes as f64 / mean).max(1.0) as u64;
+        spec
+    }
+
+    /// Deterministic key length for a key id (stable across mappers).
+    pub fn key_len(&self, id: u64) -> usize {
+        let span = (self.key_len_max - self.key_len_min + 1) as u64;
+        let h = id
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .rotate_left(31)
+            .wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+        self.key_len_min + (h % span) as usize
+    }
+
+    /// Mean encoded pair size (metadata 2 B + key + value 4 B).
+    pub fn mean_pair_bytes(&self) -> f64 {
+        let mean_key = (self.key_len_min + self.key_len_max) as f64 / 2.0;
+        2.0 + mean_key + 4.0
+    }
+
+    /// Expected number of pairs for `total_bytes`.
+    pub fn approx_pairs(&self) -> u64 {
+        (self.total_bytes as f64 / self.mean_pair_bytes()) as u64
+    }
+
+    /// Build the pair for a key id.
+    pub fn pair_for(&self, id: u64) -> KvPair {
+        KvPair::new(Key::from_id(id, self.key_len(id)), 1)
+    }
+
+    pub fn stream(&self) -> StreamGen {
+        StreamGen::new(self.clone())
+    }
+
+    /// Materialize the whole stream (small scaled workloads).
+    pub fn generate(&self) -> Vec<KvPair> {
+        self.stream().collect()
+    }
+}
+
+/// Streaming generator: yields pairs until `total_bytes` is reached.
+pub struct StreamGen {
+    spec: WorkloadSpec,
+    rng: Pcg32,
+    zipf: Option<Zipf>,
+    emitted_bytes: u64,
+    pub emitted_pairs: u64,
+}
+
+impl StreamGen {
+    pub fn new(spec: WorkloadSpec) -> Self {
+        let zipf = match spec.dist {
+            KeyDist::Zipf(s) => Some(Zipf::new(spec.key_variety, s)),
+            KeyDist::Uniform => None,
+        };
+        Self {
+            rng: Pcg32::new(spec.seed),
+            zipf,
+            spec,
+            emitted_bytes: 0,
+            emitted_pairs: 0,
+        }
+    }
+
+    fn next_id(&mut self) -> u64 {
+        match &self.zipf {
+            Some(z) => z.sample(&mut self.rng) - 1,
+            None => self.rng.gen_range_u64(self.spec.key_variety),
+        }
+    }
+}
+
+impl Iterator for StreamGen {
+    type Item = KvPair;
+
+    fn next(&mut self) -> Option<KvPair> {
+        if self.emitted_bytes >= self.spec.total_bytes {
+            return None;
+        }
+        let id = self.next_id();
+        let p = self.spec.pair_for(id);
+        self.emitted_bytes += p.encoded_len() as u64;
+        self.emitted_pairs += 1;
+        Some(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn spec(dist: KeyDist) -> WorkloadSpec {
+        WorkloadSpec::paper(1 << 20, 64 << 10, dist, 42)
+    }
+
+    #[test]
+    fn emits_requested_bytes() {
+        let s = spec(KeyDist::Uniform);
+        let pairs = s.generate();
+        let bytes: u64 = pairs.iter().map(|p| p.encoded_len() as u64).sum();
+        assert!(bytes >= s.total_bytes);
+        assert!(bytes < s.total_bytes + 80); // one pair of slack
+        let approx = s.approx_pairs();
+        let n = pairs.len() as u64;
+        assert!(n.abs_diff(approx) < approx / 10);
+    }
+
+    #[test]
+    fn key_lengths_in_range_and_stable() {
+        let s = spec(KeyDist::Uniform);
+        for id in 0..1000 {
+            let l = s.key_len(id);
+            assert!((16..=64).contains(&l));
+            assert_eq!(l, s.key_len(id)); // deterministic
+        }
+        // Lengths should span the range, not collapse.
+        let distinct: HashSet<usize> = (0..1000).map(|i| s.key_len(i)).collect();
+        assert!(distinct.len() > 30);
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let a = spec(KeyDist::Zipf(0.99)).generate();
+        let b = spec(KeyDist::Zipf(0.99)).generate();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zipf_is_skewed_uniform_is_not() {
+        let count_top = |pairs: &[KvPair]| {
+            let mut counts = std::collections::HashMap::new();
+            for p in pairs {
+                *counts.entry(p.key).or_insert(0u64) += 1;
+            }
+            let mut v: Vec<u64> = counts.values().copied().collect();
+            v.sort_unstable_by(|a, b| b.cmp(a));
+            (v[0], counts.len())
+        };
+        let (top_u, distinct_u) = count_top(&spec(KeyDist::Uniform).generate());
+        let (top_z, distinct_z) = count_top(&spec(KeyDist::Zipf(0.99)).generate());
+        assert!(top_z > 10 * top_u, "zipf top {top_z} uniform top {top_u}");
+        assert!(distinct_z < distinct_u);
+    }
+
+    #[test]
+    fn paper_spec_converts_variety_bytes() {
+        let s = WorkloadSpec::paper(1 << 30, 1 << 20, KeyDist::Uniform, 0);
+        // ~1 MiB / 46 B ≈ 22.8 K keys.
+        assert!(s.key_variety > 20_000 && s.key_variety < 25_000);
+    }
+
+    #[test]
+    fn streaming_matches_generate() {
+        let s = spec(KeyDist::Uniform);
+        let via_stream: Vec<KvPair> = s.stream().collect();
+        assert_eq!(via_stream, s.generate());
+    }
+}

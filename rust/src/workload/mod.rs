@@ -1,0 +1,8 @@
+//! Workload synthesis (§6.1): key-value streams with variable key
+//! lengths (16–64 B), uniform or Zipf(0.99)-skewed key popularity, and
+//! a synthetic text corpus for the WordCount system test (§6.3).
+
+pub mod corpus;
+pub mod generator;
+
+pub use generator::{KeyDist, StreamGen, WorkloadSpec};

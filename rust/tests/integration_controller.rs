@@ -1,0 +1,153 @@
+//! Integration tests for the control plane: Launch → tree → Configure
+//! → Ack over realistic topologies, including failure injection.
+
+use switchagg::controller::{AggTree, Controller};
+use switchagg::net::{NodeKind, Topology};
+use switchagg::protocol::{AckKind, AggOp, LaunchPacket, Packet, TreeId};
+use switchagg::switch::{SwitchAggSwitch, SwitchConfig};
+
+#[test]
+fn full_control_plane_handshake_on_two_level_topology() {
+    let (topo, _spine, _leaves, hosts) = Topology::two_level(3, 3);
+    let mut controller = Controller::new(topo.clone());
+    let (mappers, reducer) = (&hosts[..6], hosts[8]);
+    let launch = controller
+        .launch(
+            &LaunchPacket {
+                mappers: mappers.iter().map(|m| m.0).collect(),
+                reducers: vec![reducer.0],
+            },
+            AggOp::Sum,
+        )
+        .unwrap();
+    // Configure every switch, ack back; the final ack notifies master.
+    let mut master_acked = false;
+    let n = launch.configures.len();
+    for (i, (sw_node, cfgp)) in launch.configures.iter().enumerate() {
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::default());
+        sw.configure(&cfgp.trees);
+        assert_eq!(sw.n_trees(), 1);
+        // The wire round trip of the configure packet.
+        let bytes = Packet::Configure(cfgp.clone()).encode();
+        assert_eq!(Packet::decode(&bytes).unwrap(), Packet::Configure(cfgp.clone()));
+        match controller.switch_ack(launch.tree, *sw_node).unwrap() {
+            Some(Packet::Ack(AckKind::Master)) => {
+                assert_eq!(i, n - 1, "master ack must come last");
+                master_acked = true;
+            }
+            Some(_) => panic!("unexpected packet"),
+            None => assert!(i < n - 1),
+        }
+    }
+    assert!(master_acked);
+    assert!(controller.is_running(launch.tree));
+}
+
+#[test]
+fn tree_children_counts_cover_all_mappers() {
+    // Invariant: summing leaf-level mapper children across switches
+    // covers every mapper exactly once.
+    let (topo, _spine, _leaves, hosts) = Topology::two_level(4, 2);
+    let mappers = &hosts[..7];
+    let reducer = hosts[7];
+    let tree = AggTree::build(&topo, TreeId(5), AggOp::Sum, mappers, reducer).unwrap();
+    let mapper_children: usize = tree
+        .children
+        .values()
+        .flatten()
+        .filter(|n| topo.kind(**n) == NodeKind::Host)
+        .count();
+    assert_eq!(mapper_children, mappers.len());
+    // Every switch's parent port exists in the topology.
+    for (sw, cfg) in &tree.switch_cfgs {
+        let found = topo.neighbors(*sw).any(|(p, _)| p == cfg.parent_port);
+        assert!(found, "switch {sw} parent port {}", cfg.parent_port);
+    }
+    // Leaf-to-root order: children of a later switch may include
+    // earlier switches, never the reverse.
+    for (i, sw) in tree.levels.iter().enumerate() {
+        for child in &tree.children[sw] {
+            if topo.kind(*child) == NodeKind::Switch {
+                let pos = tree.levels.iter().position(|s| s == child).unwrap();
+                assert!(pos < i, "child switch after parent in levels");
+            }
+        }
+    }
+}
+
+#[test]
+fn launch_rejects_bad_requests() {
+    let (topo, _sw, hosts) = Topology::star(4);
+    let mut c = Controller::new(topo);
+    // No mappers.
+    assert!(c
+        .launch(
+            &LaunchPacket {
+                mappers: vec![],
+                reducers: vec![hosts[0].0]
+            },
+            AggOp::Sum
+        )
+        .is_err());
+    // Reducer that is a switch (node 0 in a star).
+    assert!(c
+        .launch(
+            &LaunchPacket {
+                mappers: vec![hosts[0].0],
+                reducers: vec![0]
+            },
+            AggOp::Sum
+        )
+        .is_err());
+}
+
+#[test]
+fn concurrent_trees_share_switches() {
+    let (topo, _sw, hosts) = Topology::star(4);
+    let mut c = Controller::new(topo);
+    let l1 = c
+        .launch(
+            &LaunchPacket {
+                mappers: vec![hosts[0].0, hosts[1].0],
+                reducers: vec![hosts[3].0],
+            },
+            AggOp::Sum,
+        )
+        .unwrap();
+    let l2 = c
+        .launch(
+            &LaunchPacket {
+                mappers: vec![hosts[1].0, hosts[2].0],
+                reducers: vec![hosts[0].0],
+            },
+            AggOp::Max,
+        )
+        .unwrap();
+    assert_ne!(l1.tree, l2.tree);
+    // One physical switch carries both trees.
+    let mut sw = SwitchAggSwitch::new(SwitchConfig::default());
+    sw.configure(&l1.configures[0].1.trees);
+    sw.configure(&l2.configures[0].1.trees);
+    assert_eq!(sw.n_trees(), 2);
+}
+
+#[test]
+fn teardown_releases_tree_state() {
+    let (topo, _sw, hosts) = Topology::star(3);
+    let mut c = Controller::new(topo);
+    let l = c
+        .launch(
+            &LaunchPacket {
+                mappers: vec![hosts[0].0],
+                reducers: vec![hosts[2].0],
+            },
+            AggOp::Sum,
+        )
+        .unwrap();
+    assert!(c.tree(l.tree).is_some());
+    assert!(c.teardown(l.tree));
+    assert!(c.tree(l.tree).is_none());
+    // Acks for a torn-down tree are failures, not panics.
+    let sw_node = l.configures[0].0;
+    assert!(c.switch_ack(l.tree, sw_node).is_err());
+}

@@ -1,0 +1,140 @@
+//! Integration tests for the MapReduce-like framework: end-to-end jobs
+//! on the paper's testbed and beyond, WordCount correctness, and the
+//! with/without-SwitchAgg invariants of §6.3.
+
+use switchagg::framework::{run_job, JobSpec, Mapper, Reducer};
+use switchagg::net::Topology;
+use switchagg::protocol::{AggOp, Key};
+use switchagg::switch::SwitchConfig;
+use switchagg::workload::corpus::Corpus;
+use switchagg::workload::generator::{KeyDist, WorkloadSpec};
+
+fn spec(on: bool) -> JobSpec {
+    JobSpec {
+        switch_cfg: SwitchConfig::scaled(64 << 10, Some(4 << 20)),
+        aggregation_enabled: on,
+        op: AggOp::Sum,
+    }
+}
+
+#[test]
+fn wordcount_counts_are_exact() {
+    let (topo, _sw, hosts) = Topology::star(4);
+    let corpus = Corpus::new(5_000, 77);
+    let lines = corpus.lines(512 << 10);
+    // Ground truth straight from the text.
+    let mut truth = std::collections::HashMap::new();
+    for l in &lines {
+        for w in l.split_ascii_whitespace() {
+            *truth.entry(w.to_string()).or_insert(0i64) += 1;
+        }
+    }
+    let per = lines.len().div_ceil(3);
+    let mappers: Vec<Mapper> = lines
+        .chunks(per)
+        .map(|c| Mapper::WordCount { lines: c.to_vec() })
+        .collect();
+    let n = mappers.len();
+    let (report, merge) = run_job(&topo, &hosts[..n], hosts[3], &mappers, &spec(true)).unwrap();
+    assert_eq!(merge.table.len(), truth.len());
+    for (w, c) in &truth {
+        assert_eq!(merge.table[&Key::new(w.as_bytes())], *c, "word {w}");
+    }
+    assert!(report.reduction_ratio > 0.0);
+}
+
+#[test]
+fn aggregation_toggle_does_not_change_results() {
+    let (topo, _sw, hosts) = Topology::star(4);
+    let mappers: Vec<Mapper> = (0..3)
+        .map(|i| {
+            Mapper::Synthetic(WorkloadSpec::paper(
+                256 << 10,
+                64 << 10,
+                KeyDist::Zipf(0.99),
+                400 + i,
+            ))
+        })
+        .collect();
+    let (ra, ma) = run_job(&topo, &hosts[..3], hosts[3], &mappers, &spec(true)).unwrap();
+    let (rb, mb) = run_job(&topo, &hosts[..3], hosts[3], &mappers, &spec(false)).unwrap();
+    assert_eq!(ma.table, mb.table);
+    assert_eq!(ra.result_value_sum, rb.result_value_sum);
+    assert_eq!(rb.reduction_ratio, 0.0);
+    assert!(ra.reduction_ratio > 0.3);
+    assert!(ra.output_bytes < rb.output_bytes);
+}
+
+#[test]
+fn job_reports_are_internally_consistent() {
+    let (topo, _sw, hosts) = Topology::star(4);
+    let mappers: Vec<Mapper> = (0..3)
+        .map(|i| {
+            Mapper::Synthetic(WorkloadSpec::paper(
+                128 << 10,
+                32 << 10,
+                KeyDist::Uniform,
+                500 + i,
+            ))
+        })
+        .collect();
+    let (r, merge) = run_job(&topo, &hosts[..3], hosts[3], &mappers, &spec(true)).unwrap();
+    assert_eq!(r.result_value_sum, r.input_pairs as i64); // all values 1
+    assert_eq!(r.result_keys, merge.table.len());
+    assert!(r.output_pairs >= merge.table.len() as u64);
+    assert!(r.jct.total_s > 0.0 && r.jct_baseline.total_s > 0.0);
+    assert!(r.cpu_util > 0.0 && r.cpu_util <= 1.0);
+    assert!((0.0..=1.0).contains(&r.reduction_ratio));
+    assert!(r.fifo_writes >= r.input_pairs);
+}
+
+#[test]
+fn software_and_xla_reducers_agree_when_artifacts_present() {
+    std::env::set_var(
+        "SWITCHAGG_ARTIFACTS",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+    );
+    let Ok(engine) = switchagg::runtime::AggEngine::discover() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let streams: Vec<Vec<_>> = (0..2)
+        .map(|i| {
+            WorkloadSpec::paper(64 << 10, 16 << 10, KeyDist::Zipf(0.99), 600 + i).generate()
+        })
+        .collect();
+    let sw = Reducer::merge_software(&streams, AggOp::Sum);
+    let xla = Reducer::merge_xla(&engine, &streams, AggOp::Sum).unwrap();
+    assert_eq!(sw.table, xla.table);
+}
+
+#[test]
+fn two_level_topology_job() {
+    let (topo, _spine, _leaves, hosts) = Topology::two_level(2, 2);
+    let mappers: Vec<Mapper> = (0..3)
+        .map(|i| {
+            Mapper::Synthetic(WorkloadSpec::paper(
+                64 << 10,
+                16 << 10,
+                KeyDist::Uniform,
+                700 + i,
+            ))
+        })
+        .collect();
+    let (r, _) = run_job(&topo, &hosts[..3], hosts[3], &mappers, &spec(true)).unwrap();
+    assert_eq!(r.result_value_sum, r.input_pairs as i64);
+    assert!(r.reduction_ratio > 0.0);
+}
+
+#[test]
+fn single_mapper_degenerate_job() {
+    let (topo, _sw, hosts) = Topology::star(2);
+    let mappers = vec![Mapper::Synthetic(WorkloadSpec::paper(
+        32 << 10,
+        8 << 10,
+        KeyDist::Uniform,
+        1,
+    ))];
+    let (r, _) = run_job(&topo, &hosts[..1], hosts[1], &mappers, &spec(true)).unwrap();
+    assert_eq!(r.result_value_sum, r.input_pairs as i64);
+}

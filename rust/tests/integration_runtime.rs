@@ -1,0 +1,189 @@
+//! Cross-layer integration: the Rust coordinator executing the
+//! AOT-compiled JAX/Pallas kernels via PJRT.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise — but
+//! `make test` always builds artifacts first).
+
+use switchagg::protocol::{AggOp, Key, KvPair};
+use switchagg::runtime::{AggEngine, XlaAggregator};
+use switchagg::switch::hash::fnv1a_words;
+use switchagg::util::rng::Pcg32;
+
+fn engine() -> Option<AggEngine> {
+    std::env::set_var(
+        "SWITCHAGG_ARTIFACTS",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+    );
+    match AggEngine::discover() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping runtime integration: {err:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_matches_engine_constants() {
+    let Some(e) = engine() else { return };
+    assert_eq!(e.table_size, 65536);
+    assert_eq!(e.batch_size, 1024);
+    assert_eq!(e.key_words, 16);
+    for entry in [
+        "agg_sum_f32",
+        "agg_max_f32",
+        "agg_min_f32",
+        "agg_sum_i32",
+        "hash_fnv",
+        "hash_agg_sum_f32",
+    ] {
+        assert!(e.has_entry(entry), "missing {entry}");
+    }
+}
+
+#[test]
+fn xla_scatter_sum_matches_rust_reference() {
+    let Some(e) = engine() else { return };
+    let mut rng = Pcg32::new(1);
+    let table = vec![0f32; e.table_size];
+    let mut idx = Vec::with_capacity(e.batch_size);
+    let mut vals = Vec::with_capacity(e.batch_size);
+    let mut want = table.clone();
+    for _ in 0..e.batch_size {
+        // ~10% padding lanes.
+        let slot = if rng.gen_bool(0.1) {
+            -1
+        } else {
+            rng.gen_range_u64(e.table_size as u64) as i32
+        };
+        let v = (rng.next_f64() * 100.0 - 50.0) as f32;
+        if slot >= 0 {
+            want[slot as usize] += v;
+        }
+        idx.push(slot);
+        vals.push(v);
+    }
+    let got = e.aggregate_f32(AggOp::Sum, &table, &idx, &vals).unwrap();
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert!((g - w).abs() < 1e-3, "slot {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn xla_max_min_match_rust_reference() {
+    let Some(e) = engine() else { return };
+    let mut rng = Pcg32::new(2);
+    for op in [AggOp::Max, AggOp::Min] {
+        let init = match op {
+            AggOp::Max => f32::NEG_INFINITY,
+            _ => f32::INFINITY,
+        };
+        let table = vec![init; e.table_size];
+        let mut want = table.clone();
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        for _ in 0..e.batch_size {
+            let slot = rng.gen_range_u64(256) as i32; // heavy duplicates
+            let v = (rng.next_f64() * 10.0) as f32;
+            match op {
+                AggOp::Max => want[slot as usize] = want[slot as usize].max(v),
+                _ => want[slot as usize] = want[slot as usize].min(v),
+            }
+            idx.push(slot);
+            vals.push(v);
+        }
+        let got = e.aggregate_f32(op, &table, &idx, &vals).unwrap();
+        for i in 0..256 {
+            assert_eq!(got[i], want[i], "{op} slot {i}");
+        }
+    }
+}
+
+#[test]
+fn xla_i32_sum_is_exact() {
+    let Some(e) = engine() else { return };
+    let table = vec![0i32; e.table_size];
+    let mut idx = vec![-1i32; e.batch_size];
+    let mut vals = vec![0i32; e.batch_size];
+    for i in 0..e.batch_size {
+        idx[i] = (i % 100) as i32;
+        vals[i] = i as i32;
+    }
+    let got = e.aggregate_sum_i32(&table, &idx, &vals).unwrap();
+    let mut want = vec![0i64; 100];
+    for i in 0..e.batch_size {
+        want[i % 100] += i as i64;
+    }
+    for s in 0..100 {
+        assert_eq!(got[s] as i64, want[s], "slot {s}");
+    }
+}
+
+#[test]
+fn pallas_hash_is_bit_identical_to_rust_hash() {
+    // THE cross-layer contract: rust/src/switch/hash.rs and the Pallas
+    // kernel must agree bit-for-bit on every key.
+    let Some(e) = engine() else { return };
+    let mut rng = Pcg32::new(3);
+    let mut words = vec![0u32; e.batch_size * e.key_words];
+    for w in words.iter_mut() {
+        *w = rng.next_u32();
+    }
+    let got = e.hash_keys(&words).unwrap();
+    for b in 0..e.batch_size {
+        let row = &words[b * e.key_words..(b + 1) * e.key_words];
+        assert_eq!(got[b], fnv1a_words(row), "row {b}");
+    }
+}
+
+#[test]
+fn pallas_hash_matches_key_packing() {
+    // Keys packed by protocol::Key::packed_words hash identically in
+    // both languages.
+    let Some(e) = engine() else { return };
+    let width = e.key_words * 4;
+    let mut words = vec![0u32; e.batch_size * e.key_words];
+    let mut keys = Vec::new();
+    for b in 0..e.batch_size {
+        let key = Key::from_id(b as u64, (1 + (b % 64)).max(8));
+        let packed = key.packed_words(width);
+        words[b * e.key_words..(b + 1) * e.key_words].copy_from_slice(&packed);
+        keys.push(key);
+    }
+    let got = e.hash_keys(&words).unwrap();
+    for (b, key) in keys.iter().enumerate() {
+        assert_eq!(
+            got[b],
+            switchagg::switch::hash::fnv1a_key(key, width),
+            "key {b}"
+        );
+    }
+}
+
+#[test]
+fn xla_aggregator_end_to_end_with_epoch_spill() {
+    let Some(e) = engine() else { return };
+    let mut agg = XlaAggregator::new(&e, AggOp::Sum);
+    let mut rng = Pcg32::new(4);
+    let mut want: std::collections::HashMap<Key, i64> = std::collections::HashMap::new();
+    for _ in 0..20_000 {
+        let id = rng.gen_range_u64(3_000);
+        let p = KvPair::new(Key::from_id(id, 16), 2);
+        *want.entry(p.key).or_default() += 2;
+        agg.offer(p).unwrap();
+    }
+    let out = agg.drain().unwrap();
+    assert_eq!(out.len(), want.len());
+    for p in out {
+        assert_eq!(p.value, want[&p.key], "key {:?}", p.key);
+    }
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(e) = engine() else { return };
+    let err = e.aggregate_f32(AggOp::Sum, &[0.0; 8], &[0; 8], &[0.0; 8]);
+    assert!(err.is_err());
+    let err = e.hash_keys(&[0u32; 4]);
+    assert!(err.is_err());
+}

@@ -1,0 +1,200 @@
+//! Integration tests over the assembled switch data plane: wire-format
+//! round trips through the device, multi-level behaviour, multi-hop
+//! chains and the DAIET baseline comparison.
+
+use std::collections::HashMap;
+use switchagg::baseline::{DaietConfig, DaietSwitch};
+use switchagg::protocol::{AggOp, AggregationPacket, Key, KvPair, Packet, TreeConfig, TreeId};
+use switchagg::switch::{SwitchAggSwitch, SwitchConfig};
+use switchagg::util::rng::Pcg32;
+use switchagg::workload::generator::{KeyDist, WorkloadSpec};
+
+fn configured(fpe: u64, bpe: Option<u64>, children: u16) -> SwitchAggSwitch {
+    let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(fpe, bpe));
+    sw.configure(&[TreeConfig {
+        tree: TreeId(1),
+        children,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    sw
+}
+
+fn software_truth(streams: &[Vec<KvPair>]) -> HashMap<Key, i64> {
+    let mut t = HashMap::new();
+    for p in streams.iter().flatten() {
+        *t.entry(p.key).or_insert(0) += p.value;
+    }
+    t
+}
+
+#[test]
+fn switch_output_plus_nothing_equals_truth() {
+    // Whatever leaves the switch (stream + flush), re-aggregated in
+    // software, must equal the ground truth exactly — for every op.
+    let mut rng = Pcg32::new(10);
+    let streams: Vec<Vec<KvPair>> = (0..3)
+        .map(|_| {
+            (0..5_000)
+                .map(|_| {
+                    KvPair::new(
+                        Key::from_id(rng.gen_range_u64(800), 16 + (rng.gen_range_u64(49)) as usize),
+                        rng.gen_range_u64(100) as i64 - 50,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let truth = software_truth(&streams);
+
+    let mut sw = configured(32 << 10, Some(1 << 20), 3);
+    let out = sw.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+    let mut got = HashMap::new();
+    for p in &out {
+        *got.entry(p.key).or_insert(0) += p.value;
+    }
+    assert_eq!(got, truth);
+}
+
+#[test]
+fn max_and_min_survive_the_data_plane() {
+    let mut rng = Pcg32::new(11);
+    let stream: Vec<KvPair> = (0..20_000)
+        .map(|_| {
+            KvPair::new(
+                Key::from_id(rng.gen_range_u64(500), 24),
+                rng.gen_range_u64(10_000) as i64 - 5_000,
+            )
+        })
+        .collect();
+    for op in [AggOp::Max, AggOp::Min] {
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(16 << 10, Some(1 << 20)));
+        sw.configure(&[TreeConfig {
+            tree: TreeId(1),
+            children: 1,
+            parent_port: 0,
+            op,
+        }]);
+        let out = sw.ingest_stream(TreeId(1), op, &stream);
+        let mut got: HashMap<Key, i64> = HashMap::new();
+        for p in &out {
+            got.entry(p.key)
+                .and_modify(|v| *v = op.combine(*v, p.value))
+                .or_insert(p.value);
+        }
+        let mut want: HashMap<Key, i64> = HashMap::new();
+        for p in &stream {
+            want.entry(p.key)
+                .and_modify(|v| *v = op.combine(*v, p.value))
+                .or_insert(p.value);
+        }
+        assert_eq!(got, want, "{op}");
+    }
+}
+
+#[test]
+fn wire_format_round_trip_through_switch() {
+    // Encode → decode → ingest: the data plane consumes exactly what
+    // the protocol layer produced.
+    let spec = WorkloadSpec::paper(64 << 10, 16 << 10, KeyDist::Uniform, 5);
+    let pairs = spec.generate();
+    let pkts = AggregationPacket::pack_stream(TreeId(1), AggOp::Sum, &pairs, true);
+    let mut sw = configured(1 << 20, Some(4 << 20), 1);
+    let mut out = Vec::new();
+    for pkt in &pkts {
+        // Serialize over the wire and back.
+        let bytes = Packet::Aggregation(pkt.clone()).encode();
+        let Packet::Aggregation(decoded) = Packet::decode(&bytes).unwrap() else {
+            panic!("wrong packet type");
+        };
+        assert_eq!(&decoded, pkt);
+        let r = sw.ingest(&decoded);
+        out.extend(r.forwarded);
+        if let Some(f) = r.flushed {
+            out.extend(f);
+        }
+    }
+    sw.finalize(TreeId(1));
+    let got: i64 = out.iter().map(|p| p.value).sum();
+    assert_eq!(got, pairs.len() as i64);
+}
+
+#[test]
+fn chained_switches_multi_hop() {
+    // Fig 2(b) with the real data plane: two switches in a streamline.
+    let spec = WorkloadSpec::paper(512 << 10, 256 << 10, KeyDist::Uniform, 6);
+    let stream = spec.generate();
+    let mut sw1 = configured(16 << 10, None, 1);
+    let mid = sw1.ingest_stream(TreeId(1), AggOp::Sum, &stream);
+    let mut sw2 = configured(16 << 10, None, 1);
+    let out = sw2.ingest_stream(TreeId(1), AggOp::Sum, &mid);
+    // Conservation through two hops.
+    assert_eq!(
+        out.iter().map(|p| p.value).sum::<i64>(),
+        stream.len() as i64
+    );
+    // Second hop adds some aggregation but bounded (Theorem 2.2).
+    assert!(out.len() <= mid.len());
+    let r1 = 1.0 - mid.len() as f64 / stream.len() as f64;
+    let r2 = 1.0 - out.len() as f64 / stream.len() as f64;
+    assert!(r2 >= r1 - 1e-9);
+}
+
+#[test]
+fn switchagg_beats_daiet_on_large_variety() {
+    // §2.2 / §8: DAIET's 16K-entry table collapses where SwitchAgg's
+    // two-level hierarchy holds.
+    let spec = WorkloadSpec {
+        total_bytes: 2 << 20,
+        key_variety: 60_000,
+        key_len_min: 16,
+        key_len_max: 16, // DAIET's fixed slot, to be charitable
+        dist: KeyDist::Uniform,
+        seed: 9,
+    };
+    let stream = spec.generate();
+
+    let mut daiet = DaietSwitch::new(DaietConfig::default());
+    daiet.run(&stream, AggOp::Sum);
+
+    let mut sa = configured(32 << 10, Some(8 << 20), 1);
+    sa.ingest_stream(TreeId(1), AggOp::Sum, &stream);
+    let sa_r = sa.stats(TreeId(1)).unwrap().reduction_ratio();
+    let daiet_r = daiet.stats.reduction_ratio();
+    assert!(
+        sa_r > daiet_r + 0.2,
+        "SwitchAgg {sa_r:.3} should clearly beat DAIET {daiet_r:.3}"
+    );
+}
+
+#[test]
+fn reconfiguration_resets_engines() {
+    let mut sw = configured(32 << 10, None, 1);
+    let spec = WorkloadSpec::paper(128 << 10, 32 << 10, KeyDist::Uniform, 3);
+    sw.ingest_stream(TreeId(1), AggOp::Sum, &spec.generate());
+    let r1 = sw.stats(TreeId(1)).unwrap().reduction_ratio();
+    // Adding a second tree rebuilds engines with half the memory.
+    sw.configure(&[TreeConfig {
+        tree: TreeId(2),
+        children: 1,
+        parent_port: 1,
+        op: AggOp::Sum,
+    }]);
+    assert_eq!(sw.n_trees(), 2);
+    let s = sw.stats(TreeId(1)).unwrap();
+    assert_eq!(s.pairs_in, 0, "reconfigure must reset engine state");
+    let _ = r1;
+}
+
+#[test]
+fn empty_and_single_pair_streams() {
+    let mut sw = configured(16 << 10, Some(1 << 20), 1);
+    let out = sw.ingest_stream(TreeId(1), AggOp::Sum, &[]);
+    assert!(out.is_empty());
+
+    let mut sw = configured(16 << 10, Some(1 << 20), 1);
+    let one = vec![KvPair::new(Key::new(b"solo"), 7)];
+    let out = sw.ingest_stream(TreeId(1), AggOp::Sum, &one);
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].value, 7);
+}

@@ -1,0 +1,239 @@
+//! Property-based tests (via `util::miniprop`) over the system's core
+//! invariants: conservation laws, protocol round trips, model bounds,
+//! and the equivalence between the ideal node and the real data plane.
+
+use std::collections::HashMap;
+use switchagg::analysis::models::{eq3_reduction_ratio, eq3_upper_bound};
+use switchagg::analysis::theorems::IdealNode;
+use switchagg::protocol::{
+    AggOp, AggregationPacket, Key, KvPair, Packet, TreeConfig, TreeId,
+};
+use switchagg::switch::{EvictionPolicy, SwitchAggSwitch, SwitchConfig};
+use switchagg::util::miniprop::prop;
+use switchagg::util::rng::Pcg32;
+
+fn random_pairs(rng: &mut Pcg32, n: usize, variety: u64) -> Vec<KvPair> {
+    (0..n)
+        .map(|_| {
+            let id = rng.gen_range_u64(variety);
+            let len = 8 + (rng.gen_range_u64(57) as usize);
+            KvPair::new(Key::from_id(id, len), rng.gen_range_u64(1000) as i64 - 500)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_packet_encode_decode_round_trip() {
+    prop("packet round trip", 200, |rng| {
+        let n = rng.gen_range_usize(40);
+        let pairs = random_pairs(rng, n, 1 << 20);
+        let pkt = Packet::Aggregation(AggregationPacket {
+            tree: TreeId(rng.next_u32()),
+            op: AggOp::ALL[rng.gen_range_usize(3)],
+            eot: rng.gen_bool(0.5),
+            pairs,
+        });
+        let decoded = Packet::decode(&pkt.encode()).map_err(|e| e.to_string())?;
+        if decoded != pkt {
+            return Err("decode != original".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pack_stream_preserves_order_and_content() {
+    prop("pack_stream preserves content", 100, |rng| {
+        let n = rng.gen_range_usize(3000);
+        let pairs = random_pairs(rng, n, 1 << 16);
+        let pkts = AggregationPacket::pack_stream(TreeId(1), AggOp::Sum, &pairs, true);
+        let flat: Vec<KvPair> = pkts.iter().flat_map(|p| p.pairs.clone()).collect();
+        if flat != pairs {
+            return Err(format!("{} pairs -> {} after packing", pairs.len(), flat.len()));
+        }
+        if !pkts.last().map(|p| p.eot).unwrap_or(false) {
+            return Err("missing EoT".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_switch_conserves_sum_for_any_config() {
+    prop("switch conserves SUM", 30, |rng| {
+        let fpe = 4096 << rng.gen_range_usize(6); // 4K..128K
+        let bpe = if rng.gen_bool(0.5) {
+            Some(1u64 << (16 + rng.gen_range_usize(6)))
+        } else {
+            None
+        };
+        let eviction = if rng.gen_bool(0.5) {
+            EvictionPolicy::EvictOld
+        } else {
+            EvictionPolicy::ForwardNew
+        };
+        let cfg = SwitchConfig {
+            eviction,
+            ..SwitchConfig::scaled(fpe as u64, bpe)
+        };
+        let mut sw = SwitchAggSwitch::new(cfg);
+        sw.configure(&[TreeConfig {
+            tree: TreeId(1),
+            children: 1,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        let n = 2000 + rng.gen_range_usize(3000);
+        let pairs = random_pairs(rng, n, 1 << 10);
+        let want: i64 = pairs.iter().map(|p| p.value).sum();
+        let out = sw.ingest_stream(TreeId(1), AggOp::Sum, &pairs);
+        let got: i64 = out.iter().map(|p| p.value).sum();
+        if got != want {
+            return Err(format!("sum {got} != {want} (fpe={fpe} bpe={bpe:?})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_switch_result_equals_hashmap_truth() {
+    prop("switch equals software truth", 20, |rng| {
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(16 << 10, Some(256 << 10)));
+        sw.configure(&[TreeConfig {
+            tree: TreeId(1),
+            children: 1,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        let pairs = random_pairs(rng, 4000, 700);
+        let out = sw.ingest_stream(TreeId(1), AggOp::Sum, &pairs);
+        let mut truth: HashMap<Key, i64> = HashMap::new();
+        for p in &pairs {
+            *truth.entry(p.key).or_insert(0) += p.value;
+        }
+        let mut got: HashMap<Key, i64> = HashMap::new();
+        for p in &out {
+            *got.entry(p.key).or_insert(0) += p.value;
+        }
+        if got != truth {
+            return Err("re-aggregated output differs from truth".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_output_never_exceeds_input() {
+    prop("no amplification", 30, |rng| {
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(8 << 10, None));
+        sw.configure(&[TreeConfig {
+            tree: TreeId(1),
+            children: 1,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        let n = 1000 + rng.gen_range_usize(4000);
+        let pairs = random_pairs(rng, n, 1 << 14);
+        let out = sw.ingest_stream(TreeId(1), AggOp::Sum, &pairs);
+        if out.len() > pairs.len() {
+            return Err(format!("{} out > {} in", out.len(), pairs.len()));
+        }
+        let s = sw.stats(TreeId(1)).unwrap();
+        if s.reduction_ratio() < -0.12 {
+            // Output bytes may slightly exceed input on incompressible
+            // streams (packet-header effects) but never by much.
+            return Err(format!("reduction {}", s.reduction_ratio()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq3_matches_ideal_node_on_even_data() {
+    // Eq. 3 is derived for data *evenly distributed* among the N keys
+    // (each key appears exactly M/N times).  Build exactly that, in a
+    // random order, and the ideal node must track the closed form.
+    prop("Eq.3 matches the ideal node (even data)", 40, |rng| {
+        let variety = 100 + rng.gen_range_u64(5_000);
+        let reps = 2 + rng.gen_range_usize(6);
+        let cap = 50 + rng.gen_range_usize(2_000);
+        let mut pairs: Vec<KvPair> = (0..variety)
+            .flat_map(|id| {
+                std::iter::repeat(KvPair::new(Key::from_id(id, 16), 1)).take(reps)
+            })
+            .collect();
+        rng.shuffle(&mut pairs);
+        let m = pairs.len() as u64;
+        let (_, r_sim) = IdealNode::run(cap, &pairs, AggOp::Sum);
+        let r_model = eq3_reduction_ratio(m, variety, cap as u64);
+        if (r_sim - r_model).abs() > 0.05 {
+            return Err(format!(
+                "sim {r_sim:.4} vs model {r_model:.4} (m={m} variety={variety} cap={cap} reps={reps})"
+            ));
+        }
+        if variety > cap as u64 && r_sim > eq3_upper_bound(variety, cap as u64) + 0.05 {
+            return Err(format!("sim {r_sim} exceeds C/N bound"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_draws_beat_eq3_via_size_bias() {
+    // Characterization: with *randomly drawn* keys (not exactly even),
+    // early-captured keys are size-biased towards frequent ones, so
+    // the ideal node does at least as well as Eq. 3 predicts.
+    prop("random draws >= Eq.3", 20, |rng| {
+        let variety = 500 + rng.gen_range_u64(4_000);
+        let cap = 100 + rng.gen_range_usize(1_500);
+        let n = 8_000 + rng.gen_range_usize(12_000);
+        let pairs: Vec<KvPair> = (0..n)
+            .map(|_| KvPair::new(Key::from_id(rng.gen_range_u64(variety), 16), 1))
+            .collect();
+        let (_, r_sim) = IdealNode::run(cap, &pairs, AggOp::Sum);
+        let r_model = eq3_reduction_ratio(n as u64, variety, cap as u64);
+        if r_sim < r_model - 0.05 {
+            return Err(format!("sim {r_sim:.4} below model {r_model:.4}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_agg_ops_idempotence_and_identity() {
+    prop("op algebra", 300, |rng| {
+        let op = AggOp::ALL[rng.gen_range_usize(3)];
+        let a = rng.next_u32() as i64 - (1 << 31);
+        let b = rng.next_u32() as i64 - (1 << 31);
+        if op.combine(a, b) != op.combine(b, a) {
+            return Err(format!("{op} not commutative for {a},{b}"));
+        }
+        if op.combine(a, op.identity()) != a {
+            return Err(format!("{op} identity broken for {a}"));
+        }
+        if matches!(op, AggOp::Max | AggOp::Min) && op.combine(a, a) != a {
+            return Err(format!("{op} not idempotent for {a}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_key_round_trip_and_hash_stability() {
+    prop("key pack/hash", 300, |rng| {
+        let len = 1 + rng.gen_range_usize(64);
+        let id = rng.gen_range_u64(1u64 << (8 * len.min(7)) as u32);
+        let key = Key::from_id(id, len);
+        let width = len.div_ceil(8).max(1) * 8;
+        let words = key.packed_words(width);
+        if words.len() != width / 4 {
+            return Err("packed width mismatch".into());
+        }
+        let h1 = switchagg::switch::hash::fnv1a_key(&key, width);
+        let h2 = switchagg::switch::hash::fnv1a_words(&words);
+        if h1 != h2 {
+            return Err(format!("hash mismatch len={len}"));
+        }
+        Ok(())
+    });
+}
