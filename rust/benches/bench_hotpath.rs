@@ -1,50 +1,82 @@
-//! Hot-path microbenchmarks (§Perf): the per-pair switch loop, the
-//! hash unit, the FPE table probe, the software reducer, and the PJRT
-//! execution path.  These are the numbers the optimization pass
-//! tracks in EXPERIMENTS.md §Perf.
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the per-pair
+//! switch loop, the hash unit, the FPE table probe (scalar + batched),
+//! the software reducer (hash-map vs SoA table core), and the PJRT
+//! execution path.  Results are also written as a machine-readable log
+//! (`BENCH_hotpath.json`, override with `SWITCHAGG_BENCH_JSON`) so the
+//! perf trajectory is comparable across PRs.
 
 use switchagg::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId};
 use switchagg::runtime::AggEngine;
 use switchagg::switch::hash::{fnv1a_key, fnv1a_words};
 use switchagg::switch::hash_table::HashTable;
 use switchagg::switch::{SwitchAggSwitch, SwitchConfig};
-use switchagg::util::bench;
+use switchagg::util::bench::{self, JsonLog};
 use switchagg::util::rng::Pcg32;
 use switchagg::workload::generator::{KeyDist, WorkloadSpec};
 
 fn main() {
+    let mut log = JsonLog::new();
+
     bench::section("hash unit");
     let keys: Vec<Key> = (0..4096u64).map(|i| Key::from_id(i, 16 + (i % 49) as usize)).collect();
-    bench::run("fnv1a_key 64B width", 3, 20, || {
+    log.push(&bench::run("fnv1a_key 64B width", 3, 20, || {
         let mut acc = 0u32;
         for k in &keys {
             acc = acc.wrapping_add(fnv1a_key(k, 64));
         }
         std::hint::black_box(acc);
         keys.len() as u64
-    });
+    }));
     let words: Vec<u32> = (0..16 * 4096).map(|i| i as u32).collect();
-    bench::run("fnv1a_words 16 words", 3, 20, || {
+    log.push(&bench::run("fnv1a_words 16 words", 3, 20, || {
         let mut acc = 0u32;
         for row in words.chunks_exact(16) {
             acc = acc.wrapping_add(fnv1a_words(row));
         }
         std::hint::black_box(acc);
         (words.len() / 16) as u64
-    });
+    }));
 
     bench::section("FPE hash-table probe");
     let mut rng = Pcg32::new(7);
     let probes: Vec<KvPair> = (0..100_000)
         .map(|_| KvPair::new(Key::from_id(rng.gen_range_u64(50_000), 16), 1))
         .collect();
-    bench::run("offer() 100k pairs, 64k-pair table", 2, 10, || {
+    log.push(&bench::run("offer() 100k pairs, 64k-pair table", 2, 10, || {
         let mut t = HashTable::with_memory(64 * 1024 * 20, 16, 2);
         for p in &probes {
             std::hint::black_box(t.offer(p.key, p.value, AggOp::Sum, true));
         }
         probes.len() as u64
-    });
+    }));
+    log.push(&bench::run("offer_batch() 100k pairs, 64k-pair table", 2, 10, || {
+        let mut t = HashTable::with_memory(64 * 1024 * 20, 16, 2);
+        let mut evicted: Vec<(Key, switchagg::protocol::Value, u32)> = Vec::new();
+        for chunk in probes.chunks(32) {
+            evicted.clear();
+            t.offer_batch(chunk, AggOp::Sum, true, &mut evicted);
+            std::hint::black_box(evicted.len());
+        }
+        probes.len() as u64
+    }));
+    // Warm table built once, outside the timed region: the case
+    // measures the probe path alone.
+    let warm_table = {
+        let mut t = HashTable::with_memory(64 * 1024 * 20, 16, 2);
+        for p in &probes {
+            t.offer(p.key, p.value, AggOp::Sum, true);
+        }
+        t
+    };
+    log.push(&bench::run("get_hashed() 100k probes, warm table", 2, 10, || {
+        let mut hits = 0u64;
+        for p in &probes {
+            let h = warm_table.hash_of(&p.key);
+            hits += warm_table.get_hashed(h, &p.key).is_some() as u64;
+        }
+        std::hint::black_box(hits);
+        probes.len() as u64
+    }));
 
     bench::section("whole-switch per-pair loop");
     let streams: Vec<Vec<KvPair>> = (0..3)
@@ -53,7 +85,7 @@ fn main() {
         })
         .collect();
     let total_pairs: u64 = streams.iter().map(|s| s.len() as u64).sum();
-    bench::run("switch ingest 12MB zipf (3 streams)", 1, 5, || {
+    log.push(&bench::run("switch ingest 12MB zipf (3 streams)", 1, 5, || {
         let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(32 << 10, Some(8 << 20)));
         let tree = TreeId(1);
         sw.configure(&[TreeConfig {
@@ -64,18 +96,43 @@ fn main() {
         }]);
         sw.ingest_child_streams(tree, AggOp::Sum, &streams);
         total_pairs
-    });
+    }));
+    log.push(&bench::run("switch ingest 12MB zipf (reused engine)", 1, 5, {
+        // Steady state: one switch, sinks and tables warm across reps —
+        // the zero-alloc path the acceptance criteria target.
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(32 << 10, Some(8 << 20)));
+        let tree = TreeId(1);
+        sw.configure(&[TreeConfig {
+            tree,
+            children: 3,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        let streams = streams.clone();
+        move || {
+            sw.ingest_child_streams(tree, AggOp::Sum, &streams);
+            total_pairs
+        }
+    }));
 
     bench::section("software reducer");
     let merged: Vec<KvPair> = streams.iter().flatten().copied().collect();
-    bench::run("hashmap merge", 1, 5, || {
+    log.push(&bench::run("hashmap merge", 1, 5, || {
         let r = switchagg::framework::Reducer::merge_software(
             std::slice::from_ref(&merged),
             AggOp::Sum,
         );
         std::hint::black_box(r.table.len());
         merged.len() as u64
-    });
+    }));
+    log.push(&bench::run("soa table-core merge", 1, 5, || {
+        let r = switchagg::framework::Reducer::merge_table_core(
+            std::slice::from_ref(&merged),
+            AggOp::Sum,
+        );
+        std::hint::black_box(r.table.len());
+        merged.len() as u64
+    }));
 
     bench::section("PJRT runtime (AOT JAX/Pallas)");
     match AggEngine::discover() {
@@ -88,18 +145,24 @@ fn main() {
                 idx[i] = rng.gen_range_u64(engine.table_size as u64) as i32;
                 vals[i] = 1.0;
             }
-            bench::run("aggregate_f32 sum, 1024-pair batch", 1, 5, || {
+            log.push(&bench::run("aggregate_f32 sum, 1024-pair batch", 1, 5, || {
                 let out = engine.aggregate_f32(AggOp::Sum, &table, &idx, &vals).unwrap();
                 std::hint::black_box(out[0]);
                 engine.batch_size as u64
-            });
+            }));
             let words = vec![0x1234_5678u32; engine.batch_size * engine.key_words];
-            bench::run("hash_keys 1024x16 words", 1, 5, || {
+            log.push(&bench::run("hash_keys 1024x16 words", 1, 5, || {
                 let out = engine.hash_keys(&words).unwrap();
                 std::hint::black_box(out[0]);
                 engine.batch_size as u64
-            });
+            }));
         }
         Err(e) => println!("PJRT bench skipped: {e:#}"),
+    }
+
+    let path = std::env::var("SWITCHAGG_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    if let Err(e) = log.write(&path) {
+        eprintln!("could not write bench log {path}: {e}");
     }
 }

@@ -17,7 +17,7 @@
 //!   workload's maximum key length instead.
 
 use crate::protocol::{AggOp, Key, KvPair, Value, HEADER_OVERHEAD};
-use std::collections::HashMap;
+use crate::util::fxhash::FxHashMap;
 
 #[derive(Clone, Debug)]
 pub struct DaietConfig {
@@ -102,14 +102,18 @@ impl DaietStats {
 /// The baseline switch.
 pub struct DaietSwitch {
     cfg: DaietConfig,
-    table: HashMap<Key, Value>,
+    /// Fx-hashed match-action table: the per-pair loop is this
+    /// baseline's hot path, and SipHash would dominate it.
+    table: FxHashMap<Key, Value>,
     pub stats: DaietStats,
 }
 
 impl DaietSwitch {
     pub fn new(cfg: DaietConfig) -> Self {
+        let mut table = FxHashMap::default();
+        table.reserve(cfg.table_entries);
         Self {
-            table: HashMap::with_capacity(cfg.table_entries),
+            table,
             cfg,
             stats: DaietStats::default(),
         }
@@ -124,6 +128,15 @@ impl DaietSwitch {
     /// (padded slots in ≤200 B packets).
     pub fn run(&mut self, stream: &[KvPair], op: AggOp) -> Vec<KvPair> {
         let mut out_pairs: Vec<KvPair> = Vec::new();
+        self.run_into(stream, op, &mut out_pairs);
+        out_pairs
+    }
+
+    /// [`Self::run`] appending into a caller-owned (reusable) buffer —
+    /// the baseline's counterpart of the switch's sink-based ingest, so
+    /// baseline-vs-SwitchAgg benches compare like with like.
+    pub fn run_into(&mut self, stream: &[KvPair], op: AggOp, out_pairs: &mut Vec<KvPair>) {
+        let start = out_pairs.len();
         let spp = self.cfg.slots_per_packet();
         let slot = self.cfg.slot_bytes() as u64;
         let mut representable = 0u64;
@@ -148,10 +161,12 @@ impl DaietSwitch {
                 out_pairs.push(*p);
             }
         }
-        // Input wire bytes: representable pairs in padded slots.
+        // Input wire bytes: representable pairs in padded slots.  All
+        // counters accumulate (`+=`) so a reused switch keeps a
+        // consistent stats view across runs.
         let packets_in = representable.div_ceil(spp as u64);
-        self.stats.packets_in = packets_in;
-        self.stats.bytes_in =
+        self.stats.packets_in += packets_in;
+        self.stats.bytes_in +=
             representable * slot + packets_in * HEADER_OVERHEAD as u64;
         // Unrepresentable pairs ride ordinary packets (charged their
         // encoded size + amortized header).
@@ -162,28 +177,26 @@ impl DaietSwitch {
             .sum();
         self.stats.bytes_in += unrep_bytes;
 
-        // Flush residents.
-        let mut flushed: Vec<KvPair> = self
-            .table
-            .drain()
-            .map(|(k, v)| KvPair::new(k, v))
-            .collect();
-        flushed.sort_by(|a, b| a.key.as_bytes().cmp(b.key.as_bytes()));
-        out_pairs.extend(flushed);
+        // Flush residents straight into the output buffer, sorting the
+        // flushed tail in place (no per-run scratch allocation).
+        let flush_start = out_pairs.len();
+        out_pairs.extend(self.table.drain().map(|(k, v)| KvPair::new(k, v)));
+        out_pairs[flush_start..].sort_by(|a, b| a.key.as_bytes().cmp(b.key.as_bytes()));
 
-        // Output wire bytes, same format.
+        // Output wire bytes, same format (only this run's outputs —
+        // the caller's buffer may hold earlier runs).
+        let produced = &out_pairs[start..];
         let out_representable =
-            out_pairs.iter().filter(|p| p.key.len() <= self.cfg.slot_key).count() as u64;
+            produced.iter().filter(|p| p.key.len() <= self.cfg.slot_key).count() as u64;
         let out_packets = out_representable.div_ceil(spp as u64);
-        self.stats.bytes_out = out_representable * slot
+        self.stats.bytes_out += out_representable * slot
             + out_packets * HEADER_OVERHEAD as u64
-            + out_pairs
+            + produced
                 .iter()
                 .filter(|p| p.key.len() > self.cfg.slot_key)
                 .map(|p| p.encoded_len() as u64)
                 .sum::<u64>();
-        self.stats.pairs_out = out_pairs.len() as u64;
-        out_pairs
+        self.stats.pairs_out += produced.len() as u64;
     }
 }
 

@@ -1,14 +1,19 @@
 //! The reducer: merges the (partially pre-aggregated) streams into the
-//! final result.  Two engines:
+//! final result.  Three engines:
 //!
 //! * [`Reducer::merge_software`] — plain hash-map aggregation, the
 //!   baseline the CPU-utilization model is calibrated against;
+//! * [`Reducer::merge_table_core`] — the same SoA/tag-filtered table
+//!   core the switch data plane uses ([`HashTable`]), batched via
+//!   `offer_batch`, so software-vs-switch comparisons measure memory
+//!   layout rather than container choice;
 //! * [`Reducer::merge_xla`] — the PJRT path: exact-key slot assignment
 //!   in Rust, dense batched segment aggregation in the AOT-compiled
 //!   JAX/Pallas kernel (see `runtime::table`).
 
-use crate::protocol::{AggOp, Key, KvPair, Value};
+use crate::protocol::{AggOp, Key, KvPair, Value, MAX_KEY_LEN};
 use crate::runtime::{AggEngine, XlaAggregator};
+use crate::switch::hash_table::{HashTable, VALUE_BYTES};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::time::Instant;
@@ -38,6 +43,55 @@ impl Reducer {
                     .and_modify(|v| *v = op.combine(*v, p.value))
                     .or_insert(p.value);
             }
+        }
+        MergeResult {
+            table,
+            pairs_in,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Software merge on the switch's SoA/tag-filtered table core —
+    /// the same data structure, probe sequence and batched entry point
+    /// (`offer_batch`) the data plane uses, sized for the stream with
+    /// `ForwardNew` so residents stay put.  Pairs whose bucket still
+    /// overflows spill to a side map, keeping the result exact at any
+    /// occupancy while the hot path stays in the core.
+    pub fn merge_table_core(streams: &[Vec<KvPair>], op: AggOp) -> MergeResult {
+        let t0 = Instant::now();
+        let total: usize = streams.iter().map(Vec::len).sum();
+        // ~50% target load factor; 8 slots/bucket keeps overflow rare
+        // even on skewed key sets.
+        let slots = (2 * total.max(16)) as u64;
+        let mut core =
+            HashTable::with_memory(slots * (MAX_KEY_LEN + VALUE_BYTES) as u64, MAX_KEY_LEN, 8);
+        let mut spill: HashMap<Key, Value> = HashMap::new();
+        let mut evicted: Vec<(Key, Value, u32)> = Vec::new();
+        let mut pairs_in = 0u64;
+        for s in streams {
+            pairs_in += s.len() as u64;
+            evicted.clear();
+            core.offer_batch(s, op, false, &mut evicted);
+            for &(k, v, _) in &evicted {
+                spill
+                    .entry(k)
+                    .and_modify(|x| *x = op.combine(*x, v))
+                    .or_insert(v);
+            }
+        }
+        let mut table: HashMap<Key, Value> =
+            HashMap::with_capacity(core.occupancy() + spill.len());
+        for (k, v) in core.iter() {
+            table.insert(*k, v);
+        }
+        // A key is either resident in the core or spilled, never both
+        // (ForwardNew turns away exactly the keys that never got a
+        // slot), but combine defensively anyway.
+        for (k, v) in spill {
+            table
+                .entry(k)
+                .and_modify(|x| *x = op.combine(*x, v))
+                .or_insert(v);
         }
         MergeResult {
             table,
@@ -99,5 +153,42 @@ mod tests {
         assert_eq!(r.table[&Key::new(b"a")], 3);
         let r = Reducer::merge_software(&streams(), AggOp::Min);
         assert_eq!(r.table[&Key::new(b"a")], 1);
+    }
+
+    #[test]
+    fn table_core_merge_equals_hashmap_merge() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(77);
+        let streams: Vec<Vec<KvPair>> = (0..4)
+            .map(|_| {
+                (0..3_000)
+                    .map(|_| {
+                        let id = rng.gen_range_u64(400);
+                        KvPair::new(
+                            Key::from_id(id, 8 + (id % 57) as usize),
+                            rng.gen_range_u64(100) as i64 - 50,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        for op in [AggOp::Sum, AggOp::Max, AggOp::Min] {
+            let a = Reducer::merge_software(&streams, op);
+            let b = Reducer::merge_table_core(&streams, op);
+            assert_eq!(a.pairs_in, b.pairs_in);
+            assert_eq!(a.table, b.table, "{op}");
+        }
+    }
+
+    #[test]
+    fn table_core_merge_survives_forced_spill() {
+        // Tiny variety but heavy duplication per key: correctness must
+        // not depend on the core never spilling.
+        let big: Vec<KvPair> = (0..20_000u64)
+            .map(|i| KvPair::new(Key::from_id(i % 17, 16), 1))
+            .collect();
+        let r = Reducer::merge_table_core(&[big], AggOp::Sum);
+        assert_eq!(r.table.len(), 17);
+        assert_eq!(r.table.values().sum::<Value>(), 20_000);
     }
 }

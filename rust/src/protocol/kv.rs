@@ -38,6 +38,16 @@ impl Key {
         }
     }
 
+    /// All-zero placeholder (`len == 0`) used to pre-size slot storage
+    /// in the switch hash tables; never observable through the table
+    /// API (slots past a bucket's occupied prefix are not read).
+    pub(crate) const fn placeholder() -> Self {
+        Self {
+            len: 0,
+            bytes: [0; MAX_KEY_LEN],
+        }
+    }
+
     /// Fallible constructor for wire decoding.
     pub fn try_new(data: &[u8]) -> Option<Self> {
         if (MIN_KEY_LEN..=MAX_KEY_LEN).contains(&data.len()) {
@@ -108,10 +118,32 @@ impl Key {
     }
 }
 
+// The word fast path below reads `bytes` in whole u64 words; the last
+// read of a full-length key ends exactly at the array bound only when
+// the capacity is word-aligned.
+const _: () = assert!(MAX_KEY_LEN % 8 == 0);
+
 impl PartialEq for Key {
+    /// Prefix-word equality fast path: every constructor zero-fills
+    /// `bytes` past `len`, so comparing whole 64-bit words covers the
+    /// prefix plus identical zero padding — equivalent to the
+    /// length-aware byte compare, but branch-light u64 loads instead of
+    /// a `memcmp` call on the switch hot path.
     #[inline]
     fn eq(&self, other: &Self) -> bool {
-        self.len == other.len && self.bytes[..self.len as usize] == other.bytes[..other.len as usize]
+        if self.len != other.len {
+            return false;
+        }
+        let words = (self.len as usize).div_ceil(8);
+        for i in 0..words {
+            let o = i * 8;
+            let a = u64::from_le_bytes(self.bytes[o..o + 8].try_into().unwrap());
+            let b = u64::from_le_bytes(other.bytes[o..o + 8].try_into().unwrap());
+            if a != b {
+                return false;
+            }
+        }
+        true
     }
 }
 
@@ -220,6 +252,26 @@ mod tests {
         let b = Key::new(b"abc\0");
         assert_ne!(a, b);
         assert_eq!(a, Key::new(b"abc"));
+    }
+
+    #[test]
+    fn word_equality_matches_bytewise_prefix_compare() {
+        // The word fast path relies on zero padding past `len`; check
+        // it against the definitional prefix compare at every length.
+        for len in 1..=MAX_KEY_LEN {
+            let a = Key::from_id((len % 251) as u64, len);
+            let b = Key::from_id((len % 251) as u64, len);
+            let c = Key::from_id(((len + 1) % 251) as u64, len);
+            assert_eq!(a == b, a.as_bytes() == b.as_bytes());
+            assert_eq!(a == c, a.as_bytes() == c.as_bytes());
+            assert!(a == b);
+            // Same prefix bytes, different length: never equal.
+            if len < MAX_KEY_LEN {
+                let mut ext = a.as_bytes().to_vec();
+                ext.push(0);
+                assert_ne!(a, Key::new(&ext));
+            }
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub mod wire;
 
 pub use kv::{Key, KvPair, MAX_KEY_LEN, MIN_KEY_LEN};
 pub use packet::{
-    AckKind, AggregationPacket, ConfigurePacket, DataPacket, LaunchPacket, Packet, TreeConfig,
-    AGG_FIXED_LEN, HEADER_OVERHEAD, MAX_AGG_PAYLOAD, MTU,
+    AckKind, AggregationPacket, ConfigurePacket, DataPacket, LaunchPacket, MtuChunks, Packet,
+    TreeConfig, AGG_FIXED_LEN, HEADER_OVERHEAD, MAX_AGG_PAYLOAD, MTU,
 };
 pub use types::{AggOp, TreeId, Value};

@@ -75,7 +75,8 @@ impl AggregationPacket {
     }
 
     /// Pack `pairs` into as few packets as fit the MTU, all sharing
-    /// `tree`/`op`; the final packet carries `eot`.
+    /// `tree`/`op`; the final packet carries `eot`.  Built on
+    /// [`MtuChunks`], the single source of the boundary rule.
     pub fn pack_stream(
         tree: TreeId,
         op: AggOp,
@@ -83,34 +84,61 @@ impl AggregationPacket {
         eot: bool,
     ) -> Vec<AggregationPacket> {
         let mut out = Vec::new();
-        let mut cur: Vec<KvPair> = Vec::new();
-        let mut cur_len = 0usize;
-        for &p in pairs {
-            let el = p.encoded_len();
-            if cur_len + el > MAX_AGG_PAYLOAD && !cur.is_empty() {
-                out.push(AggregationPacket {
-                    tree,
-                    op,
-                    eot: false,
-                    pairs: std::mem::take(&mut cur),
-                });
-                cur_len = 0;
-            }
-            cur_len += el;
-            cur.push(p);
-        }
-        if !cur.is_empty() || out.is_empty() {
+        let mut chunks = MtuChunks::new(pairs);
+        while let Some((chunk, last)) = chunks.next_chunk() {
             out.push(AggregationPacket {
                 tree,
                 op,
-                eot: false,
-                pairs: cur,
+                eot: eot && last,
+                pairs: chunk.to_vec(),
             });
         }
-        if let Some(last) = out.last_mut() {
-            last.eot = eot;
-        }
         out
+    }
+}
+
+/// Greedy MTU chunker: walks a pair slice in exactly the packet
+/// boundaries [`AggregationPacket::pack_stream`] produces, without
+/// materializing packets — the switch's zero-copy ingest path consumes
+/// the chunks directly.  An empty stream still yields one (empty)
+/// chunk, and a pair larger than [`MAX_AGG_PAYLOAD`] travels alone.
+pub struct MtuChunks<'a> {
+    pairs: &'a [KvPair],
+    pos: usize,
+    done: bool,
+}
+
+impl<'a> MtuChunks<'a> {
+    pub fn new(pairs: &'a [KvPair]) -> Self {
+        Self {
+            pairs,
+            pos: 0,
+            done: false,
+        }
+    }
+
+    /// Next chunk and whether it is the stream's last packet.
+    pub fn next_chunk(&mut self) -> Option<(&'a [KvPair], bool)> {
+        if self.done {
+            return None;
+        }
+        let mut payload = 0usize;
+        let mut end = self.pos;
+        while end < self.pairs.len() {
+            let el = self.pairs[end].encoded_len();
+            if payload + el > MAX_AGG_PAYLOAD && end > self.pos {
+                break;
+            }
+            payload += el;
+            end += 1;
+        }
+        let chunk = &self.pairs[self.pos..end];
+        self.pos = end;
+        let last = end == self.pairs.len();
+        if last {
+            self.done = true;
+        }
+        Some((chunk, last))
     }
 }
 
@@ -346,6 +374,23 @@ mod tests {
         // Order is preserved.
         let flat: Vec<KvPair> = pkts.iter().flat_map(|p| p.pairs.clone()).collect();
         assert_eq!(flat, pairs);
+    }
+
+    #[test]
+    fn mtu_chunks_match_pack_stream_boundaries() {
+        let pairs = sample_pairs(400);
+        let pkts = AggregationPacket::pack_stream(TreeId(1), AggOp::Sum, &pairs, true);
+        let mut chunks = MtuChunks::new(&pairs);
+        let mut got: Vec<(usize, bool)> = Vec::new();
+        while let Some((chunk, last)) = chunks.next_chunk() {
+            got.push((chunk.len(), last));
+        }
+        let want: Vec<(usize, bool)> = pkts.iter().map(|p| (p.pairs.len(), p.eot)).collect();
+        assert_eq!(got, want);
+        // Empty stream: exactly one empty final chunk.
+        let mut chunks = MtuChunks::new(&[]);
+        assert_eq!(chunks.next_chunk(), Some((&[] as &[KvPair], true)));
+        assert_eq!(chunks.next_chunk(), None);
     }
 
     #[test]

@@ -74,6 +74,13 @@ impl Bpe {
         &self.regions[group]
     }
 
+    /// Verification read with the FPE hash-unit output supplied —
+    /// regions share the FPE slot widths, so the tag is identical and
+    /// the lookup never rehashes the key.
+    pub fn get_hashed(&self, group: usize, hash: u32, key: &Key) -> Option<Value> {
+        self.regions[group].get_hashed(hash, key)
+    }
+
     pub fn occupancy_pairs(&self) -> usize {
         self.regions.iter().map(|r| r.occupancy()).sum()
     }
@@ -167,12 +174,19 @@ impl Bpe {
     /// (3.125e7 cycles = 500 MB of beats) is the occupancy of the
     /// paper's 1 GB-key-variety run, not the whole 8 GB region.
     pub fn flush(&mut self) -> (Vec<(Key, Value)>, Cycles) {
-        let cycles = self.flush_occupied_cycles();
         let mut pairs = Vec::with_capacity(self.occupancy_pairs());
-        for r in &mut self.regions {
-            pairs.extend(r.drain());
-        }
+        let cycles = self.flush_into(&mut pairs);
         (pairs, cycles)
+    }
+
+    /// [`Self::flush`] appending into a caller-owned buffer (the
+    /// zero-alloc ingest path reuses one scratch across engines).
+    pub fn flush_into(&mut self, out: &mut Vec<(Key, Value)>) -> Cycles {
+        let cycles = self.flush_occupied_cycles();
+        for r in &mut self.regions {
+            r.drain_into(out);
+        }
+        cycles
     }
 
     /// Flush cost streaming only the occupied slots.
@@ -243,6 +257,8 @@ mod tests {
         assert_eq!(b.offer(0, 1, k, 5, AggOp::Sum), BpeOutcome::Kept);
         assert_eq!(b.offer(50, 1, k, 6, AggOp::Sum), BpeOutcome::Kept);
         assert_eq!(b.region(1).get(&k), Some(11));
+        let h = b.region(1).hash_of(&k);
+        assert_eq!(b.get_hashed(1, h, &k), Some(11));
         assert_eq!(b.aggregated, 1);
         assert_eq!(b.inserted, 1);
         let (issued, _) = b.dram_stats();

@@ -15,7 +15,7 @@ use crate::protocol::{AggOp, Key, Value};
 use crate::sim::Cycles;
 use crate::switch::aggregate::AggregationUnit;
 use crate::switch::config::{EvictionPolicy, StageDelays};
-use crate::switch::hash_table::{HashTable, Probe};
+use crate::switch::hash_table::{HashTable, Probe, VALUE_BYTES};
 
 /// What happened to an offered pair.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -120,9 +120,11 @@ impl Fpe {
         let start = effective_arrive.max(self.busy_until);
         self.busy_until = start + self.interval;
 
-        // Functional behaviour.
+        // Functional behaviour.  The hash unit runs once here; its
+        // output is the table tag and rides along on eviction.
         let evict_old = self.eviction == EvictionPolicy::EvictOld;
-        let outcome = match self.table.offer(key, value, op, evict_old) {
+        let hash = self.table.hash_of(&key);
+        let outcome = match self.table.offer_hashed(hash, key, value, op, evict_old) {
             Probe::Aggregated => {
                 self.aggregated += 1;
                 // Hash + aggregate latency (Table 3 rows 3-4).
@@ -150,15 +152,21 @@ impl Fpe {
         outcome
     }
 
-    /// Flush: drain the SRAM table; returns resident pairs and the
-    /// stream-out cycle cost (one 16 B beat per cycle out of BRAM).
+    /// Flush: drain the SRAM table into `out` (appending, so one
+    /// scratch buffer serves every engine); returns the stream-out
+    /// cycle cost (one 16 B beat per cycle out of BRAM).
+    pub fn flush_into(&mut self, out: &mut Vec<(Key, Value)>) -> Cycles {
+        let before = out.len();
+        self.table.drain_into(out);
+        let bytes = ((out.len() - before) * (self.table.slot_key_width() + VALUE_BYTES)) as u64;
+        crate::sim::clock::stream_cycles(bytes)
+    }
+
+    /// [`Self::flush_into`] into a fresh vector.
     pub fn flush(&mut self) -> (Vec<(Key, Value)>, Cycles) {
-        let pairs = self.table.drain();
-        let bytes: u64 = pairs
-            .iter()
-            .map(|_| (self.table.slot_key_width() + 4) as u64)
-            .sum();
-        (pairs, crate::sim::clock::stream_cycles(bytes))
+        let mut pairs = Vec::with_capacity(self.table.occupancy());
+        let cycles = self.flush_into(&mut pairs);
+        (pairs, cycles)
     }
 
     pub fn full_ratio(&self) -> f64 {

@@ -3,15 +3,37 @@
 //! A contiguous memory region is divided into buckets; each bucket
 //! holds `slots_per_bucket` slots of identical width (the group's
 //! maximum key length, zero-padded — Fig. 8a).  A lookup compares the
-//! key against every slot of its bucket; on a miss with a full bucket
+//! key against the slots of its bucket; on a miss with a full bucket
 //! the engine *evicts* a resident pair (the multi-level hierarchy
 //! forwards it to the BPE / next hop instead of stalling, Fig. 7).
 //!
 //! Memory accounting matches the hardware: a slot costs
 //! `slot_key_width + VALUE_BYTES` bytes, so a "4 MB BRAM" table holds
 //! exactly as many pairs as the paper's would.
+//!
+//! # Layout
+//!
+//! Slots are stored struct-of-arrays: per bucket, a dense lane of
+//! 32-bit *tags* (the cached FNV-1a hash of each resident key) is
+//! scanned first, and the 64-byte key compare runs only on tag hits.
+//! A bucket's tag lane is contiguous and at most `spb × 4` bytes, so
+//! the common probe touches one cache line instead of walking ~80-byte
+//! AoS entries.  The tag is the same `hash` value threaded through
+//! [`HashTable::offer_hashed`] and [`Probe::Evicted`], so the FPE→BPE
+//! handoff never rehashes.
+//!
+//! Dense and sparse tables share the SoA core: a *dense* table maps
+//! bucket `b` to block `b` directly (FPE BRAM, index-addressed), while
+//! a *sparse* table keeps a bucket-id → block map and appends blocks on
+//! first touch, so a paper-scale 8 GB BPE region allocates memory
+//! proportional to occupancy while its collision/eviction behaviour is
+//! exactly that of the dense layout.
+//!
+//! Slots within a bucket fill a compact prefix (`len` per block): the
+//! table has no per-key removal (only whole-table drain), so no holes
+//! can form and probes scan exactly the occupied slots.
 
-use crate::protocol::{AggOp, Key, Value};
+use crate::protocol::{AggOp, Key, KvPair, Value};
 use crate::switch::hash::fnv1a_key;
 use crate::util::fxhash::FxHashMap;
 
@@ -33,20 +55,52 @@ pub enum Probe {
     Evicted(Key, Value, u32),
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-struct Slot {
-    key: Key,
-    value: Value,
-    /// Cached fnv1a_key(key, slot_key_width) — simulator-side
-    /// optimization; the hardware recomputes in its hash unit.
-    hash: u32,
+/// Struct-of-arrays slot storage over fixed-size blocks of
+/// `spb` slots (one block per occupied bucket).
+#[derive(Clone, Debug)]
+struct SoaBlocks {
+    spb: usize,
+    /// Cached hash (tag) per slot — the pre-filter lane.
+    tags: Vec<u32>,
+    keys: Vec<Key>,
+    vals: Vec<Value>,
+    /// Occupied slots per block; slots `[0, len)` of a block are live.
+    lens: Vec<u8>,
+    /// Round-robin eviction cursor per block; always `< spb`.
+    cursors: Vec<u8>,
 }
 
-/// One bucket's occupied slots + its round-robin eviction cursor.
-#[derive(Clone, Debug, Default)]
-struct Bucket {
-    slots: Vec<Slot>,
-    cursor: u8,
+impl SoaBlocks {
+    fn with_blocks(spb: usize, blocks: usize) -> Self {
+        Self {
+            spb,
+            tags: vec![0; blocks * spb],
+            keys: vec![Key::placeholder(); blocks * spb],
+            vals: vec![0; blocks * spb],
+            lens: vec![0; blocks],
+            cursors: vec![0; blocks],
+        }
+    }
+
+    /// Append an all-free block; returns its index.
+    fn push_block(&mut self) -> usize {
+        let blk = self.lens.len();
+        self.tags.resize(self.tags.len() + self.spb, 0);
+        self.keys.resize(self.keys.len() + self.spb, Key::placeholder());
+        self.vals.resize(self.vals.len() + self.spb, 0);
+        self.lens.push(0);
+        self.cursors.push(0);
+        blk
+    }
+
+    /// Drop every block but keep the allocations (sparse drain).
+    fn clear(&mut self) {
+        self.tags.clear();
+        self.keys.clear();
+        self.vals.clear();
+        self.lens.clear();
+        self.cursors.clear();
+    }
 }
 
 /// Above this many slots the table stores only occupied buckets; the
@@ -54,26 +108,27 @@ struct Bucket {
 /// paper-scale 8 GB BPE region does not allocate 8 GB.
 const DENSE_SLOT_LIMIT: usize = 1 << 22;
 
+/// How bucket indices map to SoA blocks.
 #[derive(Clone, Debug)]
-enum Storage {
-    /// slots[bucket * spb + i], cursor per bucket.
-    Dense(Vec<Option<Slot>>, Vec<u8>),
-    Sparse(FxHashMap<u32, Bucket>),
+enum Mapping {
+    /// Bucket `b` is block `b`; all blocks preallocated.
+    Dense,
+    /// bucket id → block index; blocks appended on first touch.
+    Sparse(FxHashMap<u32, u32>),
 }
 
 /// One engine's hash table (one key-length group).
 ///
 /// The *capacity* models the hardware memory (buckets × slots); the
-/// *storage* is sparse (occupied buckets only), so simulating the
-/// paper's 8 GB BPE DRAM does not allocate 8 GB — memory is
-/// proportional to occupancy while the collision/eviction behaviour is
-/// exactly that of the dense layout.
+/// *storage* is the SoA core above — dense for BRAM-sized tables,
+/// occupancy-proportional for DRAM-sized ones.
 #[derive(Clone, Debug)]
 pub struct HashTable {
     slot_key_width: usize,
     slots_per_bucket: usize,
     buckets: usize,
-    storage: Storage,
+    blocks: SoaBlocks,
+    map: Mapping,
     occupancy: usize,
     pub lookups: u64,
     pub evictions: u64,
@@ -84,20 +139,21 @@ impl HashTable {
     /// `slot_key_width`.  At least one bucket is always allocated.
     pub fn with_memory(mem_bytes: u64, slot_key_width: usize, slots_per_bucket: usize) -> Self {
         assert!(slot_key_width % 4 == 0 && slot_key_width > 0);
-        assert!(slots_per_bucket > 0);
+        assert!(slots_per_bucket > 0 && slots_per_bucket <= u8::MAX as usize);
         let slot_bytes = (slot_key_width + VALUE_BYTES) as u64;
         let total_slots = (mem_bytes / slot_bytes).max(1) as usize;
         let buckets = (total_slots / slots_per_bucket).max(1);
-        let storage = if buckets * slots_per_bucket <= DENSE_SLOT_LIMIT {
-            Storage::Dense(vec![None; buckets * slots_per_bucket], vec![0; buckets])
+        let (blocks, map) = if buckets * slots_per_bucket <= DENSE_SLOT_LIMIT {
+            (SoaBlocks::with_blocks(slots_per_bucket, buckets), Mapping::Dense)
         } else {
-            Storage::Sparse(FxHashMap::default())
+            (SoaBlocks::with_blocks(slots_per_bucket, 0), Mapping::Sparse(FxHashMap::default()))
         };
         Self {
             slot_key_width,
             slots_per_bucket,
             buckets,
-            storage,
+            blocks,
+            map,
             occupancy: 0,
             lookups: 0,
             evictions: 0,
@@ -120,19 +176,43 @@ impl HashTable {
         (self.capacity_pairs() * (self.slot_key_width + VALUE_BYTES)) as u64
     }
 
-    #[inline]
-    fn bucket_of(&self, key: &Key) -> usize {
-        (fnv1a_key(key, self.slot_key_width) as usize) % self.buckets
-    }
-
     /// Hash a key for this table's slot width (cacheable by callers).
     #[inline]
     pub fn hash_of(&self, key: &Key) -> u32 {
         fnv1a_key(key, self.slot_key_width)
     }
 
+    /// Block index for bucket `b`, materializing a sparse block on
+    /// first touch.  Free function over the two fields so `offer_hashed`
+    /// can keep disjoint borrows.
+    #[inline]
+    fn block_for(map: &mut Mapping, blocks: &mut SoaBlocks, b: usize) -> usize {
+        match map {
+            Mapping::Dense => b,
+            Mapping::Sparse(m) => {
+                if let Some(&blk) = m.get(&(b as u32)) {
+                    blk as usize
+                } else {
+                    let blk = blocks.push_block();
+                    m.insert(b as u32, blk as u32);
+                    blk
+                }
+            }
+        }
+    }
+
+    /// Read-only block lookup (`None` = bucket never touched).
+    #[inline]
+    fn block_for_read(&self, b: usize) -> Option<usize> {
+        match &self.map {
+            Mapping::Dense => Some(b),
+            Mapping::Sparse(m) => m.get(&(b as u32)).map(|&blk| blk as usize),
+        }
+    }
+
     /// Offer a pair: aggregate, insert, or evict (Fig. 7).
     /// `evict_old`: true = paper behaviour (resident pair leaves).
+    #[inline]
     pub fn offer(&mut self, key: Key, value: Value, op: AggOp, evict_old: bool) -> Probe {
         let hash = self.hash_of(&key);
         self.offer_hashed(hash, key, value, op, evict_old)
@@ -152,128 +232,151 @@ impl HashTable {
         debug_assert_eq!(hash, self.hash_of(&key));
         self.lookups += 1;
         let b = (hash as usize) % self.buckets;
+        let blk = Self::block_for(&mut self.map, &mut self.blocks, b);
         let spb = self.slots_per_bucket;
-        match &mut self.storage {
-            Storage::Dense(slots, cursors) => {
-                let base = b * spb;
-                let mut free: Option<usize> = None;
-                for i in base..base + spb {
-                    match &mut slots[i] {
-                        Some(s) if s.key == key => {
-                            s.value = op.combine(s.value, value);
-                            return Probe::Aggregated;
-                        }
-                        Some(_) => {}
-                        None => {
-                            if free.is_none() {
-                                free = Some(i);
-                            }
-                        }
-                    }
-                }
-                if let Some(i) = free {
-                    slots[i] = Some(Slot { key, value, hash });
-                    self.occupancy += 1;
-                    return Probe::Inserted;
-                }
-                self.evictions += 1;
-                if evict_old {
-                    let cursor = &mut cursors[b];
-                    let victim_i = base + (*cursor as usize % spb);
-                    *cursor = cursor.wrapping_add(1);
-                    let old = slots[victim_i].replace(Slot { key, value, hash }).unwrap();
-                    Probe::Evicted(old.key, old.value, old.hash)
-                } else {
-                    Probe::Evicted(key, value, hash)
-                }
+        let base = blk * spb;
+        let len = self.blocks.lens[blk] as usize;
+
+        // Tag pre-filter: scan the dense u32 lane; the wide key compare
+        // runs only on tag hits (false positives are ~2^-32 per slot).
+        for i in 0..len {
+            if self.blocks.tags[base + i] == hash && self.blocks.keys[base + i] == key {
+                let v = &mut self.blocks.vals[base + i];
+                *v = op.combine(*v, value);
+                return Probe::Aggregated;
             }
-            Storage::Sparse(occupied) => {
-                let bucket = occupied.entry(b as u32).or_default();
-                for s in bucket.slots.iter_mut() {
-                    if s.key == key {
-                        s.value = op.combine(s.value, value);
-                        return Probe::Aggregated;
-                    }
-                }
-                if bucket.slots.len() < spb {
-                    bucket.slots.push(Slot { key, value, hash });
-                    self.occupancy += 1;
-                    return Probe::Inserted;
-                }
-                self.evictions += 1;
-                if evict_old {
-                    let victim_i = bucket.cursor as usize % spb;
-                    bucket.cursor = bucket.cursor.wrapping_add(1);
-                    let old = std::mem::replace(
-                        &mut bucket.slots[victim_i],
-                        Slot { key, value, hash },
-                    );
-                    Probe::Evicted(old.key, old.value, old.hash)
-                } else {
-                    Probe::Evicted(key, value, hash)
+        }
+        if len < spb {
+            self.blocks.tags[base + len] = hash;
+            self.blocks.keys[base + len] = key;
+            self.blocks.vals[base + len] = value;
+            self.blocks.lens[blk] = (len + 1) as u8;
+            self.occupancy += 1;
+            return Probe::Inserted;
+        }
+        self.evictions += 1;
+        if evict_old {
+            let cur = self.blocks.cursors[blk] as usize;
+            // Wrap at spb directly: a free-running u8 taken `% spb`
+            // rotates victims unevenly whenever 256 % spb != 0.
+            self.blocks.cursors[blk] = if cur + 1 >= spb { 0 } else { (cur + 1) as u8 };
+            let vi = base + cur;
+            let old_key = std::mem::replace(&mut self.blocks.keys[vi], key);
+            let old_val = std::mem::replace(&mut self.blocks.vals[vi], value);
+            let old_tag = std::mem::replace(&mut self.blocks.tags[vi], hash);
+            Probe::Evicted(old_key, old_val, old_tag)
+        } else {
+            Probe::Evicted(key, value, hash)
+        }
+    }
+
+    /// Offer a batch of pairs (one packet's worth) in order, appending
+    /// evictees — with their cached tag — to `evicted`; returns
+    /// `(aggregated, inserted)` counts.  Two-phase per sub-batch: the
+    /// hash unit runs as its own tight loop over the keys (no table
+    /// traffic, so it pipelines), then the probe loop walks the table
+    /// with every hash already in hand — the batched analogue of the
+    /// FPE hash-unit/lookup split.  Outcomes are bit-identical to
+    /// calling [`Self::offer`] per pair, and the caller-owned `evicted`
+    /// buffer keeps the path allocation-free in steady state.
+    pub fn offer_batch(
+        &mut self,
+        pairs: &[KvPair],
+        op: AggOp,
+        evict_old: bool,
+        evicted: &mut Vec<(Key, Value, u32)>,
+    ) -> (u64, u64) {
+        const LANE: usize = 64;
+        let mut hashes = [0u32; LANE];
+        let mut aggregated = 0u64;
+        let mut inserted = 0u64;
+        for chunk in pairs.chunks(LANE) {
+            for (h, p) in hashes.iter_mut().zip(chunk) {
+                *h = self.hash_of(&p.key);
+            }
+            for (&hash, p) in hashes.iter().zip(chunk) {
+                match self.offer_hashed(hash, p.key, p.value, op, evict_old) {
+                    Probe::Aggregated => aggregated += 1,
+                    Probe::Inserted => inserted += 1,
+                    Probe::Evicted(k, v, h) => evicted.push((k, v, h)),
                 }
             }
         }
+        (aggregated, inserted)
     }
 
     /// Read a key's current value (tests / reducer verification).
     pub fn get(&self, key: &Key) -> Option<Value> {
-        let b = self.bucket_of(key);
-        match &self.storage {
-            Storage::Dense(slots, _) => slots[b * self.slots_per_bucket..][..self.slots_per_bucket]
-                .iter()
-                .flatten()
-                .find(|s| s.key == *key)
-                .map(|s| s.value),
-            Storage::Sparse(occupied) => occupied
-                .get(&(b as u32))?
-                .slots
-                .iter()
-                .find(|s| s.key == *key)
-                .map(|s| s.value),
-        }
+        self.get_hashed(self.hash_of(key), key)
     }
 
-    /// Drain all resident pairs (flush to next hop / next stage), in
-    /// memory order (bucket index, then slot) — the BPE-Flush stage
-    /// streams this out of RAM.
-    pub fn drain(&mut self) -> Vec<(Key, Value)> {
-        let mut out = Vec::with_capacity(self.occupancy);
-        match &mut self.storage {
-            Storage::Dense(slots, _) => {
-                for s in slots.iter_mut() {
-                    if let Some(slot) = s.take() {
-                        out.push((slot.key, slot.value));
+    /// [`Self::get`] with the hash precomputed — the BPE/verification
+    /// paths already hold the FPE hash-unit output, so the lookup need
+    /// not rehash the key.
+    pub fn get_hashed(&self, hash: u32, key: &Key) -> Option<Value> {
+        debug_assert_eq!(hash, self.hash_of(key));
+        let b = (hash as usize) % self.buckets;
+        let blk = self.block_for_read(b)?;
+        let base = blk * self.slots_per_bucket;
+        let len = self.blocks.lens[blk] as usize;
+        (0..len)
+            .find(|&i| self.blocks.tags[base + i] == hash && self.blocks.keys[base + i] == *key)
+            .map(|i| self.blocks.vals[base + i])
+    }
+
+    /// Drain all resident pairs (flush to next hop / next stage) into
+    /// `out`, in memory order (bucket index, then slot) — the BPE-Flush
+    /// stage streams this out of RAM.  Appends without clearing so
+    /// callers can reuse one scratch buffer across engines.
+    pub fn drain_into(&mut self, out: &mut Vec<(Key, Value)>) {
+        let spb = self.slots_per_bucket;
+        match &mut self.map {
+            Mapping::Dense => {
+                for blk in 0..self.blocks.lens.len() {
+                    let len = self.blocks.lens[blk] as usize;
+                    let base = blk * spb;
+                    for i in 0..len {
+                        out.push((self.blocks.keys[base + i], self.blocks.vals[base + i]));
                     }
+                    self.blocks.lens[blk] = 0;
+                    self.blocks.cursors[blk] = 0;
                 }
             }
-            Storage::Sparse(occupied) => {
-                let mut ids: Vec<u32> = occupied.keys().copied().collect();
+            Mapping::Sparse(m) => {
+                let mut ids: Vec<(u32, u32)> = m.iter().map(|(&b, &blk)| (b, blk)).collect();
                 ids.sort_unstable();
-                for id in ids {
-                    let bucket = occupied.remove(&id).unwrap();
-                    out.extend(bucket.slots.into_iter().map(|s| (s.key, s.value)));
+                for (_, blk) in ids {
+                    let blk = blk as usize;
+                    let len = self.blocks.lens[blk] as usize;
+                    let base = blk * spb;
+                    for i in 0..len {
+                        out.push((self.blocks.keys[base + i], self.blocks.vals[base + i]));
+                    }
                 }
+                m.clear();
+                self.blocks.clear();
             }
         }
         self.occupancy = 0;
+    }
+
+    /// [`Self::drain_into`] into a fresh vector.
+    pub fn drain(&mut self) -> Vec<(Key, Value)> {
+        let mut out = Vec::with_capacity(self.occupancy);
+        self.drain_into(&mut out);
         out
     }
 
     /// Iterate resident pairs without draining (arbitrary order).
     pub fn iter(&self) -> impl Iterator<Item = (&Key, Value)> + '_ {
-        let (dense, sparse): (Option<_>, Option<_>) = match &self.storage {
-            Storage::Dense(slots, _) => (Some(slots.iter().flatten()), None),
-            Storage::Sparse(occupied) => (
-                None,
-                Some(occupied.values().flat_map(|b| b.slots.iter())),
-            ),
-        };
-        dense
-            .into_iter()
-            .flatten()
-            .chain(sparse.into_iter().flatten())
-            .map(|s| (&s.key, s.value))
+        let spb = self.slots_per_bucket;
+        let blocks = &self.blocks;
+        blocks.lens.iter().enumerate().flat_map(move |(blk, &len)| {
+            let base = blk * spb;
+            blocks.keys[base..base + len as usize]
+                .iter()
+                .zip(blocks.vals[base..base + len as usize].iter().copied())
+        })
     }
 }
 
@@ -300,6 +403,7 @@ mod tests {
         assert_eq!(t.offer(k, 10, AggOp::Sum, true), Probe::Inserted);
         assert_eq!(t.offer(k, 32, AggOp::Sum, true), Probe::Aggregated);
         assert_eq!(t.get(&k), Some(42));
+        assert_eq!(t.get_hashed(t.hash_of(&k), &k), Some(42));
         assert_eq!(t.occupancy(), 1);
     }
 
@@ -352,6 +456,36 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_eviction_unbiased_when_spb_not_power_of_two() {
+        // spb = 3 does not divide 256: a free-running u8 cursor taken
+        // `% 3` would double-serve slot 0 at every wrap.  With the
+        // cursor wrapping at spb the full bucket behaves as a period-3
+        // FIFO: the evictee is always the key offered 3 evictions ago.
+        let mut t = HashTable::with_memory(3 * 12, 8, 3);
+        assert_eq!(t.buckets, 1);
+        let mut offered: Vec<Key> = Vec::new();
+        for id in 0..3u64 {
+            let k = Key::from_id(id, 8);
+            assert_eq!(t.offer(k, 1, AggOp::Sum, true), Probe::Inserted);
+            offered.push(k);
+        }
+        for id in 3..600u64 {
+            let k = Key::from_id(id, 8);
+            match t.offer(k, 1, AggOp::Sum, true) {
+                Probe::Evicted(ek, _, _) => {
+                    assert_eq!(
+                        ek,
+                        offered[offered.len() - 3],
+                        "victim rotation broke at id {id}"
+                    );
+                }
+                other => panic!("expected eviction, got {other:?}"),
+            }
+            offered.push(k);
+        }
+    }
+
+    #[test]
     fn drain_returns_everything_once() {
         let mut t = table(128, 16, 2);
         let mut inserted = 0;
@@ -367,6 +501,50 @@ mod tests {
         assert_eq!(drained.len(), inserted);
         assert_eq!(t.occupancy(), 0);
         assert!(t.drain().is_empty());
+    }
+
+    #[test]
+    fn drain_resets_eviction_cursors() {
+        // After a drain the table must behave exactly like a fresh one.
+        let mut t = HashTable::with_memory(24, 8, 2);
+        for id in 0..7u64 {
+            t.offer(Key::from_id(id, 8), 1, AggOp::Sum, true);
+        }
+        t.drain();
+        let k1 = Key::from_id(100, 8);
+        let k2 = Key::from_id(101, 8);
+        let k3 = Key::from_id(102, 8);
+        t.offer(k1, 1, AggOp::Sum, true);
+        t.offer(k2, 1, AggOp::Sum, true);
+        match t.offer(k3, 1, AggOp::Sum, true) {
+            Probe::Evicted(ek, _, _) => assert_eq!(ek, k1, "cursor must restart at slot 0"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn offer_batch_matches_scalar_path() {
+        let pairs: Vec<KvPair> = (0..500u64)
+            .map(|id| KvPair::new(Key::from_id(id % 97, 16), (id % 13) as Value))
+            .collect();
+        let mut scalar = table(32, 16, 2);
+        let mut scalar_evicted: Vec<(Key, Value, u32)> = Vec::new();
+        let (mut agg_s, mut ins_s) = (0u64, 0u64);
+        for p in &pairs {
+            match scalar.offer(p.key, p.value, AggOp::Sum, true) {
+                Probe::Aggregated => agg_s += 1,
+                Probe::Inserted => ins_s += 1,
+                Probe::Evicted(k, v, h) => scalar_evicted.push((k, v, h)),
+            }
+        }
+        let mut batched = table(32, 16, 2);
+        let mut batch_evicted: Vec<(Key, Value, u32)> = Vec::new();
+        let (agg_b, ins_b) = batched.offer_batch(&pairs, AggOp::Sum, true, &mut batch_evicted);
+        assert_eq!((agg_s, ins_s), (agg_b, ins_b));
+        assert_eq!(scalar_evicted, batch_evicted);
+        let a: Vec<(Key, Value)> = scalar.drain();
+        let b: Vec<(Key, Value)> = batched.drain();
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -386,5 +564,34 @@ mod tests {
         }
         let resident_sum: Value = t.iter().map(|(_, v)| v).sum();
         assert_eq!(input_sum, resident_sum + evicted_sum);
+    }
+
+    #[test]
+    fn sparse_table_allocates_proportional_to_occupancy() {
+        // 1 GB worth of capacity must not allocate 1 GB of slots.
+        let mut t = HashTable::with_memory(1 << 30, 64, 4);
+        assert!(t.capacity_pairs() > DENSE_SLOT_LIMIT);
+        assert!(matches!(t.map, Mapping::Sparse(_)));
+        for id in 0..1000u64 {
+            t.offer(Key::from_id(id, 64), 1, AggOp::Sum, true);
+        }
+        assert_eq!(t.occupancy(), 1000);
+        // At most one block (spb slots) per offered key.
+        assert!(t.blocks.lens.len() <= 1000);
+        let drained = t.drain();
+        assert_eq!(drained.len(), 1000);
+        assert!(t.blocks.lens.is_empty(), "sparse drain releases blocks");
+    }
+
+    #[test]
+    fn evicted_tag_matches_recomputed_hash() {
+        let mut t = table(1, 16, 1);
+        let k1 = Key::from_id(1, 16);
+        let k2 = Key::from_id(2, 16);
+        t.offer(k1, 1, AggOp::Sum, true);
+        let Probe::Evicted(ek, _, tag) = t.offer(k2, 2, AggOp::Sum, true) else {
+            panic!()
+        };
+        assert_eq!(tag, t.hash_of(&ek));
     }
 }

@@ -33,4 +33,4 @@ pub mod switch_sim;
 pub use config::{EvictionPolicy, MemoryPolicy, StageDelays, SwitchConfig};
 pub use hash_table::{HashTable, Probe};
 pub use payload_analyzer::GroupMap;
-pub use switch_sim::{SwitchAggSwitch, SwitchStats};
+pub use switch_sim::{IngestOutput, IngestSink, SwitchAggSwitch, SwitchStats};

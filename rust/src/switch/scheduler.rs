@@ -16,6 +16,7 @@ pub enum SchedPolicy {
 #[derive(Clone, Debug)]
 pub struct Scheduler {
     policy: SchedPolicy,
+    n: usize,
     cursor: usize,
     pub grants: u64,
 }
@@ -23,12 +24,25 @@ pub struct Scheduler {
 impl Scheduler {
     pub fn new(n: usize, policy: SchedPolicy) -> Self {
         assert!(n > 0);
-        let _ = n;
         Self {
             policy,
+            n,
             cursor: 0,
             grants: 0,
         }
+    }
+
+    /// Grant a single known-nonempty queue — the event-driven fast
+    /// path: the simulator presents evictions one at a time, so exactly
+    /// one forward queue is occupied and both policies must pick it.
+    /// Equivalent to [`Self::pick`] on a depth vector with
+    /// `depths[group] = 1` and zeros elsewhere, without building it.
+    #[inline]
+    pub fn grant_single(&mut self, group: usize) -> usize {
+        debug_assert!(group < self.n);
+        self.cursor = (group + 1) % self.n;
+        self.grants += 1;
+        group
     }
 
     /// Pick the next queue to serve given current queue depths.
@@ -75,6 +89,20 @@ mod tests {
         assert_eq!(s.pick(&[0, 2, 0]), Some(1));
         assert_eq!(s.pick(&[0, 1, 3]), Some(2));
         assert_eq!(s.pick(&[0, 0, 0]), None);
+    }
+
+    #[test]
+    fn grant_single_matches_pick_on_singleton_depths() {
+        for policy in [SchedPolicy::RoundRobin, SchedPolicy::LongestQueueFirst] {
+            let mut a = Scheduler::new(4, policy);
+            let mut b = Scheduler::new(4, policy);
+            for g in [2usize, 0, 3, 3, 1] {
+                let mut depths = [0usize; 4];
+                depths[g] = 1;
+                assert_eq!(a.pick(&depths), Some(b.grant_single(g)), "{policy:?} g={g}");
+            }
+            assert_eq!(a.grants, b.grants);
+        }
     }
 
     #[test]

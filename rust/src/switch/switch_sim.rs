@@ -8,7 +8,19 @@
 //! `fpe_interval` cycles and, on eviction, ride the scheduler into the
 //! BPE.  All FIFO occupancy / full events are recorded per Table 2;
 //! per-stage latencies per Table 3.
+//!
+//! # Allocation discipline
+//!
+//! The per-pair loop is the simulator's hot path, so the ingest API is
+//! sink-based: callers own an [`IngestSink`] whose buffers are reused
+//! across packets, and the stream entry points
+//! ([`SwitchAggSwitch::ingest_stream`] /
+//! [`SwitchAggSwitch::ingest_child_streams`]) walk MTU-sized *chunks*
+//! of the caller's pair slice instead of materializing packet objects
+//! — in steady state the data plane performs no per-packet heap
+//! allocation (see `EXPERIMENTS.md` §Perf).
 
+use crate::protocol::packet::MtuChunks;
 use crate::protocol::{
     AggOp, AggregationPacket, Key, KvPair, TreeConfig, TreeId, Value, AGG_FIXED_LEN,
     HEADER_OVERHEAD, MAX_AGG_PAYLOAD,
@@ -83,7 +95,8 @@ impl SwitchStats {
     }
 }
 
-/// Everything the switch emits while ingesting one packet.
+/// Everything the switch emits while ingesting one packet (owning
+/// variant, built by the compatibility wrapper [`SwitchAggSwitch::ingest`]).
 #[derive(Clone, Debug, Default)]
 pub struct IngestOutput {
     /// Pairs leaving downstream immediately (evictions, overflow).
@@ -91,6 +104,41 @@ pub struct IngestOutput {
     /// Set when this packet completed the tree (all children EoT):
     /// the flushed residents.
     pub flushed: Option<Vec<KvPair>>,
+}
+
+/// Caller-owned, reusable output sink for the ingest path: the switch
+/// *appends*, the caller clears — so a steady-state ingest loop does no
+/// per-packet heap allocation once the buffers have warmed up.
+#[derive(Clone, Debug, Default)]
+pub struct IngestSink {
+    /// Pairs leaving downstream immediately (evictions, overflow).
+    pub forwarded: Vec<KvPair>,
+    /// Residents streamed out by end-of-tree flushes.
+    pub flushed: Vec<KvPair>,
+    /// Number of tree completions (flushes) recorded since `clear`.
+    pub flushes: u32,
+    /// Reused engine-drain scratch.
+    scratch: Vec<(Key, Value)>,
+}
+
+impl IngestSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Empty all buffers, keeping their capacity.
+    pub fn clear(&mut self) {
+        self.forwarded.clear();
+        self.flushed.clear();
+        self.flushes = 0;
+        self.scratch.clear();
+    }
+
+    /// Total buffer capacity in elements — used by tests/benches to
+    /// assert that steady-state ingest stops allocating.
+    pub fn capacity(&self) -> usize {
+        self.forwarded.capacity() + self.flushed.capacity() + self.scratch.capacity()
+    }
 }
 
 /// One aggregation tree's slice of the data plane.
@@ -105,9 +153,6 @@ struct TreeEngine {
     bpe: Option<Bpe>,
     /// Byte-pacing accumulator for input arrivals.
     bytes_arrived: u64,
-    /// Scratch queue-depth buffer for scheduler grants (avoids a per-
-    /// eviction allocation on the hot path).
-    depths_scratch: Vec<usize>,
     stats: SwitchStats,
 }
 
@@ -140,7 +185,6 @@ impl TreeEngine {
             analyzer: PayloadAnalyzer::new(map),
             crossbar: Crossbar::new(cfg.n_groups, cfg.delays.crossbar),
             scheduler: Scheduler::new(cfg.n_groups, SchedPolicy::RoundRobin),
-            depths_scratch: vec![0; cfg.n_groups],
             fpes,
             bpe,
             bytes_arrived: 0,
@@ -158,14 +202,24 @@ impl TreeEngine {
         self.bytes_arrived * PACE_NUM / (PACE_DEN * ports)
     }
 
-    fn ingest(&mut self, pkt: &AggregationPacket, header_delay: Cycles) -> IngestOutput {
-        let mut out = IngestOutput::default();
+    /// Ingest one packet's worth of pairs.  This is the core ingest
+    /// path: the packet need not be materialized — stream entry points
+    /// pass MTU-sized chunks of the caller's slice directly.
+    fn ingest_pairs(
+        &mut self,
+        pairs: &[KvPair],
+        eot: bool,
+        header_delay: Cycles,
+        out: &mut IngestSink,
+    ) {
         self.stats.packets_in += 1;
-        self.stats.bytes_in += pkt.wire_len() as u64;
+        self.stats.bytes_in += (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64;
         self.bytes_arrived += (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64;
 
-        for p in &pkt.pairs {
-            self.bytes_arrived += p.encoded_len() as u64;
+        for p in pairs {
+            let el = p.encoded_len() as u64;
+            self.stats.bytes_in += el;
+            self.bytes_arrived += el;
             self.stats.pairs_in += 1;
             let arrive = self.arrival_cycle() + header_delay;
             let g = self.analyzer.classify(p);
@@ -178,20 +232,18 @@ impl TreeEngine {
                     hash,
                     ready,
                 } => {
-                    self.forward_evicted(g, key, value, hash, ready, &mut out);
+                    self.forward_evicted(g, key, value, hash, ready, out);
                 }
             }
         }
 
-        if pkt.eot {
+        if eot {
             self.eot_seen += 1;
             if self.eot_seen >= self.children {
-                let flushed = self.flush();
-                out.flushed = Some(flushed);
+                self.flush_into(out);
             }
         }
         self.roll_stats();
-        out
     }
 
     /// Route an FPE-evicted pair: to the BPE if the hierarchy is on,
@@ -203,15 +255,14 @@ impl TreeEngine {
         value: Value,
         hash: u32,
         ready: Cycles,
-        out: &mut IngestOutput,
+        out: &mut IngestSink,
     ) {
         match &mut self.bpe {
             Some(bpe) => {
-                // The scheduler grants this FPE's forward queue; depths
-                // are instantaneous (event-driven model).
-                self.depths_scratch.fill(0);
-                self.depths_scratch[group] = 1;
-                let granted = self.scheduler.pick(&self.depths_scratch).expect("nonempty queue");
+                // The scheduler grants this FPE's forward queue; the
+                // event-driven model presents evictions one at a time,
+                // so the queue-depth vector would be a singleton.
+                let granted = self.scheduler.grant_single(group);
                 debug_assert_eq!(granted, group);
                 match bpe.offer_hashed(ready, group, key, value, hash, self.op) {
                     BpeOutcome::Kept => {}
@@ -224,7 +275,7 @@ impl TreeEngine {
         }
     }
 
-    fn emit_pair(&mut self, p: KvPair, out: &mut IngestOutput) {
+    fn emit_pair(&mut self, p: KvPair, out: &mut IngestSink) {
         self.stats.pairs_out_stream += 1;
         self.stats.bytes_out += p.encoded_len() as u64;
         out.forwarded.push(p);
@@ -232,24 +283,27 @@ impl TreeEngine {
 
     /// Flush every engine (EoT from all children, §4.2.2): residents
     /// stream downstream; Table 3's BPE-Flush dominates the cost.
-    fn flush(&mut self) -> Vec<KvPair> {
-        let mut pairs: Vec<KvPair> = Vec::new();
+    fn flush_into(&mut self, out: &mut IngestSink) {
+        out.flushes += 1;
+        let start = out.flushed.len();
         let mut flush_cycles: Cycles = 0;
         for f in &mut self.fpes {
-            let (resident, cyc) = f.flush();
-            flush_cycles += cyc;
-            pairs.extend(resident.into_iter().map(|(k, v)| KvPair::new(k, v)));
+            out.scratch.clear();
+            flush_cycles += f.flush_into(&mut out.scratch);
+            out.flushed
+                .extend(out.scratch.iter().map(|&(k, v)| KvPair::new(k, v)));
         }
         if let Some(bpe) = &mut self.bpe {
-            let (resident, cyc) = bpe.flush();
-            flush_cycles += cyc;
-            pairs.extend(resident.into_iter().map(|(k, v)| KvPair::new(k, v)));
+            out.scratch.clear();
+            flush_cycles += bpe.flush_into(&mut out.scratch);
+            out.flushed
+                .extend(out.scratch.iter().map(|&(k, v)| KvPair::new(k, v)));
         }
         self.stats.flush_cycles += flush_cycles;
-        self.stats.pairs_out_flush += pairs.len() as u64;
-        self.stats.bytes_out += pairs.iter().map(|p| p.encoded_len() as u64).sum::<u64>();
+        let flushed_now = &out.flushed[start..];
+        self.stats.pairs_out_flush += flushed_now.len() as u64;
+        self.stats.bytes_out += flushed_now.iter().map(|p| p.encoded_len() as u64).sum::<u64>();
         self.eot_seen = 0;
-        pairs
     }
 
     /// Fold engine counters into the per-tree stats snapshot.
@@ -292,6 +346,8 @@ pub struct SwitchAggSwitch {
     pub forwarding: Forwarding,
     config_module: ConfigModule,
     trees: BTreeMap<TreeId, TreeEngine>,
+    /// Reused sink for the stream entry points.
+    sink: IngestSink,
 }
 
 impl SwitchAggSwitch {
@@ -302,6 +358,7 @@ impl SwitchAggSwitch {
             forwarding: Forwarding::new(),
             config_module: ConfigModule::new(),
             trees: BTreeMap::new(),
+            sink: IngestSink::new(),
         }
     }
 
@@ -348,22 +405,42 @@ impl SwitchAggSwitch {
         self.trees.len()
     }
 
-    /// Ingest one aggregation packet for its tree.
-    pub fn ingest(&mut self, pkt: &AggregationPacket) -> IngestOutput {
+    /// Ingest one aggregation packet for its tree, appending outputs to
+    /// a caller-owned (reusable) sink.
+    pub fn ingest_into(&mut self, pkt: &AggregationPacket, sink: &mut IngestSink) {
         let engine = self
             .trees
             .get_mut(&pkt.tree)
             .unwrap_or_else(|| panic!("tree {} not configured", pkt.tree));
-        engine.ingest(pkt, self.cfg.delays.header_analyzer)
+        engine.ingest_pairs(&pkt.pairs, pkt.eot, self.cfg.delays.header_analyzer, sink);
     }
 
-    /// Convenience: run a whole pair stream (pre-packed into MTU
-    /// packets) through one tree; the last packet carries EoT counted
-    /// once per `children`, so pass the merged stream of all children
-    /// with `eot_per_child` packets at the end — or use
+    /// Ingest one aggregation packet, returning owned output buffers
+    /// (compatibility wrapper; hot loops should prefer
+    /// [`Self::ingest_into`] with a reused [`IngestSink`]).
+    pub fn ingest(&mut self, pkt: &AggregationPacket) -> IngestOutput {
+        let mut sink = IngestSink::new();
+        self.ingest_into(pkt, &mut sink);
+        IngestOutput {
+            forwarded: sink.forwarded,
+            flushed: (sink.flushes > 0).then_some(sink.flushed),
+        }
+    }
+
+    /// Capacity of the internal reusable ingest sink — lets tests
+    /// assert that the steady-state stream path stops allocating.
+    pub fn sink_capacity(&self) -> usize {
+        self.sink.capacity()
+    }
+
+    /// Convenience: run a whole pair stream (chunked into MTU-sized
+    /// packets on the fly) through one tree; EoT is counted once per
+    /// `children`, so pass the merged stream of all children — or use
     /// [`Self::ingest_child_streams`].
     pub fn ingest_stream(&mut self, tree: TreeId, op: AggOp, pairs: &[KvPair]) -> Vec<KvPair> {
-        let mut out = Vec::new();
+        let _ = op; // the tree's configured op applies; kept for API compat
+        let mut sink = std::mem::take(&mut self.sink);
+        sink.clear();
         let children = self
             .config_module
             .get(tree)
@@ -371,24 +448,16 @@ impl SwitchAggSwitch {
             .unwrap_or(1);
         // Merged stream: emit children EoTs by splitting at the end
         // (Theorem 2.1: merging flows preserves the reduction ratio).
-        let pkts = AggregationPacket::pack_stream(tree, op, pairs, false);
-        for pkt in &pkts {
-            out.extend(self.ingest(pkt).forwarded);
+        let mut chunks = MtuChunks::new(pairs);
+        while let Some((chunk, _)) = chunks.next_chunk() {
+            self.ingest_pairs_for(tree, chunk, false, &mut sink);
         }
         for _ in 0..children {
-            let eot = AggregationPacket {
-                tree,
-                op,
-                eot: true,
-                pairs: vec![],
-            };
-            let r = self.ingest(&eot);
-            out.extend(r.forwarded);
-            if let Some(flushed) = r.flushed {
-                out.extend(flushed);
-            }
+            self.ingest_pairs_for(tree, &[], true, &mut sink);
         }
         self.finalize(tree);
+        let out = sink_to_vec(&sink);
+        self.sink = sink;
         out
     }
 
@@ -400,25 +469,43 @@ impl SwitchAggSwitch {
         op: AggOp,
         streams: &[Vec<KvPair>],
     ) -> Vec<KvPair> {
-        let mut out = Vec::new();
-        let packed: Vec<Vec<AggregationPacket>> = streams
-            .iter()
-            .map(|s| AggregationPacket::pack_stream(tree, op, s, true))
-            .collect();
-        let max_len = packed.iter().map(|p| p.len()).max().unwrap_or(0);
-        for i in 0..max_len {
-            for child in &packed {
-                if let Some(pkt) = child.get(i) {
-                    let r = self.ingest(pkt);
-                    out.extend(r.forwarded);
-                    if let Some(flushed) = r.flushed {
-                        out.extend(flushed);
-                    }
+        let _ = op; // the tree's configured op applies; kept for API compat
+        let mut sink = std::mem::take(&mut self.sink);
+        sink.clear();
+        let mut chunkers: Vec<MtuChunks<'_>> =
+            streams.iter().map(|s| MtuChunks::new(s)).collect();
+        loop {
+            let mut progressed = false;
+            for c in chunkers.iter_mut() {
+                if let Some((chunk, last)) = c.next_chunk() {
+                    progressed = true;
+                    self.ingest_pairs_for(tree, chunk, last, &mut sink);
                 }
+            }
+            if !progressed {
+                break;
             }
         }
         self.finalize(tree);
+        let out = sink_to_vec(&sink);
+        self.sink = sink;
         out
+    }
+
+    /// Core slice-based ingest (no packet object): one MTU chunk of one
+    /// tree's traffic.
+    fn ingest_pairs_for(
+        &mut self,
+        tree: TreeId,
+        pairs: &[KvPair],
+        eot: bool,
+        sink: &mut IngestSink,
+    ) {
+        let engine = self
+            .trees
+            .get_mut(&tree)
+            .unwrap_or_else(|| panic!("tree {tree} not configured"));
+        engine.ingest_pairs(pairs, eot, self.cfg.delays.header_analyzer, sink);
     }
 
     /// Close output byte accounting (packetization of the out stream).
@@ -448,6 +535,15 @@ impl SwitchAggSwitch {
     pub fn bpe_dram_stats(&self, tree: TreeId) -> Option<(u64, Cycles)> {
         self.trees[&tree].bpe.as_ref().map(|b| b.dram_stats())
     }
+}
+
+/// Concatenate a sink's stream + flush output (flushes only happen
+/// after the final EoT, so this preserves emission order).
+fn sink_to_vec(sink: &IngestSink) -> Vec<KvPair> {
+    let mut out = Vec::with_capacity(sink.forwarded.len() + sink.flushed.len());
+    out.extend_from_slice(&sink.forwarded);
+    out.extend_from_slice(&sink.flushed);
+    out
 }
 
 #[cfg(test)]
@@ -543,10 +639,61 @@ mod tests {
         let out = sw.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
         let s = sw.stats(TreeId(1)).unwrap();
         assert!(s.pairs_out_flush > 0);
-        assert_eq!(s.packets_in > 0, true);
+        assert!(s.packets_in > 0);
         let want: Value = streams.iter().flatten().map(|p| p.value).sum();
         let got: Value = out.iter().map(|p| p.value).sum();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn chunked_stream_ingest_matches_packetized_ingest() {
+        // The zero-copy stream path must produce byte-for-byte the
+        // same outputs and stats as ingesting materialized packets.
+        let input = pairs(5_000, 700, 21);
+        let mut chunked = configured_switch(16 << 10, Some(256 << 10), 1);
+        let out_chunked = chunked.ingest_stream(TreeId(1), AggOp::Sum, &input);
+
+        let mut packetized = configured_switch(16 << 10, Some(256 << 10), 1);
+        let pkts = AggregationPacket::pack_stream(TreeId(1), AggOp::Sum, &input, false);
+        let mut sink = IngestSink::new();
+        for pkt in &pkts {
+            packetized.ingest_into(pkt, &mut sink);
+        }
+        let eot = AggregationPacket {
+            tree: TreeId(1),
+            op: AggOp::Sum,
+            eot: true,
+            pairs: vec![],
+        };
+        packetized.ingest_into(&eot, &mut sink);
+        packetized.finalize(TreeId(1));
+        let out_packetized = sink_to_vec(&sink);
+
+        assert_eq!(out_chunked, out_packetized);
+        let a = chunked.stats(TreeId(1)).unwrap();
+        let b = packetized.stats(TreeId(1)).unwrap();
+        assert_eq!((a.packets_in, a.bytes_in, a.bytes_out), (b.packets_in, b.bytes_in, b.bytes_out));
+    }
+
+    #[test]
+    fn ingest_into_matches_ingest_wrapper() {
+        let input = pairs(3_000, 200, 33);
+        let pkts = AggregationPacket::pack_stream(TreeId(1), AggOp::Sum, &input, true);
+        let mut a = configured_switch(16 << 10, Some(256 << 10), 1);
+        let mut b = configured_switch(16 << 10, Some(256 << 10), 1);
+        let mut sink = IngestSink::new();
+        let mut via_wrapper: Vec<KvPair> = Vec::new();
+        for pkt in &pkts {
+            let r = a.ingest(pkt);
+            via_wrapper.extend(r.forwarded);
+            if let Some(f) = r.flushed {
+                via_wrapper.extend(f);
+            }
+            b.ingest_into(pkt, &mut sink);
+        }
+        let via_sink = sink_to_vec(&sink);
+        assert_eq!(via_wrapper, via_sink);
+        assert_eq!(sink.flushes, 1);
     }
 
     #[test]

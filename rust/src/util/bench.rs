@@ -77,6 +77,72 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable bench log (`BENCH_hotpath.json` and friends): one
+/// entry per case with ns/op and items/s, so the perf trajectory stays
+/// comparable across PRs.  Hand-rolled serialization — the offline
+/// crate set has no serde.
+#[derive(Clone, Debug, Default)]
+pub struct JsonLog {
+    entries: Vec<BenchResult>,
+}
+
+impl JsonLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: &BenchResult) {
+        self.entries.push(r.clone());
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// `{ "name": {"mean_s": .., "p50_s": .., "p95_s": .., "reps": ..,
+    ///            "ns_per_op": ..|null, "items_per_s": ..|null}, ... }`
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        fn opt(v: Option<f64>) -> String {
+            match v {
+                Some(x) => format!("{x:.3}"),
+                None => "null".to_string(),
+            }
+        }
+        let mut s = String::from("{\n");
+        for (i, r) in self.entries.iter().enumerate() {
+            let ns_per_op = r.items_per_rep.map(|n| r.mean_s * 1e9 / n as f64);
+            s.push_str(&format!(
+                "  \"{}\": {{\"mean_s\": {:.9}, \"p50_s\": {:.9}, \"p95_s\": {:.9}, \
+                 \"reps\": {}, \"ns_per_op\": {}, \"items_per_s\": {}}}",
+                esc(&r.name),
+                r.mean_s,
+                r.p50_s,
+                r.p95_s,
+                r.reps,
+                opt(ns_per_op),
+                opt(r.throughput()),
+            ));
+            s.push_str(if i + 1 < self.entries.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("}\n");
+        s
+    }
+
+    /// Write the log to `path` and report where it went.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        println!("\nbench log written to {path} ({} cases)", self.entries.len());
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +169,37 @@ mod tests {
     fn zero_items_means_no_throughput() {
         let r = bench("noop", 0, 4, || 0);
         assert!(r.throughput().is_none());
+    }
+
+    #[test]
+    fn json_log_shape_and_escaping() {
+        let mut log = JsonLog::new();
+        log.push(&BenchResult {
+            name: "offer() \"hot\"".into(),
+            reps: 3,
+            mean_s: 0.002,
+            p50_s: 0.002,
+            p95_s: 0.003,
+            items_per_rep: Some(1000),
+        });
+        log.push(&BenchResult {
+            name: "no items".into(),
+            reps: 1,
+            mean_s: 0.1,
+            p50_s: 0.1,
+            p95_s: 0.1,
+            items_per_rep: None,
+        });
+        let j = log.to_json();
+        assert_eq!(log.len(), 2);
+        assert!(j.starts_with("{\n"));
+        assert!(j.ends_with("}\n"));
+        assert!(j.contains("\"offer() \\\"hot\\\"\""));
+        // 0.002 s / 1000 items = 2000 ns/op.
+        assert!(j.contains("\"ns_per_op\": 2000.000"));
+        assert!(j.contains("\"items_per_s\": 500000.000"));
+        assert!(j.contains("\"ns_per_op\": null"));
+        // Exactly one comma between the two entries.
+        assert_eq!(j.matches("},\n").count(), 1);
     }
 }

@@ -187,6 +187,39 @@ fn reconfiguration_resets_engines() {
 }
 
 #[test]
+fn ingest_sink_capacity_stabilizes_across_streams() {
+    // Acceptance check for the zero-alloc ingest path: after one
+    // warm-up round the switch's reusable sink must stop growing —
+    // i.e. steady-state ingest performs no per-packet allocation.
+    let mut rng = Pcg32::new(99);
+    let streams: Vec<Vec<KvPair>> = (0..3)
+        .map(|_| {
+            (0..4_000)
+                .map(|_| {
+                    KvPair::new(
+                        Key::from_id(rng.gen_range_u64(3_000), 16 + (rng.gen_range_u64(49)) as usize),
+                        1,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let mut sw = configured(16 << 10, Some(256 << 10), 3);
+    sw.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+    let warm = sw.sink_capacity();
+    assert!(warm > 0, "warm-up round should populate the sink");
+    for round in 0..5 {
+        let out = sw.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+        assert!(!out.is_empty());
+        assert_eq!(
+            sw.sink_capacity(),
+            warm,
+            "sink reallocated on steady-state round {round}"
+        );
+    }
+}
+
+#[test]
 fn empty_and_single_pair_streams() {
     let mut sw = configured(16 << 10, Some(1 << 20), 1);
     let out = sw.ingest_stream(TreeId(1), AggOp::Sum, &[]);

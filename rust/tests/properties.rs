@@ -2,12 +2,13 @@
 //! invariants: conservation laws, protocol round trips, model bounds,
 //! and the equivalence between the ideal node and the real data plane.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use switchagg::analysis::models::{eq3_reduction_ratio, eq3_upper_bound};
 use switchagg::analysis::theorems::IdealNode;
 use switchagg::protocol::{
     AggOp, AggregationPacket, Key, KvPair, Packet, TreeConfig, TreeId,
 };
+use switchagg::switch::hash_table::{HashTable, Probe, VALUE_BYTES};
 use switchagg::switch::{EvictionPolicy, SwitchAggSwitch, SwitchConfig};
 use switchagg::util::miniprop::prop;
 use switchagg::util::rng::Pcg32;
@@ -194,6 +195,128 @@ fn prop_random_draws_beat_eq3_via_size_bias() {
         let r_model = eq3_reduction_ratio(n as u64, variety, cap as u64);
         if r_sim < r_model - 0.05 {
             return Err(format!("sim {r_sim:.4} below model {r_model:.4}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_soa_table_matches_reference_model() {
+    // Differential test of the SoA/tag-filtered table core against a
+    // BTreeMap reference model driven by the table's own probe
+    // outcomes, across key widths 8–64 B, both eviction policies, and
+    // random offer/evict/drain sequences: resident sets must be
+    // identical and SUM must be conserved exactly
+    // (inputs == residents + everything that ever left).
+    prop("SoA table == reference model", 60, |rng| {
+        let width = 8 * (1 + rng.gen_range_usize(8)); // 8..=64, /4
+        let spb = 1 + rng.gen_range_usize(4); // 1..=4
+        let bucket_count = 1 + rng.gen_range_usize(64);
+        let mut t = HashTable::with_memory(
+            (bucket_count * spb * (width + VALUE_BYTES)) as u64,
+            width,
+            spb,
+        );
+        let evict_old = rng.gen_bool(0.5);
+        let variety = 1 + rng.gen_range_u64(512);
+        let mut model: BTreeMap<Vec<u8>, i64> = BTreeMap::new();
+        let mut input_sum = 0i64;
+        let mut departed_sum = 0i64;
+        let steps = 500 + rng.gen_range_usize(1500);
+        for step in 0..steps {
+            if rng.gen_bool(0.02) {
+                // Drain: the table must empty into exactly the model.
+                let drained = t.drain();
+                let got: BTreeMap<Vec<u8>, i64> = drained
+                    .iter()
+                    .map(|(k, v)| (k.as_bytes().to_vec(), *v))
+                    .collect();
+                if got.len() != drained.len() {
+                    return Err(format!("step {step}: duplicate keys in drain"));
+                }
+                if got != model {
+                    return Err(format!(
+                        "step {step}: drained set diverged ({} vs {} keys)",
+                        got.len(),
+                        model.len()
+                    ));
+                }
+                departed_sum += drained.iter().map(|(_, v)| v).sum::<i64>();
+                model.clear();
+                if t.occupancy() != 0 {
+                    return Err("occupancy nonzero after drain".into());
+                }
+                continue;
+            }
+            let klen = 8 + rng.gen_range_usize(width - 7); // 8..=width
+            let key = Key::from_id(rng.gen_range_u64(variety), klen);
+            let kb = key.as_bytes().to_vec();
+            let v = rng.gen_range_u64(1000) as i64 - 500;
+            input_sum += v;
+            let hash = t.hash_of(&key);
+            match t.offer_hashed(hash, key, v, AggOp::Sum, evict_old) {
+                Probe::Aggregated => match model.get_mut(&kb) {
+                    Some(mv) => *mv += v,
+                    None => return Err(format!("step {step}: aggregated a non-resident key")),
+                },
+                Probe::Inserted => {
+                    if model.insert(kb.clone(), v).is_some() {
+                        return Err(format!("step {step}: inserted an already-resident key"));
+                    }
+                }
+                Probe::Evicted(ek, ev, etag) => {
+                    if etag != t.hash_of(&ek) {
+                        return Err(format!("step {step}: evictee tag != its hash"));
+                    }
+                    departed_sum += ev;
+                    if evict_old {
+                        let ekb = ek.as_bytes().to_vec();
+                        match model.remove(&ekb) {
+                            Some(mv) if mv == ev => {}
+                            other => {
+                                return Err(format!(
+                                    "step {step}: evicted ({ek:?},{ev}) but model had {other:?}"
+                                ))
+                            }
+                        }
+                        if model.insert(kb.clone(), v).is_some() {
+                            return Err(format!("step {step}: newcomer was already resident"));
+                        }
+                    } else if ek != key || ev != v {
+                        return Err(format!("step {step}: ForwardNew evicted a resident pair"));
+                    }
+                }
+            }
+            // Spot-check the read path (hash already in hand, as in the
+            // BPE/verification paths).
+            match (t.get_hashed(hash, &key), model.get(&kb)) {
+                (Some(a), Some(&b)) if a == b => {}
+                (None, None) => {}
+                (got, want) => {
+                    return Err(format!("step {step}: get_hashed {got:?} vs model {want:?}"))
+                }
+            }
+        }
+        // Final resident set and conservation.
+        let resident: BTreeMap<Vec<u8>, i64> = t
+            .iter()
+            .map(|(k, v)| (k.as_bytes().to_vec(), v))
+            .collect();
+        if resident != model {
+            return Err(format!(
+                "final resident set diverged ({} vs {} keys, evict_old={evict_old})",
+                resident.len(),
+                model.len()
+            ));
+        }
+        if t.occupancy() != model.len() {
+            return Err("occupancy != model size".into());
+        }
+        let resident_sum: i64 = resident.values().sum();
+        if input_sum != resident_sum + departed_sum {
+            return Err(format!(
+                "SUM not conserved: in={input_sum} resident={resident_sum} departed={departed_sum}"
+            ));
         }
         Ok(())
     });
