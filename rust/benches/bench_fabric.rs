@@ -1,0 +1,134 @@
+//! Parallel-engine benchmarks (EXPERIMENTS.md §Fabric & NetSim): the
+//! sharded switch ingest against the serial reference at 1/2/4/8
+//! shards, the calendar-queue NetSim against the retained BinaryHeap
+//! baseline, and the partitioned rack-scale tree runner.  Results are
+//! written as a machine-readable log (`BENCH_fabric.json`, override
+//! with `SWITCHAGG_BENCH_FABRIC_JSON`) so the perf trajectory is
+//! comparable across PRs.
+
+use switchagg::controller::AggTree;
+use switchagg::net::netsim::reference::HeapNetSim;
+use switchagg::net::partition::staggered_sends;
+use switchagg::net::{run_monolithic, run_tree_partitioned, NetSim, NodeId, Topology};
+use switchagg::protocol::{AggOp, KvPair, TreeConfig, TreeId};
+use switchagg::switch::{Parallelism, SwitchAggSwitch, SwitchConfig};
+use switchagg::util::bench::{self, JsonLog};
+use switchagg::workload::generator::{KeyDist, WorkloadSpec};
+
+fn fabric_switch(par: Parallelism) -> SwitchAggSwitch {
+    let mut cfg = SwitchConfig::scaled(32 << 10, Some(8 << 20));
+    cfg.parallelism = par;
+    let mut sw = SwitchAggSwitch::new(cfg);
+    sw.configure(&[TreeConfig {
+        tree: TreeId(1),
+        children: 3,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    sw
+}
+
+fn main() {
+    let mut log = JsonLog::new();
+
+    bench::section("sharded switch ingest (12MB zipf, 3 streams)");
+    let streams: Vec<Vec<KvPair>> = (0..3)
+        .map(|i| WorkloadSpec::paper(4 << 20, 1 << 20, KeyDist::Zipf(0.99), 0xFA_B0 + i).generate())
+        .collect();
+    let total_pairs: u64 = streams.iter().map(|s| s.len() as u64).sum();
+    {
+        let mut sw = fabric_switch(Parallelism::Serial);
+        let streams = streams.clone();
+        log.push(&bench::run("switch ingest 12MB zipf serial", 1, 5, move || {
+            sw.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+            total_pairs
+        }));
+    }
+    for shards in [1usize, 2, 4, 8] {
+        let mut sw = fabric_switch(Parallelism::Sharded(shards));
+        let streams = streams.clone();
+        log.push(&bench::run(
+            &format!("switch ingest 12MB zipf sharded x{shards}"),
+            1,
+            5,
+            move || {
+                sw.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+                total_pairs
+            },
+        ));
+    }
+
+    bench::section("NetSim event core (heap baseline vs calendar queue)");
+    // A rack-scale incast: 31 mappers × 400 MTU packets over a 4×8
+    // two-level topology; items = packet-hops (events).
+    let (topo, _spine, _leaves, hosts) = Topology::two_level(4, 8);
+    let reducer = *hosts.last().unwrap();
+    let mappers: Vec<NodeId> = hosts[..hosts.len() - 1].to_vec();
+    let sends = staggered_sends(&mappers, 400, 1500, 1.5e-6, 1e-8);
+    let events = {
+        let mut sim = NetSim::new(topo.clone());
+        for s in &sends {
+            sim.send(s.t, s.src, reducer, s.bytes);
+        }
+        sim.run();
+        sim.events_processed()
+    };
+    {
+        let topo = topo.clone();
+        let sends = sends.clone();
+        log.push(&bench::run("netsim heap baseline (events)", 1, 5, move || {
+            let mut sim = HeapNetSim::new(topo.clone());
+            for s in &sends {
+                sim.send(s.t, s.src, reducer, s.bytes);
+            }
+            sim.run();
+            sim.events_processed()
+        }));
+    }
+    {
+        let topo = topo.clone();
+        let sends = sends.clone();
+        log.push(&bench::run("netsim calendar queue (events)", 1, 5, move || {
+            let mut sim = NetSim::new(topo.clone());
+            for s in &sends {
+                sim.send(s.t, s.src, reducer, s.bytes);
+            }
+            sim.run();
+            sim.events_processed()
+        }));
+    }
+
+    bench::section("partitioned tree runner (31-mapper rack)");
+    let tree = AggTree::build(&topo, TreeId(1), AggOp::Sum, &mappers, reducer)
+        .expect("rack tree builds");
+    {
+        let topo = topo.clone();
+        let sends = sends.clone();
+        log.push(&bench::run("tree sim monolithic", 1, 5, move || {
+            let r = run_monolithic(&topo, reducer, &sends);
+            std::hint::black_box(r.makespan_s);
+            events
+        }));
+    }
+    for shards in [1usize, 2, 4, 8] {
+        let topo = topo.clone();
+        let tree = tree.clone();
+        let sends = sends.clone();
+        log.push(&bench::run(
+            &format!("tree sim partitioned x{shards}"),
+            1,
+            5,
+            move || {
+                let r = run_tree_partitioned(&topo, &tree, &sends, Parallelism::Sharded(shards));
+                std::hint::black_box(r.makespan_s);
+                events
+            },
+        ));
+    }
+
+    let path = std::env::var("SWITCHAGG_BENCH_FABRIC_JSON")
+        .unwrap_or_else(|_| "BENCH_fabric.json".to_string());
+    if let Err(e) = log.write(&path) {
+        eprintln!("could not write bench log {path}: {e}");
+    }
+}

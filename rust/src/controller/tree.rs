@@ -115,6 +115,47 @@ impl AggTree {
     pub fn root(&self) -> NodeId {
         *self.levels.last().expect("tree has switches")
     }
+
+    /// Partition the mappers into the root's child subtrees.  On a tree
+    /// topology the subtrees' link sets are pairwise disjoint (they
+    /// only meet at the root), so each group's traffic can be simulated
+    /// independently — the parallel NetSim runner
+    /// (`net::partition::run_tree_partitioned`) fans phase 1 out over
+    /// workers and replays the arrivals at each head through the shared
+    /// root-side links.
+    ///
+    /// A mapper attached directly to the root (path `[m, root,
+    /// reducer]`) forms its own trivial subtree with `head == m`.
+    pub fn independent_subtrees(&self, topo: &Topology) -> Vec<Subtree> {
+        let root = self.root();
+        let mut groups: BTreeMap<NodeId, Vec<NodeId>> = BTreeMap::new();
+        for &m in &self.mappers {
+            let head = match topo.path(m, self.reducer) {
+                Some(path) => {
+                    let below_root = path
+                        .iter()
+                        .position(|&n| n == root)
+                        .and_then(|i| i.checked_sub(1))
+                        .map(|i| path[i]);
+                    below_root.unwrap_or(m)
+                }
+                None => m,
+            };
+            groups.entry(head).or_default().push(m);
+        }
+        groups
+            .into_iter()
+            .map(|(head, mappers)| Subtree { head, mappers })
+            .collect()
+    }
+}
+
+/// One root-child subtree of an aggregation tree: the node just below
+/// the root on its mappers' paths, and the mappers it drains.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Subtree {
+    pub head: NodeId,
+    pub mappers: Vec<NodeId>,
 }
 
 #[cfg(test)]
@@ -162,6 +203,31 @@ mod tests {
         // The reducer-side leaf aggregates the spine's output + host 2.
         assert!(t.switch_cfgs.contains_key(&spine));
         assert_eq!(t.levels.last().copied().unwrap(), leaves[1]);
+    }
+
+    #[test]
+    fn independent_subtrees_partition_the_mappers() {
+        // two_level(2, 3): reducer under leaf 1; mappers 0..2 under
+        // leaf 0 (head = spine-side child), mapper hosts[3]... use the
+        // star for the trivial case too.
+        let (topo, spine, leaves, hosts) = Topology::two_level(2, 3);
+        let reducer = hosts[5];
+        let mappers = &hosts[..5];
+        let t = AggTree::build(&topo, TreeId(1), AggOp::Sum, mappers, reducer).unwrap();
+        let subs = t.independent_subtrees(&topo);
+        // Root is leaf 1; children below it: the spine (draining leaf
+        // 0's three hosts) and hosts 3,4 directly attached.
+        assert_eq!(t.root(), leaves[1]);
+        let all: Vec<NodeId> = subs.iter().flat_map(|s| s.mappers.clone()).collect();
+        let mut sorted = all.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 5, "every mapper in exactly one subtree");
+        let spine_sub = subs.iter().find(|s| s.head == spine).unwrap();
+        assert_eq!(spine_sub.mappers, vec![hosts[0], hosts[1], hosts[2]]);
+        // Directly-attached mappers are their own heads.
+        assert!(subs.iter().any(|s| s.head == hosts[3] && s.mappers == vec![hosts[3]]));
+        assert!(subs.iter().any(|s| s.head == hosts[4] && s.mappers == vec![hosts[4]]));
     }
 
     #[test]

@@ -1,6 +1,19 @@
-//! Shared experiment plumbing: workload scaling and table printing.
+//! Shared experiment plumbing: workload scaling, table printing, and
+//! the execution-engine (parallelism) config shared by the harnesses.
 
 use crate::util::stats::human_bytes;
+
+pub use crate::switch::parallel::Parallelism;
+
+/// The harnesses' execution engine, from `SWITCHAGG_PARALLEL`
+/// (unset/`serial` → the serial reference path, `N` → `N` worker
+/// shards).  Rows are identical either way — the sharded fabric engine
+/// is byte-identical by construction and scenario sweeps only fan out
+/// independent rows — so experiments stay reproducible no matter how
+/// they are run.
+pub fn parallelism() -> Parallelism {
+    Parallelism::from_env()
+}
 
 /// All paper quantities are divided by `factor` (sizes in bytes);
 /// ratios (reduction, utilization, FIFO ratios) are scale-free.

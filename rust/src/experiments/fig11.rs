@@ -2,11 +2,12 @@
 //! (§6.3): "the higher the data reduction ratio is, the lower the CPU
 //! utilization is."
 
-use crate::experiments::common::{pct, print_table, Scale};
+use crate::experiments::common::{parallelism, pct, print_table, Parallelism, Scale};
 use crate::framework::{run_job, JobSpec, Mapper};
 use crate::net::Topology;
 use crate::protocol::AggOp;
 use crate::switch::SwitchConfig;
+use crate::util::par::par_map_shards;
 use crate::workload::generator::{KeyDist, WorkloadSpec};
 
 #[derive(Clone, Debug)]
@@ -18,38 +19,45 @@ pub struct Fig11Row {
 }
 
 pub fn run(scale: Scale) -> Vec<Fig11Row> {
-    [2u64, 4, 8, 16]
-        .iter()
-        .map(|&wl| {
-            let (topo, _sw, hosts) = Topology::star(4);
-            let mappers: Vec<Mapper> = (0..3)
-                .map(|i| {
-                    Mapper::Synthetic(WorkloadSpec::paper(
-                        scale.bytes(wl << 30) / 3,
-                        scale.bytes(1 << 30),
-                        KeyDist::Zipf(0.99),
-                        0xF1_11 + i,
-                    ))
-                })
-                .collect();
-            let spec = JobSpec {
-                switch_cfg: SwitchConfig::scaled(
-                    scale.bytes(32 << 20),
-                    Some(scale.bytes(8 << 30)),
-                ),
-                aggregation_enabled: true,
-                op: AggOp::Sum,
-            };
-            let (report, _) =
-                run_job(&topo, &hosts[..3], hosts[3], &mappers, &spec).expect("job run");
-            Fig11Row {
-                workload_gb: wl,
-                util_with: report.cpu_util,
-                util_without: report.cpu_util_baseline,
-                reduction: report.reduction_ratio,
-            }
-        })
-        .collect()
+    run_with(scale, parallelism())
+}
+
+/// The four workload points are independent jobs: they fan out over
+/// the worker pool, and each job's switch runs the sharded fabric
+/// engine on the remaining budget ([`Parallelism::split`], so nesting
+/// never oversubscribes) — rows are identical to the serial reference
+/// either way.
+pub fn run_with(scale: Scale, par: Parallelism) -> Vec<Fig11Row> {
+    let (outer, inner) = par.split(4);
+    par_map_shards(outer, vec![2u64, 4, 8, 16], move |wl| {
+        let (topo, _sw, hosts) = Topology::star(4);
+        let mappers: Vec<Mapper> = (0..3)
+            .map(|i| {
+                Mapper::Synthetic(WorkloadSpec::paper(
+                    scale.bytes(wl << 30) / 3,
+                    scale.bytes(1 << 30),
+                    KeyDist::Zipf(0.99),
+                    0xF1_11 + i,
+                ))
+            })
+            .collect();
+        let mut switch_cfg =
+            SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(8 << 30)));
+        switch_cfg.parallelism = inner;
+        let spec = JobSpec {
+            switch_cfg,
+            aggregation_enabled: true,
+            op: AggOp::Sum,
+        };
+        let (report, _) =
+            run_job(&topo, &hosts[..3], hosts[3], &mappers, &spec).expect("job run");
+        Fig11Row {
+            workload_gb: wl,
+            util_with: report.cpu_util,
+            util_without: report.cpu_util_baseline,
+            reduction: report.reduction_ratio,
+        }
+    })
 }
 
 pub fn print_rows(rows: &[Fig11Row]) {
@@ -73,6 +81,20 @@ pub fn print_rows(rows: &[Fig11Row]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn rows_are_parallelism_invariant() {
+        let scale = Scale::new(4096);
+        let serial = run_with(scale, Parallelism::Serial);
+        let sharded = run_with(scale, Parallelism::Sharded(4));
+        assert_eq!(serial.len(), sharded.len());
+        for (a, b) in serial.iter().zip(&sharded) {
+            assert_eq!(a.workload_gb, b.workload_gb);
+            assert_eq!(a.util_with, b.util_with);
+            assert_eq!(a.util_without, b.util_without);
+            assert_eq!(a.reduction, b.reduction);
+        }
+    }
 
     #[test]
     fn utilization_lower_with_switchagg() {

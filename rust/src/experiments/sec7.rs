@@ -8,14 +8,24 @@
 //!    cross-checked against the packet-level `NetSim`.
 //! 3. **Memory utilization**: even vs demand-weighted partitioning for
 //!    two tenants with a 4:1 demand imbalance.
+//! 4. **Rack-scale turnaround**: the partitioned (per-subtree, worker
+//!    pool) NetSim engine against the monolithic reference on a
+//!    32-host rack — same physics, parallel wall-clock.
+//!
+//! All sweeps fan their independent scenario rows over the
+//! [`Parallelism`] worker pool (`SWITCHAGG_PARALLEL`); rows are
+//! identical to the serial reference by construction.
 
 use crate::analysis::perfmodel::{AggLevel, AggLogP, LogP};
-use crate::experiments::common::{pct, print_table, Scale};
+use crate::controller::AggTree;
+use crate::experiments::common::{parallelism, pct, print_table, Parallelism, Scale};
 use crate::metrics::jct::JctModel;
 use crate::net::routing::{max_link_load, PlacementDemand};
-use crate::net::{NetSim, Topology};
+use crate::net::partition::staggered_sends;
+use crate::net::{run_monolithic, run_tree_partitioned, NetSim, NodeId, Topology};
 use crate::protocol::{AggOp, TreeConfig, TreeId};
 use crate::switch::{MemoryPolicy, SwitchAggSwitch, SwitchConfig};
+use crate::util::par::{par_map, par_map_shards};
 use crate::workload::generator::{KeyDist, WorkloadSpec};
 
 // ---- 1. performance model --------------------------------------------
@@ -68,49 +78,58 @@ pub struct RoutingRow {
 }
 
 pub fn routing_rows() -> Vec<RoutingRow> {
+    routing_rows_with(parallelism())
+}
+
+pub fn routing_rows_with(par: Parallelism) -> Vec<RoutingRow> {
     let (topo, _spine, _leaves, hosts) = Topology::two_level(2, 3);
-    let mappers = &hosts[..2]; // both under leaf 0
+    let mappers: Vec<NodeId> = hosts[..2].to_vec(); // both under leaf 0
     let near = hosts[2]; // same leaf
     let far = hosts[3]; // across the spine
-    let mut rows = Vec::new();
+    let mut scenarios: Vec<(bool, Option<u64>, &'static str, NodeId)> = Vec::new();
     for (agg, cap) in [(false, None), (true, Some(1_000_000u64))] {
+        for (name, reducer) in [("near (same leaf)", near), ("far (via spine)", far)] {
+            scenarios.push((agg, cap, name, reducer));
+        }
+    }
+    let topo = &topo;
+    let mappers = &mappers;
+    // Independent placements: one worker each, row order preserved.
+    par_map(par, scenarios, |(agg, cap, name, reducer)| {
         let demand = PlacementDemand {
             bytes_per_mapper: 1 << 20,
             pairs_per_mapper: 20_000,
             key_variety: 5_000,
             switch_capacity_pairs: cap,
         };
-        for (name, reducer) in [("near (same leaf)", near), ("far (via spine)", far)] {
-            let expected = max_link_load(&topo, mappers, reducer, &demand).unwrap();
-            // Packet-level check: send post-aggregation volumes.  The
-            // NetSim has plain switches, so model aggregation by
-            // scaling what crosses the first switch — send the
-            // *surviving* volume end-to-end plus the raw volume one
-            // hop (mapper uplink is always raw).
-            let mut sim = NetSim::new(topo.clone());
-            let surviving = if agg {
-                let r = demand.predicted_reduction(mappers.len());
-                ((1u64 << 20) as f64 * (1.0 - r)) as u64
-            } else {
-                1 << 20
-            };
-            for &m in mappers {
-                // Raw bytes to the first-hop switch are captured by the
-                // uplink; model the remainder as surviving volume.
-                sim.send(0.0, m, reducer, surviving.max(1));
-            }
-            sim.run();
-            rows.push(RoutingRow {
-                placement: name,
-                aggregation: agg,
-                expected_max_load: expected,
-                measured_max_load: sim
-                    .max_link_bytes()
-                    .max((1u64 << 20).min(expected as u64)),
-            });
+        let expected = max_link_load(topo, mappers, reducer, &demand).unwrap();
+        // Packet-level check: send post-aggregation volumes.  The
+        // NetSim has plain switches, so model aggregation by
+        // scaling what crosses the first switch — send the
+        // *surviving* volume end-to-end plus the raw volume one
+        // hop (mapper uplink is always raw).
+        let mut sim = NetSim::new(topo.clone());
+        let surviving = if agg {
+            let r = demand.predicted_reduction(mappers.len());
+            ((1u64 << 20) as f64 * (1.0 - r)) as u64
+        } else {
+            1 << 20
+        };
+        for &m in mappers {
+            // Raw bytes to the first-hop switch are captured by the
+            // uplink; model the remainder as surviving volume.
+            sim.send(0.0, m, reducer, surviving.max(1));
         }
-    }
-    rows
+        sim.run();
+        RoutingRow {
+            placement: name,
+            aggregation: agg,
+            expected_max_load: expected,
+            measured_max_load: sim
+                .max_link_bytes()
+                .max((1u64 << 20).min(expected as u64)),
+        }
+    })
 }
 
 // ---- 3. weighted memory partitioning ----------------------------------
@@ -123,6 +142,10 @@ pub struct MemoryRow {
 }
 
 pub fn memory_rows(scale: Scale) -> Vec<MemoryRow> {
+    memory_rows_with(scale, parallelism())
+}
+
+pub fn memory_rows_with(scale: Scale, par: Parallelism) -> Vec<MemoryRow> {
     // Tenant 1 has 4x the data and 4x the key variety of tenant 2.
     let big = WorkloadSpec::paper(
         scale.bytes(4 << 30),
@@ -142,24 +165,71 @@ pub fn memory_rows(scale: Scale) -> Vec<MemoryRow> {
         parent_port: 0,
         op,
     };
-    [("even (paper §4.2.2)", MemoryPolicy::Even), ("weighted (§7)", MemoryPolicy::Weighted)]
-        .into_iter()
-        .map(|(name, policy)| {
-            let cfg = SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(2 << 30)));
-            let mut sw = SwitchAggSwitch::new(cfg);
-            sw.set_memory_policy(policy);
-            sw.set_tree_weight(TreeId(1), 4);
-            sw.set_tree_weight(TreeId(2), 1);
-            sw.configure(&[mk(1, AggOp::Sum), mk(2, AggOp::Sum)]);
-            sw.ingest_stream(TreeId(1), AggOp::Sum, &big.generate());
-            sw.ingest_stream(TreeId(2), AggOp::Sum, &small.generate());
-            MemoryRow {
-                policy: name,
-                big_tenant_reduction: sw.stats(TreeId(1)).unwrap().reduction_ratio(),
-                small_tenant_reduction: sw.stats(TreeId(2)).unwrap().reduction_ratio(),
-            }
-        })
-        .collect()
+    let policies = vec![
+        ("even (paper §4.2.2)", MemoryPolicy::Even),
+        ("weighted (§7)", MemoryPolicy::Weighted),
+    ];
+    let big = &big;
+    let small = &small;
+    // One worker per policy row; each row's switch runs its ingest on
+    // the *remaining* worker budget (Parallelism::split, so nesting
+    // never oversubscribes) — outputs identical either way.
+    let (outer, inner) = par.split(policies.len());
+    par_map_shards(outer, policies, move |(name, policy)| {
+        let mut cfg = SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(2 << 30)));
+        cfg.parallelism = inner;
+        let mut sw = SwitchAggSwitch::new(cfg);
+        sw.set_memory_policy(policy);
+        sw.set_tree_weight(TreeId(1), 4);
+        sw.set_tree_weight(TreeId(2), 1);
+        sw.configure(&[mk(1, AggOp::Sum), mk(2, AggOp::Sum)]);
+        sw.ingest_stream(TreeId(1), AggOp::Sum, &big.generate());
+        sw.ingest_stream(TreeId(2), AggOp::Sum, &small.generate());
+        MemoryRow {
+            policy: name,
+            big_tenant_reduction: sw.stats(TreeId(1)).unwrap().reduction_ratio(),
+            small_tenant_reduction: sw.stats(TreeId(2)).unwrap().reduction_ratio(),
+        }
+    })
+}
+
+// ---- 4. rack-scale fabric turnaround ----------------------------------
+
+#[derive(Clone, Debug)]
+pub struct RackRow {
+    pub engine: &'static str,
+    pub makespan_s: f64,
+    pub max_link_bytes: u64,
+    pub events: u64,
+}
+
+/// A 32-host rack (4 leaves × 8 hosts): the monolithic NetSim against
+/// the partitioned per-subtree engine.  The physics must agree; the
+/// partitioned engine exists so its phase-1 subtrees spread over
+/// workers in sweeps.
+pub fn rack_rows_with(par: Parallelism) -> Vec<RackRow> {
+    let (topo, _spine, _leaves, hosts) = Topology::two_level(4, 8);
+    let reducer = *hosts.last().unwrap();
+    let mappers: Vec<NodeId> = hosts[..hosts.len() - 1].to_vec();
+    let tree = AggTree::build(&topo, TreeId(90), AggOp::Sum, &mappers, reducer)
+        .expect("rack tree builds");
+    let sends = staggered_sends(&mappers, 64, 1500, 1.5e-6, 1e-8);
+    let mono = run_monolithic(&topo, reducer, &sends);
+    let part = run_tree_partitioned(&topo, &tree, &sends, par);
+    vec![
+        RackRow {
+            engine: "monolithic NetSim",
+            makespan_s: mono.makespan_s,
+            max_link_bytes: mono.max_link_bytes,
+            events: mono.events,
+        },
+        RackRow {
+            engine: "partitioned subtrees",
+            makespan_s: part.makespan_s,
+            max_link_bytes: part.max_link_bytes,
+            events: part.events,
+        },
+    ]
 }
 
 pub fn run(scale: Scale) {
@@ -209,6 +279,22 @@ pub fn run(scale: Scale) {
             })
             .collect::<Vec<_>>(),
     );
+    let rows = rack_rows_with(parallelism());
+    print_table(
+        "§7.4 — rack-scale NetSim engines (4×8 two-level, 31 mappers)",
+        &["engine", "makespan (s)", "max link (B)", "events"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.engine.to_string(),
+                    format!("{:.6}", r.makespan_s),
+                    r.max_link_bytes.to_string(),
+                    r.events.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
 }
 
 #[cfg(test)]
@@ -240,6 +326,34 @@ mod tests {
         let near_agg = get("near", true);
         assert!(far_noagg > 1.9 * near_noagg / 2.0 && far_noagg >= near_noagg);
         assert!((far_agg - near_agg).abs() / near_agg < 0.3);
+    }
+
+    #[test]
+    fn rack_engines_agree_and_rows_are_parallelism_invariant() {
+        let rack = rack_rows_with(Parallelism::Sharded(4));
+        assert_eq!(rack.len(), 2);
+        assert_eq!(rack[0].makespan_s, rack[1].makespan_s);
+        assert_eq!(rack[0].max_link_bytes, rack[1].max_link_bytes);
+        assert_eq!(rack[0].events, rack[1].events);
+        assert!(rack[0].events >= 31 * 64);
+
+        let serial = routing_rows_with(Parallelism::Serial);
+        let sharded = routing_rows_with(Parallelism::Sharded(4));
+        for (a, b) in serial.iter().zip(&sharded) {
+            assert_eq!(a.placement, b.placement);
+            assert_eq!(a.aggregation, b.aggregation);
+            assert_eq!(a.expected_max_load, b.expected_max_load);
+            assert_eq!(a.measured_max_load, b.measured_max_load);
+        }
+
+        let scale = Scale::new(8192);
+        let serial = memory_rows_with(scale, Parallelism::Serial);
+        let sharded = memory_rows_with(scale, Parallelism::Sharded(4));
+        for (a, b) in serial.iter().zip(&sharded) {
+            assert_eq!(a.policy, b.policy);
+            assert_eq!(a.big_tenant_reduction, b.big_tenant_reduction);
+            assert_eq!(a.small_tenant_reduction, b.small_tenant_reduction);
+        }
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //! aggregation trees over (§3 "the physical topology of the network").
 
 pub mod netsim;
+pub mod partition;
 pub mod routing;
 pub mod topology;
 
 pub use netsim::NetSim;
+pub use partition::{run_monolithic, run_tree_partitioned, SendReq, TreeSimResult};
 pub use topology::{NodeId, NodeKind, PortId, Topology};

@@ -6,46 +6,46 @@
 //! Used by the routing experiments (§7 "Network Routing Scheme") to
 //! measure per-link byte loads and completion times under different
 //! tree placements.
+//!
+//! # Event core
+//!
+//! Rack-scale sweeps are bounded by event churn, so the scheduler is
+//! *not* a global binary heap over packets.  Delivery times on one
+//! directed link are nondecreasing by construction (`busy_until_s` is
+//! monotone), so each link keeps its in-flight packets in a reusable
+//! FIFO arena, already sorted; the scheduler only has to order the
+//! *link heads*, which it does with a calendar (bucket) queue keyed on
+//! each link's next-delivery time.  Per event that is O(1) amortized —
+//! no per-packet heap sift, no `BTreeMap` lookups (link stats are
+//! dense vectors) and no per-packet BFS (each (node,
+//! destination) pair resolves its next hop once, then hits a cache).
+//! Pop order
+//! is exactly the reference order — ascending `(time, id)` — so
+//! results are bit-identical to [`reference::HeapNetSim`], the
+//! original `BinaryHeap` implementation kept as the differential
+//! baseline (`tests/parallel_determinism.rs` pins one to the other).
 
 use crate::net::topology::{NodeId, Topology};
 use crate::sim::Link;
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, BTreeMap};
+use crate::util::fxhash::FxHashMap;
+use std::collections::BTreeMap;
 
 /// Fixed per-hop propagation delay (seconds).
 pub const PROP_DELAY_S: f64 = 1e-6;
 
-/// One in-flight transmission event.
-#[derive(Clone, Debug, PartialEq)]
+/// One in-flight transmission event (arrival at `to`).
+#[derive(Clone, Copy, Debug, PartialEq)]
 struct Event {
     /// Delivery time at `to`.
     time_s: f64,
-    from: NodeId,
     to: NodeId,
     dst: NodeId,
     bytes: u64,
     id: u64,
 }
 
-impl Eq for Event {}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.time_s
-            .partial_cmp(&other.time_s)
-            .unwrap()
-            .then(self.id.cmp(&other.id))
-    }
-}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
 /// Per-directed-link accounting.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct LinkStats {
     pub bytes: u64,
     pub packets: u64,
@@ -53,13 +53,135 @@ pub struct LinkStats {
     pub busy_until_s: f64,
 }
 
+/// One directed link's in-flight packets: a FIFO arena, sorted by
+/// construction (per-link delivery times are monotone).  `head ==
+/// events.len()` means idle; the arena is reset (capacity kept) each
+/// time the lane drains, so steady-state simulation does not allocate.
+#[derive(Clone, Debug, Default)]
+struct Lane {
+    head: usize,
+    events: Vec<Event>,
+}
+
+impl Lane {
+    #[inline]
+    fn is_idle(&self) -> bool {
+        self.head == self.events.len()
+    }
+}
+
+/// Calendar (bucket) queue over *links*, keyed by each link's head
+/// delivery time.  A link is resident while it has packets in flight;
+/// buckets form a ring over time slots of `width` seconds.  With one
+/// entry per active link (not per packet), bucket scans are short and
+/// the queue never reallocates in steady state.
+#[derive(Clone, Debug)]
+struct Calendar {
+    /// Ring of buckets holding link ids; length is a power of two.
+    buckets: Vec<Vec<u32>>,
+    /// Time-slot width in seconds.
+    width: f64,
+    /// Lower bound for the next pop: `floor(now / width)`.
+    cur_floor: u64,
+    /// Resident link count.
+    active: usize,
+}
+
+impl Calendar {
+    fn new(width: f64, nbuckets: usize) -> Self {
+        assert!(width > 0.0 && nbuckets.is_power_of_two());
+        Self {
+            buckets: vec![Vec::new(); nbuckets],
+            width,
+            cur_floor: 0,
+            active: 0,
+        }
+    }
+
+    #[inline]
+    fn floor_of(&self, t: f64) -> u64 {
+        if t > 0.0 {
+            (t / self.width) as u64
+        } else {
+            0
+        }
+    }
+
+    /// Make `lid` resident with head delivery time `t` (`t` is never
+    /// before the last popped time, so its slot is never in the past).
+    fn insert(&mut self, lid: u32, t: f64) {
+        let b = (self.floor_of(t) as usize) & (self.buckets.len() - 1);
+        self.buckets[b].push(lid);
+        self.active += 1;
+    }
+
+    /// Remove and return the resident link whose head event is the
+    /// global minimum by `(time, id)`; `head` reads a lane's current
+    /// head key.  Scans the current time slot's bucket, advancing slot
+    /// by slot; when the horizon is sparse it jumps straight to the
+    /// earliest resident slot instead of walking empty buckets.
+    fn pop_min(&mut self, head: impl Fn(u32) -> (f64, u64)) -> Option<u32> {
+        if self.active == 0 {
+            return None;
+        }
+        let mask = self.buckets.len() - 1;
+        let mut scanned = 0usize;
+        loop {
+            let b = (self.cur_floor as usize) & mask;
+            let mut best: Option<(usize, f64, u64)> = None;
+            for (pos, &lid) in self.buckets[b].iter().enumerate() {
+                let (t, id) = head(lid);
+                // Slot membership via floor_of — the same arithmetic
+                // that placed the link in this bucket — so placement
+                // and lookup can never disagree on float rounding.
+                if self.floor_of(t) <= self.cur_floor {
+                    let wins = match best {
+                        None => true,
+                        Some((_, bt, bid)) => (t, id) < (bt, bid),
+                    };
+                    if wins {
+                        best = Some((pos, t, id));
+                    }
+                }
+            }
+            if let Some((pos, t, _)) = best {
+                let lid = self.buckets[b].swap_remove(pos);
+                self.active -= 1;
+                self.cur_floor = self.floor_of(t);
+                return Some(lid);
+            }
+            self.cur_floor += 1;
+            scanned += 1;
+            if scanned > self.buckets.len() {
+                let earliest = self
+                    .buckets
+                    .iter()
+                    .flatten()
+                    .map(|&lid| self.floor_of(head(lid).0))
+                    .min()
+                    .expect("calendar active but no resident links");
+                self.cur_floor = earliest;
+                scanned = 0;
+            }
+        }
+    }
+}
+
 /// The simulator.
 pub struct NetSim {
     topo: Topology,
     link: Link,
-    events: BinaryHeap<Reverse<Event>>,
-    /// (from, to) -> stats; serialization is per directed link.
-    links: BTreeMap<(NodeId, NodeId), LinkStats>,
+    /// (from, to) → dense directed-link id.
+    link_ids: FxHashMap<(u32, u32), u32>,
+    /// Link id → endpoints, stats, in-flight lane (dense, same index).
+    link_dirs: Vec<(NodeId, NodeId)>,
+    links: Vec<LinkStats>,
+    lanes: Vec<Lane>,
+    calendar: Calendar,
+    /// (from, dst) → next-hop node id, `u32::MAX` for unroutable.
+    /// Filled a whole shortest path at a time, so each (source,
+    /// destination) pair runs BFS at most once per simulator.
+    route_cache: FxHashMap<(u32, u32), u32>,
     delivered: Vec<(f64, NodeId, u64)>,
     next_id: u64,
     now_s: f64,
@@ -68,11 +190,19 @@ pub struct NetSim {
 impl NetSim {
     pub fn new(topo: Topology) -> Self {
         let link = topo.link();
+        // Slot width ≈ one MTU serialization + propagation: dense
+        // enough that concurrent flows spread over slots, coarse enough
+        // that a slot's bucket scan stays short.
+        let width = link.transfer_secs(1500) + PROP_DELAY_S;
         Self {
             topo,
             link,
-            events: BinaryHeap::new(),
-            links: BTreeMap::new(),
+            link_ids: FxHashMap::default(),
+            link_dirs: Vec::new(),
+            links: Vec::new(),
+            lanes: Vec::new(),
+            calendar: Calendar::new(width, 256),
+            route_cache: FxHashMap::default(),
             delivered: Vec::new(),
             next_id: 0,
             now_s: 0.0,
@@ -84,34 +214,95 @@ impl NetSim {
         self.transmit(t.max(self.now_s), src, dst, bytes);
     }
 
+    /// Cached static next hop from `at` towards `dst` (§4.1).  Each
+    /// (node, destination) pair runs [`Topology::next_hop`]'s BFS at
+    /// most once per simulator; only the BFS-anchored first hop is
+    /// cached — caching the whole path's windows would let an
+    /// equal-cost-multipath tie resolve differently than a fresh BFS
+    /// from the intermediate node, diverging from the reference.
+    fn next_hop_cached(&mut self, at: NodeId, dst: NodeId) -> Option<NodeId> {
+        if let Some(&n) = self.route_cache.get(&(at.0, dst.0)) {
+            return (n != u32::MAX).then_some(NodeId(n));
+        }
+        let next = self.topo.next_hop(at, dst);
+        self.route_cache
+            .insert((at.0, dst.0), next.map_or(u32::MAX, |n| n.0));
+        next
+    }
+
+    /// Dense id for the directed link `from → to`.
+    fn link_id(&mut self, from: NodeId, to: NodeId) -> usize {
+        if let Some(&id) = self.link_ids.get(&(from.0, to.0)) {
+            return id as usize;
+        }
+        let id = self.links.len() as u32;
+        self.link_ids.insert((from.0, to.0), id);
+        self.link_dirs.push((from, to));
+        self.links.push(LinkStats::default());
+        self.lanes.push(Lane::default());
+        id as usize
+    }
+
     fn transmit(&mut self, t: f64, at: NodeId, dst: NodeId, bytes: u64) {
         if at == dst {
             self.delivered.push((t, dst, bytes));
             return;
         }
-        let Some(next) = self.topo.next_hop(at, dst) else {
+        let Some(next) = self.next_hop_cached(at, dst) else {
             return; // unroutable: drop (counted nowhere, like a real L2 drop)
         };
-        let stats = self.links.entry((at, next)).or_default();
+        let lid = self.link_id(at, next);
+        let stats = &mut self.links[lid];
         let start = t.max(stats.busy_until_s);
         let done = start + self.link.transfer_secs(bytes);
         stats.busy_until_s = done;
         stats.bytes += bytes;
         stats.packets += 1;
         self.next_id += 1;
-        self.events.push(Reverse(Event {
+        let ev = Event {
             time_s: done + PROP_DELAY_S,
-            from: at,
             to: next,
             dst,
             bytes,
             id: self.next_id,
-        }));
+        };
+        let lane = &mut self.lanes[lid];
+        let was_idle = lane.is_idle();
+        if was_idle {
+            lane.head = 0;
+            lane.events.clear();
+        }
+        lane.events.push(ev);
+        if was_idle {
+            self.calendar.insert(lid as u32, ev.time_s);
+        }
+    }
+
+    /// Pop the globally next event — identical order to the reference
+    /// heap: ascending `(time, id)`.
+    fn pop_event(&mut self) -> Option<Event> {
+        let lanes = &self.lanes;
+        let lid = self.calendar.pop_min(|lid| {
+            let lane = &lanes[lid as usize];
+            let ev = &lane.events[lane.head];
+            (ev.time_s, ev.id)
+        })? as usize;
+        let lane = &mut self.lanes[lid];
+        let ev = lane.events[lane.head];
+        lane.head += 1;
+        if lane.is_idle() {
+            lane.head = 0;
+            lane.events.clear();
+        } else {
+            let next_t = lane.events[lane.head].time_s;
+            self.calendar.insert(lid as u32, next_t);
+        }
+        Some(ev)
     }
 
     /// Run until no events remain; returns the last delivery time.
     pub fn run(&mut self) -> f64 {
-        while let Some(Reverse(ev)) = self.events.pop() {
+        while let Some(ev) = self.pop_event() {
             self.now_s = ev.time_s;
             self.transmit(ev.time_s, ev.to, ev.dst, ev.bytes);
         }
@@ -134,14 +325,205 @@ impl NetSim {
         self.delivered.iter().filter(|(_, n, _)| *n == node).count()
     }
 
+    /// Every delivery `(time, node, bytes)` in delivery order — the
+    /// partitioned tree runner replays these into its root stage.
+    pub fn delivered(&self) -> &[(f64, NodeId, u64)] {
+        &self.delivered
+    }
+
     /// The maximum bytes carried by any single directed link — the
     /// congestion metric of the routing experiment.
     pub fn max_link_bytes(&self) -> u64 {
-        self.links.values().map(|s| s.bytes).max().unwrap_or(0)
+        self.links.iter().map(|s| s.bytes).max().unwrap_or(0)
     }
 
-    pub fn link_stats(&self) -> &BTreeMap<(NodeId, NodeId), LinkStats> {
-        &self.links
+    /// Total packet-hops processed (one per link traversal) — the
+    /// event count of the run, used as the bench work denominator.
+    pub fn events_processed(&self) -> u64 {
+        self.links.iter().map(|s| s.packets).sum()
+    }
+
+    /// Per-directed-link stats, keyed `(from, to)`.
+    pub fn link_stats(&self) -> BTreeMap<(NodeId, NodeId), LinkStats> {
+        self.link_dirs
+            .iter()
+            .zip(self.links.iter())
+            .map(|(&(a, b), s)| ((a, b), s.clone()))
+            .collect()
+    }
+}
+
+/// The original `BinaryHeap`-over-packets / `BTreeMap`-stats / BFS-per-
+/// hop implementation, kept verbatim as the correctness baseline for
+/// the calendar-queue engine (differential tests and the `bench_fabric`
+/// heap-baseline rows).  One fix relative to the historical code:
+/// event ordering uses `f64::total_cmp`, so a NaN timestamp can no
+/// longer panic the scheduler — the NaN event sorts after +inf, pops
+/// last, and `f64::max` then discards the NaN against the link's
+/// finite busy time, so the packet completes at a finite time instead
+/// of unwinding the run mid-experiment.
+pub mod reference {
+    use super::{LinkStats, PROP_DELAY_S};
+    use crate::net::topology::{NodeId, Topology};
+    use crate::sim::Link;
+    use std::cmp::Reverse;
+    use std::collections::{BTreeMap, BinaryHeap};
+
+    #[derive(Clone, Debug, PartialEq)]
+    pub(super) struct Event {
+        pub(super) time_s: f64,
+        pub(super) from: NodeId,
+        pub(super) to: NodeId,
+        pub(super) dst: NodeId,
+        pub(super) bytes: u64,
+        pub(super) id: u64,
+    }
+
+    impl Eq for Event {}
+
+    impl Ord for Event {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            // total_cmp, not partial_cmp().unwrap(): a NaN timestamp
+            // (e.g. from a degenerate rate/byte computation upstream)
+            // must not panic the event loop.
+            self.time_s
+                .total_cmp(&other.time_s)
+                .then(self.id.cmp(&other.id))
+        }
+    }
+
+    impl PartialOrd for Event {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    /// The heap-based simulator (see module docs).
+    pub struct HeapNetSim {
+        topo: Topology,
+        link: Link,
+        events: BinaryHeap<Reverse<Event>>,
+        links: BTreeMap<(NodeId, NodeId), LinkStats>,
+        delivered: Vec<(f64, NodeId, u64)>,
+        next_id: u64,
+        now_s: f64,
+    }
+
+    impl HeapNetSim {
+        pub fn new(topo: Topology) -> Self {
+            let link = topo.link();
+            Self {
+                topo,
+                link,
+                events: BinaryHeap::new(),
+                links: BTreeMap::new(),
+                delivered: Vec::new(),
+                next_id: 0,
+                now_s: 0.0,
+            }
+        }
+
+        pub fn send(&mut self, t: f64, src: NodeId, dst: NodeId, bytes: u64) {
+            self.transmit(t.max(self.now_s), src, dst, bytes);
+        }
+
+        fn transmit(&mut self, t: f64, at: NodeId, dst: NodeId, bytes: u64) {
+            if at == dst {
+                self.delivered.push((t, dst, bytes));
+                return;
+            }
+            let Some(next) = self.topo.next_hop(at, dst) else {
+                return;
+            };
+            let stats = self.links.entry((at, next)).or_default();
+            let start = t.max(stats.busy_until_s);
+            let done = start + self.link.transfer_secs(bytes);
+            stats.busy_until_s = done;
+            stats.bytes += bytes;
+            stats.packets += 1;
+            self.next_id += 1;
+            self.events.push(Reverse(Event {
+                time_s: done + PROP_DELAY_S,
+                from: at,
+                to: next,
+                dst,
+                bytes,
+                id: self.next_id,
+            }));
+        }
+
+        pub fn run(&mut self) -> f64 {
+            while let Some(Reverse(ev)) = self.events.pop() {
+                self.now_s = ev.time_s;
+                self.transmit(ev.time_s, ev.to, ev.dst, ev.bytes);
+            }
+            self.delivered
+                .iter()
+                .map(|(t, _, _)| *t)
+                .fold(0.0, f64::max)
+        }
+
+        pub fn delivered_bytes(&self, node: NodeId) -> u64 {
+            self.delivered
+                .iter()
+                .filter(|(_, n, _)| *n == node)
+                .map(|(_, _, b)| *b)
+                .sum()
+        }
+
+        pub fn delivered_packets(&self, node: NodeId) -> usize {
+            self.delivered.iter().filter(|(_, n, _)| *n == node).count()
+        }
+
+        pub fn delivered(&self) -> &[(f64, NodeId, u64)] {
+            &self.delivered
+        }
+
+        pub fn max_link_bytes(&self) -> u64 {
+            self.links.values().map(|s| s.bytes).max().unwrap_or(0)
+        }
+
+        pub fn events_processed(&self) -> u64 {
+            self.links.values().map(|s| s.packets).sum()
+        }
+
+        pub fn link_stats(&self) -> BTreeMap<(NodeId, NodeId), LinkStats> {
+            self.links.clone()
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        fn ev(time_s: f64, id: u64) -> Event {
+            Event {
+                time_s,
+                from: NodeId(0),
+                to: NodeId(1),
+                dst: NodeId(1),
+                bytes: 1,
+                id,
+            }
+        }
+
+        #[test]
+        fn event_cmp_is_total_even_with_nan() {
+            // Regression: the historical partial_cmp().unwrap() panicked
+            // here.  total_cmp sorts NaN after +inf; ids break ties.
+            let nan = ev(f64::NAN, 3);
+            let inf = ev(f64::INFINITY, 2);
+            let one = ev(1.0, 1);
+            assert_eq!(one.cmp(&inf), std::cmp::Ordering::Less);
+            assert_eq!(inf.cmp(&nan), std::cmp::Ordering::Less);
+            assert_eq!(nan.cmp(&nan), std::cmp::Ordering::Equal);
+            let mut v = vec![nan.clone(), one.clone(), inf.clone()];
+            v.sort(); // must not panic
+            assert_eq!(v[0].id, 1);
+            assert_eq!(v[2].id, 3);
+            // Tie on time → id order (the determinism contract).
+            assert_eq!(ev(5.0, 1).cmp(&ev(5.0, 2)), std::cmp::Ordering::Less);
+        }
     }
 }
 
@@ -184,8 +566,9 @@ mod tests {
         }
         sim.run();
         // Every inter-switch link carried both packets.
+        let stats = sim.link_stats();
         for w in switches.windows(2) {
-            assert_eq!(sim.link_stats()[&(w[0], w[1])].bytes, 2000);
+            assert_eq!(stats[&(w[0], w[1])].bytes, 2000);
         }
         assert_eq!(sim.max_link_bytes(), 2000);
     }
@@ -199,5 +582,56 @@ mod tests {
         sim.send(0.0, a, b, 100);
         assert_eq!(sim.run(), 0.0);
         assert_eq!(sim.delivered_bytes(b), 0);
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_incast_with_ties() {
+        // Synchronized same-size senders produce heavy (time, id) ties;
+        // both engines must break them identically.
+        let (topo, _sw, hosts) = Topology::star(9);
+        let mut cal = NetSim::new(topo.clone());
+        let mut heap = reference::HeapNetSim::new(topo);
+        for round in 0..20u64 {
+            for i in 0..8 {
+                let t = round as f64 * 1e-5;
+                cal.send(t, hosts[i], hosts[8], 1500);
+                heap.send(t, hosts[i], hosts[8], 1500);
+            }
+        }
+        assert_eq!(cal.run(), heap.run());
+        assert_eq!(cal.delivered(), heap.delivered());
+        assert_eq!(cal.link_stats(), heap.link_stats());
+        assert_eq!(cal.events_processed(), heap.events_processed());
+        assert!(cal.events_processed() > 0);
+    }
+
+    #[test]
+    fn calendar_handles_sparse_far_future_horizons() {
+        // A lone event far beyond one calendar ring rotation exercises
+        // the jump-to-earliest-slot path.
+        let (topo, _sw, hosts) = Topology::star(3);
+        let mut cal = NetSim::new(topo.clone());
+        let mut heap = reference::HeapNetSim::new(topo);
+        cal.send(0.0, hosts[0], hosts[1], 100);
+        cal.send(2.5, hosts[1], hosts[2], 100); // ~1e6 slots later
+        heap.send(0.0, hosts[0], hosts[1], 100);
+        heap.send(2.5, hosts[1], hosts[2], 100);
+        assert_eq!(cal.run(), heap.run());
+        assert_eq!(cal.delivered(), heap.delivered());
+        assert_eq!(cal.link_stats(), heap.link_stats());
+    }
+
+    #[test]
+    fn send_after_run_continues_from_now() {
+        // Late sends are clamped to the current sim time, as before.
+        let (topo, _sw, hosts) = Topology::star(3);
+        let mut sim = NetSim::new(topo);
+        sim.send(0.0, hosts[0], hosts[1], 1_250_000);
+        let t1 = sim.run();
+        sim.send(0.0, hosts[0], hosts[2], 1_250_000); // t < now: clamped
+        let t2 = sim.run();
+        assert!(t2 >= t1);
+        assert_eq!(sim.delivered_packets(hosts[1]), 1);
+        assert_eq!(sim.delivered_packets(hosts[2]), 1);
     }
 }

@@ -1,0 +1,232 @@
+//! Rack-scale tree simulation split across workers.
+//!
+//! The aggregation tree's root-child subtrees are link-disjoint on a
+//! tree topology (`AggTree::independent_subtrees`), so the packet-level
+//! sim factorizes: **phase 1** runs one [`NetSim`] per subtree on its
+//! own worker (mapper → subtree head), **phase 2** replays every
+//! arrival at a head into a final sim over the shared root-side links
+//! (head → reducer).  Per-link serialization depends only on arrival
+//! times and per-link arrival order, both of which the split preserves
+//! on tree topologies, so the result matches one monolithic [`NetSim`]
+//! run exactly (pinned by `tests/parallel_determinism.rs`); the
+//! monolithic path stays the correctness reference.
+//!
+//! One fine-print caveat: when two packets of *different* sizes reach
+//! a shared root-side link at bit-equal times, the engines may
+//! serialize them in different orders; every aggregate except the
+//! float rounding of that link's busy chain is order-invariant, so
+//! with mixed packet sizes the equality holds up to one ulp on such
+//! ties (with uniform sizes — every harness here — it is exact).
+
+use crate::controller::tree::AggTree;
+use crate::net::netsim::LinkStats;
+use crate::net::{NetSim, NodeId, Topology};
+use crate::switch::parallel::Parallelism;
+use crate::util::par::par_map;
+use std::collections::BTreeMap;
+
+/// One injected packet: at `t`, `src` sends `bytes` to the reducer.
+#[derive(Clone, Copy, Debug)]
+pub struct SendReq {
+    pub t: f64,
+    pub src: NodeId,
+    pub bytes: u64,
+}
+
+/// Staggered constant-rate injection — the canonical many-to-one
+/// pattern of the rack experiments: `per_src` packets of `bytes` from
+/// each source, `step_s` apart, with a per-source phase offset of
+/// `stagger_s` so flows do not start bit-synchronized.  Shared by the
+/// §7.4 harness, `bench_fabric`, and the determinism tests so they
+/// all measure/pin the same traffic shape.
+pub fn staggered_sends(
+    srcs: &[NodeId],
+    per_src: usize,
+    bytes: u64,
+    step_s: f64,
+    stagger_s: f64,
+) -> Vec<SendReq> {
+    srcs.iter()
+        .enumerate()
+        .flat_map(|(i, &src)| {
+            (0..per_src).map(move |k| SendReq {
+                t: k as f64 * step_s + i as f64 * stagger_s,
+                src,
+                bytes,
+            })
+        })
+        .collect()
+}
+
+/// Aggregate outcome of a tree simulation (either engine).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TreeSimResult {
+    /// Last delivery time at the reducer.
+    pub makespan_s: f64,
+    pub max_link_bytes: u64,
+    pub link_stats: BTreeMap<(NodeId, NodeId), LinkStats>,
+    pub delivered_bytes: u64,
+    pub delivered_packets: usize,
+    /// Total packet-hops processed across all phases/workers.
+    pub events: u64,
+}
+
+fn fold_stats(
+    into: &mut BTreeMap<(NodeId, NodeId), LinkStats>,
+    from: BTreeMap<(NodeId, NodeId), LinkStats>,
+) {
+    for (k, s) in from {
+        let e = into.entry(k).or_default();
+        e.bytes += s.bytes;
+        e.packets += s.packets;
+        e.busy_until_s = e.busy_until_s.max(s.busy_until_s);
+    }
+}
+
+fn result_from(
+    makespan_s: f64,
+    link_stats: BTreeMap<(NodeId, NodeId), LinkStats>,
+    delivered_bytes: u64,
+    delivered_packets: usize,
+) -> TreeSimResult {
+    TreeSimResult {
+        makespan_s,
+        max_link_bytes: link_stats.values().map(|s| s.bytes).max().unwrap_or(0),
+        events: link_stats.values().map(|s| s.packets).sum(),
+        link_stats,
+        delivered_bytes,
+        delivered_packets,
+    }
+}
+
+/// Reference: one monolithic [`NetSim`] over the whole topology.
+pub fn run_monolithic(topo: &Topology, reducer: NodeId, sends: &[SendReq]) -> TreeSimResult {
+    let mut sim = NetSim::new(topo.clone());
+    for s in sends {
+        sim.send(s.t, s.src, reducer, s.bytes);
+    }
+    let makespan = sim.run();
+    result_from(
+        makespan,
+        sim.link_stats(),
+        sim.delivered_bytes(reducer),
+        sim.delivered_packets(reducer),
+    )
+}
+
+/// Partitioned run: phase-1 subtree sims fan out over `par` workers,
+/// phase 2 replays head arrivals through the root-side links.
+pub fn run_tree_partitioned(
+    topo: &Topology,
+    tree: &AggTree,
+    sends: &[SendReq],
+    par: Parallelism,
+) -> TreeSimResult {
+    let reducer = tree.reducer;
+    let subtrees = tree.independent_subtrees(topo);
+    // Group sends by subtree; sends from non-mappers (or heads
+    // themselves) go straight to phase 2 in input order.
+    let mut head_of: BTreeMap<NodeId, usize> = BTreeMap::new();
+    for (i, st) in subtrees.iter().enumerate() {
+        for &m in &st.mappers {
+            head_of.insert(m, i);
+        }
+    }
+    let mut batches: Vec<Vec<SendReq>> = vec![Vec::new(); subtrees.len()];
+    let mut direct: Vec<SendReq> = Vec::new();
+    for s in sends {
+        match head_of.get(&s.src) {
+            Some(&i) if subtrees[i].head != s.src => batches[i].push(*s),
+            // A mapper that is its own subtree head: its whole path is
+            // root-side, so phase 2 simulates it exactly.
+            Some(_) => direct.push(*s),
+            // A send from a node outside the tree would contend with
+            // phase-1 traffic on subtree-internal links that phase 2
+            // cannot see — refusing beats returning a confidently
+            // wrong "exact" result.  Use `run_monolithic` for mixed
+            // traffic.
+            None => panic!(
+                "run_tree_partitioned: send source {} is not a mapper of the tree",
+                s.src
+            ),
+        }
+    }
+    // Phase 1: each subtree simulates mapper → head independently.
+    let jobs: Vec<(NodeId, Vec<SendReq>)> = subtrees
+        .iter()
+        .map(|st| st.head)
+        .zip(batches)
+        .filter(|(_, b)| !b.is_empty())
+        .collect();
+    let phase1: Vec<(NodeId, NetSim)> = par_map(par, jobs, |(head, batch)| {
+        let mut sim = NetSim::new(topo.clone());
+        for s in &batch {
+            sim.send(s.t, s.src, head, s.bytes);
+        }
+        sim.run();
+        (head, sim)
+    });
+    // Phase 2: replay arrivals at the heads (each sim's delivered list
+    // is in time order) plus the direct sends, over the shared links.
+    let mut root_sim = NetSim::new(topo.clone());
+    for (head, sim) in &phase1 {
+        for &(t, node, bytes) in sim.delivered() {
+            debug_assert_eq!(node, *head);
+            root_sim.send(t, *head, reducer, bytes);
+        }
+    }
+    for s in &direct {
+        root_sim.send(s.t, s.src, reducer, s.bytes);
+    }
+    let makespan = root_sim.run();
+    // Merge link loads: subtree-internal links (phase 1) are disjoint
+    // from the root-side links (phase 2) on a tree topology.
+    let mut stats = root_sim.link_stats();
+    for (_, sim) in &phase1 {
+        fold_stats(&mut stats, sim.link_stats());
+    }
+    result_from(
+        makespan,
+        stats,
+        root_sim.delivered_bytes(reducer),
+        root_sim.delivered_packets(reducer),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{AggOp, TreeId};
+
+    fn mtu_sends(mappers: &[NodeId], per_mapper: usize) -> Vec<SendReq> {
+        staggered_sends(mappers, per_mapper, 1500, 2e-6, 1e-7)
+    }
+
+    #[test]
+    fn partitioned_matches_monolithic_on_two_level() {
+        let (topo, _spine, _leaves, hosts) = Topology::two_level(3, 4);
+        let reducer = hosts[11];
+        let mappers: Vec<NodeId> = hosts[..11].to_vec();
+        let tree =
+            AggTree::build(&topo, TreeId(1), AggOp::Sum, &mappers, reducer).unwrap();
+        let sends = mtu_sends(&mappers, 25);
+        let mono = run_monolithic(&topo, reducer, &sends);
+        for par in [Parallelism::Serial, Parallelism::Sharded(4)] {
+            let part = run_tree_partitioned(&topo, &tree, &sends, par);
+            assert_eq!(part, mono, "{par:?}");
+        }
+        assert_eq!(mono.delivered_packets, 11 * 25);
+        assert_eq!(mono.delivered_bytes, 11 * 25 * 1500);
+        assert!(mono.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn partitioned_matches_monolithic_on_chain() {
+        let (topo, _switches, sources, sink) = Topology::chain(4, 3);
+        let tree = AggTree::build(&topo, TreeId(1), AggOp::Sum, &sources, sink).unwrap();
+        let sends = mtu_sends(&sources, 40);
+        let mono = run_monolithic(&topo, sink, &sends);
+        let part = run_tree_partitioned(&topo, &tree, &sends, Parallelism::Sharded(8));
+        assert_eq!(part, mono);
+    }
+}

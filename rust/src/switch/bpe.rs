@@ -74,6 +74,19 @@ impl Bpe {
         &self.regions[group]
     }
 
+    /// Mutable per-group region access for the sharded ingest engine:
+    /// workers own disjoint regions and run the functional probes
+    /// there, while the shared timing is replayed via
+    /// [`Self::replay_timing`].
+    pub(crate) fn regions_mut(&mut self) -> &mut [HashTable] {
+        &mut self.regions
+    }
+
+    /// The eviction policy this engine probes with.
+    pub fn eviction(&self) -> EvictionPolicy {
+        self.eviction
+    }
+
     /// Verification read with the FPE hash-unit output supplied —
     /// regions share the FPE slot widths, so the tag is identical and
     /// the lookup never rehashes the key.
@@ -126,6 +139,40 @@ impl Bpe {
         hash: u32,
         op: AggOp,
     ) -> BpeOutcome {
+        let start = self.replay_timing(arrive);
+        let evict_old = self.eviction == EvictionPolicy::EvictOld;
+        match self.regions[group].offer_hashed(hash, key, value, op, evict_old) {
+            Probe::Aggregated => {
+                self.aggregated += 1;
+                BpeOutcome::Kept
+            }
+            Probe::Inserted => {
+                self.inserted += 1;
+                BpeOutcome::Kept
+            }
+            Probe::Evicted(k, v, _) => {
+                self.overflowed += 1;
+                BpeOutcome::Overflow {
+                    key: k,
+                    value: v,
+                    ready: start + self.delays.bpe_aggregate,
+                }
+            }
+        }
+    }
+
+    /// The timing half of [`Self::offer_hashed`] — FIFO accounting,
+    /// busy chain, the two DRAM commands, and the pair latency — for
+    /// one arrival at `arrive`; returns the service start cycle.
+    ///
+    /// The sharded ingest engine runs the functional probes on
+    /// per-group region shards in parallel and then calls this in
+    /// *global eviction order* during its merge stage, so the shared
+    /// timing counters (FIFO writes/full events, DRAM issue/stall,
+    /// latency) stay byte-identical to the serial path.  The probe
+    /// outcome never feeds back into the timing, which is what makes
+    /// the split exact.
+    pub(crate) fn replay_timing(&mut self, arrive: Cycles) -> Cycles {
         let mut effective_arrive = arrive;
         let depth = self.fifo_depth_at(arrive);
         if depth >= self.fifo_cap {
@@ -142,29 +189,16 @@ impl Bpe {
         let (_, _read_done) = self.dram.access(start);
         let (_, _write_done) = self.dram.access(start + 1);
         self.busy_until = start + self.interval;
+        self.latency_cycles += self.delays.bpe_aggregate;
+        start
+    }
 
-        let evict_old = self.eviction == EvictionPolicy::EvictOld;
-        match self.regions[group].offer_hashed(hash, key, value, op, evict_old) {
-            Probe::Aggregated => {
-                self.aggregated += 1;
-                self.latency_cycles += self.delays.bpe_aggregate;
-                BpeOutcome::Kept
-            }
-            Probe::Inserted => {
-                self.inserted += 1;
-                self.latency_cycles += self.delays.bpe_aggregate;
-                BpeOutcome::Kept
-            }
-            Probe::Evicted(k, v, _) => {
-                self.overflowed += 1;
-                self.latency_cycles += self.delays.bpe_aggregate;
-                BpeOutcome::Overflow {
-                    key: k,
-                    value: v,
-                    ready: start + self.delays.bpe_aggregate,
-                }
-            }
-        }
+    /// Fold shard-worker probe outcome counts back into the engine
+    /// (the counterpart of the probes run on [`Self::regions_mut`]).
+    pub(crate) fn absorb_probe_counts(&mut self, aggregated: u64, inserted: u64, overflowed: u64) {
+        self.aggregated += aggregated;
+        self.inserted += inserted;
+        self.overflowed += overflowed;
     }
 
     /// Flush all regions; returns the resident pairs and the stream-out

@@ -4,6 +4,7 @@
 use crate::protocol::{TreeConfig, TreeId};
 use crate::sim::dram::DramConfig;
 use crate::sim::Cycles;
+use crate::switch::parallel::Parallelism;
 use std::collections::BTreeMap;
 
 /// Where an FPE sends a pair displaced by a hash collision.
@@ -83,6 +84,10 @@ pub struct SwitchConfig {
     /// Cycles between pair acceptances in the BPE (2 DRAM commands
     /// per pair at the controller's service interval).
     pub bpe_interval: Cycles,
+    /// Execution engine for the stream ingest paths: serial reference
+    /// (default) or group-sharded across a worker pool — outputs and
+    /// stats are byte-identical either way (see `switch::parallel`).
+    pub parallelism: Parallelism,
 }
 
 impl Default for SwitchConfig {
@@ -100,6 +105,7 @@ impl Default for SwitchConfig {
             delays: StageDelays::default(),
             fpe_interval: 2,
             bpe_interval: 4,
+            parallelism: Parallelism::Serial,
         }
     }
 }

@@ -50,6 +50,52 @@ impl Crossbar {
         self.transfers = 0;
         self.contended = 0;
     }
+
+    /// Detach a single-output replica for a shard worker.  The view
+    /// starts from this output's current serialization state and counts
+    /// its own transfers/contentions; [`Self::absorb`] folds it back.
+    /// Outputs are independent in [`Self::route`] (per-output
+    /// `next_free`), so views over distinct outputs replay the serial
+    /// crossbar exactly regardless of worker interleaving.
+    pub fn port_view(&self, out: usize) -> PortView {
+        PortView {
+            latency: self.latency,
+            next_free: self.next_free[out],
+            transfers: 0,
+            contended: 0,
+        }
+    }
+
+    /// Reattach a worker's [`PortView`] for `out`.
+    pub fn absorb(&mut self, out: usize, view: PortView) {
+        self.next_free[out] = view.next_free;
+        self.transfers += view.transfers;
+        self.contended += view.contended;
+    }
+}
+
+/// One output's slice of the crossbar, owned by a shard worker (see
+/// [`Crossbar::port_view`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PortView {
+    latency: Cycles,
+    next_free: Cycles,
+    transfers: u64,
+    contended: u64,
+}
+
+impl PortView {
+    /// Identical arithmetic to [`Crossbar::route`] for this output.
+    #[inline]
+    pub fn route(&mut self, now: Cycles) -> Cycles {
+        let start = now.max(self.next_free);
+        if start > now {
+            self.contended += 1;
+        }
+        self.next_free = start + 1;
+        self.transfers += 1;
+        start + self.latency
+    }
 }
 
 #[cfg(test)]
@@ -81,5 +127,28 @@ mod tests {
         x.route(0, 0);
         assert_eq!(x.route(100, 0), 102);
         assert_eq!(x.contended, 0);
+    }
+
+    #[test]
+    fn port_view_replays_route_exactly() {
+        let mut whole = Crossbar::new(4, 2);
+        let mut split = Crossbar::new(4, 2);
+        // Warm both with identical traffic.
+        for (now, out) in [(0u64, 1usize), (0, 1), (5, 3), (5, 1)] {
+            whole.route(now, out);
+            split.route(now, out);
+        }
+        // Continue output 1 through a detached view, output 3 directly.
+        let mut v1 = split.port_view(1);
+        let arrivals = [6u64, 6, 7, 40];
+        let want: Vec<Cycles> = arrivals.iter().map(|&t| whole.route(t, 1)).collect();
+        let got: Vec<Cycles> = arrivals.iter().map(|&t| v1.route(t)).collect();
+        assert_eq!(got, want);
+        assert_eq!(whole.route(8, 3), split.route(8, 3));
+        split.absorb(1, v1);
+        assert_eq!(split.transfers, whole.transfers);
+        assert_eq!(split.contended, whole.contended);
+        // Post-absorb, both crossbars continue identically.
+        assert_eq!(whole.route(41, 1), split.route(41, 1));
     }
 }

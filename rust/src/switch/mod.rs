@@ -26,11 +26,13 @@ pub mod fpe;
 pub mod hash;
 pub mod hash_table;
 pub mod header_extract;
+pub mod parallel;
 pub mod payload_analyzer;
 pub mod scheduler;
 pub mod switch_sim;
 
 pub use config::{EvictionPolicy, MemoryPolicy, StageDelays, SwitchConfig};
 pub use hash_table::{HashTable, Probe};
+pub use parallel::Parallelism;
 pub use payload_analyzer::GroupMap;
 pub use switch_sim::{IngestOutput, IngestSink, SwitchAggSwitch, SwitchStats};

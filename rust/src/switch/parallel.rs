@@ -1,0 +1,291 @@
+//! Parallel execution engine for the switch fabric: ingest sharded by
+//! key-length group (= FPE) across a scoped-`std::thread` worker pool,
+//! with a deterministic merge stage.
+//!
+//! # Why this is exact
+//!
+//! The per-pair pipeline factorizes by group: a pair's group is a pure
+//! function of its key length, each FPE serves exactly one group, and
+//! the BPE's memory is partitioned into per-group regions — so the
+//! *functional* state touched by a pair lives entirely inside its
+//! group.  The cross-group couplings are (a) the input pacing (a
+//! global byte counter), (b) the shared BPE timing (FIFO/busy/DRAM),
+//! and (c) the emission order of forwarded pairs.  The engine splits
+//! along exactly those seams:
+//!
+//! 1. a serial **front end** walks the chunks in arrival order, doing
+//!    the byte-pacing and payload-analyzer accounting and stamping
+//!    every pair with its global sequence number and arrival cycle;
+//! 2. **workers** own disjoint `{Fpe, BPE region, crossbar output}`
+//!    shards and run the full per-pair hot path (hash, probe, evict,
+//!    BPE probe) for their groups independently;
+//! 3. a serial **merge** reorders worker outputs by sequence number,
+//!    replays BPE arrivals through the shared timing model
+//!    ([`crate::switch::bpe::Bpe::replay_timing`]), and emits
+//!    forwarded pairs downstream in the serial path's order.
+//!
+//! Outputs *and* stats are byte-identical to the serial path (pinned
+//! by `tests/parallel_determinism.rs`); the serial path remains the
+//! correctness reference.
+
+use crate::protocol::{AggOp, KvPair};
+use crate::sim::Cycles;
+use crate::switch::crossbar::PortView;
+use crate::switch::fpe::{Fpe, FpeOutcome};
+use crate::switch::hash_table::{HashTable, Probe};
+
+/// How much of the fabric engine runs on worker threads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Single-threaded reference path (the default).
+    #[default]
+    Serial,
+    /// Ingest sharded by FPE group over this many workers; experiment
+    /// sweeps fan scenario rows over the same pool.
+    Sharded(usize),
+}
+
+impl Parallelism {
+    /// Worker count (1 for the serial path).
+    pub fn shards(&self) -> usize {
+        match self {
+            Parallelism::Serial => 1,
+            Parallelism::Sharded(n) => (*n).max(1),
+        }
+    }
+
+    /// Split the worker budget between an outer scenario fan-out of
+    /// `outer_items` rows and each row's inner engine, so nested
+    /// parallelism (sweep × sharded switch) cannot oversubscribe:
+    /// `outer × inner.shards() <= self.shards()`.  Returns the outer
+    /// worker count and the inner [`Parallelism`].
+    pub fn split(&self, outer_items: usize) -> (usize, Parallelism) {
+        let total = self.shards();
+        let outer = total.min(outer_items.max(1));
+        let inner = total / outer;
+        let inner = if inner > 1 {
+            Parallelism::Sharded(inner)
+        } else {
+            Parallelism::Serial
+        };
+        (outer, inner)
+    }
+
+    /// Parse `SWITCHAGG_PARALLEL`: unset/empty/`serial` → [`Self::Serial`],
+    /// a number → [`Self::Sharded`] with that many workers.
+    pub fn from_env() -> Self {
+        match std::env::var("SWITCHAGG_PARALLEL") {
+            Ok(v) => Self::parse(&v),
+            Err(_) => Parallelism::Serial,
+        }
+    }
+
+    /// Parse a config string (see [`Self::from_env`]).  Unparseable or
+    /// zero values fall back to `Serial` *with a stderr warning*, so a
+    /// typo'd `SWITCHAGG_PARALLEL` cannot silently record serial bench
+    /// numbers as parallel ones.
+    pub fn parse(s: &str) -> Self {
+        let t = s.trim();
+        if t.is_empty() || t.eq_ignore_ascii_case("serial") {
+            return Parallelism::Serial;
+        }
+        match t.parse::<usize>() {
+            Ok(n) if n >= 1 => Parallelism::Sharded(n),
+            _ => {
+                eprintln!(
+                    "SWITCHAGG_PARALLEL={s:?} is not \"serial\" or a shard count >= 1; \
+                     falling back to the serial engine"
+                );
+                Parallelism::Serial
+            }
+        }
+    }
+}
+
+/// One pair as stamped by the front end: global sequence number (the
+/// merge key) and arrival cycle at the FPE input stage.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct JobPair {
+    pub seq: u64,
+    pub arrive: Cycles,
+    pub pair: KvPair,
+}
+
+/// Everything one worker needs to run one group's slice of the data
+/// plane; the `&mut` borrows are disjoint across groups.
+pub(crate) struct WorkerGroup<'a> {
+    pub group: usize,
+    pub job: Vec<JobPair>,
+    pub fpe: &'a mut Fpe,
+    /// This group's BPE region (`None` when the hierarchy is off).
+    pub region: Option<&'a mut HashTable>,
+    pub port: PortView,
+    pub op: AggOp,
+    /// BPE probe policy (`EvictionPolicy::EvictOld`).
+    pub evict_old: bool,
+}
+
+/// One group's worker results, merged serially afterwards.
+pub(crate) struct GroupOutput {
+    pub group: usize,
+    pub port: PortView,
+    /// Pairs leaving the switch, tagged with the triggering pair's seq.
+    pub emissions: Vec<(u64, KvPair)>,
+    /// FPE→BPE evictions `(seq, (group, ready cycle))` for the
+    /// scheduler-grant and shared-timing replay.
+    pub evicts: Vec<(u64, (usize, Cycles))>,
+    pub bpe_aggregated: u64,
+    pub bpe_inserted: u64,
+    pub bpe_overflowed: u64,
+}
+
+/// Run one group's pair stream through its FPE (and BPE region).
+/// Functionally identical to the serial `TreeEngine::ingest_pairs`
+/// inner loop restricted to this group.
+pub(crate) fn run_shard_group(mut wg: WorkerGroup<'_>) -> GroupOutput {
+    let mut emissions = Vec::new();
+    let mut evicts = Vec::new();
+    let (mut aggregated, mut inserted, mut overflowed) = (0u64, 0u64, 0u64);
+    for jp in &wg.job {
+        let deliver = wg.port.route(jp.arrive);
+        match wg.fpe.offer(deliver, jp.pair.key, jp.pair.value, wg.op) {
+            FpeOutcome::Kept => {}
+            FpeOutcome::Forwarded {
+                key,
+                value,
+                hash,
+                ready,
+            } => match wg.region.as_deref_mut() {
+                Some(region) => {
+                    evicts.push((jp.seq, (wg.group, ready)));
+                    match region.offer_hashed(hash, key, value, wg.op, wg.evict_old) {
+                        Probe::Aggregated => aggregated += 1,
+                        Probe::Inserted => inserted += 1,
+                        Probe::Evicted(k, v, _) => {
+                            overflowed += 1;
+                            emissions.push((jp.seq, KvPair::new(k, v)));
+                        }
+                    }
+                }
+                None => emissions.push((jp.seq, KvPair::new(key, value))),
+            },
+        }
+    }
+    GroupOutput {
+        group: wg.group,
+        port: wg.port,
+        emissions,
+        evicts,
+        bpe_aggregated: aggregated,
+        bpe_inserted: inserted,
+        bpe_overflowed: overflowed,
+    }
+}
+
+/// Run each worker's batch of groups on its own scoped thread and
+/// collect the per-group outputs (any order; callers merge by seq).
+pub(crate) fn run_workers(per_worker: Vec<Vec<WorkerGroup<'_>>>) -> Vec<GroupOutput> {
+    // One live batch: no point paying a thread spawn.
+    let live = per_worker.iter().filter(|b| !b.is_empty()).count();
+    if live <= 1 {
+        return per_worker
+            .into_iter()
+            .flatten()
+            .map(run_shard_group)
+            .collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = per_worker
+            .into_iter()
+            .filter(|batch| !batch.is_empty())
+            .map(|batch| {
+                scope.spawn(move || {
+                    batch
+                        .into_iter()
+                        .map(run_shard_group)
+                        .collect::<Vec<GroupOutput>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("ingest shard worker panicked"))
+            .collect()
+    })
+}
+
+/// Merge per-group streams (each ascending in their `u64` key) into one
+/// ascending stream.  Keys are globally unique (a pair has exactly one
+/// group), so the order is total and deterministic.
+pub(crate) fn merge_by_seq<T: Copy>(streams: &[&[(u64, T)]]) -> Vec<(u64, T)> {
+    let total: usize = streams.iter().map(|s| s.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    let mut idx = vec![0usize; streams.len()];
+    loop {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, s) in streams.iter().enumerate() {
+            if let Some(&(k, _)) = s.get(idx[i]) {
+                let wins = match best {
+                    None => true,
+                    Some((_, bk)) => k < bk,
+                };
+                if wins {
+                    best = Some((i, k));
+                }
+            }
+        }
+        let Some((i, _)) = best else { break };
+        out.push(streams[i][idx[i]]);
+        idx[i] += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelism_parsing() {
+        assert_eq!(Parallelism::parse(""), Parallelism::Serial);
+        assert_eq!(Parallelism::parse("serial"), Parallelism::Serial);
+        assert_eq!(Parallelism::parse("Serial"), Parallelism::Serial);
+        assert_eq!(Parallelism::parse("4"), Parallelism::Sharded(4));
+        assert_eq!(Parallelism::parse(" 8 "), Parallelism::Sharded(8));
+        assert_eq!(Parallelism::parse("0"), Parallelism::Serial);
+        assert_eq!(Parallelism::parse("bogus"), Parallelism::Serial);
+        assert_eq!(Parallelism::Serial.shards(), 1);
+        assert_eq!(Parallelism::Sharded(4).shards(), 4);
+        assert_eq!(Parallelism::default(), Parallelism::Serial);
+    }
+
+    #[test]
+    fn split_bounds_nested_thread_budget() {
+        // outer × inner.shards() never exceeds the total budget.
+        for total in 1..=16usize {
+            for items in 1..=6usize {
+                let (outer, inner) = Parallelism::Sharded(total).split(items);
+                assert!(outer >= 1 && outer <= items.max(1));
+                assert!(outer * inner.shards() <= total.max(1), "{total} {items}");
+            }
+        }
+        assert_eq!(Parallelism::Serial.split(4), (1, Parallelism::Serial));
+        assert_eq!(Parallelism::Sharded(8).split(4), (4, Parallelism::Sharded(2)));
+        assert_eq!(Parallelism::Sharded(4).split(4), (4, Parallelism::Serial));
+        assert_eq!(Parallelism::Sharded(8).split(1), (1, Parallelism::Sharded(8)));
+    }
+
+    #[test]
+    fn merge_by_seq_interleaves_deterministically() {
+        let a: Vec<(u64, char)> = vec![(0, 'a'), (3, 'a'), (4, 'a')];
+        let b: Vec<(u64, char)> = vec![(1, 'b'), (5, 'b')];
+        let c: Vec<(u64, char)> = vec![(2, 'c')];
+        let merged = merge_by_seq(&[&a, &b, &c]);
+        let seqs: Vec<u64> = merged.iter().map(|&(s, _)| s).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4, 5]);
+        let tags: Vec<char> = merged.iter().map(|&(_, t)| t).collect();
+        assert_eq!(tags, vec!['a', 'b', 'c', 'a', 'a', 'b']);
+        assert!(merge_by_seq::<char>(&[]).is_empty());
+        assert!(merge_by_seq::<char>(&[&[], &[]]).is_empty());
+    }
+}

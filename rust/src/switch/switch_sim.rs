@@ -27,12 +27,13 @@ use crate::protocol::{
 };
 use crate::sim::clock::{Cycles, CLOCK_HZ};
 use crate::switch::bpe::{Bpe, BpeOutcome};
-use crate::switch::config::{ConfigModule, SwitchConfig};
+use crate::switch::config::{ConfigModule, EvictionPolicy, SwitchConfig};
 use crate::switch::crossbar::Crossbar;
 use crate::switch::fpe::{Fpe, FpeOutcome};
 use crate::switch::forwarding::Forwarding;
 use crate::switch::hash_table::HashTable;
 use crate::switch::header_extract::HeaderExtract;
+use crate::switch::parallel::{merge_by_seq, run_workers, JobPair, Parallelism, WorkerGroup};
 use crate::switch::payload_analyzer::{GroupMap, PayloadAnalyzer};
 use crate::switch::scheduler::{SchedPolicy, Scheduler};
 use std::collections::BTreeMap;
@@ -202,6 +203,27 @@ impl TreeEngine {
         self.bytes_arrived * PACE_NUM / (PACE_DEN * ports)
     }
 
+    /// Packet-header arrival accounting shared by the serial and
+    /// sharded front ends — with [`Self::account_pair`], the single
+    /// source of the input-pacing rule, so the two paths cannot drift.
+    fn account_packet_header(&mut self) {
+        self.stats.packets_in += 1;
+        self.stats.bytes_in += (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64;
+        self.bytes_arrived += (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64;
+    }
+
+    /// Per-pair arrival accounting (bytes, pacing, payload analyzer);
+    /// returns the pair's `(group, arrival cycle)`.
+    fn account_pair(&mut self, p: &KvPair, header_delay: Cycles) -> (usize, Cycles) {
+        let el = p.encoded_len() as u64;
+        self.stats.bytes_in += el;
+        self.bytes_arrived += el;
+        self.stats.pairs_in += 1;
+        let arrive = self.arrival_cycle() + header_delay;
+        let g = self.analyzer.classify(p);
+        (g, arrive)
+    }
+
     /// Ingest one packet's worth of pairs.  This is the core ingest
     /// path: the packet need not be materialized — stream entry points
     /// pass MTU-sized chunks of the caller's slice directly.
@@ -212,17 +234,10 @@ impl TreeEngine {
         header_delay: Cycles,
         out: &mut IngestSink,
     ) {
-        self.stats.packets_in += 1;
-        self.stats.bytes_in += (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64;
-        self.bytes_arrived += (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64;
+        self.account_packet_header();
 
         for p in pairs {
-            let el = p.encoded_len() as u64;
-            self.stats.bytes_in += el;
-            self.bytes_arrived += el;
-            self.stats.pairs_in += 1;
-            let arrive = self.arrival_cycle() + header_delay;
-            let g = self.analyzer.classify(p);
+            let (g, arrive) = self.account_pair(p, header_delay);
             let deliver = self.crossbar.route(arrive, g);
             match self.fpes[g].offer(deliver, p.key, p.value, self.op) {
                 FpeOutcome::Kept => {}
@@ -337,6 +352,123 @@ impl TreeEngine {
         );
         self.stats.bytes_out = payload + pkts * (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64;
     }
+
+    /// Whether this chunk sequence would trigger an end-of-tree flush
+    /// anywhere but at the very last chunk.  The sharded engine defers
+    /// its single flush to the merge stage; a mid-stream flush resets
+    /// table state between pairs and must take the serial path.
+    fn flush_splits_stream(&self, chunks: &[(&[KvPair], bool)]) -> bool {
+        let mut eot_seen = self.eot_seen;
+        for (i, &(_, eot)) in chunks.iter().enumerate() {
+            if eot {
+                eot_seen += 1;
+                if eot_seen >= self.children {
+                    if i + 1 != chunks.len() {
+                        return true;
+                    }
+                    eot_seen = 0;
+                }
+            }
+        }
+        false
+    }
+
+    /// Sharded ingest of a whole chunk sequence (see `switch::parallel`
+    /// for why this is byte-identical to calling
+    /// [`Self::ingest_pairs`] per chunk).
+    fn ingest_chunks_sharded(
+        &mut self,
+        chunks: &[(&[KvPair], bool)],
+        header_delay: Cycles,
+        shards: usize,
+        out: &mut IngestSink,
+    ) {
+        let n_groups = self.fpes.len();
+        // Front end (serial): byte pacing + analyzer accounting; every
+        // pair is stamped with its global sequence number and arrival
+        // cycle and binned by group.
+        let mut jobs: Vec<Vec<JobPair>> = (0..n_groups).map(|_| Vec::new()).collect();
+        let mut seq: u64 = 0;
+        let mut eots: u32 = 0;
+        for &(pairs, eot) in chunks {
+            self.account_packet_header();
+            for p in pairs {
+                let (g, arrive) = self.account_pair(p, header_delay);
+                jobs[g].push(JobPair {
+                    seq,
+                    arrive,
+                    pair: *p,
+                });
+                seq += 1;
+            }
+            if eot {
+                eots += 1;
+            }
+        }
+        // Distribute disjoint {FPE, BPE region, crossbar output} shards
+        // round-robin across workers (spreads the skewed group weights
+        // better than contiguous ranges).
+        let op = self.op;
+        let evict_old = self
+            .bpe
+            .as_ref()
+            .map(|b| b.eviction() == EvictionPolicy::EvictOld)
+            .unwrap_or(false);
+        let mut regions: Vec<Option<&mut HashTable>> = match self.bpe.as_mut() {
+            Some(b) => b.regions_mut().iter_mut().map(Some).collect(),
+            None => (0..n_groups).map(|_| None).collect(),
+        };
+        let mut per_worker: Vec<Vec<WorkerGroup<'_>>> =
+            (0..shards).map(|_| Vec::new()).collect();
+        for ((g, fpe), job) in self.fpes.iter_mut().enumerate().zip(jobs) {
+            per_worker[g % shards].push(WorkerGroup {
+                group: g,
+                job,
+                fpe,
+                region: regions[g].take(),
+                port: self.crossbar.port_view(g),
+                op,
+                evict_old,
+            });
+        }
+        let mut outputs = run_workers(per_worker);
+        outputs.sort_by_key(|o| o.group);
+        // Merge (serial, deterministic): fold the per-output crossbar
+        // views and BPE probe counts back in, replay the shared BPE
+        // timing in global eviction order, then emit downstream pairs
+        // in the serial path's order.
+        for o in &outputs {
+            self.crossbar.absorb(o.group, o.port);
+            if let Some(b) = self.bpe.as_mut() {
+                b.absorb_probe_counts(o.bpe_aggregated, o.bpe_inserted, o.bpe_overflowed);
+            }
+        }
+        let evict_streams: Vec<&[(u64, (usize, Cycles))]> =
+            outputs.iter().map(|o| o.evicts.as_slice()).collect();
+        let merged_evicts = merge_by_seq(&evict_streams);
+        if let Some(b) = self.bpe.as_mut() {
+            for &(_, (group, ready)) in &merged_evicts {
+                let granted = self.scheduler.grant_single(group);
+                debug_assert_eq!(granted, group);
+                b.replay_timing(ready);
+            }
+        }
+        let emission_streams: Vec<&[(u64, KvPair)]> =
+            outputs.iter().map(|o| o.emissions.as_slice()).collect();
+        let merged_emissions = merge_by_seq(&emission_streams);
+        for (_, pair) in merged_emissions {
+            self.emit_pair(pair, out);
+        }
+        // End-of-tree flushes — by the `flush_splits_stream`
+        // precondition, at most one fires, and only at the stream end.
+        for _ in 0..eots {
+            self.eot_seen += 1;
+            if self.eot_seen >= self.children {
+                self.flush_into(out);
+            }
+        }
+        self.roll_stats();
+    }
 }
 
 /// The full switch.
@@ -396,6 +528,13 @@ impl SwitchAggSwitch {
         self.config_module.policy = policy;
     }
 
+    /// Select the ingest execution engine (serial reference or the
+    /// group-sharded worker pool); takes effect immediately and does
+    /// not change outputs or stats (see `switch::parallel`).
+    pub fn set_parallelism(&mut self, parallelism: Parallelism) {
+        self.cfg.parallelism = parallelism;
+    }
+
     /// Set a tree's demand weight (used by the Weighted policy).
     pub fn set_tree_weight(&mut self, tree: TreeId, weight: u64) {
         self.config_module.set_weight(tree, weight);
@@ -448,12 +587,27 @@ impl SwitchAggSwitch {
             .unwrap_or(1);
         // Merged stream: emit children EoTs by splitting at the end
         // (Theorem 2.1: merging flows preserves the reduction ratio).
-        let mut chunks = MtuChunks::new(pairs);
-        while let Some((chunk, _)) = chunks.next_chunk() {
-            self.ingest_pairs_for(tree, chunk, false, &mut sink);
-        }
-        for _ in 0..children {
-            self.ingest_pairs_for(tree, &[], true, &mut sink);
+        if matches!(self.cfg.parallelism, Parallelism::Serial) {
+            // Serial reference: stream the chunks straight through —
+            // no chunk list, no per-packet allocation.
+            let mut chunks = MtuChunks::new(pairs);
+            while let Some((chunk, _)) = chunks.next_chunk() {
+                self.ingest_pairs_for(tree, chunk, false, &mut sink);
+            }
+            for _ in 0..children {
+                self.ingest_pairs_for(tree, &[], true, &mut sink);
+            }
+        } else {
+            let empty: &[KvPair] = &[];
+            let mut chunk_seq: Vec<(&[KvPair], bool)> = Vec::new();
+            let mut chunks = MtuChunks::new(pairs);
+            while let Some((chunk, _)) = chunks.next_chunk() {
+                chunk_seq.push((chunk, false));
+            }
+            for _ in 0..children {
+                chunk_seq.push((empty, true));
+            }
+            self.ingest_chunk_seq(tree, &chunk_seq, &mut sink);
         }
         self.finalize(tree);
         let out = sink_to_vec(&sink);
@@ -474,17 +628,36 @@ impl SwitchAggSwitch {
         sink.clear();
         let mut chunkers: Vec<MtuChunks<'_>> =
             streams.iter().map(|s| MtuChunks::new(s)).collect();
-        loop {
-            let mut progressed = false;
-            for c in chunkers.iter_mut() {
-                if let Some((chunk, last)) = c.next_chunk() {
-                    progressed = true;
-                    self.ingest_pairs_for(tree, chunk, last, &mut sink);
+        if matches!(self.cfg.parallelism, Parallelism::Serial) {
+            // Serial reference: stream the interleaved chunks straight
+            // through — no chunk list, no per-packet allocation.
+            loop {
+                let mut progressed = false;
+                for c in chunkers.iter_mut() {
+                    if let Some((chunk, last)) = c.next_chunk() {
+                        progressed = true;
+                        self.ingest_pairs_for(tree, chunk, last, &mut sink);
+                    }
+                }
+                if !progressed {
+                    break;
                 }
             }
-            if !progressed {
-                break;
+        } else {
+            let mut chunk_seq: Vec<(&[KvPair], bool)> = Vec::new();
+            loop {
+                let mut progressed = false;
+                for c in chunkers.iter_mut() {
+                    if let Some((chunk, last)) = c.next_chunk() {
+                        progressed = true;
+                        chunk_seq.push((chunk, last));
+                    }
+                }
+                if !progressed {
+                    break;
+                }
             }
+            self.ingest_chunk_seq(tree, &chunk_seq, &mut sink);
         }
         self.finalize(tree);
         let out = sink_to_vec(&sink);
@@ -493,7 +666,7 @@ impl SwitchAggSwitch {
     }
 
     /// Core slice-based ingest (no packet object): one MTU chunk of one
-    /// tree's traffic.
+    /// tree's traffic, on the serial reference path.
     fn ingest_pairs_for(
         &mut self,
         tree: TreeId,
@@ -506,6 +679,34 @@ impl SwitchAggSwitch {
             .get_mut(&tree)
             .unwrap_or_else(|| panic!("tree {tree} not configured"));
         engine.ingest_pairs(pairs, eot, self.cfg.delays.header_analyzer, sink);
+    }
+
+    /// Sharded-engine ingest of a whole chunk sequence for one tree.
+    /// The sharded engine requires the (at most one) end-of-tree flush
+    /// to land on the final chunk; sequences that flush mid-stream
+    /// silently take the serial loop instead.
+    fn ingest_chunk_seq(
+        &mut self,
+        tree: TreeId,
+        chunks: &[(&[KvPair], bool)],
+        sink: &mut IngestSink,
+    ) {
+        let header_delay = self.cfg.delays.header_analyzer;
+        let parallelism = self.cfg.parallelism;
+        let engine = self
+            .trees
+            .get_mut(&tree)
+            .unwrap_or_else(|| panic!("tree {tree} not configured"));
+        match parallelism {
+            Parallelism::Sharded(n) if !engine.flush_splits_stream(chunks) => {
+                engine.ingest_chunks_sharded(chunks, header_delay, n.max(1), sink);
+            }
+            _ => {
+                for &(pairs, eot) in chunks {
+                    engine.ingest_pairs(pairs, eot, header_delay, sink);
+                }
+            }
+        }
     }
 
     /// Close output byte accounting (packetization of the out stream).
@@ -735,6 +936,50 @@ mod tests {
             r1tree > r2trees,
             "memory halving should hurt: solo={r1tree} shared={r2trees}"
         );
+    }
+
+    #[test]
+    fn sharded_ingest_matches_serial_exactly() {
+        // Same streams through the serial reference and the sharded
+        // engine: outputs and every stat must be byte-identical.
+        let streams: Vec<Vec<KvPair>> = (0..3).map(|i| pairs(4_000, 700, 11 + i)).collect();
+        let mut serial = configured_switch(16 << 10, Some(256 << 10), 3);
+        let out_serial = serial.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+        for shards in [1usize, 2, 4, 8] {
+            let mut sharded = configured_switch(16 << 10, Some(256 << 10), 3);
+            sharded.set_parallelism(crate::switch::parallel::Parallelism::Sharded(shards));
+            let out_sharded = sharded.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+            assert_eq!(out_sharded, out_serial, "{shards} shards");
+            let a = serial.stats(TreeId(1)).unwrap();
+            let b = sharded.stats(TreeId(1)).unwrap();
+            assert_eq!(
+                format!("{a:?}"),
+                format!("{b:?}"),
+                "stats diverged at {shards} shards"
+            );
+            assert_eq!(
+                serial.avg_fpe_latency(TreeId(1)),
+                sharded.avg_fpe_latency(TreeId(1))
+            );
+            assert_eq!(
+                serial.bpe_dram_stats(TreeId(1)),
+                sharded.bpe_dram_stats(TreeId(1))
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_ingest_without_bpe_matches_serial() {
+        let input = pairs(8_000, 3_000, 77);
+        let mut serial = configured_switch(8 << 10, None, 1);
+        let out_serial = serial.ingest_stream(TreeId(1), AggOp::Sum, &input);
+        let mut sharded = configured_switch(8 << 10, None, 1);
+        sharded.set_parallelism(crate::switch::parallel::Parallelism::Sharded(4));
+        let out_sharded = sharded.ingest_stream(TreeId(1), AggOp::Sum, &input);
+        assert_eq!(out_sharded, out_serial);
+        let a = serial.stats(TreeId(1)).unwrap();
+        let b = sharded.stats(TreeId(1)).unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
     }
 
     #[test]

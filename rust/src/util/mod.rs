@@ -8,6 +8,7 @@ pub mod bench;
 pub mod cli;
 pub mod fxhash;
 pub mod miniprop;
+pub mod par;
 pub mod rng;
 pub mod stats;
 pub mod zipf;

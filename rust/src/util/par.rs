@@ -1,0 +1,91 @@
+//! Scoped-thread fan-out for the parallel execution engine: run
+//! independent work items across a bounded worker pool with
+//! order-preserving results and no extra dependencies (plain
+//! `std::thread::scope`).  Experiment sweeps (scenario rows, per-
+//! subtree network sims) fan out through here behind a
+//! [`crate::switch::parallel::Parallelism`] config; `Serial` (one
+//! shard) degenerates to an ordinary in-place map, which stays the
+//! reference path.
+
+use crate::switch::parallel::Parallelism;
+
+/// Map `f` over `items` on up to `shards` worker threads, preserving
+/// input order in the results.  Items are dealt round-robin; with
+/// `shards <= 1` (or fewer than two items) everything runs inline on
+/// the caller's thread.
+pub fn par_map_shards<T, R, F>(shards: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if shards <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let workers = shards.min(n);
+    let mut queues: Vec<Vec<(usize, T)>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        queues[i % workers].push((i, item));
+    }
+    let f = &f;
+    let mut tagged: Vec<(usize, R)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = queues
+            .into_iter()
+            .map(|q| {
+                scope.spawn(move || {
+                    q.into_iter()
+                        .map(|(i, item)| (i, f(item)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("par_map worker panicked"))
+            .collect()
+    });
+    tagged.sort_by_key(|&(i, _)| i);
+    tagged.into_iter().map(|(_, r)| r).collect()
+}
+
+/// [`par_map_shards`] driven by a [`Parallelism`] config.
+pub fn par_map<T, R, F>(par: Parallelism, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    par_map_shards(par.shards(), items, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_at_any_shard_count() {
+        let items: Vec<u64> = (0..37).collect();
+        let want: Vec<u64> = items.iter().map(|x| x * x).collect();
+        for shards in [0usize, 1, 2, 3, 8, 64] {
+            let got = par_map_shards(shards, items.clone(), |x| x * x);
+            assert_eq!(got, want, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn parallelism_config_drives_shards() {
+        let got = par_map(Parallelism::Sharded(4), vec![1u32, 2, 3], |x| x + 1);
+        assert_eq!(got, vec![2, 3, 4]);
+        let got = par_map(Parallelism::Serial, vec![1u32, 2, 3], |x| x + 1);
+        assert_eq!(got, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let got: Vec<u32> = par_map_shards(8, Vec::<u32>::new(), |x| x);
+        assert!(got.is_empty());
+        let got = par_map_shards(8, vec![9u32], |x| x * 2);
+        assert_eq!(got, vec![18]);
+    }
+}

@@ -1,0 +1,238 @@
+//! Determinism contracts of the parallel execution engine:
+//!
+//! * **Shard-count invariance** — the group-sharded switch ingest at
+//!   1/2/4/8 shards produces the *byte-identical* output stream,
+//!   drained table state (the end-of-tree flush) and stats as the
+//!   serial reference, across random seeds, key widths, eviction
+//!   policies, child counts, and hierarchy on/off.
+//! * **Calendar vs heap NetSim** — the calendar-queue event core
+//!   matches the retained `BinaryHeap` implementation exactly
+//!   (delivery times, per-link stats, delivery order) on random tree
+//!   topologies.
+//! * **Partitioned vs monolithic tree sims** — the per-subtree worker
+//!   engine reproduces the monolithic run's aggregates.
+//! * **Mid-stream-flush fallback** — chunk sequences the sharded
+//!   engine cannot take still produce serial-identical results.
+
+use switchagg::net::netsim::reference::HeapNetSim;
+use switchagg::net::{run_monolithic, run_tree_partitioned, NetSim, NodeId, NodeKind, SendReq, Topology};
+use switchagg::controller::AggTree;
+use switchagg::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId};
+use switchagg::sim::Link;
+use switchagg::switch::{EvictionPolicy, Parallelism, SwitchAggSwitch, SwitchConfig};
+use switchagg::util::miniprop::prop;
+use switchagg::util::rng::Pcg32;
+
+fn random_pairs(rng: &mut Pcg32, n: usize, variety: u64) -> Vec<KvPair> {
+    (0..n)
+        .map(|_| {
+            let id = rng.gen_range_u64(variety);
+            let len = 8 + (rng.gen_range_u64(57) as usize);
+            KvPair::new(Key::from_id(id, len), rng.gen_range_u64(1000) as i64 - 500)
+        })
+        .collect()
+}
+
+fn switch(fpe: u64, bpe: Option<u64>, eviction: EvictionPolicy, children: u16, par: Parallelism) -> SwitchAggSwitch {
+    let cfg = SwitchConfig {
+        eviction,
+        parallelism: par,
+        ..SwitchConfig::scaled(fpe, bpe)
+    };
+    let mut sw = SwitchAggSwitch::new(cfg);
+    sw.configure(&[TreeConfig {
+        tree: TreeId(1),
+        children,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    sw
+}
+
+fn stats_tuple(sw: &SwitchAggSwitch) -> String {
+    format!("{:?}", sw.stats(TreeId(1)).unwrap())
+}
+
+#[test]
+fn prop_sharded_ingest_is_shard_count_invariant() {
+    // ISSUE 2 determinism satellite: identical drained table state and
+    // eviction stream to serial ingest across seeds, key widths, and
+    // eviction policies, at 1/2/4/8 shards.
+    prop("sharded ingest == serial ingest", 12, |rng| {
+        let fpe = 4096u64 << rng.gen_range_usize(4); // 4K..32K
+        let bpe = if rng.gen_bool(0.7) {
+            Some(1u64 << (16 + rng.gen_range_usize(5)))
+        } else {
+            None
+        };
+        let eviction = if rng.gen_bool(0.5) {
+            EvictionPolicy::EvictOld
+        } else {
+            EvictionPolicy::ForwardNew
+        };
+        let children = 1 + rng.gen_range_u64(3) as u16;
+        let variety = 1 << (6 + rng.gen_range_usize(8));
+        let streams: Vec<Vec<KvPair>> = (0..children as usize)
+            .map(|_| {
+                let n = 500 + rng.gen_range_usize(3_000);
+                random_pairs(rng, n, variety)
+            })
+            .collect();
+
+        let mut serial = switch(fpe, bpe, eviction, children, Parallelism::Serial);
+        let out_serial = serial.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+        let serial_stats = stats_tuple(&serial);
+
+        for shards in [1usize, 2, 4, 8] {
+            let mut sharded =
+                switch(fpe, bpe, eviction, children, Parallelism::Sharded(shards));
+            let out_sharded = sharded.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+            if out_sharded != out_serial {
+                return Err(format!(
+                    "output diverged at {shards} shards (fpe={fpe} bpe={bpe:?} \
+                     eviction={eviction:?} children={children}): {} vs {} pairs",
+                    out_sharded.len(),
+                    out_serial.len()
+                ));
+            }
+            let sharded_stats = stats_tuple(&sharded);
+            if sharded_stats != serial_stats {
+                return Err(format!(
+                    "stats diverged at {shards} shards:\n  sharded {sharded_stats}\n  \
+                     serial  {serial_stats}"
+                ));
+            }
+            if serial.bpe_dram_stats(TreeId(1)) != sharded.bpe_dram_stats(TreeId(1)) {
+                return Err(format!("DRAM stats diverged at {shards} shards"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_fallback_on_mid_stream_flush_matches_serial() {
+    // children=1 with 3 streams: the first stream's EoT flushes
+    // mid-sequence, so the sharded engine must fall back — and still
+    // match the serial reference exactly.
+    let mut rng = Pcg32::new(0xFA11BACC);
+    let streams: Vec<Vec<KvPair>> = (0..3).map(|_| random_pairs(&mut rng, 1500, 300)).collect();
+    let mut serial = switch(8 << 10, Some(128 << 10), EvictionPolicy::EvictOld, 1, Parallelism::Serial);
+    let out_serial = serial.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+    let mut sharded = switch(8 << 10, Some(128 << 10), EvictionPolicy::EvictOld, 1, Parallelism::Sharded(4));
+    let out_sharded = sharded.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+    assert_eq!(out_sharded, out_serial);
+    assert_eq!(stats_tuple(&sharded), stats_tuple(&serial));
+}
+
+/// Random tree topology: switches in a random-arity tree, hosts hung
+/// off random switches.  Tree ⇒ unique shortest paths ⇒ the
+/// partitioned runner is exactly comparable to the monolithic sim.
+fn random_tree_topo(rng: &mut Pcg32) -> (Topology, Vec<NodeId>, Vec<NodeId>) {
+    let mut topo = Topology::new(Link::ten_gbe());
+    let n_switches = 1 + rng.gen_range_usize(6);
+    let mut switches = vec![topo.add_node(NodeKind::Switch)];
+    for _ in 1..n_switches {
+        let parent = switches[rng.gen_range_usize(switches.len())];
+        let sw = topo.add_node(NodeKind::Switch);
+        topo.connect(parent, sw);
+        switches.push(sw);
+    }
+    let n_hosts = 2 + rng.gen_range_usize(10);
+    let hosts: Vec<NodeId> = (0..n_hosts)
+        .map(|_| {
+            let sw = switches[rng.gen_range_usize(switches.len())];
+            let h = topo.add_node(NodeKind::Host);
+            topo.connect(sw, h);
+            h
+        })
+        .collect();
+    (topo, switches, hosts)
+}
+
+#[test]
+fn prop_calendar_netsim_matches_heap_reference() {
+    // ISSUE 2 differential satellite: pin the calendar-queue NetSim's
+    // delivery times and LinkStats to the BinaryHeap implementation on
+    // random topologies.
+    prop("calendar NetSim == heap NetSim", 30, |rng| {
+        let (mut topo, switches, hosts) = random_tree_topo(rng);
+        // Sprinkle redundant switch-switch links so some cases have
+        // equal-cost multipaths: the engines must still agree packet
+        // for packet (routing is a pure function of (node, dst) in
+        // both, cached vs recomputed).
+        for _ in 0..rng.gen_range_usize(3) {
+            let a = switches[rng.gen_range_usize(switches.len())];
+            let b = switches[rng.gen_range_usize(switches.len())];
+            if a != b {
+                topo.connect(a, b);
+            }
+        }
+        let mut cal = NetSim::new(topo.clone());
+        let mut heap = HeapNetSim::new(topo);
+        let sends = 50 + rng.gen_range_usize(400);
+        for _ in 0..sends {
+            let src = hosts[rng.gen_range_usize(hosts.len())];
+            let dst = hosts[rng.gen_range_usize(hosts.len())];
+            let t = rng.gen_range_u64(1_000) as f64 * 1e-6;
+            let bytes = 1 + rng.gen_range_u64(100_000);
+            cal.send(t, src, dst, bytes);
+            heap.send(t, src, dst, bytes);
+        }
+        let (t_cal, t_heap) = (cal.run(), heap.run());
+        if t_cal != t_heap {
+            return Err(format!("makespan {t_cal} != {t_heap}"));
+        }
+        if cal.delivered() != heap.delivered() {
+            return Err("delivery streams diverged".into());
+        }
+        if cal.link_stats() != heap.link_stats() {
+            return Err("link stats diverged".into());
+        }
+        if cal.events_processed() != heap.events_processed() {
+            return Err("event counts diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitioned_tree_sim_matches_monolithic() {
+    prop("partitioned tree sim == monolithic", 15, |rng| {
+        let (topo, _switches, hosts) = random_tree_topo(rng);
+        if hosts.len() < 3 {
+            return Ok(());
+        }
+        let reducer = hosts[hosts.len() - 1];
+        let mappers: Vec<NodeId> = hosts[..hosts.len() - 1].to_vec();
+        let Ok(tree) = AggTree::build(&topo, TreeId(1), AggOp::Sum, &mappers, reducer) else {
+            return Ok(()); // degenerate placement (e.g. reducer-only switch)
+        };
+        // Uniform packet size within a case (random across cases):
+        // exact-time ties between equal-size packets are order-robust
+        // down to the float ulp, so the aggregate comparison is exact.
+        let bytes = 200 + rng.gen_range_u64(1300);
+        let mut sends = Vec::new();
+        for (i, &m) in mappers.iter().enumerate() {
+            let n = 5 + rng.gen_range_usize(60);
+            for k in 0..n {
+                sends.push(SendReq {
+                    t: k as f64 * 2e-6 + i as f64 * 1e-8,
+                    src: m,
+                    bytes,
+                });
+            }
+        }
+        let mono = run_monolithic(&topo, reducer, &sends);
+        for par in [Parallelism::Serial, Parallelism::Sharded(4)] {
+            let part = run_tree_partitioned(&topo, &tree, &sends, par);
+            if part != mono {
+                return Err(format!(
+                    "partitioned ({par:?}) diverged: makespan {} vs {}, max link {} vs {}",
+                    part.makespan_s, mono.makespan_s, part.max_link_bytes, mono.max_link_bytes
+                ));
+            }
+        }
+        Ok(())
+    });
+}
