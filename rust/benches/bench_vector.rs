@@ -1,0 +1,183 @@
+//! Vector-value (W-lane) hot-path benchmarks (EXPERIMENTS.md
+//! §Vector values & allreduce): lane-wise combine throughput across
+//! widths, W-lane table ingest against its scalar-emulation
+//! equivalent, the W = 1 scalar-regression guard, and the whole-switch
+//! vector ingest on the 12 MB allreduce workload.  Results are also
+//! written as a machine-readable log (`BENCH_vector.json`, override
+//! with `SWITCHAGG_BENCH_VECTOR_JSON`) so the perf trajectory is
+//! comparable across PRs.
+//!
+//! Acceptance gauge (ISSUE 3): the `W=64 ingest` case's lane-ops/s
+//! should be ≥ 4× the `64 scalar offers` case's on the same run, and
+//! the scalar guard case should sit within noise of
+//! `BENCH_hotpath.json`'s `offer_batch` entry.
+
+use switchagg::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId, Value, VectorBatch};
+use switchagg::switch::hash_table::{HashTable, VectorEvictSink};
+use switchagg::switch::{SwitchAggSwitch, SwitchConfig, VectorSink};
+use switchagg::util::bench::{self, JsonLog};
+use switchagg::util::rng::Pcg32;
+use switchagg::workload::allreduce::AllreduceSpec;
+
+fn main() {
+    let mut log = JsonLog::new();
+
+    bench::section("lane-wise combine (AggOp::combine_slice)");
+    const TOTAL_LANES: usize = 1 << 20;
+    for &w in &[1usize, 8, 64, 256] {
+        let rows = TOTAL_LANES / w;
+        let mut acc: Vec<Value> = vec![1; rows * w];
+        let src: Vec<Value> = vec![3; rows * w];
+        log.push(&bench::run(
+            &format!("combine_slice W={w} (1M lanes)"),
+            3,
+            20,
+            || {
+                for (a, b) in acc.chunks_exact_mut(w).zip(src.chunks_exact(w)) {
+                    AggOp::Sum.combine_slice(a, b);
+                }
+                std::hint::black_box(acc[0]);
+                (rows * w) as u64
+            },
+        ));
+    }
+
+    bench::section("W-lane table ingest vs scalar-emulation equivalent");
+    const W: usize = 64;
+    const ROWS: usize = 20_000;
+    const VARIETY: u64 = 5_000;
+    let mut rng = Pcg32::new(7);
+    let mut batch = VectorBatch::with_capacity(W, ROWS);
+    let mut lanes: Vec<Value> = vec![0; W];
+    let mut ids: Vec<u64> = Vec::with_capacity(ROWS);
+    for _ in 0..ROWS {
+        let id = rng.gen_range_u64(VARIETY);
+        ids.push(id);
+        for (l, v) in lanes.iter_mut().enumerate() {
+            *v = (id % 7) as i64 + l as i64;
+        }
+        batch.push(Key::from_id(id, 16), &lanes);
+    }
+    // The same logical work as 64 scalar pairs per row: key ⊕ lane id.
+    let scalar_emulation: Vec<KvPair> = ids
+        .iter()
+        .flat_map(|&id| {
+            (0..W as u64).map(move |l| {
+                KvPair::new(Key::from_id(id * W as u64 + l, 16), (id % 7) as i64 + l as i64)
+            })
+        })
+        .collect();
+    // Both tables sized for the same slot count (the wide table's
+    // slots are W lanes wide, the scalar one holds W× as many).
+    let mut sink = VectorEvictSink::new();
+    log.push(&bench::run("offer_lanes_batch W=64, 20k rows (lane-ops)", 2, 10, || {
+        let mut t =
+            HashTable::with_memory_lanes((8 * 1024 * (16 + W * 4)) as u64, 16, 2, W);
+        sink.clear();
+        t.offer_lanes_batch(&batch, AggOp::Sum, true, &mut sink);
+        std::hint::black_box(sink.len());
+        (batch.len() * W) as u64
+    }));
+    let mut evicted: Vec<(Key, Value, u32)> = Vec::new();
+    log.push(&bench::run("64 scalar offers per row, 20k rows (lane-ops)", 2, 10, || {
+        let mut t = HashTable::with_memory((8 * 1024 * W * 20) as u64, 16, 2);
+        evicted.clear();
+        t.offer_batch(&scalar_emulation, AggOp::Sum, true, &mut evicted);
+        std::hint::black_box(evicted.len());
+        scalar_emulation.len() as u64
+    }));
+
+    bench::section("scalar regression guard (same shape as bench_hotpath)");
+    let mut rng = Pcg32::new(7);
+    let probes: Vec<KvPair> = (0..100_000)
+        .map(|_| KvPair::new(Key::from_id(rng.gen_range_u64(50_000), 16), 1))
+        .collect();
+    log.push(&bench::run(
+        "offer_batch() 100k pairs, 64k-pair table (scalar guard)",
+        2,
+        10,
+        || {
+            let mut t = HashTable::with_memory(64 * 1024 * 20, 16, 2);
+            let mut evicted: Vec<(Key, Value, u32)> = Vec::new();
+            for chunk in probes.chunks(32) {
+                evicted.clear();
+                t.offer_batch(chunk, AggOp::Sum, true, &mut evicted);
+                std::hint::black_box(evicted.len());
+            }
+            probes.len() as u64
+        },
+    ));
+    let w1: VectorBatch = VectorBatch::from_pairs(&probes);
+    log.push(&bench::run(
+        "offer_lanes_batch W=1, 100k pairs (degenerate-case guard)",
+        2,
+        10,
+        || {
+            let mut t = HashTable::with_memory(64 * 1024 * 20, 16, 2);
+            sink.clear();
+            t.offer_lanes_batch(&w1, AggOp::Sum, true, &mut sink);
+            std::hint::black_box(sink.len());
+            w1.len() as u64
+        },
+    ));
+
+    bench::section("whole-switch vector ingest (12MB allreduce, W=64)");
+    // 3 workers x ~4 MB of 64-lane gradient chunks ≈ the 12 MB scalar
+    // ingest case in bench_hotpath, but vector-valued.
+    let per_worker_rows = (4 << 20) / (2 + 8 + 64 * 4);
+    let spec = AllreduceSpec::dense(per_worker_rows * 64, 64, 3, 0xBEEF);
+    let streams = spec.all_workers();
+    let total_pairs: u64 = streams.iter().map(|s| s.len() as u64).sum();
+    log.push(&bench::run("switch vector ingest 12MB allreduce W=64", 1, 5, {
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(32 << 10, Some(32 << 20)));
+        let tree = TreeId(1);
+        sw.configure_vector(
+            &[TreeConfig {
+                tree,
+                children: 3,
+                parent_port: 0,
+                op: AggOp::Sum,
+            }],
+            64,
+        );
+        let mut sink = VectorSink::new(64);
+        move || {
+            sink.clear();
+            sw.ingest_vector_child_streams_into(tree, &streams, &mut sink);
+            std::hint::black_box(sink.forwarded.len() + sink.flushed.len());
+            total_pairs
+        }
+    }));
+    log.push(&bench::run(
+        "switch vector ingest 12MB allreduce W=64 (lane-ops)",
+        1,
+        5,
+        {
+            let streams = spec.all_workers();
+            let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(32 << 10, Some(32 << 20)));
+            let tree = TreeId(2);
+            sw.configure_vector(
+                &[TreeConfig {
+                    tree,
+                    children: 3,
+                    parent_port: 0,
+                    op: AggOp::Sum,
+                }],
+                64,
+            );
+            let mut sink = VectorSink::new(64);
+            move || {
+                sink.clear();
+                sw.ingest_vector_child_streams_into(tree, &streams, &mut sink);
+                std::hint::black_box(sink.forwarded.len() + sink.flushed.len());
+                total_pairs * 64
+            }
+        },
+    ));
+
+    let path = std::env::var("SWITCHAGG_BENCH_VECTOR_JSON")
+        .unwrap_or_else(|_| "BENCH_vector.json".to_string());
+    if let Err(e) = log.write(&path) {
+        eprintln!("could not write bench log {path}: {e}");
+    }
+}

@@ -16,7 +16,8 @@
 //!   "Inflexibility"); this model, charitably, pads the slot to the
 //!   workload's maximum key length instead.
 
-use crate::protocol::{AggOp, Key, KvPair, Value, HEADER_OVERHEAD};
+use crate::protocol::vector::{encoded_vec_len, lane_value_width};
+use crate::protocol::{AggOp, Key, KvPair, Value, VectorBatch, HEADER_OVERHEAD};
 use crate::util::fxhash::FxHashMap;
 
 #[derive(Clone, Debug)]
@@ -58,6 +59,20 @@ impl DaietConfig {
             slot_key: max_key_len,
             ..Self::default()
         }
+    }
+
+    /// Bytes of one W-lane slot: the fixed key slot plus `lanes` value
+    /// slots (the RMT header format pads every lane).
+    pub fn vector_slot_bytes(&self, lanes: usize) -> usize {
+        self.slot_key + lanes * self.slot_val
+    }
+
+    /// W-lane slots per packet; 0 when a single slot no longer fits
+    /// the ~200 B RMT packet — the pair is unrepresentable without
+    /// recompiling for a bigger pipeline (§2.2.1), the lane-width
+    /// analogue of the long-key limitation.
+    pub fn vector_slots_per_packet(&self, lanes: usize) -> usize {
+        self.max_packet / self.vector_slot_bytes(lanes)
     }
 }
 
@@ -198,6 +213,90 @@ impl DaietSwitch {
                 .sum::<u64>();
         self.stats.pairs_out += produced.len() as u64;
     }
+
+    /// Run a W-lane vector stream through the baseline; the RMT header
+    /// format pads every lane to its fixed slot, so wide pairs inflate
+    /// Eq. 1 traffic W-fold and stop fitting the ~200 B packet at all
+    /// beyond `max_packet / slot` lanes — pass-through (reduction
+    /// collapses), the lane analogue of the long-key inflexibility.
+    pub fn run_vector(&mut self, batch: &VectorBatch, op: AggOp) -> VectorBatch {
+        let mut out = VectorBatch::new(batch.lanes());
+        self.run_vector_into(batch, op, &mut out);
+        out
+    }
+
+    /// [`Self::run_vector`] appending into a caller-owned buffer.
+    pub fn run_vector_into(&mut self, batch: &VectorBatch, op: AggOp, out: &mut VectorBatch) {
+        assert_eq!(out.lanes(), batch.lanes());
+        let w = batch.lanes();
+        let slot = self.cfg.vector_slot_bytes(w) as u64;
+        let spp = self.cfg.vector_slots_per_packet(w);
+        let slot_key = self.cfg.slot_key;
+        let representable_pair = move |key: &Key| key.len() <= slot_key && spp >= 1;
+        let start = out.len();
+        // Match-action reduction (the table drains every run, so a
+        // per-run lane table models the same 16 K-entry budget).
+        let mut table: FxHashMap<Key, Vec<Value>> = FxHashMap::default();
+        let mut representable = 0u64;
+        let mut unrep_bytes = 0u64;
+        for (key, lanes) in batch.iter() {
+            self.stats.pairs_in += 1;
+            self.stats.useful_bytes_in += (key.len() + w * lane_value_width(lanes)) as u64;
+            if !representable_pair(key) {
+                self.stats.unrepresentable += 1;
+                unrep_bytes += encoded_vec_len(key.len(), w, lane_value_width(lanes)) as u64;
+                out.push(*key, lanes);
+                continue;
+            }
+            representable += 1;
+            if let Some(acc) = table.get_mut(key) {
+                op.combine_slice(acc, lanes);
+                self.stats.aggregated += 1;
+            } else if table.len() < self.cfg.table_entries {
+                table.insert(*key, lanes.to_vec());
+                self.stats.inserted += 1;
+            } else {
+                self.stats.passed_through += 1;
+                out.push(*key, lanes);
+            }
+        }
+        let packets_in = if spp > 0 {
+            representable.div_ceil(spp as u64)
+        } else {
+            0
+        };
+        self.stats.packets_in += packets_in;
+        self.stats.bytes_in +=
+            representable * slot + packets_in * HEADER_OVERHEAD as u64 + unrep_bytes;
+
+        // Flush residents, sorted for a deterministic output stream.
+        let mut flushed: Vec<(Key, Vec<Value>)> = table.into_iter().collect();
+        flushed.sort_by(|a, b| a.0.as_bytes().cmp(b.0.as_bytes()));
+        for (k, lanes) in &flushed {
+            out.push(*k, lanes);
+        }
+
+        // Output wire bytes, same format.
+        let mut out_representable = 0u64;
+        let mut out_bytes = 0u64;
+        for i in start..out.len() {
+            let k = out.key(i);
+            if representable_pair(&k) {
+                out_representable += 1;
+            } else {
+                out_bytes +=
+                    encoded_vec_len(k.len(), w, lane_value_width(out.lane_slice(i))) as u64;
+            }
+        }
+        let out_packets = if spp > 0 {
+            out_representable.div_ceil(spp as u64)
+        } else {
+            0
+        };
+        out_bytes += out_representable * slot + out_packets * HEADER_OVERHEAD as u64;
+        self.stats.bytes_out += out_bytes;
+        self.stats.pairs_out += (out.len() - start) as u64;
+    }
 }
 
 #[cfg(test)]
@@ -261,6 +360,48 @@ mod tests {
         let out2 = sw2.run(&input, AggOp::Sum);
         assert_eq!(out2.len(), 50);
         assert!(sw2.stats.extra_traffic_ratio() > 1.5);
+    }
+
+    fn vector_stream(n: usize, variety: u64, lanes: usize, seed: u64) -> VectorBatch {
+        let mut rng = Pcg32::new(seed);
+        let mut b = VectorBatch::new(lanes);
+        let mut vals: Vec<Value> = vec![0; lanes];
+        for _ in 0..n {
+            let id = rng.gen_range_u64(variety);
+            for (l, v) in vals.iter_mut().enumerate() {
+                *v = (id % 5) as i64 + l as i64;
+            }
+            b.push(Key::from_id(id, 8), &vals);
+        }
+        b
+    }
+
+    #[test]
+    fn vector_aggregation_conserves_lane_sums() {
+        let mut sw = DaietSwitch::new(DaietConfig::default());
+        let input = vector_stream(5_000, 60, 8, 7);
+        let out = sw.run_vector(&input, AggOp::Sum);
+        assert_eq!(out.len(), 60);
+        let sum_lane0 = |b: &VectorBatch| -> i64 { (0..b.len()).map(|i| b.lane_slice(i)[0]).sum() };
+        assert_eq!(sum_lane0(&out), sum_lane0(&input));
+        assert!(sw.stats.reduction_ratio() > 0.9);
+        // Every lane is padded to a slot: Eq. 1 traffic stays >= 1.
+        assert!(sw.stats.extra_traffic_ratio() > 1.0);
+    }
+
+    #[test]
+    fn wide_lanes_overflow_the_rmt_packet() {
+        // 64 lanes x 4 B + 16 B key slot = 272 B > 200 B: nothing fits,
+        // the baseline degrades to pass-through (reduction ~ 0) while
+        // a recompiled "big pipeline" would pay heavy padding.
+        let cfg = DaietConfig::default();
+        assert_eq!(cfg.vector_slots_per_packet(64), 0);
+        let mut sw = DaietSwitch::new(cfg);
+        let input = vector_stream(2_000, 50, 64, 9);
+        let out = sw.run_vector(&input, AggOp::Sum);
+        assert_eq!(sw.stats.unrepresentable, 2_000);
+        assert_eq!(out.len(), 2_000, "nothing aggregated");
+        assert!(sw.stats.reduction_ratio().abs() < 1e-9);
     }
 
     #[test]

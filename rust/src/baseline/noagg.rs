@@ -2,7 +2,7 @@
 //! traffic reaches the reducer, which aggregates in software — the
 //! "without SwitchAgg" arm of Figs. 10–11.
 
-use crate::protocol::{AggregationPacket, KvPair};
+use crate::protocol::{AggregationPacket, KvPair, VectorBatch};
 
 #[derive(Clone, Debug, Default)]
 pub struct NoAggStats {
@@ -37,6 +37,15 @@ impl NoAggSwitch {
         stream.to_vec()
     }
 
+    /// Forward a whole W-lane vector stream; output equals input, and
+    /// the byte counter sees the full lane payload — the denominator
+    /// of every vector reduction-ratio comparison.
+    pub fn run_vector(&mut self, batch: &VectorBatch) -> VectorBatch {
+        self.stats.pairs += batch.len() as u64;
+        self.stats.bytes += batch.payload_encoded_len() as u64;
+        batch.clone()
+    }
+
     pub fn reduction_ratio(&self) -> f64 {
         0.0
     }
@@ -57,6 +66,21 @@ mod tests {
         assert_eq!(out, stream);
         assert_eq!(sw.stats.pairs, 100);
         assert_eq!(sw.reduction_ratio(), 0.0);
+    }
+
+    #[test]
+    fn vector_forwarding_is_identity_with_full_lane_bytes() {
+        let mut sw = NoAggSwitch::new();
+        let mut b = VectorBatch::new(4);
+        for i in 0..10u64 {
+            b.push(Key::from_id(i, 16), &[1, 2, 3, i as i64]);
+        }
+        let out = sw.run_vector(&b);
+        assert_eq!(out, b);
+        assert_eq!(sw.stats.pairs, 10);
+        assert_eq!(sw.stats.bytes, b.payload_encoded_len() as u64);
+        // 4 lanes of small ints: 2 + 16 + 16 bytes per pair.
+        assert_eq!(sw.stats.bytes, 10 * 34);
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod fig11;
 pub mod fig2;
 pub mod fig9;
 pub mod sec7;
+pub mod sec_allreduce;
 pub mod table2;
 pub mod table3;
 

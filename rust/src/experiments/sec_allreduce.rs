@@ -1,0 +1,291 @@
+//! Allreduce harness: the W-lane vector data plane on dense gradient
+//! reductions and sparse embedding pushes.
+//!
+//! Two sweeps, printed as tables (`switchagg exp allreduce`):
+//!
+//! 1. **Dense** — reduction ratio and simulated JCT speedup vs worker
+//!    fan-in and lane width.  With `k` workers each chunk key arrives
+//!    `k` times and leaves once, so the ideal reduction approaches
+//!    `1 − 1/k` at every lane width; the DAIET column shows the RMT
+//!    baseline collapsing once a W-lane slot no longer fits its
+//!    ~200 B packet.
+//! 2. **Sparse embedding** — Zipf-skewed row pushes: reduction tracks
+//!    how many duplicate hot rows the fan-in produces.
+//!
+//! Independent rows fan over the [`Parallelism`] worker pool
+//! (`SWITCHAGG_PARALLEL`); each row's switch ingest itself runs the
+//! serial reference engine, so rows are identical either way.
+
+use crate::baseline::{DaietConfig, DaietSwitch};
+use crate::experiments::common::{parallelism, pct, print_table, Parallelism, Scale};
+use crate::metrics::jct::JctModel;
+use crate::protocol::{AggOp, TreeConfig, TreeId, VectorBatch};
+use crate::switch::{SwitchAggSwitch, SwitchConfig};
+use crate::util::par::par_map;
+use crate::workload::allreduce::AllreduceSpec;
+
+/// One dense-sweep row.
+#[derive(Clone, Debug)]
+pub struct DenseRow {
+    pub workers: usize,
+    pub lanes: usize,
+    pub chunks: usize,
+    pub reduction: f64,
+    /// JCT(no aggregation) / JCT(SwitchAgg) under the fluid model.
+    pub jct_speedup: f64,
+    /// The RMT baseline's reduction ratio on the same stream.
+    pub daiet_reduction: f64,
+}
+
+/// One sparse-embedding row.
+#[derive(Clone, Debug)]
+pub struct SparseRow {
+    pub rows_per_worker: usize,
+    pub skew: f64,
+    pub distinct_fraction: f64,
+    pub reduction: f64,
+}
+
+fn switch_for(workers: usize, lanes: usize, scale: Scale) -> SwitchAggSwitch {
+    // Chunk keys are 8 B, so the whole reduction lands on key-length
+    // group 0 — provision the paper's full 8 GB back-end (scaled) so
+    // that one region holds the tensor's chunk variety.
+    let cfg = SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(8 << 30)));
+    let mut sw = SwitchAggSwitch::new(cfg);
+    sw.configure_vector(
+        &[TreeConfig {
+            tree: TreeId(1),
+            children: workers as u16,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }],
+        lanes,
+    );
+    sw
+}
+
+/// Run one allreduce spec's (pre-generated) worker streams through
+/// the vector switch; returns `(reduction ratio, jct speedup)`.
+fn run_switch(spec: &AllreduceSpec, streams: &[VectorBatch], scale: Scale) -> (f64, f64) {
+    let mut sw = switch_for(spec.workers, spec.chunk_lanes, scale);
+    let out = sw.ingest_vector_child_streams(TreeId(1), streams);
+    let s = sw.stats(TreeId(1)).unwrap();
+    let jm = JctModel {
+        n_mappers: spec.workers,
+        ..JctModel::default()
+    };
+    let (with, without) = jm.compare(
+        s.bytes_in,
+        s.pairs_in,
+        s.bytes_out,
+        out.len() as u64,
+        s.flush_cycles,
+    );
+    (s.reduction_ratio(), without.total_s / with.total_s)
+}
+
+/// Dense sweep: workers × lane widths at `scale`.
+pub fn dense_rows(scale: Scale) -> Vec<DenseRow> {
+    dense_rows_with(scale, parallelism())
+}
+
+pub fn dense_rows_with(scale: Scale, par: Parallelism) -> Vec<DenseRow> {
+    // Paper-order tensor: 100 MB of fp32 gradients per worker.
+    let tensor_elems = (scale.bytes(100 << 20) / 4).max(4096) as usize;
+    let mut cases: Vec<(usize, usize)> = Vec::new();
+    for &workers in &[2usize, 4, 8] {
+        for &lanes in &[1usize, 8, 64] {
+            cases.push((workers, lanes));
+        }
+    }
+    par_map(par, cases, move |(workers, lanes)| {
+        let spec = AllreduceSpec::dense(tensor_elems, lanes, workers, 0xA11D);
+        // Generate each worker's gradient stream once; the switch run
+        // and the DAIET baseline both consume the same batches.
+        let streams = spec.all_workers();
+        let (reduction, jct_speedup) = run_switch(&spec, &streams, scale);
+        // DAIET sees the merged fan-in as one stream.
+        let mut merged = VectorBatch::with_capacity(lanes, spec.n_chunks() * workers);
+        for s in &streams {
+            merged.extend_from_batch(s);
+        }
+        let mut daiet = DaietSwitch::new(DaietConfig::default());
+        daiet.run_vector(&merged, AggOp::Sum);
+        DenseRow {
+            workers,
+            lanes,
+            chunks: spec.n_chunks(),
+            reduction,
+            jct_speedup,
+            daiet_reduction: daiet.stats.reduction_ratio(),
+        }
+    })
+}
+
+/// Sparse-embedding sweep at fixed fan-in (4 workers, 16 lanes).
+pub fn sparse_rows(scale: Scale) -> Vec<SparseRow> {
+    sparse_rows_with(scale, parallelism())
+}
+
+pub fn sparse_rows_with(scale: Scale, par: Parallelism) -> Vec<SparseRow> {
+    let tensor_elems = (scale.bytes(256 << 20) / 4).max(16_384) as usize;
+    let cases: Vec<(usize, f64)> = vec![
+        (tensor_elems / 256, 0.99),
+        (tensor_elems / 64, 0.99),
+        (tensor_elems / 64, 1.2),
+    ];
+    par_map(par, cases, move |(rows, skew)| {
+        let spec = AllreduceSpec::sparse_embedding(tensor_elems, 16, 4, rows, skew, 0x5EED);
+        let streams = spec.all_workers();
+        let distinct = {
+            let mut seen = std::collections::HashSet::new();
+            for s in &streams {
+                for (k, _) in s.iter() {
+                    seen.insert(*k);
+                }
+            }
+            seen.len()
+        };
+        let total: usize = streams.iter().map(VectorBatch::len).sum();
+        let (reduction, _) = run_switch(&spec, &streams, scale);
+        SparseRow {
+            rows_per_worker: rows,
+            skew,
+            distinct_fraction: distinct as f64 / total as f64,
+            reduction,
+        }
+    })
+}
+
+pub fn run(scale: Scale) {
+    let rows = dense_rows(scale);
+    print_table(
+        "Allreduce (dense gradients) — reduction & JCT vs fan-in and lane width",
+        &[
+            "workers",
+            "lanes (W)",
+            "chunks",
+            "reduction",
+            "JCT speedup",
+            "DAIET reduction",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.workers.to_string(),
+                    r.lanes.to_string(),
+                    r.chunks.to_string(),
+                    pct(r.reduction),
+                    format!("{:.2}x", r.jct_speedup),
+                    pct(r.daiet_reduction),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    let rows = sparse_rows(scale);
+    print_table(
+        "Allreduce (sparse embedding pushes) — 4 workers, 16 lanes",
+        &["rows/worker", "skew", "distinct fraction", "reduction"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.rows_per_worker.to_string(),
+                    format!("{:.2}", r.skew),
+                    format!("{:.3}", r.distinct_fraction),
+                    pct(r.reduction),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_reduction_approaches_one_minus_one_over_k() {
+        let rows = dense_rows_with(Scale::new(8192), Parallelism::Serial);
+        for r in &rows {
+            let ideal = 1.0 - 1.0 / r.workers as f64;
+            assert!(
+                (r.reduction - ideal).abs() < 0.12,
+                "workers={} lanes={} reduction={} ideal={}",
+                r.workers,
+                r.lanes,
+                r.reduction,
+                ideal
+            );
+        }
+        // More workers, more duplicate chunks, more reduction.
+        let red = |w: usize, l: usize| {
+            rows.iter()
+                .find(|r| r.workers == w && r.lanes == l)
+                .unwrap()
+                .reduction
+        };
+        assert!(red(8, 8) > red(4, 8));
+        assert!(red(4, 8) > red(2, 8));
+    }
+
+    #[test]
+    fn dense_rows_are_lane_width_robust_and_beat_daiet() {
+        let rows = dense_rows_with(Scale::new(8192), Parallelism::Serial);
+        let red = |w: usize, l: usize| {
+            rows.iter()
+                .find(|r| r.workers == w && r.lanes == l)
+                .unwrap()
+                .reduction
+        };
+        // The switch reduces duplicates at every lane width.
+        for &l in &[1usize, 8, 64] {
+            assert!(red(4, l) > 0.5, "lanes={l}: {}", red(4, l));
+        }
+        // DAIET cannot represent a 64-lane slot in a ~200 B packet.
+        let wide = rows.iter().find(|r| r.workers == 4 && r.lanes == 64).unwrap();
+        assert!(wide.daiet_reduction < 0.05, "{}", wide.daiet_reduction);
+        assert!(wide.reduction > wide.daiet_reduction + 0.5);
+    }
+
+    #[test]
+    fn dense_jct_speedup_grows_with_fan_in() {
+        let rows = dense_rows_with(Scale::new(2048), Parallelism::Serial);
+        let speedup = |w: usize| {
+            rows.iter()
+                .find(|r| r.workers == w && r.lanes == 8)
+                .unwrap()
+                .jct_speedup
+        };
+        assert!(speedup(2) > 1.0);
+        assert!(speedup(8) > speedup(2));
+    }
+
+    #[test]
+    fn sparse_rows_reduce_more_when_more_skewed() {
+        let rows = sparse_rows_with(Scale::new(8192), Parallelism::Serial);
+        assert_eq!(rows.len(), 3);
+        // Fewer distinct rows => more duplicates => more reduction.
+        let less_skewed = &rows[1]; // skew 0.99
+        let more_skewed = &rows[2]; // skew 1.2, same rows/worker
+        assert!(more_skewed.distinct_fraction < less_skewed.distinct_fraction);
+        assert!(more_skewed.reduction > less_skewed.reduction - 0.02);
+        for r in &rows {
+            assert!(r.reduction > 0.0, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn rows_are_parallelism_invariant() {
+        let scale = Scale::new(16_384);
+        let serial = dense_rows_with(scale, Parallelism::Serial);
+        let sharded = dense_rows_with(scale, Parallelism::Sharded(4));
+        for (a, b) in serial.iter().zip(&sharded) {
+            assert_eq!((a.workers, a.lanes), (b.workers, b.lanes));
+            assert_eq!(a.reduction, b.reduction);
+            assert_eq!(a.jct_speedup, b.jct_speedup);
+            assert_eq!(a.daiet_reduction, b.daiet_reduction);
+        }
+    }
+}

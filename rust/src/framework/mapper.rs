@@ -1,8 +1,10 @@
 //! Mappers: produce the key-value streams that feed the aggregation
-//! tree — either a synthetic workload (§6.1/§6.2) or a WordCount map
-//! phase over corpus lines (§6.3).
+//! tree — either a synthetic workload (§6.1/§6.2), a WordCount map
+//! phase over corpus lines (§6.3), or a W-lane gradient worker
+//! ([`VectorMapper`], the allreduce family).
 
-use crate::protocol::KvPair;
+use crate::protocol::{KvPair, VectorBatch};
+use crate::workload::allreduce::AllreduceSpec;
 use crate::workload::corpus::Corpus;
 use crate::workload::generator::WorkloadSpec;
 
@@ -33,6 +35,40 @@ impl Mapper {
     }
 }
 
+/// A mapper whose output is a W-lane columnar batch instead of scalar
+/// pairs: one gradient worker of an allreduce job.
+#[derive(Clone, Debug)]
+pub enum VectorMapper {
+    /// Worker `worker` of an allreduce reduction.
+    Allreduce { spec: AllreduceSpec, worker: usize },
+}
+
+impl VectorMapper {
+    /// One vector mapper per worker of `spec`.
+    pub fn workers(spec: &AllreduceSpec) -> Vec<VectorMapper> {
+        (0..spec.workers)
+            .map(|worker| VectorMapper::Allreduce {
+                spec: spec.clone(),
+                worker,
+            })
+            .collect()
+    }
+
+    /// Run the map phase; returns the emitted columnar batch.
+    pub fn produce(&self) -> VectorBatch {
+        match self {
+            VectorMapper::Allreduce { spec, worker } => spec.worker_batch(*worker),
+        }
+    }
+
+    /// Total encoded bytes this mapper will inject.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            VectorMapper::Allreduce { spec, .. } => spec.bytes_per_worker(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -55,5 +91,18 @@ mod tests {
         let pairs = m.produce();
         assert_eq!(pairs.len(), 4);
         assert!(pairs.iter().all(|p| p.value == 1));
+    }
+
+    #[test]
+    fn vector_mappers_fan_out_one_worker_each() {
+        let spec = AllreduceSpec::dense(1024, 16, 3, 9);
+        let mappers = VectorMapper::workers(&spec);
+        assert_eq!(mappers.len(), 3);
+        for (w, m) in mappers.iter().enumerate() {
+            let b = m.produce();
+            assert_eq!(b, spec.worker_batch(w));
+            assert_eq!(m.bytes(), spec.bytes_per_worker());
+            assert_eq!(b.payload_encoded_len() as u64, m.bytes());
+        }
     }
 }

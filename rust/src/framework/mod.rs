@@ -9,6 +9,6 @@ pub mod reducer;
 pub mod shim;
 
 pub use job::{run_job, JobReport, JobSpec};
-pub use mapper::Mapper;
-pub use reducer::Reducer;
+pub use mapper::{Mapper, VectorMapper};
+pub use reducer::{Reducer, VectorMergeResult};
 pub use shim::Shim;

@@ -11,10 +11,11 @@
 //!   in Rust, dense batched segment aggregation in the AOT-compiled
 //!   JAX/Pallas kernel (see `runtime::table`).
 
-use crate::protocol::{AggOp, Key, KvPair, Value, MAX_KEY_LEN};
+use crate::protocol::{AggOp, Key, KvPair, Value, VectorBatch, MAX_KEY_LEN};
 use crate::runtime::{AggEngine, XlaAggregator};
-use crate::switch::hash_table::{HashTable, VALUE_BYTES};
+use crate::switch::hash_table::{HashTable, VectorEvictSink, VALUE_BYTES};
 use anyhow::Result;
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::time::Instant;
 
@@ -22,6 +23,16 @@ use std::time::Instant;
 #[derive(Debug)]
 pub struct MergeResult {
     pub table: HashMap<Key, Value>,
+    pub pairs_in: u64,
+    pub elapsed_s: f64,
+}
+
+/// Result of a W-lane vector merge: every key maps to its lane-wise
+/// reduction over all streams.
+#[derive(Debug)]
+pub struct VectorMergeResult {
+    pub table: HashMap<Key, Vec<Value>>,
+    pub lanes: usize,
     pub pairs_in: u64,
     pub elapsed_s: f64,
 }
@@ -95,6 +106,91 @@ impl Reducer {
         }
         MergeResult {
             table,
+            pairs_in,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Software merge of W-lane vector streams: the reference engine
+    /// for the allreduce family.  Every key's lane slice is combined
+    /// lane-wise ([`AggOp::combine_slice`]), so the result is the
+    /// element-wise reduction over all streams — what an allreduce
+    /// delivers to every worker.
+    pub fn merge_vector_software(streams: &[VectorBatch], op: AggOp) -> VectorMergeResult {
+        let t0 = Instant::now();
+        let lanes = streams.first().map(|b| b.lanes()).unwrap_or(1);
+        let mut table: HashMap<Key, Vec<Value>> = HashMap::new();
+        let mut pairs_in = 0u64;
+        for b in streams {
+            assert_eq!(b.lanes(), lanes, "streams must share one lane width");
+            pairs_in += b.len() as u64;
+            for (k, ls) in b.iter() {
+                match table.entry(*k) {
+                    Entry::Occupied(e) => op.combine_slice(e.into_mut(), ls),
+                    Entry::Vacant(e) => {
+                        e.insert(ls.to_vec());
+                    }
+                }
+            }
+        }
+        VectorMergeResult {
+            table,
+            lanes,
+            pairs_in,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// W-lane merge on the switch's SoA table core — the same
+    /// stride-`W` lane buffer, probe sequence and batched entry point
+    /// (`offer_lanes_batch`) the vector data plane uses, with
+    /// `ForwardNew` residency and a side map for bucket overflow (see
+    /// [`Self::merge_table_core`]).
+    pub fn merge_vector_table_core(streams: &[VectorBatch], op: AggOp) -> VectorMergeResult {
+        let t0 = Instant::now();
+        let lanes = streams.first().map(|b| b.lanes()).unwrap_or(1);
+        let total: usize = streams.iter().map(VectorBatch::len).sum();
+        let slots = (2 * total.max(16)) as u64;
+        let mut core = HashTable::with_memory_lanes(
+            slots * (MAX_KEY_LEN + lanes * VALUE_BYTES) as u64,
+            MAX_KEY_LEN,
+            8,
+            lanes,
+        );
+        let mut spill: HashMap<Key, Vec<Value>> = HashMap::new();
+        let mut evicted = VectorEvictSink::new();
+        let mut pairs_in = 0u64;
+        for b in streams {
+            assert_eq!(b.lanes(), lanes, "streams must share one lane width");
+            pairs_in += b.len() as u64;
+            evicted.clear();
+            core.offer_lanes_batch(b, op, false, &mut evicted);
+            for (i, &(k, _)) in evicted.keys.iter().enumerate() {
+                let ls = evicted.lane_slice(i, lanes);
+                match spill.entry(k) {
+                    Entry::Occupied(e) => op.combine_slice(e.into_mut(), ls),
+                    Entry::Vacant(e) => {
+                        e.insert(ls.to_vec());
+                    }
+                }
+            }
+        }
+        let mut table: HashMap<Key, Vec<Value>> =
+            HashMap::with_capacity(core.occupancy() + spill.len());
+        for (k, ls) in core.iter_lanes() {
+            table.insert(*k, ls.to_vec());
+        }
+        for (k, ls) in spill {
+            match table.entry(k) {
+                Entry::Occupied(e) => op.combine_slice(e.into_mut(), &ls),
+                Entry::Vacant(e) => {
+                    e.insert(ls);
+                }
+            }
+        }
+        VectorMergeResult {
+            table,
+            lanes,
             pairs_in,
             elapsed_s: t0.elapsed().as_secs_f64(),
         }
@@ -178,6 +274,77 @@ mod tests {
             assert_eq!(a.pairs_in, b.pairs_in);
             assert_eq!(a.table, b.table, "{op}");
         }
+    }
+
+    fn vector_streams(lanes: usize) -> Vec<VectorBatch> {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(0xA11);
+        (0..4)
+            .map(|_| {
+                let mut b = VectorBatch::new(lanes);
+                let mut vals: Vec<Value> = vec![0; lanes];
+                for _ in 0..2_000 {
+                    let id = rng.gen_range_u64(300);
+                    for (l, v) in vals.iter_mut().enumerate() {
+                        *v = rng.gen_range_u64(100) as i64 - 50 + l as i64;
+                    }
+                    b.push(Key::from_id(id, 8 + (id % 57) as usize), &vals);
+                }
+                b
+            })
+            .collect()
+    }
+
+    #[test]
+    fn vector_table_core_merge_equals_software_merge() {
+        for lanes in [1usize, 8, 64] {
+            let streams = vector_streams(lanes);
+            for op in [AggOp::Sum, AggOp::Max, AggOp::Min] {
+                let a = Reducer::merge_vector_software(&streams, op);
+                let b = Reducer::merge_vector_table_core(&streams, op);
+                assert_eq!(a.pairs_in, b.pairs_in);
+                assert_eq!(a.lanes, lanes);
+                assert_eq!(a.table, b.table, "{op} lanes={lanes}");
+            }
+        }
+    }
+
+    #[test]
+    fn vector_merge_at_w1_matches_scalar_merge() {
+        let streams = vector_streams(1);
+        let scalar_streams: Vec<Vec<KvPair>> = streams.iter().map(|b| b.to_pairs()).collect();
+        for op in [AggOp::Sum, AggOp::Max, AggOp::Min] {
+            let v = Reducer::merge_vector_software(&streams, op);
+            let s = Reducer::merge_software(&scalar_streams, op);
+            assert_eq!(v.pairs_in, s.pairs_in);
+            assert_eq!(v.table.len(), s.table.len());
+            for (k, lanes) in &v.table {
+                assert_eq!(lanes.as_slice(), &[s.table[k]], "{op}");
+            }
+        }
+    }
+
+    #[test]
+    fn vector_table_core_merge_survives_forced_spill() {
+        // Heavy duplication over a tiny key space: correctness must
+        // not depend on the core never spilling.
+        let mut b = VectorBatch::new(4);
+        for i in 0..20_000u64 {
+            b.push(Key::from_id(i % 17, 16), &[1, 2, 3, 4]);
+        }
+        let r = Reducer::merge_vector_table_core(std::slice::from_ref(&b), AggOp::Sum);
+        assert_eq!(r.table.len(), 17);
+        let lane_sums = r.table.values().fold(vec![0i64; 4], |mut acc, ls| {
+            for (a, v) in acc.iter_mut().zip(ls) {
+                *a += v;
+            }
+            acc
+        });
+        assert_eq!(
+            lane_sums,
+            vec![20_000, 40_000, 60_000, 80_000],
+            "every lane must be conserved through spill"
+        );
     }
 
     #[test]

@@ -15,6 +15,7 @@
 pub mod kv;
 pub mod packet;
 pub mod types;
+pub mod vector;
 pub mod wire;
 
 pub use kv::{Key, KvPair, MAX_KEY_LEN, MIN_KEY_LEN};
@@ -23,3 +24,6 @@ pub use packet::{
     TreeConfig, AGG_FIXED_LEN, HEADER_OVERHEAD, MAX_AGG_PAYLOAD, MTU,
 };
 pub use types::{AggOp, TreeId, Value};
+pub use vector::{
+    VectorAggregationPacket, VectorBatch, VectorChunks, MAX_LANES,
+};

@@ -6,6 +6,7 @@
 
 use super::kv::{KvDecodeError, KvPair};
 use super::types::{AggOp, TreeId};
+use super::vector::{VecDecodeError, VectorAggregationPacket};
 use super::wire::{self, Reader};
 
 /// Protocol header overhead per packet (Eq. 2 uses H = 58 B).
@@ -155,6 +156,9 @@ pub enum Packet {
     Configure(ConfigurePacket),
     Ack(AckKind),
     Aggregation(AggregationPacket),
+    /// W-lane columnar aggregation data (degenerate W = 1 payload is
+    /// byte-identical to [`Packet::Aggregation`]'s; see `vector`).
+    VectorAggregation(VectorAggregationPacket),
     Data(DataPacket),
 }
 
@@ -164,6 +168,7 @@ const TAG_ACK0: u8 = 3;
 const TAG_ACK1: u8 = 4;
 const TAG_AGGREGATION: u8 = 5;
 const TAG_DATA: u8 = 6;
+const TAG_VECTOR_AGGREGATION: u8 = 7;
 
 #[derive(Debug, PartialEq, Eq, thiserror::Error)]
 pub enum PacketDecodeError {
@@ -173,6 +178,8 @@ pub enum PacketDecodeError {
     UnknownOp(u8),
     #[error("kv pair: {0}")]
     Kv(#[from] KvDecodeError),
+    #[error("vector payload: {0}")]
+    Vector(#[from] VecDecodeError),
     #[error(transparent)]
     Truncated(#[from] wire::Truncated),
     #[error("trailing {0} bytes after packet")]
@@ -187,6 +194,7 @@ impl Packet {
             Packet::Ack(AckKind::Master) => TAG_ACK0,
             Packet::Ack(AckKind::Switch) => TAG_ACK1,
             Packet::Aggregation(_) => TAG_AGGREGATION,
+            Packet::VectorAggregation(_) => TAG_VECTOR_AGGREGATION,
             Packet::Data(_) => TAG_DATA,
         }
     }
@@ -223,6 +231,9 @@ impl Packet {
                 for p in &a.pairs {
                     p.encode(&mut buf);
                 }
+            }
+            Packet::VectorAggregation(v) => {
+                v.encode_into(&mut buf);
             }
             Packet::Data(d) => {
                 wire::put_u32(&mut buf, d.payload_len);
@@ -285,6 +296,9 @@ impl Packet {
                     pairs,
                 })
             }
+            TAG_VECTOR_AGGREGATION => {
+                Packet::VectorAggregation(VectorAggregationPacket::decode_body(&mut r)?)
+            }
             TAG_DATA => Packet::Data(DataPacket {
                 payload_len: r.u32()?,
             }),
@@ -345,6 +359,64 @@ mod tests {
             let buf = p.encode();
             assert_eq!(Packet::decode(&buf).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn vector_packets_round_trip_and_match_scalar_payload_at_w1() {
+        use crate::protocol::vector::{VectorAggregationPacket, VectorBatch};
+        // Multi-lane round trip (mixed 4 B / 8 B lane widths per pair).
+        let mut batch = VectorBatch::new(3);
+        batch.push(Key::from_id(1, 16), &[1, -2, 3]);
+        batch.push(Key::from_id(2, 40), &[1 << 40, 0, -5]);
+        let p = Packet::VectorAggregation(VectorAggregationPacket {
+            tree: TreeId(7),
+            op: AggOp::Max,
+            eot: true,
+            batch,
+        });
+        let buf = p.encode();
+        assert_eq!(Packet::decode(&buf).unwrap(), p);
+
+        // W = 1: the vector payload must be byte-identical to the
+        // scalar aggregation packet's payload (only the tag differs).
+        let pairs = sample_pairs(9);
+        let scalar = Packet::Aggregation(AggregationPacket {
+            tree: TreeId(3),
+            op: AggOp::Sum,
+            eot: false,
+            pairs: pairs.clone(),
+        });
+        let vector = Packet::VectorAggregation(VectorAggregationPacket {
+            tree: TreeId(3),
+            op: AggOp::Sum,
+            eot: false,
+            batch: VectorBatch::from_pairs(&pairs),
+        });
+        let sbuf = scalar.encode();
+        let vbuf = vector.encode();
+        assert_eq!(sbuf[1..], vbuf[1..], "W=1 payload must be byte-identical");
+        assert_eq!(Packet::decode(&vbuf).unwrap(), vector);
+        if let (Packet::Aggregation(a), Packet::VectorAggregation(v)) = (&scalar, &vector) {
+            assert_eq!(a.payload_len(), v.payload_len());
+            assert_eq!(a.wire_len(), v.wire_len());
+        }
+    }
+
+    #[test]
+    fn vector_decode_rejects_crafted_giant_header_cheaply() {
+        // A ~13-byte buffer claiming 65535 pairs of 4096 lanes must
+        // fail with a decode error (truncated pair data), not reserve
+        // gigabytes up front from the attacker-controlled header.
+        let mut buf = vec![7u8]; // TAG_VECTOR_AGGREGATION
+        wire::put_u32(&mut buf, 1); // tree
+        wire::put_u8(&mut buf, 0); // op = Sum
+        wire::put_u8(&mut buf, 2); // flags: multi-lane
+        wire::put_u16(&mut buf, u16::MAX); // pair count
+        wire::put_u16(&mut buf, 4096); // lane count
+        assert!(matches!(
+            Packet::decode(&buf),
+            Err(PacketDecodeError::Vector(_))
+        ));
     }
 
     #[test]

@@ -45,6 +45,39 @@ impl AggOp {
         }
     }
 
+    /// Lane-wise combine of two equal-length value slices: `acc[i] =
+    /// combine(acc[i], rhs[i])`.  The op match is hoisted out of the
+    /// loop so each arm is a branch-free contiguous pass the compiler
+    /// can autovectorize — one wide combine instead of W scalar calls.
+    /// This is the software shape of a W-lane aggregation ALU.
+    #[inline]
+    pub fn combine_slice(self, acc: &mut [Value], rhs: &[Value]) {
+        debug_assert_eq!(acc.len(), rhs.len());
+        match self {
+            AggOp::Sum => {
+                for (a, b) in acc.iter_mut().zip(rhs) {
+                    *a = a.saturating_add(*b);
+                }
+            }
+            AggOp::Max => {
+                for (a, b) in acc.iter_mut().zip(rhs) {
+                    *a = (*a).max(*b);
+                }
+            }
+            AggOp::Min => {
+                for (a, b) in acc.iter_mut().zip(rhs) {
+                    *a = (*a).min(*b);
+                }
+            }
+        }
+    }
+
+    /// Fill a lane slice with this op's identity element.
+    #[inline]
+    pub fn fill_identity(self, lanes: &mut [Value]) {
+        lanes.fill(self.identity());
+    }
+
     pub fn code(self) -> u8 {
         match self {
             AggOp::Sum => 0,
@@ -107,6 +140,35 @@ mod tests {
     fn sum_saturates_instead_of_wrapping() {
         assert_eq!(AggOp::Sum.combine(Value::MAX, 1), Value::MAX);
         assert_eq!(AggOp::Sum.combine(Value::MIN, -1), Value::MIN);
+    }
+
+    #[test]
+    fn combine_slice_matches_scalar_combine_per_lane() {
+        let a0: Vec<Value> = vec![-5, 0, 7, Value::MAX, Value::MIN, 42];
+        let b: Vec<Value> = vec![3, -3, 7, 1, -1, 0];
+        for op in AggOp::ALL {
+            let mut acc = a0.clone();
+            op.combine_slice(&mut acc, &b);
+            for i in 0..a0.len() {
+                assert_eq!(acc[i], op.combine(a0[i], b[i]), "{op} lane {i}");
+            }
+        }
+        // Degenerate widths: empty and single-lane slices.
+        let mut one = [10];
+        AggOp::Sum.combine_slice(&mut one, &[32]);
+        assert_eq!(one, [42]);
+        AggOp::Sum.combine_slice(&mut [], &[]);
+    }
+
+    #[test]
+    fn fill_identity_is_neutral_lane_wise() {
+        for op in AggOp::ALL {
+            let mut acc = [99, -99, 0];
+            op.fill_identity(&mut acc);
+            let rhs = [-5, 7, 12345];
+            op.combine_slice(&mut acc, &rhs);
+            assert_eq!(acc, rhs, "{op}");
+        }
     }
 
     #[test]

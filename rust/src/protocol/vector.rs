@@ -1,0 +1,464 @@
+//! Columnar W-lane vector values (the allreduce payload family).
+//!
+//! The paper fixes payloads to one 32-bit value per key (§4.2.3);
+//! related in-network aggregation systems (Flare, P4COM, SwitchML)
+//! aggregate multi-word tensor chunks per packet instead.  This module
+//! generalizes the value path to a **W-lane vector**: every key carries
+//! `lanes` values, stored *columnar* — one flat, stride-`W` value
+//! buffer next to a dense key column — so a batch's lane data is
+//! contiguous and an aggregate hit combines `W` lanes in one
+//! autovectorizable pass ([`crate::protocol::AggOp::combine_slice`]).
+//!
+//! # Wire format (degenerate W = 1 is byte-identical to scalar)
+//!
+//! A vector aggregation packet carries the scalar packet's fixed
+//! fields (tree, op, flags, pair count) plus a 2-byte lane count that
+//! is present **only when W ≠ 1** (flag bit 1).  Each pair encodes as
+//! `key_len(1) · value_width(1) · key · W lane values`, with the value
+//! width 4 B when every lane fits an i32 (the paper's wire width) and
+//! 8 B otherwise — exactly [`KvPair`]'s rule.  At W = 1 a vector pair
+//! therefore encodes byte-for-byte like a scalar pair and a vector
+//! packet's payload is byte-for-byte a scalar packet's payload, so the
+//! scalar path is the degenerate case, not a parallel format.
+
+use super::kv::{Key, KvDecodeError, KvPair, MAX_KEY_LEN, MIN_KEY_LEN};
+use super::packet::{AGG_FIXED_LEN, HEADER_OVERHEAD, MTU};
+use super::types::{AggOp, TreeId, Value};
+use super::wire::{self, Reader};
+
+/// Upper bound on lanes per key — a sanity cap for decode, well above
+/// the bench sweep's W = 256 (a 4096-lane pair is ~16 KB, an order
+/// beyond any single-MTU chunk).
+pub const MAX_LANES: usize = 4096;
+
+/// Wire width of one lane value for a pair: 4 B when every lane fits
+/// an i32 (the paper's fixed 32-bit value), 8 B otherwise — the same
+/// rule as [`KvPair::value_len`], applied to the whole lane slice.
+#[inline]
+pub fn lane_value_width(lanes: &[Value]) -> usize {
+    if lanes.iter().all(|&v| i32::try_from(v).is_ok()) {
+        4
+    } else {
+        8
+    }
+}
+
+/// Fixed payload bytes of a W-lane aggregation packet: the scalar
+/// packet's fixed fields, plus the 2-byte lane count iff W ≠ 1.
+#[inline]
+pub fn vec_fixed_len(lanes: usize) -> usize {
+    AGG_FIXED_LEN + if lanes == 1 { 0 } else { 2 }
+}
+
+/// Maximum pair payload per W-lane packet (MTU minus envelope minus
+/// the packet's fixed fields) — the vector analogue of
+/// [`crate::protocol::MAX_AGG_PAYLOAD`], which it equals at W = 1.
+#[inline]
+pub fn max_vec_payload(lanes: usize) -> usize {
+    MTU - HEADER_OVERHEAD - vec_fixed_len(lanes)
+}
+
+/// Encoded bytes of one W-lane pair: metadata (key len + value width)
+/// + key + lanes.  Equals [`KvPair::encoded_len`] at W = 1.
+#[inline]
+pub fn encoded_vec_len(key_len: usize, lanes: usize, value_width: usize) -> usize {
+    2 + key_len + lanes * value_width
+}
+
+/// A columnar batch of W-lane pairs: a dense key column and one flat,
+/// stride-`W` value buffer.  This is the carrier the workload
+/// generators emit, the switch vector ingest consumes, and the reducer
+/// merges — lane data stays contiguous end to end.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VectorBatch {
+    lanes: usize,
+    keys: Vec<Key>,
+    /// Flat lane buffer; pair `i` owns `values[i*lanes .. (i+1)*lanes]`.
+    values: Vec<Value>,
+}
+
+impl VectorBatch {
+    pub fn new(lanes: usize) -> Self {
+        assert!((1..=MAX_LANES).contains(&lanes), "lanes {lanes} out of range");
+        Self {
+            lanes,
+            keys: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(lanes: usize, pairs: usize) -> Self {
+        let mut b = Self::new(lanes);
+        b.keys.reserve(pairs);
+        b.values.reserve(pairs * lanes);
+        b
+    }
+
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Empty the batch, keeping capacity (sink reuse).
+    pub fn clear(&mut self) {
+        self.keys.clear();
+        self.values.clear();
+    }
+
+    /// Buffer capacity in elements — lets benches assert steady-state
+    /// ingest stops allocating.
+    pub fn capacity(&self) -> usize {
+        self.keys.capacity() + self.values.capacity()
+    }
+
+    #[inline]
+    pub fn push(&mut self, key: Key, lanes: &[Value]) {
+        assert_eq!(lanes.len(), self.lanes, "lane width mismatch");
+        self.keys.push(key);
+        self.values.extend_from_slice(lanes);
+    }
+
+    #[inline]
+    pub fn key(&self, i: usize) -> Key {
+        self.keys[i]
+    }
+
+    #[inline]
+    pub fn lane_slice(&self, i: usize) -> &[Value] {
+        &self.values[i * self.lanes..(i + 1) * self.lanes]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&Key, &[Value])> + '_ {
+        self.keys.iter().zip(self.values.chunks_exact(self.lanes))
+    }
+
+    /// Encoded wire bytes of pair `i` (metadata + key + lanes).
+    pub fn encoded_len_pair(&self, i: usize) -> usize {
+        encoded_vec_len(
+            self.keys[i].len(),
+            self.lanes,
+            lane_value_width(self.lane_slice(i)),
+        )
+    }
+
+    /// Total encoded pair bytes (no packet fixed fields).
+    pub fn payload_encoded_len(&self) -> usize {
+        (0..self.len()).map(|i| self.encoded_len_pair(i)).sum()
+    }
+
+    /// View a scalar pair stream as the degenerate 1-lane batch.
+    pub fn from_pairs(pairs: &[KvPair]) -> Self {
+        let mut b = Self::with_capacity(1, pairs.len());
+        for p in pairs {
+            b.push(p.key, std::slice::from_ref(&p.value));
+        }
+        b
+    }
+
+    /// Collapse a 1-lane batch back to scalar pairs (panics at W ≠ 1).
+    pub fn to_pairs(&self) -> Vec<KvPair> {
+        assert_eq!(self.lanes, 1, "to_pairs needs a 1-lane batch");
+        self.keys
+            .iter()
+            .zip(&self.values)
+            .map(|(&k, &v)| KvPair::new(k, v))
+            .collect()
+    }
+
+    /// Append all of `other` (same lane width).
+    pub fn extend_from_batch(&mut self, other: &VectorBatch) {
+        assert_eq!(self.lanes, other.lanes);
+        self.keys.extend_from_slice(&other.keys);
+        self.values.extend_from_slice(&other.values);
+    }
+}
+
+/// `VectorAggregation` — the W-lane data packet.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VectorAggregationPacket {
+    pub tree: TreeId,
+    pub op: AggOp,
+    pub eot: bool,
+    pub batch: VectorBatch,
+}
+
+impl VectorAggregationPacket {
+    /// Payload bytes (fixed fields + encoded pairs), excluding envelope.
+    pub fn payload_len(&self) -> usize {
+        vec_fixed_len(self.batch.lanes()) + self.batch.payload_encoded_len()
+    }
+
+    /// Total wire footprint including the L2/L3 envelope.
+    pub fn wire_len(&self) -> usize {
+        HEADER_OVERHEAD + self.payload_len()
+    }
+
+    pub(super) fn encode_into(&self, buf: &mut Vec<u8>) {
+        let lanes = self.batch.lanes();
+        let multi = lanes != 1;
+        wire::put_u32(buf, self.tree.0);
+        wire::put_u8(buf, self.op.code());
+        wire::put_u8(buf, (self.eot as u8) | ((multi as u8) << 1));
+        wire::put_u16(buf, self.batch.len() as u16);
+        if multi {
+            wire::put_u16(buf, lanes as u16);
+        }
+        for (key, vals) in self.batch.iter() {
+            let vw = lane_value_width(vals);
+            wire::put_u8(buf, key.len() as u8);
+            wire::put_u8(buf, vw as u8);
+            buf.extend_from_slice(key.as_bytes());
+            for &v in vals {
+                match vw {
+                    4 => wire::put_u32(buf, v as i32 as u32),
+                    8 => wire::put_i64(buf, v),
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+
+    pub(super) fn decode_body(r: &mut Reader<'_>) -> Result<Self, VecDecodeError> {
+        let tree = TreeId(r.u32()?);
+        let op_code = r.u8()?;
+        let op = AggOp::from_code(op_code).ok_or(VecDecodeError::UnknownOp(op_code))?;
+        let flags = r.u8()?;
+        let eot = flags & 1 != 0;
+        let n = r.u16()? as usize;
+        let lanes = if flags & 2 != 0 { r.u16()? as usize } else { 1 };
+        if !(1..=MAX_LANES).contains(&lanes) || (flags & 2 != 0 && lanes == 1) {
+            return Err(VecDecodeError::BadLanes(lanes));
+        }
+        // Bound the pre-reserve by what the buffer could possibly
+        // hold — a pair is at least 2 metadata bytes + 1 key byte +
+        // `lanes` 4-byte values — so a tiny buffer with a crafted
+        // (count, lanes) header cannot trigger a multi-GB allocation.
+        let min_pair = 3 + lanes * 4;
+        let mut batch = VectorBatch::with_capacity(lanes, n.min(r.remaining() / min_pair));
+        let mut vals: Vec<Value> = vec![0; lanes];
+        for _ in 0..n {
+            let klen = r.u8()? as usize;
+            let vw = r.u8()? as usize;
+            if !(MIN_KEY_LEN..=MAX_KEY_LEN).contains(&klen) {
+                return Err(KvDecodeError::BadKeyLen(klen).into());
+            }
+            let key = Key::new(r.take(klen)?);
+            for v in vals.iter_mut() {
+                *v = match vw {
+                    4 => r.u32()? as i32 as i64,
+                    8 => r.i64()?,
+                    other => return Err(KvDecodeError::BadValueLen(other).into()),
+                };
+            }
+            batch.push(key, &vals);
+        }
+        Ok(Self {
+            tree,
+            op,
+            eot,
+            batch,
+        })
+    }
+}
+
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum VecDecodeError {
+    #[error("unknown aggregation op {0}")]
+    UnknownOp(u8),
+    #[error("bad lane count {0}")]
+    BadLanes(usize),
+    #[error("kv: {0}")]
+    Kv(#[from] KvDecodeError),
+    #[error(transparent)]
+    Truncated(#[from] wire::Truncated),
+}
+
+/// Greedy MTU chunker over a [`VectorBatch`]: yields index ranges in
+/// exactly the per-W packet boundaries, without materializing packets —
+/// the vector analogue of [`crate::protocol::MtuChunks`].  An empty
+/// batch still yields one (empty) chunk; an oversize pair travels
+/// alone.
+pub struct VectorChunks<'a> {
+    batch: &'a VectorBatch,
+    budget: usize,
+    pos: usize,
+    done: bool,
+}
+
+impl<'a> VectorChunks<'a> {
+    pub fn new(batch: &'a VectorBatch) -> Self {
+        Self {
+            batch,
+            budget: max_vec_payload(batch.lanes()),
+            pos: 0,
+            done: false,
+        }
+    }
+
+    /// Next chunk's index range and whether it is the batch's last.
+    pub fn next_chunk(&mut self) -> Option<(std::ops::Range<usize>, bool)> {
+        if self.done {
+            return None;
+        }
+        let mut payload = 0usize;
+        let mut end = self.pos;
+        while end < self.batch.len() {
+            let el = self.batch.encoded_len_pair(end);
+            if payload + el > self.budget && end > self.pos {
+                break;
+            }
+            payload += el;
+            end += 1;
+        }
+        let range = self.pos..end;
+        self.pos = end;
+        let last = end == self.batch.len();
+        if last {
+            self.done = true;
+        }
+        Some((range, last))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::packet::MtuChunks;
+
+    fn sample_batch(lanes: usize, n: usize) -> VectorBatch {
+        let mut b = VectorBatch::new(lanes);
+        let mut vals: Vec<Value> = vec![0; lanes];
+        for i in 0..n {
+            for (l, v) in vals.iter_mut().enumerate() {
+                *v = (i as i64 * 31 + l as i64 * 7) - 40;
+            }
+            b.push(Key::from_id(i as u64, 8 + (i % 57)), &vals);
+        }
+        b
+    }
+
+    #[test]
+    fn batch_layout_is_columnar_stride_w() {
+        let b = sample_batch(4, 10);
+        assert_eq!(b.lanes(), 4);
+        assert_eq!(b.len(), 10);
+        for i in 0..10 {
+            let s = b.lane_slice(i);
+            assert_eq!(s.len(), 4);
+            assert_eq!(s[0], i as i64 * 31 - 40);
+        }
+        let collected: Vec<(Key, Vec<Value>)> =
+            b.iter().map(|(k, v)| (*k, v.to_vec())).collect();
+        assert_eq!(collected.len(), 10);
+        assert_eq!(collected[3].1, b.lane_slice(3).to_vec());
+    }
+
+    #[test]
+    fn w1_pair_encoding_matches_scalar_kvpair() {
+        // Byte-identity of the degenerate case: same metadata rule,
+        // same per-pair width, same packet fixed length.
+        for val in [0i64, 7, -7, i32::MAX as i64, i32::MIN as i64, 1 << 40] {
+            let k = Key::from_id(3, 19);
+            let p = KvPair::new(k, val);
+            let mut b = VectorBatch::new(1);
+            b.push(k, &[val]);
+            assert_eq!(b.encoded_len_pair(0), p.encoded_len(), "val={val}");
+        }
+        assert_eq!(vec_fixed_len(1), AGG_FIXED_LEN);
+        assert_eq!(max_vec_payload(1), crate::protocol::MAX_AGG_PAYLOAD);
+        assert_eq!(vec_fixed_len(8), AGG_FIXED_LEN + 2);
+    }
+
+    #[test]
+    fn lane_value_width_is_all_lanes_or_nothing() {
+        assert_eq!(lane_value_width(&[1, 2, 3]), 4);
+        assert_eq!(lane_value_width(&[1, 1 << 40, 3]), 8);
+        assert_eq!(lane_value_width(&[]), 4);
+        assert_eq!(lane_value_width(&[i32::MIN as i64]), 4);
+    }
+
+    #[test]
+    fn from_pairs_round_trips_to_pairs() {
+        let pairs: Vec<KvPair> = (0..50u64)
+            .map(|i| KvPair::new(Key::from_id(i, 16), i as i64 - 25))
+            .collect();
+        let b = VectorBatch::from_pairs(&pairs);
+        assert_eq!(b.lanes(), 1);
+        assert_eq!(b.to_pairs(), pairs);
+        let total: usize = pairs.iter().map(|p| p.encoded_len()).sum();
+        assert_eq!(b.payload_encoded_len(), total);
+    }
+
+    #[test]
+    fn vector_chunks_match_scalar_mtu_chunks_at_w1() {
+        let pairs: Vec<KvPair> = (0..400u64)
+            .map(|i| KvPair::new(Key::from_id(i, 16 + (i % 49) as usize), i as i64 * 3 - 5))
+            .collect();
+        let b = VectorBatch::from_pairs(&pairs);
+        let mut vc = VectorChunks::new(&b);
+        let mut sc = MtuChunks::new(&pairs);
+        loop {
+            let v = vc.next_chunk();
+            let s = sc.next_chunk();
+            match (v, s) {
+                (None, None) => break,
+                (Some((range, vlast)), Some((chunk, slast))) => {
+                    assert_eq!(range.len(), chunk.len());
+                    assert_eq!(vlast, slast);
+                }
+                other => panic!("chunker streams diverged: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn vector_chunks_respect_per_w_budget() {
+        let b = sample_batch(64, 100);
+        let mut chunks = VectorChunks::new(&b);
+        let mut total = 0usize;
+        let mut n_chunks = 0usize;
+        while let Some((range, last)) = chunks.next_chunk() {
+            let bytes: usize = range.clone().map(|i| b.encoded_len_pair(i)).sum();
+            if range.len() > 1 {
+                assert!(bytes <= max_vec_payload(64));
+            }
+            total += range.len();
+            n_chunks += 1;
+            if last {
+                break;
+            }
+        }
+        assert_eq!(total, 100);
+        // 64-lane pairs are ~270 B: several per packet, many packets.
+        assert!(n_chunks > 10, "{n_chunks}");
+
+        // Empty batch: exactly one empty final chunk.
+        let empty = VectorBatch::new(8);
+        let mut chunks = VectorChunks::new(&empty);
+        assert_eq!(chunks.next_chunk(), Some((0..0, true)));
+        assert_eq!(chunks.next_chunk(), None);
+    }
+
+    #[test]
+    fn oversize_pair_travels_alone() {
+        // 512 lanes x 4 B = 2 KB > one MTU payload: still chunked, one
+        // pair per packet.
+        let b = sample_batch(512, 3);
+        let mut chunks = VectorChunks::new(&b);
+        let mut sizes = Vec::new();
+        while let Some((range, _)) = chunks.next_chunk() {
+            sizes.push(range.len());
+        }
+        assert_eq!(sizes, vec![1, 1, 1]);
+    }
+}

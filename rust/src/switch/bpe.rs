@@ -11,9 +11,8 @@
 use crate::protocol::{AggOp, Key, Value};
 use crate::sim::clock::Cycles;
 use crate::sim::dram::DramModel;
-use crate::switch::aggregate::AggregationUnit;
 use crate::switch::config::{EvictionPolicy, StageDelays, SwitchConfig};
-use crate::switch::hash_table::{HashTable, Probe, VALUE_BYTES};
+use crate::switch::hash_table::{HashTable, LaneProbe, Probe, VectorEvictSink};
 
 /// What happened to a pair offered to the BPE.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -29,7 +28,6 @@ pub struct Bpe {
     /// One region per key-length group (Fig. 8b).
     regions: Vec<HashTable>,
     dram: DramModel,
-    agg: AggregationUnit,
     interval: Cycles,
     delays: StageDelays,
     eviction: EvictionPolicy,
@@ -46,16 +44,27 @@ pub struct Bpe {
 impl Bpe {
     /// Build from a switch config and this tree's DRAM share.
     pub fn for_tree(cfg: &SwitchConfig, mem_share: u64) -> Self {
+        Self::for_tree_lanes(cfg, mem_share, 1)
+    }
+
+    /// [`Self::for_tree`] with `lanes` value lanes per slot — every
+    /// region is a W-lane table, so evicted vector pairs digest here
+    /// exactly like scalars do.
+    pub fn for_tree_lanes(cfg: &SwitchConfig, mem_share: u64, lanes: usize) -> Self {
         let per_region = mem_share / cfg.n_groups as u64;
         let regions = (0..cfg.n_groups)
             .map(|g| {
-                HashTable::with_memory(per_region, cfg.group_width(g), cfg.bpe_slots_per_bucket)
+                HashTable::with_memory_lanes(
+                    per_region,
+                    cfg.group_width(g),
+                    cfg.bpe_slots_per_bucket,
+                    lanes,
+                )
             })
             .collect();
         Self {
             regions,
             dram: DramModel::new(cfg.dram.clone()),
-            agg: AggregationUnit::new(),
             interval: cfg.bpe_interval,
             delays: cfg.delays,
             eviction: cfg.eviction,
@@ -161,6 +170,39 @@ impl Bpe {
         }
     }
 
+    /// Digest one W-lane evictee (key + FPE hash-unit tag + lanes)
+    /// arriving from the scheduler at `arrive`.  Timing is exactly
+    /// [`Self::offer_hashed`]'s ([`Self::replay_timing`]); on a full
+    /// back-end bucket the W-lane overflow pair is appended to the
+    /// caller's sink and its switch-exit cycle returned.
+    pub fn offer_lanes_hashed(
+        &mut self,
+        arrive: Cycles,
+        group: usize,
+        evictee: (Key, u32),
+        lanes: &[Value],
+        op: AggOp,
+        overflow: &mut VectorEvictSink,
+    ) -> Option<Cycles> {
+        let (key, hash) = evictee;
+        let start = self.replay_timing(arrive);
+        let evict_old = self.eviction == EvictionPolicy::EvictOld;
+        match self.regions[group].offer_lanes_hashed(hash, key, lanes, op, evict_old, overflow) {
+            LaneProbe::Aggregated => {
+                self.aggregated += 1;
+                None
+            }
+            LaneProbe::Inserted => {
+                self.inserted += 1;
+                None
+            }
+            LaneProbe::Evicted => {
+                self.overflowed += 1;
+                Some(start + self.delays.bpe_aggregate)
+            }
+        }
+    }
+
     /// The timing half of [`Self::offer_hashed`] — FIFO accounting,
     /// busy chain, the two DRAM commands, and the pair latency — for
     /// one arrival at `arrive`; returns the service start cycle.
@@ -223,12 +265,23 @@ impl Bpe {
         cycles
     }
 
+    /// Columnar flush for W-lane regions: drain every region into
+    /// caller-owned key/lane buffers; same occupancy-proportional
+    /// stream-out cost scaled by the wider slots.
+    pub fn flush_lanes_into(&mut self, keys: &mut Vec<Key>, vals: &mut Vec<Value>) -> Cycles {
+        let cycles = self.flush_occupied_cycles();
+        for r in &mut self.regions {
+            r.drain_lanes_into(keys, vals);
+        }
+        cycles
+    }
+
     /// Flush cost streaming only the occupied slots.
     pub fn flush_occupied_cycles(&self) -> Cycles {
         let bytes: u64 = self
             .regions
             .iter()
-            .map(|r| (r.occupancy() * (r.slot_key_width() + VALUE_BYTES)) as u64)
+            .map(|r| (r.occupancy() * r.slot_bytes()) as u64)
             .sum();
         self.dram.stream_out_cycles(bytes)
     }
@@ -252,8 +305,11 @@ impl Bpe {
         (self.dram.issued, self.dram.stall_cycles)
     }
 
+    /// Aggregation-ALU lane-combines across all regions, read from the
+    /// tables' single accounting point (`HashTable::combines`) — see
+    /// `Fpe::agg_ops`.
     pub fn agg_ops(&self) -> u64 {
-        self.agg.ops_executed
+        self.regions.iter().map(|r| r.combines).sum()
     }
 }
 
@@ -328,6 +384,46 @@ mod tests {
         // One resident pair: occupancy flush ≈ latency; region scan huge.
         assert!(cost < 100, "occupancy flush {cost}");
         assert!(region_scan > cost * 100);
+    }
+
+    #[test]
+    fn lane_digest_matches_scalar_at_w1_and_counts_combines() {
+        let cfg = SwitchConfig::default();
+        let mut scalar = Bpe::for_tree(&cfg, 1 << 20);
+        let mut lane = Bpe::for_tree_lanes(&cfg, 1 << 20, 1);
+        let mut sink = VectorEvictSink::new();
+        for id in 0..200u64 {
+            let k = Key::from_id(id % 40, 16);
+            let h = scalar.region(1).hash_of(&k);
+            let s = scalar.offer_hashed(id * 5, 1, k, 2, h, AggOp::Sum);
+            let l = lane.offer_lanes_hashed(id * 5, 1, (k, h), &[2], AggOp::Sum, &mut sink);
+            match (s, l) {
+                (BpeOutcome::Kept, None) => {}
+                (BpeOutcome::Overflow { ready, .. }, Some(lready)) => assert_eq!(ready, lready),
+                other => panic!("paths diverged: {other:?}"),
+            }
+        }
+        assert_eq!(
+            (scalar.aggregated, scalar.inserted, scalar.overflowed),
+            (lane.aggregated, lane.inserted, lane.overflowed)
+        );
+        assert_eq!(scalar.dram_stats(), lane.dram_stats());
+        assert_eq!(scalar.agg_ops(), lane.agg_ops());
+        assert_eq!(scalar.agg_ops(), scalar.aggregated, "one combine per hit");
+
+        // 8-lane digest: combines scale by W, flush is columnar.
+        let mut wide = Bpe::for_tree_lanes(&cfg, 1 << 20, 8);
+        let k = Key::from_id(7, 16);
+        let h = wide.region(1).hash_of(&k);
+        let lanes = [3i64; 8];
+        wide.offer_lanes_hashed(0, 1, (k, h), &lanes, AggOp::Sum, &mut sink);
+        wide.offer_lanes_hashed(10, 1, (k, h), &lanes, AggOp::Sum, &mut sink);
+        assert_eq!(wide.agg_ops(), 8);
+        let mut keys = Vec::new();
+        let mut vals = Vec::new();
+        wide.flush_lanes_into(&mut keys, &mut vals);
+        assert_eq!(keys, vec![k]);
+        assert_eq!(vals, vec![6i64; 8]);
     }
 
     #[test]

@@ -13,9 +13,8 @@
 
 use crate::protocol::{AggOp, Key, Value};
 use crate::sim::Cycles;
-use crate::switch::aggregate::AggregationUnit;
 use crate::switch::config::{EvictionPolicy, StageDelays};
-use crate::switch::hash_table::{HashTable, Probe, VALUE_BYTES};
+use crate::switch::hash_table::{HashTable, LaneProbe, Probe, VectorEvictSink};
 
 /// What happened to an offered pair.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -36,7 +35,6 @@ pub enum FpeOutcome {
 pub struct Fpe {
     pub group: usize,
     table: HashTable,
-    agg: AggregationUnit,
     interval: Cycles,
     delays: StageDelays,
     eviction: EvictionPolicy,
@@ -65,7 +63,6 @@ impl Fpe {
         Self {
             group,
             table,
-            agg: AggregationUnit::new(),
             interval,
             delays,
             eviction,
@@ -102,8 +99,11 @@ impl Fpe {
         self.fifo_depth_at(self.busy_until.saturating_sub(1))
     }
 
-    /// Offer one pair arriving (from the crossbar) at cycle `arrive`.
-    pub fn offer(&mut self, arrive: Cycles, key: Key, value: Value, op: AggOp) -> FpeOutcome {
+    /// FIFO/busy-chain admission of one arrival: backpressure
+    /// accounting (Table 2 full events) and the pipelined service
+    /// start.  Shared by the scalar and W-lane offer paths so their
+    /// timing cannot drift.
+    fn accept(&mut self, arrive: Cycles) -> Cycles {
         // Backpressure: if the FIFO is full the producer stalls until
         // the oldest pair retires (counted as a full event, Table 2).
         let mut effective_arrive = arrive;
@@ -119,12 +119,18 @@ impl Fpe {
 
         let start = effective_arrive.max(self.busy_until);
         self.busy_until = start + self.interval;
+        start
+    }
+
+    /// Offer one pair arriving (from the crossbar) at cycle `arrive`.
+    pub fn offer(&mut self, arrive: Cycles, key: Key, value: Value, op: AggOp) -> FpeOutcome {
+        let start = self.accept(arrive);
 
         // Functional behaviour.  The hash unit runs once here; its
         // output is the table tag and rides along on eviction.
         let evict_old = self.eviction == EvictionPolicy::EvictOld;
         let hash = self.table.hash_of(&key);
-        let outcome = match self.table.offer_hashed(hash, key, value, op, evict_old) {
+        match self.table.offer_hashed(hash, key, value, op, evict_old) {
             Probe::Aggregated => {
                 self.aggregated += 1;
                 // Hash + aggregate latency (Table 3 rows 3-4).
@@ -148,8 +154,47 @@ impl Fpe {
                     ready: start + lat,
                 }
             }
-        };
-        outcome
+        }
+    }
+
+    /// Offer one W-lane pair.  Timing is identical to [`Self::offer`]
+    /// (the engine accepts one *pair* per interval — the W lanes ride
+    /// the wide datapath and combine in parallel); on eviction the
+    /// W-lane evictee (key + cached tag + lanes) is appended to the
+    /// caller's sink and its forward-ready cycle returned.
+    pub fn offer_lanes(
+        &mut self,
+        arrive: Cycles,
+        key: Key,
+        lanes: &[Value],
+        op: AggOp,
+        evicted: &mut VectorEvictSink,
+    ) -> Option<Cycles> {
+        let start = self.accept(arrive);
+        let evict_old = self.eviction == EvictionPolicy::EvictOld;
+        let hash = self.table.hash_of(&key);
+        match self
+            .table
+            .offer_lanes_hashed(hash, key, lanes, op, evict_old, evicted)
+        {
+            LaneProbe::Aggregated => {
+                self.aggregated += 1;
+                self.latency_cycles += self.delays.fpe_hash + self.delays.fpe_aggregate;
+                None
+            }
+            LaneProbe::Inserted => {
+                self.inserted += 1;
+                self.latency_cycles += self.delays.fpe_hash + self.delays.fpe_aggregate;
+                None
+            }
+            LaneProbe::Evicted => {
+                self.evicted += 1;
+                let lat =
+                    self.delays.fpe_hash + self.delays.fpe_aggregate + self.delays.fpe_forward;
+                self.latency_cycles += lat;
+                Some(start + lat)
+            }
+        }
     }
 
     /// Flush: drain the SRAM table into `out` (appending, so one
@@ -158,7 +203,17 @@ impl Fpe {
     pub fn flush_into(&mut self, out: &mut Vec<(Key, Value)>) -> Cycles {
         let before = out.len();
         self.table.drain_into(out);
-        let bytes = ((out.len() - before) * (self.table.slot_key_width() + VALUE_BYTES)) as u64;
+        let bytes = ((out.len() - before) * self.table.slot_bytes()) as u64;
+        crate::sim::clock::stream_cycles(bytes)
+    }
+
+    /// Columnar flush for W-lane tables: drain into caller-owned
+    /// key/lane buffers; same stream-out cost model scaled by the
+    /// wider slots.
+    pub fn flush_lanes_into(&mut self, keys: &mut Vec<Key>, vals: &mut Vec<Value>) -> Cycles {
+        let before = keys.len();
+        self.table.drain_lanes_into(keys, vals);
+        let bytes = ((keys.len() - before) * self.table.slot_bytes()) as u64;
         crate::sim::clock::stream_cycles(bytes)
     }
 
@@ -177,8 +232,13 @@ impl Fpe {
         }
     }
 
+    /// Aggregation-ALU lane-combines this engine executed, read from
+    /// the table's single accounting point (`HashTable::combines`) so
+    /// the count cannot drift from the combines that actually ran —
+    /// scalar engines report exactly `aggregated`, W-lane engines
+    /// `aggregated × W`.
     pub fn agg_ops(&self) -> u64 {
-        self.agg.ops_executed
+        self.table.combines
     }
 }
 
@@ -267,5 +327,83 @@ mod tests {
         // 10 slots * 20B = 200 B = 13 beats.
         assert_eq!(cycles, 13);
         assert_eq!(f.table().occupancy(), 0);
+    }
+
+    #[test]
+    fn agg_ops_reports_actual_combines() {
+        // ISSUE 3 satellite: the engine's op count must equal the
+        // combines the table ran, not a bypassed side counter.
+        let mut f = fpe(64, 64);
+        let k = Key::from_id(1, 16);
+        f.offer(0, k, 5, AggOp::Sum);
+        assert_eq!(f.agg_ops(), 0, "insert is not a combine");
+        f.offer(10, k, 6, AggOp::Sum);
+        f.offer(20, k, 7, AggOp::Sum);
+        assert_eq!(f.agg_ops(), 2);
+        assert_eq!(f.agg_ops(), f.aggregated);
+    }
+
+    fn vfpe(pairs: usize, lanes: usize, fifo_cap: usize) -> Fpe {
+        let table =
+            HashTable::with_memory_lanes((pairs * (16 + lanes * 4)) as u64, 16, 2, lanes);
+        Fpe::new(
+            1,
+            table,
+            2,
+            StageDelays::default(),
+            EvictionPolicy::EvictOld,
+            fifo_cap,
+        )
+    }
+
+    #[test]
+    fn lane_offer_timing_and_counters_match_scalar_at_w1() {
+        let mut scalar = fpe(1, 64);
+        let mut lane = vfpe(1, 1, 64);
+        let mut sink = VectorEvictSink::new();
+        for id in 0..30u64 {
+            let k = Key::from_id(id % 5, 16);
+            let s = scalar.offer(id * 3, k, 1, AggOp::Sum);
+            let l = lane.offer_lanes(id * 3, k, &[1], AggOp::Sum, &mut sink);
+            match (s, l) {
+                (FpeOutcome::Kept, None) => {}
+                (FpeOutcome::Forwarded { key, value, hash, ready }, Some(lready)) => {
+                    assert_eq!(ready, lready);
+                    let (lk, lh) = *sink.keys.last().unwrap();
+                    assert_eq!((key, hash), (lk, lh));
+                    assert_eq!(value, *sink.lanes.last().unwrap());
+                }
+                other => panic!("paths diverged: {other:?}"),
+            }
+        }
+        assert_eq!(
+            (scalar.aggregated, scalar.inserted, scalar.evicted),
+            (lane.aggregated, lane.inserted, lane.evicted)
+        );
+        assert_eq!(scalar.fifo_writes, lane.fifo_writes);
+        assert_eq!(scalar.fifo_full_events, lane.fifo_full_events);
+        assert_eq!(scalar.latency_cycles, lane.latency_cycles);
+        assert_eq!(scalar.agg_ops(), lane.agg_ops());
+    }
+
+    #[test]
+    fn wide_engine_counts_w_combines_per_hit() {
+        let mut f = vfpe(64, 8, 64);
+        let mut sink = VectorEvictSink::new();
+        let k = Key::from_id(1, 16);
+        let lanes = [1i64; 8];
+        f.offer_lanes(0, k, &lanes, AggOp::Sum, &mut sink);
+        f.offer_lanes(10, k, &lanes, AggOp::Sum, &mut sink);
+        f.offer_lanes(20, k, &lanes, AggOp::Sum, &mut sink);
+        assert_eq!(f.aggregated, 2);
+        assert_eq!(f.agg_ops(), 16, "2 hits x 8 lanes");
+        // Columnar flush streams the wider slots.
+        let mut keys = Vec::new();
+        let mut vals = Vec::new();
+        let cycles = f.flush_lanes_into(&mut keys, &mut vals);
+        assert_eq!(keys.len(), 1);
+        assert_eq!(vals, vec![3i64; 8]);
+        // 1 slot * (16 + 32) B = 48 B = 3 beats.
+        assert_eq!(cycles, 3);
     }
 }

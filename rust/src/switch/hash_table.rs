@@ -32,7 +32,27 @@
 //! Slots within a bucket fill a compact prefix (`len` per block): the
 //! table has no per-key removal (only whole-table drain), so no holes
 //! can form and probes scan exactly the occupied slots.
+//!
+//! # W-lane vector values
+//!
+//! A table may be built with a *lane width* `W` ≥ 1
+//! ([`HashTable::with_memory_lanes`]): each slot then holds `W` values
+//! in one flat, stride-`W` lane buffer alongside the tag/key/len
+//! lanes, and an aggregate hit combines all `W` lanes in one
+//! autovectorizable [`AggOp::combine_slice`] pass — one hash + one
+//! probe amortized over `W` lane-combines, which is where multi-word
+//! tensor aggregation (allreduce) earns its keep.  Scalar tables are
+//! the degenerate `W = 1` case: same storage layout, same probe
+//! sequence, same counters.  Slot memory accounting scales with the
+//! lanes (`slot_key_width + W × VALUE_BYTES`), so a fixed-size BRAM
+//! holds proportionally fewer wide slots.
+//!
+//! All combines — scalar, batched, and lane-wise — are counted at this
+//! single point ([`HashTable::combines`], one count per lane-combine),
+//! so engine op counters cannot drift from the combines that actually
+//! ran.
 
+use crate::protocol::vector::VectorBatch;
 use crate::protocol::{AggOp, Key, KvPair, Value};
 use crate::switch::hash::fnv1a_key;
 use crate::util::fxhash::FxHashMap;
@@ -55,14 +75,69 @@ pub enum Probe {
     Evicted(Key, Value, u32),
 }
 
+/// What happened to a W-lane offer; the evictee (if any) was appended
+/// — key, cached tag, and all `W` lanes — to the caller's
+/// [`VectorEvictSink`], keeping the vector path allocation-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneProbe {
+    /// Key present — all `W` lanes combined in place.
+    Aggregated,
+    /// Key absent, free slot — lanes stored.
+    Inserted,
+    /// Key absent, bucket full — a W-lane pair left the table into the
+    /// caller's sink (resident under `EvictOld`, incoming otherwise).
+    Evicted,
+}
+
+/// Caller-owned, reusable buffer for W-lane evictees: keys ride with
+/// their cached tag (the FPE→BPE handoff never rehashes) and lane data
+/// stays columnar (flat, stride-`W`) — the eviction-path counterpart
+/// of [`VectorBatch`].
+#[derive(Clone, Debug, Default)]
+pub struct VectorEvictSink {
+    /// `(key, cached hash)` per evictee, in eviction order.
+    pub keys: Vec<(Key, u32)>,
+    /// Flat lane buffer; evictee `i` owns `lanes[i*W .. (i+1)*W]`.
+    pub lanes: Vec<Value>,
+}
+
+impl VectorEvictSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn clear(&mut self) {
+        self.keys.clear();
+        self.lanes.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Evictee `i`'s lane slice for a width-`w` table.
+    #[inline]
+    pub fn lane_slice(&self, i: usize, w: usize) -> &[Value] {
+        &self.lanes[i * w..(i + 1) * w]
+    }
+}
+
 /// Struct-of-arrays slot storage over fixed-size blocks of
-/// `spb` slots (one block per occupied bucket).
+/// `spb` slots (one block per occupied bucket), with a stride-`lanes`
+/// flat value buffer (`lanes == 1` is the scalar layout).
 #[derive(Clone, Debug)]
 struct SoaBlocks {
     spb: usize,
+    /// Value lanes per slot (W); `vals` stride.
+    lanes: usize,
     /// Cached hash (tag) per slot — the pre-filter lane.
     tags: Vec<u32>,
     keys: Vec<Key>,
+    /// Flat lane buffer; slot `s` owns `vals[s*lanes .. (s+1)*lanes]`.
     vals: Vec<Value>,
     /// Occupied slots per block; slots `[0, len)` of a block are live.
     lens: Vec<u8>,
@@ -71,12 +146,13 @@ struct SoaBlocks {
 }
 
 impl SoaBlocks {
-    fn with_blocks(spb: usize, blocks: usize) -> Self {
+    fn with_blocks(spb: usize, lanes: usize, blocks: usize) -> Self {
         Self {
             spb,
+            lanes,
             tags: vec![0; blocks * spb],
             keys: vec![Key::placeholder(); blocks * spb],
-            vals: vec![0; blocks * spb],
+            vals: vec![0; blocks * spb * lanes],
             lens: vec![0; blocks],
             cursors: vec![0; blocks],
         }
@@ -87,7 +163,7 @@ impl SoaBlocks {
         let blk = self.lens.len();
         self.tags.resize(self.tags.len() + self.spb, 0);
         self.keys.resize(self.keys.len() + self.spb, Key::placeholder());
-        self.vals.resize(self.vals.len() + self.spb, 0);
+        self.vals.resize(self.vals.len() + self.spb * self.lanes, 0);
         self.lens.push(0);
         self.cursors.push(0);
         blk
@@ -132,21 +208,49 @@ pub struct HashTable {
     occupancy: usize,
     pub lookups: u64,
     pub evictions: u64,
+    /// Lane-combines executed by this table — the single accounting
+    /// point for aggregation-ALU work (scalar hits count 1, W-lane
+    /// hits count W), so engine op counters cannot drift from the
+    /// combines that actually ran.
+    pub combines: u64,
 }
 
 impl HashTable {
     /// Build a table that fits `mem_bytes` of memory for keys padded to
     /// `slot_key_width`.  At least one bucket is always allocated.
     pub fn with_memory(mem_bytes: u64, slot_key_width: usize, slots_per_bucket: usize) -> Self {
+        Self::with_memory_lanes(mem_bytes, slot_key_width, slots_per_bucket, 1)
+    }
+
+    /// [`Self::with_memory`] with `lanes` value lanes per slot: a slot
+    /// costs `slot_key_width + lanes × VALUE_BYTES` bytes, so the same
+    /// memory holds proportionally fewer wide slots.  `lanes == 1` is
+    /// exactly the scalar table.
+    pub fn with_memory_lanes(
+        mem_bytes: u64,
+        slot_key_width: usize,
+        slots_per_bucket: usize,
+        lanes: usize,
+    ) -> Self {
         assert!(slot_key_width % 4 == 0 && slot_key_width > 0);
         assert!(slots_per_bucket > 0 && slots_per_bucket <= u8::MAX as usize);
-        let slot_bytes = (slot_key_width + VALUE_BYTES) as u64;
+        assert!(
+            (1..=crate::protocol::MAX_LANES).contains(&lanes),
+            "lane width {lanes} out of range"
+        );
+        let slot_bytes = (slot_key_width + lanes * VALUE_BYTES) as u64;
         let total_slots = (mem_bytes / slot_bytes).max(1) as usize;
         let buckets = (total_slots / slots_per_bucket).max(1);
-        let (blocks, map) = if buckets * slots_per_bucket <= DENSE_SLOT_LIMIT {
-            (SoaBlocks::with_blocks(slots_per_bucket, buckets), Mapping::Dense)
+        let (blocks, map) = if buckets * slots_per_bucket * lanes <= DENSE_SLOT_LIMIT {
+            (
+                SoaBlocks::with_blocks(slots_per_bucket, lanes, buckets),
+                Mapping::Dense,
+            )
         } else {
-            (SoaBlocks::with_blocks(slots_per_bucket, 0), Mapping::Sparse(FxHashMap::default()))
+            (
+                SoaBlocks::with_blocks(slots_per_bucket, lanes, 0),
+                Mapping::Sparse(FxHashMap::default()),
+            )
         };
         Self {
             slot_key_width,
@@ -157,11 +261,22 @@ impl HashTable {
             occupancy: 0,
             lookups: 0,
             evictions: 0,
+            combines: 0,
         }
     }
 
     pub fn slot_key_width(&self) -> usize {
         self.slot_key_width
+    }
+
+    /// Value lanes per slot (W); 1 for scalar tables.
+    pub fn lanes(&self) -> usize {
+        self.blocks.lanes
+    }
+
+    /// Bytes one slot occupies (padded key + all value lanes).
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_key_width + self.blocks.lanes * VALUE_BYTES
     }
 
     pub fn capacity_pairs(&self) -> usize {
@@ -173,7 +288,7 @@ impl HashTable {
     }
 
     pub fn mem_bytes(&self) -> u64 {
-        (self.capacity_pairs() * (self.slot_key_width + VALUE_BYTES)) as u64
+        (self.capacity_pairs() * self.slot_bytes()) as u64
     }
 
     /// Hash a key for this table's slot width (cacheable by callers).
@@ -230,6 +345,7 @@ impl HashTable {
     ) -> Probe {
         debug_assert!(key.len() <= self.slot_key_width);
         debug_assert_eq!(hash, self.hash_of(&key));
+        debug_assert_eq!(self.blocks.lanes, 1, "scalar offer on a W-lane table");
         self.lookups += 1;
         let b = (hash as usize) % self.buckets;
         let blk = Self::block_for(&mut self.map, &mut self.blocks, b);
@@ -243,6 +359,7 @@ impl HashTable {
             if self.blocks.tags[base + i] == hash && self.blocks.keys[base + i] == key {
                 let v = &mut self.blocks.vals[base + i];
                 *v = op.combine(*v, value);
+                self.combines += 1;
                 return Probe::Aggregated;
             }
         }
@@ -305,6 +422,127 @@ impl HashTable {
         (aggregated, inserted)
     }
 
+    /// Offer a W-lane pair: aggregate all lanes, insert, or evict.  The
+    /// evictee (key + cached tag + lanes) is appended to the caller's
+    /// sink, keeping the path allocation-free.  `lanes.len()` must
+    /// equal the table's lane width; a 1-lane call is behaviourally
+    /// identical to [`Self::offer`].
+    #[inline]
+    pub fn offer_lanes(
+        &mut self,
+        key: Key,
+        lanes: &[Value],
+        op: AggOp,
+        evict_old: bool,
+        evicted: &mut VectorEvictSink,
+    ) -> LaneProbe {
+        let hash = self.hash_of(&key);
+        self.offer_lanes_hashed(hash, key, lanes, op, evict_old, evicted)
+    }
+
+    /// [`Self::offer_lanes`] with the key's hash precomputed.  The
+    /// probe sequence (tag pre-filter, prefix fill, round-robin
+    /// eviction cursor) is exactly [`Self::offer_hashed`]'s; only the
+    /// value move widens from one ALU op to a stride-`W` slice combine.
+    pub fn offer_lanes_hashed(
+        &mut self,
+        hash: u32,
+        key: Key,
+        lanes: &[Value],
+        op: AggOp,
+        evict_old: bool,
+        evicted: &mut VectorEvictSink,
+    ) -> LaneProbe {
+        let w = self.blocks.lanes;
+        debug_assert_eq!(lanes.len(), w, "lane width mismatch");
+        debug_assert!(key.len() <= self.slot_key_width);
+        debug_assert_eq!(hash, self.hash_of(&key));
+        self.lookups += 1;
+        let b = (hash as usize) % self.buckets;
+        let blk = Self::block_for(&mut self.map, &mut self.blocks, b);
+        let spb = self.slots_per_bucket;
+        let base = blk * spb;
+        let len = self.blocks.lens[blk] as usize;
+
+        for i in 0..len {
+            if self.blocks.tags[base + i] == hash && self.blocks.keys[base + i] == key {
+                let vo = (base + i) * w;
+                op.combine_slice(&mut self.blocks.vals[vo..vo + w], lanes);
+                self.combines += w as u64;
+                return LaneProbe::Aggregated;
+            }
+        }
+        if len < spb {
+            self.blocks.tags[base + len] = hash;
+            self.blocks.keys[base + len] = key;
+            let vo = (base + len) * w;
+            self.blocks.vals[vo..vo + w].copy_from_slice(lanes);
+            self.blocks.lens[blk] = (len + 1) as u8;
+            self.occupancy += 1;
+            return LaneProbe::Inserted;
+        }
+        self.evictions += 1;
+        if evict_old {
+            let cur = self.blocks.cursors[blk] as usize;
+            self.blocks.cursors[blk] = if cur + 1 >= spb { 0 } else { (cur + 1) as u8 };
+            let vi = base + cur;
+            let old_key = std::mem::replace(&mut self.blocks.keys[vi], key);
+            let old_tag = std::mem::replace(&mut self.blocks.tags[vi], hash);
+            let vo = vi * w;
+            evicted.keys.push((old_key, old_tag));
+            evicted.lanes.extend_from_slice(&self.blocks.vals[vo..vo + w]);
+            self.blocks.vals[vo..vo + w].copy_from_slice(lanes);
+        } else {
+            evicted.keys.push((key, hash));
+            evicted.lanes.extend_from_slice(lanes);
+        }
+        LaneProbe::Evicted
+    }
+
+    /// Offer a whole columnar batch in order, appending evictees to
+    /// `evicted`; returns `(aggregated, inserted)` counts.  Two-phase
+    /// per sub-batch like [`Self::offer_batch`]: the hash unit runs as
+    /// its own tight loop over the key column (the columnar layout is
+    /// what makes that loop contiguous), then the probe loop walks the
+    /// table with every hash in hand.  Outcomes are bit-identical to
+    /// calling [`Self::offer_lanes`] per pair.
+    pub fn offer_lanes_batch(
+        &mut self,
+        batch: &VectorBatch,
+        op: AggOp,
+        evict_old: bool,
+        evicted: &mut VectorEvictSink,
+    ) -> (u64, u64) {
+        const LANE: usize = 64;
+        let mut hashes = [0u32; LANE];
+        let mut aggregated = 0u64;
+        let mut inserted = 0u64;
+        let n = batch.len();
+        let mut pos = 0usize;
+        while pos < n {
+            let end = (pos + LANE).min(n);
+            for (h, i) in hashes.iter_mut().zip(pos..end) {
+                *h = self.hash_of(&batch.key(i));
+            }
+            for (&hash, i) in hashes.iter().zip(pos..end) {
+                match self.offer_lanes_hashed(
+                    hash,
+                    batch.key(i),
+                    batch.lane_slice(i),
+                    op,
+                    evict_old,
+                    evicted,
+                ) {
+                    LaneProbe::Aggregated => aggregated += 1,
+                    LaneProbe::Inserted => inserted += 1,
+                    LaneProbe::Evicted => {}
+                }
+            }
+            pos = end;
+        }
+        (aggregated, inserted)
+    }
+
     /// Read a key's current value (tests / reducer verification).
     pub fn get(&self, key: &Key) -> Option<Value> {
         self.get_hashed(self.hash_of(key), key)
@@ -315,6 +553,7 @@ impl HashTable {
     /// not rehash the key.
     pub fn get_hashed(&self, hash: u32, key: &Key) -> Option<Value> {
         debug_assert_eq!(hash, self.hash_of(key));
+        debug_assert_eq!(self.blocks.lanes, 1, "scalar get on a W-lane table");
         let b = (hash as usize) % self.buckets;
         let blk = self.block_for_read(b)?;
         let base = blk * self.slots_per_bucket;
@@ -324,11 +563,28 @@ impl HashTable {
             .map(|i| self.blocks.vals[base + i])
     }
 
+    /// Read a key's current lane slice (tests / reducer verification).
+    pub fn get_lanes(&self, key: &Key) -> Option<&[Value]> {
+        let hash = self.hash_of(key);
+        let w = self.blocks.lanes;
+        let b = (hash as usize) % self.buckets;
+        let blk = self.block_for_read(b)?;
+        let base = blk * self.slots_per_bucket;
+        let len = self.blocks.lens[blk] as usize;
+        (0..len)
+            .find(|&i| self.blocks.tags[base + i] == hash && self.blocks.keys[base + i] == *key)
+            .map(|i| {
+                let vo = (base + i) * w;
+                &self.blocks.vals[vo..vo + w]
+            })
+    }
+
     /// Drain all resident pairs (flush to next hop / next stage) into
     /// `out`, in memory order (bucket index, then slot) — the BPE-Flush
     /// stage streams this out of RAM.  Appends without clearing so
     /// callers can reuse one scratch buffer across engines.
     pub fn drain_into(&mut self, out: &mut Vec<(Key, Value)>) {
+        debug_assert_eq!(self.blocks.lanes, 1, "scalar drain on a W-lane table");
         let spb = self.slots_per_bucket;
         match &mut self.map {
             Mapping::Dense => {
@@ -367,8 +623,46 @@ impl HashTable {
         out
     }
 
+    /// Drain all resident W-lane pairs in memory order into columnar
+    /// caller buffers (`out_keys[i]` owns
+    /// `out_vals[i*W .. (i+1)*W]`) — the vector counterpart of
+    /// [`Self::drain_into`], byte-identical to it at `W = 1` modulo the
+    /// column split.  Appends without clearing so one scratch pair
+    /// serves every engine.
+    pub fn drain_lanes_into(&mut self, out_keys: &mut Vec<Key>, out_vals: &mut Vec<Value>) {
+        let spb = self.slots_per_bucket;
+        let w = self.blocks.lanes;
+        match &mut self.map {
+            Mapping::Dense => {
+                for blk in 0..self.blocks.lens.len() {
+                    let len = self.blocks.lens[blk] as usize;
+                    let base = blk * spb;
+                    out_keys.extend_from_slice(&self.blocks.keys[base..base + len]);
+                    out_vals.extend_from_slice(&self.blocks.vals[base * w..(base + len) * w]);
+                    self.blocks.lens[blk] = 0;
+                    self.blocks.cursors[blk] = 0;
+                }
+            }
+            Mapping::Sparse(m) => {
+                let mut ids: Vec<(u32, u32)> = m.iter().map(|(&b, &blk)| (b, blk)).collect();
+                ids.sort_unstable();
+                for (_, blk) in ids {
+                    let blk = blk as usize;
+                    let len = self.blocks.lens[blk] as usize;
+                    let base = blk * spb;
+                    out_keys.extend_from_slice(&self.blocks.keys[base..base + len]);
+                    out_vals.extend_from_slice(&self.blocks.vals[base * w..(base + len) * w]);
+                }
+                m.clear();
+                self.blocks.clear();
+            }
+        }
+        self.occupancy = 0;
+    }
+
     /// Iterate resident pairs without draining (arbitrary order).
     pub fn iter(&self) -> impl Iterator<Item = (&Key, Value)> + '_ {
+        debug_assert_eq!(self.blocks.lanes, 1, "scalar iter on a W-lane table");
         let spb = self.slots_per_bucket;
         let blocks = &self.blocks;
         blocks.lens.iter().enumerate().flat_map(move |(blk, &len)| {
@@ -376,6 +670,19 @@ impl HashTable {
             blocks.keys[base..base + len as usize]
                 .iter()
                 .zip(blocks.vals[base..base + len as usize].iter().copied())
+        })
+    }
+
+    /// Iterate resident W-lane pairs without draining (memory order).
+    pub fn iter_lanes(&self) -> impl Iterator<Item = (&Key, &[Value])> + '_ {
+        let spb = self.slots_per_bucket;
+        let w = self.blocks.lanes;
+        let blocks = &self.blocks;
+        blocks.lens.iter().enumerate().flat_map(move |(blk, &len)| {
+            let base = blk * spb;
+            blocks.keys[base..base + len as usize]
+                .iter()
+                .zip(blocks.vals[base * w..(base + len as usize) * w].chunks_exact(w))
         })
     }
 }
@@ -593,5 +900,245 @@ mod tests {
             panic!()
         };
         assert_eq!(tag, t.hash_of(&ek));
+    }
+
+    fn vtable(pairs: usize, width: usize, spb: usize, lanes: usize) -> HashTable {
+        HashTable::with_memory_lanes(
+            (pairs * (width + lanes * VALUE_BYTES)) as u64,
+            width,
+            spb,
+            lanes,
+        )
+    }
+
+    #[test]
+    fn lane_memory_accounting_scales_capacity() {
+        // Same bytes, 8 lanes: a slot is 16+32 B instead of 16+4 B.
+        let scalar = HashTable::with_memory(4 << 20, 16, 2);
+        let wide = HashTable::with_memory_lanes(4 << 20, 16, 2, 8);
+        assert_eq!(wide.lanes(), 8);
+        assert_eq!(wide.slot_bytes(), 16 + 8 * VALUE_BYTES);
+        assert_eq!(scalar.lanes(), 1);
+        assert_eq!(scalar.slot_bytes(), 20);
+        assert!(wide.capacity_pairs() < scalar.capacity_pairs() / 2);
+        assert!(wide.mem_bytes() <= 4 << 20);
+    }
+
+    #[test]
+    fn w1_lane_path_matches_scalar_path_exactly() {
+        // Same offers through offer() and offer_lanes() at W = 1:
+        // identical outcomes, drained state, and counters.
+        let pairs: Vec<KvPair> = (0..700u64)
+            .map(|id| KvPair::new(Key::from_id(id % 83, 16), (id % 11) as Value - 5))
+            .collect();
+        for evict_old in [true, false] {
+            let mut scalar = table(32, 16, 2);
+            let mut svec: Vec<(Key, Value, u32)> = Vec::new();
+            for p in &pairs {
+                if let Probe::Evicted(k, v, h) = scalar.offer(p.key, p.value, AggOp::Sum, evict_old)
+                {
+                    svec.push((k, v, h));
+                }
+            }
+            let mut lane = table(32, 16, 2);
+            let mut sink = VectorEvictSink::new();
+            for p in &pairs {
+                lane.offer_lanes(
+                    p.key,
+                    std::slice::from_ref(&p.value),
+                    AggOp::Sum,
+                    evict_old,
+                    &mut sink,
+                );
+            }
+            let lvec: Vec<(Key, Value, u32)> = sink
+                .keys
+                .iter()
+                .zip(&sink.lanes)
+                .map(|(&(k, h), &v)| (k, v, h))
+                .collect();
+            assert_eq!(svec, lvec, "evict_old={evict_old}");
+            assert_eq!(scalar.drain(), lane.drain());
+            assert_eq!(scalar.lookups, lane.lookups);
+            assert_eq!(scalar.evictions, lane.evictions);
+            assert_eq!(scalar.combines, lane.combines);
+        }
+    }
+
+    #[test]
+    fn wide_aggregate_combines_every_lane() {
+        let mut t = vtable(64, 16, 2, 8);
+        let k = Key::from_id(5, 12);
+        let a: Vec<Value> = (0..8).collect();
+        let b: Vec<Value> = (0..8).map(|i| i * 10).collect();
+        let mut sink = VectorEvictSink::new();
+        assert_eq!(
+            t.offer_lanes(k, &a, AggOp::Sum, true, &mut sink),
+            LaneProbe::Inserted
+        );
+        assert_eq!(
+            t.offer_lanes(k, &b, AggOp::Sum, true, &mut sink),
+            LaneProbe::Aggregated
+        );
+        let want: Vec<Value> = (0..8).map(|i| i + i * 10).collect();
+        assert_eq!(t.get_lanes(&k), Some(want.as_slice()));
+        assert!(sink.is_empty());
+        assert_eq!(t.combines, 8);
+    }
+
+    #[test]
+    fn wide_eviction_carries_all_lanes_and_tag() {
+        let mut t = vtable(1, 16, 1, 4);
+        let k1 = Key::from_id(1, 16);
+        let k2 = Key::from_id(2, 16);
+        let mut sink = VectorEvictSink::new();
+        t.offer_lanes(k1, &[1, 2, 3, 4], AggOp::Sum, true, &mut sink);
+        assert_eq!(
+            t.offer_lanes(k2, &[9, 9, 9, 9], AggOp::Sum, true, &mut sink),
+            LaneProbe::Evicted
+        );
+        assert_eq!(sink.len(), 1);
+        let (ek, tag) = sink.keys[0];
+        assert_eq!(ek, k1);
+        assert_eq!(tag, t.hash_of(&k1));
+        assert_eq!(sink.lane_slice(0, 4), &[1, 2, 3, 4]);
+        assert_eq!(t.get_lanes(&k2), Some([9i64, 9, 9, 9].as_slice()));
+
+        // ForwardNew: the incoming pair leaves instead.
+        let mut t = vtable(1, 16, 1, 4);
+        let mut sink = VectorEvictSink::new();
+        t.offer_lanes(k1, &[1, 2, 3, 4], AggOp::Sum, false, &mut sink);
+        t.offer_lanes(k2, &[9, 8, 7, 6], AggOp::Sum, false, &mut sink);
+        assert_eq!(sink.keys[0].0, k2);
+        assert_eq!(sink.lane_slice(0, 4), &[9, 8, 7, 6]);
+        assert_eq!(t.get_lanes(&k1), Some([1i64, 2, 3, 4].as_slice()));
+    }
+
+    #[test]
+    fn lane_batch_matches_per_pair_offers() {
+        let w = 16;
+        let mut batch = VectorBatch::new(w);
+        let mut lanes: Vec<Value> = vec![0; w];
+        for id in 0..400u64 {
+            for (l, v) in lanes.iter_mut().enumerate() {
+                *v = (id % 13) as i64 + l as i64;
+            }
+            batch.push(Key::from_id(id % 37, 16), &lanes);
+        }
+        let mut one = vtable(16, 16, 2, w);
+        let mut one_sink = VectorEvictSink::new();
+        let (mut agg1, mut ins1) = (0u64, 0u64);
+        for i in 0..batch.len() {
+            match one.offer_lanes(batch.key(i), batch.lane_slice(i), AggOp::Sum, true, &mut one_sink)
+            {
+                LaneProbe::Aggregated => agg1 += 1,
+                LaneProbe::Inserted => ins1 += 1,
+                LaneProbe::Evicted => {}
+            }
+        }
+        let mut batched = vtable(16, 16, 2, w);
+        let mut batch_sink = VectorEvictSink::new();
+        let (agg2, ins2) = batched.offer_lanes_batch(&batch, AggOp::Sum, true, &mut batch_sink);
+        assert_eq!((agg1, ins1), (agg2, ins2));
+        assert_eq!(one_sink.keys, batch_sink.keys);
+        assert_eq!(one_sink.lanes, batch_sink.lanes);
+        assert_eq!(one.combines, batched.combines);
+        let mut k1 = Vec::new();
+        let mut v1 = Vec::new();
+        one.drain_lanes_into(&mut k1, &mut v1);
+        let mut k2 = Vec::new();
+        let mut v2 = Vec::new();
+        batched.drain_lanes_into(&mut k2, &mut v2);
+        assert_eq!((k1, v1), (k2, v2));
+    }
+
+    #[test]
+    fn lane_value_conservation_under_sum() {
+        // Per-lane conservation: sum(inputs) == sum(resident) +
+        // sum(evicted), lane by lane.
+        let w = 4;
+        let mut t = vtable(32, 16, 2, w);
+        let mut sink = VectorEvictSink::new();
+        let mut input_sums = vec![0i64; w];
+        for id in 0..500u64 {
+            let lanes: Vec<Value> = (0..w as i64).map(|l| (id % 13) as i64 * (l + 1)).collect();
+            for (s, v) in input_sums.iter_mut().zip(&lanes) {
+                *s += v;
+            }
+            t.offer_lanes(Key::from_id(id % 97, 16), &lanes, AggOp::Sum, true, &mut sink);
+        }
+        let mut totals = vec![0i64; w];
+        for (_, lanes) in t.iter_lanes() {
+            for (s, v) in totals.iter_mut().zip(lanes) {
+                *s += v;
+            }
+        }
+        for i in 0..sink.len() {
+            for (s, v) in totals.iter_mut().zip(sink.lane_slice(i, w)) {
+                *s += v;
+            }
+        }
+        assert_eq!(totals, input_sums);
+    }
+
+    #[test]
+    fn combines_counter_is_the_single_accounting_point() {
+        // ISSUE 3 satellite: scalar offers, batched offers, and the
+        // W=1 lane path must report identical combine counts, equal to
+        // the aggregated-hit count — no path bypasses the counter.
+        let pairs: Vec<KvPair> = (0..600u64)
+            .map(|id| KvPair::new(Key::from_id(id % 53, 16), 1))
+            .collect();
+        let mut scalar = table(64, 16, 2);
+        let mut hits = 0u64;
+        for p in &pairs {
+            if scalar.offer(p.key, p.value, AggOp::Sum, true) == Probe::Aggregated {
+                hits += 1;
+            }
+        }
+        assert!(hits > 0);
+        assert_eq!(scalar.combines, hits);
+
+        let mut batched = table(64, 16, 2);
+        let mut evicted: Vec<(Key, Value, u32)> = Vec::new();
+        let (agg, _) = batched.offer_batch(&pairs, AggOp::Sum, true, &mut evicted);
+        assert_eq!(batched.combines, agg);
+        assert_eq!(batched.combines, scalar.combines);
+
+        // W lanes: combines scale by exactly W per aggregated hit.
+        let w = 8;
+        let mut wide = vtable(64, 16, 2, w);
+        let mut sink = VectorEvictSink::new();
+        let lanes: Vec<Value> = vec![1; w];
+        let mut whits = 0u64;
+        for p in &pairs {
+            if wide.offer_lanes(p.key, &lanes, AggOp::Sum, true, &mut sink)
+                == LaneProbe::Aggregated
+            {
+                whits += 1;
+            }
+        }
+        assert_eq!(whits, hits);
+        assert_eq!(wide.combines, hits * w as u64);
+    }
+
+    #[test]
+    fn sparse_wide_table_drains_columnar() {
+        // A paper-scale wide region stays occupancy-proportional and
+        // its columnar drain returns every lane once.
+        let mut t = HashTable::with_memory_lanes(1 << 30, 64, 4, 64);
+        assert!(matches!(t.map, Mapping::Sparse(_)));
+        let lanes: Vec<Value> = (0..64).collect();
+        let mut sink = VectorEvictSink::new();
+        for id in 0..500u64 {
+            t.offer_lanes(Key::from_id(id, 64), &lanes, AggOp::Sum, true, &mut sink);
+        }
+        assert_eq!(t.occupancy(), 500);
+        let mut keys = Vec::new();
+        let mut vals = Vec::new();
+        t.drain_lanes_into(&mut keys, &mut vals);
+        assert_eq!(keys.len(), 500);
+        assert_eq!(vals.len(), 500 * 64);
+        assert!(t.blocks.lens.is_empty(), "sparse drain releases blocks");
     }
 }

@@ -36,7 +36,7 @@ impl HeaderExtract {
         match pkt {
             Packet::Data(_) => Dispatch::Forward,
             Packet::Configure(_) => Dispatch::Configure,
-            Packet::Aggregation(_) => {
+            Packet::Aggregation(_) | Packet::VectorAggregation(_) => {
                 self.agg_packets += 1;
                 Dispatch::Aggregate
             }
@@ -50,6 +50,7 @@ mod tests {
     use super::*;
     use crate::protocol::{
         AckKind, AggOp, AggregationPacket, ConfigurePacket, DataPacket, LaunchPacket, TreeId,
+        VectorAggregationPacket, VectorBatch,
     };
 
     #[test]
@@ -80,7 +81,16 @@ mod tests {
             Dispatch::Control
         );
         assert_eq!(h.classify(&Packet::Ack(AckKind::Switch)), Dispatch::Control);
-        assert_eq!(h.packets_seen, 5);
-        assert_eq!(h.agg_packets, 1);
+        assert_eq!(
+            h.classify(&Packet::VectorAggregation(VectorAggregationPacket {
+                tree: TreeId(0),
+                op: AggOp::Sum,
+                eot: false,
+                batch: VectorBatch::new(8),
+            })),
+            Dispatch::Aggregate
+        );
+        assert_eq!(h.packets_seen, 6);
+        assert_eq!(h.agg_packets, 2);
     }
 }

@@ -17,7 +17,6 @@
 //! `sim::dram`).  [`switch_sim`] assembles the whole device and keeps
 //! the cycle accounting that regenerates Tables 2–3.
 
-pub mod aggregate;
 pub mod bpe;
 pub mod config;
 pub mod crossbar;
@@ -32,7 +31,9 @@ pub mod scheduler;
 pub mod switch_sim;
 
 pub use config::{EvictionPolicy, MemoryPolicy, StageDelays, SwitchConfig};
-pub use hash_table::{HashTable, Probe};
+pub use hash_table::{HashTable, LaneProbe, Probe, VectorEvictSink};
 pub use parallel::Parallelism;
 pub use payload_analyzer::GroupMap;
-pub use switch_sim::{IngestOutput, IngestSink, SwitchAggSwitch, SwitchStats};
+pub use switch_sim::{
+    vector_sink_to_batch, IngestOutput, IngestSink, SwitchAggSwitch, SwitchStats, VectorSink,
+};

@@ -74,9 +74,18 @@ impl PayloadAnalyzer {
     /// datapath, accounted by the caller.
     #[inline]
     pub fn classify(&mut self, p: &KvPair) -> usize {
-        let g = self.map.group_of(p.key.len());
+        self.classify_parts(p.key.len(), p.encoded_len())
+    }
+
+    /// [`Self::classify`] from the raw parts — the key length picks
+    /// the group regardless of how wide the value payload is, so the
+    /// W-lane vector path classifies through the same analyzer with
+    /// its own (lane-scaled) encoded length.
+    #[inline]
+    pub fn classify_parts(&mut self, key_len: usize, encoded_len: usize) -> usize {
+        let g = self.map.group_of(key_len);
         self.pairs_per_group[g] += 1;
-        self.bytes_in += p.encoded_len() as u64;
+        self.bytes_in += encoded_len as u64;
         g
     }
 

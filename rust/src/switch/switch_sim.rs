@@ -21,9 +21,10 @@
 //! allocation (see `EXPERIMENTS.md` §Perf).
 
 use crate::protocol::packet::MtuChunks;
+use crate::protocol::vector::{max_vec_payload, vec_fixed_len, VectorChunks};
 use crate::protocol::{
-    AggOp, AggregationPacket, Key, KvPair, TreeConfig, TreeId, Value, AGG_FIXED_LEN,
-    HEADER_OVERHEAD, MAX_AGG_PAYLOAD,
+    AggOp, AggregationPacket, Key, KvPair, TreeConfig, TreeId, Value, VectorBatch,
+    AGG_FIXED_LEN, HEADER_OVERHEAD,
 };
 use crate::sim::clock::{Cycles, CLOCK_HZ};
 use crate::switch::bpe::{Bpe, BpeOutcome};
@@ -31,7 +32,7 @@ use crate::switch::config::{ConfigModule, EvictionPolicy, SwitchConfig};
 use crate::switch::crossbar::Crossbar;
 use crate::switch::fpe::{Fpe, FpeOutcome};
 use crate::switch::forwarding::Forwarding;
-use crate::switch::hash_table::HashTable;
+use crate::switch::hash_table::{HashTable, VectorEvictSink};
 use crate::switch::header_extract::HeaderExtract;
 use crate::switch::parallel::{merge_by_seq, run_workers, JobPair, Parallelism, WorkerGroup};
 use crate::switch::payload_analyzer::{GroupMap, PayloadAnalyzer};
@@ -142,11 +143,76 @@ impl IngestSink {
     }
 }
 
+/// Caller-owned, reusable output sink for the W-lane vector ingest
+/// path — the columnar counterpart of [`IngestSink`]: the switch
+/// *appends*, the caller clears, so steady-state vector ingest does no
+/// per-packet heap allocation once the buffers have warmed up.
+#[derive(Clone, Debug)]
+pub struct VectorSink {
+    /// W-lane pairs leaving downstream immediately (evictions,
+    /// overflow), in emission order.
+    pub forwarded: VectorBatch,
+    /// Residents streamed out by end-of-tree flushes.
+    pub flushed: VectorBatch,
+    /// Number of tree completions (flushes) recorded since `clear`.
+    pub flushes: u32,
+    /// Reused columnar engine-drain scratch.
+    scratch_keys: Vec<Key>,
+    scratch_vals: Vec<Value>,
+}
+
+impl VectorSink {
+    pub fn new(lanes: usize) -> Self {
+        Self {
+            forwarded: VectorBatch::new(lanes),
+            flushed: VectorBatch::new(lanes),
+            flushes: 0,
+            scratch_keys: Vec::new(),
+            scratch_vals: Vec::new(),
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.forwarded.lanes()
+    }
+
+    /// Empty all buffers, keeping their capacity.
+    pub fn clear(&mut self) {
+        self.forwarded.clear();
+        self.flushed.clear();
+        self.flushes = 0;
+        self.scratch_keys.clear();
+        self.scratch_vals.clear();
+    }
+
+    /// Total buffer capacity in elements (steady-state alloc checks).
+    pub fn capacity(&self) -> usize {
+        self.forwarded.capacity()
+            + self.flushed.capacity()
+            + self.scratch_keys.capacity()
+            + self.scratch_vals.capacity()
+    }
+}
+
+/// Concatenate a vector sink's stream + flush output (flushes only
+/// happen after the final EoT, so this preserves emission order).
+pub fn vector_sink_to_batch(sink: &VectorSink) -> VectorBatch {
+    let mut out = VectorBatch::with_capacity(
+        sink.forwarded.lanes(),
+        sink.forwarded.len() + sink.flushed.len(),
+    );
+    out.extend_from_batch(&sink.forwarded);
+    out.extend_from_batch(&sink.flushed);
+    out
+}
+
 /// One aggregation tree's slice of the data plane.
 struct TreeEngine {
     op: AggOp,
     children: u16,
     eot_seen: u16,
+    /// Value lanes per key (W); 1 = the scalar data plane.
+    lanes: usize,
     analyzer: PayloadAnalyzer,
     crossbar: Crossbar,
     scheduler: Scheduler,
@@ -154,19 +220,31 @@ struct TreeEngine {
     bpe: Option<Bpe>,
     /// Byte-pacing accumulator for input arrivals.
     bytes_arrived: u64,
+    /// Reused FPE-eviction scratch for the vector path (one evictee).
+    evict_scratch: VectorEvictSink,
+    /// Reused BPE-overflow scratch for the vector path (one pair).
+    overflow_scratch: VectorEvictSink,
     stats: SwitchStats,
 }
 
 impl TreeEngine {
-    fn new(cfg: &SwitchConfig, op: AggOp, children: u16, fpe_share: u64, bpe_share: Option<u64>) -> Self {
+    fn new(
+        cfg: &SwitchConfig,
+        op: AggOp,
+        children: u16,
+        fpe_share: u64,
+        bpe_share: Option<u64>,
+        lanes: usize,
+    ) -> Self {
         let fpe_mem_each = fpe_share / cfg.n_groups as u64;
         let map = GroupMap::new(cfg.n_groups, cfg.key_base);
         let fpes = (0..cfg.n_groups)
             .map(|g| {
-                let table = HashTable::with_memory(
+                let table = HashTable::with_memory_lanes(
                     fpe_mem_each,
                     cfg.group_width(g),
                     cfg.fpe_slots_per_bucket,
+                    lanes,
                 );
                 Fpe::new(
                     g,
@@ -178,17 +256,20 @@ impl TreeEngine {
                 )
             })
             .collect();
-        let bpe = bpe_share.map(|m| Bpe::for_tree(cfg, m));
+        let bpe = bpe_share.map(|m| Bpe::for_tree_lanes(cfg, m, lanes));
         Self {
             op,
             children,
             eot_seen: 0,
+            lanes,
             analyzer: PayloadAnalyzer::new(map),
             crossbar: Crossbar::new(cfg.n_groups, cfg.delays.crossbar),
             scheduler: Scheduler::new(cfg.n_groups, SchedPolicy::RoundRobin),
             fpes,
             bpe,
             bytes_arrived: 0,
+            evict_scratch: VectorEvictSink::new(),
+            overflow_scratch: VectorEvictSink::new(),
             stats: SwitchStats::default(),
         }
     }
@@ -203,13 +284,17 @@ impl TreeEngine {
         self.bytes_arrived * PACE_NUM / (PACE_DEN * ports)
     }
 
-    /// Packet-header arrival accounting shared by the serial and
-    /// sharded front ends — with [`Self::account_pair`], the single
-    /// source of the input-pacing rule, so the two paths cannot drift.
+    /// Packet-header arrival accounting shared by the serial, sharded,
+    /// and vector front ends — with [`Self::account_pair`], the single
+    /// source of the input-pacing rule, so the paths cannot drift.
+    /// For scalar trees (`lanes == 1`) the fixed length is exactly
+    /// [`AGG_FIXED_LEN`]; W-lane trees carry the 2-byte lane count.
     fn account_packet_header(&mut self) {
+        let fixed = (HEADER_OVERHEAD + vec_fixed_len(self.lanes)) as u64;
+        debug_assert!(self.lanes > 1 || fixed == (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64);
         self.stats.packets_in += 1;
-        self.stats.bytes_in += (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64;
-        self.bytes_arrived += (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64;
+        self.stats.bytes_in += fixed;
+        self.bytes_arrived += fixed;
     }
 
     /// Per-pair arrival accounting (bytes, pacing, payload analyzer);
@@ -234,6 +319,11 @@ impl TreeEngine {
         header_delay: Cycles,
         out: &mut IngestSink,
     ) {
+        assert_eq!(
+            self.lanes, 1,
+            "scalar ingest on a tree configured for {}-lane vector payloads",
+            self.lanes
+        );
         self.account_packet_header();
 
         for p in pairs {
@@ -343,14 +433,135 @@ impl TreeEngine {
         self.stats.makespan_cycles = self.arrival_cycle();
     }
 
+    /// Ingest one packet's worth of W-lane vector pairs — the columnar
+    /// counterpart of [`Self::ingest_pairs`], sharing the pacing,
+    /// analyzer, crossbar, FPE/BPE timing and stats machinery; at
+    /// `W = 1` it is byte-identical to the scalar path.  Always runs
+    /// on the serial reference engine (the sharded engine's ownership
+    /// seams are unchanged by lane width; vector sharding can reuse
+    /// them later).
+    fn ingest_vector_range(
+        &mut self,
+        batch: &VectorBatch,
+        range: std::ops::Range<usize>,
+        eot: bool,
+        header_delay: Cycles,
+        out: &mut VectorSink,
+    ) {
+        assert_eq!(
+            batch.lanes(),
+            self.lanes,
+            "batch lane width does not match the tree's configured width"
+        );
+        let w = self.lanes;
+        self.account_packet_header();
+
+        for i in range {
+            let key = batch.key(i);
+            let lanes = batch.lane_slice(i);
+            let el = batch.encoded_len_pair(i);
+            self.stats.bytes_in += el as u64;
+            self.bytes_arrived += el as u64;
+            self.stats.pairs_in += 1;
+            let arrive = self.arrival_cycle() + header_delay;
+            let g = self.analyzer.classify_parts(key.len(), el);
+            let deliver = self.crossbar.route(arrive, g);
+            self.evict_scratch.clear();
+            let forwarded =
+                self.fpes[g].offer_lanes(deliver, key, lanes, self.op, &mut self.evict_scratch);
+            if let Some(ready) = forwarded {
+                let (ek, ehash) = self.evict_scratch.keys[0];
+                match &mut self.bpe {
+                    Some(bpe) => {
+                        let granted = self.scheduler.grant_single(g);
+                        debug_assert_eq!(granted, g);
+                        self.overflow_scratch.clear();
+                        let overflow = bpe.offer_lanes_hashed(
+                            ready,
+                            g,
+                            (ek, ehash),
+                            self.evict_scratch.lane_slice(0, w),
+                            self.op,
+                            &mut self.overflow_scratch,
+                        );
+                        if overflow.is_some() {
+                            let (ok, _) = self.overflow_scratch.keys[0];
+                            let olanes = self.overflow_scratch.lane_slice(0, w);
+                            self.stats.pairs_out_stream += 1;
+                            self.stats.bytes_out += crate::protocol::vector::encoded_vec_len(
+                                ok.len(),
+                                w,
+                                crate::protocol::vector::lane_value_width(olanes),
+                            ) as u64;
+                            out.forwarded.push(ok, olanes);
+                        }
+                    }
+                    None => {
+                        let elanes = self.evict_scratch.lane_slice(0, w);
+                        self.stats.pairs_out_stream += 1;
+                        self.stats.bytes_out += crate::protocol::vector::encoded_vec_len(
+                            ek.len(),
+                            w,
+                            crate::protocol::vector::lane_value_width(elanes),
+                        ) as u64;
+                        out.forwarded.push(ek, elanes);
+                    }
+                }
+            }
+        }
+
+        if eot {
+            self.eot_seen += 1;
+            if self.eot_seen >= self.children {
+                self.flush_vector_into(out);
+            }
+        }
+        self.roll_stats();
+    }
+
+    /// End-of-tree flush of a W-lane tree: every engine drains
+    /// columnar into the sink; byte/pair accounting mirrors
+    /// [`Self::flush_into`].
+    fn flush_vector_into(&mut self, out: &mut VectorSink) {
+        let w = self.lanes;
+        out.flushes += 1;
+        let start = out.flushed.len();
+        let mut flush_cycles: Cycles = 0;
+        for f in &mut self.fpes {
+            out.scratch_keys.clear();
+            out.scratch_vals.clear();
+            flush_cycles += f.flush_lanes_into(&mut out.scratch_keys, &mut out.scratch_vals);
+            for (j, &k) in out.scratch_keys.iter().enumerate() {
+                out.flushed.push(k, &out.scratch_vals[j * w..(j + 1) * w]);
+            }
+        }
+        if let Some(bpe) = &mut self.bpe {
+            out.scratch_keys.clear();
+            out.scratch_vals.clear();
+            flush_cycles += bpe.flush_lanes_into(&mut out.scratch_keys, &mut out.scratch_vals);
+            for (j, &k) in out.scratch_keys.iter().enumerate() {
+                out.flushed.push(k, &out.scratch_vals[j * w..(j + 1) * w]);
+            }
+        }
+        self.stats.flush_cycles += flush_cycles;
+        let flushed_now = out.flushed.len() - start;
+        self.stats.pairs_out_flush += flushed_now as u64;
+        self.stats.bytes_out += (start..out.flushed.len())
+            .map(|i| out.flushed.encoded_len_pair(i) as u64)
+            .sum::<u64>();
+        self.eot_seen = 0;
+    }
+
     /// Account trailing per-packet header overhead on the output side:
-    /// streamed-out pairs are packed into MTU-sized packets downstream.
+    /// streamed-out pairs are packed into MTU-sized packets downstream
+    /// (W-lane trees pack into per-W packet budgets; at `W = 1` this
+    /// is exactly the scalar packetization).
     fn finalize_output_bytes(&mut self) {
         let payload = self.stats.bytes_out;
-        let pkts = payload.div_ceil(MAX_AGG_PAYLOAD as u64).max(
+        let pkts = payload.div_ceil(max_vec_payload(self.lanes) as u64).max(
             (self.stats.pairs_out_stream + self.stats.pairs_out_flush > 0) as u64,
         );
-        self.stats.bytes_out = payload + pkts * (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64;
+        self.stats.bytes_out = payload + pkts * (HEADER_OVERHEAD + vec_fixed_len(self.lanes)) as u64;
     }
 
     /// Whether this chunk sequence would trigger an end-of-tree flush
@@ -478,6 +689,9 @@ pub struct SwitchAggSwitch {
     pub forwarding: Forwarding,
     config_module: ConfigModule,
     trees: BTreeMap<TreeId, TreeEngine>,
+    /// Per-tree value lane width (W); absent = 1 (scalar).  Announced
+    /// via [`Self::configure_vector`] and applied at engine (re)build.
+    lane_width: BTreeMap<TreeId, usize>,
     /// Reused sink for the stream entry points.
     sink: IngestSink,
 }
@@ -490,6 +704,7 @@ impl SwitchAggSwitch {
             forwarding: Forwarding::new(),
             config_module: ConfigModule::new(),
             trees: BTreeMap::new(),
+            lane_width: BTreeMap::new(),
             sink: IngestSink::new(),
         }
     }
@@ -504,8 +719,33 @@ impl SwitchAggSwitch {
     /// announced); engines are (re)built, so configuration must
     /// precede data for those trees.
     pub fn configure(&mut self, trees: &[TreeConfig]) {
+        for t in trees {
+            self.lane_width.insert(t.tree, 1);
+        }
+        self.rebuild_engines(trees);
+    }
+
+    /// [`Self::configure`] for trees whose values are W-lane vectors
+    /// (`lanes ≥ 1`; 1 is exactly the scalar configuration): every FPE
+    /// table and BPE region for the listed trees is built with a
+    /// stride-`lanes` value buffer, and ingest goes through the
+    /// [`Self::ingest_vector_stream`] family.  Trees configured
+    /// earlier keep their own lane widths.
+    pub fn configure_vector(&mut self, trees: &[TreeConfig], lanes: usize) {
+        assert!(
+            (1..=crate::protocol::MAX_LANES).contains(&lanes),
+            "lane width {lanes} out of range"
+        );
+        for t in trees {
+            self.lane_width.insert(t.tree, lanes);
+        }
+        self.rebuild_engines(trees);
+    }
+
+    /// Rebuild engines for all configured trees with their new memory
+    /// shares (and per-tree lane widths).
+    fn rebuild_engines(&mut self, trees: &[TreeConfig]) {
         self.config_module.apply(trees);
-        // Rebuild engines for all trees with the new share.
         let ids: Vec<TreeId> = self.config_module.tree_ids().collect();
         for id in ids {
             let tc = self.config_module.get(id).unwrap().clone();
@@ -514,10 +754,11 @@ impl SwitchAggSwitch {
                 .cfg
                 .bpe_mem
                 .map(|m| self.config_module.memory_share_for(id, m));
+            let lanes = *self.lane_width.get(&id).unwrap_or(&1);
             self.forwarding.install_tree_parent(id, tc.parent_port);
             self.trees.insert(
                 id,
-                TreeEngine::new(&self.cfg, tc.op, tc.children, fpe_share, bpe_share),
+                TreeEngine::new(&self.cfg, tc.op, tc.children, fpe_share, bpe_share, lanes),
             );
         }
     }
@@ -552,6 +793,16 @@ impl SwitchAggSwitch {
             .get_mut(&pkt.tree)
             .unwrap_or_else(|| panic!("tree {} not configured", pkt.tree));
         engine.ingest_pairs(&pkt.pairs, pkt.eot, self.cfg.delays.header_analyzer, sink);
+    }
+
+    /// Ingest one W-lane vector aggregation packet for its tree,
+    /// appending outputs to a caller-owned (reusable) [`VectorSink`].
+    pub fn ingest_vector_packet_into(
+        &mut self,
+        pkt: &crate::protocol::VectorAggregationPacket,
+        sink: &mut VectorSink,
+    ) {
+        self.ingest_vector_range_for(pkt.tree, &pkt.batch, 0..pkt.batch.len(), pkt.eot, sink);
     }
 
     /// Ingest one aggregation packet, returning owned output buffers
@@ -663,6 +914,97 @@ impl SwitchAggSwitch {
         let out = sink_to_vec(&sink);
         self.sink = sink;
         out
+    }
+
+    /// Run a whole W-lane vector stream (chunked into per-W MTU-sized
+    /// packets on the fly) through one tree, appending to a
+    /// caller-owned (reusable) [`VectorSink`] — the vector counterpart
+    /// of [`Self::ingest_stream`].  EoT is counted once per child, so
+    /// pass the merged stream of all children — or use
+    /// [`Self::ingest_vector_child_streams_into`].  Always runs the
+    /// serial reference engine.
+    pub fn ingest_vector_stream_into(
+        &mut self,
+        tree: TreeId,
+        batch: &VectorBatch,
+        sink: &mut VectorSink,
+    ) {
+        let children = self
+            .config_module
+            .get(tree)
+            .map(|t| t.children)
+            .unwrap_or(1);
+        let mut chunks = VectorChunks::new(batch);
+        while let Some((range, _)) = chunks.next_chunk() {
+            self.ingest_vector_range_for(tree, batch, range, false, sink);
+        }
+        for _ in 0..children {
+            self.ingest_vector_range_for(tree, batch, 0..0, true, sink);
+        }
+        self.finalize(tree);
+    }
+
+    /// [`Self::ingest_vector_stream_into`] into a fresh batch
+    /// (forwarded stream followed by the end-of-tree flush).
+    pub fn ingest_vector_stream(&mut self, tree: TreeId, batch: &VectorBatch) -> VectorBatch {
+        let mut sink = VectorSink::new(batch.lanes());
+        self.ingest_vector_stream_into(tree, batch, &mut sink);
+        vector_sink_to_batch(&sink)
+    }
+
+    /// Ingest per-child W-lane streams interleaved round-robin
+    /// packet-wise — the many-to-one pattern of Fig. 1, vector
+    /// payloads (allreduce fan-in).
+    pub fn ingest_vector_child_streams_into(
+        &mut self,
+        tree: TreeId,
+        streams: &[VectorBatch],
+        sink: &mut VectorSink,
+    ) {
+        let mut chunkers: Vec<VectorChunks<'_>> =
+            streams.iter().map(VectorChunks::new).collect();
+        loop {
+            let mut progressed = false;
+            for (s, c) in streams.iter().zip(chunkers.iter_mut()) {
+                if let Some((range, last)) = c.next_chunk() {
+                    progressed = true;
+                    self.ingest_vector_range_for(tree, s, range, last, sink);
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        self.finalize(tree);
+    }
+
+    /// [`Self::ingest_vector_child_streams_into`] into a fresh batch.
+    pub fn ingest_vector_child_streams(
+        &mut self,
+        tree: TreeId,
+        streams: &[VectorBatch],
+    ) -> VectorBatch {
+        let lanes = streams.first().map(|b| b.lanes()).unwrap_or(1);
+        let mut sink = VectorSink::new(lanes);
+        self.ingest_vector_child_streams_into(tree, streams, &mut sink);
+        vector_sink_to_batch(&sink)
+    }
+
+    /// Core columnar ingest: one per-W MTU chunk of one tree's vector
+    /// traffic, on the serial reference path.
+    fn ingest_vector_range_for(
+        &mut self,
+        tree: TreeId,
+        batch: &VectorBatch,
+        range: std::ops::Range<usize>,
+        eot: bool,
+        sink: &mut VectorSink,
+    ) {
+        let engine = self
+            .trees
+            .get_mut(&tree)
+            .unwrap_or_else(|| panic!("tree {tree} not configured"));
+        engine.ingest_vector_range(batch, range, eot, self.cfg.delays.header_analyzer, sink);
     }
 
     /// Core slice-based ingest (no packet object): one MTU chunk of one
@@ -993,5 +1335,148 @@ mod tests {
             pairs: vec![],
         };
         sw.ingest(&pkt);
+    }
+
+    fn configured_vector_switch(
+        fpe_mem: u64,
+        bpe_mem: Option<u64>,
+        children: u16,
+        lanes: usize,
+    ) -> SwitchAggSwitch {
+        let cfg = SwitchConfig::scaled(fpe_mem, bpe_mem);
+        let mut sw = SwitchAggSwitch::new(cfg);
+        sw.configure_vector(
+            &[TreeConfig {
+                tree: TreeId(1),
+                children,
+                parent_port: 0,
+                op: AggOp::Sum,
+            }],
+            lanes,
+        );
+        sw
+    }
+
+    fn vector_streams(
+        n_streams: usize,
+        n: usize,
+        distinct: u64,
+        lanes: usize,
+        seed: u64,
+    ) -> Vec<VectorBatch> {
+        let mut rng = Pcg32::new(seed);
+        (0..n_streams)
+            .map(|_| {
+                let mut b = VectorBatch::new(lanes);
+                let mut vals: Vec<Value> = vec![0; lanes];
+                for _ in 0..n {
+                    let id = rng.gen_range_u64(distinct);
+                    for (l, v) in vals.iter_mut().enumerate() {
+                        *v = (id % 7) as i64 + l as i64 - 3;
+                    }
+                    b.push(Key::from_id(id, 16 + (id % 49) as usize), &vals);
+                }
+                b
+            })
+            .collect()
+    }
+
+    #[test]
+    fn vector_w1_ingest_is_byte_identical_to_scalar() {
+        // The degenerate 1-lane vector path against the scalar path on
+        // the same stream: outputs, stats, and DRAM counters must all
+        // be byte-identical.
+        let input = pairs(8_000, 900, 55);
+        let mut scalar = configured_switch(16 << 10, Some(256 << 10), 1);
+        let out_scalar = scalar.ingest_stream(TreeId(1), AggOp::Sum, &input);
+
+        let mut vector = configured_vector_switch(16 << 10, Some(256 << 10), 1, 1);
+        let batch = VectorBatch::from_pairs(&input);
+        let out_vector = vector.ingest_vector_stream(TreeId(1), &batch);
+
+        assert_eq!(out_vector.to_pairs(), out_scalar);
+        let a = scalar.stats(TreeId(1)).unwrap();
+        let b = vector.stats(TreeId(1)).unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert_eq!(
+            scalar.bpe_dram_stats(TreeId(1)),
+            vector.bpe_dram_stats(TreeId(1))
+        );
+        assert_eq!(
+            scalar.avg_fpe_latency(TreeId(1)),
+            vector.avg_fpe_latency(TreeId(1))
+        );
+    }
+
+    #[test]
+    fn vector_sum_is_conserved_lane_wise() {
+        let lanes = 8;
+        let streams = vector_streams(3, 2_000, 400, lanes, 77);
+        let mut want = vec![0i64; lanes];
+        for s in &streams {
+            for (_, ls) in s.iter() {
+                for (w, v) in want.iter_mut().zip(ls) {
+                    *w += v;
+                }
+            }
+        }
+        let mut sw = configured_vector_switch(32 << 10, Some(1 << 20), 3, lanes);
+        let out = sw.ingest_vector_child_streams(TreeId(1), &streams);
+        let mut got = vec![0i64; lanes];
+        for (_, ls) in out.iter() {
+            for (g, v) in got.iter_mut().zip(ls) {
+                *g += v;
+            }
+        }
+        assert_eq!(got, want);
+        let s = sw.stats(TreeId(1)).unwrap();
+        assert_eq!(s.pairs_in, 6_000);
+        assert!(s.reduction_ratio() > 0.0, "r={}", s.reduction_ratio());
+    }
+
+    #[test]
+    fn vector_keys_fully_aggregated_when_memory_sufficient() {
+        let lanes = 16;
+        let streams = vector_streams(2, 3_000, 100, lanes, 9);
+        let mut sw = configured_vector_switch(4 << 20, Some(8 << 20), 2, lanes);
+        let out = sw.ingest_vector_child_streams(TreeId(1), &streams);
+        let mut seen = std::collections::HashMap::new();
+        for (k, _) in out.iter() {
+            *seen.entry(*k).or_insert(0u32) += 1;
+        }
+        assert!(seen.values().all(|&c| c == 1), "duplicate keys in output");
+        assert_eq!(seen.len(), 100);
+        let s = sw.stats(TreeId(1)).unwrap();
+        assert!(s.reduction_ratio() > 0.9, "r={}", s.reduction_ratio());
+    }
+
+    #[test]
+    fn vector_sink_reuse_stops_allocating() {
+        let lanes = 4;
+        let streams = vector_streams(1, 1_500, 300, lanes, 13);
+        let mut sw = configured_vector_switch(16 << 10, Some(256 << 10), 1, lanes);
+        let mut sink = VectorSink::new(lanes);
+        sw.ingest_vector_stream_into(TreeId(1), &streams[0], &mut sink);
+        let warm = sink.capacity();
+        for _ in 0..3 {
+            sink.clear();
+            sw.ingest_vector_stream_into(TreeId(1), &streams[0], &mut sink);
+        }
+        assert_eq!(sink.capacity(), warm, "steady-state vector ingest must not grow buffers");
+    }
+
+    #[test]
+    #[should_panic(expected = "scalar ingest on a tree configured")]
+    fn scalar_ingest_on_vector_tree_panics() {
+        let mut sw = configured_vector_switch(16 << 10, None, 1, 8);
+        sw.ingest_stream(TreeId(1), AggOp::Sum, &pairs(10, 5, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "lane width does not match")]
+    fn mismatched_lane_width_panics() {
+        let mut sw = configured_vector_switch(16 << 10, None, 1, 8);
+        let streams = vector_streams(1, 10, 5, 4, 1);
+        sw.ingest_vector_stream(TreeId(1), &streams[0]);
     }
 }

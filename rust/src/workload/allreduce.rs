@@ -1,0 +1,247 @@
+//! Allreduce-style workload family: dense gradient chunks and sparse
+//! embedding pushes, emitted as W-lane columnar batches.
+//!
+//! Data-parallel training reduces each worker's gradient element-wise
+//! across all workers.  Mapped onto the aggregation tree, a worker's
+//! tensor splits into fixed-size *chunks* of `chunk_lanes` contiguous
+//! elements; the chunk index becomes the key and the elements its lane
+//! values, so the switch's W-lane hash core performs the reduction
+//! in-network — the workload shape of Flare/P4COM-style in-network
+//! allreduce, on SwitchAgg's variable-length-key data plane.
+//!
+//! * **Dense**: every worker emits every chunk exactly once, in index
+//!   order.  With `k` workers the fan-in carries `k` copies of the
+//!   tensor and one leaves, so the ideal reduction ratio approaches
+//!   `1 − 1/k`.
+//! * **Sparse embedding**: each worker touches a Zipf-skewed sample of
+//!   embedding rows (hot vocabulary rows dominate) — the gradient
+//!   push pattern of recommendation/embedding models, reusing the
+//!   Zipf machinery of the scalar workloads (§6.1).
+
+use crate::protocol::vector::{encoded_vec_len, VectorBatch};
+use crate::protocol::{Key, Value};
+use crate::util::rng::Pcg32;
+use crate::util::zipf::Zipf;
+
+/// Which gradient pattern a worker emits.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GradientPattern {
+    /// Every chunk exactly once per worker (data-parallel allreduce).
+    Dense,
+    /// `rows` chunk keys sampled Zipf(`skew`) per worker, duplicates
+    /// allowed (embedding-row gradient pushes).
+    SparseEmbedding { rows: usize, skew: f64 },
+}
+
+/// Allreduce workload parameters.
+#[derive(Clone, Debug)]
+pub struct AllreduceSpec {
+    /// Gradient elements per worker tensor.
+    pub tensor_elems: usize,
+    /// Contiguous elements per chunk (the lane width W).
+    pub chunk_lanes: usize,
+    /// Fan-in: number of workers reducing together.
+    pub workers: usize,
+    /// Chunk-key bytes (chunk ids embed in the first 8).
+    pub key_len: usize,
+    pub pattern: GradientPattern,
+    pub seed: u64,
+}
+
+impl AllreduceSpec {
+    /// Dense data-parallel gradient reduction.
+    pub fn dense(tensor_elems: usize, chunk_lanes: usize, workers: usize, seed: u64) -> Self {
+        Self {
+            tensor_elems,
+            chunk_lanes,
+            workers,
+            key_len: 8,
+            pattern: GradientPattern::Dense,
+            seed,
+        }
+    }
+
+    /// Sparse embedding pushes over the same chunk key space.
+    pub fn sparse_embedding(
+        tensor_elems: usize,
+        chunk_lanes: usize,
+        workers: usize,
+        rows_per_worker: usize,
+        skew: f64,
+        seed: u64,
+    ) -> Self {
+        Self {
+            tensor_elems,
+            chunk_lanes,
+            workers,
+            key_len: 8,
+            pattern: GradientPattern::SparseEmbedding {
+                rows: rows_per_worker,
+                skew,
+            },
+            seed,
+        }
+    }
+
+    /// Number of distinct chunk keys the tensor splits into.
+    pub fn n_chunks(&self) -> usize {
+        self.tensor_elems.div_ceil(self.chunk_lanes)
+    }
+
+    /// Chunks one worker emits (dense: all; sparse: its sample size).
+    pub fn chunks_per_worker(&self) -> usize {
+        match self.pattern {
+            GradientPattern::Dense => self.n_chunks(),
+            GradientPattern::SparseEmbedding { rows, .. } => rows,
+        }
+    }
+
+    /// Encoded wire bytes one worker injects (lanes are small ints, so
+    /// every lane rides the 4-byte paper width).
+    pub fn bytes_per_worker(&self) -> u64 {
+        (self.chunks_per_worker() * encoded_vec_len(self.key_len, self.chunk_lanes, 4)) as u64
+    }
+
+    /// Deterministic small-int gradient for `(worker, chunk, lane)` —
+    /// fits the 4-byte wire lane, stable across calls.
+    pub fn grad(&self, worker: usize, chunk: u64, lane: usize) -> Value {
+        let mut x = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(worker as u64)
+            .wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+            .wrapping_add(chunk)
+            .rotate_left(23)
+            .wrapping_add(lane as u64);
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        (x % 17) as i64 - 8
+    }
+
+    /// One worker's columnar gradient batch.
+    pub fn worker_batch(&self, worker: usize) -> VectorBatch {
+        assert!(worker < self.workers, "worker {worker} out of range");
+        let w = self.chunk_lanes;
+        let mut batch = VectorBatch::with_capacity(w, self.chunks_per_worker());
+        let mut lanes: Vec<Value> = vec![0; w];
+        let emit = |spec: &Self, chunk: u64, lanes: &mut [Value]| {
+            for (l, v) in lanes.iter_mut().enumerate() {
+                *v = spec.grad(worker, chunk, l);
+            }
+        };
+        match self.pattern {
+            GradientPattern::Dense => {
+                for chunk in 0..self.n_chunks() as u64 {
+                    emit(self, chunk, &mut lanes);
+                    batch.push(Key::from_id(chunk, self.key_len), &lanes);
+                }
+            }
+            GradientPattern::SparseEmbedding { rows, skew } => {
+                let mut rng = Pcg32::new(
+                    self.seed
+                        .wrapping_mul(0x2545_F491_4F6C_DD1D)
+                        .wrapping_add(worker as u64),
+                );
+                let zipf = Zipf::new(self.n_chunks() as u64, skew);
+                for _ in 0..rows {
+                    let chunk = zipf.sample(&mut rng) - 1;
+                    emit(self, chunk, &mut lanes);
+                    batch.push(Key::from_id(chunk, self.key_len), &lanes);
+                }
+            }
+        }
+        batch
+    }
+
+    /// All workers' batches (the tree's child streams).
+    pub fn all_workers(&self) -> Vec<VectorBatch> {
+        (0..self.workers).map(|w| self.worker_batch(w)).collect()
+    }
+
+    /// Ground-truth dense allreduce result for one `(chunk, lane)`:
+    /// the sum over all workers.
+    pub fn dense_sum(&self, chunk: u64, lane: usize) -> Value {
+        (0..self.workers).map(|w| self.grad(w, chunk, lane)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn dense_workers_cover_every_chunk_once() {
+        let spec = AllreduceSpec::dense(1000, 16, 3, 42);
+        assert_eq!(spec.n_chunks(), 63); // ceil(1000/16)
+        for w in 0..3 {
+            let b = spec.worker_batch(w);
+            assert_eq!(b.len(), 63);
+            assert_eq!(b.lanes(), 16);
+            // Keys are the chunk ids, in order.
+            for (i, (k, _)) in b.iter().enumerate() {
+                assert_eq!(*k, Key::from_id(i as u64, 8));
+            }
+        }
+    }
+
+    #[test]
+    fn batches_are_deterministic_and_worker_distinct() {
+        let spec = AllreduceSpec::dense(512, 8, 2, 7);
+        assert_eq!(spec.worker_batch(0), spec.worker_batch(0));
+        assert_ne!(spec.worker_batch(0), spec.worker_batch(1));
+    }
+
+    #[test]
+    fn grads_fit_the_4_byte_wire_lane() {
+        let spec = AllreduceSpec::dense(256, 4, 4, 3);
+        for b in spec.all_workers() {
+            for i in 0..b.len() {
+                assert_eq!(
+                    b.encoded_len_pair(i),
+                    encoded_vec_len(8, 4, 4),
+                    "gradients must stay in i32 range"
+                );
+            }
+        }
+        assert_eq!(spec.bytes_per_worker(), 64 * (2 + 8 + 16) as u64);
+    }
+
+    #[test]
+    fn dense_sum_matches_manual_reduction() {
+        let spec = AllreduceSpec::dense(96, 8, 5, 11);
+        let streams = spec.all_workers();
+        let mut acc: HashMap<Key, Vec<Value>> = HashMap::new();
+        for s in &streams {
+            for (k, lanes) in s.iter() {
+                let e = acc.entry(*k).or_insert_with(|| vec![0; 8]);
+                for (a, v) in e.iter_mut().zip(lanes) {
+                    *a += v;
+                }
+            }
+        }
+        for chunk in 0..spec.n_chunks() as u64 {
+            let got = &acc[&Key::from_id(chunk, 8)];
+            for lane in 0..8 {
+                assert_eq!(got[lane], spec.dense_sum(chunk, lane), "chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_embedding_is_skewed_and_in_range() {
+        let spec = AllreduceSpec::sparse_embedding(64 << 10, 16, 2, 3_000, 0.99, 5);
+        let b = spec.worker_batch(0);
+        assert_eq!(b.len(), 3_000);
+        let mut counts: HashMap<Key, u64> = HashMap::new();
+        for (k, _) in b.iter() {
+            *counts.entry(*k).or_insert(0) += 1;
+        }
+        // Zipf: far fewer distinct rows than draws, a hot head.
+        assert!(counts.len() < 2_000, "distinct rows {}", counts.len());
+        let max = counts.values().max().copied().unwrap();
+        assert!(max > 10, "hot row count {max}");
+        // Different workers sample different rows.
+        assert_ne!(spec.worker_batch(0), spec.worker_batch(1));
+    }
+}

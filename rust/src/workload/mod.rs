@@ -1,8 +1,12 @@
 //! Workload synthesis (§6.1): key-value streams with variable key
-//! lengths (16–64 B), uniform or Zipf(0.99)-skewed key popularity, and
-//! a synthetic text corpus for the WordCount system test (§6.3).
+//! lengths (16–64 B), uniform or Zipf(0.99)-skewed key popularity, a
+//! synthetic text corpus for the WordCount system test (§6.3), and the
+//! W-lane allreduce gradient family (dense tensors + sparse embedding
+//! pushes).
 
+pub mod allreduce;
 pub mod corpus;
 pub mod generator;
 
+pub use allreduce::{AllreduceSpec, GradientPattern};
 pub use generator::{KeyDist, StreamGen, WorkloadSpec};

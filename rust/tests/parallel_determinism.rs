@@ -17,7 +17,7 @@
 use switchagg::net::netsim::reference::HeapNetSim;
 use switchagg::net::{run_monolithic, run_tree_partitioned, NetSim, NodeId, NodeKind, SendReq, Topology};
 use switchagg::controller::AggTree;
-use switchagg::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId};
+use switchagg::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId, VectorBatch};
 use switchagg::sim::Link;
 use switchagg::switch::{EvictionPolicy, Parallelism, SwitchAggSwitch, SwitchConfig};
 use switchagg::util::miniprop::prop;
@@ -103,6 +103,91 @@ fn prop_sharded_ingest_is_shard_count_invariant() {
                 ));
             }
             if serial.bpe_dram_stats(TreeId(1)) != sharded.bpe_dram_stats(TreeId(1)) {
+                return Err(format!("DRAM stats diverged at {shards} shards"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vector_w1_path_matches_scalar_across_shards() {
+    // ISSUE 3 satellite: the degenerate 1-lane vector path must be
+    // byte-identical — outputs, stats, DRAM counters — to the scalar
+    // path, and therefore to the sharded scalar engine at 1/2/4/8
+    // shards (which is itself pinned to serial above).  The vector
+    // ingest always runs the serial reference engine; the shard sweep
+    // runs on the scalar side.
+    prop("vector W=1 ingest == scalar ingest", 10, |rng| {
+        let fpe = 4096u64 << rng.gen_range_usize(4);
+        let bpe = if rng.gen_bool(0.7) {
+            Some(1u64 << (16 + rng.gen_range_usize(5)))
+        } else {
+            None
+        };
+        let eviction = if rng.gen_bool(0.5) {
+            EvictionPolicy::EvictOld
+        } else {
+            EvictionPolicy::ForwardNew
+        };
+        let children = 1 + rng.gen_range_u64(3) as u16;
+        let variety = 1 << (6 + rng.gen_range_usize(8));
+        let streams: Vec<Vec<KvPair>> = (0..children as usize)
+            .map(|_| {
+                let n = 500 + rng.gen_range_usize(2_000);
+                random_pairs(rng, n, variety)
+            })
+            .collect();
+        let vstreams: Vec<VectorBatch> =
+            streams.iter().map(|s| VectorBatch::from_pairs(s)).collect();
+
+        let mut vector = {
+            let cfg = SwitchConfig {
+                eviction,
+                ..SwitchConfig::scaled(fpe, bpe)
+            };
+            let mut sw = SwitchAggSwitch::new(cfg);
+            sw.configure_vector(
+                &[TreeConfig {
+                    tree: TreeId(1),
+                    children,
+                    parent_port: 0,
+                    op: AggOp::Sum,
+                }],
+                1,
+            );
+            sw
+        };
+        let out_vector = vector
+            .ingest_vector_child_streams(TreeId(1), &vstreams)
+            .to_pairs();
+        let vector_stats = stats_tuple(&vector);
+
+        for shards in [1usize, 2, 4, 8] {
+            let par = if shards == 1 {
+                Parallelism::Serial
+            } else {
+                Parallelism::Sharded(shards)
+            };
+            let mut scalar = switch(fpe, bpe, eviction, children, par);
+            let out_scalar = scalar.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+            if out_scalar != out_vector {
+                return Err(format!(
+                    "vector W=1 output diverged from scalar at {shards} shards \
+                     (fpe={fpe} bpe={bpe:?} eviction={eviction:?} children={children}): \
+                     {} vs {} pairs",
+                    out_vector.len(),
+                    out_scalar.len()
+                ));
+            }
+            let scalar_stats = stats_tuple(&scalar);
+            if scalar_stats != vector_stats {
+                return Err(format!(
+                    "vector W=1 stats diverged at {shards} shards:\n  vector {vector_stats}\n  \
+                     scalar {scalar_stats}"
+                ));
+            }
+            if scalar.bpe_dram_stats(TreeId(1)) != vector.bpe_dram_stats(TreeId(1)) {
                 return Err(format!("DRAM stats diverged at {shards} shards"));
             }
         }
