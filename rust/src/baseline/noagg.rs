@@ -90,6 +90,7 @@ mod tests {
             tree: TreeId(1),
             op: AggOp::Sum,
             eot: true,
+            rel: None,
             pairs: vec![KvPair::new(Key::from_id(1, 16), 1)],
         };
         let out = sw.forward(&pkt);

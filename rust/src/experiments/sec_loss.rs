@@ -1,0 +1,296 @@
+//! Loss & reliability harness (`switchagg exp loss`): reduction-ratio
+//! degradation and retransmission overhead vs link loss rate × worker
+//! fan-in, against the no-loss baseline, with DAIET and NoAgg columns.
+//!
+//! Every row runs a full reliable session (`framework::reliable`) —
+//! sender retransmission queues, switch-side dedup windows, reducer
+//! completeness recovery — and certifies the exactly-once invariant:
+//! the final reducer aggregate at that loss rate is *identical* to the
+//! 0%-loss aggregate (the `exact` column must read `yes` everywhere;
+//! the tier-1 smoke test pins it).
+//!
+//! The *useful* work per pair is unchanged by loss — the switch still
+//! combines every pair exactly once — so the degradation shows up as
+//! wire overhead: retransmitted packets inflate `bytes_in`'s wire
+//! footprint, pushing the effective (wire-level) reduction ratio below
+//! the admitted-stream ratio.  The NoAgg column is the analytic
+//! `1/(1−p)` expected-transmissions floor every aggregation-free
+//! deployment pays per packet under the same Bernoulli loss.
+
+use crate::baseline::{DaietConfig, DaietSwitch};
+use crate::experiments::common::{parallelism, pct, print_table, Parallelism, Scale};
+use crate::framework::reliable::{run_reliable_scalar, ReliabilityConfig};
+use crate::framework::Reducer;
+use crate::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId, Value};
+use crate::switch::{SwitchAggSwitch, SwitchConfig};
+use crate::util::par::par_map;
+use crate::util::rng::Pcg32;
+use std::collections::HashMap;
+
+/// One sweep row.
+#[derive(Clone, Debug)]
+pub struct LossRow {
+    pub loss_pct: f64,
+    pub workers: usize,
+    /// Effective (degraded) reduction: every retransmitted byte on
+    /// either hop is charged against the saving, normalized by the
+    /// loss-free ingress footprint —
+    /// `1 − (egress wire + ingress retransmit bytes) / ingress first-tx
+    /// bytes`.  Equals the classic wire reduction at 0% loss and falls
+    /// monotonically as loss grows.
+    pub reduction_wire: f64,
+    /// Admitted-stream reduction (the switch's own in-vs-out ratio on
+    /// the exactly-once stream) — essentially loss-rate independent.
+    pub reduction_admitted: f64,
+    /// Ingress retransmissions per first transmission.
+    pub retx_overhead: f64,
+    /// Duplicates the switch dedup window dropped.
+    pub dup_dropped: u64,
+    /// Packets the egress (switch → reducer) recovery retransmitted.
+    pub egress_recovered: u64,
+    /// Final aggregate identical to the 0%-loss aggregate.
+    pub exact: bool,
+    /// DAIET (RMT baseline) reduction on the merged loss-free stream.
+    pub daiet_reduction: f64,
+    /// NoAgg expected wire inflation under the same loss: 1/(1−p).
+    pub noagg_wire_x: f64,
+}
+
+fn workload(workers: usize, pairs_per_worker: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    // Key variety scales with the stream so every worker repeats each
+    // key ~4×, keeping the reduction ratio solidly positive at any
+    // `--scale`.
+    let variety = (pairs_per_worker as u64 / 4).max(64);
+    let mut rng = Pcg32::new(seed);
+    (0..workers)
+        .map(|_| {
+            let mut child = rng.fork(0x10ad);
+            (0..pairs_per_worker)
+                .map(|_| {
+                    let id = child.gen_range_u64(variety);
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(100) as i64 - 50,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn switch_for(workers: usize, scale: Scale) -> SwitchAggSwitch {
+    let cfg = SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(8 << 30)));
+    let mut sw = SwitchAggSwitch::new(cfg);
+    sw.configure(&[TreeConfig {
+        tree: TreeId(1),
+        children: workers as u16,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    sw
+}
+
+fn final_map(pairs: &[KvPair]) -> HashMap<Key, Value> {
+    Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
+}
+
+fn pairs_per_worker(scale: Scale) -> usize {
+    (scale.bytes(256 << 20) / 25).max(500) as usize
+}
+
+/// The loss-rate-independent half of one fan-in's rows: the 0%-loss
+/// aggregate and the DAIET reference — computed once per `workers`,
+/// not once per sweep cell.
+struct LossBaseline {
+    map: HashMap<Key, Value>,
+    daiet_reduction: f64,
+}
+
+fn baseline(workers: usize, scale: Scale, seed: u64) -> LossBaseline {
+    let streams = workload(workers, pairs_per_worker(scale), seed);
+    let mut sw = switch_for(workers, scale);
+    let base = run_reliable_scalar(
+        &mut sw,
+        TreeId(1),
+        AggOp::Sum,
+        &streams,
+        &ReliabilityConfig::default(),
+    );
+    // DAIET on the merged loss-free fan-in (reduction reference only;
+    // the RMT baseline has no loss story of its own).
+    let merged: Vec<KvPair> = streams.iter().flatten().copied().collect();
+    let mut daiet = DaietSwitch::new(DaietConfig::default());
+    daiet.run(&merged, AggOp::Sum);
+    LossBaseline {
+        map: final_map(&base.received),
+        daiet_reduction: daiet.stats.reduction_ratio(),
+    }
+}
+
+/// Run one `(loss, workers)` cell, comparing against the fan-in's
+/// precomputed 0%-loss baseline.
+fn run_cell(loss: f64, workers: usize, scale: Scale, seed: u64, base: &LossBaseline) -> LossRow {
+    let streams = workload(workers, pairs_per_worker(scale), seed);
+    let mut sw = switch_for(workers, scale);
+    let run = run_reliable_scalar(
+        &mut sw,
+        TreeId(1),
+        AggOp::Sum,
+        &streams,
+        &ReliabilityConfig::uniform(loss, seed ^ 0x5EC),
+    );
+    let stats = sw.stats(TreeId(1)).expect("tree stats");
+    // Degraded reduction: charge every retransmitted byte (both hops)
+    // against the saving, relative to the loss-free ingress footprint.
+    let extra_ingress = run.ingress.wire_bytes - run.ingress.first_tx_bytes;
+    let reduction_wire = if run.ingress.first_tx_bytes == 0 {
+        0.0
+    } else {
+        1.0 - (run.egress.wire_bytes + extra_ingress) as f64
+            / run.ingress.first_tx_bytes as f64
+    };
+
+    LossRow {
+        loss_pct: loss * 100.0,
+        workers,
+        reduction_wire,
+        reduction_admitted: stats.reduction_ratio(),
+        retx_overhead: run.ingress.retx_overhead(),
+        dup_dropped: run.dedup.dup_drops,
+        egress_recovered: run.egress.retransmissions,
+        exact: final_map(&run.received) == base.map,
+        daiet_reduction: base.daiet_reduction,
+        noagg_wire_x: 1.0 / (1.0 - loss),
+    }
+}
+
+const SWEEP_SEED: u64 = 0xC0DE;
+const SWEEP_WORKERS: [usize; 3] = [2, 4, 8];
+
+/// The sweep: loss {0, 1, 5, 10}% × fan-in {2, 4, 8}.
+pub fn rows(scale: Scale) -> Vec<LossRow> {
+    rows_with(scale, parallelism())
+}
+
+pub fn rows_with(scale: Scale, par: Parallelism) -> Vec<LossRow> {
+    // Baselines fan over the (smaller) worker set first; the sweep
+    // cells then share them by reference.
+    let baselines: Vec<(usize, LossBaseline)> = par_map(par, SWEEP_WORKERS.to_vec(), move |w| {
+        (w, baseline(w, scale, SWEEP_SEED))
+    });
+    let mut cases: Vec<(f64, usize)> = Vec::new();
+    for &loss in &[0.0, 0.01, 0.05, 0.10] {
+        for &workers in &SWEEP_WORKERS {
+            cases.push((loss, workers));
+        }
+    }
+    let baselines = &baselines;
+    par_map(par, cases, move |(loss, workers)| {
+        let base = &baselines
+            .iter()
+            .find(|(w, _)| *w == workers)
+            .expect("baseline for every sweep fan-in")
+            .1;
+        run_cell(loss, workers, scale, SWEEP_SEED, base)
+    })
+}
+
+pub fn run(scale: Scale) {
+    let rows = rows(scale);
+    print_table(
+        "Loss & reliability — exactly-once aggregation under link loss",
+        &[
+            "loss",
+            "workers",
+            "reduction (wire)",
+            "reduction (no-loss)",
+            "retx overhead",
+            "dup dropped",
+            "egress recovered",
+            "exact",
+            "DAIET reduction",
+            "NoAgg wire x",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{:.0}%", r.loss_pct),
+                    r.workers.to_string(),
+                    pct(r.reduction_wire),
+                    pct(r.reduction_admitted),
+                    pct(r.retx_overhead),
+                    r.dup_dropped.to_string(),
+                    r.egress_recovered.to_string(),
+                    if r.exact { "yes" } else { "NO" }.to_string(),
+                    pct(r.daiet_reduction),
+                    format!("{:.3}x", r.noagg_wire_x),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    assert!(
+        rows.iter().all(|r| r.exact),
+        "exactly-once invariant violated — a loss cell diverged from the no-loss aggregate"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tier-1 smoke pin (also invoked by CI as `exp loss` at tiny
+    /// scale): 2 mappers, 1% loss, fixed seed — the final aggregate
+    /// must match the no-loss aggregate bit for bit.
+    #[test]
+    fn exactly_once_smoke_tiny_scale() {
+        let scale = Scale::new(16_384);
+        let base = baseline(2, scale, SWEEP_SEED);
+        let row = run_cell(0.01, 2, scale, SWEEP_SEED, &base);
+        assert!(row.exact, "{row:?}");
+        assert!(row.reduction_admitted > 0.0);
+    }
+
+    #[test]
+    fn sweep_is_exact_and_degrades_monotonically_in_wire_terms() {
+        let rows = rows_with(Scale::new(16_384), Parallelism::Serial);
+        assert_eq!(rows.len(), 12);
+        assert!(rows.iter().all(|r| r.exact), "exactly-once must hold per cell");
+        let wire = |loss: f64, w: usize| {
+            rows.iter()
+                .find(|r| (r.loss_pct - loss).abs() < 1e-9 && r.workers == w)
+                .unwrap()
+                .reduction_wire
+        };
+        for &w in &[2usize, 4, 8] {
+            assert!(
+                wire(0.0, w) >= wire(10.0, w),
+                "retransmission overhead must not improve the wire reduction (w={w})"
+            );
+        }
+        // No loss ⇒ no retransmissions, no dup drops.
+        for r in rows.iter().filter(|r| r.loss_pct == 0.0) {
+            assert_eq!(r.retx_overhead, 0.0);
+            assert_eq!(r.dup_dropped, 0);
+            assert!((r.noagg_wire_x - 1.0).abs() < 1e-12);
+        }
+        // 10% loss must actually exercise the machinery.
+        assert!(rows
+            .iter()
+            .filter(|r| r.loss_pct == 10.0)
+            .any(|r| r.retx_overhead > 0.0));
+    }
+
+    #[test]
+    fn rows_are_parallelism_invariant() {
+        let scale = Scale::new(65_536);
+        let serial = rows_with(scale, Parallelism::Serial);
+        let sharded = rows_with(scale, Parallelism::Sharded(4));
+        for (a, b) in serial.iter().zip(&sharded) {
+            assert_eq!((a.loss_pct, a.workers), (b.loss_pct, b.workers));
+            assert_eq!(a.reduction_wire, b.reduction_wire);
+            assert_eq!(a.retx_overhead, b.retx_overhead);
+            assert_eq!(a.exact, b.exact);
+        }
+    }
+}

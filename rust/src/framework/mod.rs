@@ -6,9 +6,14 @@
 pub mod job;
 pub mod mapper;
 pub mod reducer;
+pub mod reliable;
 pub mod shim;
 
 pub use job::{run_job, JobReport, JobSpec};
 pub use mapper::{Mapper, VectorMapper};
-pub use reducer::{Reducer, VectorMergeResult};
+pub use reducer::{Completeness, Reducer, VectorMergeResult};
+pub use reliable::{
+    run_reliable_scalar, run_reliable_vector, HopStats, ReliabilityConfig, ReliableRun,
+    ReliableVectorRun,
+};
 pub use shim::Shim;

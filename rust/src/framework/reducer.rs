@@ -37,6 +37,31 @@ pub struct VectorMergeResult {
     pub elapsed_s: f64,
 }
 
+/// Reliability bookkeeping for one tree's reduction: did every pair
+/// the switch emitted actually reach the reducer?  Under packet loss
+/// the switch's per-tree output count (`pairs_out_stream +
+/// pairs_out_flush`) is the ground truth; a shortfall means pairs were
+/// evicted mid-loss on the last hop and the job must run end-of-job
+/// recovery (retransmission) before merging — `framework::reliable`
+/// loops on exactly this check.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Completeness {
+    pub expected_pairs: u64,
+    pub received_pairs: u64,
+}
+
+impl Completeness {
+    pub fn is_complete(&self) -> bool {
+        self.received_pairs == self.expected_pairs
+    }
+
+    /// Pairs still missing (0 when over-delivery would imply a dedup
+    /// bug upstream — callers assert on `is_complete`, not this).
+    pub fn missing(&self) -> u64 {
+        self.expected_pairs.saturating_sub(self.received_pairs)
+    }
+}
+
 pub struct Reducer;
 
 impl Reducer {
@@ -196,6 +221,15 @@ impl Reducer {
         }
     }
 
+    /// Compare the switch's announced output count against what the
+    /// reducer actually holds (see [`Completeness`]).
+    pub fn verify_completeness(expected_pairs: u64, streams: &[Vec<KvPair>]) -> Completeness {
+        Completeness {
+            expected_pairs,
+            received_pairs: streams.iter().map(|s| s.len() as u64).sum(),
+        }
+    }
+
     /// XLA merge through the AOT artifacts.
     pub fn merge_xla(engine: &AggEngine, streams: &[Vec<KvPair>], op: AggOp) -> Result<MergeResult> {
         let t0 = Instant::now();
@@ -345,6 +379,17 @@ mod tests {
             vec![20_000, 40_000, 60_000, 80_000],
             "every lane must be conserved through spill"
         );
+    }
+
+    #[test]
+    fn completeness_check_counts_pairs() {
+        let s = streams();
+        let c = Reducer::verify_completeness(4, &s);
+        assert!(c.is_complete());
+        assert_eq!(c.missing(), 0);
+        let c = Reducer::verify_completeness(7, &s);
+        assert!(!c.is_complete());
+        assert_eq!(c.missing(), 3);
     }
 
     #[test]

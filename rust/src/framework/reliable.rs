@@ -1,0 +1,536 @@
+//! End-to-end reliable aggregation sessions under packet loss.
+//!
+//! Discrete-time transport simulation tying the reliability subsystem
+//! together: per-child [`ReliableSender`]s push packetized streams
+//! through seeded lossy channels ([`LossConfig`]) into the switch's
+//! exactly-once ingest (`SwitchAggSwitch::ingest_reliable_batch`),
+//! cumulative acks flow back over their own lossy channels, and the
+//! switch's output rides a second reliable hop to the reducer, whose
+//! completeness check ([`Reducer::verify_completeness`]) certifies
+//! that end-of-job recovery delivered every pair the switch emitted.
+//!
+//! One tick = one send → switch → ack round trip.  Everything is
+//! driven by seeded PRNGs, so a session is bit-reproducible; with all
+//! channels lossless no random draw ever happens and the admitted
+//! stream is exactly the packetized input in order.
+//!
+//! The invariant this buys (pinned by `tests/reliability.rs`): for a
+//! given workload the final reducer aggregate — keys, values, counts —
+//! is identical at any loss rate, on the serial and sharded engines,
+//! scalar and W-lane vector paths alike.
+
+use crate::framework::reducer::{Completeness, Reducer};
+use crate::net::loss::{LossChannel, LossConfig};
+use crate::protocol::{
+    AggAckPacket, AggOp, AggregationPacket, KvPair, RelHeader, ReliableSender, TreeId,
+    VectorAggregationPacket, VectorBatch, VectorChunks, REL_WINDOW, RETX_TIMEOUT_TICKS,
+};
+use crate::switch::reliability::{Admit, DedupStats, DedupWindow};
+use crate::switch::{IngestSink, SwitchAggSwitch, VectorSink};
+
+/// Loss/timing parameters of one session.
+#[derive(Clone, Copy, Debug)]
+pub struct ReliabilityConfig {
+    /// Mapper → switch data channels (one per child, salted).
+    pub data: LossConfig,
+    /// Reverse ack channels (both hops).
+    pub ack: LossConfig,
+    /// Switch → reducer data channel.
+    pub egress: LossConfig,
+    /// Retransmission timeout in ticks.
+    pub timeout: u64,
+    /// Safety valve: panic instead of looping forever if a session
+    /// cannot converge (e.g. a pathological loss configuration).
+    pub max_ticks: u64,
+}
+
+impl Default for ReliabilityConfig {
+    fn default() -> Self {
+        Self {
+            data: LossConfig::lossless(),
+            ack: LossConfig::lossless(),
+            egress: LossConfig::lossless(),
+            timeout: RETX_TIMEOUT_TICKS,
+            max_ticks: 100_000,
+        }
+    }
+}
+
+impl ReliabilityConfig {
+    /// The same drop rate on every channel (data, acks, egress), with
+    /// per-channel independent seeded streams.  `p = 0` is the exact
+    /// lossless baseline.
+    pub fn uniform(p: f64, seed: u64) -> Self {
+        let mk = |salt: u64| {
+            if p > 0.0 {
+                LossConfig::drop(p, seed ^ salt)
+            } else {
+                LossConfig::lossless()
+            }
+        };
+        Self {
+            data: mk(0x11),
+            ack: mk(0x22),
+            egress: mk(0x33),
+            ..Self::default()
+        }
+    }
+
+    /// Add a duplication rate to both data hops (acks stay drop-only;
+    /// a duplicated cumulative ack is harmless anyway).
+    pub fn with_dup(mut self, q: f64) -> Self {
+        self.data = self.data.with_dup(q);
+        self.egress = self.egress.with_dup(q);
+        self
+    }
+}
+
+/// Transport counters for one hop of one session.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HopStats {
+    /// First transmissions (= packets in the loss-free schedule).
+    pub first_tx: u64,
+    /// Timeout-driven retransmissions.
+    pub retransmissions: u64,
+    /// Wire bytes across all transmissions (incl. retransmissions and
+    /// the per-packet reliability record).
+    pub wire_bytes: u64,
+    /// Wire bytes of the first transmissions alone — the loss-free
+    /// schedule's footprint, the denominator of degradation curves.
+    pub first_tx_bytes: u64,
+    /// Packets the channels dropped / duplicated.
+    pub drops: u64,
+    pub dups: u64,
+    /// Acks lost on the reverse channels.
+    pub acks_dropped: u64,
+    /// Ticks until every sender was fully acknowledged.
+    pub ticks: u64,
+}
+
+impl HopStats {
+    /// Retransmitted packets per first transmission — the overhead
+    /// curve `exp loss` plots.
+    pub fn retx_overhead(&self) -> f64 {
+        if self.first_tx == 0 {
+            0.0
+        } else {
+            self.retransmissions as f64 / self.first_tx as f64
+        }
+    }
+}
+
+/// Everything one reliable scalar session produces.
+#[derive(Clone, Debug)]
+pub struct ReliableRun {
+    /// Mapper → switch transport counters.
+    pub ingress: HopStats,
+    /// Switch → reducer transport counters (the end-of-job recovery
+    /// hop: its retransmissions are exactly the pairs recovered after
+    /// being evicted into a lossy last hop).
+    pub egress: HopStats,
+    /// Switch-side dedup counters (duplicates stopped at the door).
+    pub dedup: DedupStats,
+    /// Reducer's completeness verdict (always complete on return —
+    /// the recovery loop does not terminate before it is).
+    pub completeness: Completeness,
+    /// The stream the reducer admitted, in arrival order.
+    pub received: Vec<KvPair>,
+}
+
+/// [`ReliableRun`] for the W-lane vector path.
+#[derive(Clone, Debug)]
+pub struct ReliableVectorRun {
+    pub ingress: HopStats,
+    pub egress: HopStats,
+    pub dedup: DedupStats,
+    pub completeness: Completeness,
+    pub received: VectorBatch,
+}
+
+/// Drive one reliable hop to completion: per-child senders, lossy
+/// data/ack channels, and a caller-supplied delivery function (the
+/// switch's reliable ingest, or the reducer endpoint).  Returns when
+/// every sender is cumulatively acknowledged.
+fn drive<P>(
+    pkts_per_child: &[Vec<P>],
+    cfg: &ReliabilityConfig,
+    data_loss: LossConfig,
+    salt_base: u64,
+    wire_len: impl Fn(&P) -> u64,
+    mut deliver: impl FnMut(&[&P]) -> Vec<AggAckPacket>,
+) -> HopStats {
+    let children = pkts_per_child.len();
+    let mut senders: Vec<ReliableSender> = pkts_per_child
+        .iter()
+        .map(|p| ReliableSender::new(p.len(), cfg.timeout))
+        .collect();
+    let mut data_ch: Vec<LossChannel> = (0..children)
+        .map(|c| LossChannel::salted(data_loss, salt_base + c as u64))
+        .collect();
+    let mut ack_ch: Vec<LossChannel> = (0..children)
+        .map(|c| LossChannel::salted(cfg.ack, salt_base + 0x1_0000 + c as u64))
+        .collect();
+    // Every packet is first-transmitted exactly once, so the loss-free
+    // footprint is known up front.
+    let mut first_tx_bytes = 0u64;
+    for p in pkts_per_child.iter().flatten() {
+        first_tx_bytes += wire_len(p);
+    }
+    let mut stats = HopStats {
+        first_tx_bytes,
+        ..HopStats::default()
+    };
+    let mut seqs: Vec<u32> = Vec::new();
+    let mut batch: Vec<&P> = Vec::new();
+    let mut now: u64 = 0;
+    while senders.iter().any(|s| !s.done()) {
+        assert!(
+            now < cfg.max_ticks,
+            "reliable session did not converge within {} ticks",
+            cfg.max_ticks
+        );
+        batch.clear();
+        for (c, sender) in senders.iter_mut().enumerate() {
+            seqs.clear();
+            sender.poll(now, &mut seqs);
+            for &seq in &seqs {
+                let pkt = &pkts_per_child[c][(seq - 1) as usize];
+                stats.wire_bytes += wire_len(pkt);
+                for _ in 0..data_ch[c].copies() {
+                    batch.push(pkt);
+                }
+            }
+        }
+        for ack in deliver(&batch) {
+            let c = ack.child as usize;
+            if ack_ch[c].copies() >= 1 {
+                senders[c].on_ack(ack.cum_seq, ack.credit);
+            } else {
+                stats.acks_dropped += 1;
+            }
+        }
+        now += 1;
+    }
+    stats.ticks = now;
+    for s in &senders {
+        stats.first_tx += s.first_tx;
+        stats.retransmissions += s.retransmissions;
+    }
+    for ch in &data_ch {
+        stats.drops += ch.drops;
+        stats.dups += ch.dups;
+    }
+    stats
+}
+
+/// Stamp reliability records onto a packetized stream.
+fn stamp<P>(pkts: &mut [P], child: u16, set: impl Fn(&mut P, RelHeader)) {
+    for (i, p) in pkts.iter_mut().enumerate() {
+        set(
+            p,
+            RelHeader {
+                child,
+                seq: i as u32 + 1,
+            },
+        );
+    }
+}
+
+/// Reducer-side endpoint of the egress hop: a dedup window plus the
+/// admitted stream.
+struct Endpoint<T> {
+    window: DedupWindow,
+    received: T,
+}
+
+impl<T> Endpoint<T> {
+    fn new(received: T) -> Self {
+        Self {
+            window: DedupWindow::new(REL_WINDOW),
+            received,
+        }
+    }
+
+    fn ack_for(&self, tree: TreeId, child: u16) -> AggAckPacket {
+        AggAckPacket {
+            tree,
+            child,
+            cum_seq: self.window.cum_seq(),
+            credit: self.window.credit(),
+        }
+    }
+}
+
+/// Run one reliable scalar session: `streams[c]` is child `c`'s pair
+/// stream; `sw` must already be configured for `tree` with
+/// `children == streams.len()` (scalar, lanes = 1).
+pub fn run_reliable_scalar(
+    sw: &mut SwitchAggSwitch,
+    tree: TreeId,
+    op: AggOp,
+    streams: &[Vec<KvPair>],
+    cfg: &ReliabilityConfig,
+) -> ReliableRun {
+    // Packetize each child's stream once; retransmissions reuse the
+    // same packets (same seq ⇒ same payload, the dedup contract).
+    let pkts: Vec<Vec<AggregationPacket>> = streams
+        .iter()
+        .enumerate()
+        .map(|(c, s)| {
+            let mut v = AggregationPacket::pack_stream(tree, op, s, true);
+            stamp(&mut v, c as u16, |p, rel| p.rel = Some(rel));
+            v
+        })
+        .collect();
+
+    let mut sink = IngestSink::new();
+    let ingress = drive(
+        &pkts,
+        cfg,
+        cfg.data,
+        0x1000,
+        |p| p.wire_len() as u64,
+        |batch| sw.ingest_reliable_batch(tree, batch, &mut sink),
+    );
+    assert_eq!(sink.flushes, 1, "all EoTs admitted ⇒ exactly one flush");
+    sw.finalize(tree);
+    let dedup = sw.dedup_stats(tree);
+    let stats = sw.stats(tree).expect("tree stats");
+    let expected_pairs = stats.pairs_out_stream + stats.pairs_out_flush;
+
+    // Egress hop: the switch's emitted stream (forwarded, then flush)
+    // to the reducer, over the same reliable protocol.
+    let mut egress_pairs =
+        Vec::with_capacity(sink.forwarded.len() + sink.flushed.len());
+    egress_pairs.extend_from_slice(&sink.forwarded);
+    egress_pairs.extend_from_slice(&sink.flushed);
+    let mut epkts = AggregationPacket::pack_stream(tree, op, &egress_pairs, true);
+    stamp(&mut epkts, 0, |p, rel| p.rel = Some(rel));
+    let mut ep = Endpoint::new(Vec::<KvPair>::new());
+    let egress = drive(
+        &[epkts],
+        cfg,
+        cfg.egress,
+        0x2000,
+        |p| p.wire_len() as u64,
+        |batch| {
+            batch
+                .iter()
+                .map(|pkt| {
+                    let rel = pkt.rel.expect("egress packets carry rel headers");
+                    if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                        ep.received.extend_from_slice(&pkt.pairs);
+                    }
+                    ep.ack_for(tree, rel.child)
+                })
+                .collect()
+        },
+    );
+    let completeness =
+        Reducer::verify_completeness(expected_pairs, std::slice::from_ref(&ep.received));
+    assert!(
+        completeness.is_complete(),
+        "end-of-job recovery left {} pairs missing",
+        completeness.missing()
+    );
+    ReliableRun {
+        ingress,
+        egress,
+        dedup,
+        completeness,
+        received: ep.received,
+    }
+}
+
+/// The W-lane vector counterpart of [`run_reliable_scalar`]; `sw` must
+/// be configured via `configure_vector` with the streams' lane width.
+pub fn run_reliable_vector(
+    sw: &mut SwitchAggSwitch,
+    tree: TreeId,
+    op: AggOp,
+    streams: &[VectorBatch],
+    cfg: &ReliabilityConfig,
+) -> ReliableVectorRun {
+    let lanes = streams.first().map(|b| b.lanes()).unwrap_or(1);
+    let packetize = |batch: &VectorBatch, child: u16| -> Vec<VectorAggregationPacket> {
+        let mut out = Vec::new();
+        let mut chunks = VectorChunks::new(batch);
+        while let Some((range, last)) = chunks.next_chunk() {
+            out.push(VectorAggregationPacket {
+                tree,
+                op,
+                eot: last,
+                rel: None,
+                batch: batch.sub_batch(range),
+            });
+        }
+        stamp(&mut out, child, |p, rel| p.rel = Some(rel));
+        out
+    };
+    let pkts: Vec<Vec<VectorAggregationPacket>> = streams
+        .iter()
+        .enumerate()
+        .map(|(c, b)| packetize(b, c as u16))
+        .collect();
+
+    let mut sink = VectorSink::new(lanes);
+    let ingress = drive(
+        &pkts,
+        cfg,
+        cfg.data,
+        0x3000,
+        |p| p.wire_len() as u64,
+        |batch| sw.ingest_vector_reliable_batch(tree, batch, &mut sink),
+    );
+    assert_eq!(sink.flushes, 1, "all EoTs admitted ⇒ exactly one flush");
+    sw.finalize(tree);
+    let dedup = sw.dedup_stats(tree);
+    let stats = sw.stats(tree).expect("tree stats");
+    let expected_pairs = stats.pairs_out_stream + stats.pairs_out_flush;
+
+    let egress_batch = crate::switch::vector_sink_to_batch(&sink);
+    let epkts = packetize(&egress_batch, 0);
+    let mut ep = Endpoint::new(VectorBatch::new(lanes));
+    let egress = drive(
+        &[epkts],
+        cfg,
+        cfg.egress,
+        0x4000,
+        |p| p.wire_len() as u64,
+        |batch| {
+            batch
+                .iter()
+                .map(|pkt| {
+                    let rel = pkt.rel.expect("egress packets carry rel headers");
+                    if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                        ep.received.extend_from_batch(&pkt.batch);
+                    }
+                    ep.ack_for(tree, rel.child)
+                })
+                .collect()
+        },
+    );
+    let completeness = Completeness {
+        expected_pairs,
+        received_pairs: ep.received.len() as u64,
+    };
+    assert!(
+        completeness.is_complete(),
+        "end-of-job recovery left {} pairs missing",
+        completeness.missing()
+    );
+    ReliableVectorRun {
+        ingress,
+        egress,
+        dedup,
+        completeness,
+        received: ep.received,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{Key, TreeConfig};
+    use crate::switch::SwitchConfig;
+    use crate::util::rng::Pcg32;
+    use std::collections::HashMap;
+
+    fn switch(children: u16) -> SwitchAggSwitch {
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(16 << 10, Some(256 << 10)));
+        sw.configure(&[TreeConfig {
+            tree: TreeId(1),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        sw
+    }
+
+    fn streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+        let mut rng = Pcg32::new(seed);
+        (0..children)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        let id = rng.gen_range_u64(300);
+                        KvPair::new(
+                            Key::from_id(id, 16 + (id % 49) as usize),
+                            rng.gen_range_u64(100) as i64 - 50,
+                        )
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn merged(pairs: &[KvPair]) -> HashMap<Key, i64> {
+        Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
+    }
+
+    #[test]
+    fn lossless_session_matches_plain_ingest() {
+        let ss = streams(3, 1_500, 5);
+        let mut plain = switch(3);
+        let out_plain = plain.ingest_child_streams(TreeId(1), AggOp::Sum, &ss);
+
+        let mut sw = switch(3);
+        let run = run_reliable_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &ReliabilityConfig::default(),
+        );
+        assert_eq!(run.ingress.retransmissions, 0);
+        assert_eq!(run.egress.retransmissions, 0);
+        assert_eq!(run.dedup.dup_drops, 0);
+        assert!(run.completeness.is_complete());
+        // Same final aggregate as the legacy (unreliable) path.
+        assert_eq!(merged(&run.received), merged(&out_plain));
+    }
+
+    #[test]
+    fn lossy_session_recovers_the_exact_aggregate() {
+        let ss = streams(2, 2_000, 9);
+        let mut base_sw = switch(2);
+        let base = run_reliable_scalar(
+            &mut base_sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &ReliabilityConfig::default(),
+        );
+        let mut sw = switch(2);
+        let lossy = run_reliable_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &ReliabilityConfig::uniform(0.1, 0xD00D),
+        );
+        assert!(lossy.ingress.retransmissions > 0, "10% loss must retransmit");
+        assert!(lossy.dedup.dup_drops > 0, "retransmits reach a cum-acked window");
+        assert!(lossy.completeness.is_complete());
+        assert_eq!(merged(&lossy.received), merged(&base.received));
+    }
+
+    #[test]
+    fn duplicating_channel_is_deduped_at_the_switch() {
+        let ss = streams(2, 1_000, 21);
+        let mut sw = switch(2);
+        let cfg = ReliabilityConfig::uniform(0.02, 0xFACE).with_dup(0.05);
+        let run = run_reliable_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+        assert!(run.ingress.dups > 0);
+        assert!(run.dedup.dup_drops > 0);
+        let mut base_sw = switch(2);
+        let base = run_reliable_scalar(
+            &mut base_sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &ReliabilityConfig::default(),
+        );
+        assert_eq!(merged(&run.received), merged(&base.received));
+    }
+}

@@ -2,11 +2,13 @@
 //! and shortest-path routing — the substrate the controller builds
 //! aggregation trees over (§3 "the physical topology of the network").
 
+pub mod loss;
 pub mod netsim;
 pub mod partition;
 pub mod routing;
 pub mod topology;
 
+pub use loss::{LossChannel, LossConfig};
 pub use netsim::NetSim;
 pub use partition::{run_monolithic, run_tree_partitioned, SendReq, TreeSimResult};
 pub use topology::{NodeId, NodeKind, PortId, Topology};

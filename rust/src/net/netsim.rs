@@ -25,6 +25,7 @@
 //! original `BinaryHeap` implementation kept as the differential
 //! baseline (`tests/parallel_determinism.rs` pins one to the other).
 
+use crate::net::loss::{LossChannel, LossConfig};
 use crate::net::topology::{NodeId, Topology};
 use crate::sim::Link;
 use crate::util::fxhash::FxHashMap;
@@ -51,6 +52,11 @@ pub struct LinkStats {
     pub packets: u64,
     /// Time the link finishes its last serialization.
     pub busy_until_s: f64,
+    /// Packets lost on this link (loss model; the serialization still
+    /// burned wire time — the corruption-on-the-wire model).
+    pub dropped: u64,
+    /// Packets the link layer duplicated (both copies serialized).
+    pub duplicated: u64,
 }
 
 /// One directed link's in-flight packets: a FIFO arena, sorted by
@@ -110,6 +116,15 @@ impl Calendar {
     /// Make `lid` resident with head delivery time `t` (`t` is never
     /// before the last popped time, so its slot is never in the past).
     fn insert(&mut self, lid: u32, t: f64) {
+        // A NaN/inf head time would alias an arbitrary ring slot via
+        // the `as u64` cast in `floor_of` (NaN → 0, +inf → u64::MAX)
+        // and corrupt pop order; `Link` validates rates at
+        // construction, so this can only mean upstream arithmetic
+        // went degenerate — fail loudly in debug builds.
+        debug_assert!(
+            t.is_finite(),
+            "non-finite link head time {t} would alias a calendar slot"
+        );
         let b = (self.floor_of(t) as usize) & (self.buckets.len() - 1);
         self.buckets[b].push(lid);
         self.active += 1;
@@ -177,6 +192,12 @@ pub struct NetSim {
     link_dirs: Vec<(NodeId, NodeId)>,
     links: Vec<LinkStats>,
     lanes: Vec<Lane>,
+    /// Per-link loss channel (dense, same index); `None` = lossless.
+    loss: Vec<Option<LossChannel>>,
+    /// Loss config applied to links without a per-link override.
+    default_loss: LossConfig,
+    /// Per-directed-link loss overrides, keyed before link creation.
+    loss_overrides: FxHashMap<(u32, u32), LossConfig>,
     calendar: Calendar,
     /// (from, dst) → next-hop node id, `u32::MAX` for unroutable.
     /// Filled a whole shortest path at a time, so each (source,
@@ -201,6 +222,9 @@ impl NetSim {
             link_dirs: Vec::new(),
             links: Vec::new(),
             lanes: Vec::new(),
+            loss: Vec::new(),
+            default_loss: LossConfig::lossless(),
+            loss_overrides: FxHashMap::default(),
             calendar: Calendar::new(width, 256),
             route_cache: FxHashMap::default(),
             delivered: Vec::new(),
@@ -212,6 +236,38 @@ impl NetSim {
     /// Inject a packet of `bytes` at `src` bound for `dst` at `t`.
     pub fn send(&mut self, t: f64, src: NodeId, dst: NodeId, bytes: u64) {
         self.transmit(t.max(self.now_s), src, dst, bytes);
+    }
+
+    /// Apply `cfg` to every link that has no per-link override.  Must
+    /// be called before any traffic (channels are created with their
+    /// links; retrofitting would change already-drawn decisions).
+    pub fn set_default_loss(&mut self, cfg: LossConfig) {
+        assert!(
+            self.links.is_empty(),
+            "set_default_loss must precede the first send"
+        );
+        cfg.validate();
+        self.default_loss = cfg;
+    }
+
+    /// Override the loss model of the directed link `from → to`.  Like
+    /// [`Self::set_default_loss`], this must precede traffic on that
+    /// link: replacing a live link's channel would restart its random
+    /// stream mid-run and break bit-reproducibility.
+    pub fn set_link_loss(&mut self, from: NodeId, to: NodeId, cfg: LossConfig) {
+        cfg.validate();
+        assert!(
+            !self.link_ids.contains_key(&(from.0, to.0)),
+            "set_link_loss must precede the first send on {from:?} -> {to:?}"
+        );
+        self.loss_overrides.insert((from.0, to.0), cfg);
+    }
+
+    fn make_channel(cfg: LossConfig, from: NodeId, to: NodeId) -> Option<LossChannel> {
+        // Salted by the directed endpoints, so each link's random
+        // stream is independent of link-creation (traffic) order.
+        let salt = ((from.0 as u64) << 32) | to.0 as u64;
+        (!cfg.is_lossless()).then(|| LossChannel::salted(cfg, salt))
     }
 
     /// Cached static next hop from `at` towards `dst` (§4.1).  Each
@@ -240,6 +296,12 @@ impl NetSim {
         self.link_dirs.push((from, to));
         self.links.push(LinkStats::default());
         self.lanes.push(Lane::default());
+        let cfg = self
+            .loss_overrides
+            .get(&(from.0, to.0))
+            .copied()
+            .unwrap_or(self.default_loss);
+        self.loss.push(Self::make_channel(cfg, from, to));
         id as usize
     }
 
@@ -252,29 +314,51 @@ impl NetSim {
             return; // unroutable: drop (counted nowhere, like a real L2 drop)
         };
         let lid = self.link_id(at, next);
-        let stats = &mut self.links[lid];
-        let start = t.max(stats.busy_until_s);
-        let done = start + self.link.transfer_secs(bytes);
-        stats.busy_until_s = done;
-        stats.bytes += bytes;
-        stats.packets += 1;
-        self.next_id += 1;
-        let ev = Event {
-            time_s: done + PROP_DELAY_S,
-            to: next,
-            dst,
-            bytes,
-            id: self.next_id,
+        // Loss model: 0 copies = lost on the wire (the serialization
+        // still burns link time), 2 = duplicated by a link-layer
+        // retransmit (both copies serialize back-to-back).  Lossless
+        // links skip the draw entirely, keeping the no-loss engine
+        // byte-identical to the reference.
+        let copies = match &mut self.loss[lid] {
+            Some(ch) => ch.copies(),
+            None => 1,
         };
-        let lane = &mut self.lanes[lid];
-        let was_idle = lane.is_idle();
-        if was_idle {
-            lane.head = 0;
-            lane.events.clear();
+        {
+            let stats = &mut self.links[lid];
+            if copies == 0 {
+                stats.dropped += 1;
+            } else if copies == 2 {
+                stats.duplicated += 1;
+            }
         }
-        lane.events.push(ev);
-        if was_idle {
-            self.calendar.insert(lid as u32, ev.time_s);
+        for _ in 0..copies.max(1) {
+            let stats = &mut self.links[lid];
+            let start = t.max(stats.busy_until_s);
+            let done = start + self.link.transfer_secs(bytes);
+            stats.busy_until_s = done;
+            stats.bytes += bytes;
+            stats.packets += 1;
+            if copies == 0 {
+                continue; // wire time burned, nothing arrives
+            }
+            self.next_id += 1;
+            let ev = Event {
+                time_s: done + PROP_DELAY_S,
+                to: next,
+                dst,
+                bytes,
+                id: self.next_id,
+            };
+            let lane = &mut self.lanes[lid];
+            let was_idle = lane.is_idle();
+            if was_idle {
+                lane.head = 0;
+                lane.events.clear();
+            }
+            lane.events.push(ev);
+            if was_idle {
+                self.calendar.insert(lid as u32, ev.time_s);
+            }
         }
     }
 
@@ -335,6 +419,16 @@ impl NetSim {
     /// congestion metric of the routing experiment.
     pub fn max_link_bytes(&self) -> u64 {
         self.links.iter().map(|s| s.bytes).max().unwrap_or(0)
+    }
+
+    /// Packets lost to the loss model across all links.
+    pub fn dropped_packets(&self) -> u64 {
+        self.links.iter().map(|s| s.dropped).sum()
+    }
+
+    /// Packets duplicated by the loss model across all links.
+    pub fn duplicated_packets(&self) -> u64 {
+        self.links.iter().map(|s| s.duplicated).sum()
     }
 
     /// Total packet-hops processed (one per link traversal) — the
@@ -619,6 +713,80 @@ mod tests {
         assert_eq!(cal.run(), heap.run());
         assert_eq!(cal.delivered(), heap.delivered());
         assert_eq!(cal.link_stats(), heap.link_stats());
+    }
+
+    #[test]
+    fn lossy_link_drops_deterministically() {
+        let run = || {
+            let (topo, _sw, hosts) = Topology::star(2);
+            let mut sim = NetSim::new(topo);
+            sim.set_default_loss(LossConfig::drop(0.2, 0xBEEF));
+            for i in 0..1_000u64 {
+                sim.send(i as f64 * 1e-5, hosts[0], hosts[1], 1500);
+            }
+            sim.run();
+            (sim.delivered_packets(hosts[1]), sim.dropped_packets())
+        };
+        let (delivered, dropped) = run();
+        assert_eq!(run(), (delivered, dropped), "same seed, same outcome");
+        assert!(dropped > 0, "20% loss over 2 hops must drop something");
+        assert!(delivered < 1_000);
+        // Two independent 20%-lossy hops: ~64% end-to-end survival.
+        assert!((500..950).contains(&delivered), "delivered {delivered}");
+    }
+
+    #[test]
+    fn per_link_override_confines_loss() {
+        let (topo, sw, hosts) = Topology::star(3);
+        let mut sim = NetSim::new(topo);
+        // Only host0's uplink is lossy; host1's path stays clean.
+        sim.set_link_loss(hosts[0], sw, LossConfig::drop(0.5, 7));
+        for i in 0..200u64 {
+            sim.send(i as f64 * 1e-5, hosts[0], hosts[2], 1000);
+            sim.send(i as f64 * 1e-5, hosts[1], hosts[2], 1000);
+        }
+        sim.run();
+        let stats = sim.link_stats();
+        assert!(stats[&(hosts[0], sw)].dropped > 0);
+        assert_eq!(stats[&(hosts[1], sw)].dropped, 0);
+        assert_eq!(stats[&(sw, hosts[2])].dropped, 0);
+        assert!(sim.delivered_packets(hosts[2]) < 400);
+        assert!(sim.delivered_packets(hosts[2]) >= 200);
+    }
+
+    #[test]
+    fn duplication_delivers_extra_copies() {
+        let (topo, _sw, hosts) = Topology::star(2);
+        let mut sim = NetSim::new(topo);
+        sim.set_default_loss(LossConfig::drop(0.0, 3).with_dup(0.3));
+        for i in 0..500u64 {
+            sim.send(i as f64 * 1e-5, hosts[0], hosts[1], 1000);
+        }
+        sim.run();
+        assert!(sim.duplicated_packets() > 0);
+        assert!(sim.delivered_packets(hosts[1]) > 500);
+        assert_eq!(sim.dropped_packets(), 0);
+    }
+
+    #[test]
+    fn lossless_loss_model_is_byte_identical_to_reference() {
+        // Enabling the subsystem with loss disabled must not perturb a
+        // single delivery, stat, or event count vs the heap baseline.
+        let (topo, _sw, hosts) = Topology::star(5);
+        let mut cal = NetSim::new(topo.clone());
+        cal.set_default_loss(LossConfig::lossless());
+        let mut heap = reference::HeapNetSim::new(topo);
+        for round in 0..30u64 {
+            for i in 0..4 {
+                let t = round as f64 * 1e-5;
+                cal.send(t, hosts[i], hosts[4], 900 + i as u64);
+                heap.send(t, hosts[i], hosts[4], 900 + i as u64);
+            }
+        }
+        assert_eq!(cal.run(), heap.run());
+        assert_eq!(cal.delivered(), heap.delivered());
+        assert_eq!(cal.link_stats(), heap.link_stats());
+        assert_eq!(cal.dropped_packets(), 0);
     }
 
     #[test]

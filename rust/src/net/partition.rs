@@ -80,6 +80,8 @@ fn fold_stats(
         e.bytes += s.bytes;
         e.packets += s.packets;
         e.busy_until_s = e.busy_until_s.max(s.busy_until_s);
+        e.dropped += s.dropped;
+        e.duplicated += s.duplicated;
     }
 }
 

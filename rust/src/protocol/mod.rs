@@ -14,6 +14,7 @@
 
 pub mod kv;
 pub mod packet;
+pub mod reliable;
 pub mod types;
 pub mod vector;
 pub mod wire;
@@ -23,6 +24,7 @@ pub use packet::{
     AckKind, AggregationPacket, ConfigurePacket, DataPacket, LaunchPacket, MtuChunks, Packet,
     TreeConfig, AGG_FIXED_LEN, HEADER_OVERHEAD, MAX_AGG_PAYLOAD, MTU,
 };
+pub use reliable::{AggAckPacket, RelHeader, ReliableSender, REL_WINDOW, RETX_TIMEOUT_TICKS};
 pub use types::{AggOp, TreeId, Value};
 pub use vector::{
     VectorAggregationPacket, VectorBatch, VectorChunks, MAX_LANES,

@@ -5,6 +5,7 @@
 //! figure) plus a 1-byte SwitchAgg packet-type tag.
 
 use super::kv::{KvDecodeError, KvPair};
+use super::reliable::{AggAckPacket, RelHeader};
 use super::types::{AggOp, TreeId};
 use super::vector::{VecDecodeError, VectorAggregationPacket};
 use super::wire::{self, Reader};
@@ -22,6 +23,15 @@ pub const MAX_AGG_PAYLOAD: usize = MTU - HEADER_OVERHEAD - AGG_FIXED_LEN;
 
 /// TreeId(4) + op(1) + flags(1) + pair count(2).
 pub const AGG_FIXED_LEN: usize = 8;
+
+/// Aggregation-packet flag bits (shared by the scalar tag and the
+/// vector tag, so the W = 1 vector payload stays byte-identical to the
+/// scalar payload even with the reliability record present).
+pub(crate) const FLAG_EOT: u8 = 1;
+/// Vector packets only: a 2-byte lane count follows the pair count.
+pub(crate) const FLAG_MULTI_LANE: u8 = 1 << 1;
+/// A [`RelHeader`] (child + seq) follows the fixed fields.
+pub(crate) const FLAG_REL: u8 = 1 << 2;
 
 /// `Launch` — master → controller (Table 1): worker counts + addresses.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -61,13 +71,19 @@ pub struct AggregationPacket {
     pub op: AggOp,
     /// End-of-transmission: last packet of one worker's stream.
     pub eot: bool,
+    /// Reliability record (child + per-tree seq), present only on
+    /// reliable streams — `None` keeps the legacy wire format
+    /// byte-identical.
+    pub rel: Option<RelHeader>,
     pub pairs: Vec<KvPair>,
 }
 
 impl AggregationPacket {
     /// Payload bytes (fixed fields + encoded pairs), excluding envelope.
     pub fn payload_len(&self) -> usize {
-        AGG_FIXED_LEN + self.pairs.iter().map(|p| p.encoded_len()).sum::<usize>()
+        AGG_FIXED_LEN
+            + self.rel.map_or(0, |_| RelHeader::WIRE_LEN)
+            + self.pairs.iter().map(|p| p.encoded_len()).sum::<usize>()
     }
 
     /// Total wire footprint including the L2/L3 envelope.
@@ -91,6 +107,7 @@ impl AggregationPacket {
                 tree,
                 op,
                 eot: eot && last,
+                rel: None,
                 pairs: chunk.to_vec(),
             });
         }
@@ -160,6 +177,9 @@ pub enum Packet {
     /// byte-identical to [`Packet::Aggregation`]'s; see `vector`).
     VectorAggregation(VectorAggregationPacket),
     Data(DataPacket),
+    /// Reliability feedback for one `(tree, child)` aggregation
+    /// stream: cumulative ack + credit (see `reliable`).
+    AggAck(AggAckPacket),
 }
 
 const TAG_LAUNCH: u8 = 1;
@@ -169,6 +189,7 @@ const TAG_ACK1: u8 = 4;
 const TAG_AGGREGATION: u8 = 5;
 const TAG_DATA: u8 = 6;
 const TAG_VECTOR_AGGREGATION: u8 = 7;
+const TAG_AGG_ACK: u8 = 8;
 
 #[derive(Debug, PartialEq, Eq, thiserror::Error)]
 pub enum PacketDecodeError {
@@ -176,6 +197,8 @@ pub enum PacketDecodeError {
     UnknownTag(u8),
     #[error("unknown aggregation op {0}")]
     UnknownOp(u8),
+    #[error("unknown aggregation flag bits {0:#04x}")]
+    UnknownFlags(u8),
     #[error("kv pair: {0}")]
     Kv(#[from] KvDecodeError),
     #[error("vector payload: {0}")]
@@ -196,6 +219,7 @@ impl Packet {
             Packet::Aggregation(_) => TAG_AGGREGATION,
             Packet::VectorAggregation(_) => TAG_VECTOR_AGGREGATION,
             Packet::Data(_) => TAG_DATA,
+            Packet::AggAck(_) => TAG_AGG_ACK,
         }
     }
 
@@ -226,8 +250,15 @@ impl Packet {
             Packet::Aggregation(a) => {
                 wire::put_u32(&mut buf, a.tree.0);
                 wire::put_u8(&mut buf, a.op.code());
-                wire::put_u8(&mut buf, a.eot as u8);
+                let mut flags = a.eot as u8;
+                if a.rel.is_some() {
+                    flags |= FLAG_REL;
+                }
+                wire::put_u8(&mut buf, flags);
                 wire::put_u16(&mut buf, a.pairs.len() as u16);
+                if let Some(rel) = &a.rel {
+                    rel.encode(&mut buf);
+                }
                 for p in &a.pairs {
                     p.encode(&mut buf);
                 }
@@ -237,6 +268,12 @@ impl Packet {
             }
             Packet::Data(d) => {
                 wire::put_u32(&mut buf, d.payload_len);
+            }
+            Packet::AggAck(a) => {
+                wire::put_u32(&mut buf, a.tree.0);
+                wire::put_u16(&mut buf, a.child);
+                wire::put_u32(&mut buf, a.cum_seq);
+                wire::put_u16(&mut buf, a.credit);
             }
         }
         buf
@@ -249,11 +286,16 @@ impl Packet {
             TAG_LAUNCH => {
                 let nm = r.u16()? as usize;
                 let nr = r.u16()? as usize;
-                let mut reducers = Vec::with_capacity(nr);
+                // Pre-reserves are bounded by the bytes actually left
+                // in the buffer (4 B per address / 8 B per tree entry /
+                // 7 B per minimal pair below), so a crafted count field
+                // can never force an allocation the payload cannot
+                // back.
+                let mut reducers = Vec::with_capacity(nr.min(r.remaining() / 4));
                 for _ in 0..nr {
                     reducers.push(r.u32()?);
                 }
-                let mut mappers = Vec::with_capacity(nm);
+                let mut mappers = Vec::with_capacity(nm.min(r.remaining() / 4));
                 for _ in 0..nm {
                     mappers.push(r.u32()?);
                 }
@@ -261,7 +303,7 @@ impl Packet {
             }
             TAG_CONFIGURE => {
                 let n = r.u16()? as usize;
-                let mut trees = Vec::with_capacity(n);
+                let mut trees = Vec::with_capacity(n.min(r.remaining() / 8));
                 for _ in 0..n {
                     let tree = TreeId(r.u32()?);
                     let children = r.u16()?;
@@ -283,9 +325,23 @@ impl Packet {
                 let op_code = r.u8()?;
                 let op =
                     AggOp::from_code(op_code).ok_or(PacketDecodeError::UnknownOp(op_code))?;
-                let eot = r.u8()? != 0;
+                let flags = r.u8()?;
+                if flags & !(FLAG_EOT | FLAG_REL) != 0 {
+                    return Err(PacketDecodeError::UnknownFlags(flags));
+                }
+                let eot = flags & FLAG_EOT != 0;
                 let n = r.u16()? as usize;
-                let mut pairs = Vec::with_capacity(n);
+                let rel = if flags & FLAG_REL != 0 {
+                    Some(RelHeader::decode(&mut r)?)
+                } else {
+                    None
+                };
+                // Minimal encoded pair: key len (1) + value len (1) +
+                // 1-byte key + 4-byte value; the clamp keeps a crafted
+                // `count` from reserving memory the buffer cannot hold
+                // (mirrors the vector decode's bound).
+                const MIN_PAIR: usize = 7;
+                let mut pairs = Vec::with_capacity(n.min(r.remaining() / MIN_PAIR));
                 for _ in 0..n {
                     pairs.push(KvPair::decode(&mut r)?);
                 }
@@ -293,6 +349,7 @@ impl Packet {
                     tree,
                     op,
                     eot,
+                    rel,
                     pairs,
                 })
             }
@@ -301,6 +358,12 @@ impl Packet {
             }
             TAG_DATA => Packet::Data(DataPacket {
                 payload_len: r.u32()?,
+            }),
+            TAG_AGG_ACK => Packet::AggAck(AggAckPacket {
+                tree: TreeId(r.u32()?),
+                child: r.u16()?,
+                cum_seq: r.u32()?,
+                credit: r.u16()?,
             }),
             other => return Err(PacketDecodeError::UnknownTag(other)),
         };
@@ -351,9 +414,23 @@ mod tests {
                 tree: TreeId(7),
                 op: AggOp::Sum,
                 eot: true,
+                rel: None,
                 pairs: sample_pairs(5),
             }),
+            Packet::Aggregation(AggregationPacket {
+                tree: TreeId(7),
+                op: AggOp::Sum,
+                eot: false,
+                rel: Some(RelHeader { child: 3, seq: 41 }),
+                pairs: sample_pairs(2),
+            }),
             Packet::Data(DataPacket { payload_len: 1400 }),
+            Packet::AggAck(AggAckPacket {
+                tree: TreeId(7),
+                child: 3,
+                cum_seq: 41,
+                credit: 900,
+            }),
         ];
         for p in pkts {
             let buf = p.encode();
@@ -372,6 +449,7 @@ mod tests {
             tree: TreeId(7),
             op: AggOp::Max,
             eot: true,
+            rel: None,
             batch,
         });
         let buf = p.encode();
@@ -384,12 +462,14 @@ mod tests {
             tree: TreeId(3),
             op: AggOp::Sum,
             eot: false,
+            rel: None,
             pairs: pairs.clone(),
         });
         let vector = Packet::VectorAggregation(VectorAggregationPacket {
             tree: TreeId(3),
             op: AggOp::Sum,
             eot: false,
+            rel: None,
             batch: VectorBatch::from_pairs(&pairs),
         });
         let sbuf = scalar.encode();
@@ -417,6 +497,74 @@ mod tests {
             Packet::decode(&buf),
             Err(PacketDecodeError::Vector(_))
         ));
+    }
+
+    #[test]
+    fn scalar_decode_rejects_crafted_giant_header_cheaply() {
+        // An 8-byte header claiming 65535 pairs must fail with a
+        // truncation error on the first pair, not pre-reserve tens of
+        // megabytes from the attacker-controlled count field (the
+        // scalar mirror of the vector clamp above).
+        let mut buf = vec![5u8]; // TAG_AGGREGATION
+        wire::put_u32(&mut buf, 1); // tree
+        wire::put_u8(&mut buf, 0); // op = Sum
+        wire::put_u8(&mut buf, 0); // flags
+        wire::put_u16(&mut buf, u16::MAX); // pair count, no pair bytes
+        assert!(matches!(
+            Packet::decode(&buf),
+            Err(PacketDecodeError::Kv(_))
+        ));
+        // Same with a reliability record present.
+        let mut buf = vec![5u8];
+        wire::put_u32(&mut buf, 1);
+        wire::put_u8(&mut buf, 0);
+        wire::put_u8(&mut buf, FLAG_REL);
+        wire::put_u16(&mut buf, u16::MAX);
+        RelHeader { child: 0, seq: 1 }.encode(&mut buf);
+        assert!(matches!(
+            Packet::decode(&buf),
+            Err(PacketDecodeError::Kv(_))
+        ));
+    }
+
+    #[test]
+    fn scalar_decode_rejects_unknown_flag_bits() {
+        let mut buf = vec![5u8];
+        wire::put_u32(&mut buf, 1);
+        wire::put_u8(&mut buf, 0);
+        wire::put_u8(&mut buf, 0x88); // undefined bits
+        wire::put_u16(&mut buf, 0);
+        assert_eq!(
+            Packet::decode(&buf),
+            Err(PacketDecodeError::UnknownFlags(0x88))
+        );
+    }
+
+    #[test]
+    fn reliable_w1_vector_payload_matches_reliable_scalar() {
+        use crate::protocol::vector::{VectorAggregationPacket, VectorBatch};
+        // The W = 1 byte-identity must survive the reliability record:
+        // both tags put the RelHeader in the same position.
+        let pairs = sample_pairs(4);
+        let rel = Some(RelHeader { child: 2, seq: 9 });
+        let scalar = Packet::Aggregation(AggregationPacket {
+            tree: TreeId(3),
+            op: AggOp::Sum,
+            eot: true,
+            rel,
+            pairs: pairs.clone(),
+        });
+        let vector = Packet::VectorAggregation(VectorAggregationPacket {
+            tree: TreeId(3),
+            op: AggOp::Sum,
+            eot: true,
+            rel,
+            batch: VectorBatch::from_pairs(&pairs),
+        });
+        let (sbuf, vbuf) = (scalar.encode(), vector.encode());
+        assert_eq!(sbuf[1..], vbuf[1..]);
+        assert_eq!(Packet::decode(&sbuf).unwrap(), scalar);
+        assert_eq!(Packet::decode(&vbuf).unwrap(), vector);
     }
 
     #[test]
@@ -479,6 +627,7 @@ mod tests {
             tree: TreeId(3),
             op: AggOp::Min,
             eot: false,
+            rel: None,
             pairs: sample_pairs(17),
         };
         let encoded = Packet::Aggregation(a.clone()).encode();

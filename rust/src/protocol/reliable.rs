@@ -1,0 +1,244 @@
+//! Reliable delivery for aggregation streams (exactly-once under
+//! packet loss).
+//!
+//! The paper's partial-aggregation analysis (§2, Eq. 1) silently
+//! assumes every key-value pair reaches the switch exactly once; a
+//! dropped or duplicated packet breaks both the reduction-ratio claim
+//! and the *result* (a SUM combined twice is simply wrong).  Related
+//! systems treat this as table stakes — Flare builds retransmission
+//! and exactly-once combining into its switch logic, P4COM pairs
+//! host-side retransmission with switch-side dedup.  This module is
+//! the host half of that design:
+//!
+//! * [`RelHeader`] — a 6-byte per-packet record (sender child id +
+//!   per-tree sequence number) carried by both the scalar and the
+//!   W-lane vector aggregation packets behind a flag bit, so
+//!   unreliable streams stay byte-identical on the wire;
+//! * [`AggAckPacket`] — the switch's cumulative-ack / credit record
+//!   (packet tag 8), lightweight enough for a dataplane to emit: one
+//!   `(tree, child, cum_seq, credit)` tuple, no selective-ack maps;
+//! * [`ReliableSender`] — the sender-side retransmission queue: a
+//!   credit-limited sliding window over the packetized stream with a
+//!   timeout-driven retransmit scan.
+//!
+//! The switch half (the per-`(tree, child)` dedup window that makes
+//! retransmissions idempotent) lives in `switch::reliability`; the
+//! end-to-end session loop in `framework::reliable`.
+
+use super::types::TreeId;
+use super::wire::{self, Reader, Truncated};
+
+/// Dedup/credit window size in packets per `(tree, child)` stream.
+/// The sender never has more than this many unacknowledged sequence
+/// numbers outstanding, so the switch-side bitmap is bounded (128 B
+/// of state per child port at 1024 bits).
+pub const REL_WINDOW: u32 = 1024;
+
+/// Default retransmission timeout in session ticks (one tick = one
+/// send→switch→ack round trip in the discrete-time session model; see
+/// `framework::reliable`).  Acks normally return within the same
+/// tick, so anything still unacknowledged after two ticks was lost.
+pub const RETX_TIMEOUT_TICKS: u64 = 2;
+
+/// Per-packet reliability record: which child-port stream the packet
+/// belongs to and its 1-based sequence number within that stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RelHeader {
+    /// Sender's child index on the aggregation tree (= switch ingress
+    /// port of the stream).
+    pub child: u16,
+    /// 1-based sequence number within this `(tree, child)` stream.
+    pub seq: u32,
+}
+
+impl RelHeader {
+    /// Wire footprint: child (2 B) + seq (4 B).
+    pub const WIRE_LEN: usize = 6;
+
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        wire::put_u16(buf, self.child);
+        wire::put_u32(buf, self.seq);
+    }
+
+    pub fn decode(r: &mut Reader<'_>) -> Result<Self, Truncated> {
+        let child = r.u16()?;
+        let seq = r.u32()?;
+        Ok(Self { child, seq })
+    }
+}
+
+/// `AggAck` — switch → sender feedback for one `(tree, child)` stream
+/// (packet tag 8): the cumulative sequence number (every seq ≤
+/// `cum_seq` has been admitted exactly once) and the remaining dedup
+/// window capacity the sender may fill beyond it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AggAckPacket {
+    pub tree: TreeId,
+    pub child: u16,
+    pub cum_seq: u32,
+    pub credit: u16,
+}
+
+/// Sender-side retransmission queue for one packetized `(tree, child)`
+/// stream: a sliding window of unacknowledged sequence numbers, each
+/// stamped with its last transmission tick.  [`Self::poll`] first
+/// retransmits everything that has timed out, then opens new sequence
+/// numbers up to the advertised credit.
+#[derive(Clone, Debug)]
+pub struct ReliableSender {
+    /// Total packets in the stream (seqs are `1..=total`).
+    total: u32,
+    /// Next never-sent sequence number.
+    next_new: u32,
+    /// Highest cumulative ack received.
+    cum_acked: u32,
+    /// Latest advertised credit (window slots beyond `cum_acked`).
+    credit: u32,
+    timeout: u64,
+    /// Unacknowledged `(seq, last_sent_tick)`; bounded by the window.
+    inflight: Vec<(u32, u64)>,
+    /// First transmissions performed.
+    pub first_tx: u64,
+    /// Timeout-driven retransmissions performed.
+    pub retransmissions: u64,
+}
+
+impl ReliableSender {
+    pub fn new(total_packets: usize, timeout: u64) -> Self {
+        assert!(timeout >= 1, "a zero timeout would retransmit every tick");
+        Self {
+            total: u32::try_from(total_packets).expect("stream exceeds the u32 seq space"),
+            next_new: 1,
+            cum_acked: 0,
+            credit: REL_WINDOW,
+            timeout,
+            inflight: Vec::new(),
+            first_tx: 0,
+            retransmissions: 0,
+        }
+    }
+
+    /// Apply one ack.  Cumulative acks are idempotent and safe under
+    /// reordering/duplication: only a forward move updates state.
+    pub fn on_ack(&mut self, cum_seq: u32, credit: u16) {
+        if cum_seq < self.cum_acked {
+            return; // stale (reordered) ack
+        }
+        self.cum_acked = cum_seq;
+        self.credit = credit as u32;
+        self.inflight.retain(|&(seq, _)| seq > cum_seq);
+    }
+
+    /// Sequence numbers to put on the wire at tick `now`, appended to
+    /// `out`: timed-out retransmissions first (stream order), then new
+    /// sequence numbers while the credit window has room.
+    pub fn poll(&mut self, now: u64, out: &mut Vec<u32>) {
+        for (seq, sent_at) in self.inflight.iter_mut() {
+            if now.saturating_sub(*sent_at) >= self.timeout {
+                *sent_at = now;
+                self.retransmissions += 1;
+                out.push(*seq);
+            }
+        }
+        while self.next_new <= self.total && self.next_new - self.cum_acked <= self.credit {
+            out.push(self.next_new);
+            self.inflight.push((self.next_new, now));
+            self.first_tx += 1;
+            self.next_new += 1;
+        }
+    }
+
+    /// Every packet of the stream has been cumulatively acknowledged.
+    pub fn done(&self) -> bool {
+        self.cum_acked >= self.total
+    }
+
+    pub fn cum_acked(&self) -> u32 {
+        self.cum_acked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn polled(s: &mut ReliableSender, now: u64) -> Vec<u32> {
+        let mut out = Vec::new();
+        s.poll(now, &mut out);
+        out
+    }
+
+    #[test]
+    fn sends_whole_small_stream_in_one_window() {
+        let mut s = ReliableSender::new(5, 2);
+        assert_eq!(polled(&mut s, 0), vec![1, 2, 3, 4, 5]);
+        assert!(!s.done());
+        s.on_ack(5, REL_WINDOW as u16);
+        assert!(s.done());
+        assert_eq!(s.first_tx, 5);
+        assert_eq!(s.retransmissions, 0);
+        // Nothing left to send.
+        assert!(polled(&mut s, 1).is_empty());
+    }
+
+    #[test]
+    fn credit_bounds_the_open_window() {
+        let mut s = ReliableSender::new(5000, 2);
+        let first = polled(&mut s, 0);
+        assert_eq!(first.len(), REL_WINDOW as usize);
+        assert_eq!(*first.last().unwrap(), REL_WINDOW);
+        // Ack half the window with reduced credit.
+        s.on_ack(512, 100);
+        let next = polled(&mut s, 1);
+        // Window now covers seqs 513..=612; 1..=1024 already sent.
+        assert!(next.is_empty());
+        s.on_ack(1024, 100);
+        let next = polled(&mut s, 2);
+        assert_eq!(next, (1025..=1124).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn timeout_retransmits_unacked_only() {
+        let mut s = ReliableSender::new(3, 2);
+        assert_eq!(polled(&mut s, 0), vec![1, 2, 3]);
+        s.on_ack(1, REL_WINDOW as u16); // 2 and 3 lost
+        assert!(polled(&mut s, 1).is_empty(), "not timed out yet");
+        assert_eq!(polled(&mut s, 2), vec![2, 3]);
+        assert_eq!(s.retransmissions, 2);
+        // A retransmission refreshes the timestamp.
+        assert!(polled(&mut s, 3).is_empty());
+        s.on_ack(3, REL_WINDOW as u16);
+        assert!(s.done());
+    }
+
+    #[test]
+    fn stale_and_duplicate_acks_are_ignored() {
+        let mut s = ReliableSender::new(10, 2);
+        polled(&mut s, 0);
+        s.on_ack(7, REL_WINDOW as u16);
+        s.on_ack(3, 1); // stale: must not roll back cum or credit
+        assert_eq!(s.cum_acked(), 7);
+        s.on_ack(7, REL_WINDOW as u16); // duplicate: harmless
+        assert_eq!(s.cum_acked(), 7);
+    }
+
+    #[test]
+    fn empty_stream_is_immediately_done() {
+        let s = ReliableSender::new(0, 2);
+        assert!(s.done());
+    }
+
+    #[test]
+    fn rel_header_round_trips() {
+        let h = RelHeader {
+            child: 7,
+            seq: 0xDEAD_BEEF,
+        };
+        let mut buf = Vec::new();
+        h.encode(&mut buf);
+        assert_eq!(buf.len(), RelHeader::WIRE_LEN);
+        let mut r = Reader::new(&buf);
+        assert_eq!(RelHeader::decode(&mut r).unwrap(), h);
+        assert!(r.is_empty());
+    }
+}

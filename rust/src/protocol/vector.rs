@@ -22,7 +22,8 @@
 //! scalar path is the degenerate case, not a parallel format.
 
 use super::kv::{Key, KvDecodeError, KvPair, MAX_KEY_LEN, MIN_KEY_LEN};
-use super::packet::{AGG_FIXED_LEN, HEADER_OVERHEAD, MTU};
+use super::packet::{AGG_FIXED_LEN, FLAG_EOT, FLAG_MULTI_LANE, FLAG_REL, HEADER_OVERHEAD, MTU};
+use super::reliable::RelHeader;
 use super::types::{AggOp, TreeId, Value};
 use super::wire::{self, Reader};
 
@@ -181,6 +182,17 @@ impl VectorBatch {
         self.keys.extend_from_slice(&other.keys);
         self.values.extend_from_slice(&other.values);
     }
+
+    /// Clone the pairs in `range` into a fresh batch — the reliable
+    /// session driver materializes per-packet batches from
+    /// [`VectorChunks`] ranges with this.
+    pub fn sub_batch(&self, range: std::ops::Range<usize>) -> VectorBatch {
+        let mut out = Self::with_capacity(self.lanes, range.len());
+        out.keys.extend_from_slice(&self.keys[range.clone()]);
+        out.values
+            .extend_from_slice(&self.values[range.start * self.lanes..range.end * self.lanes]);
+        out
+    }
 }
 
 /// `VectorAggregation` — the W-lane data packet.
@@ -189,13 +201,20 @@ pub struct VectorAggregationPacket {
     pub tree: TreeId,
     pub op: AggOp,
     pub eot: bool,
+    /// Reliability record (child + per-tree seq), present only on
+    /// reliable streams — `None` keeps the legacy wire format
+    /// byte-identical.  Positioned after the lane count, mirroring the
+    /// scalar tag's layout so the W = 1 payload stays byte-identical.
+    pub rel: Option<RelHeader>,
     pub batch: VectorBatch,
 }
 
 impl VectorAggregationPacket {
     /// Payload bytes (fixed fields + encoded pairs), excluding envelope.
     pub fn payload_len(&self) -> usize {
-        vec_fixed_len(self.batch.lanes()) + self.batch.payload_encoded_len()
+        vec_fixed_len(self.batch.lanes())
+            + self.rel.map_or(0, |_| RelHeader::WIRE_LEN)
+            + self.batch.payload_encoded_len()
     }
 
     /// Total wire footprint including the L2/L3 envelope.
@@ -208,10 +227,20 @@ impl VectorAggregationPacket {
         let multi = lanes != 1;
         wire::put_u32(buf, self.tree.0);
         wire::put_u8(buf, self.op.code());
-        wire::put_u8(buf, (self.eot as u8) | ((multi as u8) << 1));
+        let mut flags = self.eot as u8;
+        if multi {
+            flags |= FLAG_MULTI_LANE;
+        }
+        if self.rel.is_some() {
+            flags |= FLAG_REL;
+        }
+        wire::put_u8(buf, flags);
         wire::put_u16(buf, self.batch.len() as u16);
         if multi {
             wire::put_u16(buf, lanes as u16);
+        }
+        if let Some(rel) = &self.rel {
+            rel.encode(buf);
         }
         for (key, vals) in self.batch.iter() {
             let vw = lane_value_width(vals);
@@ -233,12 +262,21 @@ impl VectorAggregationPacket {
         let op_code = r.u8()?;
         let op = AggOp::from_code(op_code).ok_or(VecDecodeError::UnknownOp(op_code))?;
         let flags = r.u8()?;
-        let eot = flags & 1 != 0;
+        if flags & !(FLAG_EOT | FLAG_MULTI_LANE | FLAG_REL) != 0 {
+            return Err(VecDecodeError::UnknownFlags(flags));
+        }
+        let eot = flags & FLAG_EOT != 0;
+        let multi = flags & FLAG_MULTI_LANE != 0;
         let n = r.u16()? as usize;
-        let lanes = if flags & 2 != 0 { r.u16()? as usize } else { 1 };
-        if !(1..=MAX_LANES).contains(&lanes) || (flags & 2 != 0 && lanes == 1) {
+        let lanes = if multi { r.u16()? as usize } else { 1 };
+        if !(1..=MAX_LANES).contains(&lanes) || (multi && lanes == 1) {
             return Err(VecDecodeError::BadLanes(lanes));
         }
+        let rel = if flags & FLAG_REL != 0 {
+            Some(RelHeader::decode(r)?)
+        } else {
+            None
+        };
         // Bound the pre-reserve by what the buffer could possibly
         // hold — a pair is at least 2 metadata bytes + 1 key byte +
         // `lanes` 4-byte values — so a tiny buffer with a crafted
@@ -266,6 +304,7 @@ impl VectorAggregationPacket {
             tree,
             op,
             eot,
+            rel,
             batch,
         })
     }
@@ -275,6 +314,8 @@ impl VectorAggregationPacket {
 pub enum VecDecodeError {
     #[error("unknown aggregation op {0}")]
     UnknownOp(u8),
+    #[error("unknown aggregation flag bits {0:#04x}")]
+    UnknownFlags(u8),
     #[error("bad lane count {0}")]
     BadLanes(usize),
     #[error("kv: {0}")]
@@ -447,6 +488,19 @@ mod tests {
         let mut chunks = VectorChunks::new(&empty);
         assert_eq!(chunks.next_chunk(), Some((0..0, true)));
         assert_eq!(chunks.next_chunk(), None);
+    }
+
+    #[test]
+    fn sub_batch_clones_the_range() {
+        let b = sample_batch(4, 20);
+        let s = b.sub_batch(5..9);
+        assert_eq!(s.lanes(), 4);
+        assert_eq!(s.len(), 4);
+        for (j, i) in (5..9).enumerate() {
+            assert_eq!(s.key(j), b.key(i));
+            assert_eq!(s.lane_slice(j), b.lane_slice(i));
+        }
+        assert!(b.sub_batch(3..3).is_empty());
     }
 
     #[test]

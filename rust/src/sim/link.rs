@@ -7,8 +7,17 @@ pub struct Link {
 }
 
 impl Link {
+    /// Build a link of `gbps` Gbit/s.  The rate must be finite and
+    /// strictly positive: a zero/NaN rate makes `transfer_secs`
+    /// non-finite, and a non-finite `busy_until_s` downstream aliases
+    /// an arbitrary calendar-queue slot (`Calendar::floor_of`'s
+    /// `as u64` cast maps NaN to 0 and +inf to `u64::MAX`), silently
+    /// corrupting NetSim pop order — so reject it at the source.
     pub fn new_gbps(gbps: f64) -> Self {
-        assert!(gbps > 0.0);
+        assert!(
+            gbps.is_finite() && gbps > 0.0,
+            "link rate must be a finite positive Gbps value (got {gbps})"
+        );
         Self {
             bits_per_sec: gbps * 1e9,
         }
@@ -49,6 +58,20 @@ mod tests {
         assert!((l.bytes_per_sec() - 1.25e9).abs() < 1.0);
         // 1.25 GB in 1 second.
         assert!((l.transfer_secs(1_250_000_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn misconfigured_rates_are_rejected_at_construction() {
+        // Regression: each of these used to (or would) yield a
+        // non-finite busy time deep inside NetSim's calendar queue;
+        // now construction itself refuses them.
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let r = std::panic::catch_unwind(|| Link::new_gbps(bad));
+            assert!(r.is_err(), "rate {bad} must be rejected");
+        }
+        // The boundary of sanity still works.
+        let l = Link::new_gbps(1e-6);
+        assert!(l.transfer_secs(1).is_finite());
     }
 
     #[test]

@@ -40,7 +40,7 @@ impl HeaderExtract {
                 self.agg_packets += 1;
                 Dispatch::Aggregate
             }
-            Packet::Launch(_) | Packet::Ack(_) => Dispatch::Control,
+            Packet::Launch(_) | Packet::Ack(_) | Packet::AggAck(_) => Dispatch::Control,
         }
     }
 }
@@ -69,6 +69,7 @@ mod tests {
                 tree: TreeId(0),
                 op: AggOp::Sum,
                 eot: false,
+                rel: None,
                 pairs: vec![],
             })),
             Dispatch::Aggregate
@@ -86,11 +87,21 @@ mod tests {
                 tree: TreeId(0),
                 op: AggOp::Sum,
                 eot: false,
+                rel: None,
                 batch: VectorBatch::new(8),
             })),
             Dispatch::Aggregate
         );
-        assert_eq!(h.packets_seen, 6);
+        assert_eq!(
+            h.classify(&Packet::AggAck(crate::protocol::AggAckPacket {
+                tree: TreeId(0),
+                child: 0,
+                cum_seq: 0,
+                credit: 0,
+            })),
+            Dispatch::Control
+        );
+        assert_eq!(h.packets_seen, 7);
         assert_eq!(h.agg_packets, 2);
     }
 }

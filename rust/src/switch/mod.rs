@@ -27,6 +27,7 @@ pub mod hash_table;
 pub mod header_extract;
 pub mod parallel;
 pub mod payload_analyzer;
+pub mod reliability;
 pub mod scheduler;
 pub mod switch_sim;
 
@@ -34,6 +35,7 @@ pub use config::{EvictionPolicy, MemoryPolicy, StageDelays, SwitchConfig};
 pub use hash_table::{HashTable, LaneProbe, Probe, VectorEvictSink};
 pub use parallel::Parallelism;
 pub use payload_analyzer::GroupMap;
+pub use reliability::{Admit, DedupStats, DedupWindow};
 pub use switch_sim::{
     vector_sink_to_batch, IngestOutput, IngestSink, SwitchAggSwitch, SwitchStats, VectorSink,
 };

@@ -1,0 +1,202 @@
+//! Switch-side exactly-once admission: the per-`(tree, child)` dedup
+//! window.
+//!
+//! The host half of the reliability subsystem (`protocol::reliable`)
+//! retransmits on timeout, so the switch will see duplicates; this
+//! window makes admission idempotent *before* any pair reaches the
+//! FPE/BPE hierarchy — one mechanism covers the serial and sharded
+//! engines and the scalar and W-lane vector paths alike, which is why
+//! dedup lives at the ingress rather than inside each engine.  The
+//! state is deliberately dataplane-sized: a cumulative counter plus a
+//! [`crate::protocol::REL_WINDOW`]-bit bitmap per child port (the
+//! sender's credit window is bounded by the same constant, so the
+//! bitmap can never overflow).
+//!
+//! End-of-transmission needs one extra rule: the engines flush when
+//! every child has signalled EoT, and a flush must not fire while
+//! retransmissions of that child's earlier packets are still
+//! outstanding (pairs admitted after a flush would strand in the
+//! tables).  The window therefore *defers* the EoT flag until the
+//! cumulative counter covers the EoT packet's sequence number —
+//! since EoT rides the stream's last packet, that is exactly "all of
+//! this child's pairs have been admitted".
+
+/// Outcome of offering one sequence number to the window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// First sighting: ingest the payload.
+    New,
+    /// Already admitted (retransmission or wire duplicate): drop the
+    /// payload, re-ack.
+    Duplicate,
+    /// Beyond the advertised credit window (a misbehaving sender):
+    /// drop without state change.
+    OutOfWindow,
+}
+
+/// Aggregate dedup counters for one tree (summed over its children).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DedupStats {
+    pub admitted: u64,
+    pub dup_drops: u64,
+    pub out_of_window: u64,
+}
+
+/// Sliding dedup window over one `(tree, child)` sequence space.
+#[derive(Clone, Debug)]
+pub struct DedupWindow {
+    /// Every seq ≤ `cum` has been admitted exactly once.
+    cum: u32,
+    window: u32,
+    /// `bits[i]` ⇔ seq `cum + 1 + i` has been admitted (the window's
+    /// out-of-order residue; drains from the front as holes fill).
+    bits: std::collections::VecDeque<bool>,
+    /// Deferred EoT: the stream's final sequence number, not yet
+    /// covered by `cum`.
+    eot_seq: Option<u32>,
+    pub admitted: u64,
+    pub dup_drops: u64,
+    pub out_of_window: u64,
+}
+
+impl DedupWindow {
+    pub fn new(window: u32) -> Self {
+        assert!(window >= 1);
+        Self {
+            cum: 0,
+            window,
+            bits: std::collections::VecDeque::new(),
+            eot_seq: None,
+            admitted: 0,
+            dup_drops: 0,
+            out_of_window: 0,
+        }
+    }
+
+    /// Offer one packet's `(seq, eot)`; seqs are 1-based.
+    pub fn offer(&mut self, seq: u32, eot: bool) -> Admit {
+        debug_assert!(seq >= 1, "sequence numbers are 1-based");
+        if seq <= self.cum {
+            self.dup_drops += 1;
+            return Admit::Duplicate;
+        }
+        if seq > self.cum + self.window {
+            self.out_of_window += 1;
+            return Admit::OutOfWindow;
+        }
+        let idx = (seq - self.cum - 1) as usize;
+        if self.bits.len() <= idx {
+            self.bits.resize(idx + 1, false);
+        }
+        if self.bits[idx] {
+            self.dup_drops += 1;
+            return Admit::Duplicate;
+        }
+        self.bits[idx] = true;
+        self.admitted += 1;
+        if eot {
+            self.eot_seq = Some(seq);
+        }
+        while self.bits.front() == Some(&true) {
+            self.bits.pop_front();
+            self.cum += 1;
+        }
+        Admit::New
+    }
+
+    /// True exactly once, when the deferred EoT's whole stream prefix
+    /// has been admitted — the caller forwards the EoT signal to the
+    /// engine at that point.
+    pub fn take_ready_eot(&mut self) -> bool {
+        match self.eot_seq {
+            Some(e) if self.cum >= e => {
+                self.eot_seq = None;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Highest sequence number with a fully-admitted prefix.
+    pub fn cum_seq(&self) -> u32 {
+        self.cum
+    }
+
+    /// Remaining window capacity advertised back to the sender.
+    pub fn credit(&self) -> u16 {
+        (self.window as usize - self.bits.len()) as u16
+    }
+
+    pub fn stats(&self) -> DedupStats {
+        DedupStats {
+            admitted: self.admitted,
+            dup_drops: self.dup_drops,
+            out_of_window: self.out_of_window,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_order_stream_advances_cum() {
+        let mut w = DedupWindow::new(8);
+        for seq in 1..=5 {
+            assert_eq!(w.offer(seq, seq == 5), Admit::New);
+        }
+        assert_eq!(w.cum_seq(), 5);
+        assert!(w.take_ready_eot());
+        assert!(!w.take_ready_eot(), "EoT fires exactly once");
+        assert_eq!(w.credit(), 8);
+        assert_eq!(w.stats().admitted, 5);
+    }
+
+    #[test]
+    fn duplicates_are_dropped_below_and_inside_the_window() {
+        let mut w = DedupWindow::new(8);
+        assert_eq!(w.offer(1, false), Admit::New);
+        assert_eq!(w.offer(1, false), Admit::Duplicate); // below cum
+        assert_eq!(w.offer(3, false), Admit::New);
+        assert_eq!(w.offer(3, false), Admit::Duplicate); // in-window bit
+        assert_eq!(w.cum_seq(), 1);
+        assert_eq!(w.stats().dup_drops, 2);
+        assert_eq!(w.stats().admitted, 2);
+    }
+
+    #[test]
+    fn out_of_order_fill_advances_cum_past_the_hole() {
+        let mut w = DedupWindow::new(8);
+        assert_eq!(w.offer(2, false), Admit::New);
+        assert_eq!(w.offer(4, false), Admit::New);
+        assert_eq!(w.cum_seq(), 0);
+        assert_eq!(w.credit(), 4); // bits span 1..=4
+        assert_eq!(w.offer(1, false), Admit::New);
+        assert_eq!(w.cum_seq(), 2);
+        assert_eq!(w.offer(3, false), Admit::New);
+        assert_eq!(w.cum_seq(), 4);
+        assert_eq!(w.credit(), 8);
+    }
+
+    #[test]
+    fn eot_defers_until_holes_fill() {
+        let mut w = DedupWindow::new(8);
+        assert_eq!(w.offer(3, true), Admit::New); // EoT arrives first
+        assert!(!w.take_ready_eot());
+        assert_eq!(w.offer(1, false), Admit::New);
+        assert!(!w.take_ready_eot());
+        assert_eq!(w.offer(2, false), Admit::New);
+        assert!(w.take_ready_eot(), "hole filled: EoT now deliverable");
+    }
+
+    #[test]
+    fn beyond_window_is_rejected_without_state_change() {
+        let mut w = DedupWindow::new(4);
+        assert_eq!(w.offer(5, false), Admit::OutOfWindow);
+        assert_eq!(w.cum_seq(), 0);
+        assert_eq!(w.credit(), 4);
+        assert_eq!(w.offer(4, false), Admit::New);
+        assert_eq!(w.stats().out_of_window, 1);
+    }
+}

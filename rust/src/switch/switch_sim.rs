@@ -23,8 +23,8 @@
 use crate::protocol::packet::MtuChunks;
 use crate::protocol::vector::{max_vec_payload, vec_fixed_len, VectorChunks};
 use crate::protocol::{
-    AggOp, AggregationPacket, Key, KvPair, TreeConfig, TreeId, Value, VectorBatch,
-    AGG_FIXED_LEN, HEADER_OVERHEAD,
+    AggAckPacket, AggOp, AggregationPacket, Key, KvPair, TreeConfig, TreeId, Value, VectorBatch,
+    AGG_FIXED_LEN, HEADER_OVERHEAD, REL_WINDOW,
 };
 use crate::sim::clock::{Cycles, CLOCK_HZ};
 use crate::switch::bpe::{Bpe, BpeOutcome};
@@ -36,6 +36,7 @@ use crate::switch::hash_table::{HashTable, VectorEvictSink};
 use crate::switch::header_extract::HeaderExtract;
 use crate::switch::parallel::{merge_by_seq, run_workers, JobPair, Parallelism, WorkerGroup};
 use crate::switch::payload_analyzer::{GroupMap, PayloadAnalyzer};
+use crate::switch::reliability::{Admit, DedupStats, DedupWindow};
 use crate::switch::scheduler::{SchedPolicy, Scheduler};
 use std::collections::BTreeMap;
 
@@ -63,6 +64,11 @@ pub struct SwitchStats {
     pub bpe_overflowed: u64,
     pub fifo_writes: u64,
     pub fifo_full_events: u64,
+    /// Times the sharded engine silently took the serial loop because
+    /// an end-of-tree flush would have split the chunk stream —
+    /// benchmarks must check this before attributing numbers to the
+    /// sharded path.
+    pub fallback_serial: u64,
     pub flush_cycles: Cycles,
     /// Cycle at which the last pair finished processing.
     pub makespan_cycles: Cycles,
@@ -692,6 +698,10 @@ pub struct SwitchAggSwitch {
     /// Per-tree value lane width (W); absent = 1 (scalar).  Announced
     /// via [`Self::configure_vector`] and applied at engine (re)build.
     lane_width: BTreeMap<TreeId, usize>,
+    /// Exactly-once admission state for reliable streams, one window
+    /// per `(tree, child port)` (see `switch::reliability`); created
+    /// lazily on the first reliable packet of a stream.
+    dedup: BTreeMap<(TreeId, u16), DedupWindow>,
     /// Reused sink for the stream entry points.
     sink: IngestSink,
 }
@@ -705,6 +715,7 @@ impl SwitchAggSwitch {
             config_module: ConfigModule::new(),
             trees: BTreeMap::new(),
             lane_width: BTreeMap::new(),
+            dedup: BTreeMap::new(),
             sink: IngestSink::new(),
         }
     }
@@ -747,6 +758,10 @@ impl SwitchAggSwitch {
     fn rebuild_engines(&mut self, trees: &[TreeConfig]) {
         self.config_module.apply(trees);
         let ids: Vec<TreeId> = self.config_module.tree_ids().collect();
+        // A rebuild starts every configured tree's job from scratch, so
+        // its reliable sequence spaces restart too — stale windows
+        // would silently swallow a fresh stream as "duplicates".
+        self.dedup.retain(|(t, _), _| !ids.contains(t));
         for id in ids {
             let tc = self.config_module.get(id).unwrap().clone();
             let fpe_share = self.config_module.memory_share_for(id, self.cfg.fpe_total_mem);
@@ -803,6 +818,105 @@ impl SwitchAggSwitch {
         sink: &mut VectorSink,
     ) {
         self.ingest_vector_range_for(pkt.tree, &pkt.batch, 0..pkt.batch.len(), pkt.eot, sink);
+    }
+
+    /// Admit one reliable packet's `(child, seq, eot)` through its
+    /// dedup window.  Returns `(ingest_payload, fire_eot)` — whether
+    /// the pairs are new (retransmissions and wire duplicates are
+    /// dropped here, before any engine sees them) and whether the
+    /// deferred end-of-transmission signal became deliverable — plus
+    /// the ack to send back.  Shared by the scalar and vector reliable
+    /// entry points so exactly-once semantics cannot drift between
+    /// them.
+    fn admit_reliable(
+        &mut self,
+        tree: TreeId,
+        rel: crate::protocol::RelHeader,
+        eot: bool,
+    ) -> (bool, bool, AggAckPacket) {
+        let w = self
+            .dedup
+            .entry((tree, rel.child))
+            .or_insert_with(|| DedupWindow::new(REL_WINDOW));
+        let (is_new, fire) = match w.offer(rel.seq, eot) {
+            Admit::New => (true, w.take_ready_eot()),
+            Admit::Duplicate | Admit::OutOfWindow => (false, false),
+        };
+        let ack = AggAckPacket {
+            tree,
+            child: rel.child,
+            cum_seq: w.cum_seq(),
+            credit: w.credit(),
+        };
+        (is_new, fire, ack)
+    }
+
+    /// Ingest one batch of reliable aggregation packets (one tree),
+    /// exactly-once: every packet passes its `(tree, child)` dedup
+    /// window first, admitted chunks run through the configured engine
+    /// (serial or sharded — the whole batch goes down the chunk-
+    /// sequence path, so a sharded switch shards reliable ingest too),
+    /// and one cumulative-ack/credit record per input packet is
+    /// returned for the senders.  EoT flags are deferred by the window
+    /// until the child's stream prefix is complete, so a flush can
+    /// never strand late retransmissions in the tables.
+    pub fn ingest_reliable_batch(
+        &mut self,
+        tree: TreeId,
+        pkts: &[&AggregationPacket],
+        sink: &mut IngestSink,
+    ) -> Vec<AggAckPacket> {
+        let mut acks = Vec::with_capacity(pkts.len());
+        let mut chunks: Vec<(&[KvPair], bool)> = Vec::with_capacity(pkts.len());
+        for pkt in pkts {
+            assert_eq!(pkt.tree, tree, "reliable batch must be single-tree");
+            let rel = pkt.rel.expect("reliable ingest requires a rel header");
+            let (is_new, fire, ack) = self.admit_reliable(tree, rel, pkt.eot);
+            if is_new {
+                chunks.push((pkt.pairs.as_slice(), fire));
+            }
+            acks.push(ack);
+        }
+        if !chunks.is_empty() {
+            self.ingest_chunk_seq(tree, &chunks, sink);
+        }
+        acks
+    }
+
+    /// The W-lane counterpart of [`Self::ingest_reliable_batch`]:
+    /// admitted vector packets take the serial columnar path (vector
+    /// ingest is always serial; see [`Self::ingest_vector_stream_into`]).
+    pub fn ingest_vector_reliable_batch(
+        &mut self,
+        tree: TreeId,
+        pkts: &[&crate::protocol::VectorAggregationPacket],
+        sink: &mut VectorSink,
+    ) -> Vec<AggAckPacket> {
+        let mut acks = Vec::with_capacity(pkts.len());
+        for pkt in pkts {
+            assert_eq!(pkt.tree, tree, "reliable batch must be single-tree");
+            let rel = pkt.rel.expect("reliable ingest requires a rel header");
+            let (is_new, fire, ack) = self.admit_reliable(tree, rel, pkt.eot);
+            if is_new {
+                self.ingest_vector_range_for(tree, &pkt.batch, 0..pkt.batch.len(), fire, sink);
+            }
+            acks.push(ack);
+        }
+        acks
+    }
+
+    /// Aggregate dedup counters over all of `tree`'s child windows.
+    pub fn dedup_stats(&self, tree: TreeId) -> DedupStats {
+        let mut out = DedupStats::default();
+        for ((t, _), w) in &self.dedup {
+            if *t == tree {
+                let s = w.stats();
+                out.admitted += s.admitted;
+                out.dup_drops += s.dup_drops;
+                out.out_of_window += s.out_of_window;
+            }
+        }
+        out
     }
 
     /// Ingest one aggregation packet, returning owned output buffers
@@ -1044,6 +1158,11 @@ impl SwitchAggSwitch {
                 engine.ingest_chunks_sharded(chunks, header_delay, n.max(1), sink);
             }
             _ => {
+                // Count the silent fallback so benchmarks can detect
+                // serial numbers recorded under a sharded config.
+                if !matches!(parallelism, Parallelism::Serial) {
+                    engine.stats.fallback_serial += 1;
+                }
                 for &(pairs, eot) in chunks {
                     engine.ingest_pairs(pairs, eot, header_delay, sink);
                 }
@@ -1206,6 +1325,7 @@ mod tests {
             tree: TreeId(1),
             op: AggOp::Sum,
             eot: true,
+            rel: None,
             pairs: vec![],
         };
         packetized.ingest_into(&eot, &mut sink);
@@ -1332,9 +1452,125 @@ mod tests {
             tree: TreeId(9),
             op: AggOp::Sum,
             eot: false,
+            rel: None,
             pairs: vec![],
         };
         sw.ingest(&pkt);
+    }
+
+    /// Packetize a stream with reliability records (child, seq 1..).
+    fn rel_packets(tree: TreeId, child: u16, pairs: &[KvPair]) -> Vec<AggregationPacket> {
+        let mut pkts = AggregationPacket::pack_stream(tree, AggOp::Sum, pairs, true);
+        for (i, p) in pkts.iter_mut().enumerate() {
+            p.rel = Some(crate::protocol::RelHeader {
+                child,
+                seq: i as u32 + 1,
+            });
+        }
+        pkts
+    }
+
+    #[test]
+    fn reliable_ingest_dedups_retransmissions() {
+        let mut sw = configured_switch(16 << 10, Some(256 << 10), 1);
+        let input = pairs(3_000, 500, 99);
+        let want: Value = input.iter().map(|p| p.value).sum();
+        let pkts = rel_packets(TreeId(1), 0, &input);
+        let refs: Vec<&AggregationPacket> = pkts.iter().collect();
+        let mut sink = IngestSink::new();
+        let acks = sw.ingest_reliable_batch(TreeId(1), &refs, &mut sink);
+        assert_eq!(acks.len(), pkts.len());
+        assert_eq!(acks.last().unwrap().cum_seq, pkts.len() as u32);
+        assert_eq!(sink.flushes, 1, "single child: EoT flushes once");
+        let delivered = (sink.forwarded.len(), sink.flushed.len());
+        let got: Value = sink_to_vec(&sink).iter().map(|p| p.value).sum();
+        assert_eq!(got, want);
+
+        // Retransmit the whole stream: every packet is a duplicate —
+        // nothing reaches the engines, outputs and stats are unchanged.
+        let stats_before = format!("{:?}", sw.stats(TreeId(1)).unwrap());
+        let acks2 = sw.ingest_reliable_batch(TreeId(1), &refs, &mut sink);
+        assert_eq!(acks2.last().unwrap().cum_seq, pkts.len() as u32);
+        assert_eq!((sink.forwarded.len(), sink.flushed.len()), delivered);
+        assert_eq!(format!("{:?}", sw.stats(TreeId(1)).unwrap()), stats_before);
+        let d = sw.dedup_stats(TreeId(1));
+        assert_eq!(d.admitted, pkts.len() as u64);
+        assert_eq!(d.dup_drops, pkts.len() as u64);
+    }
+
+    #[test]
+    fn reliable_ingest_defers_eot_across_reordering() {
+        // Deliver each child's packets in reverse order: the EoT
+        // packet arrives first, so the flush must wait until the
+        // window below it fills — and fire exactly once per tree.
+        let mut sw = configured_switch(64 << 10, Some(1 << 20), 2);
+        let streams: Vec<Vec<KvPair>> = (0..2).map(|i| pairs(2_000, 300, 7 + i)).collect();
+        let want: Value = streams.iter().flatten().map(|p| p.value).sum();
+        let mut sink = IngestSink::new();
+        for (c, s) in streams.iter().enumerate() {
+            let pkts = rel_packets(TreeId(1), c as u16, s);
+            let refs: Vec<&AggregationPacket> = pkts.iter().rev().collect();
+            sw.ingest_reliable_batch(TreeId(1), &refs, &mut sink);
+        }
+        assert_eq!(sink.flushes, 1);
+        let got: Value = sink_to_vec(&sink).iter().map(|p| p.value).sum();
+        assert_eq!(got, want);
+        assert_eq!(sw.dedup_stats(TreeId(1)).dup_drops, 0);
+    }
+
+    #[test]
+    fn reconfigure_resets_reliable_sequence_spaces() {
+        // Regression: a second job on a reconfigured tree restarts its
+        // seq space at 1 — stale dedup windows must not swallow the
+        // fresh stream as duplicates.
+        let mut sw = configured_switch(64 << 10, Some(1 << 20), 1);
+        let input = pairs(500, 80, 1);
+        let want: Value = input.iter().map(|p| p.value).sum();
+        let pkts = rel_packets(TreeId(1), 0, &input);
+        let refs: Vec<&AggregationPacket> = pkts.iter().collect();
+        let mut sink = IngestSink::new();
+        sw.ingest_reliable_batch(TreeId(1), &refs, &mut sink);
+        assert_eq!(sink.flushes, 1);
+
+        // Reconfigure the same tree: fresh job, fresh seq space.
+        sw.configure(&[TreeConfig {
+            tree: TreeId(1),
+            children: 1,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        let mut sink2 = IngestSink::new();
+        let acks = sw.ingest_reliable_batch(TreeId(1), &refs, &mut sink2);
+        assert_eq!(sink2.flushes, 1, "second job must flush again");
+        assert_eq!(acks.last().unwrap().cum_seq, pkts.len() as u32);
+        let got: Value = sink_to_vec(&sink2).iter().map(|p| p.value).sum();
+        assert_eq!(got, want, "second job must admit the full stream");
+    }
+
+    #[test]
+    fn fallback_serial_counter_fires_on_mid_stream_flush() {
+        // children=1 with two EoT-carrying streams: the first stream's
+        // flush splits the chunk sequence, so a sharded switch must
+        // take (and now count) the serial fallback.
+        let streams: Vec<Vec<KvPair>> = (0..2).map(|i| pairs(1_000, 100, 40 + i)).collect();
+        let mut sharded = configured_switch(16 << 10, Some(256 << 10), 1);
+        sharded.set_parallelism(crate::switch::parallel::Parallelism::Sharded(4));
+        sharded.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+        assert!(
+            sharded.stats(TreeId(1)).unwrap().fallback_serial > 0,
+            "mid-stream flush must be recorded as a serial fallback"
+        );
+
+        // A clean end-of-stream flush stays on the sharded engine.
+        let mut clean = configured_switch(16 << 10, Some(256 << 10), 2);
+        clean.set_parallelism(crate::switch::parallel::Parallelism::Sharded(4));
+        clean.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+        assert_eq!(clean.stats(TreeId(1)).unwrap().fallback_serial, 0);
+
+        // The serial reference never counts fallbacks.
+        let mut serial = configured_switch(16 << 10, Some(256 << 10), 1);
+        serial.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+        assert_eq!(serial.stats(TreeId(1)).unwrap().fallback_serial, 0);
     }
 
     fn configured_vector_switch(

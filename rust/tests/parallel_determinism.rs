@@ -198,8 +198,9 @@ fn prop_vector_w1_path_matches_scalar_across_shards() {
 #[test]
 fn sharded_fallback_on_mid_stream_flush_matches_serial() {
     // children=1 with 3 streams: the first stream's EoT flushes
-    // mid-sequence, so the sharded engine must fall back — and still
-    // match the serial reference exactly.
+    // mid-sequence, so the sharded engine must fall back — recording
+    // the fallback in its stats — and still match the serial
+    // reference exactly everywhere else.
     let mut rng = Pcg32::new(0xFA11BACC);
     let streams: Vec<Vec<KvPair>> = (0..3).map(|_| random_pairs(&mut rng, 1500, 300)).collect();
     let mut serial = switch(8 << 10, Some(128 << 10), EvictionPolicy::EvictOld, 1, Parallelism::Serial);
@@ -207,7 +208,18 @@ fn sharded_fallback_on_mid_stream_flush_matches_serial() {
     let mut sharded = switch(8 << 10, Some(128 << 10), EvictionPolicy::EvictOld, 1, Parallelism::Sharded(4));
     let out_sharded = sharded.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
     assert_eq!(out_sharded, out_serial);
-    assert_eq!(stats_tuple(&sharded), stats_tuple(&serial));
+    // The fallback is no longer silent: the sharded run counts it, the
+    // serial reference does not.
+    let s_serial = serial.stats(TreeId(1)).unwrap();
+    let s_sharded = sharded.stats(TreeId(1)).unwrap();
+    assert!(s_sharded.fallback_serial > 0, "fallback must be recorded");
+    assert_eq!(s_serial.fallback_serial, 0);
+    // Everything else stays byte-identical.
+    let mut a = s_serial.clone();
+    let mut b = s_sharded.clone();
+    a.fallback_serial = 0;
+    b.fallback_serial = 0;
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
 }
 
 /// Random tree topology: switches in a random-arity tree, hosts hung
@@ -259,7 +271,15 @@ fn prop_calendar_netsim_matches_heap_reference() {
         for _ in 0..sends {
             let src = hosts[rng.gen_range_usize(hosts.len())];
             let dst = hosts[rng.gen_range_usize(hosts.len())];
-            let t = rng.gen_range_u64(1_000) as f64 * 1e-6;
+            // Mostly sub-millisecond sends, but ~5% land seconds out —
+            // far beyond one bucket-ring rotation (~0.5 ms), so head
+            // times that wrap the calendar ring (and the jump-to-
+            // earliest-slot path) are exercised every case.
+            let t = if rng.gen_bool(0.05) {
+                1.0 + rng.gen_range_u64(10_000) as f64 * 1e-3
+            } else {
+                rng.gen_range_u64(1_000) as f64 * 1e-6
+            };
             let bytes = 1 + rng.gen_range_u64(100_000);
             cal.send(t, src, dst, bytes);
             heap.send(t, src, dst, bytes);

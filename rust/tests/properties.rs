@@ -9,6 +9,7 @@ use switchagg::protocol::{
     AggOp, AggregationPacket, Key, KvPair, Packet, TreeConfig, TreeId,
 };
 use switchagg::switch::hash_table::{HashTable, Probe, VALUE_BYTES};
+use switchagg::switch::scheduler::{SchedPolicy, Scheduler};
 use switchagg::switch::{EvictionPolicy, SwitchAggSwitch, SwitchConfig};
 use switchagg::util::miniprop::prop;
 use switchagg::util::rng::Pcg32;
@@ -32,6 +33,10 @@ fn prop_packet_encode_decode_round_trip() {
             tree: TreeId(rng.next_u32()),
             op: AggOp::ALL[rng.gen_range_usize(3)],
             eot: rng.gen_bool(0.5),
+            rel: rng.gen_bool(0.5).then(|| switchagg::protocol::RelHeader {
+                child: rng.gen_range_u64(64) as u16,
+                seq: rng.next_u32(),
+            }),
             pairs,
         });
         let decoded = Packet::decode(&pkt.encode()).map_err(|e| e.to_string())?;
@@ -356,6 +361,41 @@ fn prop_key_round_trip_and_hash_stability() {
         let h2 = switchagg::switch::hash::fnv1a_words(&words);
         if h1 != h2 {
             return Err(format!("hash mismatch len={len}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lqf_pick_matches_naive_argmax_oracle() {
+    // The LongestQueueFirst tiebreak is encoded as `(d, n - i)` in the
+    // scheduler; pin it against the definitional oracle — argmax depth,
+    // ties broken by the lowest index — over random depth vectors and
+    // several consecutive picks (the cursor must not perturb LQF).
+    prop("LQF pick == argmax-lowest-index oracle", 150, |rng| {
+        let n = 1 + rng.gen_range_usize(8);
+        let mut s = Scheduler::new(n, SchedPolicy::LongestQueueFirst);
+        let mut depths: Vec<usize> = (0..n).map(|_| rng.gen_range_usize(5)).collect();
+        for round in 0..6 {
+            let oracle = {
+                let max = depths.iter().copied().max().unwrap_or(0);
+                if max == 0 {
+                    None
+                } else {
+                    depths.iter().position(|&d| d == max)
+                }
+            };
+            let got = s.pick(&depths);
+            if got != oracle {
+                return Err(format!(
+                    "round {round}: pick {got:?} != oracle {oracle:?} for {depths:?}"
+                ));
+            }
+            if let Some(i) = got {
+                depths[i] -= 1; // serve the granted queue and repeat
+            } else {
+                break;
+            }
         }
         Ok(())
     });

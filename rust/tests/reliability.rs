@@ -1,0 +1,246 @@
+//! Exactly-once aggregation under packet loss — the reliability
+//! subsystem's differential contracts:
+//!
+//! * **Loss-rate invariance** — for one workload and seed, the final
+//!   reducer output (keys, values, counts) is byte-identical at 0%,
+//!   1%, and 10% link loss, on the serial and sharded engines, scalar
+//!   and W-lane vector paths alike.
+//! * **Legacy equivalence** — with loss disabled, the reliable path
+//!   produces the same final aggregate as the existing (unreliable)
+//!   ingest entry points.
+//! * **Duplication robustness** — a duplicating channel changes
+//!   nothing: the switch dedup window drops every copy but the first.
+
+use std::collections::{BTreeMap, HashMap};
+use switchagg::framework::reliable::{
+    run_reliable_scalar, run_reliable_vector, ReliabilityConfig,
+};
+use switchagg::framework::Reducer;
+use switchagg::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId, Value, VectorBatch};
+use switchagg::switch::{Parallelism, SwitchAggSwitch, SwitchConfig};
+use switchagg::util::miniprop::prop;
+use switchagg::util::rng::Pcg32;
+
+fn random_pairs(rng: &mut Pcg32, n: usize, variety: u64) -> Vec<KvPair> {
+    (0..n)
+        .map(|_| {
+            let id = rng.gen_range_u64(variety);
+            let len = 8 + (rng.gen_range_u64(57) as usize);
+            KvPair::new(Key::from_id(id, len), rng.gen_range_u64(1000) as i64 - 500)
+        })
+        .collect()
+}
+
+fn scalar_switch(children: u16, par: Parallelism) -> SwitchAggSwitch {
+    let cfg = SwitchConfig {
+        parallelism: par,
+        ..SwitchConfig::scaled(16 << 10, Some(256 << 10))
+    };
+    let mut sw = SwitchAggSwitch::new(cfg);
+    sw.configure(&[TreeConfig {
+        tree: TreeId(1),
+        children,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    sw
+}
+
+fn vector_switch(children: u16, lanes: usize) -> SwitchAggSwitch {
+    let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(32 << 10, Some(512 << 10)));
+    sw.configure_vector(
+        &[TreeConfig {
+            tree: TreeId(1),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }],
+        lanes,
+    );
+    sw
+}
+
+/// The reducer's final output in canonical (sorted) form: key →
+/// combined value.  The key set, every value, and the key *count* are
+/// all pinned by equality on this map — what arrival order may change
+/// is only how the switch *partitions* a key's total into partial
+/// pairs, never the reduced result.
+fn final_aggregate(pairs: &[KvPair]) -> BTreeMap<Vec<u8>, Value> {
+    let mut out: BTreeMap<Vec<u8>, Value> = BTreeMap::new();
+    for p in pairs {
+        *out.entry(p.key.as_bytes().to_vec()).or_insert(0) += p.value;
+    }
+    out
+}
+
+fn vector_aggregate(batch: &VectorBatch) -> BTreeMap<Vec<u8>, Vec<Value>> {
+    let lanes = batch.lanes();
+    let mut out: BTreeMap<Vec<u8>, Vec<Value>> = BTreeMap::new();
+    for (k, ls) in batch.iter() {
+        let e = out
+            .entry(k.as_bytes().to_vec())
+            .or_insert_with(|| vec![0; lanes]);
+        for (a, v) in e.iter_mut().zip(ls) {
+            *a += v;
+        }
+    }
+    out
+}
+
+#[test]
+fn scalar_output_is_identical_at_0_1_and_10_percent_loss() {
+    let mut rng = Pcg32::new(0x10DD);
+    let streams: Vec<Vec<KvPair>> = (0..3).map(|_| random_pairs(&mut rng, 2_500, 400)).collect();
+    for par in [Parallelism::Serial, Parallelism::Sharded(4)] {
+        let mut base_sw = scalar_switch(3, par);
+        let base = run_reliable_scalar(
+            &mut base_sw,
+            TreeId(1),
+            AggOp::Sum,
+            &streams,
+            &ReliabilityConfig::default(),
+        );
+        let base_agg = final_aggregate(&base.received);
+        // Conservation: the lossless aggregate holds exactly the
+        // input's per-key totals.
+        let input: Vec<KvPair> = streams.iter().flatten().copied().collect();
+        assert_eq!(base_agg, final_aggregate(&input));
+        for loss in [0.01, 0.10] {
+            let mut sw = scalar_switch(3, par);
+            let run = run_reliable_scalar(
+                &mut sw,
+                TreeId(1),
+                AggOp::Sum,
+                &streams,
+                &ReliabilityConfig::uniform(loss, 0xFEED),
+            );
+            assert!(run.completeness.is_complete());
+            assert_eq!(
+                final_aggregate(&run.received),
+                base_agg,
+                "aggregate diverged at {loss} loss ({par:?})"
+            );
+            if loss >= 0.10 {
+                assert!(run.ingress.retransmissions > 0, "{par:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn vector_output_is_identical_at_0_1_and_10_percent_loss() {
+    for lanes in [1usize, 8] {
+        let mut rng = Pcg32::new(0x7EC + lanes as u64);
+        let streams: Vec<VectorBatch> = (0..2)
+            .map(|_| {
+                let mut b = VectorBatch::new(lanes);
+                let mut vals = vec![0i64; lanes];
+                for _ in 0..1_500 {
+                    let id = rng.gen_range_u64(300);
+                    for (l, v) in vals.iter_mut().enumerate() {
+                        *v = (id % 13) as i64 + l as i64 - 6;
+                    }
+                    b.push(Key::from_id(id, 16 + (id % 49) as usize), &vals);
+                }
+                b
+            })
+            .collect();
+        let mut base_sw = vector_switch(2, lanes);
+        let base = run_reliable_vector(
+            &mut base_sw,
+            TreeId(1),
+            AggOp::Sum,
+            &streams,
+            &ReliabilityConfig::default(),
+        );
+        let base_agg = vector_aggregate(&base.received);
+        for loss in [0.01, 0.10] {
+            let mut sw = vector_switch(2, lanes);
+            let run = run_reliable_vector(
+                &mut sw,
+                TreeId(1),
+                AggOp::Sum,
+                &streams,
+                &ReliabilityConfig::uniform(loss, 0xBEE),
+            );
+            assert!(run.completeness.is_complete());
+            assert_eq!(
+                vector_aggregate(&run.received),
+                base_agg,
+                "vector aggregate diverged at {loss} loss (W={lanes})"
+            );
+        }
+    }
+}
+
+#[test]
+fn lossless_reliable_path_matches_legacy_unreliable_ingest() {
+    let mut rng = Pcg32::new(0x1E6);
+    let streams: Vec<Vec<KvPair>> = (0..3).map(|_| random_pairs(&mut rng, 2_000, 350)).collect();
+    let mut legacy_sw = scalar_switch(3, Parallelism::Serial);
+    let legacy_out = legacy_sw.ingest_child_streams(TreeId(1), AggOp::Sum, &streams);
+    let mut sw = scalar_switch(3, Parallelism::Serial);
+    let run = run_reliable_scalar(
+        &mut sw,
+        TreeId(1),
+        AggOp::Sum,
+        &streams,
+        &ReliabilityConfig::default(),
+    );
+    assert_eq!(final_aggregate(&run.received), final_aggregate(&legacy_out));
+    // Software-reducer maps agree too (the user-visible result).
+    let a: HashMap<Key, Value> =
+        Reducer::merge_software(&[run.received.clone()], AggOp::Sum).table;
+    let b: HashMap<Key, Value> = Reducer::merge_software(&[legacy_out], AggOp::Sum).table;
+    assert_eq!(a, b);
+}
+
+#[test]
+fn prop_reliable_sessions_are_exactly_once() {
+    // Random children, stream sizes, loss/dup rates, engines: the
+    // final aggregate must always equal the lossless aggregate of the
+    // same workload, and completeness must always certify.
+    prop("reliable session == lossless aggregate", 8, |rng| {
+        let children = 1 + rng.gen_range_usize(3) as u16;
+        let variety = 1 << (5 + rng.gen_range_usize(5));
+        let streams: Vec<Vec<KvPair>> = (0..children as usize)
+            .map(|_| {
+                let n = 300 + rng.gen_range_usize(1_500);
+                random_pairs(rng, n, variety)
+            })
+            .collect();
+        let par = if rng.gen_bool(0.5) {
+            Parallelism::Serial
+        } else {
+            Parallelism::Sharded(1 + rng.gen_range_usize(4))
+        };
+        let mut base_sw = scalar_switch(children, par);
+        let base = run_reliable_scalar(
+            &mut base_sw,
+            TreeId(1),
+            AggOp::Sum,
+            &streams,
+            &ReliabilityConfig::default(),
+        );
+        let want = final_aggregate(&base.received);
+        let input: Vec<KvPair> = streams.iter().flatten().copied().collect();
+        if want != final_aggregate(&input) {
+            return Err("lossless run does not conserve the input aggregate".into());
+        }
+
+        let loss = 0.02 + rng.next_f64() * 0.13; // 2%..15%
+        let dup = if rng.gen_bool(0.5) { 0.05 } else { 0.0 };
+        let cfg = ReliabilityConfig::uniform(loss, rng.next_u64()).with_dup(dup);
+        let mut sw = scalar_switch(children, par);
+        let run = run_reliable_scalar(&mut sw, TreeId(1), AggOp::Sum, &streams, &cfg);
+        if !run.completeness.is_complete() {
+            return Err(format!("incomplete at loss={loss:.3}"));
+        }
+        if final_aggregate(&run.received) != want {
+            return Err(format!(
+                "aggregate diverged at loss={loss:.3} dup={dup} children={children} {par:?}"
+            ));
+        }
+        Ok(())
+    });
+}
