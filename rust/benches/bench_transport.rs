@@ -1,0 +1,125 @@
+//! Transport-driver benchmarks (EXPERIMENTS.md §Incast & congestion
+//! control): the event-driven NetSim co-simulation
+//! (`framework::transport`) against the retained tick-based reference
+//! (`framework::reliable`) on identical workloads.  The structural
+//! claim under test: the tick loop's cost scales with *simulated
+//! rounds* (every tick scans every sender's in-flight window, sending
+//! or not), the event driver's with *packets processed* (idle timer
+//! gaps are jumped in O(1)).  Items = transport packets put on the
+//! wire (data first-tx + retransmissions, both hops), so items/s is
+//! the drivers' comparable throughput.  Results are written as a
+//! machine-readable log (`BENCH_transport.json`, override with
+//! `SWITCHAGG_BENCH_TRANSPORT_JSON`).
+
+use switchagg::framework::reliable::{run_reliable_scalar, ReliabilityConfig};
+use switchagg::framework::transport::{run_transport_scalar, CreditMode, TransportConfig};
+use switchagg::protocol::{AggOp, Key, KvPair, RelWindow, TreeConfig, TreeId};
+use switchagg::switch::{SwitchAggSwitch, SwitchConfig};
+use switchagg::util::bench::{self, JsonLog};
+use switchagg::util::rng::Pcg32;
+
+fn streams(children: usize, pairs: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0xbe);
+            (0..pairs)
+                .map(|_| {
+                    let id = child.gen_range_u64((pairs as u64 / 4).max(64));
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(100) as i64 - 50,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn switch_for(children: usize) -> SwitchAggSwitch {
+    let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(32 << 10, Some(8 << 20)));
+    sw.configure(&[TreeConfig {
+        tree: TreeId(1),
+        children: children as u16,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    sw
+}
+
+/// Wire packets both hops moved (the work denominator shared by the
+/// two drivers — identical workload ⇒ comparable items/s).
+fn tick_session(children: usize, pairs: usize, loss: f64, window: Option<RelWindow>) -> u64 {
+    let ss = streams(children, pairs, 0xBE7C);
+    let mut sw = switch_for(children);
+    let mut cfg = if loss > 0.0 {
+        ReliabilityConfig::uniform(loss, 0x5EED)
+    } else {
+        ReliabilityConfig::default()
+    };
+    if let Some(w) = window {
+        cfg = cfg.with_window(w);
+    }
+    let run = run_reliable_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+    run.ingress.first_tx
+        + run.ingress.retransmissions
+        + run.egress.first_tx
+        + run.egress.retransmissions
+}
+
+fn event_session(children: usize, pairs: usize, loss: f64, window: Option<RelWindow>) -> u64 {
+    let ss = streams(children, pairs, 0xBE7C);
+    let mut sw = switch_for(children);
+    let mut cfg = TransportConfig::uniform(loss, 0x5EED);
+    if let Some(w) = window {
+        // Drip-window case: pin both drivers to the same fixed small
+        // window so only the driver machinery differs.
+        cfg = cfg.with_window(w).with_mode(CreditMode::FixedWindow);
+    }
+    let run = run_transport_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+    run.ingress.first_tx
+        + run.ingress.retransmissions
+        + run.egress.first_tx
+        + run.egress.retransmissions
+}
+
+fn main() {
+    let mut log = JsonLog::new();
+
+    bench::section("tick loop vs event-driven co-simulation (full sessions)");
+    for &(name, children, pairs, loss) in &[
+        ("8x fan-in 1% loss", 8usize, 4_000usize, 0.01f64),
+        ("64x fan-in 5% loss", 64, 1_000, 0.05),
+    ] {
+        log.push(&bench::run(
+            &format!("tick driver {name}"),
+            1,
+            5,
+            move || tick_session(children, pairs, loss, None),
+        ));
+        log.push(&bench::run(
+            &format!("event driver {name}"),
+            1,
+            5,
+            move || event_session(children, pairs, loss, None),
+        ));
+    }
+
+    bench::section("drip window w=4 (tick cost ∝ rounds, event cost ∝ packets)");
+    // A 4-packet window forces dozens of window-limited rounds: the
+    // tick loop burns one full per-sender scan per round, the event
+    // driver only touches the packets that actually move.
+    let w = RelWindow::new(4);
+    log.push(&bench::run("tick driver drip w=4 16x", 1, 5, move || {
+        tick_session(16, 4_000, 0.0, Some(w))
+    }));
+    log.push(&bench::run("event driver drip w=4 16x", 1, 5, move || {
+        event_session(16, 4_000, 0.0, Some(w))
+    }));
+
+    let path = std::env::var("SWITCHAGG_BENCH_TRANSPORT_JSON")
+        .unwrap_or_else(|_| "BENCH_transport.json".to_string());
+    if let Err(e) = log.write(&path) {
+        eprintln!("could not write bench log {path}: {e}");
+    }
+}

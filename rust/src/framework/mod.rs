@@ -8,6 +8,7 @@ pub mod mapper;
 pub mod reducer;
 pub mod reliable;
 pub mod shim;
+pub mod transport;
 
 pub use job::{run_job, JobReport, JobSpec};
 pub use mapper::{Mapper, VectorMapper};
@@ -17,3 +18,7 @@ pub use reliable::{
     ReliableVectorRun,
 };
 pub use shim::Shim;
+pub use transport::{
+    run_transport_scalar, run_transport_vector, CreditMode, NetHopStats, TransportConfig,
+    TransportRun, TransportVectorRun,
+};

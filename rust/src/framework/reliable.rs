@@ -18,12 +18,19 @@
 //! given workload the final reducer aggregate — keys, values, counts —
 //! is identical at any loss rate, on the serial and sharded engines,
 //! scalar and W-lane vector paths alike.
+//!
+//! This tick-based driver is **retained as the timing-free reference**
+//! for the event-driven co-simulation in [`crate::framework::transport`],
+//! which pushes the same packets through `NetSim` (real queueing
+//! delay, RTT-estimated timeouts, adaptive credit) — the differential
+//! tests in `tests/transport.rs` pin the two drivers' lossless
+//! aggregates against each other.
 
 use crate::framework::reducer::{Completeness, Reducer};
 use crate::net::loss::{LossChannel, LossConfig};
 use crate::protocol::{
-    AggAckPacket, AggOp, AggregationPacket, KvPair, RelHeader, ReliableSender, TreeId,
-    VectorAggregationPacket, VectorBatch, VectorChunks, REL_WINDOW, RETX_TIMEOUT_TICKS,
+    AggAckPacket, AggOp, AggregationPacket, KvPair, RelHeader, RelWindow, ReliableSender, TreeId,
+    VectorAggregationPacket, VectorBatch, VectorChunks, RETX_TIMEOUT_TICKS,
 };
 use crate::switch::reliability::{Admit, DedupStats, DedupWindow};
 use crate::switch::{IngestSink, SwitchAggSwitch, VectorSink};
@@ -39,6 +46,11 @@ pub struct ReliabilityConfig {
     pub egress: LossConfig,
     /// Retransmission timeout in ticks.
     pub timeout: u64,
+    /// Credit window shared by every endpoint of the session: the
+    /// senders' credit ceiling and the switch/reducer dedup bitmaps
+    /// are all built from this one value, so mismatched ends are
+    /// unrepresentable.
+    pub window: RelWindow,
     /// Safety valve: panic instead of looping forever if a session
     /// cannot converge (e.g. a pathological loss configuration).
     pub max_ticks: u64,
@@ -51,6 +63,7 @@ impl Default for ReliabilityConfig {
             ack: LossConfig::lossless(),
             egress: LossConfig::lossless(),
             timeout: RETX_TIMEOUT_TICKS,
+            window: RelWindow::default(),
             max_ticks: 100_000,
         }
     }
@@ -81,6 +94,12 @@ impl ReliabilityConfig {
     pub fn with_dup(mut self, q: f64) -> Self {
         self.data = self.data.with_dup(q);
         self.egress = self.egress.with_dup(q);
+        self
+    }
+
+    /// Use a non-default credit window (both ends derive from it).
+    pub fn with_window(mut self, window: RelWindow) -> Self {
+        self.window = window;
         self
     }
 }
@@ -162,7 +181,7 @@ fn drive<P>(
     let children = pkts_per_child.len();
     let mut senders: Vec<ReliableSender> = pkts_per_child
         .iter()
-        .map(|p| ReliableSender::new(p.len(), cfg.timeout))
+        .map(|p| ReliableSender::with_window(p.len(), cfg.timeout, cfg.window))
         .collect();
     let mut data_ch: Vec<LossChannel> = (0..children)
         .map(|c| LossChannel::salted(data_loss, salt_base + c as u64))
@@ -223,8 +242,9 @@ fn drive<P>(
     stats
 }
 
-/// Stamp reliability records onto a packetized stream.
-fn stamp<P>(pkts: &mut [P], child: u16, set: impl Fn(&mut P, RelHeader)) {
+/// Stamp reliability records onto a packetized stream (shared with
+/// the event-driven driver in `framework::transport`).
+pub(crate) fn stamp<P>(pkts: &mut [P], child: u16, set: impl Fn(&mut P, RelHeader)) {
     for (i, p) in pkts.iter_mut().enumerate() {
         set(
             p,
@@ -237,21 +257,21 @@ fn stamp<P>(pkts: &mut [P], child: u16, set: impl Fn(&mut P, RelHeader)) {
 }
 
 /// Reducer-side endpoint of the egress hop: a dedup window plus the
-/// admitted stream.
-struct Endpoint<T> {
-    window: DedupWindow,
-    received: T,
+/// admitted stream (shared with `framework::transport`).
+pub(crate) struct Endpoint<T> {
+    pub(crate) window: DedupWindow,
+    pub(crate) received: T,
 }
 
 impl<T> Endpoint<T> {
-    fn new(received: T) -> Self {
+    pub(crate) fn new(received: T, window: RelWindow) -> Self {
         Self {
-            window: DedupWindow::new(REL_WINDOW),
+            window: DedupWindow::sized(window),
             received,
         }
     }
 
-    fn ack_for(&self, tree: TreeId, child: u16) -> AggAckPacket {
+    pub(crate) fn ack_for(&self, tree: TreeId, child: u16) -> AggAckPacket {
         AggAckPacket {
             tree,
             child,
@@ -283,6 +303,7 @@ pub fn run_reliable_scalar(
         })
         .collect();
 
+    sw.set_rel_window(cfg.window);
     let mut sink = IngestSink::new();
     let ingress = drive(
         &pkts,
@@ -306,7 +327,7 @@ pub fn run_reliable_scalar(
     egress_pairs.extend_from_slice(&sink.flushed);
     let mut epkts = AggregationPacket::pack_stream(tree, op, &egress_pairs, true);
     stamp(&mut epkts, 0, |p, rel| p.rel = Some(rel));
-    let mut ep = Endpoint::new(Vec::<KvPair>::new());
+    let mut ep = Endpoint::new(Vec::<KvPair>::new(), cfg.window);
     let egress = drive(
         &[epkts],
         cfg,
@@ -373,6 +394,7 @@ pub fn run_reliable_vector(
         .map(|(c, b)| packetize(b, c as u16))
         .collect();
 
+    sw.set_rel_window(cfg.window);
     let mut sink = VectorSink::new(lanes);
     let ingress = drive(
         &pkts,
@@ -390,7 +412,7 @@ pub fn run_reliable_vector(
 
     let egress_batch = crate::switch::vector_sink_to_batch(&sink);
     let epkts = packetize(&egress_batch, 0);
-    let mut ep = Endpoint::new(VectorBatch::new(lanes));
+    let mut ep = Endpoint::new(VectorBatch::new(lanes), cfg.window);
     let egress = drive(
         &[epkts],
         cfg,
@@ -513,6 +535,61 @@ mod tests {
         assert!(lossy.dedup.dup_drops > 0, "retransmits reach a cum-acked window");
         assert!(lossy.completeness.is_complete());
         assert_eq!(merged(&lossy.received), merged(&base.received));
+    }
+
+    #[test]
+    fn empty_run_ratio_accessors_are_guarded() {
+        // Satellite: zero-denominator accessors must return 0, not NaN.
+        let empty = HopStats::default();
+        assert_eq!(empty.retx_overhead(), 0.0);
+        assert!(!empty.retx_overhead().is_nan());
+        let stats = crate::switch::SwitchStats::default();
+        assert_eq!(stats.reduction_ratio(), 0.0);
+        assert_eq!(stats.fifo_full_ratio(), 0.0);
+        assert_eq!(stats.throughput_bytes_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn configurable_window_binds_both_ends_of_the_session() {
+        // Satellite: one RelWindow in the config drives the sender
+        // credit ceiling AND the switch bitmap — with a 4-packet
+        // window the session still converges, and nothing ever lands
+        // beyond the bitmap (a mismatched sender would).
+        let ss = streams(2, 400, 31);
+        let mut sw = switch(2);
+        let cfg = ReliabilityConfig::default().with_window(crate::protocol::RelWindow::new(4));
+        let run = run_reliable_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+        assert!(run.completeness.is_complete());
+        assert_eq!(
+            sw.dedup_stats(TreeId(1)).out_of_window,
+            0,
+            "a shared-window sender can never overrun the switch bitmap"
+        );
+        let mut base_sw = switch(2);
+        let base = run_reliable_scalar(
+            &mut base_sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &ReliabilityConfig::default(),
+        );
+        assert_eq!(merged(&run.received), merged(&base.received));
+    }
+
+    #[test]
+    #[should_panic(expected = "before the first reliable packet")]
+    fn window_cannot_change_mid_stream() {
+        let ss = streams(1, 50, 3);
+        let mut sw = switch(1);
+        let _ = run_reliable_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &ReliabilityConfig::default(),
+        );
+        // The dedup windows are live now; shrinking must be refused.
+        sw.set_rel_window(crate::protocol::RelWindow::new(8));
     }
 
     #[test]

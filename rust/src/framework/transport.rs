@@ -1,0 +1,804 @@
+//! Event-driven transport co-simulation: reliable aggregation sessions
+//! whose every packet rides `NetSim`.
+//!
+//! The tick-based driver (`framework::reliable`, retained as the
+//! reference) models a round trip as one lockstep tick, so
+//! retransmission timing never sees queueing.  This driver closes that
+//! gap: data, retransmit, and ack packets are `send_tagged`-ed through
+//! the calendar-queue [`NetSim`] over a star topology (mappers →
+//! aggregating switch → reducer), with the per-link loss/duplication
+//! channels of `net::loss`, and the session logic reacts to each
+//! [`Delivery`] — so a sender's retransmission timer competes with
+//! *real* serialization and queueing delay, which is exactly the
+//! regime that decides incast behaviour at high fan-in.
+//!
+//! Two credit disciplines are selectable per session:
+//!
+//! * [`CreditMode::FixedWindow`] — the PR 4 baseline: the whole
+//!   [`RelWindow`] is open from the first poll and the retransmission
+//!   timeout is a static, conservatively initialized RTO (a fixed
+//!   window self-queues its own uplink, so its implementation must
+//!   tolerate the worst-case round trip).
+//! * [`CreditMode::Adaptive`] — each sender runs an RFC 6298
+//!   [`RttEstimator`] (SRTT/RTTVAR, Karn's rule on retransmitted
+//!   samples) with ack-clocked additive increase and timeout-driven
+//!   multiplicative decrease, and the switch advertises credit derived
+//!   from its dedup-window occupancy scaled by PE-input FIFO headroom
+//!   (`CreditPolicy::Backpressure`) instead of parroting the constant
+//!   window.
+//!
+//! The driver's cost scales with *packets processed*, not simulated
+//! time — there is no tick loop to spin while timers run down; idle
+//! gaps are jumped in O(1) via [`AdaptiveSender::next_retx_deadline`].
+//! `bench_transport` records both drivers' throughput.
+//!
+//! Exactly-once still holds end to end: admission is the same dedup
+//! machinery as the tick driver, and `tests/transport.rs` pins the
+//! lossless event-driven aggregate byte-identical to the tick
+//! reference on the scalar and W-lane vector paths, serial and
+//! sharded engines alike.
+
+use crate::framework::reducer::{Completeness, Reducer};
+use crate::framework::reliable::{stamp, Endpoint};
+use crate::net::loss::LossConfig;
+use crate::net::netsim::NetSim;
+use crate::net::topology::{NodeId, Topology};
+use crate::protocol::{
+    AdaptiveSender, AggAckPacket, AggOp, AggregationPacket, KvPair, RelWindow, RttEstimator,
+    TreeId, VectorAggregationPacket, VectorBatch, VectorChunks, HEADER_OVERHEAD,
+};
+use crate::switch::reliability::Admit;
+use crate::switch::{CreditPolicy, DedupStats, IngestSink, SwitchAggSwitch, VectorSink};
+
+/// Ack wire footprint: the L2/L3 envelope plus the encoded `AggAck`
+/// record (tag 1 B + tree 4 B + child 2 B + cum_seq 4 B + credit 2 B).
+pub const ACK_WIRE_LEN: u64 = HEADER_OVERHEAD as u64 + 13;
+
+/// Credit discipline of one session (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CreditMode {
+    /// Constant `RelWindow` credit + static conservative RTO.
+    FixedWindow,
+    /// AIMD congestion window + RTT-estimated RTO + backpressure-aware
+    /// switch credit.
+    Adaptive,
+}
+
+/// Loss/timing parameters of one co-simulated session.
+#[derive(Clone, Copy, Debug)]
+pub struct TransportConfig {
+    /// Mapper → switch data links (one per child, salted per link).
+    pub data: LossConfig,
+    /// Reverse ack links (both hops).
+    pub ack: LossConfig,
+    /// Switch → reducer data link.
+    pub egress: LossConfig,
+    /// Credit window shared by every endpoint (senders, switch dedup
+    /// bitmaps, reducer endpoint) — mismatched ends are
+    /// unrepresentable.
+    pub window: RelWindow,
+    pub mode: CreditMode,
+    /// Pre-sample retransmission timeout.  This is also the fixed
+    /// mode's static RTO, so it must cover the worst-case
+    /// self-queueing round trip of a full window — at most `window`
+    /// packets queue ahead of a send, so the default (2 ms) clears a
+    /// 1024-MTU-packet window on a 10 GbE link (~1.26 ms) with margin
+    /// at any `--scale`; raise it if you raise the window.
+    pub init_rto_s: f64,
+    /// Floor of the estimated RTO (guards against hair-trigger timers
+    /// from a few fast samples).
+    pub min_rto_s: f64,
+    /// Safety valve: panic instead of looping forever if a session
+    /// cannot converge.
+    pub max_steps: u64,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self {
+            data: LossConfig::lossless(),
+            ack: LossConfig::lossless(),
+            egress: LossConfig::lossless(),
+            window: RelWindow::default(),
+            mode: CreditMode::Adaptive,
+            init_rto_s: 2e-3,
+            min_rto_s: 50e-6,
+            max_steps: 50_000_000,
+        }
+    }
+}
+
+impl TransportConfig {
+    /// The same drop rate on every link class, with per-link
+    /// independent seeded streams; `p = 0` is the exact lossless
+    /// baseline (no RNG draw anywhere).
+    pub fn uniform(p: f64, seed: u64) -> Self {
+        let mk = |salt: u64| {
+            if p > 0.0 {
+                LossConfig::drop(p, seed ^ salt)
+            } else {
+                LossConfig::lossless()
+            }
+        };
+        Self {
+            data: mk(0x11),
+            ack: mk(0x22),
+            egress: mk(0x33),
+            ..Self::default()
+        }
+    }
+
+    /// Add a duplication rate to both data link classes.
+    pub fn with_dup(mut self, q: f64) -> Self {
+        self.data = self.data.with_dup(q);
+        self.egress = self.egress.with_dup(q);
+        self
+    }
+
+    pub fn with_mode(mut self, mode: CreditMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_window(mut self, window: RelWindow) -> Self {
+        self.window = window;
+        self
+    }
+
+    fn sender_for(&self, total_packets: usize) -> AdaptiveSender {
+        let rtt = RttEstimator::new(self.init_rto_s, self.min_rto_s);
+        match self.mode {
+            CreditMode::Adaptive => AdaptiveSender::adaptive(total_packets, self.window, rtt),
+            CreditMode::FixedWindow => AdaptiveSender::fixed(total_packets, self.window, rtt),
+        }
+    }
+}
+
+/// Transport counters for one co-simulated hop.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetHopStats {
+    /// First transmissions (= packets in the loss-free schedule).
+    pub first_tx: u64,
+    /// Timeout-driven retransmissions.
+    pub retransmissions: u64,
+    /// Timeout events (multiplicative-decrease triggers).
+    pub timeouts: u64,
+    /// Wire bytes across all data transmissions.
+    pub wire_bytes: u64,
+    /// Wire bytes of the first transmissions alone.
+    pub first_tx_bytes: u64,
+    /// Data packets the links dropped / duplicated.
+    pub drops: u64,
+    pub dups: u64,
+    /// Acks lost on the reverse links.
+    pub acks_dropped: u64,
+    /// Simulated time at which every sender was fully acknowledged.
+    pub done_s: f64,
+    /// Mean final smoothed RTT across senders that took a sample
+    /// (0 when none did — fixed mode never samples).
+    pub srtt_mean_s: f64,
+    /// Largest congestion window any sender reached.
+    pub cwnd_peak: f64,
+    /// NetSim packet-hops processed during this hop.
+    pub events: u64,
+}
+
+impl NetHopStats {
+    /// Retransmitted packets per first transmission (0 for an empty
+    /// run — never NaN).
+    pub fn retx_overhead(&self) -> f64 {
+        if self.first_tx == 0 {
+            0.0
+        } else {
+            self.retransmissions as f64 / self.first_tx as f64
+        }
+    }
+
+    /// Useful (first-transmission) bytes per second of hop runtime,
+    /// guarded against the empty/instant run.
+    pub fn goodput_bytes_per_s(&self, start_s: f64) -> f64 {
+        let dt = self.done_s - start_s;
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.first_tx_bytes as f64 / dt
+        }
+    }
+}
+
+/// Everything one co-simulated scalar session produces.
+#[derive(Clone, Debug)]
+pub struct TransportRun {
+    pub ingress: NetHopStats,
+    pub egress: NetHopStats,
+    pub dedup: DedupStats,
+    pub completeness: Completeness,
+    /// The stream the reducer admitted, in arrival order.
+    pub received: Vec<KvPair>,
+    /// Job completion time: the simulated instant the egress hop was
+    /// fully acknowledged (the session starts at t = 0).
+    pub jct_s: f64,
+    /// Peak PE-input FIFO occupancy the switch saw (the
+    /// backpressure-credit signal).
+    pub fifo_peak: u64,
+}
+
+/// [`TransportRun`] for the W-lane vector path.
+#[derive(Clone, Debug)]
+pub struct TransportVectorRun {
+    pub ingress: NetHopStats,
+    pub egress: NetHopStats,
+    pub dedup: DedupStats,
+    pub completeness: Completeness,
+    pub received: VectorBatch,
+    pub jct_s: f64,
+    pub fifo_peak: u64,
+}
+
+// Tag layout: kind(8) | child(16) | payload index(32).  Kinds keep the
+// two hops' traffic distinguishable so a straggler from a finished hop
+// (late retransmission or duplicate still in flight) is recognized and
+// dropped instead of corrupting the next hop's bookkeeping.
+const KIND_INGRESS_DATA: u64 = 1;
+const KIND_INGRESS_ACK: u64 = 2;
+const KIND_EGRESS_DATA: u64 = 3;
+const KIND_EGRESS_ACK: u64 = 4;
+
+fn tag(kind: u64, child: u16, idx: u32) -> u64 {
+    (kind << 56) | ((child as u64) << 32) | idx as u64
+}
+
+fn tag_kind(t: u64) -> u64 {
+    t >> 56
+}
+
+fn tag_child(t: u64) -> u16 {
+    ((t >> 32) & 0xFFFF) as u16
+}
+
+fn tag_idx(t: u64) -> u32 {
+    t as u32
+}
+
+/// Drive one reliable hop to completion over the live `NetSim`:
+/// per-child senders at `src[c]` stream their packets (lengths in
+/// `lens[c]`) to `dst`, where `deliver(child, seq, now)` admits the
+/// payload and returns the ack to send back.  Every arrival is
+/// reacted to individually — acks clock the windows open, drained-
+/// network gaps jump straight to the earliest retransmission deadline.
+fn drive_hop(
+    sim: &mut NetSim,
+    cfg: &TransportConfig,
+    lens: &[Vec<u64>],
+    src: &[NodeId],
+    dst: NodeId,
+    kinds: (u64, u64),
+    mut deliver: impl FnMut(u16, u32, f64) -> AggAckPacket,
+) -> NetHopStats {
+    let (data_kind, ack_kind) = kinds;
+    assert_eq!(lens.len(), src.len());
+    let children = lens.len();
+    let mut senders: Vec<AdaptiveSender> =
+        lens.iter().map(|l| cfg.sender_for(l.len())).collect();
+    // Ack payloads ride out-of-band, keyed by the 32-bit index in the
+    // ack's tag (a tag is 64 bits; cum_seq + credit don't fit).
+    let mut acks: Vec<AggAckPacket> = Vec::new();
+    let mut stats = NetHopStats::default();
+    for l in lens {
+        stats.first_tx_bytes += l.iter().sum::<u64>();
+    }
+    let links_before = sim.link_stats();
+    let events_before = sim.events_processed();
+
+    let mut out_seqs: Vec<u32> = Vec::new();
+    let t0 = sim.now_s();
+    let mut done_s = t0;
+    for c in 0..children {
+        out_seqs.clear();
+        senders[c].poll(t0, &mut out_seqs);
+        for &seq in &out_seqs {
+            let bytes = lens[c][(seq - 1) as usize];
+            stats.wire_bytes += bytes;
+            sim.send_tagged(t0, src[c], dst, bytes, tag(data_kind, c as u16, seq));
+        }
+    }
+
+    let mut steps: u64 = 0;
+    while !senders.iter().all(|s| s.done()) {
+        steps += 1;
+        assert!(
+            steps <= cfg.max_steps,
+            "transport session did not converge within {} steps",
+            cfg.max_steps
+        );
+        let Some(d) = sim.step_delivery() else {
+            // The network drained with streams unfinished: everything
+            // outstanding was lost.  Jump straight to the earliest
+            // retransmission deadline — no tick-by-tick idling — or
+            // probe immediately if no timer is pending (a zero-credit
+            // stall; the sender's window probe restarts the stream).
+            let deadline = senders
+                .iter()
+                .filter(|s| !s.done())
+                .filter_map(|s| s.next_retx_deadline())
+                .fold(f64::INFINITY, f64::min);
+            let t = if deadline.is_finite() {
+                deadline.max(sim.now_s())
+            } else {
+                sim.now_s()
+            };
+            let mut sent_any = false;
+            for c in 0..children {
+                if senders[c].done() {
+                    continue;
+                }
+                out_seqs.clear();
+                senders[c].poll(t, &mut out_seqs);
+                for &seq in &out_seqs {
+                    sent_any = true;
+                    let bytes = lens[c][(seq - 1) as usize];
+                    stats.wire_bytes += bytes;
+                    sim.send_tagged(t, src[c], dst, bytes, tag(data_kind, c as u16, seq));
+                }
+            }
+            assert!(sent_any, "transport stalled: idle network, no timers, nothing to send");
+            continue;
+        };
+        let kind = tag_kind(d.tag);
+        if kind == data_kind && d.node == dst {
+            let child = tag_child(d.tag);
+            let seq = tag_idx(d.tag);
+            let ack = deliver(child, seq, d.time_s);
+            let id = u32::try_from(acks.len()).expect("ack id space exhausted");
+            acks.push(ack);
+            sim.send_tagged(
+                d.time_s,
+                dst,
+                src[child as usize],
+                ACK_WIRE_LEN,
+                tag(ack_kind, child, id),
+            );
+        } else if kind == ack_kind {
+            let c = tag_child(d.tag) as usize;
+            let ack = acks[tag_idx(d.tag) as usize];
+            let sender = &mut senders[c];
+            let was_done = sender.done();
+            sender.on_ack(ack.cum_seq, ack.credit, d.time_s);
+            if !was_done && sender.done() {
+                done_s = done_s.max(d.time_s);
+            }
+            out_seqs.clear();
+            sender.poll(d.time_s, &mut out_seqs);
+            for &seq in &out_seqs {
+                let bytes = lens[c][(seq - 1) as usize];
+                stats.wire_bytes += bytes;
+                sim.send_tagged(d.time_s, src[c], dst, bytes, tag(data_kind, c as u16, seq));
+            }
+        }
+        // Any other tag is a straggler from a previous hop (late
+        // retransmission / duplicate): the job has moved on, drop it.
+    }
+
+    stats.done_s = done_s;
+    let mut srtt_sum = 0.0;
+    let mut srtt_n = 0u32;
+    for s in &senders {
+        stats.first_tx += s.first_tx;
+        stats.retransmissions += s.retransmissions;
+        stats.timeouts += s.timeouts;
+        stats.cwnd_peak = stats.cwnd_peak.max(s.cwnd_peak());
+        if let Some(srtt) = s.rtt().srtt_s() {
+            srtt_sum += srtt;
+            srtt_n += 1;
+        }
+    }
+    if srtt_n > 0 {
+        stats.srtt_mean_s = srtt_sum / srtt_n as f64;
+    }
+    let links_after = sim.link_stats();
+    let delta = |key: (NodeId, NodeId)| -> (u64, u64) {
+        let after = links_after
+            .get(&key)
+            .map(|s| (s.dropped, s.duplicated))
+            .unwrap_or((0, 0));
+        let before = links_before
+            .get(&key)
+            .map(|s| (s.dropped, s.duplicated))
+            .unwrap_or((0, 0));
+        (after.0 - before.0, after.1 - before.1)
+    };
+    for &s in src {
+        let (drops, dups) = delta((s, dst));
+        stats.drops += drops;
+        stats.dups += dups;
+        stats.acks_dropped += delta((dst, s)).0;
+    }
+    stats.events = sim.events_processed() - events_before;
+    stats
+}
+
+/// Build the session's network: a star whose hub is the aggregating
+/// switch, `children` mapper hosts, one reducer host, with the config's
+/// loss models installed on every link class before any traffic.
+fn session_net(children: usize, cfg: &TransportConfig) -> (NetSim, NodeId, Vec<NodeId>, NodeId) {
+    let (topo, hub, hosts) = Topology::star(children + 1);
+    let mut sim = NetSim::new(topo);
+    let mappers = hosts[..children].to_vec();
+    let reducer = hosts[children];
+    for &m in &mappers {
+        sim.set_link_loss(m, hub, cfg.data);
+        sim.set_link_loss(hub, m, cfg.ack);
+    }
+    sim.set_link_loss(hub, reducer, cfg.egress);
+    sim.set_link_loss(reducer, hub, cfg.ack);
+    (sim, hub, mappers, reducer)
+}
+
+fn apply_session_policy(sw: &mut SwitchAggSwitch, cfg: &TransportConfig) {
+    sw.set_rel_window(cfg.window);
+    sw.set_credit_policy(match cfg.mode {
+        CreditMode::Adaptive => CreditPolicy::Backpressure,
+        CreditMode::FixedWindow => CreditPolicy::WindowOnly,
+    });
+}
+
+/// Run one co-simulated scalar session: `streams[c]` is child `c`'s
+/// pair stream; `sw` must already be configured for `tree` with
+/// `children == streams.len()` (scalar, lanes = 1).  The session
+/// starts at simulated t = 0 on a fresh star network.
+pub fn run_transport_scalar(
+    sw: &mut SwitchAggSwitch,
+    tree: TreeId,
+    op: AggOp,
+    streams: &[Vec<KvPair>],
+    cfg: &TransportConfig,
+) -> TransportRun {
+    apply_session_policy(sw, cfg);
+    // Packetize once; retransmissions reuse the same packets (same
+    // seq ⇒ same payload, the dedup contract).
+    let pkts: Vec<Vec<AggregationPacket>> = streams
+        .iter()
+        .enumerate()
+        .map(|(c, s)| {
+            let mut v = AggregationPacket::pack_stream(tree, op, s, true);
+            stamp(&mut v, c as u16, |p, rel| p.rel = Some(rel));
+            v
+        })
+        .collect();
+    let lens: Vec<Vec<u64>> = pkts
+        .iter()
+        .map(|v| v.iter().map(|p| p.wire_len() as u64).collect())
+        .collect();
+
+    let (mut sim, hub, mappers, reducer) = session_net(streams.len(), cfg);
+    let mut sink = IngestSink::new();
+    let ingress = drive_hop(
+        &mut sim,
+        cfg,
+        &lens,
+        &mappers,
+        hub,
+        (KIND_INGRESS_DATA, KIND_INGRESS_ACK),
+        |child, seq, _now| {
+            let pkt = &pkts[child as usize][(seq - 1) as usize];
+            sw.ingest_reliable_one(tree, pkt, &mut sink)
+        },
+    );
+    assert_eq!(sink.flushes, 1, "all EoTs admitted ⇒ exactly one flush");
+    sw.finalize(tree);
+    let dedup = sw.dedup_stats(tree);
+    let stats = sw.stats(tree).expect("tree stats");
+    let expected_pairs = stats.pairs_out_stream + stats.pairs_out_flush;
+    let fifo_peak = stats.fifo_max_occupancy;
+
+    // Egress hop: the switch's emitted stream (forwarded, then flush)
+    // rides the hub → reducer link under the same reliable protocol.
+    let mut egress_pairs = Vec::with_capacity(sink.forwarded.len() + sink.flushed.len());
+    egress_pairs.extend_from_slice(&sink.forwarded);
+    egress_pairs.extend_from_slice(&sink.flushed);
+    let mut epkts = AggregationPacket::pack_stream(tree, op, &egress_pairs, true);
+    stamp(&mut epkts, 0, |p, rel| p.rel = Some(rel));
+    let elens = vec![epkts.iter().map(|p| p.wire_len() as u64).collect::<Vec<u64>>()];
+    let mut ep = Endpoint::new(Vec::<KvPair>::new(), cfg.window);
+    let hub_src = [hub];
+    let egress = drive_hop(
+        &mut sim,
+        cfg,
+        &elens,
+        &hub_src,
+        reducer,
+        (KIND_EGRESS_DATA, KIND_EGRESS_ACK),
+        |_child, seq, _now| {
+            let pkt = &epkts[(seq - 1) as usize];
+            let rel = pkt.rel.expect("egress packets carry rel headers");
+            if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                ep.received.extend_from_slice(&pkt.pairs);
+            }
+            ep.ack_for(tree, rel.child)
+        },
+    );
+    let completeness =
+        Reducer::verify_completeness(expected_pairs, std::slice::from_ref(&ep.received));
+    assert!(
+        completeness.is_complete(),
+        "end-of-job recovery left {} pairs missing",
+        completeness.missing()
+    );
+    TransportRun {
+        ingress,
+        egress,
+        dedup,
+        completeness,
+        received: ep.received,
+        jct_s: egress.done_s,
+        fifo_peak,
+    }
+}
+
+/// The W-lane vector counterpart of [`run_transport_scalar`]; `sw`
+/// must be configured via `configure_vector` with the streams' lane
+/// width.
+pub fn run_transport_vector(
+    sw: &mut SwitchAggSwitch,
+    tree: TreeId,
+    op: AggOp,
+    streams: &[VectorBatch],
+    cfg: &TransportConfig,
+) -> TransportVectorRun {
+    apply_session_policy(sw, cfg);
+    let lanes = streams.first().map(|b| b.lanes()).unwrap_or(1);
+    let packetize = |batch: &VectorBatch, child: u16| -> Vec<VectorAggregationPacket> {
+        let mut out = Vec::new();
+        let mut chunks = VectorChunks::new(batch);
+        while let Some((range, last)) = chunks.next_chunk() {
+            out.push(VectorAggregationPacket {
+                tree,
+                op,
+                eot: last,
+                rel: None,
+                batch: batch.sub_batch(range),
+            });
+        }
+        stamp(&mut out, child, |p, rel| p.rel = Some(rel));
+        out
+    };
+    let pkts: Vec<Vec<VectorAggregationPacket>> = streams
+        .iter()
+        .enumerate()
+        .map(|(c, b)| packetize(b, c as u16))
+        .collect();
+    let lens: Vec<Vec<u64>> = pkts
+        .iter()
+        .map(|v| v.iter().map(|p| p.wire_len() as u64).collect())
+        .collect();
+
+    let (mut sim, hub, mappers, reducer) = session_net(streams.len(), cfg);
+    let mut sink = VectorSink::new(lanes);
+    let ingress = drive_hop(
+        &mut sim,
+        cfg,
+        &lens,
+        &mappers,
+        hub,
+        (KIND_INGRESS_DATA, KIND_INGRESS_ACK),
+        |child, seq, _now| {
+            let pkt = &pkts[child as usize][(seq - 1) as usize];
+            sw.ingest_vector_reliable_one(tree, pkt, &mut sink)
+        },
+    );
+    assert_eq!(sink.flushes, 1, "all EoTs admitted ⇒ exactly one flush");
+    sw.finalize(tree);
+    let dedup = sw.dedup_stats(tree);
+    let stats = sw.stats(tree).expect("tree stats");
+    let expected_pairs = stats.pairs_out_stream + stats.pairs_out_flush;
+    let fifo_peak = stats.fifo_max_occupancy;
+
+    let egress_batch = crate::switch::vector_sink_to_batch(&sink);
+    let epkts = packetize(&egress_batch, 0);
+    let elens = vec![epkts.iter().map(|p| p.wire_len() as u64).collect::<Vec<u64>>()];
+    let mut ep = Endpoint::new(VectorBatch::new(lanes), cfg.window);
+    let hub_src = [hub];
+    let egress = drive_hop(
+        &mut sim,
+        cfg,
+        &elens,
+        &hub_src,
+        reducer,
+        (KIND_EGRESS_DATA, KIND_EGRESS_ACK),
+        |_child, seq, _now| {
+            let pkt = &epkts[(seq - 1) as usize];
+            let rel = pkt.rel.expect("egress packets carry rel headers");
+            if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                ep.received.extend_from_batch(&pkt.batch);
+            }
+            ep.ack_for(tree, rel.child)
+        },
+    );
+    let completeness = Completeness {
+        expected_pairs,
+        received_pairs: ep.received.len() as u64,
+    };
+    assert!(
+        completeness.is_complete(),
+        "end-of-job recovery left {} pairs missing",
+        completeness.missing()
+    );
+    TransportVectorRun {
+        ingress,
+        egress,
+        dedup,
+        completeness,
+        received: ep.received,
+        jct_s: egress.done_s,
+        fifo_peak,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{Key, TreeConfig};
+    use crate::switch::SwitchConfig;
+    use crate::util::rng::Pcg32;
+    use std::collections::HashMap;
+
+    fn switch(children: u16) -> SwitchAggSwitch {
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(16 << 10, Some(256 << 10)));
+        sw.configure(&[TreeConfig {
+            tree: TreeId(1),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        sw
+    }
+
+    fn streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+        let mut rng = Pcg32::new(seed);
+        (0..children)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        let id = rng.gen_range_u64(300);
+                        KvPair::new(
+                            Key::from_id(id, 16 + (id % 49) as usize),
+                            rng.gen_range_u64(100) as i64 - 50,
+                        )
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn merged(pairs: &[KvPair]) -> HashMap<Key, i64> {
+        Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
+    }
+
+    #[test]
+    fn lossless_session_completes_without_retransmission() {
+        let ss = streams(3, 1_000, 5);
+        let mut sw = switch(3);
+        let run = run_transport_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &TransportConfig::default(),
+        );
+        assert_eq!(run.ingress.retransmissions, 0);
+        assert_eq!(run.egress.retransmissions, 0);
+        assert_eq!(run.ingress.drops, 0);
+        assert_eq!(run.dedup.dup_drops, 0);
+        assert!(run.completeness.is_complete());
+        assert!(run.jct_s > 0.0, "queueing and serialization take time");
+        assert!(run.ingress.events > 0, "packets actually rode NetSim");
+        // Same aggregate as the plain (unreliable) ingest path.
+        let mut plain = switch(3);
+        let out = plain.ingest_child_streams(TreeId(1), AggOp::Sum, &ss);
+        assert_eq!(merged(&run.received), merged(&out));
+    }
+
+    #[test]
+    fn lossy_session_recovers_the_exact_aggregate() {
+        let ss = streams(2, 1_500, 9);
+        let mut base_sw = switch(2);
+        let base = run_transport_scalar(
+            &mut base_sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &TransportConfig::default(),
+        );
+        for mode in [CreditMode::Adaptive, CreditMode::FixedWindow] {
+            let mut sw = switch(2);
+            let lossy = run_transport_scalar(
+                &mut sw,
+                TreeId(1),
+                AggOp::Sum,
+                &ss,
+                &TransportConfig::uniform(0.1, 0xD00D).with_mode(mode),
+            );
+            assert!(lossy.ingress.drops > 0, "10% loss must drop ({mode:?})");
+            assert!(
+                lossy.ingress.retransmissions > 0,
+                "drops must retransmit ({mode:?})"
+            );
+            assert!(lossy.completeness.is_complete());
+            assert_eq!(merged(&lossy.received), merged(&base.received), "{mode:?}");
+            assert!(
+                lossy.jct_s > base.jct_s,
+                "loss recovery must cost simulated time ({mode:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn duplicating_links_are_deduped_at_the_switch() {
+        let ss = streams(2, 800, 21);
+        let mut sw = switch(2);
+        let cfg = TransportConfig::uniform(0.02, 0xFACE).with_dup(0.05);
+        let run = run_transport_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+        assert!(run.ingress.dups > 0);
+        assert!(run.dedup.dup_drops > 0);
+        let mut base_sw = switch(2);
+        let base = run_transport_scalar(
+            &mut base_sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &TransportConfig::default(),
+        );
+        assert_eq!(merged(&run.received), merged(&base.received));
+    }
+
+    #[test]
+    fn adaptive_senders_estimate_rtt_and_grow_cwnd() {
+        let ss = streams(4, 2_000, 33);
+        let mut sw = switch(4);
+        let run = run_transport_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &TransportConfig::default(),
+        );
+        assert!(run.ingress.srtt_mean_s > 0.0, "adaptive mode samples RTT");
+        assert!(
+            run.ingress.cwnd_peak >= crate::protocol::INIT_CWND,
+            "ack clocking never shrinks a loss-free window"
+        );
+    }
+
+    #[test]
+    fn fixed_mode_never_samples_rtt() {
+        let ss = streams(2, 500, 7);
+        let mut sw = switch(2);
+        let run = run_transport_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &TransportConfig::default().with_mode(CreditMode::FixedWindow),
+        );
+        assert_eq!(run.ingress.srtt_mean_s, 0.0);
+        assert!(run.completeness.is_complete());
+    }
+
+    #[test]
+    fn small_window_session_converges() {
+        let ss = streams(2, 400, 11);
+        let mut sw = switch(2);
+        let cfg = TransportConfig::default().with_window(RelWindow::new(2));
+        let run = run_transport_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+        assert!(run.completeness.is_complete());
+        assert_eq!(sw.dedup_stats(TreeId(1)).out_of_window, 0);
+    }
+
+    #[test]
+    fn empty_hop_stats_ratios_are_guarded() {
+        let s = NetHopStats::default();
+        assert_eq!(s.retx_overhead(), 0.0);
+        assert_eq!(s.goodput_bytes_per_s(0.0), 0.0);
+        assert!(!s.retx_overhead().is_nan());
+    }
+}

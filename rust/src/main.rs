@@ -3,7 +3,7 @@
 //! ```text
 //! switchagg exp <id> [--scale N]     regenerate a paper table/figure
 //!     ids: eq1 fig2a fig2b fig9 table2 table3 fig10 fig11 ablations sec7
-//!          allreduce loss all
+//!          allreduce loss incast all
 //! switchagg wordcount [--bytes 8MB] [--vocab 20000] [--no-xla]
 //!     end-to-end WordCount through the simulated testbed
 //! switchagg selftest                 quick whole-stack smoke test
@@ -45,7 +45,7 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage:\n  switchagg exp <eq1|fig2a|fig2b|fig9|table2|table3|fig10|fig11|ablations|sec7|allreduce|loss|all> [--scale N]\n  switchagg wordcount [--bytes 8MB] [--vocab 20000] [--no-xla]\n  switchagg selftest"
+        "usage:\n  switchagg exp <eq1|fig2a|fig2b|fig9|table2|table3|fig10|fig11|ablations|sec7|allreduce|loss|incast|all> [--scale N]\n  switchagg wordcount [--bytes 8MB] [--vocab 20000] [--no-xla]\n  switchagg selftest"
     );
 }
 
@@ -79,6 +79,7 @@ fn cmd_exp(args: &Args) -> i32 {
         "sec7" => experiments::sec7::run(scale),
         "allreduce" => experiments::sec_allreduce::run(scale),
         "loss" => experiments::sec_loss::run(scale),
+        "incast" => experiments::sec_incast::run(scale),
         other => {
             eprintln!("unknown experiment {other:?}");
             std::process::exit(2);
@@ -87,7 +88,7 @@ fn cmd_exp(args: &Args) -> i32 {
     if id == "all" {
         for id in [
             "eq1", "fig2a", "fig2b", "fig9", "table2", "table3", "fig10", "fig11",
-            "ablations", "sec7", "allreduce", "loss",
+            "ablations", "sec7", "allreduce", "loss", "incast",
         ] {
             run_one(id);
         }

@@ -9,6 +9,6 @@ pub mod routing;
 pub mod topology;
 
 pub use loss::{LossChannel, LossConfig};
-pub use netsim::NetSim;
+pub use netsim::{Delivery, NetSim};
 pub use partition::{run_monolithic, run_tree_partitioned, SendReq, TreeSimResult};
 pub use topology::{NodeId, NodeKind, PortId, Topology};

@@ -43,6 +43,21 @@ struct Event {
     dst: NodeId,
     bytes: u64,
     id: u64,
+    /// Caller-supplied payload tag, threaded through to the final
+    /// delivery (0 for untagged [`NetSim::send`] traffic).
+    tag: u64,
+}
+
+/// One end-to-end delivery as reported by [`NetSim::step_delivery`] —
+/// the co-simulation hook: a transport driver reacts to each arrival
+/// (ingest + ack, window update) instead of replaying a finished run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Delivery {
+    pub time_s: f64,
+    pub node: NodeId,
+    pub bytes: u64,
+    /// The tag given to [`NetSim::send_tagged`] (0 for `send`).
+    pub tag: u64,
 }
 
 /// Per-directed-link accounting.
@@ -204,6 +219,13 @@ pub struct NetSim {
     /// destination) pair runs BFS at most once per simulator.
     route_cache: FxHashMap<(u32, u32), u32>,
     delivered: Vec<(f64, NodeId, u64)>,
+    /// Tag of each delivery, in lockstep with `delivered` (kept as a
+    /// parallel lane so [`Self::delivered`]'s type — which the
+    /// partitioned runner and the heap differential compare against —
+    /// stays unchanged).
+    delivered_tags: Vec<u64>,
+    /// Deliveries already handed out by [`Self::step_delivery`].
+    reported: usize,
     next_id: u64,
     now_s: f64,
 }
@@ -228,6 +250,8 @@ impl NetSim {
             calendar: Calendar::new(width, 256),
             route_cache: FxHashMap::default(),
             delivered: Vec::new(),
+            delivered_tags: Vec::new(),
+            reported: 0,
             next_id: 0,
             now_s: 0.0,
         }
@@ -235,7 +259,19 @@ impl NetSim {
 
     /// Inject a packet of `bytes` at `src` bound for `dst` at `t`.
     pub fn send(&mut self, t: f64, src: NodeId, dst: NodeId, bytes: u64) {
-        self.transmit(t.max(self.now_s), src, dst, bytes);
+        self.transmit(t.max(self.now_s), src, dst, bytes, 0);
+    }
+
+    /// [`Self::send`] with a caller-chosen payload tag, reported back
+    /// on the packet's [`Delivery`] — how the transport co-simulation
+    /// identifies which data/ack packet arrived.
+    pub fn send_tagged(&mut self, t: f64, src: NodeId, dst: NodeId, bytes: u64, tag: u64) {
+        self.transmit(t.max(self.now_s), src, dst, bytes, tag);
+    }
+
+    /// Current simulation clock (the time of the last processed event).
+    pub fn now_s(&self) -> f64 {
+        self.now_s
     }
 
     /// Apply `cfg` to every link that has no per-link override.  Must
@@ -305,9 +341,10 @@ impl NetSim {
         id as usize
     }
 
-    fn transmit(&mut self, t: f64, at: NodeId, dst: NodeId, bytes: u64) {
+    fn transmit(&mut self, t: f64, at: NodeId, dst: NodeId, bytes: u64, tag: u64) {
         if at == dst {
             self.delivered.push((t, dst, bytes));
+            self.delivered_tags.push(tag);
             return;
         }
         let Some(next) = self.next_hop_cached(at, dst) else {
@@ -348,6 +385,7 @@ impl NetSim {
                 dst,
                 bytes,
                 id: self.next_id,
+                tag,
             };
             let lane = &mut self.lanes[lid];
             let was_idle = lane.is_idle();
@@ -388,12 +426,37 @@ impl NetSim {
     pub fn run(&mut self) -> f64 {
         while let Some(ev) = self.pop_event() {
             self.now_s = ev.time_s;
-            self.transmit(ev.time_s, ev.to, ev.dst, ev.bytes);
+            self.transmit(ev.time_s, ev.to, ev.dst, ev.bytes, ev.tag);
         }
         self.delivered
             .iter()
             .map(|(t, _, _)| *t)
             .fold(0.0, f64::max)
+    }
+
+    /// Advance the simulation just far enough to produce the next
+    /// end-to-end delivery and return it; `None` when every event has
+    /// drained without one.  Deliveries are reported exactly once, in
+    /// delivery order, including any a `send` to a local destination
+    /// produced synchronously.  Interleaving `send`/`send_tagged`
+    /// between calls is the intended use — this is the co-simulation
+    /// loop of `framework::transport`, where each arrival triggers an
+    /// ingest, an ack, or a window update that injects new packets.
+    pub fn step_delivery(&mut self) -> Option<Delivery> {
+        while self.reported == self.delivered.len() {
+            let ev = self.pop_event()?;
+            self.now_s = ev.time_s;
+            self.transmit(ev.time_s, ev.to, ev.dst, ev.bytes, ev.tag);
+        }
+        let i = self.reported;
+        self.reported += 1;
+        let (time_s, node, bytes) = self.delivered[i];
+        Some(Delivery {
+            time_s,
+            node,
+            bytes,
+            tag: self.delivered_tags[i],
+        })
     }
 
     /// Bytes delivered to `node`.
@@ -787,6 +850,62 @@ mod tests {
         assert_eq!(cal.delivered(), heap.delivered());
         assert_eq!(cal.link_stats(), heap.link_stats());
         assert_eq!(cal.dropped_packets(), 0);
+    }
+
+    #[test]
+    fn step_delivery_reports_each_arrival_once_in_order() {
+        let (topo, _sw, hosts) = Topology::star(3);
+        let mut stepped = NetSim::new(topo.clone());
+        let mut whole = NetSim::new(topo);
+        for i in 0..10u64 {
+            stepped.send_tagged(i as f64 * 1e-5, hosts[0], hosts[1], 500, 100 + i);
+            whole.send(i as f64 * 1e-5, hosts[0], hosts[1], 500);
+        }
+        let mut seen = Vec::new();
+        while let Some(d) = stepped.step_delivery() {
+            assert_eq!(d.node, hosts[1]);
+            assert_eq!(d.bytes, 500);
+            seen.push(d.tag);
+        }
+        assert_eq!(seen, (100..110).collect::<Vec<u64>>(), "tags in delivery order");
+        assert!(stepped.step_delivery().is_none(), "drained stays drained");
+        // Stepping produces the identical run as run().
+        whole.run();
+        assert_eq!(stepped.delivered(), whole.delivered());
+        assert!(stepped.now_s() > 0.0);
+    }
+
+    #[test]
+    fn step_delivery_interleaves_with_reactive_sends() {
+        // The co-simulation pattern: each arrival triggers a reply on
+        // the reverse path; both directions settle.
+        let (topo, _sw, hosts) = Topology::star(2);
+        let mut sim = NetSim::new(topo);
+        sim.send_tagged(0.0, hosts[0], hosts[1], 1000, 1);
+        let mut forward = 0;
+        let mut replies = 0;
+        while let Some(d) = sim.step_delivery() {
+            if d.node == hosts[1] && forward < 5 {
+                forward += 1;
+                sim.send_tagged(d.time_s, hosts[1], hosts[0], 100, 2);
+            } else if d.node == hosts[0] {
+                replies += 1;
+                if replies < 5 {
+                    sim.send_tagged(d.time_s, hosts[0], hosts[1], 1000, 1);
+                }
+            }
+        }
+        assert_eq!(forward, 5);
+        assert_eq!(replies, 5);
+    }
+
+    #[test]
+    fn untagged_send_reports_tag_zero() {
+        let (topo, _sw, hosts) = Topology::star(2);
+        let mut sim = NetSim::new(topo);
+        sim.send(0.0, hosts[0], hosts[1], 64);
+        let d = sim.step_delivery().unwrap();
+        assert_eq!(d.tag, 0);
     }
 
     #[test]

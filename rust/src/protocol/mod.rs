@@ -24,7 +24,10 @@ pub use packet::{
     AckKind, AggregationPacket, ConfigurePacket, DataPacket, LaunchPacket, MtuChunks, Packet,
     TreeConfig, AGG_FIXED_LEN, HEADER_OVERHEAD, MAX_AGG_PAYLOAD, MTU,
 };
-pub use reliable::{AggAckPacket, RelHeader, ReliableSender, REL_WINDOW, RETX_TIMEOUT_TICKS};
+pub use reliable::{
+    AdaptiveSender, AggAckPacket, RelHeader, RelWindow, ReliableSender, RttEstimator, INIT_CWND,
+    REL_WINDOW, RETX_TIMEOUT_TICKS,
+};
 pub use types::{AggOp, TreeId, Value};
 pub use vector::{
     VectorAggregationPacket, VectorBatch, VectorChunks, MAX_LANES,

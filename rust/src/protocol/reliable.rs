@@ -28,11 +28,46 @@
 use super::types::TreeId;
 use super::wire::{self, Reader, Truncated};
 
-/// Dedup/credit window size in packets per `(tree, child)` stream.
-/// The sender never has more than this many unacknowledged sequence
-/// numbers outstanding, so the switch-side bitmap is bounded (128 B
-/// of state per child port at 1024 bits).
+/// Default dedup/credit window size in packets per `(tree, child)`
+/// stream.  The sender never has more than this many unacknowledged
+/// sequence numbers outstanding, so the switch-side bitmap is bounded
+/// (128 B of state per child port at 1024 bits).  Sessions that want a
+/// different size thread a [`RelWindow`] through their config; this
+/// constant is only [`RelWindow::default`]'s value.
 pub const REL_WINDOW: u32 = 1024;
+
+/// A validated reliability window size, the *single* source both ends
+/// of a stream are constructed from: the sender's credit ceiling
+/// ([`ReliableSender::with_window`] / [`AdaptiveSender`]) and the
+/// switch's dedup bitmap (`switch::reliability::DedupWindow::sized`).
+/// Because a session config carries one `RelWindow` and every endpoint
+/// derives from it, a sender/switch window mismatch is not
+/// constructible through the session APIs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RelWindow(u32);
+
+impl RelWindow {
+    /// Window in packets.  Bounded by the 16-bit credit field of
+    /// [`AggAckPacket`] (the switch must be able to advertise the
+    /// whole window in one ack).
+    pub fn new(packets: u32) -> Self {
+        assert!(
+            (1..=u16::MAX as u32).contains(&packets),
+            "reliability window {packets} outside 1..=65535"
+        );
+        Self(packets)
+    }
+
+    pub fn get(self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for RelWindow {
+    fn default() -> Self {
+        Self(REL_WINDOW)
+    }
+}
 
 /// Default retransmission timeout in session ticks (one tick = one
 /// send→switch→ack round trip in the discrete-time session model; see
@@ -105,17 +140,28 @@ pub struct ReliableSender {
 
 impl ReliableSender {
     pub fn new(total_packets: usize, timeout: u64) -> Self {
+        Self::with_window(total_packets, timeout, RelWindow::default())
+    }
+
+    /// [`Self::new`] with an explicit credit window — the same
+    /// [`RelWindow`] the receiving switch sizes its dedup bitmap from.
+    pub fn with_window(total_packets: usize, timeout: u64, window: RelWindow) -> Self {
         assert!(timeout >= 1, "a zero timeout would retransmit every tick");
         Self {
             total: u32::try_from(total_packets).expect("stream exceeds the u32 seq space"),
             next_new: 1,
             cum_acked: 0,
-            credit: REL_WINDOW,
+            credit: window.get(),
             timeout,
             inflight: Vec::new(),
             first_tx: 0,
             retransmissions: 0,
         }
+    }
+
+    /// Currently advertised credit (window slots beyond `cum_acked`).
+    pub fn credit(&self) -> u32 {
+        self.credit
     }
 
     /// Apply one ack.  Cumulative acks are idempotent and safe under
@@ -155,6 +201,298 @@ impl ReliableSender {
 
     pub fn cum_acked(&self) -> u32 {
         self.cum_acked
+    }
+}
+
+/// RFC 6298-style round-trip-time estimator driving the adaptive
+/// sender's retransmission timeout: exponentially weighted SRTT and
+/// RTTVAR, `RTO = SRTT + 4·RTTVAR` clamped to `[min_rto, max_rto]`,
+/// exponential backoff on timeout.  Callers enforce Karn's rule —
+/// packets that were ever retransmitted must not be sampled, since
+/// their ack cannot be attributed to a particular transmission.
+#[derive(Clone, Copy, Debug)]
+pub struct RttEstimator {
+    srtt_s: Option<f64>,
+    rttvar_s: f64,
+    rto_s: f64,
+    init_rto_s: f64,
+    min_rto_s: f64,
+    max_rto_s: f64,
+}
+
+impl RttEstimator {
+    /// `init_rto_s` is the pre-sample timeout (and the backoff cap is
+    /// 64× it); `min_rto_s` floors the computed RTO so a handful of
+    /// fast samples cannot produce a hair-trigger timer.
+    pub fn new(init_rto_s: f64, min_rto_s: f64) -> Self {
+        assert!(
+            init_rto_s.is_finite() && min_rto_s.is_finite(),
+            "non-finite RTO bounds"
+        );
+        assert!(
+            min_rto_s > 0.0 && init_rto_s >= min_rto_s,
+            "need 0 < min_rto ({min_rto_s}) <= init_rto ({init_rto_s})"
+        );
+        Self {
+            srtt_s: None,
+            rttvar_s: 0.0,
+            rto_s: init_rto_s,
+            init_rto_s,
+            min_rto_s,
+            max_rto_s: init_rto_s * 64.0,
+        }
+    }
+
+    /// Fold in one RTT sample (a never-retransmitted packet's
+    /// send→cumulative-ack time).
+    pub fn on_sample(&mut self, rtt_s: f64) {
+        assert!(rtt_s.is_finite() && rtt_s >= 0.0, "bad RTT sample {rtt_s}");
+        match self.srtt_s {
+            None => {
+                self.srtt_s = Some(rtt_s);
+                self.rttvar_s = rtt_s / 2.0;
+            }
+            Some(srtt) => {
+                self.rttvar_s = 0.75 * self.rttvar_s + 0.25 * (srtt - rtt_s).abs();
+                self.srtt_s = Some(0.875 * srtt + 0.125 * rtt_s);
+            }
+        }
+        self.rto_s =
+            (self.srtt_s.unwrap() + 4.0 * self.rttvar_s).clamp(self.min_rto_s, self.max_rto_s);
+    }
+
+    /// Exponential backoff after a retransmission timeout.
+    pub fn on_timeout(&mut self) {
+        self.rto_s = (self.rto_s * 2.0).min(self.max_rto_s);
+    }
+
+    /// Collapse any timeout backoff once the window advances again:
+    /// back to the sample-derived RTO, or the initial RTO if no sample
+    /// has ever been taken.
+    pub fn reset_backoff(&mut self) {
+        self.rto_s = match self.srtt_s {
+            Some(srtt) => (srtt + 4.0 * self.rttvar_s).clamp(self.min_rto_s, self.max_rto_s),
+            None => self.init_rto_s,
+        };
+    }
+
+    pub fn rto_s(&self) -> f64 {
+        self.rto_s
+    }
+
+    pub fn srtt_s(&self) -> Option<f64> {
+        self.srtt_s
+    }
+
+    pub fn rttvar_s(&self) -> f64 {
+        self.rttvar_s
+    }
+}
+
+/// Initial congestion window of an adaptive sender, in packets.
+pub const INIT_CWND: f64 = 8.0;
+
+/// One unacknowledged packet of an [`AdaptiveSender`].
+#[derive(Clone, Copy, Debug)]
+struct Inflight {
+    seq: u32,
+    sent_at_s: f64,
+    /// Karn's rule: once retransmitted, this packet can never yield an
+    /// RTT sample (its ack is ambiguous between transmissions).
+    retransmitted: bool,
+}
+
+/// Continuous-time reliable sender for the event-driven co-simulation
+/// (`framework::transport`): the same cumulative-ack sliding window as
+/// [`ReliableSender`], but timestamps are simulated seconds, the
+/// retransmission timeout comes from a live [`RttEstimator`], and the
+/// open window is the minimum of
+///
+/// * the AIMD congestion window `cwnd` (ack-clocked additive increase
+///   of one packet per RTT, multiplicative decrease on timeout),
+/// * the switch-advertised credit from the last [`AggAckPacket`], and
+/// * the hard [`RelWindow`] cap (the switch's dedup bitmap size).
+///
+/// [`Self::fixed`] pins `cwnd` to the full window and never samples
+/// RTT (static, conservatively initialized RTO with backoff) — the
+/// fixed-`REL_WINDOW` baseline the incast experiment compares against.
+#[derive(Clone, Debug)]
+pub struct AdaptiveSender {
+    total: u32,
+    next_new: u32,
+    cum_acked: u32,
+    credit: u32,
+    window: u32,
+    cwnd: f64,
+    adaptive: bool,
+    rtt: RttEstimator,
+    inflight: Vec<Inflight>,
+    /// First transmissions performed.
+    pub first_tx: u64,
+    /// Timeout-driven retransmissions performed.
+    pub retransmissions: u64,
+    /// Timeout events (each triggers one multiplicative decrease).
+    pub timeouts: u64,
+    cwnd_peak: f64,
+}
+
+impl AdaptiveSender {
+    /// Ack-clocked AIMD sender starting at [`INIT_CWND`].
+    pub fn adaptive(total_packets: usize, window: RelWindow, rtt: RttEstimator) -> Self {
+        Self::build(total_packets, window, rtt, true)
+    }
+
+    /// Fixed-window baseline: `cwnd` pinned to the whole window, no
+    /// RTT sampling (a fixed-window implementation must set a static
+    /// timeout above its worst-case self-queueing RTT).
+    pub fn fixed(total_packets: usize, window: RelWindow, rtt: RttEstimator) -> Self {
+        Self::build(total_packets, window, rtt, false)
+    }
+
+    fn build(total_packets: usize, window: RelWindow, rtt: RttEstimator, adaptive: bool) -> Self {
+        let w = window.get();
+        let cwnd = if adaptive {
+            INIT_CWND.min(w as f64)
+        } else {
+            w as f64
+        };
+        Self {
+            total: u32::try_from(total_packets).expect("stream exceeds the u32 seq space"),
+            next_new: 1,
+            cum_acked: 0,
+            credit: w,
+            window: w,
+            cwnd,
+            adaptive,
+            rtt,
+            inflight: Vec::new(),
+            first_tx: 0,
+            retransmissions: 0,
+            timeouts: 0,
+            cwnd_peak: cwnd,
+        }
+    }
+
+    /// Apply one cumulative ack at `now_s`.  Stale (reordered) acks
+    /// are ignored; a duplicate of the current ack still refreshes the
+    /// advertised credit.  RTT samples are taken for newly-covered,
+    /// never-retransmitted packets (Karn), and the congestion window
+    /// grows one packet per window's worth of acks (additive
+    /// increase).
+    pub fn on_ack(&mut self, cum_seq: u32, credit: u16, now_s: f64) {
+        if cum_seq < self.cum_acked {
+            return;
+        }
+        // A corrupt (or adversarial) ack cannot cover packets that
+        // were never sent — clamp to the highest opened sequence so
+        // window arithmetic can't underflow (cum_acked never exceeds
+        // it, so the clamp preserves the stale-ack ordering above).
+        let cum_seq = cum_seq.min(self.next_new.saturating_sub(1));
+        if self.adaptive {
+            for p in &self.inflight {
+                if p.seq <= cum_seq && !p.retransmitted {
+                    self.rtt.on_sample(now_s - p.sent_at_s);
+                }
+            }
+        }
+        let newly = cum_seq - self.cum_acked;
+        if newly > 0 {
+            if self.adaptive {
+                for _ in 0..newly {
+                    self.cwnd += 1.0 / self.cwnd;
+                }
+                self.cwnd = self.cwnd.min(self.window as f64);
+                self.cwnd_peak = self.cwnd_peak.max(self.cwnd);
+            }
+            self.rtt.reset_backoff();
+        }
+        self.cum_acked = cum_seq;
+        self.credit = credit as u32;
+        self.inflight.retain(|p| p.seq > cum_seq);
+    }
+
+    /// Sequence numbers to put on the wire at `now_s`, appended to
+    /// `out`: timed-out retransmissions first (stream order, with one
+    /// multiplicative decrease + RTO backoff per timeout event), then
+    /// new sequence numbers while the effective window has room.
+    pub fn poll(&mut self, now_s: f64, out: &mut Vec<u32>) {
+        let rto = self.rtt.rto_s();
+        let mut timed_out = false;
+        for p in self.inflight.iter_mut() {
+            if now_s + 1e-12 >= p.sent_at_s + rto {
+                p.sent_at_s = now_s;
+                p.retransmitted = true;
+                self.retransmissions += 1;
+                timed_out = true;
+                out.push(p.seq);
+            }
+        }
+        if timed_out {
+            self.timeouts += 1;
+            self.rtt.on_timeout();
+            if self.adaptive {
+                self.cwnd = (self.cwnd / 2.0).max(1.0);
+            }
+        }
+        loop {
+            if self.next_new > self.total {
+                break;
+            }
+            let outstanding = self.next_new - 1 - self.cum_acked;
+            // Zero-credit deadlock guard: with nothing in flight the
+            // sender may always probe with one packet (the switch
+            // re-acks with fresh credit), like a TCP window probe.
+            let credit = if self.credit == 0 && self.inflight.is_empty() {
+                1
+            } else {
+                self.credit
+            };
+            let limit = (self.cwnd as u32).max(1).min(credit).min(self.window);
+            if outstanding >= limit {
+                break;
+            }
+            out.push(self.next_new);
+            self.inflight.push(Inflight {
+                seq: self.next_new,
+                sent_at_s: now_s,
+                retransmitted: false,
+            });
+            self.first_tx += 1;
+            self.next_new += 1;
+        }
+    }
+
+    /// Earliest instant any in-flight packet will time out (under the
+    /// current RTO) — the co-simulation driver advances to this when
+    /// the network has drained but the stream is not done.
+    pub fn next_retx_deadline(&self) -> Option<f64> {
+        let rto = self.rtt.rto_s();
+        self.inflight
+            .iter()
+            .map(|p| p.sent_at_s + rto)
+            .reduce(f64::min)
+    }
+
+    /// Every packet of the stream has been cumulatively acknowledged.
+    pub fn done(&self) -> bool {
+        self.cum_acked >= self.total
+    }
+
+    pub fn cum_acked(&self) -> u32 {
+        self.cum_acked
+    }
+
+    pub fn cwnd(&self) -> f64 {
+        self.cwnd
+    }
+
+    /// Largest congestion window the stream ever reached.
+    pub fn cwnd_peak(&self) -> f64 {
+        self.cwnd_peak
+    }
+
+    pub fn rtt(&self) -> &RttEstimator {
+        &self.rtt
     }
 }
 
@@ -240,5 +578,148 @@ mod tests {
         let mut r = Reader::new(&buf);
         assert_eq!(RelHeader::decode(&mut r).unwrap(), h);
         assert!(r.is_empty());
+    }
+
+    #[test]
+    fn rel_window_default_matches_const() {
+        assert_eq!(RelWindow::default().get(), REL_WINDOW);
+        assert_eq!(RelWindow::new(4).get(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 1..=65535")]
+    fn rel_window_rejects_zero() {
+        RelWindow::new(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 1..=65535")]
+    fn rel_window_rejects_unadvertisable_sizes() {
+        // The ack credit field is u16: a window the switch could never
+        // advertise in one ack is rejected at construction.
+        RelWindow::new(1 << 16);
+    }
+
+    #[test]
+    fn sender_window_bounds_initial_credit() {
+        let w = RelWindow::new(16);
+        let mut s = ReliableSender::with_window(100, 2, w);
+        assert_eq!(s.credit(), 16);
+        let first = polled(&mut s, 0);
+        assert_eq!(first.len(), 16, "open window capped by RelWindow");
+    }
+
+    #[test]
+    fn rtt_estimator_follows_rfc6298_shape() {
+        let mut e = RttEstimator::new(1e-3, 1e-5);
+        assert_eq!(e.rto_s(), 1e-3, "pre-sample RTO is the initial RTO");
+        e.on_sample(100e-6);
+        // First sample: srtt = r, rttvar = r/2, rto = r + 4*(r/2) = 3r.
+        assert!((e.srtt_s().unwrap() - 100e-6).abs() < 1e-12);
+        assert!((e.rto_s() - 300e-6).abs() < 1e-12);
+        e.on_sample(100e-6);
+        // Identical samples shrink the variance term.
+        assert!(e.rto_s() < 300e-6);
+        let before = e.rto_s();
+        e.on_timeout();
+        assert!((e.rto_s() - 2.0 * before).abs() < 1e-12, "backoff doubles");
+        e.reset_backoff();
+        assert!((e.rto_s() - before).abs() < 1e-12, "progress collapses backoff");
+    }
+
+    #[test]
+    fn rtt_estimator_clamps_to_min_rto() {
+        let mut e = RttEstimator::new(1e-3, 50e-6);
+        for _ in 0..32 {
+            e.on_sample(1e-6);
+        }
+        assert_eq!(e.rto_s(), 50e-6, "tiny samples floor at min_rto");
+    }
+
+    fn apolled(s: &mut AdaptiveSender, now: f64) -> Vec<u32> {
+        let mut out = Vec::new();
+        s.poll(now, &mut out);
+        out
+    }
+
+    #[test]
+    fn adaptive_sender_opens_init_cwnd_then_ack_clocks() {
+        let rtt = RttEstimator::new(1e-3, 1e-5);
+        let mut s = AdaptiveSender::adaptive(100, RelWindow::default(), rtt);
+        let first = apolled(&mut s, 0.0);
+        assert_eq!(first.len(), INIT_CWND as usize);
+        // One cumulative ack for the whole burst: the window slides
+        // (a full window reopens) and cwnd grows ~1 packet per
+        // window's worth of acks.
+        s.on_ack(INIT_CWND as u32, u16::MAX, 1e-4);
+        assert!(s.cwnd() > INIT_CWND);
+        let next = apolled(&mut s, 1e-4);
+        assert_eq!(next.len(), INIT_CWND as usize);
+        assert_eq!(next[0], INIT_CWND as u32 + 1);
+        // A second window of acks pushes cwnd past the next integer:
+        // the window genuinely opens wider.
+        s.on_ack(2 * INIT_CWND as u32, u16::MAX, 2e-4);
+        let third = apolled(&mut s, 2e-4);
+        assert!(third.len() > INIT_CWND as usize, "{}", third.len());
+    }
+
+    #[test]
+    fn adaptive_sender_times_out_backs_off_and_halves_cwnd() {
+        let rtt = RttEstimator::new(100e-6, 1e-5);
+        let mut s = AdaptiveSender::adaptive(100, RelWindow::default(), rtt);
+        let first = apolled(&mut s, 0.0);
+        assert!(apolled(&mut s, 50e-6).is_empty(), "not timed out yet");
+        let retx = apolled(&mut s, 100e-6);
+        assert_eq!(retx, first, "everything unacked retransmits");
+        assert_eq!(s.timeouts, 1);
+        assert!(s.cwnd() < INIT_CWND, "multiplicative decrease");
+        assert!(s.rtt().rto_s() > 100e-6, "RTO backed off");
+    }
+
+    #[test]
+    fn karn_rule_excludes_retransmitted_samples() {
+        let rtt = RttEstimator::new(100e-6, 1e-5);
+        let mut s = AdaptiveSender::adaptive(4, RelWindow::default(), rtt);
+        apolled(&mut s, 0.0);
+        apolled(&mut s, 100e-6); // retransmits all four
+        // Ack arrives much later: had the retransmitted packets been
+        // sampled, srtt would jump to ~1s; Karn's rule forbids it.
+        s.on_ack(4, u16::MAX, 1.0);
+        assert_eq!(s.rtt().srtt_s(), None, "no sample from retransmitted packets");
+        assert!(s.done());
+    }
+
+    #[test]
+    fn fixed_sender_keeps_static_window_and_rto() {
+        let rtt = RttEstimator::new(1e-3, 1e-5);
+        let mut s = AdaptiveSender::fixed(5000, RelWindow::default(), rtt);
+        let first = apolled(&mut s, 0.0);
+        assert_eq!(first.len(), REL_WINDOW as usize, "whole window at once");
+        s.on_ack(1024, u16::MAX, 1e-4);
+        assert_eq!(s.cwnd(), REL_WINDOW as f64, "no additive increase");
+        assert_eq!(s.rtt().srtt_s(), None, "fixed mode never samples RTT");
+        assert_eq!(s.rtt().rto_s(), 1e-3);
+    }
+
+    #[test]
+    fn zero_credit_with_empty_inflight_probes_one_packet() {
+        let rtt = RttEstimator::new(1e-3, 1e-5);
+        let mut s = AdaptiveSender::adaptive(10, RelWindow::default(), rtt);
+        apolled(&mut s, 0.0);
+        s.on_ack(INIT_CWND as u32, 0, 1e-4); // all acked, zero credit
+        let probe = apolled(&mut s, 2e-4);
+        assert_eq!(probe, vec![INIT_CWND as u32 + 1], "window probe");
+        // With the probe in flight and still zero credit, no more.
+        assert!(apolled(&mut s, 3e-4).is_empty());
+    }
+
+    #[test]
+    fn next_retx_deadline_tracks_oldest_inflight() {
+        let rtt = RttEstimator::new(1e-3, 1e-5);
+        let mut s = AdaptiveSender::adaptive(2, RelWindow::default(), rtt);
+        assert_eq!(s.next_retx_deadline(), None, "nothing in flight");
+        apolled(&mut s, 5.0);
+        let d = s.next_retx_deadline().unwrap();
+        assert!((d - (5.0 + 1e-3)).abs() < 1e-12);
     }
 }

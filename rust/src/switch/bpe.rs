@@ -35,6 +35,9 @@ pub struct Bpe {
     busy_until: Cycles,
     pub fifo_writes: u64,
     pub fifo_full_events: u64,
+    /// Peak input-FIFO occupancy ever observed (capped at `fifo_cap`;
+    /// see `Fpe::fifo_peak`).
+    pub fifo_peak: u64,
     pub aggregated: u64,
     pub inserted: u64,
     pub overflowed: u64,
@@ -72,6 +75,7 @@ impl Bpe {
             busy_until: 0,
             fifo_writes: 0,
             fifo_full_events: 0,
+            fifo_peak: 0,
             aggregated: 0,
             inserted: 0,
             overflowed: 0,
@@ -223,6 +227,7 @@ impl Bpe {
             effective_arrive = effective_arrive.max(oldest);
         }
         self.fifo_writes += 1;
+        self.fifo_peak = self.fifo_peak.max((depth + 1).min(self.fifo_cap) as u64);
 
         let start = effective_arrive.max(self.busy_until);
         // Two DRAM commands per pair (bucket read + write-back); the

@@ -43,6 +43,10 @@ pub struct Fpe {
     // Table 2 counters.
     pub fifo_writes: u64,
     pub fifo_full_events: u64,
+    /// Peak input-FIFO occupancy ever observed (capped at `fifo_cap`,
+    /// mirroring `sim::Fifo::max_occupancy` — a refused push stalls
+    /// the producer, it does not grow the queue).
+    pub fifo_peak: u64,
     // Outcome counters.
     pub aggregated: u64,
     pub inserted: u64,
@@ -70,6 +74,7 @@ impl Fpe {
             busy_until: 0,
             fifo_writes: 0,
             fifo_full_events: 0,
+            fifo_peak: 0,
             aggregated: 0,
             inserted: 0,
             evicted: 0,
@@ -116,6 +121,7 @@ impl Fpe {
             effective_arrive = effective_arrive.max(oldest_done);
         }
         self.fifo_writes += 1;
+        self.fifo_peak = self.fifo_peak.max((depth + 1).min(self.fifo_cap) as u64);
 
         let start = effective_arrive.max(self.busy_until);
         self.busy_until = start + self.interval;
@@ -304,6 +310,7 @@ mod tests {
         assert_eq!(f.fifo_writes, 20);
         assert!(f.fifo_full_events > 0, "burst should overflow FIFO");
         assert!(f.full_ratio() > 0.0);
+        assert_eq!(f.fifo_peak, 4, "peak occupancy caps at fifo_cap");
     }
 
     #[test]
@@ -314,6 +321,7 @@ mod tests {
             f.offer(id * 4, Key::from_id(id, 16), 1, AggOp::Sum);
         }
         assert_eq!(f.fifo_full_events, 0);
+        assert_eq!(f.fifo_peak, 1, "paced arrivals never queue behind each other");
     }
 
     #[test]

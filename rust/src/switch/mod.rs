@@ -35,7 +35,7 @@ pub use config::{EvictionPolicy, MemoryPolicy, StageDelays, SwitchConfig};
 pub use hash_table::{HashTable, LaneProbe, Probe, VectorEvictSink};
 pub use parallel::Parallelism;
 pub use payload_analyzer::GroupMap;
-pub use reliability::{Admit, DedupStats, DedupWindow};
+pub use reliability::{backpressure_credit, Admit, CreditPolicy, DedupStats, DedupWindow};
 pub use switch_sim::{
     vector_sink_to_batch, IngestOutput, IngestSink, SwitchAggSwitch, SwitchStats, VectorSink,
 };

@@ -21,6 +21,38 @@
 //! since EoT rides the stream's last packet, that is exactly "all of
 //! this child's pairs have been admitted".
 
+use crate::protocol::RelWindow;
+
+/// How the switch fills the credit field of its acks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CreditPolicy {
+    /// Advertise the dedup window's remaining capacity (the PR 4
+    /// behavior — effectively the constant window when streams are
+    /// mostly in order).
+    #[default]
+    WindowOnly,
+    /// Congestion-aware: scale the window credit by the processing
+    /// engines' input-FIFO headroom (see [`backpressure_credit`]), so
+    /// a switch whose PE-input FIFOs are backing up tells its senders
+    /// to slow down instead of parroting the bitmap size.
+    Backpressure,
+}
+
+/// Scale a dedup-window credit by PE-input FIFO headroom: a switch
+/// with empty FIFOs advertises the full window credit, a saturated one
+/// half of it (linear in between), floored at `min(credit, 8)` so a
+/// congested switch still drains — the throttle is a pacing signal,
+/// not a stop sign (the cycle-domain FIFO model backpressures without
+/// dropping, so credit must never strangle the stream entirely).
+pub fn backpressure_credit(window_credit: u16, depth: usize, cap: usize) -> u16 {
+    if cap == 0 || window_credit == 0 {
+        return window_credit;
+    }
+    let headroom = cap.saturating_sub(depth.min(cap)) as f64 / cap as f64;
+    let scaled = (window_credit as f64 * (0.5 + 0.5 * headroom)) as u16;
+    scaled.max(window_credit.min(8))
+}
+
 /// Outcome of offering one sequence number to the window.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Admit {
@@ -60,6 +92,13 @@ pub struct DedupWindow {
 }
 
 impl DedupWindow {
+    /// The session-config constructor: the bitmap is sized from the
+    /// same validated [`RelWindow`] the sender's credit ceiling comes
+    /// from, so the two ends of a stream cannot disagree.
+    pub fn sized(window: RelWindow) -> Self {
+        Self::new(window.get())
+    }
+
     pub fn new(window: u32) -> Self {
         assert!(window >= 1);
         Self {
@@ -198,5 +237,34 @@ mod tests {
         assert_eq!(w.credit(), 4);
         assert_eq!(w.offer(4, false), Admit::New);
         assert_eq!(w.stats().out_of_window, 1);
+    }
+
+    #[test]
+    fn sized_window_matches_sender_window_by_construction() {
+        // Satellite: both ends of a stream derive from one RelWindow,
+        // so a mismatch is not constructible through the session APIs.
+        let shared = RelWindow::new(64);
+        let w = DedupWindow::sized(shared);
+        let s = crate::protocol::ReliableSender::with_window(1000, 2, shared);
+        assert_eq!(w.credit() as u32, s.credit());
+        assert_eq!(w.credit() as u32, shared.get());
+    }
+
+    #[test]
+    fn backpressure_credit_scales_with_headroom() {
+        // Empty FIFOs: full credit.  Saturated: half.  Monotone in
+        // depth, and floored so the stream always drains.
+        assert_eq!(backpressure_credit(1024, 0, 64), 1024);
+        assert_eq!(backpressure_credit(1024, 64, 64), 512);
+        assert_eq!(backpressure_credit(1024, 1000, 64), 512, "depth clamps at cap");
+        assert_eq!(backpressure_credit(1024, 32, 64), 768);
+        let a = backpressure_credit(100, 10, 64);
+        let b = backpressure_credit(100, 50, 64);
+        assert!(a >= b, "more depth, less credit ({a} vs {b})");
+        // Floors: tiny credit passes through; zero cap is a no-op.
+        assert_eq!(backpressure_credit(4, 64, 64), 4);
+        assert_eq!(backpressure_credit(0, 64, 64), 0);
+        assert_eq!(backpressure_credit(1024, 10, 0), 1024);
+        assert!(backpressure_credit(16, 64, 64) >= 8);
     }
 }

@@ -23,8 +23,8 @@
 use crate::protocol::packet::MtuChunks;
 use crate::protocol::vector::{max_vec_payload, vec_fixed_len, VectorChunks};
 use crate::protocol::{
-    AggAckPacket, AggOp, AggregationPacket, Key, KvPair, TreeConfig, TreeId, Value, VectorBatch,
-    AGG_FIXED_LEN, HEADER_OVERHEAD, REL_WINDOW,
+    AggAckPacket, AggOp, AggregationPacket, Key, KvPair, RelWindow, TreeConfig, TreeId, Value,
+    VectorBatch, AGG_FIXED_LEN, HEADER_OVERHEAD,
 };
 use crate::sim::clock::{Cycles, CLOCK_HZ};
 use crate::switch::bpe::{Bpe, BpeOutcome};
@@ -36,7 +36,7 @@ use crate::switch::hash_table::{HashTable, VectorEvictSink};
 use crate::switch::header_extract::HeaderExtract;
 use crate::switch::parallel::{merge_by_seq, run_workers, JobPair, Parallelism, WorkerGroup};
 use crate::switch::payload_analyzer::{GroupMap, PayloadAnalyzer};
-use crate::switch::reliability::{Admit, DedupStats, DedupWindow};
+use crate::switch::reliability::{backpressure_credit, Admit, CreditPolicy, DedupStats, DedupWindow};
 use crate::switch::scheduler::{SchedPolicy, Scheduler};
 use std::collections::BTreeMap;
 
@@ -64,6 +64,12 @@ pub struct SwitchStats {
     pub bpe_overflowed: u64,
     pub fifo_writes: u64,
     pub fifo_full_events: u64,
+    /// Peak PE-input FIFO occupancy across all FPEs and the BPE
+    /// (capped at `fifo_cap`) — the queue-depth signal the
+    /// congestion-aware credit advertisement and the incast experiment
+    /// read (`sim::Fifo::max_occupancy`'s counterpart on the analytic
+    /// FIFO model).
+    pub fifo_max_occupancy: u64,
     /// Times the sharded engine silently took the serial loop because
     /// an end-of-tree flush would have split the chunk stream —
     /// benchmarks must check this before attributing numbers to the
@@ -226,6 +232,9 @@ struct TreeEngine {
     bpe: Option<Bpe>,
     /// Byte-pacing accumulator for input arrivals.
     bytes_arrived: u64,
+    /// PE-input FIFO capacity (shared by every FPE and the BPE) — the
+    /// denominator of the backpressure-credit headroom.
+    fifo_cap: usize,
     /// Reused FPE-eviction scratch for the vector path (one evictee).
     evict_scratch: VectorEvictSink,
     /// Reused BPE-overflow scratch for the vector path (one pair).
@@ -274,6 +283,7 @@ impl TreeEngine {
             fpes,
             bpe,
             bytes_arrived: 0,
+            fifo_cap: cfg.fifo_cap,
             evict_scratch: VectorEvictSink::new(),
             overflow_scratch: VectorEvictSink::new(),
             stats: SwitchStats::default(),
@@ -436,7 +446,29 @@ impl TreeEngine {
         self.stats.fpe_evicted = fpe_evicted;
         self.stats.fifo_writes = fifo_writes;
         self.stats.fifo_full_events = fifo_full;
+        let mut fifo_peak: u64 = self.fpes.iter().map(|f| f.fifo_peak).max().unwrap_or(0);
+        if let Some(b) = &self.bpe {
+            fifo_peak = fifo_peak.max(b.fifo_peak);
+        }
+        self.stats.fifo_max_occupancy = fifo_peak;
         self.stats.makespan_cycles = self.arrival_cycle();
+    }
+
+    /// Instantaneous PE-input queue state as seen by the next arrival:
+    /// `(deepest FIFO, capacity)` — the backpressure signal behind
+    /// [`CreditPolicy::Backpressure`]'s credit advertisement.
+    fn input_queue(&self) -> (usize, usize) {
+        let at = self.arrival_cycle();
+        let mut depth = self
+            .fpes
+            .iter()
+            .map(|f| f.fifo_depth_at(at))
+            .max()
+            .unwrap_or(0);
+        if let Some(b) = &self.bpe {
+            depth = depth.max(b.fifo_depth_at(at));
+        }
+        (depth, self.fifo_cap)
     }
 
     /// Ingest one packet's worth of W-lane vector pairs — the columnar
@@ -702,6 +734,13 @@ pub struct SwitchAggSwitch {
     /// per `(tree, child port)` (see `switch::reliability`); created
     /// lazily on the first reliable packet of a stream.
     dedup: BTreeMap<(TreeId, u16), DedupWindow>,
+    /// Window every dedup bitmap is sized from — the same [`RelWindow`]
+    /// the session config hands its senders, so the two ends cannot
+    /// disagree.
+    rel_window: RelWindow,
+    /// How acks fill their credit field (constant window vs
+    /// FIFO-backpressure scaled).
+    credit_policy: CreditPolicy,
     /// Reused sink for the stream entry points.
     sink: IngestSink,
 }
@@ -716,8 +755,27 @@ impl SwitchAggSwitch {
             trees: BTreeMap::new(),
             lane_width: BTreeMap::new(),
             dedup: BTreeMap::new(),
+            rel_window: RelWindow::default(),
+            credit_policy: CreditPolicy::default(),
             sink: IngestSink::new(),
         }
+    }
+
+    /// Size future dedup windows from `w` (the session's shared
+    /// [`RelWindow`]).  Must precede the first reliable packet — live
+    /// bitmaps cannot be resized without corrupting their streams.
+    pub fn set_rel_window(&mut self, w: RelWindow) {
+        assert!(
+            self.dedup.is_empty() || w == self.rel_window,
+            "reliable window must be set before the first reliable packet"
+        );
+        self.rel_window = w;
+    }
+
+    /// Select how acks advertise credit (takes effect immediately;
+    /// the default [`CreditPolicy::WindowOnly`] is the PR 4 behavior).
+    pub fn set_credit_policy(&mut self, policy: CreditPolicy) {
+        self.credit_policy = policy;
     }
 
     pub fn config(&self) -> &SwitchConfig {
@@ -834,19 +892,28 @@ impl SwitchAggSwitch {
         rel: crate::protocol::RelHeader,
         eot: bool,
     ) -> (bool, bool, AggAckPacket) {
+        let window = self.rel_window;
         let w = self
             .dedup
             .entry((tree, rel.child))
-            .or_insert_with(|| DedupWindow::new(REL_WINDOW));
+            .or_insert_with(|| DedupWindow::sized(window));
         let (is_new, fire) = match w.offer(rel.seq, eot) {
             Admit::New => (true, w.take_ready_eot()),
             Admit::Duplicate | Admit::OutOfWindow => (false, false),
         };
+        let cum_seq = w.cum_seq();
+        let mut credit = w.credit();
+        if matches!(self.credit_policy, CreditPolicy::Backpressure) {
+            if let Some(e) = self.trees.get(&tree) {
+                let (depth, cap) = e.input_queue();
+                credit = backpressure_credit(credit, depth, cap);
+            }
+        }
         let ack = AggAckPacket {
             tree,
             child: rel.child,
-            cum_seq: w.cum_seq(),
-            credit: w.credit(),
+            cum_seq,
+            credit,
         };
         (is_new, fire, ack)
     }
@@ -881,6 +948,44 @@ impl SwitchAggSwitch {
             self.ingest_chunk_seq(tree, &chunks, sink);
         }
         acks
+    }
+
+    /// Single-packet reliable ingest — the per-arrival entry point for
+    /// the event-driven co-simulation (`framework::transport`), which
+    /// reacts to one `NetSim` delivery at a time: identical admission
+    /// and engine path to a one-element [`Self::ingest_reliable_batch`],
+    /// but with no per-call ack/chunk heap allocation (the chunk
+    /// sequence lives on the stack), so the delivery hot loop stays
+    /// allocation-free.
+    pub fn ingest_reliable_one(
+        &mut self,
+        tree: TreeId,
+        pkt: &AggregationPacket,
+        sink: &mut IngestSink,
+    ) -> AggAckPacket {
+        assert_eq!(pkt.tree, tree, "reliable ingest must be single-tree");
+        let rel = pkt.rel.expect("reliable ingest requires a rel header");
+        let (is_new, fire, ack) = self.admit_reliable(tree, rel, pkt.eot);
+        if is_new {
+            self.ingest_chunk_seq(tree, &[(pkt.pairs.as_slice(), fire)], sink);
+        }
+        ack
+    }
+
+    /// The W-lane counterpart of [`Self::ingest_reliable_one`].
+    pub fn ingest_vector_reliable_one(
+        &mut self,
+        tree: TreeId,
+        pkt: &crate::protocol::VectorAggregationPacket,
+        sink: &mut VectorSink,
+    ) -> AggAckPacket {
+        assert_eq!(pkt.tree, tree, "reliable ingest must be single-tree");
+        let rel = pkt.rel.expect("reliable ingest requires a rel header");
+        let (is_new, fire, ack) = self.admit_reliable(tree, rel, pkt.eot);
+        if is_new {
+            self.ingest_vector_range_for(tree, &pkt.batch, 0..pkt.batch.len(), fire, sink);
+        }
+        ack
     }
 
     /// The W-lane counterpart of [`Self::ingest_reliable_batch`]:
@@ -1496,6 +1601,34 @@ mod tests {
         let d = sw.dedup_stats(TreeId(1));
         assert_eq!(d.admitted, pkts.len() as u64);
         assert_eq!(d.dup_drops, pkts.len() as u64);
+    }
+
+    #[test]
+    fn reliable_one_matches_reliable_batch() {
+        // The per-arrival entry point must be byte-identical to a
+        // one-element batch: same acks, same outputs, same stats.
+        let streams: Vec<Vec<KvPair>> = (0..2).map(|i| pairs(1_500, 200, 60 + i)).collect();
+        let mut batch_sw = configured_switch(16 << 10, Some(256 << 10), 2);
+        let mut one_sw = configured_switch(16 << 10, Some(256 << 10), 2);
+        let mut batch_sink = IngestSink::new();
+        let mut one_sink = IngestSink::new();
+        for (c, s) in streams.iter().enumerate() {
+            let pkts = rel_packets(TreeId(1), c as u16, s);
+            for pkt in &pkts {
+                let a = batch_sw.ingest_reliable_batch(TreeId(1), &[pkt], &mut batch_sink);
+                let b = one_sw.ingest_reliable_one(TreeId(1), pkt, &mut one_sink);
+                assert_eq!(a[0], b);
+            }
+        }
+        assert_eq!(batch_sink.flushes, one_sink.flushes);
+        assert_eq!(sink_to_vec(&batch_sink), sink_to_vec(&one_sink));
+        batch_sw.finalize(TreeId(1));
+        one_sw.finalize(TreeId(1));
+        assert_eq!(
+            format!("{:?}", batch_sw.stats(TreeId(1)).unwrap()),
+            format!("{:?}", one_sw.stats(TreeId(1)).unwrap())
+        );
+        assert_eq!(batch_sw.dedup_stats(TreeId(1)), one_sw.dedup_stats(TreeId(1)));
     }
 
     #[test]

@@ -1,0 +1,452 @@
+//! Event-driven transport co-simulation — differential contracts:
+//!
+//! * **Driver equivalence** — at 0% loss the NetSim-driven session
+//!   (`framework::transport`) produces byte-identical final reducer
+//!   aggregates to the retained tick-based reference
+//!   (`framework::reliable`), scalar and W-lane vector (W ∈ {1, 8})
+//!   paths, serial and sharded engines, both credit modes.
+//! * **Exactly-once under loss** — lossy/duplicating links change the
+//!   timing, never the aggregate.
+//! * **RTT estimator** — SRTT/RTTVAR/RTO pinned against an
+//!   independent scalar oracle; Karn's rule excludes retransmitted
+//!   samples.
+//! * **Window unification** — sender credit ceiling and switch dedup
+//!   bitmap derive from one `RelWindow`, so mismatched ends are
+//!   unrepresentable.
+
+use std::collections::HashMap;
+use switchagg::framework::reliable::{
+    run_reliable_scalar, run_reliable_vector, ReliabilityConfig,
+};
+use switchagg::framework::transport::{
+    run_transport_scalar, run_transport_vector, CreditMode, TransportConfig,
+};
+use switchagg::framework::Reducer;
+use switchagg::protocol::{
+    AggOp, Key, KvPair, RelWindow, ReliableSender, RttEstimator, TreeConfig, TreeId, Value,
+    VectorBatch,
+};
+use switchagg::switch::{DedupWindow, Parallelism, SwitchAggSwitch, SwitchConfig};
+use switchagg::util::miniprop::prop;
+use switchagg::util::rng::Pcg32;
+
+fn scalar_switch(children: u16, par: Parallelism) -> SwitchAggSwitch {
+    let cfg = SwitchConfig {
+        parallelism: par,
+        ..SwitchConfig::scaled(16 << 10, Some(256 << 10))
+    };
+    let mut sw = SwitchAggSwitch::new(cfg);
+    sw.configure(&[TreeConfig {
+        tree: TreeId(1),
+        children,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    sw
+}
+
+fn vector_switch(children: u16, lanes: usize) -> SwitchAggSwitch {
+    let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(32 << 10, Some(512 << 10)));
+    sw.configure_vector(
+        &[TreeConfig {
+            tree: TreeId(1),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }],
+        lanes,
+    );
+    sw
+}
+
+fn scalar_streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0x77);
+            (0..n)
+                .map(|_| {
+                    let id = child.gen_range_u64(400);
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(200) as i64 - 100,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn vector_streams(children: usize, n: usize, lanes: usize, seed: u64) -> Vec<VectorBatch> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0x88);
+            let mut b = VectorBatch::new(lanes);
+            let mut vals: Vec<Value> = vec![0; lanes];
+            for _ in 0..n {
+                let id = child.gen_range_u64(300);
+                for (l, v) in vals.iter_mut().enumerate() {
+                    *v = (id % 11) as i64 + l as i64 - 5;
+                }
+                b.push(Key::from_id(id, 16 + (id % 49) as usize), &vals);
+            }
+            b
+        })
+        .collect()
+}
+
+fn merged(pairs: &[KvPair]) -> HashMap<Key, Value> {
+    Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
+}
+
+/// Lane-wise key → vector-sum map (order-free vector aggregate).
+fn merged_lanes(batch: &VectorBatch) -> HashMap<Key, Vec<Value>> {
+    let mut out: HashMap<Key, Vec<Value>> = HashMap::new();
+    for (k, lanes) in batch.iter() {
+        let e = out.entry(*k).or_insert_with(|| vec![0; lanes.len()]);
+        for (acc, v) in e.iter_mut().zip(lanes) {
+            *acc += v;
+        }
+    }
+    out
+}
+
+#[test]
+fn event_driver_matches_tick_reference_scalar_lossless() {
+    let ss = scalar_streams(3, 1_500, 5);
+    let mut tick_sw = scalar_switch(3, Parallelism::Serial);
+    let tick = run_reliable_scalar(
+        &mut tick_sw,
+        TreeId(1),
+        AggOp::Sum,
+        &ss,
+        &ReliabilityConfig::default(),
+    );
+    let want = merged(&tick.received);
+    for par in [Parallelism::Serial, Parallelism::Sharded(4)] {
+        for mode in [CreditMode::Adaptive, CreditMode::FixedWindow] {
+            let mut sw = scalar_switch(3, par);
+            let run = run_transport_scalar(
+                &mut sw,
+                TreeId(1),
+                AggOp::Sum,
+                &ss,
+                &TransportConfig::default().with_mode(mode),
+            );
+            assert_eq!(run.ingress.retransmissions, 0, "{par:?}/{mode:?}");
+            assert!(run.completeness.is_complete());
+            assert_eq!(
+                merged(&run.received),
+                want,
+                "event-driven aggregate diverged from the tick reference ({par:?}/{mode:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn event_driver_matches_tick_reference_vector_lossless() {
+    for lanes in [1usize, 8] {
+        let ss = vector_streams(2, 1_000, lanes, 9);
+        let mut tick_sw = vector_switch(2, lanes);
+        let tick = run_reliable_vector(
+            &mut tick_sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &ReliabilityConfig::default(),
+        );
+        let want = merged_lanes(&tick.received);
+        let mut sw = vector_switch(2, lanes);
+        let run = run_transport_vector(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &TransportConfig::default(),
+        );
+        assert_eq!(run.ingress.retransmissions, 0);
+        assert!(run.completeness.is_complete());
+        assert_eq!(
+            merged_lanes(&run.received),
+            want,
+            "W={lanes} vector aggregate diverged from the tick reference"
+        );
+    }
+}
+
+#[test]
+fn scalar_w1_vector_transport_agree() {
+    // The degenerate 1-lane vector session and the scalar session on
+    // the same logical stream land on the same aggregate.
+    let ss = scalar_streams(2, 800, 21);
+    let mut sw = scalar_switch(2, Parallelism::Serial);
+    let scalar = run_transport_scalar(
+        &mut sw,
+        TreeId(1),
+        AggOp::Sum,
+        &ss,
+        &TransportConfig::default(),
+    );
+    let vb: Vec<VectorBatch> = ss.iter().map(|s| VectorBatch::from_pairs(s)).collect();
+    let mut vsw = vector_switch(2, 1);
+    let vector = run_transport_vector(
+        &mut vsw,
+        TreeId(1),
+        AggOp::Sum,
+        &vb,
+        &TransportConfig::default(),
+    );
+    let scalar_as_lanes: HashMap<Key, Vec<Value>> = merged(&scalar.received)
+        .into_iter()
+        .map(|(k, v)| (k, vec![v]))
+        .collect();
+    assert_eq!(merged_lanes(&vector.received), scalar_as_lanes);
+}
+
+#[test]
+fn lossy_transport_is_exact_across_modes_and_engines() {
+    let ss = scalar_streams(4, 1_200, 33);
+    let mut base_sw = scalar_switch(4, Parallelism::Serial);
+    let base = run_reliable_scalar(
+        &mut base_sw,
+        TreeId(1),
+        AggOp::Sum,
+        &ss,
+        &ReliabilityConfig::default(),
+    );
+    let want = merged(&base.received);
+    for par in [Parallelism::Serial, Parallelism::Sharded(2)] {
+        for mode in [CreditMode::Adaptive, CreditMode::FixedWindow] {
+            let mut sw = scalar_switch(4, par);
+            let cfg = TransportConfig::uniform(0.05, 0xBAD).with_dup(0.03).with_mode(mode);
+            let run = run_transport_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+            assert!(run.ingress.drops > 0, "{par:?}/{mode:?}");
+            assert!(run.completeness.is_complete());
+            assert_eq!(merged(&run.received), want, "{par:?}/{mode:?}");
+        }
+    }
+}
+
+#[test]
+fn lossy_vector_transport_is_exact() {
+    let lanes = 8;
+    let ss = vector_streams(3, 600, lanes, 41);
+    let mut base_sw = vector_switch(3, lanes);
+    let base = run_transport_vector(
+        &mut base_sw,
+        TreeId(1),
+        AggOp::Sum,
+        &ss,
+        &TransportConfig::default(),
+    );
+    let mut sw = vector_switch(3, lanes);
+    let run = run_transport_vector(
+        &mut sw,
+        TreeId(1),
+        AggOp::Sum,
+        &ss,
+        &TransportConfig::uniform(0.08, 0xF00),
+    );
+    assert!(run.ingress.retransmissions > 0);
+    assert_eq!(merged_lanes(&run.received), merged_lanes(&base.received));
+}
+
+#[test]
+fn transport_is_deterministic() {
+    let go = || {
+        let ss = scalar_streams(2, 700, 13);
+        let mut sw = scalar_switch(2, Parallelism::Serial);
+        let run = run_transport_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &TransportConfig::uniform(0.05, 0xD5),
+        );
+        (
+            run.jct_s,
+            run.ingress.retransmissions,
+            run.ingress.drops,
+            run.received,
+        )
+    };
+    let a = go();
+    let b = go();
+    assert_eq!(a.0, b.0, "same seed ⇒ bit-identical JCT");
+    assert_eq!((a.1, a.2), (b.1, b.2));
+    assert_eq!(a.3, b.3);
+}
+
+// --- RTT estimator: scalar oracle + Karn exclusion ------------------
+
+#[test]
+fn prop_rtt_estimator_matches_scalar_oracle() {
+    prop("rtt estimator vs RFC 6298 oracle", 128, |rng| {
+        let init = 1e-4 + rng.gen_range_u64(1_000) as f64 * 1e-6;
+        let min_rto = init / (2 + rng.gen_range_u64(8)) as f64;
+        let mut est = RttEstimator::new(init, min_rto);
+        // Independent oracle state (straight from the RFC text).
+        let mut srtt: Option<f64> = None;
+        let mut rttvar = 0.0f64;
+        let max_rto = init * 64.0;
+        for _ in 0..rng.gen_range_u64(40) + 1 {
+            if rng.gen_bool(0.2) {
+                // Timeout: both sides double (capped).
+                let expect = (est.rto_s() * 2.0).min(max_rto);
+                est.on_timeout();
+                if (est.rto_s() - expect).abs() > 1e-15 {
+                    return Err(format!("backoff: {} vs {}", est.rto_s(), expect));
+                }
+                continue;
+            }
+            let r = rng.gen_range_u64(500_000) as f64 * 1e-9; // 0..500µs
+            est.on_sample(r);
+            match srtt {
+                None => {
+                    srtt = Some(r);
+                    rttvar = r / 2.0;
+                }
+                Some(s) => {
+                    rttvar = 0.75 * rttvar + 0.25 * (s - r).abs();
+                    srtt = Some(0.875 * s + 0.125 * r);
+                }
+            }
+            let want_rto = (srtt.unwrap() + 4.0 * rttvar).clamp(min_rto, max_rto);
+            let got_srtt = est.srtt_s().unwrap();
+            if (got_srtt - srtt.unwrap()).abs() > 1e-15
+                || (est.rttvar_s() - rttvar).abs() > 1e-15
+                || (est.rto_s() - want_rto).abs() > 1e-15
+            {
+                return Err(format!(
+                    "srtt {} vs {}, rttvar {} vs {}, rto {} vs {}",
+                    got_srtt,
+                    srtt.unwrap(),
+                    est.rttvar_s(),
+                    rttvar,
+                    est.rto_s(),
+                    want_rto
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_karn_rule_never_samples_retransmitted_packets() {
+    use switchagg::protocol::AdaptiveSender;
+    prop("karn exclusion under random ack/timeout schedules", 64, |rng| {
+        let total = (rng.gen_range_u64(40) + 5) as usize;
+        let mut s = AdaptiveSender::adaptive(
+            total,
+            RelWindow::default(),
+            RttEstimator::new(100e-6, 1e-6),
+        );
+        let mut out = Vec::new();
+        let mut now = 0.0f64;
+        let mut retransmitted_any = false;
+        for _ in 0..200 {
+            if s.done() {
+                break;
+            }
+            out.clear();
+            s.poll(now, &mut out);
+            let before = s.retransmissions;
+            // Randomly ack some prefix (sometimes stale), or let time
+            // pass beyond the RTO so everything in flight retransmits.
+            if rng.gen_bool(0.5) {
+                let cum = rng.gen_range_u64(total as u64 + 1) as u32;
+                s.on_ack(cum, u16::MAX, now);
+            } else {
+                now += s.rtt().rto_s() + 1e-6;
+                out.clear();
+                s.poll(now, &mut out);
+                if s.retransmissions > before {
+                    retransmitted_any = true;
+                }
+            }
+            now += 1e-6;
+        }
+        // The estimator may hold samples — but only from packets acked
+        // before their first retransmission.  The stress here is that
+        // nothing panics and srtt stays finite & sane.
+        if let Some(srtt) = s.rtt().srtt_s() {
+            if !(srtt.is_finite() && srtt >= 0.0) {
+                return Err(format!("bad srtt {srtt}"));
+            }
+            if srtt > 1.0 {
+                return Err(format!(
+                    "srtt {srtt} can only get that large by sampling a \
+                     retransmitted packet (retransmitted_any={retransmitted_any})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// --- Window unification ---------------------------------------------
+
+#[test]
+fn one_rel_window_constructs_both_ends() {
+    let shared = RelWindow::new(32);
+    let sender = ReliableSender::with_window(10_000, 2, shared);
+    let dedup = DedupWindow::sized(shared);
+    assert_eq!(sender.credit(), dedup.credit() as u32);
+    assert_eq!(sender.credit(), 32);
+}
+
+#[test]
+fn transport_respects_a_tiny_shared_window() {
+    let ss = scalar_streams(2, 500, 3);
+    let mut sw = scalar_switch(2, Parallelism::Serial);
+    let cfg = TransportConfig::uniform(0.03, 0x3333).with_window(RelWindow::new(4));
+    let run = run_transport_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+    assert!(run.completeness.is_complete());
+    assert_eq!(
+        sw.dedup_stats(TreeId(1)).out_of_window,
+        0,
+        "shared-window senders can never overrun the switch bitmap"
+    );
+    assert!(run.ingress.cwnd_peak <= 4.0, "cwnd capped by the window");
+}
+
+// --- Satellite guards ------------------------------------------------
+
+#[test]
+fn fifo_peak_occupancy_is_exposed_and_plausible() {
+    // A 64-child incast at line rate must queue at the PE inputs; the
+    // peak must be visible through SwitchStats and bounded by the cap.
+    let ss = scalar_streams(64, 200, 17);
+    let mut sw = scalar_switch(64, Parallelism::Serial);
+    let run = run_transport_scalar(
+        &mut sw,
+        TreeId(1),
+        AggOp::Sum,
+        &ss,
+        &TransportConfig::default(),
+    );
+    let stats = sw.stats(TreeId(1)).unwrap();
+    assert_eq!(run.fifo_peak, stats.fifo_max_occupancy);
+    assert!(stats.fifo_max_occupancy > 0, "ingest must touch the FIFOs");
+    let single = {
+        let ss1 = scalar_streams(1, 200, 17);
+        let mut sw1 = scalar_switch(1, Parallelism::Serial);
+        run_transport_scalar(
+            &mut sw1,
+            TreeId(1),
+            AggOp::Sum,
+            &ss1,
+            &TransportConfig::default(),
+        )
+        .fifo_peak
+    };
+    assert!(
+        stats.fifo_max_occupancy >= single,
+        "64-to-1 incast cannot queue less than a single stream \
+         ({} vs {single})",
+        stats.fifo_max_occupancy
+    );
+}
