@@ -1,0 +1,113 @@
+//! Chaos-driver benchmarks (EXPERIMENTS.md §Fault tolerance &
+//! failover): what the fault-injection machinery costs.  Three
+//! structural claims under test: (1) the chaos wrapper's zero-fault
+//! overhead over the plain transport driver is small — every fault
+//! hook is a cheap predicate when the plan is empty; (2) crash
+//! recovery's cost is dominated by the epoch replay (packets resent
+//! from seq 1), so its items/s tracks the extra wire packets, not the
+//! bookkeeping; (3) software failover pays the no-aggregation
+//! serialization the paper's in-network path exists to avoid.  Items =
+//! transport packets put on the wire (data first-tx + retransmissions,
+//! both hops), so items/s is comparable across cases and against
+//! `BENCH_transport.json`.  Results land in `BENCH_faults.json`
+//! (override with `SWITCHAGG_BENCH_FAULTS_JSON`).
+
+use switchagg::framework::chaos::{run_chaos_scalar, ChaosConfig};
+use switchagg::framework::transport::run_transport_scalar;
+use switchagg::net::FaultPlan;
+use switchagg::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId};
+use switchagg::switch::{SwitchAggSwitch, SwitchConfig};
+use switchagg::util::bench::{self, JsonLog};
+use switchagg::util::rng::Pcg32;
+
+fn streams(children: usize, pairs: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0xFA);
+            (0..pairs)
+                .map(|_| {
+                    let id = child.gen_range_u64((pairs as u64 / 4).max(64));
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(100) as i64 - 50,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn switch_cfg() -> SwitchConfig {
+    SwitchConfig::scaled(32 << 10, Some(8 << 20))
+}
+
+fn wire_packets(ingress: &switchagg::framework::transport::NetHopStats,
+                egress: &switchagg::framework::transport::NetHopStats) -> u64 {
+    ingress.first_tx + ingress.retransmissions + egress.first_tx + egress.retransmissions
+}
+
+fn plain_session(children: usize, pairs: usize) -> u64 {
+    let ss = streams(children, pairs, 0xFA17);
+    let mut sw = SwitchAggSwitch::new(switch_cfg());
+    sw.configure(&[TreeConfig {
+        tree: TreeId(1),
+        children: children as u16,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    let cfg = ChaosConfig::default();
+    let run = run_transport_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg.transport);
+    wire_packets(&run.ingress, &run.egress)
+}
+
+fn chaos_session(children: usize, pairs: usize, cfg: &ChaosConfig) -> u64 {
+    let ss = streams(children, pairs, 0xFA17);
+    let run = run_chaos_scalar(&switch_cfg(), AggOp::Sum, &ss, cfg).expect("chaos session");
+    wire_packets(&run.ingress, &run.egress)
+}
+
+fn main() {
+    let mut log = JsonLog::new();
+    let (children, pairs) = (8usize, 4_000usize);
+
+    bench::section("zero-fault overhead (chaos wrapper vs plain transport)");
+    log.push(&bench::run("plain transport 8x", 1, 5, move || {
+        plain_session(children, pairs)
+    }));
+    let empty = ChaosConfig::default();
+    log.push(&bench::run("chaos empty plan 8x", 1, 5, move || {
+        chaos_session(children, pairs, &empty)
+    }));
+
+    bench::section("recovery & failover cost");
+    // Crash/restart times are fractions of the fault-free JCT so the
+    // bench exercises the same job phases at any machine speed.
+    let base = {
+        let ss = streams(children, pairs, 0xFA17);
+        run_chaos_scalar(&switch_cfg(), AggOp::Sum, &ss, &ChaosConfig::default())
+            .expect("baseline")
+            .jct_s
+    };
+    let crash = ChaosConfig {
+        plan: FaultPlan::none().with_switch_crash(base * 0.3, Some(base * 0.6)),
+        ..ChaosConfig::default()
+    };
+    log.push(&bench::run("chaos crash+restart 8x", 1, 5, move || {
+        chaos_session(children, pairs, &crash)
+    }));
+    let dead = ChaosConfig {
+        plan: FaultPlan::none().with_switch_crash(base * 0.3, None),
+        max_retries: Some(6),
+        ..ChaosConfig::default()
+    };
+    log.push(&bench::run("chaos dead-switch failover 8x", 1, 5, move || {
+        chaos_session(children, pairs, &dead)
+    }));
+
+    let path = std::env::var("SWITCHAGG_BENCH_FAULTS_JSON")
+        .unwrap_or_else(|_| "BENCH_faults.json".to_string());
+    if let Err(e) = log.write(&path) {
+        eprintln!("could not write bench log {path}: {e}");
+    }
+}

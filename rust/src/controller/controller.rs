@@ -31,6 +31,9 @@ enum TreeState {
     Configuring(BTreeSet<NodeId>),
     /// All switches acked; master notified.
     Running,
+    /// The aggregation switch was declared dead ([`Controller::fail_over`]):
+    /// children bypass it and merge in software at the reducer.
+    Degraded,
 }
 
 /// The logical controller (may live on a server or a middlebox, §3).
@@ -38,6 +41,20 @@ pub struct Controller {
     topo: Topology,
     next_tree: u32,
     trees: BTreeMap<TreeId, (AggTree, TreeState)>,
+    /// Per-tree job epoch (incarnation number); absent = 0.  Bumped on
+    /// switch restart and membership re-plans so the data plane can
+    /// fence stale traffic.
+    epochs: BTreeMap<TreeId, u16>,
+    /// Per-tree declared membership override (child count after a
+    /// quorum re-plan); absent = the launched membership.  Only
+    /// meaningful for single-switch trees — a multi-switch re-plan
+    /// would need per-switch membership, which this prototype does not
+    /// model.
+    membership: BTreeMap<TreeId, u16>,
+    /// Per-tree time of the last liveness evidence from the
+    /// aggregation path (switch acks observed by the hosts and relayed
+    /// up; seeded at launch time).
+    last_heartbeat_s: BTreeMap<TreeId, f64>,
 }
 
 impl Controller {
@@ -46,6 +63,9 @@ impl Controller {
             topo,
             next_tree: 1,
             trees: BTreeMap::new(),
+            epochs: BTreeMap::new(),
+            membership: BTreeMap::new(),
+            last_heartbeat_s: BTreeMap::new(),
         }
     }
 
@@ -81,6 +101,7 @@ impl Controller {
         let pending: BTreeSet<NodeId> = agg_tree.switch_cfgs.keys().copied().collect();
         self.trees
             .insert(tree, (agg_tree, TreeState::Configuring(pending)));
+        self.last_heartbeat_s.insert(tree, 0.0);
         Ok(LaunchOutcome { tree, configures })
     }
 
@@ -104,6 +125,7 @@ impl Controller {
                 }
             }
             TreeState::Running => bail!("tree {tree} already running"),
+            TreeState::Degraded => bail!("tree {tree} is degraded (switch declared dead)"),
         }
     }
 
@@ -160,8 +182,111 @@ impl Controller {
         matches!(self.trees.get(&tree), Some((_, TreeState::Running)))
     }
 
+    /// True once [`Self::fail_over`] declared the tree's switch dead.
+    pub fn is_degraded(&self, tree: TreeId) -> bool {
+        matches!(self.trees.get(&tree), Some((_, TreeState::Degraded)))
+    }
+
     pub fn teardown(&mut self, tree: TreeId) -> bool {
+        self.epochs.remove(&tree);
+        self.membership.remove(&tree);
+        self.last_heartbeat_s.remove(&tree);
         self.trees.remove(&tree).is_some()
+    }
+
+    // ---- fault tolerance: epochs, liveness, failover (PR 6) ----
+
+    /// The tree's current epoch (0 until a fault bumps it).
+    pub fn epoch(&self, tree: TreeId) -> u16 {
+        self.epochs.get(&tree).copied().unwrap_or(0)
+    }
+
+    /// Advance the tree's epoch (switch restart detected): every
+    /// reliable stream of the tree must rebase and replay; the old
+    /// incarnation's traffic is fenced by the data plane.
+    pub fn bump_epoch(&mut self, tree: TreeId) -> Result<u16> {
+        if !self.trees.contains_key(&tree) {
+            bail!("epoch bump for unknown tree {tree}");
+        }
+        let e = self.epoch(tree);
+        let next = e
+            .checked_add(1)
+            .ok_or_else(|| anyhow::anyhow!("epoch space exhausted for {tree}"))?;
+        self.epochs.insert(tree, next);
+        Ok(next)
+    }
+
+    /// Note liveness evidence for the tree's aggregation path at
+    /// `now_s` (hosts relay the fact that switch acks are arriving).
+    pub fn record_heartbeat(&mut self, tree: TreeId, now_s: f64) {
+        let t = self.last_heartbeat_s.entry(tree).or_insert(0.0);
+        *t = t.max(now_s);
+    }
+
+    /// Ack-timeout failure detector: no liveness evidence for at least
+    /// `timeout_s` as of `now_s`.
+    pub fn failure_detected(&self, tree: TreeId, now_s: f64, timeout_s: f64) -> bool {
+        match self.last_heartbeat_s.get(&tree) {
+            Some(&last) => now_s - last >= timeout_s,
+            None => false,
+        }
+    }
+
+    /// Declare the tree's aggregation switch dead: the tree degrades to
+    /// direct-to-reducer software aggregation and the epoch advances so
+    /// any late traffic of the in-network incarnation is fenced.
+    /// Returns the new epoch.
+    pub fn fail_over(&mut self, tree: TreeId) -> Result<u16> {
+        match self.trees.get_mut(&tree) {
+            None => bail!("failover for unknown tree {tree}"),
+            Some((_, TreeState::Configuring(_))) => {
+                bail!("tree {tree} never finished configuring; abort and re-launch instead")
+            }
+            Some((_, state)) => *state = TreeState::Degraded,
+        }
+        self.bump_epoch(tree)
+    }
+
+    /// Re-plan the tree's declared membership to `members` children (a
+    /// `k-of-n` quorum excluded stragglers, or a mapper died): bumps
+    /// the epoch and returns it with the fresh Configure packets —
+    /// surviving senders rebase and replay, and the switch's engines
+    /// flush after exactly `members` EoTs.
+    pub fn replan_membership(
+        &mut self,
+        tree: TreeId,
+        members: u16,
+    ) -> Result<(u16, Vec<(NodeId, ConfigurePacket)>)> {
+        if members == 0 {
+            bail!("cannot re-plan {tree} to zero members");
+        }
+        if !self.is_running(tree) {
+            bail!("membership re-plan requires a running tree, {tree} is not");
+        }
+        self.membership.insert(tree, members);
+        let epoch = self.bump_epoch(tree)?;
+        Ok((epoch, self.reconfigures(tree)))
+    }
+
+    /// Regenerate every switch's Configure for the tree under the
+    /// current declared membership — what the controller re-pushes to
+    /// a restarted (state-less) switch before fencing the new epoch.
+    pub fn reconfigures(&self, tree: TreeId) -> Vec<(NodeId, ConfigurePacket)> {
+        let Some((agg_tree, _)) = self.trees.get(&tree) else {
+            return Vec::new();
+        };
+        let members = self.membership.get(&tree).copied();
+        agg_tree
+            .switch_cfgs
+            .iter()
+            .map(|(&sw, cfg)| {
+                let mut cfg = cfg.clone();
+                if let Some(m) = members {
+                    cfg.children = m;
+                }
+                (sw, ConfigurePacket { trees: vec![cfg] })
+            })
+            .collect()
     }
 }
 
@@ -302,6 +427,59 @@ mod tests {
         }
         assert!(c.is_running(out2.tree));
         assert!(!c.abort(out2.tree));
+    }
+
+    #[test]
+    fn epoch_bumps_on_restart_and_failover() {
+        let (mut c, out, _) = launch_on_star();
+        let (sw, _) = out.configures[0].clone();
+        c.switch_ack(out.tree, sw).unwrap();
+        assert_eq!(c.epoch(out.tree), 0);
+        // Switch restarted: bump + re-push the same configuration.
+        assert_eq!(c.bump_epoch(out.tree).unwrap(), 1);
+        let re = c.reconfigures(out.tree);
+        assert_eq!(re.len(), 1);
+        assert_eq!(re[0].1.trees[0].children, 3, "membership unchanged");
+        // Unrecovered failure: degrade and fence once more.
+        assert_eq!(c.fail_over(out.tree).unwrap(), 2);
+        assert!(c.is_degraded(out.tree));
+        assert!(!c.is_running(out.tree));
+        assert!(c.switch_ack(out.tree, sw).is_err(), "degraded rejects acks");
+        assert!(c.bump_epoch(TreeId(99)).is_err());
+    }
+
+    #[test]
+    fn heartbeat_timeout_detects_failure() {
+        let (mut c, out, _) = launch_on_star();
+        let (sw, _) = out.configures[0].clone();
+        c.switch_ack(out.tree, sw).unwrap();
+        c.record_heartbeat(out.tree, 1.0);
+        c.record_heartbeat(out.tree, 0.5); // late relay: must not regress
+        assert!(!c.failure_detected(out.tree, 1.5, 1.0));
+        assert!(c.failure_detected(out.tree, 2.0, 1.0));
+        assert!(
+            !c.failure_detected(TreeId(99), 1e9, 1.0),
+            "unknown tree: nothing to detect"
+        );
+    }
+
+    #[test]
+    fn membership_replan_shrinks_declared_children() {
+        let (mut c, out, _) = launch_on_star();
+        let (sw, _) = out.configures[0].clone();
+        assert!(
+            c.replan_membership(out.tree, 2).is_err(),
+            "re-plan requires a running tree"
+        );
+        c.switch_ack(out.tree, sw).unwrap();
+        let (epoch, confs) = c.replan_membership(out.tree, 2).unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(confs.len(), 1);
+        assert_eq!(confs[0].1.trees[0].children, 2, "quorum excluded one child");
+        assert!(c.replan_membership(out.tree, 0).is_err());
+        // Teardown forgets fault state too.
+        assert!(c.teardown(out.tree));
+        assert_eq!(c.epoch(out.tree), 0);
     }
 
     #[test]

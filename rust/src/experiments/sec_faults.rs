@@ -1,0 +1,423 @@
+//! Fault-tolerance & failover harness (`switchagg exp faults`): the
+//! chaos co-simulation (`framework::chaos`) swept over crash timing ×
+//! fan-in × straggler shape, measuring what each fault costs (JCT
+//! inflation, retransmit overhead, fault drops, replay amplification)
+//! and what recovery preserves (in-network reduction, exactness).
+//!
+//! Every cell asserts its own exactness oracle: the final aggregate,
+//! software-merged, must equal the software merge of the **declared
+//! membership's** raw streams — the full launch set for recoverable
+//! faults under [`EotQuorum::All`], the post-re-plan member set for
+//! `K-of-N` quorum drops, the survivor set for failover.  A recovered
+//! crash must additionally reproduce the fault-free run's aggregate
+//! byte-for-byte (epoch fencing means recovery is not "approximately
+//! right", it is the same job).
+//!
+//! Scenario legend (crash/restart/deadline times are fractions of the
+//! fan-in's fault-free JCT, so every scale exercises the same phases):
+//!
+//! * `none`            — fault-free oracle; also fixes each fan-in's
+//!                       baseline JCT.
+//! * `crash@.2→.5`,
+//!   `crash@.5→.8`     — switch crash early/late in the job, restart,
+//!                       epoch-fenced replay (tentpole acceptance).
+//! * `crash@.3 dead`   — unrecovered switch death: retry budget runs
+//!                       out, heartbeat timeout confirms, job fails
+//!                       over to direct-to-reducer software merge.
+//! * `straggle ×4 all` — one 4× straggler, All-quorum: job waits,
+//!                       exact over everyone.
+//! * `straggle ×4 k/n` — same straggler under `K-of-N` with a 1.5×
+//!                       deadline: laggard is re-planned out, exact
+//!                       over the declared members.
+//! * `straggle ½×2 all`— half the children 2× slow (coarse straggler
+//!                       *fraction* axis).
+//! * `mapper† k/n`     — a mapper dies mid-stream; `K-of-N` fences its
+//!                       partial stream out at the deadline.
+//! * `combo`           — link outage + 2× straggler + crash/restart in
+//!                       one run: recovery mechanisms compose.
+
+use crate::experiments::common::{parallelism, pct, print_table, Parallelism, Scale};
+use crate::framework::chaos::{
+    run_chaos_scalar, ChaosConfig, ChaosScalarReport, EotQuorum,
+};
+use crate::framework::Reducer;
+use crate::net::FaultPlan;
+use crate::protocol::{AggOp, Key, KvPair, Value};
+use crate::switch::SwitchConfig;
+use crate::util::par::par_map;
+use crate::util::rng::Pcg32;
+use std::collections::HashMap;
+
+/// One chaos cell: a (scenario, fan-in) point.
+#[derive(Clone, Debug)]
+pub struct FaultsRow {
+    pub scenario: &'static str,
+    pub fan_in: usize,
+    pub jct_ms: f64,
+    /// JCT inflation over the fan-in's fault-free baseline.
+    pub jct_x: f64,
+    /// Ingress retransmissions per first transmission.
+    pub retx: f64,
+    /// Packets discarded by injected faults (≠ channel loss).
+    pub faulted_drops: u64,
+    /// Stale-epoch packets fenced at switch admission.
+    pub stale_drops: u64,
+    /// Packets resent from seq 1 by epoch rebases.
+    pub replayed: u64,
+    pub restarts: u32,
+    pub final_epoch: u16,
+    /// Children aggregated in-network / merged in software / excluded.
+    pub in_network: usize,
+    pub software: usize,
+    pub excluded: usize,
+    /// Pair-count reduction the reducer still enjoyed:
+    /// `1 − received/declared-input` (0 when failover ships raw
+    /// streams).
+    pub reduction: f64,
+    /// Aggregate equals the software merge of the declared members'
+    /// raw streams.
+    pub exact: bool,
+}
+
+fn workload(fan_in: usize, pairs_per_child: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let variety = (pairs_per_child as u64 / 4).max(64);
+    let mut rng = Pcg32::new(seed);
+    (0..fan_in)
+        .map(|_| {
+            let mut child = rng.fork(0xFA17);
+            (0..pairs_per_child)
+                .map(|_| {
+                    let id = child.gen_range_u64(variety);
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(100) as i64 - 50,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn switch_cfg(scale: Scale) -> SwitchConfig {
+    SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(8 << 30)))
+}
+
+fn pairs_per_child(scale: Scale) -> usize {
+    (scale.bytes(16 << 20) / 25).max(128) as usize
+}
+
+fn final_map(pairs: &[KvPair]) -> HashMap<Key, Value> {
+    Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
+}
+
+fn member_map(streams: &[Vec<KvPair>], members: &[u16]) -> HashMap<Key, Value> {
+    let subset: Vec<Vec<KvPair>> = members.iter().map(|&c| streams[c as usize].clone()).collect();
+    Reducer::merge_software(&subset, AggOp::Sum).table
+}
+
+const SWEEP_SEED: u64 = 0xFA17;
+const SWEEP_FAN_IN: [usize; 3] = [4, 8, 16];
+
+const SCENARIOS: [&str; 9] = [
+    "none",
+    "crash@.2\u{2192}.5",
+    "crash@.5\u{2192}.8",
+    "crash@.3 dead",
+    "straggle \u{d7}4 all",
+    "straggle \u{d7}4 k/n",
+    "straggle \u{bd}\u{d7}2 all",
+    "mapper\u{2020} k/n",
+    "combo",
+];
+
+/// Build a scenario's chaos config from the fan-in's fault-free JCT.
+fn scenario_cfg(scenario: &str, fan_in: usize, base_jct: f64) -> ChaosConfig {
+    let kofn = EotQuorum::KofN(fan_in as u16 - 1);
+    let j = base_jct;
+    match scenario {
+        "none" => ChaosConfig::default(),
+        "crash@.2\u{2192}.5" => ChaosConfig {
+            plan: FaultPlan::none().with_switch_crash(0.2 * j, Some(0.5 * j)),
+            ..ChaosConfig::default()
+        },
+        "crash@.5\u{2192}.8" => ChaosConfig {
+            plan: FaultPlan::none().with_switch_crash(0.5 * j, Some(0.8 * j)),
+            ..ChaosConfig::default()
+        },
+        "crash@.3 dead" => ChaosConfig {
+            plan: FaultPlan::none().with_switch_crash(0.3 * j, None),
+            max_retries: Some(6),
+            ..ChaosConfig::default()
+        },
+        "straggle \u{d7}4 all" => ChaosConfig {
+            plan: FaultPlan::none().with_straggler(0, 4.0),
+            ..ChaosConfig::default()
+        },
+        "straggle \u{d7}4 k/n" => ChaosConfig {
+            plan: FaultPlan::none().with_straggler(0, 4.0),
+            quorum: kofn,
+            quorum_deadline_s: Some(1.5 * j),
+            ..ChaosConfig::default()
+        },
+        "straggle \u{bd}\u{d7}2 all" => {
+            let mut plan = FaultPlan::none();
+            for c in 0..(fan_in as u16) / 2 {
+                plan = plan.with_straggler(c, 2.0);
+            }
+            ChaosConfig {
+                plan,
+                ..ChaosConfig::default()
+            }
+        }
+        "mapper\u{2020} k/n" => ChaosConfig {
+            plan: FaultPlan::none().with_mapper_crash(1, 0.25 * j),
+            quorum: kofn,
+            quorum_deadline_s: Some(2.0 * j),
+            ..ChaosConfig::default()
+        },
+        "combo" => ChaosConfig {
+            plan: FaultPlan::none()
+                .with_switch_crash(0.35 * j, Some(0.7 * j))
+                .with_link_down(1, 0.1 * j, 0.3 * j)
+                .with_straggler(0, 2.0),
+            ..ChaosConfig::default()
+        },
+        other => panic!("unknown scenario {other}"),
+    }
+}
+
+fn run_cell(
+    scenario: &'static str,
+    fan_in: usize,
+    scale: Scale,
+    base_jct: f64,
+    oracle: &HashMap<Key, Value>,
+) -> FaultsRow {
+    let streams = workload(fan_in, pairs_per_child(scale), SWEEP_SEED);
+    let cfg = scenario_cfg(scenario, fan_in, base_jct);
+    let run: ChaosScalarReport = run_chaos_scalar(&switch_cfg(scale), AggOp::Sum, &streams, &cfg)
+        .unwrap_or_else(|e| panic!("scenario '{scenario}' fan-in {fan_in}: {e}"));
+
+    // Exactness over the declared membership: full set for All-quorum
+    // recoveries (where it must also equal the fault-free oracle),
+    // the re-planned/survivor set otherwise.
+    let mut declared: Vec<u16> = run
+        .in_network
+        .iter()
+        .chain(run.software.iter())
+        .copied()
+        .collect();
+    declared.sort_unstable();
+    let expected = if declared.len() == fan_in {
+        oracle.clone()
+    } else {
+        member_map(&streams, &declared)
+    };
+    let got = final_map(&run.received);
+    let exact = got == expected;
+    assert!(
+        exact,
+        "scenario '{scenario}' fan-in {fan_in}: aggregate diverged from declared membership"
+    );
+
+    let declared_pairs: u64 = declared
+        .iter()
+        .map(|&c| streams[c as usize].len() as u64)
+        .sum();
+    let reduction = if declared_pairs > 0 {
+        1.0 - run.completeness.received_pairs as f64 / declared_pairs as f64
+    } else {
+        0.0
+    };
+
+    FaultsRow {
+        scenario,
+        fan_in,
+        jct_ms: run.jct_s * 1e3,
+        jct_x: if base_jct > 0.0 { run.jct_s / base_jct } else { 1.0 },
+        retx: run.ingress.retx_overhead(),
+        faulted_drops: run.faulted_drops,
+        stale_drops: run.dedup.stale_epoch_drops,
+        replayed: run.replayed_packets,
+        restarts: run.restarts,
+        final_epoch: run.final_epoch,
+        in_network: run.in_network.len(),
+        software: run.software.len(),
+        excluded: run.excluded.len(),
+        reduction,
+        exact,
+    }
+}
+
+/// Fault-free baseline for one fan-in: the exactness oracle and the
+/// JCT every scenario's schedule and inflation are relative to.
+fn baseline(fan_in: usize, scale: Scale) -> (f64, HashMap<Key, Value>) {
+    let streams = workload(fan_in, pairs_per_child(scale), SWEEP_SEED);
+    let run = run_chaos_scalar(
+        &switch_cfg(scale),
+        AggOp::Sum,
+        &streams,
+        &ChaosConfig::default(),
+    )
+    .expect("fault-free baseline");
+    (run.jct_s, final_map(&run.received))
+}
+
+pub fn rows(scale: Scale) -> Vec<FaultsRow> {
+    rows_with(scale, parallelism())
+}
+
+pub fn rows_with(scale: Scale, par: Parallelism) -> Vec<FaultsRow> {
+    let baselines: Vec<(usize, (f64, HashMap<Key, Value>))> =
+        par_map(par, SWEEP_FAN_IN.to_vec(), move |f| (f, baseline(f, scale)));
+    let mut cases: Vec<(&'static str, usize)> = Vec::new();
+    for &scenario in &SCENARIOS {
+        for &fan_in in &SWEEP_FAN_IN {
+            cases.push((scenario, fan_in));
+        }
+    }
+    let baselines = &baselines;
+    par_map(par, cases, move |(scenario, fan_in)| {
+        let (jct, oracle) = &baselines
+            .iter()
+            .find(|(f, _)| *f == fan_in)
+            .expect("baseline for every sweep fan-in")
+            .1;
+        run_cell(scenario, fan_in, scale, *jct, oracle)
+    })
+}
+
+pub fn run(scale: Scale) {
+    let rows = rows(scale);
+    print_table(
+        "Fault tolerance & failover — chaos co-simulation with epoch-fenced recovery",
+        &[
+            "scenario",
+            "fan-in",
+            "JCT",
+            "JCTx",
+            "retx",
+            "faulted",
+            "stale",
+            "replayed",
+            "restarts",
+            "epoch",
+            "in-net",
+            "sw",
+            "excl",
+            "reduction",
+            "exact",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.scenario.to_string(),
+                    r.fan_in.to_string(),
+                    format!("{:.3} ms", r.jct_ms),
+                    format!("{:.2}x", r.jct_x),
+                    pct(r.retx),
+                    r.faulted_drops.to_string(),
+                    r.stale_drops.to_string(),
+                    r.replayed.to_string(),
+                    r.restarts.to_string(),
+                    r.final_epoch.to_string(),
+                    r.in_network.to_string(),
+                    r.software.to_string(),
+                    r.excluded.to_string(),
+                    pct(r.reduction),
+                    if r.exact { "yes" } else { "NO" }.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    assert!(
+        rows.iter().all(|r| r.exact),
+        "exactness violated — a chaos cell diverged from its declared membership"
+    );
+    // Acceptance pins: every recoverable crash restarts exactly once
+    // and keeps full in-network membership; every dead-switch cell
+    // completes in software with zero in-network children.
+    for r in rows.iter().filter(|r| r.scenario.starts_with("crash@.2") || r.scenario.starts_with("crash@.5")) {
+        assert_eq!(r.restarts, 1, "{}/{}", r.scenario, r.fan_in);
+        assert_eq!(r.in_network, r.fan_in, "{}/{}", r.scenario, r.fan_in);
+        assert!(r.faulted_drops > 0, "{}/{} outage never bit", r.scenario, r.fan_in);
+    }
+    for r in rows.iter().filter(|r| r.scenario == "crash@.3 dead") {
+        assert_eq!(r.in_network, 0, "{}/{}", r.scenario, r.fan_in);
+        assert_eq!(r.software, r.fan_in, "{}/{}", r.scenario, r.fan_in);
+        assert_eq!(r.reduction, 0.0, "failover ships raw streams");
+    }
+    for r in rows.iter().filter(|r| r.scenario.ends_with("k/n")) {
+        assert_eq!(r.excluded, 1, "{}/{}", r.scenario, r.fan_in);
+        assert_eq!(r.in_network, r.fan_in - 1, "{}/{}", r.scenario, r.fan_in);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::switch::Parallelism as Par;
+
+    fn smoke_scale() -> Scale {
+        Scale::new(65_536)
+    }
+
+    /// Tiny-scale smoke of the recoverable-crash cell: one restart,
+    /// full membership, exact.
+    #[test]
+    fn crash_restart_cell_recovers_exactly() {
+        let scale = smoke_scale();
+        let (jct, oracle) = baseline(4, scale);
+        let row = run_cell("crash@.2\u{2192}.5", 4, scale, jct, &oracle);
+        assert!(row.exact, "{row:?}");
+        assert_eq!(row.restarts, 1);
+        assert_eq!(row.final_epoch, 1);
+        assert!(row.faulted_drops > 0, "{row:?}");
+        assert!(row.replayed > 0, "{row:?}");
+        assert!(row.jct_x > 1.0, "{row:?}");
+    }
+
+    /// Dead switch → software failover: exact totals, zero reduction.
+    #[test]
+    fn dead_switch_cell_fails_over() {
+        let scale = smoke_scale();
+        let (jct, oracle) = baseline(4, scale);
+        let row = run_cell("crash@.3 dead", 4, scale, jct, &oracle);
+        assert!(row.exact, "{row:?}");
+        assert_eq!(row.in_network, 0);
+        assert_eq!(row.software, 4);
+        assert_eq!(row.reduction, 0.0);
+    }
+
+    /// K-of-N quorum drops the dead mapper and stays exact over the
+    /// declared membership.
+    #[test]
+    fn mapper_death_cell_replans_membership() {
+        let scale = smoke_scale();
+        let (jct, oracle) = baseline(4, scale);
+        let row = run_cell("mapper\u{2020} k/n", 4, scale, jct, &oracle);
+        assert!(row.exact, "{row:?}");
+        assert_eq!(row.excluded, 1);
+        assert_eq!(row.in_network, 3);
+    }
+
+    /// Cell results are deterministic under harness-level concurrency:
+    /// running the sweep serially and fanned over worker threads gives
+    /// identical rows (engine invariance itself is pinned in
+    /// `framework::chaos` and `tests/faults.rs`).
+    #[test]
+    fn faulted_cells_are_deterministic_under_harness_parallelism() {
+        let scale = smoke_scale();
+        let a = rows_with(scale, Par::Serial);
+        let b = rows_with(scale, Par::Sharded(2));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.scenario, y.scenario);
+            assert_eq!(x.jct_ms, y.jct_ms, "{}/{}", x.scenario, x.fan_in);
+            assert_eq!(x.faulted_drops, y.faulted_drops);
+            assert_eq!(x.stale_drops, y.stale_drops);
+            assert!(x.exact && y.exact);
+        }
+    }
+}

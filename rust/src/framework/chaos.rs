@@ -1,0 +1,1344 @@
+//! Fault-tolerant aggregation sessions: the event-driven transport
+//! co-simulation of `framework::transport` driven under an injected
+//! [`FaultPlan`], with epoch fencing, exactly-once recovery, and
+//! graceful degradation to software aggregation.
+//!
+//! The failure domains (matching §6's discussion of switch soft
+//! state being rebuildable from the network edge):
+//!
+//! * **Switch crash** — the aggregation *engine* dies, losing every
+//!   FPE/BPE resident, dedup window, and tree config.  While down,
+//!   aggregation packets and the acks they would earn are discarded at
+//!   the hub (noted as `faulted_drops` on the link, distinct from
+//!   channel loss).  The L2 forwarding fabric of the device is modeled
+//!   as surviving: a switch that also bricks its forwarding plane
+//!   partitions the whole rack, which is indistinguishable from every
+//!   host failing at once and out of scope for in-network recovery.
+//! * **Restart + epoch fencing** — on the scheduled restart the
+//!   controller re-pushes the tree's `Configure` (under the current
+//!   declared membership), bumps the job **epoch**, and the switch
+//!   fences the new incarnation with [`SwitchAggSwitch::begin_epoch`]:
+//!   every in-flight packet stamped with the old epoch is dropped at
+//!   admission — *before* any dedup window — and re-acked under the new
+//!   epoch so the sender's cumulative-ack state cannot be poisoned by a
+//!   stale incarnation.  Senders [`AdaptiveSender::rebase`] onto the
+//!   new epoch and replay their whole stream (the crash forgot even the
+//!   acked prefix); dedup de-duplicates inside the epoch, the fence
+//!   de-duplicates across epochs, so the final aggregate is
+//!   byte-identical to the fault-free run.
+//! * **Graceful degradation** — if the switch dies for good, senders
+//!   exhaust their retry budget ([`TransportError::PeerUnresponsive`]),
+//!   the controller's heartbeat check ([`Controller::failure_detected`],
+//!   fed by data-plane acks) confirms silence, and
+//!   [`Controller::fail_over`] re-plans the job: surviving mappers
+//!   bypass the switch and stream directly to the reducer, which merges
+//!   in software.  The job completes — slower, with zero in-network
+//!   reduction — instead of hanging.
+//! * **EoT quorum** — the switch's end-of-tree flush waits for one EoT
+//!   per configured child, so a dead or straggling mapper stalls the
+//!   job.  [`EotQuorum::All`] (the oracle policy) waits forever and
+//!   turns an impossible wait into a typed
+//!   [`ChaosError::QuorumUnreachable`]; [`EotQuorum::KofN`] gives the
+//!   laggards until `quorum_deadline_s`, then re-plans membership to
+//!   the finished children (an epoch restart with `children = k`), so
+//!   the aggregate is exact over the *declared* membership.
+//!
+//! **Zero-fault transparency.**  The chaos ingress loop is a faithful
+//! mirror of `drive_hop` — same initial polls, same ack-id tagging,
+//! same drained-network deadline jump, same stats accounting — whose
+//! fault hooks are provably inert on an empty plan: `tests/faults.rs`
+//! pins `FaultPlan::none()` byte-identical (aggregate *and* per-hop
+//! stats) to `run_transport_scalar`/`run_transport_vector`.
+//!
+//! Wire realism note: the epoch rides in [`RelHeader`] on the wire; the
+//! co-simulation additionally folds it into the `NetSim` tag (bits
+//! 48..56, zero in fault-free runs, so fault-free tags are bit-equal to
+//! the transport driver's) because retransmitted packets share one
+//! packetized buffer — a delivery must be admitted under the epoch it
+//! was *sent* in, not the epoch the buffer was later restamped to.
+//!
+//! Model simplifications, stated so the experiments don't over-claim:
+//! the egress (switch → reducer) hop and the failover hop run after the
+//! ingress drama on the shared clock and are not themselves
+//! fault-injected, and a failed-over job replays survivor streams from
+//! the mappers' buffers (SwitchAgg mappers retain their send buffers
+//! until end-of-job, so this costs no extra state).
+
+use crate::controller::Controller;
+use crate::framework::reducer::{Completeness, Reducer};
+use crate::framework::reliable::{stamp, Endpoint};
+use crate::framework::transport::{
+    apply_session_policy, drive_hop, session_net, tag, tag_child, tag_idx, tag_kind, NetHopStats,
+    TransportConfig, ACK_WIRE_LEN, KIND_EGRESS_ACK, KIND_EGRESS_DATA, KIND_INGRESS_ACK,
+    KIND_INGRESS_DATA,
+};
+use crate::net::faults::FaultPlan;
+use crate::net::netsim::NetSim;
+use crate::net::topology::{NodeId, Topology};
+use crate::protocol::{
+    AdaptiveSender, AggAckPacket, AggOp, AggregationPacket, ConfigurePacket, KvPair, LaunchPacket,
+    TransportError, TreeId, VectorAggregationPacket, VectorBatch, VectorChunks,
+};
+use crate::switch::reliability::Admit;
+use crate::switch::{DedupStats, IngestSink, SwitchAggSwitch, SwitchConfig, VectorSink};
+
+/// Failover-hop packet kinds (mapper → reducer direct), disjoint from
+/// the ingress/egress kinds so stale in-flight session traffic is
+/// ignored by the failover `drive_hop`.
+pub(crate) const KIND_FAILOVER_DATA: u64 = 5;
+pub(crate) const KIND_FAILOVER_ACK: u64 = 6;
+
+/// A session tag carrying the sending epoch in bits 48..56 (the layout
+/// of `transport::tag` leaves them zero, so epoch-0 tags are bit-equal
+/// to the fault-free driver's).
+fn ctag(kind: u64, child: u16, idx: u32, epoch: u16) -> u64 {
+    debug_assert!(epoch < 256, "chaos tags encode the epoch in 8 bits");
+    tag(kind, child, idx) | ((epoch as u64) << 48)
+}
+
+fn ctag_epoch(t: u64) -> u16 {
+    ((t >> 48) & 0xFF) as u16
+}
+
+/// End-of-tree quorum policy: who must deliver their EoT before the
+/// job's aggregate is declared.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EotQuorum {
+    /// Every launched child — the exactness oracle.  A child that can
+    /// never finish turns into [`ChaosError::QuorumUnreachable`].
+    All,
+    /// At the quorum deadline, if at least `k` children have finished,
+    /// membership is re-planned to exactly the finished set (an epoch
+    /// restart) and the laggards' partial streams are fenced out; the
+    /// aggregate is exact over that declared membership.
+    KofN(u16),
+}
+
+/// How a chaos session can fail *as designed* — anything else
+/// (missing pairs, stats drift) panics, because it is a harness bug.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum ChaosError {
+    /// A sender exhausted its retry budget with no failover path open
+    /// (the switch is alive, or no failure was detected).
+    #[error("transport gave up with no failover path: {0}")]
+    Transport(#[from] TransportError),
+    /// The EoT quorum can never be met: only `have` members can still
+    /// finish, `need` are required.
+    #[error("EoT quorum unreachable: {have} of {need} required members can still finish")]
+    QuorumUnreachable { have: usize, need: usize },
+}
+
+/// One chaos session's knobs on top of the transport config.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    pub transport: TransportConfig,
+    pub plan: FaultPlan,
+    pub quorum: EotQuorum,
+    /// Absolute sim time at which a [`EotQuorum::KofN`] policy stops
+    /// waiting for laggards (and an [`EotQuorum::All`] policy audits
+    /// that everyone can still finish).  `None` = wait forever.
+    pub quorum_deadline_s: Option<f64>,
+    /// Per-sender retransmission budget before giving up with a typed
+    /// [`TransportError`].  `None` (the default) retries forever —
+    /// required for plans whose switch outage outlives any finite
+    /// backoff; failover scenarios must set it.
+    pub max_retries: Option<u32>,
+    /// Ack silence (per the controller's heartbeat ledger) needed to
+    /// declare the switch dead when a sender gives up.
+    pub detect_timeout_s: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            transport: TransportConfig::default(),
+            plan: FaultPlan::none(),
+            quorum: EotQuorum::All,
+            quorum_deadline_s: None,
+            max_retries: None,
+            detect_timeout_s: 5e-3,
+        }
+    }
+}
+
+/// Outcome of a chaos session; `T` is the reducer-side payload type
+/// (`Vec<KvPair>` scalar, [`VectorBatch`] W-lane).
+#[derive(Clone, Debug)]
+pub struct ChaosReport<T> {
+    /// Pairs at the reducer: the switch's aggregate (in-network path)
+    /// or the survivors' raw streams (failover path, merged in
+    /// software by the caller via [`Reducer::merge_software`]).
+    pub received: T,
+    /// Children whose streams were reduced in-network (final epoch's
+    /// declared membership).
+    pub in_network: Vec<u16>,
+    /// Children that streamed directly to the reducer after failover.
+    pub software: Vec<u16>,
+    /// Children excluded from the declared membership (quorum drops
+    /// and dead mappers).
+    pub excluded: Vec<u16>,
+    pub completeness: Completeness,
+    pub ingress: NetHopStats,
+    pub egress: NetHopStats,
+    pub dedup: DedupStats,
+    /// Packets discarded by *injected* faults (switch down / link
+    /// down), as distinct from the loss channels' drops.
+    pub faulted_drops: u64,
+    pub final_epoch: u16,
+    pub restarts: u32,
+    /// Distinct packets that had to be resent from seq 1 after an
+    /// epoch rebase (crash recovery's amplification cost).
+    pub replayed_packets: u64,
+    pub failed_over: bool,
+    pub jct_s: f64,
+    pub fifo_peak: u64,
+}
+
+pub type ChaosScalarReport = ChaosReport<Vec<KvPair>>;
+pub type ChaosVectorReport = ChaosReport<VectorBatch>;
+
+/// The scalar/vector-agnostic surface the ingress driver needs from
+/// the session's packetized streams and switch sink.
+trait ChaosLane {
+    /// Admit packet `(child, seq)` under the epoch it was sent in and
+    /// return the switch's ack.
+    fn ingest(
+        &mut self,
+        sw: &mut SwitchAggSwitch,
+        tree: TreeId,
+        child: usize,
+        seq: u32,
+        wire_epoch: u16,
+    ) -> AggAckPacket;
+    /// Restamp every packet's `RelHeader` for a new epoch.
+    fn restamp(&mut self, epoch: u16);
+    /// Discard pre-restart sink emissions (the replay regenerates
+    /// them).
+    fn clear_sink(&mut self);
+    fn flushes(&self) -> u32;
+}
+
+struct ScalarLane {
+    pkts: Vec<Vec<AggregationPacket>>,
+    sink: IngestSink,
+}
+
+impl ChaosLane for ScalarLane {
+    fn ingest(
+        &mut self,
+        sw: &mut SwitchAggSwitch,
+        tree: TreeId,
+        child: usize,
+        seq: u32,
+        wire_epoch: u16,
+    ) -> AggAckPacket {
+        let pkt = &self.pkts[child][(seq - 1) as usize];
+        if pkt.rel.map(|r| r.epoch) == Some(wire_epoch) {
+            sw.ingest_reliable_one(tree, pkt, &mut self.sink)
+        } else {
+            // A stale epoch still in flight: admit it as it was sent,
+            // not as the buffer was later restamped.
+            let mut stale = pkt.clone();
+            stale.rel.as_mut().expect("stamped").epoch = wire_epoch;
+            sw.ingest_reliable_one(tree, &stale, &mut self.sink)
+        }
+    }
+
+    fn restamp(&mut self, epoch: u16) {
+        for stream in &mut self.pkts {
+            for p in stream {
+                p.rel.as_mut().expect("stamped").epoch = epoch;
+            }
+        }
+    }
+
+    fn clear_sink(&mut self) {
+        self.sink.clear();
+    }
+
+    fn flushes(&self) -> u32 {
+        self.sink.flushes
+    }
+}
+
+struct VectorLane {
+    pkts: Vec<Vec<VectorAggregationPacket>>,
+    sink: VectorSink,
+}
+
+impl ChaosLane for VectorLane {
+    fn ingest(
+        &mut self,
+        sw: &mut SwitchAggSwitch,
+        tree: TreeId,
+        child: usize,
+        seq: u32,
+        wire_epoch: u16,
+    ) -> AggAckPacket {
+        let pkt = &self.pkts[child][(seq - 1) as usize];
+        if pkt.rel.map(|r| r.epoch) == Some(wire_epoch) {
+            sw.ingest_vector_reliable_one(tree, pkt, &mut self.sink)
+        } else {
+            let mut stale = pkt.clone();
+            stale.rel.as_mut().expect("stamped").epoch = wire_epoch;
+            sw.ingest_vector_reliable_one(tree, &stale, &mut self.sink)
+        }
+    }
+
+    fn restamp(&mut self, epoch: u16) {
+        for stream in &mut self.pkts {
+            for p in stream {
+                p.rel.as_mut().expect("stamped").epoch = epoch;
+            }
+        }
+    }
+
+    fn clear_sink(&mut self) {
+        self.sink.clear();
+    }
+
+    fn flushes(&self) -> u32 {
+        self.sink.flushes
+    }
+}
+
+/// Scheduled control-plane actions, applied lazily when simulated time
+/// reaches them (the calendar delivers in time order, so "at the first
+/// event at or after `t`" is causally equivalent to "at `t`").
+#[derive(Clone, Copy, Debug)]
+enum Transition {
+    Restart(f64),
+    Quorum(f64),
+}
+
+impl Transition {
+    fn time(&self) -> f64 {
+        match *self {
+            Transition::Restart(t) | Transition::Quorum(t) => t,
+        }
+    }
+}
+
+struct IngressOutcome {
+    stats: NetHopStats,
+    /// Declared membership after quorum re-plans.
+    members: Vec<bool>,
+    epoch: u16,
+    restarts: u32,
+    replayed_packets: u64,
+    failed_over: bool,
+}
+
+/// The fault-aware mirror of `transport::drive_hop` for the ingress
+/// (mappers → switch) hop.  Every divergence from `drive_hop` is
+/// behind a fault-plan or transition query that an empty plan never
+/// satisfies, which is what makes the zero-fault byte-identity
+/// property hold.
+#[allow(clippy::too_many_arguments)]
+fn drive_chaos_ingress<L: ChaosLane>(
+    sim: &mut NetSim,
+    ctl: &mut Controller,
+    sw: &mut SwitchAggSwitch,
+    lane: &mut L,
+    tree: TreeId,
+    lanes: usize,
+    lens: &[Vec<u64>],
+    mappers: &[NodeId],
+    hub: NodeId,
+    cfg: &ChaosConfig,
+) -> Result<IngressOutcome, ChaosError> {
+    let children = lens.len();
+    let plan = &cfg.plan;
+    let mut senders: Vec<AdaptiveSender> = lens
+        .iter()
+        .map(|l| {
+            let s = cfg.transport.sender_for(l.len());
+            match cfg.max_retries {
+                Some(m) => s.with_max_retries(m),
+                None => s,
+            }
+        })
+        .collect();
+    let mut members = vec![true; children];
+    let mut epoch: u16 = 0;
+    let mut restarts: u32 = 0;
+    let mut replayed_packets: u64 = 0;
+    let mut failed_over = false;
+
+    // A `slowdown×` straggler begins its stream after `(slowdown − 1) ×`
+    // the stream's nominal serialization time — the head-of-stream
+    // delay stresses the EoT quorum hardest.
+    let start_s: Vec<f64> = (0..children)
+        .map(|c| {
+            let f = plan.straggle_factor(c as u16);
+            if f > 1.0 {
+                (f - 1.0) * sim.transfer_secs(lens[c].iter().sum())
+            } else {
+                0.0
+            }
+        })
+        .collect();
+
+    let mut transitions: Vec<Transition> = Vec::new();
+    if let Some(crash) = plan.switch_crash() {
+        if let Some(r) = crash.restart_at_s {
+            transitions.push(Transition::Restart(r));
+        }
+    }
+    if let Some(q) = cfg.quorum_deadline_s {
+        transitions.push(Transition::Quorum(q));
+    }
+    transitions.sort_by(|a, b| a.time().partial_cmp(&b.time()).expect("finite fault times"));
+    let mut tix = 0usize;
+
+    let mut acks: Vec<AggAckPacket> = Vec::new();
+    let mut stats = NetHopStats::default();
+    for l in lens {
+        stats.first_tx_bytes += l.iter().sum::<u64>();
+    }
+    let links_before = sim.link_stats();
+    let events_before = sim.events_processed();
+
+    let mut out_seqs: Vec<u32> = Vec::new();
+    let t0 = sim.now_s();
+    let mut done_s = t0;
+
+    // Stragglers that have not begun, latest start first (pop order).
+    let mut pending_starts: Vec<(f64, usize)> = (0..children)
+        .filter(|&c| start_s[c] > t0)
+        .map(|c| (start_s[c], c))
+        .collect();
+    pending_starts.sort_by(|a, b| b.0.partial_cmp(&a.0).expect("finite start times"));
+
+    macro_rules! send_polled {
+        ($c:expr, $t:expr, $sent:expr) => {{
+            let c = $c;
+            let t = $t;
+            out_seqs.clear();
+            senders[c].poll(t, &mut out_seqs);
+            for &seq in &out_seqs {
+                $sent = true;
+                let bytes = lens[c][(seq - 1) as usize];
+                stats.wire_bytes += bytes;
+                sim.send_tagged(t, mappers[c], hub, bytes, ctag(KIND_INGRESS_DATA, c as u16, seq, epoch));
+            }
+        }};
+    }
+
+    // Epoch restart shared by switch recovery and quorum re-plans: the
+    // controller re-pushes Configure under the declared membership, the
+    // switch fences the new epoch, pre-restart sink emissions are
+    // discarded, and every live member rebases and replays from seq 1
+    // (the old incarnation's acked prefix is gone).
+    macro_rules! rebase_members {
+        ($e:expr, $now:expr) => {{
+            let e = $e;
+            let now = $now;
+            assert!(e < 256, "chaos tags encode the epoch in 8 bits; {e} incarnations is beyond the fault model");
+            for (_, conf) in ctl.reconfigures(tree) {
+                sw.configure_vector(&conf.trees, lanes);
+            }
+            apply_session_policy(sw, &cfg.transport);
+            sw.begin_epoch(tree, e);
+            lane.clear_sink();
+            lane.restamp(e);
+            epoch = e;
+            for c in 0..children {
+                if members[c] && plan.mapper_alive(c as u16, now) {
+                    replayed_packets += senders[c].sent() as u64;
+                    senders[c].rebase(e);
+                }
+            }
+            let mut kicked = false;
+            for c in 0..children {
+                if members[c]
+                    && plan.mapper_alive(c as u16, now)
+                    && now >= start_s[c]
+                    && !senders[c].done()
+                {
+                    send_polled!(c, now, kicked);
+                }
+            }
+            let _ = kicked;
+        }};
+    }
+
+    // Shrink the declared membership to the finished children and
+    // epoch-restart so the switch's EoT count and the laggards' fenced
+    // streams agree with the new declaration.
+    macro_rules! quorum_replan {
+        ($now:expr) => {{
+            let now = $now;
+            let m = (0..children).filter(|&c| members[c] && senders[c].done()).count() as u16;
+            for c in 0..children {
+                members[c] = members[c] && senders[c].done();
+            }
+            let (e, _confs) = ctl
+                .replan_membership(tree, m)
+                .expect("running tree re-plans membership");
+            rebase_members!(e, now);
+        }};
+    }
+
+    macro_rules! apply_transitions {
+        ($now:expr) => {{
+            let now = $now;
+            while tix < transitions.len() && transitions[tix].time() <= now {
+                match transitions[tix] {
+                    Transition::Restart(_) => {
+                        restarts += 1;
+                        sw.crash();
+                        let e = ctl.bump_epoch(tree).expect("running tree restarts");
+                        rebase_members!(e, now);
+                    }
+                    Transition::Quorum(_) => {
+                        let done_members =
+                            (0..children).filter(|&c| members[c] && senders[c].done()).count();
+                        let active = (0..children).filter(|&c| members[c]).count();
+                        if done_members < active {
+                            match cfg.quorum {
+                                EotQuorum::All => {
+                                    // All-quorum drops nobody: audit that
+                                    // every member can still finish.
+                                    let possible = (0..children)
+                                        .filter(|&c| {
+                                            members[c]
+                                                && (senders[c].done()
+                                                    || plan.mapper_alive(c as u16, now))
+                                        })
+                                        .count();
+                                    if possible < active {
+                                        return Err(ChaosError::QuorumUnreachable {
+                                            have: possible,
+                                            need: active,
+                                        });
+                                    }
+                                }
+                                EotQuorum::KofN(k) => {
+                                    if done_members >= k as usize {
+                                        quorum_replan!(now);
+                                    } else {
+                                        let possible = (0..children)
+                                            .filter(|&c| {
+                                                members[c]
+                                                    && (senders[c].done()
+                                                        || plan.mapper_alive(c as u16, now))
+                                            })
+                                            .count();
+                                        if possible < k as usize {
+                                            return Err(ChaosError::QuorumUnreachable {
+                                                have: possible,
+                                                need: k as usize,
+                                            });
+                                        }
+                                        // Quorum not met yet but still
+                                        // reachable: keep waiting.
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                tix += 1;
+            }
+        }};
+    }
+
+    macro_rules! fire_starts {
+        ($now:expr) => {{
+            let now = $now;
+            while pending_starts.last().map_or(false, |&(s, _)| s <= now) {
+                let (_, c) = pending_starts.pop().expect("non-empty");
+                if members[c] && plan.mapper_alive(c as u16, now) && !senders[c].done() {
+                    let mut kicked = false;
+                    send_polled!(c, now, kicked);
+                    let _ = kicked;
+                }
+            }
+        }};
+    }
+
+    // A give-up is terminal: either the switch is verifiably dead
+    // (heartbeats silent) and the controller fails the job over, or the
+    // typed transport error surfaces to the caller.
+    macro_rules! check_giveup {
+        ($now:expr) => {{
+            let now = $now;
+            let fail = (0..children)
+                .filter(|&c| members[c] && plan.mapper_alive(c as u16, now))
+                .find_map(|c| senders[c].failure());
+            if let Some(err) = fail {
+                if plan.switch_dead(now) && ctl.failure_detected(tree, now, cfg.detect_timeout_s) {
+                    ctl.fail_over(tree).expect("running tree fails over");
+                    failed_over = true;
+                } else {
+                    return Err(ChaosError::Transport(err));
+                }
+            }
+        }};
+    }
+
+    for c in 0..children {
+        if start_s[c] <= t0 {
+            let mut kicked = false;
+            send_polled!(c, t0, kicked);
+            let _ = kicked;
+        }
+    }
+
+    let mut steps: u64 = 0;
+    loop {
+        if failed_over || (0..children).all(|c| !members[c] || senders[c].done()) {
+            break;
+        }
+        steps += 1;
+        assert!(
+            steps <= cfg.transport.max_steps,
+            "chaos session did not converge within {} steps",
+            cfg.transport.max_steps
+        );
+        let Some(d) = sim.step_delivery() else {
+            // Drained with members unfinished: jump to the earliest
+            // thing that can happen — a retransmission deadline, a
+            // straggler's start, or a scheduled transition.
+            let mut target = f64::INFINITY;
+            for c in 0..children {
+                if !members[c] || senders[c].done() {
+                    continue;
+                }
+                if !plan.mapper_alive(c as u16, sim.now_s()) {
+                    continue;
+                }
+                if senders[c].failure().is_some() {
+                    continue;
+                }
+                if let Some(dl) = senders[c].next_retx_deadline() {
+                    target = target.min(dl);
+                }
+                if start_s[c] > sim.now_s() {
+                    target = target.min(start_s[c]);
+                }
+            }
+            if tix < transitions.len() {
+                target = target.min(transitions[tix].time());
+            }
+            let t = if target.is_finite() {
+                target.max(sim.now_s())
+            } else {
+                sim.now_s()
+            };
+            let applied_before = tix;
+            apply_transitions!(t);
+            fire_starts!(t);
+            let mut sent_any = false;
+            for c in 0..children {
+                if !members[c] || senders[c].done() {
+                    continue;
+                }
+                if !plan.mapper_alive(c as u16, t) || t < start_s[c] {
+                    continue;
+                }
+                send_polled!(c, t, sent_any);
+            }
+            check_giveup!(t);
+            if failed_over || sent_any || tix > applied_before {
+                continue;
+            }
+            // Nothing in flight, no timers, no pending transitions, and
+            // nothing sendable: every unfinished member is dead (live
+            // ones always carry a timer, a pending start, or a pollable
+            // window).  Resolve the quorum now — waiting cannot help.
+            let done_members = (0..children).filter(|&c| members[c] && senders[c].done()).count();
+            let (have, need) = match cfg.quorum {
+                EotQuorum::All => {
+                    (done_members, (0..children).filter(|&c| members[c]).count())
+                }
+                EotQuorum::KofN(k) => (done_members, k as usize),
+            };
+            if matches!(cfg.quorum, EotQuorum::KofN(_)) && have >= need {
+                quorum_replan!(t);
+                continue;
+            }
+            return Err(ChaosError::QuorumUnreachable { have, need });
+        };
+        apply_transitions!(d.time_s);
+        fire_starts!(d.time_s);
+        let kind = tag_kind(d.tag);
+        if kind == KIND_INGRESS_DATA && d.node == hub {
+            let child = tag_child(d.tag) as usize;
+            let seq = tag_idx(d.tag);
+            if plan.switch_down(d.time_s) || plan.link_down(child as u16, d.time_s) {
+                sim.note_faulted_drop(mappers[child], hub);
+                continue;
+            }
+            let ack = lane.ingest(sw, tree, child, seq, ctag_epoch(d.tag));
+            let id = u32::try_from(acks.len()).expect("ack id space exhausted");
+            acks.push(ack);
+            sim.send_tagged(
+                d.time_s,
+                hub,
+                mappers[child],
+                ACK_WIRE_LEN,
+                ctag(KIND_INGRESS_ACK, child as u16, id, epoch),
+            );
+        } else if kind == KIND_INGRESS_ACK {
+            let c = tag_child(d.tag) as usize;
+            if plan.link_down(c as u16, d.time_s) {
+                sim.note_faulted_drop(hub, mappers[c]);
+                continue;
+            }
+            if !members[c] || !plan.mapper_alive(c as u16, d.time_s) {
+                continue;
+            }
+            // Data-plane acks double as the switch's heartbeat.
+            ctl.record_heartbeat(tree, d.time_s);
+            let ack = acks[tag_idx(d.tag) as usize];
+            let sender = &mut senders[c];
+            let was_done = sender.done();
+            sender.on_ack_epoch(ack.epoch, ack.cum_seq, ack.credit, d.time_s);
+            if !was_done && sender.done() {
+                done_s = done_s.max(d.time_s);
+            }
+            let mut sent = false;
+            send_polled!(c, d.time_s, sent);
+            let _ = sent;
+            check_giveup!(d.time_s);
+        }
+        // Any other tag is a straggler from a previous hop or epoch:
+        // the job has moved on, drop it.
+    }
+
+    stats.done_s = done_s;
+    let mut srtt_sum = 0.0;
+    let mut srtt_n = 0u32;
+    for s in &senders {
+        stats.first_tx += s.first_tx;
+        stats.retransmissions += s.retransmissions;
+        stats.timeouts += s.timeouts;
+        stats.cwnd_peak = stats.cwnd_peak.max(s.cwnd_peak());
+        if let Some(srtt) = s.rtt().srtt_s() {
+            srtt_sum += srtt;
+            srtt_n += 1;
+        }
+    }
+    if srtt_n > 0 {
+        stats.srtt_mean_s = srtt_sum / srtt_n as f64;
+    }
+    let links_after = sim.link_stats();
+    let delta = |key: (NodeId, NodeId)| -> (u64, u64) {
+        let after = links_after
+            .get(&key)
+            .map(|s| (s.dropped, s.duplicated))
+            .unwrap_or((0, 0));
+        let before = links_before
+            .get(&key)
+            .map(|s| (s.dropped, s.duplicated))
+            .unwrap_or((0, 0));
+        (after.0 - before.0, after.1 - before.1)
+    };
+    for &m in mappers {
+        let (drops, dups) = delta((m, hub));
+        stats.drops += drops;
+        stats.dups += dups;
+        stats.acks_dropped += delta((hub, m)).0;
+    }
+    stats.events = sim.events_processed() - events_before;
+    Ok(IngressOutcome {
+        stats,
+        members,
+        epoch,
+        restarts,
+        replayed_packets,
+        failed_over,
+    })
+}
+
+/// Control-plane bring-up for one star session: launch, configure,
+/// ack, running.
+fn launch_session(
+    children: usize,
+    op: AggOp,
+) -> (Controller, TreeId, Vec<(NodeId, ConfigurePacket)>) {
+    let (topo, _hub, hosts) = Topology::star(children + 1);
+    let mut ctl = Controller::new(topo);
+    let req = LaunchPacket {
+        mappers: hosts[..children].iter().map(|h| h.0).collect(),
+        reducers: vec![hosts[children].0],
+    };
+    let out = ctl.launch(&req, op).expect("star session launches");
+    (ctl, out.tree, out.configures)
+}
+
+fn member_partition(members: &[bool]) -> (Vec<u16>, Vec<u16>) {
+    let mut inside = Vec::new();
+    let mut outside = Vec::new();
+    for (c, &m) in members.iter().enumerate() {
+        if m {
+            inside.push(c as u16);
+        } else {
+            outside.push(c as u16);
+        }
+    }
+    (inside, outside)
+}
+
+/// Run one scalar chaos session: `streams[c]` is child `c`'s pair
+/// stream, aggregated under `cfg.plan`'s injected faults.  Starts at
+/// simulated t = 0 on a fresh star network with its own controller.
+pub fn run_chaos_scalar(
+    switch_cfg: &SwitchConfig,
+    op: AggOp,
+    streams: &[Vec<KvPair>],
+    cfg: &ChaosConfig,
+) -> Result<ChaosScalarReport, ChaosError> {
+    let children = streams.len();
+    assert!(children >= 1, "need at least one child");
+    cfg.plan.validate(children as u16);
+    let (mut ctl, tree, configures) = launch_session(children, op);
+    let mut sw = SwitchAggSwitch::new(switch_cfg.clone());
+    for (node, conf) in &configures {
+        sw.configure(&conf.trees);
+        ctl.switch_ack(tree, *node).expect("configure handshake");
+    }
+    assert!(ctl.is_running(tree), "session running before any data");
+    apply_session_policy(&mut sw, &cfg.transport);
+
+    let pkts: Vec<Vec<AggregationPacket>> = streams
+        .iter()
+        .enumerate()
+        .map(|(c, s)| {
+            let mut v = AggregationPacket::pack_stream(tree, op, s, true);
+            stamp(&mut v, c as u16, 0, |p, rel| p.rel = Some(rel));
+            v
+        })
+        .collect();
+    let lens: Vec<Vec<u64>> = pkts
+        .iter()
+        .map(|v| v.iter().map(|p| p.wire_len() as u64).collect())
+        .collect();
+    let (mut sim, hub, mappers, reducer) = session_net(children, &cfg.transport);
+    let mut lane = ScalarLane {
+        pkts,
+        sink: IngestSink::new(),
+    };
+    let ing = drive_chaos_ingress(
+        &mut sim, &mut ctl, &mut sw, &mut lane, tree, 1, &lens, &mappers, hub, cfg,
+    )?;
+
+    if ing.failed_over {
+        let now = sim.now_s();
+        let survivors: Vec<usize> = (0..children)
+            .filter(|&c| ing.members[c] && cfg.plan.mapper_alive(c as u16, now))
+            .collect();
+        let need = match cfg.quorum {
+            EotQuorum::All => children,
+            EotQuorum::KofN(k) => k as usize,
+        };
+        if survivors.len() < need {
+            return Err(ChaosError::QuorumUnreachable {
+                have: survivors.len(),
+                need,
+            });
+        }
+        let fo_lens: Vec<Vec<u64>> = survivors.iter().map(|&c| lens[c].clone()).collect();
+        let fo_src: Vec<NodeId> = survivors.iter().map(|&c| mappers[c]).collect();
+        let mut eps: Vec<Endpoint<Vec<KvPair>>> = survivors
+            .iter()
+            .map(|_| Endpoint::new(Vec::new(), cfg.transport.window))
+            .collect();
+        let pkts = &lane.pkts;
+        let egress = drive_hop(
+            &mut sim,
+            &cfg.transport,
+            &fo_lens,
+            &fo_src,
+            reducer,
+            (KIND_FAILOVER_DATA, KIND_FAILOVER_ACK),
+            |ci, seq, _now| {
+                let pkt = &pkts[survivors[ci as usize]][(seq - 1) as usize];
+                let rel = pkt.rel.expect("stamped");
+                let ep = &mut eps[ci as usize];
+                if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                    ep.received.extend_from_slice(&pkt.pairs);
+                }
+                ep.ack_for(tree, rel.child)
+            },
+        );
+        let mut received: Vec<KvPair> = Vec::new();
+        for ep in &eps {
+            received.extend_from_slice(&ep.received);
+        }
+        let expected_pairs: u64 = survivors.iter().map(|&c| streams[c].len() as u64).sum();
+        let completeness = Completeness {
+            expected_pairs,
+            received_pairs: received.len() as u64,
+        };
+        assert!(
+            completeness.is_complete(),
+            "failover replay left {} pairs missing",
+            completeness.missing()
+        );
+        let (_, excluded) = member_partition(&{
+            let mut m = vec![false; children];
+            for &c in &survivors {
+                m[c] = true;
+            }
+            m
+        });
+        return Ok(ChaosReport {
+            received,
+            in_network: Vec::new(),
+            software: survivors.iter().map(|&c| c as u16).collect(),
+            excluded,
+            completeness,
+            ingress: ing.stats,
+            egress,
+            dedup: sw.dedup_stats(tree),
+            faulted_drops: sim.faulted_drops(),
+            final_epoch: ctl.epoch(tree),
+            restarts: ing.restarts,
+            replayed_packets: ing.replayed_packets,
+            failed_over: true,
+            jct_s: egress.done_s,
+            fifo_peak: sw.stats(tree).map(|s| s.fifo_max_occupancy).unwrap_or(0),
+        });
+    }
+
+    assert_eq!(
+        lane.sink.flushes, 1,
+        "declared members' EoTs admitted ⇒ exactly one flush"
+    );
+    sw.finalize(tree);
+    let dedup = sw.dedup_stats(tree);
+    let stats = sw.stats(tree).expect("tree stats");
+    let expected_pairs = stats.pairs_out_stream + stats.pairs_out_flush;
+    let fifo_peak = stats.fifo_max_occupancy;
+
+    let mut egress_pairs = Vec::with_capacity(lane.sink.forwarded.len() + lane.sink.flushed.len());
+    egress_pairs.extend_from_slice(&lane.sink.forwarded);
+    egress_pairs.extend_from_slice(&lane.sink.flushed);
+    let mut epkts = AggregationPacket::pack_stream(tree, op, &egress_pairs, true);
+    stamp(&mut epkts, 0, ing.epoch, |p, rel| p.rel = Some(rel));
+    let elens = vec![epkts.iter().map(|p| p.wire_len() as u64).collect::<Vec<u64>>()];
+    let mut ep = Endpoint::new(Vec::<KvPair>::new(), cfg.transport.window);
+    ep.epoch = ing.epoch;
+    let hub_src = [hub];
+    let egress = drive_hop(
+        &mut sim,
+        &cfg.transport,
+        &elens,
+        &hub_src,
+        reducer,
+        (KIND_EGRESS_DATA, KIND_EGRESS_ACK),
+        |_child, seq, _now| {
+            let pkt = &epkts[(seq - 1) as usize];
+            let rel = pkt.rel.expect("egress packets carry rel headers");
+            if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                ep.received.extend_from_slice(&pkt.pairs);
+            }
+            ep.ack_for(tree, rel.child)
+        },
+    );
+    let completeness =
+        Reducer::verify_completeness(expected_pairs, std::slice::from_ref(&ep.received));
+    assert!(
+        completeness.is_complete(),
+        "end-of-job recovery left {} pairs missing",
+        completeness.missing()
+    );
+    let (in_network, excluded) = member_partition(&ing.members);
+    Ok(ChaosReport {
+        received: ep.received,
+        in_network,
+        software: Vec::new(),
+        excluded,
+        completeness,
+        ingress: ing.stats,
+        egress,
+        dedup,
+        faulted_drops: sim.faulted_drops(),
+        final_epoch: ing.epoch,
+        restarts: ing.restarts,
+        replayed_packets: ing.replayed_packets,
+        failed_over: false,
+        jct_s: egress.done_s,
+        fifo_peak,
+    })
+}
+
+/// The W-lane vector counterpart of [`run_chaos_scalar`].
+pub fn run_chaos_vector(
+    switch_cfg: &SwitchConfig,
+    op: AggOp,
+    streams: &[VectorBatch],
+    cfg: &ChaosConfig,
+) -> Result<ChaosVectorReport, ChaosError> {
+    let children = streams.len();
+    assert!(children >= 1, "need at least one child");
+    cfg.plan.validate(children as u16);
+    let lanes = streams.first().map(|b| b.lanes()).unwrap_or(1);
+    let (mut ctl, tree, configures) = launch_session(children, op);
+    let mut sw = SwitchAggSwitch::new(switch_cfg.clone());
+    for (node, conf) in &configures {
+        sw.configure_vector(&conf.trees, lanes);
+        ctl.switch_ack(tree, *node).expect("configure handshake");
+    }
+    assert!(ctl.is_running(tree), "session running before any data");
+    apply_session_policy(&mut sw, &cfg.transport);
+
+    let packetize = |batch: &VectorBatch, child: u16| -> Vec<VectorAggregationPacket> {
+        let mut out = Vec::new();
+        let mut chunks = VectorChunks::new(batch);
+        while let Some((range, last)) = chunks.next_chunk() {
+            out.push(VectorAggregationPacket {
+                tree,
+                op,
+                eot: last,
+                rel: None,
+                batch: batch.sub_batch(range),
+            });
+        }
+        stamp(&mut out, child, 0, |p, rel| p.rel = Some(rel));
+        out
+    };
+    let pkts: Vec<Vec<VectorAggregationPacket>> = streams
+        .iter()
+        .enumerate()
+        .map(|(c, b)| packetize(b, c as u16))
+        .collect();
+    let lens: Vec<Vec<u64>> = pkts
+        .iter()
+        .map(|v| v.iter().map(|p| p.wire_len() as u64).collect())
+        .collect();
+    let (mut sim, hub, mappers, reducer) = session_net(children, &cfg.transport);
+    let mut lane = VectorLane {
+        pkts,
+        sink: VectorSink::new(lanes),
+    };
+    let ing = drive_chaos_ingress(
+        &mut sim, &mut ctl, &mut sw, &mut lane, tree, lanes, &lens, &mappers, hub, cfg,
+    )?;
+
+    if ing.failed_over {
+        let now = sim.now_s();
+        let survivors: Vec<usize> = (0..children)
+            .filter(|&c| ing.members[c] && cfg.plan.mapper_alive(c as u16, now))
+            .collect();
+        let need = match cfg.quorum {
+            EotQuorum::All => children,
+            EotQuorum::KofN(k) => k as usize,
+        };
+        if survivors.len() < need {
+            return Err(ChaosError::QuorumUnreachable {
+                have: survivors.len(),
+                need,
+            });
+        }
+        let fo_lens: Vec<Vec<u64>> = survivors.iter().map(|&c| lens[c].clone()).collect();
+        let fo_src: Vec<NodeId> = survivors.iter().map(|&c| mappers[c]).collect();
+        let mut eps: Vec<Endpoint<VectorBatch>> = survivors
+            .iter()
+            .map(|_| Endpoint::new(VectorBatch::new(lanes), cfg.transport.window))
+            .collect();
+        let pkts = &lane.pkts;
+        let egress = drive_hop(
+            &mut sim,
+            &cfg.transport,
+            &fo_lens,
+            &fo_src,
+            reducer,
+            (KIND_FAILOVER_DATA, KIND_FAILOVER_ACK),
+            |ci, seq, _now| {
+                let pkt = &pkts[survivors[ci as usize]][(seq - 1) as usize];
+                let rel = pkt.rel.expect("stamped");
+                let ep = &mut eps[ci as usize];
+                if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                    ep.received.extend_from_batch(&pkt.batch);
+                }
+                ep.ack_for(tree, rel.child)
+            },
+        );
+        let mut received = VectorBatch::new(lanes);
+        for ep in &eps {
+            received.extend_from_batch(&ep.received);
+        }
+        let expected_pairs: u64 = survivors.iter().map(|&c| streams[c].len() as u64).sum();
+        let completeness = Completeness {
+            expected_pairs,
+            received_pairs: received.len() as u64,
+        };
+        assert!(
+            completeness.is_complete(),
+            "failover replay left {} pairs missing",
+            completeness.missing()
+        );
+        let mut m = vec![false; children];
+        for &c in &survivors {
+            m[c] = true;
+        }
+        let (_, excluded) = member_partition(&m);
+        return Ok(ChaosReport {
+            received,
+            in_network: Vec::new(),
+            software: survivors.iter().map(|&c| c as u16).collect(),
+            excluded,
+            completeness,
+            ingress: ing.stats,
+            egress,
+            dedup: sw.dedup_stats(tree),
+            faulted_drops: sim.faulted_drops(),
+            final_epoch: ctl.epoch(tree),
+            restarts: ing.restarts,
+            replayed_packets: ing.replayed_packets,
+            failed_over: true,
+            jct_s: egress.done_s,
+            fifo_peak: sw.stats(tree).map(|s| s.fifo_max_occupancy).unwrap_or(0),
+        });
+    }
+
+    assert_eq!(
+        lane.sink.flushes, 1,
+        "declared members' EoTs admitted ⇒ exactly one flush"
+    );
+    sw.finalize(tree);
+    let dedup = sw.dedup_stats(tree);
+    let stats = sw.stats(tree).expect("tree stats");
+    let expected_pairs = stats.pairs_out_stream + stats.pairs_out_flush;
+    let fifo_peak = stats.fifo_max_occupancy;
+
+    let egress_batch = crate::switch::vector_sink_to_batch(&lane.sink);
+    let mut epkts = packetize(&egress_batch, 0);
+    for p in &mut epkts {
+        p.rel.as_mut().expect("stamped").epoch = ing.epoch;
+    }
+    let elens = vec![epkts.iter().map(|p| p.wire_len() as u64).collect::<Vec<u64>>()];
+    let mut ep = Endpoint::new(VectorBatch::new(lanes), cfg.transport.window);
+    ep.epoch = ing.epoch;
+    let hub_src = [hub];
+    let egress = drive_hop(
+        &mut sim,
+        &cfg.transport,
+        &elens,
+        &hub_src,
+        reducer,
+        (KIND_EGRESS_DATA, KIND_EGRESS_ACK),
+        |_child, seq, _now| {
+            let pkt = &epkts[(seq - 1) as usize];
+            let rel = pkt.rel.expect("egress packets carry rel headers");
+            if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                ep.received.extend_from_batch(&pkt.batch);
+            }
+            ep.ack_for(tree, rel.child)
+        },
+    );
+    let completeness = Completeness {
+        expected_pairs,
+        received_pairs: ep.received.len() as u64,
+    };
+    assert!(
+        completeness.is_complete(),
+        "end-of-job recovery left {} pairs missing",
+        completeness.missing()
+    );
+    let (in_network, excluded) = member_partition(&ing.members);
+    Ok(ChaosReport {
+        received: ep.received,
+        in_network,
+        software: Vec::new(),
+        excluded,
+        completeness,
+        ingress: ing.stats,
+        egress,
+        dedup,
+        faulted_drops: sim.faulted_drops(),
+        final_epoch: ing.epoch,
+        restarts: ing.restarts,
+        replayed_packets: ing.replayed_packets,
+        failed_over: false,
+        jct_s: egress.done_s,
+        fifo_peak,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::Key;
+    use crate::switch::Parallelism;
+    use crate::util::rng::Pcg32;
+    use std::collections::HashMap;
+
+    fn switch_cfg() -> SwitchConfig {
+        SwitchConfig::scaled(16 << 10, Some(256 << 10))
+    }
+
+    fn streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+        let mut rng = Pcg32::new(seed);
+        (0..children)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        let id = rng.gen_range_u64(300);
+                        KvPair::new(
+                            Key::from_id(id, 16 + (id % 49) as usize),
+                            rng.gen_range_u64(100) as i64 - 50,
+                        )
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn merged(streams: &[Vec<KvPair>]) -> HashMap<Key, i64> {
+        Reducer::merge_software(streams, AggOp::Sum).table
+    }
+
+    fn totals(pairs: &[KvPair]) -> HashMap<Key, i64> {
+        Reducer::merge_software(std::slice::from_ref(&pairs.to_vec()), AggOp::Sum).table
+    }
+
+    #[test]
+    fn ctag_round_trips_epoch_kind_child_idx() {
+        let t = ctag(KIND_INGRESS_DATA, 513, 0xDEAD_BEEF, 7);
+        assert_eq!(tag_kind(t), KIND_INGRESS_DATA);
+        assert_eq!(tag_child(t), 513);
+        assert_eq!(tag_idx(t), 0xDEAD_BEEF);
+        assert_eq!(ctag_epoch(t), 7);
+        // Epoch 0 leaves the transport driver's tag untouched.
+        assert_eq!(ctag(3, 9, 42, 0), tag(3, 9, 42));
+    }
+
+    #[test]
+    fn crash_and_restart_recovers_byte_identical_aggregate() {
+        let st = streams(4, 400, 11);
+        let want = merged(&st);
+        // Baseline (no faults) fixes the crash window from its JCT.
+        let base = run_chaos_scalar(&switch_cfg(), AggOp::Sum, &st, &ChaosConfig::default())
+            .expect("fault-free run");
+        assert_eq!(base.restarts, 0);
+        assert_eq!(base.faulted_drops, 0);
+        let cfg = ChaosConfig {
+            plan: FaultPlan::none()
+                .with_switch_crash(base.jct_s * 0.3, Some(base.jct_s * 0.6)),
+            ..ChaosConfig::default()
+        };
+        let run = run_chaos_scalar(&switch_cfg(), AggOp::Sum, &st, &cfg).expect("recovered run");
+        assert_eq!(run.restarts, 1);
+        assert_eq!(run.final_epoch, 1);
+        assert!(run.faulted_drops > 0, "the outage must actually bite");
+        assert!(run.replayed_packets > 0, "recovery must replay");
+        assert_eq!(totals(&run.received), want, "recovered aggregate is exact");
+        assert_eq!(run.received, base.received, "recovery is byte-identical");
+        assert!(run.jct_s > base.jct_s, "the outage costs time");
+    }
+
+    #[test]
+    fn dead_switch_fails_over_to_software_aggregation() {
+        let st = streams(4, 200, 13);
+        let want = merged(&st);
+        let base = run_chaos_scalar(&switch_cfg(), AggOp::Sum, &st, &ChaosConfig::default())
+            .expect("fault-free run");
+        let cfg = ChaosConfig {
+            plan: FaultPlan::none().with_switch_crash(base.jct_s * 0.3, None),
+            max_retries: Some(6),
+            ..ChaosConfig::default()
+        };
+        let run = run_chaos_scalar(&switch_cfg(), AggOp::Sum, &st, &cfg).expect("failover run");
+        assert!(run.failed_over);
+        assert!(run.in_network.is_empty());
+        assert_eq!(run.software, vec![0, 1, 2, 3]);
+        assert_eq!(
+            totals(&run.received),
+            want,
+            "software merge of survivor streams is exact"
+        );
+    }
+
+    #[test]
+    fn k_of_n_quorum_drops_a_dead_mapper() {
+        let st = streams(4, 200, 17);
+        let base = run_chaos_scalar(&switch_cfg(), AggOp::Sum, &st, &ChaosConfig::default())
+            .expect("fault-free run");
+        let cfg = ChaosConfig {
+            plan: FaultPlan::none().with_mapper_crash(2, base.jct_s * 0.2),
+            quorum: EotQuorum::KofN(3),
+            quorum_deadline_s: Some(base.jct_s * 2.0),
+            ..ChaosConfig::default()
+        };
+        let run = run_chaos_scalar(&switch_cfg(), AggOp::Sum, &st, &cfg).expect("quorum run");
+        assert_eq!(run.excluded, vec![2]);
+        assert_eq!(run.in_network, vec![0, 1, 3]);
+        let declared: Vec<Vec<KvPair>> = [0usize, 1, 3].iter().map(|&c| st[c].clone()).collect();
+        assert_eq!(
+            totals(&run.received),
+            merged(&declared),
+            "aggregate exact over the declared membership"
+        );
+    }
+
+    #[test]
+    fn dead_mapper_under_all_quorum_is_a_typed_error() {
+        let st = streams(3, 100, 19);
+        let base = run_chaos_scalar(&switch_cfg(), AggOp::Sum, &st, &ChaosConfig::default())
+            .expect("fault-free run");
+        let cfg = ChaosConfig {
+            plan: FaultPlan::none().with_mapper_crash(1, base.jct_s * 0.3),
+            ..ChaosConfig::default()
+        };
+        match run_chaos_scalar(&switch_cfg(), AggOp::Sum, &st, &cfg) {
+            Err(ChaosError::QuorumUnreachable { have, need }) => {
+                assert_eq!(need, 3);
+                assert!(have < 3);
+            }
+            other => panic!("expected QuorumUnreachable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn seeded_chaos_plans_run_to_a_deterministic_outcome() {
+        let st = streams(4, 150, 23);
+        let base = run_chaos_scalar(&switch_cfg(), AggOp::Sum, &st, &ChaosConfig::default())
+            .expect("fault-free run");
+        for seed in 0..6u64 {
+            let cfg = ChaosConfig {
+                plan: FaultPlan::chaos(seed, 4, base.jct_s),
+                quorum: EotQuorum::KofN(3),
+                quorum_deadline_s: Some(base.jct_s * 4.0),
+                max_retries: Some(20),
+                ..ChaosConfig::default()
+            };
+            let a = run_chaos_scalar(&switch_cfg(), AggOp::Sum, &st, &cfg);
+            let b = run_chaos_scalar(&switch_cfg(), AggOp::Sum, &st, &cfg);
+            match (a, b) {
+                (Ok(x), Ok(y)) => {
+                    assert_eq!(x.received, y.received, "seed {seed}");
+                    assert_eq!(x.ingress, y.ingress, "seed {seed}");
+                    assert_eq!(x.jct_s, y.jct_s, "seed {seed}");
+                }
+                (Err(x), Err(y)) => assert_eq!(x, y, "seed {seed}"),
+                (x, y) => panic!("seed {seed}: divergent outcomes {x:?} vs {y:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_engine_matches_serial_under_faults() {
+        let st = streams(4, 300, 29);
+        let base = run_chaos_scalar(&switch_cfg(), AggOp::Sum, &st, &ChaosConfig::default())
+            .expect("fault-free run");
+        let cfg = ChaosConfig {
+            plan: FaultPlan::none()
+                .with_switch_crash(base.jct_s * 0.25, Some(base.jct_s * 0.5)),
+            ..ChaosConfig::default()
+        };
+        let mut serial_cfg = switch_cfg();
+        serial_cfg.parallelism = Parallelism::Serial;
+        let mut sharded_cfg = switch_cfg();
+        sharded_cfg.parallelism = Parallelism::Sharded(2);
+        let a = run_chaos_scalar(&serial_cfg, AggOp::Sum, &st, &cfg).expect("serial");
+        let b = run_chaos_scalar(&sharded_cfg, AggOp::Sum, &st, &cfg).expect("sharded");
+        assert_eq!(a.received, b.received);
+        assert_eq!(a.ingress, b.ingress);
+        assert_eq!(a.faulted_drops, b.faulted_drops);
+    }
+}

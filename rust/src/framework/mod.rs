@@ -3,6 +3,7 @@
 //! produces the final result, and the shim layer giving workers a
 //! PUT/GET abstraction over the aggregation network.
 
+pub mod chaos;
 pub mod job;
 pub mod mapper;
 pub mod reducer;
@@ -10,6 +11,10 @@ pub mod reliable;
 pub mod shim;
 pub mod transport;
 
+pub use chaos::{
+    run_chaos_scalar, run_chaos_vector, ChaosConfig, ChaosError, ChaosReport, ChaosScalarReport,
+    ChaosVectorReport, EotQuorum,
+};
 pub use job::{run_job, JobReport, JobSpec};
 pub use mapper::{Mapper, VectorMapper};
 pub use reducer::{Completeness, Reducer, VectorMergeResult};

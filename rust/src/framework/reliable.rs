@@ -244,12 +244,13 @@ fn drive<P>(
 
 /// Stamp reliability records onto a packetized stream (shared with
 /// the event-driven driver in `framework::transport`).
-pub(crate) fn stamp<P>(pkts: &mut [P], child: u16, set: impl Fn(&mut P, RelHeader)) {
+pub(crate) fn stamp<P>(pkts: &mut [P], child: u16, epoch: u16, set: impl Fn(&mut P, RelHeader)) {
     for (i, p) in pkts.iter_mut().enumerate() {
         set(
             p,
             RelHeader {
                 child,
+                epoch,
                 seq: i as u32 + 1,
             },
         );
@@ -261,6 +262,8 @@ pub(crate) fn stamp<P>(pkts: &mut [P], child: u16, set: impl Fn(&mut P, RelHeade
 pub(crate) struct Endpoint<T> {
     pub(crate) window: DedupWindow,
     pub(crate) received: T,
+    /// Epoch stamped on this endpoint's acks (0 for fault-free runs).
+    pub(crate) epoch: u16,
 }
 
 impl<T> Endpoint<T> {
@@ -268,6 +271,7 @@ impl<T> Endpoint<T> {
         Self {
             window: DedupWindow::sized(window),
             received,
+            epoch: 0,
         }
     }
 
@@ -275,6 +279,7 @@ impl<T> Endpoint<T> {
         AggAckPacket {
             tree,
             child,
+            epoch: self.epoch,
             cum_seq: self.window.cum_seq(),
             credit: self.window.credit(),
         }
@@ -298,7 +303,7 @@ pub fn run_reliable_scalar(
         .enumerate()
         .map(|(c, s)| {
             let mut v = AggregationPacket::pack_stream(tree, op, s, true);
-            stamp(&mut v, c as u16, |p, rel| p.rel = Some(rel));
+            stamp(&mut v, c as u16, 0, |p, rel| p.rel = Some(rel));
             v
         })
         .collect();
@@ -326,7 +331,7 @@ pub fn run_reliable_scalar(
     egress_pairs.extend_from_slice(&sink.forwarded);
     egress_pairs.extend_from_slice(&sink.flushed);
     let mut epkts = AggregationPacket::pack_stream(tree, op, &egress_pairs, true);
-    stamp(&mut epkts, 0, |p, rel| p.rel = Some(rel));
+    stamp(&mut epkts, 0, 0, |p, rel| p.rel = Some(rel));
     let mut ep = Endpoint::new(Vec::<KvPair>::new(), cfg.window);
     let egress = drive(
         &[epkts],
@@ -385,7 +390,7 @@ pub fn run_reliable_vector(
                 batch: batch.sub_batch(range),
             });
         }
-        stamp(&mut out, child, |p, rel| p.rel = Some(rel));
+        stamp(&mut out, child, 0, |p, rel| p.rel = Some(rel));
         out
     };
     let pkts: Vec<Vec<VectorAggregationPacket>> = streams

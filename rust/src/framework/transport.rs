@@ -51,8 +51,9 @@ use crate::switch::reliability::Admit;
 use crate::switch::{CreditPolicy, DedupStats, IngestSink, SwitchAggSwitch, VectorSink};
 
 /// Ack wire footprint: the L2/L3 envelope plus the encoded `AggAck`
-/// record (tag 1 B + tree 4 B + child 2 B + cum_seq 4 B + credit 2 B).
-pub const ACK_WIRE_LEN: u64 = HEADER_OVERHEAD as u64 + 13;
+/// record (tag 1 B + tree 4 B + child 2 B + epoch 2 B + cum_seq 4 B +
+/// credit 2 B).
+pub const ACK_WIRE_LEN: u64 = HEADER_OVERHEAD as u64 + 15;
 
 /// Credit discipline of one session (see module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -145,7 +146,7 @@ impl TransportConfig {
         self
     }
 
-    fn sender_for(&self, total_packets: usize) -> AdaptiveSender {
+    pub(crate) fn sender_for(&self, total_packets: usize) -> AdaptiveSender {
         let rtt = RttEstimator::new(self.init_rto_s, self.min_rto_s);
         match self.mode {
             CreditMode::Adaptive => AdaptiveSender::adaptive(total_packets, self.window, rtt),
@@ -155,7 +156,7 @@ impl TransportConfig {
 }
 
 /// Transport counters for one co-simulated hop.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct NetHopStats {
     /// First transmissions (= packets in the loss-free schedule).
     pub first_tx: u64,
@@ -239,24 +240,24 @@ pub struct TransportVectorRun {
 // two hops' traffic distinguishable so a straggler from a finished hop
 // (late retransmission or duplicate still in flight) is recognized and
 // dropped instead of corrupting the next hop's bookkeeping.
-const KIND_INGRESS_DATA: u64 = 1;
-const KIND_INGRESS_ACK: u64 = 2;
-const KIND_EGRESS_DATA: u64 = 3;
-const KIND_EGRESS_ACK: u64 = 4;
+pub(crate) const KIND_INGRESS_DATA: u64 = 1;
+pub(crate) const KIND_INGRESS_ACK: u64 = 2;
+pub(crate) const KIND_EGRESS_DATA: u64 = 3;
+pub(crate) const KIND_EGRESS_ACK: u64 = 4;
 
-fn tag(kind: u64, child: u16, idx: u32) -> u64 {
+pub(crate) fn tag(kind: u64, child: u16, idx: u32) -> u64 {
     (kind << 56) | ((child as u64) << 32) | idx as u64
 }
 
-fn tag_kind(t: u64) -> u64 {
+pub(crate) fn tag_kind(t: u64) -> u64 {
     t >> 56
 }
 
-fn tag_child(t: u64) -> u16 {
+pub(crate) fn tag_child(t: u64) -> u16 {
     ((t >> 32) & 0xFFFF) as u16
 }
 
-fn tag_idx(t: u64) -> u32 {
+pub(crate) fn tag_idx(t: u64) -> u32 {
     t as u32
 }
 
@@ -266,7 +267,7 @@ fn tag_idx(t: u64) -> u32 {
 /// payload and returns the ack to send back.  Every arrival is
 /// reacted to individually — acks clock the windows open, drained-
 /// network gaps jump straight to the earliest retransmission deadline.
-fn drive_hop(
+pub(crate) fn drive_hop(
     sim: &mut NetSim,
     cfg: &TransportConfig,
     lens: &[Vec<u64>],
@@ -420,7 +421,10 @@ fn drive_hop(
 /// Build the session's network: a star whose hub is the aggregating
 /// switch, `children` mapper hosts, one reducer host, with the config's
 /// loss models installed on every link class before any traffic.
-fn session_net(children: usize, cfg: &TransportConfig) -> (NetSim, NodeId, Vec<NodeId>, NodeId) {
+pub(crate) fn session_net(
+    children: usize,
+    cfg: &TransportConfig,
+) -> (NetSim, NodeId, Vec<NodeId>, NodeId) {
     let (topo, hub, hosts) = Topology::star(children + 1);
     let mut sim = NetSim::new(topo);
     let mappers = hosts[..children].to_vec();
@@ -434,7 +438,7 @@ fn session_net(children: usize, cfg: &TransportConfig) -> (NetSim, NodeId, Vec<N
     (sim, hub, mappers, reducer)
 }
 
-fn apply_session_policy(sw: &mut SwitchAggSwitch, cfg: &TransportConfig) {
+pub(crate) fn apply_session_policy(sw: &mut SwitchAggSwitch, cfg: &TransportConfig) {
     sw.set_rel_window(cfg.window);
     sw.set_credit_policy(match cfg.mode {
         CreditMode::Adaptive => CreditPolicy::Backpressure,
@@ -461,7 +465,7 @@ pub fn run_transport_scalar(
         .enumerate()
         .map(|(c, s)| {
             let mut v = AggregationPacket::pack_stream(tree, op, s, true);
-            stamp(&mut v, c as u16, |p, rel| p.rel = Some(rel));
+            stamp(&mut v, c as u16, 0, |p, rel| p.rel = Some(rel));
             v
         })
         .collect();
@@ -497,7 +501,7 @@ pub fn run_transport_scalar(
     egress_pairs.extend_from_slice(&sink.forwarded);
     egress_pairs.extend_from_slice(&sink.flushed);
     let mut epkts = AggregationPacket::pack_stream(tree, op, &egress_pairs, true);
-    stamp(&mut epkts, 0, |p, rel| p.rel = Some(rel));
+    stamp(&mut epkts, 0, 0, |p, rel| p.rel = Some(rel));
     let elens = vec![epkts.iter().map(|p| p.wire_len() as u64).collect::<Vec<u64>>()];
     let mut ep = Endpoint::new(Vec::<KvPair>::new(), cfg.window);
     let hub_src = [hub];
@@ -559,7 +563,7 @@ pub fn run_transport_vector(
                 batch: batch.sub_batch(range),
             });
         }
-        stamp(&mut out, child, |p, rel| p.rel = Some(rel));
+        stamp(&mut out, child, 0, |p, rel| p.rel = Some(rel));
         out
     };
     let pkts: Vec<Vec<VectorAggregationPacket>> = streams

@@ -3,7 +3,7 @@
 //! ```text
 //! switchagg exp <id> [--scale N]     regenerate a paper table/figure
 //!     ids: eq1 fig2a fig2b fig9 table2 table3 fig10 fig11 ablations sec7
-//!          allreduce loss incast all
+//!          allreduce loss incast faults all
 //! switchagg wordcount [--bytes 8MB] [--vocab 20000] [--no-xla]
 //!     end-to-end WordCount through the simulated testbed
 //! switchagg selftest                 quick whole-stack smoke test
@@ -45,7 +45,7 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage:\n  switchagg exp <eq1|fig2a|fig2b|fig9|table2|table3|fig10|fig11|ablations|sec7|allreduce|loss|incast|all> [--scale N]\n  switchagg wordcount [--bytes 8MB] [--vocab 20000] [--no-xla]\n  switchagg selftest"
+        "usage:\n  switchagg exp <eq1|fig2a|fig2b|fig9|table2|table3|fig10|fig11|ablations|sec7|allreduce|loss|incast|faults|all> [--scale N]\n  switchagg wordcount [--bytes 8MB] [--vocab 20000] [--no-xla]\n  switchagg selftest"
     );
 }
 
@@ -80,6 +80,7 @@ fn cmd_exp(args: &Args) -> i32 {
         "allreduce" => experiments::sec_allreduce::run(scale),
         "loss" => experiments::sec_loss::run(scale),
         "incast" => experiments::sec_incast::run(scale),
+        "faults" => experiments::sec_faults::run(scale),
         other => {
             eprintln!("unknown experiment {other:?}");
             std::process::exit(2);
@@ -88,7 +89,7 @@ fn cmd_exp(args: &Args) -> i32 {
     if id == "all" {
         for id in [
             "eq1", "fig2a", "fig2b", "fig9", "table2", "table3", "fig10", "fig11",
-            "ablations", "sec7", "allreduce", "loss", "incast",
+            "ablations", "sec7", "allreduce", "loss", "incast", "faults",
         ] {
             run_one(id);
         }

@@ -1,0 +1,267 @@
+//! Deterministic fault plans for the chaos co-simulation
+//! (`framework::chaos`).
+//!
+//! A [`FaultPlan`] is a pure schedule — *what* breaks and *when* — with
+//! no simulation state of its own: the chaos driver queries it at every
+//! delivery and applies the consequences (discarding the packet and
+//! noting a `faulted_drop`, rebasing senders onto a new epoch, failing
+//! over to software aggregation).  Keeping the plan side-effect-free
+//! has two payoffs: an empty plan provably cannot perturb a run (the
+//! zero-fault property test holds byte-identically, stats included),
+//! and a seeded [`FaultPlan::chaos`] plan is reproducible across
+//! machines and engines.
+//!
+//! The fault model, matching the failure domains a SwitchAgg deployment
+//! actually has:
+//!
+//! * **Switch crash** (at most one, optionally restarting): the
+//!   aggregation device loses *all* FPE/BPE/dedup soft state; while
+//!   down, every aggregation packet and ack it would handle is
+//!   discarded.  The underlying L2 forwarding fabric is modeled as
+//!   surviving (a SwitchAgg device that bricks its forwarding plane
+//!   takes the whole rack down — that failure is indistinguishable
+//!   from partitioning every host and is out of scope).
+//! * **Link down intervals**: a child's access link drops everything in
+//!   both directions during `[from, until)`.
+//! * **Mapper crash**: the host stops sending (and acking) forever at
+//!   `at_s`; its partial stream must not contaminate the aggregate.
+//! * **Straggler**: a mapper starts its stream late by
+//!   `(slowdown − 1) ×` the stream's nominal serialization time — the
+//!   discrete-event analogue of "this worker runs `slowdown×` slower",
+//!   concentrated at the head of the stream where it stresses EoT
+//!   quorum logic the hardest.
+
+use crate::util::rng::Pcg32;
+
+/// A scheduled switch outage: down from `at_s`, back (with empty soft
+/// state) at `restart_at_s`, or dead forever if `None`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SwitchCrash {
+    pub at_s: f64,
+    pub restart_at_s: Option<f64>,
+}
+
+/// Deterministic schedule of injected faults for one chaos run.
+/// Construct with the builder methods; query with the `*_at`/`*_down`
+/// predicates.  All times are simulated seconds on the run's clock.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    switch_crash: Option<SwitchCrash>,
+    /// `(child, from_s, until_s)` — the child's access link is dead in
+    /// `[from, until)`, both directions.
+    link_down: Vec<(u16, f64, f64)>,
+    /// `(child, at_s)` — the mapper halts forever at `at_s`.
+    mapper_crash: Vec<(u16, f64)>,
+    /// `(child, slowdown ≥ 1)` — start-of-stream delay factor.
+    stragglers: Vec<(u16, f64)>,
+}
+
+impl FaultPlan {
+    /// The empty plan: scheduling nothing is the fault-free run.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// True iff no fault of any kind is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.switch_crash.is_none()
+            && self.link_down.is_empty()
+            && self.mapper_crash.is_empty()
+            && self.stragglers.iter().all(|&(_, f)| f <= 1.0)
+    }
+
+    /// Schedule the switch to crash at `at_s`, restarting (with empty
+    /// soft state) at `restart_at_s`, or staying dead if `None`.
+    pub fn with_switch_crash(mut self, at_s: f64, restart_at_s: Option<f64>) -> Self {
+        assert!(at_s >= 0.0 && at_s.is_finite(), "bad crash time {at_s}");
+        if let Some(r) = restart_at_s {
+            assert!(r > at_s, "restart ({r}) must follow the crash ({at_s})");
+        }
+        assert!(self.switch_crash.is_none(), "at most one switch crash");
+        self.switch_crash = Some(SwitchCrash {
+            at_s,
+            restart_at_s,
+        });
+        self
+    }
+
+    /// Take the child's access link down (both directions) during
+    /// `[from_s, until_s)`.
+    pub fn with_link_down(mut self, child: u16, from_s: f64, until_s: f64) -> Self {
+        assert!(from_s >= 0.0 && until_s > from_s, "bad outage [{from_s}, {until_s})");
+        self.link_down.push((child, from_s, until_s));
+        self
+    }
+
+    /// Halt the child's mapper forever at `at_s`.
+    pub fn with_mapper_crash(mut self, child: u16, at_s: f64) -> Self {
+        assert!(at_s >= 0.0 && at_s.is_finite(), "bad crash time {at_s}");
+        self.mapper_crash.push((child, at_s));
+        self
+    }
+
+    /// Slow the child's mapper down by `slowdown ≥ 1` (1 = no fault).
+    pub fn with_straggler(mut self, child: u16, slowdown: f64) -> Self {
+        assert!(slowdown >= 1.0 && slowdown.is_finite(), "slowdown {slowdown} < 1");
+        self.stragglers.push((child, slowdown));
+        self
+    }
+
+    /// A seeded random plan over `children` mappers within `[0,
+    /// horizon_s)`: maybe a switch crash (usually recovering), maybe a
+    /// link outage, maybe a straggler.  Same seed ⇒ same plan,
+    /// everywhere.
+    pub fn chaos(seed: u64, children: u16, horizon_s: f64) -> Self {
+        assert!(children >= 1 && horizon_s > 0.0);
+        let mut rng = Pcg32::new(seed);
+        let mut plan = Self::none();
+        if rng.gen_bool(0.5) {
+            let at = rng.next_f64() * horizon_s * 0.5;
+            let restart = rng
+                .gen_bool(0.75)
+                .then(|| at + (0.05 + rng.next_f64() * 0.45) * horizon_s);
+            plan = plan.with_switch_crash(at, restart);
+        }
+        if rng.gen_bool(0.5) {
+            let child = rng.gen_range_u64(children as u64) as u16;
+            let from = rng.next_f64() * horizon_s * 0.5;
+            let len = (0.05 + rng.next_f64() * 0.25) * horizon_s;
+            plan = plan.with_link_down(child, from, from + len);
+        }
+        if rng.gen_bool(0.5) {
+            let child = rng.gen_range_u64(children as u64) as u16;
+            plan = plan.with_straggler(child, 1.0 + rng.next_f64() * 4.0);
+        }
+        plan
+    }
+
+    /// Panic if any scheduled fault names a child outside
+    /// `0..children` — a plan/session mismatch is a harness bug, not a
+    /// degraded run.
+    pub fn validate(&self, children: u16) {
+        let ok = |c: u16| {
+            assert!(c < children, "fault plan names child {c} of {children}");
+        };
+        self.link_down.iter().for_each(|&(c, _, _)| ok(c));
+        self.mapper_crash.iter().for_each(|&(c, _)| ok(c));
+        self.stragglers.iter().for_each(|&(c, _)| ok(c));
+    }
+
+    /// The scheduled switch crash, if any.
+    pub fn switch_crash(&self) -> Option<SwitchCrash> {
+        self.switch_crash
+    }
+
+    /// Is the switch down (crashed and not yet restarted) at `t`?
+    pub fn switch_down(&self, t: f64) -> bool {
+        match self.switch_crash {
+            Some(c) => t >= c.at_s && c.restart_at_s.map_or(true, |r| t < r),
+            None => false,
+        }
+    }
+
+    /// Is the switch dead with no restart ever coming at `t`?
+    pub fn switch_dead(&self, t: f64) -> bool {
+        matches!(
+            self.switch_crash,
+            Some(SwitchCrash { at_s, restart_at_s: None }) if t >= at_s
+        )
+    }
+
+    /// Is the child's access link down at `t` (either direction)?
+    pub fn link_down(&self, child: u16, t: f64) -> bool {
+        self.link_down
+            .iter()
+            .any(|&(c, from, until)| c == child && t >= from && t < until)
+    }
+
+    /// Is the child's mapper still alive at `t`?
+    pub fn mapper_alive(&self, child: u16, t: f64) -> bool {
+        !self
+            .mapper_crash
+            .iter()
+            .any(|&(c, at)| c == child && t >= at)
+    }
+
+    /// The child's slowdown factor (1.0 = full speed).  Multiple
+    /// straggler entries for one child compound.
+    pub fn straggle_factor(&self, child: u16) -> f64 {
+        self.stragglers
+            .iter()
+            .filter(|&&(c, _)| c == child)
+            .map(|&(_, f)| f)
+            .product::<f64>()
+            .max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_schedules_nothing() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert!(!p.switch_down(1e9));
+        assert!(!p.switch_dead(1e9));
+        assert!(!p.link_down(0, 1e9));
+        assert!(p.mapper_alive(0, 1e9));
+        assert_eq!(p.straggle_factor(0), 1.0);
+        p.validate(1);
+    }
+
+    #[test]
+    fn switch_crash_window_and_restart() {
+        let p = FaultPlan::none().with_switch_crash(1.0, Some(2.0));
+        assert!(!p.is_empty());
+        assert!(!p.switch_down(0.5));
+        assert!(p.switch_down(1.0), "down at the crash instant");
+        assert!(p.switch_down(1.999));
+        assert!(!p.switch_down(2.0), "back at the restart instant");
+        assert!(!p.switch_dead(1.5), "a restart is scheduled");
+        let dead = FaultPlan::none().with_switch_crash(1.0, None);
+        assert!(dead.switch_down(1e9));
+        assert!(dead.switch_dead(1.0));
+        assert!(!dead.switch_dead(0.5));
+    }
+
+    #[test]
+    fn link_and_mapper_and_straggler_queries() {
+        let p = FaultPlan::none()
+            .with_link_down(2, 1.0, 2.0)
+            .with_mapper_crash(1, 3.0)
+            .with_straggler(0, 4.0)
+            .with_straggler(0, 2.0);
+        assert!(p.link_down(2, 1.5) && !p.link_down(2, 2.0));
+        assert!(!p.link_down(0, 1.5), "outage is per-child");
+        assert!(p.mapper_alive(1, 2.9) && !p.mapper_alive(1, 3.0));
+        assert_eq!(p.straggle_factor(0), 8.0, "stragglers compound");
+        assert_eq!(p.straggle_factor(1), 1.0);
+        p.validate(3);
+    }
+
+    #[test]
+    #[should_panic(expected = "names child 5")]
+    fn validate_rejects_out_of_range_children() {
+        FaultPlan::none().with_straggler(5, 2.0).validate(4);
+    }
+
+    #[test]
+    #[should_panic(expected = "must follow the crash")]
+    fn restart_before_crash_is_rejected() {
+        FaultPlan::none().with_switch_crash(2.0, Some(1.0));
+    }
+
+    #[test]
+    fn seeded_chaos_plans_are_deterministic() {
+        for seed in 0..32 {
+            let a = FaultPlan::chaos(seed, 8, 1e-3);
+            let b = FaultPlan::chaos(seed, 8, 1e-3);
+            assert_eq!(a, b, "seed {seed} must reproduce its plan");
+            a.validate(8);
+        }
+        // The seeded space actually exercises faults.
+        assert!((0..32).any(|s| !FaultPlan::chaos(s, 8, 1e-3).is_empty()));
+    }
+}

@@ -2,12 +2,14 @@
 //! and shortest-path routing — the substrate the controller builds
 //! aggregation trees over (§3 "the physical topology of the network").
 
+pub mod faults;
 pub mod loss;
 pub mod netsim;
 pub mod partition;
 pub mod routing;
 pub mod topology;
 
+pub use faults::{FaultPlan, SwitchCrash};
 pub use loss::{LossChannel, LossConfig};
 pub use netsim::{Delivery, NetSim};
 pub use partition::{run_monolithic, run_tree_partitioned, SendReq, TreeSimResult};

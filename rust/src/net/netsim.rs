@@ -72,6 +72,13 @@ pub struct LinkStats {
     pub dropped: u64,
     /// Packets the link layer duplicated (both copies serialized).
     pub duplicated: u64,
+    /// Packets discarded because the link or its endpoint device was
+    /// down (fault injection; see `net::faults`).  The network engine
+    /// itself never sets this — the co-simulation driver notes the
+    /// drop at delivery time via [`NetSim::note_faulted_drop`] — so
+    /// it is zero in every fault-free run and identical across the
+    /// serial and sharded switch engines by construction.
+    pub faulted_drops: u64,
 }
 
 /// One directed link's in-flight packets: a FIFO arena, sorted by
@@ -507,6 +514,29 @@ impl NetSim {
             .zip(self.links.iter())
             .map(|(&(a, b), s)| ((a, b), s.clone()))
             .collect()
+    }
+
+    /// Record that a packet which arrived over `from → to` was
+    /// discarded because the link or the receiving device was down
+    /// (fault injection).  Accounting only — no timing or loss-channel
+    /// state changes, so noting a fault can never perturb the engine's
+    /// event stream.
+    pub fn note_faulted_drop(&mut self, from: NodeId, to: NodeId) {
+        let lid = self.link_id(from, to);
+        self.links[lid].faulted_drops += 1;
+    }
+
+    /// Total fault-injected drops across all links (zero in any
+    /// fault-free run).
+    pub fn faulted_drops(&self) -> u64 {
+        self.links.iter().map(|s| s.faulted_drops).sum()
+    }
+
+    /// Serialization time of `bytes` on this fabric's links — exposed
+    /// so fault plans can express straggler slowdowns relative to a
+    /// stream's nominal (loss-free, unqueued) transmission time.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        self.link.transfer_secs(bytes)
     }
 }
 

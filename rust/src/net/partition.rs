@@ -82,6 +82,7 @@ fn fold_stats(
         e.busy_until_s = e.busy_until_s.max(s.busy_until_s);
         e.dropped += s.dropped;
         e.duplicated += s.duplicated;
+        e.faulted_drops += s.faulted_drops;
     }
 }
 

@@ -25,8 +25,8 @@ pub use packet::{
     TreeConfig, AGG_FIXED_LEN, HEADER_OVERHEAD, MAX_AGG_PAYLOAD, MTU,
 };
 pub use reliable::{
-    AdaptiveSender, AggAckPacket, RelHeader, RelWindow, ReliableSender, RttEstimator, INIT_CWND,
-    REL_WINDOW, RETX_TIMEOUT_TICKS,
+    AdaptiveSender, AggAckPacket, RelHeader, RelWindow, ReliableSender, RttEstimator,
+    TransportError, INIT_CWND, REL_WINDOW, RETX_TIMEOUT_TICKS,
 };
 pub use types::{AggOp, TreeId, Value};
 pub use vector::{

@@ -30,7 +30,7 @@ pub const AGG_FIXED_LEN: usize = 8;
 pub(crate) const FLAG_EOT: u8 = 1;
 /// Vector packets only: a 2-byte lane count follows the pair count.
 pub(crate) const FLAG_MULTI_LANE: u8 = 1 << 1;
-/// A [`RelHeader`] (child + seq) follows the fixed fields.
+/// A [`RelHeader`] (child + epoch + seq) follows the fixed fields.
 pub(crate) const FLAG_REL: u8 = 1 << 2;
 
 /// `Launch` — master → controller (Table 1): worker counts + addresses.
@@ -272,6 +272,7 @@ impl Packet {
             Packet::AggAck(a) => {
                 wire::put_u32(&mut buf, a.tree.0);
                 wire::put_u16(&mut buf, a.child);
+                wire::put_u16(&mut buf, a.epoch);
                 wire::put_u32(&mut buf, a.cum_seq);
                 wire::put_u16(&mut buf, a.credit);
             }
@@ -362,6 +363,7 @@ impl Packet {
             TAG_AGG_ACK => Packet::AggAck(AggAckPacket {
                 tree: TreeId(r.u32()?),
                 child: r.u16()?,
+                epoch: r.u16()?,
                 cum_seq: r.u32()?,
                 credit: r.u16()?,
             }),
@@ -421,13 +423,18 @@ mod tests {
                 tree: TreeId(7),
                 op: AggOp::Sum,
                 eot: false,
-                rel: Some(RelHeader { child: 3, seq: 41 }),
+                rel: Some(RelHeader {
+                    child: 3,
+                    epoch: 1,
+                    seq: 41,
+                }),
                 pairs: sample_pairs(2),
             }),
             Packet::Data(DataPacket { payload_len: 1400 }),
             Packet::AggAck(AggAckPacket {
                 tree: TreeId(7),
                 child: 3,
+                epoch: 1,
                 cum_seq: 41,
                 credit: 900,
             }),
@@ -520,7 +527,12 @@ mod tests {
         wire::put_u8(&mut buf, 0);
         wire::put_u8(&mut buf, FLAG_REL);
         wire::put_u16(&mut buf, u16::MAX);
-        RelHeader { child: 0, seq: 1 }.encode(&mut buf);
+        RelHeader {
+            child: 0,
+            epoch: 0,
+            seq: 1,
+        }
+        .encode(&mut buf);
         assert!(matches!(
             Packet::decode(&buf),
             Err(PacketDecodeError::Kv(_))
@@ -546,7 +558,11 @@ mod tests {
         // The W = 1 byte-identity must survive the reliability record:
         // both tags put the RelHeader in the same position.
         let pairs = sample_pairs(4);
-        let rel = Some(RelHeader { child: 2, seq: 9 });
+        let rel = Some(RelHeader {
+            child: 2,
+            epoch: 4,
+            seq: 9,
+        });
         let scalar = Packet::Aggregation(AggregationPacket {
             tree: TreeId(3),
             op: AggOp::Sum,

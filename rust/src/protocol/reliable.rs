@@ -10,16 +10,28 @@
 //! host-side retransmission with switch-side dedup.  This module is
 //! the host half of that design:
 //!
-//! * [`RelHeader`] — a 6-byte per-packet record (sender child id +
-//!   per-tree sequence number) carried by both the scalar and the
-//!   W-lane vector aggregation packets behind a flag bit, so
+//! * [`RelHeader`] — an 8-byte per-packet record (sender child id +
+//!   job epoch + per-tree sequence number) carried by both the scalar
+//!   and the W-lane vector aggregation packets behind a flag bit, so
 //!   unreliable streams stay byte-identical on the wire;
 //! * [`AggAckPacket`] — the switch's cumulative-ack / credit record
 //!   (packet tag 8), lightweight enough for a dataplane to emit: one
-//!   `(tree, child, cum_seq, credit)` tuple, no selective-ack maps;
+//!   `(tree, child, epoch, cum_seq, credit)` tuple, no selective-ack
+//!   maps;
 //! * [`ReliableSender`] — the sender-side retransmission queue: a
 //!   credit-limited sliding window over the packetized stream with a
 //!   timeout-driven retransmit scan.
+//!
+//! The *epoch* (incarnation number) is the fault-tolerance fence: a
+//! switch restart loses all FPE/BPE/dedup soft state, so the
+//! controller bumps the tree's epoch, the switch rejects packets
+//! stamped with an older epoch (`switch::switch_sim` counts them as
+//! `stale_epoch_drops`), and senders [`AdaptiveSender::rebase`] onto
+//! the new epoch and replay the stream from seq 1.  Stale
+//! retransmissions from the old incarnation can therefore neither be
+//! double-counted (fenced at admission) nor silently complete a hole
+//! (their acks carry the old epoch and are ignored by
+//! [`AdaptiveSender::on_ack_epoch`]).
 //!
 //! The switch half (the per-`(tree, child)` dedup window that makes
 //! retransmissions idempotent) lives in `switch::reliability`; the
@@ -76,29 +88,37 @@ impl Default for RelWindow {
 pub const RETX_TIMEOUT_TICKS: u64 = 2;
 
 /// Per-packet reliability record: which child-port stream the packet
-/// belongs to and its 1-based sequence number within that stream.
+/// belongs to, the job epoch (switch incarnation) it was sent under,
+/// and its 1-based sequence number within that stream.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct RelHeader {
     /// Sender's child index on the aggregation tree (= switch ingress
     /// port of the stream).
     pub child: u16,
+    /// Job epoch (incarnation fence): the switch drops packets whose
+    /// epoch does not match its current one for the tree.  Epoch 0 is
+    /// the initial incarnation, so pre-fault-tolerance captures decode
+    /// as epoch 0.
+    pub epoch: u16,
     /// 1-based sequence number within this `(tree, child)` stream.
     pub seq: u32,
 }
 
 impl RelHeader {
-    /// Wire footprint: child (2 B) + seq (4 B).
-    pub const WIRE_LEN: usize = 6;
+    /// Wire footprint: child (2 B) + epoch (2 B) + seq (4 B).
+    pub const WIRE_LEN: usize = 8;
 
     pub fn encode(&self, buf: &mut Vec<u8>) {
         wire::put_u16(buf, self.child);
+        wire::put_u16(buf, self.epoch);
         wire::put_u32(buf, self.seq);
     }
 
     pub fn decode(r: &mut Reader<'_>) -> Result<Self, Truncated> {
         let child = r.u16()?;
+        let epoch = r.u16()?;
         let seq = r.u32()?;
-        Ok(Self { child, seq })
+        Ok(Self { child, epoch, seq })
     }
 }
 
@@ -110,8 +130,23 @@ impl RelHeader {
 pub struct AggAckPacket {
     pub tree: TreeId,
     pub child: u16,
+    /// The switch's current epoch for the tree — lets a rebased sender
+    /// discard acks emitted by (or for traffic of) a dead incarnation.
+    pub epoch: u16,
     pub cum_seq: u32,
     pub credit: u16,
+}
+
+/// Typed transport failures surfaced by the bounded-retransmission
+/// senders (and the chaos driver built on them) instead of
+/// retransmitting into a dead peer forever.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum TransportError {
+    /// A packet exhausted its retransmission budget without being
+    /// cumulatively acknowledged: the peer (or the path to it) is
+    /// presumed dead.
+    #[error("peer unresponsive: seq {seq} unacked after {retries} retransmissions")]
+    PeerUnresponsive { seq: u32, retries: u32 },
 }
 
 /// Sender-side retransmission queue for one packetized `(tree, child)`
@@ -130,8 +165,15 @@ pub struct ReliableSender {
     /// Latest advertised credit (window slots beyond `cum_acked`).
     credit: u32,
     timeout: u64,
-    /// Unacknowledged `(seq, last_sent_tick)`; bounded by the window.
-    inflight: Vec<(u32, u64)>,
+    /// Unacknowledged `(seq, last_sent_tick, retries)`; bounded by the
+    /// window.
+    inflight: Vec<(u32, u64, u32)>,
+    /// Per-packet retransmission budget; `None` retries forever (the
+    /// pre-fault-tolerance behavior).
+    max_retries: Option<u32>,
+    /// Latched give-up: set when a packet exhausts `max_retries`, after
+    /// which the sender stops transmitting entirely.
+    failure: Option<TransportError>,
     /// First transmissions performed.
     pub first_tx: u64,
     /// Timeout-driven retransmissions performed.
@@ -154,9 +196,25 @@ impl ReliableSender {
             credit: window.get(),
             timeout,
             inflight: Vec::new(),
+            max_retries: None,
+            failure: None,
             first_tx: 0,
             retransmissions: 0,
         }
+    }
+
+    /// Bound retransmissions: once any packet has been retransmitted
+    /// `max` times without a covering ack, the sender latches a
+    /// [`TransportError`] (see [`Self::failure`]) and goes quiet.
+    pub fn with_max_retries(mut self, max: u32) -> Self {
+        assert!(max >= 1, "a zero retry budget could never retransmit");
+        self.max_retries = Some(max);
+        self
+    }
+
+    /// The latched give-up error, if the retry budget was exhausted.
+    pub fn failure(&self) -> Option<TransportError> {
+        self.failure
     }
 
     /// Currently advertised credit (window slots beyond `cum_acked`).
@@ -172,23 +230,39 @@ impl ReliableSender {
         }
         self.cum_acked = cum_seq;
         self.credit = credit as u32;
-        self.inflight.retain(|&(seq, _)| seq > cum_seq);
+        self.inflight.retain(|&(seq, _, _)| seq > cum_seq);
     }
 
     /// Sequence numbers to put on the wire at tick `now`, appended to
     /// `out`: timed-out retransmissions first (stream order), then new
-    /// sequence numbers while the credit window has room.
+    /// sequence numbers while the credit window has room.  A sender
+    /// whose retry budget is exhausted sends nothing.
     pub fn poll(&mut self, now: u64, out: &mut Vec<u32>) {
-        for (seq, sent_at) in self.inflight.iter_mut() {
+        if self.failure.is_some() {
+            return;
+        }
+        let polled_from = out.len();
+        for (seq, sent_at, retries) in self.inflight.iter_mut() {
             if now.saturating_sub(*sent_at) >= self.timeout {
+                if let Some(max) = self.max_retries {
+                    if *retries >= max {
+                        self.failure = Some(TransportError::PeerUnresponsive {
+                            seq: *seq,
+                            retries: *retries,
+                        });
+                        out.truncate(polled_from); // go quiet: retract this poll
+                        return;
+                    }
+                }
                 *sent_at = now;
+                *retries += 1;
                 self.retransmissions += 1;
                 out.push(*seq);
             }
         }
         while self.next_new <= self.total && self.next_new - self.cum_acked <= self.credit {
             out.push(self.next_new);
-            self.inflight.push((self.next_new, now));
+            self.inflight.push((self.next_new, now, 0));
             self.first_tx += 1;
             self.next_new += 1;
         }
@@ -300,6 +374,8 @@ struct Inflight {
     /// Karn's rule: once retransmitted, this packet can never yield an
     /// RTT sample (its ack is ambiguous between transmissions).
     retransmitted: bool,
+    /// Retransmissions of this packet so far (give-up accounting).
+    retries: u32,
 }
 
 /// Continuous-time reliable sender for the event-driven co-simulation
@@ -327,6 +403,14 @@ pub struct AdaptiveSender {
     adaptive: bool,
     rtt: RttEstimator,
     inflight: Vec<Inflight>,
+    /// Epoch this sender stamps on outgoing packets; acks from other
+    /// epochs are ignored by [`Self::on_ack_epoch`].
+    epoch: u16,
+    /// Per-packet retransmission budget; `None` retries forever.
+    max_retries: Option<u32>,
+    /// Latched give-up (cleared by [`Self::rebase`], since a new
+    /// incarnation means the peer is presumed back).
+    failure: Option<TransportError>,
     /// First transmissions performed.
     pub first_tx: u64,
     /// Timeout-driven retransmissions performed.
@@ -366,11 +450,70 @@ impl AdaptiveSender {
             adaptive,
             rtt,
             inflight: Vec::new(),
+            epoch: 0,
+            max_retries: None,
+            failure: None,
             first_tx: 0,
             retransmissions: 0,
             timeouts: 0,
             cwnd_peak: cwnd,
         }
+    }
+
+    /// Bound retransmissions: once any packet has been retransmitted
+    /// `max` times without a covering ack, the sender latches a
+    /// [`TransportError`] (see [`Self::failure`]) and goes quiet until
+    /// rebased onto a new epoch.
+    pub fn with_max_retries(mut self, max: u32) -> Self {
+        assert!(max >= 1, "a zero retry budget could never retransmit");
+        self.max_retries = Some(max);
+        self
+    }
+
+    /// The latched give-up error, if the retry budget was exhausted.
+    pub fn failure(&self) -> Option<TransportError> {
+        self.failure
+    }
+
+    /// Epoch stamped on this sender's packets.
+    pub fn epoch(&self) -> u16 {
+        self.epoch
+    }
+
+    /// Sequence numbers opened so far (= highest seq ever transmitted).
+    pub fn sent(&self) -> u32 {
+        self.next_new - 1
+    }
+
+    /// Rebase onto a new switch incarnation: forget every ack (the new
+    /// incarnation has aggregated nothing), clear the in-flight set
+    /// (those transmissions carry the old epoch and will be fenced),
+    /// restore full credit, and replay the stream from seq 1 on the
+    /// next [`Self::poll`].  The congestion state restarts from
+    /// [`INIT_CWND`] in adaptive mode — the path's capacity may have
+    /// changed across the outage — and any give-up latch is cleared.
+    pub fn rebase(&mut self, epoch: u16) {
+        assert!(epoch > self.epoch, "rebase must advance the epoch");
+        self.epoch = epoch;
+        self.cum_acked = 0;
+        self.next_new = 1;
+        self.inflight.clear();
+        self.credit = self.window;
+        self.failure = None;
+        self.rtt.reset_backoff();
+        if self.adaptive {
+            self.cwnd = INIT_CWND.min(self.window as f64);
+        }
+    }
+
+    /// Epoch-checked ack application: acks stamped with a different
+    /// epoch (emitted by, or for traffic of, a dead incarnation) are
+    /// dropped without touching window state.
+    pub fn on_ack_epoch(&mut self, epoch: u16, cum_seq: u32, credit: u16, now_s: f64) {
+        if epoch != self.epoch {
+            return;
+        }
+        self.on_ack(cum_seq, credit, now_s);
     }
 
     /// Apply one cumulative ack at `now_s`.  Stale (reordered) acks
@@ -416,12 +559,27 @@ impl AdaptiveSender {
     /// multiplicative decrease + RTO backoff per timeout event), then
     /// new sequence numbers while the effective window has room.
     pub fn poll(&mut self, now_s: f64, out: &mut Vec<u32>) {
+        if self.failure.is_some() {
+            return;
+        }
+        let polled_from = out.len();
         let rto = self.rtt.rto_s();
         let mut timed_out = false;
         for p in self.inflight.iter_mut() {
             if now_s + 1e-12 >= p.sent_at_s + rto {
+                if let Some(max) = self.max_retries {
+                    if p.retries >= max {
+                        self.failure = Some(TransportError::PeerUnresponsive {
+                            seq: p.seq,
+                            retries: p.retries,
+                        });
+                        out.truncate(polled_from); // go quiet: retract this poll
+                        return;
+                    }
+                }
                 p.sent_at_s = now_s;
                 p.retransmitted = true;
+                p.retries += 1;
                 self.retransmissions += 1;
                 timed_out = true;
                 out.push(p.seq);
@@ -456,6 +614,7 @@ impl AdaptiveSender {
                 seq: self.next_new,
                 sent_at_s: now_s,
                 retransmitted: false,
+                retries: 0,
             });
             self.first_tx += 1;
             self.next_new += 1;
@@ -570,6 +729,7 @@ mod tests {
     fn rel_header_round_trips() {
         let h = RelHeader {
             child: 7,
+            epoch: 3,
             seq: 0xDEAD_BEEF,
         };
         let mut buf = Vec::new();
@@ -721,5 +881,84 @@ mod tests {
         apolled(&mut s, 5.0);
         let d = s.next_retx_deadline().unwrap();
         assert!((d - (5.0 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tick_sender_gives_up_after_max_retries() {
+        let mut s = ReliableSender::new(3, 2).with_max_retries(2);
+        assert_eq!(polled(&mut s, 0), vec![1, 2, 3]);
+        assert_eq!(polled(&mut s, 2), vec![1, 2, 3], "retry 1");
+        assert_eq!(polled(&mut s, 4), vec![1, 2, 3], "retry 2");
+        // Budget exhausted: the sender latches a typed error and goes
+        // quiet instead of retransmitting forever.
+        assert!(polled(&mut s, 6).is_empty());
+        assert_eq!(
+            s.failure(),
+            Some(TransportError::PeerUnresponsive { seq: 1, retries: 2 })
+        );
+        assert!(polled(&mut s, 100).is_empty(), "stays quiet once failed");
+        assert_eq!(s.retransmissions, 6);
+        assert!(!s.done());
+    }
+
+    #[test]
+    fn tick_sender_ack_before_budget_exhaustion_clears_the_clock() {
+        let mut s = ReliableSender::new(2, 2).with_max_retries(1);
+        polled(&mut s, 0);
+        polled(&mut s, 2); // retry 1 on both
+        s.on_ack(2, REL_WINDOW as u16);
+        assert!(s.done());
+        assert_eq!(s.failure(), None, "acked in time: no give-up");
+    }
+
+    #[test]
+    fn adaptive_sender_gives_up_after_max_retries() {
+        let rtt = RttEstimator::new(100e-6, 1e-5);
+        let mut s = AdaptiveSender::adaptive(4, RelWindow::default(), rtt).with_max_retries(2);
+        apolled(&mut s, 0.0);
+        let mut t = 0.0;
+        // Drive time past successive (backed-off) RTOs until the latch.
+        for _ in 0..8 {
+            t += s.rtt().rto_s();
+            apolled(&mut s, t);
+            if s.failure().is_some() {
+                break;
+            }
+        }
+        assert_eq!(
+            s.failure(),
+            Some(TransportError::PeerUnresponsive { seq: 1, retries: 2 })
+        );
+        assert!(apolled(&mut s, t + 10.0).is_empty(), "quiet once failed");
+    }
+
+    #[test]
+    fn rebase_replays_the_stream_under_the_new_epoch() {
+        let rtt = RttEstimator::new(100e-6, 1e-5);
+        let mut s = AdaptiveSender::adaptive(10, RelWindow::default(), rtt).with_max_retries(1);
+        let first = apolled(&mut s, 0.0);
+        s.on_ack_epoch(0, first.len() as u32, u16::MAX, 50e-6);
+        assert_eq!(s.cum_acked(), first.len() as u32);
+        // New switch incarnation: everything must be resent from seq 1.
+        s.rebase(1);
+        assert_eq!(s.epoch(), 1);
+        assert_eq!(s.cum_acked(), 0);
+        assert_eq!(s.failure(), None);
+        let replay = apolled(&mut s, 1.0);
+        assert_eq!(replay[0], 1, "replay starts at seq 1");
+        // Acks from the dead epoch are fenced...
+        s.on_ack_epoch(0, 10, u16::MAX, 1.1);
+        assert_eq!(s.cum_acked(), 0, "stale-epoch ack ignored");
+        // ...while current-epoch acks advance the window as usual.
+        s.on_ack_epoch(1, replay.len() as u32, u16::MAX, 1.2);
+        assert_eq!(s.cum_acked(), replay.len() as u32);
+    }
+
+    #[test]
+    #[should_panic(expected = "rebase must advance the epoch")]
+    fn rebase_rejects_epoch_regression() {
+        let rtt = RttEstimator::new(100e-6, 1e-5);
+        let mut s = AdaptiveSender::adaptive(1, RelWindow::default(), rtt);
+        s.rebase(0);
     }
 }

@@ -96,6 +96,7 @@ mod tests {
             h.classify(&Packet::AggAck(crate::protocol::AggAckPacket {
                 tree: TreeId(0),
                 child: 0,
+                epoch: 0,
                 cum_seq: 0,
                 credit: 0,
             })),

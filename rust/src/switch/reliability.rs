@@ -72,6 +72,12 @@ pub struct DedupStats {
     pub admitted: u64,
     pub dup_drops: u64,
     pub out_of_window: u64,
+    /// Packets fenced because their rel header carried an epoch other
+    /// than the switch's current one for the tree (stale traffic from
+    /// a dead incarnation).  Counted before any window is consulted,
+    /// and kept across restarts (simulator accounting, not soft
+    /// state).  Zero in any fault-free run.
+    pub stale_epoch_drops: u64,
 }
 
 /// Sliding dedup window over one `(tree, child)` sequence space.
@@ -171,6 +177,10 @@ impl DedupWindow {
             admitted: self.admitted,
             dup_drops: self.dup_drops,
             out_of_window: self.out_of_window,
+            // The epoch fence sits in front of the windows (a stale
+            // packet never reaches one), so a window's own count is 0;
+            // `SwitchAggSwitch::dedup_stats` fills the tree total in.
+            stale_epoch_drops: 0,
         }
     }
 }

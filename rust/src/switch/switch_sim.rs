@@ -741,6 +741,13 @@ pub struct SwitchAggSwitch {
     /// How acks fill their credit field (constant window vs
     /// FIFO-backpressure scaled).
     credit_policy: CreditPolicy,
+    /// Per-tree job epoch (incarnation fence): reliable packets whose
+    /// rel header carries another epoch are dropped at admission.
+    /// Absent = 0, the initial incarnation.
+    epochs: BTreeMap<TreeId, u16>,
+    /// Per-tree count of epoch-fenced packets.  Simulator accounting:
+    /// unlike `epochs`/`dedup`, this survives [`Self::crash`].
+    stale_epoch: BTreeMap<TreeId, u64>,
     /// Reused sink for the stream entry points.
     sink: IngestSink,
 }
@@ -757,6 +764,8 @@ impl SwitchAggSwitch {
             dedup: BTreeMap::new(),
             rel_window: RelWindow::default(),
             credit_policy: CreditPolicy::default(),
+            epochs: BTreeMap::new(),
+            stale_epoch: BTreeMap::new(),
             sink: IngestSink::new(),
         }
     }
@@ -776,6 +785,46 @@ impl SwitchAggSwitch {
     /// the default [`CreditPolicy::WindowOnly`] is the PR 4 behavior).
     pub fn set_credit_policy(&mut self, policy: CreditPolicy) {
         self.credit_policy = policy;
+    }
+
+    /// The tree's current epoch (0 until [`Self::begin_epoch`] moves
+    /// it).
+    pub fn tree_epoch(&self, tree: TreeId) -> u16 {
+        self.epochs.get(&tree).copied().unwrap_or(0)
+    }
+
+    /// Enter a new incarnation of one tree's job: the controller bumped
+    /// the epoch (after a restart, or a membership re-plan), so every
+    /// reliable sequence space of the tree restarts — its dedup windows
+    /// are discarded and packets still carrying an older epoch are
+    /// fenced at admission from now on.  The caller is responsible for
+    /// having re-applied the tree's Configure first (engines rebuild
+    /// there); epochs may repeat (idempotent re-push) but never regress.
+    pub fn begin_epoch(&mut self, tree: TreeId, epoch: u16) {
+        let cur = self.tree_epoch(tree);
+        assert!(epoch >= cur, "epoch must not regress ({epoch} < {cur})");
+        self.epochs.insert(tree, epoch);
+        self.dedup.retain(|(t, _), _| *t != tree);
+    }
+
+    /// Simulate a switch crash: all soft state dies — aggregation
+    /// engines (FPE/BPE contents), tree configuration, dedup windows,
+    /// epoch registers, pending sink output.  What survives is what a
+    /// real device keeps across a power cycle: the static `cfg`
+    /// (hardware shape), the session's `rel_window`/`credit_policy`
+    /// (re-pushed control plane would restore them anyway), and the
+    /// stale-epoch counters (simulator accounting).  The controller
+    /// brings the device back by re-sending Configure and then
+    /// [`Self::begin_epoch`] with the bumped epoch.
+    pub fn crash(&mut self) {
+        self.header_extract = HeaderExtract::new();
+        self.forwarding = Forwarding::new();
+        self.config_module = ConfigModule::new();
+        self.trees.clear();
+        self.lane_width.clear();
+        self.dedup.clear();
+        self.epochs.clear();
+        self.sink.clear();
     }
 
     pub fn config(&self) -> &SwitchConfig {
@@ -892,6 +941,26 @@ impl SwitchAggSwitch {
         rel: crate::protocol::RelHeader,
         eot: bool,
     ) -> (bool, bool, AggAckPacket) {
+        let cur_epoch = self.tree_epoch(tree);
+        if rel.epoch != cur_epoch {
+            // Epoch fence: traffic from a dead incarnation must neither
+            // reach an engine nor perturb any window.  The ack restates
+            // the current epoch with the (possibly fresh) window state,
+            // so a live-but-stale sender learns it must rebase.
+            *self.stale_epoch.entry(tree).or_insert(0) += 1;
+            let (cum_seq, credit) = match self.dedup.get(&(tree, rel.child)) {
+                Some(w) => (w.cum_seq(), w.credit()),
+                None => (0, self.rel_window.get() as u16),
+            };
+            let ack = AggAckPacket {
+                tree,
+                child: rel.child,
+                epoch: cur_epoch,
+                cum_seq,
+                credit,
+            };
+            return (false, false, ack);
+        }
         let window = self.rel_window;
         let w = self
             .dedup
@@ -912,6 +981,7 @@ impl SwitchAggSwitch {
         let ack = AggAckPacket {
             tree,
             child: rel.child,
+            epoch: cur_epoch,
             cum_seq,
             credit,
         };
@@ -1021,6 +1091,7 @@ impl SwitchAggSwitch {
                 out.out_of_window += s.out_of_window;
             }
         }
+        out.stale_epoch_drops = self.stale_epoch.get(&tree).copied().unwrap_or(0);
         out
     }
 
@@ -1569,6 +1640,7 @@ mod tests {
         for (i, p) in pkts.iter_mut().enumerate() {
             p.rel = Some(crate::protocol::RelHeader {
                 child,
+                epoch: 0,
                 seq: i as u32 + 1,
             });
         }
@@ -1847,5 +1919,80 @@ mod tests {
         let mut sw = configured_vector_switch(16 << 10, None, 1, 8);
         let streams = vector_streams(1, 10, 5, 4, 1);
         sw.ingest_vector_stream(TreeId(1), &streams[0]);
+    }
+
+    /// Re-stamp a reliable stream's packets with a new epoch.
+    fn restamp_epoch(pkts: &mut [AggregationPacket], epoch: u16) {
+        for p in pkts.iter_mut() {
+            p.rel.as_mut().unwrap().epoch = epoch;
+        }
+    }
+
+    #[test]
+    fn stale_epoch_retransmission_is_fenced_not_double_counted() {
+        // Crash + restart mid-stream: the replay under the new epoch
+        // must produce exactly the fault-free aggregate even while
+        // old-incarnation retransmissions keep arriving.
+        let tree = TreeId(1);
+        let input = pairs(2_000, 400, 7);
+        let want: Value = input.iter().map(|p| p.value).sum();
+        let mut pkts = rel_packets(tree, 0, &input);
+
+        let mut sw = configured_switch(16 << 10, Some(256 << 10), 1);
+        let mut sink = IngestSink::new();
+        // Epoch 0: half the stream lands, then the switch dies.
+        let half = pkts.len() / 2;
+        for p in &pkts[..half] {
+            sw.ingest_reliable_one(tree, p, &mut sink);
+        }
+        sw.crash();
+        assert_eq!(sw.n_trees(), 0, "crash loses all tree state");
+
+        // Controller re-pushes Configure, then fences epoch 1.
+        sw.configure(&[TreeConfig {
+            tree,
+            children: 1,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        sw.begin_epoch(tree, 1);
+        assert_eq!(sw.tree_epoch(tree), 1);
+        sink.clear();
+
+        // A straggling epoch-0 retransmission arrives first: fenced —
+        // no engine state, no dedup window, but the ack tells the
+        // sender the current epoch.
+        let ack = sw.ingest_reliable_one(tree, &pkts[0], &mut sink);
+        assert_eq!(ack.epoch, 1);
+        assert_eq!(ack.cum_seq, 0, "stale packet admitted nothing");
+        assert_eq!(sw.dedup_stats(tree).stale_epoch_drops, 1);
+        assert_eq!(sw.dedup_stats(tree).admitted, 0);
+
+        // The rebased sender replays the whole stream under epoch 1,
+        // with a stale duplicate interleaved mid-replay.
+        restamp_epoch(&mut pkts, 1);
+        for (i, p) in pkts.iter().enumerate() {
+            sw.ingest_reliable_one(tree, p, &mut sink);
+            if i == half {
+                let mut stale = pkts[10].clone();
+                stale.rel.as_mut().unwrap().epoch = 0;
+                sw.ingest_reliable_one(tree, &stale, &mut sink);
+            }
+        }
+        assert_eq!(sink.flushes, 1, "EoT fires once under the new epoch");
+        let got: Value = sink_to_vec(&sink).iter().map(|p| p.value).sum();
+        assert_eq!(got, want, "byte-identical to the fault-free aggregate");
+        let d = sw.dedup_stats(tree);
+        assert_eq!(d.stale_epoch_drops, 2, "both stale packets fenced");
+        assert_eq!(d.admitted, pkts.len() as u64);
+        assert_eq!(d.dup_drops, 0, "stale packets never reach a window");
+    }
+
+    #[test]
+    #[should_panic(expected = "epoch must not regress")]
+    fn epoch_regression_panics() {
+        let mut sw = configured_switch(16 << 10, None, 1);
+        sw.begin_epoch(TreeId(1), 3);
+        sw.begin_epoch(TreeId(1), 2);
     }
 }

@@ -1,0 +1,281 @@
+//! Fault-injection co-simulation — integration contracts:
+//!
+//! * **Zero-fault transparency** — a chaos session with an empty
+//!   `FaultPlan` is byte-identical to the plain transport session it
+//!   wraps: same reducer stream, same ingress/egress/dedup stats, same
+//!   JCT, same FIFO peak, zero faulted drops.  Scalar and W-lane
+//!   vector (W ∈ {1, 8}), serial and sharded engines.  The fault
+//!   machinery must cost *nothing* when no fault fires.
+//! * **Crash recovery is exact** — a mid-job switch crash + restart
+//!   (all FPE/BPE/dedup state lost) replays under a bumped epoch and
+//!   lands on the *byte-identical* aggregate of the fault-free run.
+//! * **Failover is exact over declared membership** — an unrecovered
+//!   switch death completes via direct-to-reducer software merge with
+//!   the same totals.
+//! * **Quorum policy is typed** — a dead mapper under `All` quorum is
+//!   a `ChaosError::QuorumUnreachable`, not a hang or a wrong answer;
+//!   under `K-of-N` it is a re-planned membership.
+
+use std::collections::HashMap;
+use switchagg::framework::chaos::{
+    run_chaos_scalar, run_chaos_vector, ChaosConfig, ChaosError, EotQuorum,
+};
+use switchagg::framework::transport::{run_transport_scalar, run_transport_vector};
+use switchagg::framework::Reducer;
+use switchagg::net::FaultPlan;
+use switchagg::protocol::{
+    AggOp, Key, KvPair, TreeConfig, TreeId, Value, VectorBatch,
+};
+use switchagg::switch::{Parallelism, SwitchAggSwitch, SwitchConfig};
+use switchagg::util::rng::Pcg32;
+
+fn switch_cfg(par: Parallelism) -> SwitchConfig {
+    SwitchConfig {
+        parallelism: par,
+        ..SwitchConfig::scaled(16 << 10, Some(256 << 10))
+    }
+}
+
+fn scalar_streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0x77);
+            (0..n)
+                .map(|_| {
+                    let id = child.gen_range_u64(400);
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(200) as i64 - 100,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn vector_streams(children: usize, n: usize, lanes: usize, seed: u64) -> Vec<VectorBatch> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0x88);
+            let mut b = VectorBatch::new(lanes);
+            let mut vals: Vec<Value> = vec![0; lanes];
+            for _ in 0..n {
+                let id = child.gen_range_u64(300);
+                for (l, v) in vals.iter_mut().enumerate() {
+                    *v = (id % 11) as i64 + l as i64 - 5;
+                }
+                b.push(Key::from_id(id, 16 + (id % 49) as usize), &vals);
+            }
+            b
+        })
+        .collect()
+}
+
+fn merged(pairs: &[KvPair]) -> HashMap<Key, Value> {
+    Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
+}
+
+fn merged_streams(streams: &[Vec<KvPair>]) -> HashMap<Key, Value> {
+    Reducer::merge_software(streams, AggOp::Sum).table
+}
+
+/// Manually-configured transport switch mirroring the session the
+/// chaos runner launches through its controller (first launch ⇒
+/// `TreeId(1)`).
+fn transport_switch(children: u16, par: Parallelism, lanes: usize) -> SwitchAggSwitch {
+    let mut sw = SwitchAggSwitch::new(switch_cfg(par));
+    sw.configure_vector(
+        &[TreeConfig {
+            tree: TreeId(1),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }],
+        lanes,
+    );
+    sw
+}
+
+// --- Zero-fault transparency -----------------------------------------
+
+#[test]
+fn empty_fault_plan_is_byte_identical_to_plain_transport_scalar() {
+    let ss = scalar_streams(4, 900, 11);
+    for par in [Parallelism::Serial, Parallelism::Sharded(2)] {
+        let cfg = ChaosConfig::default();
+        let chaos = run_chaos_scalar(&switch_cfg(par), AggOp::Sum, &ss, &cfg)
+            .expect("fault-free chaos run");
+        let mut sw = transport_switch(4, par, 1);
+        let plain = run_transport_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg.transport);
+
+        assert_eq!(chaos.received, plain.received, "{par:?}: reducer stream");
+        assert_eq!(chaos.ingress, plain.ingress, "{par:?}: ingress hop stats");
+        assert_eq!(chaos.egress, plain.egress, "{par:?}: egress hop stats");
+        assert_eq!(chaos.dedup, plain.dedup, "{par:?}: dedup counters");
+        assert_eq!(chaos.jct_s, plain.jct_s, "{par:?}: bit-identical JCT");
+        assert_eq!(chaos.fifo_peak, plain.fifo_peak, "{par:?}");
+        assert_eq!(chaos.faulted_drops, 0, "{par:?}");
+        assert_eq!(chaos.final_epoch, 0);
+        assert_eq!(chaos.restarts, 0);
+        assert_eq!(chaos.replayed_packets, 0);
+        assert!(!chaos.failed_over);
+        assert_eq!(chaos.in_network, vec![0, 1, 2, 3]);
+        assert!(chaos.software.is_empty() && chaos.excluded.is_empty());
+    }
+}
+
+#[test]
+fn empty_fault_plan_is_byte_identical_to_plain_transport_vector() {
+    for lanes in [1usize, 8] {
+        let ss = vector_streams(3, 500, lanes, 23);
+        let cfg = ChaosConfig::default();
+        let chaos = run_chaos_vector(
+            &switch_cfg(Parallelism::Serial),
+            AggOp::Sum,
+            &ss,
+            &cfg,
+        )
+        .expect("fault-free chaos run");
+        let mut sw = transport_switch(3, Parallelism::Serial, lanes);
+        let plain = run_transport_vector(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg.transport);
+
+        assert_eq!(chaos.received, plain.received, "W={lanes}: reducer batch");
+        assert_eq!(chaos.ingress, plain.ingress, "W={lanes}");
+        assert_eq!(chaos.egress, plain.egress, "W={lanes}");
+        assert_eq!(chaos.dedup, plain.dedup, "W={lanes}");
+        assert_eq!(chaos.jct_s, plain.jct_s, "W={lanes}");
+        assert_eq!(chaos.fifo_peak, plain.fifo_peak, "W={lanes}");
+        assert_eq!(chaos.faulted_drops, 0, "W={lanes}");
+        assert_eq!(chaos.restarts, 0);
+    }
+}
+
+// --- Crash recovery --------------------------------------------------
+
+#[test]
+fn switch_crash_and_restart_recovers_the_exact_scalar_aggregate() {
+    let ss = scalar_streams(4, 900, 31);
+    let scfg = switch_cfg(Parallelism::Serial);
+    let base = run_chaos_scalar(&scfg, AggOp::Sum, &ss, &ChaosConfig::default())
+        .expect("baseline");
+    let cfg = ChaosConfig {
+        plan: FaultPlan::none().with_switch_crash(base.jct_s * 0.3, Some(base.jct_s * 0.6)),
+        ..ChaosConfig::default()
+    };
+    let run = run_chaos_scalar(&scfg, AggOp::Sum, &ss, &cfg).expect("recovered run");
+    assert_eq!(run.restarts, 1);
+    assert_eq!(run.final_epoch, 1, "restart bumps the job epoch");
+    assert!(run.faulted_drops > 0, "the outage must actually bite");
+    assert!(run.replayed_packets > 0, "recovery replays from seq 1");
+    assert_eq!(
+        run.received, base.received,
+        "epoch-fenced recovery must reproduce the fault-free aggregate byte-for-byte"
+    );
+    assert_eq!(merged(&run.received), merged_streams(&ss));
+    assert!(run.jct_s > base.jct_s, "a mid-job outage cannot be free");
+}
+
+#[test]
+fn switch_crash_and_restart_recovers_the_exact_vector_aggregate() {
+    let lanes = 8;
+    let ss = vector_streams(3, 500, lanes, 37);
+    let scfg = switch_cfg(Parallelism::Serial);
+    let base = run_chaos_vector(&scfg, AggOp::Sum, &ss, &ChaosConfig::default())
+        .expect("baseline");
+    let cfg = ChaosConfig {
+        plan: FaultPlan::none().with_switch_crash(base.jct_s * 0.3, Some(base.jct_s * 0.6)),
+        ..ChaosConfig::default()
+    };
+    let run = run_chaos_vector(&scfg, AggOp::Sum, &ss, &cfg).expect("recovered run");
+    assert_eq!(run.restarts, 1);
+    assert_eq!(run.final_epoch, 1);
+    assert!(run.faulted_drops > 0);
+    assert_eq!(run.received, base.received, "W={lanes} vector recovery");
+}
+
+#[test]
+fn crash_recovery_is_engine_invariant() {
+    let ss = scalar_streams(4, 900, 43);
+    let serial_cfg = switch_cfg(Parallelism::Serial);
+    let base = run_chaos_scalar(&serial_cfg, AggOp::Sum, &ss, &ChaosConfig::default())
+        .expect("baseline");
+    let cfg = ChaosConfig {
+        plan: FaultPlan::none().with_switch_crash(base.jct_s * 0.4, Some(base.jct_s * 0.7)),
+        ..ChaosConfig::default()
+    };
+    let a = run_chaos_scalar(&serial_cfg, AggOp::Sum, &ss, &cfg).expect("serial");
+    let b = run_chaos_scalar(&switch_cfg(Parallelism::Sharded(2)), AggOp::Sum, &ss, &cfg)
+        .expect("sharded");
+    assert_eq!(a.received, b.received);
+    assert_eq!(a.ingress, b.ingress);
+    assert_eq!(a.faulted_drops, b.faulted_drops);
+    assert_eq!(a.jct_s, b.jct_s);
+}
+
+// --- Failover & quorum ----------------------------------------------
+
+#[test]
+fn unrecovered_switch_death_fails_over_with_exact_totals() {
+    let ss = scalar_streams(4, 900, 53);
+    let scfg = switch_cfg(Parallelism::Serial);
+    let base = run_chaos_scalar(&scfg, AggOp::Sum, &ss, &ChaosConfig::default())
+        .expect("baseline");
+    let cfg = ChaosConfig {
+        plan: FaultPlan::none().with_switch_crash(base.jct_s * 0.3, None),
+        max_retries: Some(6),
+        ..ChaosConfig::default()
+    };
+    let run = run_chaos_scalar(&scfg, AggOp::Sum, &ss, &cfg).expect("failover run");
+    assert!(run.failed_over);
+    assert!(run.in_network.is_empty());
+    assert_eq!(run.software, vec![0, 1, 2, 3], "all children merged in software");
+    assert_eq!(
+        merged(&run.received),
+        merged_streams(&ss),
+        "software failover must preserve the declared-membership totals"
+    );
+}
+
+#[test]
+fn dead_mapper_under_all_quorum_is_a_typed_error() {
+    let ss = scalar_streams(4, 900, 61);
+    let scfg = switch_cfg(Parallelism::Serial);
+    let base = run_chaos_scalar(&scfg, AggOp::Sum, &ss, &ChaosConfig::default())
+        .expect("baseline");
+    let cfg = ChaosConfig {
+        plan: FaultPlan::none().with_mapper_crash(1, base.jct_s * 0.3),
+        ..ChaosConfig::default()
+    };
+    match run_chaos_scalar(&scfg, AggOp::Sum, &ss, &cfg) {
+        Err(ChaosError::QuorumUnreachable { have, need }) => {
+            assert_eq!(need, 4, "All quorum requires every launched child");
+            assert!(have < need);
+        }
+        other => panic!("expected QuorumUnreachable, got {other:?}"),
+    }
+}
+
+#[test]
+fn dead_mapper_under_k_of_n_quorum_is_replanned_out_exactly() {
+    let ss = scalar_streams(4, 900, 71);
+    let scfg = switch_cfg(Parallelism::Serial);
+    let base = run_chaos_scalar(&scfg, AggOp::Sum, &ss, &ChaosConfig::default())
+        .expect("baseline");
+    let cfg = ChaosConfig {
+        plan: FaultPlan::none().with_mapper_crash(2, base.jct_s * 0.2),
+        quorum: EotQuorum::KofN(3),
+        quorum_deadline_s: Some(base.jct_s * 2.0),
+        ..ChaosConfig::default()
+    };
+    let run = run_chaos_scalar(&scfg, AggOp::Sum, &ss, &cfg).expect("quorum run");
+    assert_eq!(run.excluded, vec![2]);
+    assert_eq!(run.in_network, vec![0, 1, 3]);
+    let declared: Vec<Vec<KvPair>> = [0usize, 1, 3].iter().map(|&c| ss[c].clone()).collect();
+    assert_eq!(
+        merged(&run.received),
+        merged_streams(&declared),
+        "k-of-n totals must match the *declared* membership exactly"
+    );
+}

@@ -35,6 +35,7 @@ fn prop_packet_encode_decode_round_trip() {
             eot: rng.gen_bool(0.5),
             rel: rng.gen_bool(0.5).then(|| switchagg::protocol::RelHeader {
                 child: rng.gen_range_u64(64) as u16,
+                epoch: rng.gen_range_u64(8) as u16,
                 seq: rng.next_u32(),
             }),
             pairs,
