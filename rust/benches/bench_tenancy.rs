@@ -1,0 +1,139 @@
+//! Serving-driver benchmarks (EXPERIMENTS.md §Multi-tenancy &
+//! isolation): what multi-tenant serving costs.  Structural claims
+//! under test: (1) the tenancy driver's single-tenant zero-churn
+//! overhead over the plain transport driver is small — slot/gen
+//! fencing is a cheap tag decode per delivery; (2) serving N tenants
+//! concurrently costs per-packet work, not per-tenant work — items/s
+//! should hold as the tenant count grows; (3) admission/eviction churn
+//! (depart-between-jobs tenants) stays off the delivery hot path.
+//! Items = transport packets put on the wire (data first-tx +
+//! retransmissions, both hops, summed over completed jobs), so
+//! items/s is comparable against `BENCH_transport.json` and
+//! `BENCH_faults.json`.  Results land in `BENCH_tenancy.json`
+//! (override with `SWITCHAGG_BENCH_TENANCY_JSON`).
+
+use switchagg::framework::transport::{run_transport_scalar, TransportConfig};
+use switchagg::framework::{run_tenancy, TenancyRegime, TenancyRun, TenantJob, TenantSpec};
+use switchagg::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId};
+use switchagg::switch::{QuotaRequest, SwitchAggSwitch, SwitchConfig};
+use switchagg::util::bench::{self, JsonLog};
+use switchagg::util::rng::Pcg32;
+
+fn switch_cfg() -> SwitchConfig {
+    SwitchConfig::scaled(32 << 10, Some(8 << 20))
+}
+
+fn streams(children: usize, pairs: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0x7E);
+            (0..pairs)
+                .map(|_| {
+                    let id = child.gen_range_u64((pairs as u64 / 4).max(64));
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(100) as i64 - 50,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn wire_packets(run: &TenancyRun) -> u64 {
+    run.outcomes
+        .iter()
+        .map(|o| {
+            o.ingress.first_tx
+                + o.ingress.retransmissions
+                + o.egress.first_tx
+                + o.egress.retransmissions
+        })
+        .sum()
+}
+
+fn spec(slot: usize, jobs: usize, children: usize, pairs: usize, depart: bool) -> TenantSpec {
+    let cfg = switch_cfg();
+    TenantSpec {
+        tree: TreeId(slot as u32 + 1),
+        children: children as u16,
+        op: AggOp::Sum,
+        weight: 1,
+        quota: QuotaRequest::even_split(&cfg, 8),
+        evict_between_jobs: depart,
+        jobs: (0..jobs)
+            .map(|j| TenantJob {
+                start_s: 0.0,
+                streams: streams(children, pairs, 0x7E00 + (slot * 31 + j) as u64),
+            })
+            .collect(),
+    }
+}
+
+fn serve(specs: &[TenantSpec], regime: TenancyRegime) -> u64 {
+    let mut sw = SwitchAggSwitch::new(switch_cfg());
+    if regime == TenancyRegime::StaticSplit {
+        let trees: Vec<TreeConfig> = specs
+            .iter()
+            .map(|s| TreeConfig {
+                tree: s.tree,
+                children: s.children,
+                parent_port: 0,
+                op: s.op,
+            })
+            .collect();
+        sw.configure(&trees);
+    }
+    let run = run_tenancy(&mut sw, specs, regime, &TransportConfig::default());
+    assert_eq!(run.rejected, 0, "bench workload must not bounce");
+    wire_packets(&run)
+}
+
+fn main() {
+    let mut log = JsonLog::new();
+    let pairs = 4_000usize;
+
+    bench::section("single-tenant zero-churn overhead (vs plain transport)");
+    log.push(&bench::run("plain transport 1 tenant", 1, 5, move || {
+        let ss = streams(4, pairs, 0x7E00);
+        let mut sw = SwitchAggSwitch::new(switch_cfg());
+        sw.configure(&[TreeConfig {
+            tree: TreeId(1),
+            children: 4,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        let run =
+            run_transport_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &TransportConfig::default());
+        run.ingress.first_tx
+            + run.ingress.retransmissions
+            + run.egress.first_tx
+            + run.egress.retransmissions
+    }));
+    log.push(&bench::run("tenancy driver 1 tenant", 1, 5, move || {
+        serve(&[spec(0, 1, 4, pairs, false)], TenancyRegime::StaticSplit)
+    }));
+
+    bench::section("concurrent serving (8 tenants, same total bytes)");
+    fn fleet(pairs: usize, jobs: usize, depart: bool) -> Vec<TenantSpec> {
+        (0..8).map(|s| spec(s, jobs, 2, pairs / 4, depart)).collect()
+    }
+    log.push(&bench::run("8 tenants static split", 1, 5, move || {
+        serve(&fleet(pairs, 1, false), TenancyRegime::StaticSplit)
+    }));
+    log.push(&bench::run("8 tenants quota+wfq", 1, 5, move || {
+        serve(&fleet(pairs, 1, false), TenancyRegime::QuotaWeighted)
+    }));
+    // Three jobs each with depart-between-jobs: every completion is an
+    // eviction and every arrival a fresh admission.
+    log.push(&bench::run("8 tenants quota, churn", 1, 5, move || {
+        serve(&fleet(pairs, 3, true), TenancyRegime::QuotaReclaim)
+    }));
+
+    let path = std::env::var("SWITCHAGG_BENCH_TENANCY_JSON")
+        .unwrap_or_else(|_| "BENCH_tenancy.json".to_string());
+    if let Err(e) = log.write(&path) {
+        eprintln!("could not write bench log {path}: {e}");
+    }
+}

@@ -11,6 +11,7 @@ use crate::net::{NodeId, Topology};
 use crate::protocol::{
     AckKind, AggOp, ConfigurePacket, LaunchPacket, Packet, TreeId,
 };
+use crate::switch::{AdmissionError, QuotaRequest};
 use anyhow::{bail, Result};
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -55,6 +56,13 @@ pub struct Controller {
     /// aggregation path (switch acks observed by the hosts and relayed
     /// up; seeded at launch time).
     last_heartbeat_s: BTreeMap<TreeId, f64>,
+    /// Declared per-switch (FPE, BPE) memory capacity for quota-checked
+    /// admission; a switch with no declared capacity is not
+    /// quota-managed and [`Self::admit_job`] skips it.
+    capacities: BTreeMap<NodeId, (u64, u64)>,
+    /// Per-tree quota charges against declared switch capacities,
+    /// released on teardown/eviction.
+    charges: BTreeMap<TreeId, Vec<(NodeId, QuotaRequest)>>,
 }
 
 impl Controller {
@@ -66,6 +74,8 @@ impl Controller {
             epochs: BTreeMap::new(),
             membership: BTreeMap::new(),
             last_heartbeat_s: BTreeMap::new(),
+            capacities: BTreeMap::new(),
+            charges: BTreeMap::new(),
         }
     }
 
@@ -191,7 +201,81 @@ impl Controller {
         self.epochs.remove(&tree);
         self.membership.remove(&tree);
         self.last_heartbeat_s.remove(&tree);
+        self.charges.remove(&tree);
         self.trees.remove(&tree).is_some()
+    }
+
+    // ---- multi-tenant serving: quotas, admission, eviction (PR 7) ----
+
+    /// Declare a switch's (FPE, BPE) memory capacity.  Once declared,
+    /// [`Self::admit_job`] checks every job's quota against the
+    /// switch's remaining headroom before configuring it.
+    pub fn declare_switch_capacity(&mut self, sw: NodeId, fpe_bytes: u64, bpe_bytes: u64) {
+        self.capacities.insert(sw, (fpe_bytes, bpe_bytes));
+    }
+
+    /// Total (FPE, BPE) bytes currently charged against `sw` by
+    /// admitted jobs.
+    pub fn quota_in_use(&self, sw: NodeId) -> (u64, u64) {
+        self.charges
+            .values()
+            .flatten()
+            .filter(|(n, _)| *n == sw)
+            .fold((0, 0), |(f, b), (_, q)| {
+                (f + q.fpe_bytes, b + q.bpe_bytes)
+            })
+    }
+
+    /// Quota-checked launch: builds the tree like [`Self::launch`],
+    /// then verifies every quota-managed switch on it has headroom for
+    /// `quota`.  On a shortfall the launch is aborted (no tree state,
+    /// no charges) and the typed [`AdmissionError`] is returned so the
+    /// master can retry smaller, elsewhere, or later.
+    pub fn admit_job(
+        &mut self,
+        req: &LaunchPacket,
+        op: AggOp,
+        quota: QuotaRequest,
+    ) -> Result<LaunchOutcome> {
+        let out = self.launch(req, op)?;
+        let mut charged = Vec::new();
+        for (sw, _) in &out.configures {
+            let Some(&(fpe_cap, bpe_cap)) = self.capacities.get(sw) else {
+                continue; // not quota-managed
+            };
+            let (fpe_used, bpe_used) = self.quota_in_use(*sw);
+            let (stage, requested, free) = if fpe_used + quota.fpe_bytes > fpe_cap {
+                ("FPE", quota.fpe_bytes, fpe_cap.saturating_sub(fpe_used))
+            } else if bpe_used + quota.bpe_bytes > bpe_cap {
+                ("BPE", quota.bpe_bytes, bpe_cap.saturating_sub(bpe_used))
+            } else {
+                charged.push((*sw, quota));
+                continue;
+            };
+            let tree = out.tree;
+            self.abort(tree);
+            return Err(AdmissionError::QuotaExhausted {
+                tree,
+                stage,
+                requested,
+                free,
+                // The controller's ledger has no idle/busy view; the
+                // switch-local reclaim path reports real reclaimability.
+                reclaimable: 0,
+            }
+            .into());
+        }
+        self.charges.insert(out.tree, charged);
+        Ok(out)
+    }
+
+    /// Evict a job as a tenant: tear down its tree state and release
+    /// its quota charges on every switch.  Returns whether the tree
+    /// existed.  (The data-plane counterpart —
+    /// `SwitchAggSwitch::evict_tree` draining resident pairs — is the
+    /// host's responsibility when it delivers the eviction.)
+    pub fn evict_job(&mut self, tree: TreeId) -> bool {
+        self.teardown(tree)
     }
 
     // ---- fault tolerance: epochs, liveness, failover (PR 6) ----
@@ -480,6 +564,61 @@ mod tests {
         // Teardown forgets fault state too.
         assert!(c.teardown(out.tree));
         assert_eq!(c.epoch(out.tree), 0);
+    }
+
+    #[test]
+    fn admit_job_charges_and_evict_releases() {
+        let (topo, sw, hosts) = Topology::star(4);
+        let mut c = Controller::new(topo);
+        c.declare_switch_capacity(sw, 4096, 1 << 20);
+        let req = LaunchPacket {
+            mappers: hosts[..3].iter().map(|h| h.0).collect(),
+            reducers: vec![hosts[3].0],
+        };
+        let q = QuotaRequest {
+            fpe_bytes: 2048,
+            bpe_bytes: 1 << 18,
+        };
+        let out = c.admit_job(&req, AggOp::Sum, q).unwrap();
+        assert_eq!(c.quota_in_use(sw), (2048, 1 << 18));
+        // Second identical job fits exactly.
+        let out2 = c.admit_job(&req, AggOp::Sum, q).unwrap();
+        assert_eq!(c.quota_in_use(sw), (4096, 1 << 19));
+        // Third does not: typed rejection, no residue.
+        let err = c.admit_job(&req, AggOp::Sum, q).unwrap_err();
+        let adm = err.downcast::<crate::switch::AdmissionError>().unwrap();
+        assert!(matches!(
+            adm,
+            crate::switch::AdmissionError::QuotaExhausted {
+                stage: "FPE",
+                requested: 2048,
+                free: 0,
+                ..
+            }
+        ));
+        assert_eq!(c.quota_in_use(sw), (4096, 1 << 19), "rejection charges nothing");
+        // Eviction releases the charge and admission works again.
+        assert!(c.evict_job(out.tree));
+        assert_eq!(c.quota_in_use(sw), (2048, 1 << 18));
+        c.admit_job(&req, AggOp::Sum, q).unwrap();
+        assert!(c.evict_job(out2.tree));
+    }
+
+    #[test]
+    fn undeclared_switch_is_not_quota_managed() {
+        let (topo, sw, hosts) = Topology::star(4);
+        let mut c = Controller::new(topo);
+        let req = LaunchPacket {
+            mappers: hosts[..3].iter().map(|h| h.0).collect(),
+            reducers: vec![hosts[3].0],
+        };
+        // Absurd quota, but the switch never declared capacity: admit.
+        let q = QuotaRequest {
+            fpe_bytes: u64::MAX / 2,
+            bpe_bytes: u64::MAX / 2,
+        };
+        c.admit_job(&req, AggOp::Sum, q).unwrap();
+        assert_eq!(c.quota_in_use(sw), (0, 0), "no charges without capacity");
     }
 
     #[test]

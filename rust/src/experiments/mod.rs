@@ -20,6 +20,7 @@ pub mod sec_allreduce;
 pub mod sec_faults;
 pub mod sec_incast;
 pub mod sec_loss;
+pub mod sec_tenancy;
 pub mod table2;
 pub mod table3;
 

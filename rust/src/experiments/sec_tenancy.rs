@@ -1,0 +1,430 @@
+//! Multi-tenant serving & isolation harness (`switchagg exp tenancy`):
+//! one switch serving a continuous job arrival/departure process for
+//! {2, 8, 32} concurrent tenants, measuring what an aggressive
+//! neighbor costs a well-behaved one under three serving regimes
+//! (`framework::tenancy`):
+//!
+//! * `static` — the pre-quota baseline: every tree configured up
+//!   front, memory split evenly across all tenants, uniform credit
+//!   grants.
+//! * `quota` — per-tenant quotas with elastic reclamation of idle
+//!   tenants' memory; grants stay uniform.
+//! * `quota+wfq` — quotas + weighted credit grants on the shared
+//!   egress path (the victim carries weight 16, everyone else 1).
+//!
+//! The cast at every tenant count:
+//!
+//! * the **victim** (slot 0): small well-aggregating jobs (a fixed
+//!   64-key working set) arriving on a fixed cadence — the tenant
+//!   whose p99 JCT inflation over its solo baseline is the isolation
+//!   metric;
+//! * the **flooder** (slot 1): back-to-back jobs of all-distinct keys
+//!   — nothing combines, so its egress stream is its full input and
+//!   the shared switch → reducer link is where it hurts others;
+//! * **background** tenants (slots 2..N): Poisson arrivals that admit,
+//!   run, and depart (evict between jobs) — the churn that exercises
+//!   incremental admission and elastic reclamation while the victim's
+//!   state must stay untouched.
+//!
+//! Every cell asserts per-job exactness for every admitted job (churn
+//! and reclamation may cost time, never cells).  The acceptance pins:
+//! `quota+wfq` keeps the victim's p99 JCT within 1.5× of solo at every
+//! tenant count, while `static` at 32 tenants is measurably worse.
+
+use crate::experiments::common::{parallelism, print_table, Parallelism, Scale};
+use crate::framework::tenancy::{
+    poisson_starts, run_tenancy, TenancyRegime, TenancyRun, TenantJob, TenantSpec,
+};
+use crate::framework::TransportConfig;
+use crate::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId};
+use crate::switch::{QuotaRequest, SwitchAggSwitch, SwitchConfig};
+use crate::util::par::par_map;
+use crate::util::rng::Pcg32;
+
+/// One (tenant count, regime) cell of the sweep.
+#[derive(Clone, Debug)]
+pub struct TenancyRow {
+    pub tenants: usize,
+    pub regime: &'static str,
+    /// Victim p99 JCT (ms) and its inflation over the solo baseline.
+    pub victim_p99_ms: f64,
+    pub victim_p99_x: f64,
+    pub victim_mean_ms: f64,
+    /// Jobs completed across all tenants / rejected by admission.
+    pub completed: usize,
+    pub rejected: u64,
+    /// Idle-tenant shrink events by elastic reclamation.
+    pub reclaims: u64,
+    /// Every completed job's aggregate was exact.
+    pub exact: bool,
+}
+
+const SWEEP_N: [usize; 3] = [2, 8, 32];
+const SWEEP_SEED: u64 = 0x7E4A;
+const VICTIM_JOBS: usize = 12;
+const VICTIM_KEYS: u64 = 64;
+const FLOODER_JOBS: usize = 4;
+
+fn switch_cfg(scale: Scale) -> SwitchConfig {
+    SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(8 << 30)))
+}
+
+/// Victim job size: floored so the job stays several MTUs even at
+/// smoke scale (the isolation ratios need jobs that outlast one
+/// flooder packet's serialization).
+fn victim_pairs(scale: Scale) -> usize {
+    (scale.bytes(8 << 20) / 25).max(256) as usize
+}
+
+/// A stream over a small working set: combines well, so the victim's
+/// egress stays small no matter the regime.
+fn keyed_stream(pairs: usize, variety: u64, seed: u64) -> Vec<KvPair> {
+    let mut rng = Pcg32::new(seed);
+    (0..pairs)
+        .map(|_| {
+            let id = rng.gen_range_u64(variety);
+            KvPair::new(
+                Key::from_id(id, 16 + (id % 49) as usize),
+                rng.gen_range_u64(100) as i64 - 50,
+            )
+        })
+        .collect()
+}
+
+/// All-distinct keys: nothing combines, egress = input (the flood).
+fn distinct_stream(pairs: usize, salt: u64) -> Vec<KvPair> {
+    (0..pairs as u64)
+        .map(|i| {
+            let id = salt.wrapping_mul(1 << 20).wrapping_add(i);
+            KvPair::new(Key::from_id(id, 16 + (id % 49) as usize), 1)
+        })
+        .collect()
+}
+
+/// Rough serialization time of one victim job (both hops, ~50 B/pair
+/// on a 10 Gbps link); the victim's arrival cadence is a generous
+/// multiple so solo jobs never queue behind themselves.
+fn victim_gap_s(scale: Scale) -> f64 {
+    let job_bytes = (2 * victim_pairs(scale) * 50) as f64;
+    job_bytes * 8.0 / 1e10 * 16.0
+}
+
+fn quota_for(cfg: &SwitchConfig, n: usize) -> QuotaRequest {
+    QuotaRequest {
+        fpe_bytes: (cfg.fpe_total_mem / n as u64).max(cfg.min_fpe_share(1)),
+        bpe_bytes: cfg.bpe_mem.unwrap_or(0) / n as u64,
+    }
+}
+
+fn victim_spec(scale: Scale, quota: QuotaRequest) -> TenantSpec {
+    let gap = victim_gap_s(scale);
+    TenantSpec {
+        tree: TreeId(1),
+        children: 2,
+        op: AggOp::Sum,
+        weight: 16,
+        quota,
+        evict_between_jobs: false,
+        jobs: (0..VICTIM_JOBS)
+            .map(|j| TenantJob {
+                start_s: j as f64 * gap,
+                streams: (0..2)
+                    .map(|c| {
+                        keyed_stream(
+                            victim_pairs(scale),
+                            VICTIM_KEYS,
+                            SWEEP_SEED ^ ((j as u64) << 8) ^ c,
+                        )
+                    })
+                    .collect(),
+            })
+            .collect(),
+    }
+}
+
+fn flooder_spec(scale: Scale, quota: QuotaRequest) -> TenantSpec {
+    let pairs = 4 * victim_pairs(scale);
+    TenantSpec {
+        tree: TreeId(2),
+        children: 4,
+        op: AggOp::Sum,
+        weight: 1,
+        quota,
+        evict_between_jobs: false,
+        // All at t = 0: each job starts the instant the previous one
+        // completes — a continuous flood for the victim's whole span.
+        jobs: (0..FLOODER_JOBS)
+            .map(|j| TenantJob {
+                start_s: 0.0,
+                streams: (0..4u64).map(|c| distinct_stream(pairs, j as u64 * 8 + c)).collect(),
+            })
+            .collect(),
+    }
+}
+
+fn background_spec(scale: Scale, slot: usize, quota: QuotaRequest) -> TenantSpec {
+    let span = VICTIM_JOBS as f64 * victim_gap_s(scale);
+    let starts = poisson_starts(3.0 / span, 3, SWEEP_SEED ^ 0xB6 ^ slot as u64);
+    TenantSpec {
+        tree: TreeId(2 + slot as u32),
+        children: 2,
+        op: AggOp::Sum,
+        weight: 1,
+        quota,
+        evict_between_jobs: true,
+        jobs: starts
+            .into_iter()
+            .enumerate()
+            .map(|(j, start_s)| TenantJob {
+                start_s,
+                streams: (0..2u64)
+                    .map(|c| {
+                        keyed_stream(
+                            victim_pairs(scale) / 2,
+                            32,
+                            SWEEP_SEED ^ 0x510 ^ ((slot as u64) << 8) ^ ((j as u64) << 4) ^ c,
+                        )
+                    })
+                    .collect(),
+            })
+            .collect(),
+    }
+}
+
+fn specs_for(scale: Scale, n: usize) -> Vec<TenantSpec> {
+    assert!(n >= 2, "the sweep needs at least victim + flooder");
+    let cfg = switch_cfg(scale);
+    let q = quota_for(&cfg, n);
+    let mut specs = vec![victim_spec(scale, q), flooder_spec(scale, q)];
+    for slot in 2..n {
+        specs.push(background_spec(scale, slot, q));
+    }
+    specs
+}
+
+fn regime_of(name: &str) -> TenancyRegime {
+    match name {
+        "static" => TenancyRegime::StaticSplit,
+        "quota" => TenancyRegime::QuotaReclaim,
+        "quota+wfq" => TenancyRegime::QuotaWeighted,
+        other => panic!("unknown regime {other}"),
+    }
+}
+
+fn run_specs(scale: Scale, specs: &[TenantSpec], regime: TenancyRegime) -> TenancyRun {
+    let mut sw = SwitchAggSwitch::new(switch_cfg(scale));
+    if matches!(regime, TenancyRegime::StaticSplit) {
+        let tcs: Vec<TreeConfig> = specs
+            .iter()
+            .map(|s| TreeConfig {
+                tree: s.tree,
+                children: s.children,
+                parent_port: 0,
+                op: s.op,
+            })
+            .collect();
+        sw.configure(&tcs);
+    }
+    run_tenancy(&mut sw, specs, regime, &TransportConfig::default())
+}
+
+/// p99 as `sorted[ceil(0.99 n) - 1]` (the max for n < 100 — the
+/// victim's tail IS its worst job).
+pub fn p99(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "p99 of an empty sample");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite JCTs"));
+    let idx = ((0.99 * v.len() as f64).ceil() as usize).max(1) - 1;
+    v[idx]
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// The solo baseline: the victim alone on the whole switch — the JCT
+/// schedule every regime's inflation is measured against.
+fn solo_victim_p99(scale: Scale) -> f64 {
+    let cfg = switch_cfg(scale);
+    let spec = victim_spec(scale, quota_for(&cfg, 1));
+    let mut sw = SwitchAggSwitch::new(cfg);
+    sw.configure(&[TreeConfig {
+        tree: spec.tree,
+        children: spec.children,
+        parent_port: 0,
+        op: spec.op,
+    }]);
+    let run = run_tenancy(
+        &mut sw,
+        std::slice::from_ref(&spec),
+        TenancyRegime::StaticSplit,
+        &TransportConfig::default(),
+    );
+    assert!(run.all_exact(), "solo baseline must be exact");
+    assert_eq!(run.outcomes.len(), VICTIM_JOBS);
+    p99(&run.jcts_of(0))
+}
+
+fn run_cell(scale: Scale, n: usize, regime_name: &'static str, solo_p99: f64) -> TenancyRow {
+    let specs = specs_for(scale, n);
+    let run = run_specs(scale, &specs, regime_of(regime_name));
+    let victim = run.jcts_of(0);
+    assert_eq!(
+        victim.len(),
+        VICTIM_JOBS,
+        "{regime_name}/{n}: the resident victim is never rejected"
+    );
+    assert_eq!(
+        run.jcts_of(1).len(),
+        FLOODER_JOBS,
+        "{regime_name}/{n}: the flooder runs its whole schedule"
+    );
+    let vp99 = p99(&victim);
+    TenancyRow {
+        tenants: n,
+        regime: regime_name,
+        victim_p99_ms: vp99 * 1e3,
+        victim_p99_x: vp99 / solo_p99,
+        victim_mean_ms: mean(&victim) * 1e3,
+        completed: run.outcomes.len(),
+        rejected: run.rejected,
+        reclaims: run.reclaims,
+        exact: run.all_exact(),
+    }
+}
+
+const REGIMES: [&str; 3] = ["static", "quota", "quota+wfq"];
+
+pub fn rows(scale: Scale) -> Vec<TenancyRow> {
+    rows_with(scale, parallelism())
+}
+
+pub fn rows_with(scale: Scale, par: Parallelism) -> Vec<TenancyRow> {
+    let solo = solo_victim_p99(scale);
+    let mut cases: Vec<(usize, &'static str)> = Vec::new();
+    for &n in &SWEEP_N {
+        for &r in &REGIMES {
+            cases.push((n, r));
+        }
+    }
+    par_map(par, cases, move |(n, r)| run_cell(scale, n, r, solo))
+}
+
+pub fn run(scale: Scale) {
+    let rows = rows(scale);
+    print_table(
+        "Multi-tenant serving & isolation — victim p99 JCT under an aggressive neighbor + churn",
+        &[
+            "tenants",
+            "regime",
+            "victim p99",
+            "vs solo",
+            "victim mean",
+            "done",
+            "rejected",
+            "reclaims",
+            "exact",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.tenants.to_string(),
+                    r.regime.to_string(),
+                    format!("{:.3} ms", r.victim_p99_ms),
+                    format!("{:.2}x", r.victim_p99_x),
+                    format!("{:.3} ms", r.victim_mean_ms),
+                    r.completed.to_string(),
+                    r.rejected.to_string(),
+                    r.reclaims.to_string(),
+                    if r.exact { "yes" } else { "NO" }.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    // Per-tenant per-cell exactness for every admitted job, under both
+    // churn and flooding — the tenancy tentpole's correctness pin.
+    assert!(
+        rows.iter().all(|r| r.exact),
+        "a tenant's job diverged from its software-merge oracle"
+    );
+    // Isolation acceptance: weighted grants keep the victim's p99
+    // within 1.5x of solo at every tenant count...
+    for r in rows.iter().filter(|r| r.regime == "quota+wfq") {
+        assert!(
+            r.victim_p99_x <= 1.5,
+            "quota+wfq at {} tenants: victim p99 {:.2}x solo exceeds 1.5x",
+            r.tenants,
+            r.victim_p99_x
+        );
+    }
+    // ...while the static split at 32 tenants is measurably worse.
+    let static32 = rows
+        .iter()
+        .find(|r| r.regime == "static" && r.tenants == 32)
+        .expect("static/32 cell");
+    let wfq32 = rows
+        .iter()
+        .find(|r| r.regime == "quota+wfq" && r.tenants == 32)
+        .expect("quota+wfq/32 cell");
+    assert!(
+        static32.victim_p99_x >= 1.1 * wfq32.victim_p99_x,
+        "static split ({:.2}x) should be measurably worse than weighted grants ({:.2}x) at 32 tenants",
+        static32.victim_p99_x,
+        wfq32.victim_p99_x
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_scale() -> Scale {
+        Scale::new(16384)
+    }
+
+    /// Victim + flooder under weighted grants: whole schedule runs,
+    /// every job exact, nothing rejected.
+    #[test]
+    fn weighted_cell_completes_exactly_under_flooding() {
+        let solo = solo_victim_p99(smoke_scale());
+        assert!(solo > 0.0);
+        let row = run_cell(smoke_scale(), 2, "quota+wfq", solo);
+        assert!(row.exact, "{row:?}");
+        assert_eq!(row.completed, VICTIM_JOBS + FLOODER_JOBS);
+        assert_eq!(row.rejected, 0, "{row:?}");
+        assert!(row.victim_p99_ms > 0.0);
+    }
+
+    /// Churning background tenants (admit/run/evict) leave every
+    /// admitted job exact under the reclaiming quota regime.
+    #[test]
+    fn churn_cell_stays_exact() {
+        let solo = solo_victim_p99(smoke_scale());
+        let row = run_cell(smoke_scale(), 8, "quota", solo);
+        assert!(row.exact, "{row:?}");
+        assert!(
+            row.completed >= VICTIM_JOBS + FLOODER_JOBS,
+            "victim + flooder always complete: {row:?}"
+        );
+    }
+
+    /// The static-split baseline also runs the full cast (no quotas to
+    /// reject anyone) and stays exact.
+    #[test]
+    fn static_cell_stays_exact() {
+        let solo = solo_victim_p99(smoke_scale());
+        let row = run_cell(smoke_scale(), 8, "static", solo);
+        assert!(row.exact, "{row:?}");
+        assert_eq!(row.rejected, 0, "static split never rejects: {row:?}");
+        assert_eq!(row.reclaims, 0, "static split never reclaims: {row:?}");
+    }
+
+    #[test]
+    fn p99_picks_the_tail() {
+        assert_eq!(p99(&[1.0]), 1.0);
+        assert_eq!(p99(&[3.0, 1.0, 2.0]), 3.0);
+        let hundred: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(p99(&hundred), 99.0);
+    }
+}

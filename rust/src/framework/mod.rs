@@ -9,6 +9,7 @@ pub mod mapper;
 pub mod reducer;
 pub mod reliable;
 pub mod shim;
+pub mod tenancy;
 pub mod transport;
 
 pub use chaos::{
@@ -23,6 +24,9 @@ pub use reliable::{
     ReliableVectorRun,
 };
 pub use shim::Shim;
+pub use tenancy::{
+    poisson_starts, run_tenancy, JobOutcome, TenancyRegime, TenancyRun, TenantJob, TenantSpec,
+};
 pub use transport::{
     run_transport_scalar, run_transport_vector, CreditMode, NetHopStats, TransportConfig,
     TransportRun, TransportVectorRun,

@@ -1,0 +1,1015 @@
+//! Multi-tenant co-simulation: a continuous job arrival/departure
+//! process serving many aggregation trees through ONE switch.
+//!
+//! `framework::transport` drives a single reliable session to
+//! completion; this driver generalizes it to a *service*: every tenant
+//! (tree) runs a sequence of jobs with its own start times, quota,
+//! scheduling weight and churn behaviour, all sharing one
+//! [`SwitchAggSwitch`], one [`NetSim`] star (each tenant's mappers get
+//! private access links; the hub → reducer egress link is shared — the
+//! contended resource that decides isolation), and one simulated
+//! clock.  The per-hop logic — packetization, rel-header stamping,
+//! dedup admission, ack-clocked windows, drained-network deadline
+//! jumps — is the transport driver's, verbatim: a zero-churn
+//! single-tenant run reproduces `run_transport_scalar` byte for byte
+//! (stream, hop stats, JCT), which `tests/tenancy.rs` pins.
+//!
+//! Three serving regimes, worst to best isolation:
+//!
+//! * [`TenancyRegime::StaticSplit`] — the pre-PR 7 baseline: every
+//!   tree configured up front, switch memory split evenly across all
+//!   tenants (idle ones included), uniform credit grants.
+//! * [`TenancyRegime::QuotaReclaim`] — tenants admitted against
+//!   explicit quotas when their first job arrives and evicted on
+//!   departure; under pressure idle tenants' slots are elastically
+//!   reclaimed ([`SwitchAggSwitch::admit_tree_or_reclaim`]).  Credit
+//!   grants stay uniform.
+//! * [`TenancyRegime::QuotaWeighted`] — quotas + reclamation plus
+//!   weighted credit grants at *both* ends of the shared path: the
+//!   switch caps each tenant's ingress credit at its weighted share
+//!   ([`GrantPolicy::WeightedShare`]) and the reducer's egress acks
+//!   are capped the same way, so a flooder's in-flight window cannot
+//!   monopolize the shared egress link.
+//!
+//! Every job is verified exact on completion: the reducer's admitted
+//! stream must software-merge to the same table as the job's input
+//! streams — churn and reclamation may cost time, never cells.
+
+use crate::framework::reducer::Reducer;
+use crate::framework::reliable::{stamp, Endpoint};
+use crate::framework::transport::{
+    apply_session_policy, NetHopStats, TransportConfig, ACK_WIRE_LEN, KIND_EGRESS_ACK,
+    KIND_EGRESS_DATA, KIND_INGRESS_ACK, KIND_INGRESS_DATA,
+};
+use crate::net::netsim::{Delivery, LinkStats, NetSim};
+use crate::net::topology::{NodeId, Topology};
+use crate::protocol::{
+    AdaptiveSender, AggAckPacket, AggOp, AggregationPacket, Key, KvPair, TreeConfig, TreeId, Value,
+};
+use crate::switch::reliability::Admit;
+use crate::switch::{GrantPolicy, IngestSink, QuotaRequest, SwitchAggSwitch, WeightedGrants};
+use crate::util::rng::Pcg32;
+use std::collections::{BTreeMap, HashMap};
+
+/// One job of one tenant: a start time and the per-child pair streams.
+/// (Named to avoid colliding with the MapReduce driver's
+/// `framework::job::JobSpec`, which describes a whole job graph.)
+#[derive(Clone, Debug)]
+pub struct TenantJob {
+    /// Earliest simulated start (the job activates at this time, or as
+    /// soon after as the tenant's previous job has completed).
+    pub start_s: f64,
+    /// `streams[c]` is child `c`'s pair stream; `streams.len()` must
+    /// equal the tenant's `children`.
+    pub streams: Vec<Vec<KvPair>>,
+}
+
+/// One tenant of the serving fabric.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub tree: TreeId,
+    pub children: u16,
+    pub op: AggOp,
+    /// Scheduling weight (credit share under `QuotaWeighted`).
+    pub weight: u64,
+    /// FPE/BPE quota for the quota regimes (`None` = an even split
+    /// over the concurrent tenant count, computed by the caller).
+    pub quota: QuotaRequest,
+    /// Depart between jobs: evict the tree after each job completes
+    /// and re-admit at the next arrival (quota regimes only).
+    pub evict_between_jobs: bool,
+    pub jobs: Vec<TenantJob>,
+}
+
+/// Memory / credit serving regime (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenancyRegime {
+    StaticSplit,
+    QuotaReclaim,
+    QuotaWeighted,
+}
+
+/// One completed job.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub slot: usize,
+    pub tree: TreeId,
+    /// Index into the tenant's `jobs`.
+    pub job: usize,
+    /// The spec's requested start (JCT is measured from here, so
+    /// admission/queueing delay counts against the regime).
+    pub start_s: f64,
+    pub done_s: f64,
+    pub jct_s: f64,
+    /// The reducer's admitted stream software-merged byte-identical to
+    /// the job's input streams (the per-cell exactness bit).
+    pub exact: bool,
+    /// The stream the reducer admitted, in arrival order.
+    pub received: Vec<KvPair>,
+    pub ingress: NetHopStats,
+    pub egress: NetHopStats,
+}
+
+/// Everything one multi-tenant run produces.
+#[derive(Clone, Debug, Default)]
+pub struct TenancyRun {
+    /// Completed jobs in completion order.
+    pub outcomes: Vec<JobOutcome>,
+    /// Idle tenants shrunk by elastic reclamation (tenant-shrink
+    /// events, not bytes).
+    pub reclaims: u64,
+    /// Jobs rejected by admission control (typed quota errors); a
+    /// rejected job is skipped, its tenant's later jobs still run.
+    pub rejected: u64,
+}
+
+impl TenancyRun {
+    /// JCTs of one tenant's completed jobs, in completion order.
+    pub fn jcts_of(&self, slot: usize) -> Vec<f64> {
+        self.outcomes
+            .iter()
+            .filter(|o| o.slot == slot)
+            .map(|o| o.jct_s)
+            .collect()
+    }
+
+    pub fn all_exact(&self) -> bool {
+        self.outcomes.iter().all(|o| o.exact)
+    }
+}
+
+/// Poisson arrival times: `n` arrivals at `rate_hz`, exponential gaps
+/// from a seeded stream (`-ln(1-u)/λ`; `u = 0` is safe).
+pub fn poisson_starts(rate_hz: f64, n: usize, seed: u64) -> Vec<f64> {
+    assert!(rate_hz > 0.0);
+    let mut rng = Pcg32::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            let u = rng.next_f64();
+            t += -(1.0 - u).ln() / rate_hz;
+            t
+        })
+        .collect()
+}
+
+// Tag layout: kind(8) | slot(8) | gen(8) | child(8) | idx(32).  With
+// slot = gen = 0 this collapses to the transport driver's layout, which
+// keeps the zero-churn single-tenant run's event stream identical.
+// slot/gen filter stragglers *across jobs*: a late retransmission or
+// duplicate of a finished generation is recognized and dropped instead
+// of corrupting a later job of the same tenant.
+fn ttag(kind: u64, slot: usize, gen: u8, child: usize, idx: u32) -> u64 {
+    debug_assert!(slot < 256 && child < 256);
+    (kind << 56) | ((slot as u64) << 48) | ((gen as u64) << 40) | ((child as u64) << 32) | idx as u64
+}
+
+fn ttag_kind(t: u64) -> u64 {
+    t >> 56
+}
+
+fn ttag_slot(t: u64) -> usize {
+    ((t >> 48) & 0xFF) as usize
+}
+
+fn ttag_gen(t: u64) -> u8 {
+    ((t >> 40) & 0xFF) as u8
+}
+
+fn ttag_child(t: u64) -> usize {
+    ((t >> 32) & 0xFF) as usize
+}
+
+fn ttag_idx(t: u64) -> u32 {
+    t as u32
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Ingress,
+    Egress,
+}
+
+/// Live state of one tenant's in-flight job.
+struct ActiveJob {
+    tree: TreeId,
+    op: AggOp,
+    gen: u8,
+    job_idx: usize,
+    start_spec_s: f64,
+    phase: Phase,
+    // Ingress hop.
+    pkts: Vec<Vec<AggregationPacket>>,
+    lens: Vec<Vec<u64>>,
+    senders: Vec<AdaptiveSender>,
+    acks: Vec<AggAckPacket>,
+    sink: IngestSink,
+    ingress: NetHopStats,
+    // Egress hop (built at the ingress → egress transition).
+    epkts: Vec<AggregationPacket>,
+    elens: Vec<u64>,
+    esender: Option<AdaptiveSender>,
+    eacks: Vec<AggAckPacket>,
+    ep: Option<Endpoint<Vec<KvPair>>>,
+    egress: NetHopStats,
+    expected: HashMap<Key, Value>,
+    // Per-phase accounting marks.
+    events_mark: u64,
+    links_mark: BTreeMap<(NodeId, NodeId), LinkStats>,
+}
+
+fn link_delta(
+    after: &BTreeMap<(NodeId, NodeId), LinkStats>,
+    before: &BTreeMap<(NodeId, NodeId), LinkStats>,
+    key: (NodeId, NodeId),
+) -> (u64, u64) {
+    let a = after.get(&key).map(|s| (s.dropped, s.duplicated)).unwrap_or((0, 0));
+    let b = before.get(&key).map(|s| (s.dropped, s.duplicated)).unwrap_or((0, 0));
+    (a.0 - b.0, a.1 - b.1)
+}
+
+fn fill_sender_stats<'a>(stats: &mut NetHopStats, senders: impl Iterator<Item = &'a AdaptiveSender>) {
+    let mut srtt_sum = 0.0;
+    let mut srtt_n = 0u32;
+    for s in senders {
+        stats.first_tx += s.first_tx;
+        stats.retransmissions += s.retransmissions;
+        stats.timeouts += s.timeouts;
+        stats.cwnd_peak = stats.cwnd_peak.max(s.cwnd_peak());
+        if let Some(srtt) = s.rtt().srtt_s() {
+            srtt_sum += srtt;
+            srtt_n += 1;
+        }
+    }
+    if srtt_n > 0 {
+        stats.srtt_mean_s = srtt_sum / srtt_n as f64;
+    }
+}
+
+struct Driver<'a> {
+    cfg: &'a TransportConfig,
+    specs: &'a [TenantSpec],
+    regime: TenancyRegime,
+    sim: NetSim,
+    hub: NodeId,
+    mappers: Vec<NodeId>,
+    reducer: NodeId,
+    /// First mapper index of each slot.
+    base: Vec<usize>,
+    jobs: Vec<Option<ActiveJob>>,
+    /// (start_s, slot, job index) not yet activated.
+    pending: Vec<(f64, usize, usize)>,
+    outcomes: Vec<JobOutcome>,
+    reclaims: u64,
+    rejected: u64,
+}
+
+impl<'a> Driver<'a> {
+    fn new(specs: &'a [TenantSpec], regime: TenancyRegime, cfg: &'a TransportConfig) -> Self {
+        let total: usize = specs.iter().map(|s| s.children as usize).sum();
+        let (topo, hub, hosts) = Topology::star(total + 1);
+        let mut sim = NetSim::new(topo);
+        let mappers = hosts[..total].to_vec();
+        let reducer = hosts[total];
+        for &m in &mappers {
+            sim.set_link_loss(m, hub, cfg.data);
+            sim.set_link_loss(hub, m, cfg.ack);
+        }
+        sim.set_link_loss(hub, reducer, cfg.egress);
+        sim.set_link_loss(reducer, hub, cfg.ack);
+        let mut base = Vec::with_capacity(specs.len());
+        let mut acc = 0usize;
+        for s in specs {
+            base.push(acc);
+            acc += s.children as usize;
+        }
+        let pending = specs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.jobs.is_empty())
+            .map(|(i, s)| (s.jobs[0].start_s, i, 0usize))
+            .collect();
+        Self {
+            cfg,
+            specs,
+            regime,
+            sim,
+            hub,
+            mappers,
+            reducer,
+            base,
+            jobs: specs.iter().map(|_| None).collect(),
+            pending,
+            outcomes: Vec::new(),
+            reclaims: 0,
+            rejected: 0,
+        }
+    }
+
+    fn quota_regime(&self) -> bool {
+        !matches!(self.regime, TenancyRegime::StaticSplit)
+    }
+
+    /// Activate every pending job whose start time has come.
+    fn activate_due(&mut self, sw: &mut SwitchAggSwitch, t: f64) {
+        loop {
+            let Some(pos) = self
+                .pending
+                .iter()
+                .position(|&(s, _, _)| s <= t)
+            else {
+                return;
+            };
+            let (start, slot, job_idx) = self.pending.swap_remove(pos);
+            self.activate(sw, slot, job_idx, start.max(self.sim.now_s()));
+        }
+    }
+
+    /// Admit (if needed) and launch one job at time `t`.
+    fn activate(&mut self, sw: &mut SwitchAggSwitch, slot: usize, job_idx: usize, t: f64) {
+        let spec = &self.specs[slot];
+        let job = &spec.jobs[job_idx];
+        assert_eq!(job.streams.len(), spec.children as usize);
+        assert!(self.jobs[slot].is_none(), "tenant {slot} has overlapping jobs");
+
+        if self.quota_regime() && sw.stats(spec.tree).is_none() {
+            let tc = TreeConfig {
+                tree: spec.tree,
+                children: spec.children,
+                parent_port: 0,
+                op: spec.op,
+            };
+            if let Ok(spilled) = sw.admit_tree_or_reclaim(tc, spec.quota, spec.weight) {
+                self.reclaims += spilled.len() as u64;
+                for (victim, pairs) in spilled {
+                    // Idle tenants are flushed between jobs, so a
+                    // reclaim pass finds their tables empty; pairs
+                    // here would mean data left a completed job.
+                    assert!(
+                        pairs.is_empty(),
+                        "reclaim spilled {} residents of idle {victim}",
+                        pairs.len()
+                    );
+                }
+            }
+            // Typed quota rejection — including the degraded path
+            // where reclaim shrank neighbors but still freed too
+            // little (`Ok` with the tree absent): skip this job, keep
+            // the tenant's later arrivals in the schedule.
+            if sw.stats(spec.tree).is_none() {
+                self.rejected += 1;
+                if job_idx + 1 < spec.jobs.len() {
+                    let next = spec.jobs[job_idx + 1].start_s.max(t);
+                    self.pending.push((next, slot, job_idx + 1));
+                }
+                return;
+            }
+        } else if self.quota_regime() {
+            // Resident from a previous job: grow back any slots an
+            // elastic reclaim took while idle.
+            if let Some(pairs) = sw.regrow_tenant(spec.tree) {
+                assert!(pairs.is_empty(), "regrow spilled residents of {}", spec.tree);
+            }
+        }
+
+        // New job generation: fence the previous one's stragglers and
+        // reset the per-child dedup windows (seqs restart at 1).
+        sw.begin_epoch(spec.tree, job_idx as u16);
+        sw.set_tenant_idle(spec.tree, false);
+
+        let gen = job_idx as u8;
+        let pkts: Vec<Vec<AggregationPacket>> = job
+            .streams
+            .iter()
+            .enumerate()
+            .map(|(c, s)| {
+                let mut v = AggregationPacket::pack_stream(spec.tree, spec.op, s, true);
+                stamp(&mut v, c as u16, job_idx as u16, |p, rel| p.rel = Some(rel));
+                v
+            })
+            .collect();
+        let lens: Vec<Vec<u64>> = pkts
+            .iter()
+            .map(|v| v.iter().map(|p| p.wire_len() as u64).collect())
+            .collect();
+        let mut senders: Vec<AdaptiveSender> =
+            lens.iter().map(|l| self.cfg.sender_for(l.len())).collect();
+
+        let mut ingress = NetHopStats::default();
+        for l in &lens {
+            ingress.first_tx_bytes += l.iter().sum::<u64>();
+        }
+        let events_mark = self.sim.events_processed();
+        let links_mark = self.sim.link_stats();
+        let expected = Reducer::merge_software(&job.streams, spec.op).table;
+
+        let mut out_seqs = Vec::new();
+        for c in 0..senders.len() {
+            out_seqs.clear();
+            senders[c].poll(t, &mut out_seqs);
+            for &seq in &out_seqs {
+                let bytes = lens[c][(seq - 1) as usize];
+                ingress.wire_bytes += bytes;
+                self.sim.send_tagged(
+                    t,
+                    self.mappers[self.base[slot] + c],
+                    self.hub,
+                    bytes,
+                    ttag(KIND_INGRESS_DATA, slot, gen, c, seq),
+                );
+            }
+        }
+
+        self.jobs[slot] = Some(ActiveJob {
+            tree: spec.tree,
+            op: spec.op,
+            gen,
+            job_idx,
+            start_spec_s: job.start_s,
+            phase: Phase::Ingress,
+            pkts,
+            lens,
+            senders,
+            acks: Vec::new(),
+            sink: IngestSink::new(),
+            ingress,
+            epkts: Vec::new(),
+            elens: Vec::new(),
+            esender: None,
+            eacks: Vec::new(),
+            ep: None,
+            egress: NetHopStats::default(),
+            expected,
+            events_mark,
+            links_mark,
+        });
+    }
+
+    /// All ingress senders acknowledged: finalize the switch side and
+    /// launch the egress hop at time `t`.
+    fn transition(&mut self, sw: &mut SwitchAggSwitch, slot: usize, t: f64) {
+        let job = self.jobs[slot].as_mut().expect("transition of idle slot");
+        assert_eq!(job.sink.flushes, 1, "all EoTs admitted ⇒ exactly one flush");
+        sw.finalize(job.tree);
+
+        // Close out the ingress hop's accounting.
+        job.ingress.done_s = t;
+        fill_sender_stats(&mut job.ingress, job.senders.iter());
+        let links = self.sim.link_stats();
+        for c in 0..job.senders.len() {
+            let m = self.mappers[self.base[slot] + c];
+            let (drops, dups) = link_delta(&links, &job.links_mark, (m, self.hub));
+            job.ingress.drops += drops;
+            job.ingress.dups += dups;
+            job.ingress.acks_dropped += link_delta(&links, &job.links_mark, (self.hub, m)).0;
+        }
+        job.ingress.events = self.sim.events_processed() - job.events_mark;
+        job.events_mark = self.sim.events_processed();
+        job.links_mark = links;
+
+        // Egress: the switch's emitted stream (forwarded, then flush)
+        // rides the shared hub → reducer link.
+        let mut egress_pairs =
+            Vec::with_capacity(job.sink.forwarded.len() + job.sink.flushed.len());
+        egress_pairs.extend_from_slice(&job.sink.forwarded);
+        egress_pairs.extend_from_slice(&job.sink.flushed);
+        let mut epkts = AggregationPacket::pack_stream(job.tree, job.op, &egress_pairs, true);
+        stamp(&mut epkts, 0, job.job_idx as u16, |p, rel| p.rel = Some(rel));
+        let elens: Vec<u64> = epkts.iter().map(|p| p.wire_len() as u64).collect();
+        job.egress.first_tx_bytes = elens.iter().sum();
+        let mut esender = self.cfg.sender_for(epkts.len());
+        job.ep = Some(Endpoint::new(Vec::new(), self.cfg.window));
+        job.phase = Phase::Egress;
+
+        let mut out_seqs = Vec::new();
+        esender.poll(t, &mut out_seqs);
+        for &seq in &out_seqs {
+            let bytes = elens[(seq - 1) as usize];
+            job.egress.wire_bytes += bytes;
+            self.sim.send_tagged(
+                t,
+                self.hub,
+                self.reducer,
+                bytes,
+                ttag(KIND_EGRESS_DATA, slot, job.gen, 0, seq),
+            );
+        }
+        job.epkts = epkts;
+        job.elens = elens;
+        job.esender = Some(esender);
+    }
+
+    /// The egress hop fully acknowledged: record the outcome, run the
+    /// tenant's departure housekeeping, schedule its next job.
+    fn complete(&mut self, sw: &mut SwitchAggSwitch, slot: usize, t: f64) {
+        let mut job = self.jobs[slot].take().expect("completion of idle slot");
+        job.egress.done_s = t;
+        fill_sender_stats(&mut job.egress, job.esender.iter());
+        let links = self.sim.link_stats();
+        let (drops, dups) = link_delta(&links, &job.links_mark, (self.hub, self.reducer));
+        job.egress.drops = drops;
+        job.egress.dups = dups;
+        job.egress.acks_dropped = link_delta(&links, &job.links_mark, (self.reducer, self.hub)).0;
+        job.egress.events = self.sim.events_processed() - job.events_mark;
+
+        let received = job.ep.expect("egress endpoint").received;
+        let exact =
+            Reducer::merge_software(std::slice::from_ref(&received), job.op).table == job.expected;
+        self.outcomes.push(JobOutcome {
+            slot,
+            tree: job.tree,
+            job: job.job_idx,
+            start_s: job.start_spec_s,
+            done_s: t,
+            jct_s: t - job.start_spec_s,
+            exact,
+            received,
+            ingress: job.ingress,
+            egress: job.egress,
+        });
+
+        let spec = &self.specs[slot];
+        sw.set_tenant_idle(spec.tree, true);
+        if self.quota_regime() && spec.evict_between_jobs {
+            if let Some(res) = sw.evict_tree(spec.tree) {
+                assert!(res.is_empty(), "eviction spilled residents of a flushed tenant");
+            }
+        }
+        if job.job_idx + 1 < spec.jobs.len() {
+            let next = spec.jobs[job.job_idx + 1].start_s.max(t);
+            self.pending.push((next, slot, job.job_idx + 1));
+        }
+    }
+
+    /// Weighted egress credit: cap the reducer's advertised window at
+    /// the tenant's share over the currently busy weights (the mirror
+    /// of the switch's ingress-side [`GrantPolicy::WeightedShare`]).
+    fn egress_credit(&self, slot: usize, credit: u16) -> u16 {
+        if self.regime != TenancyRegime::QuotaWeighted {
+            return credit;
+        }
+        let busy: u64 = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| j.is_some())
+            .map(|(i, _)| self.specs[i].weight.max(1))
+            .sum();
+        let active = self.jobs.iter().filter(|j| j.is_some()).count();
+        if active <= 1 {
+            return credit;
+        }
+        WeightedGrants::new(self.cfg.window.get() as u16).cap(
+            credit,
+            self.specs[slot].weight.max(1),
+            busy,
+        )
+    }
+
+    fn dispatch(&mut self, sw: &mut SwitchAggSwitch, d: Delivery) {
+        let kind = ttag_kind(d.tag);
+        let slot = ttag_slot(d.tag);
+        let gen = ttag_gen(d.tag);
+        if slot >= self.jobs.len() {
+            return;
+        }
+        // Straggler fence: anything from a finished generation (late
+        // retransmission / duplicate) or the wrong phase is dropped —
+        // the job has moved on.
+        match kind {
+            k if k == KIND_INGRESS_DATA && d.node == self.hub => {
+                let child = ttag_child(d.tag);
+                let seq = ttag_idx(d.tag);
+                let Some(job) = self.jobs[slot].as_mut() else { return };
+                if job.gen != gen || job.phase != Phase::Ingress {
+                    return;
+                }
+                let pkt = &job.pkts[child][(seq - 1) as usize];
+                let ack = sw.ingest_reliable_one(job.tree, pkt, &mut job.sink);
+                let id = u32::try_from(job.acks.len()).expect("ack id space exhausted");
+                job.acks.push(ack);
+                self.sim.send_tagged(
+                    d.time_s,
+                    self.hub,
+                    self.mappers[self.base[slot] + child],
+                    ACK_WIRE_LEN,
+                    ttag(KIND_INGRESS_ACK, slot, gen, child, id),
+                );
+            }
+            k if k == KIND_INGRESS_ACK => {
+                let c = ttag_child(d.tag);
+                let mut all_done = false;
+                {
+                    let Some(job) = self.jobs[slot].as_mut() else { return };
+                    if job.gen != gen || job.phase != Phase::Ingress {
+                        return;
+                    }
+                    let ack = job.acks[ttag_idx(d.tag) as usize];
+                    let sender = &mut job.senders[c];
+                    sender.on_ack(ack.cum_seq, ack.credit, d.time_s);
+                    let mut out_seqs = Vec::new();
+                    sender.poll(d.time_s, &mut out_seqs);
+                    for &seq in &out_seqs {
+                        let bytes = job.lens[c][(seq - 1) as usize];
+                        job.ingress.wire_bytes += bytes;
+                        self.sim.send_tagged(
+                            d.time_s,
+                            self.mappers[self.base[slot] + c],
+                            self.hub,
+                            bytes,
+                            ttag(KIND_INGRESS_DATA, slot, gen, c, seq),
+                        );
+                    }
+                    if job.senders.iter().all(|s| s.done()) {
+                        all_done = true;
+                    }
+                }
+                if all_done {
+                    self.transition(sw, slot, d.time_s);
+                }
+            }
+            k if k == KIND_EGRESS_DATA && d.node == self.reducer => {
+                let seq = ttag_idx(d.tag);
+                let Some(job) = self.jobs[slot].as_mut() else { return };
+                if job.gen != gen || job.phase != Phase::Egress {
+                    return;
+                }
+                let pkt = &job.epkts[(seq - 1) as usize];
+                let rel = pkt.rel.expect("egress packets carry rel headers");
+                let ep = job.ep.as_mut().expect("egress endpoint");
+                if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                    ep.received.extend_from_slice(&pkt.pairs);
+                }
+                let mut ack = ep.ack_for(job.tree, rel.child);
+                let id = u32::try_from(job.eacks.len()).expect("ack id space exhausted");
+                ack.credit = self.egress_credit(slot, ack.credit);
+                let Some(job) = self.jobs[slot].as_mut() else { return };
+                job.eacks.push(ack);
+                self.sim.send_tagged(
+                    d.time_s,
+                    self.reducer,
+                    self.hub,
+                    ACK_WIRE_LEN,
+                    ttag(KIND_EGRESS_ACK, slot, gen, 0, id),
+                );
+            }
+            k if k == KIND_EGRESS_ACK && d.node == self.hub => {
+                let mut done = false;
+                {
+                    let Some(job) = self.jobs[slot].as_mut() else { return };
+                    if job.gen != gen || job.phase != Phase::Egress {
+                        return;
+                    }
+                    let ack = job.eacks[ttag_idx(d.tag) as usize];
+                    let sender = job.esender.as_mut().expect("egress sender");
+                    sender.on_ack(ack.cum_seq, ack.credit, d.time_s);
+                    let mut out_seqs = Vec::new();
+                    sender.poll(d.time_s, &mut out_seqs);
+                    for &seq in &out_seqs {
+                        let bytes = job.elens[(seq - 1) as usize];
+                        job.egress.wire_bytes += bytes;
+                        self.sim.send_tagged(
+                            d.time_s,
+                            self.hub,
+                            self.reducer,
+                            bytes,
+                            ttag(KIND_EGRESS_DATA, slot, gen, 0, seq),
+                        );
+                    }
+                    if sender.done() {
+                        done = true;
+                    }
+                }
+                if done {
+                    self.complete(sw, slot, d.time_s);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// The network drained with work outstanding: jump to the earliest
+    /// retransmission deadline or pending job start — no tick idling.
+    fn drained(&mut self, sw: &mut SwitchAggSwitch) {
+        let deadline = self
+            .jobs
+            .iter()
+            .flatten()
+            .flat_map(|j| {
+                j.senders
+                    .iter()
+                    .chain(j.esender.iter())
+                    .filter(|s| !s.done())
+                    .filter_map(|s| s.next_retx_deadline())
+            })
+            .fold(f64::INFINITY, f64::min);
+        let next_start = self
+            .pending
+            .iter()
+            .map(|&(s, _, _)| s)
+            .fold(f64::INFINITY, f64::min);
+        if next_start <= deadline {
+            assert!(next_start.is_finite(), "drained with nothing scheduled");
+            self.activate_due(sw, next_start);
+            return;
+        }
+        let t = if deadline.is_finite() {
+            deadline.max(self.sim.now_s())
+        } else {
+            self.sim.now_s()
+        };
+        let mut sent_any = false;
+        let mut out_seqs = Vec::new();
+        for slot in 0..self.jobs.len() {
+            let Some(job) = self.jobs[slot].as_mut() else { continue };
+            let gen = job.gen;
+            match job.phase {
+                Phase::Ingress => {
+                    for c in 0..job.senders.len() {
+                        if job.senders[c].done() {
+                            continue;
+                        }
+                        out_seqs.clear();
+                        job.senders[c].poll(t, &mut out_seqs);
+                        for &seq in &out_seqs {
+                            sent_any = true;
+                            let bytes = job.lens[c][(seq - 1) as usize];
+                            job.ingress.wire_bytes += bytes;
+                            self.sim.send_tagged(
+                                t,
+                                self.mappers[self.base[slot] + c],
+                                self.hub,
+                                bytes,
+                                ttag(KIND_INGRESS_DATA, slot, gen, c, seq),
+                            );
+                        }
+                    }
+                }
+                Phase::Egress => {
+                    let sender = job.esender.as_mut().expect("egress sender");
+                    if sender.done() {
+                        continue;
+                    }
+                    out_seqs.clear();
+                    sender.poll(t, &mut out_seqs);
+                    for &seq in &out_seqs {
+                        sent_any = true;
+                        let bytes = job.elens[(seq - 1) as usize];
+                        job.egress.wire_bytes += bytes;
+                        self.sim.send_tagged(
+                            t,
+                            self.hub,
+                            self.reducer,
+                            bytes,
+                            ttag(KIND_EGRESS_DATA, slot, gen, 0, seq),
+                        );
+                    }
+                }
+            }
+        }
+        assert!(
+            sent_any,
+            "tenancy stalled: idle network, no timers, nothing to send"
+        );
+    }
+
+    fn run(mut self, sw: &mut SwitchAggSwitch) -> TenancyRun {
+        let mut steps = 0u64;
+        loop {
+            let active_any = self.jobs.iter().any(|j| j.is_some());
+            if !active_any && self.pending.is_empty() {
+                break;
+            }
+            steps += 1;
+            assert!(
+                steps <= self.cfg.max_steps,
+                "tenancy run did not converge within {} steps",
+                self.cfg.max_steps
+            );
+            if !active_any {
+                let next = self
+                    .pending
+                    .iter()
+                    .map(|&(s, _, _)| s)
+                    .fold(f64::INFINITY, f64::min);
+                self.activate_due(sw, next);
+                continue;
+            }
+            match self.sim.step_delivery() {
+                Some(d) => {
+                    self.activate_due(sw, d.time_s);
+                    self.dispatch(sw, d);
+                }
+                None => self.drained(sw),
+            }
+        }
+        TenancyRun {
+            outcomes: self.outcomes,
+            reclaims: self.reclaims,
+            rejected: self.rejected,
+        }
+    }
+}
+
+/// Run a multi-tenant serving schedule to completion.
+///
+/// For [`TenancyRegime::StaticSplit`] the caller must have configured
+/// every spec's tree on `sw` (the legacy even-split `configure`); for
+/// the quota regimes `sw` starts empty and the driver admits/evicts
+/// tenants as their jobs arrive and depart.
+pub fn run_tenancy(
+    sw: &mut SwitchAggSwitch,
+    specs: &[TenantSpec],
+    regime: TenancyRegime,
+    cfg: &TransportConfig,
+) -> TenancyRun {
+    assert!(!specs.is_empty());
+    assert!(specs.len() <= 255, "slot tag is 8 bits");
+    for s in specs {
+        assert!((1..=255).contains(&s.children), "child tag is 8 bits");
+        assert!(s.jobs.len() <= 255, "gen tag is 8 bits");
+    }
+    apply_session_policy(sw, cfg);
+    sw.set_grant_policy(match regime {
+        TenancyRegime::QuotaWeighted => GrantPolicy::WeightedShare,
+        _ => GrantPolicy::Uniform,
+    });
+    if matches!(regime, TenancyRegime::StaticSplit) {
+        for s in specs {
+            assert!(
+                sw.stats(s.tree).is_some(),
+                "StaticSplit requires every tree pre-configured ({})",
+                s.tree
+            );
+        }
+    }
+    Driver::new(specs, regime, cfg).run(sw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::transport::run_transport_scalar;
+    use crate::switch::SwitchConfig;
+
+    fn streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+        let mut rng = Pcg32::new(seed);
+        (0..children)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        let id = rng.gen_range_u64(200);
+                        KvPair::new(
+                            Key::from_id(id, 16 + (id % 49) as usize),
+                            rng.gen_range_u64(100) as i64 - 50,
+                        )
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn scfg() -> SwitchConfig {
+        SwitchConfig::scaled(64 << 10, Some(1 << 20))
+    }
+
+    fn spec(id: u32, children: u16, jobs: Vec<TenantJob>) -> TenantSpec {
+        TenantSpec {
+            tree: TreeId(id),
+            children,
+            op: AggOp::Sum,
+            weight: 1,
+            quota: QuotaRequest {
+                fpe_bytes: 16 << 10,
+                bpe_bytes: 256 << 10,
+            },
+            evict_between_jobs: false,
+            jobs,
+        }
+    }
+
+    #[test]
+    fn zero_churn_single_tenant_matches_the_transport_session() {
+        for cfg in [
+            TransportConfig::default(),
+            TransportConfig::uniform(0.05, 0xBEEF),
+        ] {
+            let ss = streams(3, 600, 7);
+            let mut ref_sw = SwitchAggSwitch::new(scfg());
+            ref_sw.configure(&[TreeConfig {
+                tree: TreeId(1),
+                children: 3,
+                parent_port: 0,
+                op: AggOp::Sum,
+            }]);
+            let reference = run_transport_scalar(&mut ref_sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+
+            let mut sw = SwitchAggSwitch::new(scfg());
+            sw.configure(&[TreeConfig {
+                tree: TreeId(1),
+                children: 3,
+                parent_port: 0,
+                op: AggOp::Sum,
+            }]);
+            let run = run_tenancy(
+                &mut sw,
+                &[spec(1, 3, vec![TenantJob { start_s: 0.0, streams: ss }])],
+                TenancyRegime::StaticSplit,
+                &cfg,
+            );
+            assert_eq!(run.outcomes.len(), 1);
+            let o = &run.outcomes[0];
+            assert!(o.exact);
+            assert_eq!(o.received, reference.received, "admitted stream");
+            assert_eq!(o.jct_s, reference.jct_s, "JCT");
+            assert_eq!(o.ingress, reference.ingress, "ingress hop stats");
+            assert_eq!(o.egress, reference.egress, "egress hop stats");
+            assert_eq!(
+                format!("{:?}", sw.stats(TreeId(1))),
+                format!("{:?}", ref_sw.stats(TreeId(1))),
+                "switch stats"
+            );
+            assert_eq!(
+                format!("{:?}", sw.dedup_stats(TreeId(1))),
+                format!("{:?}", ref_sw.dedup_stats(TreeId(1)))
+            );
+        }
+    }
+
+    #[test]
+    fn interleaved_tenants_with_churn_stay_exact() {
+        let mk_jobs = |seed: u64| {
+            vec![
+                TenantJob {
+                    start_s: 0.0,
+                    streams: streams(2, 300, seed),
+                },
+                TenantJob {
+                    start_s: 1e-4,
+                    streams: streams(2, 300, seed ^ 99),
+                },
+            ]
+        };
+        for regime in [TenancyRegime::QuotaReclaim, TenancyRegime::QuotaWeighted] {
+            let mut sw = SwitchAggSwitch::new(scfg());
+            let mut a = spec(1, 2, mk_jobs(11));
+            a.evict_between_jobs = true;
+            let b = spec(2, 2, mk_jobs(23));
+            let run = run_tenancy(&mut sw, &[a, b], regime, &TransportConfig::default());
+            assert_eq!(run.outcomes.len(), 4, "{regime:?}");
+            assert!(run.all_exact(), "{regime:?}");
+            assert_eq!(run.rejected, 0, "{regime:?}");
+            // Tenant 1 departed after its last job; tenant 2 stayed.
+            assert!(sw.stats(TreeId(1)).is_none());
+            assert!(sw.stats(TreeId(2)).is_some());
+        }
+    }
+
+    #[test]
+    fn admission_rejection_skips_the_job_not_the_tenant() {
+        // FPE so small that two concurrent full-size quotas cannot both
+        // fit, and the first tenant is busy (unreclaimable) when the
+        // second arrives.
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(2 << 10, None));
+        let q = QuotaRequest {
+            fpe_bytes: 1536,
+            bpe_bytes: 0,
+        };
+        let mut a = spec(1, 2, vec![TenantJob { start_s: 0.0, streams: streams(2, 400, 3) }]);
+        a.quota = q;
+        let mut b = spec(
+            2,
+            2,
+            vec![
+                TenantJob { start_s: 1e-6, streams: streams(2, 50, 5) },
+                TenantJob { start_s: 2e-2, streams: streams(2, 50, 6) },
+            ],
+        );
+        b.quota = q;
+        let run = run_tenancy(
+            &mut sw,
+            &[a, b],
+            TenancyRegime::QuotaReclaim,
+            &TransportConfig::default(),
+        );
+        assert_eq!(run.rejected, 1, "tenant 2's first arrival bounced");
+        // Tenant 1's job and tenant 2's second (post-departure) job ran.
+        assert_eq!(run.outcomes.len(), 2);
+        assert!(run.all_exact());
+        assert_eq!(run.jcts_of(1).len(), 1);
+    }
+
+    #[test]
+    fn poisson_starts_are_monotone_and_seeded() {
+        let a = poisson_starts(100.0, 50, 42);
+        let b = poisson_starts(100.0, 50, 42);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert!(a[0] > 0.0);
+        let mean_gap = a.last().unwrap() / 50.0;
+        assert!(
+            mean_gap > 0.002 && mean_gap < 0.05,
+            "mean gap {mean_gap} should be near 1/rate"
+        );
+    }
+}

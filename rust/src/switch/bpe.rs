@@ -240,6 +240,38 @@ impl Bpe {
         start
     }
 
+    /// Rebuild the per-group DRAM regions at a new memory share (quota
+    /// resize), draining every resident pair into `out` for software
+    /// merge.  The DRAM model, lifetime combine count and all engine
+    /// counters survive — like `Fpe::replace_table`, a resize is a
+    /// memory management event, not a pipeline event.
+    pub(crate) fn rebuild_regions(
+        &mut self,
+        cfg: &SwitchConfig,
+        mem_share: u64,
+        lanes: usize,
+        out: &mut Vec<(Key, Value)>,
+    ) {
+        let combines: u64 = self.regions.iter().map(|r| r.combines).sum();
+        for r in &mut self.regions {
+            r.drain_into(out);
+        }
+        let per_region = mem_share / cfg.n_groups as u64;
+        self.regions = (0..cfg.n_groups)
+            .map(|g| {
+                HashTable::with_memory_lanes(
+                    per_region,
+                    cfg.group_width(g),
+                    cfg.bpe_slots_per_bucket,
+                    lanes,
+                )
+            })
+            .collect();
+        // `agg_ops` sums the regions' accounting points; park the
+        // lifetime count on region 0 so the sum is unchanged.
+        self.regions[0].combines = combines;
+    }
+
     /// Fold shard-worker probe outcome counts back into the engine
     /// (the counterpart of the probes run on [`Self::regions_mut`]).
     pub(crate) fn absorb_probe_counts(&mut self, aggregated: u64, inserted: u64, overflowed: u64) {
@@ -429,6 +461,33 @@ mod tests {
         wide.flush_lanes_into(&mut keys, &mut vals);
         assert_eq!(keys, vec![k]);
         assert_eq!(vals, vec![6i64; 8]);
+    }
+
+    #[test]
+    fn rebuild_regions_preserves_counters_and_dram_state() {
+        let cfg = SwitchConfig::default();
+        let mut b = Bpe::for_tree(&cfg, 1 << 20);
+        for id in 0..20u64 {
+            b.offer(id * 4, 1, Key::from_id(id % 6, 16), 1, AggOp::Sum);
+        }
+        let counters = (b.aggregated, b.inserted, b.overflowed, b.fifo_writes);
+        let ops = b.agg_ops();
+        let dram = b.dram_stats();
+        let lat = b.latency_cycles;
+
+        let mut spilled = Vec::new();
+        b.rebuild_regions(&cfg, 8 * 68, 1, &mut spilled);
+        assert_eq!(spilled.len(), 6, "residents drained, not dropped");
+        assert_eq!(b.occupancy_pairs(), 0);
+        assert_eq!(b.regions.len(), cfg.n_groups);
+
+        assert_eq!(
+            (b.aggregated, b.inserted, b.overflowed, b.fifo_writes),
+            counters
+        );
+        assert_eq!(b.agg_ops(), ops, "lifetime combine count survives");
+        assert_eq!(b.dram_stats(), dram, "DRAM model untouched");
+        assert_eq!(b.latency_cycles, lat);
     }
 
     #[test]

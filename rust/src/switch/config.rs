@@ -130,6 +130,20 @@ impl SwitchConfig {
     pub fn group_width(&self, g: usize) -> usize {
         (g + 1) * self.key_base
     }
+
+    /// Smallest per-tree FPE memory share that gives every group at
+    /// least one real slot at `lanes` value lanes.
+    ///
+    /// `HashTable::with_memory_lanes` floors its slot count at 1, so a
+    /// share below this bound silently builds degenerate tables where
+    /// the widest groups thrash every insert through the BPE.  Splits
+    /// (static `configure` divisions or explicit quotas) are validated
+    /// against this bound so the rounding edge is a typed admission
+    /// error instead of a silent capacity collapse.
+    pub fn min_fpe_share(&self, lanes: usize) -> u64 {
+        let widest = self.group_width(self.n_groups - 1);
+        self.n_groups as u64 * (widest + lanes * 4) as u64
+    }
 }
 
 /// Memory partitioning policy among concurrent trees.
@@ -290,6 +304,37 @@ mod tests {
         // Even policy ignores weights.
         m.policy = MemoryPolicy::Even;
         assert_eq!(m.memory_share_for(TreeId(1), 100), 50);
+    }
+
+    #[test]
+    fn min_fpe_share_covers_every_group() {
+        let c = SwitchConfig::default();
+        // 8 groups, widest slot = 64 B key + 4 B value = 68 B.
+        assert_eq!(c.min_fpe_share(1), 8 * (64 + 4));
+        // Wider value lanes raise the bound.
+        assert_eq!(c.min_fpe_share(8), 8 * (64 + 32));
+    }
+
+    #[test]
+    fn rounding_edge_sits_exactly_at_the_bound() {
+        let c = SwitchConfig::default();
+        let min = c.min_fpe_share(1);
+        // At the bound, each group's slice fits one widest-group slot.
+        assert!(min / c.n_groups as u64 >= (c.group_width(c.n_groups - 1) + 4) as u64);
+        // One byte under, the per-group slice rounds the widest group
+        // down to zero real slots — the case validation must reject.
+        let per_group = (min - 1) / c.n_groups as u64;
+        assert!(per_group < (c.group_width(c.n_groups - 1) + 4) as u64);
+    }
+
+    #[test]
+    fn even_split_rounding_can_cross_the_bound() {
+        // A split that is fine at 2 trees collapses at 33: this is the
+        // silent-zero-capacity edge the typed validation guards.
+        let c = SwitchConfig::scaled(16 << 10, None);
+        let min = c.min_fpe_share(1);
+        assert!(c.fpe_total_mem / 2 >= min);
+        assert!(c.fpe_total_mem / 33 < min);
     }
 
     #[test]

@@ -86,6 +86,19 @@ impl Fpe {
         &self.table
     }
 
+    /// Swap in a replacement SRAM table (quota resize), draining any
+    /// resident pairs into `out` for software merge.  Counters, FIFO
+    /// state and the busy chain are untouched — a resize is a memory
+    /// management event, not a pipeline event.
+    pub(crate) fn replace_table(&mut self, table: HashTable, out: &mut Vec<(Key, Value)>) {
+        let combines = self.table.combines;
+        self.table.drain_into(out);
+        self.table = table;
+        // `agg_ops` reads the table's accounting point; carry the
+        // lifetime combine count into the replacement.
+        self.table.combines = combines;
+    }
+
     /// FIFO occupancy as seen by an arrival at cycle `at`.
     ///
     /// Completions within one busy period are spaced exactly
@@ -349,6 +362,30 @@ mod tests {
         f.offer(20, k, 7, AggOp::Sum);
         assert_eq!(f.agg_ops(), 2);
         assert_eq!(f.agg_ops(), f.aggregated);
+    }
+
+    #[test]
+    fn replace_table_preserves_counters_and_busy_chain() {
+        let mut f = fpe(64, 64);
+        for id in 0..10u64 {
+            f.offer(id, Key::from_id(id % 3, 16), 1, AggOp::Sum);
+        }
+        let writes = f.fifo_writes;
+        let agg = (f.aggregated, f.inserted, f.evicted);
+        let ops = f.agg_ops();
+        let lat = f.latency_cycles;
+        let depth = f.fifo_depth();
+
+        let mut spilled = Vec::new();
+        f.replace_table(HashTable::with_memory(40, 16, 2), &mut spilled);
+        assert_eq!(spilled.len(), 3, "residents drained, not dropped");
+        assert_eq!(f.table().occupancy(), 0);
+
+        assert_eq!(f.fifo_writes, writes);
+        assert_eq!((f.aggregated, f.inserted, f.evicted), agg);
+        assert_eq!(f.agg_ops(), ops, "lifetime combine count survives the swap");
+        assert_eq!(f.latency_cycles, lat);
+        assert_eq!(f.fifo_depth(), depth, "busy chain untouched");
     }
 
     fn vfpe(pairs: usize, lanes: usize, fifo_cap: usize) -> Fpe {

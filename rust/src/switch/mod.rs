@@ -30,12 +30,15 @@ pub mod payload_analyzer;
 pub mod reliability;
 pub mod scheduler;
 pub mod switch_sim;
+pub mod tenant;
 
 pub use config::{EvictionPolicy, MemoryPolicy, StageDelays, SwitchConfig};
 pub use hash_table::{HashTable, LaneProbe, Probe, VectorEvictSink};
 pub use parallel::Parallelism;
 pub use payload_analyzer::GroupMap;
 pub use reliability::{backpressure_credit, Admit, CreditPolicy, DedupStats, DedupWindow};
+pub use scheduler::{GrantPolicy, WeightedGrants};
 pub use switch_sim::{
     vector_sink_to_batch, IngestOutput, IngestSink, SwitchAggSwitch, SwitchStats, VectorSink,
 };
+pub use tenant::{AdmissionError, EvictedResidents, QuotaRequest};

@@ -70,6 +70,51 @@ impl Scheduler {
     }
 }
 
+/// How ingress credit grants are split among concurrently busy trees.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GrantPolicy {
+    /// Every tree may fill the whole reliability window — a flooder
+    /// can monopolize the PE-input FIFO credit.
+    #[default]
+    Uniform,
+    /// Credit is capped at each tree's weighted share of the window,
+    /// so an aggressive tenant cannot starve a well-behaved neighbor.
+    WeightedShare,
+}
+
+/// Weighted credit shares over a reliability window of `window` slots.
+///
+/// Stateless arithmetic — callers supply the tenant's weight and the
+/// total weight of all currently-busy tenants; every share is floored
+/// at one slot so no admitted tenant ever deadlocks at zero credit.
+#[derive(Clone, Copy, Debug)]
+pub struct WeightedGrants {
+    window: u16,
+}
+
+impl WeightedGrants {
+    pub fn new(window: u16) -> Self {
+        Self {
+            window: window.max(1),
+        }
+    }
+
+    /// Window slots granted to a tenant of `weight` when the busy
+    /// tenants' weights sum to `total_weight`.
+    pub fn share(&self, weight: u64, total_weight: u64) -> u16 {
+        if total_weight == 0 {
+            return self.window;
+        }
+        let w = self.window as u64;
+        (w * weight / total_weight).clamp(1, w) as u16
+    }
+
+    /// Cap an already-computed backpressure credit at the weighted share.
+    pub fn cap(&self, credit: u16, weight: u64, total_weight: u64) -> u16 {
+        credit.min(self.share(weight, total_weight))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,5 +156,39 @@ mod tests {
         assert_eq!(s.pick(&[1, 5, 3, 5]), Some(1)); // tie → lowest index
         assert_eq!(s.pick(&[0, 0, 9, 1]), Some(2));
         assert_eq!(s.pick(&[0, 0, 0, 0]), None);
+    }
+
+    #[test]
+    fn weighted_grants_split_the_window_proportionally() {
+        let g = WeightedGrants::new(64);
+        assert_eq!(g.share(1, 2), 32); // equal split between two
+        assert_eq!(g.share(3, 4), 48); // 3:1 split
+        assert_eq!(g.share(1, 4), 16);
+    }
+
+    #[test]
+    fn weighted_grants_floor_at_one_and_ceil_at_window() {
+        let g = WeightedGrants::new(64);
+        // A tiny weight among many still gets one slot, never zero.
+        assert_eq!(g.share(1, 1000), 1);
+        // A dominant weight never exceeds the window.
+        assert_eq!(g.share(1000, 1000), 64);
+        // Degenerate one-slot window stays at one.
+        assert_eq!(WeightedGrants::new(0).share(1, 8), 1);
+    }
+
+    #[test]
+    fn weighted_grants_zero_total_means_uncontended() {
+        // No busy tenants registered: full window (solo fast path).
+        assert_eq!(WeightedGrants::new(64).share(5, 0), 64);
+    }
+
+    #[test]
+    fn cap_never_raises_credit() {
+        let g = WeightedGrants::new(64);
+        // Backpressure already throttled below the share: keep it.
+        assert_eq!(g.cap(4, 1, 2), 4);
+        // Credit above the share: clamp to the share.
+        assert_eq!(g.cap(60, 1, 2), 32);
     }
 }

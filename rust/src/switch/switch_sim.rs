@@ -21,29 +21,22 @@
 //! allocation (see `EXPERIMENTS.md` §Perf).
 
 use crate::protocol::packet::MtuChunks;
-use crate::protocol::vector::{max_vec_payload, vec_fixed_len, VectorChunks};
+use crate::protocol::vector::VectorChunks;
 use crate::protocol::{
     AggAckPacket, AggOp, AggregationPacket, Key, KvPair, RelWindow, TreeConfig, TreeId, Value,
-    VectorBatch, AGG_FIXED_LEN, HEADER_OVERHEAD,
+    VectorBatch,
 };
 use crate::sim::clock::{Cycles, CLOCK_HZ};
-use crate::switch::bpe::{Bpe, BpeOutcome};
-use crate::switch::config::{ConfigModule, EvictionPolicy, SwitchConfig};
-use crate::switch::crossbar::Crossbar;
-use crate::switch::fpe::{Fpe, FpeOutcome};
+use crate::switch::config::{ConfigModule, SwitchConfig};
 use crate::switch::forwarding::Forwarding;
-use crate::switch::hash_table::{HashTable, VectorEvictSink};
 use crate::switch::header_extract::HeaderExtract;
-use crate::switch::parallel::{merge_by_seq, run_workers, JobPair, Parallelism, WorkerGroup};
-use crate::switch::payload_analyzer::{GroupMap, PayloadAnalyzer};
+use crate::switch::parallel::Parallelism;
 use crate::switch::reliability::{backpressure_credit, Admit, CreditPolicy, DedupStats, DedupWindow};
-use crate::switch::scheduler::{SchedPolicy, Scheduler};
+use crate::switch::scheduler::{GrantPolicy, WeightedGrants};
+use crate::switch::tenant::{
+    AdmissionError, EvictedResidents, QuotaRequest, TenantDirectory, TreeEngine,
+};
 use std::collections::BTreeMap;
-
-/// Input pacing: cycles per byte on a 10 Gbps port at 200 MHz
-/// (1.25 GB/s ÷ 200 Mcycle/s = 6.25 B/cycle = 4/25 cycle/B).
-const PACE_NUM: u64 = 4;
-const PACE_DEN: u64 = 25;
 
 /// Per-tree aggregate statistics (port counters, §6.2 methodology).
 #[derive(Clone, Debug, Default)]
@@ -75,6 +68,12 @@ pub struct SwitchStats {
     /// benchmarks must check this before attributing numbers to the
     /// sharded path.
     pub fallback_serial: u64,
+    /// Packets that arrived for this tree while it was not configured
+    /// (e.g. evicted under churn, or data racing ahead of Configure) —
+    /// counted and dropped at the switch boundary instead of
+    /// panicking.  Seeded from the switch-level accumulator when the
+    /// tree's engine is (re)built, so the count survives engine churn.
+    pub unconfigured_drops: u64,
     pub flush_cycles: Cycles,
     /// Cycle at which the last pair finished processing.
     pub makespan_cycles: Cycles,
@@ -218,507 +217,6 @@ pub fn vector_sink_to_batch(sink: &VectorSink) -> VectorBatch {
     out
 }
 
-/// One aggregation tree's slice of the data plane.
-struct TreeEngine {
-    op: AggOp,
-    children: u16,
-    eot_seen: u16,
-    /// Value lanes per key (W); 1 = the scalar data plane.
-    lanes: usize,
-    analyzer: PayloadAnalyzer,
-    crossbar: Crossbar,
-    scheduler: Scheduler,
-    fpes: Vec<Fpe>,
-    bpe: Option<Bpe>,
-    /// Byte-pacing accumulator for input arrivals.
-    bytes_arrived: u64,
-    /// PE-input FIFO capacity (shared by every FPE and the BPE) — the
-    /// denominator of the backpressure-credit headroom.
-    fifo_cap: usize,
-    /// Reused FPE-eviction scratch for the vector path (one evictee).
-    evict_scratch: VectorEvictSink,
-    /// Reused BPE-overflow scratch for the vector path (one pair).
-    overflow_scratch: VectorEvictSink,
-    stats: SwitchStats,
-}
-
-impl TreeEngine {
-    fn new(
-        cfg: &SwitchConfig,
-        op: AggOp,
-        children: u16,
-        fpe_share: u64,
-        bpe_share: Option<u64>,
-        lanes: usize,
-    ) -> Self {
-        let fpe_mem_each = fpe_share / cfg.n_groups as u64;
-        let map = GroupMap::new(cfg.n_groups, cfg.key_base);
-        let fpes = (0..cfg.n_groups)
-            .map(|g| {
-                let table = HashTable::with_memory_lanes(
-                    fpe_mem_each,
-                    cfg.group_width(g),
-                    cfg.fpe_slots_per_bucket,
-                    lanes,
-                );
-                Fpe::new(
-                    g,
-                    table,
-                    cfg.fpe_interval,
-                    cfg.delays,
-                    cfg.eviction,
-                    cfg.fifo_cap,
-                )
-            })
-            .collect();
-        let bpe = bpe_share.map(|m| Bpe::for_tree_lanes(cfg, m, lanes));
-        Self {
-            op,
-            children,
-            eot_seen: 0,
-            lanes,
-            analyzer: PayloadAnalyzer::new(map),
-            crossbar: Crossbar::new(cfg.n_groups, cfg.delays.crossbar),
-            scheduler: Scheduler::new(cfg.n_groups, SchedPolicy::RoundRobin),
-            fpes,
-            bpe,
-            bytes_arrived: 0,
-            fifo_cap: cfg.fifo_cap,
-            evict_scratch: VectorEvictSink::new(),
-            overflow_scratch: VectorEvictSink::new(),
-            stats: SwitchStats::default(),
-        }
-    }
-
-    /// Current arrival cycle implied by bytes received at line rate.
-    /// Each child feeds its own 10 Gbps port through its own payload
-    /// analyzer (§5 instantiates one PA per port), so the aggregate
-    /// ingress rate scales with the child count: pairs from k children
-    /// land on the shared FPEs k× as fast as a single stream would.
-    fn arrival_cycle(&self) -> Cycles {
-        let ports = (self.children as u64).max(1);
-        self.bytes_arrived * PACE_NUM / (PACE_DEN * ports)
-    }
-
-    /// Packet-header arrival accounting shared by the serial, sharded,
-    /// and vector front ends — with [`Self::account_pair`], the single
-    /// source of the input-pacing rule, so the paths cannot drift.
-    /// For scalar trees (`lanes == 1`) the fixed length is exactly
-    /// [`AGG_FIXED_LEN`]; W-lane trees carry the 2-byte lane count.
-    fn account_packet_header(&mut self) {
-        let fixed = (HEADER_OVERHEAD + vec_fixed_len(self.lanes)) as u64;
-        debug_assert!(self.lanes > 1 || fixed == (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64);
-        self.stats.packets_in += 1;
-        self.stats.bytes_in += fixed;
-        self.bytes_arrived += fixed;
-    }
-
-    /// Per-pair arrival accounting (bytes, pacing, payload analyzer);
-    /// returns the pair's `(group, arrival cycle)`.
-    fn account_pair(&mut self, p: &KvPair, header_delay: Cycles) -> (usize, Cycles) {
-        let el = p.encoded_len() as u64;
-        self.stats.bytes_in += el;
-        self.bytes_arrived += el;
-        self.stats.pairs_in += 1;
-        let arrive = self.arrival_cycle() + header_delay;
-        let g = self.analyzer.classify(p);
-        (g, arrive)
-    }
-
-    /// Ingest one packet's worth of pairs.  This is the core ingest
-    /// path: the packet need not be materialized — stream entry points
-    /// pass MTU-sized chunks of the caller's slice directly.
-    fn ingest_pairs(
-        &mut self,
-        pairs: &[KvPair],
-        eot: bool,
-        header_delay: Cycles,
-        out: &mut IngestSink,
-    ) {
-        assert_eq!(
-            self.lanes, 1,
-            "scalar ingest on a tree configured for {}-lane vector payloads",
-            self.lanes
-        );
-        self.account_packet_header();
-
-        for p in pairs {
-            let (g, arrive) = self.account_pair(p, header_delay);
-            let deliver = self.crossbar.route(arrive, g);
-            match self.fpes[g].offer(deliver, p.key, p.value, self.op) {
-                FpeOutcome::Kept => {}
-                FpeOutcome::Forwarded {
-                    key,
-                    value,
-                    hash,
-                    ready,
-                } => {
-                    self.forward_evicted(g, key, value, hash, ready, out);
-                }
-            }
-        }
-
-        if eot {
-            self.eot_seen += 1;
-            if self.eot_seen >= self.children {
-                self.flush_into(out);
-            }
-        }
-        self.roll_stats();
-    }
-
-    /// Route an FPE-evicted pair: to the BPE if the hierarchy is on,
-    /// straight downstream otherwise (fig9 "S-" single-level rows).
-    fn forward_evicted(
-        &mut self,
-        group: usize,
-        key: Key,
-        value: Value,
-        hash: u32,
-        ready: Cycles,
-        out: &mut IngestSink,
-    ) {
-        match &mut self.bpe {
-            Some(bpe) => {
-                // The scheduler grants this FPE's forward queue; the
-                // event-driven model presents evictions one at a time,
-                // so the queue-depth vector would be a singleton.
-                let granted = self.scheduler.grant_single(group);
-                debug_assert_eq!(granted, group);
-                match bpe.offer_hashed(ready, group, key, value, hash, self.op) {
-                    BpeOutcome::Kept => {}
-                    BpeOutcome::Overflow { key, value, .. } => {
-                        self.emit_pair(KvPair::new(key, value), out);
-                    }
-                }
-            }
-            None => self.emit_pair(KvPair::new(key, value), out),
-        }
-    }
-
-    fn emit_pair(&mut self, p: KvPair, out: &mut IngestSink) {
-        self.stats.pairs_out_stream += 1;
-        self.stats.bytes_out += p.encoded_len() as u64;
-        out.forwarded.push(p);
-    }
-
-    /// Flush every engine (EoT from all children, §4.2.2): residents
-    /// stream downstream; Table 3's BPE-Flush dominates the cost.
-    fn flush_into(&mut self, out: &mut IngestSink) {
-        out.flushes += 1;
-        let start = out.flushed.len();
-        let mut flush_cycles: Cycles = 0;
-        for f in &mut self.fpes {
-            out.scratch.clear();
-            flush_cycles += f.flush_into(&mut out.scratch);
-            out.flushed
-                .extend(out.scratch.iter().map(|&(k, v)| KvPair::new(k, v)));
-        }
-        if let Some(bpe) = &mut self.bpe {
-            out.scratch.clear();
-            flush_cycles += bpe.flush_into(&mut out.scratch);
-            out.flushed
-                .extend(out.scratch.iter().map(|&(k, v)| KvPair::new(k, v)));
-        }
-        self.stats.flush_cycles += flush_cycles;
-        let flushed_now = &out.flushed[start..];
-        self.stats.pairs_out_flush += flushed_now.len() as u64;
-        self.stats.bytes_out += flushed_now.iter().map(|p| p.encoded_len() as u64).sum::<u64>();
-        self.eot_seen = 0;
-    }
-
-    /// Fold engine counters into the per-tree stats snapshot.
-    fn roll_stats(&mut self) {
-        let fpe_aggregated = self.fpes.iter().map(|f| f.aggregated).sum();
-        let fpe_inserted = self.fpes.iter().map(|f| f.inserted).sum();
-        let fpe_evicted = self.fpes.iter().map(|f| f.evicted).sum();
-        let mut fifo_writes: u64 = self.fpes.iter().map(|f| f.fifo_writes).sum();
-        let mut fifo_full: u64 = self.fpes.iter().map(|f| f.fifo_full_events).sum();
-        if let Some(b) = &self.bpe {
-            self.stats.bpe_aggregated = b.aggregated;
-            self.stats.bpe_inserted = b.inserted;
-            self.stats.bpe_overflowed = b.overflowed;
-            fifo_writes += b.fifo_writes;
-            fifo_full += b.fifo_full_events;
-        }
-        self.stats.fpe_aggregated = fpe_aggregated;
-        self.stats.fpe_inserted = fpe_inserted;
-        self.stats.fpe_evicted = fpe_evicted;
-        self.stats.fifo_writes = fifo_writes;
-        self.stats.fifo_full_events = fifo_full;
-        let mut fifo_peak: u64 = self.fpes.iter().map(|f| f.fifo_peak).max().unwrap_or(0);
-        if let Some(b) = &self.bpe {
-            fifo_peak = fifo_peak.max(b.fifo_peak);
-        }
-        self.stats.fifo_max_occupancy = fifo_peak;
-        self.stats.makespan_cycles = self.arrival_cycle();
-    }
-
-    /// Instantaneous PE-input queue state as seen by the next arrival:
-    /// `(deepest FIFO, capacity)` — the backpressure signal behind
-    /// [`CreditPolicy::Backpressure`]'s credit advertisement.
-    fn input_queue(&self) -> (usize, usize) {
-        let at = self.arrival_cycle();
-        let mut depth = self
-            .fpes
-            .iter()
-            .map(|f| f.fifo_depth_at(at))
-            .max()
-            .unwrap_or(0);
-        if let Some(b) = &self.bpe {
-            depth = depth.max(b.fifo_depth_at(at));
-        }
-        (depth, self.fifo_cap)
-    }
-
-    /// Ingest one packet's worth of W-lane vector pairs — the columnar
-    /// counterpart of [`Self::ingest_pairs`], sharing the pacing,
-    /// analyzer, crossbar, FPE/BPE timing and stats machinery; at
-    /// `W = 1` it is byte-identical to the scalar path.  Always runs
-    /// on the serial reference engine (the sharded engine's ownership
-    /// seams are unchanged by lane width; vector sharding can reuse
-    /// them later).
-    fn ingest_vector_range(
-        &mut self,
-        batch: &VectorBatch,
-        range: std::ops::Range<usize>,
-        eot: bool,
-        header_delay: Cycles,
-        out: &mut VectorSink,
-    ) {
-        assert_eq!(
-            batch.lanes(),
-            self.lanes,
-            "batch lane width does not match the tree's configured width"
-        );
-        let w = self.lanes;
-        self.account_packet_header();
-
-        for i in range {
-            let key = batch.key(i);
-            let lanes = batch.lane_slice(i);
-            let el = batch.encoded_len_pair(i);
-            self.stats.bytes_in += el as u64;
-            self.bytes_arrived += el as u64;
-            self.stats.pairs_in += 1;
-            let arrive = self.arrival_cycle() + header_delay;
-            let g = self.analyzer.classify_parts(key.len(), el);
-            let deliver = self.crossbar.route(arrive, g);
-            self.evict_scratch.clear();
-            let forwarded =
-                self.fpes[g].offer_lanes(deliver, key, lanes, self.op, &mut self.evict_scratch);
-            if let Some(ready) = forwarded {
-                let (ek, ehash) = self.evict_scratch.keys[0];
-                match &mut self.bpe {
-                    Some(bpe) => {
-                        let granted = self.scheduler.grant_single(g);
-                        debug_assert_eq!(granted, g);
-                        self.overflow_scratch.clear();
-                        let overflow = bpe.offer_lanes_hashed(
-                            ready,
-                            g,
-                            (ek, ehash),
-                            self.evict_scratch.lane_slice(0, w),
-                            self.op,
-                            &mut self.overflow_scratch,
-                        );
-                        if overflow.is_some() {
-                            let (ok, _) = self.overflow_scratch.keys[0];
-                            let olanes = self.overflow_scratch.lane_slice(0, w);
-                            self.stats.pairs_out_stream += 1;
-                            self.stats.bytes_out += crate::protocol::vector::encoded_vec_len(
-                                ok.len(),
-                                w,
-                                crate::protocol::vector::lane_value_width(olanes),
-                            ) as u64;
-                            out.forwarded.push(ok, olanes);
-                        }
-                    }
-                    None => {
-                        let elanes = self.evict_scratch.lane_slice(0, w);
-                        self.stats.pairs_out_stream += 1;
-                        self.stats.bytes_out += crate::protocol::vector::encoded_vec_len(
-                            ek.len(),
-                            w,
-                            crate::protocol::vector::lane_value_width(elanes),
-                        ) as u64;
-                        out.forwarded.push(ek, elanes);
-                    }
-                }
-            }
-        }
-
-        if eot {
-            self.eot_seen += 1;
-            if self.eot_seen >= self.children {
-                self.flush_vector_into(out);
-            }
-        }
-        self.roll_stats();
-    }
-
-    /// End-of-tree flush of a W-lane tree: every engine drains
-    /// columnar into the sink; byte/pair accounting mirrors
-    /// [`Self::flush_into`].
-    fn flush_vector_into(&mut self, out: &mut VectorSink) {
-        let w = self.lanes;
-        out.flushes += 1;
-        let start = out.flushed.len();
-        let mut flush_cycles: Cycles = 0;
-        for f in &mut self.fpes {
-            out.scratch_keys.clear();
-            out.scratch_vals.clear();
-            flush_cycles += f.flush_lanes_into(&mut out.scratch_keys, &mut out.scratch_vals);
-            for (j, &k) in out.scratch_keys.iter().enumerate() {
-                out.flushed.push(k, &out.scratch_vals[j * w..(j + 1) * w]);
-            }
-        }
-        if let Some(bpe) = &mut self.bpe {
-            out.scratch_keys.clear();
-            out.scratch_vals.clear();
-            flush_cycles += bpe.flush_lanes_into(&mut out.scratch_keys, &mut out.scratch_vals);
-            for (j, &k) in out.scratch_keys.iter().enumerate() {
-                out.flushed.push(k, &out.scratch_vals[j * w..(j + 1) * w]);
-            }
-        }
-        self.stats.flush_cycles += flush_cycles;
-        let flushed_now = out.flushed.len() - start;
-        self.stats.pairs_out_flush += flushed_now as u64;
-        self.stats.bytes_out += (start..out.flushed.len())
-            .map(|i| out.flushed.encoded_len_pair(i) as u64)
-            .sum::<u64>();
-        self.eot_seen = 0;
-    }
-
-    /// Account trailing per-packet header overhead on the output side:
-    /// streamed-out pairs are packed into MTU-sized packets downstream
-    /// (W-lane trees pack into per-W packet budgets; at `W = 1` this
-    /// is exactly the scalar packetization).
-    fn finalize_output_bytes(&mut self) {
-        let payload = self.stats.bytes_out;
-        let pkts = payload.div_ceil(max_vec_payload(self.lanes) as u64).max(
-            (self.stats.pairs_out_stream + self.stats.pairs_out_flush > 0) as u64,
-        );
-        self.stats.bytes_out = payload + pkts * (HEADER_OVERHEAD + vec_fixed_len(self.lanes)) as u64;
-    }
-
-    /// Whether this chunk sequence would trigger an end-of-tree flush
-    /// anywhere but at the very last chunk.  The sharded engine defers
-    /// its single flush to the merge stage; a mid-stream flush resets
-    /// table state between pairs and must take the serial path.
-    fn flush_splits_stream(&self, chunks: &[(&[KvPair], bool)]) -> bool {
-        let mut eot_seen = self.eot_seen;
-        for (i, &(_, eot)) in chunks.iter().enumerate() {
-            if eot {
-                eot_seen += 1;
-                if eot_seen >= self.children {
-                    if i + 1 != chunks.len() {
-                        return true;
-                    }
-                    eot_seen = 0;
-                }
-            }
-        }
-        false
-    }
-
-    /// Sharded ingest of a whole chunk sequence (see `switch::parallel`
-    /// for why this is byte-identical to calling
-    /// [`Self::ingest_pairs`] per chunk).
-    fn ingest_chunks_sharded(
-        &mut self,
-        chunks: &[(&[KvPair], bool)],
-        header_delay: Cycles,
-        shards: usize,
-        out: &mut IngestSink,
-    ) {
-        let n_groups = self.fpes.len();
-        // Front end (serial): byte pacing + analyzer accounting; every
-        // pair is stamped with its global sequence number and arrival
-        // cycle and binned by group.
-        let mut jobs: Vec<Vec<JobPair>> = (0..n_groups).map(|_| Vec::new()).collect();
-        let mut seq: u64 = 0;
-        let mut eots: u32 = 0;
-        for &(pairs, eot) in chunks {
-            self.account_packet_header();
-            for p in pairs {
-                let (g, arrive) = self.account_pair(p, header_delay);
-                jobs[g].push(JobPair {
-                    seq,
-                    arrive,
-                    pair: *p,
-                });
-                seq += 1;
-            }
-            if eot {
-                eots += 1;
-            }
-        }
-        // Distribute disjoint {FPE, BPE region, crossbar output} shards
-        // round-robin across workers (spreads the skewed group weights
-        // better than contiguous ranges).
-        let op = self.op;
-        let evict_old = self
-            .bpe
-            .as_ref()
-            .map(|b| b.eviction() == EvictionPolicy::EvictOld)
-            .unwrap_or(false);
-        let mut regions: Vec<Option<&mut HashTable>> = match self.bpe.as_mut() {
-            Some(b) => b.regions_mut().iter_mut().map(Some).collect(),
-            None => (0..n_groups).map(|_| None).collect(),
-        };
-        let mut per_worker: Vec<Vec<WorkerGroup<'_>>> =
-            (0..shards).map(|_| Vec::new()).collect();
-        for ((g, fpe), job) in self.fpes.iter_mut().enumerate().zip(jobs) {
-            per_worker[g % shards].push(WorkerGroup {
-                group: g,
-                job,
-                fpe,
-                region: regions[g].take(),
-                port: self.crossbar.port_view(g),
-                op,
-                evict_old,
-            });
-        }
-        let mut outputs = run_workers(per_worker);
-        outputs.sort_by_key(|o| o.group);
-        // Merge (serial, deterministic): fold the per-output crossbar
-        // views and BPE probe counts back in, replay the shared BPE
-        // timing in global eviction order, then emit downstream pairs
-        // in the serial path's order.
-        for o in &outputs {
-            self.crossbar.absorb(o.group, o.port);
-            if let Some(b) = self.bpe.as_mut() {
-                b.absorb_probe_counts(o.bpe_aggregated, o.bpe_inserted, o.bpe_overflowed);
-            }
-        }
-        let evict_streams: Vec<&[(u64, (usize, Cycles))]> =
-            outputs.iter().map(|o| o.evicts.as_slice()).collect();
-        let merged_evicts = merge_by_seq(&evict_streams);
-        if let Some(b) = self.bpe.as_mut() {
-            for &(_, (group, ready)) in &merged_evicts {
-                let granted = self.scheduler.grant_single(group);
-                debug_assert_eq!(granted, group);
-                b.replay_timing(ready);
-            }
-        }
-        let emission_streams: Vec<&[(u64, KvPair)]> =
-            outputs.iter().map(|o| o.emissions.as_slice()).collect();
-        let merged_emissions = merge_by_seq(&emission_streams);
-        for (_, pair) in merged_emissions {
-            self.emit_pair(pair, out);
-        }
-        // End-of-tree flushes — by the `flush_splits_stream`
-        // precondition, at most one fires, and only at the stream end.
-        for _ in 0..eots {
-            self.eot_seen += 1;
-            if self.eot_seen >= self.children {
-                self.flush_into(out);
-            }
-        }
-        self.roll_stats();
-    }
-}
 
 /// The full switch.
 pub struct SwitchAggSwitch {
@@ -726,7 +224,9 @@ pub struct SwitchAggSwitch {
     pub header_extract: HeaderExtract,
     pub forwarding: Forwarding,
     config_module: ConfigModule,
-    trees: BTreeMap<TreeId, TreeEngine>,
+    /// Every resident tree (legacy static-split and quota-admitted
+    /// alike) plus the FPE/BPE memory ledger — see `switch::tenant`.
+    tenants: TenantDirectory,
     /// Per-tree value lane width (W); absent = 1 (scalar).  Announced
     /// via [`Self::configure_vector`] and applied at engine (re)build.
     lane_width: BTreeMap<TreeId, usize>,
@@ -748,6 +248,14 @@ pub struct SwitchAggSwitch {
     /// Per-tree count of epoch-fenced packets.  Simulator accounting:
     /// unlike `epochs`/`dedup`, this survives [`Self::crash`].
     stale_epoch: BTreeMap<TreeId, u64>,
+    /// Per-tree count of packets dropped because the tree was not
+    /// configured (satellite of the tenancy work: under churn this is
+    /// reachable from the wire and must not panic).  Simulator
+    /// accounting like `stale_epoch`: survives [`Self::crash`].
+    unconfigured: BTreeMap<TreeId, u64>,
+    /// How ack credit is granted across tenants (uniform by default;
+    /// weighted per-tenant shares for isolation under overload).
+    grant_policy: GrantPolicy,
     /// Reused sink for the stream entry points.
     sink: IngestSink,
 }
@@ -759,13 +267,15 @@ impl SwitchAggSwitch {
             header_extract: HeaderExtract::new(),
             forwarding: Forwarding::new(),
             config_module: ConfigModule::new(),
-            trees: BTreeMap::new(),
+            tenants: TenantDirectory::new(),
             lane_width: BTreeMap::new(),
             dedup: BTreeMap::new(),
             rel_window: RelWindow::default(),
             credit_policy: CreditPolicy::default(),
             epochs: BTreeMap::new(),
             stale_epoch: BTreeMap::new(),
+            unconfigured: BTreeMap::new(),
+            grant_policy: GrantPolicy::default(),
             sink: IngestSink::new(),
         }
     }
@@ -820,7 +330,7 @@ impl SwitchAggSwitch {
         self.header_extract = HeaderExtract::new();
         self.forwarding = Forwarding::new();
         self.config_module = ConfigModule::new();
-        self.trees.clear();
+        self.tenants.clear();
         self.lane_width.clear();
         self.dedup.clear();
         self.epochs.clear();
@@ -878,10 +388,10 @@ impl SwitchAggSwitch {
                 .map(|m| self.config_module.memory_share_for(id, m));
             let lanes = *self.lane_width.get(&id).unwrap_or(&1);
             self.forwarding.install_tree_parent(id, tc.parent_port);
-            self.trees.insert(
-                id,
-                TreeEngine::new(&self.cfg, tc.op, tc.children, fpe_share, bpe_share, lanes),
-            );
+            let mut engine =
+                TreeEngine::new(&self.cfg, tc.op, tc.children, fpe_share, bpe_share, lanes);
+            engine.stats.unconfigured_drops = self.unconfigured.get(&id).copied().unwrap_or(0);
+            self.tenants.install_legacy(tc, engine, lanes);
         }
     }
 
@@ -904,16 +414,30 @@ impl SwitchAggSwitch {
     }
 
     pub fn n_trees(&self) -> usize {
-        self.trees.len()
+        self.tenants.len()
+    }
+
+    /// Record a packet that arrived for a tree with no resident engine
+    /// (not yet configured, or evicted under churn).  A counted drop,
+    /// not a panic: under tenant churn this is reachable from the wire.
+    fn note_unconfigured_drop(&mut self, tree: TreeId) {
+        *self.unconfigured.entry(tree).or_insert(0) += 1;
+    }
+
+    /// Packets dropped so far because `tree` had no resident engine.
+    /// Survives [`Self::crash`] and engine rebuilds (the count is also
+    /// mirrored into the tree's [`SwitchStats`] at engine build).
+    pub fn unconfigured_drops(&self, tree: TreeId) -> u64 {
+        self.unconfigured.get(&tree).copied().unwrap_or(0)
     }
 
     /// Ingest one aggregation packet for its tree, appending outputs to
     /// a caller-owned (reusable) sink.
     pub fn ingest_into(&mut self, pkt: &AggregationPacket, sink: &mut IngestSink) {
-        let engine = self
-            .trees
-            .get_mut(&pkt.tree)
-            .unwrap_or_else(|| panic!("tree {} not configured", pkt.tree));
+        let Some(engine) = self.tenants.engine_mut(pkt.tree) else {
+            self.note_unconfigured_drop(pkt.tree);
+            return;
+        };
         engine.ingest_pairs(&pkt.pairs, pkt.eot, self.cfg.delays.header_analyzer, sink);
     }
 
@@ -942,6 +466,24 @@ impl SwitchAggSwitch {
         eot: bool,
     ) -> (bool, bool, AggAckPacket) {
         let cur_epoch = self.tree_epoch(tree);
+        if !self.tenants.contains(tree) {
+            // No resident engine: count the drop and ack the current
+            // window state without creating one — an evicted tree must
+            // not grow fresh dedup state from straggler retransmissions.
+            self.note_unconfigured_drop(tree);
+            let (cum_seq, credit) = match self.dedup.get(&(tree, rel.child)) {
+                Some(w) => (w.cum_seq(), w.credit()),
+                None => (0, self.rel_window.get() as u16),
+            };
+            let ack = AggAckPacket {
+                tree,
+                child: rel.child,
+                epoch: cur_epoch,
+                cum_seq,
+                credit,
+            };
+            return (false, false, ack);
+        }
         if rel.epoch != cur_epoch {
             // Epoch fence: traffic from a dead incarnation must neither
             // reach an engine nor perturb any window.  The ack restates
@@ -973,10 +515,25 @@ impl SwitchAggSwitch {
         let cum_seq = w.cum_seq();
         let mut credit = w.credit();
         if matches!(self.credit_policy, CreditPolicy::Backpressure) {
-            if let Some(e) = self.trees.get(&tree) {
+            if let Some(e) = self.tenants.engine(tree) {
                 let (depth, cap) = e.input_queue();
                 credit = backpressure_credit(credit, depth, cap);
             }
+        }
+        if matches!(self.grant_policy, GrantPolicy::WeightedShare) && self.tenants.busy_tenants() > 1
+        {
+            // Per-tenant weighted credit: an aggressive flooder's acks
+            // grant at most its weight share of the window, so it
+            // cannot monopolize PE-input FIFO credit while a
+            // better-weighted neighbor is active.  With one (or no)
+            // active tenant the full window applies — isolation is
+            // only throttling when there is someone to isolate.
+            let grants = WeightedGrants::new(self.rel_window.get() as u16);
+            credit = grants.cap(
+                credit,
+                self.tenants.weight_of(tree),
+                self.tenants.busy_weight(),
+            );
         }
         let ack = AggAckPacket {
             tree,
@@ -1121,11 +678,7 @@ impl SwitchAggSwitch {
         let _ = op; // the tree's configured op applies; kept for API compat
         let mut sink = std::mem::take(&mut self.sink);
         sink.clear();
-        let children = self
-            .config_module
-            .get(tree)
-            .map(|t| t.children)
-            .unwrap_or(1);
+        let children = self.children_of(tree);
         // Merged stream: emit children EoTs by splitting at the end
         // (Theorem 2.1: merging flows preserves the reduction ratio).
         if matches!(self.cfg.parallelism, Parallelism::Serial) {
@@ -1219,11 +772,7 @@ impl SwitchAggSwitch {
         batch: &VectorBatch,
         sink: &mut VectorSink,
     ) {
-        let children = self
-            .config_module
-            .get(tree)
-            .map(|t| t.children)
-            .unwrap_or(1);
+        let children = self.children_of(tree);
         let mut chunks = VectorChunks::new(batch);
         while let Some((range, _)) = chunks.next_chunk() {
             self.ingest_vector_range_for(tree, batch, range, false, sink);
@@ -1280,6 +829,13 @@ impl SwitchAggSwitch {
         vector_sink_to_batch(&sink)
     }
 
+    /// Fan-in (EoT quota) for `tree`: the resident tenant's configured
+    /// child count, 1 when the tree is unknown (legacy permissive
+    /// behavior of the stream helpers).
+    fn children_of(&self, tree: TreeId) -> u16 {
+        self.tenants.get(tree).map_or(1, |t| t.config.children)
+    }
+
     /// Core columnar ingest: one per-W MTU chunk of one tree's vector
     /// traffic, on the serial reference path.
     fn ingest_vector_range_for(
@@ -1290,10 +846,10 @@ impl SwitchAggSwitch {
         eot: bool,
         sink: &mut VectorSink,
     ) {
-        let engine = self
-            .trees
-            .get_mut(&tree)
-            .unwrap_or_else(|| panic!("tree {tree} not configured"));
+        let Some(engine) = self.tenants.engine_mut(tree) else {
+            self.note_unconfigured_drop(tree);
+            return;
+        };
         engine.ingest_vector_range(batch, range, eot, self.cfg.delays.header_analyzer, sink);
     }
 
@@ -1306,10 +862,10 @@ impl SwitchAggSwitch {
         eot: bool,
         sink: &mut IngestSink,
     ) {
-        let engine = self
-            .trees
-            .get_mut(&tree)
-            .unwrap_or_else(|| panic!("tree {tree} not configured"));
+        let Some(engine) = self.tenants.engine_mut(tree) else {
+            self.note_unconfigured_drop(tree);
+            return;
+        };
         engine.ingest_pairs(pairs, eot, self.cfg.delays.header_analyzer, sink);
     }
 
@@ -1325,10 +881,10 @@ impl SwitchAggSwitch {
     ) {
         let header_delay = self.cfg.delays.header_analyzer;
         let parallelism = self.cfg.parallelism;
-        let engine = self
-            .trees
-            .get_mut(&tree)
-            .unwrap_or_else(|| panic!("tree {tree} not configured"));
+        let Some(engine) = self.tenants.engine_mut(tree) else {
+            self.note_unconfigured_drop(tree);
+            return;
+        };
         match parallelism {
             Parallelism::Sharded(n) if !engine.flush_splits_stream(chunks) => {
                 engine.ingest_chunks_sharded(chunks, header_delay, n.max(1), sink);
@@ -1348,18 +904,18 @@ impl SwitchAggSwitch {
 
     /// Close output byte accounting (packetization of the out stream).
     pub fn finalize(&mut self, tree: TreeId) {
-        if let Some(e) = self.trees.get_mut(&tree) {
+        if let Some(e) = self.tenants.engine_mut(tree) {
             e.finalize_output_bytes();
         }
     }
 
     pub fn stats(&self, tree: TreeId) -> Option<&SwitchStats> {
-        self.trees.get(&tree).map(|e| &e.stats)
+        self.tenants.engine(tree).map(|e| &e.stats)
     }
 
     /// Average measured FPE pair latency in cycles (Table 3 check).
     pub fn avg_fpe_latency(&self, tree: TreeId) -> f64 {
-        let e = &self.trees[&tree];
+        let e = self.tenants.engine(tree).expect("tree not resident");
         let pairs: u64 = e.fpes.iter().map(|f| f.aggregated + f.inserted + f.evicted).sum();
         let cyc: u64 = e.fpes.iter().map(|f| f.latency_cycles).sum();
         if pairs == 0 {
@@ -1371,7 +927,200 @@ impl SwitchAggSwitch {
 
     /// Sum of BPE DRAM commands and stall cycles (overlap diagnostics).
     pub fn bpe_dram_stats(&self, tree: TreeId) -> Option<(u64, Cycles)> {
-        self.trees[&tree].bpe.as_ref().map(|b| b.dram_stats())
+        self.tenants
+            .engine(tree)
+            .expect("tree not resident")
+            .bpe
+            .as_ref()
+            .map(|b| b.dram_stats())
+    }
+
+    // -----------------------------------------------------------------
+    // Multi-tenant serving: incremental admission, eviction, quotas
+    // -----------------------------------------------------------------
+
+    /// Select how ack credit is shared among tenants (takes effect
+    /// immediately; the default [`GrantPolicy::Uniform`] is the
+    /// single-tenant behavior, byte-identical to PR 5).
+    pub fn set_grant_policy(&mut self, policy: GrantPolicy) {
+        self.grant_policy = policy;
+    }
+
+    /// Admit a scalar tree *incrementally* against its memory quota:
+    /// no other tenant's engine, dedup window, or epoch register is
+    /// touched.  Rejection (typed) is side-effect free.
+    pub fn admit_tree(
+        &mut self,
+        tc: TreeConfig,
+        quota: QuotaRequest,
+        weight: u64,
+    ) -> Result<(), AdmissionError> {
+        self.admit_tree_lanes(tc, quota, weight, 1)
+    }
+
+    /// [`Self::admit_tree`] for a W-lane vector tree.
+    pub fn admit_tree_lanes(
+        &mut self,
+        tc: TreeConfig,
+        quota: QuotaRequest,
+        weight: u64,
+        lanes: usize,
+    ) -> Result<(), AdmissionError> {
+        assert!(
+            (1..=crate::protocol::MAX_LANES).contains(&lanes),
+            "lane width {lanes} out of range"
+        );
+        let tree = tc.tree;
+        let parent_port = tc.parent_port;
+        self.tenants.admit(&self.cfg, tc, quota, lanes, weight)?;
+        self.lane_width.insert(tree, lanes);
+        self.forwarding.install_tree_parent(tree, parent_port);
+        // A fresh admission starts a fresh job: any dedup state left
+        // over from a previous incarnation of this tree id is stale.
+        self.dedup.retain(|(t, _), _| *t != tree);
+        if let Some(e) = self.tenants.engine_mut(tree) {
+            e.stats.unconfigured_drops = self.unconfigured.get(&tree).copied().unwrap_or(0);
+        }
+        Ok(())
+    }
+
+    /// [`Self::admit_tree`], reclaiming idle tenants' slots when the
+    /// quota does not fit as-is.  Returns the residents drained from
+    /// each shrunken neighbor — the caller owns software-merging them
+    /// into the corresponding tenants' aggregates (they are never
+    /// silently dropped).
+    pub fn admit_tree_or_reclaim(
+        &mut self,
+        tc: TreeConfig,
+        quota: QuotaRequest,
+        weight: u64,
+    ) -> Result<Vec<(TreeId, Vec<KvPair>)>, AdmissionError> {
+        match self.admit_tree(tc.clone(), quota, weight) {
+            Ok(()) => Ok(Vec::new()),
+            Err(AdmissionError::QuotaExhausted { .. }) => {
+                let spilled = self.tenants.reclaim(
+                    &self.cfg,
+                    quota.fpe_bytes,
+                    self.cfg.bpe_mem.map(|_| quota.bpe_bytes).unwrap_or(0),
+                    tc.tree,
+                );
+                match self.admit_tree(tc, quota, weight) {
+                    Ok(()) => Ok(spilled),
+                    Err(e) if spilled.is_empty() => Err(e),
+                    // Admission still failed but neighbors already
+                    // shrank: hand the drained residents to the caller
+                    // so nothing is lost (the missing tenant remains
+                    // observable via `stats()`/`n_trees()`).
+                    Err(_) => Ok(spilled),
+                }
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Evict one tenant: its ledger charge is released and its
+    /// resident aggregation state drained and returned for software
+    /// merge.  Surviving tenants keep FPE/BPE/dedup/epoch state
+    /// byte-for-byte; the tree's epoch register survives so a future
+    /// re-admission continues the fence (stale stragglers from the
+    /// evicted incarnation keep being rejected).
+    pub fn evict_tree(&mut self, tree: TreeId) -> Option<EvictedResidents> {
+        let out = self.tenants.evict(tree)?;
+        self.lane_width.remove(&tree);
+        self.config_module.remove(tree);
+        self.dedup.retain(|(t, _), _| *t != tree);
+        Some(out)
+    }
+
+    /// Mark a tenant idle (between jobs) or busy.  Idle scalar tenants
+    /// are eligible for elastic reclamation and do not count toward
+    /// weighted grant shares.
+    pub fn set_tenant_idle(&mut self, tree: TreeId, idle: bool) {
+        self.tenants.set_idle(tree, idle);
+    }
+
+    /// Set a tenant's scheduling weight (weighted grant shares).
+    pub fn set_tenant_weight(&mut self, tree: TreeId, weight: u64) {
+        self.tenants.set_weight(tree, weight);
+    }
+
+    /// Grow a reclaimed tenant back toward its quota if headroom
+    /// exists; returns drained residents (normally empty, as regrow
+    /// runs between jobs) or `None` when nothing changed.
+    pub fn regrow_tenant(&mut self, tree: TreeId) -> Option<Vec<KvPair>> {
+        self.tenants.regrow(&self.cfg, tree)
+    }
+
+    /// Free (unreserved) FPE/BPE bytes in the quota ledger.
+    pub fn quota_free(&self) -> (u64, u64) {
+        (
+            self.tenants.free_fpe(&self.cfg),
+            self.tenants.free_bpe(&self.cfg),
+        )
+    }
+
+    /// Validating [`Self::configure`]: rejects (typed, side-effect
+    /// free) any static split that would round a listed tree down to
+    /// zero FPE/BPE slots in its widest key group.  The legacy
+    /// [`Self::configure`] stays permissive — degenerate floor-sized
+    /// tables are still legal there because downscaled smoke configs
+    /// rely on them — so validation is strictly opt-in.
+    pub fn try_configure(&mut self, trees: &[TreeConfig]) -> Result<(), AdmissionError> {
+        self.validate_static_shares(trees, 1)?;
+        self.configure(trees);
+        Ok(())
+    }
+
+    /// Validating [`Self::configure_vector`].
+    pub fn try_configure_vector(
+        &mut self,
+        trees: &[TreeConfig],
+        lanes: usize,
+    ) -> Result<(), AdmissionError> {
+        self.validate_static_shares(trees, lanes)?;
+        self.configure_vector(trees, lanes);
+        Ok(())
+    }
+
+    /// Check the post-apply static split for zero-capacity rounding
+    /// without mutating the live config module.
+    fn validate_static_shares(
+        &self,
+        trees: &[TreeConfig],
+        lanes: usize,
+    ) -> Result<(), AdmissionError> {
+        let mut cm = self.config_module.clone();
+        cm.apply(trees);
+        let ids: Vec<TreeId> = cm.tree_ids().collect();
+        for id in ids {
+            let lanes_for = if trees.iter().any(|t| t.tree == id) {
+                lanes
+            } else {
+                *self.lane_width.get(&id).unwrap_or(&1)
+            };
+            let min = self.cfg.min_fpe_share(lanes_for);
+            let share = cm.memory_share_for(id, self.cfg.fpe_total_mem);
+            if share < min {
+                return Err(AdmissionError::ZeroCapacity {
+                    tree: id,
+                    stage: "FPE",
+                    share,
+                    min,
+                });
+            }
+            if let Some(m) = self.cfg.bpe_mem {
+                let share = cm.memory_share_for(id, m);
+                if share < min {
+                    return Err(AdmissionError::ZeroCapacity {
+                        tree: id,
+                        stage: "BPE",
+                        share,
+                        min,
+                    });
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -1621,17 +1370,67 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "not configured")]
-    fn unconfigured_tree_panics() {
+    fn unconfigured_tree_ingest_is_a_counted_drop() {
+        // Regression: this used to panic ("tree {} not configured"),
+        // which is reachable from the wire under tenant churn — data
+        // racing ahead of Configure, or stragglers after an eviction.
         let mut sw = SwitchAggSwitch::new(SwitchConfig::default());
         let pkt = AggregationPacket {
             tree: TreeId(9),
             op: AggOp::Sum,
             eot: false,
             rel: None,
-            pairs: vec![],
+            pairs: pairs(10, 10, 1),
         };
+        let out = sw.ingest(&pkt);
+        assert!(out.forwarded.is_empty() && out.flushed.is_none());
+        assert_eq!(sw.unconfigured_drops(TreeId(9)), 1);
+        // A second drop accumulates; other trees are untouched.
         sw.ingest(&pkt);
+        assert_eq!(sw.unconfigured_drops(TreeId(9)), 2);
+        assert_eq!(sw.unconfigured_drops(TreeId(1)), 0);
+        // Configuring the tree afterwards seeds the count into its
+        // per-tree stats and resumes normal ingest.
+        sw.configure(&[TreeConfig {
+            tree: TreeId(9),
+            children: 1,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        assert_eq!(sw.stats(TreeId(9)).unwrap().unconfigured_drops, 2);
+        let out = sw.ingest(&pkt);
+        assert!(out.flushed.is_none());
+        assert_eq!(sw.stats(TreeId(9)).unwrap().pairs_in, 10);
+    }
+
+    #[test]
+    fn unconfigured_reliable_ingest_acks_without_creating_windows() {
+        // A reliable straggler for an evicted/unknown tree is counted
+        // and dropped, acked from existing window state, and must not
+        // grow fresh dedup state.
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::default());
+        let mut pkt = AggregationPacket {
+            tree: TreeId(9),
+            op: AggOp::Sum,
+            eot: false,
+            rel: Some(crate::protocol::RelHeader {
+                child: 0,
+                epoch: 0,
+                seq: 1,
+            }),
+            pairs: pairs(5, 5, 2),
+        };
+        let mut sink = IngestSink::new();
+        let ack = sw.ingest_reliable_one(TreeId(9), &pkt, &mut sink);
+        assert_eq!(ack.cum_seq, 0, "nothing admitted");
+        assert_eq!(sw.unconfigured_drops(TreeId(9)), 1);
+        assert_eq!(sw.dedup_stats(TreeId(9)).admitted, 0);
+        assert!(sink.forwarded.is_empty() && sink.flushes == 0);
+        // EoT variant too: no deferred flush may fire later.
+        pkt.eot = true;
+        let ack = sw.ingest_reliable_one(TreeId(9), &pkt, &mut sink);
+        assert_eq!(ack.cum_seq, 0);
+        assert_eq!(sw.unconfigured_drops(TreeId(9)), 2);
     }
 
     /// Packetize a stream with reliability records (child, seq 1..).
@@ -1994,5 +1793,143 @@ mod tests {
         let mut sw = configured_switch(16 << 10, None, 1);
         sw.begin_epoch(TreeId(1), 3);
         sw.begin_epoch(TreeId(1), 2);
+    }
+
+    fn tc(id: u32, children: u16) -> TreeConfig {
+        TreeConfig {
+            tree: TreeId(id),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }
+    }
+
+    #[test]
+    fn incremental_admission_preserves_neighbor_state_byte_for_byte() {
+        // A resident tenant's mid-stream engine state, stats, and dedup
+        // windows must be untouched by a neighbor's admission and
+        // eviction (the legacy configure() path wipes everything; the
+        // quota path must not).
+        let cfg = SwitchConfig::scaled(64 << 10, Some(1 << 20));
+        let q = QuotaRequest::even_split(&cfg, 4);
+        let mut sw = SwitchAggSwitch::new(cfg);
+        sw.admit_tree(tc(1, 1), q, 1).unwrap();
+
+        // Park mid-stream state: pairs ingested, no EoT yet.
+        let input = pairs(4_000, 900, 5);
+        let pkts = rel_packets(TreeId(1), 0, &input);
+        let refs: Vec<&AggregationPacket> = pkts.iter().collect();
+        let mut sink = IngestSink::new();
+        // Hold back the final (EoT) packet so the tree stays open.
+        let acks = sw.ingest_reliable_batch(TreeId(1), &refs[..refs.len() - 1], &mut sink);
+        assert_eq!(acks.len(), refs.len() - 1);
+        let stats_mid = format!("{:?}", sw.stats(TreeId(1)).unwrap());
+        let dedup_mid = format!("{:?}", sw.dedup_stats(TreeId(1)));
+
+        // Neighbor churn: admit two tenants, evict one.
+        sw.admit_tree(tc(2, 2), q, 1).unwrap();
+        sw.admit_tree(tc(3, 2), q, 1).unwrap();
+        let res = sw.evict_tree(TreeId(2)).unwrap();
+        assert!(res.is_empty(), "fresh neighbor had no residents");
+        assert_eq!(
+            format!("{:?}", sw.stats(TreeId(1)).unwrap()),
+            stats_mid,
+            "neighbor churn must not touch a resident tenant's stats"
+        );
+        assert_eq!(format!("{:?}", sw.dedup_stats(TreeId(1))), dedup_mid);
+
+        // Finish the stream: the aggregate equals a solo run's.
+        sw.ingest_reliable_one(TreeId(1), refs[refs.len() - 1], &mut sink);
+        assert_eq!(sink.flushes, 1);
+        let got: Value = sink_to_vec(&sink).iter().map(|p| p.value).sum();
+        let want: Value = input.iter().map(|p| p.value).sum();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn evicted_tree_keeps_its_epoch_fence() {
+        let cfg = SwitchConfig::scaled(64 << 10, None);
+        let q = QuotaRequest::even_split(&cfg, 4);
+        let mut sw = SwitchAggSwitch::new(cfg);
+        sw.admit_tree(tc(1, 1), q, 1).unwrap();
+        sw.begin_epoch(TreeId(1), 2);
+        sw.evict_tree(TreeId(1)).unwrap();
+        assert_eq!(sw.tree_epoch(TreeId(1)), 2, "fence survives eviction");
+        // Re-admission continues the fence: an epoch-0 straggler from
+        // the evicted incarnation is still rejected.
+        sw.admit_tree(tc(1, 1), q, 1).unwrap();
+        let pkt = AggregationPacket {
+            tree: TreeId(1),
+            op: AggOp::Sum,
+            eot: false,
+            rel: Some(crate::protocol::RelHeader {
+                child: 0,
+                epoch: 0,
+                seq: 1,
+            }),
+            pairs: pairs(3, 3, 8),
+        };
+        let mut sink = IngestSink::new();
+        let ack = sw.ingest_reliable_one(TreeId(1), &pkt, &mut sink);
+        assert_eq!(ack.epoch, 2);
+        assert_eq!(sw.dedup_stats(TreeId(1)).stale_epoch_drops, 1);
+    }
+
+    #[test]
+    fn try_configure_rejects_zero_capacity_splits() {
+        // 64 trees over a tiny FPE: the even split rounds the widest
+        // key group down to zero slots — the permissive configure()
+        // floors it silently, try_configure must reject it typed.
+        let cfg = SwitchConfig::scaled(16 << 10, None);
+        let min = cfg.min_fpe_share(1);
+        let n = (cfg.fpe_total_mem / min + 1) as u32;
+        let trees: Vec<TreeConfig> = (1..=n).map(|i| tc(i, 1)).collect();
+        let mut sw = SwitchAggSwitch::new(cfg);
+        match sw.try_configure(&trees) {
+            Err(AdmissionError::ZeroCapacity { stage: "FPE", share, min: m, .. }) => {
+                assert!(share < m);
+            }
+            other => panic!("expected ZeroCapacity, got {other:?}"),
+        }
+        assert_eq!(sw.n_trees(), 0, "rejection is side-effect free");
+        // A viable split passes and actually configures.
+        sw.try_configure(&[tc(1, 1), tc(2, 1)]).unwrap();
+        assert_eq!(sw.n_trees(), 2);
+    }
+
+    #[test]
+    fn weighted_grants_cap_the_flooders_credit() {
+        let cfg = SwitchConfig::scaled(64 << 10, None);
+        let q = QuotaRequest::even_split(&cfg, 4);
+        let mut sw = SwitchAggSwitch::new(cfg);
+        sw.set_grant_policy(GrantPolicy::WeightedShare);
+        sw.admit_tree(tc(1, 1), q, 16).unwrap(); // well-behaved, heavy
+        sw.admit_tree(tc(2, 1), q, 1).unwrap(); // flooder, light
+        let window = RelWindow::default().get() as u16;
+        let mut sink = IngestSink::new();
+        let mk = |tree: u32, seq: u32| AggregationPacket {
+            tree: TreeId(tree),
+            op: AggOp::Sum,
+            eot: false,
+            rel: Some(crate::protocol::RelHeader {
+                child: 0,
+                epoch: 0,
+                seq,
+            }),
+            pairs: vec![KvPair::new(Key::from_id(seq as u64, 16), 1)],
+        };
+        // Both active: the flooder's grant is capped to its share,
+        // the heavy tenant keeps (almost) the whole window.
+        let ack_hi = sw.ingest_reliable_one(TreeId(1), &mk(1, 1), &mut sink);
+        let ack_lo = sw.ingest_reliable_one(TreeId(2), &mk(2, 1), &mut sink);
+        let grants = WeightedGrants::new(window);
+        assert_eq!(ack_lo.credit, grants.share(1, 17));
+        assert!(ack_hi.credit >= grants.share(16, 17));
+        assert!(ack_lo.credit < ack_hi.credit);
+        // The heavy tenant goes idle: the flooder gets the full window
+        // again — isolation only throttles when someone needs it.
+        sw.set_tenant_idle(TreeId(1), true);
+        let ack_solo = sw.ingest_reliable_one(TreeId(2), &mk(2, 2), &mut sink);
+        assert!(ack_solo.credit > ack_lo.credit);
     }
 }

@@ -1,0 +1,1255 @@
+//! Per-tenant switch state: one aggregation tree's engine plus the
+//! directory that owns every resident tree.
+//!
+//! Before this module existed, `SwitchAggSwitch` held a flat
+//! `BTreeMap<TreeId, TreeEngine>` that `rebuild_engines` wiped and
+//! re-split on every `configure()` call — admitting one tenant
+//! destroyed every neighbor's FPE/BPE state.  `TenantDirectory` makes
+//! tree residency incremental: tenants are admitted against an
+//! explicit FPE/BPE memory ledger, evicted one at a time (their
+//! resident pairs drained for software merge, never dropped), and
+//! survive neighbor churn byte-for-byte.
+//!
+//! Admission is checked, not best-effort: a [`QuotaRequest`] that
+//! cannot be satisfied is rejected with a typed [`AdmissionError`]
+//! before any engine state is touched.  Under pressure, idle tenants'
+//! slots can be *reclaimed* — their tables shrunk to the minimum
+//! viable share, the displaced pairs handed back to the caller for
+//! software aggregation — so an arriving job is admitted at the cost
+//! of an idle neighbor's reduction ratio, never its correctness.
+
+use crate::protocol::vector::{max_vec_payload, vec_fixed_len};
+use crate::protocol::{
+    AggOp, Key, KvPair, TreeConfig, TreeId, Value, VectorBatch, AGG_FIXED_LEN, HEADER_OVERHEAD,
+};
+use crate::sim::clock::Cycles;
+use crate::switch::bpe::{Bpe, BpeOutcome};
+use crate::switch::config::{EvictionPolicy, SwitchConfig};
+use crate::switch::crossbar::Crossbar;
+use crate::switch::fpe::{Fpe, FpeOutcome};
+use crate::switch::hash_table::{HashTable, VectorEvictSink};
+use crate::switch::parallel::{merge_by_seq, run_workers, JobPair, WorkerGroup};
+use crate::switch::payload_analyzer::{GroupMap, PayloadAnalyzer};
+use crate::switch::scheduler::{SchedPolicy, Scheduler};
+use crate::switch::switch_sim::{IngestSink, SwitchStats, VectorSink};
+use std::collections::BTreeMap;
+
+/// Input pacing: cycles per byte on a 10 Gbps port at 200 MHz
+/// (1.25 GB/s ÷ 200 Mcycle/s = 6.25 B/cycle = 4/25 cycle/B).
+const PACE_NUM: u64 = 4;
+const PACE_DEN: u64 = 25;
+
+/// One aggregation tree's slice of the data plane.
+pub(crate) struct TreeEngine {
+    op: AggOp,
+    children: u16,
+    eot_seen: u16,
+    /// Value lanes per key (W); 1 = the scalar data plane.
+    lanes: usize,
+    analyzer: PayloadAnalyzer,
+    crossbar: Crossbar,
+    scheduler: Scheduler,
+    pub(crate) fpes: Vec<Fpe>,
+    pub(crate) bpe: Option<Bpe>,
+    /// Byte-pacing accumulator for input arrivals.
+    bytes_arrived: u64,
+    /// PE-input FIFO capacity (shared by every FPE and the BPE) — the
+    /// denominator of the backpressure-credit headroom.
+    fifo_cap: usize,
+    /// Reused FPE-eviction scratch for the vector path (one evictee).
+    evict_scratch: VectorEvictSink,
+    /// Reused BPE-overflow scratch for the vector path (one pair).
+    overflow_scratch: VectorEvictSink,
+    pub(crate) stats: SwitchStats,
+}
+
+impl TreeEngine {
+    pub(crate) fn new(
+        cfg: &SwitchConfig,
+        op: AggOp,
+        children: u16,
+        fpe_share: u64,
+        bpe_share: Option<u64>,
+        lanes: usize,
+    ) -> Self {
+        let fpe_mem_each = fpe_share / cfg.n_groups as u64;
+        let map = GroupMap::new(cfg.n_groups, cfg.key_base);
+        let fpes = (0..cfg.n_groups)
+            .map(|g| {
+                let table = HashTable::with_memory_lanes(
+                    fpe_mem_each,
+                    cfg.group_width(g),
+                    cfg.fpe_slots_per_bucket,
+                    lanes,
+                );
+                Fpe::new(
+                    g,
+                    table,
+                    cfg.fpe_interval,
+                    cfg.delays,
+                    cfg.eviction,
+                    cfg.fifo_cap,
+                )
+            })
+            .collect();
+        let bpe = bpe_share.map(|m| Bpe::for_tree_lanes(cfg, m, lanes));
+        Self {
+            op,
+            children,
+            eot_seen: 0,
+            lanes,
+            analyzer: PayloadAnalyzer::new(map),
+            crossbar: Crossbar::new(cfg.n_groups, cfg.delays.crossbar),
+            scheduler: Scheduler::new(cfg.n_groups, SchedPolicy::RoundRobin),
+            fpes,
+            bpe,
+            bytes_arrived: 0,
+            fifo_cap: cfg.fifo_cap,
+            evict_scratch: VectorEvictSink::new(),
+            overflow_scratch: VectorEvictSink::new(),
+            stats: SwitchStats::default(),
+        }
+    }
+
+    /// Current arrival cycle implied by bytes received at line rate.
+    /// Each child feeds its own 10 Gbps port through its own payload
+    /// analyzer (§5 instantiates one PA per port), so the aggregate
+    /// ingress rate scales with the child count: pairs from k children
+    /// land on the shared FPEs k× as fast as a single stream would.
+    fn arrival_cycle(&self) -> Cycles {
+        let ports = (self.children as u64).max(1);
+        self.bytes_arrived * PACE_NUM / (PACE_DEN * ports)
+    }
+
+    /// Packet-header arrival accounting shared by the serial, sharded,
+    /// and vector front ends — with [`Self::account_pair`], the single
+    /// source of the input-pacing rule, so the paths cannot drift.
+    /// For scalar trees (`lanes == 1`) the fixed length is exactly
+    /// [`AGG_FIXED_LEN`]; W-lane trees carry the 2-byte lane count.
+    fn account_packet_header(&mut self) {
+        let fixed = (HEADER_OVERHEAD + vec_fixed_len(self.lanes)) as u64;
+        debug_assert!(self.lanes > 1 || fixed == (HEADER_OVERHEAD + AGG_FIXED_LEN) as u64);
+        self.stats.packets_in += 1;
+        self.stats.bytes_in += fixed;
+        self.bytes_arrived += fixed;
+    }
+
+    /// Per-pair arrival accounting (bytes, pacing, payload analyzer);
+    /// returns the pair's `(group, arrival cycle)`.
+    fn account_pair(&mut self, p: &KvPair, header_delay: Cycles) -> (usize, Cycles) {
+        let el = p.encoded_len() as u64;
+        self.stats.bytes_in += el;
+        self.bytes_arrived += el;
+        self.stats.pairs_in += 1;
+        let arrive = self.arrival_cycle() + header_delay;
+        let g = self.analyzer.classify(p);
+        (g, arrive)
+    }
+
+    /// Ingest one packet's worth of pairs.  This is the core ingest
+    /// path: the packet need not be materialized — stream entry points
+    /// pass MTU-sized chunks of the caller's slice directly.
+    pub(crate) fn ingest_pairs(
+        &mut self,
+        pairs: &[KvPair],
+        eot: bool,
+        header_delay: Cycles,
+        out: &mut IngestSink,
+    ) {
+        assert_eq!(
+            self.lanes, 1,
+            "scalar ingest on a tree configured for {}-lane vector payloads",
+            self.lanes
+        );
+        self.account_packet_header();
+
+        for p in pairs {
+            let (g, arrive) = self.account_pair(p, header_delay);
+            let deliver = self.crossbar.route(arrive, g);
+            match self.fpes[g].offer(deliver, p.key, p.value, self.op) {
+                FpeOutcome::Kept => {}
+                FpeOutcome::Forwarded {
+                    key,
+                    value,
+                    hash,
+                    ready,
+                } => {
+                    self.forward_evicted(g, key, value, hash, ready, out);
+                }
+            }
+        }
+
+        if eot {
+            self.eot_seen += 1;
+            if self.eot_seen >= self.children {
+                self.flush_into(out);
+            }
+        }
+        self.roll_stats();
+    }
+
+    /// Route an FPE-evicted pair: to the BPE if the hierarchy is on,
+    /// straight downstream otherwise (fig9 "S-" single-level rows).
+    fn forward_evicted(
+        &mut self,
+        group: usize,
+        key: Key,
+        value: Value,
+        hash: u32,
+        ready: Cycles,
+        out: &mut IngestSink,
+    ) {
+        match &mut self.bpe {
+            Some(bpe) => {
+                // The scheduler grants this FPE's forward queue; the
+                // event-driven model presents evictions one at a time,
+                // so the queue-depth vector would be a singleton.
+                let granted = self.scheduler.grant_single(group);
+                debug_assert_eq!(granted, group);
+                match bpe.offer_hashed(ready, group, key, value, hash, self.op) {
+                    BpeOutcome::Kept => {}
+                    BpeOutcome::Overflow { key, value, .. } => {
+                        self.emit_pair(KvPair::new(key, value), out);
+                    }
+                }
+            }
+            None => self.emit_pair(KvPair::new(key, value), out),
+        }
+    }
+
+    fn emit_pair(&mut self, p: KvPair, out: &mut IngestSink) {
+        self.stats.pairs_out_stream += 1;
+        self.stats.bytes_out += p.encoded_len() as u64;
+        out.forwarded.push(p);
+    }
+
+    /// Flush every engine (EoT from all children, §4.2.2): residents
+    /// stream downstream; Table 3's BPE-Flush dominates the cost.
+    fn flush_into(&mut self, out: &mut IngestSink) {
+        out.flushes += 1;
+        let start = out.flushed.len();
+        let mut flush_cycles: Cycles = 0;
+        for f in &mut self.fpes {
+            out.scratch.clear();
+            flush_cycles += f.flush_into(&mut out.scratch);
+            out.flushed
+                .extend(out.scratch.iter().map(|&(k, v)| KvPair::new(k, v)));
+        }
+        if let Some(bpe) = &mut self.bpe {
+            out.scratch.clear();
+            flush_cycles += bpe.flush_into(&mut out.scratch);
+            out.flushed
+                .extend(out.scratch.iter().map(|&(k, v)| KvPair::new(k, v)));
+        }
+        self.stats.flush_cycles += flush_cycles;
+        let flushed_now = &out.flushed[start..];
+        self.stats.pairs_out_flush += flushed_now.len() as u64;
+        self.stats.bytes_out += flushed_now.iter().map(|p| p.encoded_len() as u64).sum::<u64>();
+        self.eot_seen = 0;
+    }
+
+    /// Fold engine counters into the per-tree stats snapshot.
+    fn roll_stats(&mut self) {
+        let fpe_aggregated = self.fpes.iter().map(|f| f.aggregated).sum();
+        let fpe_inserted = self.fpes.iter().map(|f| f.inserted).sum();
+        let fpe_evicted = self.fpes.iter().map(|f| f.evicted).sum();
+        let mut fifo_writes: u64 = self.fpes.iter().map(|f| f.fifo_writes).sum();
+        let mut fifo_full: u64 = self.fpes.iter().map(|f| f.fifo_full_events).sum();
+        if let Some(b) = &self.bpe {
+            self.stats.bpe_aggregated = b.aggregated;
+            self.stats.bpe_inserted = b.inserted;
+            self.stats.bpe_overflowed = b.overflowed;
+            fifo_writes += b.fifo_writes;
+            fifo_full += b.fifo_full_events;
+        }
+        self.stats.fpe_aggregated = fpe_aggregated;
+        self.stats.fpe_inserted = fpe_inserted;
+        self.stats.fpe_evicted = fpe_evicted;
+        self.stats.fifo_writes = fifo_writes;
+        self.stats.fifo_full_events = fifo_full;
+        let mut fifo_peak: u64 = self.fpes.iter().map(|f| f.fifo_peak).max().unwrap_or(0);
+        if let Some(b) = &self.bpe {
+            fifo_peak = fifo_peak.max(b.fifo_peak);
+        }
+        self.stats.fifo_max_occupancy = fifo_peak;
+        self.stats.makespan_cycles = self.arrival_cycle();
+    }
+
+    /// Instantaneous PE-input queue state as seen by the next arrival:
+    /// `(deepest FIFO, capacity)` — the backpressure signal behind
+    /// [`CreditPolicy::Backpressure`]'s credit advertisement.
+    pub(crate) fn input_queue(&self) -> (usize, usize) {
+        let at = self.arrival_cycle();
+        let mut depth = self
+            .fpes
+            .iter()
+            .map(|f| f.fifo_depth_at(at))
+            .max()
+            .unwrap_or(0);
+        if let Some(b) = &self.bpe {
+            depth = depth.max(b.fifo_depth_at(at));
+        }
+        (depth, self.fifo_cap)
+    }
+
+    /// Ingest one packet's worth of W-lane vector pairs — the columnar
+    /// counterpart of [`Self::ingest_pairs`], sharing the pacing,
+    /// analyzer, crossbar, FPE/BPE timing and stats machinery; at
+    /// `W = 1` it is byte-identical to the scalar path.  Always runs
+    /// on the serial reference engine (the sharded engine's ownership
+    /// seams are unchanged by lane width; vector sharding can reuse
+    /// them later).
+    pub(crate) fn ingest_vector_range(
+        &mut self,
+        batch: &VectorBatch,
+        range: std::ops::Range<usize>,
+        eot: bool,
+        header_delay: Cycles,
+        out: &mut VectorSink,
+    ) {
+        assert_eq!(
+            batch.lanes(),
+            self.lanes,
+            "batch lane width does not match the tree's configured width"
+        );
+        let w = self.lanes;
+        self.account_packet_header();
+
+        for i in range {
+            let key = batch.key(i);
+            let lanes = batch.lane_slice(i);
+            let el = batch.encoded_len_pair(i);
+            self.stats.bytes_in += el as u64;
+            self.bytes_arrived += el as u64;
+            self.stats.pairs_in += 1;
+            let arrive = self.arrival_cycle() + header_delay;
+            let g = self.analyzer.classify_parts(key.len(), el);
+            let deliver = self.crossbar.route(arrive, g);
+            self.evict_scratch.clear();
+            let forwarded =
+                self.fpes[g].offer_lanes(deliver, key, lanes, self.op, &mut self.evict_scratch);
+            if let Some(ready) = forwarded {
+                let (ek, ehash) = self.evict_scratch.keys[0];
+                match &mut self.bpe {
+                    Some(bpe) => {
+                        let granted = self.scheduler.grant_single(g);
+                        debug_assert_eq!(granted, g);
+                        self.overflow_scratch.clear();
+                        let overflow = bpe.offer_lanes_hashed(
+                            ready,
+                            g,
+                            (ek, ehash),
+                            self.evict_scratch.lane_slice(0, w),
+                            self.op,
+                            &mut self.overflow_scratch,
+                        );
+                        if overflow.is_some() {
+                            let (ok, _) = self.overflow_scratch.keys[0];
+                            let olanes = self.overflow_scratch.lane_slice(0, w);
+                            self.stats.pairs_out_stream += 1;
+                            self.stats.bytes_out += crate::protocol::vector::encoded_vec_len(
+                                ok.len(),
+                                w,
+                                crate::protocol::vector::lane_value_width(olanes),
+                            ) as u64;
+                            out.forwarded.push(ok, olanes);
+                        }
+                    }
+                    None => {
+                        let elanes = self.evict_scratch.lane_slice(0, w);
+                        self.stats.pairs_out_stream += 1;
+                        self.stats.bytes_out += crate::protocol::vector::encoded_vec_len(
+                            ek.len(),
+                            w,
+                            crate::protocol::vector::lane_value_width(elanes),
+                        ) as u64;
+                        out.forwarded.push(ek, elanes);
+                    }
+                }
+            }
+        }
+
+        if eot {
+            self.eot_seen += 1;
+            if self.eot_seen >= self.children {
+                self.flush_vector_into(out);
+            }
+        }
+        self.roll_stats();
+    }
+
+    /// End-of-tree flush of a W-lane tree: every engine drains
+    /// columnar into the sink; byte/pair accounting mirrors
+    /// [`Self::flush_into`].
+    fn flush_vector_into(&mut self, out: &mut VectorSink) {
+        let w = self.lanes;
+        out.flushes += 1;
+        let start = out.flushed.len();
+        let mut flush_cycles: Cycles = 0;
+        for f in &mut self.fpes {
+            out.scratch_keys.clear();
+            out.scratch_vals.clear();
+            flush_cycles += f.flush_lanes_into(&mut out.scratch_keys, &mut out.scratch_vals);
+            for (j, &k) in out.scratch_keys.iter().enumerate() {
+                out.flushed.push(k, &out.scratch_vals[j * w..(j + 1) * w]);
+            }
+        }
+        if let Some(bpe) = &mut self.bpe {
+            out.scratch_keys.clear();
+            out.scratch_vals.clear();
+            flush_cycles += bpe.flush_lanes_into(&mut out.scratch_keys, &mut out.scratch_vals);
+            for (j, &k) in out.scratch_keys.iter().enumerate() {
+                out.flushed.push(k, &out.scratch_vals[j * w..(j + 1) * w]);
+            }
+        }
+        self.stats.flush_cycles += flush_cycles;
+        let flushed_now = out.flushed.len() - start;
+        self.stats.pairs_out_flush += flushed_now as u64;
+        self.stats.bytes_out += (start..out.flushed.len())
+            .map(|i| out.flushed.encoded_len_pair(i) as u64)
+            .sum::<u64>();
+        self.eot_seen = 0;
+    }
+
+    /// Account trailing per-packet header overhead on the output side:
+    /// streamed-out pairs are packed into MTU-sized packets downstream
+    /// (W-lane trees pack into per-W packet budgets; at `W = 1` this
+    /// is exactly the scalar packetization).
+    pub(crate) fn finalize_output_bytes(&mut self) {
+        let payload = self.stats.bytes_out;
+        let pkts = payload.div_ceil(max_vec_payload(self.lanes) as u64).max(
+            (self.stats.pairs_out_stream + self.stats.pairs_out_flush > 0) as u64,
+        );
+        self.stats.bytes_out = payload + pkts * (HEADER_OVERHEAD + vec_fixed_len(self.lanes)) as u64;
+    }
+
+    /// Whether this chunk sequence would trigger an end-of-tree flush
+    /// anywhere but at the very last chunk.  The sharded engine defers
+    /// its single flush to the merge stage; a mid-stream flush resets
+    /// table state between pairs and must take the serial path.
+    pub(crate) fn flush_splits_stream(&self, chunks: &[(&[KvPair], bool)]) -> bool {
+        let mut eot_seen = self.eot_seen;
+        for (i, &(_, eot)) in chunks.iter().enumerate() {
+            if eot {
+                eot_seen += 1;
+                if eot_seen >= self.children {
+                    if i + 1 != chunks.len() {
+                        return true;
+                    }
+                    eot_seen = 0;
+                }
+            }
+        }
+        false
+    }
+
+    /// Sharded ingest of a whole chunk sequence (see `switch::parallel`
+    /// for why this is byte-identical to calling
+    /// [`Self::ingest_pairs`] per chunk).
+    pub(crate) fn ingest_chunks_sharded(
+        &mut self,
+        chunks: &[(&[KvPair], bool)],
+        header_delay: Cycles,
+        shards: usize,
+        out: &mut IngestSink,
+    ) {
+        let n_groups = self.fpes.len();
+        // Front end (serial): byte pacing + analyzer accounting; every
+        // pair is stamped with its global sequence number and arrival
+        // cycle and binned by group.
+        let mut jobs: Vec<Vec<JobPair>> = (0..n_groups).map(|_| Vec::new()).collect();
+        let mut seq: u64 = 0;
+        let mut eots: u32 = 0;
+        for &(pairs, eot) in chunks {
+            self.account_packet_header();
+            for p in pairs {
+                let (g, arrive) = self.account_pair(p, header_delay);
+                jobs[g].push(JobPair {
+                    seq,
+                    arrive,
+                    pair: *p,
+                });
+                seq += 1;
+            }
+            if eot {
+                eots += 1;
+            }
+        }
+        // Distribute disjoint {FPE, BPE region, crossbar output} shards
+        // round-robin across workers (spreads the skewed group weights
+        // better than contiguous ranges).
+        let op = self.op;
+        let evict_old = self
+            .bpe
+            .as_ref()
+            .map(|b| b.eviction() == EvictionPolicy::EvictOld)
+            .unwrap_or(false);
+        let mut regions: Vec<Option<&mut HashTable>> = match self.bpe.as_mut() {
+            Some(b) => b.regions_mut().iter_mut().map(Some).collect(),
+            None => (0..n_groups).map(|_| None).collect(),
+        };
+        let mut per_worker: Vec<Vec<WorkerGroup<'_>>> =
+            (0..shards).map(|_| Vec::new()).collect();
+        for ((g, fpe), job) in self.fpes.iter_mut().enumerate().zip(jobs) {
+            per_worker[g % shards].push(WorkerGroup {
+                group: g,
+                job,
+                fpe,
+                region: regions[g].take(),
+                port: self.crossbar.port_view(g),
+                op,
+                evict_old,
+            });
+        }
+        let mut outputs = run_workers(per_worker);
+        outputs.sort_by_key(|o| o.group);
+        // Merge (serial, deterministic): fold the per-output crossbar
+        // views and BPE probe counts back in, replay the shared BPE
+        // timing in global eviction order, then emit downstream pairs
+        // in the serial path's order.
+        for o in &outputs {
+            self.crossbar.absorb(o.group, o.port);
+            if let Some(b) = self.bpe.as_mut() {
+                b.absorb_probe_counts(o.bpe_aggregated, o.bpe_inserted, o.bpe_overflowed);
+            }
+        }
+        let evict_streams: Vec<&[(u64, (usize, Cycles))]> =
+            outputs.iter().map(|o| o.evicts.as_slice()).collect();
+        let merged_evicts = merge_by_seq(&evict_streams);
+        if let Some(b) = self.bpe.as_mut() {
+            for &(_, (group, ready)) in &merged_evicts {
+                let granted = self.scheduler.grant_single(group);
+                debug_assert_eq!(granted, group);
+                b.replay_timing(ready);
+            }
+        }
+        let emission_streams: Vec<&[(u64, KvPair)]> =
+            outputs.iter().map(|o| o.emissions.as_slice()).collect();
+        let merged_emissions = merge_by_seq(&emission_streams);
+        for (_, pair) in merged_emissions {
+            self.emit_pair(pair, out);
+        }
+        // End-of-tree flushes — by the `flush_splits_stream`
+        // precondition, at most one fires, and only at the stream end.
+        for _ in 0..eots {
+            self.eot_seen += 1;
+            if self.eot_seen >= self.children {
+                self.flush_into(out);
+            }
+        }
+        self.roll_stats();
+    }
+}
+
+impl TreeEngine {
+    /// Resident pairs currently held in FPE tables plus BPE regions.
+    pub(crate) fn resident_pairs(&self) -> usize {
+        self.fpes.iter().map(|f| f.table().occupancy()).sum::<usize>()
+            + self.bpe.as_ref().map_or(0, |b| b.occupancy_pairs())
+    }
+
+    /// Rebuild this engine's hash tables at a new memory share,
+    /// draining every resident pair into `out` for software merge.
+    /// Counters, FIFO timing, and DRAM state are preserved — only the
+    /// tables are replaced — so a resized tenant keeps its cumulative
+    /// [`SwitchStats`] and busy horizon.  Scalar-only: W-lane tenants
+    /// are evict-or-keep, never elastically resized.
+    pub(crate) fn resize_to(
+        &mut self,
+        cfg: &SwitchConfig,
+        fpe_share: u64,
+        bpe_share: Option<u64>,
+        out: &mut Vec<KvPair>,
+    ) {
+        assert_eq!(self.lanes, 1, "elastic resize is scalar-only");
+        let mut scratch: Vec<(Key, Value)> = Vec::new();
+        let each = fpe_share / cfg.n_groups as u64;
+        for (g, f) in self.fpes.iter_mut().enumerate() {
+            let table = HashTable::with_memory_lanes(
+                each,
+                cfg.group_width(g),
+                cfg.fpe_slots_per_bucket,
+                1,
+            );
+            f.replace_table(table, &mut scratch);
+        }
+        if let (Some(b), Some(share)) = (self.bpe.as_mut(), bpe_share) {
+            b.rebuild_regions(cfg, share, 1, &mut scratch);
+        }
+        out.extend(scratch.iter().map(|&(k, v)| KvPair::new(k, v)));
+    }
+
+    /// Drain every resident scalar pair (eviction path): in-flight
+    /// state is handed back for software merge, never silently
+    /// dropped.  The stream-out cycle cost is ignored — eviction is a
+    /// management-plane action, not data-plane work.
+    pub(crate) fn drain_residents(&mut self, out: &mut Vec<KvPair>) {
+        let mut scratch: Vec<(Key, Value)> = Vec::new();
+        for f in &mut self.fpes {
+            f.flush_into(&mut scratch);
+        }
+        if let Some(b) = &mut self.bpe {
+            b.flush_into(&mut scratch);
+        }
+        out.extend(scratch.iter().map(|&(k, v)| KvPair::new(k, v)));
+    }
+
+    /// W-lane twin of [`Self::drain_residents`].
+    pub(crate) fn drain_residents_vector(&mut self, out: &mut VectorBatch) {
+        let w = self.lanes;
+        let mut keys: Vec<Key> = Vec::new();
+        let mut vals: Vec<Value> = Vec::new();
+        for f in &mut self.fpes {
+            keys.clear();
+            vals.clear();
+            f.flush_lanes_into(&mut keys, &mut vals);
+            for (j, &k) in keys.iter().enumerate() {
+                out.push(k, &vals[j * w..(j + 1) * w]);
+            }
+        }
+        if let Some(b) = &mut self.bpe {
+            keys.clear();
+            vals.clear();
+            b.flush_lanes_into(&mut keys, &mut vals);
+            for (j, &k) in keys.iter().enumerate() {
+                out.push(k, &vals[j * w..(j + 1) * w]);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quotas, admission, and the tenant directory
+// ---------------------------------------------------------------------------
+
+/// A tenant's requested slice of switch memory, in bytes.  `bpe_bytes`
+/// is ignored on switches configured without a BPE.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuotaRequest {
+    pub fpe_bytes: u64,
+    pub bpe_bytes: u64,
+}
+
+impl QuotaRequest {
+    /// An even 1/n split of the switch's total FPE/BPE memory.
+    pub fn even_split(cfg: &SwitchConfig, n: u64) -> Self {
+        let n = n.max(1);
+        Self {
+            fpe_bytes: cfg.fpe_total_mem / n,
+            bpe_bytes: cfg.bpe_mem.unwrap_or(0) / n,
+        }
+    }
+
+    /// The whole switch.
+    pub fn full(cfg: &SwitchConfig) -> Self {
+        Self::even_split(cfg, 1)
+    }
+
+    /// Clamp both stages up to the minimum viable scalar share so a
+    /// tiny request is admitted at floor capacity instead of rejected
+    /// as zero-capacity.
+    pub fn at_least_floor(self, cfg: &SwitchConfig) -> Self {
+        let min = cfg.min_fpe_share(1);
+        Self {
+            fpe_bytes: self.fpe_bytes.max(min),
+            bpe_bytes: if cfg.bpe_mem.is_some() {
+                self.bpe_bytes.max(min)
+            } else {
+                self.bpe_bytes
+            },
+        }
+    }
+}
+
+/// Why a tenant could not be admitted.  Returned *before* any engine
+/// state is touched: a rejected admission leaves every resident
+/// tenant byte-for-byte intact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum AdmissionError {
+    #[error("tree {tree} is already admitted")]
+    AlreadyAdmitted { tree: TreeId },
+    /// The ledger has too little free memory.  `reclaimable` reports
+    /// how many bytes an elastic-reclaim pass over idle tenants could
+    /// free, so callers can decide whether to retry with reclamation.
+    #[error(
+        "{stage} quota for tree {tree} cannot be met: requested {requested} B, \
+         {free} B free ({reclaimable} B reclaimable from idle tenants)"
+    )]
+    QuotaExhausted {
+        tree: TreeId,
+        stage: &'static str,
+        requested: u64,
+        free: u64,
+        reclaimable: u64,
+    },
+    /// The share rounds down to zero slots in the widest key group —
+    /// the table would be built at the degenerate 1-slot floor and
+    /// thrash.  `min` is the smallest viable share for this lane width.
+    #[error(
+        "{stage} share of {share} B for tree {tree} rounds to zero slots in the \
+         widest key group (minimum viable share is {min} B)"
+    )]
+    ZeroCapacity {
+        tree: TreeId,
+        stage: &'static str,
+        share: u64,
+        min: u64,
+    },
+}
+
+/// Residual aggregation state drained from an evicted tenant.
+#[derive(Debug, Clone, Default)]
+pub struct EvictedResidents {
+    /// Scalar (W = 1) resident pairs.
+    pub pairs: Vec<KvPair>,
+    /// W-lane resident pairs (set only for vector tenants).
+    pub vector: Option<VectorBatch>,
+}
+
+impl EvictedResidents {
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty() && self.vector.as_ref().map_or(true, |v| v.is_empty())
+    }
+}
+
+/// One resident tree: its engine plus the bookkeeping that makes it
+/// individually admissible, evictable, and resizable.
+pub(crate) struct Tenant {
+    pub(crate) config: TreeConfig,
+    pub(crate) engine: TreeEngine,
+    pub(crate) lanes: usize,
+    /// `None` for legacy static-split trees installed via `configure()`
+    /// — those are rebuilt wholesale by the config module and never
+    /// charged against the quota ledger.
+    pub(crate) quota: Option<QuotaRequest>,
+    pub(crate) weight: u64,
+    pub(crate) idle: bool,
+    /// Bytes currently backing the engine (≤ quota after reclamation).
+    pub(crate) fpe_share: u64,
+    pub(crate) bpe_share: Option<u64>,
+}
+
+/// Every resident tree on one switch, plus the FPE/BPE memory ledger
+/// quota-admitted tenants are charged against.  Legacy static-split
+/// trees coexist (uncharged) so the pre-quota `configure()` API keeps
+/// its exact behavior.
+#[derive(Default)]
+pub(crate) struct TenantDirectory {
+    tenants: BTreeMap<TreeId, Tenant>,
+    fpe_reserved: u64,
+    bpe_reserved: u64,
+}
+
+impl TenantDirectory {
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn clear(&mut self) {
+        self.tenants.clear();
+        self.fpe_reserved = 0;
+        self.bpe_reserved = 0;
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub(crate) fn contains(&self, tree: TreeId) -> bool {
+        self.tenants.contains_key(&tree)
+    }
+
+    pub(crate) fn ids(&self) -> impl Iterator<Item = TreeId> + '_ {
+        self.tenants.keys().copied()
+    }
+
+    pub(crate) fn get(&self, tree: TreeId) -> Option<&Tenant> {
+        self.tenants.get(&tree)
+    }
+
+    pub(crate) fn get_mut(&mut self, tree: TreeId) -> Option<&mut Tenant> {
+        self.tenants.get_mut(&tree)
+    }
+
+    pub(crate) fn engine(&self, tree: TreeId) -> Option<&TreeEngine> {
+        self.tenants.get(&tree).map(|t| &t.engine)
+    }
+
+    pub(crate) fn engine_mut(&mut self, tree: TreeId) -> Option<&mut TreeEngine> {
+        self.tenants.get_mut(&tree).map(|t| &mut t.engine)
+    }
+
+    /// Install (or replace) a legacy static-split tree.  Not charged
+    /// against the ledger; quota state of a previous incarnation is
+    /// released first.
+    pub(crate) fn install_legacy(
+        &mut self,
+        config: TreeConfig,
+        engine: TreeEngine,
+        lanes: usize,
+    ) {
+        let tree = config.tree;
+        self.release(tree);
+        self.tenants.insert(
+            tree,
+            Tenant {
+                config,
+                engine,
+                lanes,
+                quota: None,
+                weight: 1,
+                idle: false,
+                fpe_share: 0,
+                bpe_share: None,
+            },
+        );
+    }
+
+    /// Drop `tree`'s ledger charge (if any) ahead of replace/remove.
+    fn release(&mut self, tree: TreeId) {
+        if let Some(t) = self.tenants.get(&tree) {
+            if t.quota.is_some() {
+                self.fpe_reserved = self.fpe_reserved.saturating_sub(t.fpe_share);
+                self.bpe_reserved = self
+                    .bpe_reserved
+                    .saturating_sub(t.bpe_share.unwrap_or(0));
+            }
+        }
+    }
+
+    pub(crate) fn free_fpe(&self, cfg: &SwitchConfig) -> u64 {
+        cfg.fpe_total_mem.saturating_sub(self.fpe_reserved)
+    }
+
+    pub(crate) fn free_bpe(&self, cfg: &SwitchConfig) -> u64 {
+        cfg.bpe_mem.unwrap_or(0).saturating_sub(self.bpe_reserved)
+    }
+
+    /// Bytes an elastic-reclaim pass could free from idle scalar
+    /// quota tenants (shrinking each to the minimum viable share).
+    pub(crate) fn reclaimable_fpe(&self, cfg: &SwitchConfig) -> u64 {
+        let floor = cfg.min_fpe_share(1);
+        self.tenants
+            .values()
+            .filter(|t| t.idle && t.lanes == 1 && t.quota.is_some())
+            .map(|t| t.fpe_share.saturating_sub(floor))
+            .sum()
+    }
+
+    /// Admit a new tenant against the ledger.  Validates the quota
+    /// (zero-capacity rounding, then headroom) before building any
+    /// engine state, so rejection is side-effect free.
+    pub(crate) fn admit(
+        &mut self,
+        cfg: &SwitchConfig,
+        config: TreeConfig,
+        quota: QuotaRequest,
+        lanes: usize,
+        weight: u64,
+    ) -> Result<(), AdmissionError> {
+        let tree = config.tree;
+        if self.tenants.contains_key(&tree) {
+            return Err(AdmissionError::AlreadyAdmitted { tree });
+        }
+        let min = cfg.min_fpe_share(lanes);
+        if quota.fpe_bytes < min {
+            return Err(AdmissionError::ZeroCapacity {
+                tree,
+                stage: "FPE",
+                share: quota.fpe_bytes,
+                min,
+            });
+        }
+        let free = self.free_fpe(cfg);
+        if quota.fpe_bytes > free {
+            return Err(AdmissionError::QuotaExhausted {
+                tree,
+                stage: "FPE",
+                requested: quota.fpe_bytes,
+                free,
+                reclaimable: self.reclaimable_fpe(cfg),
+            });
+        }
+        let bpe_share = cfg.bpe_mem.map(|_| quota.bpe_bytes);
+        if let Some(share) = bpe_share {
+            if share < min {
+                return Err(AdmissionError::ZeroCapacity {
+                    tree,
+                    stage: "BPE",
+                    share,
+                    min,
+                });
+            }
+            let free = self.free_bpe(cfg);
+            if share > free {
+                return Err(AdmissionError::QuotaExhausted {
+                    tree,
+                    stage: "BPE",
+                    requested: share,
+                    free,
+                    reclaimable: 0,
+                });
+            }
+        }
+        let engine = TreeEngine::new(
+            cfg,
+            config.op,
+            config.children,
+            quota.fpe_bytes,
+            bpe_share,
+            lanes,
+        );
+        self.fpe_reserved += quota.fpe_bytes;
+        self.bpe_reserved += bpe_share.unwrap_or(0);
+        self.tenants.insert(
+            tree,
+            Tenant {
+                config,
+                engine,
+                lanes,
+                quota: Some(quota),
+                weight: weight.max(1),
+                idle: false,
+                fpe_share: quota.fpe_bytes,
+                bpe_share,
+            },
+        );
+        Ok(())
+    }
+
+    /// Shrink idle scalar quota tenants (never `protect`) toward the
+    /// minimum viable share until the requested headroom exists or
+    /// nothing reclaimable remains.  Returns each shrunken tenant's
+    /// drained residents for software merge.
+    pub(crate) fn reclaim(
+        &mut self,
+        cfg: &SwitchConfig,
+        need_fpe: u64,
+        need_bpe: u64,
+        protect: TreeId,
+    ) -> Vec<(TreeId, Vec<KvPair>)> {
+        let floor = cfg.min_fpe_share(1);
+        let mut spilled = Vec::new();
+        let ids: Vec<TreeId> = self.tenants.keys().copied().collect();
+        for id in ids {
+            if self.free_fpe(cfg) >= need_fpe && self.free_bpe(cfg) >= need_bpe {
+                break;
+            }
+            if id == protect {
+                continue;
+            }
+            let t = self.tenants.get_mut(&id).unwrap();
+            if !t.idle || t.lanes != 1 || t.quota.is_none() {
+                continue;
+            }
+            let new_fpe = floor.min(t.fpe_share);
+            let new_bpe = t.bpe_share.map(|s| floor.min(s));
+            if new_fpe == t.fpe_share && new_bpe == t.bpe_share {
+                continue;
+            }
+            let mut out = Vec::new();
+            t.engine.resize_to(cfg, new_fpe, new_bpe, &mut out);
+            self.fpe_reserved -= t.fpe_share - new_fpe;
+            if let (Some(old), Some(new)) = (t.bpe_share, new_bpe) {
+                self.bpe_reserved -= old - new;
+            }
+            t.fpe_share = new_fpe;
+            t.bpe_share = new_bpe;
+            spilled.push((id, out));
+        }
+        spilled
+    }
+
+    /// Grow a previously reclaimed tenant back toward its quota if the
+    /// ledger now has headroom.  Returns drained residents (normally
+    /// empty: regrow happens between jobs, after a flush) or `None` if
+    /// the tenant is unknown, already at quota, or headroom is
+    /// insufficient.
+    pub(crate) fn regrow(
+        &mut self,
+        cfg: &SwitchConfig,
+        tree: TreeId,
+    ) -> Option<Vec<KvPair>> {
+        let free_fpe = self.free_fpe(cfg);
+        let free_bpe = self.free_bpe(cfg);
+        let t = self.tenants.get_mut(&tree)?;
+        let quota = t.quota?;
+        if t.lanes != 1 {
+            return None;
+        }
+        let want_bpe = t.bpe_share.map(|_| quota.bpe_bytes);
+        let grow_fpe = quota.fpe_bytes.saturating_sub(t.fpe_share);
+        let grow_bpe = want_bpe
+            .zip(t.bpe_share)
+            .map_or(0, |(w, s)| w.saturating_sub(s));
+        if grow_fpe == 0 && grow_bpe == 0 {
+            return None;
+        }
+        if grow_fpe > free_fpe || grow_bpe > free_bpe {
+            return None;
+        }
+        let mut out = Vec::new();
+        t.engine.resize_to(cfg, quota.fpe_bytes, want_bpe, &mut out);
+        self.fpe_reserved += grow_fpe;
+        self.bpe_reserved += grow_bpe;
+        t.fpe_share = quota.fpe_bytes;
+        t.bpe_share = want_bpe;
+        Some(out)
+    }
+
+    /// Remove a tenant, releasing its ledger charge and draining its
+    /// resident aggregation state.  Neighbors are untouched.
+    pub(crate) fn evict(&mut self, tree: TreeId) -> Option<EvictedResidents> {
+        self.release(tree);
+        let mut t = self.tenants.remove(&tree)?;
+        let mut out = EvictedResidents::default();
+        if t.lanes == 1 {
+            t.engine.drain_residents(&mut out.pairs);
+        } else {
+            let mut batch = VectorBatch::new(t.lanes);
+            t.engine.drain_residents_vector(&mut batch);
+            out.vector = Some(batch);
+        }
+        Some(out)
+    }
+
+    pub(crate) fn set_idle(&mut self, tree: TreeId, idle: bool) {
+        if let Some(t) = self.tenants.get_mut(&tree) {
+            t.idle = idle;
+        }
+    }
+
+    pub(crate) fn set_weight(&mut self, tree: TreeId, weight: u64) {
+        if let Some(t) = self.tenants.get_mut(&tree) {
+            t.weight = weight.max(1);
+        }
+    }
+
+    pub(crate) fn weight_of(&self, tree: TreeId) -> u64 {
+        self.tenants.get(&tree).map_or(1, |t| t.weight)
+    }
+
+    /// Sum of active (non-idle) tenants' weights — the denominator for
+    /// weighted credit grants.
+    pub(crate) fn busy_weight(&self) -> u64 {
+        self.tenants
+            .values()
+            .filter(|t| !t.idle)
+            .map(|t| t.weight)
+            .sum()
+    }
+
+    /// Count of active (non-idle) tenants.
+    pub(crate) fn busy_tenants(&self) -> usize {
+        self.tenants.values().filter(|t| !t.idle).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn cfg() -> SwitchConfig {
+        SwitchConfig::scaled(64 << 10, Some(1 << 20))
+    }
+
+    fn tc(id: u32, children: u16) -> TreeConfig {
+        TreeConfig {
+            tree: TreeId(id),
+            op: AggOp::Sum,
+            children,
+            parent_port: 0,
+        }
+    }
+
+    fn pairs(n: u64, distinct: u64, seed: u64) -> Vec<KvPair> {
+        (0..n)
+            .map(|i| {
+                let id = (i * 7 + seed) % distinct;
+                KvPair::new(Key::from_id(id, 16 + (id % 49) as usize), 1)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn admit_charges_and_evict_releases_the_ledger() {
+        let c = cfg();
+        let mut dir = TenantDirectory::new();
+        let q = QuotaRequest::even_split(&c, 4);
+        dir.admit(&c, tc(1, 2), q, 1, 1).unwrap();
+        dir.admit(&c, tc(2, 2), q, 1, 1).unwrap();
+        assert_eq!(dir.free_fpe(&c), c.fpe_total_mem - 2 * q.fpe_bytes);
+        let res = dir.evict(TreeId(1)).unwrap();
+        assert!(res.is_empty(), "fresh engine has no residents");
+        assert_eq!(dir.free_fpe(&c), c.fpe_total_mem - q.fpe_bytes);
+        assert!(!dir.contains(TreeId(1)));
+        assert!(dir.contains(TreeId(2)));
+    }
+
+    #[test]
+    fn double_admission_is_typed() {
+        let c = cfg();
+        let mut dir = TenantDirectory::new();
+        let q = QuotaRequest::even_split(&c, 4);
+        dir.admit(&c, tc(1, 2), q, 1, 1).unwrap();
+        assert_eq!(
+            dir.admit(&c, tc(1, 2), q, 1, 1),
+            Err(AdmissionError::AlreadyAdmitted { tree: TreeId(1) })
+        );
+    }
+
+    #[test]
+    fn oversubscription_is_rejected_with_headroom_report() {
+        let c = cfg();
+        let mut dir = TenantDirectory::new();
+        let q = QuotaRequest::even_split(&c, 2);
+        dir.admit(&c, tc(1, 2), q, 1, 1).unwrap();
+        dir.admit(&c, tc(2, 2), q, 1, 1).unwrap();
+        match dir.admit(&c, tc(3, 2), q, 1, 1) {
+            Err(AdmissionError::QuotaExhausted {
+                stage: "FPE",
+                requested,
+                free,
+                ..
+            }) => {
+                assert_eq!(requested, q.fpe_bytes);
+                assert_eq!(free, 0);
+            }
+            other => panic!("expected FPE QuotaExhausted, got {other:?}"),
+        }
+        // The failed admission left the residents untouched.
+        assert_eq!(dir.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_quota_is_rejected_before_any_state_change() {
+        let c = cfg();
+        let mut dir = TenantDirectory::new();
+        let min = c.min_fpe_share(1);
+        let q = QuotaRequest {
+            fpe_bytes: min - 1,
+            bpe_bytes: 1 << 18,
+        };
+        assert_eq!(
+            dir.admit(&c, tc(1, 2), q, 1, 1),
+            Err(AdmissionError::ZeroCapacity {
+                tree: TreeId(1),
+                stage: "FPE",
+                share: min - 1,
+                min,
+            })
+        );
+        assert_eq!(dir.len(), 0);
+        assert_eq!(dir.free_fpe(&c), c.fpe_total_mem);
+    }
+
+    #[test]
+    fn reclaim_shrinks_idle_tenants_and_spills_their_residents() {
+        let c = cfg();
+        let mut dir = TenantDirectory::new();
+        let big = QuotaRequest::even_split(&c, 2);
+        dir.admit(&c, tc(1, 2), big, 1, 1).unwrap();
+        dir.admit(&c, tc(2, 2), big, 1, 1).unwrap();
+
+        // Park some aggregation state in tenant 1, then idle it.
+        let input = pairs(500, 200, 3);
+        let mut sink = IngestSink::new();
+        dir.engine_mut(TreeId(1))
+            .unwrap()
+            .ingest_pairs(&input, false, 0, &mut sink);
+        let resident = dir.engine(TreeId(1)).unwrap().resident_pairs();
+        assert!(resident > 0, "expected resident pairs before reclaim");
+        dir.set_idle(TreeId(1), true);
+
+        // A third tenant does not fit until tenant 1 is reclaimed.
+        let q = QuotaRequest::even_split(&c, 4).at_least_floor(&c);
+        assert!(matches!(
+            dir.admit(&c, tc(3, 2), q, 1, 1),
+            Err(AdmissionError::QuotaExhausted { .. })
+        ));
+        let spilled = dir.reclaim(&c, q.fpe_bytes, q.bpe_bytes, TreeId(3));
+        assert_eq!(spilled.len(), 1);
+        assert_eq!(spilled[0].0, TreeId(1));
+        dir.admit(&c, tc(3, 2), q, 1, 1).unwrap();
+
+        // Nothing was lost: spilled pairs + still-resident pairs merged
+        // in software equal the tenant's pre-reclaim aggregate.
+        let mut merged: HashMap<Key, Value> = HashMap::new();
+        for p in spilled[0].1.iter() {
+            *merged.entry(p.key).or_insert(0) += p.value;
+        }
+        let mut drained = Vec::new();
+        dir.engine_mut(TreeId(1)).unwrap().drain_residents(&mut drained);
+        for p in &drained {
+            *merged.entry(p.key).or_insert(0) += p.value;
+        }
+        for p in &sink.forwarded {
+            *merged.entry(p.key).or_insert(0) += p.value;
+        }
+        let mut expect: HashMap<Key, Value> = HashMap::new();
+        for p in &input {
+            *expect.entry(p.key).or_insert(0) += p.value;
+        }
+        assert_eq!(merged, expect, "reclaim must never lose or corrupt pairs");
+    }
+
+    #[test]
+    fn regrow_restores_quota_when_headroom_returns() {
+        let c = cfg();
+        let mut dir = TenantDirectory::new();
+        let big = QuotaRequest::even_split(&c, 2);
+        dir.admit(&c, tc(1, 2), big, 1, 1).unwrap();
+        dir.set_idle(TreeId(1), true);
+        let shrunk = dir.reclaim(&c, c.fpe_total_mem, 0, TreeId(99));
+        assert_eq!(shrunk.len(), 1);
+        let floor = c.min_fpe_share(1);
+        assert_eq!(dir.get(TreeId(1)).unwrap().fpe_share, floor);
+        let residents = dir.regrow(&c, TreeId(1)).unwrap();
+        assert!(residents.is_empty());
+        assert_eq!(dir.get(TreeId(1)).unwrap().fpe_share, big.fpe_bytes);
+        assert_eq!(dir.free_fpe(&c), c.fpe_total_mem - big.fpe_bytes);
+        // Already at quota: a second regrow is a no-op.
+        assert!(dir.regrow(&c, TreeId(1)).is_none());
+    }
+
+    #[test]
+    fn reclaim_skips_busy_protected_and_vector_tenants() {
+        let c = cfg();
+        let mut dir = TenantDirectory::new();
+        let q = QuotaRequest::even_split(&c, 4);
+        dir.admit(&c, tc(1, 2), q, 1, 1).unwrap(); // stays busy
+        dir.admit(&c, tc(2, 2), q, 8, 1).unwrap(); // vector, idle
+        dir.admit(&c, tc(3, 2), q, 1, 1).unwrap(); // protected, idle
+        dir.set_idle(TreeId(2), true);
+        dir.set_idle(TreeId(3), true);
+        let spilled = dir.reclaim(&c, c.fpe_total_mem, 0, TreeId(3));
+        assert!(spilled.is_empty(), "no eligible tenant to reclaim");
+        for id in [1u32, 2, 3] {
+            assert_eq!(dir.get(TreeId(id)).unwrap().fpe_share, q.fpe_bytes);
+        }
+    }
+
+    #[test]
+    fn resize_preserves_engine_counters() {
+        let c = cfg();
+        let mut dir = TenantDirectory::new();
+        dir.admit(&c, tc(1, 2), QuotaRequest::full(&c), 1, 1).unwrap();
+        let input = pairs(300, 120, 9);
+        let mut sink = IngestSink::new();
+        dir.engine_mut(TreeId(1))
+            .unwrap()
+            .ingest_pairs(&input, false, 0, &mut sink);
+        let before = format!("{:?}", dir.engine(TreeId(1)).unwrap().stats);
+        let mut out = Vec::new();
+        dir.engine_mut(TreeId(1)).unwrap().resize_to(
+            &c,
+            c.min_fpe_share(1),
+            c.bpe_mem.map(|_| c.min_fpe_share(1)),
+            &mut out,
+        );
+        let after = format!("{:?}", dir.engine(TreeId(1)).unwrap().stats);
+        assert_eq!(before, after, "resize must not perturb cumulative stats");
+        assert!(!out.is_empty());
+    }
+}

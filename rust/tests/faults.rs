@@ -24,9 +24,11 @@ use switchagg::framework::transport::{run_transport_scalar, run_transport_vector
 use switchagg::framework::Reducer;
 use switchagg::net::FaultPlan;
 use switchagg::protocol::{
-    AggOp, Key, KvPair, TreeConfig, TreeId, Value, VectorBatch,
+    AggOp, AggregationPacket, Key, KvPair, RelHeader, TreeConfig, TreeId, Value, VectorBatch,
 };
-use switchagg::switch::{Parallelism, SwitchAggSwitch, SwitchConfig};
+use switchagg::switch::{
+    IngestSink, Parallelism, QuotaRequest, SwitchAggSwitch, SwitchConfig,
+};
 use switchagg::util::rng::Pcg32;
 
 fn switch_cfg(par: Parallelism) -> SwitchConfig {
@@ -278,4 +280,154 @@ fn dead_mapper_under_k_of_n_quorum_is_replanned_out_exactly() {
         merged_streams(&declared),
         "k-of-n totals must match the *declared* membership exactly"
     );
+}
+
+// --- Chaos × tenancy -------------------------------------------------
+
+/// Stamp a pre-packed run with rel headers for `(child, epoch)`.
+fn stamped(tree: TreeId, stream: &[KvPair], child: u16, epoch: u16) -> Vec<AggregationPacket> {
+    let mut v = AggregationPacket::pack_stream(tree, AggOp::Sum, stream, true);
+    for (i, p) in v.iter_mut().enumerate() {
+        p.rel = Some(RelHeader {
+            child,
+            epoch,
+            seq: i as u32 + 1,
+        });
+    }
+    v
+}
+
+fn tenant_quota(cfg: &SwitchConfig, n: usize) -> QuotaRequest {
+    QuotaRequest {
+        fpe_bytes: (cfg.fpe_total_mem / n as u64).max(cfg.min_fpe_share(1)),
+        bpe_bytes: cfg.bpe_mem.unwrap_or(0) / n as u64,
+    }
+}
+
+/// A switch crash mid-way through a *multi-tenant* run: every
+/// surviving tenant is re-admitted under a bumped epoch, pre-crash
+/// stragglers are fenced (stale-epoch drops, not double counting), and
+/// each survivor's replayed job lands on the byte-identical output of
+/// its fault-free run.  A tenant that departs during the outage is NOT
+/// re-admitted: its straggler is a counted unconfigured drop, never a
+/// panic.
+#[test]
+fn multi_tenant_crash_recovery_fences_every_surviving_tenant() {
+    let scfg = switch_cfg(Parallelism::Serial);
+    let q = tenant_quota(&scfg, 4);
+    let trees = [TreeId(1), TreeId(2), TreeId(3)];
+    let streams: Vec<Vec<Vec<KvPair>>> = (0..trees.len())
+        .map(|t| scalar_streams(2, 400, 0x90 + t as u64))
+        .collect();
+    let admit_all = |sw: &mut SwitchAggSwitch| {
+        for (t, &tree) in trees.iter().enumerate() {
+            sw.admit_tree(
+                TreeConfig {
+                    tree,
+                    children: 2,
+                    parent_port: 0,
+                    op: AggOp::Sum,
+                },
+                q,
+                1,
+            )
+            .unwrap_or_else(|e| panic!("tenant {t}: {e}"));
+        }
+    };
+    let run_tenant = |sw: &mut SwitchAggSwitch, tree: TreeId, ss: &[Vec<KvPair>], epoch: u16| {
+        let mut sink = IngestSink::new();
+        let pkts: Vec<Vec<AggregationPacket>> = ss
+            .iter()
+            .enumerate()
+            .map(|(c, s)| stamped(tree, s, c as u16, epoch))
+            .collect();
+        let longest = pkts.iter().map(|v| v.len()).max().unwrap_or(0);
+        for i in 0..longest {
+            for child in &pkts {
+                if let Some(p) = child.get(i) {
+                    sw.ingest_reliable_one(tree, p, &mut sink);
+                }
+            }
+        }
+        assert_eq!(sink.flushes, 1);
+        sw.finalize(tree);
+        sink
+    };
+
+    // Fault-free baseline: each tenant's exact emitted streams.
+    let mut base_sw = SwitchAggSwitch::new(scfg.clone());
+    admit_all(&mut base_sw);
+    let baseline: Vec<IngestSink> = trees
+        .iter()
+        .enumerate()
+        .map(|(t, &tree)| run_tenant(&mut base_sw, tree, &streams[t], 0))
+        .collect();
+
+    // Crash run: every tenant half-ingested when the switch dies.
+    let mut sw = SwitchAggSwitch::new(scfg);
+    admit_all(&mut sw);
+    let mut lost = IngestSink::new();
+    for (t, &tree) in trees.iter().enumerate() {
+        let pkts = stamped(tree, &streams[t][0], 0, 0);
+        for p in &pkts[..pkts.len() / 2] {
+            sw.ingest_reliable_one(tree, p, &mut lost);
+        }
+    }
+    sw.crash();
+
+    // Recovery: tenants 1 and 2 survive (re-admitted, epoch bumped);
+    // tenant 3 departed during the outage and is not re-admitted.
+    for (t, &tree) in trees.iter().enumerate().take(2) {
+        sw.admit_tree(
+            TreeConfig {
+                tree,
+                children: 2,
+                parent_port: 0,
+                op: AggOp::Sum,
+            },
+            q,
+            1,
+        )
+        .unwrap_or_else(|e| panic!("re-admit {t}: {e}"));
+        sw.begin_epoch(tree, 1);
+    }
+
+    // Pre-crash stragglers arrive for everyone: fenced for survivors
+    // (stale epoch), a counted drop for the departed tenant.
+    let mut straggler_sink = IngestSink::new();
+    for (t, &tree) in trees.iter().enumerate() {
+        let pkts = stamped(tree, &streams[t][0], 0, 0);
+        sw.ingest_reliable_one(tree, &pkts[0], &mut straggler_sink);
+    }
+    assert!(straggler_sink.forwarded.is_empty() && straggler_sink.flushed.is_empty());
+    for &tree in &trees[..2] {
+        assert_eq!(
+            sw.dedup_stats(tree).stale_epoch_drops,
+            1,
+            "{tree}: pre-crash straggler must be epoch-fenced"
+        );
+    }
+    assert_eq!(
+        sw.unconfigured_drops(trees[2]),
+        1,
+        "the departed tenant's straggler is a counted drop, not a panic"
+    );
+
+    // Replay from seq 1 under the new epoch: byte-identical outputs.
+    for (t, &tree) in trees.iter().enumerate().take(2) {
+        let sink = run_tenant(&mut sw, tree, &streams[t], 1);
+        assert_eq!(
+            sink.forwarded, baseline[t].forwarded,
+            "{tree}: replayed stream-phase output"
+        );
+        assert_eq!(
+            sink.flushed, baseline[t].flushed,
+            "{tree}: replayed flush output"
+        );
+        assert_eq!(
+            merged(&sink.flushed),
+            merged_streams(&streams[t]),
+            "{tree}: recovered totals"
+        );
+    }
 }

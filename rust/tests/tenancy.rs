@@ -1,0 +1,408 @@
+//! Incremental reconfiguration under tenant churn — the multi-tenant
+//! tentpole's differential contract:
+//!
+//! A resident tenant's aggregation must be **byte-identical** to a
+//! solo run of the same tenant while neighbor trees are admitted,
+//! ingested into, idled, reclaimed, and evicted around it.  Identical
+//! means the strongest observable form: the exact emitted pair
+//! sequences (stream order and flush order, not just the merged
+//! totals), the full `SwitchStats` debug state, the dedup-window
+//! stats, and the epoch register — across two epoch-fenced jobs with a
+//! stale-epoch straggler pinned in both runs.
+//!
+//! Swept over the serial and sharded execution engines × lane widths
+//! W ∈ {1, 8} (scalar resident and vector resident; churn neighbors
+//! stay scalar, which also pins scalar/vector tenant coexistence).
+
+use std::collections::BTreeMap;
+use switchagg::protocol::{
+    AggOp, AggregationPacket, Key, KvPair, RelHeader, TreeConfig, TreeId,
+    VectorAggregationPacket, VectorBatch, VectorChunks,
+};
+use switchagg::switch::{
+    IngestSink, Parallelism, QuotaRequest, SwitchAggSwitch, SwitchConfig, VectorSink,
+};
+use switchagg::util::rng::Pcg32;
+
+const RESIDENT: TreeId = TreeId(1);
+
+/// Sequence-stamp a packet run (the crate-private `reliable::stamp`,
+/// restated for this out-of-crate test).
+fn stamp<P>(pkts: &mut [P], child: u16, epoch: u16, set: impl Fn(&mut P, RelHeader)) {
+    for (i, p) in pkts.iter_mut().enumerate() {
+        set(
+            p,
+            RelHeader {
+                child,
+                epoch,
+                seq: i as u32 + 1,
+            },
+        );
+    }
+}
+
+fn switch_cfg(par: Parallelism) -> SwitchConfig {
+    SwitchConfig {
+        parallelism: par,
+        ..SwitchConfig::scaled(32 << 10, Some(512 << 10))
+    }
+}
+
+fn tc(id: u32, children: u16) -> TreeConfig {
+    TreeConfig {
+        tree: TreeId(id),
+        children,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }
+}
+
+fn resident_quota(cfg: &SwitchConfig, lanes: usize) -> QuotaRequest {
+    QuotaRequest {
+        fpe_bytes: (cfg.fpe_total_mem / 4).max(cfg.min_fpe_share(lanes)),
+        bpe_bytes: cfg.bpe_mem.unwrap_or(0) / 4,
+    }
+}
+
+fn neighbor_quota(cfg: &SwitchConfig) -> QuotaRequest {
+    QuotaRequest {
+        fpe_bytes: (cfg.fpe_total_mem / 16).max(cfg.min_fpe_share(1)),
+        bpe_bytes: cfg.bpe_mem.unwrap_or(0) / 16,
+    }
+}
+
+fn random_pairs(rng: &mut Pcg32, n: usize, variety: u64) -> Vec<KvPair> {
+    (0..n)
+        .map(|_| {
+            let id = rng.gen_range_u64(variety);
+            KvPair::new(
+                Key::from_id(id, 16 + (id % 49) as usize),
+                rng.gen_range_u64(200) as i64 - 100,
+            )
+        })
+        .collect()
+}
+
+/// Resident job: per-child scalar packets for epoch `epoch`, stamped.
+fn scalar_job(children: u16, epoch: u16, seed: u64) -> Vec<Vec<AggregationPacket>> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|c| {
+            let stream = random_pairs(&mut rng, 300, 80);
+            let mut v = AggregationPacket::pack_stream(RESIDENT, AggOp::Sum, &stream, true);
+            stamp(&mut v, c, epoch, |p, rel| p.rel = Some(rel));
+            v
+        })
+        .collect()
+}
+
+fn vector_job(children: u16, lanes: usize, epoch: u16, seed: u64) -> Vec<Vec<VectorAggregationPacket>> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|c| {
+            let mut batch = VectorBatch::new(lanes);
+            let mut vals = vec![0i64; lanes];
+            for _ in 0..300 {
+                let id = rng.gen_range_u64(80);
+                for (l, v) in vals.iter_mut().enumerate() {
+                    *v = (id % 17) as i64 + l as i64 - 8;
+                }
+                batch.push(Key::from_id(id, 16 + (id % 49) as usize), &vals);
+            }
+            let mut out = Vec::new();
+            let mut chunks = VectorChunks::new(&batch);
+            while let Some((range, last)) = chunks.next_chunk() {
+                out.push(VectorAggregationPacket {
+                    tree: RESIDENT,
+                    op: AggOp::Sum,
+                    eot: last,
+                    rel: None,
+                    batch: batch.sub_batch(range),
+                });
+            }
+            stamp(&mut out, c, epoch, |p, rel| p.rel = Some(rel));
+            out
+        })
+        .collect()
+}
+
+/// Flatten per-child packet lists into the round-robin ingest order
+/// both runs share.
+fn round_robin<P: Clone>(pkts: &[Vec<P>]) -> Vec<P> {
+    let mut out = Vec::new();
+    let longest = pkts.iter().map(|v| v.len()).max().unwrap_or(0);
+    for i in 0..longest {
+        for child in pkts {
+            if let Some(p) = child.get(i) {
+                out.push(p.clone());
+            }
+        }
+    }
+    out
+}
+
+/// Random neighbor churn around the resident: admissions (some over
+/// quota → typed rejection or elastic reclaim of idled neighbors),
+/// scalar ingest into live neighbors, idling, eviction.  Entirely
+/// driven by `rng`, so solo-vs-churn runs differ *only* in whether
+/// this is called.
+struct Churn {
+    rng: Pcg32,
+    next_id: u32,
+    live: Vec<TreeId>,
+    pkts: BTreeMap<TreeId, (Vec<AggregationPacket>, usize)>,
+    sinks: BTreeMap<TreeId, IngestSink>,
+    admitted: u32,
+    rejected: u32,
+    evicted: u32,
+}
+
+impl Churn {
+    fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg32::new(seed),
+            next_id: 100,
+            live: Vec::new(),
+            pkts: BTreeMap::new(),
+            sinks: BTreeMap::new(),
+            admitted: 0,
+            rejected: 0,
+            evicted: 0,
+        }
+    }
+
+    fn cycle(&mut self, sw: &mut SwitchAggSwitch) {
+        for _ in 0..3 {
+            match self.rng.gen_range_u64(4) {
+                0 => self.admit(sw),
+                1 => self.ingest_one(sw),
+                2 => self.evict(sw),
+                _ => self.idle_one(sw),
+            }
+        }
+    }
+
+    fn admit(&mut self, sw: &mut SwitchAggSwitch) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let children = 1 + (self.rng.gen_range_u64(3) as u16);
+        let q = neighbor_quota(sw.config());
+        let tree = TreeId(id);
+        // `Ok` alone is not residency: the reclaim path may shrink
+        // neighbors yet still fail admission (degraded Ok).
+        let _ = sw.admit_tree_or_reclaim(tc(id, children), q, 1);
+        if sw.stats(tree).is_none() {
+            self.rejected += 1;
+            return;
+        }
+        self.admitted += 1;
+        let stream = random_pairs(&mut self.rng, 40, 24);
+        let mut v = AggregationPacket::pack_stream(tree, AggOp::Sum, &stream, true);
+        stamp(&mut v, 0, 0, |p, rel| p.rel = Some(rel));
+        self.live.push(tree);
+        self.pkts.insert(tree, (v, 0));
+        self.sinks.insert(tree, IngestSink::new());
+    }
+
+    fn ingest_one(&mut self, sw: &mut SwitchAggSwitch) {
+        if self.live.is_empty() {
+            return;
+        }
+        let tree = self.live[self.rng.gen_range_u64(self.live.len() as u64) as usize];
+        let (pkts, at) = self.pkts.get_mut(&tree).expect("live neighbor packets");
+        if *at >= pkts.len() {
+            return;
+        }
+        let sink = self.sinks.get_mut(&tree).expect("live neighbor sink");
+        sw.ingest_reliable_one(tree, &pkts[*at], sink);
+        *at += 1;
+    }
+
+    fn evict(&mut self, sw: &mut SwitchAggSwitch) {
+        if self.live.is_empty() {
+            return;
+        }
+        let i = self.rng.gen_range_u64(self.live.len() as u64) as usize;
+        let tree = self.live.swap_remove(i);
+        assert!(sw.evict_tree(tree).is_some(), "evicting a live neighbor");
+        self.pkts.remove(&tree);
+        self.sinks.remove(&tree);
+        self.evicted += 1;
+    }
+
+    fn idle_one(&mut self, sw: &mut SwitchAggSwitch) {
+        if self.live.is_empty() {
+            return;
+        }
+        let tree = self.live[self.rng.gen_range_u64(self.live.len() as u64) as usize];
+        sw.set_tenant_idle(tree, true);
+    }
+}
+
+/// Everything the resident exposes, in its strongest comparable form.
+#[derive(Debug, PartialEq)]
+struct ResidentSnapshot {
+    forwarded: Vec<KvPair>,
+    flushed_a: Vec<KvPair>,
+    flushed_b: Vec<KvPair>,
+    stats: String,
+    dedup: String,
+}
+
+/// Drive the scalar resident through two epoch-fenced jobs (plus one
+/// stale-epoch straggler), optionally churning neighbors between every
+/// resident packet.
+fn scalar_resident_run(par: Parallelism, churn: bool) -> ResidentSnapshot {
+    let cfg = switch_cfg(par);
+    let q = resident_quota(&cfg, 1);
+    let mut sw = SwitchAggSwitch::new(cfg);
+    sw.admit_tree(tc(1, 2), q, 8).expect("resident admission");
+    sw.set_tenant_idle(RESIDENT, false);
+    let mut churner = Churn::new(0xC1C1);
+
+    let job_a = round_robin(&scalar_job(2, 0, 0xA11CE));
+    let job_b = round_robin(&scalar_job(2, 1, 0xB0B));
+    let mut sink = IngestSink::new();
+
+    for pkt in &job_a {
+        sw.ingest_reliable_one(RESIDENT, pkt, &mut sink);
+        if churn {
+            churner.cycle(&mut sw);
+        }
+    }
+    assert_eq!(sink.flushes, 1);
+    sw.finalize(RESIDENT);
+    let forwarded = sink.forwarded.clone();
+    let flushed_a = sink.flushed.clone();
+    sink.clear();
+
+    // Job B behind an epoch fence; replay one job-A packet as a stale
+    // straggler — it must be dropped and counted in BOTH runs.
+    sw.begin_epoch(RESIDENT, 1);
+    sw.ingest_reliable_one(RESIDENT, &job_a[0], &mut sink);
+    for pkt in &job_b {
+        sw.ingest_reliable_one(RESIDENT, pkt, &mut sink);
+        if churn {
+            churner.cycle(&mut sw);
+        }
+    }
+    assert_eq!(sink.flushes, 1);
+    sw.finalize(RESIDENT);
+
+    if churn {
+        assert!(churner.admitted >= 5, "churn actually churned: {}", churner.admitted);
+        assert!(churner.evicted >= 2, "churn actually evicted: {}", churner.evicted);
+    }
+    let dedup = sw.dedup_stats(RESIDENT);
+    assert_eq!(dedup.stale_epoch_drops, 1, "the straggler was fenced");
+    ResidentSnapshot {
+        forwarded: {
+            let mut f = forwarded;
+            f.extend_from_slice(&sink.forwarded);
+            f
+        },
+        flushed_a,
+        flushed_b: sink.flushed.clone(),
+        stats: format!("{:?}", sw.stats(RESIDENT).expect("resident stats")),
+        dedup: format!("{:?}", dedup),
+    }
+}
+
+/// The W-lane counterpart: vector resident, scalar churn neighbors.
+fn vector_resident_run(par: Parallelism, lanes: usize, churn: bool) -> (VectorBatch, VectorBatch, String, String) {
+    let cfg = switch_cfg(par);
+    let q = resident_quota(&cfg, lanes);
+    let mut sw = SwitchAggSwitch::new(cfg);
+    sw.admit_tree_lanes(tc(1, 2), q, 8, lanes).expect("resident admission");
+    sw.set_tenant_idle(RESIDENT, false);
+    let mut churner = Churn::new(0xC2C2);
+
+    let job = round_robin(&vector_job(2, lanes, 0, 0xFEED));
+    let mut sink = VectorSink::new(lanes);
+    for pkt in &job {
+        sw.ingest_vector_reliable_one(RESIDENT, pkt, &mut sink);
+        if churn {
+            churner.cycle(&mut sw);
+        }
+    }
+    assert_eq!(sink.flushes, 1);
+    sw.finalize(RESIDENT);
+    if churn {
+        assert!(churner.admitted >= 5, "churn actually churned: {}", churner.admitted);
+    }
+    (
+        sink.forwarded.clone(),
+        sink.flushed.clone(),
+        format!("{:?}", sw.stats(RESIDENT).expect("resident stats")),
+        format!("{:?}", sw.dedup_stats(RESIDENT)),
+    )
+}
+
+/// The tentpole differential: solo == churned, byte for byte, on both
+/// engines.
+#[test]
+fn scalar_resident_is_byte_identical_across_neighbor_churn() {
+    for par in [Parallelism::Serial, Parallelism::Sharded(4)] {
+        let solo = scalar_resident_run(par, false);
+        let churned = scalar_resident_run(par, true);
+        assert_eq!(
+            solo, churned,
+            "{par:?}: churn perturbed the resident's state"
+        );
+    }
+}
+
+/// And the W = 8 vector resident, with scalar neighbors churning.
+#[test]
+fn vector_resident_is_byte_identical_across_neighbor_churn() {
+    for par in [Parallelism::Serial, Parallelism::Sharded(4)] {
+        let solo = vector_resident_run(par, 8, false);
+        let churned = vector_resident_run(par, 8, true);
+        assert_eq!(
+            solo, churned,
+            "{par:?}: churn perturbed the vector resident's state"
+        );
+    }
+}
+
+/// The same switch state is reached no matter the engine: the solo
+/// snapshots of Serial and Sharded runs agree (stats carry engine-
+/// invariant counters only by contract — pinned here for tenants).
+#[test]
+fn resident_snapshot_is_engine_invariant() {
+    let a = scalar_resident_run(Parallelism::Serial, true);
+    let b = scalar_resident_run(Parallelism::Sharded(4), true);
+    assert_eq!(a.forwarded, b.forwarded);
+    assert_eq!(a.flushed_a, b.flushed_a);
+    assert_eq!(a.flushed_b, b.flushed_b);
+    assert_eq!(a.dedup, b.dedup);
+}
+
+/// Admission after eviction reuses the id with a clean slate: the
+/// second incarnation of a tree id sees no dedup ghosts.
+#[test]
+fn readmission_starts_with_a_clean_dedup_window() {
+    let cfg = switch_cfg(Parallelism::Serial);
+    let q = resident_quota(&cfg, 1);
+    let mut sw = SwitchAggSwitch::new(cfg);
+    sw.admit_tree(tc(1, 1), q, 1).unwrap();
+    let pkts = round_robin(&scalar_job(1, 0, 0x5EED));
+    let mut sink = IngestSink::new();
+    for p in &pkts {
+        sw.ingest_reliable_one(RESIDENT, p, &mut sink);
+    }
+    sw.finalize(RESIDENT);
+    let first = sink.flushed.clone();
+    assert!(sw.evict_tree(RESIDENT).is_some());
+
+    // Same packets, same id, fresh incarnation: everything admitted
+    // anew (a stale window would dedup-drop the whole replay).
+    sw.admit_tree(tc(1, 1), q, 1).unwrap();
+    sink.clear();
+    for p in &pkts {
+        sw.ingest_reliable_one(RESIDENT, p, &mut sink);
+    }
+    sw.finalize(RESIDENT);
+    assert_eq!(sink.flushes, 1);
+    assert_eq!(sink.flushed, first, "the re-admitted tenant reruns the job exactly");
+}
