@@ -1,0 +1,114 @@
+//! Integrity-driver benchmarks (EXPERIMENTS.md §Integrity &
+//! corruption): what end-to-end protection costs.  Three structural
+//! claims under test: (1) the CRC-on zero-corruption session costs
+//! only the trailer arithmetic over the legacy transport driver — the
+//! clean-delivery path never decodes, so throughput tracks
+//! `BENCH_transport.json`; (2) under wire corruption the cost is the
+//! retransmitted packets plus one decode per flipped delivery, so
+//! items/s degrades with the flip rate, not with a per-packet
+//! verification tax; (3) the audit-recovery path (SRAM flip → scrub →
+//! epoch-fenced re-run) is dominated by the replayed ingress, like a
+//! crash restart.  Items = transport packets put on the wire (data
+//! first-tx + retransmissions, both hops), comparable against
+//! `BENCH_transport.json` and `BENCH_faults.json`.  Results land in
+//! `BENCH_integrity.json` (override with
+//! `SWITCHAGG_BENCH_INTEGRITY_JSON`).
+
+use switchagg::framework::integrity::{run_integrity_scalar, IntegrityConfig};
+use switchagg::framework::transport::{run_transport_scalar, TransportConfig};
+use switchagg::net::FaultPlan;
+use switchagg::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId};
+use switchagg::switch::{SwitchAggSwitch, SwitchConfig};
+use switchagg::util::bench::{self, JsonLog};
+use switchagg::util::rng::Pcg32;
+
+fn streams(children: usize, pairs: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0x1D);
+            (0..pairs)
+                .map(|_| {
+                    let id = child.gen_range_u64((pairs as u64 / 4).max(64));
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(100) as i64 - 50,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn switch() -> SwitchAggSwitch {
+    let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(32 << 10, Some(8 << 20)));
+    sw.configure(&[TreeConfig {
+        tree: TreeId(1),
+        children: 8,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    sw
+}
+
+fn wire_packets(
+    ingress: &switchagg::framework::transport::NetHopStats,
+    egress: &switchagg::framework::transport::NetHopStats,
+) -> u64 {
+    ingress.first_tx + ingress.retransmissions + egress.first_tx + egress.retransmissions
+}
+
+fn integrity_session(pairs: usize, cfg: &IntegrityConfig) -> u64 {
+    let ss = streams(8, pairs, 0x1D7E);
+    let mut sw = switch();
+    let run = run_integrity_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, cfg);
+    if cfg.crc {
+        assert!(run.exact, "protected run diverged");
+    }
+    wire_packets(&run.ingress, &run.egress)
+}
+
+fn main() {
+    let mut log = JsonLog::new();
+    let pairs = 4_000usize;
+
+    bench::section("zero-corruption overhead (CRC trailer vs legacy transport)");
+    log.push(&bench::run("legacy transport 8x", 1, 5, move || {
+        let ss = streams(8, pairs, 0x1D7E);
+        let mut sw = switch();
+        let run =
+            run_transport_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &TransportConfig::default());
+        wire_packets(&run.ingress, &run.egress)
+    }));
+    let clean = IntegrityConfig::default();
+    log.push(&bench::run("crc clean wire 8x", 1, 5, move || {
+        integrity_session(pairs, &clean)
+    }));
+
+    bench::section("detection & recovery cost");
+    let corrupt = IntegrityConfig::corrupting(1e-2, 0x1D7E);
+    log.push(&bench::run("crc corrupt 1e-2 8x", 1, 5, move || {
+        integrity_session(pairs, &corrupt)
+    }));
+    let legacy_corrupt = IntegrityConfig::corrupting(1e-2, 0x1D7E).with_crc(false);
+    log.push(&bench::run("legacy corrupt 1e-2 8x", 1, 5, move || {
+        integrity_session(pairs, &legacy_corrupt)
+    }));
+    let base_jct = {
+        let ss = streams(8, pairs, 0x1D7E);
+        let mut sw = switch();
+        run_integrity_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &IntegrityConfig::default())
+            .jct_s
+    };
+    let sram = IntegrityConfig::default()
+        .with_plan(FaultPlan::none().with_sram_flip(base_jct * 0.25, 0x1D7E));
+    log.push(&bench::run("audit recovery (sram flip) 8x", 1, 5, move || {
+        integrity_session(pairs, &sram)
+    }));
+
+    let path = std::env::var("SWITCHAGG_BENCH_INTEGRITY_JSON")
+        .unwrap_or_else(|_| "BENCH_integrity.json".to_string());
+    if let Err(e) = log.write(&path) {
+        eprintln!("could not write bench log {path}: {e}");
+    }
+}

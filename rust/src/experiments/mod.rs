@@ -19,6 +19,7 @@ pub mod sec7;
 pub mod sec_allreduce;
 pub mod sec_faults;
 pub mod sec_incast;
+pub mod sec_integrity;
 pub mod sec_loss;
 pub mod sec_tenancy;
 pub mod table2;

@@ -1,0 +1,1016 @@
+//! End-to-end data-integrity co-simulation: the event-driven transport
+//! of `framework::transport` with *byte-level* wire corruption, CRC
+//! verification at every receiver, switch-SRAM fault injection, and
+//! audited recovery.
+//!
+//! `NetSim` models packet *lengths*, not payload bytes, so corruption
+//! is a two-part contract: the loss channel marks a delivery with a
+//! flip seed (`Delivery::corrupt`, drawn only when `corrupt_p > 0`),
+//! and this driver applies [`flip_bit`] to its own encoded copy of the
+//! packet at delivery time, then runs the real decoder on the damaged
+//! bytes.  What happens next depends on [`IntegrityConfig::crc`]:
+//!
+//! * **CRC on** — data and ack packets carry the CRC32C trailer
+//!   ([`Packet::encode_integrity`]); every single-bit flip fails
+//!   decode, the receiver drops the packet before admission (counted
+//!   `corrupt_drops` / `acks_corrupt_dropped`), and the reliable
+//!   layer's retransmission redelivers the payload.  The final
+//!   aggregate is byte-identical to the corruption-free run — the
+//!   price is retransmissions and JCT.
+//! * **CRC off** — the legacy encoding.  A flip that breaks the frame
+//!   structure still fails decode (detected), and a handful of header
+//!   guards a real receiver can apply for free (tree id, port-vs-rel
+//!   child consistency, epoch) catch a few more; but a flip landing in
+//!   key or value bytes decodes cleanly, passes every guard, and is
+//!   **silently admitted** into the aggregate (`silently_admitted`,
+//!   and ultimately `exact == false`).  This is the measurable failure
+//!   mode the CRC exists to close — `experiments/sec_integrity`
+//!   quantifies it.
+//!
+//! Independently of the wire, a [`FaultPlan`]'s scheduled SRAM flips
+//! poison resident aggregation slots mid-run.  The switch scrubs its
+//! per-region audit digests before admitting any end-of-transmission
+//! signal (flush time — the last moment detection can still help);
+//! a mismatch aborts the hop and the driver answers with the PR 6
+//! recovery: rebuild the tree's engines, fence the old incarnation
+//! with a bumped epoch, and re-run the whole ingress hop on the same
+//! simulated clock, so recovery cost lands in `jct_s`.  The reducer's
+//! re-reduction audit ([`Reducer::audit`]) is the final backstop.
+
+use crate::framework::reducer::Reducer;
+use crate::framework::reliable::{stamp, Endpoint};
+use crate::framework::transport::{
+    apply_session_policy, session_net, tag_child, tag_idx, tag_kind, NetHopStats,
+    TransportConfig, ACK_WIRE_LEN, KIND_EGRESS_ACK, KIND_EGRESS_DATA, KIND_INGRESS_ACK,
+    KIND_INGRESS_DATA,
+};
+use crate::net::faults::FaultPlan;
+use crate::net::loss::{flip_bit, LossConfig};
+use crate::net::netsim::NetSim;
+use crate::net::topology::NodeId;
+use crate::protocol::{
+    AggAckPacket, AggOp, AggregationPacket, KvPair, Packet, TreeConfig, TreeId,
+    VectorAggregationPacket, VectorBatch, VectorChunks,
+};
+use crate::switch::reliability::Admit;
+use crate::switch::{DedupStats, IngestSink, IntegrityError, SwitchAggSwitch, VectorSink};
+use std::collections::HashMap;
+
+/// Parameters of one integrity co-simulation.
+#[derive(Clone, Debug)]
+pub struct IntegrityConfig {
+    /// Transport/loss parameters; the per-link [`LossConfig`]s carry
+    /// the corruption rates (`with_corrupt`).
+    pub transport: TransportConfig,
+    /// Encode data and ack packets with the CRC32C trailer and verify
+    /// at every receiver.  `false` reproduces the legacy wire format —
+    /// and its silent-corruption exposure.
+    pub crc: bool,
+    /// Scheduled faults; only the SRAM flips are consumed here (the
+    /// crash/link faults belong to `framework::chaos`).
+    pub plan: FaultPlan,
+    /// Epoch-fenced re-runs allowed before the driver gives up
+    /// (panics) on a persistently failing audit.
+    pub max_recoveries: u32,
+}
+
+impl Default for IntegrityConfig {
+    fn default() -> Self {
+        Self {
+            transport: TransportConfig::default(),
+            crc: true,
+            plan: FaultPlan::none(),
+            max_recoveries: 3,
+        }
+    }
+}
+
+impl IntegrityConfig {
+    /// Corrupt every link class at rate `p` (independent seeded
+    /// streams per class); `p = 0` is the exact corruption-free
+    /// baseline — no RNG draw anywhere, byte-identical schedule.
+    pub fn corrupting(p: f64, seed: u64) -> Self {
+        let mk = |salt: u64| {
+            if p > 0.0 {
+                LossConfig::corrupt(p, seed ^ salt)
+            } else {
+                LossConfig::lossless()
+            }
+        };
+        Self {
+            transport: TransportConfig {
+                data: mk(0x51),
+                ack: mk(0x52),
+                egress: mk(0x53),
+                ..TransportConfig::default()
+            },
+            ..Self::default()
+        }
+    }
+
+    pub fn with_crc(mut self, on: bool) -> Self {
+        self.crc = on;
+        self
+    }
+
+    pub fn with_plan(mut self, plan: FaultPlan) -> Self {
+        self.plan = plan;
+        self
+    }
+
+    pub fn with_transport(mut self, transport: TransportConfig) -> Self {
+        self.transport = transport;
+        self
+    }
+}
+
+/// Everything one scalar integrity session produces.
+#[derive(Clone, Debug)]
+pub struct IntegrityRun {
+    pub ingress: NetHopStats,
+    pub egress: NetHopStats,
+    pub dedup: DedupStats,
+    /// The stream the reducer admitted, in arrival order.
+    pub received: Vec<KvPair>,
+    /// Simulated instant the egress hop was fully acknowledged.
+    pub jct_s: f64,
+    /// Epoch-fenced ingress re-runs taken after audit failures.
+    pub recoveries: u32,
+    /// SRAM flips actually applied (a scheduled flip is a no-op when
+    /// nothing is resident).
+    pub sram_flips_injected: u64,
+    /// Pre-flush audit scrubs that found poisoned memory (each one
+    /// triggered a recovery).
+    pub audit_failures: u64,
+    /// Corrupted packets that decoded cleanly and passed every header
+    /// guard — admitted with damaged payload (CRC off only; the CRC
+    /// rejects every single-bit flip).
+    pub silently_admitted: u64,
+    /// Flush fallbacks taken because a flipped flags byte destroyed an
+    /// admitted EoT signal (CRC off only).
+    pub forced_flushes: u64,
+    /// Final aggregate equals the software re-reduction of the inputs.
+    pub exact: bool,
+    /// The reducer backstop's verdict (`Ok(keys_checked)` or the first
+    /// typed violation); `exact == reducer_audit.is_ok()`.
+    pub reducer_audit: Result<usize, IntegrityError>,
+}
+
+/// [`IntegrityRun`] for the W-lane vector path (the reducer backstop
+/// is the lane-wise exactness check).
+#[derive(Clone, Debug)]
+pub struct IntegrityVectorRun {
+    pub ingress: NetHopStats,
+    pub egress: NetHopStats,
+    pub dedup: DedupStats,
+    pub received: VectorBatch,
+    pub jct_s: f64,
+    pub recoveries: u32,
+    pub sram_flips_injected: u64,
+    pub audit_failures: u64,
+    pub silently_admitted: u64,
+    pub forced_flushes: u64,
+    pub exact: bool,
+}
+
+/// Receiver verdict for one decoded data delivery.
+enum Verdict {
+    /// Admit (or dedup-reject) happened; send this ack back.
+    Ack(AggAckPacket),
+    /// Guard-detected drop: no ack, the sender's timer recovers.
+    Drop,
+    /// Pre-flush audit scrub failed: abort the hop for recovery.
+    Abort,
+}
+
+struct HopOutcome {
+    stats: NetHopStats,
+    aborted: bool,
+}
+
+/// Incarnation salt lives in the tag bits the transport layout leaves
+/// free (kind(8) | salt(8) | child(16) | idx(32)): an aborted attempt's
+/// in-flight stragglers carry the old salt and are ignored wholesale by
+/// the re-run — without it, a stale ack id could index the fresh
+/// attempt's ack table out of bounds.
+fn tag_salted(kind: u64, salt: u8, child: u16, idx: u32) -> u64 {
+    (kind << 56) | ((salt as u64) << 48) | ((child as u64) << 32) | idx as u64
+}
+
+fn tag_salt(t: u64) -> u8 {
+    (t >> 48) as u8
+}
+
+/// The corruption-aware mirror of `transport::drive_hop`: identical
+/// scheduling (same sends at the same instants for the same delivery
+/// pattern — the zero-corruption CRC-on run is pinned byte-identical
+/// to the legacy driver by `tests/integrity.rs`), plus byte-level
+/// corruption applied at delivery and CRC/guard verification before
+/// admission.  `bufs[c][seq-1]` holds child `c`'s encoded packet for
+/// `seq`; `deliver` receives `Some(decoded)` only for a corrupted
+/// delivery that still decoded (CRC off), `None` for a clean one (the
+/// callee uses its own packet array — no decode on the hot path).
+#[allow(clippy::too_many_arguments)]
+fn drive_hop_corrupt(
+    sim: &mut NetSim,
+    cfg: &TransportConfig,
+    crc: bool,
+    tree: TreeId,
+    salt: u8,
+    lens: &[Vec<u64>],
+    bufs: &[Vec<Vec<u8>>],
+    src: &[NodeId],
+    dst: NodeId,
+    kinds: (u64, u64),
+    mut deliver: impl FnMut(u16, u32, f64, Option<&Packet>) -> Verdict,
+) -> HopOutcome {
+    let (data_kind, ack_kind) = kinds;
+    assert_eq!(lens.len(), src.len());
+    let children = lens.len();
+    let mut senders: Vec<_> = lens.iter().map(|l| cfg.sender_for(l.len())).collect();
+    let mut acks: Vec<AggAckPacket> = Vec::new();
+    let mut ack_bufs: Vec<Vec<u8>> = Vec::new();
+    let mut stats = NetHopStats::default();
+    for l in lens {
+        stats.first_tx_bytes += l.iter().sum::<u64>();
+    }
+    let links_before = sim.link_stats();
+    let events_before = sim.events_processed();
+
+    let mut out_seqs: Vec<u32> = Vec::new();
+    let t0 = sim.now_s();
+    let mut done_s = t0;
+    for c in 0..children {
+        out_seqs.clear();
+        senders[c].poll(t0, &mut out_seqs);
+        for &seq in &out_seqs {
+            let bytes = lens[c][(seq - 1) as usize];
+            stats.wire_bytes += bytes;
+            sim.send_tagged(t0, src[c], dst, bytes, tag_salted(data_kind, salt, c as u16, seq));
+        }
+    }
+
+    let mut aborted = false;
+    let mut steps: u64 = 0;
+    'run: while !senders.iter().all(|s| s.done()) {
+        steps += 1;
+        assert!(
+            steps <= cfg.max_steps,
+            "integrity session did not converge within {} steps",
+            cfg.max_steps
+        );
+        let Some(d) = sim.step_delivery() else {
+            // Drained with streams unfinished: jump to the earliest
+            // retransmission deadline (see transport::drive_hop).
+            let deadline = senders
+                .iter()
+                .filter(|s| !s.done())
+                .filter_map(|s| s.next_retx_deadline())
+                .fold(f64::INFINITY, f64::min);
+            let t = if deadline.is_finite() {
+                deadline.max(sim.now_s())
+            } else {
+                sim.now_s()
+            };
+            let mut sent_any = false;
+            for c in 0..children {
+                if senders[c].done() {
+                    continue;
+                }
+                out_seqs.clear();
+                senders[c].poll(t, &mut out_seqs);
+                for &seq in &out_seqs {
+                    sent_any = true;
+                    let bytes = lens[c][(seq - 1) as usize];
+                    stats.wire_bytes += bytes;
+                    sim.send_tagged(t, src[c], dst, bytes, tag_salted(data_kind, salt, c as u16, seq));
+                }
+            }
+            assert!(sent_any, "integrity transport stalled: idle network, no timers");
+            continue;
+        };
+        let kind = tag_kind(d.tag);
+        if tag_salt(d.tag) != salt {
+            // Straggler from an aborted (pre-recovery) incarnation.
+            continue;
+        }
+        if kind == data_kind && d.node == dst {
+            let child = tag_child(d.tag);
+            let seq = tag_idx(d.tag);
+            let decoded: Option<Packet> = match d.corrupt {
+                None => None,
+                Some(flip_seed) => {
+                    stats.corrupted += 1;
+                    let mut bytes = bufs[child as usize][(seq - 1) as usize].clone();
+                    flip_bit(&mut bytes, flip_seed);
+                    match Packet::decode(&bytes) {
+                        Ok(p) => Some(p),
+                        Err(_) => {
+                            // Detected at ingress (CRC mismatch, or a
+                            // structural decode failure even without
+                            // the trailer): drop before admission.
+                            stats.corrupt_drops += 1;
+                            continue;
+                        }
+                    }
+                }
+            };
+            let was_corrupt = decoded.is_some();
+            match deliver(child, seq, d.time_s, decoded.as_ref()) {
+                Verdict::Ack(ack) => {
+                    let id = u32::try_from(acks.len()).expect("ack id space exhausted");
+                    let pk = Packet::AggAck(ack);
+                    ack_bufs.push(if crc { pk.encode_integrity() } else { pk.encode() });
+                    acks.push(ack);
+                    sim.send_tagged(
+                        d.time_s,
+                        dst,
+                        src[child as usize],
+                        ACK_WIRE_LEN,
+                        tag_salted(ack_kind, salt, child, id),
+                    );
+                }
+                Verdict::Drop => {
+                    if was_corrupt {
+                        stats.corrupt_drops += 1;
+                    }
+                }
+                Verdict::Abort => {
+                    aborted = true;
+                    break 'run;
+                }
+            }
+        } else if kind == ack_kind {
+            let c = tag_child(d.tag) as usize;
+            let id = tag_idx(d.tag) as usize;
+            let ack = match d.corrupt {
+                None => acks[id],
+                Some(flip_seed) => {
+                    let mut bytes = ack_bufs[id].clone();
+                    flip_bit(&mut bytes, flip_seed);
+                    match Packet::decode(&bytes) {
+                        // CRC off: a flipped ack can decode; guard the
+                        // fields a sender can check without trusting
+                        // the payload — origin consistency and an ack
+                        // for a packet that was never sent.
+                        Ok(Packet::AggAck(a))
+                            if a.tree == tree
+                                && a.child == c as u16
+                                && (a.cum_seq as usize) <= lens[c].len() =>
+                        {
+                            a
+                        }
+                        _ => {
+                            stats.acks_corrupt_dropped += 1;
+                            continue;
+                        }
+                    }
+                }
+            };
+            let sender = &mut senders[c];
+            let was_done = sender.done();
+            sender.on_ack(ack.cum_seq, ack.credit, d.time_s);
+            if !was_done && sender.done() {
+                done_s = done_s.max(d.time_s);
+            }
+            out_seqs.clear();
+            sender.poll(d.time_s, &mut out_seqs);
+            for &seq in &out_seqs {
+                let bytes = lens[c][(seq - 1) as usize];
+                stats.wire_bytes += bytes;
+                sim.send_tagged(d.time_s, src[c], dst, bytes, tag_salted(data_kind, salt, c as u16, seq));
+            }
+        }
+        // Any other tag: straggler from a previous hop — drop it.
+    }
+
+    stats.done_s = done_s;
+    let mut srtt_sum = 0.0;
+    let mut srtt_n = 0u32;
+    for s in &senders {
+        stats.first_tx += s.first_tx;
+        stats.retransmissions += s.retransmissions;
+        stats.timeouts += s.timeouts;
+        stats.cwnd_peak = stats.cwnd_peak.max(s.cwnd_peak());
+        if let Some(srtt) = s.rtt().srtt_s() {
+            srtt_sum += srtt;
+            srtt_n += 1;
+        }
+    }
+    if srtt_n > 0 {
+        stats.srtt_mean_s = srtt_sum / srtt_n as f64;
+    }
+    let links_after = sim.link_stats();
+    let delta = |key: (NodeId, NodeId)| -> (u64, u64) {
+        let after = links_after.get(&key).map(|s| (s.dropped, s.duplicated)).unwrap_or((0, 0));
+        let before = links_before.get(&key).map(|s| (s.dropped, s.duplicated)).unwrap_or((0, 0));
+        (after.0 - before.0, after.1 - before.1)
+    };
+    for &s in src {
+        let (drops, dups) = delta((s, dst));
+        stats.drops += drops;
+        stats.dups += dups;
+        stats.acks_dropped += delta((dst, s)).0;
+    }
+    stats.events = sim.events_processed() - events_before;
+    HopOutcome { stats, aborted }
+}
+
+/// Fold one attempt's hop counters into the session total (recovery
+/// re-runs accumulate traffic; completion time and RTT state are those
+/// of the attempt that finished).
+fn accumulate(total: &mut NetHopStats, a: &NetHopStats) {
+    total.first_tx += a.first_tx;
+    total.retransmissions += a.retransmissions;
+    total.timeouts += a.timeouts;
+    total.wire_bytes += a.wire_bytes;
+    total.first_tx_bytes += a.first_tx_bytes;
+    total.drops += a.drops;
+    total.dups += a.dups;
+    total.acks_dropped += a.acks_dropped;
+    total.corrupted += a.corrupted;
+    total.corrupt_drops += a.corrupt_drops;
+    total.acks_corrupt_dropped += a.acks_corrupt_dropped;
+    total.done_s = total.done_s.max(a.done_s);
+    if a.srtt_mean_s > 0.0 {
+        total.srtt_mean_s = a.srtt_mean_s;
+    }
+    total.cwnd_peak = total.cwnd_peak.max(a.cwnd_peak);
+    total.events += a.events;
+}
+
+/// Shared mutable counters of one session (threaded through the per-
+/// attempt closures).
+#[derive(Default)]
+struct Counters {
+    sram_flips_injected: u64,
+    audit_failures: u64,
+    silently_admitted: u64,
+    forced_flushes: u64,
+}
+
+/// Run one corruption-aware scalar session (the integrity counterpart
+/// of `run_transport_scalar`): `streams[c]` is child `c`'s pair
+/// stream; `sw` must already be configured for `tree` with
+/// `children == streams.len()` (scalar, lanes = 1).
+pub fn run_integrity_scalar(
+    sw: &mut SwitchAggSwitch,
+    tree: TreeId,
+    op: AggOp,
+    streams: &[Vec<KvPair>],
+    cfg: &IntegrityConfig,
+) -> IntegrityRun {
+    apply_session_policy(sw, &cfg.transport);
+    let children = streams.len();
+    let (mut sim, hub, mappers, reducer) = session_net(children, &cfg.transport);
+
+    let mut flips: Vec<(f64, u64)> = cfg.plan.sram_flips().to_vec();
+    flips.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut flip_cursor = 0usize;
+    let mut ctr = Counters::default();
+    let mut recoveries: u32 = 0;
+    let mut ingress = NetHopStats::default();
+
+    let encode_pkt = |p: &AggregationPacket| -> Vec<u8> {
+        let pk = Packet::Aggregation(p.clone());
+        if cfg.crc {
+            pk.encode_integrity()
+        } else {
+            pk.encode()
+        }
+    };
+
+    let mut sink = loop {
+        let epoch = sw.tree_epoch(tree);
+        let pkts: Vec<Vec<AggregationPacket>> = streams
+            .iter()
+            .enumerate()
+            .map(|(c, s)| {
+                let mut v = AggregationPacket::pack_stream(tree, op, s, true);
+                stamp(&mut v, c as u16, epoch, |p, rel| p.rel = Some(rel));
+                v
+            })
+            .collect();
+        let bufs: Vec<Vec<Vec<u8>>> =
+            pkts.iter().map(|v| v.iter().map(encode_pkt).collect()).collect();
+        let lens: Vec<Vec<u64>> = pkts
+            .iter()
+            .map(|v| v.iter().map(|p| p.wire_len() as u64).collect())
+            .collect();
+        let mut attempt_sink = IngestSink::new();
+        let outcome = drive_hop_corrupt(
+            &mut sim,
+            &cfg.transport,
+            cfg.crc,
+            tree,
+            recoveries as u8,
+            &lens,
+            &bufs,
+            &mappers,
+            hub,
+            (KIND_INGRESS_DATA, KIND_INGRESS_ACK),
+            |child, seq, now, corrupt_pkt| {
+                // Scheduled SRAM faults fire on the simulated clock.
+                while flip_cursor < flips.len() && now >= flips[flip_cursor].0 {
+                    if sw.inject_sram_flip(tree, flips[flip_cursor].1) {
+                        ctr.sram_flips_injected += 1;
+                    }
+                    flip_cursor += 1;
+                }
+                let owned;
+                let pkt: &AggregationPacket = match corrupt_pkt {
+                    None => &pkts[child as usize][(seq - 1) as usize],
+                    // CRC off: a flipped payload that still decodes.
+                    // Apply the guards a real ingress can check
+                    // against the port it arrived on.
+                    Some(Packet::Aggregation(p)) => {
+                        let Some(rel) = p.rel else { return Verdict::Drop };
+                        if p.tree != tree || rel.child != child || rel.epoch != epoch {
+                            return Verdict::Drop;
+                        }
+                        owned = p.clone();
+                        &owned
+                    }
+                    // The tag byte flipped into another packet kind.
+                    Some(_) => return Verdict::Drop,
+                };
+                let rel = pkt.rel.expect("stamped");
+                if rel.epoch != epoch {
+                    // Clean straggler from a fenced incarnation.
+                    return Verdict::Drop;
+                }
+                if pkt.eot && sw.audit_tree(tree).is_err() {
+                    // Pre-flush scrub: poisoned memory must not reach
+                    // the flush — abort for epoch-fenced recovery.
+                    ctr.audit_failures += 1;
+                    return Verdict::Abort;
+                }
+                if corrupt_pkt.is_some() {
+                    ctr.silently_admitted += 1;
+                }
+                Verdict::Ack(sw.ingest_reliable_one(tree, pkt, &mut attempt_sink))
+            },
+        );
+        for _ in 0..outcome.stats.corrupt_drops {
+            sw.note_corrupt_drop(tree);
+        }
+        accumulate(&mut ingress, &outcome.stats);
+        if !outcome.aborted {
+            break attempt_sink;
+        }
+        recoveries += 1;
+        assert!(
+            recoveries <= cfg.max_recoveries,
+            "audit kept failing after {} epoch-fenced re-runs",
+            cfg.max_recoveries
+        );
+        // PR 6 recovery: rebuild the engines (discarding the poisoned
+        // memory) and fence the old incarnation.
+        sw.configure(&[TreeConfig {
+            tree,
+            children: children as u16,
+            parent_port: 0,
+            op,
+        }]);
+        sw.begin_epoch(tree, epoch + 1);
+    };
+
+    if sink.flushes == 0 {
+        // A flipped flags byte destroyed an admitted EoT (CRC off):
+        // the flush can never fire; drain residents explicitly.
+        ctr.forced_flushes += 1;
+        sw.force_flush(tree, &mut sink);
+    }
+    sw.finalize(tree);
+    let dedup = sw.dedup_stats(tree);
+
+    // Egress hop: the emitted stream rides hub → reducer under the same
+    // protocol (and the same corruption regime on the egress link).
+    let mut egress_pairs = Vec::with_capacity(sink.forwarded.len() + sink.flushed.len());
+    egress_pairs.extend_from_slice(&sink.forwarded);
+    egress_pairs.extend_from_slice(&sink.flushed);
+    let eepoch = sw.tree_epoch(tree);
+    let mut epkts = AggregationPacket::pack_stream(tree, op, &egress_pairs, true);
+    stamp(&mut epkts, 0, eepoch, |p, rel| p.rel = Some(rel));
+    let ebufs = vec![epkts.iter().map(encode_pkt).collect::<Vec<Vec<u8>>>()];
+    let elens = vec![epkts.iter().map(|p| p.wire_len() as u64).collect::<Vec<u64>>()];
+    let mut ep = Endpoint::new(Vec::<KvPair>::new(), cfg.transport.window);
+    let hub_src = [hub];
+    let outcome = drive_hop_corrupt(
+        &mut sim,
+        &cfg.transport,
+        cfg.crc,
+        tree,
+        0,
+        &elens,
+        &ebufs,
+        &hub_src,
+        reducer,
+        (KIND_EGRESS_DATA, KIND_EGRESS_ACK),
+        |child, seq, _now, corrupt_pkt| {
+            let owned;
+            let pkt: &AggregationPacket = match corrupt_pkt {
+                None => &epkts[(seq - 1) as usize],
+                Some(Packet::Aggregation(p)) => {
+                    let Some(rel) = p.rel else { return Verdict::Drop };
+                    if p.tree != tree || rel.child != child || rel.epoch != eepoch {
+                        return Verdict::Drop;
+                    }
+                    owned = p.clone();
+                    &owned
+                }
+                Some(_) => return Verdict::Drop,
+            };
+            let rel = pkt.rel.expect("stamped");
+            if corrupt_pkt.is_some() {
+                ctr.silently_admitted += 1;
+            }
+            if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                ep.received.extend_from_slice(&pkt.pairs);
+            }
+            Verdict::Ack(ep.ack_for(tree, rel.child))
+        },
+    );
+    let egress = outcome.stats;
+    debug_assert!(!outcome.aborted, "the egress closure never aborts");
+
+    // End-to-end verdict: re-reduce the original inputs in software
+    // and hold the delivered aggregate against it, key by key.
+    let reference = Reducer::merge_software(streams, op).table;
+    let merged: HashMap<_, _> =
+        Reducer::merge_software(std::slice::from_ref(&ep.received), op).table;
+    let exact = merged == reference;
+    let offered: u64 = streams.iter().map(|s| s.len() as u64).sum();
+    let reducer_audit = Reducer::audit(streams, &merged, offered, op);
+
+    IntegrityRun {
+        ingress,
+        egress,
+        dedup,
+        received: ep.received,
+        jct_s: egress.done_s,
+        recoveries,
+        sram_flips_injected: ctr.sram_flips_injected,
+        audit_failures: ctr.audit_failures,
+        silently_admitted: ctr.silently_admitted,
+        forced_flushes: ctr.forced_flushes,
+        exact,
+        reducer_audit,
+    }
+}
+
+/// The W-lane vector counterpart of [`run_integrity_scalar`]; `sw`
+/// must be configured via `configure_vector` with the streams' lane
+/// width.
+pub fn run_integrity_vector(
+    sw: &mut SwitchAggSwitch,
+    tree: TreeId,
+    op: AggOp,
+    streams: &[VectorBatch],
+    cfg: &IntegrityConfig,
+) -> IntegrityVectorRun {
+    apply_session_policy(sw, &cfg.transport);
+    let children = streams.len();
+    let lanes = streams.first().map(|b| b.lanes()).unwrap_or(1);
+    let (mut sim, hub, mappers, reducer) = session_net(children, &cfg.transport);
+
+    let mut flips: Vec<(f64, u64)> = cfg.plan.sram_flips().to_vec();
+    flips.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut flip_cursor = 0usize;
+    let mut ctr = Counters::default();
+    let mut recoveries: u32 = 0;
+    let mut ingress = NetHopStats::default();
+
+    let packetize = |batch: &VectorBatch, child: u16, epoch: u16| -> Vec<VectorAggregationPacket> {
+        let mut out = Vec::new();
+        let mut chunks = VectorChunks::new(batch);
+        while let Some((range, last)) = chunks.next_chunk() {
+            out.push(VectorAggregationPacket {
+                tree,
+                op,
+                eot: last,
+                rel: None,
+                batch: batch.sub_batch(range),
+            });
+        }
+        stamp(&mut out, child, epoch, |p, rel| p.rel = Some(rel));
+        out
+    };
+    let encode_pkt = |p: &VectorAggregationPacket| -> Vec<u8> {
+        let pk = Packet::VectorAggregation(p.clone());
+        if cfg.crc {
+            pk.encode_integrity()
+        } else {
+            pk.encode()
+        }
+    };
+
+    let mut sink = loop {
+        let epoch = sw.tree_epoch(tree);
+        let pkts: Vec<Vec<VectorAggregationPacket>> = streams
+            .iter()
+            .enumerate()
+            .map(|(c, b)| packetize(b, c as u16, epoch))
+            .collect();
+        let bufs: Vec<Vec<Vec<u8>>> =
+            pkts.iter().map(|v| v.iter().map(encode_pkt).collect()).collect();
+        let lens: Vec<Vec<u64>> = pkts
+            .iter()
+            .map(|v| v.iter().map(|p| p.wire_len() as u64).collect())
+            .collect();
+        let mut attempt_sink = VectorSink::new(lanes);
+        let outcome = drive_hop_corrupt(
+            &mut sim,
+            &cfg.transport,
+            cfg.crc,
+            tree,
+            recoveries as u8,
+            &lens,
+            &bufs,
+            &mappers,
+            hub,
+            (KIND_INGRESS_DATA, KIND_INGRESS_ACK),
+            |child, seq, now, corrupt_pkt| {
+                while flip_cursor < flips.len() && now >= flips[flip_cursor].0 {
+                    if sw.inject_sram_flip(tree, flips[flip_cursor].1) {
+                        ctr.sram_flips_injected += 1;
+                    }
+                    flip_cursor += 1;
+                }
+                let owned;
+                let pkt: &VectorAggregationPacket = match corrupt_pkt {
+                    None => &pkts[child as usize][(seq - 1) as usize],
+                    Some(Packet::VectorAggregation(p)) => {
+                        let Some(rel) = p.rel else { return Verdict::Drop };
+                        if p.tree != tree
+                            || rel.child != child
+                            || rel.epoch != epoch
+                            || p.batch.lanes() != lanes
+                        {
+                            return Verdict::Drop;
+                        }
+                        owned = p.clone();
+                        &owned
+                    }
+                    Some(_) => return Verdict::Drop,
+                };
+                let rel = pkt.rel.expect("stamped");
+                if rel.epoch != epoch {
+                    return Verdict::Drop;
+                }
+                if pkt.eot && sw.audit_tree(tree).is_err() {
+                    ctr.audit_failures += 1;
+                    return Verdict::Abort;
+                }
+                if corrupt_pkt.is_some() {
+                    ctr.silently_admitted += 1;
+                }
+                Verdict::Ack(sw.ingest_vector_reliable_one(tree, pkt, &mut attempt_sink))
+            },
+        );
+        for _ in 0..outcome.stats.corrupt_drops {
+            sw.note_corrupt_drop(tree);
+        }
+        accumulate(&mut ingress, &outcome.stats);
+        if !outcome.aborted {
+            break attempt_sink;
+        }
+        recoveries += 1;
+        assert!(
+            recoveries <= cfg.max_recoveries,
+            "audit kept failing after {} epoch-fenced re-runs",
+            cfg.max_recoveries
+        );
+        sw.configure_vector(
+            &[TreeConfig {
+                tree,
+                children: children as u16,
+                parent_port: 0,
+                op,
+            }],
+            lanes,
+        );
+        sw.begin_epoch(tree, epoch + 1);
+    };
+
+    if sink.flushes == 0 {
+        ctr.forced_flushes += 1;
+        sw.force_flush_vector(tree, &mut sink);
+    }
+    sw.finalize(tree);
+    let dedup = sw.dedup_stats(tree);
+
+    let egress_batch = crate::switch::vector_sink_to_batch(&sink);
+    let eepoch = sw.tree_epoch(tree);
+    let epkts = packetize(&egress_batch, 0, eepoch);
+    let ebufs = vec![epkts.iter().map(encode_pkt).collect::<Vec<Vec<u8>>>()];
+    let elens = vec![epkts.iter().map(|p| p.wire_len() as u64).collect::<Vec<u64>>()];
+    let mut ep = Endpoint::new(VectorBatch::new(lanes), cfg.transport.window);
+    let hub_src = [hub];
+    let outcome = drive_hop_corrupt(
+        &mut sim,
+        &cfg.transport,
+        cfg.crc,
+        tree,
+        0,
+        &elens,
+        &ebufs,
+        &hub_src,
+        reducer,
+        (KIND_EGRESS_DATA, KIND_EGRESS_ACK),
+        |child, seq, _now, corrupt_pkt| {
+            let owned;
+            let pkt: &VectorAggregationPacket = match corrupt_pkt {
+                None => &epkts[(seq - 1) as usize],
+                Some(Packet::VectorAggregation(p)) => {
+                    let Some(rel) = p.rel else { return Verdict::Drop };
+                    if p.tree != tree
+                        || rel.child != child
+                        || rel.epoch != eepoch
+                        || p.batch.lanes() != lanes
+                    {
+                        return Verdict::Drop;
+                    }
+                    owned = p.clone();
+                    &owned
+                }
+                Some(_) => return Verdict::Drop,
+            };
+            let rel = pkt.rel.expect("stamped");
+            if corrupt_pkt.is_some() {
+                ctr.silently_admitted += 1;
+            }
+            if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                ep.received.extend_from_batch(&pkt.batch);
+            }
+            Verdict::Ack(ep.ack_for(tree, rel.child))
+        },
+    );
+    let egress = outcome.stats;
+
+    let reference = Reducer::merge_vector_software(streams, op).table;
+    let merged =
+        Reducer::merge_vector_software(std::slice::from_ref(&ep.received), op).table;
+    let exact = merged == reference;
+
+    IntegrityVectorRun {
+        ingress,
+        egress,
+        dedup,
+        received: ep.received,
+        jct_s: egress.done_s,
+        recoveries,
+        sram_flips_injected: ctr.sram_flips_injected,
+        audit_failures: ctr.audit_failures,
+        silently_admitted: ctr.silently_admitted,
+        forced_flushes: ctr.forced_flushes,
+        exact,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::transport::run_transport_scalar;
+    use crate::protocol::Key;
+    use crate::switch::SwitchConfig;
+    use crate::util::rng::Pcg32;
+
+    fn switch(children: u16) -> SwitchAggSwitch {
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(16 << 10, Some(256 << 10)));
+        sw.configure(&[TreeConfig {
+            tree: TreeId(1),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        sw
+    }
+
+    fn streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+        let mut rng = Pcg32::new(seed);
+        (0..children)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        let id = rng.gen_range_u64(300);
+                        KvPair::new(
+                            Key::from_id(id, 16 + (id % 49) as usize),
+                            rng.gen_range_u64(100) as i64 - 50,
+                        )
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn zero_corruption_crc_run_matches_legacy_transport_exactly() {
+        let ss = streams(3, 1_000, 5);
+        let mut sw_legacy = switch(3);
+        let legacy = run_transport_scalar(
+            &mut sw_legacy,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &TransportConfig::default(),
+        );
+        let mut sw = switch(3);
+        let run = run_integrity_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &IntegrityConfig::default(),
+        );
+        // The CRC trailer repurposes the modeled FCS: identical wire
+        // lengths ⇒ identical schedule ⇒ identical stream and timing.
+        assert_eq!(run.received, legacy.received);
+        assert_eq!(run.jct_s, legacy.jct_s);
+        assert_eq!(run.ingress.retransmissions, 0);
+        assert_eq!(run.ingress.corrupted, 0);
+        assert_eq!(run.silently_admitted, 0);
+        assert_eq!(run.recoveries, 0);
+        assert!(run.exact);
+        assert!(run.reducer_audit.is_ok());
+    }
+
+    #[test]
+    fn crc_detects_wire_corruption_and_retransmission_recovers_exactly() {
+        let ss = streams(2, 2_000, 9);
+        let mut sw = switch(2);
+        let run = run_integrity_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &IntegrityConfig::corrupting(0.2, 0xC0FFEE),
+        );
+        assert!(run.ingress.corrupted > 0, "20% corruption must mark packets");
+        assert!(run.ingress.corrupt_drops > 0, "CRC must detect the flips");
+        assert!(run.ingress.retransmissions > 0, "drops must retransmit");
+        assert_eq!(run.silently_admitted, 0, "no flip survives the CRC");
+        assert_eq!(run.dedup.corrupt_drops, sw.corrupt_drops(TreeId(1)));
+        assert!(run.dedup.corrupt_drops > 0);
+        assert!(run.exact, "CRC + retransmission ⇒ exact aggregate");
+        assert!(run.reducer_audit.is_ok());
+        // Detection costs only time, never correctness.
+        let mut base_sw = switch(2);
+        let base = run_integrity_scalar(
+            &mut base_sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &IntegrityConfig::default(),
+        );
+        assert_eq!(run.received.len(), base.received.len());
+        assert!(run.jct_s > base.jct_s, "recovery must cost simulated time");
+    }
+
+    #[test]
+    fn without_crc_corruption_is_silently_admitted() {
+        let ss = streams(2, 2_000, 9);
+        let mut sw = switch(2);
+        let run = run_integrity_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &IntegrityConfig::corrupting(0.2, 0xC0FFEE).with_crc(false),
+        );
+        assert!(run.ingress.corrupted > 0);
+        assert!(
+            run.silently_admitted > 0,
+            "legacy frames must admit some flipped payloads"
+        );
+        assert!(!run.exact, "silent admission must poison the aggregate");
+        assert!(run.reducer_audit.is_err(), "the backstop names the damage");
+    }
+
+    #[test]
+    fn corrupted_acks_are_discarded_and_timers_recover() {
+        let ss = streams(2, 1_500, 11);
+        let mut cfg = IntegrityConfig::default();
+        cfg.transport.ack = LossConfig::corrupt(0.3, 0xACED);
+        let mut sw = switch(2);
+        let run = run_integrity_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+        assert!(run.ingress.acks_corrupt_dropped > 0, "30% ack corruption");
+        assert!(run.exact, "a lost ack is recovered like a dropped ack");
+        assert!(run.reducer_audit.is_ok());
+    }
+
+    #[test]
+    fn sram_flip_fails_audit_and_epoch_fenced_rerun_recovers() {
+        let ss = streams(2, 2_000, 13);
+        let cfg = IntegrityConfig::default()
+            .with_plan(FaultPlan::none().with_sram_flip(1e-5, 0xBADF00D));
+        let mut sw = switch(2);
+        let run = run_integrity_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+        assert_eq!(run.sram_flips_injected, 1, "the flip must land mid-stream");
+        assert!(run.audit_failures >= 1, "the pre-flush scrub must catch it");
+        assert!(run.recoveries >= 1, "detection must trigger the re-run");
+        assert_eq!(sw.tree_epoch(TreeId(1)), run.recoveries as u16);
+        assert!(run.exact, "the fenced re-run restores exactness");
+        assert!(run.reducer_audit.is_ok());
+    }
+}

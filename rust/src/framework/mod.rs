@@ -4,6 +4,7 @@
 //! PUT/GET abstraction over the aggregation network.
 
 pub mod chaos;
+pub mod integrity;
 pub mod job;
 pub mod mapper;
 pub mod reducer;
@@ -15,6 +16,9 @@ pub mod transport;
 pub use chaos::{
     run_chaos_scalar, run_chaos_vector, ChaosConfig, ChaosError, ChaosReport, ChaosScalarReport,
     ChaosVectorReport, EotQuorum,
+};
+pub use integrity::{
+    run_integrity_scalar, run_integrity_vector, IntegrityConfig, IntegrityRun, IntegrityVectorRun,
 };
 pub use job::{run_job, JobReport, JobSpec};
 pub use mapper::{Mapper, VectorMapper};

@@ -14,6 +14,7 @@
 use crate::protocol::{AggOp, Key, KvPair, Value, VectorBatch, MAX_KEY_LEN};
 use crate::runtime::{AggEngine, XlaAggregator};
 use crate::switch::hash_table::{HashTable, VectorEvictSink, VALUE_BYTES};
+use crate::switch::IntegrityError;
 use anyhow::Result;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
@@ -230,6 +231,61 @@ impl Reducer {
         }
     }
 
+    /// End-to-end integrity backstop over a finished reduction: checks
+    /// that the merged `table` is exactly the software re-reduction of
+    /// the per-child input `streams`, and that count conservation
+    /// holds — every offered pair is accounted for (`pairs_in` from the
+    /// merge equals the pairs the children offered).  This is the last
+    /// line of defense: wire CRCs catch flips in flight and the switch
+    /// audit catches poisoned SRAM, but a corruption that slips both
+    /// (CRC disabled, or a flip inside an undetected window) surfaces
+    /// here as a typed [`IntegrityError`].  Returns the number of keys
+    /// checked.
+    pub fn audit(
+        streams: &[Vec<KvPair>],
+        table: &HashMap<Key, Value>,
+        pairs_in: u64,
+        op: AggOp,
+    ) -> Result<usize, IntegrityError> {
+        let offered: u64 = streams.iter().map(|s| s.len() as u64).sum();
+        if pairs_in != offered {
+            return Err(IntegrityError::CountMismatch {
+                offered,
+                accounted: pairs_in,
+            });
+        }
+        let mut want: HashMap<Key, Value> = HashMap::new();
+        for s in streams {
+            for p in s {
+                want.entry(p.key)
+                    .and_modify(|v| *v = op.combine(*v, p.value))
+                    .or_insert(p.value);
+            }
+        }
+        for (k, v) in table {
+            let Some(&expected) = want.get(k) else {
+                return Err(IntegrityError::ExtraKey { key: *k });
+            };
+            if expected != *v {
+                return Err(IntegrityError::ValueMismatch {
+                    key: *k,
+                    expected,
+                    computed: *v,
+                });
+            }
+        }
+        // Same size + no extra keys ⇒ same key set; a smaller table is
+        // missing something the children contributed.
+        if table.len() != want.len() {
+            let missing = want
+                .keys()
+                .find(|k| !table.contains_key(k))
+                .expect("size mismatch implies a missing key");
+            return Err(IntegrityError::MissingKey { key: *missing });
+        }
+        Ok(want.len())
+    }
+
     /// XLA merge through the AOT artifacts.
     pub fn merge_xla(engine: &AggEngine, streams: &[Vec<KvPair>], op: AggOp) -> Result<MergeResult> {
         let t0 = Instant::now();
@@ -390,6 +446,42 @@ mod tests {
         let c = Reducer::verify_completeness(7, &s);
         assert!(!c.is_complete());
         assert_eq!(c.missing(), 3);
+    }
+
+    #[test]
+    fn audit_accepts_exact_merges_and_types_every_violation() {
+        let s = streams();
+        let r = Reducer::merge_software(&s, AggOp::Sum);
+        assert_eq!(Reducer::audit(&s, &r.table, r.pairs_in, AggOp::Sum), Ok(3));
+
+        // Count conservation: a lost pair is typed, not silent.
+        assert_eq!(
+            Reducer::audit(&s, &r.table, r.pairs_in - 1, AggOp::Sum),
+            Err(IntegrityError::CountMismatch {
+                offered: 4,
+                accounted: 3
+            })
+        );
+        // A poisoned value is caught by the re-reduction.
+        let mut bad = r.table.clone();
+        *bad.get_mut(&Key::new(b"a")).unwrap() ^= 1 << 40;
+        assert!(matches!(
+            Reducer::audit(&s, &bad, r.pairs_in, AggOp::Sum),
+            Err(IntegrityError::ValueMismatch { expected: 4, .. })
+        ));
+        // A fabricated key and a dropped key are distinct violations.
+        let mut extra = r.table.clone();
+        extra.insert(Key::new(b"zz"), 1);
+        assert_eq!(
+            Reducer::audit(&s, &extra, r.pairs_in, AggOp::Sum),
+            Err(IntegrityError::ExtraKey { key: Key::new(b"zz") })
+        );
+        let mut missing = r.table.clone();
+        missing.remove(&Key::new(b"b"));
+        assert_eq!(
+            Reducer::audit(&s, &missing, r.pairs_in, AggOp::Sum),
+            Err(IntegrityError::MissingKey { key: Key::new(b"b") })
+        );
     }
 
     #[test]

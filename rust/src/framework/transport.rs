@@ -173,6 +173,18 @@ pub struct NetHopStats {
     pub dups: u64,
     /// Acks lost on the reverse links.
     pub acks_dropped: u64,
+    /// Data deliveries the links marked corrupt (wire bit flips).
+    /// Always 0 under this driver's corruption-free configs; the
+    /// corruption-aware driver (`framework::integrity`) fills it.
+    pub corrupted: u64,
+    /// Corrupt data packets *detected* at the receiver (CRC mismatch
+    /// or decode failure) and dropped before admission — each one is
+    /// recovered by retransmission.  Filled by `framework::integrity`.
+    pub corrupt_drops: u64,
+    /// Corrupt acks detected and discarded at the sender (the ack is
+    /// simply lost; the data timer recovers).  Filled by
+    /// `framework::integrity`.
+    pub acks_corrupt_dropped: u64,
     /// Simulated time at which every sender was fully acknowledged.
     pub done_s: f64,
     /// Mean final smoothed RTT across senders that took a sample

@@ -54,6 +54,12 @@ pub struct FaultPlan {
     mapper_crash: Vec<(u16, f64)>,
     /// `(child, slowdown ≥ 1)` — start-of-stream delay factor.
     stragglers: Vec<(u16, f64)>,
+    /// `(at_s, seed)` — a switch-SRAM single-bit upset at `at_s`: the
+    /// seed picks which resident aggregation slot (and which bit of its
+    /// value) gets flipped.  The integrity driver applies it to the
+    /// engine's table state at the first delivery at or after `at_s`;
+    /// the per-region audit checksum is what catches it.
+    sram_flips: Vec<(f64, u64)>,
 }
 
 impl FaultPlan {
@@ -68,6 +74,7 @@ impl FaultPlan {
             && self.link_down.is_empty()
             && self.mapper_crash.is_empty()
             && self.stragglers.iter().all(|&(_, f)| f <= 1.0)
+            && self.sram_flips.is_empty()
     }
 
     /// Schedule the switch to crash at `at_s`, restarting (with empty
@@ -104,6 +111,16 @@ impl FaultPlan {
     pub fn with_straggler(mut self, child: u16, slowdown: f64) -> Self {
         assert!(slowdown >= 1.0 && slowdown.is_finite(), "slowdown {slowdown} < 1");
         self.stragglers.push((child, slowdown));
+        self
+    }
+
+    /// Flip one seeded bit of switch-SRAM aggregation state at `at_s`
+    /// (a soft error / single-event upset).  Added by builder only —
+    /// never by [`Self::chaos`], whose RNG draw order is pinned by the
+    /// chaos differential tests.
+    pub fn with_sram_flip(mut self, at_s: f64, seed: u64) -> Self {
+        assert!(at_s >= 0.0 && at_s.is_finite(), "bad flip time {at_s}");
+        self.sram_flips.push((at_s, seed));
         self
     }
 
@@ -150,6 +167,12 @@ impl FaultPlan {
     /// The scheduled switch crash, if any.
     pub fn switch_crash(&self) -> Option<SwitchCrash> {
         self.switch_crash
+    }
+
+    /// Every scheduled SRAM bit flip, `(at_s, seed)`, in insertion
+    /// order (the driver sorts by time before applying).
+    pub fn sram_flips(&self) -> &[(f64, u64)] {
+        &self.sram_flips
     }
 
     /// Is the switch down (crashed and not yet restarted) at `t`?
@@ -239,6 +262,14 @@ mod tests {
         assert_eq!(p.straggle_factor(0), 8.0, "stragglers compound");
         assert_eq!(p.straggle_factor(1), 1.0);
         p.validate(3);
+    }
+
+    #[test]
+    fn sram_flips_are_scheduled_and_nonempty() {
+        let p = FaultPlan::none().with_sram_flip(0.5, 0xAB).with_sram_flip(0.1, 0xCD);
+        assert!(!p.is_empty());
+        assert_eq!(p.sram_flips(), &[(0.5, 0xAB), (0.1, 0xCD)], "insertion order kept");
+        p.validate(1); // flips name no child: always valid
     }
 
     #[test]

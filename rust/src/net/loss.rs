@@ -1,16 +1,35 @@
-//! Deterministic per-link loss/duplication model.
+//! Deterministic per-link loss/duplication/corruption model.
 //!
 //! One [`LossChannel`] sits on a directed link (or a transport-layer
 //! channel in `framework::reliable`) and decides, per packet, how many
 //! copies come out the far end: 0 (dropped), 1, or 2 (duplicated by a
-//! link-layer retransmit).  Decisions are a seeded Bernoulli draw from
-//! a private [`Pcg32`], so a run is bit-reproducible for a given
-//! `(config, salt)` no matter what other links do — each channel owns
-//! its own stream.  A lossless channel consumes **no** random draws
-//! and takes an early-out, so enabling the subsystem with loss
-//! disabled leaves every existing result byte-identical.
+//! link-layer retransmit) — and, independently per surviving copy,
+//! whether the payload arrives with a flipped bit ([`corrupt`]).
+//! Decisions are seeded Bernoulli draws from a private [`Pcg32`], so a
+//! run is bit-reproducible for a given `(config, salt)` no matter what
+//! other links do — each channel owns its own stream.  A lossless
+//! channel consumes **no** random draws and takes an early-out, so
+//! enabling the subsystem with loss disabled leaves every existing
+//! result byte-identical; the same zero-rate guarantee holds for
+//! corruption.
+//!
+//! [`corrupt`]: LossChannel::corrupt_draw
 
 use crate::util::rng::Pcg32;
+
+/// Why a [`LossConfig`] is invalid.  Typed (not an `assert!`) so config
+/// plumbing — CLI parsing, experiment sweeps, admission paths — can
+/// surface the problem without a panic, matching the
+/// `AdmissionError`/`TransportError` style.
+#[derive(Clone, Copy, Debug, PartialEq, thiserror::Error)]
+pub enum LossConfigError {
+    #[error("drop probability {0} out of [0, 1)")]
+    DropOutOfRange(f64),
+    #[error("duplication probability {0} out of [0, 0.5]")]
+    DupOutOfRange(f64),
+    #[error("corruption probability {0} out of [0, 1)")]
+    CorruptOutOfRange(f64),
+}
 
 /// Loss parameters for one channel.  `Default` is lossless.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -20,6 +39,9 @@ pub struct LossConfig {
     /// Per-surviving-packet duplication probability in `[0, 0.5]`
     /// (bounded so duplication cannot snowball across hops).
     pub dup_p: f64,
+    /// Per-delivered-copy payload bit-flip probability in `[0, 1)` —
+    /// the wire-corruption model behind the integrity subsystem.
+    pub corrupt_p: f64,
     /// Base seed; each channel salts it with its own identity.
     pub seed: u64,
 }
@@ -29,43 +51,70 @@ impl LossConfig {
         Self {
             drop_p: 0.0,
             dup_p: 0.0,
+            corrupt_p: 0.0,
             seed: 0,
         }
     }
 
-    /// Bernoulli drop at rate `p`.
+    /// Bernoulli drop at rate `p`.  Panics on an invalid rate (the
+    /// fallible path is [`Self::validate`]).
     pub fn drop(p: f64, seed: u64) -> Self {
         let cfg = Self {
             drop_p: p,
-            dup_p: 0.0,
-            seed,
+            ..Self::lossless()
         };
-        cfg.validate();
+        let cfg = Self { seed, ..cfg };
+        if let Err(e) = cfg.validate() {
+            panic!("{e}");
+        }
         cfg
+    }
+
+    /// Bernoulli payload corruption at rate `p`.  Panics on an invalid
+    /// rate (the fallible path is [`Self::validate`]).
+    pub fn corrupt(p: f64, seed: u64) -> Self {
+        Self::lossless().with_seed(seed).with_corrupt(p)
     }
 
     /// Add a duplication rate.
     pub fn with_dup(mut self, q: f64) -> Self {
         self.dup_p = q;
-        self.validate();
+        if let Err(e) = self.validate() {
+            panic!("{e}");
+        }
         self
     }
 
-    pub fn validate(&self) {
-        assert!(
-            (0.0..1.0).contains(&self.drop_p),
-            "drop probability {} out of [0, 1)",
-            self.drop_p
-        );
-        assert!(
-            (0.0..=0.5).contains(&self.dup_p),
-            "duplication probability {} out of [0, 0.5]",
-            self.dup_p
-        );
+    /// Add a corruption rate.
+    pub fn with_corrupt(mut self, p: f64) -> Self {
+        self.corrupt_p = p;
+        if let Err(e) = self.validate() {
+            panic!("{e}");
+        }
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Check every rate; `Err` names the first offending field.
+    pub fn validate(&self) -> Result<(), LossConfigError> {
+        if !(0.0..1.0).contains(&self.drop_p) {
+            return Err(LossConfigError::DropOutOfRange(self.drop_p));
+        }
+        if !(0.0..=0.5).contains(&self.dup_p) {
+            return Err(LossConfigError::DupOutOfRange(self.dup_p));
+        }
+        if !(0.0..1.0).contains(&self.corrupt_p) {
+            return Err(LossConfigError::CorruptOutOfRange(self.corrupt_p));
+        }
+        Ok(())
     }
 
     pub fn is_lossless(&self) -> bool {
-        self.drop_p <= 0.0 && self.dup_p <= 0.0
+        self.drop_p <= 0.0 && self.dup_p <= 0.0 && self.corrupt_p <= 0.0
     }
 }
 
@@ -77,6 +126,7 @@ pub struct LossChannel {
     pub offered: u64,
     pub drops: u64,
     pub dups: u64,
+    pub corrupts: u64,
 }
 
 impl LossChannel {
@@ -88,13 +138,16 @@ impl LossChannel {
     /// channel built from the same config: `salt` is the channel's
     /// identity (link endpoints, child index, ...).
     pub fn salted(cfg: LossConfig, salt: u64) -> Self {
-        cfg.validate();
+        if let Err(e) = cfg.validate() {
+            panic!("{e}");
+        }
         Self {
             cfg,
             rng: Pcg32::with_stream(cfg.seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15), salt),
             offered: 0,
             drops: 0,
             dups: 0,
+            corrupts: 0,
         }
     }
 
@@ -119,6 +172,31 @@ impl LossChannel {
         }
         1
     }
+
+    /// One corruption decision for one delivered copy: `Some(seed)`
+    /// means the copy arrives with a payload bit flipped, the seed
+    /// picking *which* bit once the consumer knows the byte length
+    /// (`bit = seed % (len * 8)`).  Zero-rate channels draw no RNG, so
+    /// corruption-off runs stay byte-identical.
+    pub fn corrupt_draw(&mut self) -> Option<u64> {
+        if self.cfg.corrupt_p > 0.0 && self.rng.gen_bool(self.cfg.corrupt_p) {
+            self.corrupts += 1;
+            Some(self.rng.next_u64())
+        } else {
+            None
+        }
+    }
+}
+
+/// Flip the bit `seed % (buf.len() * 8)` in place — the single-event
+/// wire-corruption model applied at delivery time.  No-op on an empty
+/// buffer.
+pub fn flip_bit(buf: &mut [u8], seed: u64) {
+    if buf.is_empty() {
+        return;
+    }
+    let bit = (seed % (buf.len() as u64 * 8)) as usize;
+    buf[bit / 8] ^= 1 << (bit % 8);
 }
 
 #[cfg(test)]
@@ -130,8 +208,9 @@ mod tests {
         let mut ch = LossChannel::new(LossConfig::lossless());
         for _ in 0..1000 {
             assert_eq!(ch.copies(), 1);
+            assert_eq!(ch.corrupt_draw(), None);
         }
-        assert_eq!((ch.drops, ch.dups, ch.offered), (0, 0, 1000));
+        assert_eq!((ch.drops, ch.dups, ch.corrupts, ch.offered), (0, 0, 0, 1000));
     }
 
     #[test]
@@ -167,8 +246,89 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "out of [0, 1)")]
+    fn corruption_rate_is_roughly_honored_and_composes_with_loss() {
+        let mut ch =
+            LossChannel::salted(LossConfig::drop(0.1, 3).with_dup(0.1).with_corrupt(0.2), 5);
+        let mut corrupted = 0u64;
+        let mut delivered = 0u64;
+        for _ in 0..20_000 {
+            for _ in 0..ch.copies() {
+                delivered += 1;
+                if ch.corrupt_draw().is_some() {
+                    corrupted += 1;
+                }
+            }
+        }
+        assert_eq!(corrupted, ch.corrupts);
+        let rate = corrupted as f64 / delivered as f64;
+        assert!((0.17..0.23).contains(&rate), "corrupt rate {rate} far from 20%");
+    }
+
+    #[test]
+    fn corrupt_seed_picks_a_real_bit_deterministically() {
+        let mut a = [0u8; 8];
+        flip_bit(&mut a, 13);
+        assert_eq!(a[1], 1 << 5, "bit 13 = byte 1 bit 5");
+        let mut b = [0xFFu8; 4];
+        flip_bit(&mut b, 32 + 7); // wraps modulo 32 bits -> bit 7
+        assert_eq!(b, [0x7F, 0xFF, 0xFF, 0xFF]);
+        flip_bit(&mut [], 99); // empty payload is a no-op, not a panic
+    }
+
+    #[test]
     fn rejects_certain_loss() {
+        assert_eq!(
+            LossConfig {
+                drop_p: 1.0,
+                ..LossConfig::lossless()
+            }
+            .validate(),
+            Err(LossConfigError::DropOutOfRange(1.0))
+        );
+    }
+
+    #[test]
+    fn invalid_configs_are_typed_not_panics() {
+        for (cfg, want) in [
+            (
+                LossConfig {
+                    drop_p: -0.1,
+                    ..LossConfig::lossless()
+                },
+                LossConfigError::DropOutOfRange(-0.1),
+            ),
+            (
+                LossConfig {
+                    dup_p: 0.6,
+                    ..LossConfig::lossless()
+                },
+                LossConfigError::DupOutOfRange(0.6),
+            ),
+            (
+                LossConfig {
+                    corrupt_p: 1.0,
+                    ..LossConfig::lossless()
+                },
+                LossConfigError::CorruptOutOfRange(1.0),
+            ),
+            (
+                LossConfig {
+                    corrupt_p: f64::NAN,
+                    ..LossConfig::lossless()
+                },
+                LossConfigError::CorruptOutOfRange(f64::NAN),
+            ),
+        ] {
+            let got = cfg.validate().unwrap_err();
+            // NaN != NaN, so compare the variant via Debug rendering.
+            assert_eq!(format!("{got:?}"), format!("{want:?}"));
+        }
+        assert_eq!(LossConfig::lossless().validate(), Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of [0, 1)")]
+    fn infallible_constructors_still_panic_loudly() {
         LossConfig::drop(1.0, 0);
     }
 }

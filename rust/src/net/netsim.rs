@@ -46,6 +46,10 @@ struct Event {
     /// Caller-supplied payload tag, threaded through to the final
     /// delivery (0 for untagged [`NetSim::send`] traffic).
     tag: u64,
+    /// Wire-corruption seed, if some traversed link flipped a payload
+    /// bit (`net::loss::corrupt_draw`).  Keep-first across hops: the
+    /// single-event model flips exactly one bit end-to-end.
+    corrupt: Option<u64>,
 }
 
 /// One end-to-end delivery as reported by [`NetSim::step_delivery`] —
@@ -58,6 +62,13 @@ pub struct Delivery {
     pub bytes: u64,
     /// The tag given to [`NetSim::send_tagged`] (0 for `send`).
     pub tag: u64,
+    /// `Some(seed)` when the payload arrived corrupted: some link on
+    /// the path flipped bit `seed % (len * 8)` (see
+    /// `net::loss::flip_bit`).  The engine models lengths, not bytes,
+    /// so the *driver* applies the flip to its copy of the packet at
+    /// delivery time.  `None` on every delivery of a corruption-free
+    /// run — the field is pure metadata and never perturbs timing.
+    pub corrupt: Option<u64>,
 }
 
 /// Per-directed-link accounting.
@@ -72,6 +83,9 @@ pub struct LinkStats {
     pub dropped: u64,
     /// Packets the link layer duplicated (both copies serialized).
     pub duplicated: u64,
+    /// Delivered copies this link corrupted (a payload bit flipped on
+    /// the wire; the copy still arrives and still burns wire time).
+    pub corrupted: u64,
     /// Packets discarded because the link or its endpoint device was
     /// down (fault injection; see `net::faults`).  The network engine
     /// itself never sets this — the co-simulation driver notes the
@@ -231,6 +245,9 @@ pub struct NetSim {
     /// partitioned runner and the heap differential compare against —
     /// stays unchanged).
     delivered_tags: Vec<u64>,
+    /// Corruption seed of each delivery, in lockstep with `delivered`
+    /// (same parallel-lane rationale as `delivered_tags`).
+    delivered_corrupt: Vec<Option<u64>>,
     /// Deliveries already handed out by [`Self::step_delivery`].
     reported: usize,
     next_id: u64,
@@ -258,6 +275,7 @@ impl NetSim {
             route_cache: FxHashMap::default(),
             delivered: Vec::new(),
             delivered_tags: Vec::new(),
+            delivered_corrupt: Vec::new(),
             reported: 0,
             next_id: 0,
             now_s: 0.0,
@@ -266,14 +284,14 @@ impl NetSim {
 
     /// Inject a packet of `bytes` at `src` bound for `dst` at `t`.
     pub fn send(&mut self, t: f64, src: NodeId, dst: NodeId, bytes: u64) {
-        self.transmit(t.max(self.now_s), src, dst, bytes, 0);
+        self.transmit(t.max(self.now_s), src, dst, bytes, 0, None);
     }
 
     /// [`Self::send`] with a caller-chosen payload tag, reported back
     /// on the packet's [`Delivery`] — how the transport co-simulation
     /// identifies which data/ack packet arrived.
     pub fn send_tagged(&mut self, t: f64, src: NodeId, dst: NodeId, bytes: u64, tag: u64) {
-        self.transmit(t.max(self.now_s), src, dst, bytes, tag);
+        self.transmit(t.max(self.now_s), src, dst, bytes, tag, None);
     }
 
     /// Current simulation clock (the time of the last processed event).
@@ -289,7 +307,9 @@ impl NetSim {
             self.links.is_empty(),
             "set_default_loss must precede the first send"
         );
-        cfg.validate();
+        if let Err(e) = cfg.validate() {
+            panic!("{e}");
+        }
         self.default_loss = cfg;
     }
 
@@ -298,7 +318,9 @@ impl NetSim {
     /// link: replacing a live link's channel would restart its random
     /// stream mid-run and break bit-reproducibility.
     pub fn set_link_loss(&mut self, from: NodeId, to: NodeId, cfg: LossConfig) {
-        cfg.validate();
+        if let Err(e) = cfg.validate() {
+            panic!("{e}");
+        }
         assert!(
             !self.link_ids.contains_key(&(from.0, to.0)),
             "set_link_loss must precede the first send on {from:?} -> {to:?}"
@@ -348,10 +370,19 @@ impl NetSim {
         id as usize
     }
 
-    fn transmit(&mut self, t: f64, at: NodeId, dst: NodeId, bytes: u64, tag: u64) {
+    fn transmit(
+        &mut self,
+        t: f64,
+        at: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        tag: u64,
+        incoming: Option<u64>,
+    ) {
         if at == dst {
             self.delivered.push((t, dst, bytes));
             self.delivered_tags.push(tag);
+            self.delivered_corrupt.push(incoming);
             return;
         }
         let Some(next) = self.next_hop_cached(at, dst) else {
@@ -360,11 +391,20 @@ impl NetSim {
         let lid = self.link_id(at, next);
         // Loss model: 0 copies = lost on the wire (the serialization
         // still burns link time), 2 = duplicated by a link-layer
-        // retransmit (both copies serialize back-to-back).  Lossless
-        // links skip the draw entirely, keeping the no-loss engine
-        // byte-identical to the reference.
+        // retransmit (both copies serialize back-to-back).  Each
+        // delivered copy independently rolls the corruption die; the
+        // seeds are pre-drawn here so the stats/lane loop below holds
+        // the only live borrow.  Lossless links skip every draw,
+        // keeping the no-loss engine byte-identical to the reference.
+        let mut drawn = [None, None];
         let copies = match &mut self.loss[lid] {
-            Some(ch) => ch.copies(),
+            Some(ch) => {
+                let copies = ch.copies();
+                for d in drawn.iter_mut().take(copies) {
+                    *d = ch.corrupt_draw();
+                }
+                copies
+            }
             None => 1,
         };
         {
@@ -374,8 +414,9 @@ impl NetSim {
             } else if copies == 2 {
                 stats.duplicated += 1;
             }
+            stats.corrupted += drawn.iter().flatten().count() as u64;
         }
-        for _ in 0..copies.max(1) {
+        for copy in 0..copies.max(1) {
             let stats = &mut self.links[lid];
             let start = t.max(stats.busy_until_s);
             let done = start + self.link.transfer_secs(bytes);
@@ -393,6 +434,9 @@ impl NetSim {
                 bytes,
                 id: self.next_id,
                 tag,
+                // Keep-first: a packet corrupted upstream keeps its
+                // original flipped bit (single-event model).
+                corrupt: incoming.or(drawn[copy]),
             };
             let lane = &mut self.lanes[lid];
             let was_idle = lane.is_idle();
@@ -433,7 +477,7 @@ impl NetSim {
     pub fn run(&mut self) -> f64 {
         while let Some(ev) = self.pop_event() {
             self.now_s = ev.time_s;
-            self.transmit(ev.time_s, ev.to, ev.dst, ev.bytes, ev.tag);
+            self.transmit(ev.time_s, ev.to, ev.dst, ev.bytes, ev.tag, ev.corrupt);
         }
         self.delivered
             .iter()
@@ -453,7 +497,7 @@ impl NetSim {
         while self.reported == self.delivered.len() {
             let ev = self.pop_event()?;
             self.now_s = ev.time_s;
-            self.transmit(ev.time_s, ev.to, ev.dst, ev.bytes, ev.tag);
+            self.transmit(ev.time_s, ev.to, ev.dst, ev.bytes, ev.tag, ev.corrupt);
         }
         let i = self.reported;
         self.reported += 1;
@@ -463,6 +507,7 @@ impl NetSim {
             node,
             bytes,
             tag: self.delivered_tags[i],
+            corrupt: self.delivered_corrupt[i],
         })
     }
 
@@ -499,6 +544,11 @@ impl NetSim {
     /// Packets duplicated by the loss model across all links.
     pub fn duplicated_packets(&self) -> u64 {
         self.links.iter().map(|s| s.duplicated).sum()
+    }
+
+    /// Delivered copies corrupted by the loss model across all links.
+    pub fn corrupted_packets(&self) -> u64 {
+        self.links.iter().map(|s| s.corrupted).sum()
     }
 
     /// Total packet-hops processed (one per link traversal) — the
@@ -859,6 +909,49 @@ mod tests {
         assert!(sim.duplicated_packets() > 0);
         assert!(sim.delivered_packets(hosts[1]) > 500);
         assert_eq!(sim.dropped_packets(), 0);
+    }
+
+    #[test]
+    fn corruption_marks_deliveries_deterministically() {
+        let run = || {
+            let (topo, _sw, hosts) = Topology::star(2);
+            let mut sim = NetSim::new(topo);
+            sim.set_default_loss(LossConfig::corrupt(0.3, 0xC0DE));
+            for i in 0..500u64 {
+                sim.send_tagged(i as f64 * 1e-5, hosts[0], hosts[1], 1500, i);
+            }
+            let mut marks = Vec::new();
+            while let Some(d) = sim.step_delivery() {
+                marks.push((d.tag, d.corrupt));
+            }
+            (marks, sim.corrupted_packets())
+        };
+        let (marks, corrupted) = run();
+        assert_eq!(run(), (marks.clone(), corrupted), "same seed, same marks");
+        assert_eq!(marks.len(), 500, "corruption never drops packets");
+        let hit = marks.iter().filter(|(_, c)| c.is_some()).count();
+        // Two 30%-corrupting hops, keep-first: ~51% marked end-to-end.
+        assert!((200..310).contains(&hit), "corrupt marks {hit}");
+        assert!(corrupted as usize >= hit, "link counter sees every event");
+    }
+
+    #[test]
+    fn zero_corruption_rate_is_byte_identical_to_no_config() {
+        // corrupt_p == 0 must not consume a single RNG draw, so a
+        // drop-only config behaves identically with the field present.
+        let run = |cfg: LossConfig| {
+            let (topo, _sw, hosts) = Topology::star(2);
+            let mut sim = NetSim::new(topo);
+            sim.set_default_loss(cfg);
+            for i in 0..800u64 {
+                sim.send(i as f64 * 1e-5, hosts[0], hosts[1], 1200);
+            }
+            sim.run();
+            (sim.delivered().to_vec(), sim.dropped_packets())
+        };
+        let plain = run(LossConfig::drop(0.15, 11));
+        let with_field = run(LossConfig::drop(0.15, 11).with_corrupt(0.0));
+        assert_eq!(plain, with_field);
     }
 
     #[test]

@@ -1,0 +1,72 @@
+//! CRC32C (Castagnoli) over packet bytes — the integrity trailer
+//! behind `FLAG_CRC` (see [`super::packet`]).
+//!
+//! The polynomial choice mirrors what real NICs/switch pipelines use
+//! for payload integrity (iSCSI, SCTP, ext4): reflected 0x1EDC6F41
+//! (table form 0x82F63B78), better burst-error detection than the
+//! Ethernet CRC32 at the same cost.  The table is built in a `const fn`
+//! so the codec stays allocation- and lazy-static-free.
+
+/// Reflected CRC32C polynomial.
+const POLY: u32 = 0x82F6_3B78;
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC32C of `data` (init `!0`, final xor `!0` — the standard check
+/// value of `b"123456789"` is `0xE3069283`).
+#[inline]
+pub fn crc32c(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in data {
+        crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_standard_check_value() {
+        assert_eq!(crc32c(b"123456789"), 0xE306_9283);
+    }
+
+    #[test]
+    fn empty_and_single_byte() {
+        assert_eq!(crc32c(b""), 0);
+        // Any nonzero input must produce a nonzero CRC here (the
+        // all-zero fixed point only exists for the empty message under
+        // this init/xorout pair).
+        assert_ne!(crc32c(b"\x00"), 0);
+        assert_ne!(crc32c(b"a"), crc32c(b"b"));
+    }
+
+    #[test]
+    fn detects_every_single_bit_flip() {
+        let msg = b"switchagg integrity trailer";
+        let base = crc32c(msg);
+        let mut buf = msg.to_vec();
+        for bit in 0..buf.len() * 8 {
+            buf[bit / 8] ^= 1 << (bit % 8);
+            assert_ne!(crc32c(&buf), base, "bit {bit} undetected");
+            buf[bit / 8] ^= 1 << (bit % 8);
+        }
+    }
+}

@@ -12,6 +12,7 @@
 //! path), [`wire`] the little-endian codec helpers, [`packet`] the
 //! packet structures and their byte-level encode/decode.
 
+pub mod crc;
 pub mod kv;
 pub mod packet;
 pub mod reliable;
@@ -19,10 +20,11 @@ pub mod types;
 pub mod vector;
 pub mod wire;
 
+pub use crc::crc32c;
 pub use kv::{Key, KvPair, MAX_KEY_LEN, MIN_KEY_LEN};
 pub use packet::{
     AckKind, AggregationPacket, ConfigurePacket, DataPacket, LaunchPacket, MtuChunks, Packet,
-    TreeConfig, AGG_FIXED_LEN, HEADER_OVERHEAD, MAX_AGG_PAYLOAD, MTU,
+    PacketDecodeError, TreeConfig, AGG_FIXED_LEN, HEADER_OVERHEAD, MAX_AGG_PAYLOAD, MTU,
 };
 pub use reliable::{
     AdaptiveSender, AggAckPacket, RelHeader, RelWindow, ReliableSender, RttEstimator,

@@ -4,6 +4,7 @@
 //! that as a fixed [`HEADER_OVERHEAD`] (58 B, the paper's TCP/IP
 //! figure) plus a 1-byte SwitchAgg packet-type tag.
 
+use super::crc::crc32c;
 use super::kv::{KvDecodeError, KvPair};
 use super::reliable::{AggAckPacket, RelHeader};
 use super::types::{AggOp, TreeId};
@@ -32,6 +33,23 @@ pub(crate) const FLAG_EOT: u8 = 1;
 pub(crate) const FLAG_MULTI_LANE: u8 = 1 << 1;
 /// A [`RelHeader`] (child + epoch + seq) follows the fixed fields.
 pub(crate) const FLAG_REL: u8 = 1 << 2;
+/// A CRC32C trailer over every preceding byte (tag included) closes
+/// the packet — [`Packet::encode_integrity`] sets it on data packets;
+/// acks carry the trailer with no flag byte and are recognized by
+/// length.  The 4 trailer bytes repurpose the Ethernet FCS already
+/// inside [`HEADER_OVERHEAD`], so `payload_len`/`wire_len` (and thus
+/// all timing) are unchanged by enabling integrity — the flag-off
+/// encoding stays byte-identical.
+pub(crate) const FLAG_CRC: u8 = 1 << 3;
+
+/// Wire bytes of the CRC32C trailer.
+pub(crate) const CRC_TRAILER_LEN: usize = 4;
+
+/// A CRC-protected AggAck body: tag(1) + tree(4) + child(2) + epoch(2)
+/// + cum_seq(4) + credit(2) + trailer(4).  The legacy ack is 15 bytes
+/// and rejects trailing bytes, so the length is an unambiguous
+/// discriminator.
+const ACK_CRC_LEN: usize = 15 + CRC_TRAILER_LEN;
 
 /// `Launch` — master → controller (Table 1): worker counts + addresses.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -207,6 +225,8 @@ pub enum PacketDecodeError {
     Truncated(#[from] wire::Truncated),
     #[error("trailing {0} bytes after packet")]
     Trailing(usize),
+    #[error("CRC32C mismatch: trailer {expected:#010x}, computed {computed:#010x}")]
+    ChecksumMismatch { expected: u32, computed: u32 },
 }
 
 impl Packet {
@@ -223,7 +243,21 @@ impl Packet {
         }
     }
 
+    /// Legacy encoding — no integrity trailer, byte-identical to every
+    /// pre-CRC release.
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_impl(false)
+    }
+
+    /// Encode with the CRC32C integrity trailer on data (tags 5/7) and
+    /// ack (tag 8) packets; every other packet kind encodes exactly as
+    /// [`Self::encode`].  See [`FLAG_CRC`] for why the trailer does not
+    /// change the wire footprint.
+    pub fn encode_integrity(&self) -> Vec<u8> {
+        self.encode_impl(true)
+    }
+
+    fn encode_impl(&self, crc: bool) -> Vec<u8> {
         let mut buf = Vec::new();
         wire::put_u8(&mut buf, self.tag());
         match self {
@@ -254,6 +288,9 @@ impl Packet {
                 if a.rel.is_some() {
                     flags |= FLAG_REL;
                 }
+                if crc {
+                    flags |= FLAG_CRC;
+                }
                 wire::put_u8(&mut buf, flags);
                 wire::put_u16(&mut buf, a.pairs.len() as u16);
                 if let Some(rel) = &a.rel {
@@ -264,7 +301,7 @@ impl Packet {
                 }
             }
             Packet::VectorAggregation(v) => {
-                v.encode_into(&mut buf);
+                v.encode_into(&mut buf, crc);
             }
             Packet::Data(d) => {
                 wire::put_u32(&mut buf, d.payload_len);
@@ -277,10 +314,51 @@ impl Packet {
                 wire::put_u16(&mut buf, a.credit);
             }
         }
+        if crc
+            && matches!(
+                self,
+                Packet::Aggregation(_) | Packet::VectorAggregation(_) | Packet::AggAck(_)
+            )
+        {
+            let trailer = crc32c(&buf);
+            wire::put_u32(&mut buf, trailer);
+        }
         buf
     }
 
+    /// Byte offset of the CRC trailer iff `buf` claims to carry one:
+    /// data tags advertise it in the flags byte (offset 6, after
+    /// tag + tree + op); acks have no flags byte, so the trailer is
+    /// recognized by total length (the legacy ack rejects trailing
+    /// bytes, making the two encodings unambiguous).
+    fn crc_split(buf: &[u8]) -> Option<usize> {
+        let protected = match *buf.first()? {
+            TAG_AGGREGATION | TAG_VECTOR_AGGREGATION => {
+                buf.len() > 6 && buf[6] & FLAG_CRC != 0
+            }
+            TAG_AGG_ACK => buf.len() == ACK_CRC_LEN,
+            _ => false,
+        };
+        (protected && buf.len() >= CRC_TRAILER_LEN).then(|| buf.len() - CRC_TRAILER_LEN)
+    }
+
     pub fn decode(buf: &[u8]) -> Result<Self, PacketDecodeError> {
+        let body = match Self::crc_split(buf) {
+            Some(split) => {
+                let expected =
+                    u32::from_le_bytes(buf[split..].try_into().expect("4-byte trailer"));
+                let computed = crc32c(&buf[..split]);
+                if computed != expected {
+                    return Err(PacketDecodeError::ChecksumMismatch { expected, computed });
+                }
+                &buf[..split]
+            }
+            None => buf,
+        };
+        Self::decode_body(body)
+    }
+
+    fn decode_body(buf: &[u8]) -> Result<Self, PacketDecodeError> {
         let mut r = Reader::new(buf);
         let tag = r.u8()?;
         let pkt = match tag {
@@ -327,7 +405,7 @@ impl Packet {
                 let op =
                     AggOp::from_code(op_code).ok_or(PacketDecodeError::UnknownOp(op_code))?;
                 let flags = r.u8()?;
-                if flags & !(FLAG_EOT | FLAG_REL) != 0 {
+                if flags & !(FLAG_EOT | FLAG_REL | FLAG_CRC) != 0 {
                     return Err(PacketDecodeError::UnknownFlags(flags));
                 }
                 let eot = flags & FLAG_EOT != 0;
@@ -635,6 +713,116 @@ mod tests {
         assert_eq!(pkts.len(), 1);
         assert!(pkts[0].eot);
         assert!(pkts[0].pairs.is_empty());
+    }
+
+    #[test]
+    fn integrity_encoding_round_trips_and_pins_legacy_bytes() {
+        use crate::protocol::vector::{VectorAggregationPacket, VectorBatch};
+        let rel = Some(RelHeader {
+            child: 3,
+            epoch: 1,
+            seq: 41,
+        });
+        let mut batch = VectorBatch::new(3);
+        batch.push(Key::from_id(1, 16), &[1, -2, 3]);
+        let data_pkts = vec![
+            Packet::Aggregation(AggregationPacket {
+                tree: TreeId(7),
+                op: AggOp::Sum,
+                eot: true,
+                rel,
+                pairs: sample_pairs(5),
+            }),
+            Packet::VectorAggregation(VectorAggregationPacket {
+                tree: TreeId(7),
+                op: AggOp::Max,
+                eot: false,
+                rel,
+                batch,
+            }),
+            Packet::AggAck(AggAckPacket {
+                tree: TreeId(7),
+                child: 3,
+                epoch: 1,
+                cum_seq: 41,
+                credit: 900,
+            }),
+        ];
+        for p in &data_pkts {
+            let legacy = p.encode();
+            let hard = p.encode_integrity();
+            // Trailer repurposes the modeled FCS: +4 wire bytes max,
+            // and the decoded packet carries no trace of the trailer.
+            assert_eq!(hard.len(), legacy.len() + CRC_TRAILER_LEN);
+            assert_eq!(Packet::decode(&hard).unwrap(), *p);
+            assert_eq!(Packet::decode(&legacy).unwrap(), *p);
+            // Data tags differ from legacy only in the CRC flag bit
+            // (offset 6) plus the trailer; acks only in the trailer.
+            match p {
+                Packet::AggAck(_) => assert_eq!(hard[..legacy.len()], legacy[..]),
+                _ => {
+                    assert_eq!(hard[..6], legacy[..6]);
+                    assert_eq!(hard[6], legacy[6] | FLAG_CRC);
+                    assert_eq!(hard[7..legacy.len()], legacy[7..]);
+                }
+            }
+        }
+        // Non-data packets are untouched by the integrity encoder.
+        for p in [
+            Packet::Launch(LaunchPacket {
+                mappers: vec![1],
+                reducers: vec![2],
+            }),
+            Packet::Ack(AckKind::Master),
+            Packet::Data(DataPacket { payload_len: 9 }),
+        ] {
+            assert_eq!(p.encode(), p.encode_integrity());
+        }
+    }
+
+    #[test]
+    fn integrity_trailer_detects_every_single_bit_flip() {
+        let p = Packet::Aggregation(AggregationPacket {
+            tree: TreeId(7),
+            op: AggOp::Sum,
+            eot: true,
+            rel: Some(RelHeader {
+                child: 1,
+                epoch: 0,
+                seq: 3,
+            }),
+            pairs: sample_pairs(3),
+        });
+        let buf = p.encode_integrity();
+        let mut flipped = buf.clone();
+        for bit in 0..buf.len() * 8 {
+            flipped[bit / 8] ^= 1 << (bit % 8);
+            assert!(
+                Packet::decode(&flipped).is_err(),
+                "bit {bit} flip decoded cleanly"
+            );
+            flipped[bit / 8] ^= 1 << (bit % 8);
+        }
+        assert_eq!(Packet::decode(&flipped).unwrap(), p);
+
+        // The CRC'd ack is length-discriminated: a trailer flip on the
+        // 19-byte form must fail, and the 15-byte legacy ack still
+        // round-trips untouched.
+        let ack = Packet::AggAck(AggAckPacket {
+            tree: TreeId(2),
+            child: 0,
+            epoch: 0,
+            cum_seq: 5,
+            credit: 10,
+        });
+        let mut hard = ack.encode_integrity();
+        assert_eq!(hard.len(), 19);
+        hard[16] ^= 0x40;
+        assert!(matches!(
+            Packet::decode(&hard),
+            Err(PacketDecodeError::ChecksumMismatch { .. })
+        ));
+        assert_eq!(Packet::decode(&ack.encode()).unwrap(), ack);
     }
 
     #[test]

@@ -45,6 +45,51 @@ impl AggOp {
         }
     }
 
+    /// [`Self::combine`] that also reports whether the result
+    /// saturated: `(value, saturated)`.  The value is bit-identical to
+    /// `combine` (SUM saturation test: an i64 add overflows positive
+    /// iff both operands are positive, negative iff both negative);
+    /// MAX/MIN cannot saturate.  Observing saturation lets the switch
+    /// count clamped aggregates instead of silently absorbing them.
+    #[inline]
+    pub fn combine_observed(self, a: Value, b: Value) -> (Value, bool) {
+        match self {
+            AggOp::Sum => match a.checked_add(b) {
+                Some(v) => (v, false),
+                None => (if a > 0 { Value::MAX } else { Value::MIN }, true),
+            },
+            AggOp::Max => (a.max(b), false),
+            AggOp::Min => (a.min(b), false),
+        }
+    }
+
+    /// [`Self::combine_slice`] that also counts saturating lanes.  The
+    /// accumulator ends bit-identical to `combine_slice`; the return is
+    /// how many lanes clamped.
+    #[inline]
+    pub fn combine_slice_observed(self, acc: &mut [Value], rhs: &[Value]) -> u64 {
+        debug_assert_eq!(acc.len(), rhs.len());
+        match self {
+            AggOp::Sum => {
+                let mut saturated = 0u64;
+                for (a, b) in acc.iter_mut().zip(rhs) {
+                    match a.checked_add(*b) {
+                        Some(v) => *a = v,
+                        None => {
+                            *a = if *a > 0 { Value::MAX } else { Value::MIN };
+                            saturated += 1;
+                        }
+                    }
+                }
+                saturated
+            }
+            _ => {
+                self.combine_slice(acc, rhs);
+                0
+            }
+        }
+    }
+
     /// Lane-wise combine of two equal-length value slices: `acc[i] =
     /// combine(acc[i], rhs[i])`.  The op match is hoisted out of the
     /// loop so each arm is a branch-free contiguous pass the compiler
@@ -140,6 +185,44 @@ mod tests {
     fn sum_saturates_instead_of_wrapping() {
         assert_eq!(AggOp::Sum.combine(Value::MAX, 1), Value::MAX);
         assert_eq!(AggOp::Sum.combine(Value::MIN, -1), Value::MIN);
+    }
+
+    #[test]
+    fn combine_observed_matches_combine_and_flags_saturation() {
+        let cases = [
+            (0, 0),
+            (Value::MAX, 1),
+            (1, Value::MAX),
+            (Value::MIN, -1),
+            (Value::MIN, Value::MIN),
+            (Value::MAX, Value::MIN),
+            (-7, 12),
+        ];
+        for op in AggOp::ALL {
+            for (a, b) in cases {
+                let (v, sat) = op.combine_observed(a, b);
+                assert_eq!(v, op.combine(a, b), "{op} value must be bit-identical");
+                assert_eq!(
+                    sat,
+                    op == AggOp::Sum && a.checked_add(b).is_none(),
+                    "{op} ({a}, {b})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn combine_slice_observed_matches_slice_and_counts_lanes() {
+        let a0: Vec<Value> = vec![Value::MAX, -5, Value::MIN, 7, Value::MAX];
+        let b: Vec<Value> = vec![1, 3, -1, 7, -2];
+        for op in AggOp::ALL {
+            let mut plain = a0.clone();
+            op.combine_slice(&mut plain, &b);
+            let mut observed = a0.clone();
+            let sat = op.combine_slice_observed(&mut observed, &b);
+            assert_eq!(observed, plain, "{op} accumulator must be bit-identical");
+            assert_eq!(sat, if op == AggOp::Sum { 2 } else { 0 }, "{op}");
+        }
     }
 
     #[test]

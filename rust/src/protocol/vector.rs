@@ -22,7 +22,9 @@
 //! scalar path is the degenerate case, not a parallel format.
 
 use super::kv::{Key, KvDecodeError, KvPair, MAX_KEY_LEN, MIN_KEY_LEN};
-use super::packet::{AGG_FIXED_LEN, FLAG_EOT, FLAG_MULTI_LANE, FLAG_REL, HEADER_OVERHEAD, MTU};
+use super::packet::{
+    AGG_FIXED_LEN, FLAG_CRC, FLAG_EOT, FLAG_MULTI_LANE, FLAG_REL, HEADER_OVERHEAD, MTU,
+};
 use super::reliable::RelHeader;
 use super::types::{AggOp, TreeId, Value};
 use super::wire::{self, Reader};
@@ -222,7 +224,7 @@ impl VectorAggregationPacket {
         HEADER_OVERHEAD + self.payload_len()
     }
 
-    pub(super) fn encode_into(&self, buf: &mut Vec<u8>) {
+    pub(super) fn encode_into(&self, buf: &mut Vec<u8>, crc: bool) {
         let lanes = self.batch.lanes();
         let multi = lanes != 1;
         wire::put_u32(buf, self.tree.0);
@@ -233,6 +235,9 @@ impl VectorAggregationPacket {
         }
         if self.rel.is_some() {
             flags |= FLAG_REL;
+        }
+        if crc {
+            flags |= FLAG_CRC;
         }
         wire::put_u8(buf, flags);
         wire::put_u16(buf, self.batch.len() as u16);
@@ -262,7 +267,7 @@ impl VectorAggregationPacket {
         let op_code = r.u8()?;
         let op = AggOp::from_code(op_code).ok_or(VecDecodeError::UnknownOp(op_code))?;
         let flags = r.u8()?;
-        if flags & !(FLAG_EOT | FLAG_MULTI_LANE | FLAG_REL) != 0 {
+        if flags & !(FLAG_EOT | FLAG_MULTI_LANE | FLAG_REL | FLAG_CRC) != 0 {
             return Err(VecDecodeError::UnknownFlags(flags));
         }
         let eot = flags & FLAG_EOT != 0;

@@ -253,6 +253,7 @@ impl Bpe {
         out: &mut Vec<(Key, Value)>,
     ) {
         let combines: u64 = self.regions.iter().map(|r| r.combines).sum();
+        let saturated: u64 = self.regions.iter().map(|r| r.saturated).sum();
         for r in &mut self.regions {
             r.drain_into(out);
         }
@@ -267,9 +268,12 @@ impl Bpe {
                 )
             })
             .collect();
-        // `agg_ops` sums the regions' accounting points; park the
-        // lifetime count on region 0 so the sum is unchanged.
+        // `agg_ops`/`saturated_ops` sum the regions' accounting points;
+        // park the lifetime counts on region 0 so the sums are
+        // unchanged.  Audit digests start fresh at zero (the drains
+        // zeroed the old ones).
         self.regions[0].combines = combines;
+        self.regions[0].saturated = saturated;
     }
 
     /// Fold shard-worker probe outcome counts back into the engine
@@ -347,6 +351,38 @@ impl Bpe {
     /// `Fpe::agg_ops`.
     pub fn agg_ops(&self) -> u64 {
         self.regions.iter().map(|r| r.combines).sum()
+    }
+
+    /// Saturating lane-combines across all regions (see
+    /// `HashTable::saturated`).
+    pub fn saturated_ops(&self) -> u64 {
+        self.regions.iter().map(|r| r.saturated).sum()
+    }
+
+    /// Verify every DRAM region's audit digest; `Err((group, expected,
+    /// computed))` names the first region whose memory changed outside
+    /// the aggregation datapath.
+    pub fn audit(&self) -> Result<(), (usize, u64, u64)> {
+        for (g, r) in self.regions.iter().enumerate() {
+            if let Err((expected, computed)) = r.audit() {
+                return Err((g, expected, computed));
+            }
+        }
+        Ok(())
+    }
+
+    /// Inject one seeded bit flip into the first non-empty region
+    /// (rotating by seed), bypassing the audit digests; `false` if
+    /// every region was empty.
+    pub fn poison_bit(&mut self, seed: u64) -> bool {
+        let n = self.regions.len();
+        for i in 0..n {
+            let g = (seed as usize + i) % n;
+            if self.regions[g].poison_bit(seed) {
+                return true;
+            }
+        }
+        false
     }
 }
 

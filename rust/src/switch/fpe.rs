@@ -92,11 +92,15 @@ impl Fpe {
     /// management event, not a pipeline event.
     pub(crate) fn replace_table(&mut self, table: HashTable, out: &mut Vec<(Key, Value)>) {
         let combines = self.table.combines;
+        let saturated = self.table.saturated;
         self.table.drain_into(out);
         self.table = table;
-        // `agg_ops` reads the table's accounting point; carry the
-        // lifetime combine count into the replacement.
+        // `agg_ops`/`saturated` read the table's accounting point;
+        // carry the lifetime counts into the replacement.  The audit
+        // digest needs no carrying: the drain zeroed the old one and a
+        // fresh table starts at zero.
         self.table.combines = combines;
+        self.table.saturated = saturated;
     }
 
     /// FIFO occupancy as seen by an arrival at cycle `at`.
@@ -259,6 +263,19 @@ impl Fpe {
     pub fn agg_ops(&self) -> u64 {
         self.table.combines
     }
+
+    /// Verify the SRAM region's audit digest (see `HashTable::audit`):
+    /// `Err((expected, computed))` means a bit of this engine's table
+    /// changed outside the aggregation datapath.
+    pub fn audit(&self) -> Result<(), (u64, u64)> {
+        self.table.audit()
+    }
+
+    /// Inject one seeded SRAM bit flip into this engine's table,
+    /// bypassing the audit digest; `false` if the table was empty.
+    pub fn poison_bit(&mut self, seed: u64) -> bool {
+        self.table.poison_bit(seed)
+    }
 }
 
 #[cfg(test)]
@@ -376,10 +393,13 @@ mod tests {
         let lat = f.latency_cycles;
         let depth = f.fifo_depth();
 
+        let sat = f.table().saturated;
         let mut spilled = Vec::new();
         f.replace_table(HashTable::with_memory(40, 16, 2), &mut spilled);
         assert_eq!(spilled.len(), 3, "residents drained, not dropped");
         assert_eq!(f.table().occupancy(), 0);
+        assert_eq!(f.table().saturated, sat, "saturation count survives the swap");
+        f.audit().unwrap();
 
         assert_eq!(f.fifo_writes, writes);
         assert_eq!((f.aggregated, f.inserted, f.evicted), agg);

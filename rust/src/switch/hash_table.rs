@@ -213,6 +213,39 @@ pub struct HashTable {
     /// hits count W), so engine op counters cannot drift from the
     /// combines that actually ran.
     pub combines: u64,
+    /// Lane-combines whose result clamped at the value-range boundary
+    /// (SUM saturation) — counted at the same single accounting point
+    /// as `combines`, so no path can saturate silently.
+    pub saturated: u64,
+    /// Running audit digest: XOR over the *current* resident entries of
+    /// a per-slot-lane signature ([`slot_sig`]).  Every legitimate
+    /// mutation updates it incrementally (insert XORs the new sig in; a
+    /// combine or evict-replace XORs the old sig out and the new one
+    /// in; a drain zeroes it), so the digest telescopes to a pure
+    /// function of current table state — order- and history-free, hence
+    /// identical across the serial and sharded engines.  A memory fault
+    /// ([`Self::poison_bit`]) bypasses it, which is exactly what
+    /// [`Self::audit`] detects.
+    audit_acc: u64,
+}
+
+/// Per-slot-lane audit signature.  An odd-constant multiply makes the
+/// value injective into the pre-mix word and a splitmix64-style
+/// finalizer (bijective) spreads it, so two entries differing in any of
+/// (tag, lane, value) get distinct signatures and a single flipped
+/// value bit always changes the table digest.
+#[inline]
+fn slot_sig(tag: u32, lane: usize, value: Value) -> u64 {
+    let mut x = (value as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ ((tag as u64) << 1)
+        ^ (lane as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
 }
 
 impl HashTable {
@@ -262,6 +295,8 @@ impl HashTable {
             lookups: 0,
             evictions: 0,
             combines: 0,
+            saturated: 0,
+            audit_acc: 0,
         }
     }
 
@@ -358,8 +393,12 @@ impl HashTable {
         for i in 0..len {
             if self.blocks.tags[base + i] == hash && self.blocks.keys[base + i] == key {
                 let v = &mut self.blocks.vals[base + i];
-                *v = op.combine(*v, value);
+                let old = *v;
+                let (new, sat) = op.combine_observed(old, value);
+                *v = new;
                 self.combines += 1;
+                self.saturated += sat as u64;
+                self.audit_acc ^= slot_sig(hash, 0, old) ^ slot_sig(hash, 0, new);
                 return Probe::Aggregated;
             }
         }
@@ -369,6 +408,7 @@ impl HashTable {
             self.blocks.vals[base + len] = value;
             self.blocks.lens[blk] = (len + 1) as u8;
             self.occupancy += 1;
+            self.audit_acc ^= slot_sig(hash, 0, value);
             return Probe::Inserted;
         }
         self.evictions += 1;
@@ -381,6 +421,7 @@ impl HashTable {
             let old_key = std::mem::replace(&mut self.blocks.keys[vi], key);
             let old_val = std::mem::replace(&mut self.blocks.vals[vi], value);
             let old_tag = std::mem::replace(&mut self.blocks.tags[vi], hash);
+            self.audit_acc ^= slot_sig(old_tag, 0, old_val) ^ slot_sig(hash, 0, value);
             Probe::Evicted(old_key, old_val, old_tag)
         } else {
             Probe::Evicted(key, value, hash)
@@ -467,7 +508,16 @@ impl HashTable {
         for i in 0..len {
             if self.blocks.tags[base + i] == hash && self.blocks.keys[base + i] == key {
                 let vo = (base + i) * w;
-                op.combine_slice(&mut self.blocks.vals[vo..vo + w], lanes);
+                // Digest update brackets the combine: XOR the old lane
+                // sigs out, combine (bit-identical to combine_slice),
+                // XOR the new sigs in.
+                for (l, &old) in self.blocks.vals[vo..vo + w].iter().enumerate() {
+                    self.audit_acc ^= slot_sig(hash, l, old);
+                }
+                self.saturated += op.combine_slice_observed(&mut self.blocks.vals[vo..vo + w], lanes);
+                for (l, &new) in self.blocks.vals[vo..vo + w].iter().enumerate() {
+                    self.audit_acc ^= slot_sig(hash, l, new);
+                }
                 self.combines += w as u64;
                 return LaneProbe::Aggregated;
             }
@@ -479,6 +529,9 @@ impl HashTable {
             self.blocks.vals[vo..vo + w].copy_from_slice(lanes);
             self.blocks.lens[blk] = (len + 1) as u8;
             self.occupancy += 1;
+            for (l, &v) in lanes.iter().enumerate() {
+                self.audit_acc ^= slot_sig(hash, l, v);
+            }
             return LaneProbe::Inserted;
         }
         self.evictions += 1;
@@ -489,6 +542,9 @@ impl HashTable {
             let old_key = std::mem::replace(&mut self.blocks.keys[vi], key);
             let old_tag = std::mem::replace(&mut self.blocks.tags[vi], hash);
             let vo = vi * w;
+            for (l, &old) in self.blocks.vals[vo..vo + w].iter().enumerate() {
+                self.audit_acc ^= slot_sig(old_tag, l, old) ^ slot_sig(hash, l, lanes[l]);
+            }
             evicted.keys.push((old_key, old_tag));
             evicted.lanes.extend_from_slice(&self.blocks.vals[vo..vo + w]);
             self.blocks.vals[vo..vo + w].copy_from_slice(lanes);
@@ -614,6 +670,7 @@ impl HashTable {
             }
         }
         self.occupancy = 0;
+        self.audit_acc = 0;
     }
 
     /// [`Self::drain_into`] into a fresh vector.
@@ -658,6 +715,72 @@ impl HashTable {
             }
         }
         self.occupancy = 0;
+        self.audit_acc = 0;
+    }
+
+    /// The running audit digest (0 for an empty table).
+    pub fn audit_acc(&self) -> u64 {
+        self.audit_acc
+    }
+
+    /// Recompute the audit digest from the resident slots and compare
+    /// it against the incrementally-maintained one.  `Ok` means every
+    /// resident bit is accounted for by legitimate mutations;
+    /// `Err((expected, computed))` means memory was altered behind the
+    /// engine's back (an SRAM upset / [`Self::poison_bit`]).
+    pub fn audit(&self) -> Result<(), (u64, u64)> {
+        let computed = self.recompute_audit();
+        if computed == self.audit_acc {
+            Ok(())
+        } else {
+            Err((self.audit_acc, computed))
+        }
+    }
+
+    fn recompute_audit(&self) -> u64 {
+        let spb = self.slots_per_bucket;
+        let w = self.blocks.lanes;
+        let mut acc = 0u64;
+        for blk in 0..self.blocks.lens.len() {
+            let len = self.blocks.lens[blk] as usize;
+            let base = blk * spb;
+            for i in 0..len {
+                let tag = self.blocks.tags[base + i];
+                let vo = (base + i) * w;
+                for l in 0..w {
+                    acc ^= slot_sig(tag, l, self.blocks.vals[vo + l]);
+                }
+            }
+        }
+        acc
+    }
+
+    /// Flip one seeded bit of one resident value *without* updating the
+    /// audit digest — the SRAM single-event-upset model.  The seed
+    /// picks the resident slot, lane, and bit.  Returns `false` (no
+    /// fault landed) on an empty table.  Because [`slot_sig`] is
+    /// value-injective per (tag, lane), a poisoned bit always makes
+    /// [`Self::audit`] fail until the table is drained.
+    pub fn poison_bit(&mut self, seed: u64) -> bool {
+        if self.occupancy == 0 {
+            return false;
+        }
+        let mut n = (seed % self.occupancy as u64) as usize;
+        let spb = self.slots_per_bucket;
+        let w = self.blocks.lanes;
+        for blk in 0..self.blocks.lens.len() {
+            let len = self.blocks.lens[blk] as usize;
+            if n >= len {
+                n -= len;
+                continue;
+            }
+            let vo = (blk * spb + n) * w;
+            let lane = ((seed >> 32) as usize) % w;
+            let bit = ((seed >> 48) as usize) % 64;
+            self.blocks.vals[vo + lane] ^= 1 << bit;
+            return true;
+        }
+        false
     }
 
     /// Iterate resident pairs without draining (arbitrary order).
@@ -1120,6 +1243,103 @@ mod tests {
         }
         assert_eq!(whits, hits);
         assert_eq!(wide.combines, hits * w as u64);
+    }
+
+    #[test]
+    fn audit_digest_holds_under_mixed_traffic_and_telescopes() {
+        // Combines, inserts, evictions (both polarities), and drains
+        // must all keep the incremental digest equal to a fresh
+        // recompute — and equal between two tables that reach the same
+        // state along different histories.
+        let mut t = table(8, 16, 2);
+        for id in 0..300u64 {
+            t.offer(Key::from_id(id % 23, 16), (id % 7) as Value - 3, AggOp::Sum, id % 3 != 0);
+            if id % 50 == 49 {
+                t.audit().unwrap();
+            }
+        }
+        t.audit().unwrap();
+        t.drain();
+        assert_eq!(t.audit_acc(), 0, "drain zeroes the digest");
+        t.audit().unwrap();
+
+        // History-free: insert a+b vs one combined offer of (a+b).
+        let k = Key::from_id(7, 16);
+        let mut two_steps = table(8, 16, 2);
+        two_steps.offer(k, 30, AggOp::Sum, true);
+        two_steps.offer(k, 12, AggOp::Sum, true);
+        let mut one_step = table(8, 16, 2);
+        one_step.offer(k, 42, AggOp::Sum, true);
+        assert_eq!(two_steps.audit_acc(), one_step.audit_acc());
+
+        // Lane path too.
+        let mut v = vtable(8, 16, 2, 4);
+        let mut sink = VectorEvictSink::new();
+        for id in 0..300u64 {
+            let lanes: Vec<Value> = (0..4).map(|l| (id % 9) as i64 - l).collect();
+            v.offer_lanes(Key::from_id(id % 19, 16), &lanes, AggOp::Max, true, &mut sink);
+        }
+        v.audit().unwrap();
+        let mut keys = Vec::new();
+        let mut vals = Vec::new();
+        v.drain_lanes_into(&mut keys, &mut vals);
+        assert_eq!(v.audit_acc(), 0);
+    }
+
+    #[test]
+    fn poisoned_bit_fails_audit_until_drain() {
+        let mut t = table(32, 16, 2);
+        for id in 0..40u64 {
+            t.offer(Key::from_id(id, 16), id as Value, AggOp::Sum, true);
+        }
+        t.audit().unwrap();
+        assert!(t.poison_bit(0x1234_5678_9ABC_DEF0));
+        let (expected, computed) = t.audit().unwrap_err();
+        assert_ne!(expected, computed);
+        t.drain();
+        t.audit().unwrap();
+        // An empty table has nothing to poison.
+        assert!(!t.poison_bit(1));
+
+        // W-lane tables poison a single lane of a single slot.
+        let mut v = vtable(32, 16, 2, 8);
+        let mut sink = VectorEvictSink::new();
+        for id in 0..20u64 {
+            v.offer_lanes(Key::from_id(id, 16), &[1; 8], AggOp::Sum, true, &mut sink);
+        }
+        v.audit().unwrap();
+        assert!(v.poison_bit(0xFEED_FACE_CAFE_BEEF));
+        assert!(v.audit().is_err());
+    }
+
+    #[test]
+    fn saturated_counter_tracks_clamped_combines() {
+        let mut t = table(8, 16, 2);
+        let k = Key::from_id(1, 16);
+        t.offer(k, Value::MAX - 5, AggOp::Sum, true);
+        assert_eq!(t.saturated, 0);
+        t.offer(k, 3, AggOp::Sum, true);
+        assert_eq!(t.saturated, 0, "headroom left: no clamp");
+        t.offer(k, 100, AggOp::Sum, true);
+        assert_eq!(t.saturated, 1);
+        assert_eq!(t.get(&k), Some(Value::MAX), "value saturates like combine()");
+        t.offer(k, 1, AggOp::Sum, true);
+        assert_eq!(t.saturated, 2, "stuck at the rail keeps counting");
+        t.audit().unwrap();
+
+        // MAX/MIN never saturate; lane path counts per clamped lane.
+        let mut v = vtable(8, 16, 2, 4);
+        let mut sink = VectorEvictSink::new();
+        let kv = Key::from_id(2, 16);
+        v.offer_lanes(kv, &[Value::MAX, 0, Value::MIN, 5], AggOp::Sum, true, &mut sink);
+        v.offer_lanes(kv, &[1, 1, -1, 1], AggOp::Sum, true, &mut sink);
+        assert_eq!(v.saturated, 2, "two of four lanes clamped");
+        v.audit().unwrap();
+        let mut m = table(8, 16, 2);
+        let km = Key::from_id(3, 16);
+        m.offer(km, Value::MAX, AggOp::Max, true);
+        m.offer(km, Value::MIN, AggOp::Max, true);
+        assert_eq!(m.saturated, 0);
     }
 
     #[test]

@@ -1,0 +1,66 @@
+//! Typed end-to-end integrity errors.
+//!
+//! Detection lives in three layers, and each reports through this one
+//! error type so callers handle corruption uniformly:
+//!
+//! * **wire** — CRC32C trailers reject flipped payloads at switch
+//!   ingress (`protocol::packet`, counted as `corrupt_drops`; the
+//!   reliable layer retransmits, so no typed error escapes);
+//! * **switch memory** — per-region audit digests over FPE/BPE slots
+//!   catch bits poisoned *after* admission
+//!   (`SwitchAggSwitch::audit_tree` → [`IntegrityError::AuditMismatch`]);
+//! * **reducer** — a count-conservation and value check over the final
+//!   merged table is the end-to-end backstop
+//!   (`framework::Reducer::audit` → the key/count variants here).
+//!
+//! An `IntegrityError` is a *detected* fault: the framework layer
+//! answers it with an epoch-fenced re-run (PR 6 recovery) rather than
+//! publishing a poisoned aggregate.  The failure mode this PR measures
+//! is the complement — corruption that no layer detects.
+
+use crate::protocol::{Key, TreeId, Value};
+
+/// A detected data-integrity violation (see module docs for the layer
+/// each variant belongs to).
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum IntegrityError {
+    /// An aggregation-memory region's recomputed audit digest does not
+    /// match the incrementally maintained one: at least one resident
+    /// slot no longer equals the value its combine history produced.
+    /// `stage` names the failing region (e.g. `"fpe group 2"`,
+    /// `"bpe region 0"`).
+    #[error(
+        "{tree} audit mismatch in {stage}: digest {expected:#018x}, recomputed {computed:#018x}"
+    )]
+    AuditMismatch {
+        tree: TreeId,
+        stage: String,
+        expected: u64,
+        computed: u64,
+    },
+    /// Audit requested for a tree with no resident engine — a caller
+    /// bug (auditing memory that does not exist), not vacuous success.
+    #[error("{tree} has no resident engine to audit")]
+    Unconfigured { tree: TreeId },
+    /// Reducer backstop: a key every child contributed is absent from
+    /// the merged aggregate.
+    #[error("merged aggregate is missing contributed key {key:?}")]
+    MissingKey { key: Key },
+    /// Reducer backstop: the merged aggregate contains a key no child
+    /// ever sent (fabricated data).
+    #[error("merged aggregate contains uncontributed key {key:?}")]
+    ExtraKey { key: Key },
+    /// Reducer backstop: the merged value for `key` differs from the
+    /// software re-reduction of the children's contributions.
+    #[error("merged value for key {key:?} is {computed}, re-reduction gives {expected}")]
+    ValueMismatch {
+        key: Key,
+        expected: Value,
+        computed: Value,
+    },
+    /// Reducer backstop: count conservation violated — the pairs the
+    /// children offered and the pairs the aggregate accounts for
+    /// disagree (a pair was lost or duplicated past the dedup layer).
+    #[error("count conservation violated: children offered {offered} pairs, accounted {accounted}")]
+    CountMismatch { offered: u64, accounted: u64 },
+}

@@ -25,6 +25,7 @@ pub mod fpe;
 pub mod hash;
 pub mod hash_table;
 pub mod header_extract;
+pub mod integrity;
 pub mod parallel;
 pub mod payload_analyzer;
 pub mod reliability;
@@ -34,6 +35,7 @@ pub mod tenant;
 
 pub use config::{EvictionPolicy, MemoryPolicy, StageDelays, SwitchConfig};
 pub use hash_table::{HashTable, LaneProbe, Probe, VectorEvictSink};
+pub use integrity::IntegrityError;
 pub use parallel::Parallelism;
 pub use payload_analyzer::GroupMap;
 pub use reliability::{backpressure_credit, Admit, CreditPolicy, DedupStats, DedupWindow};

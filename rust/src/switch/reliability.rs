@@ -78,6 +78,12 @@ pub struct DedupStats {
     /// and kept across restarts (simulator accounting, not soft
     /// state).  Zero in any fault-free run.
     pub stale_epoch_drops: u64,
+    /// Packets rejected at ingress because their CRC32C trailer failed
+    /// verification (wire corruption detected at the switch).  Like
+    /// `stale_epoch_drops`, counted before any window is consulted —
+    /// a corrupt packet's sequence number cannot be trusted — and kept
+    /// across restarts.  Zero in any corruption-free run.
+    pub corrupt_drops: u64,
 }
 
 /// Sliding dedup window over one `(tree, child)` sequence space.
@@ -181,6 +187,7 @@ impl DedupWindow {
             // packet never reaches one), so a window's own count is 0;
             // `SwitchAggSwitch::dedup_stats` fills the tree total in.
             stale_epoch_drops: 0,
+            corrupt_drops: 0,
         }
     }
 }

@@ -30,6 +30,7 @@ use crate::sim::clock::{Cycles, CLOCK_HZ};
 use crate::switch::config::{ConfigModule, SwitchConfig};
 use crate::switch::forwarding::Forwarding;
 use crate::switch::header_extract::HeaderExtract;
+use crate::switch::integrity::IntegrityError;
 use crate::switch::parallel::Parallelism;
 use crate::switch::reliability::{backpressure_credit, Admit, CreditPolicy, DedupStats, DedupWindow};
 use crate::switch::scheduler::{GrantPolicy, WeightedGrants};
@@ -74,6 +75,13 @@ pub struct SwitchStats {
     /// panicking.  Seeded from the switch-level accumulator when the
     /// tree's engine is (re)built, so the count survives engine churn.
     pub unconfigured_drops: u64,
+    /// Lane-combines whose result clamped at the value-range boundary
+    /// (SUM saturation), summed over every FPE table and BPE region —
+    /// rolled from `HashTable::saturated`, the same single accounting
+    /// point as the combine counters, so no engine path can clamp a
+    /// count silently.  Serial- and sharded-engine runs report the
+    /// same value (the per-key combine sequences are pinned equal).
+    pub saturated_combines: u64,
     pub flush_cycles: Cycles,
     /// Cycle at which the last pair finished processing.
     pub makespan_cycles: Cycles,
@@ -253,6 +261,12 @@ pub struct SwitchAggSwitch {
     /// reachable from the wire and must not panic).  Simulator
     /// accounting like `stale_epoch`: survives [`Self::crash`].
     unconfigured: BTreeMap<TreeId, u64>,
+    /// Per-tree count of packets rejected at ingress because their
+    /// CRC32C trailer did not match the payload (wire corruption
+    /// detected and contained at the switch; the sender's reliable
+    /// layer retransmits).  Simulator accounting like `stale_epoch`:
+    /// survives [`Self::crash`].
+    corrupt_drops: BTreeMap<TreeId, u64>,
     /// How ack credit is granted across tenants (uniform by default;
     /// weighted per-tenant shares for isolation under overload).
     grant_policy: GrantPolicy,
@@ -275,6 +289,7 @@ impl SwitchAggSwitch {
             epochs: BTreeMap::new(),
             stale_epoch: BTreeMap::new(),
             unconfigured: BTreeMap::new(),
+            corrupt_drops: BTreeMap::new(),
             grant_policy: GrantPolicy::default(),
             sink: IngestSink::new(),
         }
@@ -429,6 +444,56 @@ impl SwitchAggSwitch {
     /// mirrored into the tree's [`SwitchStats`] at engine build).
     pub fn unconfigured_drops(&self, tree: TreeId) -> u64 {
         self.unconfigured.get(&tree).copied().unwrap_or(0)
+    }
+
+    /// Record a packet rejected at ingress because its CRC32C trailer
+    /// failed verification.  A counted drop, not a panic: corruption on
+    /// the wire is reachable by construction, and the reliable layer's
+    /// retransmission recovers the payload (the packet is discarded
+    /// before dedup admission, so its sequence number stays un-acked).
+    pub fn note_corrupt_drop(&mut self, tree: TreeId) {
+        *self.corrupt_drops.entry(tree).or_insert(0) += 1;
+    }
+
+    /// Packets dropped so far at `tree`'s ingress for CRC mismatch.
+    /// Survives [`Self::crash`] (simulator accounting).
+    pub fn corrupt_drops(&self, tree: TreeId) -> u64 {
+        self.corrupt_drops.get(&tree).copied().unwrap_or(0)
+    }
+
+    /// Verify `tree`'s aggregation memory against its per-region audit
+    /// digests (FPE tables first, then BPE regions; see
+    /// `HashTable::audit`).  `Ok(())` means every resident slot still
+    /// matches the history of combines that produced it; a poisoned
+    /// bit surfaces as a typed [`IntegrityError::AuditMismatch`] naming
+    /// the failing stage, which the framework layer turns into an
+    /// epoch-fenced re-run.  An unconfigured tree is itself an error —
+    /// auditing memory that does not exist is a caller bug worth
+    /// surfacing, not vacuous success.
+    pub fn audit_tree(&self, tree: TreeId) -> Result<(), IntegrityError> {
+        let Some(engine) = self.tenants.engine(tree) else {
+            return Err(IntegrityError::Unconfigured { tree });
+        };
+        engine
+            .audit()
+            .map_err(|(stage, expected, computed)| IntegrityError::AuditMismatch {
+                tree,
+                stage,
+                expected,
+                computed,
+            })
+    }
+
+    /// Flip one bit of a value resident in `tree`'s aggregation memory
+    /// (fault injection; `seed` picks region, slot, lane, and bit).
+    /// Returns `false` when the tree is unconfigured or holds no
+    /// entries — nothing to poison.  The damage is silent until
+    /// [`Self::audit_tree`] (or a drain-side reducer audit) looks.
+    pub fn inject_sram_flip(&mut self, tree: TreeId, seed: u64) -> bool {
+        match self.tenants.engine_mut(tree) {
+            Some(engine) => engine.poison_sram(seed),
+            None => false,
+        }
     }
 
     /// Ingest one aggregation packet for its tree, appending outputs to
@@ -649,6 +714,7 @@ impl SwitchAggSwitch {
             }
         }
         out.stale_epoch_drops = self.stale_epoch.get(&tree).copied().unwrap_or(0);
+        out.corrupt_drops = self.corrupt_drops.get(&tree).copied().unwrap_or(0);
         out
     }
 
@@ -899,6 +965,32 @@ impl SwitchAggSwitch {
                     engine.ingest_pairs(pairs, eot, header_delay, sink);
                 }
             }
+        }
+    }
+
+    /// Recovery fallback: flush `tree`'s resident memory into `sink`
+    /// now, as if the last EoT had arrived.  Returns `false` when the
+    /// tree has no engine.  Used by the corruption driver when a wire
+    /// flip destroyed an EoT bit on an *admitted* (CRC-disabled)
+    /// packet, so the normal flush can never fire.
+    pub fn force_flush(&mut self, tree: TreeId, sink: &mut IngestSink) -> bool {
+        match self.tenants.engine_mut(tree) {
+            Some(e) => {
+                e.force_flush(sink);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// W-lane counterpart of [`Self::force_flush`].
+    pub fn force_flush_vector(&mut self, tree: TreeId, sink: &mut VectorSink) -> bool {
+        match self.tenants.engine_mut(tree) {
+            Some(e) => {
+                e.force_flush_vector(sink);
+                true
+            }
+            None => false,
         }
     }
 
@@ -1931,5 +2023,71 @@ mod tests {
         sw.set_tenant_idle(TreeId(1), true);
         let ack_solo = sw.ingest_reliable_one(TreeId(2), &mk(2, 2), &mut sink);
         assert!(ack_solo.credit > ack_lo.credit);
+    }
+
+    #[test]
+    fn saturated_combines_are_counted_and_engine_invariant() {
+        // Three MAX-valued pairs on one key: the first combine clamps,
+        // and so does every one after it.
+        let input: Vec<KvPair> =
+            (0..3).map(|_| KvPair::new(Key::from_id(7, 16), Value::MAX)).collect();
+        let mut serial = configured_switch(64 << 10, None, 1);
+        let out = serial.ingest_stream(TreeId(1), AggOp::Sum, &input);
+        assert_eq!(out.iter().map(|p| p.value).max(), Some(Value::MAX));
+        let s = serial.stats(TreeId(1)).unwrap();
+        assert_eq!(s.saturated_combines, 2, "every MAX+MAX combine clamps");
+
+        // Benign traffic never saturates…
+        let mut benign = configured_switch(64 << 10, Some(1 << 20), 1);
+        benign.ingest_stream(TreeId(1), AggOp::Sum, &pairs(20_000, 500, 42));
+        assert_eq!(benign.stats(TreeId(1)).unwrap().saturated_combines, 0);
+
+        // …and the sharded engine reports the identical count.
+        let mut sharded = configured_switch(64 << 10, None, 1);
+        sharded.set_parallelism(crate::switch::parallel::Parallelism::Sharded(4));
+        sharded.ingest_stream(TreeId(1), AggOp::Sum, &input);
+        assert_eq!(sharded.stats(TreeId(1)).unwrap().saturated_combines, 2);
+    }
+
+    #[test]
+    fn audit_passes_clean_and_catches_injected_sram_flip() {
+        let mut sw = configured_switch(64 << 10, Some(1 << 20), 1);
+        // No engine yet for tree 9: auditing it is a typed error.
+        assert_eq!(
+            sw.audit_tree(TreeId(9)),
+            Err(IntegrityError::Unconfigured { tree: TreeId(9) })
+        );
+        // Leave residents in memory (no EoT → no flush): a clean run
+        // audits clean.
+        let pkts =
+            AggregationPacket::pack_stream(TreeId(1), AggOp::Sum, &pairs(5_000, 800, 13), false);
+        let mut sink = IngestSink::new();
+        for pkt in &pkts {
+            sw.ingest_into(pkt, &mut sink);
+        }
+        sw.audit_tree(TreeId(1)).expect("clean memory must audit clean");
+        // One flipped bit anywhere in resident state is detected.
+        assert!(sw.inject_sram_flip(TreeId(1), 0xDEAD_BEEF_CAFE));
+        match sw.audit_tree(TreeId(1)) {
+            Err(IntegrityError::AuditMismatch { tree, expected, computed, .. }) => {
+                assert_eq!(tree, TreeId(1));
+                assert_ne!(expected, computed);
+            }
+            other => panic!("expected AuditMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupt_drop_accounting_survives_crash() {
+        let mut sw = configured_switch(64 << 10, None, 2);
+        assert_eq!(sw.corrupt_drops(TreeId(1)), 0);
+        sw.note_corrupt_drop(TreeId(1));
+        sw.note_corrupt_drop(TreeId(1));
+        assert_eq!(sw.corrupt_drops(TreeId(1)), 2);
+        assert_eq!(sw.dedup_stats(TreeId(1)).corrupt_drops, 2);
+        // Simulator accounting, not soft state: a power cycle keeps it.
+        sw.crash();
+        assert_eq!(sw.corrupt_drops(TreeId(1)), 2);
+        assert_eq!(sw.corrupt_drops(TreeId(2)), 0);
     }
 }

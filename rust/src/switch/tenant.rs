@@ -273,6 +273,46 @@ impl TreeEngine {
         }
         self.stats.fifo_max_occupancy = fifo_peak;
         self.stats.makespan_cycles = self.arrival_cycle();
+        let mut saturated: u64 = self.fpes.iter().map(|f| f.table().saturated).sum();
+        if let Some(b) = &self.bpe {
+            saturated += b.saturated_ops();
+        }
+        self.stats.saturated_combines = saturated;
+    }
+
+    /// Verify every engine memory region's audit digest (FPE SRAM
+    /// tables, then BPE DRAM regions).  `Err` carries the failing
+    /// stage/region and the `(expected, computed)` digests.
+    pub fn audit(&self) -> Result<(), (String, u64, u64)> {
+        for f in &self.fpes {
+            if let Err((expected, computed)) = f.audit() {
+                return Err((format!("fpe group {}", f.group), expected, computed));
+            }
+        }
+        if let Some(b) = &self.bpe {
+            if let Err((g, expected, computed)) = b.audit() {
+                return Err((format!("bpe region {g}"), expected, computed));
+            }
+        }
+        Ok(())
+    }
+
+    /// Inject one seeded SRAM/DRAM bit flip into some resident slot,
+    /// bypassing the audit digests (the single-event-upset model).
+    /// Tries the seed-selected FPE first, then the rest, then the BPE;
+    /// `false` if no engine holds a resident pair.
+    pub fn poison_sram(&mut self, seed: u64) -> bool {
+        let n = self.fpes.len();
+        for i in 0..n {
+            let g = (seed as usize + i) % n;
+            if self.fpes[g].poison_bit(seed) {
+                return true;
+            }
+        }
+        if let Some(b) = &mut self.bpe {
+            return b.poison_bit(seed);
+        }
+        false
     }
 
     /// Instantaneous PE-input queue state as seen by the next arrival:
@@ -409,6 +449,22 @@ impl TreeEngine {
             .map(|i| out.flushed.encoded_len_pair(i) as u64)
             .sum::<u64>();
         self.eot_seen = 0;
+    }
+
+    /// Recovery fallback: run the all-EoTs flush now, regardless of how
+    /// many EoT signals actually arrived.  The framework's corruption
+    /// driver calls this when a flipped flags byte destroyed an
+    /// end-of-transmission bit that no retransmission will redeliver
+    /// (the corrupted copy was admitted, so the seq is acked).
+    pub(crate) fn force_flush(&mut self, out: &mut IngestSink) {
+        self.flush_into(out);
+        self.roll_stats();
+    }
+
+    /// W-lane counterpart of [`Self::force_flush`].
+    pub(crate) fn force_flush_vector(&mut self, out: &mut VectorSink) {
+        self.flush_vector_into(out);
+        self.roll_stats();
     }
 
     /// Account trailing per-packet header overhead on the output side:

@@ -1,0 +1,408 @@
+//! End-to-end integrity — differential contracts:
+//!
+//! * **Zero-cost trailer** — with zero corruption, the CRC-enabled
+//!   integrity driver is byte-identical (received stream *and* JCT) to
+//!   the legacy event-driven transport, scalar and W-lane vector
+//!   (W ∈ {1, 8}) paths, serial and sharded engines.  The CRC32C
+//!   trailer repurposes the modeled Ethernet FCS, so protection
+//!   changes nothing until a bit actually flips.
+//! * **Corrupt-ack recovery** — a flipped ack is detected and
+//!   discarded; the data path recovers it like a lost ack, and the
+//!   aggregate is exact.
+//! * **Corrupt-EoT recovery** — an EoT whose flag bit was flipped away
+//!   can never fire the flush; the session-end forced flush drains the
+//!   residents and the aggregate is exact.
+//! * **Decode robustness** — a structure-aware fuzz over every packet
+//!   tag: truncation, bit flips, and length inflation must never
+//!   panic the decoder or make it over-commit memory.
+
+use std::collections::HashMap;
+use switchagg::framework::integrity::{
+    run_integrity_scalar, run_integrity_vector, IntegrityConfig,
+};
+use switchagg::framework::transport::{
+    run_transport_scalar, run_transport_vector, TransportConfig,
+};
+use switchagg::framework::Reducer;
+use switchagg::net::LossConfig;
+use switchagg::protocol::{
+    AckKind, AggAckPacket, AggOp, AggregationPacket, ConfigurePacket, DataPacket, Key, KvPair,
+    LaunchPacket, Packet, RelHeader, TreeConfig, TreeId, Value, VectorAggregationPacket,
+    VectorBatch,
+};
+use switchagg::switch::{IngestSink, Parallelism, SwitchAggSwitch, SwitchConfig};
+use switchagg::util::miniprop::prop;
+use switchagg::util::rng::Pcg32;
+
+fn scalar_switch(children: u16, par: Parallelism) -> SwitchAggSwitch {
+    let cfg = SwitchConfig {
+        parallelism: par,
+        ..SwitchConfig::scaled(16 << 10, Some(256 << 10))
+    };
+    let mut sw = SwitchAggSwitch::new(cfg);
+    sw.configure(&[TreeConfig {
+        tree: TreeId(1),
+        children,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    sw
+}
+
+fn vector_switch(children: u16, lanes: usize) -> SwitchAggSwitch {
+    let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(32 << 10, Some(512 << 10)));
+    sw.configure_vector(
+        &[TreeConfig {
+            tree: TreeId(1),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }],
+        lanes,
+    );
+    sw
+}
+
+fn scalar_streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0x1D);
+            (0..n)
+                .map(|_| {
+                    let id = child.gen_range_u64(400);
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(200) as i64 - 100,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn vector_streams(children: usize, n: usize, lanes: usize, seed: u64) -> Vec<VectorBatch> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0x2E);
+            let mut b = VectorBatch::new(lanes);
+            let mut vals: Vec<Value> = vec![0; lanes];
+            for _ in 0..n {
+                let id = child.gen_range_u64(300);
+                for (l, v) in vals.iter_mut().enumerate() {
+                    *v = (id % 11) as i64 + l as i64 - 5;
+                }
+                b.push(Key::from_id(id, 16 + (id % 49) as usize), &vals);
+            }
+            b
+        })
+        .collect()
+}
+
+fn merged(pairs: &[KvPair]) -> HashMap<Key, Value> {
+    Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
+}
+
+#[test]
+fn crc_on_zero_corruption_is_byte_identical_to_legacy_scalar() {
+    let ss = scalar_streams(3, 1_200, 5);
+    for par in [Parallelism::Serial, Parallelism::Sharded(4)] {
+        let mut legacy_sw = scalar_switch(3, par);
+        let legacy = run_transport_scalar(
+            &mut legacy_sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &TransportConfig::default(),
+        );
+        let mut sw = scalar_switch(3, par);
+        let run = run_integrity_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &IntegrityConfig::default(),
+        );
+        assert_eq!(
+            run.received, legacy.received,
+            "CRC-on zero-corruption stream diverged ({par:?})"
+        );
+        assert_eq!(run.jct_s, legacy.jct_s, "wire schedule diverged ({par:?})");
+        assert_eq!(run.ingress.corrupted, 0);
+        assert_eq!(run.ingress.first_tx, legacy.ingress.first_tx);
+        assert_eq!(run.ingress.wire_bytes, legacy.ingress.wire_bytes);
+        assert!(run.exact, "{par:?}");
+        assert!(run.reducer_audit.is_ok(), "{par:?}");
+    }
+}
+
+#[test]
+fn crc_on_zero_corruption_is_byte_identical_to_legacy_vector() {
+    for lanes in [1usize, 8] {
+        let ss = vector_streams(2, 900, lanes, 9);
+        let mut legacy_sw = vector_switch(2, lanes);
+        let legacy = run_transport_vector(
+            &mut legacy_sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &TransportConfig::default(),
+        );
+        let mut sw = vector_switch(2, lanes);
+        let run = run_integrity_vector(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &IntegrityConfig::default(),
+        );
+        assert_eq!(
+            run.received, legacy.received,
+            "W={lanes} CRC-on zero-corruption batch diverged"
+        );
+        assert_eq!(run.jct_s, legacy.jct_s, "W={lanes} wire schedule diverged");
+        assert!(run.exact, "W={lanes}");
+    }
+}
+
+#[test]
+fn corrupt_data_session_recovers_exactly_serial_and_sharded() {
+    let ss = scalar_streams(2, 1_500, 13);
+    let want = merged(&ss.concat());
+    for par in [Parallelism::Serial, Parallelism::Sharded(4)] {
+        let mut sw = scalar_switch(2, par);
+        let run = run_integrity_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &IntegrityConfig::corrupting(0.2, 0xD1CE),
+        );
+        assert!(run.ingress.corrupted > 0, "{par:?}");
+        assert!(run.ingress.corrupt_drops > 0, "{par:?}");
+        assert_eq!(run.silently_admitted, 0, "{par:?}: a flip survived the CRC");
+        assert_eq!(merged(&run.received), want, "{par:?}");
+        assert!(run.exact, "{par:?}");
+    }
+}
+
+#[test]
+fn corrupt_ack_session_recovers_exactly() {
+    let ss = scalar_streams(2, 1_200, 17);
+    let mut cfg = IntegrityConfig::default();
+    cfg.transport.ack = LossConfig::corrupt(0.3, 0xACE5);
+    let mut sw = scalar_switch(2, Parallelism::Serial);
+    let run = run_integrity_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+    assert!(
+        run.ingress.acks_corrupt_dropped > 0,
+        "30% ack corruption must discard some acks"
+    );
+    assert_eq!(run.ingress.drops, 0, "only acks were corrupted");
+    assert_eq!(merged(&run.received), merged(&ss.concat()));
+    assert!(run.exact);
+    assert!(run.reducer_audit.is_ok());
+}
+
+#[test]
+fn corrupt_eot_is_recovered_by_forced_flush() {
+    // An admitted data packet whose EoT flag bit was flipped away (the
+    // legacy-format failure `framework::integrity` counts as
+    // `forced_flushes`): the eot quorum can never fire the flush, so
+    // the session-end fallback must drain the residents — and the
+    // drained aggregate must still be exact.
+    let ss = scalar_streams(2, 800, 23);
+    let mut sw = scalar_switch(2, Parallelism::Serial);
+    let mut sink = IngestSink::new();
+    for (c, s) in ss.iter().enumerate() {
+        // eot = false on every packet simulates the flipped-away flag.
+        let mut pkts = AggregationPacket::pack_stream(TreeId(1), AggOp::Sum, s, false);
+        let mut seq = 0u32;
+        for p in &mut pkts {
+            seq += 1;
+            p.rel = Some(RelHeader {
+                child: c as u16,
+                epoch: 0,
+                seq,
+            });
+        }
+        for p in &pkts {
+            sw.ingest_reliable_one(TreeId(1), p, &mut sink);
+        }
+    }
+    assert_eq!(sink.flushes, 0, "no EoT ⇒ the quorum flush never fires");
+    assert!(sw.force_flush(TreeId(1), &mut sink));
+    assert_eq!(sink.flushes, 1);
+    let mut out = sink.forwarded.clone();
+    out.extend_from_slice(&sink.flushed);
+    assert_eq!(merged(&out), merged(&ss.concat()), "forced flush lost pairs");
+}
+
+/// Build one random valid packet of every wire tag.
+fn random_packet(rng: &mut Pcg32) -> Packet {
+    let pairs = |rng: &mut Pcg32, n: usize| -> Vec<KvPair> {
+        (0..n)
+            .map(|_| {
+                let id = rng.gen_range_u64(1 << 16);
+                KvPair::new(
+                    Key::from_id(id, 8 + rng.gen_range_usize(57)),
+                    rng.gen_range_u64(1000) as i64 - 500,
+                )
+            })
+            .collect()
+    };
+    let rel = |rng: &mut Pcg32| -> Option<RelHeader> {
+        rng.gen_bool(0.5).then(|| RelHeader {
+            child: rng.gen_range_u64(64) as u16,
+            epoch: rng.gen_range_u64(8) as u16,
+            seq: rng.next_u32(),
+        })
+    };
+    match rng.gen_range_usize(7) {
+        0 => Packet::Launch(LaunchPacket {
+            mappers: (0..rng.gen_range_usize(8)).map(|i| i as u32).collect(),
+            reducers: (0..rng.gen_range_usize(4)).map(|i| i as u32).collect(),
+        }),
+        1 => Packet::Configure(ConfigurePacket {
+            trees: (0..rng.gen_range_usize(4))
+                .map(|i| TreeConfig {
+                    tree: TreeId(i as u32),
+                    children: 1 + rng.gen_range_u64(16) as u16,
+                    parent_port: rng.gen_range_u64(64) as u8,
+                    op: AggOp::ALL[rng.gen_range_usize(3)],
+                })
+                .collect(),
+        }),
+        2 => Packet::Ack(if rng.gen_bool(0.5) {
+            AckKind::Master
+        } else {
+            AckKind::Switch
+        }),
+        3 => Packet::Aggregation(AggregationPacket {
+            tree: TreeId(rng.next_u32()),
+            op: AggOp::ALL[rng.gen_range_usize(3)],
+            eot: rng.gen_bool(0.5),
+            rel: rel(rng),
+            pairs: pairs(rng, rng.gen_range_usize(30)),
+        }),
+        4 => {
+            let lanes = 1 + rng.gen_range_usize(8);
+            let mut batch = VectorBatch::new(lanes);
+            let vals: Vec<Value> = (0..lanes).map(|l| l as i64 - 3).collect();
+            for _ in 0..rng.gen_range_usize(20) {
+                batch.push(Key::from_id(rng.gen_range_u64(1 << 12), 16), &vals);
+            }
+            Packet::VectorAggregation(VectorAggregationPacket {
+                tree: TreeId(rng.next_u32()),
+                op: AggOp::ALL[rng.gen_range_usize(3)],
+                eot: rng.gen_bool(0.5),
+                rel: rel(rng),
+                batch,
+            })
+        }
+        5 => Packet::Data(DataPacket {
+            payload_len: rng.next_u32() >> 12,
+        }),
+        _ => Packet::AggAck(AggAckPacket {
+            tree: TreeId(rng.next_u32()),
+            child: rng.gen_range_u64(64) as u16,
+            epoch: rng.gen_range_u64(8) as u16,
+            cum_seq: rng.next_u32(),
+            credit: rng.gen_range_u64(1024) as u16,
+        }),
+    }
+}
+
+/// Decode must be total: whatever the damage, it returns a typed error
+/// or a structurally sane packet — never a panic, never an allocation
+/// driven by an attacker-controlled length field.
+fn check_decode_total(buf: &[u8]) -> Result<(), String> {
+    match Packet::decode(buf) {
+        Err(_) => Ok(()),
+        Ok(Packet::Aggregation(p)) => {
+            // A pair is ≥ 7 encoded bytes (MIN_PAIR), so a sane decode
+            // can never hold more pairs than the buffer could encode.
+            if p.pairs.len() > buf.len() {
+                return Err(format!(
+                    "{} pairs decoded out of a {}-byte buffer",
+                    p.pairs.len(),
+                    buf.len()
+                ));
+            }
+            Ok(())
+        }
+        Ok(Packet::VectorAggregation(p)) => {
+            if p.batch.len() > buf.len() {
+                return Err(format!(
+                    "{} rows decoded out of a {}-byte buffer",
+                    p.batch.len(),
+                    buf.len()
+                ));
+            }
+            Ok(())
+        }
+        Ok(_) => Ok(()),
+    }
+}
+
+#[test]
+fn prop_decode_survives_corruption_of_every_tag() {
+    prop("decode is total under corruption", 400, |rng| {
+        let pkt = random_packet(rng);
+        let clean = if rng.gen_bool(0.5) {
+            pkt.encode_integrity()
+        } else {
+            pkt.encode()
+        };
+        // Truncation at every prefix of a small packet, random prefix
+        // of a large one.
+        let cut = rng.gen_range_usize(clean.len() + 1);
+        check_decode_total(&clean[..cut])?;
+        // 1–8 random bit flips.
+        let mut flipped = clean.clone();
+        for _ in 0..1 + rng.gen_range_usize(8) {
+            let bit = rng.gen_range_usize(flipped.len() * 8);
+            flipped[bit / 8] ^= 1 << (bit % 8);
+        }
+        check_decode_total(&flipped)?;
+        // Length inflation: junk appended to a valid frame (and to a
+        // flipped one) must not decode into phantom content.
+        let mut inflated = clean.clone();
+        for _ in 0..1 + rng.gen_range_usize(64) {
+            inflated.push(rng.next_u32() as u8);
+        }
+        check_decode_total(&inflated)?;
+        flipped.extend_from_slice(&inflated[clean.len()..]);
+        check_decode_total(&flipped)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_integrity_trailer_rejects_every_single_bit_flip() {
+    prop("CRC catches single flips", 150, |rng| {
+        let pkt = match random_packet(rng) {
+            // Only the data/ack tags carry the trailer; re-draw others
+            // into an Aggregation packet.
+            p @ (Packet::Aggregation(_) | Packet::VectorAggregation(_) | Packet::AggAck(_)) => p,
+            _ => Packet::Aggregation(AggregationPacket {
+                tree: TreeId(7),
+                op: AggOp::Sum,
+                eot: true,
+                rel: None,
+                pairs: vec![KvPair::new(Key::from_id(1, 16), 42)],
+            }),
+        };
+        let clean = pkt.encode_integrity();
+        if Packet::decode(&clean).is_err() {
+            return Err("clean integrity frame failed decode".into());
+        }
+        let bit = rng.gen_range_usize(clean.len() * 8);
+        let mut bad = clean.clone();
+        bad[bit / 8] ^= 1 << (bit % 8);
+        match Packet::decode(&bad) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!("flip of bit {bit} went undetected")),
+        }
+    });
+}
