@@ -1,0 +1,135 @@
+//! Pipeline-driver benchmarks (EXPERIMENTS.md §Streaming pipeline):
+//! what the unified hop driver and the overlapped relay schedule cost
+//! in simulator throughput.  Structural claims under test: (1) the
+//! batch-mode pipeline driver — the zero-pipelining differential
+//! baseline — adds no measurable overhead over the legacy two-phase
+//! transport session it is pinned byte-identical to; (2) the
+//! overlapped schedule pays only for the extra interleaved egress
+//! events, not a per-pair tax (the stream packer is the same greedy
+//! MTU walk `pack_stream` does); (3) the two-level rack→spine relay
+//! scales with total packets carried, not with rack count.  Items =
+//! transport packets put on the wire (data first-tx +
+//! retransmissions, all hops, per job), comparable against
+//! `BENCH_transport.json`.  Results land in `BENCH_pipeline.json`
+//! (override with `SWITCHAGG_BENCH_PIPELINE_JSON`).
+
+use switchagg::framework::transport::{run_transport_scalar, TransportConfig};
+use switchagg::framework::{
+    run_pipeline_scalar, run_pipeline_two_level, PipelineConfig,
+};
+use switchagg::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId};
+use switchagg::switch::{SwitchAggSwitch, SwitchConfig};
+use switchagg::util::bench::{self, JsonLog};
+use switchagg::util::rng::Pcg32;
+
+/// Small key store so evictions stream mid-ingest — the overlapped
+/// schedule must have a relay stream to drain or the bench measures
+/// nothing.
+fn switch(children: usize) -> SwitchAggSwitch {
+    let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(16 << 10, Some(8 << 20)));
+    sw.configure(&[TreeConfig {
+        tree: TreeId(1),
+        children: children as u16,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    sw
+}
+
+fn streams(children: usize, pairs: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0x9E);
+            (0..pairs)
+                .map(|_| {
+                    let id = child.gen_range_u64((pairs as u64 / 4).max(64));
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(100) as i64 - 50,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn main() {
+    let mut log = JsonLog::new();
+    let children = 16usize;
+    let pairs = 3_000usize;
+    let cfg = TransportConfig::uniform(0.005, 0x919E);
+
+    bench::section("batch schedule: legacy session vs pipeline driver (pinned identical)");
+    log.push(&bench::run("legacy two-phase session", 1, 5, move || {
+        let ss = streams(children, pairs, 0x919E);
+        let mut sw = switch(children);
+        let run = run_transport_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+        run.ingress.first_tx
+            + run.ingress.retransmissions
+            + run.egress.first_tx
+            + run.egress.retransmissions
+    }));
+    log.push(&bench::run("pipeline driver, batch mode", 1, 5, move || {
+        let ss = streams(children, pairs, 0x919E);
+        let mut sw = switch(children);
+        let run = run_pipeline_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &PipelineConfig::batch(cfg),
+        );
+        run.ingress.first_tx
+            + run.ingress.retransmissions
+            + run.egress.first_tx
+            + run.egress.retransmissions
+    }));
+
+    bench::section("overlapped relay (streaming egress during ingest)");
+    log.push(&bench::run("pipeline driver, streaming", 1, 5, move || {
+        let ss = streams(children, pairs, 0x919E);
+        let mut sw = switch(children);
+        let run = run_pipeline_scalar(
+            &mut sw,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &PipelineConfig::streaming(cfg),
+        );
+        run.ingress.first_tx
+            + run.ingress.retransmissions
+            + run.egress.first_tx
+            + run.egress.retransmissions
+    }));
+
+    bench::section("two-level rack → spine → reducer composition");
+    log.push(&bench::run("4x4 two-level streaming", 1, 5, move || {
+        let racks = 4usize;
+        let per = 4usize;
+        let ss = streams(racks * per, pairs / 2, 0x919E);
+        let grouped: Vec<Vec<Vec<KvPair>>> = ss.chunks(per).map(|c| c.to_vec()).collect();
+        let mut rack_sw: Vec<SwitchAggSwitch> = (0..racks).map(|_| switch(per)).collect();
+        let mut spine = switch(racks);
+        let run = run_pipeline_two_level(
+            &mut rack_sw,
+            &mut spine,
+            TreeId(1),
+            AggOp::Sum,
+            &grouped,
+            &PipelineConfig::streaming(cfg),
+        );
+        run.ingress.first_tx
+            + run.ingress.retransmissions
+            + run.relay.first_tx
+            + run.relay.retransmissions
+            + run.egress.first_tx
+            + run.egress.retransmissions
+    }));
+
+    let path = std::env::var("SWITCHAGG_BENCH_PIPELINE_JSON")
+        .unwrap_or_else(|_| "BENCH_pipeline.json".to_string());
+    if let Err(e) = log.write(&path) {
+        eprintln!("could not write bench log {path}: {e}");
+    }
+}

@@ -1,7 +1,13 @@
-//! Shared experiment plumbing: workload scaling, table printing, and
-//! the execution-engine (parallelism) config shared by the harnesses.
+//! Shared experiment plumbing: workload scaling, table printing,
+//! workload generation, the exactness-assert helpers, and the
+//! execution-engine (parallelism) config shared by the harnesses.
 
+use crate::framework::Reducer;
+use crate::protocol::{AggOp, Key, KvPair, Value};
+use crate::switch::SwitchConfig;
+use crate::util::rng::Pcg32;
 use crate::util::stats::human_bytes;
+use std::collections::HashMap;
 
 pub use crate::switch::parallel::Parallelism;
 
@@ -80,6 +86,61 @@ pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
 /// Format a ratio as a percentage cell.
 pub fn pct(x: f64) -> String {
     format!("{:.2}%", x * 100.0)
+}
+
+/// The sweep harnesses' shared per-child workload: `fan_in` streams of
+/// `pairs_per_child` pairs over a key variety that scales with the
+/// stream (each child repeats a key ~4×, keeping the reduction solidly
+/// positive at any `--scale`).  `salt` keeps the modules' workloads
+/// decorrelated while the generator stays in one place.
+pub fn keyed_workload(
+    fan_in: usize,
+    pairs_per_child: usize,
+    seed: u64,
+    salt: u64,
+) -> Vec<Vec<KvPair>> {
+    let variety = (pairs_per_child as u64 / 4).max(64);
+    let mut rng = Pcg32::new(seed);
+    (0..fan_in)
+        .map(|_| {
+            let mut child = rng.fork(salt);
+            (0..pairs_per_child)
+                .map(|_| {
+                    let id = child.gen_range_u64(variety);
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(100) as i64 - 50,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The sweep harnesses' shared switch provisioning: the paper's 32 MB
+/// key store / 8 GB DRAM spill, both divided by the run's `--scale`.
+pub fn switch_cfg(scale: Scale) -> SwitchConfig {
+    SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(8 << 30)))
+}
+
+/// Software-merge a received stream down to its final per-key totals —
+/// the byte-exactness oracle every sweep compares against.
+pub fn final_map(pairs: &[KvPair]) -> HashMap<Key, Value> {
+    Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
+}
+
+/// The sweeps' `exact` table cell ("yes" / loud "NO").
+pub fn exact_cell(exact: bool) -> String {
+    if exact { "yes" } else { "NO" }.to_string()
+}
+
+/// Assert every sweep row's exactness flag, naming the harness in the
+/// panic — the one invariant every experiment shares.
+pub fn assert_all_exact<T>(rows: &[T], is_exact: impl Fn(&T) -> bool, harness: &str) {
+    assert!(
+        rows.iter().all(is_exact),
+        "exactly-once invariant violated — a {harness} cell diverged from its software oracle"
+    );
 }
 
 #[cfg(test)]

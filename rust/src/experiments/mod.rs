@@ -21,6 +21,7 @@ pub mod sec_faults;
 pub mod sec_incast;
 pub mod sec_integrity;
 pub mod sec_loss;
+pub mod sec_pipeline;
 pub mod sec_tenancy;
 pub mod table2;
 pub mod table3;

@@ -36,16 +36,17 @@
 //! * `combo`           — link outage + 2× straggler + crash/restart in
 //!                       one run: recovery mechanisms compose.
 
-use crate::experiments::common::{parallelism, pct, print_table, Parallelism, Scale};
+use crate::experiments::common::{
+    assert_all_exact, exact_cell, final_map, keyed_workload, parallelism, pct, print_table,
+    switch_cfg, Parallelism, Scale,
+};
 use crate::framework::chaos::{
     run_chaos_scalar, ChaosConfig, ChaosScalarReport, EotQuorum,
 };
 use crate::framework::Reducer;
 use crate::net::FaultPlan;
 use crate::protocol::{AggOp, Key, KvPair, Value};
-use crate::switch::SwitchConfig;
 use crate::util::par::par_map;
-use crate::util::rng::Pcg32;
 use std::collections::HashMap;
 
 /// One chaos cell: a (scenario, fan-in) point.
@@ -80,34 +81,11 @@ pub struct FaultsRow {
 }
 
 fn workload(fan_in: usize, pairs_per_child: usize, seed: u64) -> Vec<Vec<KvPair>> {
-    let variety = (pairs_per_child as u64 / 4).max(64);
-    let mut rng = Pcg32::new(seed);
-    (0..fan_in)
-        .map(|_| {
-            let mut child = rng.fork(0xFA17);
-            (0..pairs_per_child)
-                .map(|_| {
-                    let id = child.gen_range_u64(variety);
-                    KvPair::new(
-                        Key::from_id(id, 16 + (id % 49) as usize),
-                        child.gen_range_u64(100) as i64 - 50,
-                    )
-                })
-                .collect()
-        })
-        .collect()
-}
-
-fn switch_cfg(scale: Scale) -> SwitchConfig {
-    SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(8 << 30)))
+    keyed_workload(fan_in, pairs_per_child, seed, 0xFA17)
 }
 
 fn pairs_per_child(scale: Scale) -> usize {
     (scale.bytes(16 << 20) / 25).max(128) as usize
-}
-
-fn final_map(pairs: &[KvPair]) -> HashMap<Key, Value> {
-    Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
 }
 
 fn member_map(streams: &[Vec<KvPair>], members: &[u16]) -> HashMap<Key, Value> {
@@ -326,15 +304,12 @@ pub fn run(scale: Scale) {
                     r.software.to_string(),
                     r.excluded.to_string(),
                     pct(r.reduction),
-                    if r.exact { "yes" } else { "NO" }.to_string(),
+                    exact_cell(r.exact),
                 ]
             })
             .collect::<Vec<_>>(),
     );
-    assert!(
-        rows.iter().all(|r| r.exact),
-        "exactness violated — a chaos cell diverged from its declared membership"
-    );
+    assert_all_exact(&rows, |r| r.exact, "chaos");
     // Acceptance pins: every recoverable crash restarts exactly once
     // and keeps full in-network membership; every dead-switch cell
     // completes in software with zero in-network children.

@@ -25,15 +25,16 @@
 //! reference.
 
 use crate::baseline::{DaietConfig, DaietSwitch};
-use crate::experiments::common::{parallelism, pct, print_table, Parallelism, Scale};
+use crate::experiments::common::{
+    assert_all_exact, exact_cell, final_map, keyed_workload, parallelism, pct, print_table,
+    switch_cfg, Parallelism, Scale,
+};
 use crate::framework::reliable::{run_reliable_scalar, ReliabilityConfig};
 use crate::framework::transport::{run_transport_scalar, CreditMode, TransportConfig, TransportRun};
-use crate::framework::Reducer;
 use crate::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId, Value};
 use crate::sim::Link;
-use crate::switch::{SwitchAggSwitch, SwitchConfig};
+use crate::switch::SwitchAggSwitch;
 use crate::util::par::par_map;
-use crate::util::rng::Pcg32;
 use std::collections::HashMap;
 
 /// One sweep cell (one loss × fan-in point, both credit modes).
@@ -68,29 +69,11 @@ pub struct IncastRow {
 }
 
 fn workload(fan_in: usize, pairs_per_child: usize, seed: u64) -> Vec<Vec<KvPair>> {
-    // Key variety scales with the stream so each child repeats a key
-    // ~4×, keeping the reduction solidly positive at any --scale.
-    let variety = (pairs_per_child as u64 / 4).max(64);
-    let mut rng = Pcg32::new(seed);
-    (0..fan_in)
-        .map(|_| {
-            let mut child = rng.fork(0x1ca5);
-            (0..pairs_per_child)
-                .map(|_| {
-                    let id = child.gen_range_u64(variety);
-                    KvPair::new(
-                        Key::from_id(id, 16 + (id % 49) as usize),
-                        child.gen_range_u64(100) as i64 - 50,
-                    )
-                })
-                .collect()
-        })
-        .collect()
+    keyed_workload(fan_in, pairs_per_child, seed, 0x1ca5)
 }
 
 fn switch_for(fan_in: usize, scale: Scale) -> SwitchAggSwitch {
-    let cfg = SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(8 << 30)));
-    let mut sw = SwitchAggSwitch::new(cfg);
+    let mut sw = SwitchAggSwitch::new(switch_cfg(scale));
     sw.configure(&[TreeConfig {
         tree: TreeId(1),
         children: fan_in as u16,
@@ -98,10 +81,6 @@ fn switch_for(fan_in: usize, scale: Scale) -> SwitchAggSwitch {
         op: AggOp::Sum,
     }]);
     sw
-}
-
-fn final_map(pairs: &[KvPair]) -> HashMap<Key, Value> {
-    Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
 }
 
 fn pairs_per_child(scale: Scale) -> usize {
@@ -255,17 +234,14 @@ pub fn run(scale: Scale) {
                     format!("{:.0}", r.cwnd_peak),
                     format!("{:.1} us", r.srtt_us),
                     r.fifo_peak.to_string(),
-                    if r.exact { "yes" } else { "NO" }.to_string(),
+                    exact_cell(r.exact),
                     format!("{:.3} ms", r.noagg_jct_ms),
                     pct(r.daiet_reduction),
                 ]
             })
             .collect::<Vec<_>>(),
     );
-    assert!(
-        rows.iter().all(|r| r.exact),
-        "exactly-once invariant violated — a transport cell diverged from the tick reference"
-    );
+    assert_all_exact(&rows, |r| r.exact, "incast transport");
     // The acceptance claim: at high fan-in under loss, adaptive credit
     // must not lose to the fixed window (it should win, and does —
     // loss recovery rides the measured RTT instead of the static RTO).

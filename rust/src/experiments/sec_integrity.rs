@@ -29,14 +29,15 @@
 //! the trailer repurposes the modeled Ethernet FCS, so turning
 //! integrity on costs a corruption-free job nothing at all.
 
-use crate::experiments::common::{parallelism, pct, print_table, Parallelism, Scale};
+use crate::experiments::common::{
+    exact_cell, keyed_workload, parallelism, pct, print_table, switch_cfg, Parallelism, Scale,
+};
 use crate::framework::integrity::{run_integrity_scalar, IntegrityConfig};
 use crate::framework::transport::{run_transport_scalar, TransportConfig};
 use crate::net::FaultPlan;
 use crate::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId};
-use crate::switch::{SwitchAggSwitch, SwitchConfig};
+use crate::switch::SwitchAggSwitch;
 use crate::util::par::par_map;
-use crate::util::rng::Pcg32;
 
 /// One integrity cell: a (wire format, corruption rate, fan-in) point.
 #[derive(Clone, Debug)]
@@ -74,26 +75,7 @@ const SWEEP_FAN_IN: [usize; 3] = [4, 16, 64];
 const SWEEP_RATES: [f64; 4] = [0.0, 1e-6, 1e-4, 1e-2];
 
 fn workload(fan_in: usize, pairs_per_child: usize, seed: u64) -> Vec<Vec<KvPair>> {
-    let variety = (pairs_per_child as u64 / 4).max(64);
-    let mut rng = Pcg32::new(seed);
-    (0..fan_in)
-        .map(|_| {
-            let mut child = rng.fork(0x1D7E);
-            (0..pairs_per_child)
-                .map(|_| {
-                    let id = child.gen_range_u64(variety);
-                    KvPair::new(
-                        Key::from_id(id, 16 + (id % 49) as usize),
-                        child.gen_range_u64(100) as i64 - 50,
-                    )
-                })
-                .collect()
-        })
-        .collect()
-}
-
-fn switch_cfg(scale: Scale) -> SwitchConfig {
-    SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(8 << 30)))
+    keyed_workload(fan_in, pairs_per_child, seed, 0x1D7E)
 }
 
 /// Larger per-child streams than the chaos sweep: corruption is a
@@ -255,7 +237,7 @@ pub fn run(scale: Scale) {
                     r.audit_failures.to_string(),
                     r.recoveries.to_string(),
                     r.forced_flushes.to_string(),
-                    if r.exact { "yes" } else { "NO" }.to_string(),
+                    exact_cell(r.exact),
                 ]
             })
             .collect::<Vec<_>>(),

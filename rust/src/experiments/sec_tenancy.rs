@@ -31,7 +31,9 @@
 //! `quota+wfq` keeps the victim's p99 JCT within 1.5× of solo at every
 //! tenant count, while `static` at 32 tenants is measurably worse.
 
-use crate::experiments::common::{parallelism, print_table, Parallelism, Scale};
+use crate::experiments::common::{
+    assert_all_exact, exact_cell, parallelism, print_table, switch_cfg, Parallelism, Scale,
+};
 use crate::framework::tenancy::{
     poisson_starts, run_tenancy, TenancyRegime, TenancyRun, TenantJob, TenantSpec,
 };
@@ -64,10 +66,6 @@ const SWEEP_SEED: u64 = 0x7E4A;
 const VICTIM_JOBS: usize = 12;
 const VICTIM_KEYS: u64 = 64;
 const FLOODER_JOBS: usize = 4;
-
-fn switch_cfg(scale: Scale) -> SwitchConfig {
-    SwitchConfig::scaled(scale.bytes(32 << 20), Some(scale.bytes(8 << 30)))
-}
 
 /// Victim job size: floored so the job stays several MTUs even at
 /// smoke scale (the isolation ratios need jobs that outlast one
@@ -337,17 +335,14 @@ pub fn run(scale: Scale) {
                     r.completed.to_string(),
                     r.rejected.to_string(),
                     r.reclaims.to_string(),
-                    if r.exact { "yes" } else { "NO" }.to_string(),
+                    exact_cell(r.exact),
                 ]
             })
             .collect::<Vec<_>>(),
     );
     // Per-tenant per-cell exactness for every admitted job, under both
     // churn and flooding — the tenancy tentpole's correctness pin.
-    assert!(
-        rows.iter().all(|r| r.exact),
-        "a tenant's job diverged from its software-merge oracle"
-    );
+    assert_all_exact(&rows, |r| r.exact, "tenancy");
     // Isolation acceptance: weighted grants keep the victim's p99
     // within 1.5x of solo at every tenant count...
     for r in rows.iter().filter(|r| r.regime == "quota+wfq") {

@@ -43,12 +43,13 @@
 //!   the finished children (an epoch restart with `children = k`), so
 //!   the aggregate is exact over the *declared* membership.
 //!
-//! **Zero-fault transparency.**  The chaos ingress loop is a faithful
-//! mirror of `drive_hop` — same initial polls, same ack-id tagging,
-//! same drained-network deadline jump, same stats accounting — whose
-//! fault hooks are provably inert on an empty plan: `tests/faults.rs`
-//! pins `FaultPlan::none()` byte-identical (aggregate *and* per-hop
-//! stats) to `run_transport_scalar`/`run_transport_vector`.
+//! **Zero-fault transparency.**  The chaos ingress runs on the shared
+//! hop-driver core (`framework::hop`) — same initial polls, same
+//! ack-id tagging, same drained-network deadline jump, same stats
+//! accounting as the plain transport hop — and its fault hooks are
+//! provably inert on an empty plan: `tests/faults.rs` pins
+//! `FaultPlan::none()` byte-identical (aggregate *and* per-hop stats)
+//! to `run_transport_scalar`/`run_transport_vector`.
 //!
 //! Wire realism note: the epoch rides in [`RelHeader`] on the wire; the
 //! co-simulation additionally folds it into the `NetSim` tag (bits
@@ -65,6 +66,7 @@
 //! until end-of-job, so this costs no extra state).
 
 use crate::controller::Controller;
+use crate::framework::hop::{self, Flow, HopDriver};
 use crate::framework::reducer::{Completeness, Reducer};
 use crate::framework::reliable::{stamp, Endpoint};
 use crate::framework::transport::{
@@ -73,7 +75,7 @@ use crate::framework::transport::{
     KIND_INGRESS_DATA,
 };
 use crate::net::faults::FaultPlan;
-use crate::net::netsim::NetSim;
+use crate::net::netsim::{Delivery, NetSim};
 use crate::net::topology::{NodeId, Topology};
 use crate::protocol::{
     AdaptiveSender, AggAckPacket, AggOp, AggregationPacket, ConfigurePacket, KvPair, LaunchPacket,
@@ -329,8 +331,8 @@ struct IngressOutcome {
     failed_over: bool,
 }
 
-/// The fault-aware mirror of `transport::drive_hop` for the ingress
-/// (mappers → switch) hop.  Every divergence from `drive_hop` is
+/// Drive the fault-aware ingress (mappers → switch) hop on the shared
+/// hop-driver core.  Every divergence from the plain transport hop is
 /// behind a fault-plan or transition query that an empty plan never
 /// satisfies, which is what makes the zero-fault byte-identity
 /// property hold.
@@ -348,8 +350,7 @@ fn drive_chaos_ingress<L: ChaosLane>(
     cfg: &ChaosConfig,
 ) -> Result<IngressOutcome, ChaosError> {
     let children = lens.len();
-    let plan = &cfg.plan;
-    let mut senders: Vec<AdaptiveSender> = lens
+    let senders: Vec<AdaptiveSender> = lens
         .iter()
         .map(|l| {
             let s = cfg.transport.sender_for(l.len());
@@ -359,18 +360,13 @@ fn drive_chaos_ingress<L: ChaosLane>(
             }
         })
         .collect();
-    let mut members = vec![true; children];
-    let mut epoch: u16 = 0;
-    let mut restarts: u32 = 0;
-    let mut replayed_packets: u64 = 0;
-    let mut failed_over = false;
 
     // A `slowdown×` straggler begins its stream after `(slowdown − 1) ×`
     // the stream's nominal serialization time — the head-of-stream
     // delay stresses the EoT quorum hardest.
     let start_s: Vec<f64> = (0..children)
         .map(|c| {
-            let f = plan.straggle_factor(c as u16);
+            let f = cfg.plan.straggle_factor(c as u16);
             if f > 1.0 {
                 (f - 1.0) * sim.transfer_secs(lens[c].iter().sum())
             } else {
@@ -380,7 +376,7 @@ fn drive_chaos_ingress<L: ChaosLane>(
         .collect();
 
     let mut transitions: Vec<Transition> = Vec::new();
-    if let Some(crash) = plan.switch_crash() {
+    if let Some(crash) = cfg.plan.switch_crash() {
         if let Some(r) = crash.restart_at_s {
             transitions.push(Transition::Restart(r));
         }
@@ -389,19 +385,14 @@ fn drive_chaos_ingress<L: ChaosLane>(
         transitions.push(Transition::Quorum(q));
     }
     transitions.sort_by(|a, b| a.time().partial_cmp(&b.time()).expect("finite fault times"));
-    let mut tix = 0usize;
 
-    let mut acks: Vec<AggAckPacket> = Vec::new();
     let mut stats = NetHopStats::default();
     for l in lens {
         stats.first_tx_bytes += l.iter().sum::<u64>();
     }
     let links_before = sim.link_stats();
     let events_before = sim.events_processed();
-
-    let mut out_seqs: Vec<u32> = Vec::new();
     let t0 = sim.now_s();
-    let mut done_s = t0;
 
     // Stragglers that have not begun, latest start first (pop order).
     let mut pending_starts: Vec<(f64, usize)> = (0..children)
@@ -410,339 +401,53 @@ fn drive_chaos_ingress<L: ChaosLane>(
         .collect();
     pending_starts.sort_by(|a, b| b.0.partial_cmp(&a.0).expect("finite start times"));
 
-    macro_rules! send_polled {
-        ($c:expr, $t:expr, $sent:expr) => {{
-            let c = $c;
-            let t = $t;
-            out_seqs.clear();
-            senders[c].poll(t, &mut out_seqs);
-            for &seq in &out_seqs {
-                $sent = true;
-                let bytes = lens[c][(seq - 1) as usize];
-                stats.wire_bytes += bytes;
-                sim.send_tagged(t, mappers[c], hub, bytes, ctag(KIND_INGRESS_DATA, c as u16, seq, epoch));
-            }
-        }};
-    }
-
-    // Epoch restart shared by switch recovery and quorum re-plans: the
-    // controller re-pushes Configure under the declared membership, the
-    // switch fences the new epoch, pre-restart sink emissions are
-    // discarded, and every live member rebases and replays from seq 1
-    // (the old incarnation's acked prefix is gone).
-    macro_rules! rebase_members {
-        ($e:expr, $now:expr) => {{
-            let e = $e;
-            let now = $now;
-            assert!(e < 256, "chaos tags encode the epoch in 8 bits; {e} incarnations is beyond the fault model");
-            for (_, conf) in ctl.reconfigures(tree) {
-                sw.configure_vector(&conf.trees, lanes);
-            }
-            apply_session_policy(sw, &cfg.transport);
-            sw.begin_epoch(tree, e);
-            lane.clear_sink();
-            lane.restamp(e);
-            epoch = e;
-            for c in 0..children {
-                if members[c] && plan.mapper_alive(c as u16, now) {
-                    replayed_packets += senders[c].sent() as u64;
-                    senders[c].rebase(e);
-                }
-            }
-            let mut kicked = false;
-            for c in 0..children {
-                if members[c]
-                    && plan.mapper_alive(c as u16, now)
-                    && now >= start_s[c]
-                    && !senders[c].done()
-                {
-                    send_polled!(c, now, kicked);
-                }
-            }
-            let _ = kicked;
-        }};
-    }
-
-    // Shrink the declared membership to the finished children and
-    // epoch-restart so the switch's EoT count and the laggards' fenced
-    // streams agree with the new declaration.
-    macro_rules! quorum_replan {
-        ($now:expr) => {{
-            let now = $now;
-            let m = (0..children).filter(|&c| members[c] && senders[c].done()).count() as u16;
-            for c in 0..children {
-                members[c] = members[c] && senders[c].done();
-            }
-            let (e, _confs) = ctl
-                .replan_membership(tree, m)
-                .expect("running tree re-plans membership");
-            rebase_members!(e, now);
-        }};
-    }
-
-    macro_rules! apply_transitions {
-        ($now:expr) => {{
-            let now = $now;
-            while tix < transitions.len() && transitions[tix].time() <= now {
-                match transitions[tix] {
-                    Transition::Restart(_) => {
-                        restarts += 1;
-                        sw.crash();
-                        let e = ctl.bump_epoch(tree).expect("running tree restarts");
-                        rebase_members!(e, now);
-                    }
-                    Transition::Quorum(_) => {
-                        let done_members =
-                            (0..children).filter(|&c| members[c] && senders[c].done()).count();
-                        let active = (0..children).filter(|&c| members[c]).count();
-                        if done_members < active {
-                            match cfg.quorum {
-                                EotQuorum::All => {
-                                    // All-quorum drops nobody: audit that
-                                    // every member can still finish.
-                                    let possible = (0..children)
-                                        .filter(|&c| {
-                                            members[c]
-                                                && (senders[c].done()
-                                                    || plan.mapper_alive(c as u16, now))
-                                        })
-                                        .count();
-                                    if possible < active {
-                                        return Err(ChaosError::QuorumUnreachable {
-                                            have: possible,
-                                            need: active,
-                                        });
-                                    }
-                                }
-                                EotQuorum::KofN(k) => {
-                                    if done_members >= k as usize {
-                                        quorum_replan!(now);
-                                    } else {
-                                        let possible = (0..children)
-                                            .filter(|&c| {
-                                                members[c]
-                                                    && (senders[c].done()
-                                                        || plan.mapper_alive(c as u16, now))
-                                            })
-                                            .count();
-                                        if possible < k as usize {
-                                            return Err(ChaosError::QuorumUnreachable {
-                                                have: possible,
-                                                need: k as usize,
-                                            });
-                                        }
-                                        // Quorum not met yet but still
-                                        // reachable: keep waiting.
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-                tix += 1;
-            }
-        }};
-    }
-
-    macro_rules! fire_starts {
-        ($now:expr) => {{
-            let now = $now;
-            while pending_starts.last().map_or(false, |&(s, _)| s <= now) {
-                let (_, c) = pending_starts.pop().expect("non-empty");
-                if members[c] && plan.mapper_alive(c as u16, now) && !senders[c].done() {
-                    let mut kicked = false;
-                    send_polled!(c, now, kicked);
-                    let _ = kicked;
-                }
-            }
-        }};
-    }
-
-    // A give-up is terminal: either the switch is verifiably dead
-    // (heartbeats silent) and the controller fails the job over, or the
-    // typed transport error surfaces to the caller.
-    macro_rules! check_giveup {
-        ($now:expr) => {{
-            let now = $now;
-            let fail = (0..children)
-                .filter(|&c| members[c] && plan.mapper_alive(c as u16, now))
-                .find_map(|c| senders[c].failure());
-            if let Some(err) = fail {
-                if plan.switch_dead(now) && ctl.failure_detected(tree, now, cfg.detect_timeout_s) {
-                    ctl.fail_over(tree).expect("running tree fails over");
-                    failed_over = true;
-                } else {
-                    return Err(ChaosError::Transport(err));
-                }
-            }
-        }};
-    }
-
-    for c in 0..children {
-        if start_s[c] <= t0 {
-            let mut kicked = false;
-            send_polled!(c, t0, kicked);
-            let _ = kicked;
-        }
-    }
-
-    let mut steps: u64 = 0;
-    loop {
-        if failed_over || (0..children).all(|c| !members[c] || senders[c].done()) {
-            break;
-        }
-        steps += 1;
-        assert!(
-            steps <= cfg.transport.max_steps,
-            "chaos session did not converge within {} steps",
-            cfg.transport.max_steps
-        );
-        let Some(d) = sim.step_delivery() else {
-            // Drained with members unfinished: jump to the earliest
-            // thing that can happen — a retransmission deadline, a
-            // straggler's start, or a scheduled transition.
-            let mut target = f64::INFINITY;
-            for c in 0..children {
-                if !members[c] || senders[c].done() {
-                    continue;
-                }
-                if !plan.mapper_alive(c as u16, sim.now_s()) {
-                    continue;
-                }
-                if senders[c].failure().is_some() {
-                    continue;
-                }
-                if let Some(dl) = senders[c].next_retx_deadline() {
-                    target = target.min(dl);
-                }
-                if start_s[c] > sim.now_s() {
-                    target = target.min(start_s[c]);
-                }
-            }
-            if tix < transitions.len() {
-                target = target.min(transitions[tix].time());
-            }
-            let t = if target.is_finite() {
-                target.max(sim.now_s())
-            } else {
-                sim.now_s()
-            };
-            let applied_before = tix;
-            apply_transitions!(t);
-            fire_starts!(t);
-            let mut sent_any = false;
-            for c in 0..children {
-                if !members[c] || senders[c].done() {
-                    continue;
-                }
-                if !plan.mapper_alive(c as u16, t) || t < start_s[c] {
-                    continue;
-                }
-                send_polled!(c, t, sent_any);
-            }
-            check_giveup!(t);
-            if failed_over || sent_any || tix > applied_before {
-                continue;
-            }
-            // Nothing in flight, no timers, no pending transitions, and
-            // nothing sendable: every unfinished member is dead (live
-            // ones always carry a timer, a pending start, or a pollable
-            // window).  Resolve the quorum now — waiting cannot help.
-            let done_members = (0..children).filter(|&c| members[c] && senders[c].done()).count();
-            let (have, need) = match cfg.quorum {
-                EotQuorum::All => {
-                    (done_members, (0..children).filter(|&c| members[c]).count())
-                }
-                EotQuorum::KofN(k) => (done_members, k as usize),
-            };
-            if matches!(cfg.quorum, EotQuorum::KofN(_)) && have >= need {
-                quorum_replan!(t);
-                continue;
-            }
-            return Err(ChaosError::QuorumUnreachable { have, need });
-        };
-        apply_transitions!(d.time_s);
-        fire_starts!(d.time_s);
-        let kind = tag_kind(d.tag);
-        if kind == KIND_INGRESS_DATA && d.node == hub {
-            let child = tag_child(d.tag) as usize;
-            let seq = tag_idx(d.tag);
-            if plan.switch_down(d.time_s) || plan.link_down(child as u16, d.time_s) {
-                sim.note_faulted_drop(mappers[child], hub);
-                continue;
-            }
-            let ack = lane.ingest(sw, tree, child, seq, ctag_epoch(d.tag));
-            let id = u32::try_from(acks.len()).expect("ack id space exhausted");
-            acks.push(ack);
-            sim.send_tagged(
-                d.time_s,
-                hub,
-                mappers[child],
-                ACK_WIRE_LEN,
-                ctag(KIND_INGRESS_ACK, child as u16, id, epoch),
-            );
-        } else if kind == KIND_INGRESS_ACK {
-            let c = tag_child(d.tag) as usize;
-            if plan.link_down(c as u16, d.time_s) {
-                sim.note_faulted_drop(hub, mappers[c]);
-                continue;
-            }
-            if !members[c] || !plan.mapper_alive(c as u16, d.time_s) {
-                continue;
-            }
-            // Data-plane acks double as the switch's heartbeat.
-            ctl.record_heartbeat(tree, d.time_s);
-            let ack = acks[tag_idx(d.tag) as usize];
-            let sender = &mut senders[c];
-            let was_done = sender.done();
-            sender.on_ack_epoch(ack.epoch, ack.cum_seq, ack.credit, d.time_s);
-            if !was_done && sender.done() {
-                done_s = done_s.max(d.time_s);
-            }
-            let mut sent = false;
-            send_polled!(c, d.time_s, sent);
-            let _ = sent;
-            check_giveup!(d.time_s);
-        }
-        // Any other tag is a straggler from a previous hop or epoch:
-        // the job has moved on, drop it.
-    }
-
-    stats.done_s = done_s;
-    let mut srtt_sum = 0.0;
-    let mut srtt_n = 0u32;
-    for s in &senders {
-        stats.first_tx += s.first_tx;
-        stats.retransmissions += s.retransmissions;
-        stats.timeouts += s.timeouts;
-        stats.cwnd_peak = stats.cwnd_peak.max(s.cwnd_peak());
-        if let Some(srtt) = s.rtt().srtt_s() {
-            srtt_sum += srtt;
-            srtt_n += 1;
-        }
-    }
-    if srtt_n > 0 {
-        stats.srtt_mean_s = srtt_sum / srtt_n as f64;
-    }
-    let links_after = sim.link_stats();
-    let delta = |key: (NodeId, NodeId)| -> (u64, u64) {
-        let after = links_after
-            .get(&key)
-            .map(|s| (s.dropped, s.duplicated))
-            .unwrap_or((0, 0));
-        let before = links_before
-            .get(&key)
-            .map(|s| (s.dropped, s.duplicated))
-            .unwrap_or((0, 0));
-        (after.0 - before.0, after.1 - before.1)
+    let mut drv = ChaosHop {
+        ctl,
+        sw,
+        lane,
+        tree,
+        lanes,
+        lens,
+        mappers,
+        hub,
+        cfg,
+        children,
+        senders,
+        members: vec![true; children],
+        epoch: 0,
+        restarts: 0,
+        replayed_packets: 0,
+        failed_over: false,
+        start_s,
+        transitions,
+        tix: 0,
+        acks: Vec::new(),
+        stats,
+        out_seqs: Vec::new(),
+        done_s: t0,
+        pending_starts,
     };
-    for &m in mappers {
-        let (drops, dups) = delta((m, hub));
-        stats.drops += drops;
-        stats.dups += dups;
-        stats.acks_dropped += delta((hub, m)).0;
+    for c in 0..children {
+        if drv.start_s[c] <= t0 {
+            drv.send_polled(sim, c, t0);
+        }
     }
-    stats.events = sim.events_processed() - events_before;
+    hop::drive(sim, cfg.transport.max_steps, &mut drv)?;
+
+    let ChaosHop {
+        senders,
+        members,
+        epoch,
+        restarts,
+        replayed_packets,
+        failed_over,
+        mut stats,
+        done_s,
+        ..
+    } = drv;
+    stats.done_s = done_s;
+    hop::fill_sender_stats(&mut stats, senders.iter());
+    hop::finish_hop_stats(&mut stats, sim, &links_before, events_before, mappers, hub);
     Ok(IngressOutcome {
         stats,
         members,
@@ -751,6 +456,335 @@ fn drive_chaos_ingress<L: ChaosLane>(
         replayed_packets,
         failed_over,
     })
+}
+
+/// Ingress-hop state for one chaos session: a [`HopDriver`] whose
+/// per-delivery hooks carry the fault plan, the epoch machine, and the
+/// EoT-quorum policy on top of the shared event loop.
+struct ChaosHop<'a, L: ChaosLane> {
+    ctl: &'a mut Controller,
+    sw: &'a mut SwitchAggSwitch,
+    lane: &'a mut L,
+    tree: TreeId,
+    lanes: usize,
+    lens: &'a [Vec<u64>],
+    mappers: &'a [NodeId],
+    hub: NodeId,
+    cfg: &'a ChaosConfig,
+    children: usize,
+    senders: Vec<AdaptiveSender>,
+    /// Declared membership after quorum re-plans.
+    members: Vec<bool>,
+    epoch: u16,
+    restarts: u32,
+    replayed_packets: u64,
+    failed_over: bool,
+    start_s: Vec<f64>,
+    transitions: Vec<Transition>,
+    tix: usize,
+    acks: Vec<AggAckPacket>,
+    stats: NetHopStats,
+    out_seqs: Vec<u32>,
+    done_s: f64,
+    pending_starts: Vec<(f64, usize)>,
+}
+
+impl<L: ChaosLane> ChaosHop<'_, L> {
+    fn send_polled(&mut self, sim: &mut NetSim, c: usize, t: f64) -> bool {
+        let (epoch, src, dst) = (self.epoch, self.mappers[c], self.hub);
+        hop::poll_send(
+            sim,
+            &mut self.senders[c],
+            &mut self.out_seqs,
+            t,
+            &self.lens[c],
+            src,
+            dst,
+            &mut self.stats.wire_bytes,
+            |seq| ctag(KIND_INGRESS_DATA, c as u16, seq, epoch),
+        )
+    }
+
+    /// Epoch restart shared by switch recovery and quorum re-plans: the
+    /// controller re-pushes Configure under the declared membership, the
+    /// switch fences the new epoch, pre-restart sink emissions are
+    /// discarded, and every live member rebases and replays from seq 1
+    /// (the old incarnation's acked prefix is gone).
+    fn rebase_members(&mut self, sim: &mut NetSim, e: u16, now: f64) {
+        assert!(
+            e < 256,
+            "chaos tags encode the epoch in 8 bits; {e} incarnations is beyond the fault model"
+        );
+        for (_, conf) in self.ctl.reconfigures(self.tree) {
+            self.sw.configure_vector(&conf.trees, self.lanes);
+        }
+        apply_session_policy(self.sw, &self.cfg.transport);
+        self.sw.begin_epoch(self.tree, e);
+        self.lane.clear_sink();
+        self.lane.restamp(e);
+        self.epoch = e;
+        for c in 0..self.children {
+            if self.members[c] && self.cfg.plan.mapper_alive(c as u16, now) {
+                self.replayed_packets += self.senders[c].sent() as u64;
+                self.senders[c].rebase(e);
+            }
+        }
+        for c in 0..self.children {
+            if self.members[c]
+                && self.cfg.plan.mapper_alive(c as u16, now)
+                && now >= self.start_s[c]
+                && !self.senders[c].done()
+            {
+                self.send_polled(sim, c, now);
+            }
+        }
+    }
+
+    /// Shrink the declared membership to the finished children and
+    /// epoch-restart so the switch's EoT count and the laggards' fenced
+    /// streams agree with the new declaration.
+    fn quorum_replan(&mut self, sim: &mut NetSim, now: f64) {
+        let m = (0..self.children)
+            .filter(|&c| self.members[c] && self.senders[c].done())
+            .count() as u16;
+        for c in 0..self.children {
+            self.members[c] = self.members[c] && self.senders[c].done();
+        }
+        let (e, _confs) = self
+            .ctl
+            .replan_membership(self.tree, m)
+            .expect("running tree re-plans membership");
+        self.rebase_members(sim, e, now);
+    }
+
+    /// Apply every scheduled transition at or before `now` (the
+    /// calendar delivers in time order, so "at the first event at or
+    /// after `t`" is causally equivalent to "at `t`").
+    fn apply_transitions(&mut self, sim: &mut NetSim, now: f64) -> Result<(), ChaosError> {
+        while self.tix < self.transitions.len() && self.transitions[self.tix].time() <= now {
+            match self.transitions[self.tix] {
+                Transition::Restart(_) => {
+                    self.restarts += 1;
+                    self.sw.crash();
+                    let e = self.ctl.bump_epoch(self.tree).expect("running tree restarts");
+                    self.rebase_members(sim, e, now);
+                }
+                Transition::Quorum(_) => {
+                    let done_members = (0..self.children)
+                        .filter(|&c| self.members[c] && self.senders[c].done())
+                        .count();
+                    let active = (0..self.children).filter(|&c| self.members[c]).count();
+                    if done_members < active {
+                        match self.cfg.quorum {
+                            EotQuorum::All => {
+                                // All-quorum drops nobody: audit that
+                                // every member can still finish.
+                                let possible = (0..self.children)
+                                    .filter(|&c| {
+                                        self.members[c]
+                                            && (self.senders[c].done()
+                                                || self.cfg.plan.mapper_alive(c as u16, now))
+                                    })
+                                    .count();
+                                if possible < active {
+                                    return Err(ChaosError::QuorumUnreachable {
+                                        have: possible,
+                                        need: active,
+                                    });
+                                }
+                            }
+                            EotQuorum::KofN(k) => {
+                                if done_members >= k as usize {
+                                    self.quorum_replan(sim, now);
+                                } else {
+                                    let possible = (0..self.children)
+                                        .filter(|&c| {
+                                            self.members[c]
+                                                && (self.senders[c].done()
+                                                    || self
+                                                        .cfg
+                                                        .plan
+                                                        .mapper_alive(c as u16, now))
+                                        })
+                                        .count();
+                                    if possible < k as usize {
+                                        return Err(ChaosError::QuorumUnreachable {
+                                            have: possible,
+                                            need: k as usize,
+                                        });
+                                    }
+                                    // Quorum not met yet but still
+                                    // reachable: keep waiting.
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            self.tix += 1;
+        }
+        Ok(())
+    }
+
+    fn fire_starts(&mut self, sim: &mut NetSim, now: f64) {
+        while self.pending_starts.last().map_or(false, |&(s, _)| s <= now) {
+            let (_, c) = self.pending_starts.pop().expect("non-empty");
+            if self.members[c]
+                && self.cfg.plan.mapper_alive(c as u16, now)
+                && !self.senders[c].done()
+            {
+                self.send_polled(sim, c, now);
+            }
+        }
+    }
+
+    /// A give-up is terminal: either the switch is verifiably dead
+    /// (heartbeats silent) and the controller fails the job over, or the
+    /// typed transport error surfaces to the caller.
+    fn check_giveup(&mut self, now: f64) -> Result<(), ChaosError> {
+        let fail = (0..self.children)
+            .filter(|&c| self.members[c] && self.cfg.plan.mapper_alive(c as u16, now))
+            .find_map(|c| self.senders[c].failure());
+        if let Some(err) = fail {
+            if self.cfg.plan.switch_dead(now)
+                && self.ctl.failure_detected(self.tree, now, self.cfg.detect_timeout_s)
+            {
+                self.ctl.fail_over(self.tree).expect("running tree fails over");
+                self.failed_over = true;
+            } else {
+                return Err(ChaosError::Transport(err));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<L: ChaosLane> HopDriver for ChaosHop<'_, L> {
+    type Err = ChaosError;
+
+    fn label(&self) -> &'static str {
+        "chaos session"
+    }
+
+    fn finished(&self) -> bool {
+        self.failed_over || (0..self.children).all(|c| !self.members[c] || self.senders[c].done())
+    }
+
+    fn on_delivery(&mut self, sim: &mut NetSim, d: Delivery) -> Result<Flow, ChaosError> {
+        self.apply_transitions(sim, d.time_s)?;
+        self.fire_starts(sim, d.time_s);
+        let kind = tag_kind(d.tag);
+        if kind == KIND_INGRESS_DATA && d.node == self.hub {
+            let child = tag_child(d.tag) as usize;
+            let seq = tag_idx(d.tag);
+            if self.cfg.plan.switch_down(d.time_s)
+                || self.cfg.plan.link_down(child as u16, d.time_s)
+            {
+                sim.note_faulted_drop(self.mappers[child], self.hub);
+                return Ok(Flow::Continue);
+            }
+            let ack = self.lane.ingest(self.sw, self.tree, child, seq, ctag_epoch(d.tag));
+            let id = u32::try_from(self.acks.len()).expect("ack id space exhausted");
+            self.acks.push(ack);
+            sim.send_tagged(
+                d.time_s,
+                self.hub,
+                self.mappers[child],
+                ACK_WIRE_LEN,
+                ctag(KIND_INGRESS_ACK, child as u16, id, self.epoch),
+            );
+        } else if kind == KIND_INGRESS_ACK {
+            let c = tag_child(d.tag) as usize;
+            if self.cfg.plan.link_down(c as u16, d.time_s) {
+                sim.note_faulted_drop(self.hub, self.mappers[c]);
+                return Ok(Flow::Continue);
+            }
+            if !self.members[c] || !self.cfg.plan.mapper_alive(c as u16, d.time_s) {
+                return Ok(Flow::Continue);
+            }
+            // Data-plane acks double as the switch's heartbeat.
+            self.ctl.record_heartbeat(self.tree, d.time_s);
+            let ack = self.acks[tag_idx(d.tag) as usize];
+            let sender = &mut self.senders[c];
+            let was_done = sender.done();
+            sender.on_ack_epoch(ack.epoch, ack.cum_seq, ack.credit, d.time_s);
+            if !was_done && sender.done() {
+                self.done_s = self.done_s.max(d.time_s);
+            }
+            self.send_polled(sim, c, d.time_s);
+            self.check_giveup(d.time_s)?;
+        }
+        // Any other tag is a straggler from a previous hop or epoch:
+        // the job has moved on, drop it.
+        Ok(Flow::Continue)
+    }
+
+    fn on_drained(&mut self, sim: &mut NetSim) -> Result<Flow, ChaosError> {
+        // Drained with members unfinished: jump to the earliest thing
+        // that can happen — a retransmission deadline, a straggler's
+        // start, or a scheduled transition.
+        let mut target = f64::INFINITY;
+        for c in 0..self.children {
+            if !self.members[c] || self.senders[c].done() {
+                continue;
+            }
+            if !self.cfg.plan.mapper_alive(c as u16, sim.now_s()) {
+                continue;
+            }
+            if self.senders[c].failure().is_some() {
+                continue;
+            }
+            if let Some(dl) = self.senders[c].next_retx_deadline() {
+                target = target.min(dl);
+            }
+            if self.start_s[c] > sim.now_s() {
+                target = target.min(self.start_s[c]);
+            }
+        }
+        if self.tix < self.transitions.len() {
+            target = target.min(self.transitions[self.tix].time());
+        }
+        let t = if target.is_finite() {
+            target.max(sim.now_s())
+        } else {
+            sim.now_s()
+        };
+        let applied_before = self.tix;
+        self.apply_transitions(sim, t)?;
+        self.fire_starts(sim, t);
+        let mut sent_any = false;
+        for c in 0..self.children {
+            if !self.members[c] || self.senders[c].done() {
+                continue;
+            }
+            if !self.cfg.plan.mapper_alive(c as u16, t) || t < self.start_s[c] {
+                continue;
+            }
+            sent_any |= self.send_polled(sim, c, t);
+        }
+        self.check_giveup(t)?;
+        if self.failed_over || sent_any || self.tix > applied_before {
+            return Ok(Flow::Continue);
+        }
+        // Nothing in flight, no timers, no pending transitions, and
+        // nothing sendable: every unfinished member is dead (live
+        // ones always carry a timer, a pending start, or a pollable
+        // window).  Resolve the quorum now — waiting cannot help.
+        let done_members = (0..self.children)
+            .filter(|&c| self.members[c] && self.senders[c].done())
+            .count();
+        let (have, need) = match self.cfg.quorum {
+            EotQuorum::All => {
+                (done_members, (0..self.children).filter(|&c| self.members[c]).count())
+            }
+            EotQuorum::KofN(k) => (done_members, k as usize),
+        };
+        if matches!(self.cfg.quorum, EotQuorum::KofN(_)) && have >= need {
+            self.quorum_replan(sim, t);
+            return Ok(Flow::Continue);
+        }
+        Err(ChaosError::QuorumUnreachable { have, need })
+    }
 }
 
 /// Control-plane bring-up for one star session: launch, configure,

@@ -37,6 +37,7 @@
 //! simulated clock, so recovery cost lands in `jct_s`.  The reducer's
 //! re-reduction audit ([`Reducer::audit`]) is the final backstop.
 
+use crate::framework::hop::{self, Flow, HopDriver};
 use crate::framework::reducer::Reducer;
 use crate::framework::reliable::{stamp, Endpoint};
 use crate::framework::transport::{
@@ -46,10 +47,10 @@ use crate::framework::transport::{
 };
 use crate::net::faults::FaultPlan;
 use crate::net::loss::{flip_bit, LossConfig};
-use crate::net::netsim::NetSim;
+use crate::net::netsim::{Delivery, NetSim};
 use crate::net::topology::NodeId;
 use crate::protocol::{
-    AggAckPacket, AggOp, AggregationPacket, KvPair, Packet, TreeConfig, TreeId,
+    AdaptiveSender, AggAckPacket, AggOp, AggregationPacket, KvPair, Packet, TreeConfig, TreeId,
     VectorAggregationPacket, VectorBatch, VectorChunks,
 };
 use crate::switch::reliability::Admit;
@@ -201,15 +202,186 @@ fn tag_salt(t: u64) -> u8 {
     (t >> 48) as u8
 }
 
-/// The corruption-aware mirror of `transport::drive_hop`: identical
-/// scheduling (same sends at the same instants for the same delivery
-/// pattern — the zero-corruption CRC-on run is pinned byte-identical
-/// to the legacy driver by `tests/integrity.rs`), plus byte-level
-/// corruption applied at delivery and CRC/guard verification before
-/// admission.  `bufs[c][seq-1]` holds child `c`'s encoded packet for
-/// `seq`; `deliver` receives `Some(decoded)` only for a corrupted
-/// delivery that still decoded (CRC off), `None` for a clean one (the
-/// callee uses its own packet array — no decode on the hot path).
+/// The corruption-aware hop as a [`HopDriver`] configuration: the
+/// plain transport hop's scheduling (identical sends at identical
+/// instants for the same delivery pattern — the zero-corruption CRC-on
+/// run is pinned byte-identical to the legacy driver by
+/// `tests/integrity.rs`), plus byte-level corruption applied at
+/// delivery and CRC/guard verification before admission.
+struct CorruptHop<'a, F: FnMut(u16, u32, f64, Option<&Packet>) -> Verdict> {
+    crc: bool,
+    tree: TreeId,
+    salt: u8,
+    lens: &'a [Vec<u64>],
+    bufs: &'a [Vec<Vec<u8>>],
+    src: &'a [NodeId],
+    dst: NodeId,
+    data_kind: u64,
+    ack_kind: u64,
+    deliver: F,
+    senders: Vec<AdaptiveSender>,
+    acks: Vec<AggAckPacket>,
+    ack_bufs: Vec<Vec<u8>>,
+    out_seqs: Vec<u32>,
+    stats: NetHopStats,
+    done_s: f64,
+    aborted: bool,
+}
+
+impl<F: FnMut(u16, u32, f64, Option<&Packet>) -> Verdict> HopDriver for CorruptHop<'_, F> {
+    type Err = std::convert::Infallible;
+
+    fn label(&self) -> &'static str {
+        "integrity session"
+    }
+
+    fn finished(&self) -> bool {
+        self.senders.iter().all(|s| s.done())
+    }
+
+    fn on_delivery(&mut self, sim: &mut NetSim, d: Delivery) -> Result<Flow, Self::Err> {
+        let (lens, src, dst) = (self.lens, self.src, self.dst);
+        let (data_kind, ack_kind, salt) = (self.data_kind, self.ack_kind, self.salt);
+        let kind = tag_kind(d.tag);
+        if tag_salt(d.tag) != salt {
+            // Straggler from an aborted (pre-recovery) incarnation.
+            return Ok(Flow::Continue);
+        }
+        if kind == data_kind && d.node == dst {
+            let child = tag_child(d.tag);
+            let seq = tag_idx(d.tag);
+            let decoded: Option<Packet> = match d.corrupt {
+                None => None,
+                Some(flip_seed) => {
+                    self.stats.corrupted += 1;
+                    let mut bytes = self.bufs[child as usize][(seq - 1) as usize].clone();
+                    flip_bit(&mut bytes, flip_seed);
+                    match Packet::decode(&bytes) {
+                        Ok(p) => Some(p),
+                        Err(_) => {
+                            // Detected at ingress (CRC mismatch, or a
+                            // structural decode failure even without
+                            // the trailer): drop before admission.
+                            self.stats.corrupt_drops += 1;
+                            return Ok(Flow::Continue);
+                        }
+                    }
+                }
+            };
+            let was_corrupt = decoded.is_some();
+            match (self.deliver)(child, seq, d.time_s, decoded.as_ref()) {
+                Verdict::Ack(ack) => {
+                    let id = u32::try_from(self.acks.len()).expect("ack id space exhausted");
+                    let pk = Packet::AggAck(ack);
+                    self.ack_bufs
+                        .push(if self.crc { pk.encode_integrity() } else { pk.encode() });
+                    self.acks.push(ack);
+                    sim.send_tagged(
+                        d.time_s,
+                        dst,
+                        src[child as usize],
+                        ACK_WIRE_LEN,
+                        tag_salted(ack_kind, salt, child, id),
+                    );
+                }
+                Verdict::Drop => {
+                    if was_corrupt {
+                        self.stats.corrupt_drops += 1;
+                    }
+                }
+                Verdict::Abort => {
+                    self.aborted = true;
+                    return Ok(Flow::Break);
+                }
+            }
+        } else if kind == ack_kind {
+            let c = tag_child(d.tag) as usize;
+            let id = tag_idx(d.tag) as usize;
+            let ack = match d.corrupt {
+                None => self.acks[id],
+                Some(flip_seed) => {
+                    let mut bytes = self.ack_bufs[id].clone();
+                    flip_bit(&mut bytes, flip_seed);
+                    match Packet::decode(&bytes) {
+                        // CRC off: a flipped ack can decode; guard the
+                        // fields a sender can check without trusting
+                        // the payload — origin consistency and an ack
+                        // for a packet that was never sent.
+                        Ok(Packet::AggAck(a))
+                            if a.tree == self.tree
+                                && a.child == c as u16
+                                && (a.cum_seq as usize) <= lens[c].len() =>
+                        {
+                            a
+                        }
+                        _ => {
+                            self.stats.acks_corrupt_dropped += 1;
+                            return Ok(Flow::Continue);
+                        }
+                    }
+                }
+            };
+            let sender = &mut self.senders[c];
+            let was_done = sender.done();
+            sender.on_ack(ack.cum_seq, ack.credit, d.time_s);
+            if !was_done && sender.done() {
+                self.done_s = self.done_s.max(d.time_s);
+            }
+            hop::poll_send(
+                sim,
+                &mut self.senders[c],
+                &mut self.out_seqs,
+                d.time_s,
+                &lens[c],
+                src[c],
+                dst,
+                &mut self.stats.wire_bytes,
+                |seq| tag_salted(data_kind, salt, c as u16, seq),
+            );
+        }
+        // Any other tag: straggler from a previous hop — drop it.
+        Ok(Flow::Continue)
+    }
+
+    fn on_drained(&mut self, sim: &mut NetSim) -> Result<Flow, Self::Err> {
+        // Drained with streams unfinished: jump to the earliest
+        // retransmission deadline (see transport::drive_hop).
+        let (lens, src, dst) = (self.lens, self.src, self.dst);
+        let (data_kind, salt) = (self.data_kind, self.salt);
+        let deadline = hop::earliest_retx_deadline(self.senders.iter());
+        let t = if deadline.is_finite() {
+            deadline.max(sim.now_s())
+        } else {
+            sim.now_s()
+        };
+        let mut sent_any = false;
+        for c in 0..self.senders.len() {
+            if self.senders[c].done() {
+                continue;
+            }
+            sent_any |= hop::poll_send(
+                sim,
+                &mut self.senders[c],
+                &mut self.out_seqs,
+                t,
+                &lens[c],
+                src[c],
+                dst,
+                &mut self.stats.wire_bytes,
+                |seq| tag_salted(data_kind, salt, c as u16, seq),
+            );
+        }
+        assert!(sent_any, "integrity transport stalled: idle network, no timers");
+        Ok(Flow::Continue)
+    }
+}
+
+/// Drive the corruption-aware hop to completion on the shared
+/// hop-driver core (`framework::hop`).  `bufs[c][seq-1]` holds child
+/// `c`'s encoded packet for `seq`; `deliver` receives `Some(decoded)`
+/// only for a corrupted delivery that still decoded (CRC off), `None`
+/// for a clean one (the callee uses its own packet array — no decode
+/// on the hot path).
 #[allow(clippy::too_many_arguments)]
 fn drive_hop_corrupt(
     sim: &mut NetSim,
@@ -222,197 +394,65 @@ fn drive_hop_corrupt(
     src: &[NodeId],
     dst: NodeId,
     kinds: (u64, u64),
-    mut deliver: impl FnMut(u16, u32, f64, Option<&Packet>) -> Verdict,
+    deliver: impl FnMut(u16, u32, f64, Option<&Packet>) -> Verdict,
 ) -> HopOutcome {
     let (data_kind, ack_kind) = kinds;
     assert_eq!(lens.len(), src.len());
     let children = lens.len();
-    let mut senders: Vec<_> = lens.iter().map(|l| cfg.sender_for(l.len())).collect();
-    let mut acks: Vec<AggAckPacket> = Vec::new();
-    let mut ack_bufs: Vec<Vec<u8>> = Vec::new();
-    let mut stats = NetHopStats::default();
+    let mut drv = CorruptHop {
+        crc,
+        tree,
+        salt,
+        lens,
+        bufs,
+        src,
+        dst,
+        data_kind,
+        ack_kind,
+        deliver,
+        senders: lens.iter().map(|l| cfg.sender_for(l.len())).collect(),
+        acks: Vec::new(),
+        ack_bufs: Vec::new(),
+        out_seqs: Vec::new(),
+        stats: NetHopStats::default(),
+        done_s: sim.now_s(),
+        aborted: false,
+    };
     for l in lens {
-        stats.first_tx_bytes += l.iter().sum::<u64>();
+        drv.stats.first_tx_bytes += l.iter().sum::<u64>();
     }
     let links_before = sim.link_stats();
     let events_before = sim.events_processed();
 
-    let mut out_seqs: Vec<u32> = Vec::new();
     let t0 = sim.now_s();
-    let mut done_s = t0;
     for c in 0..children {
-        out_seqs.clear();
-        senders[c].poll(t0, &mut out_seqs);
-        for &seq in &out_seqs {
-            let bytes = lens[c][(seq - 1) as usize];
-            stats.wire_bytes += bytes;
-            sim.send_tagged(t0, src[c], dst, bytes, tag_salted(data_kind, salt, c as u16, seq));
-        }
-    }
-
-    let mut aborted = false;
-    let mut steps: u64 = 0;
-    'run: while !senders.iter().all(|s| s.done()) {
-        steps += 1;
-        assert!(
-            steps <= cfg.max_steps,
-            "integrity session did not converge within {} steps",
-            cfg.max_steps
+        hop::poll_send(
+            sim,
+            &mut drv.senders[c],
+            &mut drv.out_seqs,
+            t0,
+            &lens[c],
+            src[c],
+            dst,
+            &mut drv.stats.wire_bytes,
+            |seq| tag_salted(data_kind, salt, c as u16, seq),
         );
-        let Some(d) = sim.step_delivery() else {
-            // Drained with streams unfinished: jump to the earliest
-            // retransmission deadline (see transport::drive_hop).
-            let deadline = senders
-                .iter()
-                .filter(|s| !s.done())
-                .filter_map(|s| s.next_retx_deadline())
-                .fold(f64::INFINITY, f64::min);
-            let t = if deadline.is_finite() {
-                deadline.max(sim.now_s())
-            } else {
-                sim.now_s()
-            };
-            let mut sent_any = false;
-            for c in 0..children {
-                if senders[c].done() {
-                    continue;
-                }
-                out_seqs.clear();
-                senders[c].poll(t, &mut out_seqs);
-                for &seq in &out_seqs {
-                    sent_any = true;
-                    let bytes = lens[c][(seq - 1) as usize];
-                    stats.wire_bytes += bytes;
-                    sim.send_tagged(t, src[c], dst, bytes, tag_salted(data_kind, salt, c as u16, seq));
-                }
-            }
-            assert!(sent_any, "integrity transport stalled: idle network, no timers");
-            continue;
-        };
-        let kind = tag_kind(d.tag);
-        if tag_salt(d.tag) != salt {
-            // Straggler from an aborted (pre-recovery) incarnation.
-            continue;
-        }
-        if kind == data_kind && d.node == dst {
-            let child = tag_child(d.tag);
-            let seq = tag_idx(d.tag);
-            let decoded: Option<Packet> = match d.corrupt {
-                None => None,
-                Some(flip_seed) => {
-                    stats.corrupted += 1;
-                    let mut bytes = bufs[child as usize][(seq - 1) as usize].clone();
-                    flip_bit(&mut bytes, flip_seed);
-                    match Packet::decode(&bytes) {
-                        Ok(p) => Some(p),
-                        Err(_) => {
-                            // Detected at ingress (CRC mismatch, or a
-                            // structural decode failure even without
-                            // the trailer): drop before admission.
-                            stats.corrupt_drops += 1;
-                            continue;
-                        }
-                    }
-                }
-            };
-            let was_corrupt = decoded.is_some();
-            match deliver(child, seq, d.time_s, decoded.as_ref()) {
-                Verdict::Ack(ack) => {
-                    let id = u32::try_from(acks.len()).expect("ack id space exhausted");
-                    let pk = Packet::AggAck(ack);
-                    ack_bufs.push(if crc { pk.encode_integrity() } else { pk.encode() });
-                    acks.push(ack);
-                    sim.send_tagged(
-                        d.time_s,
-                        dst,
-                        src[child as usize],
-                        ACK_WIRE_LEN,
-                        tag_salted(ack_kind, salt, child, id),
-                    );
-                }
-                Verdict::Drop => {
-                    if was_corrupt {
-                        stats.corrupt_drops += 1;
-                    }
-                }
-                Verdict::Abort => {
-                    aborted = true;
-                    break 'run;
-                }
-            }
-        } else if kind == ack_kind {
-            let c = tag_child(d.tag) as usize;
-            let id = tag_idx(d.tag) as usize;
-            let ack = match d.corrupt {
-                None => acks[id],
-                Some(flip_seed) => {
-                    let mut bytes = ack_bufs[id].clone();
-                    flip_bit(&mut bytes, flip_seed);
-                    match Packet::decode(&bytes) {
-                        // CRC off: a flipped ack can decode; guard the
-                        // fields a sender can check without trusting
-                        // the payload — origin consistency and an ack
-                        // for a packet that was never sent.
-                        Ok(Packet::AggAck(a))
-                            if a.tree == tree
-                                && a.child == c as u16
-                                && (a.cum_seq as usize) <= lens[c].len() =>
-                        {
-                            a
-                        }
-                        _ => {
-                            stats.acks_corrupt_dropped += 1;
-                            continue;
-                        }
-                    }
-                }
-            };
-            let sender = &mut senders[c];
-            let was_done = sender.done();
-            sender.on_ack(ack.cum_seq, ack.credit, d.time_s);
-            if !was_done && sender.done() {
-                done_s = done_s.max(d.time_s);
-            }
-            out_seqs.clear();
-            sender.poll(d.time_s, &mut out_seqs);
-            for &seq in &out_seqs {
-                let bytes = lens[c][(seq - 1) as usize];
-                stats.wire_bytes += bytes;
-                sim.send_tagged(d.time_s, src[c], dst, bytes, tag_salted(data_kind, salt, c as u16, seq));
-            }
-        }
-        // Any other tag: straggler from a previous hop — drop it.
     }
 
+    if let Err(e) = hop::drive(sim, cfg.max_steps, &mut drv) {
+        match e {}
+    }
+
+    let CorruptHop {
+        senders,
+        mut stats,
+        done_s,
+        aborted,
+        ..
+    } = drv;
     stats.done_s = done_s;
-    let mut srtt_sum = 0.0;
-    let mut srtt_n = 0u32;
-    for s in &senders {
-        stats.first_tx += s.first_tx;
-        stats.retransmissions += s.retransmissions;
-        stats.timeouts += s.timeouts;
-        stats.cwnd_peak = stats.cwnd_peak.max(s.cwnd_peak());
-        if let Some(srtt) = s.rtt().srtt_s() {
-            srtt_sum += srtt;
-            srtt_n += 1;
-        }
-    }
-    if srtt_n > 0 {
-        stats.srtt_mean_s = srtt_sum / srtt_n as f64;
-    }
-    let links_after = sim.link_stats();
-    let delta = |key: (NodeId, NodeId)| -> (u64, u64) {
-        let after = links_after.get(&key).map(|s| (s.dropped, s.duplicated)).unwrap_or((0, 0));
-        let before = links_before.get(&key).map(|s| (s.dropped, s.duplicated)).unwrap_or((0, 0));
-        (after.0 - before.0, after.1 - before.1)
-    };
-    for &s in src {
-        let (drops, dups) = delta((s, dst));
-        stats.drops += drops;
-        stats.dups += dups;
-        stats.acks_dropped += delta((dst, s)).0;
-    }
-    stats.events = sim.events_processed() - events_before;
+    hop::fill_sender_stats(&mut stats, senders.iter());
+    hop::finish_hop_stats(&mut stats, sim, &links_before, events_before, src, dst);
     HopOutcome { stats, aborted }
 }
 

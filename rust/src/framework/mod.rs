@@ -4,9 +4,11 @@
 //! PUT/GET abstraction over the aggregation network.
 
 pub mod chaos;
+pub(crate) mod hop;
 pub mod integrity;
 pub mod job;
 pub mod mapper;
+pub mod pipeline;
 pub mod reducer;
 pub mod reliable;
 pub mod shim;
@@ -26,6 +28,10 @@ pub use reducer::{Completeness, Reducer, VectorMergeResult};
 pub use reliable::{
     run_reliable_scalar, run_reliable_vector, HopStats, ReliabilityConfig, ReliableRun,
     ReliableVectorRun,
+};
+pub use pipeline::{
+    run_pipeline_scalar, run_pipeline_two_level, run_pipeline_vector, PipelineConfig, PipelineRun,
+    PipelineVectorRun, TwoLevelRun,
 };
 pub use shim::Shim;
 pub use tenancy::{

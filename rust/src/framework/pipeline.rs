@@ -1,0 +1,1734 @@
+//! Streaming multi-hop pipeline: the switch as a *relay*.
+//!
+//! The batch transport session (`framework::transport`) runs two
+//! strictly sequential phases: ingest everything, then packetize the
+//! switch's output and start the egress hop.  That schedule wastes the
+//! whole ingest window — evicted/forwarded pairs exist *during*
+//! ingest, and a real switch streams them downstream as they appear.
+//! This module makes the switch hold both roles at once: it is the
+//! reliable *receiver* of the mapper streams and a reliable
+//! [`AdaptiveSender`] toward the next hop, on the same simulated
+//! clock, in the same event loop (a fifth [`hop::HopDriver`]
+//! configuration of the shared core).
+//!
+//! Three schedules share one driver:
+//!
+//! * **Batch** ([`PipelineConfig::batch`], `overlap = false`) — the
+//!   legacy two-phase schedule, reproduced byte-identically:
+//!   ingress-phase deliveries after the phase fence are dropped
+//!   exactly where the old back-to-back `drive_hop` calls dropped
+//!   them, the egress stream is sealed and announced at the
+//!   completing-ack instant, and no cycle gating is applied
+//!   (`tests/pipeline.rs` pins stream, stats, and JCT against
+//!   [`crate::framework::run_transport_scalar`]).
+//! * **Streaming** ([`PipelineConfig::streaming`], `overlap = true`) —
+//!   forwarded/evicted pairs are packetized incrementally (the greedy
+//!   MTU rule of [`MtuChunks`](crate::protocol::MtuChunks), replayed
+//!   pair by pair so boundaries are identical to the batch packing)
+//!   and handed to the egress sender *while ingest continues*; the
+//!   flush seals the stream when the last EoT is admitted — typically
+//!   a full RTT before the last ingress ack lands.
+//! * **Two-level streaming** ([`run_pipeline_two_level`]) — rack
+//!   switches relay to a spine switch (`KIND_RELAY_*` traffic), the
+//!   spine consumes the relay packets natively through
+//!   `ingest_reliable_one` (each rack is one child of the spine tree)
+//!   and streams onward to the reducer: rack → spine → reducer, all
+//!   three hops overlapped.
+//!
+//! **Unified time domain.**  Switch processing is modeled in the
+//! 200 MHz cycle domain (`sim::clock`); the network lives in NetSim
+//! seconds.  Overlapped egress polls are gated on
+//! [`SwitchAggSwitch::egress_ready_s`], which maps the engine's
+//! cumulative `makespan + flush` cycles into seconds on the job's
+//! start instant — so a saturated switch delays its own egress and
+//! the two clocks can never disagree about when output exists.
+
+use crate::framework::hop::{self, Flow, HopDriver, LinkMap};
+use crate::framework::reducer::{Completeness, Reducer};
+use crate::framework::reliable::Endpoint;
+use crate::framework::transport::{
+    apply_session_policy, session_net, tag, tag_child, tag_idx, tag_kind, NetHopStats,
+    TransportConfig, ACK_WIRE_LEN, KIND_EGRESS_ACK, KIND_EGRESS_DATA, KIND_INGRESS_ACK,
+    KIND_INGRESS_DATA,
+};
+use crate::net::netsim::{Delivery, NetSim};
+use crate::net::topology::{NodeId, NodeKind, Topology};
+use crate::protocol::vector::{encoded_vec_len, lane_value_width, max_vec_payload};
+use crate::protocol::{
+    AdaptiveSender, AggAckPacket, AggOp, AggregationPacket, Key, KvPair, RelHeader, TreeId, Value,
+    VectorAggregationPacket, VectorBatch, MAX_AGG_PAYLOAD,
+};
+use crate::switch::reliability::Admit;
+use crate::switch::{DedupStats, IngestSink, SwitchAggSwitch, VectorSink};
+
+// Relay traffic (rack switch → spine switch) gets its own tag kinds so
+// a straggler from any hop is recognized everywhere (see the tag-kind
+// table in `framework::transport`).
+pub(crate) const KIND_RELAY_DATA: u64 = 7;
+pub(crate) const KIND_RELAY_ACK: u64 = 8;
+
+/// One pipelined session's schedule knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    pub transport: TransportConfig,
+    /// `true`: stream the switch's output to the next hop during
+    /// ingest (cycle-gated).  `false`: reproduce the legacy two-phase
+    /// batch schedule byte-identically.
+    pub overlap: bool,
+}
+
+impl PipelineConfig {
+    /// Overlapped (streaming) schedule.
+    pub fn streaming(transport: TransportConfig) -> Self {
+        Self {
+            transport,
+            overlap: true,
+        }
+    }
+
+    /// Legacy two-phase batch schedule (differential baseline).
+    pub fn batch(transport: TransportConfig) -> Self {
+        Self {
+            transport,
+            overlap: false,
+        }
+    }
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self::streaming(TransportConfig::default())
+    }
+}
+
+/// What one pipelined scalar session produces — field-compatible with
+/// [`crate::framework::TransportRun`] so the differential test can
+/// compare them member by member.
+#[derive(Clone, Debug)]
+pub struct PipelineRun {
+    pub ingress: NetHopStats,
+    /// In streaming mode the two hops share one event window:
+    /// `ingress.events` carries the whole session's NetSim events and
+    /// `egress.events` is 0.  Batch mode splits them exactly like the
+    /// legacy session.
+    pub egress: NetHopStats,
+    pub dedup: DedupStats,
+    pub completeness: Completeness,
+    pub received: Vec<KvPair>,
+    pub jct_s: f64,
+    pub fifo_peak: u64,
+}
+
+/// [`PipelineRun`] for the W-lane vector path.
+#[derive(Clone, Debug)]
+pub struct PipelineVectorRun {
+    pub ingress: NetHopStats,
+    pub egress: NetHopStats,
+    pub dedup: DedupStats,
+    pub completeness: Completeness,
+    pub received: VectorBatch,
+    pub jct_s: f64,
+    pub fifo_peak: u64,
+}
+
+/// What the rack → spine → reducer composition produces.  Per-hop
+/// transport counters plus the reducer-side stream; the three hops
+/// share one event window, reported on `ingress.events` (the other two
+/// carry 0).
+#[derive(Clone, Debug)]
+pub struct TwoLevelRun {
+    /// Mappers → rack switches (all senders folded together).
+    pub ingress: NetHopStats,
+    /// Rack switches → spine (the relay streams).
+    pub relay: NetHopStats,
+    /// Spine → reducer.
+    pub egress: NetHopStats,
+    /// Spine-tree dedup counters (the relay streams' admission).
+    pub spine_dedup: DedupStats,
+    pub completeness: Completeness,
+    pub received: Vec<KvPair>,
+    pub jct_s: f64,
+}
+
+// ---- incremental packers -----------------------------------------
+
+/// Replays the greedy MTU boundary rule of
+/// [`MtuChunks`](crate::protocol::MtuChunks) one pair at a time, so a
+/// stream whose length is unknown until the flush packs into exactly
+/// the packets `pack_stream` would have produced on the full slice.
+/// Packets carry rel headers (`child`, epoch 0, seq = emission order)
+/// from birth — the wire form the next hop's `ingest_reliable_one`
+/// consumes natively.
+struct StreamPacker {
+    tree: TreeId,
+    op: AggOp,
+    child: u16,
+    cur: Vec<KvPair>,
+    cur_payload: usize,
+    pkts: Vec<AggregationPacket>,
+    lens: Vec<u64>,
+    sealed: bool,
+}
+
+impl StreamPacker {
+    fn new(tree: TreeId, op: AggOp, child: u16) -> Self {
+        Self {
+            tree,
+            op,
+            child,
+            cur: Vec::new(),
+            cur_payload: 0,
+            pkts: Vec::new(),
+            lens: Vec::new(),
+            sealed: false,
+        }
+    }
+
+    fn push(&mut self, p: KvPair) {
+        debug_assert!(!self.sealed, "pair pushed after seal");
+        let el = p.encoded_len();
+        // The MtuChunks rule verbatim: break before a pair that would
+        // overflow a non-empty chunk; an oversize pair travels alone.
+        if self.cur_payload + el > MAX_AGG_PAYLOAD && !self.cur.is_empty() {
+            self.emit(false);
+        }
+        self.cur.push(p);
+        self.cur_payload += el;
+    }
+
+    fn emit(&mut self, eot: bool) {
+        let seq = self.pkts.len() as u32 + 1;
+        let pkt = AggregationPacket {
+            tree: self.tree,
+            op: self.op,
+            eot,
+            rel: Some(RelHeader {
+                child: self.child,
+                epoch: 0,
+                seq,
+            }),
+            pairs: std::mem::take(&mut self.cur),
+        };
+        self.lens.push(pkt.wire_len() as u64);
+        self.pkts.push(pkt);
+        self.cur_payload = 0;
+    }
+
+    /// End of the relayed stream: emit the remainder as the EoT packet
+    /// (an empty stream still yields one empty EoT packet, matching
+    /// `pack_stream` on an empty slice).
+    fn seal(&mut self) {
+        assert!(!self.sealed, "pair stream sealed twice");
+        self.emit(true);
+        self.sealed = true;
+    }
+}
+
+/// The W-lane counterpart of [`StreamPacker`]: replays the
+/// [`VectorChunks`](crate::protocol::VectorChunks) budget rule row by
+/// row.
+struct VectorStreamPacker {
+    tree: TreeId,
+    op: AggOp,
+    child: u16,
+    budget: usize,
+    cur: VectorBatch,
+    cur_payload: usize,
+    pkts: Vec<VectorAggregationPacket>,
+    lens: Vec<u64>,
+    sealed: bool,
+}
+
+impl VectorStreamPacker {
+    fn new(tree: TreeId, op: AggOp, child: u16, lanes: usize) -> Self {
+        Self {
+            tree,
+            op,
+            child,
+            budget: max_vec_payload(lanes),
+            cur: VectorBatch::new(lanes),
+            cur_payload: 0,
+            pkts: Vec::new(),
+            lens: Vec::new(),
+            sealed: false,
+        }
+    }
+
+    fn push(&mut self, key: Key, lanes: &[Value]) {
+        debug_assert!(!self.sealed, "pair pushed after seal");
+        let el = encoded_vec_len(key.len(), self.cur.lanes(), lane_value_width(lanes));
+        if self.cur_payload + el > self.budget && !self.cur.is_empty() {
+            self.emit(false);
+        }
+        self.cur.push(key, lanes);
+        self.cur_payload += el;
+    }
+
+    fn emit(&mut self, eot: bool) {
+        let seq = self.pkts.len() as u32 + 1;
+        let lanes = self.cur.lanes();
+        let pkt = VectorAggregationPacket {
+            tree: self.tree,
+            op: self.op,
+            eot,
+            rel: Some(RelHeader {
+                child: self.child,
+                epoch: 0,
+                seq,
+            }),
+            batch: std::mem::replace(&mut self.cur, VectorBatch::new(lanes)),
+        };
+        self.lens.push(pkt.wire_len() as u64);
+        self.pkts.push(pkt);
+        self.cur_payload = 0;
+    }
+
+    fn seal(&mut self) {
+        assert!(!self.sealed, "pair stream sealed twice");
+        self.emit(true);
+        self.sealed = true;
+    }
+}
+
+// ---- single-level scalar ------------------------------------------
+
+struct ScalarPipe<'a> {
+    sw: &'a mut SwitchAggSwitch,
+    tree: TreeId,
+    overlap: bool,
+    mappers: &'a [NodeId],
+    hub: NodeId,
+    reducer: NodeId,
+    pkts: Vec<Vec<AggregationPacket>>,
+    lens: Vec<Vec<u64>>,
+    senders: Vec<AdaptiveSender>,
+    sink: IngestSink,
+    flushes_seen: u32,
+    packer: StreamPacker,
+    esender: AdaptiveSender,
+    announced: usize,
+    ep: Endpoint<Vec<KvPair>>,
+    sealed: bool,
+    transitioned: bool,
+    start_s: f64,
+    acks: Vec<AggAckPacket>,
+    out_seqs: Vec<u32>,
+    ingress: NetHopStats,
+    egress: NetHopStats,
+    ingress_done_s: f64,
+    egress_done_s: f64,
+    ingress_snap: (LinkMap, u64),
+    egress_snap: Option<(LinkMap, u64)>,
+    dedup: DedupStats,
+    expected_pairs: u64,
+    fifo_peak: u64,
+}
+
+impl ScalarPipe<'_> {
+    fn ingress_done(&self) -> bool {
+        self.senders.iter().all(|s| s.done())
+    }
+
+    /// Cycle-domain gate: in overlap mode output may not hit the wire
+    /// before the switch's datapath could have produced it.
+    fn ready_s(&self, now: f64) -> f64 {
+        if self.overlap {
+            now.max(self.sw.egress_ready_s(self.tree, self.start_s))
+        } else {
+            now
+        }
+    }
+
+    /// Announce newly packetized egress packets to the sender and poll
+    /// it at the cycle-gated instant.
+    fn announce_and_poll(&mut self, sim: &mut NetSim, now: f64) {
+        let n = self.packer.pkts.len();
+        if n > self.announced {
+            for i in self.announced..n {
+                self.egress.first_tx_bytes += self.packer.lens[i];
+            }
+            self.esender.extend_total(n - self.announced);
+            self.announced = n;
+        }
+        let t = self.ready_s(now);
+        hop::poll_send(
+            sim,
+            &mut self.esender,
+            &mut self.out_seqs,
+            t,
+            &self.packer.lens,
+            self.hub,
+            self.reducer,
+            &mut self.egress.wire_bytes,
+            |seq| tag(KIND_EGRESS_DATA, 0, seq),
+        );
+    }
+
+    /// Streaming mode: drain the per-ingest sink into the packer (the
+    /// emission order — forwarded pairs as they appear, flush residue
+    /// last — is exactly the order the batch schedule concatenates).
+    fn pump_emitted(&mut self, sim: &mut NetSim, now: f64) {
+        for i in 0..self.sink.forwarded.len() {
+            let p = self.sink.forwarded[i];
+            self.packer.push(p);
+        }
+        if self.sink.flushes > 0 {
+            self.flushes_seen += self.sink.flushes;
+            assert_eq!(self.flushes_seen, 1, "all EoTs admitted ⇒ exactly one flush");
+            for i in 0..self.sink.flushed.len() {
+                let p = self.sink.flushed[i];
+                self.packer.push(p);
+            }
+            self.packer.seal();
+            self.sealed = true;
+        }
+        self.sink.clear();
+        self.announce_and_poll(sim, now);
+    }
+
+    /// Batch mode: the legacy phase boundary, at the completing-ack
+    /// instant.  Close the ingress accounting, read the switch exactly
+    /// where the legacy session read it, seal the egress stream, and
+    /// open the egress hop.
+    fn transition(&mut self, sim: &mut NetSim) {
+        assert_eq!(self.sink.flushes, 1, "all EoTs admitted ⇒ exactly one flush");
+        self.sw.finalize(self.tree);
+        self.dedup = self.sw.dedup_stats(self.tree);
+        let stats = self.sw.stats(self.tree).expect("tree stats");
+        self.expected_pairs = stats.pairs_out_stream + stats.pairs_out_flush;
+        self.fifo_peak = stats.fifo_max_occupancy;
+        self.ingress.done_s = self.ingress_done_s;
+        hop::fill_sender_stats(&mut self.ingress, self.senders.iter());
+        let (lb, eb) = (&self.ingress_snap.0, self.ingress_snap.1);
+        hop::finish_hop_stats(&mut self.ingress, sim, lb, eb, self.mappers, self.hub);
+
+        for i in 0..self.sink.forwarded.len() {
+            let p = self.sink.forwarded[i];
+            self.packer.push(p);
+        }
+        for i in 0..self.sink.flushed.len() {
+            let p = self.sink.flushed[i];
+            self.packer.push(p);
+        }
+        self.packer.seal();
+        self.sealed = true;
+        // Snapshot before the opening poll, like the legacy hop did.
+        self.egress_snap = Some((sim.link_stats(), sim.events_processed()));
+        let t0 = sim.now_s();
+        self.announce_and_poll(sim, t0);
+    }
+}
+
+impl HopDriver for ScalarPipe<'_> {
+    type Err = std::convert::Infallible;
+
+    fn label(&self) -> &'static str {
+        "pipeline session"
+    }
+
+    fn finished(&self) -> bool {
+        self.ingress_done() && self.sealed && self.esender.done()
+    }
+
+    fn pre_step(&mut self, sim: &mut NetSim) -> bool {
+        if !self.overlap && !self.transitioned && self.ingress_done() {
+            self.transition(sim);
+            self.transitioned = true;
+        }
+        true
+    }
+
+    fn on_delivery(&mut self, sim: &mut NetSim, d: Delivery) -> Result<Flow, Self::Err> {
+        let kind = tag_kind(d.tag);
+        if kind == KIND_INGRESS_DATA && d.node == self.hub {
+            if !self.overlap && self.transitioned {
+                // Phase fence: the legacy egress hop dropped ingress
+                // stragglers without touching the switch.
+                return Ok(Flow::Continue);
+            }
+            let child = tag_child(d.tag) as usize;
+            let seq = tag_idx(d.tag);
+            let pkt = &self.pkts[child][(seq - 1) as usize];
+            let ack = self.sw.ingest_reliable_one(self.tree, pkt, &mut self.sink);
+            if self.overlap {
+                self.pump_emitted(sim, d.time_s);
+            }
+            let id = u32::try_from(self.acks.len()).expect("ack id space exhausted");
+            self.acks.push(ack);
+            sim.send_tagged(
+                d.time_s,
+                self.hub,
+                self.mappers[child],
+                ACK_WIRE_LEN,
+                tag(KIND_INGRESS_ACK, child as u16, id),
+            );
+        } else if kind == KIND_INGRESS_ACK {
+            if !self.overlap && self.transitioned {
+                return Ok(Flow::Continue);
+            }
+            let c = tag_child(d.tag) as usize;
+            let ack = self.acks[tag_idx(d.tag) as usize];
+            let was_done = self.senders[c].done();
+            self.senders[c].on_ack(ack.cum_seq, ack.credit, d.time_s);
+            if !was_done && self.senders[c].done() {
+                self.ingress_done_s = self.ingress_done_s.max(d.time_s);
+            }
+            hop::poll_send(
+                sim,
+                &mut self.senders[c],
+                &mut self.out_seqs,
+                d.time_s,
+                &self.lens[c],
+                self.mappers[c],
+                self.hub,
+                &mut self.ingress.wire_bytes,
+                |seq| tag(KIND_INGRESS_DATA, c as u16, seq),
+            );
+        } else if kind == KIND_EGRESS_DATA && d.node == self.reducer {
+            let seq = tag_idx(d.tag);
+            let pkt = &self.packer.pkts[(seq - 1) as usize];
+            let rel = pkt.rel.expect("egress packets carry rel headers");
+            if matches!(self.ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                self.ep.received.extend_from_slice(&pkt.pairs);
+            }
+            let ack = self.ep.ack_for(self.tree, rel.child);
+            let id = u32::try_from(self.acks.len()).expect("ack id space exhausted");
+            self.acks.push(ack);
+            sim.send_tagged(
+                d.time_s,
+                self.reducer,
+                self.hub,
+                ACK_WIRE_LEN,
+                tag(KIND_EGRESS_ACK, 0, id),
+            );
+        } else if kind == KIND_EGRESS_ACK {
+            let ack = self.acks[tag_idx(d.tag) as usize];
+            let was_done = self.esender.done();
+            self.esender.on_ack(ack.cum_seq, ack.credit, d.time_s);
+            if !was_done && self.esender.done() {
+                self.egress_done_s = self.egress_done_s.max(d.time_s);
+            }
+            self.announce_and_poll(sim, d.time_s);
+        }
+        // Any other tag is a straggler: the job has moved on, drop it.
+        Ok(Flow::Continue)
+    }
+
+    fn on_drained(&mut self, sim: &mut NetSim) -> Result<Flow, Self::Err> {
+        let deadline = hop::earliest_retx_deadline(
+            self.senders.iter().chain(std::iter::once(&self.esender)),
+        );
+        let t = if deadline.is_finite() {
+            deadline.max(sim.now_s())
+        } else {
+            sim.now_s()
+        };
+        let mut sent_any = false;
+        for c in 0..self.senders.len() {
+            if self.senders[c].done() {
+                continue;
+            }
+            sent_any |= hop::poll_send(
+                sim,
+                &mut self.senders[c],
+                &mut self.out_seqs,
+                t,
+                &self.lens[c],
+                self.mappers[c],
+                self.hub,
+                &mut self.ingress.wire_bytes,
+                |seq| tag(KIND_INGRESS_DATA, c as u16, seq),
+            );
+        }
+        if self.overlap || self.transitioned {
+            let te = self.ready_s(t);
+            sent_any |= hop::poll_send(
+                sim,
+                &mut self.esender,
+                &mut self.out_seqs,
+                te,
+                &self.packer.lens,
+                self.hub,
+                self.reducer,
+                &mut self.egress.wire_bytes,
+                |seq| tag(KIND_EGRESS_DATA, 0, seq),
+            );
+        }
+        assert!(sent_any, "transport stalled: idle network, no timers, nothing to send");
+        Ok(Flow::Continue)
+    }
+}
+
+/// Run one pipelined scalar session: `streams[c]` is child `c`'s pair
+/// stream; `sw` must already be configured for `tree` with
+/// `children == streams.len()` (scalar, lanes = 1).  The session
+/// starts at simulated t = 0 on a fresh star network.
+pub fn run_pipeline_scalar(
+    sw: &mut SwitchAggSwitch,
+    tree: TreeId,
+    op: AggOp,
+    streams: &[Vec<KvPair>],
+    cfg: &PipelineConfig,
+) -> PipelineRun {
+    let t = &cfg.transport;
+    apply_session_policy(sw, t);
+    let pkts: Vec<Vec<AggregationPacket>> = streams
+        .iter()
+        .enumerate()
+        .map(|(c, s)| {
+            let mut v = AggregationPacket::pack_stream(tree, op, s, true);
+            crate::framework::reliable::stamp(&mut v, c as u16, 0, |p, rel| p.rel = Some(rel));
+            v
+        })
+        .collect();
+    let lens: Vec<Vec<u64>> = pkts
+        .iter()
+        .map(|v| v.iter().map(|p| p.wire_len() as u64).collect())
+        .collect();
+
+    let (mut sim, hub, mappers, reducer) = session_net(streams.len(), t);
+    let children = streams.len();
+    let t0 = sim.now_s();
+    let mut drv = ScalarPipe {
+        sw,
+        tree,
+        overlap: cfg.overlap,
+        mappers: &mappers,
+        hub,
+        reducer,
+        senders: lens.iter().map(|l| t.sender_for(l.len())).collect(),
+        pkts,
+        lens,
+        sink: IngestSink::new(),
+        flushes_seen: 0,
+        packer: StreamPacker::new(tree, op, 0),
+        esender: t.sender_for(0),
+        announced: 0,
+        ep: Endpoint::new(Vec::new(), t.window),
+        sealed: false,
+        transitioned: false,
+        start_s: t0,
+        acks: Vec::new(),
+        out_seqs: Vec::new(),
+        ingress: NetHopStats::default(),
+        egress: NetHopStats::default(),
+        ingress_done_s: t0,
+        egress_done_s: t0,
+        ingress_snap: (sim.link_stats(), sim.events_processed()),
+        egress_snap: None,
+        dedup: DedupStats::default(),
+        expected_pairs: 0,
+        fifo_peak: 0,
+    };
+    for l in &drv.lens {
+        drv.ingress.first_tx_bytes += l.iter().sum::<u64>();
+    }
+    if cfg.overlap {
+        drv.egress_snap = Some(drv.ingress_snap.clone());
+    }
+    for c in 0..children {
+        hop::poll_send(
+            &mut sim,
+            &mut drv.senders[c],
+            &mut drv.out_seqs,
+            t0,
+            &drv.lens[c],
+            mappers[c],
+            hub,
+            &mut drv.ingress.wire_bytes,
+            |seq| tag(KIND_INGRESS_DATA, c as u16, seq),
+        );
+    }
+
+    if let Err(e) = hop::drive(&mut sim, t.max_steps, &mut drv) {
+        match e {}
+    }
+
+    let ScalarPipe {
+        sw,
+        senders,
+        esender,
+        mut ingress,
+        mut egress,
+        ingress_done_s,
+        egress_done_s,
+        ep,
+        mut dedup,
+        mut expected_pairs,
+        mut fifo_peak,
+        ingress_snap,
+        egress_snap,
+        sealed,
+        ..
+    } = drv;
+    assert!(sealed, "session completed without sealing the egress stream");
+    if cfg.overlap {
+        ingress.done_s = ingress_done_s;
+        hop::fill_sender_stats(&mut ingress, senders.iter());
+        hop::finish_hop_stats(&mut ingress, &sim, &ingress_snap.0, ingress_snap.1, &mappers, hub);
+        sw.finalize(tree);
+        dedup = sw.dedup_stats(tree);
+        let stats = sw.stats(tree).expect("tree stats");
+        expected_pairs = stats.pairs_out_stream + stats.pairs_out_flush;
+        fifo_peak = stats.fifo_max_occupancy;
+    }
+    egress.done_s = egress_done_s;
+    hop::fill_sender_stats(&mut egress, std::iter::once(&esender));
+    let (elb, eeb) = egress_snap.expect("egress accounting was opened");
+    hop::finish_hop_stats(&mut egress, &sim, &elb, eeb, &[hub], reducer);
+    if cfg.overlap {
+        egress.events = 0; // shared window, reported on ingress
+    }
+
+    let completeness =
+        Reducer::verify_completeness(expected_pairs, std::slice::from_ref(&ep.received));
+    assert!(
+        completeness.is_complete(),
+        "end-of-job recovery left {} pairs missing",
+        completeness.missing()
+    );
+    PipelineRun {
+        ingress,
+        jct_s: egress.done_s,
+        egress,
+        dedup,
+        completeness,
+        received: ep.received,
+        fifo_peak,
+    }
+}
+
+// ---- single-level vector ------------------------------------------
+
+struct VectorPipe<'a> {
+    sw: &'a mut SwitchAggSwitch,
+    tree: TreeId,
+    overlap: bool,
+    mappers: &'a [NodeId],
+    hub: NodeId,
+    reducer: NodeId,
+    pkts: Vec<Vec<VectorAggregationPacket>>,
+    lens: Vec<Vec<u64>>,
+    senders: Vec<AdaptiveSender>,
+    sink: VectorSink,
+    flushes_seen: u32,
+    packer: VectorStreamPacker,
+    esender: AdaptiveSender,
+    announced: usize,
+    ep: Endpoint<VectorBatch>,
+    sealed: bool,
+    transitioned: bool,
+    start_s: f64,
+    acks: Vec<AggAckPacket>,
+    out_seqs: Vec<u32>,
+    ingress: NetHopStats,
+    egress: NetHopStats,
+    ingress_done_s: f64,
+    egress_done_s: f64,
+    ingress_snap: (LinkMap, u64),
+    egress_snap: Option<(LinkMap, u64)>,
+    dedup: DedupStats,
+    expected_pairs: u64,
+    fifo_peak: u64,
+}
+
+impl VectorPipe<'_> {
+    fn ingress_done(&self) -> bool {
+        self.senders.iter().all(|s| s.done())
+    }
+
+    fn ready_s(&self, now: f64) -> f64 {
+        if self.overlap {
+            now.max(self.sw.egress_ready_s(self.tree, self.start_s))
+        } else {
+            now
+        }
+    }
+
+    fn announce_and_poll(&mut self, sim: &mut NetSim, now: f64) {
+        let n = self.packer.pkts.len();
+        if n > self.announced {
+            for i in self.announced..n {
+                self.egress.first_tx_bytes += self.packer.lens[i];
+            }
+            self.esender.extend_total(n - self.announced);
+            self.announced = n;
+        }
+        let t = self.ready_s(now);
+        hop::poll_send(
+            sim,
+            &mut self.esender,
+            &mut self.out_seqs,
+            t,
+            &self.packer.lens,
+            self.hub,
+            self.reducer,
+            &mut self.egress.wire_bytes,
+            |seq| tag(KIND_EGRESS_DATA, 0, seq),
+        );
+    }
+
+    fn pump_emitted(&mut self, sim: &mut NetSim, now: f64) {
+        for i in 0..self.sink.forwarded.len() {
+            let key = self.sink.forwarded.key(i);
+            self.packer.push(key, self.sink.forwarded.lane_slice(i));
+        }
+        if self.sink.flushes > 0 {
+            self.flushes_seen += self.sink.flushes;
+            assert_eq!(self.flushes_seen, 1, "all EoTs admitted ⇒ exactly one flush");
+            for i in 0..self.sink.flushed.len() {
+                let key = self.sink.flushed.key(i);
+                self.packer.push(key, self.sink.flushed.lane_slice(i));
+            }
+            self.packer.seal();
+            self.sealed = true;
+        }
+        self.sink.clear();
+        self.announce_and_poll(sim, now);
+    }
+
+    fn transition(&mut self, sim: &mut NetSim) {
+        assert_eq!(self.sink.flushes, 1, "all EoTs admitted ⇒ exactly one flush");
+        self.sw.finalize(self.tree);
+        self.dedup = self.sw.dedup_stats(self.tree);
+        let stats = self.sw.stats(self.tree).expect("tree stats");
+        self.expected_pairs = stats.pairs_out_stream + stats.pairs_out_flush;
+        self.fifo_peak = stats.fifo_max_occupancy;
+        self.ingress.done_s = self.ingress_done_s;
+        hop::fill_sender_stats(&mut self.ingress, self.senders.iter());
+        let (lb, eb) = (&self.ingress_snap.0, self.ingress_snap.1);
+        hop::finish_hop_stats(&mut self.ingress, sim, lb, eb, self.mappers, self.hub);
+
+        for i in 0..self.sink.forwarded.len() {
+            let key = self.sink.forwarded.key(i);
+            self.packer.push(key, self.sink.forwarded.lane_slice(i));
+        }
+        for i in 0..self.sink.flushed.len() {
+            let key = self.sink.flushed.key(i);
+            self.packer.push(key, self.sink.flushed.lane_slice(i));
+        }
+        self.packer.seal();
+        self.sealed = true;
+        self.egress_snap = Some((sim.link_stats(), sim.events_processed()));
+        let t0 = sim.now_s();
+        self.announce_and_poll(sim, t0);
+    }
+}
+
+impl HopDriver for VectorPipe<'_> {
+    type Err = std::convert::Infallible;
+
+    fn label(&self) -> &'static str {
+        "pipeline session"
+    }
+
+    fn finished(&self) -> bool {
+        self.ingress_done() && self.sealed && self.esender.done()
+    }
+
+    fn pre_step(&mut self, sim: &mut NetSim) -> bool {
+        if !self.overlap && !self.transitioned && self.ingress_done() {
+            self.transition(sim);
+            self.transitioned = true;
+        }
+        true
+    }
+
+    fn on_delivery(&mut self, sim: &mut NetSim, d: Delivery) -> Result<Flow, Self::Err> {
+        let kind = tag_kind(d.tag);
+        if kind == KIND_INGRESS_DATA && d.node == self.hub {
+            if !self.overlap && self.transitioned {
+                return Ok(Flow::Continue);
+            }
+            let child = tag_child(d.tag) as usize;
+            let seq = tag_idx(d.tag);
+            let pkt = &self.pkts[child][(seq - 1) as usize];
+            let ack = self.sw.ingest_vector_reliable_one(self.tree, pkt, &mut self.sink);
+            if self.overlap {
+                self.pump_emitted(sim, d.time_s);
+            }
+            let id = u32::try_from(self.acks.len()).expect("ack id space exhausted");
+            self.acks.push(ack);
+            sim.send_tagged(
+                d.time_s,
+                self.hub,
+                self.mappers[child],
+                ACK_WIRE_LEN,
+                tag(KIND_INGRESS_ACK, child as u16, id),
+            );
+        } else if kind == KIND_INGRESS_ACK {
+            if !self.overlap && self.transitioned {
+                return Ok(Flow::Continue);
+            }
+            let c = tag_child(d.tag) as usize;
+            let ack = self.acks[tag_idx(d.tag) as usize];
+            let was_done = self.senders[c].done();
+            self.senders[c].on_ack(ack.cum_seq, ack.credit, d.time_s);
+            if !was_done && self.senders[c].done() {
+                self.ingress_done_s = self.ingress_done_s.max(d.time_s);
+            }
+            hop::poll_send(
+                sim,
+                &mut self.senders[c],
+                &mut self.out_seqs,
+                d.time_s,
+                &self.lens[c],
+                self.mappers[c],
+                self.hub,
+                &mut self.ingress.wire_bytes,
+                |seq| tag(KIND_INGRESS_DATA, c as u16, seq),
+            );
+        } else if kind == KIND_EGRESS_DATA && d.node == self.reducer {
+            let seq = tag_idx(d.tag);
+            let pkt = &self.packer.pkts[(seq - 1) as usize];
+            let rel = pkt.rel.expect("egress packets carry rel headers");
+            if matches!(self.ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                self.ep.received.extend_from_batch(&pkt.batch);
+            }
+            let ack = self.ep.ack_for(self.tree, rel.child);
+            let id = u32::try_from(self.acks.len()).expect("ack id space exhausted");
+            self.acks.push(ack);
+            sim.send_tagged(
+                d.time_s,
+                self.reducer,
+                self.hub,
+                ACK_WIRE_LEN,
+                tag(KIND_EGRESS_ACK, 0, id),
+            );
+        } else if kind == KIND_EGRESS_ACK {
+            let ack = self.acks[tag_idx(d.tag) as usize];
+            let was_done = self.esender.done();
+            self.esender.on_ack(ack.cum_seq, ack.credit, d.time_s);
+            if !was_done && self.esender.done() {
+                self.egress_done_s = self.egress_done_s.max(d.time_s);
+            }
+            self.announce_and_poll(sim, d.time_s);
+        }
+        Ok(Flow::Continue)
+    }
+
+    fn on_drained(&mut self, sim: &mut NetSim) -> Result<Flow, Self::Err> {
+        let deadline = hop::earliest_retx_deadline(
+            self.senders.iter().chain(std::iter::once(&self.esender)),
+        );
+        let t = if deadline.is_finite() {
+            deadline.max(sim.now_s())
+        } else {
+            sim.now_s()
+        };
+        let mut sent_any = false;
+        for c in 0..self.senders.len() {
+            if self.senders[c].done() {
+                continue;
+            }
+            sent_any |= hop::poll_send(
+                sim,
+                &mut self.senders[c],
+                &mut self.out_seqs,
+                t,
+                &self.lens[c],
+                self.mappers[c],
+                self.hub,
+                &mut self.ingress.wire_bytes,
+                |seq| tag(KIND_INGRESS_DATA, c as u16, seq),
+            );
+        }
+        if self.overlap || self.transitioned {
+            let te = self.ready_s(t);
+            sent_any |= hop::poll_send(
+                sim,
+                &mut self.esender,
+                &mut self.out_seqs,
+                te,
+                &self.packer.lens,
+                self.hub,
+                self.reducer,
+                &mut self.egress.wire_bytes,
+                |seq| tag(KIND_EGRESS_DATA, 0, seq),
+            );
+        }
+        assert!(sent_any, "transport stalled: idle network, no timers, nothing to send");
+        Ok(Flow::Continue)
+    }
+}
+
+/// The W-lane vector counterpart of [`run_pipeline_scalar`]; `sw` must
+/// be configured via `configure_vector` with the streams' lane width.
+pub fn run_pipeline_vector(
+    sw: &mut SwitchAggSwitch,
+    tree: TreeId,
+    op: AggOp,
+    streams: &[VectorBatch],
+    cfg: &PipelineConfig,
+) -> PipelineVectorRun {
+    let t = &cfg.transport;
+    apply_session_policy(sw, t);
+    let lanes = streams.first().map(|b| b.lanes()).unwrap_or(1);
+    let packetize = |batch: &VectorBatch, child: u16| -> Vec<VectorAggregationPacket> {
+        let mut out = Vec::new();
+        let mut chunks = crate::protocol::VectorChunks::new(batch);
+        while let Some((range, last)) = chunks.next_chunk() {
+            out.push(VectorAggregationPacket {
+                tree,
+                op,
+                eot: last,
+                rel: None,
+                batch: batch.sub_batch(range),
+            });
+        }
+        crate::framework::reliable::stamp(&mut out, child, 0, |p, rel| p.rel = Some(rel));
+        out
+    };
+    let pkts: Vec<Vec<VectorAggregationPacket>> = streams
+        .iter()
+        .enumerate()
+        .map(|(c, b)| packetize(b, c as u16))
+        .collect();
+    let lens: Vec<Vec<u64>> = pkts
+        .iter()
+        .map(|v| v.iter().map(|p| p.wire_len() as u64).collect())
+        .collect();
+
+    let (mut sim, hub, mappers, reducer) = session_net(streams.len(), t);
+    let children = streams.len();
+    let t0 = sim.now_s();
+    let mut drv = VectorPipe {
+        sw,
+        tree,
+        overlap: cfg.overlap,
+        mappers: &mappers,
+        hub,
+        reducer,
+        senders: lens.iter().map(|l| t.sender_for(l.len())).collect(),
+        pkts,
+        lens,
+        sink: VectorSink::new(lanes),
+        flushes_seen: 0,
+        packer: VectorStreamPacker::new(tree, op, 0, lanes),
+        esender: t.sender_for(0),
+        announced: 0,
+        ep: Endpoint::new(VectorBatch::new(lanes), t.window),
+        sealed: false,
+        transitioned: false,
+        start_s: t0,
+        acks: Vec::new(),
+        out_seqs: Vec::new(),
+        ingress: NetHopStats::default(),
+        egress: NetHopStats::default(),
+        ingress_done_s: t0,
+        egress_done_s: t0,
+        ingress_snap: (sim.link_stats(), sim.events_processed()),
+        egress_snap: None,
+        dedup: DedupStats::default(),
+        expected_pairs: 0,
+        fifo_peak: 0,
+    };
+    for l in &drv.lens {
+        drv.ingress.first_tx_bytes += l.iter().sum::<u64>();
+    }
+    if cfg.overlap {
+        drv.egress_snap = Some(drv.ingress_snap.clone());
+    }
+    for c in 0..children {
+        hop::poll_send(
+            &mut sim,
+            &mut drv.senders[c],
+            &mut drv.out_seqs,
+            t0,
+            &drv.lens[c],
+            mappers[c],
+            hub,
+            &mut drv.ingress.wire_bytes,
+            |seq| tag(KIND_INGRESS_DATA, c as u16, seq),
+        );
+    }
+
+    if let Err(e) = hop::drive(&mut sim, t.max_steps, &mut drv) {
+        match e {}
+    }
+
+    let VectorPipe {
+        sw,
+        senders,
+        esender,
+        mut ingress,
+        mut egress,
+        ingress_done_s,
+        egress_done_s,
+        ep,
+        mut dedup,
+        mut expected_pairs,
+        mut fifo_peak,
+        ingress_snap,
+        egress_snap,
+        sealed,
+        ..
+    } = drv;
+    assert!(sealed, "session completed without sealing the egress stream");
+    if cfg.overlap {
+        ingress.done_s = ingress_done_s;
+        hop::fill_sender_stats(&mut ingress, senders.iter());
+        hop::finish_hop_stats(&mut ingress, &sim, &ingress_snap.0, ingress_snap.1, &mappers, hub);
+        sw.finalize(tree);
+        dedup = sw.dedup_stats(tree);
+        let stats = sw.stats(tree).expect("tree stats");
+        expected_pairs = stats.pairs_out_stream + stats.pairs_out_flush;
+        fifo_peak = stats.fifo_max_occupancy;
+    }
+    egress.done_s = egress_done_s;
+    hop::fill_sender_stats(&mut egress, std::iter::once(&esender));
+    let (elb, eeb) = egress_snap.expect("egress accounting was opened");
+    hop::finish_hop_stats(&mut egress, &sim, &elb, eeb, &[hub], reducer);
+    if cfg.overlap {
+        egress.events = 0;
+    }
+
+    let completeness = Completeness {
+        expected_pairs,
+        received_pairs: ep.received.len() as u64,
+    };
+    assert!(
+        completeness.is_complete(),
+        "end-of-job recovery left {} pairs missing",
+        completeness.missing()
+    );
+    PipelineVectorRun {
+        ingress,
+        jct_s: egress.done_s,
+        egress,
+        dedup,
+        completeness,
+        received: ep.received,
+        fifo_peak,
+    }
+}
+
+// ---- two-level (rack → spine → reducer) ----------------------------
+
+struct TwoLevelPipe<'a> {
+    racks: &'a mut [SwitchAggSwitch],
+    spine: &'a mut SwitchAggSwitch,
+    tree: TreeId,
+    per: usize,
+    mapper_nodes: &'a [NodeId],
+    rack_nodes: &'a [NodeId],
+    spine_node: NodeId,
+    reducer: NodeId,
+    pkts: Vec<Vec<AggregationPacket>>,
+    lens: Vec<Vec<u64>>,
+    senders: Vec<AdaptiveSender>,
+    rsinks: Vec<IngestSink>,
+    rflushes: Vec<u32>,
+    rpackers: Vec<StreamPacker>,
+    rsenders: Vec<AdaptiveSender>,
+    rannounced: Vec<usize>,
+    ssink: IngestSink,
+    sflushes: u32,
+    spacker: StreamPacker,
+    esender: AdaptiveSender,
+    eannounced: usize,
+    ep: Endpoint<Vec<KvPair>>,
+    start_s: f64,
+    acks: Vec<AggAckPacket>,
+    out_seqs: Vec<u32>,
+    ingress: NetHopStats,
+    relay: NetHopStats,
+    egress: NetHopStats,
+    ingress_done_s: f64,
+    relay_done_s: f64,
+    egress_done_s: f64,
+}
+
+impl TwoLevelPipe<'_> {
+    fn announce_and_poll_rack(&mut self, sim: &mut NetSim, r: usize, now: f64) {
+        let n = self.rpackers[r].pkts.len();
+        if n > self.rannounced[r] {
+            for i in self.rannounced[r]..n {
+                self.relay.first_tx_bytes += self.rpackers[r].lens[i];
+            }
+            self.rsenders[r].extend_total(n - self.rannounced[r]);
+            self.rannounced[r] = n;
+        }
+        let t = now.max(self.racks[r].egress_ready_s(self.tree, self.start_s));
+        hop::poll_send(
+            sim,
+            &mut self.rsenders[r],
+            &mut self.out_seqs,
+            t,
+            &self.rpackers[r].lens,
+            self.rack_nodes[r],
+            self.spine_node,
+            &mut self.relay.wire_bytes,
+            |seq| tag(KIND_RELAY_DATA, r as u16, seq),
+        );
+    }
+
+    fn announce_and_poll_spine(&mut self, sim: &mut NetSim, now: f64) {
+        let n = self.spacker.pkts.len();
+        if n > self.eannounced {
+            for i in self.eannounced..n {
+                self.egress.first_tx_bytes += self.spacker.lens[i];
+            }
+            self.esender.extend_total(n - self.eannounced);
+            self.eannounced = n;
+        }
+        let t = now.max(self.spine.egress_ready_s(self.tree, self.start_s));
+        hop::poll_send(
+            sim,
+            &mut self.esender,
+            &mut self.out_seqs,
+            t,
+            &self.spacker.lens,
+            self.spine_node,
+            self.reducer,
+            &mut self.egress.wire_bytes,
+            |seq| tag(KIND_EGRESS_DATA, 0, seq),
+        );
+    }
+
+    fn pump_rack(&mut self, sim: &mut NetSim, r: usize, now: f64) {
+        for i in 0..self.rsinks[r].forwarded.len() {
+            let p = self.rsinks[r].forwarded[i];
+            self.rpackers[r].push(p);
+        }
+        if self.rsinks[r].flushes > 0 {
+            self.rflushes[r] += self.rsinks[r].flushes;
+            assert_eq!(
+                self.rflushes[r], 1,
+                "all of a rack's EoTs admitted ⇒ exactly one rack flush"
+            );
+            for i in 0..self.rsinks[r].flushed.len() {
+                let p = self.rsinks[r].flushed[i];
+                self.rpackers[r].push(p);
+            }
+            self.rpackers[r].seal();
+        }
+        self.rsinks[r].clear();
+        self.announce_and_poll_rack(sim, r, now);
+    }
+
+    fn pump_spine(&mut self, sim: &mut NetSim, now: f64) {
+        for i in 0..self.ssink.forwarded.len() {
+            let p = self.ssink.forwarded[i];
+            self.spacker.push(p);
+        }
+        if self.ssink.flushes > 0 {
+            self.sflushes += self.ssink.flushes;
+            assert_eq!(self.sflushes, 1, "all rack EoTs admitted ⇒ exactly one spine flush");
+            for i in 0..self.ssink.flushed.len() {
+                let p = self.ssink.flushed[i];
+                self.spacker.push(p);
+            }
+            self.spacker.seal();
+        }
+        self.ssink.clear();
+        self.announce_and_poll_spine(sim, now);
+    }
+}
+
+impl HopDriver for TwoLevelPipe<'_> {
+    type Err = std::convert::Infallible;
+
+    fn label(&self) -> &'static str {
+        "two-level pipeline session"
+    }
+
+    fn finished(&self) -> bool {
+        self.senders.iter().all(|s| s.done())
+            && self.rpackers.iter().all(|p| p.sealed)
+            && self.rsenders.iter().all(|s| s.done())
+            && self.spacker.sealed
+            && self.esender.done()
+    }
+
+    fn on_delivery(&mut self, sim: &mut NetSim, d: Delivery) -> Result<Flow, Self::Err> {
+        let kind = tag_kind(d.tag);
+        if kind == KIND_INGRESS_DATA {
+            let g = tag_child(d.tag) as usize;
+            let r = g / self.per;
+            debug_assert_eq!(d.node, self.rack_nodes[r]);
+            let seq = tag_idx(d.tag);
+            let pkt = &self.pkts[g][(seq - 1) as usize];
+            let ack = self.racks[r].ingest_reliable_one(self.tree, pkt, &mut self.rsinks[r]);
+            self.pump_rack(sim, r, d.time_s);
+            let id = u32::try_from(self.acks.len()).expect("ack id space exhausted");
+            self.acks.push(ack);
+            sim.send_tagged(
+                d.time_s,
+                self.rack_nodes[r],
+                self.mapper_nodes[g],
+                ACK_WIRE_LEN,
+                tag(KIND_INGRESS_ACK, g as u16, id),
+            );
+        } else if kind == KIND_INGRESS_ACK {
+            let g = tag_child(d.tag) as usize;
+            let r = g / self.per;
+            let ack = self.acks[tag_idx(d.tag) as usize];
+            let was_done = self.senders[g].done();
+            self.senders[g].on_ack(ack.cum_seq, ack.credit, d.time_s);
+            if !was_done && self.senders[g].done() {
+                self.ingress_done_s = self.ingress_done_s.max(d.time_s);
+            }
+            hop::poll_send(
+                sim,
+                &mut self.senders[g],
+                &mut self.out_seqs,
+                d.time_s,
+                &self.lens[g],
+                self.mapper_nodes[g],
+                self.rack_nodes[r],
+                &mut self.ingress.wire_bytes,
+                |seq| tag(KIND_INGRESS_DATA, g as u16, seq),
+            );
+        } else if kind == KIND_RELAY_DATA && d.node == self.spine_node {
+            let r = tag_child(d.tag) as usize;
+            let seq = tag_idx(d.tag);
+            let pkt = &self.rpackers[r].pkts[(seq - 1) as usize];
+            let ack = self.spine.ingest_reliable_one(self.tree, pkt, &mut self.ssink);
+            self.pump_spine(sim, d.time_s);
+            let id = u32::try_from(self.acks.len()).expect("ack id space exhausted");
+            self.acks.push(ack);
+            sim.send_tagged(
+                d.time_s,
+                self.spine_node,
+                self.rack_nodes[r],
+                ACK_WIRE_LEN,
+                tag(KIND_RELAY_ACK, r as u16, id),
+            );
+        } else if kind == KIND_RELAY_ACK {
+            let r = tag_child(d.tag) as usize;
+            let ack = self.acks[tag_idx(d.tag) as usize];
+            let was_done = self.rsenders[r].done();
+            self.rsenders[r].on_ack(ack.cum_seq, ack.credit, d.time_s);
+            if !was_done && self.rsenders[r].done() && self.rpackers[r].sealed {
+                self.relay_done_s = self.relay_done_s.max(d.time_s);
+            }
+            self.announce_and_poll_rack(sim, r, d.time_s);
+        } else if kind == KIND_EGRESS_DATA && d.node == self.reducer {
+            let seq = tag_idx(d.tag);
+            let pkt = &self.spacker.pkts[(seq - 1) as usize];
+            let rel = pkt.rel.expect("egress packets carry rel headers");
+            if matches!(self.ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                self.ep.received.extend_from_slice(&pkt.pairs);
+            }
+            let ack = self.ep.ack_for(self.tree, rel.child);
+            let id = u32::try_from(self.acks.len()).expect("ack id space exhausted");
+            self.acks.push(ack);
+            sim.send_tagged(
+                d.time_s,
+                self.reducer,
+                self.spine_node,
+                ACK_WIRE_LEN,
+                tag(KIND_EGRESS_ACK, 0, id),
+            );
+        } else if kind == KIND_EGRESS_ACK {
+            let ack = self.acks[tag_idx(d.tag) as usize];
+            let was_done = self.esender.done();
+            self.esender.on_ack(ack.cum_seq, ack.credit, d.time_s);
+            if !was_done && self.esender.done() {
+                self.egress_done_s = self.egress_done_s.max(d.time_s);
+            }
+            self.announce_and_poll_spine(sim, d.time_s);
+        }
+        Ok(Flow::Continue)
+    }
+
+    fn on_drained(&mut self, sim: &mut NetSim) -> Result<Flow, Self::Err> {
+        let deadline = hop::earliest_retx_deadline(
+            self.senders
+                .iter()
+                .chain(self.rsenders.iter())
+                .chain(std::iter::once(&self.esender)),
+        );
+        let t = if deadline.is_finite() {
+            deadline.max(sim.now_s())
+        } else {
+            sim.now_s()
+        };
+        let mut sent_any = false;
+        for g in 0..self.senders.len() {
+            if self.senders[g].done() {
+                continue;
+            }
+            let r = g / self.per;
+            sent_any |= hop::poll_send(
+                sim,
+                &mut self.senders[g],
+                &mut self.out_seqs,
+                t,
+                &self.lens[g],
+                self.mapper_nodes[g],
+                self.rack_nodes[r],
+                &mut self.ingress.wire_bytes,
+                |seq| tag(KIND_INGRESS_DATA, g as u16, seq),
+            );
+        }
+        for r in 0..self.rsenders.len() {
+            let tr = t.max(self.racks[r].egress_ready_s(self.tree, self.start_s));
+            sent_any |= hop::poll_send(
+                sim,
+                &mut self.rsenders[r],
+                &mut self.out_seqs,
+                tr,
+                &self.rpackers[r].lens,
+                self.rack_nodes[r],
+                self.spine_node,
+                &mut self.relay.wire_bytes,
+                |seq| tag(KIND_RELAY_DATA, r as u16, seq),
+            );
+        }
+        let te = t.max(self.spine.egress_ready_s(self.tree, self.start_s));
+        sent_any |= hop::poll_send(
+            sim,
+            &mut self.esender,
+            &mut self.out_seqs,
+            te,
+            &self.spacker.lens,
+            self.spine_node,
+            self.reducer,
+            &mut self.egress.wire_bytes,
+            |seq| tag(KIND_EGRESS_DATA, 0, seq),
+        );
+        assert!(sent_any, "pipeline stalled: idle network, no timers, nothing to send");
+        Ok(Flow::Continue)
+    }
+}
+
+/// Build the two-level session network: `racks` rack switches under
+/// one spine, `per` mappers per rack, the reducer adjacent to the
+/// spine, with the config's loss models on every link class.
+fn two_level_net(
+    racks: usize,
+    per: usize,
+    cfg: &TransportConfig,
+) -> (NetSim, NodeId, Vec<NodeId>, Vec<NodeId>, NodeId) {
+    let (mut topo, spine, leafs, hosts) = Topology::two_level(racks, per);
+    let reducer = topo.add_node(NodeKind::Host);
+    topo.connect(spine, reducer);
+    let mut sim = NetSim::new(topo);
+    for r in 0..racks {
+        for c in 0..per {
+            let m = hosts[r * per + c];
+            sim.set_link_loss(m, leafs[r], cfg.data);
+            sim.set_link_loss(leafs[r], m, cfg.ack);
+        }
+        sim.set_link_loss(leafs[r], spine, cfg.data);
+        sim.set_link_loss(spine, leafs[r], cfg.ack);
+    }
+    sim.set_link_loss(spine, reducer, cfg.egress);
+    sim.set_link_loss(reducer, spine, cfg.ack);
+    (sim, spine, leafs, hosts, reducer)
+}
+
+/// Compose the streaming relay across two switch levels: mappers feed
+/// rack switches, each rack streams its output to the spine as one
+/// reliable relay stream (the spine sees each rack as one child of
+/// `tree` and consumes the relay packets natively), and the spine
+/// streams to the reducer — all hops overlapped on one simulated
+/// clock, every hop's egress cycle-gated by its own switch.
+///
+/// `streams[r][c]` is rack `r`'s child `c`'s pair stream (every rack
+/// carries the same child count).  `racks[r]` must be configured for
+/// `tree` with `children == streams[r].len()`; `spine` with
+/// `children == racks.len()`.  Requires an overlapped config — the
+/// batch schedule has no two-level counterpart to reproduce.
+pub fn run_pipeline_two_level(
+    racks: &mut [SwitchAggSwitch],
+    spine: &mut SwitchAggSwitch,
+    tree: TreeId,
+    op: AggOp,
+    streams: &[Vec<Vec<KvPair>>],
+    cfg: &PipelineConfig,
+) -> TwoLevelRun {
+    assert!(cfg.overlap, "the two-level relay is a streaming schedule");
+    assert_eq!(racks.len(), streams.len(), "one switch per rack");
+    assert!(!streams.is_empty(), "at least one rack");
+    let per = streams[0].len();
+    assert!(
+        streams.iter().all(|s| s.len() == per),
+        "uniform children per rack"
+    );
+    let t = &cfg.transport;
+    for sw in racks.iter_mut() {
+        apply_session_policy(sw, t);
+    }
+    apply_session_policy(spine, t);
+
+    let pkts: Vec<Vec<AggregationPacket>> = streams
+        .iter()
+        .flat_map(|rack| rack.iter())
+        .enumerate()
+        .map(|(g, s)| {
+            let mut v = AggregationPacket::pack_stream(tree, op, s, true);
+            // rel.child is the child index *within the rack tree*.
+            crate::framework::reliable::stamp(&mut v, (g % per) as u16, 0, |p, rel| {
+                p.rel = Some(rel)
+            });
+            v
+        })
+        .collect();
+    let lens: Vec<Vec<u64>> = pkts
+        .iter()
+        .map(|v| v.iter().map(|p| p.wire_len() as u64).collect())
+        .collect();
+
+    let (mut sim, spine_node, rack_nodes, mapper_nodes, reducer) =
+        two_level_net(racks.len(), per, t);
+    let n_racks = racks.len();
+    let t0 = sim.now_s();
+    let mut drv = TwoLevelPipe {
+        racks,
+        spine,
+        tree,
+        per,
+        mapper_nodes: &mapper_nodes,
+        rack_nodes: &rack_nodes,
+        spine_node,
+        reducer,
+        senders: lens.iter().map(|l| t.sender_for(l.len())).collect(),
+        pkts,
+        lens,
+        rsinks: (0..n_racks).map(|_| IngestSink::new()).collect(),
+        rflushes: vec![0; n_racks],
+        rpackers: (0..n_racks)
+            .map(|r| StreamPacker::new(tree, op, r as u16))
+            .collect(),
+        rsenders: (0..n_racks).map(|_| t.sender_for(0)).collect(),
+        rannounced: vec![0; n_racks],
+        ssink: IngestSink::new(),
+        sflushes: 0,
+        spacker: StreamPacker::new(tree, op, 0),
+        esender: t.sender_for(0),
+        eannounced: 0,
+        ep: Endpoint::new(Vec::new(), t.window),
+        start_s: t0,
+        acks: Vec::new(),
+        out_seqs: Vec::new(),
+        ingress: NetHopStats::default(),
+        relay: NetHopStats::default(),
+        egress: NetHopStats::default(),
+        ingress_done_s: t0,
+        relay_done_s: t0,
+        egress_done_s: t0,
+    };
+    for l in &drv.lens {
+        drv.ingress.first_tx_bytes += l.iter().sum::<u64>();
+    }
+    let links0 = sim.link_stats();
+    let events0 = sim.events_processed();
+    for g in 0..drv.senders.len() {
+        let r = g / per;
+        hop::poll_send(
+            &mut sim,
+            &mut drv.senders[g],
+            &mut drv.out_seqs,
+            t0,
+            &drv.lens[g],
+            mapper_nodes[g],
+            rack_nodes[r],
+            &mut drv.ingress.wire_bytes,
+            |seq| tag(KIND_INGRESS_DATA, g as u16, seq),
+        );
+    }
+
+    if let Err(e) = hop::drive(&mut sim, t.max_steps, &mut drv) {
+        match e {}
+    }
+
+    let TwoLevelPipe {
+        spine,
+        senders,
+        rsenders,
+        esender,
+        mut ingress,
+        mut relay,
+        mut egress,
+        ingress_done_s,
+        relay_done_s,
+        egress_done_s,
+        ep,
+        ..
+    } = drv;
+    ingress.done_s = ingress_done_s;
+    hop::fill_sender_stats(&mut ingress, senders.iter());
+    for r in 0..n_racks {
+        let rack_mappers = &mapper_nodes[r * per..(r + 1) * per];
+        hop::finish_hop_stats(&mut ingress, &sim, &links0, events0, rack_mappers, rack_nodes[r]);
+    }
+    relay.done_s = relay_done_s;
+    hop::fill_sender_stats(&mut relay, rsenders.iter());
+    hop::finish_hop_stats(&mut relay, &sim, &links0, events0, &rack_nodes, spine_node);
+    egress.done_s = egress_done_s;
+    hop::fill_sender_stats(&mut egress, std::iter::once(&esender));
+    hop::finish_hop_stats(&mut egress, &sim, &links0, events0, &[spine_node], reducer);
+    // The three hops share one event window; report it once.
+    ingress.events = sim.events_processed() - events0;
+    relay.events = 0;
+    egress.events = 0;
+
+    spine.finalize(tree);
+    let spine_dedup = spine.dedup_stats(tree);
+    let stats = spine.stats(tree).expect("spine tree stats");
+    let expected_pairs = stats.pairs_out_stream + stats.pairs_out_flush;
+    let completeness =
+        Reducer::verify_completeness(expected_pairs, std::slice::from_ref(&ep.received));
+    assert!(
+        completeness.is_complete(),
+        "end-of-job recovery left {} pairs missing",
+        completeness.missing()
+    );
+    TwoLevelRun {
+        ingress,
+        relay,
+        jct_s: egress.done_s,
+        egress,
+        spine_dedup,
+        completeness,
+        received: ep.received,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::run_transport_scalar;
+    use crate::protocol::{TreeConfig, VectorChunks};
+    use crate::switch::SwitchConfig;
+    use crate::util::rng::Pcg32;
+    use std::collections::HashMap;
+
+    fn switch(children: u16) -> SwitchAggSwitch {
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(16 << 10, Some(256 << 10)));
+        sw.configure(&[TreeConfig {
+            tree: TreeId(1),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        sw
+    }
+
+    fn streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+        let mut rng = Pcg32::new(seed);
+        (0..children)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        let id = rng.gen_range_u64(300);
+                        KvPair::new(
+                            Key::from_id(id, 16 + (id % 49) as usize),
+                            rng.gen_range_u64(100) as i64 - 50,
+                        )
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn merged(pairs: &[KvPair]) -> HashMap<Key, i64> {
+        Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
+    }
+
+    #[test]
+    fn stream_packer_matches_pack_stream() {
+        let pairs = streams(1, 700, 3).pop().unwrap();
+        let mut reference = AggregationPacket::pack_stream(TreeId(1), AggOp::Sum, &pairs, true);
+        crate::framework::reliable::stamp(&mut reference, 5, 0, |p, rel| p.rel = Some(rel));
+        let mut packer = StreamPacker::new(TreeId(1), AggOp::Sum, 5);
+        for &p in &pairs {
+            packer.push(p);
+        }
+        packer.seal();
+        assert_eq!(packer.pkts, reference);
+        // Empty stream: one empty EoT packet, like pack_stream.
+        let mut empty = StreamPacker::new(TreeId(1), AggOp::Sum, 0);
+        empty.seal();
+        assert_eq!(empty.pkts.len(), 1);
+        assert!(empty.pkts[0].eot && empty.pkts[0].pairs.is_empty());
+    }
+
+    #[test]
+    fn vector_stream_packer_matches_vector_chunks() {
+        let pairs = streams(1, 500, 11).pop().unwrap();
+        let batch = VectorBatch::from_pairs(&pairs);
+        let mut packer = VectorStreamPacker::new(TreeId(1), AggOp::Sum, 0, batch.lanes());
+        for i in 0..batch.len() {
+            packer.push(batch.key(i), batch.lane_slice(i));
+        }
+        packer.seal();
+        let mut chunks = VectorChunks::new(&batch);
+        let mut k = 0;
+        while let Some((range, last)) = chunks.next_chunk() {
+            assert_eq!(packer.pkts[k].batch, batch.sub_batch(range));
+            assert_eq!(packer.pkts[k].eot, last);
+            k += 1;
+        }
+        assert_eq!(packer.pkts.len(), k);
+    }
+
+    #[test]
+    fn batch_mode_is_byte_identical_to_the_legacy_session() {
+        let ss = streams(3, 900, 17);
+        let tcfg = TransportConfig::uniform(0.02, 0xBEEF);
+        let mut sw_a = switch(3);
+        let legacy = run_transport_scalar(&mut sw_a, TreeId(1), AggOp::Sum, &ss, &tcfg);
+        let mut sw_b = switch(3);
+        let piped =
+            run_pipeline_scalar(&mut sw_b, TreeId(1), AggOp::Sum, &ss, &PipelineConfig::batch(tcfg));
+        assert_eq!(piped.ingress, legacy.ingress);
+        assert_eq!(piped.egress, legacy.egress);
+        assert_eq!(piped.dedup, legacy.dedup);
+        assert_eq!(piped.received, legacy.received);
+        assert_eq!(piped.jct_s, legacy.jct_s);
+        assert_eq!(piped.fifo_peak, legacy.fifo_peak);
+    }
+
+    #[test]
+    fn streaming_overlap_cuts_jct_and_keeps_the_aggregate() {
+        let ss = streams(8, 1_200, 29);
+        let tcfg = TransportConfig::default();
+        let mut sw_a = switch(8);
+        let batch =
+            run_pipeline_scalar(&mut sw_a, TreeId(1), AggOp::Sum, &ss, &PipelineConfig::batch(tcfg));
+        let mut sw_b = switch(8);
+        let stream = run_pipeline_scalar(
+            &mut sw_b,
+            TreeId(1),
+            AggOp::Sum,
+            &ss,
+            &PipelineConfig::streaming(tcfg),
+        );
+        assert!(
+            stream.jct_s < batch.jct_s,
+            "overlap must finish earlier: {} vs {}",
+            stream.jct_s,
+            batch.jct_s
+        );
+        assert_eq!(merged(&stream.received), merged(&batch.received));
+        assert!(stream.completeness.is_complete());
+    }
+
+    #[test]
+    fn two_level_relay_preserves_the_aggregate() {
+        let racks = 2;
+        let per = 2;
+        let ss = streams(racks * per, 600, 41);
+        let grouped: Vec<Vec<Vec<KvPair>>> =
+            ss.chunks(per).map(|c| c.to_vec()).collect();
+        let mut rack_sw: Vec<SwitchAggSwitch> =
+            (0..racks).map(|_| switch(per as u16)).collect();
+        let mut spine = switch(racks as u16);
+        let run = run_pipeline_two_level(
+            &mut rack_sw,
+            &mut spine,
+            TreeId(1),
+            AggOp::Sum,
+            &grouped,
+            &PipelineConfig::streaming(TransportConfig::uniform(0.01, 0x2117)),
+        );
+        assert!(run.completeness.is_complete());
+        assert!(run.jct_s > 0.0);
+        let flat: Vec<KvPair> = ss.iter().flatten().copied().collect();
+        assert_eq!(merged(&run.received), merged(&flat));
+    }
+}

@@ -35,6 +35,7 @@
 //! stream must software-merge to the same table as the job's input
 //! streams — churn and reclamation may cost time, never cells.
 
+use crate::framework::hop::{self, Flow, HopDriver};
 use crate::framework::reducer::Reducer;
 use crate::framework::reliable::{stamp, Endpoint};
 use crate::framework::transport::{
@@ -218,39 +219,17 @@ struct ActiveJob {
     links_mark: BTreeMap<(NodeId, NodeId), LinkStats>,
 }
 
-fn link_delta(
-    after: &BTreeMap<(NodeId, NodeId), LinkStats>,
-    before: &BTreeMap<(NodeId, NodeId), LinkStats>,
-    key: (NodeId, NodeId),
-) -> (u64, u64) {
-    let a = after.get(&key).map(|s| (s.dropped, s.duplicated)).unwrap_or((0, 0));
-    let b = before.get(&key).map(|s| (s.dropped, s.duplicated)).unwrap_or((0, 0));
-    (a.0 - b.0, a.1 - b.1)
-}
-
-fn fill_sender_stats<'a>(stats: &mut NetHopStats, senders: impl Iterator<Item = &'a AdaptiveSender>) {
-    let mut srtt_sum = 0.0;
-    let mut srtt_n = 0u32;
-    for s in senders {
-        stats.first_tx += s.first_tx;
-        stats.retransmissions += s.retransmissions;
-        stats.timeouts += s.timeouts;
-        stats.cwnd_peak = stats.cwnd_peak.max(s.cwnd_peak());
-        if let Some(srtt) = s.rtt().srtt_s() {
-            srtt_sum += srtt;
-            srtt_n += 1;
-        }
-    }
-    if srtt_n > 0 {
-        stats.srtt_mean_s = srtt_sum / srtt_n as f64;
-    }
-}
-
+/// The serving loop's state: every tenant's live job, the shared
+/// switch, and the arrival schedule.  Runs as a [`HopDriver`] on the
+/// shared hop-driver core — `pre_step` activates the next pending job
+/// when the network is idle between arrivals, `on_delivery` dispatches
+/// by slot/generation, `on_drained` jumps to the earliest
+/// retransmission deadline or job start.
 struct Driver<'a> {
     cfg: &'a TransportConfig,
     specs: &'a [TenantSpec],
     regime: TenancyRegime,
-    sim: NetSim,
+    sw: &'a mut SwitchAggSwitch,
     hub: NodeId,
     mappers: Vec<NodeId>,
     reducer: NodeId,
@@ -265,7 +244,12 @@ struct Driver<'a> {
 }
 
 impl<'a> Driver<'a> {
-    fn new(specs: &'a [TenantSpec], regime: TenancyRegime, cfg: &'a TransportConfig) -> Self {
+    fn new(
+        sw: &'a mut SwitchAggSwitch,
+        specs: &'a [TenantSpec],
+        regime: TenancyRegime,
+        cfg: &'a TransportConfig,
+    ) -> (NetSim, Self) {
         let total: usize = specs.iter().map(|s| s.children as usize).sum();
         let (topo, hub, hosts) = Topology::star(total + 1);
         let mut sim = NetSim::new(topo);
@@ -289,11 +273,11 @@ impl<'a> Driver<'a> {
             .filter(|(_, s)| !s.jobs.is_empty())
             .map(|(i, s)| (s.jobs[0].start_s, i, 0usize))
             .collect();
-        Self {
+        let drv = Self {
             cfg,
             specs,
             regime,
-            sim,
+            sw,
             hub,
             mappers,
             reducer,
@@ -303,7 +287,8 @@ impl<'a> Driver<'a> {
             outcomes: Vec::new(),
             reclaims: 0,
             rejected: 0,
-        }
+        };
+        (sim, drv)
     }
 
     fn quota_regime(&self) -> bool {
@@ -311,7 +296,7 @@ impl<'a> Driver<'a> {
     }
 
     /// Activate every pending job whose start time has come.
-    fn activate_due(&mut self, sw: &mut SwitchAggSwitch, t: f64) {
+    fn activate_due(&mut self, sim: &mut NetSim, t: f64) {
         loop {
             let Some(pos) = self
                 .pending
@@ -321,25 +306,25 @@ impl<'a> Driver<'a> {
                 return;
             };
             let (start, slot, job_idx) = self.pending.swap_remove(pos);
-            self.activate(sw, slot, job_idx, start.max(self.sim.now_s()));
+            self.activate(sim, slot, job_idx, start.max(sim.now_s()));
         }
     }
 
     /// Admit (if needed) and launch one job at time `t`.
-    fn activate(&mut self, sw: &mut SwitchAggSwitch, slot: usize, job_idx: usize, t: f64) {
+    fn activate(&mut self, sim: &mut NetSim, slot: usize, job_idx: usize, t: f64) {
         let spec = &self.specs[slot];
         let job = &spec.jobs[job_idx];
         assert_eq!(job.streams.len(), spec.children as usize);
         assert!(self.jobs[slot].is_none(), "tenant {slot} has overlapping jobs");
 
-        if self.quota_regime() && sw.stats(spec.tree).is_none() {
+        if self.quota_regime() && self.sw.stats(spec.tree).is_none() {
             let tc = TreeConfig {
                 tree: spec.tree,
                 children: spec.children,
                 parent_port: 0,
                 op: spec.op,
             };
-            if let Ok(spilled) = sw.admit_tree_or_reclaim(tc, spec.quota, spec.weight) {
+            if let Ok(spilled) = self.sw.admit_tree_or_reclaim(tc, spec.quota, spec.weight) {
                 self.reclaims += spilled.len() as u64;
                 for (victim, pairs) in spilled {
                     // Idle tenants are flushed between jobs, so a
@@ -356,7 +341,7 @@ impl<'a> Driver<'a> {
             // where reclaim shrank neighbors but still freed too
             // little (`Ok` with the tree absent): skip this job, keep
             // the tenant's later arrivals in the schedule.
-            if sw.stats(spec.tree).is_none() {
+            if self.sw.stats(spec.tree).is_none() {
                 self.rejected += 1;
                 if job_idx + 1 < spec.jobs.len() {
                     let next = spec.jobs[job_idx + 1].start_s.max(t);
@@ -367,15 +352,15 @@ impl<'a> Driver<'a> {
         } else if self.quota_regime() {
             // Resident from a previous job: grow back any slots an
             // elastic reclaim took while idle.
-            if let Some(pairs) = sw.regrow_tenant(spec.tree) {
+            if let Some(pairs) = self.sw.regrow_tenant(spec.tree) {
                 assert!(pairs.is_empty(), "regrow spilled residents of {}", spec.tree);
             }
         }
 
         // New job generation: fence the previous one's stragglers and
         // reset the per-child dedup windows (seqs restart at 1).
-        sw.begin_epoch(spec.tree, job_idx as u16);
-        sw.set_tenant_idle(spec.tree, false);
+        self.sw.begin_epoch(spec.tree, job_idx as u16);
+        self.sw.set_tenant_idle(spec.tree, false);
 
         let gen = job_idx as u8;
         let pkts: Vec<Vec<AggregationPacket>> = job
@@ -399,25 +384,24 @@ impl<'a> Driver<'a> {
         for l in &lens {
             ingress.first_tx_bytes += l.iter().sum::<u64>();
         }
-        let events_mark = self.sim.events_processed();
-        let links_mark = self.sim.link_stats();
+        let events_mark = sim.events_processed();
+        let links_mark = sim.link_stats();
         let expected = Reducer::merge_software(&job.streams, spec.op).table;
 
         let mut out_seqs = Vec::new();
         for c in 0..senders.len() {
-            out_seqs.clear();
-            senders[c].poll(t, &mut out_seqs);
-            for &seq in &out_seqs {
-                let bytes = lens[c][(seq - 1) as usize];
-                ingress.wire_bytes += bytes;
-                self.sim.send_tagged(
-                    t,
-                    self.mappers[self.base[slot] + c],
-                    self.hub,
-                    bytes,
-                    ttag(KIND_INGRESS_DATA, slot, gen, c, seq),
-                );
-            }
+            let (src, dst) = (self.mappers[self.base[slot] + c], self.hub);
+            hop::poll_send(
+                sim,
+                &mut senders[c],
+                &mut out_seqs,
+                t,
+                &lens[c],
+                src,
+                dst,
+                &mut ingress.wire_bytes,
+                |seq| ttag(KIND_INGRESS_DATA, slot, gen, c, seq),
+            );
         }
 
         self.jobs[slot] = Some(ActiveJob {
@@ -447,24 +431,24 @@ impl<'a> Driver<'a> {
 
     /// All ingress senders acknowledged: finalize the switch side and
     /// launch the egress hop at time `t`.
-    fn transition(&mut self, sw: &mut SwitchAggSwitch, slot: usize, t: f64) {
+    fn transition(&mut self, sim: &mut NetSim, slot: usize, t: f64) {
         let job = self.jobs[slot].as_mut().expect("transition of idle slot");
         assert_eq!(job.sink.flushes, 1, "all EoTs admitted ⇒ exactly one flush");
-        sw.finalize(job.tree);
+        self.sw.finalize(job.tree);
 
         // Close out the ingress hop's accounting.
         job.ingress.done_s = t;
-        fill_sender_stats(&mut job.ingress, job.senders.iter());
-        let links = self.sim.link_stats();
+        hop::fill_sender_stats(&mut job.ingress, job.senders.iter());
+        let links = sim.link_stats();
         for c in 0..job.senders.len() {
             let m = self.mappers[self.base[slot] + c];
-            let (drops, dups) = link_delta(&links, &job.links_mark, (m, self.hub));
+            let (drops, dups) = hop::link_delta(&links, &job.links_mark, (m, self.hub));
             job.ingress.drops += drops;
             job.ingress.dups += dups;
-            job.ingress.acks_dropped += link_delta(&links, &job.links_mark, (self.hub, m)).0;
+            job.ingress.acks_dropped += hop::link_delta(&links, &job.links_mark, (self.hub, m)).0;
         }
-        job.ingress.events = self.sim.events_processed() - job.events_mark;
-        job.events_mark = self.sim.events_processed();
+        job.ingress.events = sim.events_processed() - job.events_mark;
+        job.events_mark = sim.events_processed();
         job.links_mark = links;
 
         // Egress: the switch's emitted stream (forwarded, then flush)
@@ -481,19 +465,19 @@ impl<'a> Driver<'a> {
         job.ep = Some(Endpoint::new(Vec::new(), self.cfg.window));
         job.phase = Phase::Egress;
 
+        let gen = job.gen;
         let mut out_seqs = Vec::new();
-        esender.poll(t, &mut out_seqs);
-        for &seq in &out_seqs {
-            let bytes = elens[(seq - 1) as usize];
-            job.egress.wire_bytes += bytes;
-            self.sim.send_tagged(
-                t,
-                self.hub,
-                self.reducer,
-                bytes,
-                ttag(KIND_EGRESS_DATA, slot, job.gen, 0, seq),
-            );
-        }
+        hop::poll_send(
+            sim,
+            &mut esender,
+            &mut out_seqs,
+            t,
+            &elens,
+            self.hub,
+            self.reducer,
+            &mut job.egress.wire_bytes,
+            |seq| ttag(KIND_EGRESS_DATA, slot, gen, 0, seq),
+        );
         job.epkts = epkts;
         job.elens = elens;
         job.esender = Some(esender);
@@ -501,16 +485,17 @@ impl<'a> Driver<'a> {
 
     /// The egress hop fully acknowledged: record the outcome, run the
     /// tenant's departure housekeeping, schedule its next job.
-    fn complete(&mut self, sw: &mut SwitchAggSwitch, slot: usize, t: f64) {
+    fn complete(&mut self, sim: &mut NetSim, slot: usize, t: f64) {
         let mut job = self.jobs[slot].take().expect("completion of idle slot");
         job.egress.done_s = t;
-        fill_sender_stats(&mut job.egress, job.esender.iter());
-        let links = self.sim.link_stats();
-        let (drops, dups) = link_delta(&links, &job.links_mark, (self.hub, self.reducer));
+        hop::fill_sender_stats(&mut job.egress, job.esender.iter());
+        let links = sim.link_stats();
+        let (drops, dups) = hop::link_delta(&links, &job.links_mark, (self.hub, self.reducer));
         job.egress.drops = drops;
         job.egress.dups = dups;
-        job.egress.acks_dropped = link_delta(&links, &job.links_mark, (self.reducer, self.hub)).0;
-        job.egress.events = self.sim.events_processed() - job.events_mark;
+        job.egress.acks_dropped =
+            hop::link_delta(&links, &job.links_mark, (self.reducer, self.hub)).0;
+        job.egress.events = sim.events_processed() - job.events_mark;
 
         let received = job.ep.expect("egress endpoint").received;
         let exact =
@@ -529,9 +514,9 @@ impl<'a> Driver<'a> {
         });
 
         let spec = &self.specs[slot];
-        sw.set_tenant_idle(spec.tree, true);
+        self.sw.set_tenant_idle(spec.tree, true);
         if self.quota_regime() && spec.evict_between_jobs {
-            if let Some(res) = sw.evict_tree(spec.tree) {
+            if let Some(res) = self.sw.evict_tree(spec.tree) {
                 assert!(res.is_empty(), "eviction spilled residents of a flushed tenant");
             }
         }
@@ -566,7 +551,7 @@ impl<'a> Driver<'a> {
         )
     }
 
-    fn dispatch(&mut self, sw: &mut SwitchAggSwitch, d: Delivery) {
+    fn dispatch(&mut self, sim: &mut NetSim, d: Delivery) {
         let kind = ttag_kind(d.tag);
         let slot = ttag_slot(d.tag);
         let gen = ttag_gen(d.tag);
@@ -585,10 +570,10 @@ impl<'a> Driver<'a> {
                     return;
                 }
                 let pkt = &job.pkts[child][(seq - 1) as usize];
-                let ack = sw.ingest_reliable_one(job.tree, pkt, &mut job.sink);
+                let ack = self.sw.ingest_reliable_one(job.tree, pkt, &mut job.sink);
                 let id = u32::try_from(job.acks.len()).expect("ack id space exhausted");
                 job.acks.push(ack);
-                self.sim.send_tagged(
+                sim.send_tagged(
                     d.time_s,
                     self.hub,
                     self.mappers[self.base[slot] + child],
@@ -605,27 +590,26 @@ impl<'a> Driver<'a> {
                         return;
                     }
                     let ack = job.acks[ttag_idx(d.tag) as usize];
-                    let sender = &mut job.senders[c];
-                    sender.on_ack(ack.cum_seq, ack.credit, d.time_s);
+                    job.senders[c].on_ack(ack.cum_seq, ack.credit, d.time_s);
+                    let (src, dst) = (self.mappers[self.base[slot] + c], self.hub);
                     let mut out_seqs = Vec::new();
-                    sender.poll(d.time_s, &mut out_seqs);
-                    for &seq in &out_seqs {
-                        let bytes = job.lens[c][(seq - 1) as usize];
-                        job.ingress.wire_bytes += bytes;
-                        self.sim.send_tagged(
-                            d.time_s,
-                            self.mappers[self.base[slot] + c],
-                            self.hub,
-                            bytes,
-                            ttag(KIND_INGRESS_DATA, slot, gen, c, seq),
-                        );
-                    }
+                    hop::poll_send(
+                        sim,
+                        &mut job.senders[c],
+                        &mut out_seqs,
+                        d.time_s,
+                        &job.lens[c],
+                        src,
+                        dst,
+                        &mut job.ingress.wire_bytes,
+                        |seq| ttag(KIND_INGRESS_DATA, slot, gen, c, seq),
+                    );
                     if job.senders.iter().all(|s| s.done()) {
                         all_done = true;
                     }
                 }
                 if all_done {
-                    self.transition(sw, slot, d.time_s);
+                    self.transition(sim, slot, d.time_s);
                 }
             }
             k if k == KIND_EGRESS_DATA && d.node == self.reducer => {
@@ -645,7 +629,7 @@ impl<'a> Driver<'a> {
                 ack.credit = self.egress_credit(slot, ack.credit);
                 let Some(job) = self.jobs[slot].as_mut() else { return };
                 job.eacks.push(ack);
-                self.sim.send_tagged(
+                sim.send_tagged(
                     d.time_s,
                     self.reducer,
                     self.hub,
@@ -664,24 +648,23 @@ impl<'a> Driver<'a> {
                     let sender = job.esender.as_mut().expect("egress sender");
                     sender.on_ack(ack.cum_seq, ack.credit, d.time_s);
                     let mut out_seqs = Vec::new();
-                    sender.poll(d.time_s, &mut out_seqs);
-                    for &seq in &out_seqs {
-                        let bytes = job.elens[(seq - 1) as usize];
-                        job.egress.wire_bytes += bytes;
-                        self.sim.send_tagged(
-                            d.time_s,
-                            self.hub,
-                            self.reducer,
-                            bytes,
-                            ttag(KIND_EGRESS_DATA, slot, gen, 0, seq),
-                        );
-                    }
-                    if sender.done() {
+                    hop::poll_send(
+                        sim,
+                        sender,
+                        &mut out_seqs,
+                        d.time_s,
+                        &job.elens,
+                        self.hub,
+                        self.reducer,
+                        &mut job.egress.wire_bytes,
+                        |seq| ttag(KIND_EGRESS_DATA, slot, gen, 0, seq),
+                    );
+                    if job.esender.as_ref().expect("egress sender").done() {
                         done = true;
                     }
                 }
                 if done {
-                    self.complete(sw, slot, d.time_s);
+                    self.complete(sim, slot, d.time_s);
                 }
             }
             _ => {}
@@ -690,19 +673,13 @@ impl<'a> Driver<'a> {
 
     /// The network drained with work outstanding: jump to the earliest
     /// retransmission deadline or pending job start — no tick idling.
-    fn drained(&mut self, sw: &mut SwitchAggSwitch) {
-        let deadline = self
-            .jobs
-            .iter()
-            .flatten()
-            .flat_map(|j| {
-                j.senders
-                    .iter()
-                    .chain(j.esender.iter())
-                    .filter(|s| !s.done())
-                    .filter_map(|s| s.next_retx_deadline())
-            })
-            .fold(f64::INFINITY, f64::min);
+    fn drained(&mut self, sim: &mut NetSim) {
+        let deadline = hop::earliest_retx_deadline(
+            self.jobs
+                .iter()
+                .flatten()
+                .flat_map(|j| j.senders.iter().chain(j.esender.iter())),
+        );
         let next_start = self
             .pending
             .iter()
@@ -710,13 +687,13 @@ impl<'a> Driver<'a> {
             .fold(f64::INFINITY, f64::min);
         if next_start <= deadline {
             assert!(next_start.is_finite(), "drained with nothing scheduled");
-            self.activate_due(sw, next_start);
+            self.activate_due(sim, next_start);
             return;
         }
         let t = if deadline.is_finite() {
-            deadline.max(self.sim.now_s())
+            deadline.max(sim.now_s())
         } else {
-            self.sim.now_s()
+            sim.now_s()
         };
         let mut sent_any = false;
         let mut out_seqs = Vec::new();
@@ -729,20 +706,18 @@ impl<'a> Driver<'a> {
                         if job.senders[c].done() {
                             continue;
                         }
-                        out_seqs.clear();
-                        job.senders[c].poll(t, &mut out_seqs);
-                        for &seq in &out_seqs {
-                            sent_any = true;
-                            let bytes = job.lens[c][(seq - 1) as usize];
-                            job.ingress.wire_bytes += bytes;
-                            self.sim.send_tagged(
-                                t,
-                                self.mappers[self.base[slot] + c],
-                                self.hub,
-                                bytes,
-                                ttag(KIND_INGRESS_DATA, slot, gen, c, seq),
-                            );
-                        }
+                        let (src, dst) = (self.mappers[self.base[slot] + c], self.hub);
+                        sent_any |= hop::poll_send(
+                            sim,
+                            &mut job.senders[c],
+                            &mut out_seqs,
+                            t,
+                            &job.lens[c],
+                            src,
+                            dst,
+                            &mut job.ingress.wire_bytes,
+                            |seq| ttag(KIND_INGRESS_DATA, slot, gen, c, seq),
+                        );
                     }
                 }
                 Phase::Egress => {
@@ -750,20 +725,17 @@ impl<'a> Driver<'a> {
                     if sender.done() {
                         continue;
                     }
-                    out_seqs.clear();
-                    sender.poll(t, &mut out_seqs);
-                    for &seq in &out_seqs {
-                        sent_any = true;
-                        let bytes = job.elens[(seq - 1) as usize];
-                        job.egress.wire_bytes += bytes;
-                        self.sim.send_tagged(
-                            t,
-                            self.hub,
-                            self.reducer,
-                            bytes,
-                            ttag(KIND_EGRESS_DATA, slot, gen, 0, seq),
-                        );
-                    }
+                    sent_any |= hop::poll_send(
+                        sim,
+                        sender,
+                        &mut out_seqs,
+                        t,
+                        &job.elens,
+                        self.hub,
+                        self.reducer,
+                        &mut job.egress.wire_bytes,
+                        |seq| ttag(KIND_EGRESS_DATA, slot, gen, 0, seq),
+                    );
                 }
             }
         }
@@ -772,42 +744,43 @@ impl<'a> Driver<'a> {
             "tenancy stalled: idle network, no timers, nothing to send"
         );
     }
+}
 
-    fn run(mut self, sw: &mut SwitchAggSwitch) -> TenancyRun {
-        let mut steps = 0u64;
-        loop {
-            let active_any = self.jobs.iter().any(|j| j.is_some());
-            if !active_any && self.pending.is_empty() {
-                break;
-            }
-            steps += 1;
-            assert!(
-                steps <= self.cfg.max_steps,
-                "tenancy run did not converge within {} steps",
-                self.cfg.max_steps
-            );
-            if !active_any {
-                let next = self
-                    .pending
-                    .iter()
-                    .map(|&(s, _, _)| s)
-                    .fold(f64::INFINITY, f64::min);
-                self.activate_due(sw, next);
-                continue;
-            }
-            match self.sim.step_delivery() {
-                Some(d) => {
-                    self.activate_due(sw, d.time_s);
-                    self.dispatch(sw, d);
-                }
-                None => self.drained(sw),
-            }
+impl HopDriver for Driver<'_> {
+    type Err = std::convert::Infallible;
+
+    fn label(&self) -> &'static str {
+        "tenancy run"
+    }
+
+    fn finished(&self) -> bool {
+        self.pending.is_empty() && self.jobs.iter().all(|j| j.is_none())
+    }
+
+    fn pre_step(&mut self, sim: &mut NetSim) -> bool {
+        if self.jobs.iter().any(|j| j.is_some()) {
+            return true;
         }
-        TenancyRun {
-            outcomes: self.outcomes,
-            reclaims: self.reclaims,
-            rejected: self.rejected,
-        }
+        // Network idle between arrivals: jump straight to the next
+        // scheduled job start instead of stepping an empty calendar.
+        let next = self
+            .pending
+            .iter()
+            .map(|&(s, _, _)| s)
+            .fold(f64::INFINITY, f64::min);
+        self.activate_due(sim, next);
+        false
+    }
+
+    fn on_delivery(&mut self, sim: &mut NetSim, d: Delivery) -> Result<Flow, Self::Err> {
+        self.activate_due(sim, d.time_s);
+        self.dispatch(sim, d);
+        Ok(Flow::Continue)
+    }
+
+    fn on_drained(&mut self, sim: &mut NetSim) -> Result<Flow, Self::Err> {
+        self.drained(sim);
+        Ok(Flow::Continue)
     }
 }
 
@@ -843,7 +816,15 @@ pub fn run_tenancy(
             );
         }
     }
-    Driver::new(specs, regime, cfg).run(sw)
+    let (mut sim, mut drv) = Driver::new(sw, specs, regime, cfg);
+    if let Err(e) = hop::drive(&mut sim, cfg.max_steps, &mut drv) {
+        match e {}
+    }
+    TenancyRun {
+        outcomes: drv.outcomes,
+        reclaims: drv.reclaims,
+        rejected: drv.rejected,
+    }
 }
 
 #[cfg(test)]

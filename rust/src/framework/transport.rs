@@ -38,10 +38,11 @@
 //! reference on the scalar and W-lane vector paths, serial and
 //! sharded engines alike.
 
+use crate::framework::hop::{self, Flow, HopDriver};
 use crate::framework::reducer::{Completeness, Reducer};
 use crate::framework::reliable::{stamp, Endpoint};
 use crate::net::loss::LossConfig;
-use crate::net::netsim::NetSim;
+use crate::net::netsim::{Delivery, NetSim};
 use crate::net::topology::{NodeId, Topology};
 use crate::protocol::{
     AdaptiveSender, AggAckPacket, AggOp, AggregationPacket, KvPair, RelWindow, RttEstimator,
@@ -273,97 +274,47 @@ pub(crate) fn tag_idx(t: u64) -> u32 {
     t as u32
 }
 
-/// Drive one reliable hop to completion over the live `NetSim`:
-/// per-child senders at `src[c]` stream their packets (lengths in
-/// `lens[c]`) to `dst`, where `deliver(child, seq, now)` admits the
-/// payload and returns the ack to send back.  Every arrival is
-/// reacted to individually — acks clock the windows open, drained-
-/// network gaps jump straight to the earliest retransmission deadline.
-pub(crate) fn drive_hop(
-    sim: &mut NetSim,
-    cfg: &TransportConfig,
-    lens: &[Vec<u64>],
-    src: &[NodeId],
+/// The plain reliable hop as a [`HopDriver`] configuration: per-child
+/// senders at `src[c]` stream their packets (lengths in `lens[c]`) to
+/// `dst`, where `deliver(child, seq, now)` admits the payload and
+/// returns the ack to send back.
+struct PlainHop<'a, F: FnMut(u16, u32, f64) -> AggAckPacket> {
+    lens: &'a [Vec<u64>],
+    src: &'a [NodeId],
     dst: NodeId,
-    kinds: (u64, u64),
-    mut deliver: impl FnMut(u16, u32, f64) -> AggAckPacket,
-) -> NetHopStats {
-    let (data_kind, ack_kind) = kinds;
-    assert_eq!(lens.len(), src.len());
-    let children = lens.len();
-    let mut senders: Vec<AdaptiveSender> =
-        lens.iter().map(|l| cfg.sender_for(l.len())).collect();
+    data_kind: u64,
+    ack_kind: u64,
+    deliver: F,
+    senders: Vec<AdaptiveSender>,
     // Ack payloads ride out-of-band, keyed by the 32-bit index in the
     // ack's tag (a tag is 64 bits; cum_seq + credit don't fit).
-    let mut acks: Vec<AggAckPacket> = Vec::new();
-    let mut stats = NetHopStats::default();
-    for l in lens {
-        stats.first_tx_bytes += l.iter().sum::<u64>();
-    }
-    let links_before = sim.link_stats();
-    let events_before = sim.events_processed();
+    acks: Vec<AggAckPacket>,
+    out_seqs: Vec<u32>,
+    stats: NetHopStats,
+    done_s: f64,
+}
 
-    let mut out_seqs: Vec<u32> = Vec::new();
-    let t0 = sim.now_s();
-    let mut done_s = t0;
-    for c in 0..children {
-        out_seqs.clear();
-        senders[c].poll(t0, &mut out_seqs);
-        for &seq in &out_seqs {
-            let bytes = lens[c][(seq - 1) as usize];
-            stats.wire_bytes += bytes;
-            sim.send_tagged(t0, src[c], dst, bytes, tag(data_kind, c as u16, seq));
-        }
+impl<F: FnMut(u16, u32, f64) -> AggAckPacket> HopDriver for PlainHop<'_, F> {
+    type Err = std::convert::Infallible;
+
+    fn label(&self) -> &'static str {
+        "transport session"
     }
 
-    let mut steps: u64 = 0;
-    while !senders.iter().all(|s| s.done()) {
-        steps += 1;
-        assert!(
-            steps <= cfg.max_steps,
-            "transport session did not converge within {} steps",
-            cfg.max_steps
-        );
-        let Some(d) = sim.step_delivery() else {
-            // The network drained with streams unfinished: everything
-            // outstanding was lost.  Jump straight to the earliest
-            // retransmission deadline — no tick-by-tick idling — or
-            // probe immediately if no timer is pending (a zero-credit
-            // stall; the sender's window probe restarts the stream).
-            let deadline = senders
-                .iter()
-                .filter(|s| !s.done())
-                .filter_map(|s| s.next_retx_deadline())
-                .fold(f64::INFINITY, f64::min);
-            let t = if deadline.is_finite() {
-                deadline.max(sim.now_s())
-            } else {
-                sim.now_s()
-            };
-            let mut sent_any = false;
-            for c in 0..children {
-                if senders[c].done() {
-                    continue;
-                }
-                out_seqs.clear();
-                senders[c].poll(t, &mut out_seqs);
-                for &seq in &out_seqs {
-                    sent_any = true;
-                    let bytes = lens[c][(seq - 1) as usize];
-                    stats.wire_bytes += bytes;
-                    sim.send_tagged(t, src[c], dst, bytes, tag(data_kind, c as u16, seq));
-                }
-            }
-            assert!(sent_any, "transport stalled: idle network, no timers, nothing to send");
-            continue;
-        };
+    fn finished(&self) -> bool {
+        self.senders.iter().all(|s| s.done())
+    }
+
+    fn on_delivery(&mut self, sim: &mut NetSim, d: Delivery) -> Result<Flow, Self::Err> {
+        let (lens, src, dst) = (self.lens, self.src, self.dst);
+        let (data_kind, ack_kind) = (self.data_kind, self.ack_kind);
         let kind = tag_kind(d.tag);
         if kind == data_kind && d.node == dst {
             let child = tag_child(d.tag);
             let seq = tag_idx(d.tag);
-            let ack = deliver(child, seq, d.time_s);
-            let id = u32::try_from(acks.len()).expect("ack id space exhausted");
-            acks.push(ack);
+            let ack = (self.deliver)(child, seq, d.time_s);
+            let id = u32::try_from(self.acks.len()).expect("ack id space exhausted");
+            self.acks.push(ack);
             sim.send_tagged(
                 d.time_s,
                 dst,
@@ -373,60 +324,129 @@ pub(crate) fn drive_hop(
             );
         } else if kind == ack_kind {
             let c = tag_child(d.tag) as usize;
-            let ack = acks[tag_idx(d.tag) as usize];
-            let sender = &mut senders[c];
+            let ack = self.acks[tag_idx(d.tag) as usize];
+            let sender = &mut self.senders[c];
             let was_done = sender.done();
             sender.on_ack(ack.cum_seq, ack.credit, d.time_s);
             if !was_done && sender.done() {
-                done_s = done_s.max(d.time_s);
+                self.done_s = self.done_s.max(d.time_s);
             }
-            out_seqs.clear();
-            sender.poll(d.time_s, &mut out_seqs);
-            for &seq in &out_seqs {
-                let bytes = lens[c][(seq - 1) as usize];
-                stats.wire_bytes += bytes;
-                sim.send_tagged(d.time_s, src[c], dst, bytes, tag(data_kind, c as u16, seq));
-            }
+            hop::poll_send(
+                sim,
+                &mut self.senders[c],
+                &mut self.out_seqs,
+                d.time_s,
+                &lens[c],
+                src[c],
+                dst,
+                &mut self.stats.wire_bytes,
+                |seq| tag(data_kind, c as u16, seq),
+            );
         }
         // Any other tag is a straggler from a previous hop (late
         // retransmission / duplicate): the job has moved on, drop it.
+        Ok(Flow::Continue)
     }
 
-    stats.done_s = done_s;
-    let mut srtt_sum = 0.0;
-    let mut srtt_n = 0u32;
-    for s in &senders {
-        stats.first_tx += s.first_tx;
-        stats.retransmissions += s.retransmissions;
-        stats.timeouts += s.timeouts;
-        stats.cwnd_peak = stats.cwnd_peak.max(s.cwnd_peak());
-        if let Some(srtt) = s.rtt().srtt_s() {
-            srtt_sum += srtt;
-            srtt_n += 1;
+    fn on_drained(&mut self, sim: &mut NetSim) -> Result<Flow, Self::Err> {
+        // The network drained with streams unfinished: everything
+        // outstanding was lost.  Jump straight to the earliest
+        // retransmission deadline — no tick-by-tick idling — or
+        // probe immediately if no timer is pending (a zero-credit
+        // stall; the sender's window probe restarts the stream).
+        let (lens, src, dst, data_kind) = (self.lens, self.src, self.dst, self.data_kind);
+        let deadline = hop::earliest_retx_deadline(self.senders.iter());
+        let t = if deadline.is_finite() {
+            deadline.max(sim.now_s())
+        } else {
+            sim.now_s()
+        };
+        let mut sent_any = false;
+        for c in 0..self.senders.len() {
+            if self.senders[c].done() {
+                continue;
+            }
+            sent_any |= hop::poll_send(
+                sim,
+                &mut self.senders[c],
+                &mut self.out_seqs,
+                t,
+                &lens[c],
+                src[c],
+                dst,
+                &mut self.stats.wire_bytes,
+                |seq| tag(data_kind, c as u16, seq),
+            );
         }
+        assert!(sent_any, "transport stalled: idle network, no timers, nothing to send");
+        Ok(Flow::Continue)
     }
-    if srtt_n > 0 {
-        stats.srtt_mean_s = srtt_sum / srtt_n as f64;
-    }
-    let links_after = sim.link_stats();
-    let delta = |key: (NodeId, NodeId)| -> (u64, u64) {
-        let after = links_after
-            .get(&key)
-            .map(|s| (s.dropped, s.duplicated))
-            .unwrap_or((0, 0));
-        let before = links_before
-            .get(&key)
-            .map(|s| (s.dropped, s.duplicated))
-            .unwrap_or((0, 0));
-        (after.0 - before.0, after.1 - before.1)
+}
+
+/// Drive one reliable hop to completion over the live `NetSim` — a
+/// thin [`PlainHop`] configuration of the shared hop-driver core
+/// (`framework::hop`).  Every arrival is reacted to individually —
+/// acks clock the windows open, drained-network gaps jump straight to
+/// the earliest retransmission deadline.
+pub(crate) fn drive_hop(
+    sim: &mut NetSim,
+    cfg: &TransportConfig,
+    lens: &[Vec<u64>],
+    src: &[NodeId],
+    dst: NodeId,
+    kinds: (u64, u64),
+    deliver: impl FnMut(u16, u32, f64) -> AggAckPacket,
+) -> NetHopStats {
+    let (data_kind, ack_kind) = kinds;
+    assert_eq!(lens.len(), src.len());
+    let children = lens.len();
+    let mut drv = PlainHop {
+        lens,
+        src,
+        dst,
+        data_kind,
+        ack_kind,
+        deliver,
+        senders: lens.iter().map(|l| cfg.sender_for(l.len())).collect(),
+        acks: Vec::new(),
+        out_seqs: Vec::new(),
+        stats: NetHopStats::default(),
+        done_s: sim.now_s(),
     };
-    for &s in src {
-        let (drops, dups) = delta((s, dst));
-        stats.drops += drops;
-        stats.dups += dups;
-        stats.acks_dropped += delta((dst, s)).0;
+    for l in lens {
+        drv.stats.first_tx_bytes += l.iter().sum::<u64>();
     }
-    stats.events = sim.events_processed() - events_before;
+    let links_before = sim.link_stats();
+    let events_before = sim.events_processed();
+
+    let t0 = sim.now_s();
+    for c in 0..children {
+        hop::poll_send(
+            sim,
+            &mut drv.senders[c],
+            &mut drv.out_seqs,
+            t0,
+            &lens[c],
+            src[c],
+            dst,
+            &mut drv.stats.wire_bytes,
+            |seq| tag(data_kind, c as u16, seq),
+        );
+    }
+
+    if let Err(e) = hop::drive(sim, cfg.max_steps, &mut drv) {
+        match e {}
+    }
+
+    let PlainHop {
+        senders,
+        mut stats,
+        done_s,
+        ..
+    } = drv;
+    stats.done_s = done_s;
+    hop::fill_sender_stats(&mut stats, senders.iter());
+    hop::finish_hop_stats(&mut stats, sim, &links_before, events_before, src, dst);
     stats
 }
 

@@ -485,6 +485,25 @@ impl AdaptiveSender {
         self.next_new - 1
     }
 
+    /// Grow the stream by `n` packets.  A streaming relay discovers
+    /// its stream length incrementally — chunks materialize while
+    /// earlier ones are already in flight — so the sender must accept
+    /// a moving `total`.  [`Self::done`] only means "everything known
+    /// so far is acked"; the caller gates completion on its own
+    /// end-of-stream seal.
+    pub fn extend_total(&mut self, n: usize) {
+        let n = u32::try_from(n).expect("stream exceeds the u32 seq space");
+        self.total = self
+            .total
+            .checked_add(n)
+            .expect("stream exceeds the u32 seq space");
+    }
+
+    /// Packets in the stream so far (grows under [`Self::extend_total`]).
+    pub fn total(&self) -> u32 {
+        self.total
+    }
+
     /// Rebase onto a new switch incarnation: forget every ack (the new
     /// incarnation has aggregated nothing), clear the in-flight set
     /// (those transmissions carry the old epoch and will be fenced),

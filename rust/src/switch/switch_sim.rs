@@ -26,7 +26,7 @@ use crate::protocol::{
     AggAckPacket, AggOp, AggregationPacket, Key, KvPair, RelWindow, TreeConfig, TreeId, Value,
     VectorBatch,
 };
-use crate::sim::clock::{Cycles, CLOCK_HZ};
+use crate::sim::clock::{cycles_to_secs, Cycles, CLOCK_HZ};
 use crate::switch::config::{ConfigModule, SwitchConfig};
 use crate::switch::forwarding::Forwarding;
 use crate::switch::header_extract::HeaderExtract;
@@ -1003,6 +1003,24 @@ impl SwitchAggSwitch {
 
     pub fn stats(&self, tree: TreeId) -> Option<&SwitchStats> {
         self.tenants.engine(tree).map(|e| &e.stats)
+    }
+
+    /// Earliest simulated instant (NetSim seconds) at which output the
+    /// switch has produced for `tree` can legally reach the egress
+    /// wire, given the job's ingest began at `start_s`.
+    ///
+    /// The engine's processing lives in the 200 MHz cycle domain
+    /// ([`crate::sim::clock`]): `makespan_cycles` covers datapath work
+    /// up to the last ingested packet and `flush_cycles` the key-store
+    /// sweep.  Mapping the sum through [`cycles_to_secs`] anchors both
+    /// clocks to one time base, so a streaming relay cannot forward a
+    /// pair before the cycle-domain switch could have emitted it.
+    /// A tree with no engine has done no work: `start_s`.
+    pub fn egress_ready_s(&self, tree: TreeId, start_s: f64) -> f64 {
+        match self.stats(tree) {
+            Some(s) => start_s + cycles_to_secs(s.makespan_cycles + s.flush_cycles),
+            None => start_s,
+        }
     }
 
     /// Average measured FPE pair latency in cycles (Table 3 check).

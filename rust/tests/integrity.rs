@@ -378,6 +378,146 @@ fn prop_decode_survives_corruption_of_every_tag() {
     });
 }
 
+/// A relay-role frame (`framework::pipeline` switch→switch hop): an
+/// aggregation packet that *always* carries a [`RelHeader`] — the rack
+/// index rides in `child`, the stream position in `seq`, and the last
+/// frame sets `eot` to arm the spine's flush quorum.
+fn random_relay_packet(rng: &mut Pcg32, eot: bool) -> Packet {
+    let rel = RelHeader {
+        child: rng.gen_range_u64(16) as u16, // rack index
+        epoch: rng.gen_range_u64(4) as u16,
+        seq: 1 + rng.gen_range_u64(1 << 20) as u32,
+    };
+    if rng.gen_bool(0.75) {
+        let pairs: Vec<KvPair> = (0..rng.gen_range_usize(40))
+            .map(|_| {
+                let id = rng.gen_range_u64(1 << 16);
+                KvPair::new(
+                    Key::from_id(id, 8 + rng.gen_range_usize(57)),
+                    rng.gen_range_u64(1000) as i64 - 500,
+                )
+            })
+            .collect();
+        Packet::Aggregation(AggregationPacket {
+            tree: TreeId(1),
+            op: AggOp::Sum,
+            eot,
+            rel: Some(rel),
+            pairs,
+        })
+    } else {
+        let lanes = 1 + rng.gen_range_usize(8);
+        let mut batch = VectorBatch::new(lanes);
+        let vals: Vec<Value> = (0..lanes).map(|l| l as i64 - 3).collect();
+        for _ in 0..rng.gen_range_usize(20) {
+            batch.push(Key::from_id(rng.gen_range_u64(1 << 12), 16), &vals);
+        }
+        Packet::VectorAggregation(VectorAggregationPacket {
+            tree: TreeId(1),
+            op: AggOp::Sum,
+            eot,
+            rel: Some(rel),
+            batch,
+        })
+    }
+}
+
+/// Relay frames over the full rel × eot × CRC grid: truncation, bit
+/// flips, and length inflation must never panic the decoder or let it
+/// reserve more rows than the damaged buffer could possibly encode.
+#[test]
+fn prop_relay_frame_decode_survives_damage() {
+    prop("relay decode is total", 300, |rng| {
+        for eot in [false, true] {
+            for crc in [false, true] {
+                let pkt = random_relay_packet(rng, eot);
+                let clean = if crc {
+                    pkt.encode_integrity()
+                } else {
+                    pkt.encode()
+                };
+                let cut = rng.gen_range_usize(clean.len() + 1);
+                check_decode_total(&clean[..cut])?;
+                let mut flipped = clean.clone();
+                for _ in 0..1 + rng.gen_range_usize(8) {
+                    let bit = rng.gen_range_usize(flipped.len() * 8);
+                    flipped[bit / 8] ^= 1 << (bit % 8);
+                }
+                check_decode_total(&flipped)?;
+                let mut inflated = clean.clone();
+                for _ in 0..1 + rng.gen_range_usize(64) {
+                    inflated.push(rng.next_u32() as u8);
+                }
+                check_decode_total(&inflated)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Exhaustive truncation of one fixed relay frame at *every* prefix,
+/// both encodings: the random fuzz samples cut points, this leaves no
+/// byte boundary unchecked.
+#[test]
+fn relay_frame_truncation_is_total_at_every_prefix() {
+    let pkt = Packet::Aggregation(AggregationPacket {
+        tree: TreeId(1),
+        op: AggOp::Sum,
+        eot: true,
+        rel: Some(RelHeader {
+            child: 3,
+            epoch: 1,
+            seq: 917,
+        }),
+        pairs: (0..12)
+            .map(|i| KvPair::new(Key::from_id(i, 16 + (i % 49) as usize), i as i64 - 6))
+            .collect(),
+    });
+    for crc in [false, true] {
+        let buf = if crc {
+            pkt.encode_integrity()
+        } else {
+            pkt.encode()
+        };
+        for cut in 0..=buf.len() {
+            check_decode_total(&buf[..cut])
+                .unwrap_or_else(|e| panic!("cut {cut} (crc={crc}): {e}"));
+        }
+    }
+}
+
+/// The RelHeader the spine dedups on must survive both encodings
+/// bit-exactly — a child/seq skew would alias distinct relay streams.
+#[test]
+fn prop_relay_header_roundtrips_through_both_encodings() {
+    prop("relay header round-trip", 200, |rng| {
+        for eot in [false, true] {
+            let pkt = random_relay_packet(rng, eot);
+            let want = match &pkt {
+                Packet::Aggregation(p) => p.rel,
+                Packet::VectorAggregation(p) => p.rel,
+                _ => unreachable!(),
+            };
+            for crc in [false, true] {
+                let buf = if crc {
+                    pkt.encode_integrity()
+                } else {
+                    pkt.encode()
+                };
+                let got = match Packet::decode(&buf) {
+                    Ok(Packet::Aggregation(p)) => (p.rel, p.eot),
+                    Ok(Packet::VectorAggregation(p)) => (p.rel, p.eot),
+                    other => return Err(format!("relay frame decoded as {other:?}")),
+                };
+                if got != (want, eot) {
+                    return Err(format!("rel header skewed: {got:?} vs {want:?}/{eot}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_integrity_trailer_rejects_every_single_bit_flip() {
     prop("CRC catches single flips", 150, |rng| {

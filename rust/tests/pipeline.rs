@@ -1,0 +1,253 @@
+//! Streaming pipeline — differential contracts:
+//!
+//! * **Zero-pipelining differential** — with overlap disabled, the
+//!   unified pipeline driver (`framework::pipeline`) is the legacy
+//!   two-phase transport session *byte for byte*: received stream,
+//!   every ingress/egress hop counter, dedup stats, JCT, and FIFO
+//!   peak, on the scalar and W-lane vector (W ∈ {1, 8}) paths, serial
+//!   and sharded engines, lossless and lossy.  One driver, two
+//!   schedules — the batch schedule is a configuration, not a fork.
+//! * **Overlap invariants** — enabling overlap changes timing only:
+//!   same aggregate, never a later JCT than batch at meaningful
+//!   fan-in, and the two-level relay composition preserves the
+//!   aggregate end to end.
+
+use std::collections::HashMap;
+use switchagg::framework::transport::{
+    run_transport_scalar, run_transport_vector, TransportConfig,
+};
+use switchagg::framework::{
+    run_pipeline_scalar, run_pipeline_two_level, run_pipeline_vector, PipelineConfig, Reducer,
+};
+use switchagg::protocol::{AggOp, Key, KvPair, TreeConfig, TreeId, Value, VectorBatch};
+use switchagg::switch::{Parallelism, SwitchAggSwitch, SwitchConfig};
+use switchagg::util::rng::Pcg32;
+
+fn scalar_switch(children: u16, par: Parallelism) -> SwitchAggSwitch {
+    let cfg = SwitchConfig {
+        parallelism: par,
+        ..SwitchConfig::scaled(16 << 10, Some(256 << 10))
+    };
+    let mut sw = SwitchAggSwitch::new(cfg);
+    sw.configure(&[TreeConfig {
+        tree: TreeId(1),
+        children,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    sw
+}
+
+fn vector_switch(children: u16, lanes: usize, par: Parallelism) -> SwitchAggSwitch {
+    let cfg = SwitchConfig {
+        parallelism: par,
+        ..SwitchConfig::scaled(32 << 10, Some(512 << 10))
+    };
+    let mut sw = SwitchAggSwitch::new(cfg);
+    sw.configure_vector(
+        &[TreeConfig {
+            tree: TreeId(1),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }],
+        lanes,
+    );
+    sw
+}
+
+fn scalar_streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0x99);
+            (0..n)
+                .map(|_| {
+                    let id = child.gen_range_u64(400);
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(200) as i64 - 100,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn vector_streams(children: usize, n: usize, lanes: usize, seed: u64) -> Vec<VectorBatch> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0xAA);
+            let mut b = VectorBatch::new(lanes);
+            let mut vals: Vec<Value> = vec![0; lanes];
+            for _ in 0..n {
+                let id = child.gen_range_u64(300);
+                for (l, v) in vals.iter_mut().enumerate() {
+                    *v = (id % 11) as i64 + l as i64 - 5;
+                }
+                b.push(Key::from_id(id, 16 + (id % 49) as usize), &vals);
+            }
+            b
+        })
+        .collect()
+}
+
+fn merged(pairs: &[KvPair]) -> HashMap<Key, Value> {
+    Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
+}
+
+/// With overlap disabled, every observable of the pipelined session
+/// must equal the legacy two-phase session's — not just the aggregate:
+/// the wire schedule (bytes, retransmissions, timeouts), the switch
+/// counters, and the clock.
+#[test]
+fn batch_pipeline_is_byte_identical_to_legacy_scalar() {
+    for par in [Parallelism::Serial, Parallelism::Sharded(4)] {
+        for cfg in [
+            TransportConfig::default(),
+            TransportConfig::uniform(0.05, 0x5EED).with_dup(0.02),
+        ] {
+            let ss = scalar_streams(4, 1_200, 13);
+            let mut legacy_sw = scalar_switch(4, par);
+            let legacy = run_transport_scalar(&mut legacy_sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+            let mut piped_sw = scalar_switch(4, par);
+            let piped = run_pipeline_scalar(
+                &mut piped_sw,
+                TreeId(1),
+                AggOp::Sum,
+                &ss,
+                &PipelineConfig::batch(cfg),
+            );
+            assert_eq!(piped.ingress, legacy.ingress, "{par:?}");
+            assert_eq!(piped.egress, legacy.egress, "{par:?}");
+            assert_eq!(piped.dedup, legacy.dedup, "{par:?}");
+            assert_eq!(piped.completeness, legacy.completeness, "{par:?}");
+            assert_eq!(piped.received, legacy.received, "{par:?}");
+            assert_eq!(piped.jct_s, legacy.jct_s, "{par:?}");
+            assert_eq!(piped.fifo_peak, legacy.fifo_peak, "{par:?}");
+        }
+    }
+}
+
+#[test]
+fn batch_pipeline_is_byte_identical_to_legacy_vector() {
+    for lanes in [1usize, 8] {
+        for par in [Parallelism::Serial, Parallelism::Sharded(2)] {
+            let ss = vector_streams(3, 700, lanes, 23);
+            let cfg = TransportConfig::uniform(0.02, 0xFEED);
+            let mut legacy_sw = vector_switch(3, lanes, par);
+            let legacy = run_transport_vector(&mut legacy_sw, TreeId(1), AggOp::Sum, &ss, &cfg);
+            let mut piped_sw = vector_switch(3, lanes, par);
+            let piped = run_pipeline_vector(
+                &mut piped_sw,
+                TreeId(1),
+                AggOp::Sum,
+                &ss,
+                &PipelineConfig::batch(cfg),
+            );
+            assert_eq!(piped.ingress, legacy.ingress, "W={lanes} {par:?}");
+            assert_eq!(piped.egress, legacy.egress, "W={lanes} {par:?}");
+            assert_eq!(piped.dedup, legacy.dedup, "W={lanes} {par:?}");
+            assert_eq!(piped.completeness, legacy.completeness, "W={lanes} {par:?}");
+            assert_eq!(piped.received, legacy.received, "W={lanes} {par:?}");
+            assert_eq!(piped.jct_s, legacy.jct_s, "W={lanes} {par:?}");
+            assert_eq!(piped.fifo_peak, legacy.fifo_peak, "W={lanes} {par:?}");
+        }
+    }
+}
+
+/// Overlap changes timing, never content: the streamed session's
+/// aggregate equals batch's, and with enough fan-in its JCT is
+/// strictly earlier (the eviction stream drains during ingest).
+#[test]
+fn overlap_preserves_aggregate_and_never_slows_the_job() {
+    let ss = scalar_streams(8, 1_000, 31);
+    let cfg = TransportConfig::default();
+    let mut sw_b = scalar_switch(8, Parallelism::Serial);
+    let batch = run_pipeline_scalar(
+        &mut sw_b,
+        TreeId(1),
+        AggOp::Sum,
+        &ss,
+        &PipelineConfig::batch(cfg),
+    );
+    let mut sw_s = scalar_switch(8, Parallelism::Serial);
+    let stream = run_pipeline_scalar(
+        &mut sw_s,
+        TreeId(1),
+        AggOp::Sum,
+        &ss,
+        &PipelineConfig::streaming(cfg),
+    );
+    assert_eq!(merged(&stream.received), merged(&batch.received));
+    assert!(stream.completeness.is_complete());
+    assert!(
+        stream.jct_s < batch.jct_s,
+        "overlap must finish earlier: {} vs {}",
+        stream.jct_s,
+        batch.jct_s
+    );
+    // Same egress payload either way — overlap moves bytes earlier,
+    // it does not invent or drop them (lossless ⇒ no retx inflation).
+    assert_eq!(stream.egress.first_tx_bytes, batch.egress.first_tx_bytes);
+}
+
+/// Vector overlap: same invariants on the W-lane path.
+#[test]
+fn vector_overlap_preserves_aggregate() {
+    let ss = vector_streams(4, 800, 8, 41);
+    let cfg = TransportConfig::default();
+    let mut sw_b = vector_switch(4, 8, Parallelism::Serial);
+    let batch = run_pipeline_vector(
+        &mut sw_b,
+        TreeId(1),
+        AggOp::Sum,
+        &ss,
+        &PipelineConfig::batch(cfg),
+    );
+    let mut sw_s = vector_switch(4, 8, Parallelism::Serial);
+    let stream = run_pipeline_vector(
+        &mut sw_s,
+        TreeId(1),
+        AggOp::Sum,
+        &ss,
+        &PipelineConfig::streaming(cfg),
+    );
+    assert!(stream.completeness.is_complete());
+    assert!(stream.jct_s <= batch.jct_s);
+    // Order can differ between schedules only if the switch emitted
+    // differently — it must not: same ingest order, same evictions.
+    assert_eq!(stream.received, batch.received);
+}
+
+/// The two-level relay under loss: rack → spine → reducer, all hops
+/// overlapped, aggregate byte-exact against the software merge of all
+/// mapper streams.
+#[test]
+fn two_level_relay_is_exact_under_loss() {
+    let racks = 3;
+    let per = 3;
+    let ss = scalar_streams(racks * per, 600, 53);
+    let grouped: Vec<Vec<Vec<KvPair>>> = ss.chunks(per).map(|c| c.to_vec()).collect();
+    let mut rack_sw: Vec<SwitchAggSwitch> = (0..racks)
+        .map(|_| scalar_switch(per as u16, Parallelism::Serial))
+        .collect();
+    let mut spine = scalar_switch(racks as u16, Parallelism::Serial);
+    let run = run_pipeline_two_level(
+        &mut rack_sw,
+        &mut spine,
+        TreeId(1),
+        AggOp::Sum,
+        &grouped,
+        &PipelineConfig::streaming(TransportConfig::uniform(0.02, 0xBAD5)),
+    );
+    assert!(run.completeness.is_complete());
+    let oracle = Reducer::merge_software(&ss, AggOp::Sum).table;
+    assert_eq!(merged(&run.received), oracle);
+    assert!(run.jct_s > 0.0);
+    assert!(
+        run.ingress.events > 0 && run.relay.first_tx_bytes > 0 && run.egress.first_tx_bytes > 0,
+        "all three hops must carry traffic: {run:?}"
+    );
+}
