@@ -1,0 +1,149 @@
+//! Failover-machinery benchmarks (EXPERIMENTS.md §Failover & state
+//! migration): what warm-standby replication costs.  Three structural
+//! claims under test: (1) serializing a tree's full aggregation state
+//! is a linear walk over the SoA arrays — snapshot and restore
+//! throughput should sit near memcpy, not near the ingest path;
+//! (2) incremental checkpoints ship only byte-dirtied regions, so
+//! with a steady-rate workload their footprint is a small fraction of
+//! the full-image cadence at identical install counts; (3) the
+//! failover wrapper's zero-fault overhead over the plain transport
+//! driver is small — the standby hooks are cheap predicates when no
+//! standby is declared.  Results land in `BENCH_failover.json`
+//! (override with `SWITCHAGG_BENCH_FAILOVER_JSON`).
+
+use switchagg::framework::failover::{run_failover_scalar, FailoverConfig};
+use switchagg::framework::transport::run_transport_scalar;
+use switchagg::protocol::{AggOp, AggregationPacket, Key, KvPair, RelHeader, TreeConfig, TreeId};
+use switchagg::switch::{IngestSink, SwitchAggSwitch, SwitchConfig, SwitchSnapshot};
+use switchagg::util::bench::{self, JsonLog};
+use switchagg::util::rng::Pcg32;
+
+fn switch_cfg() -> SwitchConfig {
+    SwitchConfig::scaled(32 << 10, Some(8 << 20))
+}
+
+fn streams(children: usize, pairs: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0x5B);
+            (0..pairs)
+                .map(|_| {
+                    let id = child.gen_range_u64((pairs as u64 / 4).max(64));
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(100) as i64 - 50,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn configured(children: u16) -> SwitchAggSwitch {
+    let mut sw = SwitchAggSwitch::new(switch_cfg());
+    sw.configure(&[TreeConfig {
+        tree: TreeId(1),
+        children,
+        parent_port: 0,
+        op: AggOp::Sum,
+    }]);
+    sw
+}
+
+/// A switch mid-job: every stream ingested, no EoT yet (the state a
+/// checkpoint actually captures).
+fn loaded_switch(children: usize, pairs: usize) -> SwitchAggSwitch {
+    let tree = TreeId(1);
+    let mut sw = configured(children as u16);
+    let mut sink = IngestSink::new();
+    for (c, s) in streams(children, pairs, 0x5EED).iter().enumerate() {
+        let mut pkts = AggregationPacket::pack_stream(tree, AggOp::Sum, s, false);
+        for (i, p) in pkts.iter_mut().enumerate() {
+            p.rel = Some(RelHeader {
+                child: c as u16,
+                epoch: 0,
+                seq: i as u32 + 1,
+            });
+        }
+        for p in &pkts {
+            sw.ingest_reliable_one(tree, p, &mut sink);
+        }
+    }
+    sw
+}
+
+fn wire_packets(
+    ingress: &switchagg::framework::transport::NetHopStats,
+    egress: &switchagg::framework::transport::NetHopStats,
+) -> u64 {
+    ingress.first_tx + ingress.retransmissions + egress.first_tx + egress.retransmissions
+}
+
+fn main() {
+    let mut log = JsonLog::new();
+    let tree = TreeId(1);
+    let (children, pairs) = (8usize, 8_000usize);
+
+    bench::section("snapshot / restore (items = snapshot bytes)");
+    let sw = loaded_switch(children, pairs);
+    log.push(&bench::run("snapshot 8x8k pairs", 1, 5, move || {
+        sw.snapshot_tree(tree).expect("resident tree").to_bytes().len() as u64
+    }));
+    let bytes = loaded_switch(children, pairs)
+        .snapshot_tree(tree)
+        .expect("resident tree")
+        .to_bytes();
+    let mut target = configured(children as u16);
+    log.push(&bench::run("decode + restore 8x8k pairs", 1, 5, move || {
+        let snap = SwitchSnapshot::from_bytes(&bytes).expect("own encoding");
+        target.restore_tree(&snap).expect("restore");
+        bytes.len() as u64
+    }));
+
+    bench::section("checkpoint footprint (items = checkpoint wire bytes)");
+    let ss = streams(children, pairs, 0xC4A1);
+    let base_jct = run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &FailoverConfig::default())
+        .expect("fault-free baseline")
+        .jct_s;
+    for (name, incremental) in [("full images @10%jct", false), ("incremental @10%jct", true)] {
+        let cfg = FailoverConfig {
+            standby: true,
+            checkpoint_period_s: Some(base_jct * 0.1),
+            incremental,
+            ..FailoverConfig::default()
+        };
+        let ss = ss.clone();
+        log.push(&bench::run(name, 1, 3, move || {
+            let run =
+                run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &cfg).expect("healthy run");
+            assert!(run.checkpoints_installed >= 1);
+            run.checkpoint_bytes
+        }));
+    }
+
+    bench::section("zero-fault overhead (items = wire packets)");
+    let ss2 = ss.clone();
+    log.push(&bench::run("plain transport 8x", 1, 5, move || {
+        let mut sw = configured(children as u16);
+        let run = run_transport_scalar(
+            &mut sw,
+            tree,
+            AggOp::Sum,
+            &ss2,
+            &FailoverConfig::default().transport,
+        );
+        wire_packets(&run.ingress, &run.egress)
+    }));
+    log.push(&bench::run("failover no standby 8x", 1, 5, move || {
+        let run = run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &FailoverConfig::default())
+            .expect("zero-fault session");
+        wire_packets(&run.ingress, &run.egress)
+    }));
+
+    let path = std::env::var("SWITCHAGG_BENCH_FAILOVER_JSON")
+        .unwrap_or_else(|_| "BENCH_failover.json".to_string());
+    if let Err(e) = log.write(&path) {
+        eprintln!("could not write bench log {path}: {e}");
+    }
+}

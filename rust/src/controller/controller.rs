@@ -63,6 +63,10 @@ pub struct Controller {
     /// Per-tree quota charges against declared switch capacities,
     /// released on teardown/eviction.
     charges: BTreeMap<TreeId, Vec<(NodeId, QuotaRequest)>>,
+    /// Per-tree warm standby: a spare switch receiving periodic state
+    /// checkpoints, promotable by [`Self::promote`] when the primary
+    /// dies.  At most one standby per tree in this prototype.
+    standbys: BTreeMap<TreeId, NodeId>,
 }
 
 impl Controller {
@@ -76,6 +80,7 @@ impl Controller {
             last_heartbeat_s: BTreeMap::new(),
             capacities: BTreeMap::new(),
             charges: BTreeMap::new(),
+            standbys: BTreeMap::new(),
         }
     }
 
@@ -202,6 +207,7 @@ impl Controller {
         self.membership.remove(&tree);
         self.last_heartbeat_s.remove(&tree);
         self.charges.remove(&tree);
+        self.standbys.remove(&tree);
         self.trees.remove(&tree).is_some()
     }
 
@@ -302,9 +308,16 @@ impl Controller {
 
     /// Note liveness evidence for the tree's aggregation path at
     /// `now_s` (hosts relay the fact that switch acks are arriving).
+    /// Heartbeats for trees the controller is not tracking — never
+    /// launched, or already torn down / evicted — are ignored: a late
+    /// relay must not resurrect liveness state for a dead tree (the
+    /// old behavior silently re-created an entry, which then made
+    /// [`Self::failure_detected`] report on a tree that no longer
+    /// exists).
     pub fn record_heartbeat(&mut self, tree: TreeId, now_s: f64) {
-        let t = self.last_heartbeat_s.entry(tree).or_insert(0.0);
-        *t = t.max(now_s);
+        if let Some(t) = self.last_heartbeat_s.get_mut(&tree) {
+            *t = t.max(now_s);
+        }
     }
 
     /// Ack-timeout failure detector: no liveness evidence for at least
@@ -329,6 +342,44 @@ impl Controller {
             Some((_, state)) => *state = TreeState::Degraded,
         }
         self.bump_epoch(tree)
+    }
+
+    // ---- warm-standby failover (PR 10) ----
+
+    /// Register `node` as the tree's warm standby: a spare switch that
+    /// receives periodic state checkpoints (`switch::snapshot`) and can
+    /// be promoted in place of the primary without losing in-network
+    /// aggregation.  Requires a running tree; replaces any previous
+    /// standby.
+    pub fn declare_standby(&mut self, tree: TreeId, node: NodeId) -> Result<()> {
+        if !self.is_running(tree) {
+            bail!("standby declaration requires a running tree, {tree} is not");
+        }
+        self.standbys.insert(tree, node);
+        Ok(())
+    }
+
+    /// The tree's declared warm standby, if any.
+    pub fn standby(&self, tree: TreeId) -> Option<NodeId> {
+        self.standbys.get(&tree).copied()
+    }
+
+    /// Promote the tree's warm standby: the primary is presumed dead,
+    /// the standby (restored from its latest checkpoint) takes over as
+    /// the aggregation switch, and the epoch advances so late traffic
+    /// of the dead incarnation is fenced.  The tree stays `Running` —
+    /// unlike [`Self::fail_over`], aggregation continues in-network.
+    /// Consumes the standby registration (a second failure falls back
+    /// to software degradation) and returns `(standby, new_epoch)`.
+    pub fn promote(&mut self, tree: TreeId) -> Result<(NodeId, u16)> {
+        if !self.is_running(tree) {
+            bail!("promotion requires a running tree, {tree} is not");
+        }
+        let Some(node) = self.standbys.remove(&tree) else {
+            bail!("tree {tree} has no declared standby to promote");
+        };
+        let epoch = self.bump_epoch(tree)?;
+        Ok((node, epoch))
     }
 
     /// Re-plan the tree's declared membership to `members` children (a
@@ -545,6 +596,57 @@ mod tests {
             !c.failure_detected(TreeId(99), 1e9, 1.0),
             "unknown tree: nothing to detect"
         );
+    }
+
+    #[test]
+    fn heartbeat_for_untracked_tree_is_ignored() {
+        let (mut c, out, _) = launch_on_star();
+        let (sw, _) = out.configures[0].clone();
+        c.switch_ack(out.tree, sw).unwrap();
+        // Never-launched tree: the heartbeat must not create tracking
+        // state (the old `or_insert` bug made failure_detected fire for
+        // a tree that does not exist).
+        c.record_heartbeat(TreeId(99), 1.0);
+        assert!(!c.failure_detected(TreeId(99), 1e9, 1.0));
+        // Torn-down tree: a late heartbeat relay must not resurrect it.
+        assert!(c.teardown(out.tree));
+        c.record_heartbeat(out.tree, 2.0);
+        assert!(!c.failure_detected(out.tree, 1e9, 1.0));
+    }
+
+    #[test]
+    fn standby_declaration_and_promotion() {
+        let (mut c, out, hosts) = launch_on_star();
+        let (sw, _) = out.configures[0].clone();
+        let spare = hosts[3]; // any addressable node works as a stand-in
+        assert!(
+            c.declare_standby(out.tree, spare).is_err(),
+            "standby requires a running tree"
+        );
+        c.switch_ack(out.tree, sw).unwrap();
+        assert!(c.promote(out.tree).is_err(), "no standby declared yet");
+        c.declare_standby(out.tree, spare).unwrap();
+        assert_eq!(c.standby(out.tree), Some(spare));
+        let (node, epoch) = c.promote(out.tree).unwrap();
+        assert_eq!(node, spare);
+        assert_eq!(epoch, 1, "promotion fences the dead incarnation");
+        assert!(c.is_running(out.tree), "aggregation stays in-network");
+        assert_eq!(c.standby(out.tree), None, "registration consumed");
+        assert!(c.promote(out.tree).is_err(), "second failure has no spare");
+        // Degradation is still reachable as the last resort.
+        c.fail_over(out.tree).unwrap();
+        assert!(c.is_degraded(out.tree));
+        assert!(c.promote(out.tree).is_err(), "degraded tree cannot promote");
+    }
+
+    #[test]
+    fn teardown_forgets_standby() {
+        let (mut c, out, hosts) = launch_on_star();
+        let (sw, _) = out.configures[0].clone();
+        c.switch_ack(out.tree, sw).unwrap();
+        c.declare_standby(out.tree, hosts[3]).unwrap();
+        assert!(c.teardown(out.tree));
+        assert_eq!(c.standby(out.tree), None);
     }
 
     #[test]

@@ -17,6 +17,7 @@ pub mod fig2;
 pub mod fig9;
 pub mod sec7;
 pub mod sec_allreduce;
+pub mod sec_failover;
 pub mod sec_faults;
 pub mod sec_incast;
 pub mod sec_integrity;

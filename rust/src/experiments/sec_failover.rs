@@ -1,0 +1,394 @@
+//! Warm-standby failover harness (`switchagg exp failover`): the
+//! snapshot/checkpoint/promotion co-simulation (`framework::failover`)
+//! swept over crash timing × checkpoint cadence × fan-in, against the
+//! PR 6 alternative — software degradation — on the three axes that
+//! decide whether a warm standby is worth its replication bytes: JCT
+//! inflation, replayed traffic, and the in-network reduction the
+//! reducer keeps (promotion) or forfeits (degradation).
+//!
+//! Every cell asserts its own oracle.  In-network cells (fault-free
+//! and every promotion) must reproduce the fault-free run's reducer
+//! stream **byte-for-byte** — promotion is not "approximately the same
+//! job", it is the same job finishing on different silicon.  Degraded
+//! cells ship raw streams, so they pin totals-exactness and zero
+//! reduction instead.
+//!
+//! Scenario legend (crash/checkpoint times are fractions of the
+//! fan-in's fault-free JCT, so every scale exercises the same phases):
+//!
+//! * `none`               — fault-free oracle; fixes each fan-in's
+//!                          baseline JCT and reducer stream.
+//! * `crash@.45 ckpt@.15`,
+//!   `crash@.70 ckpt@.15`,
+//!   `crash@.70 ckpt@.30` — fail-stop primary, warm standby promoted
+//!                          from its last installed checkpoint; the
+//!                          cadence axis shows how checkpoint period
+//!                          bounds the replay.
+//! * `crash@.70 cold`     — standby declared but never checkpointed:
+//!                          promotion works, the whole job replays.
+//! * `crash@.45 degrade`  — no standby (PR 6 path): the job completes
+//!                          as a direct-to-reducer software merge and
+//!                          forfeits the reduction.
+//!
+//! The workload opens every child's stream with one pass over the full
+//! key set (a few % of the stream), so the table layout is fixed long
+//! before the first checkpoint and the post-promotion replay only
+//! re-aggregates into existing slots — the mechanism that makes the
+//! byte-exactness pin hold at every crash × cadence point.
+
+use crate::experiments::common::{
+    assert_all_exact, exact_cell, final_map, parallelism, pct, print_table, switch_cfg,
+    Parallelism, Scale,
+};
+use crate::framework::failover::{run_failover_scalar, FailoverConfig, FailoverScalarReport};
+use crate::net::FaultPlan;
+use crate::protocol::{AggOp, Key, KvPair, Value};
+use crate::util::par::par_map;
+use crate::util::rng::Pcg32;
+use std::collections::HashMap;
+
+/// One failover cell: a (scenario, fan-in) point.
+#[derive(Clone, Debug)]
+pub struct FailoverRow {
+    pub scenario: &'static str,
+    pub fan_in: usize,
+    pub jct_ms: f64,
+    /// JCT inflation over the fan-in's fault-free baseline.
+    pub jct_x: f64,
+    /// Ingress retransmissions per first transmission.
+    pub retx: f64,
+    pub ckpts_shipped: u32,
+    pub ckpts_installed: u32,
+    /// Serialized checkpoint bytes shipped to the standby.
+    pub ckpt_kb: f64,
+    /// Packets resent because promotion rebased past the checkpoint.
+    pub replayed_pkts: u64,
+    pub replayed_kb: f64,
+    pub promoted: bool,
+    pub degraded: bool,
+    /// Pair-count reduction the reducer still enjoyed:
+    /// `1 − received/input` (0 when degradation ships raw streams).
+    pub reduction: f64,
+    /// In-network cells: byte-identical to the fault-free stream.
+    /// Degraded cells: totals equal the input oracle.
+    pub exact: bool,
+}
+
+/// Per-child streams that open with one fixed-order pass over the whole
+/// key set, then draw the remainder uniformly: every table slot is
+/// assigned within the first few % of the job, which is what lets a
+/// mid-job promotion replay land byte-identically (see module doc).
+fn workload(fan_in: usize, pairs_per_child: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let keys = ((pairs_per_child / 32) as u64).clamp(8, 48);
+    let key = |id: u64| Key::from_id(id, 16 + (id % 49) as usize);
+    let mut rng = Pcg32::new(seed);
+    (0..fan_in)
+        .map(|_| {
+            let mut s: Vec<KvPair> = (0..keys).map(|id| KvPair::new(key(id), 1)).collect();
+            for _ in keys as usize..pairs_per_child {
+                let id = rng.gen_range_u64(keys);
+                s.push(KvPair::new(key(id), rng.gen_range_u64(9) as i64 - 4));
+            }
+            s
+        })
+        .collect()
+}
+
+fn pairs_per_child(scale: Scale) -> usize {
+    (scale.bytes(16 << 20) / 25).max(128) as usize
+}
+
+const SWEEP_SEED: u64 = 0xFA11;
+const SWEEP_FAN_IN: [usize; 3] = [4, 16, 64];
+
+const SCENARIOS: [&str; 6] = [
+    "none",
+    "crash@.45 ckpt@.15",
+    "crash@.70 ckpt@.15",
+    "crash@.70 ckpt@.30",
+    "crash@.70 cold",
+    "crash@.45 degrade",
+];
+
+/// Build a scenario's failover config from the fan-in's fault-free JCT.
+fn scenario_cfg(scenario: &str, base_jct: f64) -> FailoverConfig {
+    let j = base_jct;
+    let warm = |crash: f64, period: f64| FailoverConfig {
+        plan: FaultPlan::none().with_switch_crash(crash * j, None),
+        standby: true,
+        checkpoint_period_s: Some(period * j),
+        max_retries: Some(6),
+        ..FailoverConfig::default()
+    };
+    match scenario {
+        "none" => FailoverConfig::default(),
+        "crash@.45 ckpt@.15" => warm(0.45, 0.15),
+        "crash@.70 ckpt@.15" => warm(0.70, 0.15),
+        "crash@.70 ckpt@.30" => warm(0.70, 0.30),
+        "crash@.70 cold" => FailoverConfig {
+            plan: FaultPlan::none().with_switch_crash(0.70 * j, None),
+            standby: true,
+            checkpoint_period_s: None,
+            max_retries: Some(6),
+            ..FailoverConfig::default()
+        },
+        "crash@.45 degrade" => FailoverConfig {
+            plan: FaultPlan::none().with_switch_crash(0.45 * j, None),
+            standby: false,
+            max_retries: Some(6),
+            ..FailoverConfig::default()
+        },
+        other => panic!("unknown scenario {other}"),
+    }
+}
+
+fn run_cell(
+    scenario: &'static str,
+    fan_in: usize,
+    scale: Scale,
+    base_jct: f64,
+    base_received: &[KvPair],
+    oracle: &HashMap<Key, Value>,
+) -> FailoverRow {
+    let streams = workload(fan_in, pairs_per_child(scale), SWEEP_SEED);
+    let cfg = scenario_cfg(scenario, base_jct);
+    let run: FailoverScalarReport =
+        run_failover_scalar(&switch_cfg(scale), AggOp::Sum, &streams, &cfg)
+            .unwrap_or_else(|e| panic!("scenario '{scenario}' fan-in {fan_in}: {e}"));
+
+    let exact = if run.degraded {
+        // Raw-stream totals against the input oracle.
+        final_map(&run.received) == *oracle
+    } else {
+        // The acceptance pin: in-network completion (primary or
+        // promoted standby alike) is byte-identical to fault-free.
+        run.received == base_received
+    };
+    assert!(
+        exact,
+        "scenario '{scenario}' fan-in {fan_in}: aggregate diverged from the fault-free oracle"
+    );
+    if !run.degraded {
+        let st = run.switch_stats.as_ref().expect("in-network stats");
+        assert_eq!(
+            st.pairs_out_stream, 0,
+            "'{scenario}' fan-in {fan_in}: replayable workloads must not evict"
+        );
+    }
+
+    let input_pairs: u64 = streams.iter().map(|s| s.len() as u64).sum();
+    let reduction = if input_pairs > 0 {
+        1.0 - run.completeness.received_pairs as f64 / input_pairs as f64
+    } else {
+        0.0
+    };
+
+    FailoverRow {
+        scenario,
+        fan_in,
+        jct_ms: run.jct_s * 1e3,
+        jct_x: if base_jct > 0.0 { run.jct_s / base_jct } else { 1.0 },
+        retx: run.ingress.retx_overhead(),
+        ckpts_shipped: run.checkpoints_shipped,
+        ckpts_installed: run.checkpoints_installed,
+        ckpt_kb: run.checkpoint_bytes as f64 / 1024.0,
+        replayed_pkts: run.replayed_packets,
+        replayed_kb: run.replayed_bytes as f64 / 1024.0,
+        promoted: run.promoted,
+        degraded: run.degraded,
+        reduction,
+        exact,
+    }
+}
+
+/// Fault-free baseline for one fan-in: the byte oracle (reducer
+/// stream), the totals oracle, and the JCT every scenario's schedule
+/// and inflation are relative to.
+fn baseline(fan_in: usize, scale: Scale) -> (f64, Vec<KvPair>, HashMap<Key, Value>) {
+    let streams = workload(fan_in, pairs_per_child(scale), SWEEP_SEED);
+    let run = run_failover_scalar(
+        &switch_cfg(scale),
+        AggOp::Sum,
+        &streams,
+        &FailoverConfig::default(),
+    )
+    .expect("fault-free baseline");
+    let oracle = crate::framework::Reducer::merge_software(&streams, AggOp::Sum).table;
+    (run.jct_s, run.received, oracle)
+}
+
+pub fn rows(scale: Scale) -> Vec<FailoverRow> {
+    rows_with(scale, parallelism())
+}
+
+pub fn rows_with(scale: Scale, par: Parallelism) -> Vec<FailoverRow> {
+    let baselines: Vec<(usize, (f64, Vec<KvPair>, HashMap<Key, Value>))> =
+        par_map(par, SWEEP_FAN_IN.to_vec(), move |f| (f, baseline(f, scale)));
+    let mut cases: Vec<(&'static str, usize)> = Vec::new();
+    for &scenario in &SCENARIOS {
+        for &fan_in in &SWEEP_FAN_IN {
+            cases.push((scenario, fan_in));
+        }
+    }
+    let baselines = &baselines;
+    par_map(par, cases, move |(scenario, fan_in)| {
+        let (jct, received, oracle) = &baselines
+            .iter()
+            .find(|(f, _)| *f == fan_in)
+            .expect("baseline for every sweep fan-in")
+            .1;
+        run_cell(scenario, fan_in, scale, *jct, received, oracle)
+    })
+}
+
+pub fn run(scale: Scale) {
+    let rows = rows(scale);
+    print_table(
+        "Warm-standby failover — checkpointed promotion vs software degradation",
+        &[
+            "scenario",
+            "fan-in",
+            "JCT",
+            "JCTx",
+            "retx",
+            "ckpts",
+            "ckpt KB",
+            "replayed",
+            "replay KB",
+            "mode",
+            "reduction",
+            "exact",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.scenario.to_string(),
+                    r.fan_in.to_string(),
+                    format!("{:.3} ms", r.jct_ms),
+                    format!("{:.2}x", r.jct_x),
+                    pct(r.retx),
+                    format!("{}/{}", r.ckpts_installed, r.ckpts_shipped),
+                    format!("{:.1}", r.ckpt_kb),
+                    r.replayed_pkts.to_string(),
+                    format!("{:.1}", r.replayed_kb),
+                    if r.degraded {
+                        "degraded"
+                    } else if r.promoted {
+                        "promoted"
+                    } else {
+                        "primary"
+                    }
+                    .to_string(),
+                    pct(r.reduction),
+                    exact_cell(r.exact),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    assert_all_exact(&rows, |r| r.exact, "failover");
+    // Acceptance pins, per fan-in: promotion keeps the exact reduction
+    // degradation forfeits, and a denser checkpoint cadence strictly
+    // bounds the replay a cold standby pays in full.
+    for &fan_in in &SWEEP_FAN_IN {
+        let get = |s: &str| {
+            rows.iter()
+                .find(|r| r.scenario == s && r.fan_in == fan_in)
+                .unwrap_or_else(|| panic!("row {s}/{fan_in}"))
+        };
+        let base = get("none");
+        assert!(!base.promoted && !base.degraded);
+        assert!(base.reduction > 0.0, "workload must actually reduce");
+        for s in ["crash@.45 ckpt@.15", "crash@.70 ckpt@.15", "crash@.70 ckpt@.30", "crash@.70 cold"] {
+            let r = get(s);
+            assert!(r.promoted && !r.degraded, "{s}/{fan_in}");
+            assert_eq!(
+                r.reduction, base.reduction,
+                "{s}/{fan_in}: promotion preserves the in-network reduction"
+            );
+            assert!(r.jct_x > 1.0, "{s}/{fan_in}: the outage costs wall-clock");
+        }
+        let deg = get("crash@.45 degrade");
+        assert!(deg.degraded && !deg.promoted);
+        assert_eq!(deg.reduction, 0.0, "degradation ships raw streams");
+        let warm = get("crash@.70 ckpt@.15");
+        let sparse = get("crash@.70 ckpt@.30");
+        let cold = get("crash@.70 cold");
+        assert!(warm.ckpts_installed >= sparse.ckpts_installed);
+        assert_eq!(cold.ckpts_shipped, 0);
+        assert!(
+            warm.replayed_kb <= sparse.replayed_kb && sparse.replayed_kb < cold.replayed_kb,
+            "{fan_in}: checkpoint cadence bounds the replay ({:.1} / {:.1} / {:.1} KB)",
+            warm.replayed_kb,
+            sparse.replayed_kb,
+            cold.replayed_kb
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::switch::Parallelism as Par;
+
+    fn smoke_scale() -> Scale {
+        Scale::new(65_536)
+    }
+
+    /// Warm promotion cell: byte-exact, in-network, bounded replay.
+    #[test]
+    fn warm_promotion_cell_is_byte_exact() {
+        let scale = smoke_scale();
+        let (jct, received, oracle) = baseline(4, scale);
+        let row = run_cell("crash@.70 ckpt@.15", 4, scale, jct, &received, &oracle);
+        assert!(row.exact, "{row:?}");
+        assert!(row.promoted && !row.degraded, "{row:?}");
+        assert!(row.ckpts_installed >= 1, "{row:?}");
+        assert!(row.reduction > 0.0, "{row:?}");
+        assert!(row.jct_x > 1.0, "{row:?}");
+    }
+
+    /// No standby → the PR 6 software path: exact totals, no reduction.
+    #[test]
+    fn degradation_cell_forfeits_the_reduction() {
+        let scale = smoke_scale();
+        let (jct, received, oracle) = baseline(4, scale);
+        let row = run_cell("crash@.45 degrade", 4, scale, jct, &received, &oracle);
+        assert!(row.exact, "{row:?}");
+        assert!(row.degraded && !row.promoted, "{row:?}");
+        assert_eq!(row.reduction, 0.0, "{row:?}");
+        assert_eq!(row.ckpts_shipped, 0, "{row:?}");
+    }
+
+    /// Cold promotion replays strictly more than a checkpointed one.
+    #[test]
+    fn cold_promotion_pays_the_full_replay() {
+        let scale = smoke_scale();
+        let (jct, received, oracle) = baseline(4, scale);
+        let warm = run_cell("crash@.70 ckpt@.15", 4, scale, jct, &received, &oracle);
+        let cold = run_cell("crash@.70 cold", 4, scale, jct, &received, &oracle);
+        assert!(warm.exact && cold.exact);
+        assert!(
+            warm.replayed_pkts < cold.replayed_pkts,
+            "warm {} vs cold {}",
+            warm.replayed_pkts,
+            cold.replayed_pkts
+        );
+    }
+
+    /// Cell results are deterministic under harness-level concurrency.
+    #[test]
+    fn failover_cells_are_deterministic_under_harness_parallelism() {
+        let scale = smoke_scale();
+        let a = rows_with(scale, Par::Serial);
+        let b = rows_with(scale, Par::Sharded(2));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.scenario, y.scenario);
+            assert_eq!(x.jct_ms, y.jct_ms, "{}/{}", x.scenario, x.fan_in);
+            assert_eq!(x.replayed_pkts, y.replayed_pkts);
+            assert_eq!(x.ckpts_installed, y.ckpts_installed);
+            assert!(x.exact && y.exact);
+        }
+    }
+}

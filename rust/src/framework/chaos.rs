@@ -93,12 +93,12 @@ pub(crate) const KIND_FAILOVER_ACK: u64 = 6;
 /// A session tag carrying the sending epoch in bits 48..56 (the layout
 /// of `transport::tag` leaves them zero, so epoch-0 tags are bit-equal
 /// to the fault-free driver's).
-fn ctag(kind: u64, child: u16, idx: u32, epoch: u16) -> u64 {
+pub(crate) fn ctag(kind: u64, child: u16, idx: u32, epoch: u16) -> u64 {
     debug_assert!(epoch < 256, "chaos tags encode the epoch in 8 bits");
     tag(kind, child, idx) | ((epoch as u64) << 48)
 }
 
-fn ctag_epoch(t: u64) -> u16 {
+pub(crate) fn ctag_epoch(t: u64) -> u16 {
     ((t >> 48) & 0xFF) as u16
 }
 

@@ -1,0 +1,1573 @@
+//! Warm-standby switch failover: deterministic state snapshots shipped
+//! as checkpoints to a standby switch, and mid-job **promotion** that
+//! keeps the aggregation in-network instead of degrading to software.
+//!
+//! The pipeline on top of `framework::transport`'s co-simulation:
+//!
+//! * **Checkpointed replication** — on a configurable cadence the
+//!   primary serializes its full per-tree aggregation state
+//!   ([`SwitchAggSwitch::snapshot_tree`]) and ships it to the standby
+//!   over a real `NetSim` flow (hub → standby link), so serialization
+//!   and queueing cost is charged against the job clock.  After the
+//!   first full checkpoint, incremental mode ships only the
+//!   byte-dirtied sections ([`SnapshotDelta`]).  A delta only applies
+//!   on top of the exact shipment it was diffed against; a chain broken
+//!   by a lost shipment is discarded (a real replica would NAK and
+//!   request a full refresh), and promotion resumes from the last
+//!   *installed* checkpoint.
+//! * **Promotion** — when senders exhaust their retry budget and the
+//!   controller's heartbeat ledger confirms silence,
+//!   [`Controller::promote`] bumps the epoch and hands the tree to the
+//!   declared standby.  The standby adopts the new epoch **without**
+//!   clearing its restored dedup windows
+//!   ([`SwitchAggSwitch::adopt_epoch`]): those windows are exactly what
+//!   bounds the replay.  Each sender rebases onto the standby's
+//!   restored cumulative ack ([`AdaptiveSender::rebase_from`]) and
+//!   resends only the suffix past the last installed checkpoint; the
+//!   sink emissions the dead primary produced past that checkpoint are
+//!   truncated (the replay regenerates them), so the reducer-side
+//!   stream is byte-identical to the fault-free run's.
+//! * **Last-resort degradation** — a promotion target that is itself
+//!   dead (double fault), or a job that never declared a standby, falls
+//!   back to the software merge of PR 6: mappers bypass the switch and
+//!   stream raw pairs to the reducer.  The job completes, but the
+//!   in-network reduction is forfeited — the gap `exp failover`
+//!   quantifies.
+//!
+//! **Zero-fault transparency.**  With no standby and an empty plan the
+//! driver is byte-identical (aggregate *and* per-hop stats) to
+//! `run_transport_scalar`/`run_transport_vector`: the standby leaf and
+//! its links exist in the topology but carry no traffic and no loss
+//! channels, and every fault hook hides behind a plan query an empty
+//! plan never satisfies.  Pinned in this module's tests and in
+//! `tests/failover.rs`.
+//!
+//! Model simplifications, stated so the experiments don't over-claim:
+//! the primary is fail-stop (restarting primaries are the chaos
+//! driver's domain — [`crate::framework::chaos`]), mapper faults,
+//! stragglers, and link outages are likewise left to the chaos driver
+//! (handing such a plan to this driver surfaces as a typed transport
+//! error, never silent corruption), and checkpoint shipments share the
+//! job clock but their link is lossless — checkpoint *loss* is injected
+//! deterministically by [`FaultPlan::with_checkpoint_loss`] so sweeps
+//! can name exactly which shipment dies.
+
+use crate::controller::Controller;
+use crate::framework::chaos::{ctag, ctag_epoch, KIND_FAILOVER_ACK, KIND_FAILOVER_DATA};
+use crate::framework::hop::{self, Flow, HopDriver};
+use crate::framework::reducer::{Completeness, Reducer};
+use crate::framework::reliable::{stamp, Endpoint};
+use crate::framework::transport::{
+    apply_session_policy, drive_hop, tag_child, tag_idx, tag_kind, NetHopStats, TransportConfig,
+    ACK_WIRE_LEN, KIND_EGRESS_ACK, KIND_EGRESS_DATA, KIND_INGRESS_ACK, KIND_INGRESS_DATA,
+};
+use crate::net::faults::FaultPlan;
+use crate::net::netsim::{Delivery, NetSim};
+use crate::net::topology::{NodeId, Topology};
+use crate::protocol::{
+    AdaptiveSender, AggAckPacket, AggOp, AggregationPacket, KvPair, LaunchPacket, TransportError,
+    TreeId, VectorAggregationPacket, VectorBatch, VectorChunks,
+};
+use crate::switch::reliability::Admit;
+use crate::switch::snapshot::{SnapshotDelta, SwitchSnapshot};
+use crate::switch::{
+    DedupStats, IngestSink, SwitchAggSwitch, SwitchConfig, SwitchStats, VectorSink,
+};
+
+/// Checkpoint-shipment packet kind (hub → standby), disjoint from the
+/// session kinds so replication traffic never aliases data or acks.
+pub(crate) const KIND_CKPT: u64 = 7;
+
+/// How a failover session can fail *as designed* — anything else
+/// (missing pairs, stats drift) panics, because it is a harness bug.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum FailoverError {
+    /// A sender exhausted its retry budget with no failover path open
+    /// (the active switch is alive, or no failure was detected).
+    #[error("transport gave up with no failover path: {0}")]
+    Transport(#[from] TransportError),
+}
+
+/// One failover session's knobs on top of the transport config.
+#[derive(Clone, Debug)]
+pub struct FailoverConfig {
+    pub transport: TransportConfig,
+    pub plan: FaultPlan,
+    /// Declare a warm standby at bring-up.  Without one, a dead primary
+    /// degrades straight to the software merge.
+    pub standby: bool,
+    /// Checkpoint cadence in sim seconds (`None` = no replication: a
+    /// declared standby promotes *cold* and the whole job replays
+    /// in-network).  Requires `standby`.
+    pub checkpoint_period_s: Option<f64>,
+    /// After the first full checkpoint, ship only byte-dirtied snapshot
+    /// sections ([`SnapshotDelta`]) instead of the full image.
+    pub incremental: bool,
+    /// Per-sender retransmission budget before giving up with a typed
+    /// [`TransportError`].  `None` retries forever; failover scenarios
+    /// must set it or the dead primary is never declared dead.
+    pub max_retries: Option<u32>,
+    /// Ack silence (per the controller's heartbeat ledger) needed to
+    /// declare the active switch dead when a sender gives up.
+    pub detect_timeout_s: f64,
+}
+
+impl Default for FailoverConfig {
+    fn default() -> Self {
+        Self {
+            transport: TransportConfig::default(),
+            plan: FaultPlan::none(),
+            standby: false,
+            checkpoint_period_s: None,
+            incremental: true,
+            max_retries: None,
+            detect_timeout_s: 5e-3,
+        }
+    }
+}
+
+/// Outcome of a failover session; `T` is the reducer-side payload type
+/// (`Vec<KvPair>` scalar, [`VectorBatch`] W-lane).
+#[derive(Clone, Debug)]
+pub struct FailoverReport<T> {
+    /// Pairs at the reducer: the active switch's aggregate (in-network
+    /// paths) or the mappers' raw streams (degraded path, merged in
+    /// software by the caller via [`Reducer::merge_software`]).
+    pub received: T,
+    pub completeness: Completeness,
+    pub ingress: NetHopStats,
+    pub egress: NetHopStats,
+    /// Dedup counters of the switch that finished the job (the standby
+    /// after a promotion — its restored windows continue the primary's).
+    pub dedup: DedupStats,
+    /// The warm standby took over mid-job; aggregation stayed
+    /// in-network.
+    pub promoted: bool,
+    /// Last-resort software degradation (no usable standby).
+    pub degraded: bool,
+    pub checkpoints_shipped: u32,
+    /// Shipments the standby actually applied (losses and broken delta
+    /// chains make this lag `checkpoints_shipped`).
+    pub checkpoints_installed: u32,
+    /// Serialized checkpoint bytes shipped hub → standby.
+    pub checkpoint_bytes: u64,
+    /// Packets resent because promotion rebased senders onto the last
+    /// installed checkpoint (bounded by the sender windows since the
+    /// restored dedup state acks everything up to the checkpoint).
+    pub replayed_packets: u64,
+    /// Wire bytes of those replayed packets.
+    pub replayed_bytes: u64,
+    /// Packets discarded by *injected* faults (dead primary/standby,
+    /// lost checkpoints), as distinct from the loss channels' drops.
+    pub faulted_drops: u64,
+    pub final_epoch: u16,
+    /// Aggregation-engine counters of the switch that finished the job
+    /// (`None` on the degraded path — nothing aggregated in-network).
+    pub switch_stats: Option<SwitchStats>,
+    pub jct_s: f64,
+    pub fifo_peak: u64,
+}
+
+pub type FailoverScalarReport = FailoverReport<Vec<KvPair>>;
+pub type FailoverVectorReport = FailoverReport<VectorBatch>;
+
+/// Sink high-water marks captured with each checkpoint: the emissions
+/// the snapshot's engine state has already produced.  On promotion the
+/// sink is truncated back to the installed checkpoint's marks — the
+/// replay regenerates everything past them.
+#[derive(Clone, Copy, Debug, Default)]
+struct SinkMarks {
+    forwarded: usize,
+    flushed: usize,
+    flushes: u32,
+}
+
+/// What one checkpoint shipment carries.
+enum Shipment {
+    Full(SwitchSnapshot),
+    Delta(SnapshotDelta),
+}
+
+/// Shipper-side record of one checkpoint (the payload rides here, the
+/// `NetSim` flow models its wire length — same pattern as the session's
+/// ack vector).
+struct Checkpoint {
+    shipment: Shipment,
+    marks: SinkMarks,
+}
+
+/// The scalar/vector-agnostic surface the ingress driver needs from
+/// the session's packetized streams and switch sink.
+trait Lane {
+    /// Admit packet `(child, seq)` into `sw` under the epoch it was
+    /// sent in and return the switch's ack.
+    fn ingest(
+        &mut self,
+        sw: &mut SwitchAggSwitch,
+        tree: TreeId,
+        child: usize,
+        seq: u32,
+        wire_epoch: u16,
+    ) -> AggAckPacket;
+    /// Restamp every packet's `RelHeader` for a new epoch.
+    fn restamp(&mut self, epoch: u16);
+    /// Current sink high-water marks.
+    fn marks(&self) -> SinkMarks;
+    /// Roll the sink back to a checkpoint's marks (emissions past the
+    /// installed checkpoint are the dead primary's; the replay
+    /// regenerates them byte-identically).
+    fn truncate(&mut self, m: SinkMarks);
+    fn flushes(&self) -> u32;
+}
+
+struct ScalarLane {
+    pkts: Vec<Vec<AggregationPacket>>,
+    sink: IngestSink,
+}
+
+impl Lane for ScalarLane {
+    fn ingest(
+        &mut self,
+        sw: &mut SwitchAggSwitch,
+        tree: TreeId,
+        child: usize,
+        seq: u32,
+        wire_epoch: u16,
+    ) -> AggAckPacket {
+        let pkt = &self.pkts[child][(seq - 1) as usize];
+        if pkt.rel.map(|r| r.epoch) == Some(wire_epoch) {
+            sw.ingest_reliable_one(tree, pkt, &mut self.sink)
+        } else {
+            // A stale epoch still in flight: admit it as it was sent,
+            // not as the buffer was later restamped.
+            let mut stale = pkt.clone();
+            stale.rel.as_mut().expect("stamped").epoch = wire_epoch;
+            sw.ingest_reliable_one(tree, &stale, &mut self.sink)
+        }
+    }
+
+    fn restamp(&mut self, epoch: u16) {
+        for stream in &mut self.pkts {
+            for p in stream {
+                p.rel.as_mut().expect("stamped").epoch = epoch;
+            }
+        }
+    }
+
+    fn marks(&self) -> SinkMarks {
+        SinkMarks {
+            forwarded: self.sink.forwarded.len(),
+            flushed: self.sink.flushed.len(),
+            flushes: self.sink.flushes,
+        }
+    }
+
+    fn truncate(&mut self, m: SinkMarks) {
+        self.sink.forwarded.truncate(m.forwarded);
+        self.sink.flushed.truncate(m.flushed);
+        self.sink.flushes = m.flushes;
+    }
+
+    fn flushes(&self) -> u32 {
+        self.sink.flushes
+    }
+}
+
+struct VectorLane {
+    pkts: Vec<Vec<VectorAggregationPacket>>,
+    sink: VectorSink,
+}
+
+impl Lane for VectorLane {
+    fn ingest(
+        &mut self,
+        sw: &mut SwitchAggSwitch,
+        tree: TreeId,
+        child: usize,
+        seq: u32,
+        wire_epoch: u16,
+    ) -> AggAckPacket {
+        let pkt = &self.pkts[child][(seq - 1) as usize];
+        if pkt.rel.map(|r| r.epoch) == Some(wire_epoch) {
+            sw.ingest_vector_reliable_one(tree, pkt, &mut self.sink)
+        } else {
+            let mut stale = pkt.clone();
+            stale.rel.as_mut().expect("stamped").epoch = wire_epoch;
+            sw.ingest_vector_reliable_one(tree, &stale, &mut self.sink)
+        }
+    }
+
+    fn restamp(&mut self, epoch: u16) {
+        for stream in &mut self.pkts {
+            for p in stream {
+                p.rel.as_mut().expect("stamped").epoch = epoch;
+            }
+        }
+    }
+
+    fn marks(&self) -> SinkMarks {
+        SinkMarks {
+            forwarded: self.sink.forwarded.len(),
+            flushed: self.sink.flushed.len(),
+            flushes: self.sink.flushes,
+        }
+    }
+
+    fn truncate(&mut self, m: SinkMarks) {
+        self.sink.forwarded = self.sink.forwarded.sub_batch(0..m.forwarded);
+        self.sink.flushed = self.sink.flushed.sub_batch(0..m.flushed);
+        self.sink.flushes = m.flushes;
+    }
+
+    fn flushes(&self) -> u32 {
+        self.sink.flushes
+    }
+}
+
+struct IngressOutcome {
+    stats: NetHopStats,
+    epoch: u16,
+    promoted: bool,
+    degraded: bool,
+    replayed_packets: u64,
+    replayed_bytes: u64,
+    checkpoints_shipped: u32,
+    checkpoints_installed: u32,
+    checkpoint_bytes: u64,
+}
+
+/// Ingress-hop state for one failover session: a [`HopDriver`] whose
+/// per-delivery hooks carry the checkpoint cadence, the promotion
+/// machine, and the degradation fallback on top of the shared event
+/// loop.
+struct FailoverHop<'a, L: Lane> {
+    ctl: &'a mut Controller,
+    primary: &'a mut SwitchAggSwitch,
+    standby: &'a mut SwitchAggSwitch,
+    lane: &'a mut L,
+    tree: TreeId,
+    lens: &'a [Vec<u64>],
+    mappers: &'a [NodeId],
+    hub: NodeId,
+    standby_node: NodeId,
+    cfg: &'a FailoverConfig,
+    children: usize,
+    senders: Vec<AdaptiveSender>,
+    epoch: u16,
+    promoted: bool,
+    degraded: bool,
+    replayed_packets: u64,
+    replayed_bytes: u64,
+    /// Next scheduled checkpoint instant; `None` once the cadence ends
+    /// (no replication configured, or the primary is gone).
+    next_ckpt_s: Option<f64>,
+    /// Shipper-side record of every shipment, indexed by shipment id.
+    shipments: Vec<Checkpoint>,
+    /// The last snapshot taken, the base of the next incremental delta.
+    last_snap: Option<SwitchSnapshot>,
+    checkpoints_shipped: u32,
+    checkpoint_bytes: u64,
+    /// Standby-side: the last shipment applied (id + reassembled full
+    /// image — the base the next delta must chain onto).
+    standby_snap: Option<(u32, SwitchSnapshot)>,
+    /// Marks of the last *installed* checkpoint (zero = cold standby).
+    installed_marks: SinkMarks,
+    checkpoints_installed: u32,
+    acks: Vec<AggAckPacket>,
+    stats: NetHopStats,
+    out_seqs: Vec<u32>,
+    done_s: f64,
+}
+
+impl<L: Lane> FailoverHop<'_, L> {
+    /// Where data currently flows: the hub's primary, or the standby
+    /// leaf after promotion (routed through the hub by the fabric).
+    fn active(&self) -> NodeId {
+        if self.promoted {
+            self.standby_node
+        } else {
+            self.hub
+        }
+    }
+
+    fn send_polled(&mut self, sim: &mut NetSim, c: usize, t: f64) -> bool {
+        let (epoch, src, dst) = (self.epoch, self.mappers[c], self.active());
+        hop::poll_send(
+            sim,
+            &mut self.senders[c],
+            &mut self.out_seqs,
+            t,
+            &self.lens[c],
+            src,
+            dst,
+            &mut self.stats.wire_bytes,
+            |seq| ctag(KIND_INGRESS_DATA, c as u16, seq, epoch),
+        )
+    }
+
+    /// Serialize the primary's tree state and ship it to the standby as
+    /// a real `NetSim` flow (the replication channel's serialization
+    /// and queueing ride the job clock).
+    fn take_checkpoint(&mut self, sim: &mut NetSim, now: f64) {
+        let snap = self
+            .primary
+            .snapshot_tree(self.tree)
+            .expect("resident tree snapshots");
+        let index = self.shipments.len() as u32;
+        let marks = self.lane.marks();
+        let (shipment, bytes) = if self.cfg.incremental && self.last_snap.is_some() {
+            let prev = self.last_snap.as_ref().expect("checked");
+            let d = SnapshotDelta::between(index as u64 - 1, prev, &snap);
+            let b = d.encoded_len() as u64;
+            (Shipment::Delta(d), b)
+        } else {
+            (Shipment::Full(snap.clone()), snap.encoded_len() as u64)
+        };
+        sim.send_tagged(
+            now,
+            self.hub,
+            self.standby_node,
+            bytes.max(1),
+            ctag(KIND_CKPT, 0, index, self.epoch),
+        );
+        self.shipments.push(Checkpoint { shipment, marks });
+        self.last_snap = Some(snap);
+        self.checkpoints_shipped += 1;
+        self.checkpoint_bytes += bytes;
+    }
+
+    /// Fire every checkpoint scheduled at or before `now` (the calendar
+    /// delivers in time order, so "at the first event at or after `t`"
+    /// is causally equivalent to "at `t`").
+    fn fire_checkpoints(&mut self, sim: &mut NetSim, now: f64) {
+        while let Some(tc) = self.next_ckpt_s {
+            if tc > now {
+                break;
+            }
+            if self.promoted || self.degraded || self.cfg.plan.switch_down(now) {
+                // The primary (or the job's in-network phase) is gone:
+                // the cadence ends.
+                self.next_ckpt_s = None;
+                break;
+            }
+            self.take_checkpoint(sim, now);
+            let period = self
+                .cfg
+                .checkpoint_period_s
+                .expect("a scheduled checkpoint implies a period");
+            self.next_ckpt_s = Some(tc + period);
+        }
+    }
+
+    /// A shipment reached the standby: install it unless the plan lost
+    /// it in transit or a delta's base chain is broken.
+    fn install_checkpoint(&mut self, index: u32) {
+        let ck = &self.shipments[index as usize];
+        let snap = match &ck.shipment {
+            Shipment::Full(s) => Some(s.clone()),
+            Shipment::Delta(d) => self.standby_snap.as_ref().and_then(|(i, base)| {
+                // A delta only applies on top of the exact shipment it
+                // was diffed against; a chain broken by a lost shipment
+                // is discarded until the next full image (a real
+                // replica would NAK and request a refresh).
+                (*i as u64 == d.base_index()).then(|| d.apply(base))
+            }),
+        };
+        if let Some(snap) = snap {
+            self.standby
+                .restore_tree(&snap)
+                .expect("checkpoint restores onto the identically-configured standby");
+            self.standby_snap = Some((index, snap));
+            self.installed_marks = ck.marks;
+            self.checkpoints_installed += 1;
+        }
+    }
+
+    /// Hand the tree to the standby: adopt the bumped epoch over the
+    /// restored dedup windows, roll the sink back to the installed
+    /// checkpoint, rebase every sender onto the standby's cumulative
+    /// acks (bounded replay), and re-point the data path.
+    fn promote(&mut self, sim: &mut NetSim, now: f64) {
+        let (node, e) = self
+            .ctl
+            .promote(self.tree)
+            .expect("running tree with a declared standby promotes");
+        debug_assert_eq!(node, self.standby_node, "standby routes declared at bring-up");
+        assert!(
+            e < 256,
+            "session tags encode the epoch in 8 bits; {e} incarnations is beyond the fault model"
+        );
+        self.standby.adopt_epoch(self.tree, e);
+        self.lane.truncate(self.installed_marks);
+        self.lane.restamp(e);
+        self.epoch = e;
+        for c in 0..self.children {
+            let cum = self.standby.dedup_cum(self.tree, c as u16);
+            let sender = &mut self.senders[c];
+            let sent = sender.sent();
+            let replay_from = cum.min(sent);
+            self.replayed_packets += (sent - replay_from) as u64;
+            self.replayed_bytes += self.lens[c][replay_from as usize..sent as usize]
+                .iter()
+                .sum::<u64>();
+            sender.rebase_from(e, cum);
+        }
+        self.promoted = true;
+        for c in 0..self.children {
+            if !self.senders[c].done() {
+                self.send_polled(sim, c, now);
+            }
+        }
+    }
+
+    /// A give-up is terminal for the current path: with the active
+    /// switch verifiably dead (heartbeats silent), promote onto a live
+    /// standby, else degrade to the software merge; with it alive, the
+    /// typed transport error surfaces to the caller.
+    fn check_giveup(&mut self, sim: &mut NetSim, now: f64) -> Result<(), FailoverError> {
+        if self.degraded {
+            return Ok(());
+        }
+        let fail = (0..self.children).find_map(|c| self.senders[c].failure());
+        let Some(err) = fail else {
+            return Ok(());
+        };
+        let path_dead = if self.promoted {
+            self.cfg.plan.standby_dead(now)
+        } else {
+            self.cfg.plan.switch_dead(now)
+        };
+        if path_dead && self.ctl.failure_detected(self.tree, now, self.cfg.detect_timeout_s) {
+            if !self.promoted
+                && self.ctl.standby(self.tree).is_some()
+                && !self.cfg.plan.standby_dead(now)
+            {
+                self.promote(sim, now);
+            } else {
+                // No usable standby (never declared, already consumed,
+                // or itself dead): last resort is software degradation.
+                self.ctl.fail_over(self.tree).expect("running tree degrades");
+                self.degraded = true;
+            }
+        } else {
+            return Err(FailoverError::Transport(err));
+        }
+        Ok(())
+    }
+}
+
+impl<L: Lane> HopDriver for FailoverHop<'_, L> {
+    type Err = FailoverError;
+
+    fn label(&self) -> &'static str {
+        "failover session"
+    }
+
+    fn finished(&self) -> bool {
+        self.degraded || (0..self.children).all(|c| self.senders[c].done())
+    }
+
+    fn on_delivery(&mut self, sim: &mut NetSim, d: Delivery) -> Result<Flow, FailoverError> {
+        self.fire_checkpoints(sim, d.time_s);
+        let kind = tag_kind(d.tag);
+        if kind == KIND_CKPT {
+            if d.node == self.standby_node {
+                let index = tag_idx(d.tag);
+                if self.cfg.plan.standby_dead(d.time_s) || self.cfg.plan.checkpoint_lost(index) {
+                    // Shipped (and charged) but never installed.
+                    sim.note_faulted_drop(self.hub, self.standby_node);
+                } else {
+                    self.install_checkpoint(index);
+                }
+            }
+        } else if kind == KIND_INGRESS_DATA && d.node == self.hub {
+            let child = tag_child(d.tag) as usize;
+            if self.promoted || self.cfg.plan.switch_down(d.time_s) {
+                // The dead (or deposed) primary eats stale traffic.
+                sim.note_faulted_drop(self.mappers[child], self.hub);
+                return Ok(Flow::Continue);
+            }
+            let seq = tag_idx(d.tag);
+            let ack = self
+                .lane
+                .ingest(self.primary, self.tree, child, seq, ctag_epoch(d.tag));
+            let id = u32::try_from(self.acks.len()).expect("ack id space exhausted");
+            self.acks.push(ack);
+            sim.send_tagged(
+                d.time_s,
+                self.hub,
+                self.mappers[child],
+                ACK_WIRE_LEN,
+                ctag(KIND_INGRESS_ACK, child as u16, id, self.epoch),
+            );
+        } else if kind == KIND_INGRESS_DATA && d.node == self.standby_node {
+            let child = tag_child(d.tag) as usize;
+            if !self.promoted || self.cfg.plan.standby_dead(d.time_s) {
+                sim.note_faulted_drop(self.hub, self.standby_node);
+                return Ok(Flow::Continue);
+            }
+            let seq = tag_idx(d.tag);
+            let ack = self
+                .lane
+                .ingest(self.standby, self.tree, child, seq, ctag_epoch(d.tag));
+            let id = u32::try_from(self.acks.len()).expect("ack id space exhausted");
+            self.acks.push(ack);
+            sim.send_tagged(
+                d.time_s,
+                self.standby_node,
+                self.mappers[child],
+                ACK_WIRE_LEN,
+                ctag(KIND_INGRESS_ACK, child as u16, id, self.epoch),
+            );
+        } else if kind == KIND_INGRESS_ACK {
+            let c = tag_child(d.tag) as usize;
+            // Data-plane acks double as the active switch's heartbeat.
+            self.ctl.record_heartbeat(self.tree, d.time_s);
+            let ack = self.acks[tag_idx(d.tag) as usize];
+            let sender = &mut self.senders[c];
+            let was_done = sender.done();
+            sender.on_ack_epoch(ack.epoch, ack.cum_seq, ack.credit, d.time_s);
+            if !was_done && sender.done() {
+                self.done_s = self.done_s.max(d.time_s);
+            }
+            self.send_polled(sim, c, d.time_s);
+            self.check_giveup(sim, d.time_s)?;
+        }
+        // Any other tag is a straggler from a previous hop or epoch:
+        // the job has moved on, drop it.
+        Ok(Flow::Continue)
+    }
+
+    fn on_drained(&mut self, sim: &mut NetSim) -> Result<Flow, FailoverError> {
+        // Drained with senders unfinished: jump to the earliest thing
+        // that can happen — a retransmission deadline or a scheduled
+        // checkpoint.
+        let mut target = f64::INFINITY;
+        for c in 0..self.children {
+            if self.senders[c].done() || self.senders[c].failure().is_some() {
+                continue;
+            }
+            if let Some(dl) = self.senders[c].next_retx_deadline() {
+                target = target.min(dl);
+            }
+        }
+        if let Some(tc) = self.next_ckpt_s {
+            target = target.min(tc);
+        }
+        let t = if target.is_finite() {
+            target.max(sim.now_s())
+        } else {
+            sim.now_s()
+        };
+        let ckpt_before = self.next_ckpt_s;
+        let promoted_before = self.promoted;
+        self.fire_checkpoints(sim, t);
+        let mut sent_any = false;
+        for c in 0..self.children {
+            if !self.senders[c].done() {
+                sent_any |= self.send_polled(sim, c, t);
+            }
+        }
+        self.check_giveup(sim, t)?;
+        if self.degraded
+            || sent_any
+            || self.promoted != promoted_before
+            || self.next_ckpt_s != ckpt_before
+        {
+            return Ok(Flow::Continue);
+        }
+        // Live unfinished senders always carry a timer or a pollable
+        // window, and dead paths resolve through check_giveup above.
+        panic!("failover session stalled: no timers, sends, checkpoints, or transitions pending");
+    }
+}
+
+/// Drive the failover-aware ingress (mappers → active switch) hop on
+/// the shared hop-driver core.  Every divergence from the plain
+/// transport hop hides behind a fault-plan or checkpoint query an empty
+/// config never satisfies — the zero-fault byte-identity property.
+#[allow(clippy::too_many_arguments)]
+fn drive_failover_ingress<L: Lane>(
+    sim: &mut NetSim,
+    ctl: &mut Controller,
+    primary: &mut SwitchAggSwitch,
+    standby: &mut SwitchAggSwitch,
+    lane: &mut L,
+    tree: TreeId,
+    lens: &[Vec<u64>],
+    mappers: &[NodeId],
+    hub: NodeId,
+    standby_node: NodeId,
+    cfg: &FailoverConfig,
+) -> Result<IngressOutcome, FailoverError> {
+    let children = lens.len();
+    let senders: Vec<AdaptiveSender> = lens
+        .iter()
+        .map(|l| {
+            let s = cfg.transport.sender_for(l.len());
+            match cfg.max_retries {
+                Some(m) => s.with_max_retries(m),
+                None => s,
+            }
+        })
+        .collect();
+    let mut stats = NetHopStats::default();
+    for l in lens {
+        stats.first_tx_bytes += l.iter().sum::<u64>();
+    }
+    let links_before = sim.link_stats();
+    let events_before = sim.events_processed();
+    let t0 = sim.now_s();
+
+    let mut drv = FailoverHop {
+        ctl,
+        primary,
+        standby,
+        lane,
+        tree,
+        lens,
+        mappers,
+        hub,
+        standby_node,
+        cfg,
+        children,
+        senders,
+        epoch: 0,
+        promoted: false,
+        degraded: false,
+        replayed_packets: 0,
+        replayed_bytes: 0,
+        next_ckpt_s: cfg.checkpoint_period_s.map(|p| t0 + p),
+        shipments: Vec::new(),
+        last_snap: None,
+        checkpoints_shipped: 0,
+        checkpoint_bytes: 0,
+        standby_snap: None,
+        installed_marks: SinkMarks::default(),
+        checkpoints_installed: 0,
+        acks: Vec::new(),
+        stats,
+        out_seqs: Vec::new(),
+        done_s: t0,
+    };
+    for c in 0..children {
+        drv.send_polled(sim, c, t0);
+    }
+    hop::drive(sim, cfg.transport.max_steps, &mut drv)?;
+
+    let FailoverHop {
+        senders,
+        epoch,
+        promoted,
+        degraded,
+        replayed_packets,
+        replayed_bytes,
+        checkpoints_shipped,
+        checkpoints_installed,
+        checkpoint_bytes,
+        mut stats,
+        done_s,
+        ..
+    } = drv;
+    stats.done_s = done_s;
+    hop::fill_sender_stats(&mut stats, senders.iter());
+    hop::finish_hop_stats(&mut stats, sim, &links_before, events_before, mappers, hub);
+    Ok(IngressOutcome {
+        stats,
+        epoch,
+        promoted,
+        degraded,
+        replayed_packets,
+        replayed_bytes,
+        checkpoints_shipped,
+        checkpoints_installed,
+        checkpoint_bytes,
+    })
+}
+
+/// The session network: the transport star plus one standby leaf on
+/// the same hub.  Mapper, hub, and reducer node ids are identical to
+/// `session_net`'s, and the standby's links carry no loss channels —
+/// which is what keeps a standby-less run byte-identical to the plain
+/// transport driver.
+fn failover_net(
+    children: usize,
+    cfg: &TransportConfig,
+) -> (NetSim, NodeId, Vec<NodeId>, NodeId, NodeId) {
+    let (topo, hub, hosts) = Topology::star(children + 2);
+    let mut sim = NetSim::new(topo);
+    let mappers = hosts[..children].to_vec();
+    let reducer = hosts[children];
+    let standby = hosts[children + 1];
+    for &m in &mappers {
+        sim.set_link_loss(m, hub, cfg.data);
+        sim.set_link_loss(hub, m, cfg.ack);
+    }
+    sim.set_link_loss(hub, reducer, cfg.egress);
+    sim.set_link_loss(reducer, hub, cfg.ack);
+    (sim, hub, mappers, reducer, standby)
+}
+
+/// Shared control-plane bring-up: launch on the (children + 2)-host
+/// star, configure primary (and standby, when declared), and return
+/// everything the data-plane drive needs.
+struct Session {
+    ctl: Controller,
+    tree: TreeId,
+    sw: SwitchAggSwitch,
+    stby: SwitchAggSwitch,
+    sim: NetSim,
+    hub: NodeId,
+    mappers: Vec<NodeId>,
+    reducer: NodeId,
+    standby_node: NodeId,
+}
+
+fn bring_up(
+    switch_cfg: &SwitchConfig,
+    op: AggOp,
+    children: usize,
+    lanes: usize,
+    cfg: &FailoverConfig,
+) -> Session {
+    assert!(children >= 1, "need at least one child");
+    cfg.plan.validate(children as u16);
+    if let Some(crash) = cfg.plan.switch_crash() {
+        assert!(
+            crash.restart_at_s.is_none(),
+            "the failover driver models fail-stop primaries; scheduled restarts are the chaos driver's domain"
+        );
+    }
+    if let Some(p) = cfg.checkpoint_period_s {
+        assert!(p > 0.0 && p.is_finite(), "bad checkpoint period {p}");
+        assert!(cfg.standby, "checkpoint replication needs a declared standby");
+    }
+
+    let (topo, _hub, hosts) = Topology::star(children + 2);
+    let standby_host = hosts[children + 1];
+    let mut ctl = Controller::new(topo);
+    let req = LaunchPacket {
+        mappers: hosts[..children].iter().map(|h| h.0).collect(),
+        reducers: vec![hosts[children].0],
+    };
+    let out = ctl.launch(&req, op).expect("star session launches");
+    let tree = out.tree;
+    let mut sw = SwitchAggSwitch::new(switch_cfg.clone());
+    for (node, conf) in &out.configures {
+        sw.configure_vector(&conf.trees, lanes);
+        ctl.switch_ack(tree, *node).expect("configure handshake");
+    }
+    assert!(ctl.is_running(tree), "session running before any data");
+    apply_session_policy(&mut sw, &cfg.transport);
+
+    // The warm standby is brought up with the *same* Configure the
+    // controller would re-push (identical geometry is what lets
+    // `restore_tree` accept the primary's snapshots verbatim).
+    let mut stby = SwitchAggSwitch::new(switch_cfg.clone());
+    if cfg.standby {
+        for (_, conf) in ctl.reconfigures(tree) {
+            stby.configure_vector(&conf.trees, lanes);
+        }
+        apply_session_policy(&mut stby, &cfg.transport);
+        ctl.declare_standby(tree, standby_host)
+            .expect("running tree declares a standby");
+    }
+
+    let (sim, hub, mappers, reducer, standby_node) = failover_net(children, &cfg.transport);
+    debug_assert_eq!(standby_node, standby_host, "control and data planes agree");
+    Session {
+        ctl,
+        tree,
+        sw,
+        stby,
+        sim,
+        hub,
+        mappers,
+        reducer,
+        standby_node,
+    }
+}
+
+/// Run one scalar failover session: `streams[c]` is child `c`'s pair
+/// stream, aggregated under `cfg.plan`'s injected faults with the
+/// configured standby/checkpoint policy.  Starts at simulated t = 0 on
+/// a fresh star network with its own controller.
+pub fn run_failover_scalar(
+    switch_cfg: &SwitchConfig,
+    op: AggOp,
+    streams: &[Vec<KvPair>],
+    cfg: &FailoverConfig,
+) -> Result<FailoverScalarReport, FailoverError> {
+    let children = streams.len();
+    let mut s = bring_up(switch_cfg, op, children, 1, cfg);
+    let tree = s.tree;
+
+    let pkts: Vec<Vec<AggregationPacket>> = streams
+        .iter()
+        .enumerate()
+        .map(|(c, st)| {
+            let mut v = AggregationPacket::pack_stream(tree, op, st, true);
+            stamp(&mut v, c as u16, 0, |p, rel| p.rel = Some(rel));
+            v
+        })
+        .collect();
+    let lens: Vec<Vec<u64>> = pkts
+        .iter()
+        .map(|v| v.iter().map(|p| p.wire_len() as u64).collect())
+        .collect();
+    let mut lane = ScalarLane {
+        pkts,
+        sink: IngestSink::new(),
+    };
+    let ing = drive_failover_ingress(
+        &mut s.sim,
+        &mut s.ctl,
+        &mut s.sw,
+        &mut s.stby,
+        &mut lane,
+        tree,
+        &lens,
+        &s.mappers,
+        s.hub,
+        s.standby_node,
+        cfg,
+    )?;
+
+    if ing.degraded {
+        // Software merge: every mapper streams its raw pairs straight
+        // to the reducer (the mappers retain their send buffers until
+        // end-of-job, so this costs no extra state).
+        let mut eps: Vec<Endpoint<Vec<KvPair>>> = (0..children)
+            .map(|_| Endpoint::new(Vec::new(), cfg.transport.window))
+            .collect();
+        let pkts = &lane.pkts;
+        let egress = drive_hop(
+            &mut s.sim,
+            &cfg.transport,
+            &lens,
+            &s.mappers,
+            s.reducer,
+            (KIND_FAILOVER_DATA, KIND_FAILOVER_ACK),
+            |ci, seq, _now| {
+                let pkt = &pkts[ci as usize][(seq - 1) as usize];
+                let rel = pkt.rel.expect("stamped");
+                let ep = &mut eps[ci as usize];
+                if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                    ep.received.extend_from_slice(&pkt.pairs);
+                }
+                ep.ack_for(tree, rel.child)
+            },
+        );
+        let mut received: Vec<KvPair> = Vec::new();
+        for ep in &eps {
+            received.extend_from_slice(&ep.received);
+        }
+        let expected_pairs: u64 = streams.iter().map(|st| st.len() as u64).sum();
+        let completeness = Completeness {
+            expected_pairs,
+            received_pairs: received.len() as u64,
+        };
+        assert!(
+            completeness.is_complete(),
+            "degraded replay left {} pairs missing",
+            completeness.missing()
+        );
+        let worked = if ing.promoted { &s.stby } else { &s.sw };
+        return Ok(FailoverReport {
+            received,
+            completeness,
+            ingress: ing.stats,
+            egress,
+            dedup: worked.dedup_stats(tree),
+            promoted: ing.promoted,
+            degraded: true,
+            checkpoints_shipped: ing.checkpoints_shipped,
+            checkpoints_installed: ing.checkpoints_installed,
+            checkpoint_bytes: ing.checkpoint_bytes,
+            replayed_packets: ing.replayed_packets,
+            replayed_bytes: ing.replayed_bytes,
+            faulted_drops: s.sim.faulted_drops(),
+            final_epoch: s.ctl.epoch(tree),
+            switch_stats: None,
+            jct_s: egress.done_s,
+            fifo_peak: worked
+                .stats(tree)
+                .map(|st| st.fifo_max_occupancy)
+                .unwrap_or(0),
+        });
+    }
+
+    // In-network finish — on the primary, or on the promoted standby
+    // whose restored state continued the job byte-identically.
+    assert_eq!(
+        lane.sink.flushes, 1,
+        "every child's EoT admitted ⇒ exactly one flush"
+    );
+    let active = if ing.promoted { &mut s.stby } else { &mut s.sw };
+    active.finalize(tree);
+    let dedup = active.dedup_stats(tree);
+    let stats = active.stats(tree).expect("tree stats").clone();
+    let expected_pairs = stats.pairs_out_stream + stats.pairs_out_flush;
+    let fifo_peak = stats.fifo_max_occupancy;
+
+    let mut egress_pairs = Vec::with_capacity(lane.sink.forwarded.len() + lane.sink.flushed.len());
+    egress_pairs.extend_from_slice(&lane.sink.forwarded);
+    egress_pairs.extend_from_slice(&lane.sink.flushed);
+    let mut epkts = AggregationPacket::pack_stream(tree, op, &egress_pairs, true);
+    stamp(&mut epkts, 0, ing.epoch, |p, rel| p.rel = Some(rel));
+    let elens = vec![epkts.iter().map(|p| p.wire_len() as u64).collect::<Vec<u64>>()];
+    let mut ep = Endpoint::new(Vec::<KvPair>::new(), cfg.transport.window);
+    ep.epoch = ing.epoch;
+    let esrc = [if ing.promoted { s.standby_node } else { s.hub }];
+    let egress = drive_hop(
+        &mut s.sim,
+        &cfg.transport,
+        &elens,
+        &esrc,
+        s.reducer,
+        (KIND_EGRESS_DATA, KIND_EGRESS_ACK),
+        |_child, seq, _now| {
+            let pkt = &epkts[(seq - 1) as usize];
+            let rel = pkt.rel.expect("egress packets carry rel headers");
+            if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                ep.received.extend_from_slice(&pkt.pairs);
+            }
+            ep.ack_for(tree, rel.child)
+        },
+    );
+    let completeness =
+        Reducer::verify_completeness(expected_pairs, std::slice::from_ref(&ep.received));
+    assert!(
+        completeness.is_complete(),
+        "end-of-job recovery left {} pairs missing",
+        completeness.missing()
+    );
+    Ok(FailoverReport {
+        received: ep.received,
+        completeness,
+        ingress: ing.stats,
+        egress,
+        dedup,
+        promoted: ing.promoted,
+        degraded: false,
+        checkpoints_shipped: ing.checkpoints_shipped,
+        checkpoints_installed: ing.checkpoints_installed,
+        checkpoint_bytes: ing.checkpoint_bytes,
+        replayed_packets: ing.replayed_packets,
+        replayed_bytes: ing.replayed_bytes,
+        faulted_drops: s.sim.faulted_drops(),
+        final_epoch: ing.epoch,
+        switch_stats: Some(stats),
+        jct_s: egress.done_s,
+        fifo_peak,
+    })
+}
+
+/// The W-lane vector counterpart of [`run_failover_scalar`].
+pub fn run_failover_vector(
+    switch_cfg: &SwitchConfig,
+    op: AggOp,
+    streams: &[VectorBatch],
+    cfg: &FailoverConfig,
+) -> Result<FailoverVectorReport, FailoverError> {
+    let children = streams.len();
+    let lanes = streams.first().map(|b| b.lanes()).unwrap_or(1);
+    let mut s = bring_up(switch_cfg, op, children, lanes, cfg);
+    let tree = s.tree;
+
+    let packetize = |batch: &VectorBatch, child: u16| -> Vec<VectorAggregationPacket> {
+        let mut out = Vec::new();
+        let mut chunks = VectorChunks::new(batch);
+        while let Some((range, last)) = chunks.next_chunk() {
+            out.push(VectorAggregationPacket {
+                tree,
+                op,
+                eot: last,
+                rel: None,
+                batch: batch.sub_batch(range),
+            });
+        }
+        stamp(&mut out, child, 0, |p, rel| p.rel = Some(rel));
+        out
+    };
+    let pkts: Vec<Vec<VectorAggregationPacket>> = streams
+        .iter()
+        .enumerate()
+        .map(|(c, b)| packetize(b, c as u16))
+        .collect();
+    let lens: Vec<Vec<u64>> = pkts
+        .iter()
+        .map(|v| v.iter().map(|p| p.wire_len() as u64).collect())
+        .collect();
+    let mut lane = VectorLane {
+        pkts,
+        sink: VectorSink::new(lanes),
+    };
+    let ing = drive_failover_ingress(
+        &mut s.sim,
+        &mut s.ctl,
+        &mut s.sw,
+        &mut s.stby,
+        &mut lane,
+        tree,
+        &lens,
+        &s.mappers,
+        s.hub,
+        s.standby_node,
+        cfg,
+    )?;
+
+    if ing.degraded {
+        let mut eps: Vec<Endpoint<VectorBatch>> = (0..children)
+            .map(|_| Endpoint::new(VectorBatch::new(lanes), cfg.transport.window))
+            .collect();
+        let pkts = &lane.pkts;
+        let egress = drive_hop(
+            &mut s.sim,
+            &cfg.transport,
+            &lens,
+            &s.mappers,
+            s.reducer,
+            (KIND_FAILOVER_DATA, KIND_FAILOVER_ACK),
+            |ci, seq, _now| {
+                let pkt = &pkts[ci as usize][(seq - 1) as usize];
+                let rel = pkt.rel.expect("stamped");
+                let ep = &mut eps[ci as usize];
+                if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                    ep.received.extend_from_batch(&pkt.batch);
+                }
+                ep.ack_for(tree, rel.child)
+            },
+        );
+        let mut received = VectorBatch::new(lanes);
+        for ep in &eps {
+            received.extend_from_batch(&ep.received);
+        }
+        let expected_pairs: u64 = streams.iter().map(|b| b.len() as u64).sum();
+        let completeness = Completeness {
+            expected_pairs,
+            received_pairs: received.len() as u64,
+        };
+        assert!(
+            completeness.is_complete(),
+            "degraded replay left {} pairs missing",
+            completeness.missing()
+        );
+        let worked = if ing.promoted { &s.stby } else { &s.sw };
+        return Ok(FailoverReport {
+            received,
+            completeness,
+            ingress: ing.stats,
+            egress,
+            dedup: worked.dedup_stats(tree),
+            promoted: ing.promoted,
+            degraded: true,
+            checkpoints_shipped: ing.checkpoints_shipped,
+            checkpoints_installed: ing.checkpoints_installed,
+            checkpoint_bytes: ing.checkpoint_bytes,
+            replayed_packets: ing.replayed_packets,
+            replayed_bytes: ing.replayed_bytes,
+            faulted_drops: s.sim.faulted_drops(),
+            final_epoch: s.ctl.epoch(tree),
+            switch_stats: None,
+            jct_s: egress.done_s,
+            fifo_peak: worked
+                .stats(tree)
+                .map(|st| st.fifo_max_occupancy)
+                .unwrap_or(0),
+        });
+    }
+
+    assert_eq!(
+        lane.sink.flushes, 1,
+        "every child's EoT admitted ⇒ exactly one flush"
+    );
+    let active = if ing.promoted { &mut s.stby } else { &mut s.sw };
+    active.finalize(tree);
+    let dedup = active.dedup_stats(tree);
+    let stats = active.stats(tree).expect("tree stats").clone();
+    let expected_pairs = stats.pairs_out_stream + stats.pairs_out_flush;
+    let fifo_peak = stats.fifo_max_occupancy;
+
+    let egress_batch = crate::switch::vector_sink_to_batch(&lane.sink);
+    let mut epkts = packetize(&egress_batch, 0);
+    for p in &mut epkts {
+        p.rel.as_mut().expect("stamped").epoch = ing.epoch;
+    }
+    let elens = vec![epkts.iter().map(|p| p.wire_len() as u64).collect::<Vec<u64>>()];
+    let mut ep = Endpoint::new(VectorBatch::new(lanes), cfg.transport.window);
+    ep.epoch = ing.epoch;
+    let esrc = [if ing.promoted { s.standby_node } else { s.hub }];
+    let egress = drive_hop(
+        &mut s.sim,
+        &cfg.transport,
+        &elens,
+        &esrc,
+        s.reducer,
+        (KIND_EGRESS_DATA, KIND_EGRESS_ACK),
+        |_child, seq, _now| {
+            let pkt = &epkts[(seq - 1) as usize];
+            let rel = pkt.rel.expect("egress packets carry rel headers");
+            if matches!(ep.window.offer(rel.seq, pkt.eot), Admit::New) {
+                ep.received.extend_from_batch(&pkt.batch);
+            }
+            ep.ack_for(tree, rel.child)
+        },
+    );
+    let completeness = Completeness {
+        expected_pairs,
+        received_pairs: ep.received.len() as u64,
+    };
+    assert!(
+        completeness.is_complete(),
+        "end-of-job recovery left {} pairs missing",
+        completeness.missing()
+    );
+    Ok(FailoverReport {
+        received: ep.received,
+        completeness,
+        ingress: ing.stats,
+        egress,
+        dedup,
+        promoted: ing.promoted,
+        degraded: false,
+        checkpoints_shipped: ing.checkpoints_shipped,
+        checkpoints_installed: ing.checkpoints_installed,
+        checkpoint_bytes: ing.checkpoint_bytes,
+        replayed_packets: ing.replayed_packets,
+        replayed_bytes: ing.replayed_bytes,
+        faulted_drops: s.sim.faulted_drops(),
+        final_epoch: ing.epoch,
+        switch_stats: Some(stats),
+        jct_s: egress.done_s,
+        fifo_peak,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::transport::{run_transport_scalar, run_transport_vector};
+    use crate::protocol::{Key, TreeConfig};
+    use crate::util::rng::Pcg32;
+
+    fn switch_cfg() -> SwitchConfig {
+        SwitchConfig::scaled(16 << 10, Some(256 << 10))
+    }
+
+    /// Manually-configured transport switch mirroring the session the
+    /// failover runner launches through its controller (first launch ⇒
+    /// `TreeId(1)`).
+    fn transport_switch(children: u16, lanes: usize) -> SwitchAggSwitch {
+        let mut sw = SwitchAggSwitch::new(switch_cfg());
+        sw.configure_vector(
+            &[TreeConfig {
+                tree: TreeId(1),
+                children,
+                parent_port: 0,
+                op: AggOp::Sum,
+            }],
+            lanes,
+        );
+        sw
+    }
+
+    fn streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+        let mut rng = Pcg32::new(seed);
+        (0..children)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        let id = rng.gen_range_u64(300);
+                        KvPair::new(
+                            Key::from_id(id, 16 + (id % 49) as usize),
+                            rng.gen_range_u64(100) as i64 - 50,
+                        )
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Streams whose opening pass touches the *entire* key set in a
+    /// fixed order, with values tiny relative to i64: every key is
+    /// resident (and every table slot assigned) long before the first
+    /// checkpoint, so the post-promotion replay only aggregates into
+    /// existing slots — commutative sums make the final flush
+    /// independent of the replay's interleaving.
+    fn replayable_streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+        let keys = 32u64;
+        let key = |id: u64| Key::from_id(id, 16 + (id % 49) as usize);
+        let mut rng = Pcg32::new(seed);
+        (0..children)
+            .map(|_| {
+                let mut s: Vec<KvPair> = (0..keys).map(|id| KvPair::new(key(id), 1)).collect();
+                for _ in keys as usize..n {
+                    let id = rng.gen_range_u64(keys);
+                    s.push(KvPair::new(key(id), rng.gen_range_u64(9) as i64 - 4));
+                }
+                s
+            })
+            .collect()
+    }
+
+    fn merged(streams: &[Vec<KvPair>]) -> std::collections::HashMap<Key, i64> {
+        Reducer::merge_software(streams, AggOp::Sum).table
+    }
+
+    fn totals(pairs: &[KvPair]) -> std::collections::HashMap<Key, i64> {
+        Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
+    }
+
+    #[test]
+    fn zero_fault_failover_is_byte_identical_to_plain_transport() {
+        let ss = streams(4, 600, 0xF0);
+        for tcfg in [
+            TransportConfig::default(),
+            TransportConfig::uniform(0.02, 7),
+        ] {
+            let cfg = FailoverConfig {
+                transport: tcfg,
+                ..FailoverConfig::default()
+            };
+            let fo = run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &cfg)
+                .expect("fault-free failover run");
+            let mut sw = transport_switch(4, 1);
+            let plain = run_transport_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg.transport);
+
+            assert_eq!(fo.received, plain.received, "reducer stream");
+            assert_eq!(fo.ingress, plain.ingress, "ingress hop stats");
+            assert_eq!(fo.egress, plain.egress, "egress hop stats");
+            assert_eq!(fo.dedup, plain.dedup, "dedup counters");
+            assert_eq!(fo.jct_s, plain.jct_s, "bit-identical JCT");
+            assert_eq!(fo.fifo_peak, plain.fifo_peak);
+            assert!(!fo.promoted && !fo.degraded);
+            assert_eq!(fo.checkpoints_shipped, 0);
+            assert_eq!(fo.faulted_drops, 0);
+            assert_eq!(fo.final_epoch, 0);
+        }
+    }
+
+    #[test]
+    fn healthy_run_with_checkpoints_keeps_the_aggregate_and_ships_state() {
+        let ss = streams(4, 600, 0xF1);
+        let mut sw = transport_switch(4, 1);
+        let plain =
+            run_transport_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &TransportConfig::default());
+        let cfg = FailoverConfig {
+            standby: true,
+            checkpoint_period_s: Some(plain.jct_s * 0.2),
+            ..FailoverConfig::default()
+        };
+        let fo = run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &cfg)
+            .expect("healthy checkpointed run");
+        // Replication rides separate links: the aggregate and the job
+        // clock are untouched.
+        assert_eq!(fo.received, plain.received, "reducer stream");
+        assert_eq!(fo.jct_s, plain.jct_s, "replication never stalls the job");
+        assert!(!fo.promoted && !fo.degraded);
+        assert!(fo.checkpoints_shipped >= 2, "{}", fo.checkpoints_shipped);
+        assert_eq!(fo.checkpoints_installed, fo.checkpoints_shipped);
+        assert!(fo.checkpoint_bytes > 0);
+    }
+
+    #[test]
+    fn dead_primary_with_warm_standby_finishes_in_network_byte_identically() {
+        let ss = replayable_streams(4, 360, 0xF2);
+        for tcfg in [
+            TransportConfig::default(),
+            TransportConfig::uniform(0.02, 9),
+        ] {
+            let base = {
+                let cfg = FailoverConfig {
+                    transport: tcfg,
+                    ..FailoverConfig::default()
+                };
+                run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &cfg).expect("fault-free")
+            };
+            let cfg = FailoverConfig {
+                transport: tcfg,
+                plan: FaultPlan::none().with_switch_crash(base.jct_s * 0.55, None),
+                standby: true,
+                checkpoint_period_s: Some(base.jct_s * 0.2),
+                max_retries: Some(6),
+                ..FailoverConfig::default()
+            };
+            let fo = run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &cfg)
+                .expect("promotion completes the job");
+            assert!(fo.promoted && !fo.degraded);
+            assert_eq!(fo.final_epoch, 1);
+            assert!(fo.checkpoints_installed >= 1, "warm state installed");
+            assert!(fo.faulted_drops > 0, "the dead primary ate traffic");
+            let st = fo.switch_stats.as_ref().expect("in-network stats");
+            assert_eq!(st.pairs_out_stream, 0, "no evictions ⇒ pure flush");
+            // The acceptance pin: the promoted job's reducer stream is
+            // byte-identical to the fault-free run's.
+            assert_eq!(fo.received, base.received, "byte-identical aggregate");
+            assert_eq!(totals(&fo.received), merged(&ss));
+            assert!(fo.jct_s > base.jct_s, "the outage cost wall-clock");
+        }
+    }
+
+    #[test]
+    fn checkpoints_bound_the_replay_a_cold_standby_pays_in_full() {
+        let ss = replayable_streams(4, 360, 0xF3);
+        let base = run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &FailoverConfig::default())
+            .expect("fault-free");
+        let crash = base.jct_s * 0.6;
+        let run = |period: Option<f64>| {
+            let cfg = FailoverConfig {
+                plan: FaultPlan::none().with_switch_crash(crash, None),
+                standby: true,
+                checkpoint_period_s: period,
+                max_retries: Some(6),
+                ..FailoverConfig::default()
+            };
+            run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &cfg).expect("promotes")
+        };
+        let warm = run(Some(base.jct_s * 0.15));
+        let cold = run(None);
+        assert!(warm.promoted && cold.promoted);
+        assert_eq!(cold.checkpoints_shipped, 0);
+        assert_eq!(cold.checkpoints_installed, 0);
+        assert!(cold.replayed_packets > 0, "cold promotion replays from zero");
+        assert!(
+            warm.replayed_packets < cold.replayed_packets,
+            "checkpoints bound the replay: {} vs {}",
+            warm.replayed_packets,
+            cold.replayed_packets
+        );
+        assert!(warm.replayed_bytes < cold.replayed_bytes);
+        // Both still land on the fault-free aggregate.
+        assert_eq!(warm.received, base.received);
+        assert_eq!(cold.received, base.received);
+    }
+
+    #[test]
+    fn incremental_checkpoints_ship_fewer_bytes_than_full_images() {
+        let ss = streams(4, 600, 0xF4);
+        let base = run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &FailoverConfig::default())
+            .expect("fault-free");
+        let run = |incremental: bool| {
+            let cfg = FailoverConfig {
+                standby: true,
+                checkpoint_period_s: Some(base.jct_s * 0.1),
+                incremental,
+                ..FailoverConfig::default()
+            };
+            run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &cfg).expect("healthy run")
+        };
+        let inc = run(true);
+        let full = run(false);
+        assert_eq!(inc.checkpoints_shipped, full.checkpoints_shipped);
+        assert!(
+            inc.checkpoint_bytes < full.checkpoint_bytes,
+            "deltas ship only dirtied sections: {} vs {}",
+            inc.checkpoint_bytes,
+            full.checkpoint_bytes
+        );
+        assert_eq!(inc.received, full.received);
+    }
+
+    #[test]
+    fn dead_standby_degrades_to_software_instead_of_panicking() {
+        let ss = streams(4, 400, 0xF5);
+        let base = run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &FailoverConfig::default())
+            .expect("fault-free");
+        let cfg = FailoverConfig {
+            plan: FaultPlan::none()
+                .with_switch_crash(base.jct_s * 0.4, None)
+                .with_standby_crash(base.jct_s * 0.2),
+            standby: true,
+            checkpoint_period_s: Some(base.jct_s * 0.1),
+            max_retries: Some(6),
+            ..FailoverConfig::default()
+        };
+        let fo = run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &cfg)
+            .expect("double fault degrades, not hangs");
+        assert!(fo.degraded, "promotion path must fall back");
+        assert!(!fo.promoted, "a dead standby is never promoted");
+        assert!(fo.switch_stats.is_none());
+        assert_eq!(totals(&fo.received), merged(&ss), "software merge is exact");
+        assert_eq!(
+            fo.received.len() as u64,
+            ss.iter().map(|s| s.len() as u64).sum::<u64>(),
+            "degradation forfeits the reduction: raw streams arrive"
+        );
+    }
+
+    #[test]
+    fn lost_checkpoint_breaks_the_delta_chain_but_not_the_job() {
+        let ss = replayable_streams(4, 360, 0xF6);
+        let base = run_failover_scalar(&switch_cfg(), AggOp::Sum, &ss, &FailoverConfig::default())
+            .expect("fault-free");
+        let mk = |plan: FaultPlan| FailoverConfig {
+            plan,
+            standby: true,
+            checkpoint_period_s: Some(base.jct_s * 0.15),
+            max_retries: Some(6),
+            ..FailoverConfig::default()
+        };
+        let crash = base.jct_s * 0.6;
+        let clean = run_failover_scalar(
+            &switch_cfg(),
+            AggOp::Sum,
+            &ss,
+            &mk(FaultPlan::none().with_switch_crash(crash, None)),
+        )
+        .expect("promotes");
+        // Lose shipment 1 (the first delta): every later delta's base
+        // chain is broken, so the standby stays on shipment 0's image.
+        let lossy = run_failover_scalar(
+            &switch_cfg(),
+            AggOp::Sum,
+            &ss,
+            &mk(FaultPlan::none()
+                .with_switch_crash(crash, None)
+                .with_checkpoint_loss(1)),
+        )
+        .expect("promotes from the last installed checkpoint");
+        assert!(clean.promoted && lossy.promoted);
+        assert!(
+            lossy.checkpoints_installed < lossy.checkpoints_shipped,
+            "{} of {} installed",
+            lossy.checkpoints_installed,
+            lossy.checkpoints_shipped
+        );
+        assert!(
+            lossy.replayed_packets >= clean.replayed_packets,
+            "an older restore point cannot shrink the replay"
+        );
+        assert_eq!(clean.received, base.received);
+        assert_eq!(lossy.received, base.received, "exactness survives the loss");
+    }
+
+    #[test]
+    fn vector_zero_fault_failover_matches_plain_transport() {
+        let lanes = 4;
+        let mut rng = Pcg32::new(0xF7);
+        let vstreams: Vec<VectorBatch> = (0..3)
+            .map(|_| {
+                let mut b = VectorBatch::new(lanes);
+                for _ in 0..400 {
+                    let id = rng.gen_range_u64(120);
+                    let vals: Vec<i64> =
+                        (0..lanes).map(|_| rng.gen_range_u64(50) as i64 - 25).collect();
+                    b.push(Key::from_id(id, 16 + (id % 49) as usize), &vals);
+                }
+                b
+            })
+            .collect();
+        let cfg = FailoverConfig::default();
+        let fo = run_failover_vector(&switch_cfg(), AggOp::Sum, &vstreams, &cfg)
+            .expect("fault-free vector run");
+        let mut sw = transport_switch(3, lanes);
+        let plain =
+            run_transport_vector(&mut sw, TreeId(1), AggOp::Sum, &vstreams, &cfg.transport);
+        assert_eq!(fo.received, plain.received, "reducer batch");
+        assert_eq!(fo.ingress, plain.ingress);
+        assert_eq!(fo.egress, plain.egress);
+        assert_eq!(fo.jct_s, plain.jct_s);
+        assert!(!fo.promoted && !fo.degraded);
+    }
+}

@@ -4,6 +4,7 @@
 //! PUT/GET abstraction over the aggregation network.
 
 pub mod chaos;
+pub mod failover;
 pub(crate) mod hop;
 pub mod integrity;
 pub mod job;
@@ -18,6 +19,10 @@ pub mod transport;
 pub use chaos::{
     run_chaos_scalar, run_chaos_vector, ChaosConfig, ChaosError, ChaosReport, ChaosScalarReport,
     ChaosVectorReport, EotQuorum,
+};
+pub use failover::{
+    run_failover_scalar, run_failover_vector, FailoverConfig, FailoverError, FailoverReport,
+    FailoverScalarReport, FailoverVectorReport,
 };
 pub use integrity::{
     run_integrity_scalar, run_integrity_vector, IntegrityConfig, IntegrityRun, IntegrityVectorRun,

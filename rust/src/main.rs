@@ -3,7 +3,7 @@
 //! ```text
 //! switchagg exp <id> [--scale N]     regenerate a paper table/figure
 //!     ids: eq1 fig2a fig2b fig9 table2 table3 fig10 fig11 ablations sec7
-//!          allreduce loss incast faults tenancy integrity pipeline all
+//!          allreduce loss incast faults failover tenancy integrity pipeline all
 //! switchagg wordcount [--bytes 8MB] [--vocab 20000] [--no-xla]
 //!     end-to-end WordCount through the simulated testbed
 //! switchagg selftest                 quick whole-stack smoke test
@@ -45,7 +45,7 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage:\n  switchagg exp <eq1|fig2a|fig2b|fig9|table2|table3|fig10|fig11|ablations|sec7|allreduce|loss|incast|faults|tenancy|integrity|pipeline|all> [--scale N]\n  switchagg wordcount [--bytes 8MB] [--vocab 20000] [--no-xla]\n  switchagg selftest"
+        "usage:\n  switchagg exp <eq1|fig2a|fig2b|fig9|table2|table3|fig10|fig11|ablations|sec7|allreduce|loss|incast|faults|failover|tenancy|integrity|pipeline|all> [--scale N]\n  switchagg wordcount [--bytes 8MB] [--vocab 20000] [--no-xla]\n  switchagg selftest"
     );
 }
 
@@ -81,6 +81,7 @@ fn cmd_exp(args: &Args) -> i32 {
         "loss" => experiments::sec_loss::run(scale),
         "incast" => experiments::sec_incast::run(scale),
         "faults" => experiments::sec_faults::run(scale),
+        "failover" => experiments::sec_failover::run(scale),
         "tenancy" => experiments::sec_tenancy::run(scale),
         "integrity" => experiments::sec_integrity::run(scale),
         "pipeline" => experiments::sec_pipeline::run(scale),
@@ -92,8 +93,8 @@ fn cmd_exp(args: &Args) -> i32 {
     if id == "all" {
         for id in [
             "eq1", "fig2a", "fig2b", "fig9", "table2", "table3", "fig10", "fig11",
-            "ablations", "sec7", "allreduce", "loss", "incast", "faults", "tenancy",
-            "integrity", "pipeline",
+            "ablations", "sec7", "allreduce", "loss", "incast", "faults", "failover",
+            "tenancy", "integrity", "pipeline",
         ] {
             run_one(id);
         }

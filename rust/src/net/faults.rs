@@ -60,6 +60,15 @@ pub struct FaultPlan {
     /// engine's table state at the first delivery at or after `at_s`;
     /// the per-region audit checksum is what catches it.
     sram_flips: Vec<(f64, u64)>,
+    /// The warm-standby switch itself dies forever at `at_s` — a
+    /// double-fault exercise for the failover driver: promotion onto a
+    /// dead standby must fall back to software degradation, not panic.
+    standby_crash: Option<f64>,
+    /// 0-based indices of checkpoint shipments that are lost in
+    /// transit (serialized and charged against JCT, but never
+    /// installed on the standby): promotion resumes from the last
+    /// *installed* checkpoint, replaying a longer suffix.
+    checkpoint_loss: Vec<u32>,
 }
 
 impl FaultPlan {
@@ -75,6 +84,8 @@ impl FaultPlan {
             && self.mapper_crash.is_empty()
             && self.stragglers.iter().all(|&(_, f)| f <= 1.0)
             && self.sram_flips.is_empty()
+            && self.standby_crash.is_none()
+            && self.checkpoint_loss.is_empty()
     }
 
     /// Schedule the switch to crash at `at_s`, restarting (with empty
@@ -124,6 +135,24 @@ impl FaultPlan {
         self
     }
 
+    /// Kill the warm standby forever at `at_s`.  Added by builder only
+    /// — never by [`Self::chaos`], whose RNG draw order is pinned by
+    /// the chaos differential tests.
+    pub fn with_standby_crash(mut self, at_s: f64) -> Self {
+        assert!(at_s >= 0.0 && at_s.is_finite(), "bad crash time {at_s}");
+        assert!(self.standby_crash.is_none(), "at most one standby crash");
+        self.standby_crash = Some(at_s);
+        self
+    }
+
+    /// Lose the `index`-th checkpoint shipment (0-based) in transit.
+    /// Added by builder only — never by [`Self::chaos`], whose RNG draw
+    /// order is pinned by the chaos differential tests.
+    pub fn with_checkpoint_loss(mut self, index: u32) -> Self {
+        self.checkpoint_loss.push(index);
+        self
+    }
+
     /// A seeded random plan over `children` mappers within `[0,
     /// horizon_s)`: maybe a switch crash (usually recovering), maybe a
     /// link outage, maybe a straggler.  Same seed ⇒ same plan,
@@ -162,6 +191,10 @@ impl FaultPlan {
         self.link_down.iter().for_each(|&(c, _, _)| ok(c));
         self.mapper_crash.iter().for_each(|&(c, _)| ok(c));
         self.stragglers.iter().for_each(|&(c, _)| ok(c));
+        // Standby-crash and checkpoint-loss faults name no child; a
+        // plan carrying them is valid for any session, and the failover
+        // driver must degrade to software aggregation — never panic —
+        // when they leave it without a usable standby.
     }
 
     /// The scheduled switch crash, if any.
@@ -189,6 +222,17 @@ impl FaultPlan {
             self.switch_crash,
             Some(SwitchCrash { at_s, restart_at_s: None }) if t >= at_s
         )
+    }
+
+    /// Is the warm standby dead (crashed, never restarting) at `t`?
+    pub fn standby_dead(&self, t: f64) -> bool {
+        self.standby_crash.is_some_and(|at| t >= at)
+    }
+
+    /// Is the `index`-th checkpoint shipment (0-based) scheduled to be
+    /// lost in transit?
+    pub fn checkpoint_lost(&self, index: u32) -> bool {
+        self.checkpoint_loss.contains(&index)
     }
 
     /// Is the child's access link down at `t` (either direction)?
@@ -270,6 +314,33 @@ mod tests {
         assert!(!p.is_empty());
         assert_eq!(p.sram_flips(), &[(0.5, 0xAB), (0.1, 0xCD)], "insertion order kept");
         p.validate(1); // flips name no child: always valid
+    }
+
+    #[test]
+    fn standby_crash_and_checkpoint_loss_are_scheduled() {
+        let p = FaultPlan::none()
+            .with_standby_crash(2.0)
+            .with_checkpoint_loss(1)
+            .with_checkpoint_loss(3);
+        assert!(!p.is_empty());
+        assert!(!p.standby_dead(1.9));
+        assert!(p.standby_dead(2.0), "dead at the crash instant");
+        assert!(p.standby_dead(1e9), "no restart ever comes");
+        assert!(!p.checkpoint_lost(0));
+        assert!(p.checkpoint_lost(1) && p.checkpoint_lost(3));
+        // These faults name no child: valid against any fan-in.
+        p.validate(1);
+        p.validate(64);
+        // And the primary-switch queries are untouched.
+        assert!(!p.switch_down(1e9) && !p.switch_dead(1e9));
+    }
+
+    #[test]
+    #[should_panic(expected = "at most one standby crash")]
+    fn second_standby_crash_is_rejected() {
+        let _ = FaultPlan::none()
+            .with_standby_crash(1.0)
+            .with_standby_crash(2.0);
     }
 
     #[test]

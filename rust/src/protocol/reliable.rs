@@ -512,10 +512,26 @@ impl AdaptiveSender {
     /// [`INIT_CWND`] in adaptive mode — the path's capacity may have
     /// changed across the outage — and any give-up latch is cleared.
     pub fn rebase(&mut self, epoch: u16) {
+        self.rebase_from(epoch, 0);
+    }
+
+    /// [`Self::rebase`], but resuming from a *restored* incarnation
+    /// instead of an empty one: the warm-standby failover path
+    /// (`switch::snapshot`) promotes a switch whose dedup windows
+    /// already cover everything up to the installed checkpoint, so the
+    /// sender may treat `cum_seq` (the standby's cumulative sequence
+    /// for this stream) as already delivered and replay only the
+    /// suffix.  `cum_seq` is clamped to the highest sequence ever
+    /// opened — a checkpoint cannot cover packets never sent — which
+    /// also keeps window arithmetic safe against a corrupt value.
+    /// Congestion state still restarts from [`INIT_CWND`]: the path to
+    /// the standby is a different link with unknown capacity.
+    pub fn rebase_from(&mut self, epoch: u16, cum_seq: u32) {
         assert!(epoch > self.epoch, "rebase must advance the epoch");
+        let cum = cum_seq.min(self.next_new.saturating_sub(1));
         self.epoch = epoch;
-        self.cum_acked = 0;
-        self.next_new = 1;
+        self.cum_acked = cum;
+        self.next_new = cum + 1;
         self.inflight.clear();
         self.credit = self.window;
         self.failure = None;
@@ -979,5 +995,53 @@ mod tests {
         let rtt = RttEstimator::new(100e-6, 1e-5);
         let mut s = AdaptiveSender::adaptive(1, RelWindow::default(), rtt);
         s.rebase(0);
+    }
+
+    #[test]
+    fn rebase_from_replays_only_the_suffix() {
+        let rtt = RttEstimator::new(100e-6, 1e-5);
+        let mut s = AdaptiveSender::adaptive(10, RelWindow::default(), rtt).with_max_retries(1);
+        let first = apolled(&mut s, 0.0);
+        s.on_ack_epoch(0, first.len() as u32, u16::MAX, 50e-6);
+        let opened = s.sent();
+        assert!(opened >= first.len() as u32);
+        // Promotion onto a warm standby whose checkpoint covered the
+        // first 3 sequences: the sender resumes from seq 4 instead of
+        // replaying the whole stream.
+        s.rebase_from(1, 3);
+        assert_eq!(s.epoch(), 1);
+        assert_eq!(s.cum_acked(), 3);
+        assert_eq!(s.failure(), None);
+        let replay = apolled(&mut s, 1.0);
+        assert_eq!(replay[0], 4, "replay starts past the checkpoint");
+        // Old-epoch acks are fenced; new-epoch acks advance as usual.
+        s.on_ack_epoch(0, 10, u16::MAX, 1.1);
+        assert_eq!(s.cum_acked(), 3);
+        s.on_ack_epoch(1, 10, u16::MAX, 1.2);
+        assert!(s.done());
+    }
+
+    #[test]
+    fn rebase_from_clamps_to_opened_sequences() {
+        let rtt = RttEstimator::new(100e-6, 1e-5);
+        let mut s = AdaptiveSender::adaptive(100, RelWindow::default(), rtt);
+        let first = apolled(&mut s, 0.0);
+        let opened = first.len() as u32;
+        // A checkpoint cannot cover packets the sender never opened.
+        s.rebase_from(1, opened + 50);
+        assert_eq!(s.cum_acked(), opened);
+        let next = apolled(&mut s, 1.0);
+        assert_eq!(next[0], opened + 1);
+    }
+
+    #[test]
+    fn rebase_from_zero_matches_rebase() {
+        let rtt = RttEstimator::new(100e-6, 1e-5);
+        let mut s = AdaptiveSender::adaptive(10, RelWindow::default(), rtt);
+        apolled(&mut s, 0.0);
+        s.rebase_from(2, 0);
+        assert_eq!(s.cum_acked(), 0);
+        let replay = apolled(&mut s, 1.0);
+        assert_eq!(replay[0], 1, "full replay from seq 1");
     }
 }

@@ -9,6 +9,7 @@
 //! that "there is no penalty when cache miss happens".
 
 use super::clock::Cycles;
+use crate::util::codec::{self, SnapCursor, SnapshotError};
 use std::collections::VecDeque;
 
 #[derive(Clone, Debug)]
@@ -107,6 +108,38 @@ impl DramModel {
         self.next_issue = 0;
         self.issued = 0;
         self.stall_cycles = 0;
+    }
+
+    /// Serialize the controller's dynamic state (in-flight completion
+    /// times, rate-limit horizon, counters).  The static `DramConfig`
+    /// is not serialized — the restore target carries its own.
+    pub(crate) fn snapshot_write(&self, out: &mut Vec<u8>) {
+        codec::put_u64(out, self.next_issue);
+        codec::put_u64(out, self.issued);
+        codec::put_u64(out, self.stall_cycles);
+        codec::put_u64(out, self.inflight.len() as u64);
+        for &done in &self.inflight {
+            codec::put_u64(out, done);
+        }
+    }
+
+    /// Restore state written by [`Self::snapshot_write`] in place.
+    pub(crate) fn snapshot_read_into(
+        &mut self,
+        cur: &mut SnapCursor<'_>,
+    ) -> Result<(), SnapshotError> {
+        self.next_issue = cur.u64()?;
+        self.issued = cur.u64()?;
+        self.stall_cycles = cur.u64()?;
+        let n = cur.len()?;
+        if n > self.cfg.queue_depth {
+            return Err(SnapshotError::Invalid("in-flight beyond queue depth"));
+        }
+        self.inflight.clear();
+        for _ in 0..n {
+            self.inflight.push_back(cur.u64()?);
+        }
+        Ok(())
     }
 }
 

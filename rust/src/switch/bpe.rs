@@ -13,6 +13,7 @@ use crate::sim::clock::Cycles;
 use crate::sim::dram::DramModel;
 use crate::switch::config::{EvictionPolicy, StageDelays, SwitchConfig};
 use crate::switch::hash_table::{HashTable, LaneProbe, Probe, VectorEvictSink};
+use crate::util::codec::{self, SnapCursor, SnapshotError};
 
 /// What happened to a pair offered to the BPE.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -383,6 +384,57 @@ impl Bpe {
             }
         }
         false
+    }
+
+    /// Serialize the engine meta state — busy chain, counters, DRAM
+    /// controller — *without* the regions; the per-group region tables
+    /// are serialized as their own snapshot sections so incremental
+    /// checkpoints can ship only the regions that changed.
+    pub(crate) fn snapshot_write_meta(&self, out: &mut Vec<u8>) {
+        codec::put_u64(out, self.busy_until);
+        codec::put_u64(out, self.fifo_writes);
+        codec::put_u64(out, self.fifo_full_events);
+        codec::put_u64(out, self.fifo_peak);
+        codec::put_u64(out, self.aggregated);
+        codec::put_u64(out, self.inserted);
+        codec::put_u64(out, self.overflowed);
+        codec::put_u64(out, self.latency_cycles);
+        self.dram.snapshot_write(out);
+    }
+
+    /// Restore meta state written by [`Self::snapshot_write_meta`].
+    pub(crate) fn snapshot_read_meta(
+        &mut self,
+        cur: &mut SnapCursor<'_>,
+    ) -> Result<(), SnapshotError> {
+        self.busy_until = cur.u64()?;
+        self.fifo_writes = cur.u64()?;
+        self.fifo_full_events = cur.u64()?;
+        self.fifo_peak = cur.u64()?;
+        self.aggregated = cur.u64()?;
+        self.inserted = cur.u64()?;
+        self.overflowed = cur.u64()?;
+        self.latency_cycles = cur.u64()?;
+        self.dram.snapshot_read_into(cur)
+    }
+
+    /// Number of per-group DRAM regions (one snapshot section each).
+    pub(crate) fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// Serialize one region table (its own snapshot section).
+    pub(crate) fn snapshot_write_region(&self, group: usize, out: &mut Vec<u8>) {
+        self.regions[group].snapshot_write(out);
+    }
+
+    /// Restore one region table in place.
+    pub(crate) fn snapshot_read_region(
+        &mut self,
+        group: usize,
+        cur: &mut SnapCursor<'_>,
+    ) -> Result<(), SnapshotError> {
+        self.regions[group].snapshot_read_into(cur)
     }
 }
 

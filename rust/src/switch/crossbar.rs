@@ -7,6 +7,7 @@
 //! FIFO pressure comes from.
 
 use crate::sim::Cycles;
+use crate::util::codec::{self, SnapCursor, SnapshotError};
 
 /// Per-output-port serialization state.
 #[derive(Clone, Debug)]
@@ -71,6 +72,31 @@ impl Crossbar {
         self.next_free[out] = view.next_free;
         self.transfers += view.transfers;
         self.contended += view.contended;
+    }
+
+    /// Serialize the per-output serialization state and counters (the
+    /// latency is static configuration and not serialized).
+    pub(crate) fn snapshot_write(&self, out: &mut Vec<u8>) {
+        codec::put_u64(out, self.transfers);
+        codec::put_u64(out, self.contended);
+        for &nf in &self.next_free {
+            codec::put_u64(out, nf);
+        }
+    }
+
+    /// Restore state written by [`Self::snapshot_write`] in place; the
+    /// output count is fixed by construction, so no length rides the
+    /// wire.
+    pub(crate) fn snapshot_read_into(
+        &mut self,
+        cur: &mut SnapCursor<'_>,
+    ) -> Result<(), SnapshotError> {
+        self.transfers = cur.u64()?;
+        self.contended = cur.u64()?;
+        for nf in &mut self.next_free {
+            *nf = cur.u64()?;
+        }
+        Ok(())
     }
 }
 

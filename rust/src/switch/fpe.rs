@@ -15,6 +15,7 @@ use crate::protocol::{AggOp, Key, Value};
 use crate::sim::Cycles;
 use crate::switch::config::{EvictionPolicy, StageDelays};
 use crate::switch::hash_table::{HashTable, LaneProbe, Probe, VectorEvictSink};
+use crate::util::codec::{self, SnapCursor, SnapshotError};
 
 /// What happened to an offered pair.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -275,6 +276,39 @@ impl Fpe {
     /// bypassing the audit digest; `false` if the table was empty.
     pub fn poison_bit(&mut self, seed: u64) -> bool {
         self.table.poison_bit(seed)
+    }
+
+    /// Serialize the engine's full pipeline state: the busy chain (so
+    /// restored FIFO backpressure timing is identical), the Table 2/3
+    /// counters, and the SRAM table.  Static configuration (interval,
+    /// delays, eviction policy, fifo_cap) is NOT serialized — the
+    /// restore target is built from the same `TreeConfig`.
+    pub(crate) fn snapshot_write(&self, out: &mut Vec<u8>) {
+        codec::put_u64(out, self.busy_until);
+        codec::put_u64(out, self.fifo_writes);
+        codec::put_u64(out, self.fifo_full_events);
+        codec::put_u64(out, self.fifo_peak);
+        codec::put_u64(out, self.aggregated);
+        codec::put_u64(out, self.inserted);
+        codec::put_u64(out, self.evicted);
+        codec::put_u64(out, self.latency_cycles);
+        self.table.snapshot_write(out);
+    }
+
+    /// Restore state written by [`Self::snapshot_write`] in place.
+    pub(crate) fn snapshot_read_into(
+        &mut self,
+        cur: &mut SnapCursor<'_>,
+    ) -> Result<(), SnapshotError> {
+        self.busy_until = cur.u64()?;
+        self.fifo_writes = cur.u64()?;
+        self.fifo_full_events = cur.u64()?;
+        self.fifo_peak = cur.u64()?;
+        self.aggregated = cur.u64()?;
+        self.inserted = cur.u64()?;
+        self.evicted = cur.u64()?;
+        self.latency_cycles = cur.u64()?;
+        self.table.snapshot_read_into(cur)
     }
 }
 

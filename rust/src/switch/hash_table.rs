@@ -55,6 +55,7 @@
 use crate::protocol::vector::VectorBatch;
 use crate::protocol::{AggOp, Key, KvPair, Value};
 use crate::switch::hash::fnv1a_key;
+use crate::util::codec::{self, SnapCursor, SnapshotError};
 use crate::util::fxhash::FxHashMap;
 
 /// On-wire/in-slot value width (the paper fixes values to 32 bits).
@@ -783,6 +784,175 @@ impl HashTable {
         false
     }
 
+    /// Serialize the table's full functional state: geometry header,
+    /// counters, audit digest, then each occupied bucket's live slot
+    /// prefix in canonical memory order (dense: every block; sparse:
+    /// bucket-id-sorted entries, re-insertable in order so block
+    /// indices re-derive from insertion order).  Slots past a bucket's
+    /// `len` are never serialized — they are never read before being
+    /// overwritten, so the live prefix *is* the table state.
+    pub(crate) fn snapshot_write(&self, out: &mut Vec<u8>) {
+        codec::put_u32(out, self.slot_key_width as u32);
+        codec::put_u32(out, self.slots_per_bucket as u32);
+        codec::put_u64(out, self.buckets as u64);
+        codec::put_u32(out, self.blocks.lanes as u32);
+        codec::put_u64(out, self.occupancy as u64);
+        codec::put_u64(out, self.lookups);
+        codec::put_u64(out, self.evictions);
+        codec::put_u64(out, self.combines);
+        codec::put_u64(out, self.saturated);
+        codec::put_u64(out, self.audit_acc);
+        match &self.map {
+            Mapping::Dense => {
+                codec::put_u8(out, 0);
+                for blk in 0..self.blocks.lens.len() {
+                    Self::snapshot_write_block(out, &self.blocks, blk);
+                }
+            }
+            Mapping::Sparse(m) => {
+                codec::put_u8(out, 1);
+                let mut ids: Vec<(u32, u32)> = m.iter().map(|(&b, &blk)| (b, blk)).collect();
+                ids.sort_unstable();
+                codec::put_u64(out, ids.len() as u64);
+                for (b, blk) in ids {
+                    codec::put_u32(out, b);
+                    Self::snapshot_write_block(out, &self.blocks, blk as usize);
+                }
+            }
+        }
+    }
+
+    fn snapshot_write_block(out: &mut Vec<u8>, blocks: &SoaBlocks, blk: usize) {
+        let spb = blocks.spb;
+        let w = blocks.lanes;
+        let len = blocks.lens[blk] as usize;
+        codec::put_u8(out, blocks.lens[blk]);
+        codec::put_u8(out, blocks.cursors[blk]);
+        let base = blk * spb;
+        for i in 0..len {
+            codec::put_u32(out, blocks.tags[base + i]);
+            let k = &blocks.keys[base + i];
+            codec::put_u8(out, k.len() as u8);
+            out.extend_from_slice(k.as_bytes());
+            for l in 0..w {
+                codec::put_i64(out, blocks.vals[(base + i) * w + l]);
+            }
+        }
+    }
+
+    fn snapshot_read_block(
+        cur: &mut SnapCursor<'_>,
+        blocks: &mut SoaBlocks,
+        blk: usize,
+        width: usize,
+    ) -> Result<usize, SnapshotError> {
+        let spb = blocks.spb;
+        let w = blocks.lanes;
+        let len = cur.u8()? as usize;
+        if len > spb {
+            return Err(SnapshotError::Invalid("bucket len beyond slots_per_bucket"));
+        }
+        let cursor = cur.u8()?;
+        if cursor as usize >= spb {
+            return Err(SnapshotError::Invalid("eviction cursor beyond bucket"));
+        }
+        blocks.lens[blk] = len as u8;
+        blocks.cursors[blk] = cursor;
+        let base = blk * spb;
+        for i in 0..len {
+            let tag = cur.u32()?;
+            let klen = cur.u8()? as usize;
+            if klen > width {
+                return Err(SnapshotError::Invalid("key longer than slot width"));
+            }
+            let key = Key::try_new(cur.bytes(klen)?)
+                .ok_or(SnapshotError::Invalid("key length out of range"))?;
+            blocks.tags[base + i] = tag;
+            blocks.keys[base + i] = key;
+            for l in 0..w {
+                blocks.vals[(base + i) * w + l] = cur.i64()?;
+            }
+        }
+        Ok(len)
+    }
+
+    /// Restore state serialized by [`Self::snapshot_write`] *in place*:
+    /// the target must already have the identical geometry (the restore
+    /// flow builds it from the same `TreeConfig` + memory shares), so
+    /// no allocation-by-attacker is possible — dense storage is
+    /// pre-sized and sparse blocks grow one bucket at a time, bounded
+    /// by the bucket count.  Every length field is validated before
+    /// use; malformed bytes yield a typed error, never a panic.
+    pub(crate) fn snapshot_read_into(
+        &mut self,
+        cur: &mut SnapCursor<'_>,
+    ) -> Result<(), SnapshotError> {
+        if cur.u32()? as usize != self.slot_key_width {
+            return Err(SnapshotError::Geometry("slot key width"));
+        }
+        if cur.u32()? as usize != self.slots_per_bucket {
+            return Err(SnapshotError::Geometry("slots per bucket"));
+        }
+        if cur.u64()? != self.buckets as u64 {
+            return Err(SnapshotError::Geometry("bucket count"));
+        }
+        if cur.u32()? as usize != self.blocks.lanes {
+            return Err(SnapshotError::Geometry("lane width"));
+        }
+        let occupancy = cur.len()?;
+        let lookups = cur.u64()?;
+        let evictions = cur.u64()?;
+        let combines = cur.u64()?;
+        let saturated = cur.u64()?;
+        let audit_acc = cur.u64()?;
+        let kind = cur.u8()?;
+        let width = self.slot_key_width;
+        let mut live = 0usize;
+        match (&mut self.map, kind) {
+            (Mapping::Dense, 0) => {
+                for blk in 0..self.blocks.lens.len() {
+                    live += Self::snapshot_read_block(cur, &mut self.blocks, blk, width)?;
+                }
+            }
+            (Mapping::Sparse(m), 1) => {
+                let count = cur.len()?;
+                if count > self.buckets {
+                    return Err(SnapshotError::Invalid("more entries than buckets"));
+                }
+                m.clear();
+                self.blocks.clear();
+                let mut prev: Option<u32> = None;
+                for _ in 0..count {
+                    let b = cur.u32()?;
+                    if b as u64 >= self.buckets as u64 {
+                        return Err(SnapshotError::Invalid("bucket id out of range"));
+                    }
+                    if prev.is_some_and(|p| p >= b) {
+                        return Err(SnapshotError::Invalid("bucket ids not strictly increasing"));
+                    }
+                    prev = Some(b);
+                    let blk = self.blocks.push_block();
+                    m.insert(b, blk as u32);
+                    live += Self::snapshot_read_block(cur, &mut self.blocks, blk, width)?;
+                }
+            }
+            _ => return Err(SnapshotError::Geometry("storage mapping")),
+        }
+        if live != occupancy {
+            return Err(SnapshotError::Invalid("occupancy does not match live slots"));
+        }
+        self.occupancy = occupancy;
+        self.lookups = lookups;
+        self.evictions = evictions;
+        self.combines = combines;
+        self.saturated = saturated;
+        // Restored verbatim, NOT recomputed: a table poisoned by an
+        // SRAM flip before the snapshot must still fail `audit()` after
+        // restore — the digest is state, not a checksum of the wire.
+        self.audit_acc = audit_acc;
+        Ok(())
+    }
+
     /// Iterate resident pairs without draining (arbitrary order).
     pub fn iter(&self) -> impl Iterator<Item = (&Key, Value)> + '_ {
         debug_assert_eq!(self.blocks.lanes, 1, "scalar iter on a W-lane table");
@@ -1340,6 +1510,99 @@ mod tests {
         m.offer(km, Value::MAX, AggOp::Max, true);
         m.offer(km, Value::MIN, AggOp::Max, true);
         assert_eq!(m.saturated, 0);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_continues_byte_identically() {
+        // Ingest a prefix, snapshot, restore into a fresh same-geometry
+        // table, then drive both through the same suffix: outcomes,
+        // drained state, counters and digest must all match.
+        let mut a = table(32, 16, 2);
+        for id in 0..300u64 {
+            a.offer(Key::from_id(id % 53, 16), (id % 11) as Value - 5, AggOp::Sum, true);
+        }
+        let mut bytes = Vec::new();
+        a.snapshot_write(&mut bytes);
+        let mut b = table(32, 16, 2);
+        let mut cur = SnapCursor::new(&bytes);
+        b.snapshot_read_into(&mut cur).unwrap();
+        cur.finish().unwrap();
+        assert_eq!(a.occupancy(), b.occupancy());
+        assert_eq!(a.audit_acc(), b.audit_acc());
+        b.audit().unwrap();
+        for id in 300..600u64 {
+            let k = Key::from_id(id % 53, 16);
+            let v = (id % 11) as Value - 5;
+            assert_eq!(
+                a.offer(k, v, AggOp::Sum, true),
+                b.offer(k, v, AggOp::Sum, true),
+                "post-restore outcome diverged at id {id}"
+            );
+        }
+        assert_eq!(
+            (a.lookups, a.evictions, a.combines, a.saturated),
+            (b.lookups, b.evictions, b.combines, b.saturated)
+        );
+        assert_eq!(a.drain(), b.drain());
+    }
+
+    #[test]
+    fn snapshot_roundtrip_sparse_wide() {
+        let mut a = HashTable::with_memory_lanes(1 << 30, 64, 4, 8);
+        assert!(matches!(a.map, Mapping::Sparse(_)));
+        let mut sink = VectorEvictSink::new();
+        for id in 0..400u64 {
+            let lanes: Vec<Value> = (0..8).map(|l| (id % 13) as i64 - l).collect();
+            a.offer_lanes(Key::from_id(id, 64), &lanes, AggOp::Sum, true, &mut sink);
+        }
+        let mut bytes = Vec::new();
+        a.snapshot_write(&mut bytes);
+        let mut b = HashTable::with_memory_lanes(1 << 30, 64, 4, 8);
+        b.snapshot_read_into(&mut SnapCursor::new(&bytes)).unwrap();
+        b.audit().unwrap();
+        for id in 0..400u64 {
+            let k = Key::from_id(id, 64);
+            assert_eq!(a.get_lanes(&k), b.get_lanes(&k));
+        }
+        let (mut ka, mut va, mut kb, mut vb) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        a.drain_lanes_into(&mut ka, &mut va);
+        b.drain_lanes_into(&mut kb, &mut vb);
+        assert_eq!((ka, va), (kb, vb));
+    }
+
+    #[test]
+    fn snapshot_geometry_mismatch_is_typed() {
+        let mut a = table(32, 16, 2);
+        a.offer(Key::from_id(1, 16), 1, AggOp::Sum, true);
+        let mut bytes = Vec::new();
+        a.snapshot_write(&mut bytes);
+        let mut wrong = table(32, 24, 2);
+        assert!(matches!(
+            wrong.snapshot_read_into(&mut SnapCursor::new(&bytes)),
+            Err(SnapshotError::Geometry(_))
+        ));
+    }
+
+    #[test]
+    fn snapshot_decode_survives_truncation_and_flips() {
+        let mut a = table(8, 16, 2);
+        for id in 0..60u64 {
+            a.offer(Key::from_id(id % 23, 16), id as Value, AggOp::Sum, true);
+        }
+        let mut bytes = Vec::new();
+        a.snapshot_write(&mut bytes);
+        for cut in 0..bytes.len() {
+            let mut b = table(8, 16, 2);
+            let mut cur = SnapCursor::new(&bytes[..cut]);
+            let _ = b.snapshot_read_into(&mut cur); // must not panic
+        }
+        for i in (0..bytes.len()).step_by(7) {
+            let mut flipped = bytes.clone();
+            flipped[i] ^= 0x80;
+            let mut b = table(8, 16, 2);
+            let mut cur = SnapCursor::new(&flipped);
+            let _ = b.snapshot_read_into(&mut cur); // must not panic
+        }
     }
 
     #[test]

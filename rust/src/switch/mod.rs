@@ -30,6 +30,7 @@ pub mod parallel;
 pub mod payload_analyzer;
 pub mod reliability;
 pub mod scheduler;
+pub mod snapshot;
 pub mod switch_sim;
 pub mod tenant;
 
@@ -40,6 +41,7 @@ pub use parallel::Parallelism;
 pub use payload_analyzer::GroupMap;
 pub use reliability::{backpressure_credit, Admit, CreditPolicy, DedupStats, DedupWindow};
 pub use scheduler::{GrantPolicy, WeightedGrants};
+pub use snapshot::{SnapshotDelta, SwitchSnapshot};
 pub use switch_sim::{
     vector_sink_to_batch, IngestOutput, IngestSink, SwitchAggSwitch, SwitchStats, VectorSink,
 };

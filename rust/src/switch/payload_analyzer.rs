@@ -7,6 +7,7 @@
 //! hash slots are 8·(g+1) bytes wide.
 
 use crate::protocol::{KvPair, MAX_KEY_LEN};
+use crate::util::codec::{self, SnapCursor, SnapshotError};
 
 /// Key-length → group mapping.
 #[derive(Clone, Copy, Debug)]
@@ -92,6 +93,28 @@ impl PayloadAnalyzer {
     /// Analyze a whole packet's pairs in arrival order.
     pub fn analyze(&mut self, pairs: &[KvPair]) -> Vec<(usize, KvPair)> {
         pairs.iter().map(|p| (self.classify(p), *p)).collect()
+    }
+
+    /// Serialize the per-group counters (the group map is static
+    /// configuration and not serialized).
+    pub(crate) fn snapshot_write(&self, out: &mut Vec<u8>) {
+        codec::put_u64(out, self.bytes_in);
+        for &n in &self.pairs_per_group {
+            codec::put_u64(out, n);
+        }
+    }
+
+    /// Restore state written by [`Self::snapshot_write`] in place; the
+    /// group count is fixed by construction.
+    pub(crate) fn snapshot_read_into(
+        &mut self,
+        cur: &mut SnapCursor<'_>,
+    ) -> Result<(), SnapshotError> {
+        self.bytes_in = cur.u64()?;
+        for n in &mut self.pairs_per_group {
+            *n = cur.u64()?;
+        }
+        Ok(())
     }
 }
 

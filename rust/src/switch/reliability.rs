@@ -22,6 +22,7 @@
 //! this child's pairs have been admitted".
 
 use crate::protocol::RelWindow;
+use crate::util::codec::{self, SnapCursor, SnapshotError};
 
 /// How the switch fills the credit field of its acks.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -189,6 +190,75 @@ impl DedupWindow {
             stale_epoch_drops: 0,
             corrupt_drops: 0,
         }
+    }
+
+    /// Serialize the window's full state: cum counter, bitmap residue,
+    /// deferred EoT, and counters.  This is what makes failover's
+    /// bounded replay automatic — a restored window natively dedups the
+    /// pre-checkpoint prefix and re-acks it, so senders only replay
+    /// their unacked residue, never from seq 1.
+    pub(crate) fn snapshot_write(&self, out: &mut Vec<u8>) {
+        codec::put_u32(out, self.window);
+        codec::put_u32(out, self.cum);
+        match self.eot_seq {
+            Some(e) => {
+                codec::put_u8(out, 1);
+                codec::put_u32(out, e);
+            }
+            None => codec::put_u8(out, 0),
+        }
+        codec::put_u64(out, self.admitted);
+        codec::put_u64(out, self.dup_drops);
+        codec::put_u64(out, self.out_of_window);
+        codec::put_u32(out, self.bits.len() as u32);
+        for &b in &self.bits {
+            codec::put_u8(out, b as u8);
+        }
+    }
+
+    /// Decode a window written by [`Self::snapshot_write`].  The bitmap
+    /// is rebuilt bit by bit (no length-driven pre-reserve) and its
+    /// residue is validated against the declared window.
+    pub(crate) fn snapshot_read(cur: &mut SnapCursor<'_>) -> Result<Self, SnapshotError> {
+        let window = cur.u32()?;
+        if window == 0 {
+            return Err(SnapshotError::Invalid("zero dedup window"));
+        }
+        let cum = cur.u32()?;
+        let eot_seq = match cur.u8()? {
+            0 => None,
+            1 => Some(cur.u32()?),
+            _ => return Err(SnapshotError::Invalid("bad EoT flag")),
+        };
+        let admitted = cur.u64()?;
+        let dup_drops = cur.u64()?;
+        let out_of_window = cur.u64()?;
+        let nbits = cur.u32()?;
+        if nbits > window {
+            return Err(SnapshotError::Invalid("bitmap residue beyond window"));
+        }
+        let mut bits = std::collections::VecDeque::new();
+        for _ in 0..nbits {
+            match cur.u8()? {
+                0 => bits.push_back(false),
+                1 => bits.push_back(true),
+                _ => return Err(SnapshotError::Invalid("bad bitmap bit")),
+            }
+        }
+        Ok(Self {
+            cum,
+            window,
+            bits,
+            eot_seq,
+            admitted,
+            dup_drops,
+            out_of_window,
+        })
+    }
+
+    /// The configured window size (for restore-time geometry checks).
+    pub(crate) fn window_size(&self) -> u32 {
+        self.window
     }
 }
 

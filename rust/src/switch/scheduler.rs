@@ -68,6 +68,29 @@ impl Scheduler {
     pub fn policy(&self) -> SchedPolicy {
         self.policy
     }
+
+    /// Serialize the arbitration state (policy and queue count are
+    /// static configuration and not serialized).
+    pub(crate) fn snapshot_write(&self, out: &mut Vec<u8>) {
+        crate::util::codec::put_u64(out, self.cursor as u64);
+        crate::util::codec::put_u64(out, self.grants);
+    }
+
+    /// Restore state written by [`Self::snapshot_write`] in place.
+    pub(crate) fn snapshot_read_into(
+        &mut self,
+        cur: &mut crate::util::codec::SnapCursor<'_>,
+    ) -> Result<(), crate::util::codec::SnapshotError> {
+        let cursor = cur.len()?;
+        if cursor >= self.n {
+            return Err(crate::util::codec::SnapshotError::Invalid(
+                "scheduler cursor beyond queue count",
+            ));
+        }
+        self.cursor = cursor;
+        self.grants = cur.u64()?;
+        Ok(())
+    }
 }
 
 /// How ingress credit grants are split among concurrently busy trees.

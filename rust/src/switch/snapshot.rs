@@ -1,0 +1,518 @@
+//! Deterministic switch-state snapshots — the substrate of warm-standby
+//! failover (checkpointed replication + promotion).
+//!
+//! A [`SwitchSnapshot`] holds one tree's complete aggregation state as
+//! a set of independently-encoded *sections*: engine core, each FPE
+//! hash table, BPE meta + each DRAM region, dedup windows, and the
+//! tree/tenant metadata.  Sectioning is what makes checkpoints
+//! *incremental*: [`SnapshotDelta::between`] ships only the sections
+//! whose bytes changed since the previous checkpoint, and the standby
+//! patches its copy with [`SnapshotDelta::apply`] — guarded by a base
+//! index so a delta can never be applied to the wrong base.
+//!
+//! The wire format is hostile-input safe end to end: every decode path
+//! is bounds-checked through [`SnapCursor`], returns typed
+//! [`SnapshotError`]s (never panics), and never allocates from an
+//! unvalidated length (see `tests::decode_survives_fuzz`).  Snapshots
+//! are byte-deterministic — the same switch state always serializes to
+//! the same bytes (sections are id-sorted, sparse tables bucket-sorted)
+//! — so "did anything change" is a byte comparison, which is exactly
+//! what the delta builder does.
+
+use crate::protocol::AggOp;
+use crate::util::codec::{self, SnapCursor, SnapshotError};
+use std::collections::BTreeMap;
+
+/// Section ids.  Fixed ids 1–4 hold singleton state; per-memory-region
+/// sections live at a base offset + group index so an incremental
+/// checkpoint can address one FPE table or one BPE DRAM region alone.
+pub const SEC_META: u32 = 1;
+pub const SEC_ENGINE: u32 = 2;
+pub const SEC_DEDUP: u32 = 3;
+pub const SEC_BPE_META: u32 = 4;
+pub const SEC_FPE_BASE: u32 = 0x100;
+pub const SEC_BPE_REGION_BASE: u32 = 0x200;
+
+const SNAP_MAGIC: u32 = 0x5357_4147; // "SWAG"
+const DELTA_MAGIC: u32 = 0x5357_4144; // "SWAD"
+const VERSION: u16 = 1;
+
+/// Wire encoding of [`AggOp`] inside the META section.
+pub(crate) fn op_code(op: AggOp) -> u8 {
+    match op {
+        AggOp::Sum => 0,
+        AggOp::Max => 1,
+        AggOp::Min => 2,
+    }
+}
+
+pub(crate) fn op_from_code(code: u8) -> Option<AggOp> {
+    match code {
+        0 => Some(AggOp::Sum),
+        1 => Some(AggOp::Max),
+        2 => Some(AggOp::Min),
+        _ => None,
+    }
+}
+
+/// One tree's complete, deterministic aggregation-state image.
+///
+/// Build with [`crate::switch::SwitchAggSwitch::snapshot_tree`],
+/// install with [`crate::switch::SwitchAggSwitch::restore_tree`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SwitchSnapshot {
+    sections: BTreeMap<u32, Vec<u8>>,
+}
+
+impl SwitchSnapshot {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install (or replace) one section's bytes.
+    pub(crate) fn insert(&mut self, id: u32, bytes: Vec<u8>) {
+        self.sections.insert(id, bytes);
+    }
+
+    pub fn section(&self, id: u32) -> Option<&[u8]> {
+        self.sections.get(&id).map(|b| b.as_slice())
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = u32> + '_ {
+        self.sections.keys().copied()
+    }
+
+    pub fn n_sections(&self) -> usize {
+        self.sections.len()
+    }
+
+    /// Total serialized size in bytes (what a full checkpoint ships).
+    pub fn encoded_len(&self) -> usize {
+        // magic + version + count, then per section: id + len + bytes.
+        10 + self
+            .sections
+            .values()
+            .map(|b| 12 + b.len())
+            .sum::<usize>()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        codec::put_u32(&mut out, SNAP_MAGIC);
+        codec::put_u16(&mut out, VERSION);
+        codec::put_u32(&mut out, self.sections.len() as u32);
+        for (&id, bytes) in &self.sections {
+            codec::put_u32(&mut out, id);
+            codec::put_u64(&mut out, bytes.len() as u64);
+            out.extend_from_slice(bytes);
+        }
+        out
+    }
+
+    /// Decode a serialized snapshot.  Structural validation only — the
+    /// section *contents* are validated against the restore target's
+    /// geometry by `restore_tree` (the container cannot know it).
+    /// Hostile input yields typed errors: truncation at any offset,
+    /// bad magic/version, non-canonical section order, or trailing
+    /// bytes all fail cleanly without panics or unbounded allocation.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self, SnapshotError> {
+        let mut cur = SnapCursor::new(buf);
+        if cur.u32()? != SNAP_MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        let version = cur.u16()?;
+        if version != VERSION {
+            return Err(SnapshotError::BadVersion(version));
+        }
+        let n = cur.u32()?;
+        let mut sections = BTreeMap::new();
+        let mut last: Option<u32> = None;
+        for _ in 0..n {
+            let id = cur.u32()?;
+            if last.is_some_and(|l| id <= l) {
+                return Err(SnapshotError::Invalid("sections not strictly increasing"));
+            }
+            last = Some(id);
+            let len = cur.len()?;
+            // `bytes` bounds-checks `len` against the remaining input
+            // before we copy, so a hostile length cannot over-allocate.
+            sections.insert(id, cur.bytes(len)?.to_vec());
+        }
+        cur.finish()?;
+        Ok(Self { sections })
+    }
+}
+
+/// The difference between two consecutive checkpoints of one tree:
+/// only the sections whose bytes changed, plus any that disappeared.
+/// `base_index` names the checkpoint this delta patches — applying it
+/// to any other base is a hard error, because a patched-together
+/// snapshot would silently diverge from the primary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SnapshotDelta {
+    base_index: u64,
+    sections: BTreeMap<u32, Vec<u8>>,
+    removed: Vec<u32>,
+}
+
+impl SnapshotDelta {
+    /// Diff `next` against `prev` (the checkpoint numbered
+    /// `base_index`).  Byte-equal sections are skipped — determinism of
+    /// the snapshot encoding is what makes this sound.
+    pub fn between(base_index: u64, prev: &SwitchSnapshot, next: &SwitchSnapshot) -> Self {
+        let mut sections = BTreeMap::new();
+        for (&id, bytes) in &next.sections {
+            if prev.sections.get(&id) != Some(bytes) {
+                sections.insert(id, bytes.clone());
+            }
+        }
+        let removed: Vec<u32> = prev
+            .sections
+            .keys()
+            .filter(|id| !next.sections.contains_key(id))
+            .copied()
+            .collect();
+        Self {
+            base_index,
+            sections,
+            removed,
+        }
+    }
+
+    pub fn base_index(&self) -> u64 {
+        self.base_index
+    }
+
+    /// Number of changed/new sections this delta carries.
+    pub fn n_changed(&self) -> usize {
+        self.sections.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sections.is_empty() && self.removed.is_empty()
+    }
+
+    /// Patch `base` (which must be checkpoint `base_index` — verified
+    /// by the caller via [`Self::base_index`]) into the next full
+    /// snapshot.
+    pub fn apply(&self, base: &SwitchSnapshot) -> SwitchSnapshot {
+        let mut out = base.clone();
+        for id in &self.removed {
+            out.sections.remove(id);
+        }
+        for (&id, bytes) in &self.sections {
+            out.sections.insert(id, bytes.clone());
+        }
+        out
+    }
+
+    /// Total serialized size in bytes (what an incremental checkpoint
+    /// ships instead of [`SwitchSnapshot::encoded_len`]).
+    pub fn encoded_len(&self) -> usize {
+        10 + 8 + 4
+            + self.removed.len() * 4
+            + self
+                .sections
+                .values()
+                .map(|b| 12 + b.len())
+                .sum::<usize>()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        codec::put_u32(&mut out, DELTA_MAGIC);
+        codec::put_u16(&mut out, VERSION);
+        codec::put_u64(&mut out, self.base_index);
+        codec::put_u32(&mut out, self.removed.len() as u32);
+        for &id in &self.removed {
+            codec::put_u32(&mut out, id);
+        }
+        codec::put_u32(&mut out, self.sections.len() as u32);
+        for (&id, bytes) in &self.sections {
+            codec::put_u32(&mut out, id);
+            codec::put_u64(&mut out, bytes.len() as u64);
+            out.extend_from_slice(bytes);
+        }
+        out
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Self, SnapshotError> {
+        let mut cur = SnapCursor::new(buf);
+        if cur.u32()? != DELTA_MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        let version = cur.u16()?;
+        if version != VERSION {
+            return Err(SnapshotError::BadVersion(version));
+        }
+        let base_index = cur.u64()?;
+        let n_removed = cur.u32()? as usize;
+        let mut removed =
+            Vec::with_capacity(codec::clamped_capacity(n_removed, cur.remaining(), 4));
+        let mut last: Option<u32> = None;
+        for _ in 0..n_removed {
+            let id = cur.u32()?;
+            if last.is_some_and(|l| id <= l) {
+                return Err(SnapshotError::Invalid("removed ids not strictly increasing"));
+            }
+            last = Some(id);
+            removed.push(id);
+        }
+        let n = cur.u32()?;
+        let mut sections = BTreeMap::new();
+        let mut last: Option<u32> = None;
+        for _ in 0..n {
+            let id = cur.u32()?;
+            if last.is_some_and(|l| id <= l) {
+                return Err(SnapshotError::Invalid("sections not strictly increasing"));
+            }
+            last = Some(id);
+            let len = cur.len()?;
+            sections.insert(id, cur.bytes(len)?.to_vec());
+        }
+        cur.finish()?;
+        Ok(Self {
+            base_index,
+            sections,
+            removed,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{AggOp, AggregationPacket, Key, KvPair, TreeConfig, TreeId, Value};
+    use crate::switch::config::SwitchConfig;
+    use crate::switch::switch_sim::{IngestSink, SwitchAggSwitch};
+    use crate::util::rng::Pcg32;
+
+    fn configured(children: u16) -> SwitchAggSwitch {
+        let mut sw = SwitchAggSwitch::new(SwitchConfig::scaled(16 << 10, Some(256 << 10)));
+        sw.configure(&[TreeConfig {
+            tree: TreeId(1),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        sw
+    }
+
+    fn pairs(n: usize, distinct: u64, seed: u64) -> Vec<KvPair> {
+        let mut rng = Pcg32::new(seed);
+        (0..n)
+            .map(|_| {
+                let id = rng.gen_range_u64(distinct);
+                KvPair::new(Key::from_id(id, 16 + (id % 49) as usize), 1)
+            })
+            .collect()
+    }
+
+    fn rel_pkt(tree: TreeId, child: u16, seq: u32, pairs: Vec<KvPair>, eot: bool) -> AggregationPacket {
+        AggregationPacket {
+            tree,
+            op: AggOp::Sum,
+            eot,
+            rel: Some(crate::protocol::RelHeader {
+                child,
+                epoch: 0,
+                seq,
+            }),
+            pairs,
+        }
+    }
+
+    /// A mid-job switch with engine state, dedup windows, and stats.
+    fn warm_switch() -> SwitchAggSwitch {
+        let mut sw = configured(2);
+        let mut sink = IngestSink::new();
+        for (c, seed) in [(0u16, 5u64), (1, 6)] {
+            for (i, chunk) in pairs(600, 150, seed).chunks(40).enumerate() {
+                let pkt = rel_pkt(TreeId(1), c, i as u32 + 1, chunk.to_vec(), false);
+                sw.ingest_reliable_one(TreeId(1), &pkt, &mut sink);
+            }
+        }
+        sw
+    }
+
+    #[test]
+    fn container_roundtrip_is_byte_exact() {
+        let sw = warm_switch();
+        let snap = sw.snapshot_tree(TreeId(1)).unwrap();
+        assert!(snap.n_sections() >= 4, "expected META/ENGINE/DEDUP/FPE sections");
+        let bytes = snap.to_bytes();
+        assert_eq!(bytes.len(), snap.encoded_len());
+        let back = SwitchSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back, snap);
+        // Determinism: re-snapshotting unchanged state is byte-equal.
+        assert_eq!(sw.snapshot_tree(TreeId(1)).unwrap().to_bytes(), bytes);
+    }
+
+    #[test]
+    fn restore_continues_ingest_byte_identically() {
+        let mut primary = warm_switch();
+        let snap = primary.snapshot_tree(TreeId(1)).unwrap();
+
+        // Standby: same static config, fresh state, then restore.
+        let mut standby = configured(2);
+        let tree = standby.restore_tree(&snap).unwrap();
+        assert_eq!(tree, TreeId(1));
+
+        // Both switches now run the identical suffix to completion.
+        let mut sink_p = IngestSink::new();
+        let mut sink_s = IngestSink::new();
+        for (c, seed) in [(0u16, 25u64), (1, 26)] {
+            let suffix = pairs(300, 150, seed);
+            for (i, chunk) in suffix.chunks(40).enumerate() {
+                let last = (i + 1) * 40 >= suffix.len();
+                let pkt = rel_pkt(TreeId(1), c, 16 + i as u32, chunk.to_vec(), last);
+                let ack_p = primary.ingest_reliable_one(TreeId(1), &pkt, &mut sink_p);
+                let ack_s = standby.ingest_reliable_one(TreeId(1), &pkt, &mut sink_s);
+                assert_eq!(ack_p, ack_s, "acks diverged at child {c} pkt {i}");
+            }
+        }
+        assert_eq!(sink_p.flushes, 1);
+        assert_eq!(sink_s.flushes, sink_p.flushes);
+        assert_eq!(sink_s.forwarded, sink_p.forwarded);
+        assert_eq!(sink_s.flushed, sink_p.flushed);
+        primary.finalize(TreeId(1));
+        standby.finalize(TreeId(1));
+        assert_eq!(
+            format!("{:?}", standby.stats(TreeId(1)).unwrap()),
+            format!("{:?}", primary.stats(TreeId(1)).unwrap())
+        );
+        assert_eq!(standby.dedup_stats(TreeId(1)), primary.dedup_stats(TreeId(1)));
+    }
+
+    #[test]
+    fn restore_replays_retransmissions_as_duplicates() {
+        // Bounded replay: packets the primary had already admitted are
+        // re-offered to the restored standby (the sender cannot know
+        // the checkpoint boundary) and must dedup, not double-count.
+        let mut primary = configured(1);
+        let stream = pairs(400, 90, 11);
+        let mut sink = IngestSink::new();
+        let chunks: Vec<&[KvPair]> = stream.chunks(40).collect();
+        for (i, chunk) in chunks.iter().enumerate().take(6) {
+            let pkt = rel_pkt(TreeId(1), 0, i as u32 + 1, chunk.to_vec(), false);
+            primary.ingest_reliable_one(TreeId(1), &pkt, &mut sink);
+        }
+        let snap = primary.snapshot_tree(TreeId(1)).unwrap();
+
+        let mut standby = configured(1);
+        standby.restore_tree(&snap).unwrap();
+        assert_eq!(standby.dedup_cum(TreeId(1), 0), 6);
+        let mut sink_s = IngestSink::new();
+        // Replay from seq 3 (inside the admitted prefix) to the end.
+        for (i, chunk) in chunks.iter().enumerate().skip(2) {
+            let last = i + 1 == chunks.len();
+            let pkt = rel_pkt(TreeId(1), 0, i as u32 + 1, chunk.to_vec(), last);
+            standby.ingest_reliable_one(TreeId(1), &pkt, &mut sink_s);
+        }
+        assert_eq!(sink_s.flushes, 1);
+        let d = standby.dedup_stats(TreeId(1));
+        assert_eq!(d.dup_drops, 4, "seqs 3..=6 replayed as duplicates");
+        let total: Value = sink.forwarded.iter().map(|p| p.value).sum::<Value>()
+            + sink_s.forwarded.iter().map(|p| p.value).sum::<Value>()
+            + sink_s.flushed.iter().map(|p| p.value).sum::<Value>();
+        let want: Value = stream.iter().map(|p| p.value).sum();
+        assert_eq!(total, want, "replay must not double-count");
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_target() {
+        let primary = warm_switch();
+        let snap = primary.snapshot_tree(TreeId(1)).unwrap();
+        // Not resident.
+        let mut empty = SwitchAggSwitch::new(SwitchConfig::scaled(16 << 10, Some(256 << 10)));
+        assert_eq!(
+            empty.restore_tree(&snap),
+            Err(SnapshotError::Geometry("tree not resident on restore target"))
+        );
+        // Wrong fan-in.
+        let mut wrong = configured(3);
+        assert_eq!(
+            wrong.restore_tree(&snap),
+            Err(SnapshotError::Geometry("tree configuration"))
+        );
+        // Wrong memory geometry (different FPE budget).
+        let mut small = SwitchAggSwitch::new(SwitchConfig::scaled(8 << 10, Some(256 << 10)));
+        small.configure(&[TreeConfig {
+            tree: TreeId(1),
+            children: 2,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }]);
+        assert!(small.restore_tree(&snap).is_err());
+    }
+
+    #[test]
+    fn delta_ships_only_dirtied_sections_and_applies_exactly() {
+        let mut sw = warm_switch();
+        let snap0 = sw.snapshot_tree(TreeId(1)).unwrap();
+        // Quiet interval: the delta is empty.
+        let snap_same = sw.snapshot_tree(TreeId(1)).unwrap();
+        let d = SnapshotDelta::between(0, &snap0, &snap_same);
+        assert!(d.is_empty());
+
+        // One more packet dirties the engine core, stats, dedup, and
+        // the touched FPE tables — but not every memory region.
+        let mut sink = IngestSink::new();
+        let pkt = rel_pkt(TreeId(1), 0, 16, pairs(30, 10, 40), false);
+        sw.ingest_reliable_one(TreeId(1), &pkt, &mut sink);
+        let snap1 = sw.snapshot_tree(TreeId(1)).unwrap();
+        let d = SnapshotDelta::between(0, &snap0, &snap1);
+        assert!(!d.is_empty());
+        assert!(
+            d.n_changed() < snap1.n_sections(),
+            "incremental checkpoint must skip untouched sections"
+        );
+        assert!(d.encoded_len() < snap1.encoded_len());
+        assert_eq!(d.apply(&snap0), snap1);
+
+        // Delta wire round trip.
+        let back = SnapshotDelta::from_bytes(&d.to_bytes()).unwrap();
+        assert_eq!(back, d);
+        assert_eq!(back.base_index(), 0);
+    }
+
+    #[test]
+    fn decode_survives_fuzz() {
+        // Truncation at every prefix, a sweep of bit flips, and length
+        // inflation: never a panic, never an over-reserve — either a
+        // clean parse or a typed error.
+        let sw = warm_switch();
+        let bytes = sw.snapshot_tree(TreeId(1)).unwrap().to_bytes();
+        for n in 0..bytes.len() {
+            assert!(SwitchSnapshot::from_bytes(&bytes[..n]).is_err());
+        }
+        for i in (0..bytes.len()).step_by(7) {
+            let mut m = bytes.clone();
+            m[i] ^= 0x80;
+            let _ = SwitchSnapshot::from_bytes(&m); // must not panic
+        }
+        // Inflate the first section length field far past the input.
+        let mut m = bytes.clone();
+        let len_off = 4 + 2 + 4 + 4; // magic+version+count+first id
+        m[len_off..len_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(SwitchSnapshot::from_bytes(&m).is_err());
+        // Same hostility against the delta decoder.
+        let empty = SnapshotDelta::between(3, &SwitchSnapshot::new(), &SwitchSnapshot::new());
+        let dbytes = empty.to_bytes();
+        for n in 0..dbytes.len() {
+            assert!(SnapshotDelta::from_bytes(&dbytes[..n]).is_err());
+        }
+    }
+
+    #[test]
+    fn restored_switch_rejects_malformed_section_contents() {
+        // A structurally-valid container whose DEDUP section is garbage
+        // must fail typed and leave the target's dedup map untouched.
+        let primary = warm_switch();
+        let mut snap = primary.snapshot_tree(TreeId(1)).unwrap();
+        snap.insert(SEC_DEDUP, vec![0xFF; 64]);
+        let mut standby = configured(2);
+        assert!(standby.restore_tree(&snap).is_err());
+        assert_eq!(standby.dedup_cum(TreeId(1), 0), 0);
+    }
+}

@@ -34,9 +34,11 @@ use crate::switch::integrity::IntegrityError;
 use crate::switch::parallel::Parallelism;
 use crate::switch::reliability::{backpressure_credit, Admit, CreditPolicy, DedupStats, DedupWindow};
 use crate::switch::scheduler::{GrantPolicy, WeightedGrants};
+use crate::switch::snapshot::{self, SwitchSnapshot};
 use crate::switch::tenant::{
     AdmissionError, EvictedResidents, QuotaRequest, TenantDirectory, TreeEngine,
 };
+use crate::util::codec::{self, SnapCursor, SnapshotError};
 use std::collections::BTreeMap;
 
 /// Per-tree aggregate statistics (port counters, §6.2 methodology).
@@ -113,6 +115,66 @@ impl SwitchStats {
         } else {
             self.bytes_in as f64 * CLOCK_HZ as f64 / self.makespan_cycles as f64
         }
+    }
+
+    /// Serialize every counter in declaration order (all 64-bit).
+    pub(crate) fn snapshot_write(&self, out: &mut Vec<u8>) {
+        for v in [
+            self.pairs_in,
+            self.bytes_in,
+            self.packets_in,
+            self.pairs_out_stream,
+            self.pairs_out_flush,
+            self.bytes_out,
+            self.fpe_aggregated,
+            self.fpe_inserted,
+            self.fpe_evicted,
+            self.bpe_aggregated,
+            self.bpe_inserted,
+            self.bpe_overflowed,
+            self.fifo_writes,
+            self.fifo_full_events,
+            self.fifo_max_occupancy,
+            self.fallback_serial,
+            self.unconfigured_drops,
+            self.saturated_combines,
+            self.flush_cycles,
+            self.makespan_cycles,
+        ] {
+            codec::put_u64(out, v);
+        }
+    }
+
+    /// Restore state written by [`Self::snapshot_write`] in place.
+    pub(crate) fn snapshot_read_into(
+        &mut self,
+        cur: &mut SnapCursor<'_>,
+    ) -> Result<(), SnapshotError> {
+        for v in [
+            &mut self.pairs_in,
+            &mut self.bytes_in,
+            &mut self.packets_in,
+            &mut self.pairs_out_stream,
+            &mut self.pairs_out_flush,
+            &mut self.bytes_out,
+            &mut self.fpe_aggregated,
+            &mut self.fpe_inserted,
+            &mut self.fpe_evicted,
+            &mut self.bpe_aggregated,
+            &mut self.bpe_inserted,
+            &mut self.bpe_overflowed,
+            &mut self.fifo_writes,
+            &mut self.fifo_full_events,
+            &mut self.fifo_max_occupancy,
+            &mut self.fallback_serial,
+            &mut self.unconfigured_drops,
+            &mut self.saturated_combines,
+            &mut self.flush_cycles,
+            &mut self.makespan_cycles,
+        ] {
+            *v = cur.u64()?;
+        }
+        Ok(())
     }
 }
 
@@ -330,6 +392,257 @@ impl SwitchAggSwitch {
         assert!(epoch >= cur, "epoch must not regress ({epoch} < {cur})");
         self.epochs.insert(tree, epoch);
         self.dedup.retain(|(t, _), _| *t != tree);
+    }
+
+    /// Move one tree's epoch fence *without* discarding its dedup
+    /// windows — the promotion path of warm-standby failover.  A
+    /// promoted standby continues the crashed primary's job from its
+    /// restored checkpoint: the windows' cumulative sequence numbers
+    /// are exactly what the senders rebase onto, so clearing them (as
+    /// [`Self::begin_epoch`] does for restart-from-scratch recovery)
+    /// would force a full replay instead of a bounded one.
+    pub fn adopt_epoch(&mut self, tree: TreeId, epoch: u16) {
+        let cur = self.tree_epoch(tree);
+        assert!(epoch >= cur, "epoch must not regress ({epoch} < {cur})");
+        self.epochs.insert(tree, epoch);
+    }
+
+    /// Cumulative contiguously-admitted sequence number of one child's
+    /// reliable stream (0 when no window exists yet) — what a sender
+    /// rebases from after a standby promotion.
+    pub fn dedup_cum(&self, tree: TreeId, child: u16) -> u32 {
+        self.dedup
+            .get(&(tree, child))
+            .map_or(0, |w| w.cum_seq())
+    }
+
+    /// Serialize one resident tree's complete aggregation state into a
+    /// deterministic [`SwitchSnapshot`]: engine core (pacing, EoT
+    /// quorum, analyzer/crossbar/scheduler, stats), every FPE table and
+    /// BPE region (each its own section, so incremental checkpoints can
+    /// ship only dirtied memory), per-child dedup windows, the tree
+    /// epoch, and tenant metadata (quota, weight, idle).  `None` when
+    /// the tree is not resident.  Static configuration (the
+    /// [`SwitchConfig`], intervals, policies) is *not* serialized — a
+    /// restore target is built from the same config, and the snapshot
+    /// carries only the geometry needed to verify that.
+    pub fn snapshot_tree(&self, tree: TreeId) -> Option<SwitchSnapshot> {
+        let tenant = self.tenants.get(tree)?;
+        let engine = &tenant.engine;
+        let mut snap = SwitchSnapshot::new();
+
+        let mut buf = Vec::new();
+        codec::put_u32(&mut buf, tree.0);
+        codec::put_u16(&mut buf, self.tree_epoch(tree));
+        codec::put_u16(&mut buf, tenant.config.children);
+        codec::put_u8(&mut buf, snapshot::op_code(tenant.config.op));
+        codec::put_u8(&mut buf, tenant.config.parent_port);
+        codec::put_u32(&mut buf, tenant.lanes as u32);
+        codec::put_u32(&mut buf, self.rel_window.get());
+        codec::put_u64(&mut buf, tenant.weight);
+        codec::put_u8(&mut buf, tenant.idle as u8);
+        match tenant.quota {
+            Some(q) => {
+                codec::put_u8(&mut buf, 1);
+                codec::put_u64(&mut buf, q.fpe_bytes);
+                codec::put_u64(&mut buf, q.bpe_bytes);
+            }
+            None => codec::put_u8(&mut buf, 0),
+        }
+        codec::put_u64(&mut buf, tenant.fpe_share);
+        match tenant.bpe_share {
+            Some(s) => {
+                codec::put_u8(&mut buf, 1);
+                codec::put_u64(&mut buf, s);
+            }
+            None => codec::put_u8(&mut buf, 0),
+        }
+        snap.insert(snapshot::SEC_META, buf);
+
+        let mut buf = Vec::new();
+        engine.snapshot_write_core(&mut buf);
+        snap.insert(snapshot::SEC_ENGINE, buf);
+
+        let mut buf = Vec::new();
+        let windows: Vec<(u16, &DedupWindow)> = self
+            .dedup
+            .iter()
+            .filter(|((t, _), _)| *t == tree)
+            .map(|((_, c), w)| (*c, w))
+            .collect();
+        codec::put_u32(&mut buf, windows.len() as u32);
+        for (child, w) in windows {
+            codec::put_u16(&mut buf, child);
+            w.snapshot_write(&mut buf);
+        }
+        snap.insert(snapshot::SEC_DEDUP, buf);
+
+        for g in 0..engine.n_fpe_groups() {
+            let mut buf = Vec::new();
+            engine.snapshot_write_fpe(g, &mut buf);
+            snap.insert(snapshot::SEC_FPE_BASE + g as u32, buf);
+        }
+        if engine.n_bpe_regions() > 0 {
+            let mut buf = Vec::new();
+            engine.snapshot_write_bpe_meta(&mut buf);
+            snap.insert(snapshot::SEC_BPE_META, buf);
+            for g in 0..engine.n_bpe_regions() {
+                let mut buf = Vec::new();
+                engine.snapshot_write_bpe_region(g, &mut buf);
+                snap.insert(snapshot::SEC_BPE_REGION_BASE + g as u32, buf);
+            }
+        }
+        Some(snap)
+    }
+
+    /// Install a [`SwitchSnapshot`] into this switch's *pre-configured*
+    /// resident incarnation of the snapshotted tree.  The target must
+    /// already hold the tree (same [`TreeConfig`], lane width, memory
+    /// shares, and session [`RelWindow`] as the snapshot source) —
+    /// restore verifies all of that and rejects mismatches with typed
+    /// errors.  On success the switch continues the source's ingest
+    /// byte-identically: engine memory, dedup windows, the epoch
+    /// register, and tenant metadata are all installed.  On error the
+    /// engine may be partially written — the caller must evict the tree
+    /// (or re-configure it) rather than ingest into it; the dedup map,
+    /// epoch register, and tenant metadata are only committed after
+    /// every section has decoded.
+    pub fn restore_tree(&mut self, snap: &SwitchSnapshot) -> Result<TreeId, SnapshotError> {
+        let meta = snap
+            .section(snapshot::SEC_META)
+            .ok_or(SnapshotError::Invalid("missing META section"))?;
+        let mut cur = SnapCursor::new(meta);
+        let tree = TreeId(cur.u32()?);
+        let epoch = cur.u16()?;
+        let children = cur.u16()?;
+        let op = snapshot::op_from_code(cur.u8()?)
+            .ok_or(SnapshotError::Invalid("unknown aggregation op"))?;
+        let parent_port = cur.u8()?;
+        let lanes = cur.u32()? as usize;
+        let window = cur.u32()?;
+        let weight = cur.u64()?;
+        let idle = match cur.u8()? {
+            0 => false,
+            1 => true,
+            _ => return Err(SnapshotError::Invalid("idle flag")),
+        };
+        let quota = match cur.u8()? {
+            0 => None,
+            1 => Some(QuotaRequest {
+                fpe_bytes: cur.u64()?,
+                bpe_bytes: cur.u64()?,
+            }),
+            _ => return Err(SnapshotError::Invalid("quota flag")),
+        };
+        let fpe_share = cur.u64()?;
+        let bpe_share = match cur.u8()? {
+            0 => None,
+            1 => Some(cur.u64()?),
+            _ => return Err(SnapshotError::Invalid("BPE share flag")),
+        };
+        cur.finish()?;
+
+        let Some(tenant) = self.tenants.get(tree) else {
+            return Err(SnapshotError::Geometry("tree not resident on restore target"));
+        };
+        if tenant.config.children != children
+            || tenant.config.op != op
+            || tenant.config.parent_port != parent_port
+        {
+            return Err(SnapshotError::Geometry("tree configuration"));
+        }
+        if tenant.lanes != lanes {
+            return Err(SnapshotError::Geometry("value lane width"));
+        }
+        if tenant.quota != quota
+            || tenant.fpe_share != fpe_share
+            || tenant.bpe_share != bpe_share
+        {
+            return Err(SnapshotError::Geometry("memory shares"));
+        }
+        if self.rel_window.get() != window {
+            return Err(SnapshotError::Geometry("reliability window"));
+        }
+        if epoch < self.tree_epoch(tree) {
+            return Err(SnapshotError::Invalid("restore would regress the tree epoch"));
+        }
+
+        // Decode the dedup windows *before* touching engine memory, so
+        // a malformed DEDUP section leaves the target fully intact.
+        let sec = snap
+            .section(snapshot::SEC_DEDUP)
+            .ok_or(SnapshotError::Invalid("missing DEDUP section"))?;
+        let mut cur = SnapCursor::new(sec);
+        let n = cur.u32()?;
+        if n > children as u32 {
+            return Err(SnapshotError::Invalid("more dedup windows than children"));
+        }
+        let mut windows: Vec<(u16, DedupWindow)> = Vec::with_capacity(n as usize);
+        let mut last: Option<u16> = None;
+        for _ in 0..n {
+            let child = cur.u16()?;
+            if last.is_some_and(|l| child <= l) {
+                return Err(SnapshotError::Invalid(
+                    "dedup children not strictly increasing",
+                ));
+            }
+            if child >= children {
+                return Err(SnapshotError::Invalid("dedup child beyond fan-in"));
+            }
+            last = Some(child);
+            let w = DedupWindow::snapshot_read(&mut cur)?;
+            if w.window_size() != window {
+                return Err(SnapshotError::Geometry("reliability window"));
+            }
+            windows.push((child, w));
+        }
+        cur.finish()?;
+
+        // Engine core + every FPE table + BPE meta/regions.
+        let engine = self.tenants.engine_mut(tree).expect("tenant checked above");
+        let sec = snap
+            .section(snapshot::SEC_ENGINE)
+            .ok_or(SnapshotError::Invalid("missing ENGINE section"))?;
+        let mut cur = SnapCursor::new(sec);
+        engine.snapshot_read_core(&mut cur)?;
+        cur.finish()?;
+        for g in 0..engine.n_fpe_groups() {
+            let sec = snap
+                .section(snapshot::SEC_FPE_BASE + g as u32)
+                .ok_or(SnapshotError::Invalid("missing FPE section"))?;
+            let mut cur = SnapCursor::new(sec);
+            engine.snapshot_read_fpe(g, &mut cur)?;
+            cur.finish()?;
+        }
+        let n_regions = engine.n_bpe_regions();
+        if n_regions > 0 {
+            let sec = snap
+                .section(snapshot::SEC_BPE_META)
+                .ok_or(SnapshotError::Invalid("missing BPE meta section"))?;
+            let mut cur = SnapCursor::new(sec);
+            engine.snapshot_read_bpe_meta(&mut cur)?;
+            cur.finish()?;
+            for g in 0..n_regions {
+                let sec = snap
+                    .section(snapshot::SEC_BPE_REGION_BASE + g as u32)
+                    .ok_or(SnapshotError::Invalid("missing BPE region section"))?;
+                let mut cur = SnapCursor::new(sec);
+                engine.snapshot_read_bpe_region(g, &mut cur)?;
+                cur.finish()?;
+            }
+        } else if snap.section(snapshot::SEC_BPE_META).is_some() {
+            return Err(SnapshotError::Geometry("BPE presence"));
+        }
+
+        // Commit the sequence/fence/metadata state last.
+        self.dedup.retain(|(t, _), _| *t != tree);
+        for (child, w) in windows {
+            self.dedup.insert((tree, child), w);
+        }
+        self.epochs.insert(tree, epoch);
+        self.tenants.set_weight(tree, weight);
+        self.tenants.set_idle(tree, idle);
+        Ok(tree)
     }
 
     /// Simulate a switch crash: all soft state dies — aggregation

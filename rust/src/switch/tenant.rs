@@ -32,6 +32,7 @@ use crate::switch::parallel::{merge_by_seq, run_workers, JobPair, WorkerGroup};
 use crate::switch::payload_analyzer::{GroupMap, PayloadAnalyzer};
 use crate::switch::scheduler::{SchedPolicy, Scheduler};
 use crate::switch::switch_sim::{IngestSink, SwitchStats, VectorSink};
+use crate::util::codec::{self, SnapCursor, SnapshotError};
 use std::collections::BTreeMap;
 
 /// Input pacing: cycles per byte on a 10 Gbps port at 200 MHz
@@ -670,6 +671,111 @@ impl TreeEngine {
             for (j, &k) in keys.iter().enumerate() {
                 out.push(k, &vals[j * w..(j + 1) * w]);
             }
+        }
+    }
+}
+
+impl TreeEngine {
+    /// Serialize the engine-core state (pacing, EoT quorum, analyzer,
+    /// crossbar, scheduler, cumulative stats) — everything *except* the
+    /// FPE tables and BPE regions, which are separate snapshot sections
+    /// so incremental checkpoints can ship only dirtied memory.  Leads
+    /// with the geometry the restore target must match.
+    pub(crate) fn snapshot_write_core(&self, out: &mut Vec<u8>) {
+        codec::put_u32(out, self.lanes as u32);
+        codec::put_u32(out, self.fpes.len() as u32);
+        codec::put_u8(out, self.bpe.is_some() as u8);
+        codec::put_u16(out, self.eot_seen);
+        codec::put_u64(out, self.bytes_arrived);
+        self.analyzer.snapshot_write(out);
+        self.crossbar.snapshot_write(out);
+        self.scheduler.snapshot_write(out);
+        self.stats.snapshot_write(out);
+    }
+
+    /// Restore state written by [`Self::snapshot_write_core`] in place.
+    /// The target engine must have been built from the same
+    /// [`SwitchConfig`]/[`TreeConfig`] — geometry mismatches are typed
+    /// errors, never silent reinterpretation.
+    pub(crate) fn snapshot_read_core(
+        &mut self,
+        cur: &mut SnapCursor<'_>,
+    ) -> Result<(), SnapshotError> {
+        if cur.u32()? as usize != self.lanes {
+            return Err(SnapshotError::Geometry("value lane width"));
+        }
+        if cur.u32()? as usize != self.fpes.len() {
+            return Err(SnapshotError::Geometry("FPE group count"));
+        }
+        if (cur.u8()? != 0) != self.bpe.is_some() {
+            return Err(SnapshotError::Geometry("BPE presence"));
+        }
+        let eot_seen = cur.u16()?;
+        if eot_seen >= self.children.max(1) {
+            return Err(SnapshotError::Invalid("EoT count at or beyond fan-in"));
+        }
+        self.eot_seen = eot_seen;
+        self.bytes_arrived = cur.u64()?;
+        self.analyzer.snapshot_read_into(cur)?;
+        self.crossbar.snapshot_read_into(cur)?;
+        self.scheduler.snapshot_read_into(cur)?;
+        self.stats.snapshot_read_into(cur)?;
+        Ok(())
+    }
+
+    pub(crate) fn n_fpe_groups(&self) -> usize {
+        self.fpes.len()
+    }
+
+    pub(crate) fn n_bpe_regions(&self) -> usize {
+        self.bpe.as_ref().map_or(0, |b| b.n_regions())
+    }
+
+    /// Serialize one FPE group's hash table (its own snapshot section).
+    pub(crate) fn snapshot_write_fpe(&self, group: usize, out: &mut Vec<u8>) {
+        self.fpes[group].snapshot_write(out);
+    }
+
+    pub(crate) fn snapshot_read_fpe(
+        &mut self,
+        group: usize,
+        cur: &mut SnapCursor<'_>,
+    ) -> Result<(), SnapshotError> {
+        self.fpes[group].snapshot_read_into(cur)
+    }
+
+    /// Serialize the BPE's non-table state (DRAM timing, counters).
+    /// Must only be called when [`Self::n_bpe_regions`] is nonzero.
+    pub(crate) fn snapshot_write_bpe_meta(&self, out: &mut Vec<u8>) {
+        self.bpe.as_ref().expect("no BPE").snapshot_write_meta(out);
+    }
+
+    pub(crate) fn snapshot_read_bpe_meta(
+        &mut self,
+        cur: &mut SnapCursor<'_>,
+    ) -> Result<(), SnapshotError> {
+        match &mut self.bpe {
+            Some(b) => b.snapshot_read_meta(cur),
+            None => Err(SnapshotError::Geometry("BPE presence")),
+        }
+    }
+
+    /// Serialize one BPE DRAM region (its own snapshot section).
+    pub(crate) fn snapshot_write_bpe_region(&self, group: usize, out: &mut Vec<u8>) {
+        self.bpe
+            .as_ref()
+            .expect("no BPE")
+            .snapshot_write_region(group, out);
+    }
+
+    pub(crate) fn snapshot_read_bpe_region(
+        &mut self,
+        group: usize,
+        cur: &mut SnapCursor<'_>,
+    ) -> Result<(), SnapshotError> {
+        match &mut self.bpe {
+            Some(b) => b.snapshot_read_region(group, cur),
+            None => Err(SnapshotError::Geometry("BPE presence")),
         }
     }
 }

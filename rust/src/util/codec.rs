@@ -1,0 +1,193 @@
+//! Little-endian snapshot codec shared by the warm-standby failover
+//! subsystem (ISSUE 10): a bounds-checked cursor for decoding and
+//! plain `put_*` helpers for encoding.
+//!
+//! Lives in `util` (not `switch`) so timing models under `sim/` can
+//! serialize themselves without depending on the switch layer.  The
+//! decode side follows the PR 4/PR 8 wire-hardening discipline: every
+//! read is bounds-checked, every length-prefixed pre-reservation is
+//! clamped by the bytes actually remaining, and malformed input maps
+//! to a typed [`SnapshotError`] — never a panic, never an unbounded
+//! allocation.
+
+use thiserror::Error;
+
+/// Typed decode failure for snapshot bytes.  Fuzzed inputs (truncation
+/// at every prefix, bit flips, inflated length fields) must land in
+/// one of these variants, never a panic.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum SnapshotError {
+    /// Input ended before a fixed-width read or declared payload.
+    #[error("snapshot truncated")]
+    Truncated,
+    /// Leading magic bytes are not a snapshot.
+    #[error("bad snapshot magic")]
+    BadMagic,
+    /// Versioned container from a different codec revision.
+    #[error("unsupported snapshot version {0}")]
+    BadVersion(u16),
+    /// Decoded geometry disagrees with the restore target (different
+    /// table width, bucket count, lane width, children, ...).
+    #[error("snapshot geometry mismatch: {0}")]
+    Geometry(&'static str),
+    /// A field value is structurally impossible (length beyond
+    /// capacity, slot count beyond the bucket, unknown enum tag, ...).
+    #[error("invalid snapshot field: {0}")]
+    Invalid(&'static str),
+    /// Well-formed prefix followed by unconsumed bytes.
+    #[error("trailing bytes after snapshot")]
+    Trailing,
+}
+
+/// Bounds-checked little-endian reader over a snapshot byte slice.
+pub struct SnapCursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapCursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed — the clamp bound for any pre-reserve.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        if self.remaining() < n {
+            return Err(SnapshotError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, SnapshotError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, SnapshotError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64, SnapshotError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, SnapshotError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u64` that must fit `usize` (lengths, counts).
+    pub fn len(&mut self) -> Result<usize, SnapshotError> {
+        usize::try_from(self.u64()?).map_err(|_| SnapshotError::Invalid("length overflows usize"))
+    }
+
+    /// Borrow `n` raw bytes out of the input.
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        self.take(n)
+    }
+
+    /// Decode error unless every byte has been consumed.
+    pub fn finish(&self) -> Result<(), SnapshotError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(SnapshotError::Trailing)
+        }
+    }
+}
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// `Vec::with_capacity` clamped by what the input could possibly
+/// still encode: a hostile length field can never reserve more than
+/// `remaining / elem_bytes + 1` elements' worth of memory.
+pub fn clamped_capacity(declared: usize, remaining: usize, elem_bytes: usize) -> usize {
+    declared.min(remaining / elem_bytes.max(1) + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut out = Vec::new();
+        put_u8(&mut out, 0xAB);
+        put_u16(&mut out, 0xBEEF);
+        put_u32(&mut out, 0xDEAD_BEEF);
+        put_u64(&mut out, u64::MAX - 7);
+        put_i64(&mut out, -42);
+        put_f64(&mut out, 1.5e-3);
+        let mut c = SnapCursor::new(&out);
+        assert_eq!(c.u8().unwrap(), 0xAB);
+        assert_eq!(c.u16().unwrap(), 0xBEEF);
+        assert_eq!(c.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(c.u64().unwrap(), u64::MAX - 7);
+        assert_eq!(c.i64().unwrap(), -42);
+        assert_eq!(c.f64().unwrap(), 1.5e-3);
+        c.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_typed_not_panic() {
+        let mut out = Vec::new();
+        put_u64(&mut out, 123);
+        for cut in 0..out.len() {
+            let mut c = SnapCursor::new(&out[..cut]);
+            assert_eq!(c.u64(), Err(SnapshotError::Truncated));
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut out = Vec::new();
+        put_u8(&mut out, 1);
+        put_u8(&mut out, 2);
+        let mut c = SnapCursor::new(&out);
+        c.u8().unwrap();
+        assert_eq!(c.finish(), Err(SnapshotError::Trailing));
+    }
+
+    #[test]
+    fn hostile_length_cannot_over_reserve() {
+        // A length field claiming 2^60 elements clamps to what the
+        // remaining bytes could actually hold.
+        assert_eq!(clamped_capacity(1 << 60, 80, 8), 11);
+        assert_eq!(clamped_capacity(3, 80, 8), 3);
+        assert_eq!(clamped_capacity(5, 0, 8), 1);
+    }
+}

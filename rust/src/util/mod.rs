@@ -6,6 +6,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod codec;
 pub mod fxhash;
 pub mod miniprop;
 pub mod par;

@@ -1,0 +1,587 @@
+//! Warm-standby failover — integration contracts:
+//!
+//! * **Snapshot round-trip is byte-deterministic** — snapshot a switch
+//!   mid-ingest at a random prefix, restore into a fresh switch, feed
+//!   both the identical suffix: every emission and the *entire*
+//!   serialized end state (engine, stats, dedup windows) are
+//!   byte-identical to the uncrashed switch.  Scalar and W-lane vector
+//!   (W ∈ {1, 8}), serial and sharded engines.
+//! * **Zero-fault transparency** — a failover session with no standby
+//!   and an empty plan is byte-identical to the plain transport
+//!   session it wraps (stream, per-hop stats, JCT).
+//! * **Mid-job promotion is the same job** — a fail-stop primary with
+//!   a checkpointed standby finishes in-network with the reducer
+//!   stream byte-identical to the fault-free session's, lossless and
+//!   lossy, scalar and vector.
+//! * **Decode robustness** — snapshot and delta decoding must survive
+//!   truncation at every prefix, random bit flips, and length
+//!   inflation without panicking (a hostile or half-written checkpoint
+//!   can reach `restore_tree` unvalidated).
+
+use std::collections::HashMap;
+use switchagg::framework::failover::{
+    run_failover_scalar, run_failover_vector, FailoverConfig,
+};
+use switchagg::framework::transport::{
+    run_transport_scalar, run_transport_vector, TransportConfig,
+};
+use switchagg::framework::Reducer;
+use switchagg::net::FaultPlan;
+use switchagg::protocol::{
+    AggOp, AggregationPacket, Key, KvPair, RelHeader, TreeConfig, TreeId, Value, VectorBatch,
+};
+use switchagg::switch::{
+    vector_sink_to_batch, IngestSink, Parallelism, SnapshotDelta, SwitchAggSwitch, SwitchConfig,
+    SwitchSnapshot, VectorSink,
+};
+use switchagg::util::rng::Pcg32;
+
+fn switch_cfg(par: Parallelism) -> SwitchConfig {
+    SwitchConfig {
+        parallelism: par,
+        ..SwitchConfig::scaled(16 << 10, Some(256 << 10))
+    }
+}
+
+fn configured(children: u16, par: Parallelism, lanes: usize) -> SwitchAggSwitch {
+    let mut sw = SwitchAggSwitch::new(switch_cfg(par));
+    sw.configure_vector(
+        &[TreeConfig {
+            tree: TreeId(1),
+            children,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }],
+        lanes,
+    );
+    sw
+}
+
+fn scalar_streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut child = rng.fork(0x77);
+            (0..n)
+                .map(|_| {
+                    let id = child.gen_range_u64(300);
+                    KvPair::new(
+                        Key::from_id(id, 16 + (id % 49) as usize),
+                        child.gen_range_u64(200) as i64 - 100,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Scalar streams opening with one fixed pass over the full key set:
+/// the table layout is frozen within the first few % of the job, which
+/// is what makes a mid-job promotion's replay land byte-identically
+/// (see `framework::failover`'s module doc).
+fn replayable_scalar_streams(children: usize, n: usize, seed: u64) -> Vec<Vec<KvPair>> {
+    let keys = 32u64;
+    let key = |id: u64| Key::from_id(id, 16 + (id % 49) as usize);
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut s: Vec<KvPair> = (0..keys).map(|id| KvPair::new(key(id), 1)).collect();
+            for _ in keys as usize..n {
+                let id = rng.gen_range_u64(keys);
+                s.push(KvPair::new(key(id), rng.gen_range_u64(9) as i64 - 4));
+            }
+            s
+        })
+        .collect()
+}
+
+fn replayable_vector_streams(
+    children: usize,
+    n: usize,
+    lanes: usize,
+    seed: u64,
+) -> Vec<VectorBatch> {
+    let keys = 24u64;
+    let key = |id: u64| Key::from_id(id, 16 + (id % 49) as usize);
+    let mut rng = Pcg32::new(seed);
+    (0..children)
+        .map(|_| {
+            let mut b = VectorBatch::new(lanes);
+            let mut vals: Vec<Value> = vec![0; lanes];
+            for id in 0..keys {
+                for (l, v) in vals.iter_mut().enumerate() {
+                    *v = 1 + l as i64;
+                }
+                b.push(key(id), &vals);
+            }
+            for _ in keys as usize..n {
+                let id = rng.gen_range_u64(keys);
+                for v in vals.iter_mut() {
+                    *v = rng.gen_range_u64(9) as i64 - 4;
+                }
+                b.push(key(id), &vals);
+            }
+            b
+        })
+        .collect()
+}
+
+fn merged(pairs: &[KvPair]) -> HashMap<Key, Value> {
+    Reducer::merge_software(&[pairs.to_vec()], AggOp::Sum).table
+}
+
+fn merged_streams(streams: &[Vec<KvPair>]) -> HashMap<Key, Value> {
+    Reducer::merge_software(streams, AggOp::Sum).table
+}
+
+fn stamped(tree: TreeId, stream: &[KvPair], child: u16) -> Vec<AggregationPacket> {
+    let mut v = AggregationPacket::pack_stream(tree, AggOp::Sum, stream, true);
+    for (i, p) in v.iter_mut().enumerate() {
+        p.rel = Some(RelHeader {
+            child,
+            epoch: 0,
+            seq: i as u32 + 1,
+        });
+    }
+    v
+}
+
+// --- Snapshot round-trip ---------------------------------------------
+
+/// Drive one scalar tree through (prefix | snapshot+restore | suffix)
+/// and assert the restored switch is indistinguishable — emissions,
+/// final serialized state, dedup counters, recovered totals.
+fn scalar_round_trip(par: Parallelism, split_seed: u64) {
+    let tree = TreeId(1);
+    let children = 3usize;
+    let ss = scalar_streams(children, 500, 0xA0 ^ split_seed);
+    let pkts: Vec<Vec<AggregationPacket>> = ss
+        .iter()
+        .enumerate()
+        .map(|(c, s)| stamped(tree, s, c as u16))
+        .collect();
+    // Random split, but each child's EoT packet stays in the suffix so
+    // the one flush of the job is exercised on the *restored* switch.
+    let mut rng = Pcg32::new(split_seed);
+    let splits: Vec<usize> = pkts
+        .iter()
+        .map(|v| rng.gen_range_u64(v.len() as u64) as usize)
+        .collect();
+
+    // The uncrashed switch ingests everything in one life.
+    let mut live = configured(children as u16, par, 1);
+    let mut live_sink = IngestSink::new();
+    // The crashed path: prefix on the primary, suffix on the restored.
+    let mut primary = configured(children as u16, par, 1);
+    let mut pre_sink = IngestSink::new();
+
+    for (c, v) in pkts.iter().enumerate() {
+        for p in &v[..splits[c]] {
+            live.ingest_reliable_one(tree, p, &mut live_sink);
+            primary.ingest_reliable_one(tree, p, &mut pre_sink);
+        }
+    }
+    let snap = primary.snapshot_tree(tree).expect("resident tree snapshots");
+    let bytes = snap.to_bytes();
+    let decoded = SwitchSnapshot::from_bytes(&bytes).expect("own encoding decodes");
+
+    let mut restored = configured(children as u16, par, 1);
+    assert_eq!(
+        restored.restore_tree(&decoded).expect("restore"),
+        tree,
+        "{par:?}: restore reports the snapshotted tree"
+    );
+    // Restore → snapshot is the identity on the serialized state.
+    assert_eq!(
+        restored
+            .snapshot_tree(tree)
+            .expect("restored tree snapshots")
+            .to_bytes(),
+        bytes,
+        "{par:?}: snapshot/restore round-trip is byte-exact"
+    );
+
+    let mut post_sink = IngestSink::new();
+    for (c, v) in pkts.iter().enumerate() {
+        for p in &v[splits[c]..] {
+            live.ingest_reliable_one(tree, p, &mut live_sink);
+            restored.ingest_reliable_one(tree, p, &mut post_sink);
+        }
+    }
+    // Suffix emissions match the live switch's suffix emissions.
+    assert_eq!(live_sink.flushes, 1, "{par:?}");
+    assert_eq!(post_sink.flushes, 1, "{par:?}");
+    assert_eq!(
+        post_sink.forwarded,
+        live_sink.forwarded[pre_sink.forwarded.len()..].to_vec(),
+        "{par:?}: post-restore stream emissions"
+    );
+    assert_eq!(post_sink.flushed, live_sink.flushed, "{par:?}: flush output");
+    // The full end state — engine layout, stats counters, dedup
+    // windows — serializes byte-identically (SwitchStats is not
+    // directly comparable; its serialized form is, which is stronger).
+    live.finalize(tree);
+    restored.finalize(tree);
+    assert_eq!(
+        restored.snapshot_tree(tree).expect("snap").to_bytes(),
+        live.snapshot_tree(tree).expect("snap").to_bytes(),
+        "{par:?}: end states are byte-identical"
+    );
+    assert_eq!(restored.dedup_stats(tree), live.dedup_stats(tree), "{par:?}");
+    let mut total: Vec<KvPair> = post_sink.forwarded.clone();
+    total.extend_from_slice(&pre_sink.forwarded);
+    total.extend_from_slice(&post_sink.flushed);
+    assert_eq!(merged(&total), merged_streams(&ss), "{par:?}: recovered totals");
+}
+
+#[test]
+fn scalar_snapshot_round_trip_is_byte_exact_at_random_prefixes() {
+    for par in [Parallelism::Serial, Parallelism::Sharded(2)] {
+        for seed in [1u64, 2, 3] {
+            scalar_round_trip(par, seed);
+        }
+    }
+}
+
+/// The W-lane vector counterpart of [`scalar_round_trip`].
+fn vector_round_trip(par: Parallelism, lanes: usize, split_seed: u64) {
+    let tree = TreeId(1);
+    let children = 3usize;
+    let ss = replayable_vector_streams(children, 400, lanes, 0xB0 ^ split_seed);
+    let pkts: Vec<Vec<switchagg::protocol::VectorAggregationPacket>> = ss
+        .iter()
+        .enumerate()
+        .map(|(c, b)| {
+            let mut out = Vec::new();
+            let mut chunks = switchagg::protocol::VectorChunks::new(b);
+            let mut seq = 0u32;
+            while let Some((range, last)) = chunks.next_chunk() {
+                seq += 1;
+                out.push(switchagg::protocol::VectorAggregationPacket {
+                    tree,
+                    op: AggOp::Sum,
+                    eot: last,
+                    rel: Some(RelHeader {
+                        child: c as u16,
+                        epoch: 0,
+                        seq,
+                    }),
+                    batch: b.sub_batch(range),
+                });
+            }
+            out
+        })
+        .collect();
+    let mut rng = Pcg32::new(split_seed);
+    let splits: Vec<usize> = pkts
+        .iter()
+        .map(|v| rng.gen_range_u64(v.len() as u64) as usize)
+        .collect();
+
+    let mut live = configured(children as u16, par, lanes);
+    let mut live_sink = VectorSink::new(lanes);
+    let mut primary = configured(children as u16, par, lanes);
+    let mut pre_sink = VectorSink::new(lanes);
+
+    for (c, v) in pkts.iter().enumerate() {
+        for p in &v[..splits[c]] {
+            live.ingest_vector_reliable_one(tree, p, &mut live_sink);
+            primary.ingest_vector_reliable_one(tree, p, &mut pre_sink);
+        }
+    }
+    let bytes = primary.snapshot_tree(tree).expect("snapshot").to_bytes();
+    let decoded = SwitchSnapshot::from_bytes(&bytes).expect("decodes");
+    let mut restored = configured(children as u16, par, lanes);
+    restored.restore_tree(&decoded).expect("restore");
+    assert_eq!(
+        restored.snapshot_tree(tree).expect("snap").to_bytes(),
+        bytes,
+        "W={lanes} {par:?}: round-trip"
+    );
+
+    let mut post_sink = VectorSink::new(lanes);
+    for (c, v) in pkts.iter().enumerate() {
+        for p in &v[splits[c]..] {
+            live.ingest_vector_reliable_one(tree, p, &mut live_sink);
+            restored.ingest_vector_reliable_one(tree, p, &mut post_sink);
+        }
+    }
+    assert_eq!(live_sink.flushes, 1, "W={lanes} {par:?}");
+    assert_eq!(post_sink.flushes, 1, "W={lanes} {par:?}");
+    let live_suffix = live_sink
+        .forwarded
+        .sub_batch(pre_sink.forwarded.len()..live_sink.forwarded.len());
+    assert_eq!(
+        post_sink.forwarded, live_suffix,
+        "W={lanes} {par:?}: post-restore stream emissions"
+    );
+    assert_eq!(
+        post_sink.flushed, live_sink.flushed,
+        "W={lanes} {par:?}: flush output"
+    );
+    live.finalize(tree);
+    restored.finalize(tree);
+    assert_eq!(
+        restored.snapshot_tree(tree).expect("snap").to_bytes(),
+        live.snapshot_tree(tree).expect("snap").to_bytes(),
+        "W={lanes} {par:?}: end states"
+    );
+    // Silence the "built but unused" lint path on vector_sink_to_batch
+    // while also pinning emission-order concatenation.
+    assert_eq!(
+        vector_sink_to_batch(&post_sink).len(),
+        post_sink.forwarded.len() + post_sink.flushed.len()
+    );
+}
+
+#[test]
+fn vector_snapshot_round_trip_is_byte_exact_at_random_prefixes() {
+    for par in [Parallelism::Serial, Parallelism::Sharded(2)] {
+        for lanes in [1usize, 8] {
+            vector_round_trip(par, lanes, 5);
+        }
+    }
+}
+
+// --- Zero-fault transparency -----------------------------------------
+
+#[test]
+fn zero_fault_failover_session_is_byte_identical_to_plain_transport() {
+    let ss = scalar_streams(4, 700, 0xC1);
+    for tcfg in [TransportConfig::default(), TransportConfig::uniform(0.03, 41)] {
+        let cfg = FailoverConfig {
+            transport: tcfg,
+            ..FailoverConfig::default()
+        };
+        let fo = run_failover_scalar(&switch_cfg(Parallelism::Serial), AggOp::Sum, &ss, &cfg)
+            .expect("fault-free failover session");
+        let mut sw = configured(4, Parallelism::Serial, 1);
+        let plain = run_transport_scalar(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg.transport);
+        assert_eq!(fo.received, plain.received, "reducer stream");
+        assert_eq!(fo.ingress, plain.ingress, "ingress hop stats");
+        assert_eq!(fo.egress, plain.egress, "egress hop stats");
+        assert_eq!(fo.dedup, plain.dedup, "dedup counters");
+        assert_eq!(fo.jct_s, plain.jct_s, "bit-identical JCT");
+        assert_eq!(fo.fifo_peak, plain.fifo_peak);
+        assert!(!fo.promoted && !fo.degraded && fo.faulted_drops == 0);
+    }
+}
+
+#[test]
+fn zero_fault_failover_vector_session_matches_plain_transport() {
+    for lanes in [1usize, 8] {
+        let ss = replayable_vector_streams(3, 400, lanes, 0xC2);
+        let cfg = FailoverConfig::default();
+        let fo = run_failover_vector(&switch_cfg(Parallelism::Serial), AggOp::Sum, &ss, &cfg)
+            .expect("fault-free vector session");
+        let mut sw = configured(3, Parallelism::Serial, lanes);
+        let plain = run_transport_vector(&mut sw, TreeId(1), AggOp::Sum, &ss, &cfg.transport);
+        assert_eq!(fo.received, plain.received, "W={lanes}: reducer batch");
+        assert_eq!(fo.ingress, plain.ingress, "W={lanes}");
+        assert_eq!(fo.egress, plain.egress, "W={lanes}");
+        assert_eq!(fo.jct_s, plain.jct_s, "W={lanes}");
+    }
+}
+
+// --- Mid-job promotion differential ----------------------------------
+
+#[test]
+fn mid_job_promotion_is_byte_identical_to_the_fault_free_session_scalar() {
+    let ss = replayable_scalar_streams(4, 360, 0xD1);
+    let scfg = switch_cfg(Parallelism::Serial);
+    for tcfg in [TransportConfig::default(), TransportConfig::uniform(0.02, 43)] {
+        let base = run_failover_scalar(
+            &scfg,
+            AggOp::Sum,
+            &ss,
+            &FailoverConfig {
+                transport: tcfg,
+                ..FailoverConfig::default()
+            },
+        )
+        .expect("fault-free");
+        // The fault-free failover session IS the plain transport
+        // session (transparency above), so pinning against it pins
+        // against the plain session too.
+        let cfg = FailoverConfig {
+            transport: tcfg,
+            plan: FaultPlan::none().with_switch_crash(base.jct_s * 0.55, None),
+            standby: true,
+            checkpoint_period_s: Some(base.jct_s * 0.2),
+            max_retries: Some(6),
+            ..FailoverConfig::default()
+        };
+        let fo = run_failover_scalar(&scfg, AggOp::Sum, &ss, &cfg).expect("promotes");
+        assert!(fo.promoted && !fo.degraded);
+        assert_eq!(fo.final_epoch, 1, "promotion bumps the epoch once");
+        assert!(fo.checkpoints_installed >= 1, "warm state was installed");
+        assert!(fo.faulted_drops > 0, "the outage must actually bite");
+        assert!(
+            fo.replayed_packets > 0 && fo.replayed_packets < fo.ingress.first_tx,
+            "replay is real but bounded by the checkpoint: {} of {}",
+            fo.replayed_packets,
+            fo.ingress.first_tx
+        );
+        assert_eq!(
+            fo.received, base.received,
+            "promotion must reproduce the fault-free reducer stream byte-for-byte"
+        );
+        assert_eq!(merged(&fo.received), merged_streams(&ss));
+        assert!(fo.jct_s > base.jct_s, "a mid-job outage cannot be free");
+    }
+}
+
+#[test]
+fn mid_job_promotion_is_byte_identical_to_the_fault_free_session_vector() {
+    let lanes = 8;
+    let ss = replayable_vector_streams(3, 320, lanes, 0xD2);
+    let scfg = switch_cfg(Parallelism::Serial);
+    let base = run_failover_vector(&scfg, AggOp::Sum, &ss, &FailoverConfig::default())
+        .expect("fault-free");
+    let cfg = FailoverConfig {
+        plan: FaultPlan::none().with_switch_crash(base.jct_s * 0.55, None),
+        standby: true,
+        checkpoint_period_s: Some(base.jct_s * 0.2),
+        max_retries: Some(6),
+        ..FailoverConfig::default()
+    };
+    let fo = run_failover_vector(&scfg, AggOp::Sum, &ss, &cfg).expect("promotes");
+    assert!(fo.promoted && !fo.degraded);
+    assert_eq!(fo.received, base.received, "W={lanes} vector promotion");
+}
+
+#[test]
+fn promotion_is_engine_invariant() {
+    let ss = replayable_scalar_streams(4, 360, 0xD3);
+    let base = run_failover_scalar(
+        &switch_cfg(Parallelism::Serial),
+        AggOp::Sum,
+        &ss,
+        &FailoverConfig::default(),
+    )
+    .expect("fault-free");
+    let cfg = FailoverConfig {
+        plan: FaultPlan::none().with_switch_crash(base.jct_s * 0.55, None),
+        standby: true,
+        checkpoint_period_s: Some(base.jct_s * 0.2),
+        max_retries: Some(6),
+        ..FailoverConfig::default()
+    };
+    let a = run_failover_scalar(&switch_cfg(Parallelism::Serial), AggOp::Sum, &ss, &cfg)
+        .expect("serial");
+    let b = run_failover_scalar(&switch_cfg(Parallelism::Sharded(2)), AggOp::Sum, &ss, &cfg)
+        .expect("sharded");
+    assert_eq!(a.received, b.received);
+    assert_eq!(a.ingress, b.ingress);
+    assert_eq!(a.replayed_packets, b.replayed_packets);
+    assert_eq!(a.checkpoint_bytes, b.checkpoint_bytes);
+    assert_eq!(a.jct_s, b.jct_s);
+}
+
+// --- Decode robustness ------------------------------------------------
+
+/// A populated snapshot (and a delta against a mutated successor) to
+/// fuzz against — real sections, non-trivial geometry.
+fn fuzz_corpus() -> (Vec<u8>, Vec<u8>) {
+    let tree = TreeId(1);
+    let mut sw = configured(2, Parallelism::Serial, 1);
+    let ss = scalar_streams(2, 300, 0xE0);
+    let mut sink = IngestSink::new();
+    let pkts: Vec<Vec<AggregationPacket>> = ss
+        .iter()
+        .enumerate()
+        .map(|(c, s)| stamped(tree, s, c as u16))
+        .collect();
+    for p in &pkts[0] {
+        sw.ingest_reliable_one(tree, p, &mut sink);
+    }
+    let prev = sw.snapshot_tree(tree).expect("snapshot");
+    for p in &pkts[1] {
+        sw.ingest_reliable_one(tree, p, &mut sink);
+    }
+    let next = sw.snapshot_tree(tree).expect("snapshot");
+    let delta = SnapshotDelta::between(0, &prev, &next);
+    assert!(!delta.is_empty(), "the suffix must dirty some region");
+    (next.to_bytes(), delta.to_bytes())
+}
+
+#[test]
+fn snapshot_decode_survives_truncation_at_every_prefix() {
+    let (snap, delta) = fuzz_corpus();
+    for cut in 0..snap.len() {
+        assert!(
+            SwitchSnapshot::from_bytes(&snap[..cut]).is_err(),
+            "prefix of length {cut} decoded as a whole snapshot"
+        );
+    }
+    for cut in 0..delta.len() {
+        assert!(
+            SnapshotDelta::from_bytes(&delta[..cut]).is_err(),
+            "delta prefix of length {cut} decoded whole"
+        );
+    }
+}
+
+#[test]
+fn snapshot_decode_survives_bit_flips_and_inflation() {
+    let (snap, delta) = fuzz_corpus();
+    let mut rng = Pcg32::new(0xFA11);
+    for trial in 0..400 {
+        let base = if trial % 2 == 0 { &snap } else { &delta };
+        let mut buf = base.clone();
+        for _ in 0..1 + rng.gen_range_u64(8) {
+            let bit = rng.gen_range_u64(buf.len() as u64 * 8) as usize;
+            buf[bit / 8] ^= 1 << (bit % 8);
+        }
+        // Must not panic; Ok is legal when the flip lands in payload
+        // bytes the structure does not constrain.
+        if trial % 2 == 0 {
+            let _ = SwitchSnapshot::from_bytes(&buf);
+        } else {
+            let _ = SnapshotDelta::from_bytes(&buf);
+        }
+        // Length inflation: trailing junk must be rejected, with or
+        // without the flips.
+        let mut inflated = base.clone();
+        for _ in 0..1 + rng.gen_range_u64(64) {
+            inflated.push(rng.gen_range_u64(256) as u8);
+        }
+        if trial % 2 == 0 {
+            assert!(SwitchSnapshot::from_bytes(&inflated).is_err(), "trailing junk");
+        } else {
+            assert!(SnapshotDelta::from_bytes(&inflated).is_err(), "trailing junk");
+        }
+    }
+}
+
+#[test]
+fn restore_rejects_a_snapshot_for_a_differently_configured_switch() {
+    let tree = TreeId(1);
+    let mut sw = configured(2, Parallelism::Serial, 1);
+    let ss = scalar_streams(2, 200, 0xE1);
+    let mut sink = IngestSink::new();
+    for (c, s) in ss.iter().enumerate() {
+        for p in &stamped(tree, s, c as u16) {
+            sw.ingest_reliable_one(tree, p, &mut sink);
+        }
+    }
+    let snap = sw.snapshot_tree(tree).expect("snapshot");
+    // A standby with different geometry must refuse, not corrupt.
+    let mut tiny = SwitchAggSwitch::new(SwitchConfig {
+        parallelism: Parallelism::Serial,
+        ..SwitchConfig::scaled(4 << 10, Some(64 << 10))
+    });
+    tiny.configure_vector(
+        &[TreeConfig {
+            tree,
+            children: 2,
+            parent_port: 0,
+            op: AggOp::Sum,
+        }],
+        1,
+    );
+    assert!(
+        tiny.restore_tree(&snap).is_err(),
+        "geometry mismatch must be a typed error"
+    );
+}
